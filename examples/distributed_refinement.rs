@@ -1,0 +1,64 @@
+//! Distributed refinement demo: one OS thread per machine running the
+//! paper's Fig.-2 trigger protocol (token ring, `ReceiveNodeTrigger`,
+//! `RegularUpdateTrigger`) over a message bus, with the §4.5 overhead
+//! accounting that shows synchronization cost is O(K) per transfer —
+//! independent of the number of simulated LPs.
+//!
+//! Run: `cargo run --release --example distributed_refinement -- \
+//!        [--nodes N] [--k K] [--seed S] [--latency-us U]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gtip::coordinator::{run_distributed, DistributedOptions};
+use gtip::graph::generators::preferential_attachment;
+use gtip::partition::initial::grow_partition;
+use gtip::partition::{global_cost, MachineConfig};
+use gtip::util::cli::Args;
+use gtip::util::rng::Pcg32;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let k = args.opt_or::<usize>("k", 5).expect("k");
+    let seed = args.opt_or::<u64>("seed", 2011).expect("seed");
+    let latency_us = args.opt_or::<u64>("latency-us", 0).expect("latency-us");
+
+    println!("== distributed refinement: Fig. 2 trigger protocol, {k} machine actors ==\n");
+    println!("{:<8} {:>10} {:>10} {:>10} {:>12} {:>14} {:>10}",
+        "N", "transfers", "msgs", "bytes", "bytes/xfer", "C0 drop", "wall ms");
+
+    for nodes in [200usize, 400, 800, 1600] {
+        let mut rng = Pcg32::new(seed);
+        let graph = Arc::new(preferential_attachment(nodes, 2, &mut rng));
+        let machines = MachineConfig::homogeneous(k);
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        let c0_before = global_cost::c0(&graph, &machines, &initial, 8.0);
+
+        let t0 = Instant::now();
+        let report = run_distributed(
+            Arc::clone(&graph),
+            &machines,
+            initial,
+            &DistributedOptions {
+                latency: Duration::from_micros(latency_us),
+                ..Default::default()
+            },
+        );
+        let wall = t0.elapsed();
+        let c0_after = global_cost::c0(&graph, &machines, &report.partition, 8.0);
+
+        println!(
+            "{:<8} {:>10} {:>10} {:>10} {:>12.1} {:>13.1}% {:>10.1}",
+            nodes,
+            report.transfers,
+            report.overhead.total_messages(),
+            report.overhead.total_bytes(),
+            report.overhead.bytes_per_transfer(report.transfers as u64),
+            100.0 * (c0_before - c0_after) / c0_before,
+            wall.as_secs_f64() * 1e3,
+        );
+    }
+
+    println!("\nbytes/transfer is flat across N — the paper's §4.5 feasibility claim:");
+    println!("machines exchange only O(K) aggregate state, never per-node state.");
+}

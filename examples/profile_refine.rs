@@ -1,0 +1,22 @@
+//! Profiling harness for the refinement hot loop (used with
+//! `perf record -g` during the EXPERIMENTS.md §Perf pass): 60 full
+//! refinement runs at N=10k / K=8 back to back.
+
+use gtip::game::cost::Framework;
+use gtip::game::refine::{RefineEngine, RefineOptions};
+use gtip::graph::generators::preferential_attachment;
+use gtip::partition::{MachineConfig, Partition};
+use gtip::util::rng::Pcg32;
+fn main() {
+    let n = 10_000;
+    let mut rng = Pcg32::new(n as u64);
+    let graph = preferential_attachment(n, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(8);
+    let part = Partition::from_assignment(&graph, 8, (0..n).map(|_| rng.index(8)).collect());
+    let mut total = 0usize;
+    for _ in 0..60 {
+        let mut engine = RefineEngine::new(&graph, &machines, part.clone(), 8.0, Framework::A);
+        total += engine.run(&RefineOptions::default()).transfers;
+    }
+    println!("{total}");
+}

@@ -1,0 +1,79 @@
+"""AOT lowering: jax -> HLO text artifacts for the Rust PJRT runtime.
+
+Emits one artifact per padded problem shape (N in the size ladder, fixed
+K) plus `manifest.txt` describing them. HLO *text* is the interchange
+format — the image's xla_extension 0.5.1 rejects serialized protos from
+jax >= 0.5 (64-bit instruction ids); the text parser reassigns ids. See
+/opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--sizes 256,512,1024]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import refine_step
+
+DEFAULT_SIZES = (256, 512, 1024)
+DEFAULT_K = 8
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_refine_step(n: int, k: int) -> str:
+    """Lower refine_step for padded shape (n, k) and return HLO text."""
+    f32 = jnp.float32
+    spec = lambda *shape: jax.ShapeDtypeStruct(shape, f32)  # noqa: E731
+    lowered = jax.jit(refine_step).lower(
+        spec(n),        # b
+        spec(k),        # w
+        spec(k),        # wmask
+        spec(n, n),     # adj
+        spec(n, k),     # xt
+        spec(),         # mu
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--sizes", default=",".join(str(s) for s in DEFAULT_SIZES),
+        help="comma-separated padded node counts",
+    )
+    parser.add_argument("--k", type=int, default=DEFAULT_K, help="padded machine count")
+    args = parser.parse_args()
+
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = ["gtip-artifacts v1"]
+    for n in sizes:
+        name = f"refine_step_n{n}_k{args.k}"
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = lower_refine_step(n, args.k)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"artifact {name} n={n} k={args.k} file={name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

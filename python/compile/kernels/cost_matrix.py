@@ -1,0 +1,122 @@
+"""Layer-1 Pallas kernel: fused dense cost-matrix computation.
+
+The hot spot of a refinement epoch is rebuilding the full N x K cost
+tables (both frameworks) from the adjacency matrix: the dominant term is
+`adjrow = adj @ xt` — an (N,N)x(N,K) matmul — followed by a cheap
+element-wise epilogue. This kernel tiles the matmul over rows of `adj`
+(grid = N / BM programs) and fuses the epilogue so the cost tables are
+produced in one pass without materializing `adjrow` in HBM.
+
+TPU mapping (DESIGN.md section "Hardware adaptation"): each program holds
+one (BM, N) strip of `adj` plus the (N, K) one-hot in VMEM and drives the
+MXU with a (BM,N)x(N,K) contraction; the rank-1 load terms are a VPU
+epilogue on the (BM, K) accumulator. `interpret=True` everywhere in this
+repo: the CPU PJRT plugin cannot execute Mosaic custom-calls, so the
+kernel is lowered to plain HLO for both testing and the AOT artifacts —
+numerics are identical, scheduling is XLA's.
+
+Inputs are pre-broadcast into 2-D tiles because Pallas BlockSpecs address
+array blocks, not scalars:
+  adj    f32[N, N]
+  xt     f32[N, K]    one-hot assignment (xt[i,k] = 1 iff r_i = k)
+  b      f32[N, 1]    node weights
+  params f32[3, K]    rows: loads L_k, speeds w_k, machine mask
+  scal   f32[1, 2]    [mu, B]
+Outputs:
+  costs_a f32[N, K], costs_b f32[N, K]
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.ref import BIG
+
+# Default row-block size. 128 matches the MXU systolic dimension; padded
+# shapes in aot.py are multiples of it.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _cost_kernel(adj_ref, xt_ref, b_ref, params_ref, scal_ref, out_a_ref, out_b_ref):
+    """One program: rows [i*BM, (i+1)*BM) of both cost matrices."""
+    adj_blk = adj_ref[...]          # (BM, N)
+    xt_all = xt_ref[...]            # (N, K)
+    b_blk = b_ref[...]              # (BM, 1)
+    loads = params_ref[0, :]        # (K,)
+    w = params_ref[1, :]            # (K,)
+    wmask = params_ref[2, :]        # (K,)
+    mu = scal_ref[0, 0]
+    b_total = scal_ref[0, 1]
+
+    # MXU part: adjacency-to-machine mass for this row strip.
+    adjrow = jnp.dot(adj_blk, xt_all, preferred_element_type=jnp.float32)  # (BM, K)
+
+    # VPU epilogue.
+    s = jnp.sum(adj_blk, axis=1, keepdims=True)          # (BM, 1)
+    # One-hot rows of this strip: xt[i, :] for i in the strip. The strip of
+    # xt is addressed through a second BlockSpec view (same array, row
+    # block): Pallas lets us slice xt_all because BM rows of xt are at the
+    # same row offset as adj rows — recovered via index arithmetic below.
+    # Instead of a gather we pass the strip directly: see xt_strip_ref in
+    # cost_matrices_pallas (merged into b_ref? no — see wrapper), so here
+    # we recompute it from program_id.
+    i = pl.program_id(0)
+    bm = adj_blk.shape[0]
+    xt_strip = jax.lax.dynamic_slice_in_dim(xt_all, i * bm, bm, axis=0)  # (BM, K)
+
+    same_load = loads[None, :] - b_blk * xt_strip
+    cut = 0.5 * mu * (s - adjrow)
+    penalty = (1.0 - wmask)[None, :] * BIG
+
+    out_a_ref[...] = b_blk / w[None, :] * same_load + cut + penalty
+    w2 = w * w
+    out_b_ref[...] = (
+        b_blk * b_blk / w2[None, :]
+        + 2.0 * b_blk / w2[None, :] * same_load
+        - 2.0 * b_blk / w[None, :] * b_total
+        + cut
+        + penalty
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def cost_matrices_pallas(b, w, wmask, adj, xt, mu, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Pallas-kernel version of `ref.cost_matrices_ref` (same signature,
+    plus the row-block size)."""
+    n = adj.shape[0]
+    k = xt.shape[1]
+    bm = min(block_rows, n)
+    assert n % bm == 0, f"N={n} must be a multiple of block_rows={bm}"
+
+    loads = xt.T @ b.astype(jnp.float32)
+    b_total = jnp.sum(b)
+    params = jnp.stack([loads, w.astype(jnp.float32), wmask.astype(jnp.float32)])
+    scal = jnp.array([[0.0, 0.0]], dtype=jnp.float32)
+    scal = scal.at[0, 0].set(jnp.asarray(mu, dtype=jnp.float32))
+    scal = scal.at[0, 1].set(b_total.astype(jnp.float32))
+
+    grid = (n // bm,)
+    out_shape = [
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+    ]
+    costs_a, costs_b = pl.pallas_call(
+        _cost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),   # adj strip
+            pl.BlockSpec((n, k), lambda i: (0, 0)),    # full one-hot
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),   # b strip
+            pl.BlockSpec((3, k), lambda i: (0, 0)),    # loads/w/mask
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),    # [mu, B]
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(adj, xt, b.astype(jnp.float32)[:, None], params, scal)
+    return costs_a, costs_b

@@ -1,0 +1,101 @@
+"""Pure-jnp reference (oracle) for the dense cost-matrix computation.
+
+This mirrors, in straightforward jax.numpy, exactly what the Pallas
+kernel (`cost_matrix.py`) and the Rust native evaluator
+(`gtip::game::cost::dense_cost_matrices`) compute:
+
+  Framework A (paper eq. 1):
+      C[i,k]  = b_i / w_k * (L_k - b_i * X[k,i]) + (mu/2) * (S_i - A_ik)
+  Framework B (paper eq. 6):
+      C~[i,k] = b_i^2/w_k^2 + 2 b_i/w_k^2 * (L_k - b_i X[k,i])
+                - 2 b_i / w_k * B + (mu/2) * (S_i - A_ik)
+
+with A_ik = sum_j adj[i,j] X[k,j] (adjacency-to-machine mass), L = X b
+(aggregate loads), S_i = sum_j adj[i,j], B = sum_i b_i. Padding machines
+(wmask == 0) are pushed to +BIG so argmin/min never select them.
+
+pytest compares the Pallas kernel against this module; the Rust
+integration test compares the AOT HLO executable against the Rust native
+evaluator, closing the loop across all three implementations.
+"""
+
+import jax.numpy as jnp
+
+# Large additive penalty for masked (padding) machines. Kept finite so
+# arithmetic stays NaN-free in f32.
+BIG = 1.0e30
+
+
+def cost_matrices_ref(b, w, wmask, adj, xt, mu):
+    """Dense cost matrices for both frameworks.
+
+    Args:
+      b:     f32[N]   node weights (0 for padded nodes).
+      w:     f32[K]   normalized machine speeds (1 for padded machines).
+      wmask: f32[K]   1 for real machines, 0 for padding.
+      adj:   f32[N,N] symmetric edge-weight matrix (0 diag, 0 padding).
+      xt:    f32[N,K] one-hot assignment, xt[i,k] = 1 iff node i on k.
+      mu:    f32[]    rollback-delay weight.
+
+    Returns:
+      (costs_a, costs_b): each f32[N,K].
+    """
+    b = b.astype(jnp.float32)
+    loads = xt.T @ b                           # L_k, shape (K,)
+    b_total = jnp.sum(b)                       # B
+    adjrow = adj @ xt                          # A_ik, shape (N,K)
+    s = jnp.sum(adj, axis=1, keepdims=True)    # S_i, shape (N,1)
+
+    bcol = b[:, None]                          # (N,1)
+    same_load = loads[None, :] - bcol * xt     # L_k - b_i X[k,i]
+    cut = 0.5 * mu * (s - adjrow)              # (N,K)
+    penalty = (1.0 - wmask)[None, :] * BIG
+
+    costs_a = bcol / w[None, :] * same_load + cut + penalty
+    w2 = w * w
+    costs_b = (
+        bcol * bcol / w2[None, :]
+        + 2.0 * bcol / w2[None, :] * same_load
+        - 2.0 * bcol / w[None, :] * b_total
+        + cut
+        + penalty
+    )
+    return costs_a, costs_b
+
+
+def refine_step_ref(b, w, wmask, adj, xt, mu):
+    """Full L2 reference: cost matrices + dissatisfaction + argmin + globals.
+
+    Returns a tuple:
+      costs_a  f32[N,K]
+      costs_b  f32[N,K]
+      dissat_a f32[N]   (eq. 4 under framework A)
+      dissat_b f32[N]
+      best_a   i32[N]   argmin_k C[i,k]
+      best_b   i32[N]
+      c0       f32[]    sum_i C_i(r_i)            (Thm 3.1 potential)
+      c0t      f32[]    eq. 8 with (mu/2)*cut     (Thm 5.1 potential)
+    """
+    costs_a, costs_b = cost_matrices_ref(b, w, wmask, adj, xt, mu)
+
+    cur_a = jnp.sum(costs_a * xt, axis=1)
+    cur_b = jnp.sum(costs_b * xt, axis=1)
+    min_a = jnp.min(costs_a, axis=1)
+    min_b = jnp.min(costs_b, axis=1)
+    dissat_a = jnp.maximum(cur_a - min_a, 0.0)
+    dissat_b = jnp.maximum(cur_b - min_b, 0.0)
+    best_a = jnp.argmin(costs_a, axis=1).astype(jnp.int32)
+    best_b = jnp.argmin(costs_b, axis=1).astype(jnp.int32)
+
+    # Global costs. Padded nodes sit on machine 0 (real) with b=0 and no
+    # edges, so their current cost is exactly 0 and they do not perturb
+    # the sums.
+    c0 = jnp.sum(cur_a)
+    b_total = jnp.sum(b)
+    loads = xt.T @ b
+    dev = wmask * (loads / w - b_total)
+    s = jnp.sum(adj, axis=1)
+    adj_cur = jnp.sum((adj @ xt) * xt, axis=1)
+    cut_weight = 0.5 * jnp.sum(s - adj_cur)    # each undirected cut edge once
+    c0t = jnp.sum(dev * dev) + 0.5 * mu * cut_weight
+    return costs_a, costs_b, dissat_a, dissat_b, best_a, best_b, c0, c0t

@@ -1,0 +1,52 @@
+"""Layer-2 JAX model: one full refinement-epoch evaluation step.
+
+`refine_step` is the computation the Rust coordinator executes through
+PJRT at every refinement-epoch start: dense cost tables for both
+frameworks (via the L1 Pallas kernel), per-node dissatisfaction and
+best-response machines (paper eq. 4), and both global potentials
+(Thm 3.1 / eq. 8). Build-time only — `aot.py` lowers it to HLO text; no
+Python at partitioning time.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.cost_matrix import cost_matrices_pallas
+
+
+def refine_step(b, w, wmask, adj, xt, mu):
+    """Full refinement-step evaluation (shapes as in kernels/ref.py).
+
+    Returns an 8-tuple:
+      costs_a f32[N,K], costs_b f32[N,K],
+      dissat_a f32[N], dissat_b f32[N],
+      best_a i32[N], best_b i32[N],
+      c0 f32[], c0t f32[]
+    """
+    costs_a, costs_b = cost_matrices_pallas(b, w, wmask, adj, xt, mu)
+
+    cur_a = jnp.sum(costs_a * xt, axis=1)
+    cur_b = jnp.sum(costs_b * xt, axis=1)
+    dissat_a = jnp.maximum(cur_a - jnp.min(costs_a, axis=1), 0.0)
+    dissat_b = jnp.maximum(cur_b - jnp.min(costs_b, axis=1), 0.0)
+    best_a = jnp.argmin(costs_a, axis=1).astype(jnp.int32)
+    best_b = jnp.argmin(costs_b, axis=1).astype(jnp.int32)
+
+    # Global potentials (cheap reductions; fused by XLA into the epilogue).
+    c0 = jnp.sum(cur_a)
+    b32 = b.astype(jnp.float32)
+    loads = xt.T @ b32
+    b_total = jnp.sum(b32)
+    dev = wmask * (loads / w - b_total)
+    # Cut term WITHOUT a second N x N matmul (PERF, EXPERIMENTS.md §Perf
+    # change 3): each node's current framework-A cost decomposes as
+    #   cur_a_i = b_i/w_{r_i} (L_{r_i} - b_i) + (mu/2)(S_i - A_{i,r_i})
+    # so summing (cur_a_i - loadterm_i) yields (mu/2) * sum_i cut_i =
+    # mu * cut_weight exactly, and C~0's cut term (mu/2)*cut_weight is
+    # half of that. Algebraically identical to the ref oracle.
+    w_cur = xt @ w                   # w_{r_i}
+    l_cur = xt @ loads               # L_{r_i}
+    loadterm = b32 / w_cur * (l_cur - b32)
+    mu_cut = jnp.sum(cur_a - loadterm)   # = mu * cut_weight
+    c0t = jnp.sum(dev * dev) + 0.5 * mu_cut
+
+    return costs_a, costs_b, dissat_a, dissat_b, best_a, best_b, c0, c0t

@@ -1,0 +1,137 @@
+"""L1 correctness: the Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps problem shapes, weights, assignments and mu; every
+case asserts allclose between `cost_matrices_pallas` and
+`cost_matrices_ref`. This is the core correctness signal for the kernel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cost_matrix import cost_matrices_pallas
+from compile.kernels.ref import BIG, cost_matrices_ref
+
+
+def make_problem(rng, n, k, n_real=None, k_real=None, weight_scale=10.0):
+    """Random padded problem. Returns (b, w, wmask, adj, xt, mu)."""
+    n_real = n if n_real is None else n_real
+    k_real = k if k_real is None else k_real
+    b = np.zeros(n, dtype=np.float32)
+    b[:n_real] = rng.integers(1, int(weight_scale), size=n_real).astype(np.float32)
+    raw_w = rng.random(k_real).astype(np.float32) + 0.1
+    w = np.ones(k, dtype=np.float32)
+    w[:k_real] = raw_w / raw_w.sum()
+    wmask = np.zeros(k, dtype=np.float32)
+    wmask[:k_real] = 1.0
+    adj = np.zeros((n, n), dtype=np.float32)
+    # sprinkle symmetric edges among real nodes
+    m = max(1, 3 * n_real)
+    us = rng.integers(0, n_real, size=m)
+    vs = rng.integers(0, n_real, size=m)
+    cs = rng.integers(1, int(weight_scale), size=m).astype(np.float32)
+    for u, v, c in zip(us, vs, cs):
+        if u != v:
+            adj[u, v] += c
+            adj[v, u] += c
+    assign = rng.integers(0, k_real, size=n)
+    assign[n_real:] = 0  # padded nodes sit on machine 0
+    xt = np.zeros((n, k), dtype=np.float32)
+    xt[np.arange(n), assign] = 1.0
+    mu = np.float32(rng.random() * 16.0)
+    return b, w, wmask, adj, xt, mu
+
+
+def assert_matches_ref(b, w, wmask, adj, xt, mu, block_rows):
+    got_a, got_b = cost_matrices_pallas(
+        jnp.asarray(b), jnp.asarray(w), jnp.asarray(wmask),
+        jnp.asarray(adj), jnp.asarray(xt), jnp.asarray(mu),
+        block_rows=block_rows,
+    )
+    want_a, want_b = cost_matrices_ref(
+        jnp.asarray(b), jnp.asarray(w), jnp.asarray(wmask),
+        jnp.asarray(adj), jnp.asarray(xt), jnp.asarray(mu),
+    )
+    np.testing.assert_allclose(np.asarray(got_a), np.asarray(want_a), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(got_b), np.asarray(want_b), rtol=1e-4, atol=1e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_pow=st.integers(2, 5),           # N = 2^n_pow * 8  in [32, 256]
+    k_real=st.integers(1, 8),
+    block_pow=st.integers(0, 3),
+)
+def test_kernel_matches_ref_hypothesis(seed, n_pow, k_real, block_pow):
+    n = (2 ** n_pow) * 8
+    block_rows = min(n, 8 * (2 ** block_pow))
+    if n % block_rows != 0:
+        block_rows = n
+    rng = np.random.default_rng(seed)
+    n_real = int(rng.integers(1, n + 1))
+    prob = make_problem(rng, n, 8, n_real=n_real, k_real=k_real)
+    assert_matches_ref(*prob, block_rows=block_rows)
+
+
+def test_kernel_matches_ref_paper_shape():
+    """The paper's 230-node / 5-machine study padded to 256 x 8."""
+    rng = np.random.default_rng(0)
+    prob = make_problem(rng, 256, 8, n_real=230, k_real=5)
+    assert_matches_ref(*prob, block_rows=128)
+
+
+def test_padding_machines_are_never_attractive():
+    rng = np.random.default_rng(1)
+    b, w, wmask, adj, xt, mu = make_problem(rng, 64, 8, n_real=50, k_real=3)
+    got_a, got_b = cost_matrices_pallas(
+        jnp.asarray(b), jnp.asarray(w), jnp.asarray(wmask),
+        jnp.asarray(adj), jnp.asarray(xt), jnp.asarray(mu),
+        block_rows=64,
+    )
+    a = np.asarray(got_a)
+    bb = np.asarray(got_b)
+    # All padded-machine columns carry the BIG penalty.
+    assert (a[:, 3:] >= BIG * 0.5).all()
+    assert (bb[:, 3:] >= BIG * 0.5).all()
+
+
+def test_padded_nodes_cost_zero_on_their_machine():
+    rng = np.random.default_rng(2)
+    b, w, wmask, adj, xt, mu = make_problem(rng, 64, 8, n_real=40, k_real=4)
+    got_a, _ = cost_matrices_pallas(
+        jnp.asarray(b), jnp.asarray(w), jnp.asarray(wmask),
+        jnp.asarray(adj), jnp.asarray(xt), jnp.asarray(mu),
+        block_rows=32,
+    )
+    a = np.asarray(got_a)
+    # Padded nodes (b=0, no edges) on machine 0: current cost exactly 0.
+    np.testing.assert_allclose(a[40:, 0], 0.0, atol=1e-6)
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(3)
+    prob = make_problem(rng, 128, 8, n_real=100, k_real=5)
+    outs = []
+    for br in (16, 32, 64, 128):
+        got = cost_matrices_pallas(
+            jnp.asarray(prob[0]), jnp.asarray(prob[1]), jnp.asarray(prob[2]),
+            jnp.asarray(prob[3]), jnp.asarray(prob[4]), jnp.asarray(prob[5]),
+            block_rows=br,
+        )
+        outs.append((np.asarray(got[0]), np.asarray(got[1])))
+    for a, b in outs[1:]:
+        np.testing.assert_allclose(a, outs[0][0], rtol=1e-6)
+        np.testing.assert_allclose(b, outs[0][1], rtol=1e-6)
+
+
+def test_rejects_non_divisible_block():
+    rng = np.random.default_rng(4)
+    prob = make_problem(rng, 48, 8)
+    with pytest.raises(AssertionError):
+        cost_matrices_pallas(
+            jnp.asarray(prob[0]), jnp.asarray(prob[1]), jnp.asarray(prob[2]),
+            jnp.asarray(prob[3]), jnp.asarray(prob[4]), jnp.asarray(prob[5]),
+            block_rows=36,
+        )

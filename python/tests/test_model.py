@@ -1,0 +1,80 @@
+"""L2 correctness: refine_step (Pallas-backed) against the pure-jnp ref,
+plus semantic checks of dissatisfaction/argmin/global costs."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import refine_step_ref
+from compile.model import refine_step
+from tests.test_kernel import make_problem
+
+
+def run_both(prob):
+    args = tuple(jnp.asarray(x) for x in prob)
+    got = refine_step(*args)
+    want = refine_step_ref(*args)
+    return [np.asarray(g) for g in got], [np.asarray(w) for w in want]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k_real=st.integers(1, 8))
+def test_model_matches_ref(seed, k_real):
+    rng = np.random.default_rng(seed)
+    prob = make_problem(rng, 128, 8, n_real=int(rng.integers(2, 129)), k_real=k_real)
+    got, want = run_both(prob)
+    labels = ["costs_a", "costs_b", "dissat_a", "dissat_b", "best_a", "best_b", "c0", "c0t"]
+    for g, w, label in zip(got, want, labels):
+        if label.startswith("best"):
+            # argmin ties may break differently between fused/unfused
+            # paths; equal-cost targets are equally valid. Check cost
+            # equality at chosen machines instead.
+            idx = label[-1]
+            costs = got[0] if idx == "a" else got[1]
+            n = costs.shape[0]
+            np.testing.assert_allclose(
+                costs[np.arange(n), g], costs[np.arange(n), w], rtol=1e-4, atol=1e-2,
+                err_msg=label,
+            )
+        else:
+            np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-2, err_msg=label)
+
+
+def test_dissatisfaction_nonnegative_and_zero_at_argmin():
+    rng = np.random.default_rng(7)
+    prob = make_problem(rng, 128, 8, n_real=100, k_real=5)
+    got, _ = run_both(prob)
+    costs_a, _, dissat_a, dissat_b, best_a, _, _, _ = got
+    assert (dissat_a >= 0).all() and (dissat_b >= 0).all()
+    # A node already on its argmin machine has zero dissatisfaction.
+    xt = np.asarray(prob[4])
+    cur = xt.argmax(axis=1)
+    at_best = cur == best_a
+    np.testing.assert_allclose(dissat_a[at_best], 0.0, atol=1e-4)
+
+
+def test_c0_matches_manual_sum():
+    rng = np.random.default_rng(8)
+    prob = make_problem(rng, 64, 8, n_real=60, k_real=4)
+    got, _ = run_both(prob)
+    costs_a = got[0]
+    xt = np.asarray(prob[4])
+    manual = (costs_a * xt).sum()
+    np.testing.assert_allclose(got[6], manual, rtol=1e-5)
+
+
+def test_globals_scale_sanely_with_mu():
+    """c0 and c0t are affine in mu with non-negative slope (cut >= 0)."""
+    rng = np.random.default_rng(9)
+    b, w, wmask, adj, xt, _ = make_problem(rng, 64, 8, n_real=64, k_real=5)
+    outs = []
+    for mu in (0.0, 4.0, 8.0):
+        got = refine_step(
+            jnp.asarray(b), jnp.asarray(w), jnp.asarray(wmask),
+            jnp.asarray(adj), jnp.asarray(xt), jnp.asarray(np.float32(mu)),
+        )
+        outs.append((float(got[6]), float(got[7])))
+    (c0_0, c0t_0), (c0_4, c0t_4), (c0_8, c0t_8) = outs
+    assert c0_4 >= c0_0 - 1e-3 and c0_8 >= c0_4 - 1e-3
+    np.testing.assert_allclose(c0_8 - c0_4, c0_4 - c0_0, rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(c0t_8 - c0t_4, c0t_4 - c0t_0, rtol=1e-3, atol=1e-2)

@@ -1,0 +1,18 @@
+//! Bench + regeneration harness for the §5.1 batch study (50 graphs ×
+//! 10 initial partitions in the paper; a reduced sweep here unless
+//! GTIP_BENCH_FULL=1).
+
+use gtip::experiments::batch;
+use gtip::util::bench::{BenchConfig, Bencher};
+
+fn main() {
+    let full = std::env::var("GTIP_BENCH_FULL").ok().as_deref() == Some("1");
+    let (realizations, initials) = if full { (50, 10) } else { (10, 3) };
+
+    let report = batch::run(230, realizations, initials, 2011);
+    println!("{}", report.to_table().to_text());
+
+    let mut b = Bencher::new("batch_study").with_config(BenchConfig::coarse());
+    b.bench("batch_10x3_n230", || batch::run(230, 10, 3, 99).runs);
+    let _ = b.write_csv();
+}

@@ -1,0 +1,26 @@
+//! Bench + regeneration harness for paper Fig. 7: simulation time vs
+//! refinement frequency, preferential-attachment graph.
+
+use gtip::experiments::figs78::{run, SweepOptions};
+use gtip::graph::generators::GraphFamily;
+use gtip::util::bench::{BenchConfig, Bencher};
+
+fn main() {
+    let full = std::env::var("GTIP_BENCH_FULL").ok().as_deref() == Some("1");
+    let mut options = SweepOptions::paper_default(GraphFamily::PreferentialAttachment);
+    if !full {
+        options.seeds = 2;
+    }
+    let report = run(&options, 2011);
+    println!("{}", report.to_table("Fig. 7 — preferential attachment").to_text());
+    println!("refinement helps: {}\n", report.refinement_helps());
+
+    let mut b = Bencher::new("fig7").with_config(BenchConfig::coarse());
+    let mut quick = SweepOptions::paper_default(GraphFamily::PreferentialAttachment);
+    quick.seeds = 1;
+    quick.periods = vec![500];
+    quick.nodes = 150;
+    quick.workload.threads = 80;
+    b.bench("fig7_single_point_n150", || run(&quick, 3).points.len());
+    let _ = b.write_csv();
+}

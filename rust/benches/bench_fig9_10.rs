@@ -1,0 +1,32 @@
+//! Bench + regeneration harness for paper Figs. 9/10: machine-load
+//! traces without refinement vs refinement every 500 ticks.
+
+use gtip::experiments::fig9_10::run_arm;
+use gtip::graph::generators::GraphFamily;
+use gtip::util::bench::{BenchConfig, Bencher};
+use gtip::util::stats::ascii_chart;
+
+fn main() {
+    let fig9 = run_arm(GraphFamily::PreferentialAttachment, 230, 5, 0, 2011, false);
+    let fig10 = run_arm(GraphFamily::PreferentialAttachment, 230, 5, 500, 2011, false);
+    println!(
+        "### Fig. 9 — no refinement (sim time {} ticks, load CoV {:.3})",
+        fig9.sim_time, fig9.mean_cov
+    );
+    println!("{}", ascii_chart(&fig9.traces, 56, 10));
+    println!(
+        "### Fig. 10 — refine every 500 ticks (sim time {} ticks, load CoV {:.3})",
+        fig10.sim_time, fig10.mean_cov
+    );
+    println!("{}", ascii_chart(&fig10.traces, 56, 10));
+    println!(
+        "balance improvement: CoV {:.3} -> {:.3} (paper: 'load with regular refinements certainly looks more balanced')\n",
+        fig9.mean_cov, fig10.mean_cov
+    );
+
+    let mut b = Bencher::new("fig9_10").with_config(BenchConfig::coarse());
+    b.bench("fig10_arm_n150_traced", || {
+        run_arm(GraphFamily::PreferentialAttachment, 150, 5, 500, 3, true).sim_time
+    });
+    let _ = b.write_csv();
+}

@@ -1,0 +1,85 @@
+//! L3 hot-path micro-benchmarks: the refinement engine's inner loop
+//! (most-dissatisfied search + transfer + incremental updates) across
+//! problem sizes, plus the distributed protocol overhead. This is the
+//! primary target of the EXPERIMENTS.md §Perf pass.
+
+use std::sync::Arc;
+
+use gtip::coordinator::{run_distributed, DistributedOptions};
+use gtip::game::cost::{dense_cost_matrices, Framework};
+use gtip::game::refine::{RefineEngine, RefineOptions};
+use gtip::graph::generators::preferential_attachment;
+use gtip::graph::Graph;
+use gtip::partition::{MachineConfig, Partition};
+use gtip::util::bench::{black_box, BenchConfig, Bencher};
+use gtip::util::rng::Pcg32;
+
+fn random_partition(g: &Graph, k: usize, seed: u64) -> Partition {
+    let mut rng = Pcg32::new(seed);
+    Partition::from_assignment(g, k, (0..g.node_count()).map(|_| rng.index(k)).collect())
+}
+
+fn main() {
+    let mut b = Bencher::new("refine_hotpath");
+    let k = 8;
+    let machines = MachineConfig::homogeneous(k);
+
+    for &n in &[230usize, 1_000, 10_000, 100_000] {
+        let mut rng = Pcg32::new(n as u64);
+        let graph = preferential_attachment(n, 2, &mut rng);
+        let part = random_partition(&graph, k, 1);
+
+        // Full refinement to convergence: transfers/second.
+        let mut transfers_done = 0usize;
+        let r = b.bench_elems(format!("refine_to_convergence_n{n}"), n as u64, || {
+            let mut engine =
+                RefineEngine::new(&graph, &machines, part.clone(), 8.0, Framework::A);
+            let report = engine.run(&RefineOptions::default());
+            transfers_done = report.transfers;
+            report.transfers
+        });
+        let tps = transfers_done as f64 / r.per_iter.mean;
+        println!("    -> {transfers_done} transfers, {tps:.0} transfers/sec");
+
+        // One machine turn (scan + transfer) on a fresh engine.
+        let engine = RefineEngine::new(&graph, &machines, part.clone(), 8.0, Framework::A);
+        b.bench(format!("single_turn_scan_n{n}"), || {
+            black_box(engine.most_dissatisfied(0, 1e-9))
+        });
+
+        // Engine construction (adjacency tables) — the per-epoch setup cost.
+        b.bench(format!("engine_build_n{n}"), || {
+            RefineEngine::new(&graph, &machines, part.clone(), 8.0, Framework::A).potential()
+        });
+
+        if n <= 1_000 {
+            // Dense rebuild (native mirror of the L1 kernel).
+            b.bench(format!("dense_cost_matrices_n{n}"), || {
+                dense_cost_matrices(&graph, &machines, &part, 8.0).n
+            });
+        }
+    }
+
+    // Distributed protocol at paper scale.
+    {
+        let mut rng = Pcg32::new(77);
+        let graph = Arc::new(preferential_attachment(1_000, 2, &mut rng));
+        let part = random_partition(&graph, k, 2);
+        let mut cfg = BenchConfig::coarse();
+        cfg.max_iters = 5;
+        cfg.samples = 5;
+        let mut bd = Bencher::new("refine_hotpath_distributed").with_config(cfg);
+        bd.bench("distributed_refine_n1000_k8", || {
+            run_distributed(
+                Arc::clone(&graph),
+                &machines,
+                part.clone(),
+                &DistributedOptions::default(),
+            )
+            .transfers
+        });
+        let _ = bd.write_csv();
+    }
+
+    let _ = b.write_csv();
+}

@@ -1,0 +1,62 @@
+//! PJRT runtime micro-benchmarks: compile-once cost and per-call
+//! execution latency of the AOT refine_step artifacts across the padded
+//! size ladder (§Perf target: < 10 ms round-trip at N=1024).
+//!
+//! Skips politely if `make artifacts` has not run.
+
+use gtip::experiments::common::StudySetup;
+use gtip::graph::generators::preferential_attachment;
+use gtip::partition::{MachineConfig, Partition};
+use gtip::runtime::cost_eval::PjrtCostEvaluator;
+use gtip::util::bench::{BenchConfig, Bencher};
+use gtip::util::rng::Pcg32;
+
+fn main() {
+    let mut eval = match PjrtCostEvaluator::from_default_dir() {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP bench_runtime: {e} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    let mut cfg = BenchConfig::default();
+    cfg.samples = 10;
+    let mut b = Bencher::new("runtime").with_config(cfg);
+
+    // Paper shape (230 nodes -> n256 artifact).
+    {
+        let setup = StudySetup::default();
+        let mut rng = Pcg32::new(1);
+        let graph = setup.graph(&mut rng);
+        let part = setup.initial(&graph, &mut rng);
+        b.bench("pjrt_refine_step_n230_pad256", || {
+            eval.evaluate(&graph, &setup.machines, &part, 8.0).unwrap().c0
+        });
+    }
+
+    // Ladder sizes.
+    for &n in &[500usize, 1_000] {
+        let mut rng = Pcg32::new(n as u64);
+        let graph = preferential_attachment(n, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(5);
+        let part =
+            Partition::from_assignment(&graph, 5, (0..n).map(|i| i % 5).collect());
+        b.bench(format!("pjrt_refine_step_n{n}"), || {
+            eval.evaluate(&graph, &machines, &part, 8.0).unwrap().c0
+        });
+    }
+
+    // Native dense evaluation for comparison.
+    {
+        let mut rng = Pcg32::new(9);
+        let graph = preferential_attachment(1_000, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(5);
+        let part =
+            Partition::from_assignment(&graph, 5, (0..1_000).map(|i| i % 5).collect());
+        b.bench("native_dense_cost_matrices_n1000", || {
+            gtip::game::cost::dense_cost_matrices(&graph, &machines, &part, 8.0).n
+        });
+    }
+    let _ = b.write_csv();
+}

@@ -1,0 +1,65 @@
+//! PDES engine micro-benchmarks: LP-ticks/second of the optimistic
+//! simulator across graph sizes and workloads (§Perf target: >= 1e6
+//! LP-ticks/sec).
+
+use gtip::graph::generators::preferential_attachment;
+use gtip::partition::{MachineConfig, Partition};
+use gtip::sim::engine::{SimEngine, SimOptions};
+use gtip::sim::workload::{FloodWorkload, WorkloadOptions};
+use gtip::util::bench::{BenchConfig, Bencher};
+use gtip::util::rng::Pcg32;
+
+fn main() {
+    let mut cfg = BenchConfig::coarse();
+    cfg.samples = 3;
+    cfg.max_iters = 3;
+    let mut b = Bencher::new("simulator").with_config(cfg);
+
+    for &n in &[230usize, 1_000] {
+        let mut rng = Pcg32::new(n as u64);
+        let graph = preferential_attachment(n, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(5);
+        let assignment: Vec<usize> = (0..n).map(|i| i % 5).collect();
+        let workload = FloodWorkload::generate(
+            &graph,
+            &WorkloadOptions {
+                threads: n / 4,
+                horizon_ticks: 2_000,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+
+        // Count LP-ticks of one full run for the throughput figure.
+        let total_lp_ticks;
+        {
+            let part = Partition::from_assignment(&graph, 5, assignment.clone());
+            let mut engine = SimEngine::new(
+                &graph,
+                machines.clone(),
+                part,
+                SimOptions::default(),
+                workload.injections.clone(),
+            );
+            let stats = engine.run_to_completion();
+            total_lp_ticks = stats.ticks * n as u64;
+        }
+
+        let r = b.bench_elems(format!("sim_run_n{n}"), total_lp_ticks, || {
+            let part = Partition::from_assignment(&graph, 5, assignment.clone());
+            let mut engine = SimEngine::new(
+                &graph,
+                machines.clone(),
+                part,
+                SimOptions::default(),
+                workload.injections.clone(),
+            );
+            engine.run_to_completion().ticks
+        });
+        println!(
+            "    -> {:.3e} LP-ticks/sec",
+            total_lp_ticks as f64 / r.per_iter.mean
+        );
+    }
+    let _ = b.write_csv();
+}

@@ -1,0 +1,40 @@
+//! Bench + regeneration harness for paper Table I (§5.1).
+//!
+//! Prints the table rows exactly as `gtip experiment table1` does and
+//! measures the cost of regenerating one full trial (graph generation +
+//! initial partitioning + refinement under both frameworks).
+
+use gtip::experiments::common::{run_tracked, StudySetup};
+use gtip::experiments::table1;
+use gtip::game::cost::Framework;
+use gtip::util::bench::Bencher;
+use gtip::util::rng::Pcg32;
+
+fn main() {
+    // Regenerate the table (the artifact of record for EXPERIMENTS.md).
+    let report = table1::run(&StudySetup::default(), 5, 2011);
+    println!("{}", report.to_table().to_text());
+    println!(
+        "Framework A best on BOTH global costs in {}/5 trials (paper: 5/5)\n",
+        report.a_wins_both()
+    );
+
+    // Measure.
+    let mut b = Bencher::new("table1");
+    let setup = StudySetup::default();
+    b.bench("one_trial_both_frameworks_n230", || {
+        let mut rng = Pcg32::new(7);
+        let graph = setup.graph(&mut rng);
+        let initial = setup.initial(&graph, &mut rng);
+        let a = run_tracked(&graph, &setup.machines, initial.clone(), setup.mu, Framework::A);
+        let bb = run_tracked(&graph, &setup.machines, initial, setup.mu, Framework::B);
+        (a.iterations, bb.iterations)
+    });
+    b.bench("refine_only_framework_a_n230", || {
+        let mut rng = Pcg32::new(8);
+        let graph = setup.graph(&mut rng);
+        let initial = setup.initial(&graph, &mut rng);
+        run_tracked(&graph, &setup.machines, initial, setup.mu, Framework::A).iterations
+    });
+    let _ = b.write_csv();
+}

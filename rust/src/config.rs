@@ -1,0 +1,230 @@
+//! Experiment / run configuration.
+//!
+//! A single plain-text `key = value` format (serde is unavailable in the
+//! offline vendor set) shared by the CLI, the examples and the experiment
+//! harnesses, so every run is reproducible from a recorded config file.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::game::cost::Framework;
+use crate::graph::generators::GraphFamily;
+
+/// Full run configuration with paper-default values.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Random seed for everything derived from this run.
+    pub seed: u64,
+    /// Graph family for synthetic workloads.
+    pub family: GraphFamily,
+    /// Number of LPs (nodes). Paper §5.1 uses 230.
+    pub nodes: usize,
+    /// Raw machine speeds; normalized internally. Paper §5.1 uses
+    /// (0.1, 0.2, 0.3, 0.3, 0.1).
+    pub speeds: Vec<f64>,
+    /// Relative weight of the inter-machine rollback-delay cost (μ).
+    /// Paper §5.1 uses 8.
+    pub mu: f64,
+    /// Cost framework for refinement.
+    pub framework: Framework,
+    /// PDES: wall-clock ticks between partition refinements
+    /// (`partition-refine-freq`, Table III). 0 = never refine.
+    pub refine_every: u64,
+    /// PDES: number of packet-flow threads injected.
+    pub threads: usize,
+    /// PDES: flood hop limit (`event-count` initial value).
+    pub hop_limit: u32,
+    /// PDES: inter-machine event delay in wall-clock ticks (`event-tick`).
+    pub inter_machine_delay: u64,
+    /// PDES: per-event base processing time in wall-clock ticks.
+    pub base_process_time: u64,
+    /// Hot-spot model: number of simultaneous traffic hot spots.
+    pub hot_spots: usize,
+    /// Hot-spot model: ticks between hot-spot relocations.
+    pub hot_spot_period: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            seed: 42,
+            family: GraphFamily::PreferentialAttachment,
+            nodes: 230,
+            speeds: vec![0.1, 0.2, 0.3, 0.3, 0.1],
+            mu: 8.0,
+            framework: Framework::A,
+            refine_every: 500,
+            threads: 60,
+            hop_limit: 4,
+            inter_machine_delay: 3,
+            base_process_time: 1,
+            hot_spots: 3,
+            hot_spot_period: 400,
+        }
+    }
+}
+
+impl Config {
+    /// Parse from `key = value` text. Unknown keys are rejected (typo
+    /// safety); omitted keys keep defaults.
+    pub fn from_str_cfg(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = key.trim();
+            let value = value.trim();
+            let bad = |e: String| Error::Config(format!("line {}: {key}: {e}", lineno + 1));
+            match key {
+                "seed" => cfg.seed = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "family" => cfg.family = value.parse().map_err(bad)?,
+                "nodes" => cfg.nodes = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "speeds" => {
+                    cfg.speeds = value
+                        .split(',')
+                        .map(|s| s.trim().parse::<f64>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .map_err(|e| bad(e.to_string()))?;
+                }
+                "mu" => cfg.mu = value.parse().map_err(|e: std::num::ParseFloatError| bad(e.to_string()))?,
+                "framework" => cfg.framework = value.parse().map_err(bad)?,
+                "refine_every" => cfg.refine_every = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "threads" => cfg.threads = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "hop_limit" => cfg.hop_limit = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "inter_machine_delay" => cfg.inter_machine_delay = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "base_process_time" => cfg.base_process_time = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "hot_spots" => cfg.hot_spots = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                "hot_spot_period" => cfg.hot_spot_period = value.parse().map_err(|e: std::num::ParseIntError| bad(e.to_string()))?,
+                other => return Err(Error::Config(format!("line {}: unknown key {other:?}", lineno + 1))),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Config::from_str_cfg(&text)
+    }
+
+    /// Serialize back to the text format (round-trips through parse).
+    pub fn to_text(&self) -> String {
+        let speeds =
+            self.speeds.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(",");
+        let family = match self.family {
+            GraphFamily::Table1 => "table1",
+            GraphFamily::PreferentialAttachment => "pa",
+            GraphFamily::Geometric => "geo",
+            GraphFamily::ErdosRenyi => "er",
+        };
+        format!(
+            "seed = {}\nfamily = {}\nnodes = {}\nspeeds = {}\nmu = {}\nframework = {}\nrefine_every = {}\nthreads = {}\nhop_limit = {}\ninter_machine_delay = {}\nbase_process_time = {}\nhot_spots = {}\nhot_spot_period = {}\n",
+            self.seed,
+            family,
+            self.nodes,
+            speeds,
+            self.mu,
+            self.framework,
+            self.refine_every,
+            self.threads,
+            self.hop_limit,
+            self.inter_machine_delay,
+            self.base_process_time,
+            self.hot_spots,
+            self.hot_spot_period,
+        )
+    }
+
+    /// Sanity constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes < 2 {
+            return Err(Error::Config("nodes must be >= 2".into()));
+        }
+        if self.speeds.is_empty() || self.speeds.iter().any(|&s| s <= 0.0) {
+            return Err(Error::Config("speeds must be positive and non-empty".into()));
+        }
+        if self.mu < 0.0 {
+            return Err(Error::Config("mu must be >= 0".into()));
+        }
+        Ok(())
+    }
+
+    /// The machine pool this config describes.
+    pub fn machines(&self) -> crate::partition::MachineConfig {
+        crate::partition::MachineConfig::from_speeds(&self.speeds)
+    }
+}
+
+/// Generic key=value bag for ad-hoc experiment parameters (kept separate
+/// from [`Config`] so experiment harnesses can record extra sweep axes).
+#[derive(Debug, Clone, Default)]
+pub struct ParamBag(pub BTreeMap<String, String>);
+
+impl ParamBag {
+    pub fn set(&mut self, k: impl Into<String>, v: impl ToString) {
+        self.0.insert(k.into(), v.to_string());
+    }
+    pub fn to_text(&self) -> String {
+        self.0.iter().map(|(k, v)| format!("{k} = {v}\n")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.nodes, 230);
+        assert_eq!(c.mu, 8.0);
+        assert_eq!(c.speeds, vec![0.1, 0.2, 0.3, 0.3, 0.1]);
+    }
+
+    #[test]
+    fn round_trip() {
+        let c = Config::default();
+        let text = c.to_text();
+        let c2 = Config::from_str_cfg(&text).unwrap();
+        assert_eq!(c2.nodes, c.nodes);
+        assert_eq!(c2.mu, c.mu);
+        assert_eq!(c2.framework, c.framework);
+        assert_eq!(c2.family, c.family);
+        assert_eq!(c2.refine_every, c.refine_every);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(Config::from_str_cfg("bogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ok() {
+        let c = Config::from_str_cfg("# hi\n\nseed = 7\n").unwrap();
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(Config::from_str_cfg("nodes = 1\n").is_err());
+        assert!(Config::from_str_cfg("mu = -3\n").is_err());
+        assert!(Config::from_str_cfg("speeds = 0,1\n").is_err());
+    }
+
+    #[test]
+    fn param_bag_text() {
+        let mut b = ParamBag::default();
+        b.set("freq", 500);
+        b.set("arm", "A");
+        let t = b.to_text();
+        assert!(t.contains("freq = 500"));
+        assert!(t.contains("arm = A"));
+    }
+}

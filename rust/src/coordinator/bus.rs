@@ -1,0 +1,135 @@
+//! Message bus connecting machine actors: one mpsc queue per machine,
+//! shared overhead accounting, and optional injected per-message latency
+//! to emulate remotely-connected machines (the paper's Ethernet case).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::protocol::{Message, OverheadStats};
+use crate::partition::MachineId;
+
+/// A machine's endpoint: its inbox plus senders to everyone.
+pub struct Endpoint {
+    pub id: MachineId,
+    inbox: Receiver<Message>,
+    peers: Vec<Sender<Message>>,
+    stats: Arc<Mutex<OverheadStats>>,
+    latency: Duration,
+}
+
+impl Endpoint {
+    /// Send a message to machine `to` (recorded in the shared stats).
+    pub fn send(&self, to: MachineId, msg: Message) {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        self.stats.lock().expect("stats poisoned").record(&msg);
+        // A closed peer (already shut down) is fine to ignore.
+        let _ = self.peers[to].send(msg);
+    }
+
+    /// Broadcast to every machine except self.
+    pub fn broadcast_others(&self, msg: &Message) {
+        for to in 0..self.peers.len() {
+            if to != self.id {
+                self.send(to, msg.clone());
+            }
+        }
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self) -> Option<Message> {
+        self.inbox.recv().ok()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<Message> {
+        self.inbox.try_recv().ok()
+    }
+
+    /// Number of machines on the bus.
+    pub fn machine_count(&self) -> usize {
+        self.peers.len()
+    }
+}
+
+/// Build a K-machine bus. Returns one endpoint per machine and the shared
+/// overhead statistics handle.
+pub fn build_bus(k: usize, latency: Duration) -> (Vec<Endpoint>, Arc<Mutex<OverheadStats>>) {
+    assert!(k >= 1);
+    let stats = Arc::new(Mutex::new(OverheadStats::default()));
+    let mut senders = Vec::with_capacity(k);
+    let mut receivers = Vec::with_capacity(k);
+    for _ in 0..k {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    let endpoints = receivers
+        .into_iter()
+        .enumerate()
+        .map(|(id, inbox)| Endpoint {
+            id,
+            inbox,
+            peers: senders.clone(),
+            stats: Arc::clone(&stats),
+            latency,
+        })
+        .collect();
+    (endpoints, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let (mut eps, _) = build_bus(3, Duration::ZERO);
+        let c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.send(1, Message::Shutdown);
+        assert!(matches!(b.recv(), Some(Message::Shutdown)));
+        assert!(c.try_recv().is_none());
+    }
+
+    #[test]
+    fn broadcast_excludes_self() {
+        let (mut eps, _) = build_bus(3, Duration::ZERO);
+        let c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        a.broadcast_others(&Message::Shutdown);
+        assert!(matches!(b.recv(), Some(Message::Shutdown)));
+        assert!(matches!(c.recv(), Some(Message::Shutdown)));
+        assert!(a.try_recv().is_none());
+    }
+
+    #[test]
+    fn stats_shared_across_endpoints() {
+        let (eps, stats) = build_bus(2, Duration::ZERO);
+        eps[0].send(1, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+        eps[1].send(0, Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 0 });
+        assert_eq!(stats.lock().unwrap().take_my_turn.messages, 2);
+    }
+
+    #[test]
+    fn fifo_per_sender() {
+        let (mut eps, _) = build_bus(2, Duration::ZERO);
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        for i in 0..10 {
+            a.send(1, Message::TakeMyTurn { consecutive_forfeits: i, transfers_so_far: 0 });
+        }
+        for i in 0..10 {
+            match b.recv() {
+                Some(Message::TakeMyTurn { consecutive_forfeits, .. }) => {
+                    assert_eq!(consecutive_forfeits, i)
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+}

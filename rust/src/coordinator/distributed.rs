@@ -1,0 +1,279 @@
+//! The distributed refinement driver: spawns one thread per machine,
+//! runs the Fig. 2 trigger protocol to convergence, and assembles the
+//! refined partition (plus measured synchronization overhead).
+//!
+//! Protocol per machine thread (Fig. 2 verbatim, with a convergence
+//! counter riding on the token):
+//!
+//! ```text
+//! repeat
+//!   wait for trigger
+//!   if ReceiveNodeTrigger   -> adopt node, update local costs
+//!   if RegularUpdateTrigger -> apply transfer, update local costs
+//!   if TakeMyTurnTrigger    ->
+//!        transfer most dissatisfied node (or forfeit);
+//!        send ReceiveNodeTrigger to destination;
+//!        send RegularUpdateTrigger to all others;
+//!        send TakeMyTurnTrigger to the next machine
+//! until convergence (token records K consecutive forfeits)
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::bus::{build_bus, Endpoint};
+use crate::coordinator::machine::{MachineActor, TurnDecision};
+use crate::coordinator::protocol::{Message, OverheadStats};
+use crate::game::cost::Framework;
+use crate::graph::Graph;
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+/// Options for a distributed run.
+#[derive(Debug, Clone)]
+pub struct DistributedOptions {
+    pub mu: f64,
+    pub framework: Framework,
+    /// Dissatisfaction threshold treated as zero.
+    pub epsilon: f64,
+    /// Injected per-message latency (0 = local cluster).
+    pub latency: Duration,
+    /// Safety cap on total transfers.
+    pub max_transfers: usize,
+}
+
+impl Default for DistributedOptions {
+    fn default() -> Self {
+        DistributedOptions {
+            mu: 8.0,
+            framework: Framework::A,
+            epsilon: 1e-9,
+            latency: Duration::ZERO,
+            max_transfers: 1_000_000,
+        }
+    }
+}
+
+/// Result of a distributed refinement.
+#[derive(Debug, Clone)]
+pub struct DistributedReport {
+    /// The refined (equilibrium) partition.
+    pub partition: Partition,
+    /// Total transfers executed across machines.
+    pub transfers: usize,
+    /// Measured message/byte counts per type.
+    pub overhead: OverheadStats,
+    /// True if the ring detected convergence (vs hitting the cap).
+    pub converged: bool,
+}
+
+/// One machine's thread body. Returns its final local assignment replica
+/// and transfer count for the leader to assemble + cross-check.
+fn machine_loop(
+    mut actor: MachineActor,
+    endpoint: Endpoint,
+    epsilon: f64,
+    max_transfers: usize,
+) -> (Vec<MachineId>, usize, bool) {
+    let k = endpoint.machine_count();
+    let mut converged = false;
+    while let Some(msg) = endpoint.recv() {
+        match msg {
+            Message::ReceiveNode { node, from, to } => {
+                actor.apply_local_transfer(node, from, to);
+            }
+            Message::RegularUpdate { node, from, to, loads } => {
+                actor.apply_local_transfer(node, from, to);
+                debug_assert!(actor.loads_agree(&loads), "aggregate-state divergence");
+                let _ = loads;
+            }
+            Message::TakeMyTurn { consecutive_forfeits, transfers_so_far } => {
+                let decision = if transfers_so_far >= max_transfers {
+                    TurnDecision::Forfeit // cap reached: drain to shutdown
+                } else {
+                    actor.take_turn(epsilon)
+                };
+                let next = (actor.id + 1) % k;
+                match decision {
+                    TurnDecision::Transfer { node, to, .. } => {
+                        let total_transfers = transfers_so_far + 1;
+                        endpoint.send(to, Message::ReceiveNode { node, from: actor.id, to });
+                        let update = Message::RegularUpdate {
+                            node,
+                            from: actor.id,
+                            to,
+                            loads: actor.loads().to_vec(),
+                        };
+                        for m in 0..k {
+                            if m != actor.id && m != to {
+                                endpoint.send(m, update.clone());
+                            }
+                        }
+                        if total_transfers >= max_transfers {
+                            // Cap reached: shut the ring down.
+                            endpoint.broadcast_others(&Message::Shutdown);
+                            break;
+                        }
+                        endpoint.send(
+                            next,
+                            Message::TakeMyTurn {
+                                consecutive_forfeits: 0,
+                                transfers_so_far: total_transfers,
+                            },
+                        );
+                    }
+                    TurnDecision::Forfeit => {
+                        let f = consecutive_forfeits + 1;
+                        if f >= k {
+                            converged = true;
+                            endpoint.broadcast_others(&Message::Shutdown);
+                            break;
+                        }
+                        endpoint.send(
+                            next,
+                            Message::TakeMyTurn { consecutive_forfeits: f, transfers_so_far },
+                        );
+                    }
+                }
+            }
+            Message::Shutdown => {
+                converged = true;
+                break;
+            }
+        }
+    }
+    (actor.assignment().to_vec(), actor.transfers_made, converged)
+}
+
+/// Run the distributed refinement protocol to convergence.
+pub fn run_distributed(
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    options: &DistributedOptions,
+) -> DistributedReport {
+    let k = machines.count();
+    let (endpoints, stats) = build_bus(k, options.latency);
+
+    // Kick the ring: machine 0 takes the first turn.
+    endpoints[0]
+        .peers_send_self(Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+
+    let mut handles = Vec::with_capacity(k);
+    for endpoint in endpoints {
+        let actor = MachineActor::new(
+            endpoint.id,
+            Arc::clone(&graph),
+            machines.clone(),
+            &initial,
+            options.mu,
+            options.framework,
+        );
+        let epsilon = options.epsilon;
+        let max_transfers = options.max_transfers;
+        handles.push(std::thread::spawn(move || {
+            machine_loop(actor, endpoint, epsilon, max_transfers)
+        }));
+    }
+
+    let mut assignments: Vec<(Vec<MachineId>, usize, bool)> = Vec::with_capacity(k);
+    for h in handles {
+        assignments.push(h.join().expect("machine thread panicked"));
+    }
+
+    // All replicas must agree; assemble the final partition from any.
+    let reference = assignments[0].0.clone();
+    for (a, _, _) in &assignments {
+        assert_eq!(a, &reference, "machine replicas diverged");
+    }
+    let transfers: usize = assignments.iter().map(|(_, t, _)| *t).sum();
+    let converged = assignments.iter().any(|(_, _, c)| *c);
+    let partition = Partition::from_assignment(&graph, k, reference);
+    let overhead = stats.lock().expect("stats").clone();
+    DistributedReport { partition, transfers, overhead, converged }
+}
+
+impl Endpoint {
+    /// Send a message to *this* endpoint's own inbox (used by the leader
+    /// to inject the initial token before handing the endpoint to its
+    /// thread).
+    pub fn peers_send_self(&self, msg: Message) {
+        self.send(self.id, msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::game::cost::CostModel;
+    use crate::game::refine::{RefineEngine, RefineOptions};
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::util::rng::Pcg32;
+
+    fn setup(seed: u64, n: usize) -> (Arc<Graph>, MachineConfig, Partition) {
+        let mut rng = Pcg32::new(seed);
+        let g = Arc::new(table1_graph(n, 3, 6, WeightModel::default(), &mut rng));
+        let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let assignment: Vec<usize> = (0..n).map(|_| rng.index(5)).collect();
+        let part = Partition::from_assignment(&g, 5, assignment);
+        (g, machines, part)
+    }
+
+    #[test]
+    fn distributed_reaches_nash_equilibrium() {
+        let (g, machines, part) = setup(1, 60);
+        let report =
+            run_distributed(Arc::clone(&g), &machines, part, &DistributedOptions::default());
+        assert!(report.converged);
+        report.partition.validate(&g).unwrap();
+        let model = CostModel::new(&g, machines, 8.0, Framework::A);
+        for i in 0..g.node_count() {
+            let (j, _) = model.dissatisfaction(&report.partition, i);
+            assert!(j <= 1e-6, "node {i} dissatisfied: {j}");
+        }
+    }
+
+    #[test]
+    fn distributed_matches_sequential_exactly() {
+        // Same start, same deterministic token order => identical result.
+        let (g, machines, part) = setup(2, 50);
+        let mut seq = RefineEngine::new(&g, &machines, part.clone(), 8.0, Framework::A);
+        let seq_report = seq.run(&RefineOptions::default());
+        let dist =
+            run_distributed(Arc::clone(&g), &machines, part, &DistributedOptions::default());
+        assert_eq!(dist.transfers, seq_report.transfers);
+        assert_eq!(dist.partition.assignment(), seq.partition().assignment());
+    }
+
+    #[test]
+    fn transfer_cap_halts_ring() {
+        let (g, machines, part) = setup(3, 60);
+        let opts = DistributedOptions { max_transfers: 2, ..Default::default() };
+        let report = run_distributed(Arc::clone(&g), &machines, part, &opts);
+        assert!(report.transfers <= 2 + 1, "cap grossly exceeded: {}", report.transfers);
+    }
+
+    #[test]
+    fn overhead_counts_messages() {
+        let (g, machines, part) = setup(4, 60);
+        let report =
+            run_distributed(Arc::clone(&g), &machines, part, &DistributedOptions::default());
+        let o = &report.overhead;
+        assert!(o.take_my_turn.messages as usize >= report.transfers);
+        // Each transfer => 1 receive_node + (K-2) regular updates.
+        assert_eq!(o.receive_node.messages as usize, report.transfers);
+        assert_eq!(o.regular_update.messages as usize, report.transfers * 3);
+    }
+
+    #[test]
+    fn framework_b_also_converges_distributed() {
+        let (g, machines, part) = setup(5, 60);
+        let opts = DistributedOptions { framework: Framework::B, ..Default::default() };
+        let report = run_distributed(Arc::clone(&g), &machines, part, &opts);
+        assert!(report.converged);
+        let model = CostModel::new(&g, machines, 8.0, Framework::B);
+        for i in 0..g.node_count() {
+            let (j, _) = model.dissatisfaction(&report.partition, i);
+            assert!(j <= 1e-6);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Wire protocol of the distributed refinement (paper Fig. 2), plus
+//! overhead accounting used to verify the §4.5 feasibility claim.
+
+use crate::graph::NodeId;
+use crate::partition::MachineId;
+
+/// Messages exchanged between machine actors. Mirrors Fig. 2's triggers.
+#[derive(Debug, Clone)]
+pub enum Message {
+    /// The round-robin turn token. Carries the count of consecutive
+    /// forfeits so the ring can detect convergence (all K forfeited) and
+    /// the global transfer count so the safety cap is ring-wide.
+    TakeMyTurn { consecutive_forfeits: usize, transfers_so_far: usize },
+    /// "You now own `node`" — sent to the destination machine of a
+    /// transfer.
+    ReceiveNode { node: NodeId, from: MachineId, to: MachineId },
+    /// Transfer notification + fresh aggregate loads, broadcast to all
+    /// other machines. `loads` has length K — the machine-level aggregate
+    /// state of §4.5.
+    RegularUpdate { node: NodeId, from: MachineId, to: MachineId, loads: Vec<f64> },
+    /// Convergence reached; stop and report.
+    Shutdown,
+}
+
+impl Message {
+    /// Short type tag for statistics.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Message::TakeMyTurn { .. } => "take_my_turn",
+            Message::ReceiveNode { .. } => "receive_node",
+            Message::RegularUpdate { .. } => "regular_update",
+            Message::Shutdown => "shutdown",
+        }
+    }
+
+    /// Approximate serialized size in bytes. This is the quantity whose
+    /// independence from N the §4.5 claim is about: `TakeMyTurn` and
+    /// `ReceiveNode` are O(1); `RegularUpdate` is O(K).
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            Message::TakeMyTurn { .. } => 1 + 8 + 8,
+            Message::ReceiveNode { .. } => 1 + 8 + 4 + 4,
+            Message::RegularUpdate { loads, .. } => 1 + 8 + 4 + 4 + 8 * loads.len(),
+            Message::Shutdown => 1,
+        }
+    }
+}
+
+/// Per-type message counters (lock-free on the hot path is unnecessary:
+/// updates happen per message, machine count is tiny).
+#[derive(Debug, Clone, Default)]
+pub struct OverheadStats {
+    pub take_my_turn: Counter,
+    pub receive_node: Counter,
+    pub regular_update: Counter,
+    pub shutdown: Counter,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counter {
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+impl OverheadStats {
+    pub fn record(&mut self, msg: &Message) {
+        let c = match msg {
+            Message::TakeMyTurn { .. } => &mut self.take_my_turn,
+            Message::ReceiveNode { .. } => &mut self.receive_node,
+            Message::RegularUpdate { .. } => &mut self.regular_update,
+            Message::Shutdown => &mut self.shutdown,
+        };
+        c.messages += 1;
+        c.bytes += msg.approx_bytes() as u64;
+    }
+
+    pub fn total_messages(&self) -> u64 {
+        self.take_my_turn.messages
+            + self.receive_node.messages
+            + self.regular_update.messages
+            + self.shutdown.messages
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.take_my_turn.bytes
+            + self.receive_node.bytes
+            + self.regular_update.bytes
+            + self.shutdown.bytes
+    }
+
+    /// Synchronization bytes per executed transfer — the paper's
+    /// feasibility metric. One transfer costs 1 `ReceiveNode` + (K−1)
+    /// `RegularUpdate`s: O(K²) bytes total, **independent of N**.
+    pub fn bytes_per_transfer(&self, transfers: u64) -> f64 {
+        if transfers == 0 {
+            return 0.0;
+        }
+        (self.receive_node.bytes + self.regular_update.bytes) as f64 / transfers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_are_n_independent() {
+        let a = Message::ReceiveNode { node: 3, from: 0, to: 1 };
+        let b = Message::ReceiveNode { node: 3_000_000, from: 0, to: 1 };
+        assert_eq!(a.approx_bytes(), b.approx_bytes());
+        let u = Message::RegularUpdate { node: 1, from: 0, to: 1, loads: vec![0.0; 5] };
+        assert_eq!(u.approx_bytes(), 1 + 8 + 4 + 4 + 40);
+    }
+
+    #[test]
+    fn stats_accumulate_by_tag() {
+        let mut s = OverheadStats::default();
+        s.record(&Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+        s.record(&Message::Shutdown);
+        s.record(&Message::RegularUpdate { node: 0, from: 0, to: 1, loads: vec![0.0; 4] });
+        assert_eq!(s.total_messages(), 3);
+        assert_eq!(s.take_my_turn.messages, 1);
+        assert_eq!(s.regular_update.bytes, (1 + 8 + 4 + 4 + 32) as u64);
+    }
+
+    #[test]
+    fn bytes_per_transfer_guard_against_zero() {
+        let s = OverheadStats::default();
+        assert_eq!(s.bytes_per_transfer(0), 0.0);
+    }
+
+    #[test]
+    fn tags_stable() {
+        assert_eq!(Message::Shutdown.tag(), "shutdown");
+        assert_eq!(Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 0 }.tag(), "take_my_turn");
+    }
+}

@@ -1,0 +1,37 @@
+//! Library-wide error type.
+
+/// Errors produced by GTIP library operations.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("graph error: {0}")]
+    Graph(String),
+
+    #[error("partition error: {0}")]
+    Partition(String),
+
+    #[error("simulation error: {0}")]
+    Sim(String),
+
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,248 @@
+//! Ablation studies for design choices the paper calls out.
+//!
+//! * [`mu_sweep`] — §5.1's explicit trend: "as μ was increased, the
+//!   number of runs where the C̃_i framework performed better increased,
+//!   but again only in terms of its own global cost (C̃0)". We sweep μ
+//!   and count B-wins-own-cost per μ level.
+//! * [`initial_partition_ablation`] — §4.1's motivation for the
+//!   focal-node initial partitioning: compare equilibrium quality (and
+//!   iterations) from App.-A hop-growth starts vs uniform-random starts.
+//! * [`cluster_escape_ablation`] — §4.4/§7: how often do cluster
+//!   (multi-node) transfers improve a single-node Nash equilibrium, and
+//!   by how much.
+
+use crate::experiments::common::{run_tracked, StudySetup};
+use crate::game::cluster::{cluster_escape, ClusterOptions};
+use crate::game::cost::Framework;
+use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::partition::baselines::random_partition;
+use crate::partition::global_cost;
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+
+/// One μ level of the sweep.
+#[derive(Debug, Clone)]
+pub struct MuPoint {
+    pub mu: f64,
+    pub runs: usize,
+    /// Runs where B's equilibrium had strictly lower C̃0 than A's.
+    pub b_wins_own: usize,
+    /// Runs where A's equilibrium was better on both costs.
+    pub a_wins_both: usize,
+}
+
+/// §5.1 μ-trend: sweep μ, fixed graphs/initials across levels.
+pub fn mu_sweep(nodes: usize, runs_per_mu: usize, mus: &[f64], seed: u64) -> Vec<MuPoint> {
+    let mut out = Vec::with_capacity(mus.len());
+    for &mu in mus {
+        let mut b_wins_own = 0;
+        let mut a_wins_both = 0;
+        for r in 0..runs_per_mu {
+            let mut rng = Pcg32::new(seed.wrapping_add(r as u64)); // same graphs per μ level
+            let setup = StudySetup { nodes, mu, ..Default::default() };
+            let graph = setup.graph(&mut rng);
+            let initial = setup.initial(&graph, &mut rng);
+            let a = run_tracked(&graph, &setup.machines, initial.clone(), mu, Framework::A);
+            let b = run_tracked(&graph, &setup.machines, initial, mu, Framework::B);
+            if b.c0_tilde < a.c0_tilde - 1e-9 {
+                b_wins_own += 1;
+            }
+            if a.c0 <= b.c0 + 1e-9 && a.c0_tilde <= b.c0_tilde + 1e-9 {
+                a_wins_both += 1;
+            }
+        }
+        out.push(MuPoint { mu, runs: runs_per_mu, b_wins_own, a_wins_both });
+    }
+    out
+}
+
+/// Initial-partitioning ablation result.
+#[derive(Debug, Clone)]
+pub struct InitAblation {
+    pub runs: usize,
+    pub mean_c0_grow: f64,
+    pub mean_c0_random: f64,
+    pub mean_iters_grow: f64,
+    pub mean_iters_random: f64,
+}
+
+/// App.-A hop-growth start vs uniform-random start (framework A).
+pub fn initial_partition_ablation(nodes: usize, runs: usize, seed: u64) -> InitAblation {
+    let setup = StudySetup { nodes, ..Default::default() };
+    let mut c0g = 0.0;
+    let mut c0r = 0.0;
+    let mut itg = 0.0;
+    let mut itr = 0.0;
+    for r in 0..runs {
+        let mut rng = Pcg32::new(seed.wrapping_add(100 + r as u64));
+        let graph = setup.graph(&mut rng);
+        let grow = setup.initial(&graph, &mut rng);
+        let rand = random_partition(&graph, setup.machines.count(), &mut rng);
+        let a = run_tracked(&graph, &setup.machines, grow, setup.mu, Framework::A);
+        let b = run_tracked(&graph, &setup.machines, rand, setup.mu, Framework::A);
+        c0g += a.c0;
+        c0r += b.c0;
+        itg += a.iterations as f64;
+        itr += b.iterations as f64;
+    }
+    let n = runs as f64;
+    InitAblation {
+        runs,
+        mean_c0_grow: c0g / n,
+        mean_c0_random: c0r / n,
+        mean_iters_grow: itg / n,
+        mean_iters_random: itr / n,
+    }
+}
+
+/// Cluster-escape ablation result.
+#[derive(Debug, Clone)]
+pub struct ClusterAblation {
+    pub runs: usize,
+    /// Runs where at least one cluster move improved the equilibrium.
+    pub improved_runs: usize,
+    /// Mean relative C0 improvement over the single-node equilibrium.
+    pub mean_rel_improvement: f64,
+}
+
+/// §4.4/§7: value of coordinated (cluster) moves on top of single-node
+/// equilibria.
+pub fn cluster_escape_ablation(nodes: usize, runs: usize, seed: u64) -> ClusterAblation {
+    let setup = StudySetup { nodes, ..Default::default() };
+    let mut improved_runs = 0;
+    let mut rel = 0.0;
+    for r in 0..runs {
+        let mut rng = Pcg32::new(seed.wrapping_add(500 + r as u64));
+        let graph = setup.graph(&mut rng);
+        let initial = setup.initial(&graph, &mut rng);
+        let mut engine =
+            RefineEngine::new(&graph, &setup.machines, initial, setup.mu, Framework::A);
+        let _ = engine.run(&RefineOptions::default());
+        let mut part = engine.into_partition();
+        let before = global_cost::c0(&graph, &setup.machines, &part, setup.mu);
+        let moves = cluster_escape(
+            &graph,
+            &setup.machines,
+            &mut part,
+            setup.mu,
+            Framework::A,
+            &ClusterOptions::default(),
+        );
+        let after = global_cost::c0(&graph, &setup.machines, &part, setup.mu);
+        if !moves.is_empty() {
+            improved_runs += 1;
+        }
+        rel += (before - after) / before.max(1.0);
+    }
+    ClusterAblation {
+        runs,
+        improved_runs,
+        mean_rel_improvement: rel / runs as f64,
+    }
+}
+
+/// CLI entry: run all three ablations and print tables.
+pub fn run_and_report(seed: u64, quick: bool) {
+    let (nodes, runs) = if quick { (120, 8) } else { (230, 20) };
+
+    // μ sweep.
+    let mus = [2.0, 8.0, 32.0];
+    let points = mu_sweep(nodes, runs, &mus, seed);
+    let mut t = Table::new(
+        "Ablation: effect of mu (paper §5.1: B wins its own cost more often as mu grows)",
+        &["mu", "runs", "B wins own C~0", "A wins both"],
+    );
+    for p in &points {
+        t.row(&[
+            format!("{}", p.mu),
+            p.runs.to_string(),
+            p.b_wins_own.to_string(),
+            p.a_wins_both.to_string(),
+        ]);
+    }
+    println!("{}", t.to_text());
+    let _ = t.write_csv("ablation_mu");
+
+    // Initial partitioning.
+    let init = initial_partition_ablation(nodes, runs, seed);
+    let mut t2 = Table::new(
+        "Ablation: App.-A focal-node initial partitioning vs random start (framework A)",
+        &["metric", "focal-grow", "random"],
+    );
+    t2.row(&[
+        "mean C0 at equilibrium".into(),
+        format!("{:.0}", init.mean_c0_grow),
+        format!("{:.0}", init.mean_c0_random),
+    ]);
+    t2.row(&[
+        "mean iterations".into(),
+        format!("{:.1}", init.mean_iters_grow),
+        format!("{:.1}", init.mean_iters_random),
+    ]);
+    println!("{}", t2.to_text());
+    let _ = t2.write_csv("ablation_initial");
+
+    // Cluster escape.
+    let cl = cluster_escape_ablation(nodes, runs, seed);
+    let mut t3 = Table::new(
+        "Ablation: cluster (multi-node) transfers on top of single-node equilibria (§4.4/§7)",
+        &["runs", "runs improved", "mean rel C0 improvement"],
+    );
+    t3.row(&[
+        cl.runs.to_string(),
+        cl.improved_runs.to_string(),
+        format!("{:.4}", cl.mean_rel_improvement),
+    ]);
+    println!("{}", t3.to_text());
+    let _ = t3.write_csv("ablation_cluster");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mu_sweep_structurally_sane() {
+        // The paper's side-note claims B wins its own cost more often as
+        // μ grows; in our weight regime the measured trend is the
+        // OPPOSITE (at high μ the shared cut term dominates both local
+        // costs, so the frameworks' moves coincide and B ties instead of
+        // winning) — recorded as a non-reproducing secondary claim in
+        // EXPERIMENTS.md. Here we assert only structural sanity: counts
+        // bounded by runs, and A's overall dominance (the primary §5.1
+        // claim) holding at every μ level.
+        let points = mu_sweep(100, 10, &[1.0, 8.0, 32.0], 7);
+        assert_eq!(points.len(), 3);
+        for p in &points {
+            assert!(p.b_wins_own <= p.runs);
+            assert!(p.a_wins_both <= p.runs);
+            assert!(
+                p.a_wins_both * 2 >= p.runs,
+                "A lost dominance at mu={}: {p:?}",
+                p.mu
+            );
+        }
+    }
+
+    #[test]
+    fn initial_partition_helps_or_ties() {
+        let r = initial_partition_ablation(100, 6, 11);
+        // The focal-grow start should not be *worse* than random in
+        // equilibrium quality (paper's §4.1 motivation), and typically
+        // converges in fewer iterations.
+        assert!(
+            r.mean_c0_grow <= r.mean_c0_random * 1.02,
+            "grow {} vs random {}",
+            r.mean_c0_grow,
+            r.mean_c0_random
+        );
+        assert!(r.mean_iters_grow <= r.mean_iters_random * 1.2);
+    }
+
+    #[test]
+    fn cluster_escape_never_hurts() {
+        let r = cluster_escape_ablation(100, 6, 13);
+        assert!(r.mean_rel_improvement >= -1e-12);
+        assert!(r.improved_runs <= r.runs);
+    }
+}

@@ -1,0 +1,176 @@
+//! §5.1 batch study: 50 random graph realizations × 10 initial
+//! partitions (also sweeping μ and machine speeds across realizations),
+//! counting (a) in how many runs each framework converges to better
+//! values of *both* global costs, and (b) the average number of
+//! discrepancy steps — iterations that increase the other framework's
+//! global cost (paper: ≈0.2 C0-discrepancies vs ≈5.2 C̃0-discrepancies,
+//! i.e. framework A searches more "broadly" yet almost never hurts C̃0).
+
+use crate::experiments::common::{run_tracked, StudySetup};
+use crate::game::cost::Framework;
+use crate::partition::MachineConfig;
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+
+/// Aggregate result of the batch study.
+#[derive(Debug, Clone, Default)]
+pub struct BatchReport {
+    pub runs: usize,
+    /// Runs where A reached lower-or-equal values of both C0 and C̃0.
+    pub a_wins_both: usize,
+    /// Runs where B beat A on its own cost C̃0 (the paper's "1 out of
+    /// 50" case).
+    pub b_wins_own: usize,
+    /// Runs where B beat A on both costs.
+    pub b_wins_both: usize,
+    /// Mean number of C0-increasing steps per run under framework B.
+    pub avg_c0_discrepancies: f64,
+    /// Mean number of C̃0-increasing steps per run under framework A.
+    pub avg_c0_tilde_discrepancies: f64,
+    /// Mean iterations to convergence (A / B).
+    pub avg_iters_a: f64,
+    pub avg_iters_b: f64,
+}
+
+impl BatchReport {
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            "Batch study (50 graphs x 10 initial partitions in the paper)",
+            &["metric", "value", "paper"],
+        );
+        let rows: &[(&str, String, &str)] = &[
+            ("runs", self.runs.to_string(), "50"),
+            ("A wins both costs", self.a_wins_both.to_string(), "49/50"),
+            ("B wins own cost only", self.b_wins_own.to_string(), "1/50"),
+            ("B wins both costs", self.b_wins_both.to_string(), "0/50"),
+            (
+                "avg C0-discrepancies (under B)",
+                format!("{:.2}", self.avg_c0_discrepancies),
+                "~0.2",
+            ),
+            (
+                "avg C~0-discrepancies (under A)",
+                format!("{:.2}", self.avg_c0_tilde_discrepancies),
+                "~5.2",
+            ),
+            ("avg iterations (A)", format!("{:.1}", self.avg_iters_a), "-"),
+            ("avg iterations (B)", format!("{:.1}", self.avg_iters_b), "-"),
+        ];
+        for (m, v, p) in rows {
+            t.row(&[m.to_string(), v.clone(), p.to_string()]);
+        }
+        t
+    }
+}
+
+/// Run the batch study: `realizations` graphs × `initials` starting
+/// partitions. μ and the speed profile vary across realizations, as in
+/// the paper ("we also varied the relative weight μ and normalized
+/// machine speeds w_k").
+pub fn run(nodes: usize, realizations: usize, initials: usize, seed: u64) -> BatchReport {
+    let speed_profiles: [&[f64]; 3] =
+        [&[0.1, 0.2, 0.3, 0.3, 0.1], &[0.2, 0.2, 0.2, 0.2, 0.2], &[0.05, 0.15, 0.3, 0.35, 0.15]];
+    let mus = [4.0, 8.0, 16.0];
+
+    let mut report = BatchReport::default();
+    let mut sum_c0_disc = 0.0;
+    let mut sum_c0t_disc = 0.0;
+    let mut sum_it_a = 0.0;
+    let mut sum_it_b = 0.0;
+
+    for real in 0..realizations {
+        let mut rng = Pcg32::new(seed.wrapping_add(1000 + real as u64));
+        let setup = StudySetup {
+            nodes,
+            machines: MachineConfig::from_speeds(speed_profiles[real % speed_profiles.len()]),
+            mu: mus[real % mus.len()],
+        };
+        let graph = setup.graph(&mut rng);
+
+        // Aggregate over the initial partitions of this realization: the
+        // paper counts per-run results; a "run" is (graph, initial).
+        for init_idx in 0..initials {
+            let mut init_rng = rng.fork(init_idx as u64);
+            let initial = setup.initial(&graph, &mut init_rng);
+            let a =
+                run_tracked(&graph, &setup.machines, initial.clone(), setup.mu, Framework::A);
+            let b = run_tracked(&graph, &setup.machines, initial, setup.mu, Framework::B);
+
+            report.runs += 1;
+            let tol = 1e-9;
+            let a_both = a.c0 <= b.c0 + tol && a.c0_tilde <= b.c0_tilde + tol;
+            let b_both = b.c0 <= a.c0 + tol && b.c0_tilde <= a.c0_tilde + tol;
+            if a_both {
+                report.a_wins_both += 1;
+            }
+            if b_both && !a_both {
+                report.b_wins_both += 1;
+            } else if b.c0_tilde < a.c0_tilde - tol && !b_both {
+                report.b_wins_own += 1;
+            }
+            sum_c0_disc += b.c0_discrepancies as f64;
+            sum_c0t_disc += a.c0_tilde_discrepancies as f64;
+            sum_it_a += a.iterations as f64;
+            sum_it_b += b.iterations as f64;
+        }
+    }
+    let n = report.runs as f64;
+    report.avg_c0_discrepancies = sum_c0_disc / n;
+    report.avg_c0_tilde_discrepancies = sum_c0t_disc / n;
+    report.avg_iters_a = sum_it_a / n;
+    report.avg_iters_b = sum_it_b / n;
+    report
+}
+
+/// CLI entry with paper-scale parameters.
+pub fn run_and_report(seed: u64, quick: bool) -> BatchReport {
+    let (realizations, initials) = if quick { (10, 3) } else { (50, 10) };
+    let report = run(230, realizations, initials, seed);
+    let table = report.to_table();
+    println!("{}", table.to_text());
+    if let Ok(path) = table.write_csv("batch_study") {
+        println!("(wrote {})", path.display());
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_batch_shapes_match_paper() {
+        // 8 realizations x 2 initials at N=100 — fast but statistically
+        // meaningful for the *direction* of every claim.
+        let r = run(100, 8, 2, 3);
+        assert_eq!(r.runs, 16);
+        // A should dominate in the overwhelming majority of runs.
+        assert!(
+            r.a_wins_both as f64 >= 0.7 * r.runs as f64,
+            "A won both in only {}/{} runs",
+            r.a_wins_both,
+            r.runs
+        );
+        // The discrepancy asymmetry is the key §5.1 observation.
+        assert!(
+            r.avg_c0_tilde_discrepancies > r.avg_c0_discrepancies,
+            "expected C~0-discrepancies ({}) > C0-discrepancies ({})",
+            r.avg_c0_tilde_discrepancies,
+            r.avg_c0_discrepancies
+        );
+    }
+
+    #[test]
+    fn win_counts_partition_runs() {
+        let r = run(80, 6, 2, 9);
+        assert!(r.a_wins_both + r.b_wins_both <= r.runs);
+    }
+
+    #[test]
+    fn table_lists_paper_reference_values() {
+        let r = run(60, 2, 1, 1);
+        let txt = r.to_table().to_text();
+        assert!(txt.contains("~5.2"));
+        assert!(txt.contains("49/50"));
+    }
+}

@@ -1,0 +1,328 @@
+//! `gtip` command-line interface.
+//!
+//! ```text
+//! gtip partition  [--family pa|geo|er|table1] [--nodes N] [--k K | --speeds s1,s2,...]
+//!                 [--mu MU] [--framework A|B] [--seed S] [--graph FILE]
+//!                 [--distributed] [--anneal] [--save FILE]
+//! gtip simulate   [--family ...] [--nodes N] [--k K] [--refine-every T]
+//!                 [--framework A|B] [--mu MU] [--threads N] [--seed S]
+//! gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
+//! gtip artifacts  [--dir DIR]         # verify PJRT artifacts vs native
+//! gtip help
+//! ```
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::coordinator::{run_distributed, DistributedOptions};
+use crate::game::annealing::{anneal_then_refine, AnnealOptions};
+use crate::game::cost::Framework;
+use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::graph::generators::{generate, GraphFamily};
+use crate::partition::initial::grow_partition;
+use crate::partition::{global_cost, MachineConfig};
+use crate::sim::driver::{run_dynamic, DriverOptions};
+use crate::sim::engine::SimOptions;
+use crate::sim::workload::{FloodWorkload, WorkloadOptions};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+
+const HELP: &str = "gtip — Game Theoretic Iterative Partitioning (Kurve et al., TOMACS 2011)
+
+USAGE:
+  gtip partition  [--family pa|geo|er|table1] [--nodes N] [--k K] [--speeds s1,..]
+                  [--mu MU] [--framework A|B] [--seed S] [--graph FILE]
+                  [--distributed] [--anneal] [--save FILE]
+  gtip simulate   [--family ...] [--nodes N] [--k K] [--refine-every T]
+                  [--framework A|B] [--mu MU] [--threads N] [--seed S]
+  gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
+  gtip artifacts  [--dir DIR]
+  gtip help
+";
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn main() -> i32 {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand() {
+        Some("partition") => cmd_partition(args),
+        Some("simulate") => cmd_simulate(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("artifacts") => cmd_artifacts(args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => {
+            anyhow::bail!("unknown subcommand {other:?}\n{HELP}");
+        }
+    }
+}
+
+fn machines_from_args(args: &Args) -> anyhow::Result<MachineConfig> {
+    if let Some(speeds) = args.opt_list::<f64>("speeds")? {
+        Ok(MachineConfig::from_speeds(&speeds))
+    } else {
+        let k = args.opt_or::<usize>("k", 5)?;
+        Ok(MachineConfig::homogeneous(k))
+    }
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_or::<u64>("seed", Config::default().seed)?;
+    let mu = args.opt_or::<f64>("mu", 8.0)?;
+    let framework: Framework =
+        args.str_or("framework", "A").parse().map_err(anyhow::Error::msg)?;
+    let machines = machines_from_args(args)?;
+    let mut rng = Pcg32::new(seed);
+
+    let graph = if let Some(path) = args.opt_str("graph") {
+        crate::graph::io::load_graph(path)?
+    } else {
+        let family: GraphFamily =
+            args.str_or("family", "table1").parse().map_err(anyhow::Error::msg)?;
+        let nodes = args.opt_or::<usize>("nodes", 230)?;
+        generate(family, nodes, &mut rng)
+    };
+
+    println!(
+        "graph: {} nodes, {} edges; K={} machines; mu={mu}; framework {framework}",
+        graph.node_count(),
+        graph.edge_count(),
+        machines.count()
+    );
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let (c0_i, c0t_i) = global_cost::both(&graph, &machines, &initial, mu);
+    println!("initial partition:   C0 = {c0_i:.0}   C~0 = {c0t_i:.0}   counts = {:?}", initial.counts());
+
+    if args.flag("distributed") {
+        let report = run_distributed(
+            Arc::new(graph.clone()),
+            &machines,
+            initial,
+            &DistributedOptions { mu, framework, ..Default::default() },
+        );
+        let (c0, c0t) = global_cost::both(&graph, &machines, &report.partition, mu);
+        println!(
+            "distributed refine:  C0 = {c0:.0}   C~0 = {c0t:.0}   transfers = {}   counts = {:?}",
+            report.transfers,
+            report.partition.counts()
+        );
+        println!(
+            "sync overhead: {} msgs, {} bytes total, {:.1} bytes/transfer (O(K), N-independent)",
+            report.overhead.total_messages(),
+            report.overhead.total_bytes(),
+            report.overhead.bytes_per_transfer(report.transfers as u64),
+        );
+    } else if args.flag("anneal") {
+        let (part, potential) = anneal_then_refine(
+            &graph,
+            &machines,
+            initial,
+            mu,
+            framework,
+            &AnnealOptions::default(),
+            &mut rng,
+        );
+        let (c0, c0t) = global_cost::both(&graph, &machines, &part, mu);
+        println!(
+            "anneal+refine:       C0 = {c0:.0}   C~0 = {c0t:.0}   potential = {potential:.0}   counts = {:?}",
+            part.counts()
+        );
+    } else {
+        let mut engine = RefineEngine::new(&graph, &machines, initial, mu, framework);
+        let report = engine.run(&RefineOptions::default());
+        let (c0, c0t) = global_cost::both(&graph, &machines, engine.partition(), mu);
+        println!(
+            "iterative refine:    C0 = {c0:.0}   C~0 = {c0t:.0}   transfers = {}   converged = {}   counts = {:?}",
+            report.transfers,
+            report.converged,
+            engine.partition().counts()
+        );
+    }
+
+    if let Some(path) = args.opt_str("save") {
+        crate::graph::io::save_graph(&graph, path)?;
+        println!("(saved graph to {path})");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let seed = args.opt_or::<u64>("seed", 42)?;
+    let family: GraphFamily = args.str_or("family", "pa").parse().map_err(anyhow::Error::msg)?;
+    let nodes = args.opt_or::<usize>("nodes", 230)?;
+    let machines = machines_from_args(args)?;
+    let refine_every = args.opt_or::<u64>("refine-every", 500)?;
+    let framework: Framework =
+        args.str_or("framework", "A").parse().map_err(anyhow::Error::msg)?;
+    let mu = args.opt_or::<f64>("mu", 8.0)?;
+    let threads = args.opt_or::<usize>("threads", 150)?;
+
+    let mut rng = Pcg32::new(seed);
+    let graph = generate(family, nodes, &mut rng);
+    let workload = FloodWorkload::generate(
+        &graph,
+        &WorkloadOptions { threads, ..Default::default() },
+        &mut rng,
+    );
+    let driver = DriverOptions {
+        sim: SimOptions { trace_every: 50, ..Default::default() },
+        refine_every,
+        framework,
+        mu,
+        ticks_per_transfer: 0,
+    };
+    let report = run_dynamic(&graph, &machines, workload, &driver, &mut rng);
+    println!(
+        "simulation time: {} wall ticks  (events {}, forwards {}, cross-machine {}, rollbacks {}, anti-messages {})",
+        report.total_time(),
+        report.stats.events_processed,
+        report.stats.events_forwarded,
+        report.stats.cross_machine_forwards,
+        report.stats.rollbacks,
+        report.stats.antimessages_sent,
+    );
+    println!(
+        "refinement epochs: {}   node transfers: {}   truncated: {}",
+        report.refinements, report.transfers, report.stats.truncated
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positionals
+        .get(1)
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("experiment name required: table1|batch|fig7|fig8|fig9|fig10|ablation|all"))?;
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let quick = args.flag("quick");
+    match which {
+        "table1" => {
+            crate::experiments::table1::run_and_report(seed);
+        }
+        "batch" => {
+            crate::experiments::batch::run_and_report(seed, quick);
+        }
+        "fig7" => {
+            crate::experiments::figs78::run_and_report(
+                GraphFamily::PreferentialAttachment,
+                seed,
+                quick,
+            );
+        }
+        "fig8" => {
+            crate::experiments::figs78::run_and_report(GraphFamily::Geometric, seed, quick);
+        }
+        "ablation" => {
+            crate::experiments::ablation::run_and_report(seed, quick);
+        }
+        "fig9" | "fig10" | "fig9_10" => {
+            crate::experiments::fig9_10::run_and_report(seed, quick);
+        }
+        "all" => {
+            crate::experiments::table1::run_and_report(seed);
+            crate::experiments::batch::run_and_report(seed, quick);
+            crate::experiments::figs78::run_and_report(
+                GraphFamily::PreferentialAttachment,
+                seed,
+                quick,
+            );
+            crate::experiments::figs78::run_and_report(GraphFamily::Geometric, seed, quick);
+            crate::experiments::fig9_10::run_and_report(seed, quick);
+        }
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+    use crate::runtime::cost_eval::{max_rel_error_vs_native, PjrtCostEvaluator};
+    let dir = args.str_or("dir", "artifacts").to_string();
+    let mut eval = PjrtCostEvaluator::from_dir(&dir)?;
+    println!("artifacts dir {dir}: max padded size {} nodes", eval.max_nodes());
+
+    let mut rng = Pcg32::new(7);
+    let setup = crate::experiments::common::StudySetup::default();
+    let graph = setup.graph(&mut rng);
+    let part = setup.initial(&graph, &mut rng);
+    let out = eval.evaluate(&graph, &setup.machines, &part, setup.mu)?;
+    let err = max_rel_error_vs_native(&graph, &setup.machines, &part, setup.mu, &out);
+    println!(
+        "verified refine_step on N={} K={}: PJRT vs native max rel error = {err:.2e}",
+        out.n, out.k
+    );
+    anyhow::ensure!(err < 1e-3, "artifact/native divergence: {err}");
+    println!("artifacts OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn help_runs() {
+        run(&parse(&["help"])).unwrap();
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(&parse(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn partition_small_sequential() {
+        run(&parse(&["partition", "--nodes", "60", "--seed", "3", "--k", "3"])).unwrap();
+    }
+
+    #[test]
+    fn partition_distributed_small() {
+        run(&parse(&["partition", "--nodes", "50", "--seed", "4", "--k", "3", "--distributed"]))
+            .unwrap();
+    }
+
+    #[test]
+    fn simulate_small() {
+        run(&parse(&[
+            "simulate",
+            "--nodes",
+            "80",
+            "--threads",
+            "30",
+            "--refine-every",
+            "200",
+            "--seed",
+            "5",
+            "--k",
+            "3",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn experiment_requires_name() {
+        assert!(run(&parse(&["experiment"])).is_err());
+        assert!(run(&parse(&["experiment", "bogus"])).is_err());
+    }
+}

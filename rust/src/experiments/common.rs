@@ -1,0 +1,153 @@
+//! Shared experiment plumbing: paper-default setups and a refinement
+//! runner that tracks *both* global costs per step (needed for the
+//! §5.1 discrepancy statistics).
+
+use crate::game::cost::{CostModel, Framework};
+use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::graph::generators::{table1_graph, WeightModel};
+use crate::graph::Graph;
+use crate::partition::initial::grow_partition;
+use crate::partition::{global_cost, MachineConfig, Partition};
+use crate::util::rng::Pcg32;
+
+/// Paper §5.1 study setup: N=230 LPs, degrees 3–6, node/edge weights of
+/// mean 5, K=5 machines with normalized speeds (.1,.2,.3,.3,.1), μ=8.
+#[derive(Debug, Clone)]
+pub struct StudySetup {
+    pub nodes: usize,
+    pub machines: MachineConfig,
+    pub mu: f64,
+}
+
+impl Default for StudySetup {
+    fn default() -> Self {
+        StudySetup {
+            nodes: 230,
+            machines: MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]),
+            mu: 8.0,
+        }
+    }
+}
+
+impl StudySetup {
+    /// Generate the §5.1 random graph for this setup.
+    pub fn graph(&self, rng: &mut Pcg32) -> Graph {
+        table1_graph(self.nodes, 3, 6, WeightModel::default(), rng)
+    }
+
+    /// App. A initial partition (shared between framework arms so the
+    /// comparison is from identical starts, as the paper requires).
+    pub fn initial(&self, graph: &Graph, rng: &mut Pcg32) -> Partition {
+        grow_partition(graph, &self.machines, rng)
+    }
+}
+
+/// Result of one tracked refinement run.
+#[derive(Debug, Clone)]
+pub struct TrackedRun {
+    pub framework: Framework,
+    /// Node transfers to convergence ("iterations" in Table I).
+    pub iterations: usize,
+    /// Final C0 (framework A's global cost).
+    pub c0: f64,
+    /// Final C̃0 (framework B's global cost).
+    pub c0_tilde: f64,
+    /// Steps that *increased* C0 (only possible under framework B) —
+    /// "C0-discrepancies" in §5.1.
+    pub c0_discrepancies: usize,
+    /// Steps that *increased* C̃0 (only possible under framework A) —
+    /// "C̃0-discrepancies".
+    pub c0_tilde_discrepancies: usize,
+}
+
+/// Run refinement to convergence under `framework`, tracking both global
+/// costs exactly via the per-move identities (Thm 3.1 / Thm 5.1) — no
+/// from-scratch recomputation per step.
+pub fn run_tracked(
+    graph: &Graph,
+    machines: &MachineConfig,
+    initial: Partition,
+    mu: f64,
+    framework: Framework,
+) -> TrackedRun {
+    let other = match framework {
+        Framework::A => Framework::B,
+        Framework::B => Framework::A,
+    };
+    let other_model = CostModel::new(graph, machines.clone(), mu, other);
+    let mut engine = RefineEngine::new(graph, machines, initial, mu, framework);
+
+    let k = machines.count();
+    let mut c0_disc = 0;
+    let mut c0t_disc = 0;
+    let mut iterations = 0;
+    let mut consecutive_forfeits = 0;
+    let mut turn = 0usize;
+    let epsilon = RefineOptions::default().epsilon;
+    let cap = 100_000;
+
+    while consecutive_forfeits < k && iterations < cap {
+        let m = turn % k;
+        turn += 1;
+        match engine.most_dissatisfied(m, epsilon) {
+            None => consecutive_forfeits += 1,
+            Some((node, _j, target)) => {
+                consecutive_forfeits = 0;
+                // Exact delta of the *other* framework's global cost.
+                let other_delta = other_model.potential_delta(engine.partition(), node, target);
+                match framework {
+                    Framework::A if other_delta > 1e-9 => c0t_disc += 1,
+                    Framework::B if other_delta > 1e-9 => c0_disc += 1,
+                    _ => {}
+                }
+                engine.apply_transfer(node, target);
+                iterations += 1;
+            }
+        }
+    }
+
+    let c0 = global_cost::c0(graph, machines, engine.partition(), mu);
+    let c0_tilde = global_cost::c0_tilde(graph, machines, engine.partition(), mu);
+    TrackedRun {
+        framework,
+        iterations,
+        c0,
+        c0_tilde,
+        c0_discrepancies: c0_disc,
+        c0_tilde_discrepancies: c0t_disc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracked_run_matches_engine_run() {
+        let setup = StudySetup::default();
+        let mut rng = Pcg32::new(1);
+        let g = setup.graph(&mut rng);
+        let initial = setup.initial(&g, &mut rng);
+
+        let tracked = run_tracked(&g, &setup.machines, initial.clone(), setup.mu, Framework::A);
+        let mut engine =
+            RefineEngine::new(&g, &setup.machines, initial, setup.mu, Framework::A);
+        let report = engine.run(&RefineOptions::default());
+        assert_eq!(tracked.iterations, report.transfers);
+        assert!((tracked.c0 - report.final_potential).abs() < 1e-6 * (1.0 + tracked.c0.abs()));
+    }
+
+    #[test]
+    fn discrepancies_only_on_other_framework() {
+        let setup = StudySetup::default();
+        let mut rng = Pcg32::new(2);
+        let g = setup.graph(&mut rng);
+        let initial = setup.initial(&g, &mut rng);
+        let a = run_tracked(&g, &setup.machines, initial.clone(), setup.mu, Framework::A);
+        let b = run_tracked(&g, &setup.machines, initial, setup.mu, Framework::B);
+        // Under A, C0 descends monotonically: no C0 discrepancies possible.
+        assert_eq!(a.c0_discrepancies, 0);
+        // Under B, C̃0 descends monotonically.
+        assert_eq!(b.c0_tilde_discrepancies, 0);
+    }
+}

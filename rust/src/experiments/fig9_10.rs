@@ -1,0 +1,147 @@
+//! Figs. 9 and 10 (§6.1): per-machine load (mean event-list length per
+//! resident LP) over wall-clock time, without refinement (Fig. 9) vs
+//! with refinement every 500 ticks (Fig. 10). The with-refinement traces
+//! should be visibly tighter; we also quantify it via the
+//! time-averaged coefficient of variation across machines.
+
+use crate::game::cost::Framework;
+use crate::graph::generators::{generate, GraphFamily};
+use crate::sim::driver::{run_dynamic, DriverOptions};
+use crate::sim::engine::SimOptions;
+use crate::sim::workload::{FloodWorkload, WorkloadOptions};
+use crate::util::rng::Pcg32;
+use crate::util::stats::{ascii_chart, coeff_of_variation, traces_to_csv, Trace};
+
+/// Result of one arm (Fig. 9 or Fig. 10).
+#[derive(Debug, Clone)]
+pub struct LoadTraceReport {
+    pub refine_every: u64,
+    pub sim_time: u64,
+    pub traces: Vec<Trace>,
+    /// Mean across time of the cross-machine load CoV (0 = perfectly
+    /// balanced at every sampled instant).
+    pub mean_cov: f64,
+}
+
+/// Compute the time-averaged cross-machine coefficient of variation.
+pub fn mean_cross_machine_cov(traces: &[Trace]) -> f64 {
+    if traces.is_empty() {
+        return 0.0;
+    }
+    let len = traces.iter().map(|t| t.points.len()).min().unwrap_or(0);
+    if len == 0 {
+        return 0.0;
+    }
+    let mut covs = Vec::with_capacity(len);
+    for i in 0..len {
+        let sample: Vec<f64> = traces.iter().map(|t| t.points[i].1).collect();
+        // Skip all-idle instants (mean 0 has no meaningful imbalance).
+        if sample.iter().sum::<f64>() > 1e-9 {
+            covs.push(coeff_of_variation(&sample));
+        }
+    }
+    if covs.is_empty() {
+        0.0
+    } else {
+        covs.iter().sum::<f64>() / covs.len() as f64
+    }
+}
+
+/// Run one arm with load tracing on.
+pub fn run_arm(
+    family: GraphFamily,
+    nodes: usize,
+    machines: usize,
+    refine_every: u64,
+    seed: u64,
+    quick: bool,
+) -> LoadTraceReport {
+    let mut rng = Pcg32::new(seed);
+    let graph = generate(family, nodes, &mut rng);
+    let machine_cfg = crate::partition::MachineConfig::homogeneous(machines);
+    let workload = FloodWorkload::generate(
+        &graph,
+        &WorkloadOptions {
+            threads: if quick { 80 } else { 150 },
+            horizon_ticks: if quick { 1500 } else { 4000 },
+            hot_spot_period: 500,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let driver = DriverOptions {
+        sim: SimOptions { trace_every: 50, max_ticks: 400_000, ..Default::default() },
+        refine_every,
+        framework: Framework::A,
+        mu: 8.0,
+        ticks_per_transfer: 0,
+    };
+    let report = run_dynamic(&graph, &machine_cfg, workload, &driver, &mut rng);
+    let mean_cov = mean_cross_machine_cov(&report.load_traces);
+    LoadTraceReport {
+        refine_every,
+        sim_time: report.total_time(),
+        traces: report.load_traces,
+        mean_cov,
+    }
+}
+
+/// CLI entry: runs both arms from the same seed and prints both figures.
+pub fn run_and_report(seed: u64, quick: bool) -> (LoadTraceReport, LoadTraceReport) {
+    let nodes = if quick { 150 } else { 230 };
+    let fig9 = run_arm(GraphFamily::PreferentialAttachment, nodes, 5, 0, seed, quick);
+    let fig10 = run_arm(GraphFamily::PreferentialAttachment, nodes, 5, 500, seed, quick);
+
+    println!("### Fig. 9 — machine loads, NO refinement (sim time {} ticks)", fig9.sim_time);
+    println!("{}", ascii_chart(&fig9.traces, 60, 10));
+    println!("### Fig. 10 — machine loads, refinement every 500 ticks (sim time {} ticks)", fig10.sim_time);
+    println!("{}", ascii_chart(&fig10.traces, 60, 10));
+    println!(
+        "time-averaged cross-machine load CoV: no-refine {:.3} vs refine {:.3} (lower = more balanced)",
+        fig9.mean_cov, fig10.mean_cov
+    );
+
+    let _ = std::fs::create_dir_all("results");
+    let _ = std::fs::write("results/fig9_loads.csv", traces_to_csv(&fig9.traces));
+    let _ = std::fs::write("results/fig10_loads.csv", traces_to_csv(&fig10.traces));
+    println!("(wrote results/fig9_loads.csv, results/fig10_loads.csv)");
+    (fig9, fig10)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refinement_balances_loads() {
+        let fig9 = run_arm(GraphFamily::PreferentialAttachment, 100, 4, 0, 11, true);
+        let fig10 = run_arm(GraphFamily::PreferentialAttachment, 100, 4, 500, 11, true);
+        assert!(!fig9.traces.is_empty() && !fig10.traces.is_empty());
+        assert!(
+            fig10.mean_cov < fig9.mean_cov,
+            "refined run should be more balanced: {} vs {}",
+            fig10.mean_cov,
+            fig9.mean_cov
+        );
+    }
+
+    #[test]
+    fn traces_have_one_series_per_machine() {
+        let r = run_arm(GraphFamily::PreferentialAttachment, 80, 3, 0, 13, true);
+        assert_eq!(r.traces.len(), 3);
+        for t in &r.traces {
+            assert!(!t.is_empty());
+        }
+    }
+
+    #[test]
+    fn cov_of_identical_traces_is_zero() {
+        let mut t1 = Trace::new("a");
+        let mut t2 = Trace::new("b");
+        for i in 0..10 {
+            t1.push(i as f64, 5.0);
+            t2.push(i as f64, 5.0);
+        }
+        assert!(mean_cross_machine_cov(&[t1, t2]) < 1e-12);
+    }
+}

@@ -1,0 +1,269 @@
+//! Figs. 7 and 8 (§6.1): total simulation execution time vs partition-
+//! refinement frequency, on a preferential-attachment graph (Fig. 7) and
+//! the specialized geometric graph (Fig. 8). Series: framework A,
+//! framework B, and the no-refinement baseline; averaged over seeds.
+
+use crate::game::cost::Framework;
+use crate::graph::generators::{generate, GraphFamily};
+use crate::sim::driver::{run_dynamic, DriverOptions};
+use crate::sim::engine::SimOptions;
+use crate::sim::workload::{FloodWorkload, WorkloadOptions};
+use crate::util::rng::Pcg32;
+use crate::util::stats::{ascii_chart, Trace};
+use crate::util::table::Table;
+
+/// Sweep parameters.
+#[derive(Debug, Clone)]
+pub struct SweepOptions {
+    pub family: GraphFamily,
+    pub nodes: usize,
+    pub machines: usize,
+    pub mu: f64,
+    /// Refinement periods to sweep (0 is added automatically as the
+    /// no-refinement baseline).
+    pub periods: Vec<u64>,
+    pub seeds: usize,
+    pub workload: WorkloadOptions,
+    pub sim: SimOptions,
+}
+
+impl SweepOptions {
+    pub fn paper_default(family: GraphFamily) -> SweepOptions {
+        SweepOptions {
+            family,
+            nodes: 230,
+            machines: 5,
+            mu: 8.0,
+            periods: vec![2000, 1000, 500, 250],
+            seeds: 3,
+            workload: WorkloadOptions {
+                threads: 150,
+                horizon_ticks: 4000,
+                hot_spot_period: 500,
+                ..Default::default()
+            },
+            sim: SimOptions { max_ticks: 400_000, ..Default::default() },
+        }
+    }
+}
+
+/// One point of the figure.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Refinement period in wall ticks (0 = never).
+    pub period: u64,
+    /// Refinements per 1000 ticks — the x-axis as a *frequency*, the way
+    /// the paper plots it.
+    pub frequency: f64,
+    pub mean_time_a: f64,
+    pub mean_time_b: f64,
+    pub mean_time_none: f64,
+    pub mean_rollbacks_a: f64,
+    pub mean_rollbacks_none: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub family: GraphFamily,
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepReport {
+    pub fn to_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "refine-period",
+                "freq/1k-ticks",
+                "sim-time A",
+                "sim-time B",
+                "sim-time none",
+                "rollbacks A",
+                "rollbacks none",
+            ],
+        );
+        for p in &self.points {
+            t.row(&[
+                if p.period == 0 { "never".into() } else { p.period.to_string() },
+                format!("{:.2}", p.frequency),
+                format!("{:.0}", p.mean_time_a),
+                format!("{:.0}", p.mean_time_b),
+                format!("{:.0}", p.mean_time_none),
+                format!("{:.0}", p.mean_rollbacks_a),
+                format!("{:.0}", p.mean_rollbacks_none),
+            ]);
+        }
+        t
+    }
+
+    /// Does simulation time with refinement beat the baseline at the
+    /// highest swept frequency? (The headline claim of Figs. 7/8.)
+    pub fn refinement_helps(&self) -> bool {
+        self.points
+            .iter()
+            .filter(|p| p.period > 0)
+            .all(|p| p.mean_time_a < p.mean_time_none * 1.02)
+            && self
+                .points
+                .iter()
+                .filter(|p| p.period > 0)
+                .any(|p| p.mean_time_a < 0.9 * p.mean_time_none)
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+/// Run the sweep.
+pub fn run(options: &SweepOptions, seed: u64) -> SweepReport {
+    let mut points = Vec::new();
+    for &period in &options.periods {
+        let mut times_a = Vec::new();
+        let mut times_b = Vec::new();
+        let mut times_none = Vec::new();
+        let mut rb_a = Vec::new();
+        let mut rb_none = Vec::new();
+        for s in 0..options.seeds {
+            let arm_seed = seed.wrapping_add(1000 * s as u64);
+            // Same graph + workload + initial-partition seed per arm.
+            for (arm, fw) in
+                [(0, Some(Framework::A)), (1, Some(Framework::B)), (2, None)]
+            {
+                let mut rng = Pcg32::new(arm_seed);
+                let graph = generate(options.family, options.nodes, &mut rng);
+                let machines =
+                    crate::partition::MachineConfig::homogeneous(options.machines);
+                let workload = FloodWorkload::generate(&graph, &options.workload, &mut rng);
+                let driver = DriverOptions {
+                    sim: options.sim.clone(),
+                    refine_every: if fw.is_some() { period } else { 0 },
+                    framework: fw.unwrap_or(Framework::A),
+                    mu: options.mu,
+                    ticks_per_transfer: 0,
+                };
+                let report = run_dynamic(&graph, &machines, workload, &driver, &mut rng);
+                let time = report.total_time() as f64;
+                match arm {
+                    0 => {
+                        times_a.push(time);
+                        rb_a.push(report.stats.rollbacks as f64);
+                    }
+                    1 => times_b.push(time),
+                    _ => {
+                        times_none.push(time);
+                        rb_none.push(report.stats.rollbacks as f64);
+                    }
+                }
+            }
+        }
+        points.push(SweepPoint {
+            period,
+            frequency: if period == 0 { 0.0 } else { 1000.0 / period as f64 },
+            mean_time_a: mean(&times_a),
+            mean_time_b: mean(&times_b),
+            mean_time_none: mean(&times_none),
+            mean_rollbacks_a: mean(&rb_a),
+            mean_rollbacks_none: mean(&rb_none),
+        });
+    }
+    points.sort_by(|a, b| a.frequency.partial_cmp(&b.frequency).expect("finite"));
+    SweepReport { family: options.family, points }
+}
+
+/// CLI entry for Fig. 7 (preferential attachment) / Fig. 8 (geometric).
+pub fn run_and_report(family: GraphFamily, seed: u64, quick: bool) -> SweepReport {
+    let mut options = SweepOptions::paper_default(family);
+    if quick {
+        options.seeds = 1;
+        options.nodes = 150;
+        options.workload.threads = 80;
+    }
+    let (figure, csv) = match family {
+        GraphFamily::PreferentialAttachment => {
+            ("Fig. 7 — simulation time vs refinement frequency (preferential attachment)", "fig7")
+        }
+        GraphFamily::Geometric => {
+            ("Fig. 8 — simulation time vs refinement frequency (specialized geometric)", "fig8")
+        }
+        _ => ("simulation time vs refinement frequency", "fig78_custom"),
+    };
+    let report = run(&options, seed);
+    let table = report.to_table(figure);
+    println!("{}", table.to_text());
+
+    // ASCII rendition of the figure: one series per arm over frequency.
+    let mut tr_a = Trace::new("frameworkA");
+    let mut tr_b = Trace::new("frameworkB");
+    let mut tr_n = Trace::new("no-refine");
+    for p in &report.points {
+        tr_a.push(p.frequency, p.mean_time_a);
+        tr_b.push(p.frequency, p.mean_time_b);
+        tr_n.push(p.frequency, p.mean_time_none);
+    }
+    println!("{}", ascii_chart(&[tr_a, tr_b, tr_n], 48, 12));
+    println!(
+        "refinement helps: {} (paper: simulation time decreases with refinement frequency)",
+        report.refinement_helps()
+    );
+    if let Ok(path) = table.write_csv(csv) {
+        println!("(wrote {})", path.display());
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_options(family: GraphFamily) -> SweepOptions {
+        SweepOptions {
+            family,
+            nodes: 100,
+            machines: 4,
+            mu: 8.0,
+            periods: vec![400],
+            seeds: 1,
+            workload: WorkloadOptions {
+                threads: 60,
+                horizon_ticks: 1500,
+                hot_spot_period: 400,
+                ..Default::default()
+            },
+            sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+        }
+    }
+
+    #[test]
+    fn fig7_shape_refinement_beats_baseline() {
+        let report = run(&quick_options(GraphFamily::PreferentialAttachment), 5);
+        assert_eq!(report.points.len(), 1);
+        let p = &report.points[0];
+        assert!(
+            p.mean_time_a < p.mean_time_none,
+            "refinement must beat no-refinement: {} vs {}",
+            p.mean_time_a,
+            p.mean_time_none
+        );
+    }
+
+    #[test]
+    fn fig8_shape_refinement_beats_baseline() {
+        let report = run(&quick_options(GraphFamily::Geometric), 6);
+        let p = &report.points[0];
+        assert!(
+            p.mean_time_a < p.mean_time_none,
+            "refinement must beat no-refinement: {} vs {}",
+            p.mean_time_a,
+            p.mean_time_none
+        );
+    }
+
+    #[test]
+    fn points_sorted_by_frequency() {
+        let mut opts = quick_options(GraphFamily::PreferentialAttachment);
+        opts.periods = vec![400, 800];
+        let report = run(&opts, 7);
+        assert!(report.points[0].frequency <= report.points[1].frequency);
+    }
+}

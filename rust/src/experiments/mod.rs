@@ -1,0 +1,22 @@
+//! Experiment harnesses regenerating every table and figure of the
+//! paper's evaluation (see DESIGN.md §4 for the experiment index):
+//!
+//! * [`table1`] — §5.1 Table I: the two cost frameworks head-to-head on
+//!   5 random graphs (C0, C̃0, iterations at convergence).
+//! * [`batch`] — §5.1 batch study: 50 realizations × 10 initial
+//!   partitions; win counts and discrepancy statistics.
+//! * [`figs78`] — Figs. 7/8: total simulation time vs refinement
+//!   frequency on preferential-attachment / geometric graphs.
+//! * [`fig9_10`] — Figs. 9/10: machine-load traces with and without
+//!   refinement.
+//!
+//! Each harness prints the paper-shaped table/series, writes CSV into
+//! `results/`, and returns a structured report for tests/benches.
+
+pub mod ablation;
+pub mod batch;
+pub mod cli;
+pub mod common;
+pub mod fig9_10;
+pub mod figs78;
+pub mod table1;

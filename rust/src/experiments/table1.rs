@@ -1,0 +1,132 @@
+//! Table I (§5.1): five random graph realizations; for each, iterative
+//! refinement under Framework A and Framework B from the *same* initial
+//! partition and turn order; report `C0`, `C̃0` and iterations to
+//! convergence at the equilibrium each framework reaches.
+
+use crate::experiments::common::{run_tracked, StudySetup, TrackedRun};
+use crate::game::cost::Framework;
+use crate::util::rng::Pcg32;
+use crate::util::table::Table;
+
+/// One trial row.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub trial: usize,
+    pub a: TrackedRun,
+    pub b: TrackedRun,
+}
+
+/// Full experiment result.
+#[derive(Debug, Clone)]
+pub struct Table1Report {
+    pub trials: Vec<Trial>,
+}
+
+impl Table1Report {
+    /// How many trials framework A won on both global costs (the paper
+    /// observes A winning on both in all 5 trials).
+    pub fn a_wins_both(&self) -> usize {
+        self.trials
+            .iter()
+            .filter(|t| t.a.c0 <= t.b.c0 && t.a.c0_tilde <= t.b.c0_tilde)
+            .count()
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut table = Table::new(
+            "Table I — comparison of the two cost frameworks (C0 / C~0 at convergence)",
+            &[
+                "trial",
+                "A: C0",
+                "A: C~0",
+                "A: iters",
+                "B: C0",
+                "B: C~0",
+                "B: iters",
+            ],
+        );
+        for t in &self.trials {
+            table.row(&[
+                t.trial.to_string(),
+                format!("{:.0}", t.a.c0),
+                format!("{:.0}", t.a.c0_tilde),
+                t.a.iterations.to_string(),
+                format!("{:.0}", t.b.c0),
+                format!("{:.0}", t.b.c0_tilde),
+                t.b.iterations.to_string(),
+            ]);
+        }
+        table
+    }
+}
+
+/// Run the experiment: `trials` realizations from `seed`.
+pub fn run(setup: &StudySetup, trials: usize, seed: u64) -> Table1Report {
+    let mut out = Vec::with_capacity(trials);
+    for trial in 1..=trials {
+        let mut rng = Pcg32::new(seed.wrapping_add(trial as u64));
+        let graph = setup.graph(&mut rng);
+        let initial = setup.initial(&graph, &mut rng);
+        let a = run_tracked(&graph, &setup.machines, initial.clone(), setup.mu, Framework::A);
+        let b = run_tracked(&graph, &setup.machines, initial, setup.mu, Framework::B);
+        out.push(Trial { trial, a, b });
+    }
+    Table1Report { trials: out }
+}
+
+/// CLI entry: print + persist.
+pub fn run_and_report(seed: u64) -> Table1Report {
+    let setup = StudySetup::default();
+    let report = run(&setup, 5, seed);
+    let table = report.to_table();
+    println!("{}", table.to_text());
+    println!(
+        "Framework A best on BOTH global costs in {}/{} trials (paper: 5/5)",
+        report.a_wins_both(),
+        report.trials.len()
+    );
+    if let Ok(path) = table.write_csv("table1") {
+        println!("(wrote {})", path.display());
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_setup() -> StudySetup {
+        // Smaller N for test speed; same structure.
+        StudySetup { nodes: 120, ..Default::default() }
+    }
+
+    #[test]
+    fn five_trials_produced() {
+        let report = run(&small_setup(), 5, 42);
+        assert_eq!(report.trials.len(), 5);
+        for t in &report.trials {
+            assert!(t.a.iterations > 0 || t.b.iterations > 0);
+            assert!(t.a.c0 > 0.0 && t.b.c0 > 0.0);
+        }
+    }
+
+    #[test]
+    fn framework_a_usually_wins_both_costs() {
+        // Paper: A wins on both costs in 5/5 Table-I trials (and 49/50 in
+        // the batch study). Allow one upset on small graphs.
+        let report = run(&small_setup(), 5, 7);
+        assert!(
+            report.a_wins_both() >= 3,
+            "A won both costs only {}/5 times",
+            report.a_wins_both()
+        );
+    }
+
+    #[test]
+    fn table_renders_with_all_columns() {
+        let report = run(&small_setup(), 2, 1);
+        let txt = report.to_table().to_text();
+        assert!(txt.contains("A: C0"));
+        assert_eq!(txt.lines().count(), 2 + 2 + 1); // title + header + sep + rows
+    }
+}

@@ -1,0 +1,231 @@
+//! Cluster (multi-node) transfers — the paper's §4.4/§7 extension.
+//!
+//! Single-node best-response play can stall in local minima where no one
+//! node wants to move alone but a *connected group* would jointly lower
+//! the potential (coordinated play). The paper proposes transferring
+//! clusters of connected nodes and suggests a sparse-cut-style search to
+//! keep the exponential joint space tractable. We implement a greedy
+//! variant: seed at the most dissatisfied node, grow the cluster along
+//! same-machine neighbors in decreasing gain order, and accept the whole
+//! move only if the *exact* cumulative potential delta (computed via the
+//! paper's per-move identities while moves are applied one by one) is
+//! negative; otherwise roll the moves back.
+
+use crate::game::cost::{CostModel, Framework};
+use crate::graph::{Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+/// Options for cluster-transfer search.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Maximum nodes moved jointly.
+    pub max_cluster: usize,
+    /// Maximum cluster attempts per call of [`cluster_escape`].
+    pub max_attempts: usize,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions { max_cluster: 6, max_attempts: 32 }
+    }
+}
+
+/// One attempted cluster move.
+#[derive(Debug, Clone)]
+pub struct ClusterMove {
+    pub nodes: Vec<NodeId>,
+    pub from: MachineId,
+    pub to: MachineId,
+    pub delta: f64,
+    pub accepted: bool,
+}
+
+/// Try to escape a (single-node) Nash equilibrium by moving connected
+/// clusters. Returns the accepted moves. `part` is expected to already be
+/// a single-node equilibrium (but this is not required for correctness).
+pub fn cluster_escape(
+    graph: &Graph,
+    machines: &MachineConfig,
+    part: &mut Partition,
+    mu: f64,
+    framework: Framework,
+    options: &ClusterOptions,
+) -> Vec<ClusterMove> {
+    let model = CostModel::new(graph, machines.clone(), mu, framework);
+    let k = machines.count();
+    let mut accepted_moves = Vec::new();
+
+    // Rank seed candidates by how *close* they are to moving: smallest
+    // positive margin C_i(best other) − C_i(current).
+    let mut seeds: Vec<(f64, NodeId, MachineId)> = (0..graph.node_count())
+        .map(|i| {
+            let cur = model.current_cost(part, i);
+            let mut best_other = f64::INFINITY;
+            let mut best_k = part.machine_of(i);
+            for m in 0..k {
+                if m == part.machine_of(i) {
+                    continue;
+                }
+                let c = model.node_cost(part, i, m);
+                if c < best_other {
+                    best_other = c;
+                    best_k = m;
+                }
+            }
+            (best_other - cur, i, best_k)
+        })
+        .collect();
+    seeds.sort_by(|a, b| a.0.partial_cmp(&b.0).expect("finite costs"));
+
+    for &(_, seed, target) in seeds.iter().take(options.max_attempts) {
+        let from = part.machine_of(seed);
+        if from == target {
+            continue;
+        }
+        // Grow a connected same-machine cluster around the seed.
+        let mut cluster = vec![seed];
+        let mut frontier = vec![seed];
+        while cluster.len() < options.max_cluster {
+            // Candidate = same-machine neighbor of the cluster not yet in it,
+            // chosen to minimize its own cost increase of joining `target`.
+            let mut best: Option<(f64, NodeId)> = None;
+            for &u in &frontier {
+                for &v in graph.neighbors(u) {
+                    if part.machine_of(v) != from || cluster.contains(&v) {
+                        continue;
+                    }
+                    let gain = model.node_cost(part, v, target) - model.current_cost(part, v);
+                    if best.map(|(g, _)| gain < g).unwrap_or(true) {
+                        best = Some((gain, v));
+                    }
+                }
+            }
+            match best {
+                Some((_, v)) => {
+                    cluster.push(v);
+                    frontier.push(v);
+                }
+                None => break,
+            }
+        }
+
+        // Apply the joint move, accumulating the exact potential delta.
+        let mut delta = 0.0;
+        for &u in &cluster {
+            delta += model.potential_delta(part, u, target);
+            part.transfer(graph, u, target);
+        }
+        if delta < -1e-9 {
+            accepted_moves.push(ClusterMove {
+                nodes: cluster,
+                from,
+                to: target,
+                delta,
+                accepted: true,
+            });
+        } else {
+            // Roll back.
+            for &u in cluster.iter().rev() {
+                part.transfer(graph, u, from);
+            }
+        }
+    }
+    accepted_moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::game::refine::{RefineEngine, RefineOptions};
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::graph::GraphBuilder;
+    use crate::partition::global_cost;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn rollback_preserves_partition() {
+        // A configuration engineered so no cluster move helps: verify
+        // the partition is untouched after attempts that all roll back.
+        let mut b = GraphBuilder::with_nodes(4);
+        b.add_edge(0, 1, 1.0).add_edge(2, 3, 1.0).add_edge(1, 2, 0.01);
+        let g = b.build();
+        let machines = MachineConfig::homogeneous(2);
+        let part0 = Partition::from_assignment(&g, 2, vec![0, 0, 1, 1]);
+        let mut part = part0.clone();
+        let _ = cluster_escape(
+            &g,
+            &machines,
+            &mut part,
+            1.0,
+            Framework::A,
+            &ClusterOptions::default(),
+        );
+        part.validate(&g).unwrap();
+        // Either unchanged, or changed with a strictly better potential.
+        let before = global_cost::c0(&g, &machines, &part0, 1.0);
+        let after = global_cost::c0(&g, &machines, &part, 1.0);
+        assert!(after <= before + 1e-9);
+    }
+
+    #[test]
+    fn accepted_moves_strictly_descend() {
+        let mut rng = Pcg32::new(11);
+        let g = table1_graph(60, 3, 6, WeightModel::default(), &mut rng);
+        let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let assignment: Vec<usize> = (0..60).map(|_| rng.index(5)).collect();
+
+        // First reach a single-node equilibrium.
+        let part = Partition::from_assignment(&g, 5, assignment);
+        let mut engine = RefineEngine::new(&g, &machines, part, 8.0, Framework::A);
+        let _ = engine.run(&RefineOptions::default());
+        let mut part = engine.into_partition();
+
+        let before = global_cost::c0(&g, &machines, &part, 8.0);
+        let moves = cluster_escape(
+            &g,
+            &machines,
+            &mut part,
+            8.0,
+            Framework::A,
+            &ClusterOptions::default(),
+        );
+        let after = global_cost::c0(&g, &machines, &part, 8.0);
+        let predicted: f64 = moves.iter().map(|m| m.delta).sum();
+        assert!(
+            ((after - before) - predicted).abs() < 1e-6 * (1.0 + before.abs()),
+            "delta mismatch: actual {} predicted {predicted}",
+            after - before
+        );
+        for m in &moves {
+            assert!(m.delta < 0.0);
+            assert!(m.accepted);
+            assert!(m.nodes.len() <= ClusterOptions::default().max_cluster);
+        }
+        part.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn cluster_is_connected_and_single_source() {
+        let mut rng = Pcg32::new(13);
+        let g = table1_graph(60, 3, 6, WeightModel::default(), &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let assignment: Vec<usize> = (0..60).map(|_| rng.index(4)).collect();
+        let part = Partition::from_assignment(&g, 4, assignment);
+        let mut engine = RefineEngine::new(&g, &machines, part, 8.0, Framework::A);
+        let _ = engine.run(&RefineOptions::default());
+        let mut part = engine.into_partition();
+        let moves =
+            cluster_escape(&g, &machines, &mut part, 8.0, Framework::A, &ClusterOptions::default());
+        for mv in &moves {
+            assert_ne!(mv.from, mv.to);
+            // Connectivity: every non-seed node adjacent to an earlier one.
+            for (idx, &u) in mv.nodes.iter().enumerate().skip(1) {
+                let earlier = &mv.nodes[..idx];
+                assert!(
+                    earlier.iter().any(|&e| g.neighbors(u).contains(&e)),
+                    "cluster node {u} not connected to earlier members"
+                );
+            }
+        }
+    }
+}

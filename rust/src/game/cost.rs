@@ -1,0 +1,500 @@
+//! Node-level cost frameworks.
+//!
+//! Framework **A** (paper eq. 1):
+//! ```text
+//! C_i(r_i, r_-i) = (b_i / w_{r_i}) · Σ_{j≠i: r_j = r_i} b_j
+//!                + (μ/2) · Σ_{j: r_j ≠ r_i} c_ij
+//! ```
+//!
+//! Framework **B** (paper eq. 6):
+//! ```text
+//! C̃_i(r_i, r_-i) = b_i²/w_{r_i}² + (2 b_i / w_{r_i}²) Σ_{j≠i: r_j=r_i} b_j
+//!                 − (2 b_i / w_{r_i}) Σ_j b_j
+//!                 + (μ/2) Σ_{j: r_j ≠ r_i} c_ij
+//! ```
+//!
+//! Feasibility (§4.5): both evaluate for *any* candidate machine `k`
+//! from (a) the node's own adjacency row and (b) the K machine-level
+//! aggregates `L_k` — nothing about other machines' memberships is
+//! needed, so the state machines must exchange is O(K), independent of N.
+
+use crate::graph::{Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+/// Which local cost framework drives node decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framework {
+    /// Paper eq. (1); potential `C0` (Thm 3.1).
+    A,
+    /// Paper eq. (6); potential `C̃0` (eq. 8, Thm 5.1).
+    B,
+}
+
+impl std::str::FromStr for Framework {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "A" | "a" | "1" | "ci" => Ok(Framework::A),
+            "B" | "b" | "2" | "ci-tilde" => Ok(Framework::B),
+            other => Err(format!("unknown framework {other:?} (want A or B)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Framework {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Framework::A => write!(f, "A"),
+            Framework::B => write!(f, "B"),
+        }
+    }
+}
+
+/// Evaluates node costs against a graph + machine pool. Stateless with
+/// respect to the partition; callers pass aggregates explicitly so both
+/// the sequential engine and the distributed machines can share it.
+#[derive(Debug, Clone)]
+pub struct CostModel<'g> {
+    pub graph: &'g Graph,
+    pub machines: MachineConfig,
+    pub mu: f64,
+    pub framework: Framework,
+}
+
+impl<'g> CostModel<'g> {
+    pub fn new(graph: &'g Graph, machines: MachineConfig, mu: f64, framework: Framework) -> Self {
+        assert!(mu >= 0.0, "mu must be non-negative");
+        CostModel { graph, machines, mu, framework }
+    }
+
+    /// Machine count `K`.
+    pub fn k(&self) -> usize {
+        self.machines.count()
+    }
+
+    /// Adjacency row of node `i`: `adj[k] = Σ_{j∈N(i): r_j=k} c_ij`,
+    /// written into `buf` (length K). Returns `S_i = Σ_j c_ij`.
+    pub fn adj_row(&self, part: &Partition, i: NodeId, buf: &mut [f64]) -> f64 {
+        debug_assert_eq!(buf.len(), self.k());
+        buf.iter_mut().for_each(|x| *x = 0.0);
+        let mut s = 0.0;
+        for (j, c) in self.graph.neighbors_weighted(i) {
+            buf[part.machine_of(j)] += c;
+            s += c;
+        }
+        s
+    }
+
+    /// Cost of node `i` if assigned to machine `k`, given the current
+    /// partition. O(deg(i) + 1).
+    pub fn node_cost(&self, part: &Partition, i: NodeId, k: MachineId) -> f64 {
+        let mut adj = vec![0.0; self.k()];
+        let s = self.adj_row(part, i, &mut adj);
+        self.node_cost_with_adj(part, i, k, s, &adj)
+    }
+
+    /// Same as [`node_cost`] but with the adjacency row precomputed —
+    /// the O(1)-per-candidate form used in hot loops.
+    #[inline]
+    pub fn node_cost_with_adj(
+        &self,
+        part: &Partition,
+        i: NodeId,
+        k: MachineId,
+        s_i: f64,
+        adj: &[f64],
+    ) -> f64 {
+        let b = self.graph.node_weight(i);
+        let w = self.machines.speed(k);
+        // Σ_{j≠i: r_j=k} b_j: subtract own weight if already resident.
+        let same_load = part.load(k) - if part.machine_of(i) == k { b } else { 0.0 };
+        let cut = self.mu * 0.5 * (s_i - adj[k]);
+        match self.framework {
+            Framework::A => b / w * same_load + cut,
+            Framework::B => {
+                let b_total = self.graph.total_node_weight();
+                b * b / (w * w) + 2.0 * b / (w * w) * same_load - 2.0 * b / w * b_total + cut
+            }
+        }
+    }
+
+    /// Current cost `C_i(r_i, r_-i)`.
+    pub fn current_cost(&self, part: &Partition, i: NodeId) -> f64 {
+        self.node_cost(part, i, part.machine_of(i))
+    }
+
+    /// Best response of node `i`: `(argmin_k C_i(k), min_k C_i(k))`.
+    /// Ties break toward the current machine (no gratuitous moves), then
+    /// toward the lowest machine id (determinism).
+    pub fn best_response(&self, part: &Partition, i: NodeId) -> (MachineId, f64) {
+        let mut adj = vec![0.0; self.k()];
+        let s = self.adj_row(part, i, &mut adj);
+        self.best_response_with_adj(part, i, s, &adj)
+    }
+
+    /// Best response with precomputed adjacency row.
+    pub fn best_response_with_adj(
+        &self,
+        part: &Partition,
+        i: NodeId,
+        s_i: f64,
+        adj: &[f64],
+    ) -> (MachineId, f64) {
+        let cur = part.machine_of(i);
+        let mut best_k = cur;
+        let mut best = self.node_cost_with_adj(part, i, cur, s_i, adj);
+        for k in 0..self.k() {
+            if k == cur {
+                continue;
+            }
+            let c = self.node_cost_with_adj(part, i, k, s_i, adj);
+            if c < best - 1e-12 * (1.0 + best.abs()) {
+                best = c;
+                best_k = k;
+            }
+        }
+        (best_k, best)
+    }
+
+    /// Dissatisfaction `𝔍(i) = C_i(r_i) − min_k C_i(k)` (paper eq. 4);
+    /// non-negative by construction. Returns `(𝔍, argmin machine)`.
+    ///
+    /// Framework A routes through the candidate-set fast path
+    /// ([`dissat_fast_a`]) so every caller — the sequential engine and
+    /// the distributed machine actors — picks identical nodes/targets.
+    pub fn dissatisfaction(&self, part: &Partition, i: NodeId) -> (f64, MachineId) {
+        let mut adj = vec![0.0; self.k()];
+        let s = self.adj_row(part, i, &mut adj);
+        if self.framework == Framework::A {
+            let q1 = self.argmin_load_per_speed(part);
+            self.dissat_fast_a(part, i, s, &adj, q1)
+        } else {
+            self.dissatisfaction_with_adj(part, i, s, &adj)
+        }
+    }
+
+    /// `argmin_q L_q / w_q` — the per-turn precomputation of the
+    /// framework-A fast path.
+    pub fn argmin_load_per_speed(&self, part: &Partition) -> MachineId {
+        let mut q1 = 0usize;
+        let mut q1_low = f64::INFINITY;
+        for q in 0..self.k() {
+            let low = part.load(q) / self.machines.speed(q);
+            if low < q1_low {
+                q1_low = low;
+                q1 = q;
+            }
+        }
+        q1
+    }
+
+    /// Framework-A exact dissatisfaction via candidate evaluation (§Perf).
+    ///
+    /// For machines `q` with `adj_i[q] = 0` the cost
+    /// `b_i·L_q/w_q + (μ/2)·S_i` is affine in the scalar `L_q/w_q`, and
+    /// the exact cost at `q1 = argmin_q L_q/w_q` lower-bounds every
+    /// zero-adjacency machine's cost, so the true argmin over all K
+    /// machines lies in `{q1} ∪ {neighbor machines} ∪ {r_i}` — at most
+    /// `deg_i + 2` exact evaluations instead of K.
+    ///
+    /// Arithmetic is association-identical to [`node_cost_with_adj`], and
+    /// loads/adjacency sums are integer-valued in every workload this
+    /// repo generates, so cached-incremental and fresh evaluations agree
+    /// bit-for-bit.
+    #[inline]
+    pub fn dissat_fast_a(
+        &self,
+        part: &Partition,
+        i: NodeId,
+        s_i: f64,
+        adj: &[f64],
+        q1: MachineId,
+    ) -> (f64, MachineId) {
+        debug_assert_eq!(self.framework, Framework::A);
+        debug_assert!(self.k() <= 64, "fast path assumes K <= 64; widen the seen mask");
+        let b = self.graph.node_weight(i);
+        let cur = part.machine_of(i);
+        let mu = self.mu;
+        let loads = part.loads();
+        let speeds = self.machines.speeds();
+        let eval = |q: usize| -> f64 {
+            let same_load = loads[q] - if q == cur { b } else { 0.0 };
+            b / speeds[q] * same_load + mu * 0.5 * (s_i - adj[q])
+        };
+        let cost_cur = eval(cur);
+        let mut best_k = q1;
+        let mut best_cost = eval(q1);
+        // Dedup candidate machines with a bitmask: hub nodes in scale-free
+        // graphs have many neighbors but few distinct machines.
+        let mut seen: u64 = (1 << q1) | (1 << cur);
+        for &nb in self.graph.neighbors(i) {
+            let q = part.machine_of(nb);
+            if seen & (1 << q) != 0 {
+                continue;
+            }
+            seen |= 1 << q;
+            let c = eval(q);
+            if c < best_cost {
+                best_cost = c;
+                best_k = q;
+            }
+        }
+        if cost_cur <= best_cost {
+            // Prefer staying put on ties (no gratuitous moves).
+            best_cost = cost_cur;
+            best_k = cur;
+        }
+        ((cost_cur - best_cost).max(0.0), best_k)
+    }
+
+    /// Dissatisfaction with precomputed adjacency row.
+    #[inline]
+    pub fn dissatisfaction_with_adj(
+        &self,
+        part: &Partition,
+        i: NodeId,
+        s_i: f64,
+        adj: &[f64],
+    ) -> (f64, MachineId) {
+        let cur_cost = self.node_cost_with_adj(part, i, part.machine_of(i), s_i, adj);
+        let (best_k, best) = self.best_response_with_adj(part, i, s_i, adj);
+        ((cur_cost - best).max(0.0), best_k)
+    }
+
+    /// The framework's global potential, from scratch. For A this is
+    /// `C0`, for B it is `C̃0` — refinement descends exactly this value.
+    pub fn potential(&self, part: &Partition) -> f64 {
+        match self.framework {
+            Framework::A => {
+                crate::partition::global_cost::c0(self.graph, &self.machines, part, self.mu)
+            }
+            Framework::B => {
+                crate::partition::global_cost::c0_tilde(self.graph, &self.machines, part, self.mu)
+            }
+        }
+    }
+
+    /// Exact potential change if node `l` moved from its current machine
+    /// to `to`, per the paper's identities: `ΔC0 = 2·ΔC_l` (Thm 3.1) and
+    /// `ΔC̃0 = ΔC̃_l` (Thm 5.1). O(deg(l) + K).
+    pub fn potential_delta(&self, part: &Partition, l: NodeId, to: MachineId) -> f64 {
+        let from = part.machine_of(l);
+        if from == to {
+            return 0.0;
+        }
+        let mut adj = vec![0.0; self.k()];
+        let s = self.adj_row(part, l, &mut adj);
+        let cur = self.node_cost_with_adj(part, l, from, s, &adj);
+        let new = self.node_cost_with_adj(part, l, to, s, &adj);
+        match self.framework {
+            Framework::A => 2.0 * (new - cur),
+            Framework::B => new - cur,
+        }
+    }
+}
+
+/// Dense cost matrices for all `(i, k)` pairs — the native mirror of the
+/// L1 Pallas kernel, used as the PJRT cross-check oracle and by the dense
+/// rebuild at refinement-epoch start.
+///
+/// Returns `(costs_a, costs_b, dissat_a, dissat_b)` with the matrices in
+/// row-major `N×K` layout.
+pub fn dense_cost_matrices(
+    graph: &Graph,
+    machines: &MachineConfig,
+    part: &Partition,
+    mu: f64,
+) -> DenseCosts {
+    let n = graph.node_count();
+    let k = machines.count();
+    let b_total = graph.total_node_weight();
+    let mut costs_a = vec![0.0f64; n * k];
+    let mut costs_b = vec![0.0f64; n * k];
+    let mut adj = vec![0.0f64; k];
+    for i in 0..n {
+        adj.iter_mut().for_each(|x| *x = 0.0);
+        let mut s_i = 0.0;
+        for (j, c) in graph.neighbors_weighted(i) {
+            adj[part.machine_of(j)] += c;
+            s_i += c;
+        }
+        let b = graph.node_weight(i);
+        let ri = part.machine_of(i);
+        for m in 0..k {
+            let w = machines.speed(m);
+            let same_load = part.load(m) - if ri == m { b } else { 0.0 };
+            let cut = mu * 0.5 * (s_i - adj[m]);
+            costs_a[i * k + m] = b / w * same_load + cut;
+            costs_b[i * k + m] =
+                b * b / (w * w) + 2.0 * b / (w * w) * same_load - 2.0 * b / w * b_total + cut;
+        }
+    }
+    let dissat = |costs: &[f64]| -> Vec<f64> {
+        (0..n)
+            .map(|i| {
+                let row = &costs[i * k..(i + 1) * k];
+                let cur = row[part.machine_of(i)];
+                let min = row.iter().copied().fold(f64::INFINITY, f64::min);
+                (cur - min).max(0.0)
+            })
+            .collect()
+    };
+    let dissat_a = dissat(&costs_a);
+    let dissat_b = dissat(&costs_b);
+    DenseCosts { n, k, costs_a, costs_b, dissat_a, dissat_b }
+}
+
+/// Output bundle of [`dense_cost_matrices`].
+#[derive(Debug, Clone)]
+pub struct DenseCosts {
+    pub n: usize,
+    pub k: usize,
+    /// Framework A costs, row-major N×K.
+    pub costs_a: Vec<f64>,
+    /// Framework B costs, row-major N×K.
+    pub costs_b: Vec<f64>,
+    pub dissat_a: Vec<f64>,
+    pub dissat_b: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::partition::global_cost;
+    use crate::util::rng::Pcg32;
+
+    fn setup(seed: u64, fw: Framework) -> (Graph, CostModel<'static>, Partition) {
+        let mut rng = Pcg32::new(seed);
+        let g = table1_graph(50, 3, 6, WeightModel::default(), &mut rng);
+        let g: &'static Graph = Box::leak(Box::new(g));
+        let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let assignment: Vec<usize> = (0..50).map(|_| rng.index(5)).collect();
+        let p = Partition::from_assignment(g, 5, assignment);
+        let model = CostModel::new(g, machines, 8.0, fw);
+        (g.clone(), model, p)
+    }
+
+    #[test]
+    fn sum_of_node_costs_equals_c0() {
+        let (_, model, p) = setup(1, Framework::A);
+        let sum: f64 = (0..p.node_count()).map(|i| model.current_cost(&p, i)).sum();
+        let c0 = global_cost::c0(model.graph, &model.machines, &p, model.mu);
+        assert!((sum - c0).abs() < 1e-6 * (1.0 + c0.abs()), "{sum} vs {c0}");
+    }
+
+    #[test]
+    fn dissatisfaction_nonnegative() {
+        for fw in [Framework::A, Framework::B] {
+            let (_, model, p) = setup(2, fw);
+            for i in 0..p.node_count() {
+                let (j, _) = model.dissatisfaction(&p, i);
+                assert!(j >= 0.0, "node {i} fw {fw}: 𝔍={j}");
+            }
+        }
+    }
+
+    /// Thm 3.1 identity: moving any node changes C0 by exactly 2·ΔC_l.
+    #[test]
+    fn potential_identity_framework_a() {
+        let (g, model, p) = setup(3, Framework::A);
+        for l in [0usize, 7, 23, 49] {
+            for to in 0..5 {
+                let before = global_cost::c0(&g, &model.machines, &p, model.mu);
+                let predicted = model.potential_delta(&p, l, to);
+                let mut p2 = p.clone();
+                p2.transfer(&g, l, to);
+                let after = global_cost::c0(&g, &model.machines, &p2, model.mu);
+                assert!(
+                    ((after - before) - predicted).abs() < 1e-6 * (1.0 + before.abs()),
+                    "node {l} → {to}: actual Δ {} vs predicted {}",
+                    after - before,
+                    predicted
+                );
+            }
+        }
+    }
+
+    /// Thm 5.1 identity: moving any node changes C̃0 by exactly ΔC̃_l.
+    #[test]
+    fn potential_identity_framework_b() {
+        let (g, model, p) = setup(4, Framework::B);
+        for l in [1usize, 13, 31, 44] {
+            for to in 0..5 {
+                let before = global_cost::c0_tilde(&g, &model.machines, &p, model.mu);
+                let predicted = model.potential_delta(&p, l, to);
+                let mut p2 = p.clone();
+                p2.transfer(&g, l, to);
+                let after = global_cost::c0_tilde(&g, &model.machines, &p2, model.mu);
+                assert!(
+                    ((after - before) - predicted).abs() < 1e-6 * (1.0 + before.abs()),
+                    "node {l} → {to}: actual Δ {} vs predicted {}",
+                    after - before,
+                    predicted
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn best_response_is_minimum() {
+        for fw in [Framework::A, Framework::B] {
+            let (_, model, p) = setup(5, fw);
+            for i in 0..p.node_count() {
+                let (bk, bc) = model.best_response(&p, i);
+                for k in 0..5 {
+                    let c = model.node_cost(&p, i, k);
+                    assert!(
+                        bc <= c + 1e-9 * (1.0 + c.abs()),
+                        "fw {fw} node {i}: best {bc}@{bk} > cost {c}@{k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_matches_scalar() {
+        let (g, model_a, p) = setup(6, Framework::A);
+        let model_b =
+            CostModel::new(model_a.graph, model_a.machines.clone(), model_a.mu, Framework::B);
+        let dense = dense_cost_matrices(&g, &model_a.machines, &p, model_a.mu);
+        for i in 0..dense.n {
+            for k in 0..dense.k {
+                let a = model_a.node_cost(&p, i, k);
+                let b = model_b.node_cost(&p, i, k);
+                assert!((dense.costs_a[i * dense.k + k] - a).abs() < 1e-9 * (1.0 + a.abs()));
+                assert!((dense.costs_b[i * dense.k + k] - b).abs() < 1e-9 * (1.0 + b.abs()));
+            }
+            let (ja, _) = model_a.dissatisfaction(&p, i);
+            let (jb, _) = model_b.dissatisfaction(&p, i);
+            assert!((dense.dissat_a[i] - ja).abs() < 1e-9 * (1.0 + ja.abs()));
+            assert!((dense.dissat_b[i] - jb).abs() < 1e-9 * (1.0 + jb.abs()));
+        }
+    }
+
+    #[test]
+    fn mu_zero_reduces_to_load_balancing_incentive() {
+        // Paper eq. (2): with μ=0 a node prefers the machine with lower
+        // normalized existing load.
+        let (_, mut model, p) = setup(7, Framework::A);
+        model.mu = 0.0;
+        for i in 0..p.node_count() {
+            let (bk, _) = model.best_response(&p, i);
+            let b = model.graph.node_weight(i);
+            let norm = |k: usize| {
+                (p.load(k) - if p.machine_of(i) == k { b } else { 0.0 }) / model.machines.speed(k)
+            };
+            for k in 0..5 {
+                assert!(norm(bk) <= norm(k) + 1e-9, "node {i}: {bk} vs {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn framework_parse() {
+        assert_eq!("A".parse::<Framework>().unwrap(), Framework::A);
+        assert_eq!("ci-tilde".parse::<Framework>().unwrap(), Framework::B);
+        assert!("zzz".parse::<Framework>().is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The partitioning game (paper §3–§5): node-level cost frameworks, the
+//! dissatisfaction criterion, and the iterative partition-refinement
+//! engine, plus the meta-heuristic extensions (§4.4 simulated annealing,
+//! §7 cluster transfers).
+
+pub mod annealing;
+pub mod cluster;
+pub mod cost;
+pub mod refine;

@@ -1,0 +1,498 @@
+//! Iterative partition refinement (paper §4.2, Figs. 1–2).
+//!
+//! Machines take turns in round-robin order. On its turn a machine finds
+//! the **most dissatisfied** node it owns (eq. 4) and transfers it to
+//! that node's best-response machine; if no owned node is dissatisfied
+//! the machine forfeits its turn. When all K machines forfeit
+//! consecutively the partition is a pure-strategy Nash equilibrium of
+//! the chosen framework's game and the algorithm has converged (Thm 4.1:
+//! each transfer strictly descends the potential, which is bounded
+//! below, so convergence is guaranteed).
+//!
+//! The engine maintains the §4.5 incremental state: per-node adjacency-
+//! to-machine rows (updated in O(deg(l)) per transfer) and the O(K)
+//! machine load aggregates, so one machine turn costs O(N_m · K) and a
+//! node transfer costs O(deg(l) + K).
+
+use crate::game::cost::{CostModel, Framework};
+use crate::graph::{Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+/// Options controlling a refinement run.
+#[derive(Debug, Clone)]
+pub struct RefineOptions {
+    /// Hard cap on node transfers (safety valve; the algorithm converges
+    /// on its own).
+    pub max_transfers: usize,
+    /// Record the potential after every transfer.
+    pub track_potential: bool,
+    /// Minimum dissatisfaction treated as non-zero (floating-point
+    /// hygiene; exact 0 in theory).
+    pub epsilon: f64,
+}
+
+impl Default for RefineOptions {
+    fn default() -> Self {
+        RefineOptions { max_transfers: 1_000_000, track_potential: false, epsilon: 1e-9 }
+    }
+}
+
+/// Outcome of a refinement run.
+#[derive(Debug, Clone)]
+pub struct RefineReport {
+    /// Number of node transfers executed ("iterations" in Table I).
+    pub transfers: usize,
+    /// Number of machine turns consumed (including forfeits).
+    pub turns: usize,
+    /// True if a Nash equilibrium was reached (all machines forfeited).
+    pub converged: bool,
+    /// Potential value at convergence (C0 for A, C̃0 for B).
+    pub final_potential: f64,
+    /// Potential after each transfer, if tracked.
+    pub potential_trace: Vec<f64>,
+}
+
+/// A single executed transfer (also used by the distributed coordinator
+/// to broadcast `ReceiveNodeTrigger` payloads).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Transfer {
+    pub node: NodeId,
+    pub from: MachineId,
+    pub to: MachineId,
+    /// Dissatisfaction of the node at the moment of transfer.
+    pub dissatisfaction: f64,
+}
+
+/// Sequential refinement engine.
+pub struct RefineEngine<'g> {
+    model: CostModel<'g>,
+    part: Partition,
+    /// Per-machine membership lists with O(1) removal.
+    members: Vec<Vec<NodeId>>,
+    /// `position[i]` = index of node `i` inside `members[machine_of(i)]`.
+    position: Vec<usize>,
+    /// Flattened N×K adjacency-to-machine table `adj[i*K + k]`.
+    adj: Vec<f64>,
+    /// `s[i] = Σ_j c_ij` (incident weight of node `i`).
+    s: Vec<f64>,
+    /// Incrementally tracked potential.
+    potential: f64,
+    /// Machine whose turn is next.
+    next_turn: MachineId,
+    transfers_done: usize,
+    turns_done: usize,
+}
+
+impl<'g> RefineEngine<'g> {
+    /// Build the engine for a graph + machine pool + starting partition.
+    pub fn new(
+        graph: &'g Graph,
+        machines: &MachineConfig,
+        part: Partition,
+        mu: f64,
+        framework: Framework,
+    ) -> Self {
+        let model = CostModel::new(graph, machines.clone(), mu, framework);
+        let k = machines.count();
+        let n = graph.node_count();
+        assert_eq!(part.machine_count(), k);
+        assert_eq!(part.node_count(), n);
+
+        let mut members: Vec<Vec<NodeId>> = vec![Vec::new(); k];
+        let mut position = vec![0usize; n];
+        for i in 0..n {
+            let m = part.machine_of(i);
+            position[i] = members[m].len();
+            members[m].push(i);
+        }
+        let mut adj = vec![0.0f64; n * k];
+        let mut s = vec![0.0f64; n];
+        for i in 0..n {
+            let row = &mut adj[i * k..(i + 1) * k];
+            for (j, c) in graph.neighbors_weighted(i) {
+                row[part.machine_of(j)] += c;
+                s[i] += c;
+            }
+        }
+        let potential = model.potential(&part);
+        RefineEngine {
+            model,
+            part,
+            members,
+            position,
+            adj,
+            s,
+            potential,
+            next_turn: 0,
+            transfers_done: 0,
+            turns_done: 0,
+        }
+    }
+
+    /// The graph being partitioned.
+    pub fn graph(&self) -> &Graph {
+        self.model.graph
+    }
+
+    /// Current partition (read-only).
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    /// Consume the engine and return the partition.
+    pub fn into_partition(self) -> Partition {
+        self.part
+    }
+
+    /// Current potential (C0 for framework A, C̃0 for B).
+    pub fn potential(&self) -> f64 {
+        self.potential
+    }
+
+    /// The cost model in use.
+    pub fn model(&self) -> &CostModel<'g> {
+        &self.model
+    }
+
+    /// Number of transfers executed so far.
+    pub fn transfers_done(&self) -> usize {
+        self.transfers_done
+    }
+
+    /// Find machine `m`'s most dissatisfied node: `(node, 𝔍, best_k)`,
+    /// or `None` if every owned node has `𝔍 ≤ epsilon`.
+    ///
+    /// Framework A uses a candidate-set fast path (see
+    /// [`most_dissatisfied_fast_a`]); framework B evaluates all K
+    /// candidates (its load term is not reducible to a single per-machine
+    /// scalar, and K is small).
+    pub fn most_dissatisfied(
+        &self,
+        m: MachineId,
+        epsilon: f64,
+    ) -> Option<(NodeId, f64, MachineId)> {
+        if self.model.framework == Framework::A {
+            return self.most_dissatisfied_fast_a(m, epsilon);
+        }
+        let k = self.model.k();
+        let mut best: Option<(NodeId, f64, MachineId)> = None;
+        for &i in &self.members[m] {
+            let row = &self.adj[i * k..(i + 1) * k];
+            let (j, target) = self.model.dissatisfaction_with_adj(&self.part, i, self.s[i], row);
+            if j > epsilon {
+                match best {
+                    Some((_, bj, _)) if bj >= j => {}
+                    _ => best = Some((i, j, target)),
+                }
+            }
+        }
+        best
+    }
+
+    /// Framework-A specialized scan (§Perf): delegates the per-node work
+    /// to [`CostModel::dissat_fast_a`] (≤ deg_i + 2 exact evaluations per
+    /// node instead of K), computing the `argmin L_q/w_q` precondition
+    /// once per turn instead of once per node.
+    fn most_dissatisfied_fast_a(
+        &self,
+        m: MachineId,
+        epsilon: f64,
+    ) -> Option<(NodeId, f64, MachineId)> {
+        let k = self.model.k();
+        let q1 = self.model.argmin_load_per_speed(&self.part);
+        let mut best: Option<(NodeId, f64, MachineId)> = None;
+        for &i in &self.members[m] {
+            let row = &self.adj[i * k..(i + 1) * k];
+            let (j, target) = self.model.dissat_fast_a(&self.part, i, self.s[i], row, q1);
+            if j > epsilon {
+                match best {
+                    Some((_, bj, _)) if bj >= j => {}
+                    _ => best = Some((i, j, target)),
+                }
+            }
+        }
+        best
+    }
+
+    /// Execute a transfer, maintaining all incremental state. Returns
+    /// the potential delta (negative for best-response moves).
+    pub fn apply_transfer(&mut self, node: NodeId, to: MachineId) -> f64 {
+        let delta = self.model.potential_delta(&self.part, node, to);
+        self.apply_transfer_with_delta(node, to, delta);
+        delta
+    }
+
+    /// Transfer with a pre-computed potential delta (§Perf: `take_turn`
+    /// already knows `Δ = −2𝔍` for A / `−𝔍` for B from the scan, so the
+    /// O(deg + K) delta recomputation is skipped on the hot path).
+    fn apply_transfer_with_delta(&mut self, node: NodeId, to: MachineId, delta: f64) {
+        let from = self.part.machine_of(node);
+        assert_ne!(from, to, "transfer to same machine");
+
+        // Membership lists: swap-remove from `from`, push to `to`.
+        let pos = self.position[node];
+        let last = *self.members[from].last().expect("member list nonempty");
+        self.members[from].swap_remove(pos);
+        if last != node {
+            self.position[last] = pos;
+        }
+        self.position[node] = self.members[to].len();
+        self.members[to].push(node);
+
+        // Partition aggregates.
+        self.part.transfer(self.model.graph, node, to);
+
+        // Neighbors' adjacency rows: c_{j,node} moves from column `from`
+        // to column `to`.
+        let k = self.model.k();
+        for (j, c) in self.model.graph.neighbors_weighted(node) {
+            let row = &mut self.adj[j * k..(j + 1) * k];
+            row[from] -= c;
+            row[to] += c;
+        }
+
+        self.potential += delta;
+        self.transfers_done += 1;
+    }
+
+    /// One machine turn (paper Fig. 2 `TakeMyTurnTrigger` body). Returns
+    /// the executed transfer, or `None` if the machine forfeited.
+    pub fn take_turn(&mut self, m: MachineId, epsilon: f64) -> Option<Transfer> {
+        self.turns_done += 1;
+        let (node, dissat, target) = self.most_dissatisfied(m, epsilon)?;
+        let from = self.part.machine_of(node);
+        // ΔC0 = 2·ΔC_l = −2𝔍 (Thm 3.1); ΔC̃0 = ΔC̃_l = −𝔍 (Thm 5.1).
+        let delta = match self.model.framework {
+            Framework::A => -2.0 * dissat,
+            Framework::B => -dissat,
+        };
+        self.apply_transfer_with_delta(node, target, delta);
+        Some(Transfer { node, from, to: target, dissatisfaction: dissat })
+    }
+
+    /// Run round-robin turns until convergence (all K machines forfeit
+    /// consecutively) or the transfer cap is hit.
+    pub fn run(&mut self, options: &RefineOptions) -> RefineReport {
+        let k = self.model.k();
+        let mut trace = Vec::new();
+        if options.track_potential {
+            trace.push(self.potential);
+        }
+        let mut consecutive_forfeits = 0;
+        let mut transfers = 0;
+        while consecutive_forfeits < k && transfers < options.max_transfers {
+            let m = self.next_turn;
+            self.next_turn = (self.next_turn + 1) % k;
+            match self.take_turn(m, options.epsilon) {
+                Some(_) => {
+                    consecutive_forfeits = 0;
+                    transfers += 1;
+                    if options.track_potential {
+                        trace.push(self.potential);
+                    }
+                }
+                None => consecutive_forfeits += 1,
+            }
+        }
+        RefineReport {
+            transfers,
+            turns: self.turns_done,
+            converged: consecutive_forfeits >= k,
+            final_potential: self.potential,
+            potential_trace: trace,
+        }
+    }
+
+    /// Re-sync all incremental state after the graph's node/edge weights
+    /// changed (dynamic re-weighting between refinement epochs, §6.1).
+    /// O(N·K + |E|).
+    pub fn resync_weights(&mut self) {
+        let k = self.model.k();
+        let n = self.model.graph.node_count();
+        self.part.rebuild_aggregates(self.model.graph);
+        self.adj.iter_mut().for_each(|x| *x = 0.0);
+        self.s.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..n {
+            let row = &mut self.adj[i * k..(i + 1) * k];
+            for (j, c) in self.model.graph.neighbors_weighted(i) {
+                row[self.part.machine_of(j)] += c;
+                self.s[i] += c;
+            }
+        }
+        self.potential = self.model.potential(&self.part);
+    }
+
+    /// Debug validation: incremental state equals from-scratch state.
+    pub fn validate(&self) -> Result<(), String> {
+        self.part.validate(self.model.graph)?;
+        let k = self.model.k();
+        for i in 0..self.model.graph.node_count() {
+            let mut row = vec![0.0; k];
+            let s = self.model.adj_row(&self.part, i, &mut row);
+            if (s - self.s[i]).abs() > 1e-6 * (1.0 + s.abs()) {
+                return Err(format!("s[{i}] drift: {} vs {}", self.s[i], s));
+            }
+            for m in 0..k {
+                let cached = self.adj[i * k + m];
+                if (cached - row[m]).abs() > 1e-6 * (1.0 + row[m].abs()) {
+                    return Err(format!("adj[{i},{m}] drift: {cached} vs {}", row[m]));
+                }
+            }
+            if self.position[i] >= self.members[self.part.machine_of(i)].len()
+                || self.members[self.part.machine_of(i)][self.position[i]] != i
+            {
+                return Err(format!("membership index broken for node {i}"));
+            }
+        }
+        let fresh = self.model.potential(&self.part);
+        if (fresh - self.potential).abs() > 1e-6 * (1.0 + fresh.abs()) {
+            return Err(format!("potential drift: {} vs {}", self.potential, fresh));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::partition::global_cost;
+    use crate::util::rng::Pcg32;
+
+    fn random_partition(n: usize, k: usize, rng: &mut Pcg32) -> Vec<usize> {
+        (0..n).map(|_| rng.index(k)).collect()
+    }
+
+    fn engine(seed: u64, fw: Framework) -> RefineEngine<'static> {
+        let mut rng = Pcg32::new(seed);
+        let g = table1_graph(80, 3, 6, WeightModel::default(), &mut rng);
+        let g: &'static Graph = Box::leak(Box::new(g));
+        let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let assignment = random_partition(80, 5, &mut rng);
+        let part = Partition::from_assignment(g, 5, assignment);
+        RefineEngine::new(g, &machines, part, 8.0, fw)
+    }
+
+    #[test]
+    fn converges_and_descends_framework_a() {
+        let mut e = engine(1, Framework::A);
+        let start = e.potential();
+        let report = e.run(&RefineOptions { track_potential: true, ..Default::default() });
+        assert!(report.converged);
+        assert!(report.final_potential <= start);
+        // strict descent at every step
+        for w in report.potential_trace.windows(2) {
+            assert!(w[1] < w[0] + 1e-9, "non-descent step: {} -> {}", w[0], w[1]);
+        }
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn converges_and_descends_framework_b() {
+        let mut e = engine(2, Framework::B);
+        let start = e.potential();
+        let report = e.run(&RefineOptions { track_potential: true, ..Default::default() });
+        assert!(report.converged);
+        assert!(report.final_potential <= start);
+        for w in report.potential_trace.windows(2) {
+            assert!(w[1] < w[0] + 1e-9);
+        }
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn converged_state_is_nash_equilibrium() {
+        for fw in [Framework::A, Framework::B] {
+            let mut e = engine(3, fw);
+            let report = e.run(&RefineOptions::default());
+            assert!(report.converged);
+            // No node can improve by unilateral deviation.
+            for i in 0..e.partition().node_count() {
+                let (j, _) = e.model().dissatisfaction(e.partition(), i);
+                assert!(j <= 1e-6, "fw {fw}: node {i} still dissatisfied by {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_potential_matches_scratch() {
+        let mut e = engine(4, Framework::A);
+        let _ = e.run(&RefineOptions::default());
+        let scratch =
+            global_cost::c0(e.model().graph, &e.model().machines, e.partition(), e.model().mu);
+        assert!((e.potential() - scratch).abs() < 1e-6 * (1.0 + scratch.abs()));
+    }
+
+    #[test]
+    fn transfer_cap_respected() {
+        let mut e = engine(5, Framework::A);
+        let report = e.run(&RefineOptions { max_transfers: 3, ..Default::default() });
+        assert!(report.transfers <= 3);
+    }
+
+    #[test]
+    fn apply_transfer_keeps_state_valid() {
+        let mut e = engine(6, Framework::A);
+        // Move several arbitrary nodes irrespective of dissatisfaction.
+        for (node, to) in [(0usize, 1usize), (5, 2), (10, 0), (0, 4)] {
+            if e.partition().machine_of(node) != to {
+                e.apply_transfer(node, to);
+            }
+            e.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn resync_is_idempotent_and_reweighting_reconverges() {
+        let mut rng = Pcg32::new(7);
+        let mut g = table1_graph(60, 3, 6, WeightModel::default(), &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let assignment = random_partition(60, 4, &mut rng);
+
+        // Epoch 1: refine, resync (no weight change) must be a no-op.
+        let part = Partition::from_assignment(&g, 4, assignment);
+        let converged = {
+            let mut e = RefineEngine::new(&g, &machines, part, 4.0, Framework::A);
+            let _ = e.run(&RefineOptions::default());
+            let before = e.potential();
+            e.resync_weights();
+            assert!((e.potential() - before).abs() < 1e-6 * (1.0 + before.abs()));
+            e.validate().unwrap();
+            e.into_partition()
+        };
+
+        // Dynamic load change (paper §6.1): new node weights, then a new
+        // refinement epoch starting from the previous assignment.
+        let w: Vec<f64> = (0..60).map(|i| 1.0 + (i % 7) as f64).collect();
+        g.set_node_weights(&w);
+        let mut part2 = converged;
+        part2.rebuild_aggregates(&g);
+        let mut e2 = RefineEngine::new(&g, &machines, part2, 4.0, Framework::A);
+        let report = e2.run(&RefineOptions::default());
+        assert!(report.converged);
+        e2.validate().unwrap();
+    }
+
+    #[test]
+    fn equilibrium_forfeits_all_turns() {
+        let mut e = engine(8, Framework::A);
+        let _ = e.run(&RefineOptions::default());
+        for m in 0..5 {
+            assert!(e.most_dissatisfied(m, 1e-9).is_none());
+        }
+    }
+
+    #[test]
+    fn refinement_improves_over_random_start() {
+        // Sanity on the headline effect: refinement should substantially
+        // reduce the potential of a random partition.
+        let mut e = engine(9, Framework::A);
+        let start = e.potential();
+        let report = e.run(&RefineOptions::default());
+        assert!(
+            report.final_potential < 0.99 * start,
+            "expected >1% improvement: {start} -> {}",
+            report.final_potential
+        );
+    }
+}

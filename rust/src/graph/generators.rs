@@ -1,0 +1,391 @@
+//! Random graph generators used by the paper's evaluation.
+//!
+//! * [`table1_graph`] — §5.1 numerical study: N nodes, per-node degree
+//!   drawn uniformly from `[3, 6]`, random node/edge weights with a given
+//!   mean (the paper uses mean 5).
+//! * [`preferential_attachment`] — §6.1 / Fig. 7: scale-free graph in the
+//!   style of Bu–Towsley / Barabási–Albert, modeling AS-level Internet
+//!   topology.
+//! * [`specialized_geometric`] — §6.1 / Fig. 8: nodes with 2-D coordinates
+//!   where each node links to nodes chosen among its 15 nearest.
+//! * [`erdos_renyi`] — App. A Thm A.1 substrate (initial-partitioning
+//!   growth-law validation).
+//!
+//! All generators guarantee a **connected** graph (the paper assumes
+//! connectivity; §3 notes disconnected graphs can be patched with
+//! zero-weight edges, which is exactly what [`connect_components`] does).
+
+use crate::graph::{metrics, Graph, GraphBuilder, NodeId};
+use crate::util::rng::Pcg32;
+
+/// Parameters for random node/edge weights: uniform integer-valued
+/// weights in `[1, 2*mean - 1]`, matching "randomly generated node and
+/// edge weights each with mean 5" (§5.1) while keeping weights positive.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightModel {
+    pub node_mean: f64,
+    pub edge_mean: f64,
+}
+
+impl Default for WeightModel {
+    fn default() -> Self {
+        WeightModel { node_mean: 5.0, edge_mean: 5.0 }
+    }
+}
+
+fn uniform_mean(rng: &mut Pcg32, mean: f64) -> f64 {
+    // Uniform integers in [1, 2*mean-1] have mean `mean` for integer mean.
+    let hi = (2.0 * mean - 1.0).max(1.0) as u64;
+    rng.gen_range(1, hi) as f64
+}
+
+/// Assign random node and edge weights in place.
+pub fn randomize_weights(g: &mut Graph, model: WeightModel, rng: &mut Pcg32) {
+    let n = g.node_count();
+    for u in 0..n {
+        let w = uniform_mean(rng, model.node_mean);
+        g.set_node_weight(u, w);
+    }
+    let edges: Vec<(NodeId, NodeId)> = g.edges().map(|(u, v, _)| (u, v)).collect();
+    for (u, v) in edges {
+        let w = uniform_mean(rng, model.edge_mean);
+        g.set_edge_weight(u, v, w);
+    }
+}
+
+/// Add zero-weight edges to stitch disconnected components together
+/// (paper §3: "convert a disconnected graph into a connected one by
+/// adding edges of weight zero").
+pub fn connect_components(builder: &mut GraphBuilder) {
+    let snapshot = builder.clone().build();
+    let comps = metrics::connected_components(&snapshot);
+    if comps.component_count <= 1 {
+        return;
+    }
+    // Link the first node of each component to the first node of comp 0.
+    let mut rep: Vec<Option<NodeId>> = vec![None; comps.component_count];
+    for u in 0..snapshot.node_count() {
+        let c = comps.labels[u];
+        if rep[c].is_none() {
+            rep[c] = Some(u);
+        }
+    }
+    let root = rep[0].expect("component 0 nonempty");
+    for c in 1..comps.component_count {
+        let u = rep[c].expect("component nonempty");
+        builder.add_edge(root, u, 0.0);
+    }
+}
+
+/// §5.1 graph: each node's target degree drawn uniformly in
+/// `[deg_lo, deg_hi]` (paper: 3..6); edges wired by random matching of
+/// degree stubs, rejecting duplicates/self-loops; then connected.
+pub fn table1_graph(
+    n: usize,
+    deg_lo: usize,
+    deg_hi: usize,
+    weights: WeightModel,
+    rng: &mut Pcg32,
+) -> Graph {
+    assert!(n >= 2 && deg_lo >= 1 && deg_hi >= deg_lo && deg_hi < n);
+    let mut builder = GraphBuilder::with_nodes(n);
+    let targets: Vec<usize> =
+        (0..n).map(|_| rng.gen_range(deg_lo as u64, deg_hi as u64) as usize).collect();
+    let mut degree = vec![0usize; n];
+    // Stub list: node u appears targets[u] times.
+    let mut stubs: Vec<NodeId> = Vec::new();
+    for (u, &t) in targets.iter().enumerate() {
+        stubs.extend(std::iter::repeat(u).take(t));
+    }
+    rng.shuffle(&mut stubs);
+    let mut i = 0;
+    while i + 1 < stubs.len() {
+        let (u, v) = (stubs[i], stubs[i + 1]);
+        i += 2;
+        if u == v || builder.has_edge(u, v) {
+            continue;
+        }
+        // Cap degrees at targets to keep the [3,6]-ish profile.
+        if degree[u] >= targets[u] || degree[v] >= targets[v] {
+            continue;
+        }
+        builder.add_edge(u, v, 1.0);
+        degree[u] += 1;
+        degree[v] += 1;
+    }
+    // Patch isolated / underfull nodes minimally so min degree >= 1.
+    for u in 0..n {
+        if degree[u] == 0 {
+            let mut v = rng.index(n);
+            while v == u {
+                v = rng.index(n);
+            }
+            if !builder.has_edge(u, v) {
+                builder.add_edge(u, v, 1.0);
+                degree[u] += 1;
+                degree[v] += 1;
+            }
+        }
+    }
+    connect_components(&mut builder);
+    let mut g = builder.build();
+    randomize_weights(&mut g, weights, rng);
+    g
+}
+
+/// Scale-free preferential-attachment graph (§6.1, Fig. 7): start from a
+/// small clique of `m0 = m + 1` nodes; each arriving node attaches `m`
+/// edges to existing nodes with probability proportional to degree.
+pub fn preferential_attachment(n: usize, m: usize, rng: &mut Pcg32) -> Graph {
+    assert!(m >= 1 && n > m + 1);
+    let mut builder = GraphBuilder::with_nodes(n);
+    let m0 = m + 1;
+    for u in 0..m0 {
+        for v in (u + 1)..m0 {
+            builder.add_edge(u, v, 1.0);
+        }
+    }
+    // Repeated-endpoint list: each half-edge endpoint appears once, so
+    // sampling uniformly from it is degree-proportional sampling.
+    let mut endpoints: Vec<NodeId> = Vec::with_capacity(2 * m * n);
+    for u in 0..m0 {
+        for v in (u + 1)..m0 {
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    for u in m0..n {
+        let mut chosen: Vec<NodeId> = Vec::with_capacity(m);
+        let mut guard = 0;
+        while chosen.len() < m && guard < 50 * m {
+            guard += 1;
+            let v = endpoints[rng.index(endpoints.len())];
+            if v != u && !chosen.contains(&v) {
+                chosen.push(v);
+            }
+        }
+        for &v in &chosen {
+            builder.add_edge(u, v, 1.0);
+            endpoints.push(u);
+            endpoints.push(v);
+        }
+    }
+    connect_components(&mut builder);
+    builder.build()
+}
+
+/// Specialized geometric graph (§6.1, Fig. 8): nodes get uniform 2-D
+/// coordinates; each node forms `links_per_node` links, each to a node
+/// chosen uniformly among its `k_nearest` (paper: 15) nearest neighbors.
+pub fn specialized_geometric(
+    n: usize,
+    k_nearest: usize,
+    links_per_node: usize,
+    rng: &mut Pcg32,
+) -> Graph {
+    assert!(n > k_nearest && k_nearest >= links_per_node && links_per_node >= 1);
+    let coords: Vec<(f64, f64)> =
+        (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+    let mut builder = GraphBuilder::with_nodes(n);
+    builder.set_coords(coords.clone());
+
+    // O(n^2) nearest-neighbor scan: n here is O(10^3) in the paper's
+    // experiments; fine. (A k-d tree would pay off only above ~10^5.)
+    let mut dist_buf: Vec<(f64, NodeId)> = Vec::with_capacity(n - 1);
+    for u in 0..n {
+        dist_buf.clear();
+        let (ux, uy) = coords[u];
+        for v in 0..n {
+            if v == u {
+                continue;
+            }
+            let (vx, vy) = coords[v];
+            let d2 = (ux - vx) * (ux - vx) + (uy - vy) * (uy - vy);
+            dist_buf.push((d2, v));
+        }
+        dist_buf.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).expect("finite"));
+        let nearest: Vec<NodeId> = dist_buf[..k_nearest].iter().map(|&(_, v)| v).collect();
+        let mut made = 0;
+        let mut guard = 0;
+        while made < links_per_node && guard < 20 * links_per_node {
+            guard += 1;
+            let v = nearest[rng.index(k_nearest)];
+            if !builder.has_edge(u, v) {
+                builder.add_edge(u, v, 1.0);
+                made += 1;
+            }
+        }
+    }
+    connect_components(&mut builder);
+    builder.build()
+}
+
+/// Erdős–Rényi G(n, p) (App. A substrate).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Pcg32) -> Graph {
+    assert!(n >= 2 && (0.0..=1.0).contains(&p));
+    let mut builder = GraphBuilder::with_nodes(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.chance(p) {
+                builder.add_edge(u, v, 1.0);
+            }
+        }
+    }
+    connect_components(&mut builder);
+    builder.build()
+}
+
+/// Named graph family selector used by the CLI and experiment configs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphFamily {
+    Table1,
+    PreferentialAttachment,
+    Geometric,
+    ErdosRenyi,
+}
+
+impl std::str::FromStr for GraphFamily {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "table1" | "degree36" => Ok(GraphFamily::Table1),
+            "pa" | "preferential-attachment" | "scale-free" => {
+                Ok(GraphFamily::PreferentialAttachment)
+            }
+            "geo" | "geometric" => Ok(GraphFamily::Geometric),
+            "er" | "erdos-renyi" => Ok(GraphFamily::ErdosRenyi),
+            other => Err(format!("unknown graph family {other:?}")),
+        }
+    }
+}
+
+/// Generate a graph of the given family with family-appropriate default
+/// shape parameters (paper values).
+pub fn generate(family: GraphFamily, n: usize, rng: &mut Pcg32) -> Graph {
+    match family {
+        GraphFamily::Table1 => table1_graph(n, 3, 6, WeightModel::default(), rng),
+        GraphFamily::PreferentialAttachment => preferential_attachment(n, 2, rng),
+        GraphFamily::Geometric => specialized_geometric(n, 15, 3, rng),
+        GraphFamily::ErdosRenyi => {
+            // keep expected degree ~ 6
+            let p = (6.0 / (n as f64 - 1.0)).min(1.0);
+            erdos_renyi(n, p, rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::metrics::connected_components;
+
+    #[test]
+    fn table1_graph_profile() {
+        let mut rng = Pcg32::new(1);
+        let g = table1_graph(230, 3, 6, WeightModel::default(), &mut rng);
+        assert_eq!(g.node_count(), 230);
+        assert_eq!(connected_components(&g).component_count, 1);
+        // Mean degree should land in [2.5, 6]: stub matching under-fills a bit.
+        let mean_deg =
+            (0..230).map(|u| g.degree(u) as f64).sum::<f64>() / 230.0;
+        assert!(
+            (2.5..=6.0).contains(&mean_deg),
+            "mean degree {mean_deg} out of expected band"
+        );
+        // Node weights should average near 5.
+        let mean_w = g.total_node_weight() / 230.0;
+        assert!((mean_w - 5.0).abs() < 1.0, "mean node weight {mean_w}");
+    }
+
+    #[test]
+    fn table1_weights_positive() {
+        let mut rng = Pcg32::new(2);
+        let g = table1_graph(100, 3, 6, WeightModel::default(), &mut rng);
+        assert!(g.node_weights().iter().all(|&w| w >= 1.0));
+        assert!(g.edges().all(|(_, _, w)| w >= 0.0));
+    }
+
+    #[test]
+    fn preferential_attachment_scale_free_ish() {
+        let mut rng = Pcg32::new(3);
+        let g = preferential_attachment(500, 2, &mut rng);
+        assert_eq!(g.node_count(), 500);
+        assert_eq!(connected_components(&g).component_count, 1);
+        let max_deg = (0..500).map(|u| g.degree(u)).max().unwrap();
+        let mean_deg = (0..500).map(|u| g.degree(u) as f64).sum::<f64>() / 500.0;
+        // A hub should greatly exceed the mean in a scale-free graph.
+        assert!(
+            max_deg as f64 > 4.0 * mean_deg,
+            "max {max_deg} vs mean {mean_deg} — not heavy-tailed"
+        );
+    }
+
+    #[test]
+    fn geometric_links_are_local() {
+        let mut rng = Pcg32::new(4);
+        let g = specialized_geometric(300, 15, 3, &mut rng);
+        assert_eq!(connected_components(&g).component_count, 1);
+        let coords = g.coords().expect("geometric graph has coords");
+        // Average edge length must be far below the ~0.52 random-pair mean.
+        let mut total = 0.0;
+        let mut cnt = 0usize;
+        for (u, v, _) in g.edges() {
+            let (ux, uy) = coords[u];
+            let (vx, vy) = coords[v];
+            total += ((ux - vx).powi(2) + (uy - vy).powi(2)).sqrt();
+            cnt += 1;
+        }
+        let mean_len = total / cnt as f64;
+        assert!(mean_len < 0.25, "edges not local: mean length {mean_len}");
+    }
+
+    #[test]
+    fn erdos_renyi_edge_density() {
+        let mut rng = Pcg32::new(5);
+        let n = 200;
+        let p = 0.05;
+        let g = erdos_renyi(n, p, &mut rng);
+        let expected = p * (n * (n - 1) / 2) as f64;
+        let m = g.edge_count() as f64;
+        assert!((m - expected).abs() < 0.25 * expected, "m={m} expected~{expected}");
+        assert_eq!(connected_components(&g).component_count, 1);
+    }
+
+    #[test]
+    fn generators_deterministic_under_seed() {
+        let g1 = {
+            let mut rng = Pcg32::new(77);
+            preferential_attachment(100, 2, &mut rng)
+        };
+        let g2 = {
+            let mut rng = Pcg32::new(77);
+            preferential_attachment(100, 2, &mut rng)
+        };
+        assert_eq!(g1.edge_count(), g2.edge_count());
+        let e1: Vec<_> = g1.edges().collect();
+        let e2: Vec<_> = g2.edges().collect();
+        assert_eq!(e1, e2);
+    }
+
+    #[test]
+    fn family_parsing() {
+        assert_eq!("pa".parse::<GraphFamily>().unwrap(), GraphFamily::PreferentialAttachment);
+        assert_eq!("geo".parse::<GraphFamily>().unwrap(), GraphFamily::Geometric);
+        assert!("bogus".parse::<GraphFamily>().is_err());
+    }
+
+    #[test]
+    fn generate_dispatch() {
+        let mut rng = Pcg32::new(6);
+        for fam in [
+            GraphFamily::Table1,
+            GraphFamily::PreferentialAttachment,
+            GraphFamily::Geometric,
+            GraphFamily::ErdosRenyi,
+        ] {
+            let g = generate(fam, 60, &mut rng);
+            assert_eq!(g.node_count(), 60);
+            assert_eq!(connected_components(&g).component_count, 1, "{fam:?}");
+        }
+    }
+}

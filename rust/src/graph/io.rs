@@ -1,0 +1,184 @@
+//! Graph serialization: a small self-describing text format so users can
+//! bring their own LP graphs to the partitioner and experiments can be
+//! re-run from recorded inputs.
+//!
+//! Format (line-oriented, `#` comments):
+//! ```text
+//! gtip-graph v1
+//! nodes <n>
+//! node <id> <weight> [<x> <y>]
+//! edge <u> <v> <weight>
+//! ```
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::{Graph, GraphBuilder};
+
+/// Serialize a graph to the text format.
+pub fn write_graph<W: Write>(g: &Graph, mut w: W) -> Result<()> {
+    writeln!(w, "gtip-graph v1")?;
+    writeln!(w, "nodes {}", g.node_count())?;
+    let coords = g.coords();
+    for u in 0..g.node_count() {
+        match coords {
+            Some(c) => writeln!(w, "node {} {} {} {}", u, g.node_weight(u), c[u].0, c[u].1)?,
+            None => writeln!(w, "node {} {}", u, g.node_weight(u))?,
+        }
+    }
+    for (u, v, wt) in g.edges() {
+        writeln!(w, "edge {u} {v} {wt}")?;
+    }
+    Ok(())
+}
+
+/// Save to a file path.
+pub fn save_graph(g: &Graph, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    write_graph(g, std::io::BufWriter::new(f))
+}
+
+/// Parse a graph from the text format.
+pub fn read_graph<R: BufRead>(r: R) -> Result<Graph> {
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Graph("empty graph file".into()))??;
+    if header.trim() != "gtip-graph v1" {
+        return Err(Error::Graph(format!("bad header {header:?}")));
+    }
+    let mut builder: Option<GraphBuilder> = None;
+    let mut coords: Vec<(f64, f64)> = Vec::new();
+    let mut saw_coords = false;
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut fields = line.split_whitespace();
+        let kind = fields.next().expect("non-empty");
+        let rest: Vec<&str> = fields.collect();
+        let mut rest_iter = rest.into_iter();
+        let mut next_field = |what: &str| -> Result<String> {
+            rest_iter
+                .next()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Graph(format!("line {}: missing {what}", lineno + 2)))
+        };
+        let parse_f = |s: String| -> Result<f64> {
+            s.parse::<f64>().map_err(|e| Error::Graph(format!("bad number {s:?}: {e}")))
+        };
+        let parse_u = |s: String| -> Result<usize> {
+            s.parse::<usize>().map_err(|e| Error::Graph(format!("bad id {s:?}: {e}")))
+        };
+        match kind {
+            "nodes" => {
+                let n = parse_u(next_field("count")?)?;
+                builder = Some(GraphBuilder::with_nodes(n));
+                coords = vec![(0.0, 0.0); n];
+            }
+            "node" => {
+                let b = builder
+                    .as_mut()
+                    .ok_or_else(|| Error::Graph("'node' before 'nodes'".into()))?;
+                let id = parse_u(next_field("id")?)?;
+                let w = parse_f(next_field("weight")?)?;
+                if id >= b.node_count() {
+                    return Err(Error::Graph(format!("node id {id} out of range")));
+                }
+                b.set_node_weight(id, w);
+                if let Ok(x) = next_field("x") {
+                    let x = parse_f(x)?;
+                    let y = parse_f(next_field("y")?)?;
+                    coords[id] = (x, y);
+                    saw_coords = true;
+                }
+            }
+            "edge" => {
+                let b = builder
+                    .as_mut()
+                    .ok_or_else(|| Error::Graph("'edge' before 'nodes'".into()))?;
+                let u = parse_u(next_field("u")?)?;
+                let v = parse_u(next_field("v")?)?;
+                let w = parse_f(next_field("weight")?)?;
+                if u >= b.node_count() || v >= b.node_count() {
+                    return Err(Error::Graph(format!("edge ({u},{v}) out of range")));
+                }
+                b.add_edge(u, v, w);
+            }
+            other => return Err(Error::Graph(format!("unknown record {other:?}"))),
+        }
+    }
+    let mut builder = builder.ok_or_else(|| Error::Graph("no 'nodes' record".into()))?;
+    if saw_coords {
+        builder.set_coords(coords);
+    }
+    Ok(builder.build())
+}
+
+/// Load from a file path.
+pub fn load_graph(path: impl AsRef<Path>) -> Result<Graph> {
+    let f = std::fs::File::open(path)?;
+    read_graph(std::io::BufReader::new(f))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{specialized_geometric, table1_graph, WeightModel};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn round_trip_weights_and_edges() {
+        let mut rng = Pcg32::new(42);
+        let g = table1_graph(50, 3, 6, WeightModel::default(), &mut rng);
+        let mut buf = Vec::new();
+        write_graph(&g, &mut buf).unwrap();
+        let g2 = read_graph(std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(g.node_count(), g2.node_count());
+        assert_eq!(g.edge_count(), g2.edge_count());
+        for u in 0..g.node_count() {
+            assert_eq!(g.node_weight(u), g2.node_weight(u));
+            assert_eq!(g.neighbors(u), g2.neighbors(u));
+        }
+        for (u, v, w) in g.edges() {
+            assert_eq!(g2.edge_weight(u, v), Some(w));
+        }
+    }
+
+    #[test]
+    fn round_trip_coords() {
+        let mut rng = Pcg32::new(43);
+        let g = specialized_geometric(40, 15, 2, &mut rng);
+        let mut buf = Vec::new();
+        write_graph(&g, &mut buf).unwrap();
+        let g2 = read_graph(std::io::Cursor::new(buf)).unwrap();
+        let c1 = g.coords().unwrap();
+        let c2 = g2.coords().unwrap();
+        for (a, b) in c1.iter().zip(c2.iter()) {
+            assert!((a.0 - b.0).abs() < 1e-12 && (a.1 - b.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let r = read_graph(std::io::Cursor::new(b"not-a-graph\n".to_vec()));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_edge() {
+        let text = "gtip-graph v1\nnodes 2\nedge 0 5 1.0\n";
+        assert!(read_graph(std::io::Cursor::new(text.as_bytes().to_vec())).is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ok() {
+        let text = "gtip-graph v1\n# comment\nnodes 2\n\nnode 0 3.0\nnode 1 4.0\nedge 0 1 2.0\n";
+        let g = read_graph(std::io::Cursor::new(text.as_bytes().to_vec())).unwrap();
+        assert_eq!(g.node_weight(0), 3.0);
+        assert_eq!(g.edge_weight(0, 1), Some(2.0));
+    }
+}

@@ -1,0 +1,217 @@
+//! Graph metrics: BFS geodesics, connected components, cut weights and
+//! degree statistics. Used by initial partitioning (App. A focal-node
+//! search needs geodesic distances) and by the experiment harnesses.
+
+use crate::graph::{Graph, NodeId};
+
+/// Result of a connected-components labeling.
+#[derive(Debug, Clone)]
+pub struct Components {
+    /// `labels[u]` = component index of node `u` (dense, 0-based).
+    pub labels: Vec<usize>,
+    pub component_count: usize,
+}
+
+/// Label connected components with iterative BFS.
+pub fn connected_components(g: &Graph) -> Components {
+    let n = g.node_count();
+    let mut labels = vec![usize::MAX; n];
+    let mut count = 0;
+    let mut queue = std::collections::VecDeque::new();
+    for start in 0..n {
+        if labels[start] != usize::MAX {
+            continue;
+        }
+        labels[start] = count;
+        queue.push_back(start);
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                if labels[v] == usize::MAX {
+                    labels[v] = count;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count += 1;
+    }
+    Components { labels, component_count: count }
+}
+
+/// Unweighted geodesic (hop) distances from `source` to all nodes.
+/// Unreachable nodes get `usize::MAX`.
+pub fn bfs_distances(g: &Graph, source: NodeId) -> Vec<usize> {
+    let n = g.node_count();
+    let mut dist = vec![usize::MAX; n];
+    dist[source] = 0;
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(source);
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u];
+        for &v in g.neighbors(u) {
+            if dist[v] == usize::MAX {
+                dist[v] = du + 1;
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// BFS distances from `source`, stopping once `targets` are all resolved
+/// (small optimization for the focal-node heuristic's repeated queries).
+pub fn bfs_distances_to(g: &Graph, source: NodeId, targets: &[NodeId]) -> Vec<usize> {
+    let n = g.node_count();
+    let mut dist = vec![usize::MAX; n];
+    dist[source] = 0;
+    let mut remaining: usize =
+        targets.iter().filter(|&&t| t != source).count();
+    if remaining == 0 {
+        return dist;
+    }
+    let is_target = {
+        let mut mask = vec![false; n];
+        for &t in targets {
+            mask[t] = true;
+        }
+        mask
+    };
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(source);
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u];
+        for &v in g.neighbors(u) {
+            if dist[v] == usize::MAX {
+                dist[v] = du + 1;
+                if is_target[v] {
+                    remaining -= 1;
+                    if remaining == 0 {
+                        return dist;
+                    }
+                }
+                queue.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+/// Total weight of edges crossing the given assignment
+/// (`assignment[u]` = machine of node `u`); each undirected edge counted
+/// once. This is the classical partitioning objective's cut term.
+pub fn cut_weight(g: &Graph, assignment: &[usize]) -> f64 {
+    assert_eq!(assignment.len(), g.node_count());
+    g.edges()
+        .filter(|&(u, v, _)| assignment[u] != assignment[v])
+        .map(|(_, _, w)| w)
+        .sum()
+}
+
+/// Number of edges crossing the assignment.
+pub fn cut_edges(g: &Graph, assignment: &[usize]) -> usize {
+    g.edges().filter(|&(u, v, _)| assignment[u] != assignment[v]).count()
+}
+
+/// Degree distribution summary.
+#[derive(Debug, Clone)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+}
+
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let n = g.node_count();
+    let mut min = usize::MAX;
+    let mut max = 0;
+    let mut sum = 0usize;
+    for u in 0..n {
+        let d = g.degree(u);
+        min = min.min(d);
+        max = max.max(d);
+        sum += d;
+    }
+    DegreeStats { min, max, mean: sum as f64 / n as f64 }
+}
+
+/// Approximate graph diameter: max BFS eccentricity over `samples`
+/// random-ish starting nodes (deterministic stride sampling).
+pub fn approx_diameter(g: &Graph, samples: usize) -> usize {
+    let n = g.node_count();
+    let step = (n / samples.max(1)).max(1);
+    let mut best = 0;
+    for s in (0..n).step_by(step) {
+        let d = bfs_distances(g, s);
+        let ecc = d.iter().filter(|&&x| x != usize::MAX).max().copied().unwrap_or(0);
+        best = best.max(ecc);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// 0-1-2-3 path plus isolated pair 4-5.
+    fn two_components() -> Graph {
+        let mut b = GraphBuilder::with_nodes(6);
+        b.add_edge(0, 1, 1.0).add_edge(1, 2, 1.0).add_edge(2, 3, 1.0).add_edge(4, 5, 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn components_counted() {
+        let g = two_components();
+        let c = connected_components(&g);
+        assert_eq!(c.component_count, 2);
+        assert_eq!(c.labels[0], c.labels[3]);
+        assert_ne!(c.labels[0], c.labels[4]);
+    }
+
+    #[test]
+    fn bfs_path_distances() {
+        let g = two_components();
+        let d = bfs_distances(&g, 0);
+        assert_eq!(&d[..4], &[0, 1, 2, 3]);
+        assert_eq!(d[4], usize::MAX);
+    }
+
+    #[test]
+    fn bfs_targets_early_exit_matches_full() {
+        let g = two_components();
+        let full = bfs_distances(&g, 0);
+        let partial = bfs_distances_to(&g, 0, &[2]);
+        assert_eq!(partial[2], full[2]);
+    }
+
+    #[test]
+    fn cut_weight_counts_each_edge_once() {
+        let mut b = GraphBuilder::with_nodes(4);
+        b.add_edge(0, 1, 2.0).add_edge(1, 2, 3.0).add_edge(2, 3, 4.0);
+        let g = b.build();
+        // Split {0,1} | {2,3}: only edge (1,2) crosses.
+        let cut = cut_weight(&g, &[0, 0, 1, 1]);
+        assert!((cut - 3.0).abs() < 1e-12);
+        assert_eq!(cut_edges(&g, &[0, 0, 1, 1]), 1);
+        // All same machine: no cut.
+        assert_eq!(cut_weight(&g, &[0, 0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn degree_stats_path() {
+        let g = two_components();
+        let s = degree_stats(&g);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 2);
+    }
+
+    #[test]
+    fn diameter_of_path() {
+        let mut b = GraphBuilder::with_nodes(5);
+        for i in 0..4 {
+            b.add_edge(i, i + 1, 1.0);
+        }
+        let g = b.build();
+        assert_eq!(approx_diameter(&g, 5), 4);
+    }
+}

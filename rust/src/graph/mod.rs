@@ -1,0 +1,355 @@
+//! Weighted undirected graphs of logical processes (LPs).
+//!
+//! The network model under simulation is represented as an undirected
+//! graph `G = (V, E)` with node weights `b_i` (computational load of LP
+//! `i`) and edge weights `c_ij` (traffic / potential rollback-delay cost
+//! between LPs `i` and `j`) — paper §3. Storage is CSR (compressed sparse
+//! rows) with both directions of every undirected edge materialized, so
+//! `neighbors(i)` is a contiguous slice: the refinement hot loop iterates
+//! it with no hashing or pointer chasing.
+
+pub mod generators;
+pub mod io;
+pub mod metrics;
+
+/// Node identifier (dense `0..n`).
+pub type NodeId = usize;
+
+/// A weighted undirected graph in CSR form.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// CSR row offsets, length `n + 1`.
+    offsets: Vec<usize>,
+    /// Flattened adjacency: target node of each half-edge.
+    targets: Vec<NodeId>,
+    /// Edge weight `c_ij` aligned with `targets`.
+    edge_weights: Vec<f64>,
+    /// Node weights `b_i`.
+    node_weights: Vec<f64>,
+    /// Optional 2-D coordinates (geometric generators populate these).
+    coords: Option<Vec<(f64, f64)>>,
+}
+
+/// Builder that accumulates undirected edges, then freezes into CSR.
+#[derive(Debug, Default, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(NodeId, NodeId, f64)>,
+    node_weights: Vec<f64>,
+    coords: Option<Vec<(f64, f64)>>,
+}
+
+impl GraphBuilder {
+    pub fn with_nodes(n: usize) -> Self {
+        GraphBuilder { n, edges: Vec::new(), node_weights: vec![1.0; n], coords: None }
+    }
+
+    /// Add an undirected edge `{u, v}` with weight `w`. Self-loops are
+    /// rejected; duplicate edges are merged (weights summed) at freeze.
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, w: f64) -> &mut Self {
+        assert!(u != v, "self-loop {u}");
+        assert!(u < self.n && v < self.n, "edge ({u},{v}) out of range n={}", self.n);
+        assert!(w >= 0.0, "negative edge weight");
+        self.edges.push((u.min(v), u.max(v), w));
+        self
+    }
+
+    pub fn set_node_weight(&mut self, u: NodeId, w: f64) -> &mut Self {
+        assert!(w >= 0.0, "negative node weight");
+        self.node_weights[u] = w;
+        self
+    }
+
+    pub fn set_coords(&mut self, coords: Vec<(f64, f64)>) -> &mut Self {
+        assert_eq!(coords.len(), self.n);
+        self.coords = Some(coords);
+        self
+    }
+
+    /// Whether the edge `{u, v}` was already added (linear scan — only
+    /// used by generators on small candidate sets).
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        let (a, b) = (u.min(v), u.max(v));
+        self.edges.iter().any(|&(x, y, _)| x == a && y == b)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.n
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Freeze into CSR, merging duplicate edges by summing weights.
+    pub fn build(mut self) -> Graph {
+        // Merge duplicates.
+        self.edges.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        self.edges.dedup_by(|next, prev| {
+            if next.0 == prev.0 && next.1 == prev.1 {
+                prev.2 += next.2;
+                true
+            } else {
+                false
+            }
+        });
+
+        let n = self.n;
+        let mut degree = vec![0usize; n];
+        for &(u, v, _) in &self.edges {
+            degree[u] += 1;
+            degree[v] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let m2 = offsets[n];
+        let mut targets = vec![0usize; m2];
+        let mut edge_weights = vec![0.0f64; m2];
+        let mut cursor = offsets.clone();
+        for &(u, v, w) in &self.edges {
+            targets[cursor[u]] = v;
+            edge_weights[cursor[u]] = w;
+            cursor[u] += 1;
+            targets[cursor[v]] = u;
+            edge_weights[cursor[v]] = w;
+            cursor[v] += 1;
+        }
+        // Sort each row by target for deterministic iteration + binary search.
+        for i in 0..n {
+            let (s, e) = (offsets[i], offsets[i + 1]);
+            let mut row: Vec<(usize, f64)> =
+                targets[s..e].iter().copied().zip(edge_weights[s..e].iter().copied()).collect();
+            row.sort_unstable_by_key(|&(t, _)| t);
+            for (k, (t, w)) in row.into_iter().enumerate() {
+                targets[s + k] = t;
+                edge_weights[s + k] = w;
+            }
+        }
+        Graph {
+            offsets,
+            targets,
+            edge_weights,
+            node_weights: self.node_weights,
+            coords: self.coords,
+        }
+    }
+}
+
+impl Graph {
+    /// Number of nodes.
+    pub fn node_count(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Degree of node `u`.
+    pub fn degree(&self, u: NodeId) -> usize {
+        self.offsets[u + 1] - self.offsets[u]
+    }
+
+    /// Neighbor node ids of `u` (sorted ascending).
+    #[inline]
+    pub fn neighbors(&self, u: NodeId) -> &[NodeId] {
+        &self.targets[self.offsets[u]..self.offsets[u + 1]]
+    }
+
+    /// `(neighbor, c_uv)` pairs for `u`.
+    #[inline]
+    pub fn neighbors_weighted(&self, u: NodeId) -> impl Iterator<Item = (NodeId, f64)> + '_ {
+        let s = self.offsets[u];
+        let e = self.offsets[u + 1];
+        self.targets[s..e].iter().copied().zip(self.edge_weights[s..e].iter().copied())
+    }
+
+    /// Edge weight `c_uv`, or `None` if `{u,v}` is not an edge.
+    pub fn edge_weight(&self, u: NodeId, v: NodeId) -> Option<f64> {
+        let s = self.offsets[u];
+        let e = self.offsets[u + 1];
+        let row = &self.targets[s..e];
+        row.binary_search(&v).ok().map(|k| self.edge_weights[s + k])
+    }
+
+    /// Node weight `b_u`.
+    #[inline]
+    pub fn node_weight(&self, u: NodeId) -> f64 {
+        self.node_weights[u]
+    }
+
+    /// All node weights.
+    pub fn node_weights(&self) -> &[f64] {
+        &self.node_weights
+    }
+
+    /// Sum of all node weights `B = Σ_i b_i`.
+    pub fn total_node_weight(&self) -> f64 {
+        self.node_weights.iter().sum()
+    }
+
+    /// Sum of incident edge weights `S_u = Σ_j c_uj`.
+    pub fn incident_weight(&self, u: NodeId) -> f64 {
+        let s = self.offsets[u];
+        let e = self.offsets[u + 1];
+        self.edge_weights[s..e].iter().sum()
+    }
+
+    /// Replace all node weights (dynamic re-weighting between refinement
+    /// epochs, §6.1).
+    pub fn set_node_weights(&mut self, w: &[f64]) {
+        assert_eq!(w.len(), self.node_count());
+        assert!(w.iter().all(|x| *x >= 0.0), "negative node weight");
+        self.node_weights.copy_from_slice(w);
+    }
+
+    /// Set node weight of a single node.
+    pub fn set_node_weight(&mut self, u: NodeId, w: f64) {
+        assert!(w >= 0.0);
+        self.node_weights[u] = w;
+    }
+
+    /// Replace the weight of edge `{u,v}` (both directions). Returns
+    /// `false` if the edge does not exist.
+    pub fn set_edge_weight(&mut self, u: NodeId, v: NodeId, w: f64) -> bool {
+        assert!(w >= 0.0);
+        let mut found = false;
+        for (a, b) in [(u, v), (v, u)] {
+            let s = self.offsets[a];
+            let e = self.offsets[a + 1];
+            if let Ok(k) = self.targets[s..e].binary_search(&b) {
+                self.edge_weights[s + k] = w;
+                found = true;
+            }
+        }
+        found
+    }
+
+    /// Coordinates if the generator attached them.
+    pub fn coords(&self) -> Option<&[(f64, f64)]> {
+        self.coords.as_deref()
+    }
+
+    /// Iterate undirected edges `(u, v, w)` with `u < v`.
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId, f64)> + '_ {
+        (0..self.node_count()).flat_map(move |u| {
+            self.neighbors_weighted(u)
+                .filter(move |&(v, _)| u < v)
+                .map(move |(v, w)| (u, v, w))
+        })
+    }
+
+    /// Dense adjacency matrix (row-major `n*n`), used to feed the PJRT
+    /// cost-evaluation artifact and the pure-Rust dense oracle.
+    pub fn dense_adjacency(&self) -> Vec<f64> {
+        let n = self.node_count();
+        let mut a = vec![0.0f64; n * n];
+        for (u, v, w) in self.edges() {
+            a[u * n + v] = w;
+            a[v * n + u] = w;
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        let mut b = GraphBuilder::with_nodes(3);
+        b.add_edge(0, 1, 1.0).add_edge(1, 2, 2.0).add_edge(0, 2, 3.0);
+        b.set_node_weight(0, 5.0);
+        b.build()
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = triangle();
+        assert_eq!(g.node_count(), 3);
+        assert_eq!(g.edge_count(), 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn edge_weights_symmetric() {
+        let g = triangle();
+        assert_eq!(g.edge_weight(0, 1), Some(1.0));
+        assert_eq!(g.edge_weight(1, 0), Some(1.0));
+        assert_eq!(g.edge_weight(2, 0), Some(3.0));
+        assert_eq!(g.edge_weight(0, 0), None);
+    }
+
+    #[test]
+    fn node_weights() {
+        let g = triangle();
+        assert_eq!(g.node_weight(0), 5.0);
+        assert_eq!(g.node_weight(1), 1.0);
+        assert!((g.total_node_weight() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incident_weight_sums() {
+        let g = triangle();
+        assert!((g.incident_weight(0) - 4.0).abs() < 1e-12);
+        assert!((g.incident_weight(1) - 3.0).abs() < 1e-12);
+        assert!((g.incident_weight(2) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_edges_merge() {
+        let mut b = GraphBuilder::with_nodes(2);
+        b.add_edge(0, 1, 1.0).add_edge(1, 0, 2.5);
+        let g = b.build();
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.edge_weight(0, 1), Some(3.5));
+    }
+
+    #[test]
+    fn set_edge_weight_both_directions() {
+        let mut g = triangle();
+        assert!(g.set_edge_weight(1, 2, 9.0));
+        assert_eq!(g.edge_weight(2, 1), Some(9.0));
+        assert!(!g.set_edge_weight(0, 0, 1.0) || true); // self lookup is a no-edge
+    }
+
+    #[test]
+    fn edges_iterator_each_once() {
+        let g = triangle();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es.len(), 3);
+        assert!(es.iter().all(|&(u, v, _)| u < v));
+    }
+
+    #[test]
+    fn dense_adjacency_round_trip() {
+        let g = triangle();
+        let a = g.dense_adjacency();
+        assert_eq!(a.len(), 9);
+        assert_eq!(a[0 * 3 + 1], 1.0);
+        assert_eq!(a[1 * 3 + 0], 1.0);
+        assert_eq!(a[0 * 3 + 0], 0.0);
+        assert_eq!(a[2 * 3 + 0], 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_rejected() {
+        let mut b = GraphBuilder::with_nodes(2);
+        b.add_edge(1, 1, 1.0);
+    }
+
+    #[test]
+    fn dynamic_reweighting() {
+        let mut g = triangle();
+        g.set_node_weights(&[1.0, 2.0, 3.0]);
+        assert_eq!(g.node_weight(2), 3.0);
+        g.set_node_weight(0, 7.0);
+        assert_eq!(g.node_weight(0), 7.0);
+    }
+}

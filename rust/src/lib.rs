@@ -1,0 +1,31 @@
+//! # GTIP — Game Theoretic Iterative Partitioning
+//!
+//! A reproduction of Kurve, Griffin, Miller & Kesidis, *"Game Theoretic
+//! Iterative Partitioning for Dynamic Load Balancing in Distributed
+//! Network Simulation"* (ACM TOMACS, 2011), built as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: the
+//!   node-as-player partitioning game ([`game`]), the distributed
+//!   machine-actor refinement protocol ([`coordinator`]), the optimistic
+//!   PDES archetype it load-balances ([`sim`]), graph substrates
+//!   ([`graph`]) and the experiment harnesses ([`experiments`]).
+//! * **Layer 2/1 (python/compile)** — a JAX + Pallas dense cost-matrix
+//!   evaluator, AOT-lowered to HLO text and executed from Rust through
+//!   PJRT ([`runtime`]). Python never runs at partitioning time.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md`
+//! for the paper-vs-measured record.
+
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod game;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,16 @@
+//! `gtip` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//! * `partition`  — generate/load a graph, run initial partitioning +
+//!   iterative refinement, report global costs.
+//! * `simulate`   — run the optimistic PDES archetype with dynamic
+//!   refinement and report simulation time + machine load traces.
+//! * `experiment` — regenerate a paper table/figure
+//!   (`table1 | batch | fig7 | fig8 | fig9 | fig10 | all`).
+//! * `artifacts`  — verify the PJRT artifacts load and agree with the
+//!   native evaluator.
+
+fn main() {
+    let code = gtip::experiments::cli::main();
+    std::process::exit(code);
+}

@@ -1,0 +1,198 @@
+//! Baseline partitioners the paper's method is compared against.
+//!
+//! * [`random_partition`] — uniform random assignment.
+//! * [`round_robin`] — node `i` to machine `i mod K`.
+//! * [`greedy_load`] — classical longest-processing-time greedy load
+//!   balancing (ignores edges entirely): nodes in decreasing weight order
+//!   to the machine with least normalized load. The "load-only" end of
+//!   the spectrum.
+//! * [`cut_only_gain`] — a Nandy–Loucks-style iterative refinement whose
+//!   node gain minimizes **only the cut** (no computational-load term),
+//!   with each node allowed to migrate at most once (their "forced
+//!   convergence"). The paper (§2) singles this out as the closest prior
+//!   work; it is the "cut-only" end of the spectrum.
+
+use crate::graph::{Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+use crate::util::rng::Pcg32;
+
+/// Uniform random assignment.
+pub fn random_partition(g: &Graph, k: usize, rng: &mut Pcg32) -> Partition {
+    let assignment: Vec<MachineId> = (0..g.node_count()).map(|_| rng.index(k)).collect();
+    Partition::from_assignment(g, k, assignment)
+}
+
+/// Round-robin assignment.
+pub fn round_robin(g: &Graph, k: usize) -> Partition {
+    let assignment: Vec<MachineId> = (0..g.node_count()).map(|i| i % k).collect();
+    Partition::from_assignment(g, k, assignment)
+}
+
+/// Greedy LPT load balancing on node weights, speed-aware, edge-blind.
+pub fn greedy_load(g: &Graph, machines: &MachineConfig) -> Partition {
+    let k = machines.count();
+    let mut order: Vec<NodeId> = (0..g.node_count()).collect();
+    order.sort_by(|&a, &b| {
+        g.node_weight(b).partial_cmp(&g.node_weight(a)).expect("finite weights")
+    });
+    let mut loads = vec![0.0f64; k];
+    let mut assignment = vec![0usize; g.node_count()];
+    for i in order {
+        // Machine minimizing post-assignment normalized load.
+        let m = (0..k)
+            .min_by(|&a, &b| {
+                let la = (loads[a] + g.node_weight(i)) / machines.speed(a);
+                let lb = (loads[b] + g.node_weight(i)) / machines.speed(b);
+                la.partial_cmp(&lb).expect("finite")
+            })
+            .expect("k >= 1");
+        assignment[i] = m;
+        loads[m] += g.node_weight(i);
+    }
+    Partition::from_assignment(g, k, assignment)
+}
+
+/// Result of the cut-only refinement baseline.
+#[derive(Debug, Clone)]
+pub struct CutOnlyReport {
+    pub moves: usize,
+    pub initial_cut: f64,
+    pub final_cut: f64,
+}
+
+/// Nandy–Loucks-style cut-only iterative improvement: repeatedly move the
+/// node with the largest positive cut gain (external − internal edge
+/// weight toward its best machine), each node at most once ("forced
+/// convergence"). Ignores node weights / machine loads entirely.
+pub fn cut_only_gain(g: &Graph, part: &mut Partition) -> CutOnlyReport {
+    let k = part.machine_count();
+    let initial_cut = crate::graph::metrics::cut_weight(g, part.assignment());
+    let n = g.node_count();
+    let mut migrated = vec![false; n];
+    let mut moves = 0;
+
+    loop {
+        // Find the node with the best (largest) positive gain.
+        let mut best: Option<(f64, NodeId, MachineId)> = None;
+        for i in 0..n {
+            if migrated[i] {
+                continue;
+            }
+            let cur = part.machine_of(i);
+            // adj[k] = weight of i's edges into machine k.
+            let mut adj = vec![0.0f64; k];
+            for (j, c) in g.neighbors_weighted(i) {
+                adj[part.machine_of(j)] += c;
+            }
+            for m in 0..k {
+                if m == cur {
+                    continue;
+                }
+                // Gain = reduction in cut if i moves to m.
+                let gain = adj[m] - adj[cur];
+                if gain > 1e-12 && best.map(|(bg, _, _)| gain > bg).unwrap_or(true) {
+                    best = Some((gain, i, m));
+                }
+            }
+        }
+        match best {
+            Some((_, i, m)) => {
+                part.transfer(g, i, m);
+                migrated[i] = true;
+                moves += 1;
+            }
+            None => break,
+        }
+    }
+    let final_cut = crate::graph::metrics::cut_weight(g, part.assignment());
+    CutOnlyReport { moves, initial_cut, final_cut }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::graph::metrics::cut_weight;
+
+    fn graph(seed: u64) -> Graph {
+        let mut rng = Pcg32::new(seed);
+        table1_graph(80, 3, 6, WeightModel::default(), &mut rng)
+    }
+
+    #[test]
+    fn random_partition_valid() {
+        let g = graph(1);
+        let mut rng = Pcg32::new(2);
+        let p = random_partition(&g, 5, &mut rng);
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn round_robin_counts_even() {
+        let g = graph(2);
+        let p = round_robin(&g, 4);
+        p.validate(&g).unwrap();
+        let counts = p.counts();
+        assert!(counts.iter().max().unwrap() - counts.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn greedy_load_balances_normalized_loads() {
+        let g = graph(3);
+        let machines = MachineConfig::from_speeds(&[1.0, 2.0, 3.0, 3.0, 1.0]);
+        let p = greedy_load(&g, &machines);
+        p.validate(&g).unwrap();
+        // Normalized loads should be within ~2 max node weights of each other.
+        let max_b = (0..80).map(|i| g.node_weight(i)).fold(0.0f64, f64::max);
+        let norm: Vec<f64> = (0..5).map(|k| p.load(k) / machines.speed(k)).collect();
+        let spread = norm.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+            - norm.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+        assert!(
+            spread <= 2.5 * max_b / machines.speed(0),
+            "spread {spread} too large (max_b {max_b}; norm {norm:?})"
+        );
+    }
+
+    #[test]
+    fn cut_only_reduces_cut_monotonically() {
+        let g = graph(4);
+        let mut rng = Pcg32::new(5);
+        let mut p = random_partition(&g, 4, &mut rng);
+        let before = cut_weight(&g, p.assignment());
+        let report = cut_only_gain(&g, &mut p);
+        let after = cut_weight(&g, p.assignment());
+        assert!((report.initial_cut - before).abs() < 1e-9);
+        assert!((report.final_cut - after).abs() < 1e-9);
+        assert!(after <= before);
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn cut_only_each_node_moves_at_most_once() {
+        let g = graph(6);
+        let mut rng = Pcg32::new(7);
+        let mut p = random_partition(&g, 4, &mut rng);
+        let report = cut_only_gain(&g, &mut p);
+        assert!(report.moves <= g.node_count());
+    }
+
+    #[test]
+    fn cut_only_ignores_load_balance() {
+        // A clique collapses onto one machine under cut-only refinement —
+        // demonstrating exactly the deficiency the paper calls out (§2).
+        let mut b = crate::graph::GraphBuilder::with_nodes(8);
+        for u in 0..8 {
+            for v in (u + 1)..8 {
+                b.add_edge(u, v, 1.0);
+            }
+        }
+        let g = b.build();
+        let mut p = Partition::from_assignment(&g, 2, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        let _ = cut_only_gain(&g, &mut p);
+        let counts = p.counts();
+        assert!(
+            counts.contains(&0) || counts.iter().any(|&c| c >= 7),
+            "clique should collapse to one side: {counts:?}"
+        );
+    }
+}

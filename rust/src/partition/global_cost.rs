@@ -1,0 +1,148 @@
+//! Global (social-welfare / potential) cost functions.
+//!
+//! * `C0` — the potential of Framework A (Thm 3.1): the sum of all node
+//!   costs `C_0(r) = Σ_i C_i(r_i, r_{-i})`. Closed form per machine:
+//!   `Σ_k (L_k² − Σ_{i∈k} b_i²) / w_k + μ · cut`, since each cut edge is
+//!   paid `μ/2` by *both* endpoints.
+//! * `C̃0` — the centralized Lagrangian of Framework B (eq. 8): squared
+//!   speed-normalized load deviation plus a `(μ/2)·cut` term — reading
+//!   eq. 8's pair sum over unordered pairs, the reading under which
+//!   Thm 5.1's exact identity `ΔC̃0 = C̃_i(n) − C̃_i(m)` holds
+//!   (verified by unit + property tests). I.e. the cut term is:
+//!   `Σ_k (L_k / w_k − B)² + μ · cut`.
+//!
+//! Both are evaluated from scratch here (O(N + |E|)); the refinement
+//! engine tracks them incrementally and unit tests assert agreement.
+
+use crate::graph::{metrics, Graph};
+use crate::partition::{MachineConfig, Partition};
+
+/// Framework A's potential `C_0(r)` (Thm 3.1).
+pub fn c0(graph: &Graph, machines: &MachineConfig, part: &Partition, mu: f64) -> f64 {
+    let k = part.machine_count();
+    assert_eq!(machines.count(), k);
+    // Σ_{i∈k} b_i² per machine.
+    let mut sq = vec![0.0f64; k];
+    for i in 0..graph.node_count() {
+        let b = graph.node_weight(i);
+        sq[part.machine_of(i)] += b * b;
+    }
+    let mut comp = 0.0;
+    for m in 0..k {
+        let l = part.load(m);
+        comp += (l * l - sq[m]) / machines.speed(m);
+    }
+    comp + mu * metrics::cut_weight(graph, part.assignment())
+}
+
+/// Framework B's centralized cost `C̃_0(X)` (eq. 8).
+pub fn c0_tilde(graph: &Graph, machines: &MachineConfig, part: &Partition, mu: f64) -> f64 {
+    let k = part.machine_count();
+    assert_eq!(machines.count(), k);
+    let b_total = graph.total_node_weight();
+    let mut dev = 0.0;
+    for m in 0..k {
+        let d = part.load(m) / machines.speed(m) - b_total;
+        dev += d * d;
+    }
+    dev + mu * 0.5 * metrics::cut_weight(graph, part.assignment())
+}
+
+/// Both global costs at once (the experiment harnesses report both for
+/// each framework, as Table I does).
+pub fn both(graph: &Graph, machines: &MachineConfig, part: &Partition, mu: f64) -> (f64, f64) {
+    (c0(graph, machines, part, mu), c0_tilde(graph, machines, part, mu))
+}
+
+/// Naive O(N²)-style `C_0` computed literally from the definition
+/// `Σ_i C_i` — the test oracle for the closed form above.
+pub fn c0_naive(graph: &Graph, machines: &MachineConfig, part: &Partition, mu: f64) -> f64 {
+    let n = graph.node_count();
+    let mut total = 0.0;
+    for i in 0..n {
+        let ri = part.machine_of(i);
+        let bi = graph.node_weight(i);
+        // Σ_{j≠i, r_j=r_i} b_j = L_{r_i} − b_i
+        let same_load = part.load(ri) - bi;
+        let mut cut = 0.0;
+        for (j, c) in graph.neighbors_weighted(i) {
+            if part.machine_of(j) != ri {
+                cut += c;
+            }
+        }
+        total += bi / machines.speed(ri) * same_load + mu / 2.0 * cut;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::util::rng::Pcg32;
+
+    fn setup(seed: u64) -> (Graph, MachineConfig, Partition) {
+        let mut rng = Pcg32::new(seed);
+        let g = table1_graph(60, 3, 6, WeightModel::default(), &mut rng);
+        let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let assignment: Vec<usize> = (0..60).map(|_| rng.index(5)).collect();
+        let p = Partition::from_assignment(&g, 5, assignment);
+        (g, machines, p)
+    }
+
+    #[test]
+    fn closed_form_matches_naive() {
+        for seed in 0..5 {
+            let (g, m, p) = setup(seed);
+            let fast = c0(&g, &m, &p, 8.0);
+            let slow = c0_naive(&g, &m, &p, 8.0);
+            assert!(
+                (fast - slow).abs() < 1e-6 * (1.0 + fast.abs()),
+                "seed {seed}: {fast} vs {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_mu_drops_cut_term() {
+        let (g, m, p) = setup(1);
+        let with = c0(&g, &m, &p, 8.0);
+        let without = c0(&g, &m, &p, 0.0);
+        let cut = crate::graph::metrics::cut_weight(&g, p.assignment());
+        assert!((with - without - 8.0 * cut).abs() < 1e-9);
+    }
+
+    #[test]
+    fn c0_tilde_zero_at_perfect_balance_no_cut() {
+        // Two disconnected-ish nodes (zero-weight bridging edge), equal
+        // machines, one node each: deviation and weighted cut both 0.
+        let mut b = crate::graph::GraphBuilder::with_nodes(2);
+        b.add_edge(0, 1, 0.0);
+        b.set_node_weight(0, 5.0);
+        b.set_node_weight(1, 5.0);
+        let g = b.build();
+        let m = MachineConfig::homogeneous(2);
+        let p = Partition::from_assignment(&g, 2, vec![0, 1]);
+        // L_k / w_k = 5 / 0.5 = 10 = B for both machines.
+        assert!(c0_tilde(&g, &m, &p, 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn c0_tilde_penalizes_imbalance() {
+        let (g, m, _) = setup(2);
+        let balancedish = Partition::from_assignment(&g, 5, (0..60).map(|i| i % 5).collect());
+        let lumped = Partition::all_on_machine(&g, 5, 0);
+        assert!(
+            c0_tilde(&g, &m, &lumped, 0.0) > c0_tilde(&g, &m, &balancedish, 0.0),
+            "lumping everything on one machine must cost more"
+        );
+    }
+
+    #[test]
+    fn both_returns_consistent_pair() {
+        let (g, m, p) = setup(3);
+        let (a, b) = both(&g, &m, &p, 8.0);
+        assert_eq!(a, c0(&g, &m, &p, 8.0));
+        assert_eq!(b, c0_tilde(&g, &m, &p, 8.0));
+    }
+}

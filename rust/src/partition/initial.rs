@@ -1,0 +1,369 @@
+//! Initial partitioning (paper Appendix A).
+//!
+//! Because node/edge weights are unknown and dynamic before the
+//! simulation starts, the paper seeds the iterative game with a simple
+//! structural partition: choose K **focal nodes** far apart in geodesic
+//! distance (eq. 11, via an iterated local-improvement heuristic over
+//! multiple restarts), then let machines expand hop-by-hop from their
+//! focal nodes, claiming unowned nodes — with random waits + a semaphore
+//! arbitrating contention in the real distributed setting (modeled here
+//! by randomized round-robin claim order). Unit node/edge weights are
+//! assumed during this phase, exactly as §4.1 specifies.
+//!
+//! Also implements **Theorem A.1**: the expected BFS-cluster growth law
+//! on Erdős–Rényi graphs used to size focal-node separation.
+
+use crate::graph::{metrics, Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+use crate::util::rng::Pcg32;
+
+/// Options for focal-node selection.
+#[derive(Debug, Clone)]
+pub struct FocalOptions {
+    /// Independent restarts of the local-improvement heuristic; the best
+    /// focal set (by max-min geodesic separation) wins.
+    pub restarts: usize,
+    /// Cap on improvement passes per restart.
+    pub max_passes: usize,
+}
+
+impl Default for FocalOptions {
+    fn default() -> Self {
+        FocalOptions { restarts: 4, max_passes: 16 }
+    }
+}
+
+/// Minimum pairwise geodesic distance of a candidate focal set.
+fn min_pairwise_distance(g: &Graph, focals: &[NodeId]) -> usize {
+    let mut best = usize::MAX;
+    for (idx, &f) in focals.iter().enumerate() {
+        let others: Vec<NodeId> = focals[idx + 1..].to_vec();
+        if others.is_empty() {
+            continue;
+        }
+        let d = metrics::bfs_distances_to(g, f, &others);
+        for &o in &others {
+            best = best.min(d[o]);
+        }
+    }
+    best
+}
+
+/// Choose K focal nodes approximately maximizing the minimum pairwise
+/// geodesic distance (paper eq. 11): random init, then round-robin local
+/// improvement where each machine moves its focal node to a neighbor if
+/// that increases its own min-distance to the other focal nodes;
+/// iterated to a fixed point, over several restarts.
+pub fn choose_focal_nodes(
+    g: &Graph,
+    k: usize,
+    options: &FocalOptions,
+    rng: &mut Pcg32,
+) -> Vec<NodeId> {
+    let n = g.node_count();
+    assert!(k >= 1 && k <= n, "need 1 <= K <= N");
+    if k == 1 {
+        return vec![rng.index(n)];
+    }
+    let mut best_set: Vec<NodeId> = Vec::new();
+    let mut best_score = 0usize;
+
+    for _ in 0..options.restarts.max(1) {
+        let mut focals = rng.sample_indices(n, k);
+        let mut improved = true;
+        let mut passes = 0;
+        while improved && passes < options.max_passes {
+            improved = false;
+            passes += 1;
+            for idx in 0..k {
+                let others: Vec<NodeId> =
+                    focals.iter().enumerate().filter(|&(j, _)| j != idx).map(|(_, &f)| f).collect();
+                // Current min distance from focal idx to the others.
+                let d_cur = metrics::bfs_distances_to(g, focals[idx], &others);
+                let cur_min = others.iter().map(|&o| d_cur[o]).min().unwrap_or(usize::MAX);
+                // Try neighbors of the current focal node.
+                let mut best_move: Option<(usize, NodeId)> = None;
+                for &cand in g.neighbors(focals[idx]) {
+                    if focals.contains(&cand) {
+                        continue;
+                    }
+                    let d = metrics::bfs_distances_to(g, cand, &others);
+                    let cand_min = others.iter().map(|&o| d[o]).min().unwrap_or(usize::MAX);
+                    if cand_min > cur_min
+                        && best_move.map(|(m, _)| cand_min > m).unwrap_or(true)
+                    {
+                        best_move = Some((cand_min, cand));
+                    }
+                }
+                if let Some((_, cand)) = best_move {
+                    focals[idx] = cand;
+                    improved = true;
+                }
+            }
+        }
+        let score = min_pairwise_distance(g, &focals);
+        if score > best_score || best_set.is_empty() {
+            best_score = score;
+            best_set = focals;
+        }
+    }
+    best_set
+}
+
+/// Hop-by-hop expansion from focal nodes (App. A phase 2): each machine
+/// claims the unowned neighbors of its current frontier; machines take
+/// hops in a randomly shuffled order per round, which models the random
+/// wait + semaphore contention arbitration of the distributed original.
+/// Any node left unreached (disconnected corner case) is assigned to the
+/// least-loaded machine. Unit weights are used, per §4.1.
+pub fn expand_from_focals(
+    g: &Graph,
+    k: usize,
+    focals: &[NodeId],
+    rng: &mut Pcg32,
+) -> Vec<MachineId> {
+    assert_eq!(focals.len(), k);
+    let n = g.node_count();
+    let mut owner: Vec<Option<MachineId>> = vec![None; n];
+    let mut frontier: Vec<Vec<NodeId>> = vec![Vec::new(); k];
+    for (m, &f) in focals.iter().enumerate() {
+        if owner[f].is_none() {
+            owner[f] = Some(m);
+            frontier[m].push(f);
+        }
+    }
+    let mut order: Vec<MachineId> = (0..k).collect();
+    let owned = owner.iter().filter(|o| o.is_some()).count();
+    let mut remaining = n - owned;
+
+    while remaining > 0 {
+        let mut any_claimed = false;
+        rng.shuffle(&mut order); // random wait ≈ random machine order
+        for &m in &order {
+            let mut next_frontier = Vec::new();
+            for &u in &frontier[m] {
+                for &v in g.neighbors(u) {
+                    if owner[v].is_none() {
+                        owner[v] = Some(m); // semaphore: first claim wins
+                        next_frontier.push(v);
+                        remaining -= 1;
+                        any_claimed = true;
+                    }
+                }
+            }
+            frontier[m] = next_frontier;
+        }
+        if !any_claimed {
+            break; // disconnected remainder
+        }
+    }
+    // Disconnected remainder → least-populated machine.
+    let mut counts = vec![0usize; k];
+    for o in owner.iter().flatten() {
+        counts[*o] += 1;
+    }
+    owner
+        .into_iter()
+        .map(|o| {
+            o.unwrap_or_else(|| {
+                let m = counts
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, c)| *c)
+                    .map(|(m, _)| m)
+                    .expect("k >= 1");
+                counts[m] += 1;
+                m
+            })
+        })
+        .collect()
+}
+
+/// Full initial partitioning: focal selection + expansion (App. A).
+pub fn grow_partition(g: &Graph, machines: &MachineConfig, rng: &mut Pcg32) -> Partition {
+    let k = machines.count();
+    let focals = choose_focal_nodes(g, k, &FocalOptions::default(), rng);
+    let assignment = expand_from_focals(g, k, &focals, rng);
+    Partition::from_assignment(g, k, assignment)
+}
+
+/// Theorem A.1: expected BFS-cluster sizes on an Erdős–Rényi G(|V|, p)
+/// graph. Returns `N_0, N_1, ..., N_hops` where
+/// `N_{k+1} = N_k + (|V| − N_k)(1 − (1−p)^{N_k − N_{k−1}})`, `N_1 = 1`.
+pub fn er_cluster_growth(v: usize, p: f64, hops: usize) -> Vec<f64> {
+    assert!((0.0..=1.0).contains(&p));
+    let v = v as f64;
+    let mut out = Vec::with_capacity(hops + 1);
+    // N_0 = 0 (nothing before the seed), N_1 = 1 (the seed itself).
+    out.push(0.0);
+    if hops == 0 {
+        return out;
+    }
+    out.push(1.0);
+    for k in 1..hops {
+        let nk = out[k];
+        let nk1 = out[k - 1];
+        let newly = nk - nk1;
+        let next = nk + (v - nk) * (1.0 - (1.0 - p).powf(newly));
+        out.push(next.min(v));
+    }
+    out
+}
+
+/// Mean number of hops for an ER BFS cluster to cover `target` nodes,
+/// per the Thm A.1 recursion (used to size focal separation `2·N_{|V|/K}`).
+pub fn er_hops_to_cover(v: usize, p: f64, target: f64) -> usize {
+    let growth = er_cluster_growth(v, p, 4 * (v.max(2)).ilog2() as usize + 8);
+    for (hop, &n) in growth.iter().enumerate() {
+        if n >= target {
+            return hop;
+        }
+    }
+    growth.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{erdos_renyi, preferential_attachment, table1_graph, WeightModel};
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn focal_nodes_distinct_and_spread_on_path() {
+        // Path graph: optimal 2 focal nodes are the endpoints.
+        let mut b = GraphBuilder::with_nodes(20);
+        for i in 0..19 {
+            b.add_edge(i, i + 1, 1.0);
+        }
+        let g = b.build();
+        let mut rng = Pcg32::new(1);
+        let focals =
+            choose_focal_nodes(&g, 2, &FocalOptions { restarts: 8, max_passes: 64 }, &mut rng);
+        assert_eq!(focals.len(), 2);
+        assert_ne!(focals[0], focals[1]);
+        let d = metrics::bfs_distances(&g, focals[0]);
+        assert!(
+            d[focals[1]] >= 12,
+            "focal nodes too close on path: dist {}",
+            d[focals[1]]
+        );
+    }
+
+    #[test]
+    fn expansion_covers_all_nodes() {
+        let mut rng = Pcg32::new(2);
+        let g = table1_graph(120, 3, 6, WeightModel::default(), &mut rng);
+        let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let p = grow_partition(&g, &machines, &mut rng);
+        p.validate(&g).unwrap();
+        // Every machine got at least one node on a connected 120-node graph.
+        for k in 0..5 {
+            assert!(p.count(k) > 0, "machine {k} got no nodes");
+        }
+    }
+
+    #[test]
+    fn expansion_roughly_balances_counts() {
+        let mut rng = Pcg32::new(3);
+        let g = preferential_attachment(400, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let p = grow_partition(&g, &machines, &mut rng);
+        let counts = p.counts();
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        // Hop-growth is not perfectly equitable, but should be same-order.
+        assert!(max / min.max(1.0) < 20.0, "counts wildly unbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn expansion_produces_connected_regions_on_grid() {
+        // 6x6 grid, 4 machines: claimed regions should each be connected.
+        let n = 36;
+        let mut b = GraphBuilder::with_nodes(n);
+        for r in 0..6 {
+            for c in 0..6 {
+                let u = r * 6 + c;
+                if c + 1 < 6 {
+                    b.add_edge(u, u + 1, 1.0);
+                }
+                if r + 1 < 6 {
+                    b.add_edge(u, u + 6, 1.0);
+                }
+            }
+        }
+        let g = b.build();
+        let mut rng = Pcg32::new(4);
+        let focals = choose_focal_nodes(&g, 4, &FocalOptions::default(), &mut rng);
+        let assign = expand_from_focals(&g, 4, &focals, &mut rng);
+        // Check per-machine connectivity via BFS within the machine.
+        for m in 0..4 {
+            let members: Vec<usize> = (0..n).filter(|&u| assign[u] == m).collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut seen = vec![false; n];
+            let mut queue = std::collections::VecDeque::new();
+            seen[members[0]] = true;
+            queue.push_back(members[0]);
+            let mut reached = 1;
+            while let Some(u) = queue.pop_front() {
+                for &v in g.neighbors(u) {
+                    if assign[v] == m && !seen[v] {
+                        seen[v] = true;
+                        reached += 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            assert_eq!(reached, members.len(), "machine {m} region disconnected");
+        }
+    }
+
+    #[test]
+    fn thm_a1_growth_monotone_and_bounded() {
+        let growth = er_cluster_growth(1000, 0.01, 20);
+        for w in growth.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "growth not monotone: {w:?}");
+        }
+        assert!(growth.iter().all(|&n| n <= 1000.0 + 1e-9));
+        // With p=0.01, mean degree ~10: growth should be fast but the
+        // first hop adds about |V|·p ≈ 10 nodes.
+        assert!((growth[2] - 1.0 - 999.0 * (1.0 - 0.99f64)).abs() < 1.0);
+    }
+
+    #[test]
+    fn thm_a1_matches_er_simulation() {
+        // Empirical check of the recursion against actual BFS layers.
+        let v = 600;
+        let p = 0.008;
+        let predicted = er_cluster_growth(v, p, 6);
+        let mut rng = Pcg32::new(5);
+        let trials = 40;
+        let mut measured = vec![0.0f64; predicted.len()];
+        for _ in 0..trials {
+            let g = erdos_renyi(v, p, &mut rng);
+            let d = metrics::bfs_distances(&g, rng.index(v));
+            for hop in 0..predicted.len() {
+                // Cluster size by hop `hop` = # nodes with distance < hop.
+                let cnt = d.iter().filter(|&&x| x != usize::MAX && x < hop).count();
+                measured[hop] += cnt as f64 / trials as f64;
+            }
+        }
+        // Compare at hop 2 and 3 (before saturation effects dominate).
+        for hop in [2usize, 3] {
+            let rel = (measured[hop] - predicted[hop]).abs() / predicted[hop].max(1.0);
+            assert!(
+                rel < 0.35,
+                "hop {hop}: measured {} vs predicted {} (rel {rel})",
+                measured[hop],
+                predicted[hop]
+            );
+        }
+    }
+
+    #[test]
+    fn hops_to_cover_sane() {
+        let h = er_hops_to_cover(1000, 0.01, 200.0);
+        assert!(h >= 2 && h <= 10, "h={h}");
+    }
+}

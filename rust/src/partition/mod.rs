@@ -1,0 +1,306 @@
+//! Partition state: the LP-to-machine assignment vector plus the
+//! machine-level aggregates (`L_k = Σ_{j: r_j = k} b_j`) that make the
+//! game's cost functions evaluable with O(K) shared state — the paper's
+//! feasibility argument (§4.5): synchronization overhead is independent
+//! of the number of simulated nodes.
+
+pub mod baselines;
+pub mod global_cost;
+pub mod initial;
+
+use crate::graph::{Graph, NodeId};
+
+/// Machine (partition) identifier, `0..K`.
+pub type MachineId = usize;
+
+/// Static description of the machine pool: normalized speeds
+/// `w_k = s_k / Σ_j s_j` (§3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    speeds: Vec<f64>,
+}
+
+impl MachineConfig {
+    /// Build from raw (unnormalized) speeds.
+    pub fn from_speeds(raw: &[f64]) -> Self {
+        assert!(!raw.is_empty(), "need at least one machine");
+        assert!(raw.iter().all(|&s| s > 0.0), "speeds must be positive");
+        let total: f64 = raw.iter().sum();
+        MachineConfig { speeds: raw.iter().map(|s| s / total).collect() }
+    }
+
+    /// `k` machines of equal speed.
+    pub fn homogeneous(k: usize) -> Self {
+        assert!(k >= 1);
+        MachineConfig { speeds: vec![1.0 / k as f64; k] }
+    }
+
+    /// Number of machines `K`.
+    pub fn count(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// Normalized speed `w_k`.
+    #[inline]
+    pub fn speed(&self, k: MachineId) -> f64 {
+        self.speeds[k]
+    }
+
+    /// All normalized speeds.
+    pub fn speeds(&self) -> &[f64] {
+        &self.speeds
+    }
+}
+
+/// The assignment vector `r` plus incrementally-maintained per-machine
+/// load aggregates.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// `assignment[i] = r_i` — machine owning node `i`.
+    assignment: Vec<MachineId>,
+    /// `loads[k] = L_k = Σ_{j: r_j = k} b_j`.
+    loads: Vec<f64>,
+    /// `counts[k]` = number of nodes on machine `k`.
+    counts: Vec<usize>,
+    k: usize,
+}
+
+impl Partition {
+    /// Build from an explicit assignment vector.
+    pub fn from_assignment(graph: &Graph, k: usize, assignment: Vec<MachineId>) -> Self {
+        assert_eq!(assignment.len(), graph.node_count());
+        assert!(assignment.iter().all(|&r| r < k), "machine id out of range");
+        let mut loads = vec![0.0; k];
+        let mut counts = vec![0usize; k];
+        for (i, &r) in assignment.iter().enumerate() {
+            loads[r] += graph.node_weight(i);
+            counts[r] += 1;
+        }
+        Partition { assignment, loads, counts, k }
+    }
+
+    /// All nodes on machine 0 (degenerate start).
+    pub fn all_on_machine(graph: &Graph, k: usize, machine: MachineId) -> Self {
+        assert!(machine < k);
+        Partition::from_assignment(graph, k, vec![machine; graph.node_count()])
+    }
+
+    /// Number of machines `K`.
+    pub fn machine_count(&self) -> usize {
+        self.k
+    }
+
+    /// Number of nodes `N`.
+    pub fn node_count(&self) -> usize {
+        self.assignment.len()
+    }
+
+    /// Machine of node `i`.
+    #[inline]
+    pub fn machine_of(&self, i: NodeId) -> MachineId {
+        self.assignment[i]
+    }
+
+    /// The whole assignment vector.
+    pub fn assignment(&self) -> &[MachineId] {
+        &self.assignment
+    }
+
+    /// Aggregate load `L_k`.
+    #[inline]
+    pub fn load(&self, k: MachineId) -> f64 {
+        self.loads[k]
+    }
+
+    /// All aggregate loads — this O(K) vector is the *only* global state
+    /// machines exchange during refinement (§4.5).
+    pub fn loads(&self) -> &[f64] {
+        &self.loads
+    }
+
+    /// Node count on machine `k`.
+    pub fn count(&self, k: MachineId) -> usize {
+        self.counts[k]
+    }
+
+    /// All node counts.
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Nodes currently assigned to machine `k` (O(N) scan; the hot path
+    /// keeps its own per-machine membership lists — see `game::refine`).
+    pub fn members(&self, k: MachineId) -> Vec<NodeId> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|&(_, &r)| r == k)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Move node `i` to machine `to`, maintaining aggregates. Returns the
+    /// previous machine.
+    pub fn transfer(&mut self, graph: &Graph, i: NodeId, to: MachineId) -> MachineId {
+        assert!(to < self.k);
+        let from = self.assignment[i];
+        if from == to {
+            return from;
+        }
+        let b = graph.node_weight(i);
+        self.loads[from] -= b;
+        self.loads[to] += b;
+        self.counts[from] -= 1;
+        self.counts[to] += 1;
+        self.assignment[i] = to;
+        from
+    }
+
+    /// Recompute aggregates from scratch (used after the graph's node
+    /// weights change between refinement epochs, and by validity checks).
+    pub fn rebuild_aggregates(&mut self, graph: &Graph) {
+        self.loads.iter_mut().for_each(|l| *l = 0.0);
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        for (i, &r) in self.assignment.iter().enumerate() {
+            self.loads[r] += graph.node_weight(i);
+            self.counts[r] += 1;
+        }
+    }
+
+    /// Check internal consistency against the graph: every node assigned
+    /// to a valid machine and aggregates equal from-scratch recomputation.
+    pub fn validate(&self, graph: &Graph) -> Result<(), String> {
+        if self.assignment.len() != graph.node_count() {
+            return Err(format!(
+                "assignment len {} != node count {}",
+                self.assignment.len(),
+                graph.node_count()
+            ));
+        }
+        let mut loads = vec![0.0; self.k];
+        let mut counts = vec![0usize; self.k];
+        for (i, &r) in self.assignment.iter().enumerate() {
+            if r >= self.k {
+                return Err(format!("node {i} on invalid machine {r}"));
+            }
+            loads[r] += graph.node_weight(i);
+            counts[r] += 1;
+        }
+        for k in 0..self.k {
+            if (loads[k] - self.loads[k]).abs() > 1e-6 * (1.0 + loads[k].abs()) {
+                return Err(format!("load[{k}] drift: {} vs {}", self.loads[k], loads[k]));
+            }
+            if counts[k] != self.counts[k] {
+                return Err(format!("count[{k}] drift: {} vs {}", self.counts[k], counts[k]));
+            }
+        }
+        Ok(())
+    }
+
+    /// Load imbalance: max_k (L_k / w_k) / (Σ L / 1) − 1, i.e. how far the
+    /// worst machine is above the speed-weighted ideal. 0 = perfect.
+    pub fn imbalance(&self, machines: &MachineConfig) -> f64 {
+        let total: f64 = self.loads.iter().sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let worst = (0..self.k)
+            .map(|k| self.loads[k] / machines.speed(k))
+            .fold(f64::NEG_INFINITY, f64::max);
+        worst / total - 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::util::rng::Pcg32;
+
+    fn setup() -> (Graph, Partition) {
+        let mut rng = Pcg32::new(1);
+        let g = table1_graph(40, 3, 6, WeightModel::default(), &mut rng);
+        let assignment: Vec<usize> = (0..40).map(|i| i % 4).collect();
+        let p = Partition::from_assignment(&g, 4, assignment);
+        (g, p)
+    }
+
+    #[test]
+    fn machine_config_normalizes() {
+        let m = MachineConfig::from_speeds(&[1.0, 2.0, 3.0, 3.0, 1.0]);
+        assert_eq!(m.count(), 5);
+        assert!((m.speeds().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((m.speed(2) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_speeds() {
+        let m = MachineConfig::homogeneous(4);
+        assert!((m.speed(0) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregates_match_scan() {
+        let (g, p) = setup();
+        p.validate(&g).unwrap();
+        let total: f64 = p.loads().iter().sum();
+        assert!((total - g.total_node_weight()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_maintains_aggregates() {
+        let (g, mut p) = setup();
+        let before_load = p.load(0) + p.load(1);
+        let from = p.transfer(&g, 0, 1);
+        assert_eq!(from, 0);
+        assert_eq!(p.machine_of(0), 1);
+        p.validate(&g).unwrap();
+        assert!((p.load(0) + p.load(1) - before_load).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_same_machine_noop() {
+        let (g, mut p) = setup();
+        let l0 = p.load(0);
+        p.transfer(&g, 0, 0);
+        assert_eq!(p.load(0), l0);
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn members_partition_nodes() {
+        let (_, p) = setup();
+        let mut all: Vec<usize> = (0..4).flat_map(|k| p.members(k)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rebuild_after_reweighting() {
+        let (mut g, mut p) = setup();
+        let w: Vec<f64> = (0..40).map(|i| (i + 1) as f64).collect();
+        g.set_node_weights(&w);
+        p.rebuild_aggregates(&g);
+        p.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn imbalance_zero_when_proportional() {
+        let mut rng = Pcg32::new(9);
+        let g = table1_graph(30, 3, 6, WeightModel { node_mean: 1.0, edge_mean: 1.0 }, &mut rng);
+        // all nodes weight 1 after this
+        let mut g = g;
+        g.set_node_weights(&vec![1.0; 30]);
+        let machines = MachineConfig::homogeneous(3);
+        let assignment: Vec<usize> = (0..30).map(|i| i % 3).collect();
+        let p = Partition::from_assignment(&g, 3, assignment);
+        assert!(p.imbalance(&machines).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_detects_drift() {
+        let (g, mut p) = setup();
+        p.loads[0] += 100.0;
+        assert!(p.validate(&g).is_err());
+    }
+}

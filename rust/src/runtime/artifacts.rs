@@ -1,0 +1,138 @@
+//! Artifact manifest: discovery of the AOT-compiled HLO programs.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt`:
+//! ```text
+//! gtip-artifacts v1
+//! artifact refine_step_n256_k8 n=256 k=8 file=refine_step_n256_k8.hlo.txt
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// One compiled shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Padded node count.
+    pub n: usize,
+    /// Padded machine count.
+    pub k: usize,
+    /// HLO text path (absolute or relative to the manifest).
+    pub path: PathBuf,
+}
+
+/// Parsed manifest: the available padded-shape ladder.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Default on-disk location, overridable with `GTIP_ARTIFACTS_DIR`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GTIP_ARTIFACTS_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load `manifest.txt` from a directory.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `base` resolves relative artifact files.
+    pub fn parse(text: &str, base: &Path) -> Result<ArtifactManifest> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        if header.trim() != "gtip-artifacts v1" {
+            return Err(Error::Runtime(format!("bad manifest header {header:?}")));
+        }
+        let mut specs = Vec::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("artifact") => {}
+                other => return Err(Error::Runtime(format!("unknown record {other:?}"))),
+            }
+            let name = parts
+                .next()
+                .ok_or_else(|| Error::Runtime("artifact missing name".into()))?
+                .to_string();
+            let mut n = None;
+            let mut k = None;
+            let mut file = None;
+            for kv in parts {
+                let (key, value) = kv
+                    .split_once('=')
+                    .ok_or_else(|| Error::Runtime(format!("bad field {kv:?}")))?;
+                match key {
+                    "n" => n = Some(value.parse::<usize>().map_err(|e| Error::Runtime(e.to_string()))?),
+                    "k" => k = Some(value.parse::<usize>().map_err(|e| Error::Runtime(e.to_string()))?),
+                    "file" => file = Some(base.join(value)),
+                    other => return Err(Error::Runtime(format!("unknown field {other:?}"))),
+                }
+            }
+            specs.push(ArtifactSpec {
+                name,
+                n: n.ok_or_else(|| Error::Runtime("missing n".into()))?,
+                k: k.ok_or_else(|| Error::Runtime("missing k".into()))?,
+                path: file.ok_or_else(|| Error::Runtime("missing file".into()))?,
+            });
+        }
+        if specs.is_empty() {
+            return Err(Error::Runtime("manifest lists no artifacts".into()));
+        }
+        specs.sort_by_key(|s| (s.k, s.n));
+        Ok(ArtifactManifest { specs })
+    }
+
+    /// Smallest artifact that fits an `n`-node, `k`-machine problem.
+    pub fn best_fit(&self, n: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.specs.iter().find(|s| s.n >= n && s.k >= k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "gtip-artifacts v1\n\
+        artifact refine_step_n256_k8 n=256 k=8 file=refine_step_n256_k8.hlo.txt\n\
+        artifact refine_step_n512_k8 n=512 k=8 file=refine_step_n512_k8.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.specs.len(), 2);
+        assert_eq!(m.specs[0].n, 256);
+        assert_eq!(m.specs[0].path, PathBuf::from("/a/refine_step_n256_k8.hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_adequate() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.best_fit(230, 5).unwrap().n, 256);
+        assert_eq!(m.best_fit(257, 5).unwrap().n, 512);
+        assert_eq!(m.best_fit(256, 8).unwrap().n, 256);
+        assert!(m.best_fit(600, 5).is_none());
+        assert!(m.best_fit(100, 9).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        assert!(ArtifactManifest::parse("nope\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let r = ArtifactManifest::parse("gtip-artifacts v1\nartifact x n=2 k=2\n", Path::new("."));
+        assert!(r.is_err());
+    }
+}

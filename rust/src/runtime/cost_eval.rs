@@ -1,0 +1,196 @@
+//! High-level cost evaluator over the PJRT artifacts: pads a live
+//! `(Graph, Partition)` problem up to the nearest compiled shape,
+//! executes `refine_step`, and unpacks the (unpadded) outputs.
+//!
+//! Padding contract (mirrors `python/compile/kernels/ref.py`):
+//! * padded nodes: `b = 0`, no edges, assigned to machine 0 — their cost
+//!   rows are inert and their dissatisfaction is exactly 0;
+//! * padded machines: `w = 1`, `wmask = 0` — a `BIG` additive penalty
+//!   keeps min/argmin away from them.
+
+use crate::error::{Error, Result};
+use crate::graph::Graph;
+use crate::partition::{MachineConfig, Partition};
+use crate::runtime::artifacts::ArtifactManifest;
+use crate::runtime::pjrt::{PjrtContext, RefineStepExecutable};
+
+/// Unpadded outputs of one `refine_step` execution.
+#[derive(Debug, Clone)]
+pub struct RefineStepOutput {
+    pub n: usize,
+    pub k: usize,
+    /// Row-major N×K framework-A costs.
+    pub costs_a: Vec<f32>,
+    /// Row-major N×K framework-B costs.
+    pub costs_b: Vec<f32>,
+    pub dissat_a: Vec<f32>,
+    pub dissat_b: Vec<f32>,
+    pub best_a: Vec<i32>,
+    pub best_b: Vec<i32>,
+    pub c0: f32,
+    pub c0_tilde: f32,
+}
+
+/// Evaluator holding the PJRT context plus lazily compiled executables
+/// for each padded shape in the manifest.
+pub struct PjrtCostEvaluator {
+    ctx: PjrtContext,
+    manifest: ArtifactManifest,
+    compiled: Vec<Option<RefineStepExecutable>>,
+    // Reusable padded input buffers (avoid re-allocating 4 MiB per call).
+    buf_adj: Vec<f32>,
+    buf_xt: Vec<f32>,
+    buf_b: Vec<f32>,
+}
+
+impl PjrtCostEvaluator {
+    /// Create from the default artifacts directory.
+    pub fn from_default_dir() -> Result<PjrtCostEvaluator> {
+        Self::from_dir(ArtifactManifest::default_dir())
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<PjrtCostEvaluator> {
+        let manifest = ArtifactManifest::load_dir(dir)?;
+        let ctx = PjrtContext::cpu()?;
+        let compiled = manifest.specs.iter().map(|_| None).collect();
+        Ok(PjrtCostEvaluator {
+            ctx,
+            manifest,
+            compiled,
+            buf_adj: Vec::new(),
+            buf_xt: Vec::new(),
+            buf_b: Vec::new(),
+        })
+    }
+
+    /// Largest problem size this evaluator supports.
+    pub fn max_nodes(&self) -> usize {
+        self.manifest.specs.iter().map(|s| s.n).max().unwrap_or(0)
+    }
+
+    fn exe_for(&mut self, n: usize, k: usize) -> Result<usize> {
+        let idx = self
+            .manifest
+            .specs
+            .iter()
+            .position(|s| s.n >= n && s.k >= k)
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "no artifact fits n={n}, k={k} (max n={}, run `make artifacts`)",
+                    self.max_nodes()
+                ))
+            })?;
+        if self.compiled[idx].is_none() {
+            let spec = &self.manifest.specs[idx];
+            self.compiled[idx] = Some(RefineStepExecutable::load(&self.ctx, spec)?);
+        }
+        Ok(idx)
+    }
+
+    /// Evaluate the full refine step for a live problem.
+    pub fn evaluate(
+        &mut self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        part: &Partition,
+        mu: f64,
+    ) -> Result<RefineStepOutput> {
+        let n = graph.node_count();
+        let k = machines.count();
+        let idx = self.exe_for(n, k)?;
+        let (pn, pk) = {
+            let spec = &self.manifest.specs[idx];
+            (spec.n, spec.k)
+        };
+
+        // Pad inputs.
+        self.buf_b.clear();
+        self.buf_b.resize(pn, 0.0);
+        for i in 0..n {
+            self.buf_b[i] = graph.node_weight(i) as f32;
+        }
+        let mut w = vec![1.0f32; pk];
+        let mut wmask = vec![0.0f32; pk];
+        for m in 0..k {
+            w[m] = machines.speed(m) as f32;
+            wmask[m] = 1.0;
+        }
+        self.buf_adj.clear();
+        self.buf_adj.resize(pn * pn, 0.0);
+        for (u, v, c) in graph.edges() {
+            self.buf_adj[u * pn + v] = c as f32;
+            self.buf_adj[v * pn + u] = c as f32;
+        }
+        self.buf_xt.clear();
+        self.buf_xt.resize(pn * pk, 0.0);
+        for i in 0..pn {
+            let m = if i < n { part.machine_of(i) } else { 0 };
+            self.buf_xt[i * pk + m] = 1.0;
+        }
+
+        let exe = self.compiled[idx].as_ref().expect("compiled above");
+        let out = exe.run_padded(&self.buf_b, &w, &wmask, &self.buf_adj, &self.buf_xt, mu as f32)?;
+
+        // Unpad outputs. Order per python/compile/model.py.
+        let mat = |lit: &xla::Literal| -> Result<Vec<f32>> {
+            let full = lit.to_vec::<f32>()?;
+            let mut out = Vec::with_capacity(n * k);
+            for i in 0..n {
+                out.extend_from_slice(&full[i * pk..i * pk + k]);
+            }
+            Ok(out)
+        };
+        let vecf = |lit: &xla::Literal| -> Result<Vec<f32>> {
+            Ok(lit.to_vec::<f32>()?[..n].to_vec())
+        };
+        let veci = |lit: &xla::Literal| -> Result<Vec<i32>> {
+            Ok(lit.to_vec::<i32>()?[..n].to_vec())
+        };
+        let scalar = |lit: &xla::Literal| -> Result<f32> {
+            Ok(lit.to_vec::<f32>()?[0])
+        };
+
+        Ok(RefineStepOutput {
+            n,
+            k,
+            costs_a: mat(&out[0])?,
+            costs_b: mat(&out[1])?,
+            dissat_a: vecf(&out[2])?,
+            dissat_b: vecf(&out[3])?,
+            best_a: veci(&out[4])?,
+            best_b: veci(&out[5])?,
+            c0: scalar(&out[6])?,
+            c0_tilde: scalar(&out[7])?,
+        })
+    }
+}
+
+/// Compare a PJRT output against the native Rust dense evaluator.
+/// Returns the maximum relative error across the cost matrices and
+/// dissatisfaction vectors (used by tests and the `gtip artifacts`
+/// verification subcommand).
+pub fn max_rel_error_vs_native(
+    graph: &Graph,
+    machines: &MachineConfig,
+    part: &Partition,
+    mu: f64,
+    out: &RefineStepOutput,
+) -> f64 {
+    let native = crate::game::cost::dense_cost_matrices(graph, machines, part, mu);
+    let rel = |a: f64, b: f64| -> f64 { (a - b).abs() / (1.0 + a.abs().max(b.abs())) };
+    let mut worst: f64 = 0.0;
+    for i in 0..out.n {
+        for m in 0..out.k {
+            worst = worst.max(rel(native.costs_a[i * out.k + m], out.costs_a[i * out.k + m] as f64));
+            worst = worst.max(rel(native.costs_b[i * out.k + m], out.costs_b[i * out.k + m] as f64));
+        }
+        worst = worst.max(rel(native.dissat_a[i], out.dissat_a[i] as f64));
+        worst = worst.max(rel(native.dissat_b[i], out.dissat_b[i] as f64));
+    }
+    // Global costs.
+    let c0 = crate::partition::global_cost::c0(graph, machines, part, mu);
+    let c0t = crate::partition::global_cost::c0_tilde(graph, machines, part, mu);
+    worst = worst.max(rel(c0, out.c0 as f64));
+    worst = worst.max(rel(c0t, out.c0_tilde as f64));
+    worst
+}

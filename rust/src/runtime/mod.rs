@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards the
+//! `gtip` binary is self-contained: [`pjrt::RefineStepExecutable`] wraps
+//! a compiled PJRT executable per padded shape and
+//! [`cost_eval::PjrtCostEvaluator`] pads live problems up to the nearest
+//! compiled shape and unpacks the outputs.
+
+pub mod artifacts;
+pub mod cost_eval;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use cost_eval::{PjrtCostEvaluator, RefineStepOutput};

@@ -1,0 +1,133 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: load HLO text,
+//! compile once, execute many times.
+//!
+//! Follows /opt/xla-example/load_hlo exactly: HLO *text* interchange
+//! (`HloModuleProto::from_text_file` reassigns 64-bit jax ids), lowered
+//! with `return_tuple=True`, so execution yields one tuple literal that
+//! is unpacked with `to_tuple()`.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifacts::ArtifactSpec;
+
+/// Shared PJRT CPU client (one per process is plenty).
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<PjrtContext> {
+        Ok(PjrtContext { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn compile_file(&self, path: impl AsRef<Path>) -> Result<CompiledHlo> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+            Error::Runtime(format!("loading {}: {e}", path.display()))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(CompiledHlo { exe })
+    }
+}
+
+/// One compiled executable.
+pub struct CompiledHlo {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledHlo {
+    /// Execute with literal inputs; returns the unpacked output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let out = result[0][0].to_literal_sync()?;
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// The compiled `refine_step` program for one padded shape, with typed
+/// input marshalling.
+pub struct RefineStepExecutable {
+    compiled: CompiledHlo,
+    pub spec: ArtifactSpec,
+}
+
+impl RefineStepExecutable {
+    pub fn load(ctx: &PjrtContext, spec: &ArtifactSpec) -> Result<RefineStepExecutable> {
+        Ok(RefineStepExecutable { compiled: ctx.compile_file(&spec.path)?, spec: spec.clone() })
+    }
+
+    /// Execute on pre-padded f32 buffers.
+    ///
+    /// * `b`: len `n` — node weights
+    /// * `w`: len `k` — speeds (1.0 for padding machines)
+    /// * `wmask`: len `k` — 1 for real machines
+    /// * `adj`: len `n*n` row-major
+    /// * `xt`: len `n*k` row-major one-hot
+    /// * `mu`: scalar
+    ///
+    /// Output order matches `python/compile/model.py::refine_step`.
+    pub fn run_padded(
+        &self,
+        b: &[f32],
+        w: &[f32],
+        wmask: &[f32],
+        adj: &[f32],
+        xt: &[f32],
+        mu: f32,
+    ) -> Result<Vec<xla::Literal>> {
+        let n = self.spec.n as i64;
+        let k = self.spec.k as i64;
+        if b.len() != self.spec.n
+            || w.len() != self.spec.k
+            || wmask.len() != self.spec.k
+            || adj.len() != self.spec.n * self.spec.n
+            || xt.len() != self.spec.n * self.spec.k
+        {
+            return Err(Error::Runtime(format!(
+                "input shape mismatch for artifact {} (n={}, k={})",
+                self.spec.name, self.spec.n, self.spec.k
+            )));
+        }
+        let inputs = [
+            xla::Literal::vec1(b),
+            xla::Literal::vec1(w),
+            xla::Literal::vec1(wmask),
+            xla::Literal::vec1(adj).reshape(&[n, n])?,
+            xla::Literal::vec1(xt).reshape(&[n, k])?,
+            xla::Literal::scalar(mu),
+        ];
+        let out = self.compiled.execute(&inputs)?;
+        if out.len() != 8 {
+            return Err(Error::Runtime(format!(
+                "expected 8 outputs from refine_step, got {}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime smoke tests live in `rust/tests/integration_runtime.rs`
+    //! (they need the artifacts from `make artifacts`). Here we only test
+    //! error paths that need no artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_file_is_clean_error() {
+        let ctx = match PjrtContext::cpu() {
+            Ok(c) => c,
+            Err(e) => panic!("PJRT CPU client unavailable: {e}"),
+        };
+        let err = ctx.compile_file("/nonexistent/file.hlo.txt");
+        assert!(err.is_err());
+    }
+}

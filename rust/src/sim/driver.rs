@@ -1,0 +1,220 @@
+//! Dynamic-refinement driver: the full §6.1 experiment loop.
+//!
+//! Runs the optimistic engine tick by tick; every `refine_every` wall
+//! ticks it (1) measures the live node/edge weights from LP state
+//! (§6.1), (2) installs them into the LP graph, (3) runs the
+//! game-theoretic iterative refinement to convergence from the current
+//! assignment, and (4) swaps the improved assignment into the running
+//! engine. `refine_every = 0` disables refinement (the Fig. 9 baseline).
+
+use crate::game::cost::Framework;
+use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::graph::Graph;
+use crate::partition::initial::grow_partition;
+use crate::partition::{MachineConfig, Partition};
+use crate::sim::engine::{SimEngine, SimOptions, SimStats};
+use crate::sim::weights;
+use crate::sim::workload::FloodWorkload;
+use crate::util::rng::Pcg32;
+use crate::util::stats::Trace;
+
+/// Driver options beyond the engine's.
+#[derive(Debug, Clone)]
+pub struct DriverOptions {
+    pub sim: SimOptions,
+    /// Wall ticks between refinements (`partition-refine-freq`);
+    /// 0 = never refine.
+    pub refine_every: u64,
+    /// Cost framework used by refinement.
+    pub framework: Framework,
+    /// Relative rollback-delay weight μ.
+    pub mu: f64,
+    /// Optional wall-tick charge per executed node transfer, modeling
+    /// migration overhead (the paper ignores it; default 0).
+    pub ticks_per_transfer: u64,
+}
+
+impl Default for DriverOptions {
+    fn default() -> Self {
+        DriverOptions {
+            sim: SimOptions::default(),
+            refine_every: 500,
+            framework: Framework::A,
+            mu: 8.0,
+            ticks_per_transfer: 0,
+        }
+    }
+}
+
+/// Result of a dynamic run.
+#[derive(Debug, Clone)]
+pub struct DynamicRunReport {
+    pub stats: SimStats,
+    /// Number of refinement epochs executed.
+    pub refinements: usize,
+    /// Total node transfers across all epochs.
+    pub transfers: usize,
+    /// Wall ticks charged for migrations (if `ticks_per_transfer > 0`).
+    pub migration_ticks: u64,
+    /// Machine-load traces (only populated if `sim.trace_every > 0`).
+    pub load_traces: Vec<Trace>,
+    /// Potential at the end of each refinement epoch.
+    pub epoch_potentials: Vec<f64>,
+}
+
+/// Total simulation time including migration charges — the y-axis of
+/// Figs. 7/8.
+impl DynamicRunReport {
+    pub fn total_time(&self) -> u64 {
+        self.stats.ticks + self.migration_ticks
+    }
+}
+
+/// Run a full dynamically-refined simulation.
+///
+/// `graph` provides the LP topology; its weights are treated as scratch
+/// (a private copy is re-measured each epoch). The initial partition is
+/// App. A hop-growth from focal nodes (unit weights, §4.1).
+pub fn run_dynamic(
+    graph: &Graph,
+    machines: &MachineConfig,
+    workload: FloodWorkload,
+    options: &DriverOptions,
+    rng: &mut Pcg32,
+) -> DynamicRunReport {
+    // LP graph with dynamic weights, private to the refinement side.
+    let mut lp_graph = graph.clone();
+
+    // §4.1 initial partitioning (unit weights).
+    let initial = grow_partition(&lp_graph, machines, rng);
+    run_dynamic_from(graph, &mut lp_graph, machines, initial, workload, options)
+}
+
+/// Like [`run_dynamic`] but with an explicit starting partition (used by
+/// experiments that compare frameworks from identical starts).
+pub fn run_dynamic_from(
+    graph: &Graph,
+    lp_graph: &mut Graph,
+    machines: &MachineConfig,
+    initial: Partition,
+    workload: FloodWorkload,
+    options: &DriverOptions,
+) -> DynamicRunReport {
+    let mut engine =
+        SimEngine::new(graph, machines.clone(), initial, options.sim.clone(), workload.injections);
+
+    let mut refinements = 0;
+    let mut transfers = 0;
+    let mut migration_ticks = 0u64;
+    let mut epoch_potentials = Vec::new();
+
+    loop {
+        if !engine.step() {
+            break;
+        }
+        let tick = engine.stats().ticks;
+        if tick >= options.sim.max_ticks {
+            break;
+        }
+        if options.refine_every > 0 && tick % options.refine_every == 0 {
+            // (1) measure live weights, (2) install, (3) refine, (4) swap.
+            let measured = weights::measure(&engine);
+            weights::install(lp_graph, &measured);
+            let mut part = engine.partition().clone();
+            part.rebuild_aggregates(lp_graph);
+            let mut refine =
+                RefineEngine::new(lp_graph, machines, part, options.mu, options.framework);
+            let report = refine.run(&RefineOptions::default());
+            transfers += report.transfers;
+            migration_ticks += options.ticks_per_transfer * report.transfers as u64;
+            epoch_potentials.push(report.final_potential);
+            engine.set_partition(refine.into_partition());
+            refinements += 1;
+        }
+    }
+
+    let load_traces = engine.load_traces().to_vec();
+    let stats = engine.stats().clone();
+    DynamicRunReport {
+        stats,
+        refinements,
+        transfers,
+        migration_ticks,
+        load_traces,
+        epoch_potentials,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::preferential_attachment;
+    use crate::sim::workload::WorkloadOptions;
+
+    fn small_setup(seed: u64) -> (Graph, MachineConfig, FloodWorkload) {
+        let mut rng = Pcg32::new(seed);
+        let g = preferential_attachment(120, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let wl = FloodWorkload::generate(
+            &g,
+            &WorkloadOptions {
+                threads: 40,
+                horizon_ticks: 800,
+                hot_spot_period: 200,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        (g, machines, wl)
+    }
+
+    #[test]
+    fn dynamic_run_completes_and_refines() {
+        let (g, machines, wl) = small_setup(1);
+        let mut rng = Pcg32::new(2);
+        let opts = DriverOptions { refine_every: 200, ..Default::default() };
+        let report = run_dynamic(&g, &machines, wl, &opts, &mut rng);
+        assert!(!report.stats.truncated, "run truncated: {:?}", report.stats);
+        assert!(report.refinements > 0, "no refinement epochs ran");
+        assert_eq!(report.epoch_potentials.len(), report.refinements);
+    }
+
+    #[test]
+    fn no_refinement_mode() {
+        let (g, machines, wl) = small_setup(3);
+        let mut rng = Pcg32::new(4);
+        let opts = DriverOptions { refine_every: 0, ..Default::default() };
+        let report = run_dynamic(&g, &machines, wl, &opts, &mut rng);
+        assert_eq!(report.refinements, 0);
+        assert_eq!(report.transfers, 0);
+        assert!(!report.stats.truncated);
+    }
+
+    #[test]
+    fn refinement_does_not_break_draining() {
+        // Frequent refinement must not lose events or deadlock.
+        let (g, machines, wl) = small_setup(5);
+        let injected = wl.len() as u64;
+        let mut rng = Pcg32::new(6);
+        let opts = DriverOptions { refine_every: 50, ..Default::default() };
+        let report = run_dynamic(&g, &machines, wl, &opts, &mut rng);
+        assert!(!report.stats.truncated);
+        // Every injected thread is processed at least once (by its source).
+        assert!(
+            report.stats.events_processed >= injected,
+            "processed {} < injected {injected}",
+            report.stats.events_processed
+        );
+    }
+
+    #[test]
+    fn migration_charge_accounted() {
+        let (g, machines, wl) = small_setup(7);
+        let mut rng = Pcg32::new(8);
+        let opts =
+            DriverOptions { refine_every: 200, ticks_per_transfer: 2, ..Default::default() };
+        let report = run_dynamic(&g, &machines, wl, &opts, &mut rng);
+        assert_eq!(report.migration_ticks, 2 * report.transfers as u64);
+        assert_eq!(report.total_time(), report.stats.ticks + report.migration_ticks);
+    }
+}

@@ -1,0 +1,541 @@
+//! The tick-driven optimistic simulation engine (paper Fig. 6).
+//!
+//! Owns all LPs, the LP-to-machine assignment, and the wall-clock loop:
+//!
+//! 1. fossil-collect against GVT,
+//! 2. idle LPs select + start their lowest-timestamped ready event
+//!    (stragglers roll back, anti-messages cascade),
+//! 3. busy LPs tick down; completed forwarding events flood to unseen
+//!    neighbors (cross-machine forwards pay the `event-tick` delay),
+//! 4. pending-event delays decrement, GVT updates,
+//! 5. injections scheduled for this tick arrive.
+//!
+//! Processing an event occupies the LP for
+//! `ceil(resident_LPs × base_time / (w_k · K))` ticks — machine speed
+//! inversely proportional to resident LP count (§6.1), generalized to
+//! heterogeneous speeds `w_k`.
+
+use crate::graph::{Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+use crate::sim::event::{Event, EventKind, SimTime, WallTime};
+use crate::sim::lp::{Lp, StartOutcome};
+use crate::util::stats::Trace;
+
+/// Static engine options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Base process time of a normal event (wall ticks).
+    pub base_process_time: WallTime,
+    /// Base process time of a rollback event.
+    pub rollback_process_time: WallTime,
+    /// Wall-clock delay of a cross-machine event transfer.
+    pub inter_machine_delay: WallTime,
+    /// Wall-clock delay of an intra-machine event transfer.
+    pub intra_machine_delay: WallTime,
+    /// Simulation-time latency per flood hop.
+    pub hop_latency: SimTime,
+    /// Record machine-load traces every this many ticks (0 = never).
+    pub trace_every: WallTime,
+    /// Safety cap on wall ticks.
+    pub max_ticks: WallTime,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            base_process_time: 1,
+            rollback_process_time: 1,
+            inter_machine_delay: 3,
+            intra_machine_delay: 0,
+            hop_latency: 1,
+            trace_every: 0,
+            max_ticks: 2_000_000,
+        }
+    }
+}
+
+/// Aggregate statistics of a run.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Total wall-clock ticks consumed so far — the paper's headline
+    /// *simulation time* metric.
+    pub ticks: WallTime,
+    pub events_processed: u64,
+    pub events_forwarded: u64,
+    pub cross_machine_forwards: u64,
+    pub rollbacks: u64,
+    pub antimessages_sent: u64,
+    /// True if the run hit `max_ticks` before draining.
+    pub truncated: bool,
+}
+
+/// A scheduled packet injection: `(wall_tick, lp, event)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Injection {
+    pub at_tick: WallTime,
+    pub lp: NodeId,
+    pub event: Event,
+}
+
+/// The engine.
+pub struct SimEngine<'g> {
+    graph: &'g Graph,
+    machines: MachineConfig,
+    part: Partition,
+    lps: Vec<Lp>,
+    options: SimOptions,
+    stats: SimStats,
+    gvt: SimTime,
+    /// Injections sorted descending by tick (pop from the back).
+    injections: Vec<Injection>,
+    /// Machine-load traces (avg queue length per resident LP), Figs 9/10.
+    load_traces: Vec<Trace>,
+    /// Scratch buffer for messages produced within a tick.
+    outbox: Vec<(NodeId, Event)>,
+}
+
+impl<'g> SimEngine<'g> {
+    pub fn new(
+        graph: &'g Graph,
+        machines: MachineConfig,
+        part: Partition,
+        options: SimOptions,
+        mut injections: Vec<Injection>,
+    ) -> Self {
+        assert_eq!(part.node_count(), graph.node_count());
+        assert_eq!(part.machine_count(), machines.count());
+        injections.sort_by_key(|inj| std::cmp::Reverse(inj.at_tick));
+        let load_traces = (0..machines.count())
+            .map(|k| Trace::new(format!("machine{k}")))
+            .collect();
+        SimEngine {
+            graph,
+            lps: vec![Lp::default(); graph.node_count()],
+            machines,
+            part,
+            options,
+            stats: SimStats::default(),
+            gvt: 0,
+            injections,
+            load_traces,
+            outbox: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.part
+    }
+
+    pub fn graph(&self) -> &Graph {
+        self.graph
+    }
+
+    pub fn lps(&self) -> &[Lp] {
+        &self.lps
+    }
+
+    pub fn gvt(&self) -> SimTime {
+        self.gvt
+    }
+
+    pub fn load_traces(&self) -> &[Trace] {
+        &self.load_traces
+    }
+
+    /// Replace the LP-to-machine assignment (the dynamic-refinement hook;
+    /// event transfer semantics change immediately, matching the paper's
+    /// model where migration cost is ignored).
+    pub fn set_partition(&mut self, part: Partition) {
+        assert_eq!(part.node_count(), self.graph.node_count());
+        self.part = part;
+    }
+
+    /// Busy time charged on machine `k` for an event of kind `kind`:
+    /// `resident × base / (w_k · K)`, rounded up, minimum 1.
+    fn occupancy_cost(&self, k: MachineId, kind: EventKind) -> WallTime {
+        let base =
+            kind.base_process_time(self.options.base_process_time, self.options.rollback_process_time);
+        let resident = self.part.count(k) as f64;
+        let speed_scale = self.machines.speed(k) * self.machines.count() as f64;
+        ((resident * base as f64 / speed_scale).ceil() as WallTime).max(1)
+    }
+
+    /// Transfer delay between two LPs given the current assignment.
+    fn transfer_delay(&self, from: NodeId, to: NodeId) -> WallTime {
+        if self.part.machine_of(from) == self.part.machine_of(to) {
+            self.options.intra_machine_delay
+        } else {
+            self.options.inter_machine_delay
+        }
+    }
+
+    /// Deliver any injections scheduled at `tick`.
+    fn deliver_injections(&mut self, tick: WallTime) {
+        while let Some(inj) = self.injections.last().copied() {
+            if inj.at_tick > tick {
+                break;
+            }
+            self.injections.pop();
+            self.lps[inj.lp].receive(inj.event);
+        }
+    }
+
+    /// Compute GVT: minimum over all LP local times of *busy* LPs and all
+    /// pending event timestamps (Fig. 6 / Table III `global-time`).
+    fn compute_gvt(&self) -> SimTime {
+        let mut gvt = SimTime::MAX;
+        for lp in &self.lps {
+            if let Some(b) = &lp.busy {
+                gvt = gvt.min(b.event.time);
+            }
+            if let Some(t) = lp.min_pending_time() {
+                gvt = gvt.min(t);
+            }
+        }
+        // Events not yet injected also hold back GVT.
+        for inj in &self.injections {
+            gvt = gvt.min(inj.event.time);
+        }
+        if gvt == SimTime::MAX {
+            // Drained: GVT is the max local time.
+            self.lps.iter().map(|l| l.local_time).max().unwrap_or(0)
+        } else {
+            gvt
+        }
+    }
+
+    /// Record machine load (mean queue length per resident LP, §6.1) at
+    /// the current tick.
+    fn record_loads(&mut self) {
+        let k = self.machines.count();
+        let mut sums = vec![0.0f64; k];
+        for (i, lp) in self.lps.iter().enumerate() {
+            sums[self.part.machine_of(i)] += lp.queue_len() as f64;
+        }
+        for m in 0..k {
+            let cnt = self.part.count(m).max(1) as f64;
+            self.load_traces[m].push(self.stats.ticks as f64, sums[m] / cnt);
+        }
+    }
+
+    /// All work drained (and no injections outstanding)?
+    pub fn drained(&self) -> bool {
+        self.injections.is_empty() && self.lps.iter().all(|lp| lp.idle_and_empty())
+    }
+
+    /// Execute one wall-clock tick (Fig. 6 body). Returns `false` once
+    /// drained.
+    pub fn step(&mut self) -> bool {
+        if self.drained() {
+            return false;
+        }
+        let tick = self.stats.ticks;
+        self.deliver_injections(tick);
+
+        // Phase 1: idle LPs select + start events; busy LPs tick down and
+        // completed events flood forward. Messages buffer in the outbox so
+        // intra-tick ordering does not depend on LP index.
+        let n = self.graph.node_count();
+        let mut outbox = std::mem::take(&mut self.outbox);
+        outbox.clear();
+        for i in 0..n {
+            let machine = self.part.machine_of(i);
+            if self.lps[i].busy.is_none() {
+                let cost_rollback = self.occupancy_cost(machine, EventKind::Rollback);
+                let cost_normal = self.occupancy_cost(machine, EventKind::ProcessForward);
+                let outcome = self.lps[i].start_next(
+                    |kind| match kind {
+                        EventKind::Rollback => cost_rollback,
+                        _ => cost_normal,
+                    },
+                    self.options.inter_machine_delay,
+                );
+                match outcome {
+                    StartOutcome::Nothing => {}
+                    StartOutcome::Started { rolled_back, cancellations }
+                    | StartOutcome::RolledBack { rolled_back, cancellations } => {
+                        let _ = rolled_back;
+                        self.stats.antimessages_sent += cancellations.len() as u64;
+                        for (nb, ev) in cancellations {
+                            // Anti-message delay follows the link type.
+                            let mut ev = ev;
+                            ev.tick = self.transfer_delay(i, nb);
+                            outbox.push((nb, ev));
+                        }
+                    }
+                }
+            }
+            if let Some(done) = self.lps[i].tick_busy() {
+                match done.kind {
+                    EventKind::Rollback => {
+                        // Anti-message consumed; nothing retires to history.
+                        self.stats.events_processed += 1;
+                    }
+                    _ => {
+                        self.stats.events_processed += 1;
+                        let mut forwarded_to = Vec::new();
+                        if done.count > 0 {
+                            for &nb in self.graph.neighbors(i) {
+                                if !self.lps[nb].has_seen(done.thread) {
+                                    let delay = self.transfer_delay(i, nb);
+                                    let fwd = done.forwarded(self.options.hop_latency, delay);
+                                    outbox.push((nb, fwd));
+                                    forwarded_to.push(nb);
+                                    self.stats.events_forwarded += 1;
+                                    if self.part.machine_of(nb) != machine {
+                                        self.stats.cross_machine_forwards += 1;
+                                    }
+                                }
+                            }
+                        }
+                        self.lps[i].retire(done, forwarded_to);
+                    }
+                }
+            }
+        }
+
+        // Phase 2: deliver buffered messages.
+        for (nb, ev) in outbox.drain(..) {
+            // Receivers that already saw the thread (race within the tick)
+            // drop duplicate forwards.
+            if ev.kind != EventKind::Rollback && self.lps[nb].has_seen(ev.thread) {
+                continue;
+            }
+            self.lps[nb].receive(ev);
+        }
+        self.outbox = outbox;
+
+        // Phase 3: delays tick down, GVT advances, fossils collected.
+        for lp in &mut self.lps {
+            lp.tick_delays();
+        }
+        self.gvt = self.compute_gvt();
+        for lp in &mut self.lps {
+            lp.fossil_collect(self.gvt);
+        }
+
+        self.stats.ticks += 1;
+        self.stats.rollbacks = self.lps.iter().map(|l| l.rollbacks).sum();
+        if self.options.trace_every > 0 && tick % self.options.trace_every == 0 {
+            self.record_loads();
+        }
+        true
+    }
+
+    /// Run until drained or `max_ticks`. Returns final stats.
+    pub fn run_to_completion(&mut self) -> SimStats {
+        while self.stats.ticks < self.options.max_ticks {
+            if !self.step() {
+                break;
+            }
+        }
+        if !self.drained() {
+            self.stats.truncated = true;
+        }
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn line_graph(n: usize) -> Graph {
+        let mut b = GraphBuilder::with_nodes(n);
+        for i in 0..n - 1 {
+            b.add_edge(i, i + 1, 1.0);
+        }
+        b.build()
+    }
+
+    fn engine_on(
+        graph: &Graph,
+        k: usize,
+        assignment: Vec<usize>,
+        injections: Vec<Injection>,
+        options: SimOptions,
+    ) -> SimEngine<'_> {
+        let machines = MachineConfig::homogeneous(k);
+        let part = Partition::from_assignment(graph, k, assignment);
+        SimEngine::new(graph, machines, part, options, injections)
+    }
+
+    #[test]
+    fn single_event_drains() {
+        let g = line_graph(3);
+        let inj =
+            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) }];
+        let mut e = engine_on(&g, 1, vec![0, 0, 0], inj, SimOptions::default());
+        let stats = e.run_to_completion();
+        assert!(!stats.truncated);
+        assert_eq!(stats.events_processed, 1);
+        assert_eq!(stats.events_forwarded, 0);
+        assert!(e.drained());
+    }
+
+    #[test]
+    fn flood_covers_hop_limit() {
+        // Line 0-1-2-3-4, flood from node 0 with 2 hops: reaches 0,1,2.
+        let g = line_graph(5);
+        let inj =
+            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 2) }];
+        let mut e = engine_on(&g, 1, vec![0; 5], inj, SimOptions::default());
+        let stats = e.run_to_completion();
+        assert!(!stats.truncated);
+        assert_eq!(stats.events_processed, 3, "nodes 0,1,2 each process once");
+        assert_eq!(stats.events_forwarded, 2);
+        assert_eq!(stats.rollbacks, 0);
+    }
+
+    #[test]
+    fn flood_branches_to_all_unseen_neighbors() {
+        // Star: center 0 with 4 leaves; 1 hop floods to all leaves.
+        let mut b = GraphBuilder::with_nodes(5);
+        for leaf in 1..5 {
+            b.add_edge(0, leaf, 1.0);
+        }
+        let g = b.build();
+        let inj =
+            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 1) }];
+        let mut e = engine_on(&g, 1, vec![0; 5], inj, SimOptions::default());
+        let stats = e.run_to_completion();
+        assert_eq!(stats.events_processed, 5);
+        assert_eq!(stats.events_forwarded, 4);
+    }
+
+    #[test]
+    fn no_duplicate_delivery_on_cycles() {
+        // Triangle: flood with large hop budget must visit each LP once.
+        let mut b = GraphBuilder::with_nodes(3);
+        b.add_edge(0, 1, 1.0).add_edge(1, 2, 1.0).add_edge(0, 2, 1.0);
+        let g = b.build();
+        let inj =
+            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 10) }];
+        let mut e = engine_on(&g, 1, vec![0; 3], inj, SimOptions::default());
+        let stats = e.run_to_completion();
+        assert_eq!(stats.events_processed, 3, "each LP exactly once");
+    }
+
+    #[test]
+    fn cross_machine_forwards_counted_and_slower() {
+        let g = line_graph(4);
+        let inj = || vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 3) }];
+        // Two residents per machine in both configs so occupancy costs
+        // match and only the transfer delays differ.
+        // Contiguous halves: one crossing (edge 1-2).
+        let mut same = engine_on(&g, 2, vec![0, 0, 1, 1], inj(), SimOptions::default());
+        let s1 = same.run_to_completion();
+        assert_eq!(s1.cross_machine_forwards, 1);
+        // Alternating machines: every forward crosses.
+        let mut alt = engine_on(&g, 2, vec![0, 1, 0, 1], inj(), SimOptions::default());
+        let s2 = alt.run_to_completion();
+        assert_eq!(s2.cross_machine_forwards, 3);
+        assert!(
+            s2.ticks > s1.ticks,
+            "cross-machine delays must slow the run: {} vs {}",
+            s2.ticks,
+            s1.ticks
+        );
+    }
+
+    #[test]
+    fn occupancy_scales_with_resident_lps() {
+        // 10 LPs on one machine: each event takes 10 ticks of busy time,
+        // so a single flood over a line is much slower than with 2 LPs.
+        let g = line_graph(10);
+        let inj = || vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) }];
+        let mut crowded = engine_on(&g, 1, vec![0; 10], inj(), SimOptions::default());
+        let c = crowded.run_to_completion();
+        // The single event costs ceil(10×1/1) = 10 busy ticks.
+        assert!(c.ticks >= 10, "crowded machine too fast: {} ticks", c.ticks);
+    }
+
+    #[test]
+    fn straggler_causes_rollback_cross_machine() {
+        // LP1 receives a fast local event chain advancing its clock, then
+        // a delayed cross-machine event with an older timestamp arrives.
+        let mut b = GraphBuilder::with_nodes(3);
+        b.add_edge(0, 1, 1.0).add_edge(1, 2, 1.0);
+        let g = b.build();
+        let injections = vec![
+            // Thread 1: starts at LP2 (same machine as LP1), timestamp 10,
+            // floods to LP1 quickly.
+            Injection { at_tick: 0, lp: 2, event: Event::injection(1, 10, 1) },
+            // Thread 2: starts at LP0 (other machine), OLD timestamp 1,
+            // floods to LP1 but arrives late due to inter-machine delay.
+            Injection { at_tick: 0, lp: 0, event: Event::injection(2, 1, 1) },
+        ];
+        let opts = SimOptions { inter_machine_delay: 8, ..Default::default() };
+        let mut e = engine_on(&g, 2, vec![1, 0, 0], injections, opts);
+        let stats = e.run_to_completion();
+        assert!(stats.rollbacks > 0, "expected a straggler rollback; stats: {stats:?}");
+        assert!(!stats.truncated);
+    }
+
+    #[test]
+    fn repartition_mid_run_changes_delays() {
+        let g = line_graph(6);
+        let inj =
+            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 5) }];
+        let machines = MachineConfig::homogeneous(2);
+        let part = Partition::from_assignment(&g, 2, vec![0, 1, 0, 1, 0, 1]);
+        let mut e = SimEngine::new(&g, machines, part, SimOptions::default(), inj);
+        // After a few ticks, collapse everything onto machine 0.
+        for _ in 0..3 {
+            e.step();
+        }
+        let better = Partition::from_assignment(&g, 2, vec![0; 6]);
+        e.set_partition(better);
+        let stats = e.run_to_completion();
+        assert!(!stats.truncated);
+        assert!(e.drained());
+    }
+
+    #[test]
+    fn load_traces_recorded() {
+        let g = line_graph(4);
+        let inj =
+            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 3) }];
+        let opts = SimOptions { trace_every: 1, ..Default::default() };
+        let mut e = engine_on(&g, 2, vec![0, 0, 1, 1], inj, opts);
+        let _ = e.run_to_completion();
+        assert_eq!(e.load_traces().len(), 2);
+        assert!(e.load_traces()[0].len() > 0);
+    }
+
+    #[test]
+    fn gvt_monotone_nondecreasing() {
+        let g = line_graph(8);
+        let injections: Vec<Injection> = (0..4)
+            .map(|t| Injection {
+                at_tick: t * 2,
+                lp: (t as usize) * 2,
+                event: Event::injection(t + 1, t * 5, 2),
+            })
+            .collect();
+        let mut e = engine_on(&g, 2, vec![0, 0, 0, 0, 1, 1, 1, 1], injections, SimOptions::default());
+        let mut last_gvt = 0;
+        while e.step() {
+            assert!(e.gvt() >= last_gvt, "GVT regressed: {} -> {}", last_gvt, e.gvt());
+            last_gvt = e.gvt();
+        }
+    }
+
+    #[test]
+    fn late_injections_arrive() {
+        let g = line_graph(3);
+        let injections = vec![
+            Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) },
+            Injection { at_tick: 50, lp: 2, event: Event::injection(2, 100, 0) },
+        ];
+        let mut e = engine_on(&g, 1, vec![0; 3], injections, SimOptions::default());
+        let stats = e.run_to_completion();
+        assert_eq!(stats.events_processed, 2);
+        assert!(stats.ticks > 50);
+    }
+}

@@ -1,0 +1,150 @@
+//! Events of the limited-scope flooded packet-flow model (§6.1).
+//!
+//! Each packet flood is a **thread** of events with a unique id. An LP
+//! holds at most one live event per thread ("forward to all neighbors
+//! that have not yet received it"), so `(lp, thread)` identifies an
+//! event instance. Three kinds exist, mirroring the paper: forwarding
+//! events (`ProcessForward`, hop budget left), terminal events
+//! (`ProcessOnly`, hop budget exhausted) and anti-message `Rollback`
+//! events (the default type every optimistic simulator needs).
+
+/// Unique id of a packet-flood thread.
+pub type ThreadId = u64;
+
+/// Simulation (virtual) time.
+pub type SimTime = u64;
+
+/// Wall-clock tick count.
+pub type WallTime = u64;
+
+/// Event type (paper Table II `event-type`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Process and forward to unseen neighbors (hop budget > 0).
+    ProcessForward,
+    /// Process only; the flood stops here (hop budget = 0).
+    ProcessOnly,
+    /// Anti-message: cancel this thread at the receiver.
+    Rollback,
+}
+
+impl EventKind {
+    /// Base processing time in wall-clock ticks (`get_process_time` in
+    /// Fig. 4/6), before scaling by machine occupancy.
+    pub fn base_process_time(self, base: WallTime, rollback_base: WallTime) -> WallTime {
+        match self {
+            EventKind::ProcessForward | EventKind::ProcessOnly => base,
+            EventKind::Rollback => rollback_base,
+        }
+    }
+}
+
+/// One event in an LP's event list (paper Table II columns `event-list`,
+/// `event-time`, `event-type`, `event-tick`, `event-count`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    /// Thread (packet flood) this event belongs to.
+    pub thread: ThreadId,
+    /// Execution timestamp in simulation time.
+    pub time: SimTime,
+    pub kind: EventKind,
+    /// Remaining wall-clock ticks before this event becomes processable
+    /// (models event-transfer delay; decremented once per tick).
+    pub tick: WallTime,
+    /// Remaining hop budget of the flood (`event-count`).
+    pub count: u32,
+}
+
+impl Event {
+    /// A fresh packet injection at `lp`-side with full hop budget.
+    pub fn injection(thread: ThreadId, time: SimTime, hops: u32) -> Event {
+        Event {
+            thread,
+            time,
+            kind: if hops > 0 { EventKind::ProcessForward } else { EventKind::ProcessOnly },
+            tick: 0,
+            count: hops,
+        }
+    }
+
+    /// The event forwarded to a neighbor: one hop consumed, timestamp
+    /// advanced by the per-hop simulation latency, wall-clock arrival
+    /// delayed by `transfer_delay`.
+    pub fn forwarded(&self, hop_latency: SimTime, transfer_delay: WallTime) -> Event {
+        debug_assert!(self.count > 0, "forwarding an exhausted event");
+        let count = self.count - 1;
+        Event {
+            thread: self.thread,
+            time: self.time + hop_latency,
+            kind: if count > 0 { EventKind::ProcessForward } else { EventKind::ProcessOnly },
+            tick: transfer_delay,
+            count,
+        }
+    }
+
+    /// The anti-message cancelling this event at its receiver.
+    pub fn rollback_for(&self, transfer_delay: WallTime) -> Event {
+        Event {
+            thread: self.thread,
+            time: self.time,
+            kind: EventKind::Rollback,
+            tick: transfer_delay,
+            count: 0,
+        }
+    }
+
+    /// Ready to process this tick?
+    #[inline]
+    pub fn ready(&self) -> bool {
+        self.tick == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injection_kind_follows_hops() {
+        assert_eq!(Event::injection(1, 10, 3).kind, EventKind::ProcessForward);
+        assert_eq!(Event::injection(1, 10, 0).kind, EventKind::ProcessOnly);
+    }
+
+    #[test]
+    fn forwarding_consumes_hop_and_advances_time() {
+        let e = Event::injection(7, 100, 2);
+        let f = e.forwarded(1, 3);
+        assert_eq!(f.thread, 7);
+        assert_eq!(f.time, 101);
+        assert_eq!(f.count, 1);
+        assert_eq!(f.tick, 3);
+        assert_eq!(f.kind, EventKind::ProcessForward);
+        let g = f.forwarded(1, 0);
+        assert_eq!(g.kind, EventKind::ProcessOnly);
+        assert_eq!(g.count, 0);
+    }
+
+    #[test]
+    fn rollback_carries_thread_and_time() {
+        let e = Event::injection(9, 55, 1);
+        let r = e.rollback_for(2);
+        assert_eq!(r.kind, EventKind::Rollback);
+        assert_eq!(r.thread, 9);
+        assert_eq!(r.time, 55);
+        assert_eq!(r.tick, 2);
+    }
+
+    #[test]
+    fn readiness_follows_tick() {
+        let mut e = Event::injection(1, 1, 1);
+        assert!(e.ready());
+        e.tick = 2;
+        assert!(!e.ready());
+    }
+
+    #[test]
+    fn process_time_by_kind() {
+        assert_eq!(EventKind::ProcessForward.base_process_time(4, 2), 4);
+        assert_eq!(EventKind::Rollback.base_process_time(4, 2), 2);
+    }
+}

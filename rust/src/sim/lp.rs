@@ -1,0 +1,431 @@
+//! Logical-process state (paper Table II) and per-LP operations.
+//!
+//! Each LP carries its pending event list, the history of processed
+//! events (needed for rollback), its local virtual time, and its busy
+//! state. The LP-level operations implemented here are the bodies of the
+//! paper's Fig. 4 (`Process_noncausal_event`) and Fig. 5
+//! (`Process_rollback_event`), restructured as pure state transitions
+//! that *return* the anti-messages to send so the engine owns all
+//! message routing.
+
+use std::collections::HashSet;
+
+use crate::graph::NodeId;
+use crate::sim::event::{Event, EventKind, SimTime, ThreadId, WallTime};
+
+/// A processed event retained for possible rollback, together with the
+/// forwards it generated (so anti-messages can chase them).
+#[derive(Debug, Clone)]
+pub struct HistoryEntry {
+    pub event: Event,
+    /// Neighbors this event's processing forwarded the thread to.
+    pub forwarded_to: Vec<NodeId>,
+}
+
+/// Busy state: the event being processed and ticks remaining.
+#[derive(Debug, Clone, Copy)]
+pub struct Busy {
+    pub event: Event,
+    pub remaining: WallTime,
+}
+
+/// Outcome of selecting and starting the next event on an LP.
+#[derive(Debug)]
+pub enum StartOutcome {
+    /// Nothing ready (empty list or all events still delayed).
+    Nothing,
+    /// Started processing a (causal or straggler) event; anti-messages
+    /// in `.cancellations` must be delivered by the engine.
+    Started { rolled_back: usize, cancellations: Vec<(NodeId, Event)> },
+    /// Consumed a rollback anti-message; may itself cascade.
+    RolledBack { rolled_back: usize, cancellations: Vec<(NodeId, Event)> },
+}
+
+/// One logical process (Table II).
+#[derive(Debug, Clone, Default)]
+pub struct Lp {
+    /// Pending events (`event-list` + parallel columns of Table II).
+    pub pending: Vec<Event>,
+    /// Processed-event history (`*-history` columns).
+    pub history: Vec<HistoryEntry>,
+    /// Threads present in `pending` or `history` — the "has it received
+    /// this packet yet" test used by the flood-forwarding rule.
+    pub seen: HashSet<ThreadId>,
+    /// Local virtual time (timestamp of last/current processed event).
+    pub local_time: SimTime,
+    /// Busy processing state (`status?`, `busy-tick`).
+    pub busy: Option<Busy>,
+    /// Rollback counter (statistics).
+    pub rollbacks: u64,
+}
+
+impl Lp {
+    /// Enqueue an arriving event. Rollback anti-messages may annihilate
+    /// a pending event immediately (standard Time Warp optimization);
+    /// everything else just joins the list.
+    pub fn receive(&mut self, ev: Event) {
+        if ev.kind == EventKind::Rollback {
+            // Annihilate in-flight (pending) twin if present.
+            if let Some(pos) =
+                self.pending.iter().position(|p| p.thread == ev.thread && p.kind != EventKind::Rollback)
+            {
+                self.pending.swap_remove(pos);
+                self.seen.remove(&ev.thread);
+                return;
+            }
+        } else {
+            self.seen.insert(ev.thread);
+        }
+        self.pending.push(ev);
+    }
+
+    /// Has this LP seen the thread (pending or processed)? This is the
+    /// flood-forwarding filter of Fig. 6.
+    pub fn has_seen(&self, thread: ThreadId) -> bool {
+        self.seen.contains(&thread)
+    }
+
+    /// Index of the ready pending event with the lowest timestamp
+    /// (rollbacks win ties so cancellations happen promptly).
+    fn next_ready(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.pending.iter().enumerate() {
+            if !e.ready() {
+                continue;
+            }
+            match best {
+                Some(b) => {
+                    let eb = &self.pending[b];
+                    let earlier = e.time < eb.time
+                        || (e.time == eb.time
+                            && e.kind == EventKind::Rollback
+                            && eb.kind != EventKind::Rollback);
+                    if earlier {
+                        best = Some(i);
+                    }
+                }
+                None => best = Some(i),
+            }
+        }
+        best
+    }
+
+    /// Roll local state back so that all history entries with
+    /// `event.time > horizon` return to the pending list; returns the
+    /// anti-messages for the forwards those entries had generated.
+    /// (Body of Fig. 4's restoration loop.)
+    fn rollback_to(&mut self, horizon: SimTime, transfer_delay: WallTime) -> (usize, Vec<(NodeId, Event)>) {
+        let mut cancellations = Vec::new();
+        let mut restored = 0;
+        let mut kept = Vec::with_capacity(self.history.len());
+        for entry in self.history.drain(..) {
+            if entry.event.time > horizon {
+                restored += 1;
+                for &nb in &entry.forwarded_to {
+                    // Anti-messages match on thread id at the receiver, so
+                    // the parent event's own (thread, time) is sufficient.
+                    cancellations.push((nb, entry.event.rollback_for(transfer_delay)));
+                }
+                // The event returns to the pending list to be re-executed.
+                self.pending.push(Event { tick: 0, ..entry.event });
+            } else {
+                kept.push(entry);
+            }
+        }
+        self.history = kept;
+        // Local time falls back to the horizon.
+        self.local_time = self.local_time.min(horizon);
+        if restored > 0 {
+            self.rollbacks += 1;
+        }
+        (restored, cancellations)
+    }
+
+    /// Consume a rollback anti-message aimed at `thread` (Fig. 5): if the
+    /// thread was already processed, roll back past it and drop it; the
+    /// annihilation-in-pending case is handled in [`receive`].
+    fn process_rollback(&mut self, ev: Event, transfer_delay: WallTime) -> (usize, Vec<(NodeId, Event)>) {
+        // Find the processed instance of this thread.
+        if let Some(pos) = self.history.iter().position(|h| h.event.thread == ev.thread) {
+            let target_time = self.history[pos].event.time;
+            // Undo everything after (and including) the cancelled event.
+            let (restored, mut cancellations) =
+                self.rollback_to(target_time.saturating_sub(1), transfer_delay);
+            // The cancelled thread itself must not be re-executed: drop it
+            // from pending (rollback_to restored it) and un-see it.
+            if let Some(p) = self
+                .pending
+                .iter()
+                .position(|p| p.thread == ev.thread && p.kind != EventKind::Rollback)
+            {
+                self.pending.swap_remove(p);
+            }
+            self.seen.remove(&ev.thread);
+            // Cancellations for the dropped event's own forwards were
+            // already produced by rollback_to (it was in the restored set).
+            return (restored, std::mem::take(&mut cancellations));
+        }
+        // Late anti-message for a thread we never processed (its twin was
+        // annihilated in pending, or never arrived): nothing to do.
+        (0, Vec::new())
+    }
+
+    /// Select the next ready event and start processing it — the Fig. 6
+    /// idle-branch. `occupancy_cost` is the busy time charged for the
+    /// event (already scaled by machine occupancy by the engine).
+    pub fn start_next(
+        &mut self,
+        occupancy_cost: impl Fn(EventKind) -> WallTime,
+        transfer_delay: WallTime,
+    ) -> StartOutcome {
+        debug_assert!(self.busy.is_none());
+        let Some(idx) = self.next_ready() else {
+            return StartOutcome::Nothing;
+        };
+        let ev = self.pending.swap_remove(idx);
+        match ev.kind {
+            EventKind::Rollback => {
+                let (rolled_back, cancellations) = self.process_rollback(ev, transfer_delay);
+                // Rollback handling occupies the LP (synchronization
+                // overhead): busy for its base cost.
+                self.busy = Some(Busy { event: ev, remaining: occupancy_cost(EventKind::Rollback).max(1) });
+                StartOutcome::RolledBack { rolled_back, cancellations }
+            }
+            _ => {
+                let mut rolled_back = 0;
+                let mut cancellations = Vec::new();
+                if ev.time < self.local_time {
+                    // Straggler — Fig. 4 Process_noncausal_event.
+                    let (r, c) = self.rollback_to(ev.time, transfer_delay);
+                    rolled_back = r;
+                    cancellations = c;
+                }
+                self.local_time = self.local_time.max(ev.time);
+                self.busy = Some(Busy { event: ev, remaining: occupancy_cost(ev.kind).max(1) });
+                StartOutcome::Started { rolled_back, cancellations }
+            }
+        }
+    }
+
+    /// Advance the busy timer by one tick; returns the completed event
+    /// when processing finishes this tick.
+    pub fn tick_busy(&mut self) -> Option<Event> {
+        let busy = self.busy.as_mut()?;
+        busy.remaining -= 1;
+        if busy.remaining == 0 {
+            let ev = busy.event;
+            self.busy = None;
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    /// Record a completed non-rollback event into history together with
+    /// the forwards it generated.
+    pub fn retire(&mut self, event: Event, forwarded_to: Vec<NodeId>) {
+        debug_assert_ne!(event.kind, EventKind::Rollback);
+        self.history.push(HistoryEntry { event, forwarded_to });
+    }
+
+    /// Decrement transfer-delay ticks of pending events (Fig. 6 epilogue).
+    pub fn tick_delays(&mut self) {
+        for e in &mut self.pending {
+            if e.tick > 0 {
+                e.tick -= 1;
+            }
+        }
+    }
+
+    /// Fossil collection (App. B): drop history entries strictly older
+    /// than the global virtual time — no rollback can ever reach them.
+    pub fn fossil_collect(&mut self, gvt: SimTime) {
+        self.history.retain(|h| h.event.time >= gvt);
+    }
+
+    /// Lowest timestamp among pending events (regardless of delay), used
+    /// in the GVT computation.
+    pub fn min_pending_time(&self) -> Option<SimTime> {
+        self.pending.iter().map(|e| e.time).min()
+    }
+
+    /// Is the LP completely drained?
+    pub fn idle_and_empty(&self) -> bool {
+        self.busy.is_none() && self.pending.is_empty()
+    }
+
+    /// Current queue length (the paper's dynamic node weight b_i, §6.1).
+    pub fn queue_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(_k: EventKind) -> WallTime {
+        2
+    }
+
+    #[test]
+    fn receive_tracks_seen() {
+        let mut lp = Lp::default();
+        lp.receive(Event::injection(5, 10, 2));
+        assert!(lp.has_seen(5));
+        assert!(!lp.has_seen(6));
+    }
+
+    #[test]
+    fn rollback_annihilates_pending_twin() {
+        let mut lp = Lp::default();
+        let e = Event::injection(5, 10, 2);
+        lp.receive(e);
+        lp.receive(e.rollback_for(0));
+        assert!(lp.pending.is_empty(), "twin should annihilate");
+        assert!(!lp.has_seen(5));
+    }
+
+    #[test]
+    fn starts_lowest_timestamp_first() {
+        let mut lp = Lp::default();
+        lp.receive(Event::injection(1, 30, 1));
+        lp.receive(Event::injection(2, 10, 1));
+        match lp.start_next(cost, 0) {
+            StartOutcome::Started { .. } => {}
+            other => panic!("expected start, got {other:?}"),
+        }
+        assert_eq!(lp.busy.unwrap().event.thread, 2);
+        assert_eq!(lp.local_time, 10);
+    }
+
+    #[test]
+    fn delayed_events_not_ready() {
+        let mut lp = Lp::default();
+        let mut e = Event::injection(1, 5, 1);
+        e.tick = 2;
+        lp.receive(e);
+        assert!(matches!(lp.start_next(cost, 0), StartOutcome::Nothing));
+        lp.tick_delays();
+        lp.tick_delays();
+        assert!(matches!(lp.start_next(cost, 0), StartOutcome::Started { .. }));
+    }
+
+    #[test]
+    fn busy_ticks_down_and_completes() {
+        let mut lp = Lp::default();
+        lp.receive(Event::injection(1, 5, 0));
+        let _ = lp.start_next(cost, 0);
+        assert!(lp.tick_busy().is_none());
+        let done = lp.tick_busy().expect("completes after 2 ticks");
+        assert_eq!(done.thread, 1);
+        assert!(lp.busy.is_none());
+    }
+
+    #[test]
+    fn straggler_triggers_rollback_and_antimessages() {
+        let mut lp = Lp::default();
+        // Process event at t=20 that forwarded to neighbor 3.
+        lp.local_time = 20;
+        lp.seen.insert(9);
+        lp.retire(
+            Event { thread: 9, time: 20, kind: EventKind::ProcessForward, tick: 0, count: 1 },
+            vec![3],
+        );
+        // Straggler at t=10 arrives.
+        lp.receive(Event::injection(4, 10, 0));
+        match lp.start_next(cost, 1) {
+            StartOutcome::Started { rolled_back, cancellations } => {
+                assert_eq!(rolled_back, 1);
+                assert_eq!(cancellations.len(), 1);
+                assert_eq!(cancellations[0].0, 3);
+                assert_eq!(cancellations[0].1.kind, EventKind::Rollback);
+                assert_eq!(cancellations[0].1.thread, 9);
+            }
+            other => panic!("expected Started, got {other:?}"),
+        }
+        // The rolled-back event is pending again; local time fell back.
+        assert!(lp.pending.iter().any(|e| e.thread == 9));
+        assert_eq!(lp.local_time, 10);
+        assert_eq!(lp.rollbacks, 1);
+    }
+
+    #[test]
+    fn rollback_event_on_processed_thread_cascades() {
+        let mut lp = Lp::default();
+        lp.local_time = 30;
+        lp.seen.insert(1);
+        lp.seen.insert(2);
+        lp.retire(
+            Event { thread: 1, time: 10, kind: EventKind::ProcessForward, tick: 0, count: 1 },
+            vec![7],
+        );
+        lp.retire(
+            Event { thread: 2, time: 20, kind: EventKind::ProcessOnly, tick: 0, count: 0 },
+            vec![],
+        );
+        // Anti-message for thread 1 (t=10): must undo thread 2 as well.
+        lp.receive(Event {
+            thread: 1,
+            time: 10,
+            kind: EventKind::Rollback,
+            tick: 0,
+            count: 0,
+        });
+        match lp.start_next(cost, 0) {
+            StartOutcome::RolledBack { rolled_back, cancellations } => {
+                assert_eq!(rolled_back, 2);
+                // Thread 1's forward to 7 must be chased.
+                assert!(cancellations.iter().any(|(n, e)| *n == 7 && e.thread == 1));
+            }
+            other => panic!("expected RolledBack, got {other:?}"),
+        }
+        // Thread 1 is gone (unseen), thread 2 restored to pending.
+        assert!(!lp.has_seen(1));
+        assert!(lp.pending.iter().any(|e| e.thread == 2));
+        assert!(!lp.pending.iter().any(|e| e.thread == 1 && e.kind != EventKind::Rollback));
+    }
+
+    #[test]
+    fn fossil_collection_drops_old_history() {
+        let mut lp = Lp::default();
+        for t in [5u64, 10, 15] {
+            lp.retire(
+                Event { thread: t, time: t, kind: EventKind::ProcessOnly, tick: 0, count: 0 },
+                vec![],
+            );
+        }
+        lp.fossil_collect(10);
+        assert_eq!(lp.history.len(), 2);
+        assert!(lp.history.iter().all(|h| h.event.time >= 10));
+    }
+
+    #[test]
+    fn late_antimessage_is_harmless() {
+        let mut lp = Lp::default();
+        lp.receive(Event {
+            thread: 42,
+            time: 5,
+            kind: EventKind::Rollback,
+            tick: 0,
+            count: 0,
+        });
+        match lp.start_next(cost, 0) {
+            StartOutcome::RolledBack { rolled_back, cancellations } => {
+                assert_eq!(rolled_back, 0);
+                assert!(cancellations.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn min_pending_time_and_drain() {
+        let mut lp = Lp::default();
+        assert!(lp.idle_and_empty());
+        lp.receive(Event::injection(1, 9, 0));
+        lp.receive(Event::injection(2, 4, 0));
+        assert_eq!(lp.min_pending_time(), Some(4));
+        assert!(!lp.idle_and_empty());
+    }
+}

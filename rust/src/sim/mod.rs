@@ -1,0 +1,25 @@
+//! Software model of an optimistic (Time Warp) parallel discrete-event
+//! simulator — the paper's evaluation testbed (§6, Appendix B),
+//! re-implemented natively from the NetLogo pseudocode (Figs. 4–6,
+//! Tables II–III).
+//!
+//! The model advances in **wall-clock ticks**. Each LP optimistically
+//! processes the lowest-timestamped ready event in its list; processing
+//! occupies the LP for `(#LPs resident on its machine) × process-time`
+//! ticks (machine speed inversely proportional to resident LPs, §6.1).
+//! Cross-machine event transfer pays an `event-tick` wall-clock delay,
+//! which is what makes late-arriving stragglers — and thus rollbacks —
+//! more likely across a bad partition. The output of a run is the total
+//! number of wall-clock ticks to drain all event lists: the paper's
+//! *simulation time* metric (Figs. 7–10).
+
+pub mod driver;
+pub mod engine;
+pub mod event;
+pub mod lp;
+pub mod weights;
+pub mod workload;
+
+pub use engine::{SimEngine, SimOptions, SimStats};
+pub use event::{Event, EventKind, ThreadId};
+pub use workload::{FloodWorkload, WorkloadOptions};

@@ -1,0 +1,152 @@
+//! Dynamic LP-graph weight estimation (paper §6.1).
+//!
+//! Before each refinement the simulator measures:
+//! * node weight `b_i` = current event-list length of LP `i` (its
+//!   outstanding computational load), and
+//! * edge weight `c_ij` = "the sum of the number of events in `i` and
+//!   `j` that generate events in `j` and `i` respectively" — i.e. the
+//!   pending events at `i` that will flood to `j` (forwarding budget
+//!   left and `j` has not seen the thread) plus the symmetric count.
+//!
+//! A small floor keeps weights strictly positive so the cost functions
+//! stay well-behaved on idle regions.
+
+use crate::graph::Graph;
+use crate::sim::engine::SimEngine;
+use crate::sim::event::EventKind;
+
+/// Measured weights, ready to install into a [`Graph`].
+#[derive(Debug, Clone)]
+pub struct MeasuredWeights {
+    pub node_weights: Vec<f64>,
+    /// `(u, v, c_uv)` for every graph edge (u < v).
+    pub edge_weights: Vec<(usize, usize, f64)>,
+}
+
+/// Floor applied to measured node weights (an idle LP still costs a
+/// little to host).
+pub const NODE_WEIGHT_FLOOR: f64 = 0.25;
+/// Floor applied to measured edge weights.
+pub const EDGE_WEIGHT_FLOOR: f64 = 0.0;
+
+/// Measure weights from the engine's live LP state.
+pub fn measure(engine: &SimEngine) -> MeasuredWeights {
+    let g = engine.graph();
+    let lps = engine.lps();
+    let n = g.node_count();
+
+    let node_weights: Vec<f64> =
+        (0..n).map(|i| (lps[i].queue_len() as f64).max(NODE_WEIGHT_FLOOR)).collect();
+
+    let mut edge_weights = Vec::with_capacity(g.edge_count());
+    for (u, v, _) in g.edges() {
+        let mut c: f64 = 0.0;
+        // Events in u that will generate events in v:
+        for ev in &lps[u].pending {
+            if ev.kind == EventKind::ProcessForward
+                && ev.count > 0
+                && !lps[v].has_seen(ev.thread)
+            {
+                c += 1.0;
+            }
+        }
+        // ... and symmetrically.
+        for ev in &lps[v].pending {
+            if ev.kind == EventKind::ProcessForward
+                && ev.count > 0
+                && !lps[u].has_seen(ev.thread)
+            {
+                c += 1.0;
+            }
+        }
+        edge_weights.push((u, v, c.max(EDGE_WEIGHT_FLOOR)));
+    }
+    MeasuredWeights { node_weights, edge_weights }
+}
+
+/// Install measured weights into a graph (the LP graph used by the
+/// refinement engine).
+pub fn install(graph: &mut Graph, weights: &MeasuredWeights) {
+    graph.set_node_weights(&weights.node_weights);
+    for &(u, v, c) in &weights.edge_weights {
+        graph.set_edge_weight(u, v, c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::partition::{MachineConfig, Partition};
+    use crate::sim::engine::{Injection, SimEngine, SimOptions};
+    use crate::sim::event::Event;
+
+    fn setup() -> (Graph, Vec<Injection>) {
+        let mut b = GraphBuilder::with_nodes(4);
+        b.add_edge(0, 1, 1.0).add_edge(1, 2, 1.0).add_edge(2, 3, 1.0);
+        let g = b.build();
+        let inj = vec![
+            Injection { at_tick: 0, lp: 0, event: Event::injection(1, 5, 3) },
+            Injection { at_tick: 0, lp: 0, event: Event::injection(2, 9, 3) },
+        ];
+        (g, inj)
+    }
+
+    #[test]
+    fn queue_lengths_become_node_weights() {
+        let (g, inj) = setup();
+        let machines = MachineConfig::homogeneous(2);
+        let part = Partition::from_assignment(&g, 2, vec![0, 0, 1, 1]);
+        let mut e = SimEngine::new(&g, machines, part, SimOptions::default(), inj);
+        e.step(); // inject both events at LP0
+        let w = measure(&e);
+        // LP0 has 1-2 pending (one may have started processing).
+        assert!(w.node_weights[0] >= 1.0);
+        // Idle LPs get the floor.
+        assert_eq!(w.node_weights[3], NODE_WEIGHT_FLOOR);
+    }
+
+    #[test]
+    fn forwarding_pressure_creates_edge_weight() {
+        let (g, inj) = setup();
+        let machines = MachineConfig::homogeneous(1);
+        let part = Partition::from_assignment(&g, 1, vec![0; 4]);
+        let mut e = SimEngine::new(&g, machines, part, SimOptions::default(), inj);
+        e.step();
+        let w = measure(&e);
+        // Edge (0,1): pending forward events at 0 target unseen neighbor 1.
+        let c01 = w
+            .edge_weights
+            .iter()
+            .find(|&&(u, v, _)| (u, v) == (0, 1))
+            .map(|&(_, _, c)| c)
+            .unwrap();
+        assert!(c01 >= 1.0, "expected forwarding pressure on (0,1): {c01}");
+        // Edge (2,3): no events near it yet.
+        let c23 = w
+            .edge_weights
+            .iter()
+            .find(|&&(u, v, _)| (u, v) == (2, 3))
+            .map(|&(_, _, c)| c)
+            .unwrap();
+        assert_eq!(c23, EDGE_WEIGHT_FLOOR);
+    }
+
+    #[test]
+    fn install_round_trips() {
+        let (mut g, inj) = setup();
+        let machines = MachineConfig::homogeneous(1);
+        let part = Partition::from_assignment(&g, 1, vec![0; 4]);
+        let g_sim = g.clone();
+        let mut e = SimEngine::new(&g_sim, machines, part, SimOptions::default(), inj);
+        e.step();
+        let w = measure(&e);
+        install(&mut g, &w);
+        for (i, &nw) in w.node_weights.iter().enumerate() {
+            assert_eq!(g.node_weight(i), nw);
+        }
+        for &(u, v, c) in &w.edge_weights {
+            assert_eq!(g.edge_weight(u, v), Some(c));
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Limited-scope flooded packet-flow workload with moving hot spots
+//! (paper §6.1).
+//!
+//! Packets are generated at random simulation times by randomly chosen
+//! LPs and flood the network for a bounded number of hops. To make the
+//! load *dynamic* — the scenario the iterative repartitioner exists for —
+//! the generator concentrates bursts of packets inside "hot spots":
+//! BFS balls around randomly drawn centers that relocate every
+//! `hot_spot_period` wall-clock ticks, exactly the "clusters of nodes
+//! that generate large amounts of traffic over a short period, whose
+//! locations change regularly" of §6.1.
+
+use crate::graph::{metrics, Graph, NodeId};
+use crate::sim::engine::Injection;
+use crate::sim::event::Event;
+use crate::util::rng::Pcg32;
+
+/// Workload shape parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadOptions {
+    /// Total packet-flood threads injected.
+    pub threads: usize,
+    /// Hop budget of each flood (`event-count`).
+    pub hop_limit: u32,
+    /// Wall-clock horizon across which injections are spread.
+    pub horizon_ticks: u64,
+    /// Number of simultaneous hot spots (0 = uniform traffic).
+    pub hot_spots: usize,
+    /// Ticks between hot-spot relocations.
+    pub hot_spot_period: u64,
+    /// Radius (hops) of each hot-spot BFS ball.
+    pub hot_spot_radius: usize,
+    /// Fraction of threads drawn from hot spots (rest uniform).
+    pub hot_fraction: f64,
+    /// Spread of simulation timestamps: ts uniform in
+    /// `[at_tick · ts_rate, at_tick · ts_rate + ts_jitter]`, keeping
+    /// virtual time loosely coupled to wall time.
+    pub ts_rate: f64,
+    pub ts_jitter: u64,
+}
+
+impl Default for WorkloadOptions {
+    fn default() -> Self {
+        WorkloadOptions {
+            threads: 60,
+            hop_limit: 4,
+            horizon_ticks: 2_000,
+            hot_spots: 3,
+            hot_spot_period: 400,
+            hot_spot_radius: 2,
+            hot_fraction: 0.8,
+            ts_rate: 0.5,
+            ts_jitter: 8,
+        }
+    }
+}
+
+/// Generated workload: the injection schedule plus the hot-spot timeline
+/// (kept for analysis / plotting).
+#[derive(Debug, Clone)]
+pub struct FloodWorkload {
+    pub injections: Vec<Injection>,
+    /// For each relocation epoch: the hot-spot member sets.
+    pub hot_spot_epochs: Vec<Vec<Vec<NodeId>>>,
+}
+
+/// Nodes within `radius` hops of `center`.
+fn bfs_ball(g: &Graph, center: NodeId, radius: usize) -> Vec<NodeId> {
+    let d = metrics::bfs_distances(g, center);
+    (0..g.node_count()).filter(|&u| d[u] <= radius).collect()
+}
+
+impl FloodWorkload {
+    /// Generate a schedule over the given graph.
+    pub fn generate(g: &Graph, options: &WorkloadOptions, rng: &mut Pcg32) -> FloodWorkload {
+        let n = g.node_count();
+        assert!(n > 0 && options.threads > 0);
+        let epochs = if options.hot_spots == 0 {
+            1
+        } else {
+            (options.horizon_ticks / options.hot_spot_period.max(1)).max(1) as usize
+        };
+        // Draw hot-spot balls per epoch.
+        let mut hot_spot_epochs: Vec<Vec<Vec<NodeId>>> = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            let spots: Vec<Vec<NodeId>> = (0..options.hot_spots)
+                .map(|_| bfs_ball(g, rng.index(n), options.hot_spot_radius))
+                .collect();
+            hot_spot_epochs.push(spots);
+        }
+
+        let mut injections = Vec::with_capacity(options.threads);
+        for thread in 0..options.threads {
+            let at_tick = rng.gen_range(0, options.horizon_ticks.saturating_sub(1).max(1));
+            let epoch = if options.hot_spots == 0 {
+                0
+            } else {
+                ((at_tick / options.hot_spot_period.max(1)) as usize).min(epochs - 1)
+            };
+            let lp = if options.hot_spots > 0 && rng.chance(options.hot_fraction) {
+                let spots = &hot_spot_epochs[epoch];
+                let spot = &spots[rng.index(spots.len())];
+                spot[rng.index(spot.len())]
+            } else {
+                rng.index(n)
+            };
+            let ts_base = (at_tick as f64 * options.ts_rate) as u64;
+            // jitter in [0, ts_jitter) — gen_range is inclusive.
+            let ts = ts_base + rng.gen_range(0, options.ts_jitter.max(1) - 1);
+            injections.push(Injection {
+                at_tick,
+                lp,
+                event: Event::injection(thread as u64 + 1, ts, options.hop_limit),
+            });
+        }
+        FloodWorkload { injections, hot_spot_epochs }
+    }
+
+    /// Number of injections.
+    pub fn len(&self) -> usize {
+        self.injections.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.injections.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::preferential_attachment;
+
+    fn graph() -> Graph {
+        let mut rng = Pcg32::new(1);
+        preferential_attachment(150, 2, &mut rng)
+    }
+
+    #[test]
+    fn generates_requested_threads_with_unique_ids() {
+        let g = graph();
+        let mut rng = Pcg32::new(2);
+        let w = FloodWorkload::generate(&g, &WorkloadOptions::default(), &mut rng);
+        assert_eq!(w.len(), 60);
+        let mut ids: Vec<u64> = w.injections.iter().map(|i| i.event.thread).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 60, "thread ids must be unique");
+    }
+
+    #[test]
+    fn injections_within_horizon_and_graph() {
+        let g = graph();
+        let mut rng = Pcg32::new(3);
+        let opts = WorkloadOptions { horizon_ticks: 500, ..Default::default() };
+        let w = FloodWorkload::generate(&g, &opts, &mut rng);
+        for inj in &w.injections {
+            assert!(inj.at_tick < 500);
+            assert!(inj.lp < g.node_count());
+            assert_eq!(inj.event.count, opts.hop_limit);
+        }
+    }
+
+    #[test]
+    fn hot_spots_concentrate_traffic() {
+        let g = graph();
+        let mut rng = Pcg32::new(4);
+        let opts = WorkloadOptions {
+            threads: 400,
+            hot_spots: 2,
+            hot_fraction: 0.9,
+            ..Default::default()
+        };
+        let w = FloodWorkload::generate(&g, &opts, &mut rng);
+        // Count how many injections land inside *some* epoch's hot spots.
+        let mut inside = 0;
+        for inj in &w.injections {
+            let epoch = ((inj.at_tick / opts.hot_spot_period) as usize)
+                .min(w.hot_spot_epochs.len() - 1);
+            if w.hot_spot_epochs[epoch].iter().any(|s| s.contains(&inj.lp)) {
+                inside += 1;
+            }
+        }
+        let frac = inside as f64 / w.len() as f64;
+        assert!(frac > 0.7, "hot fraction too low: {frac}");
+    }
+
+    #[test]
+    fn hot_spots_relocate_across_epochs() {
+        let g = graph();
+        let mut rng = Pcg32::new(5);
+        let opts = WorkloadOptions {
+            horizon_ticks: 2000,
+            hot_spot_period: 400,
+            ..Default::default()
+        };
+        let w = FloodWorkload::generate(&g, &opts, &mut rng);
+        assert!(w.hot_spot_epochs.len() >= 4);
+        // At least one pair of consecutive epochs differs.
+        let mut any_differ = false;
+        for pair in w.hot_spot_epochs.windows(2) {
+            if pair[0] != pair[1] {
+                any_differ = true;
+            }
+        }
+        assert!(any_differ, "hot spots never moved");
+    }
+
+    #[test]
+    fn uniform_mode_has_no_hot_spots() {
+        let g = graph();
+        let mut rng = Pcg32::new(6);
+        let opts = WorkloadOptions { hot_spots: 0, ..Default::default() };
+        let w = FloodWorkload::generate(&g, &opts, &mut rng);
+        assert_eq!(w.hot_spot_epochs.len(), 1);
+        assert_eq!(w.len(), opts.threads);
+    }
+
+    #[test]
+    fn timestamps_track_wall_clock() {
+        let g = graph();
+        let mut rng = Pcg32::new(7);
+        let opts = WorkloadOptions { ts_rate: 0.5, ts_jitter: 4, ..Default::default() };
+        let w = FloodWorkload::generate(&g, &opts, &mut rng);
+        for inj in &w.injections {
+            let base = (inj.at_tick as f64 * 0.5) as u64;
+            assert!(inj.event.time >= base && inj.event.time < base + 4);
+        }
+    }
+}

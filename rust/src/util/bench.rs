@@ -1,0 +1,267 @@
+//! Mini-criterion: a measurement harness for `cargo bench` targets.
+//!
+//! The offline vendor set has no `criterion`, so GTIP's benches are
+//! `harness = false` binaries built on this module. It reproduces the
+//! parts of criterion we rely on: warmup, adaptive iteration counts,
+//! outlier-robust summaries, throughput reporting, and stable text output
+//! that EXPERIMENTS.md quotes directly.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// Configuration for a benchmark group.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Wall-clock budget spent warming up each benchmark.
+    pub warmup: Duration,
+    /// Wall-clock budget for measurement.
+    pub measure: Duration,
+    /// Number of sample batches the measurement budget is divided into.
+    pub samples: usize,
+    /// Hard cap on total iterations (guards very slow benches).
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1500),
+            samples: 20,
+            max_iters: u64::MAX,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for end-to-end benches where one iteration is
+    /// already hundreds of milliseconds.
+    pub fn coarse() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(0),
+            measure: Duration::from_millis(1),
+            samples: 3,
+            max_iters: 3,
+        }
+    }
+}
+
+/// Result of measuring one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration time statistics (seconds).
+    pub per_iter: Summary,
+    pub total_iters: u64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub throughput_elems: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.per_iter.mean * 1e9
+    }
+
+    fn fmt_time(secs: f64) -> String {
+        if secs < 1e-6 {
+            format!("{:8.2} ns", secs * 1e9)
+        } else if secs < 1e-3 {
+            format!("{:8.2} µs", secs * 1e6)
+        } else if secs < 1.0 {
+            format!("{:8.2} ms", secs * 1e3)
+        } else {
+            format!("{secs:8.3} s ")
+        }
+    }
+
+    /// One-line report, criterion-style.
+    pub fn report_line(&self) -> String {
+        let mut line = format!(
+            "{:<48} time: [{} {} {}]  iters: {}",
+            self.name,
+            Self::fmt_time(self.per_iter.p05),
+            Self::fmt_time(self.per_iter.mean),
+            Self::fmt_time(self.per_iter.p95),
+            self.total_iters,
+        );
+        if let Some(elems) = self.throughput_elems {
+            let eps = elems as f64 / self.per_iter.mean;
+            line.push_str(&format!("  thrpt: {:.3e} elem/s", eps));
+        }
+        line
+    }
+}
+
+/// A benchmark group: owns config and collects results.
+pub struct Bencher {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+    group: String,
+}
+
+impl Bencher {
+    pub fn new(group: impl Into<String>) -> Self {
+        let group = group.into();
+        let mut config = BenchConfig::default();
+        // Environment knobs so `make bench` can run quick or thorough.
+        if let Ok(v) = std::env::var("GTIP_BENCH_MEASURE_MS") {
+            if let Ok(ms) = v.parse::<u64>() {
+                config.measure = Duration::from_millis(ms);
+            }
+        }
+        if let Ok(v) = std::env::var("GTIP_BENCH_WARMUP_MS") {
+            if let Ok(ms) = v.parse::<u64>() {
+                config.warmup = Duration::from_millis(ms);
+            }
+        }
+        println!("== bench group: {group} ==");
+        Bencher { config, results: Vec::new(), group }
+    }
+
+    pub fn with_config(mut self, config: BenchConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call and
+    /// returns a value that is black-boxed to keep the optimizer honest.
+    pub fn bench<T>(&mut self, name: impl Into<String>, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.bench_with_throughput(name, None, move || {
+            black_box(f());
+        })
+    }
+
+    /// Like [`bench`] but records elements/iteration for throughput.
+    pub fn bench_elems<T>(
+        &mut self,
+        name: impl Into<String>,
+        elems: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.bench_with_throughput(name, Some(elems), move || {
+            black_box(f());
+        })
+    }
+
+    fn bench_with_throughput(
+        &mut self,
+        name: impl Into<String>,
+        throughput_elems: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        let name = name.into();
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        loop {
+            f();
+            warm_iters += 1;
+            if warm_start.elapsed() >= self.config.warmup || warm_iters >= 1_000_000 {
+                break;
+            }
+        }
+        let est_per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Choose iterations per sample so that samples fill the budget.
+        let budget = self.config.measure.as_secs_f64().max(est_per_iter);
+        let total_target =
+            ((budget / est_per_iter).ceil() as u64).clamp(self.config.samples as u64, self.config.max_iters);
+        let iters_per_sample = (total_target / self.config.samples as u64).max(1);
+
+        let mut sample_times = Vec::with_capacity(self.config.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            sample_times.push(dt / iters_per_sample as f64);
+            total_iters += iters_per_sample;
+            if total_iters >= self.config.max_iters {
+                break;
+            }
+        }
+
+        let per_iter = Summary::of(&sample_times).expect("no samples");
+        let result = BenchResult { name, per_iter, total_iters, throughput_elems };
+        println!("{}", result.report_line());
+        self.results.push(result);
+        self.results.last().expect("just pushed")
+    }
+
+    /// All results measured so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write results as CSV to `results/bench_<group>.csv`.
+    pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("results")?;
+        let path = std::path::PathBuf::from(format!("results/bench_{}.csv", self.group));
+        let mut out = String::from("name,mean_s,p05_s,p95_s,std_s,iters,elems_per_iter\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                r.name,
+                r.per_iter.mean,
+                r.per_iter.p05,
+                r.per_iter.p95,
+                r.per_iter.std_dev,
+                r.total_iters,
+                r.throughput_elems.map(|e| e.to_string()).unwrap_or_default()
+            ));
+        }
+        std::fs::write(&path, out)?;
+        println!("(wrote {})", path.display());
+        Ok(path)
+    }
+}
+
+/// Optimizer barrier, same contract as `std::hint::black_box` (which is
+/// stable since 1.66 — we wrap it so benches read like criterion code).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 5,
+            max_iters: u64::MAX,
+        };
+        let mut b = Bencher::new("selftest").with_config(cfg);
+        let r = b.bench("sum_1k", || (0..1000u64).sum::<u64>());
+        assert!(r.per_iter.mean > 0.0);
+        assert!(r.total_iters >= 5);
+    }
+
+    #[test]
+    fn coarse_config_caps_iters() {
+        let mut b = Bencher::new("selftest2").with_config(BenchConfig::coarse());
+        let r = b.bench("slowish", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.total_iters <= 3);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(5),
+            samples: 3,
+            max_iters: u64::MAX,
+        };
+        let mut b = Bencher::new("selftest3").with_config(cfg);
+        let r = b.bench_elems("elems", 1234, || 42u32);
+        assert_eq!(r.throughput_elems, Some(1234));
+        assert!(r.report_line().contains("thrpt"));
+    }
+}

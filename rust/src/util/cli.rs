@@ -1,0 +1,201 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports the subset GTIP needs: positional subcommands, `--flag`,
+//! `--key value` / `--key=value` options with typed accessors and
+//! defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand path + options + flags + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Error type for CLI parsing/lookup.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    MissingOption(String),
+    #[error("invalid value for --{key}: {value:?} ({reason})")]
+    InvalidValue { key: String, value: String, reason: String },
+    #[error("unexpected argument {0:?}")]
+    Unexpected(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    // `--` ends option parsing; remainder is positional.
+                    args.positionals.extend(iter);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().expect("peeked");
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if a.starts_with('-') && a.len() > 1 && !a[1..2].chars().all(|c| c.is_ascii_digit()) {
+                return Err(CliError::Unexpected(a));
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args, CliError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt_str(name).unwrap_or(default)
+    }
+
+    pub fn req_str(&self, name: &str) -> Result<&str, CliError> {
+        self.opt_str(name).ok_or_else(|| CliError::MissingOption(name.to_string()))
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str, v: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        v.parse::<T>().map_err(|e| CliError::InvalidValue {
+            key: name.to_string(),
+            value: v.to_string(),
+            reason: e.to_string(),
+        })
+    }
+
+    pub fn opt<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(self.parse_as::<T>(name, v)?)),
+        }
+    }
+
+    pub fn opt_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt::<T>(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list option, e.g. `--speeds 0.1,0.2,0.3`.
+    pub fn opt_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(v) => {
+                let mut out = Vec::new();
+                for part in v.split(',').filter(|p| !p.is_empty()) {
+                    out.push(self.parse_as::<T>(name, part)?);
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+
+    /// First positional (typically the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_subcommand() {
+        let a = parse(&["experiment", "table1"]);
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.positionals, vec!["experiment", "table1"]);
+    }
+
+    #[test]
+    fn options_both_syntaxes() {
+        let a = parse(&["--nodes", "230", "--mu=8.0"]);
+        assert_eq!(a.opt_or::<usize>("nodes", 0).unwrap(), 230);
+        assert_eq!(a.opt_or::<f64>("mu", 0.0).unwrap(), 8.0);
+    }
+
+    #[test]
+    fn flags_detected() {
+        let a = parse(&["run", "--verbose", "--seed", "5"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.opt_or::<u64>("seed", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--speeds", "0.1,0.2,0.3,0.3,0.1"]);
+        let v: Vec<f64> = a.opt_list("speeds").unwrap().unwrap();
+        assert_eq!(v.len(), 5);
+        assert!((v.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_numbers_are_positional() {
+        let a = parse(&["-5"]);
+        assert_eq!(a.positionals, vec!["-5"]);
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse(&["--nodes", "abc"]);
+        assert!(a.opt::<usize>("nodes").is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = parse(&[]);
+        assert!(matches!(a.req_str("graph"), Err(CliError::MissingOption(_))));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--", "--not-an-option"]);
+        assert_eq!(a.positionals, vec!["--not-an-option"]);
+        assert!(!a.flag("not-an-option"));
+    }
+
+    #[test]
+    fn unexpected_short_option_rejected() {
+        let r = Args::parse(["-x".to_string()]);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared substrates: seeded PRNG, statistics, bench harness, CLI parsing,
+//! table emission and the property-testing kit.
+//!
+//! These exist because the offline build environment vendors no `rand`,
+//! `criterion`, `clap`, or `proptest`; see DESIGN.md §3 (Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod testkit;

@@ -1,0 +1,362 @@
+//! Seeded pseudo-random number generation.
+//!
+//! The offline vendor set ships no `rand` crate, so GTIP carries its own
+//! small, well-tested generator: PCG-XSH-RR 64/32 (O'Neill 2014) seeded
+//! through SplitMix64. Every experiment records its seed, making all paper
+//! reproductions deterministic and re-runnable.
+
+/// SplitMix64 — used to expand a single `u64` seed into PCG state/stream.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit output with xorshift+rotate.
+///
+/// Small (16 bytes), fast, and statistically strong for simulation use.
+/// Not cryptographic; none of GTIP needs cryptographic randomness.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64, // stream selector; always odd
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Create a generator from a seed. Distinct seeds give independent
+    /// streams (state and increment are both derived via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let state0 = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1;
+        let mut rng = Pcg32 { state: 0, inc };
+        rng.state = state0.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream; used to give each machine /
+    /// LP / experiment arm its own generator without correlation.
+    pub fn fork(&mut self, tag: u64) -> Pcg32 {
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let state0 = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1;
+        let mut rng = Pcg32 { state: 0, inc };
+        rng.state = state0.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())
+    }
+
+    /// Uniform in `[0, 1)` with 32 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        f64::from(self.next_u32()) * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift with
+    /// rejection (unbiased).
+    #[inline]
+    pub fn gen_below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "gen_below(0)");
+        let mut x = self.next_u32();
+        let mut m = u64::from(x) * u64::from(bound);
+        let mut l = m as u32;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u32();
+                m = u64::from(x) * u64::from(bound);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn gen_range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "gen_range lo > hi");
+        let span = hi - lo + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64();
+        }
+        if span <= u64::from(u32::MAX) {
+            lo + u64::from(self.gen_below(span as u32))
+        } else {
+            // 64-bit Lemire
+            let mut x = self.next_u64();
+            let mut m = (x as u128) * (span as u128);
+            let mut l = m as u64;
+            if l < span {
+                let t = span.wrapping_neg() % span;
+                while l < t {
+                    x = self.next_u64();
+                    m = (x as u128) * (span as u128);
+                    l = m as u64;
+                }
+            }
+            lo + (m >> 64) as u64
+        }
+    }
+
+    /// Uniform usize index in `[0, len)`. Panics on `len == 0`.
+    #[inline]
+    pub fn index(&mut self, len: usize) -> usize {
+        self.gen_below(u32::try_from(len).expect("index len > u32::MAX")) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Bernoulli trial.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (polar form).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Exponential with the given rate (mean `1/rate`).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        let mut u = self.next_f64();
+        // avoid ln(0)
+        if u <= f64::MIN_POSITIVE {
+            u = f64::MIN_POSITIVE;
+        }
+        -u.ln() / rate
+    }
+
+    /// Poisson-distributed count (Knuth for small mean, normal approx for
+    /// large mean — the simulator only needs small means).
+    pub fn poisson(&mut self, mean: f64) -> u64 {
+        assert!(mean >= 0.0);
+        if mean == 0.0 {
+            return 0;
+        }
+        if mean > 64.0 {
+            let x = mean + mean.sqrt() * self.normal();
+            return x.max(0.0).round() as u64;
+        }
+        let l = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices k > n");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Weighted choice: returns an index with probability proportional to
+    /// `weights[i]`. Panics if all weights are zero/negative.
+    pub fn weighted_choice(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().filter(|w| **w > 0.0).sum();
+        assert!(total > 0.0, "weighted_choice: no positive weight");
+        let mut t = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
+            if t < w {
+                return i;
+            }
+            t -= w;
+        }
+        // floating-point slack: return last positive-weight index
+        weights
+            .iter()
+            .rposition(|w| *w > 0.0)
+            .expect("weighted_choice: no positive weight")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams should not coincide: {same}");
+    }
+
+    #[test]
+    fn fork_is_independent() {
+        let mut a = Pcg32::new(7);
+        let mut c1 = a.fork(0);
+        let mut c2 = a.fork(1);
+        let same = (0..64).filter(|_| c1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut rng = Pcg32::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_below_unbiased_small() {
+        let mut rng = Pcg32::new(9);
+        let mut counts = [0u32; 5];
+        for _ in 0..50_000 {
+            counts[rng.gen_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gen_range_inclusive_bounds_hit() {
+        let mut rng = Pcg32::new(11);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..10_000 {
+            let v = rng.gen_range(3, 6);
+            assert!((3..=6).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 6;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(13);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean() {
+        let mut rng = Pcg32::new(17);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| rng.poisson(4.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg32::new(19);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.exponential(0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(23);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle left identity");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg32::new(29);
+        let s = rng.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn weighted_choice_proportions() {
+        let mut rng = Pcg32::new(31);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0u32; 3];
+        for _ in 0..40_000 {
+            counts[rng.weighted_choice(&w)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.25, "ratio={ratio}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_choice_all_zero_panics() {
+        let mut rng = Pcg32::new(37);
+        rng.weighted_choice(&[0.0, 0.0]);
+    }
+}

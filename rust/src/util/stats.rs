@@ -1,0 +1,357 @@
+//! Descriptive statistics and time-series trace recording.
+//!
+//! Used by the bench harness (`util::bench`), the PDES load traces
+//! (Figs. 9/10) and the experiment harnesses.
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in sample"));
+        Some(Summary {
+            n,
+            mean,
+            std_dev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 50.0),
+            p05: percentile_sorted(&sorted, 5.0),
+            p95: percentile_sorted(&sorted, 95.0),
+        })
+    }
+
+    /// Half-width of an approximate 95% confidence interval on the mean.
+    pub fn ci95_half_width(&self) -> f64 {
+        if self.n < 2 {
+            return f64::NAN;
+        }
+        1.96 * self.std_dev / (self.n as f64).sqrt()
+    }
+}
+
+/// Percentile (linear interpolation) of a pre-sorted slice; `p` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Population mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance (not sample variance).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Coefficient of variation (std/mean), a scale-free imbalance measure
+/// used to quantify Figs. 9/10 load-balance quality.
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        return 0.0;
+    }
+    (variance(xs).sqrt() / m).abs()
+}
+
+/// Online mean/variance accumulator (Welford). Constant memory; used in
+/// hot loops where we cannot afford to buffer samples.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// A named time series: (t, value) pairs. Backing store for the machine
+/// load traces of Figs. 9/10 and potential-descent traces.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>) -> Self {
+        Trace { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|(_, v)| *v).collect()
+    }
+
+    /// Down-sample to at most `max_points` by striding (keeps first/last).
+    pub fn downsample(&self, max_points: usize) -> Trace {
+        assert!(max_points >= 2);
+        if self.points.len() <= max_points {
+            return self.clone();
+        }
+        let stride = (self.points.len() - 1) as f64 / (max_points - 1) as f64;
+        let mut out = Trace::new(self.name.clone());
+        for i in 0..max_points {
+            let idx = (i as f64 * stride).round() as usize;
+            out.points.push(self.points[idx.min(self.points.len() - 1)]);
+        }
+        out
+    }
+}
+
+/// Render a set of traces as a CSV string: `t,name1,name2,...` with rows
+/// joined on identical t values (traces sampled on a common clock).
+pub fn traces_to_csv(traces: &[Trace]) -> String {
+    let mut out = String::new();
+    out.push('t');
+    for tr in traces {
+        out.push(',');
+        out.push_str(&tr.name);
+    }
+    out.push('\n');
+    let rows = traces.iter().map(|t| t.points.len()).max().unwrap_or(0);
+    for i in 0..rows {
+        let t = traces
+            .iter()
+            .find_map(|tr| tr.points.get(i).map(|(t, _)| *t))
+            .unwrap_or(i as f64);
+        out.push_str(&format!("{t}"));
+        for tr in traces {
+            out.push(',');
+            match tr.points.get(i) {
+                Some((_, v)) => out.push_str(&format!("{v}")),
+                None => out.push_str(""),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a set of traces as a compact ASCII chart (for terminal output of
+/// the figure experiments). One character column per downsampled step.
+pub fn ascii_chart(traces: &[Trace], width: usize, height: usize) -> String {
+    const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for tr in traces {
+        for &(_, v) in &tr.points {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return String::from("(empty chart)\n");
+    }
+    if (hi - lo).abs() < f64::EPSILON {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (ti, tr) in traces.iter().enumerate() {
+        let ds = tr.downsample(width.max(2));
+        for (i, &(_, v)) in ds.points.iter().enumerate() {
+            let col = i.min(width - 1);
+            let frac = (v - lo) / (hi - lo);
+            let row = ((1.0 - frac) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col] = MARKS[ti % MARKS.len()];
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{hi:>12.2} ┤\n"));
+    for row in &grid {
+        out.push_str("             │");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{lo:>12.2} └{}\n", "─".repeat(width)));
+    out.push_str("legend: ");
+    for (ti, tr) in traces.iter().enumerate() {
+        out.push_str(&format!("{}={} ", MARKS[ti % MARKS.len()], tr.name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std_dev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_none() {
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((percentile_sorted(&xs, 100.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let s = Summary::of(&xs).unwrap();
+        assert!((w.mean() - s.mean).abs() < 1e-12);
+        assert!((w.std_dev() - s.std_dev).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 9.0);
+    }
+
+    #[test]
+    fn cov_zero_for_constant() {
+        assert!(coeff_of_variation(&[5.0, 5.0, 5.0]) < 1e-12);
+        assert!(coeff_of_variation(&[1.0, 9.0]) > 0.5);
+    }
+
+    #[test]
+    fn trace_downsample_keeps_endpoints() {
+        let mut tr = Trace::new("x");
+        for i in 0..1000 {
+            tr.push(i as f64, (i * i) as f64);
+        }
+        let ds = tr.downsample(10);
+        assert_eq!(ds.len(), 10);
+        assert_eq!(ds.points[0], tr.points[0]);
+        assert_eq!(ds.points[9], tr.points[999]);
+    }
+
+    #[test]
+    fn traces_csv_shape() {
+        let mut a = Trace::new("a");
+        let mut b = Trace::new("b");
+        a.push(0.0, 1.0);
+        a.push(1.0, 2.0);
+        b.push(0.0, 3.0);
+        b.push(1.0, 4.0);
+        let csv = traces_to_csv(&[a, b]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "t,a,b");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[1], "0,1,3");
+    }
+
+    #[test]
+    fn ascii_chart_renders() {
+        let mut tr = Trace::new("load");
+        for i in 0..100 {
+            tr.push(i as f64, (i as f64 / 10.0).sin());
+        }
+        let chart = ascii_chart(&[tr], 40, 10);
+        assert!(chart.contains('*'));
+        assert!(chart.contains("legend"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Property-based testing kit (proptest is unavailable offline).
+//!
+//! A `Property` runs a check against many randomly generated cases from a
+//! seeded [`Pcg32`] stream. On failure it retries with progressively
+//! "smaller" generator size hints (shrink-lite) and reports the seed of
+//! the failing case so it can be replayed as a deterministic unit test.
+
+use crate::util::rng::Pcg32;
+
+/// Generator context handed to property checks: a seeded RNG plus a size
+/// hint (smaller sizes generate smaller cases).
+pub struct GenCtx<'a> {
+    pub rng: &'a mut Pcg32,
+    pub size: usize,
+}
+
+impl<'a> GenCtx<'a> {
+    /// A usize in `[lo, hi]` biased by nothing (uniform).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range(lo as u64, hi as u64) as usize
+    }
+
+    /// An f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// A vector of length in `[min_len, min(size, max_len)]` generated
+    /// element-wise.
+    pub fn vec_of<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut GenCtx) -> T,
+    ) -> Vec<T> {
+        let hi = max_len.min(self.size.max(min_len));
+        let len = self.usize_in(min_len, hi.max(min_len));
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(f(self));
+        }
+        out
+    }
+}
+
+/// Outcome of running a property.
+#[derive(Debug)]
+pub enum PropResult {
+    Pass { cases: usize },
+    Fail { seed: u64, case_index: usize, size: usize, message: String },
+}
+
+/// Configuration for the property runner.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, base_seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `check` against `config.cases` generated cases. `check` should
+/// panic-free return `Err(msg)` on property violation.
+pub fn run_property(
+    name: &str,
+    config: &PropConfig,
+    mut check: impl FnMut(&mut GenCtx) -> Result<(), String>,
+) -> PropResult {
+    for case in 0..config.cases {
+        // Ramp size so early cases are small (cheap shrink-lite ordering).
+        let size = 2 + (config.max_size.saturating_sub(2)) * case / config.cases.max(1);
+        let seed = config
+            .base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg32::new(seed);
+        let mut ctx = GenCtx { rng: &mut rng, size };
+        if let Err(message) = check(&mut ctx) {
+            // Attempt to find a smaller failing case: re-run the same seed
+            // at smaller sizes and report the smallest that still fails.
+            let mut smallest = (seed, case, size, message.clone());
+            for s in (2..size).rev() {
+                let mut rng2 = Pcg32::new(seed);
+                let mut ctx2 = GenCtx { rng: &mut rng2, size: s };
+                if let Err(m2) = check(&mut ctx2) {
+                    smallest = (seed, case, s, m2);
+                } else {
+                    break;
+                }
+            }
+            return PropResult::Fail {
+                seed: smallest.0,
+                case_index: smallest.1,
+                size: smallest.2,
+                message: smallest.3,
+            };
+        }
+    }
+    let _ = name;
+    PropResult::Pass { cases: config.cases }
+}
+
+/// Assert wrapper: panics with a replayable report on failure. This is the
+/// entry point used by `#[test]` functions.
+pub fn check_property(
+    name: &str,
+    config: PropConfig,
+    check: impl FnMut(&mut GenCtx) -> Result<(), String>,
+) {
+    match run_property(name, &config, check) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { seed, case_index, size, message } => {
+            panic!(
+                "property '{name}' FAILED at case {case_index} (seed={seed:#x}, size={size}):\n  {message}\n  replay: Pcg32::new({seed:#x}) with size {size}"
+            );
+        }
+    }
+}
+
+/// Helper: format an approximate-equality failure.
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol}, scale {scale})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_property("add_commutes", PropConfig::default(), |g| {
+            let a = g.f64_in(-100.0, 100.0);
+            let b = g.f64_in(-100.0, 100.0);
+            assert_close(a + b, b + a, 1e-12, "a+b == b+a")
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let res = run_property(
+            "always_fails_on_big",
+            &PropConfig { cases: 50, base_seed: 7, max_size: 32 },
+            |g| {
+                let v = g.vec_of(0, 100, |g| g.usize_in(0, 10));
+                if v.len() > 5 {
+                    Err(format!("len {} > 5", v.len()))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        match res {
+            PropResult::Fail { message, .. } => assert!(message.contains("> 5")),
+            PropResult::Pass { .. } => panic!("should have failed"),
+        }
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        check_property("vec_len_bounds", PropConfig::default(), |g| {
+            let v = g.vec_of(2, 10, |g| g.usize_in(0, 1));
+            if v.len() < 2 || v.len() > 10 {
+                return Err(format!("len {} out of [2,10]", v.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn assert_close_relative() {
+        assert!(assert_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-6, "small").is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration tests of the distributed coordinator: protocol
+//! correctness at scale, the measured §4.5 feasibility claim
+//! (synchronization bytes per transfer independent of N), latency
+//! robustness, and equivalence with the sequential engine.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use gtip::coordinator::{run_distributed, DistributedOptions};
+use gtip::game::cost::{CostModel, Framework};
+use gtip::game::refine::{RefineEngine, RefineOptions};
+use gtip::graph::generators::preferential_attachment;
+use gtip::partition::initial::grow_partition;
+use gtip::partition::{global_cost, MachineConfig, Partition};
+use gtip::util::rng::Pcg32;
+
+/// §4.5 measured: bytes of synchronization per transfer must be flat as
+/// the simulated graph grows 8x.
+#[test]
+fn sync_overhead_independent_of_n() {
+    let machines = MachineConfig::homogeneous(5);
+    let mut bytes_per_transfer = Vec::new();
+    for n in [200usize, 800, 1600] {
+        let mut rng = Pcg32::new(7);
+        let graph = Arc::new(preferential_attachment(n, 2, &mut rng));
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        let report = run_distributed(
+            Arc::clone(&graph),
+            &machines,
+            initial,
+            &DistributedOptions::default(),
+        );
+        assert!(report.converged);
+        assert!(report.transfers > 0, "n={n}: no transfers at all");
+        bytes_per_transfer.push(report.overhead.bytes_per_transfer(report.transfers as u64));
+    }
+    let min = bytes_per_transfer.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = bytes_per_transfer.iter().cloned().fold(0.0f64, f64::max);
+    assert!(
+        (max - min).abs() < 1e-9,
+        "bytes/transfer varies with N: {bytes_per_transfer:?}"
+    );
+}
+
+/// Distributed == sequential for several seeds and both frameworks.
+#[test]
+fn distributed_equals_sequential_many_seeds() {
+    for seed in [1u64, 2, 3] {
+        for fw in [Framework::A, Framework::B] {
+            let mut rng = Pcg32::new(seed);
+            let graph = Arc::new(preferential_attachment(150, 2, &mut rng));
+            let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+            let assignment: Vec<usize> = (0..150).map(|_| rng.index(5)).collect();
+            let initial = Partition::from_assignment(&graph, 5, assignment);
+
+            let mut seq = RefineEngine::new(&graph, &machines, initial.clone(), 8.0, fw);
+            let seq_report = seq.run(&RefineOptions::default());
+
+            let dist = run_distributed(
+                Arc::clone(&graph),
+                &machines,
+                initial,
+                &DistributedOptions { framework: fw, ..Default::default() },
+            );
+            assert_eq!(
+                dist.partition.assignment(),
+                seq.partition().assignment(),
+                "seed {seed} fw {fw}: assignments differ"
+            );
+            assert_eq!(dist.transfers, seq_report.transfers);
+        }
+    }
+}
+
+/// With injected per-message latency (remotely connected machines), the
+/// protocol still converges to the same equilibrium.
+#[test]
+fn latency_does_not_change_result() {
+    let mut rng = Pcg32::new(5);
+    let graph = Arc::new(preferential_attachment(100, 2, &mut rng));
+    let machines = MachineConfig::homogeneous(4);
+    let assignment: Vec<usize> = (0..100).map(|_| rng.index(4)).collect();
+    let initial = Partition::from_assignment(&graph, 4, assignment);
+
+    let fast = run_distributed(
+        Arc::clone(&graph),
+        &machines,
+        initial.clone(),
+        &DistributedOptions::default(),
+    );
+    let slow = run_distributed(
+        Arc::clone(&graph),
+        &machines,
+        initial,
+        &DistributedOptions { latency: Duration::from_micros(200), ..Default::default() },
+    );
+    assert_eq!(fast.partition.assignment(), slow.partition.assignment());
+}
+
+/// The distributed equilibrium is a true Nash equilibrium and improves
+/// the potential vs the initial partition.
+#[test]
+fn distributed_improves_and_stabilizes() {
+    let mut rng = Pcg32::new(9);
+    let graph = Arc::new(preferential_attachment(200, 2, &mut rng));
+    let machines = MachineConfig::homogeneous(5);
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let c_before = global_cost::c0(&graph, &machines, &initial, 8.0);
+
+    let report =
+        run_distributed(Arc::clone(&graph), &machines, initial, &DistributedOptions::default());
+    let c_after = global_cost::c0(&graph, &machines, &report.partition, 8.0);
+    assert!(c_after <= c_before);
+
+    let model = CostModel::new(&graph, machines.clone(), 8.0, Framework::A);
+    for i in 0..200 {
+        let (j, _) = model.dissatisfaction(&report.partition, i);
+        assert!(j <= 1e-6, "node {i} dissatisfied after distributed run");
+    }
+
+    // Re-running from the equilibrium does nothing (idempotence).
+    let again = run_distributed(
+        Arc::clone(&graph),
+        &machines,
+        report.partition.clone(),
+        &DistributedOptions::default(),
+    );
+    assert_eq!(again.transfers, 0);
+    assert_eq!(again.partition.assignment(), report.partition.assignment());
+}
+
+/// Degenerate pools: K=1 must trivially converge with zero transfers;
+/// more machines than "useful" still terminates.
+#[test]
+fn degenerate_machine_pools() {
+    let mut rng = Pcg32::new(11);
+    let graph = Arc::new(preferential_attachment(60, 2, &mut rng));
+
+    let one = MachineConfig::homogeneous(1);
+    let p1 = Partition::all_on_machine(&graph, 1, 0);
+    let r1 = run_distributed(Arc::clone(&graph), &one, p1, &DistributedOptions::default());
+    assert!(r1.converged);
+    assert_eq!(r1.transfers, 0);
+
+    let many = MachineConfig::homogeneous(12);
+    let pm = Partition::from_assignment(&graph, 12, (0..60).map(|i| i % 12).collect());
+    let rm = run_distributed(Arc::clone(&graph), &many, pm, &DistributedOptions::default());
+    assert!(rm.converged);
+    rm.partition.validate(&graph).unwrap();
+}

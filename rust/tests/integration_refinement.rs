@@ -1,0 +1,177 @@
+//! Integration tests across graph generation, initial partitioning,
+//! refinement, baselines and the meta-heuristic extensions — exercising
+//! the full partitioning pipeline a user would run.
+
+use gtip::game::annealing::{anneal_then_refine, AnnealOptions};
+use gtip::game::cluster::{cluster_escape, ClusterOptions};
+use gtip::game::cost::Framework;
+use gtip::game::refine::{RefineEngine, RefineOptions};
+use gtip::graph::generators::{generate, GraphFamily};
+use gtip::partition::baselines;
+use gtip::partition::initial::grow_partition;
+use gtip::partition::{global_cost, MachineConfig};
+use gtip::util::rng::Pcg32;
+
+/// Full pipeline: generate → initial partition → refine → equilibrium,
+/// across all graph families.
+#[test]
+fn pipeline_all_graph_families() {
+    for (fam, n) in [
+        (GraphFamily::Table1, 230),
+        (GraphFamily::PreferentialAttachment, 230),
+        (GraphFamily::Geometric, 230),
+        (GraphFamily::ErdosRenyi, 150),
+    ] {
+        let mut rng = Pcg32::new(11);
+        let graph = generate(fam, n, &mut rng);
+        let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        let c0_before = global_cost::c0(&graph, &machines, &initial, 8.0);
+        let mut engine = RefineEngine::new(&graph, &machines, initial, 8.0, Framework::A);
+        let report = engine.run(&RefineOptions::default());
+        assert!(report.converged, "{fam:?} did not converge");
+        assert!(
+            report.final_potential <= c0_before,
+            "{fam:?}: refinement worsened C0"
+        );
+        engine.validate().unwrap();
+    }
+}
+
+/// The game-theoretic method beats all baselines on its own objective.
+#[test]
+fn beats_baselines_on_c0() {
+    let mut rng = Pcg32::new(13);
+    let graph = generate(GraphFamily::Table1, 230, &mut rng);
+    let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+    let mu = 8.0;
+
+    let refined = {
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        let mut engine = RefineEngine::new(&graph, &machines, initial, mu, Framework::A);
+        let _ = engine.run(&RefineOptions::default());
+        global_cost::c0(&graph, &machines, engine.partition(), mu)
+    };
+
+    let random = global_cost::c0(
+        &graph,
+        &machines,
+        &baselines::random_partition(&graph, 5, &mut rng),
+        mu,
+    );
+    let rr = global_cost::c0(&graph, &machines, &baselines::round_robin(&graph, 5), mu);
+    let greedy = global_cost::c0(&graph, &machines, &baselines::greedy_load(&graph, &machines), mu);
+    let cut_only = {
+        let mut p = baselines::random_partition(&graph, 5, &mut rng);
+        let _ = baselines::cut_only_gain(&graph, &mut p);
+        global_cost::c0(&graph, &machines, &p, mu)
+    };
+
+    assert!(refined < random, "refined {refined} vs random {random}");
+    assert!(refined < rr, "refined {refined} vs round-robin {rr}");
+    assert!(refined < cut_only, "refined {refined} vs cut-only {cut_only}");
+    // Greedy-load is strong on the load term but blind to the cut; the
+    // game method must still match or beat it on the combined objective.
+    assert!(
+        refined <= greedy * 1.001,
+        "refined {refined} vs greedy-load {greedy}"
+    );
+}
+
+/// Cut-only baseline (Nandy–Loucks-style) achieves a lower *cut* but a
+/// worse *combined* objective — the precise gap the paper motivates (§2).
+#[test]
+fn cut_only_tradeoff_visible() {
+    let mut rng = Pcg32::new(17);
+    let graph = generate(GraphFamily::PreferentialAttachment, 200, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let mut game_part = initial.clone();
+    {
+        let mut engine =
+            RefineEngine::new(&graph, &machines, game_part, 8.0, Framework::A);
+        let _ = engine.run(&RefineOptions::default());
+        game_part = engine.into_partition();
+    }
+    let mut cut_part = initial;
+    let _ = baselines::cut_only_gain(&graph, &mut cut_part);
+
+    let game_imbalance = game_part.imbalance(&machines);
+    let cut_imbalance = cut_part.imbalance(&machines);
+    assert!(
+        game_imbalance < cut_imbalance + 1e-9,
+        "game imbalance {game_imbalance} should beat cut-only {cut_imbalance}"
+    );
+}
+
+/// §4.4 extensions stack: anneal → refine → cluster escape, never
+/// worsening the potential at any stage.
+#[test]
+fn extension_pipeline_monotone() {
+    let mut rng = Pcg32::new(19);
+    let graph = generate(GraphFamily::Table1, 150, &mut rng);
+    let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+    let mu = 8.0;
+
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let c_initial = global_cost::c0(&graph, &machines, &initial, mu);
+
+    let (mut part, c_refined) = anneal_then_refine(
+        &graph,
+        &machines,
+        initial,
+        mu,
+        Framework::A,
+        &AnnealOptions::default(),
+        &mut rng,
+    );
+    assert!(c_refined <= c_initial);
+
+    let moves =
+        cluster_escape(&graph, &machines, &mut part, mu, Framework::A, &ClusterOptions::default());
+    let c_final = global_cost::c0(&graph, &machines, &part, mu);
+    let predicted: f64 = moves.iter().map(|m| m.delta).sum();
+    assert!((c_final - c_refined - predicted).abs() < 1e-6 * (1.0 + c_refined.abs()));
+    assert!(c_final <= c_refined + 1e-9);
+    part.validate(&graph).unwrap();
+}
+
+/// Dynamic weights: re-weighting the same graph and re-refining from the
+/// previous equilibrium converges again and ends at a (new) equilibrium.
+#[test]
+fn dynamic_reweighting_epochs() {
+    let mut rng = Pcg32::new(23);
+    let mut graph = generate(GraphFamily::PreferentialAttachment, 200, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+    let mut part = grow_partition(&graph, &machines, &mut rng);
+
+    for epoch in 0..5 {
+        // Synthetic "hot spot" weights: a moving window of heavy nodes.
+        let w: Vec<f64> = (0..200)
+            .map(|i| if (i + epoch * 40) % 200 < 40 { 10.0 } else { 1.0 })
+            .collect();
+        graph.set_node_weights(&w);
+        part.rebuild_aggregates(&graph);
+        let mut engine = RefineEngine::new(&graph, &machines, part, 8.0, Framework::A);
+        let report = engine.run(&RefineOptions::default());
+        assert!(report.converged, "epoch {epoch} did not converge");
+        engine.validate().unwrap();
+        part = engine.into_partition();
+    }
+}
+
+/// Determinism: the entire pipeline is reproducible from the seed.
+#[test]
+fn pipeline_deterministic() {
+    let run = || {
+        let mut rng = Pcg32::new(99);
+        let graph = generate(GraphFamily::Table1, 120, &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        let mut engine = RefineEngine::new(&graph, &machines, initial, 8.0, Framework::A);
+        let report = engine.run(&RefineOptions::default());
+        (report.transfers, engine.partition().assignment().to_vec())
+    };
+    assert_eq!(run(), run());
+}

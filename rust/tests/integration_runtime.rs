@@ -1,0 +1,115 @@
+//! Integration: the AOT HLO artifacts (python/jax/Pallas) executed via
+//! PJRT must agree with the native Rust evaluator — the cross-layer
+//! correctness contract of the three-layer architecture.
+//!
+//! Requires `make artifacts`; tests skip (with a loud message) if the
+//! artifacts directory is absent so plain `cargo test` stays green in a
+//! fresh checkout.
+
+use gtip::game::cost::{CostModel, Framework};
+use gtip::graph::generators::{preferential_attachment, table1_graph, WeightModel};
+use gtip::partition::{MachineConfig, Partition};
+use gtip::runtime::cost_eval::{max_rel_error_vs_native, PjrtCostEvaluator};
+use gtip::util::rng::Pcg32;
+
+fn evaluator() -> Option<PjrtCostEvaluator> {
+    match PjrtCostEvaluator::from_default_dir() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            eprintln!("SKIP integration_runtime: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_matches_native_paper_shape() {
+    let Some(mut eval) = evaluator() else { return };
+    let mut rng = Pcg32::new(1);
+    let g = table1_graph(230, 3, 6, WeightModel::default(), &mut rng);
+    let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+    let assignment: Vec<usize> = (0..230).map(|_| rng.index(5)).collect();
+    let part = Partition::from_assignment(&g, 5, assignment);
+    let out = eval.evaluate(&g, &machines, &part, 8.0).unwrap();
+    assert_eq!(out.n, 230);
+    assert_eq!(out.k, 5);
+    let err = max_rel_error_vs_native(&g, &machines, &part, 8.0, &out);
+    assert!(err < 1e-3, "PJRT vs native rel error {err}");
+}
+
+#[test]
+fn pjrt_best_moves_agree_with_native() {
+    let Some(mut eval) = evaluator() else { return };
+    let mut rng = Pcg32::new(2);
+    let g = preferential_attachment(300, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+    let assignment: Vec<usize> = (0..300).map(|_| rng.index(4)).collect();
+    let part = Partition::from_assignment(&g, 4, assignment);
+    let out = eval.evaluate(&g, &machines, &part, 4.0).unwrap();
+
+    let model = CostModel::new(&g, machines.clone(), 4.0, Framework::A);
+    for i in 0..300 {
+        let (native_j, _) = model.dissatisfaction(&part, i);
+        let pjrt_j = out.dissat_a[i] as f64;
+        assert!(
+            (native_j - pjrt_j).abs() < 1e-2 * (1.0 + native_j.abs()),
+            "node {i}: native J={native_j} pjrt J={pjrt_j}"
+        );
+        // Best move must be cost-equivalent (ties may differ).
+        let chosen = out.best_a[i] as usize;
+        assert!(chosen < 4, "argmin leaked into padding: {chosen}");
+        let (_, native_best_cost) = model.best_response(&part, i);
+        let chosen_cost = model.node_cost(&part, i, chosen);
+        assert!(
+            (chosen_cost - native_best_cost).abs() < 1e-2 * (1.0 + native_best_cost.abs()),
+            "node {i}: pjrt argmin {chosen} cost {chosen_cost} vs native best {native_best_cost}"
+        );
+    }
+}
+
+#[test]
+fn pjrt_size_ladder_picks_fitting_artifact() {
+    let Some(mut eval) = evaluator() else { return };
+    let mut rng = Pcg32::new(3);
+    // 300 nodes won't fit n=256; must transparently use n=512.
+    let g = preferential_attachment(300, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(3);
+    let part = Partition::from_assignment(&g, 3, (0..300).map(|i| i % 3).collect());
+    let out = eval.evaluate(&g, &machines, &part, 8.0).unwrap();
+    assert_eq!(out.n, 300);
+    let err = max_rel_error_vs_native(&g, &machines, &part, 8.0, &out);
+    assert!(err < 1e-3, "rel error {err}");
+}
+
+#[test]
+fn pjrt_rejects_oversized_problems() {
+    let Some(mut eval) = evaluator() else { return };
+    let max = eval.max_nodes();
+    let mut rng = Pcg32::new(4);
+    let g = preferential_attachment(max + 10, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(2);
+    let part = Partition::from_assignment(&g, 2, (0..max + 10).map(|i| i % 2).collect());
+    assert!(eval.evaluate(&g, &machines, &part, 1.0).is_err());
+}
+
+#[test]
+fn pjrt_globals_track_refinement_descent() {
+    // Refine natively; the PJRT-reported C0 must descend too.
+    let Some(mut eval) = evaluator() else { return };
+    let mut rng = Pcg32::new(5);
+    let g = table1_graph(150, 3, 6, WeightModel::default(), &mut rng);
+    let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+    let part = Partition::from_assignment(&g, 5, (0..150).map(|_| rng.index(5)).collect());
+
+    let before = eval.evaluate(&g, &machines, &part, 8.0).unwrap();
+    let mut engine =
+        gtip::game::refine::RefineEngine::new(&g, &machines, part, 8.0, Framework::A);
+    let _ = engine.run(&gtip::game::refine::RefineOptions::default());
+    let after = eval.evaluate(&g, &machines, engine.partition(), 8.0).unwrap();
+    assert!(
+        after.c0 < before.c0,
+        "refinement must descend C0 as seen through PJRT: {} -> {}",
+        before.c0,
+        after.c0
+    );
+}

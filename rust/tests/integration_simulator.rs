@@ -1,0 +1,246 @@
+//! Integration tests of the optimistic PDES archetype + dynamic
+//! refinement driver: conservation, causality, the partition-quality →
+//! simulation-time causal chain, and failure injection (adversarial
+//! partitions, pathological workloads).
+
+use gtip::game::cost::Framework;
+use gtip::graph::generators::{generate, preferential_attachment, GraphFamily};
+use gtip::graph::GraphBuilder;
+use gtip::partition::{MachineConfig, Partition};
+use gtip::sim::driver::{run_dynamic, DriverOptions};
+use gtip::sim::engine::{Injection, SimEngine, SimOptions};
+use gtip::sim::event::Event;
+use gtip::sim::workload::{FloodWorkload, WorkloadOptions};
+use gtip::util::rng::Pcg32;
+
+fn std_workload(graph: &gtip::graph::Graph, threads: usize, rng: &mut Pcg32) -> FloodWorkload {
+    FloodWorkload::generate(
+        graph,
+        &WorkloadOptions { threads, horizon_ticks: 1500, hot_spot_period: 400, ..Default::default() },
+        rng,
+    )
+}
+
+/// Every injected thread is processed by its source at least once, and
+/// the run drains (no lost/stuck events) across partitions.
+#[test]
+fn event_conservation_across_partitions() {
+    let mut rng = Pcg32::new(1);
+    let graph = preferential_attachment(120, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+    for seed in 0..3u64 {
+        let mut rng2 = Pcg32::new(seed);
+        let workload = std_workload(&graph, 50, &mut rng2);
+        let injected = workload.len() as u64;
+        let assignment: Vec<usize> = (0..120).map(|_| rng2.index(4)).collect();
+        let part = Partition::from_assignment(&graph, 4, assignment);
+        let mut engine = SimEngine::new(
+            &graph,
+            machines.clone(),
+            part,
+            SimOptions::default(),
+            workload.injections,
+        );
+        let stats = engine.run_to_completion();
+        assert!(!stats.truncated, "seed {seed} truncated");
+        assert!(stats.events_processed >= injected);
+        assert!(engine.drained());
+    }
+}
+
+/// A deliberately terrible partition (every neighbor pair split across
+/// machines) must be slower and roll back more than a good one.
+#[test]
+fn bad_partition_hurts() {
+    // Ring graph so "alternating" splits every edge.
+    let n = 60;
+    let mut b = GraphBuilder::with_nodes(n);
+    for i in 0..n {
+        b.add_edge(i, (i + 1) % n, 1.0);
+    }
+    let graph = b.build();
+    let machines = MachineConfig::homogeneous(2);
+    let make_workload = || {
+        let mut rng = Pcg32::new(5);
+        FloodWorkload::generate(
+            &graph,
+            &WorkloadOptions {
+                threads: 40,
+                horizon_ticks: 800,
+                hot_spots: 0,
+                hop_limit: 6,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+    };
+
+    let run = |assignment: Vec<usize>| {
+        let part = Partition::from_assignment(&graph, 2, assignment);
+        let mut engine = SimEngine::new(
+            &graph,
+            machines.clone(),
+            part,
+            SimOptions { max_ticks: 500_000, ..Default::default() },
+            make_workload().injections,
+        );
+        engine.run_to_completion()
+    };
+
+    // Good: two contiguous arcs (2 cut edges). Bad: alternating (n cut).
+    let good = run((0..n).map(|i| if i < n / 2 { 0 } else { 1 }).collect());
+    let bad = run((0..n).map(|i| i % 2).collect());
+    assert!(!good.truncated && !bad.truncated);
+    assert!(
+        bad.ticks > good.ticks,
+        "bad partition should be slower: {} vs {}",
+        bad.ticks,
+        good.ticks
+    );
+    assert!(
+        bad.cross_machine_forwards > good.cross_machine_forwards,
+        "bad partition should cross more"
+    );
+}
+
+/// The full dynamic driver beats no-refinement on hot-spot workloads —
+/// the paper's headline (Figs. 7/8) as an integration test.
+#[test]
+fn dynamic_refinement_beats_static() {
+    let mut best_ratio = f64::INFINITY;
+    for seed in [1u64, 2, 3] {
+        let mut rng = Pcg32::new(seed);
+        let graph = generate(GraphFamily::PreferentialAttachment, 150, &mut rng);
+        let machines = MachineConfig::homogeneous(5);
+        let arm = |refine_every: u64| {
+            let mut rng2 = Pcg32::new(seed.wrapping_add(100));
+            let workload = FloodWorkload::generate(
+                &graph,
+                &WorkloadOptions {
+                    threads: 100,
+                    horizon_ticks: 2500,
+                    hot_spot_period: 400,
+                    ..Default::default()
+                },
+                &mut rng2,
+            );
+            let options = DriverOptions {
+                sim: SimOptions { max_ticks: 500_000, ..Default::default() },
+                refine_every,
+                framework: Framework::A,
+                mu: 8.0,
+                ticks_per_transfer: 0,
+            };
+            run_dynamic(&graph, &machines, workload, &options, &mut rng2)
+        };
+        let none = arm(0);
+        let refined = arm(400);
+        assert!(!none.stats.truncated && !refined.stats.truncated);
+        best_ratio = best_ratio.min(refined.total_time() as f64 / none.total_time() as f64);
+    }
+    assert!(
+        best_ratio < 0.95,
+        "refinement never helped meaningfully (best ratio {best_ratio})"
+    );
+}
+
+/// Failure injection: a workload whose every event lands on one LP (a
+/// degenerate hot spot) must still drain, with refinement spreading the
+/// neighborhood out.
+#[test]
+fn degenerate_single_hotspot_drains() {
+    let mut rng = Pcg32::new(31);
+    let graph = preferential_attachment(100, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+    let injections: Vec<Injection> = (0..80)
+        .map(|t| Injection {
+            at_tick: (t * 7) as u64,
+            lp: 0,
+            event: Event::injection(t as u64 + 1, (t * 3) as u64, 3),
+        })
+        .collect();
+    let part = Partition::from_assignment(&graph, 4, (0..100).map(|i| i % 4).collect());
+    let mut engine = SimEngine::new(
+        &graph,
+        machines,
+        part,
+        SimOptions { max_ticks: 500_000, ..Default::default() },
+        injections,
+    );
+    let stats = engine.run_to_completion();
+    assert!(!stats.truncated);
+    // Only the first injection is a fresh thread at LP0... all 80 are
+    // distinct threads, each floods from LP0.
+    assert!(stats.events_processed >= 80);
+}
+
+/// Failure injection: zero-delay everything (no inter-machine penalty)
+/// must produce zero rollback-delay-induced stragglers on a single
+/// machine.
+#[test]
+fn single_machine_no_cross_traffic() {
+    let mut rng = Pcg32::new(37);
+    let graph = preferential_attachment(80, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(1);
+    let workload = std_workload(&graph, 40, &mut rng);
+    let part = Partition::all_on_machine(&graph, 1, 0);
+    let mut engine =
+        SimEngine::new(&graph, machines, part, SimOptions::default(), workload.injections);
+    let stats = engine.run_to_completion();
+    assert_eq!(stats.cross_machine_forwards, 0);
+    assert!(!stats.truncated);
+}
+
+/// GVT never regresses across an entire dynamic run with refinement.
+#[test]
+fn gvt_monotone_with_refinement() {
+    let mut rng = Pcg32::new(41);
+    let graph = preferential_attachment(100, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+    let workload = std_workload(&graph, 60, &mut rng);
+    let part = Partition::from_assignment(&graph, 4, (0..100).map(|i| i % 4).collect());
+    let mut engine = SimEngine::new(
+        &graph,
+        machines.clone(),
+        part,
+        SimOptions::default(),
+        workload.injections,
+    );
+    let mut last = 0;
+    let mut ticks = 0u64;
+    while engine.step() {
+        assert!(engine.gvt() >= last, "GVT regressed at tick {ticks}");
+        last = engine.gvt();
+        ticks += 1;
+        // Mid-run repartition every 300 ticks (the driver's behaviour).
+        if ticks % 300 == 0 {
+            let assignment: Vec<usize> =
+                (0..100).map(|i| (i / 25) % 4).collect();
+            engine.set_partition(Partition::from_assignment(&graph, 4, assignment));
+        }
+        if ticks > 400_000 {
+            panic!("runaway");
+        }
+    }
+}
+
+/// Rollback accounting: cross-machine stragglers produce rollbacks and
+/// anti-messages, and both counters move together.
+#[test]
+fn rollback_accounting_consistent() {
+    let mut rng = Pcg32::new(43);
+    let graph = preferential_attachment(120, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+    let workload = std_workload(&graph, 80, &mut rng);
+    let part = Partition::from_assignment(&graph, 4, (0..120).map(|_| rng.index(4)).collect());
+    let mut engine = SimEngine::new(
+        &graph,
+        machines,
+        part,
+        SimOptions { inter_machine_delay: 6, ..Default::default() },
+        workload.injections,
+    );
+    let stats = engine.run_to_completion();
+    assert!(!stats.truncated);
+    assert!(stats.rollbacks > 0, "expected rollbacks under high delay");
+}

@@ -1,0 +1,249 @@
+//! Property-based invariant tests (DESIGN.md §5), via the testkit
+//! runner: randomized graphs/partitions/weights, each property checked
+//! across many generated cases with replayable seeds.
+
+use gtip::game::cost::{CostModel, Framework};
+use gtip::game::refine::{RefineEngine, RefineOptions};
+use gtip::graph::generators::{erdos_renyi, preferential_attachment, table1_graph, WeightModel};
+use gtip::graph::{metrics, Graph};
+use gtip::partition::{global_cost, MachineConfig, Partition};
+use gtip::util::rng::Pcg32;
+use gtip::util::testkit::{assert_close, check_property, GenCtx, PropConfig};
+
+/// Random problem: graph + machines + partition + mu.
+fn gen_problem(g: &mut GenCtx) -> (Graph, MachineConfig, Partition, f64) {
+    let n = g.usize_in(8, 8 + 4 * g.size.max(4));
+    let k = g.usize_in(2, 6);
+    let family = g.usize_in(0, 2);
+    let mut rng = g.rng.fork(0xF00D);
+    let graph = match family {
+        0 => table1_graph(n, 2, 5.min(n - 1), WeightModel::default(), &mut rng),
+        1 => preferential_attachment(n.max(5), 2, &mut rng),
+        _ => erdos_renyi(n, (4.0 / n as f64).min(0.9), &mut rng),
+    };
+    let n = graph.node_count();
+    let speeds: Vec<f64> = (0..k).map(|_| g.f64_in(0.05, 1.0)).collect();
+    let machines = MachineConfig::from_speeds(&speeds);
+    let assignment: Vec<usize> = (0..n).map(|_| g.usize_in(0, k - 1)).collect();
+    let part = Partition::from_assignment(&graph, k, assignment);
+    let mu = g.f64_in(0.0, 16.0);
+    (graph, machines, part, mu)
+}
+
+/// Thm 3.1: for ANY single-node move, dC0 == 2*dC_l exactly.
+#[test]
+fn prop_potential_identity_a() {
+    check_property("potential_identity_a", PropConfig::default(), |g| {
+        let (graph, machines, part, mu) = gen_problem(g);
+        let model = CostModel::new(&graph, machines.clone(), mu, Framework::A);
+        let node = g.usize_in(0, graph.node_count() - 1);
+        let to = g.usize_in(0, machines.count() - 1);
+        let before = global_cost::c0(&graph, &machines, &part, mu);
+        let predicted = model.potential_delta(&part, node, to);
+        let mut p2 = part.clone();
+        p2.transfer(&graph, node, to);
+        let after = global_cost::c0(&graph, &machines, &p2, mu);
+        assert_close(after - before, predicted, 1e-7, "dC0 == 2*dC_l")
+    });
+}
+
+/// Thm 5.1: for ANY single-node move, dC~0 == C~_l(new) - C~_l(old).
+#[test]
+fn prop_potential_identity_b() {
+    check_property("potential_identity_b", PropConfig::default(), |g| {
+        let (graph, machines, part, mu) = gen_problem(g);
+        let model = CostModel::new(&graph, machines.clone(), mu, Framework::B);
+        let node = g.usize_in(0, graph.node_count() - 1);
+        let to = g.usize_in(0, machines.count() - 1);
+        let before = global_cost::c0_tilde(&graph, &machines, &part, mu);
+        let predicted = model.potential_delta(&part, node, to);
+        let mut p2 = part.clone();
+        p2.transfer(&graph, node, to);
+        let after = global_cost::c0_tilde(&graph, &machines, &p2, mu);
+        assert_close(after - before, predicted, 1e-7, "dC~0 == dC~_l")
+    });
+}
+
+/// C0 is the sum of node costs (social welfare decomposition).
+#[test]
+fn prop_c0_is_sum_of_node_costs() {
+    check_property("c0_sum_decomposition", PropConfig::default(), |g| {
+        let (graph, machines, part, mu) = gen_problem(g);
+        let model = CostModel::new(&graph, machines.clone(), mu, Framework::A);
+        let sum: f64 = (0..graph.node_count()).map(|i| model.current_cost(&part, i)).sum();
+        let c0 = global_cost::c0(&graph, &machines, &part, mu);
+        assert_close(sum, c0, 1e-7, "sum C_i == C0")
+    });
+}
+
+/// Refinement: strict potential descent per transfer, convergence to a
+/// Nash equilibrium, incremental state consistency.
+#[test]
+fn prop_refinement_descends_and_converges() {
+    let config = PropConfig { cases: 48, ..Default::default() };
+    check_property("refine_descends_converges", config, |g| {
+        let (graph, machines, part, mu) = gen_problem(g);
+        let fw = if g.usize_in(0, 1) == 0 { Framework::A } else { Framework::B };
+        let mut engine = RefineEngine::new(&graph, &machines, part, mu, fw);
+        let report = engine.run(&RefineOptions { track_potential: true, ..Default::default() });
+        if !report.converged {
+            return Err("did not converge".into());
+        }
+        for w in report.potential_trace.windows(2) {
+            if w[1] >= w[0] + 1e-9 * (1.0 + w[0].abs()) {
+                return Err(format!("non-descent step {} -> {}", w[0], w[1]));
+            }
+        }
+        engine.validate().map_err(|e| format!("state drift: {e}"))?;
+        // Nash: no node can improve unilaterally.
+        let model = engine.model();
+        for i in 0..graph.node_count() {
+            let (j, _) = model.dissatisfaction(engine.partition(), i);
+            if j > 1e-6 {
+                return Err(format!("node {i} still dissatisfied: {j}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Dissatisfaction is non-negative and zero exactly at best response.
+#[test]
+fn prop_dissatisfaction_nonnegative() {
+    check_property("dissatisfaction_nonneg", PropConfig::default(), |g| {
+        let (graph, machines, part, mu) = gen_problem(g);
+        for fw in [Framework::A, Framework::B] {
+            let model = CostModel::new(&graph, machines.clone(), mu, fw);
+            for i in 0..graph.node_count() {
+                let (j, best) = model.dissatisfaction(&part, i);
+                if j < 0.0 {
+                    return Err(format!("negative dissatisfaction {j} at node {i}"));
+                }
+                let cur = model.current_cost(&part, i);
+                let best_cost = model.node_cost(&part, i, best);
+                assert_close(j, (cur - best_cost).max(0.0), 1e-8, "J == cur - min")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Partition transfer bookkeeping: loads/counts always equal a fresh
+/// scan, node conservation holds.
+#[test]
+fn prop_partition_bookkeeping() {
+    check_property("partition_bookkeeping", PropConfig::default(), |g| {
+        let (graph, machines, mut part, _) = gen_problem(g);
+        let k = machines.count();
+        let moves = g.usize_in(1, 50);
+        for _ in 0..moves {
+            let node = g.usize_in(0, graph.node_count() - 1);
+            let to = g.usize_in(0, k - 1);
+            part.transfer(&graph, node, to);
+        }
+        part.validate(&graph)?;
+        let total: usize = part.counts().iter().sum();
+        if total != graph.node_count() {
+            return Err(format!("node leak: {total} vs {}", graph.node_count()));
+        }
+        Ok(())
+    });
+}
+
+/// Cut weight: symmetric under machine relabeling, zero for the
+/// everything-on-one-machine assignment.
+#[test]
+fn prop_cut_weight_invariants() {
+    check_property("cut_weight_invariants", PropConfig::default(), |g| {
+        let (graph, machines, part, _) = gen_problem(g);
+        let k = machines.count();
+        let assign = part.assignment().to_vec();
+        let cut = metrics::cut_weight(&graph, &assign);
+        if cut < 0.0 {
+            return Err("negative cut".into());
+        }
+        // Relabel machines with a rotation: cut unchanged.
+        let rotated: Vec<usize> = assign.iter().map(|&m| (m + 1) % k).collect();
+        assert_close(cut, metrics::cut_weight(&graph, &rotated), 1e-12, "relabel-invariant")?;
+        let lumped = vec![0usize; graph.node_count()];
+        if metrics::cut_weight(&graph, &lumped) != 0.0 {
+            return Err("lumped cut not zero".into());
+        }
+        Ok(())
+    });
+}
+
+/// Graph serialization round-trips exactly.
+#[test]
+fn prop_graph_io_round_trip() {
+    let config = PropConfig { cases: 32, ..Default::default() };
+    check_property("graph_io_round_trip", config, |g| {
+        let (graph, _, _, _) = gen_problem(g);
+        let mut buf = Vec::new();
+        gtip::graph::io::write_graph(&graph, &mut buf).map_err(|e| e.to_string())?;
+        let g2 = gtip::graph::io::read_graph(std::io::Cursor::new(buf)).map_err(|e| e.to_string())?;
+        if g2.node_count() != graph.node_count() || g2.edge_count() != graph.edge_count() {
+            return Err("shape mismatch after round trip".into());
+        }
+        for u in 0..graph.node_count() {
+            if g2.neighbors(u) != graph.neighbors(u) {
+                return Err(format!("adjacency mismatch at node {u}"));
+            }
+            assert_close(g2.node_weight(u), graph.node_weight(u), 1e-12, "node weight")?;
+        }
+        Ok(())
+    });
+}
+
+/// Dense cost matrices agree with scalar evaluation everywhere.
+#[test]
+fn prop_dense_matches_scalar() {
+    let config = PropConfig { cases: 48, ..Default::default() };
+    check_property("dense_matches_scalar", config, |g| {
+        let (graph, machines, part, mu) = gen_problem(g);
+        let dense = gtip::game::cost::dense_cost_matrices(&graph, &machines, &part, mu);
+        let ma = CostModel::new(&graph, machines.clone(), mu, Framework::A);
+        let mb = CostModel::new(&graph, machines.clone(), mu, Framework::B);
+        for i in 0..dense.n {
+            for m in 0..dense.k {
+                assert_close(
+                    dense.costs_a[i * dense.k + m],
+                    ma.node_cost(&part, i, m),
+                    1e-8,
+                    "dense A",
+                )?;
+                assert_close(
+                    dense.costs_b[i * dense.k + m],
+                    mb.node_cost(&part, i, m),
+                    1e-8,
+                    "dense B",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// PRNG distribution sanity under arbitrary seeds (not just the fixed
+/// unit-test seeds).
+#[test]
+fn prop_rng_uniformity() {
+    let config = PropConfig { cases: 16, ..Default::default() };
+    check_property("rng_uniformity", config, |g| {
+        let seed = g.rng.next_u64();
+        let mut rng = Pcg32::new(seed);
+        let buckets = 8usize;
+        let mut counts = vec![0u32; buckets];
+        let trials = 8000;
+        for _ in 0..trials {
+            counts[rng.gen_below(buckets as u32) as usize] += 1;
+        }
+        let expect = trials as f64 / buckets as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            if (c as f64 - expect).abs() > 5.0 * expect.sqrt() {
+                return Err(format!("bucket {i} count {c} vs expected {expect} (seed {seed:#x})"));
+            }
+        }
+        Ok(())
+    });
+}
