@@ -1,0 +1,99 @@
+//! The paper's *title* scenario end to end: closed-loop dynamic load
+//! balancing under every scripted drifting workload.
+//!
+//! For each scenario (hot-spot shift, flash crowd, diurnal ramp,
+//! failure/rejoin) the same graph, workload, and initial partition run
+//! twice: once with the initial partition frozen, once with the
+//! `sim::dynamic` loop re-measuring loads every epoch, smoothing them
+//! through an EWMA estimator, and re-refining warm-started from the
+//! previous equilibrium. The headline number is the wall-tick speedup
+//! of the rebalanced arm (cf. paper Figs. 7/8).
+//!
+//! Run: `cargo run --release --example dynamic_rebalance [-- --seed S]`
+
+use gtip::graph::generators::preferential_attachment;
+use gtip::partition::initial::grow_partition;
+use gtip::partition::MachineConfig;
+use gtip::sim::dynamic::{compare_frozen_vs_rebalanced, DynamicOptions, WeightEstimator};
+use gtip::sim::engine::SimOptions;
+use gtip::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions};
+use gtip::util::cli::Args;
+use gtip::util::rng::Pcg32;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let seed = args.opt_or::<u64>("seed", 2011).expect("seed");
+    let nodes = args.opt_or::<usize>("nodes", 150).expect("nodes");
+    let threads = args.opt_or::<usize>("threads", 160).expect("threads");
+    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 200).expect("epoch-ticks");
+
+    println!("== closed-loop dynamic rebalancing across drifting workloads ==");
+    println!(
+        "   {nodes} LPs, 4 machines, {threads} floods per scenario, epoch = {epoch_ticks} ticks, EWMA estimator\n"
+    );
+
+    let machines = MachineConfig::homogeneous(4);
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
+        epoch_ticks,
+        ..Default::default()
+    };
+
+    let mut wins = 0;
+    for kind in ScenarioKind::ALL {
+        let mut rng = Pcg32::new(seed);
+        let graph = preferential_attachment(nodes, 2, &mut rng);
+        let scenario = Scenario::build(
+            kind,
+            &graph,
+            &ScenarioOptions { threads, ..Default::default() },
+            &mut rng,
+        );
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        let report = compare_frozen_vs_rebalanced(
+            &graph,
+            &machines,
+            &initial,
+            &scenario.injections,
+            WeightEstimator::ewma(0.5),
+            &options,
+        );
+        if report.rebalanced.total_time() < report.frozen.total_time() {
+            wins += 1;
+        }
+        println!(
+            "{:<8} ({:<55}) frozen {:>7} ticks | rebalanced {:>7} ticks | {:>2} refinements, {:>4} transfers | speedup {:.2}x",
+            kind.name(),
+            kind.describe(),
+            report.frozen.total_time(),
+            report.rebalanced.total_time(),
+            report.rebalanced.refinements(),
+            report.rebalanced.transfers,
+            report.speedup(),
+        );
+    }
+    println!(
+        "\nrebalancing beat the frozen partition on {wins}/{} scenarios",
+        ScenarioKind::ALL.len()
+    );
+
+    // Zoom into the hot-spot scenario's epoch stream.
+    let mut rng = Pcg32::new(seed);
+    let graph = preferential_attachment(nodes, 2, &mut rng);
+    let scenario = Scenario::build(
+        ScenarioKind::HotspotShift,
+        &graph,
+        &ScenarioOptions { threads, ..Default::default() },
+        &mut rng,
+    );
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let report = compare_frozen_vs_rebalanced(
+        &graph,
+        &machines,
+        &initial,
+        &scenario.injections,
+        WeightEstimator::ewma(0.5),
+        &options,
+    );
+    println!("\n{}", report.rebalanced.epoch_table("hotspot — per-epoch closed loop").to_text());
+}

@@ -1,0 +1,112 @@
+//! Closed-loop rebalancing benchmarks: wall-clock cost of the
+//! measure→estimate→refine→migrate epoch machinery, and the headline
+//! static-vs-rebalanced tick comparison per scenario.
+//!
+//! The tick counts printed alongside the timings are the *simulated*
+//! wall ticks (the paper's metric); the bench timings are host time.
+
+use gtip::sim::dynamic::{
+    compare_frozen_vs_rebalanced, DynamicDriver, DynamicOptions, WeightEstimator,
+};
+use gtip::sim::engine::SimOptions;
+use gtip::sim::scenario::ScenarioKind;
+use gtip::util::bench::{black_box, BenchConfig, Bencher};
+use gtip::util::rng::Pcg32;
+use gtip::util::testkit::ScenarioFixture;
+
+fn main() {
+    let mut cfg = BenchConfig::coarse();
+    cfg.samples = 3;
+    cfg.max_iters = 3;
+    let mut b = Bencher::new("dynamic").with_config(cfg);
+
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
+        epoch_ticks: 200,
+        ..Default::default()
+    };
+
+    // Headline comparison: frozen vs closed-loop tick counts.
+    println!("static-vs-rebalanced simulated wall ticks (seed 2011):");
+    for kind in ScenarioKind::ALL {
+        let fixture = ScenarioFixture::new(kind, 2011).build();
+        let report = compare_frozen_vs_rebalanced(
+            &fixture.graph,
+            &fixture.machines,
+            &fixture.initial,
+            &fixture.scenario.injections,
+            WeightEstimator::ewma(0.5),
+            &options,
+        );
+        println!(
+            "  {:<8} frozen {:>7} | rebalanced {:>7} | speedup {:.2}x",
+            kind.name(),
+            report.frozen.total_time(),
+            report.rebalanced.total_time(),
+            report.speedup(),
+        );
+    }
+
+    // Host-time cost of one full closed loop per scenario.
+    for kind in ScenarioKind::ALL {
+        let fixture = ScenarioFixture::new(kind, 2011).build();
+        b.bench(format!("closed_loop_{}", kind.name()), || {
+            let driver = DynamicDriver::new(
+                &fixture.graph,
+                fixture.machines.clone(),
+                fixture.initial.clone(),
+                fixture.scenario.injections.clone(),
+                WeightEstimator::ewma(0.5),
+                options.clone(),
+            );
+            black_box(driver.run_owned().stats.ticks)
+        });
+    }
+
+    // Frozen baseline engine cost for reference (same workload).
+    {
+        let fixture = ScenarioFixture::new(ScenarioKind::HotspotShift, 2011).build();
+        let frozen = DynamicOptions { epoch_ticks: 0, ..options.clone() };
+        b.bench("frozen_baseline_hotspot", || {
+            let driver = DynamicDriver::new(
+                &fixture.graph,
+                fixture.machines.clone(),
+                fixture.initial.clone(),
+                fixture.scenario.injections.clone(),
+                WeightEstimator::instantaneous(),
+                frozen.clone(),
+            );
+            black_box(driver.run_owned().stats.ticks)
+        });
+    }
+
+    // Epoch machinery in isolation: a warm-started refine pass on
+    // re-measured weights, without the simulation in the loop.
+    {
+        let fixture = ScenarioFixture::new(ScenarioKind::DiurnalRamp, 7).build();
+        let mut rng = Pcg32::new(99);
+        let drift = fixture.drift_schedule(8, &mut rng);
+        b.bench("reweight_and_refine_epoch", || {
+            let mut graph = fixture.graph.clone();
+            let mut part = fixture.initial.clone();
+            let mut total_transfers = 0usize;
+            for weights in &drift {
+                graph.set_node_weights(weights);
+                part.rebuild_aggregates(&graph);
+                let mut engine = gtip::game::refine::RefineEngine::new(
+                    &graph,
+                    &fixture.machines,
+                    part.clone(),
+                    8.0,
+                    gtip::game::cost::Framework::A,
+                );
+                let report = engine.run(&gtip::game::refine::RefineOptions::default());
+                total_transfers += report.transfers;
+                part = engine.into_partition();
+            }
+            black_box(total_transfers)
+        });
+    }
+
+    let _ = b.write_csv();
+}

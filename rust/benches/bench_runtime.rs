@@ -2,16 +2,18 @@
 //! execution latency of the AOT refine_step artifacts across the padded
 //! size ladder (§Perf target: < 10 ms round-trip at N=1024).
 //!
-//! Skips politely if `make artifacts` has not run.
+//! Skips politely if `make artifacts` has not run, and requires building
+//! with `--features pjrt` (vendored `xla` crate) at all.
 
-use gtip::experiments::common::StudySetup;
-use gtip::graph::generators::preferential_attachment;
-use gtip::partition::{MachineConfig, Partition};
-use gtip::runtime::cost_eval::PjrtCostEvaluator;
-use gtip::util::bench::{BenchConfig, Bencher};
-use gtip::util::rng::Pcg32;
-
+#[cfg(feature = "pjrt")]
 fn main() {
+    use gtip::experiments::common::StudySetup;
+    use gtip::graph::generators::preferential_attachment;
+    use gtip::partition::{MachineConfig, Partition};
+    use gtip::runtime::cost_eval::PjrtCostEvaluator;
+    use gtip::util::bench::{BenchConfig, Bencher};
+    use gtip::util::rng::Pcg32;
+
     let mut eval = match PjrtCostEvaluator::from_default_dir() {
         Ok(e) => e,
         Err(e) => {
@@ -59,4 +61,9 @@ fn main() {
         });
     }
     let _ = b.write_csv();
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    println!("SKIP bench_runtime: built without the `pjrt` feature (vendored xla crate required)");
 }

@@ -1,33 +1,50 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled `Display`/`Error` impls —
+//! `thiserror` is unavailable offline).
 
 /// Errors produced by GTIP library operations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("graph error: {0}")]
     Graph(String),
-
-    #[error("partition error: {0}")]
     Partition(String),
-
-    #[error("simulation error: {0}")]
     Sim(String),
-
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla error: {0}")]
+    Io(std::io::Error),
     Xla(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Graph(m) => write!(f, "graph error: {m}"),
+            Error::Partition(m) => write!(f, "partition error: {m}"),
+            Error::Sim(m) => write!(f, "simulation error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -6,10 +6,17 @@
 //!                 [--distributed] [--anneal] [--save FILE]
 //! gtip simulate   [--family ...] [--nodes N] [--k K] [--refine-every T]
 //!                 [--framework A|B] [--mu MU] [--threads N] [--seed S]
+//! gtip dynamic    [--scenario hotspot|flash|diurnal|failure] [--nodes N] [--k K]
+//!                 [--epoch-ticks E] [--estimator instant|ewma|hysteresis]
+//!                 [--backend sequential|distributed] [--framework A|B]
+//!                 [--threads N] [--horizon T] [--seed S] [--compare]
 //! gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
 //! gtip artifacts  [--dir DIR]         # verify PJRT artifacts vs native
 //! gtip help
 //! ```
+//!
+//! Errors are plain `Box<dyn Error>` (`anyhow` is unavailable offline);
+//! every sub-error type converts via `?`.
 
 use std::sync::Arc;
 
@@ -22,10 +29,18 @@ use crate::graph::generators::{generate, GraphFamily};
 use crate::partition::initial::grow_partition;
 use crate::partition::{global_cost, MachineConfig};
 use crate::sim::driver::{run_dynamic, DriverOptions};
+use crate::sim::dynamic::{
+    compare_frozen_vs_rebalanced, DynamicDriver, DynamicOptions, EstimatorKind, RefineBackend,
+    WeightEstimator,
+};
 use crate::sim::engine::SimOptions;
+use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions};
 use crate::sim::workload::{FloodWorkload, WorkloadOptions};
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
+
+/// CLI-level result: any error type boxes into it via `?`.
+type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 const HELP: &str = "gtip — Game Theoretic Iterative Partitioning (Kurve et al., TOMACS 2011)
 
@@ -35,6 +50,11 @@ USAGE:
                   [--distributed] [--anneal] [--save FILE]
   gtip simulate   [--family ...] [--nodes N] [--k K] [--refine-every T]
                   [--framework A|B] [--mu MU] [--threads N] [--seed S]
+  gtip dynamic    [--scenario hotspot|flash|diurnal|failure] [--nodes N] [--k K]
+                  [--epoch-ticks E] [--estimator instant|ewma|hysteresis]
+                  [--backend sequential|distributed] [--framework A|B]
+                  [--threads N] [--horizon T] [--ticks-per-transfer C]
+                  [--seed S] [--compare]
   gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
   gtip artifacts  [--dir DIR]
   gtip help
@@ -58,23 +78,22 @@ pub fn main() -> i32 {
     }
 }
 
-fn run(args: &Args) -> anyhow::Result<()> {
+fn run(args: &Args) -> CliResult {
     match args.subcommand() {
         Some("partition") => cmd_partition(args),
         Some("simulate") => cmd_simulate(args),
+        Some("dynamic") => cmd_dynamic(args),
         Some("experiment") => cmd_experiment(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("help") | None => {
             print!("{HELP}");
             Ok(())
         }
-        Some(other) => {
-            anyhow::bail!("unknown subcommand {other:?}\n{HELP}");
-        }
+        Some(other) => Err(format!("unknown subcommand {other:?}\n{HELP}").into()),
     }
 }
 
-fn machines_from_args(args: &Args) -> anyhow::Result<MachineConfig> {
+fn machines_from_args(args: &Args) -> Result<MachineConfig, Box<dyn std::error::Error>> {
     if let Some(speeds) = args.opt_list::<f64>("speeds")? {
         Ok(MachineConfig::from_speeds(&speeds))
     } else {
@@ -83,19 +102,17 @@ fn machines_from_args(args: &Args) -> anyhow::Result<MachineConfig> {
     }
 }
 
-fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+fn cmd_partition(args: &Args) -> CliResult {
     let seed = args.opt_or::<u64>("seed", Config::default().seed)?;
     let mu = args.opt_or::<f64>("mu", 8.0)?;
-    let framework: Framework =
-        args.str_or("framework", "A").parse().map_err(anyhow::Error::msg)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
     let machines = machines_from_args(args)?;
     let mut rng = Pcg32::new(seed);
 
     let graph = if let Some(path) = args.opt_str("graph") {
         crate::graph::io::load_graph(path)?
     } else {
-        let family: GraphFamily =
-            args.str_or("family", "table1").parse().map_err(anyhow::Error::msg)?;
+        let family: GraphFamily = args.str_or("family", "table1").parse()?;
         let nodes = args.opt_or::<usize>("nodes", 230)?;
         generate(family, nodes, &mut rng)
     };
@@ -163,14 +180,13 @@ fn cmd_partition(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+fn cmd_simulate(args: &Args) -> CliResult {
     let seed = args.opt_or::<u64>("seed", 42)?;
-    let family: GraphFamily = args.str_or("family", "pa").parse().map_err(anyhow::Error::msg)?;
+    let family: GraphFamily = args.str_or("family", "pa").parse()?;
     let nodes = args.opt_or::<usize>("nodes", 230)?;
     let machines = machines_from_args(args)?;
     let refine_every = args.opt_or::<u64>("refine-every", 500)?;
-    let framework: Framework =
-        args.str_or("framework", "A").parse().map_err(anyhow::Error::msg)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
     let mu = args.opt_or::<f64>("mu", 8.0)?;
     let threads = args.opt_or::<usize>("threads", 150)?;
 
@@ -205,12 +221,122 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
+/// The closed-loop §6.1 title scenario: scripted drifting workload,
+/// epoch-windowed load measurement, estimator-smoothed re-weighting,
+/// warm-started refinement, live migration, per-epoch reporting.
+fn cmd_dynamic(args: &Args) -> CliResult {
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let family: GraphFamily = args.str_or("family", "pa").parse()?;
+    let nodes = args.opt_or::<usize>("nodes", 150)?;
+    let machines = machines_from_args(args)?;
+    let scenario_kind: ScenarioKind = args.str_or("scenario", "hotspot").parse()?;
+    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 200)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let mu = args.opt_or::<f64>("mu", 8.0)?;
+    let estimator_kind: EstimatorKind = args.str_or("estimator", "ewma").parse()?;
+    let backend: RefineBackend = args.str_or("backend", "sequential").parse()?;
+    let threads = args.opt_or::<usize>("threads", 160)?;
+    let horizon = args.opt_or::<u64>("horizon", 2_400)?;
+    let ticks_per_transfer = args.opt_or::<u64>("ticks-per-transfer", 0)?;
+    if nodes == 0 {
+        return Err("--nodes must be >= 1".into());
+    }
+    if threads == 0 {
+        return Err("--threads must be >= 1".into());
+    }
+    if horizon == 0 {
+        return Err("--horizon must be >= 1".into());
+    }
+
+    let mut rng = Pcg32::new(seed);
+    let graph = generate(family, nodes, &mut rng);
+    let scenario = Scenario::build(
+        scenario_kind,
+        &graph,
+        &ScenarioOptions { threads, horizon_ticks: horizon, ..Default::default() },
+        &mut rng,
+    );
+    println!(
+        "scenario {scenario_kind} ({}): {} LPs, {} edges, K={}, {} floods over {horizon} ticks",
+        scenario_kind.describe(),
+        graph.node_count(),
+        graph.edge_count(),
+        machines.count(),
+        scenario.len(),
+    );
+    println!(
+        "loop: epoch={epoch_ticks} ticks, estimator {estimator_kind}, backend {backend}, framework {framework}, mu={mu}"
+    );
+
+    let options = DynamicOptions {
+        sim: SimOptions { trace_every: 50, ..Default::default() },
+        epoch_ticks,
+        framework,
+        mu,
+        backend,
+        ticks_per_transfer,
+        max_refinements: 0,
+    };
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let estimator = WeightEstimator::of_kind(estimator_kind);
+
+    if args.flag("compare") {
+        let report = compare_frozen_vs_rebalanced(
+            &graph,
+            &machines,
+            &initial,
+            &scenario.injections,
+            estimator,
+            &options,
+        );
+        let title = format!("gtip dynamic — {scenario_kind} (rebalanced arm)");
+        println!("{}", report.rebalanced.epoch_table(&title).to_text());
+        println!(
+            "frozen     : {:>7} wall ticks  (rollbacks {:>6}, cross-machine {:>6})",
+            report.frozen.total_time(),
+            report.frozen.stats.rollbacks,
+            report.frozen.stats.cross_machine_forwards,
+        );
+        println!(
+            "rebalanced : {:>7} wall ticks  (rollbacks {:>6}, cross-machine {:>6}, {} refinements, {} transfers)",
+            report.rebalanced.total_time(),
+            report.rebalanced.stats.rollbacks,
+            report.rebalanced.stats.cross_machine_forwards,
+            report.rebalanced.refinements(),
+            report.rebalanced.transfers,
+        );
+        println!("speedup from closed-loop rebalancing: {:.2}x", report.speedup());
+    } else {
+        let mut driver = DynamicDriver::new(
+            &graph,
+            machines.clone(),
+            initial,
+            scenario.injections,
+            estimator,
+            options,
+        );
+        let report = driver.run();
+        let title = format!("gtip dynamic — {scenario_kind}");
+        println!("{}", report.epoch_table(&title).to_text());
+        println!(
+            "total: {} wall ticks  (events {}, rollbacks {}, {} refinements, {} transfers, truncated {})",
+            report.total_time(),
+            report.stats.events_processed,
+            report.stats.rollbacks,
+            report.refinements(),
+            report.transfers,
+            report.stats.truncated,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> CliResult {
     let which = args
         .positionals
         .get(1)
         .map(String::as_str)
-        .ok_or_else(|| anyhow::anyhow!("experiment name required: table1|batch|fig7|fig8|fig9|fig10|ablation|all"))?;
+        .ok_or("experiment name required: table1|batch|fig7|fig8|fig9|fig10|ablation|all")?;
     let seed = args.opt_or::<u64>("seed", 2011)?;
     let quick = args.flag("quick");
     match which {
@@ -247,12 +373,13 @@ fn cmd_experiment(args: &Args) -> anyhow::Result<()> {
             crate::experiments::figs78::run_and_report(GraphFamily::Geometric, seed, quick);
             crate::experiments::fig9_10::run_and_report(seed, quick);
         }
-        other => anyhow::bail!("unknown experiment {other:?}"),
+        other => return Err(format!("unknown experiment {other:?}").into()),
     }
     Ok(())
 }
 
-fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
+#[cfg(feature = "pjrt")]
+fn cmd_artifacts(args: &Args) -> CliResult {
     use crate::runtime::cost_eval::{max_rel_error_vs_native, PjrtCostEvaluator};
     let dir = args.str_or("dir", "artifacts").to_string();
     let mut eval = PjrtCostEvaluator::from_dir(&dir)?;
@@ -268,9 +395,18 @@ fn cmd_artifacts(args: &Args) -> anyhow::Result<()> {
         "verified refine_step on N={} K={}: PJRT vs native max rel error = {err:.2e}",
         out.n, out.k
     );
-    anyhow::ensure!(err < 1e-3, "artifact/native divergence: {err}");
+    if err >= 1e-3 {
+        return Err(format!("artifact/native divergence: {err}").into());
+    }
     println!("artifacts OK");
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts(_args: &Args) -> CliResult {
+    Err("the `artifacts` subcommand requires building with `--features pjrt` \
+         (vendored xla crate; see DESIGN.md §6)"
+        .into())
 }
 
 #[cfg(test)]
@@ -318,6 +454,65 @@ mod tests {
             "3",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn dynamic_small_closed_loop() {
+        run(&parse(&[
+            "dynamic",
+            "--scenario",
+            "hotspot",
+            "--nodes",
+            "90",
+            "--threads",
+            "40",
+            "--horizon",
+            "800",
+            "--epoch-ticks",
+            "150",
+            "--seed",
+            "6",
+            "--k",
+            "3",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn dynamic_compare_mode() {
+        run(&parse(&[
+            "dynamic",
+            "--scenario",
+            "flash",
+            "--nodes",
+            "80",
+            "--threads",
+            "40",
+            "--horizon",
+            "800",
+            "--epoch-ticks",
+            "150",
+            "--estimator",
+            "hysteresis",
+            "--seed",
+            "7",
+            "--k",
+            "3",
+            "--compare",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn dynamic_rejects_bad_scenario() {
+        assert!(run(&parse(&["dynamic", "--scenario", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn dynamic_rejects_degenerate_workloads() {
+        assert!(run(&parse(&["dynamic", "--threads", "0"])).is_err());
+        assert!(run(&parse(&["dynamic", "--horizon", "0"])).is_err());
+        assert!(run(&parse(&["dynamic", "--nodes", "0"])).is_err());
     }
 
     #[test]

@@ -167,6 +167,27 @@ impl Graph {
         self.targets[s..e].iter().copied().zip(self.edge_weights[s..e].iter().copied())
     }
 
+    /// Number of stored half-edges (`2·edge_count`): the length of any
+    /// per-half-edge side table aligned with the CSR slots.
+    pub fn half_edge_count(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// First CSR slot of `u`'s adjacency row; slot `row_offset(u) + k`
+    /// holds `u`'s `k`-th neighbor as returned by [`Self::neighbors`].
+    #[inline]
+    pub fn row_offset(&self, u: NodeId) -> usize {
+        self.offsets[u]
+    }
+
+    /// CSR slot of the directed half-edge `u -> v`, or `None` if `{u,v}`
+    /// is not an edge.
+    pub fn half_edge_index(&self, u: NodeId, v: NodeId) -> Option<usize> {
+        let s = self.offsets[u];
+        let e = self.offsets[u + 1];
+        self.targets[s..e].binary_search(&v).ok().map(|k| s + k)
+    }
+
     /// Edge weight `c_uv`, or `None` if `{u,v}` is not an edge.
     pub fn edge_weight(&self, u: NodeId, v: NodeId) -> Option<f64> {
         let s = self.offsets[u];
@@ -299,6 +320,18 @@ mod tests {
         assert!((g.incident_weight(0) - 4.0).abs() < 1e-12);
         assert!((g.incident_weight(1) - 3.0).abs() < 1e-12);
         assert!((g.incident_weight(2) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_edge_slots_align_with_neighbors() {
+        let g = triangle();
+        assert_eq!(g.half_edge_count(), 6);
+        for u in 0..3 {
+            for (k, &v) in g.neighbors(u).iter().enumerate() {
+                assert_eq!(g.half_edge_index(u, v), Some(g.row_offset(u) + k));
+            }
+        }
+        assert_eq!(g.half_edge_index(0, 0), None);
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //!   iterative refinement, report global costs.
 //! * `simulate`   — run the optimistic PDES archetype with dynamic
 //!   refinement and report simulation time + machine load traces.
+//! * `dynamic`    — the closed-loop §6.1 title scenario: scripted
+//!   drifting workloads, epoch-windowed load measurement, estimator-
+//!   smoothed re-weighting, warm-started refinement, live migration,
+//!   per-epoch reports (`--compare` adds the frozen baseline).
 //! * `experiment` — regenerate a paper table/figure
 //!   (`table1 | batch | fig7 | fig8 | fig9 | fig10 | all`).
 //! * `artifacts`  — verify the PJRT artifacts load and agree with the

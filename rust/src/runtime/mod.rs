@@ -6,10 +6,19 @@
 //! a compiled PJRT executable per padded shape and
 //! [`cost_eval::PjrtCostEvaluator`] pads live problems up to the nearest
 //! compiled shape and unpacks the outputs.
+//!
+//! The executor needs the native `xla` crate, which cannot be fetched in
+//! offline builds, so the PJRT half is gated behind the `pjrt` cargo
+//! feature. The artifact manifest ([`artifacts`]) is plain std and stays
+//! available either way so manifests can be inspected and validated
+//! without the runtime.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod cost_eval;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifacts::{ArtifactManifest, ArtifactSpec};
+#[cfg(feature = "pjrt")]
 pub use cost_eval::{PjrtCostEvaluator, RefineStepOutput};

@@ -1,0 +1,834 @@
+//! Closed-loop dynamic rebalancing (§6.1) — the paper's *title*
+//! scenario, end to end.
+//!
+//! [`DynamicDriver`] alternates **simulation epochs** with **refinement
+//! epochs**: run the optimistic PDES engine for `epoch_ticks` wall
+//! ticks, harvest the per-LP measured loads of the window (events
+//! processed, rollbacks, per-edge forward traffic — see
+//! [`EpochCounters`]), turn them into fresh node/edge weights through a
+//! pluggable [`WeightEstimator`], re-run the game-theoretic refinement
+//! *warm-started from the current partition* (sequentially or through
+//! the distributed machine-actor coordinator, see [`RefineBackend`]),
+//! migrate the LPs on the live engine, and record an [`EpochReport`].
+//!
+//! Differences from the one-shot `sim::driver` loop kept for the Fig.
+//! 7–10 harnesses: epoch-boundary (not modulo-tick) scheduling, windowed
+//! activity measurement instead of instantaneous queue lengths only,
+//! estimator smoothing/hysteresis to damp migration churn (cf. the
+//! self-clustering partitioner of arXiv:1610.01295), a selectable
+//! distributed backend, and a per-epoch report stream capturing the
+//! potential descent of every refinement.
+
+use std::sync::Arc;
+
+use crate::coordinator::{run_distributed, DistributedOptions};
+use crate::game::cost::Framework;
+use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::graph::Graph;
+use crate::partition::initial::grow_partition;
+use crate::partition::{global_cost, MachineConfig, Partition};
+use crate::sim::engine::{EpochCounters, Injection, SimEngine, SimOptions, SimStats};
+use crate::sim::weights::{self, MeasuredWeights};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Trace;
+use crate::util::table::Table;
+
+/// How measured loads become refinement weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorKind {
+    /// Use the latest window's measurement as-is.
+    Instantaneous,
+    /// Exponentially-weighted moving average across windows.
+    Ewma,
+    /// EWMA plus a relative dead band: the emitted weight only moves
+    /// when the smoothed estimate drifts far enough, damping migration
+    /// churn between epochs.
+    Hysteresis,
+}
+
+impl std::str::FromStr for EstimatorKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "instant" | "instantaneous" => Ok(EstimatorKind::Instantaneous),
+            "ewma" => Ok(EstimatorKind::Ewma),
+            "hyst" | "hysteresis" => Ok(EstimatorKind::Hysteresis),
+            other => Err(format!(
+                "unknown estimator {other:?} (expected instant|ewma|hysteresis)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for EstimatorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EstimatorKind::Instantaneous => "instant",
+            EstimatorKind::Ewma => "ewma",
+            EstimatorKind::Hysteresis => "hysteresis",
+        })
+    }
+}
+
+/// Stateful weight estimator fed one [`MeasuredWeights`] per epoch.
+#[derive(Debug, Clone)]
+pub struct WeightEstimator {
+    kind: EstimatorKind,
+    /// EWMA smoothing factor in `(0, 1]` (1 = no memory).
+    alpha: f64,
+    /// Relative dead band of the hysteresis variant.
+    deadband: f64,
+    node_state: Vec<f64>,
+    edge_state: Vec<f64>,
+    node_out: Vec<f64>,
+    edge_out: Vec<f64>,
+    primed: bool,
+}
+
+impl WeightEstimator {
+    pub fn new(kind: EstimatorKind, alpha: f64, deadband: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of (0, 1]");
+        assert!(deadband >= 0.0, "negative dead band");
+        WeightEstimator {
+            kind,
+            alpha,
+            deadband,
+            node_state: Vec::new(),
+            edge_state: Vec::new(),
+            node_out: Vec::new(),
+            edge_out: Vec::new(),
+            primed: false,
+        }
+    }
+
+    /// Pass-through estimator.
+    pub fn instantaneous() -> Self {
+        WeightEstimator::new(EstimatorKind::Instantaneous, 1.0, 0.0)
+    }
+
+    /// EWMA-smoothed estimator.
+    pub fn ewma(alpha: f64) -> Self {
+        WeightEstimator::new(EstimatorKind::Ewma, alpha, 0.0)
+    }
+
+    /// EWMA plus relative dead band.
+    pub fn hysteresis(alpha: f64, deadband: f64) -> Self {
+        WeightEstimator::new(EstimatorKind::Hysteresis, alpha, deadband)
+    }
+
+    /// Default parameters per kind (used by the CLI).
+    pub fn of_kind(kind: EstimatorKind) -> Self {
+        match kind {
+            EstimatorKind::Instantaneous => WeightEstimator::instantaneous(),
+            EstimatorKind::Ewma => WeightEstimator::ewma(0.5),
+            EstimatorKind::Hysteresis => WeightEstimator::hysteresis(0.5, 0.25),
+        }
+    }
+
+    pub fn kind(&self) -> EstimatorKind {
+        self.kind
+    }
+
+    /// Fold one window's raw measurement into the estimate and return
+    /// the weights to hand to the refinement engine.
+    pub fn estimate(&mut self, raw: &MeasuredWeights) -> MeasuredWeights {
+        if self.kind == EstimatorKind::Instantaneous {
+            return raw.clone();
+        }
+        if !self.primed {
+            self.node_state = raw.node_weights.clone();
+            self.edge_state = raw.edge_weights.iter().map(|&(_, _, c)| c).collect();
+            self.node_out = self.node_state.clone();
+            self.edge_out = self.edge_state.clone();
+            self.primed = true;
+        } else {
+            assert_eq!(self.node_state.len(), raw.node_weights.len(), "graph changed shape");
+            assert_eq!(self.edge_state.len(), raw.edge_weights.len(), "graph changed shape");
+            for (s, &x) in self.node_state.iter_mut().zip(&raw.node_weights) {
+                *s = self.alpha * x + (1.0 - self.alpha) * *s;
+            }
+            for (s, &(_, _, c)) in self.edge_state.iter_mut().zip(&raw.edge_weights) {
+                *s = self.alpha * c + (1.0 - self.alpha) * *s;
+            }
+            match self.kind {
+                EstimatorKind::Ewma => {
+                    self.node_out.copy_from_slice(&self.node_state);
+                    self.edge_out.copy_from_slice(&self.edge_state);
+                }
+                EstimatorKind::Hysteresis => {
+                    let band = self.deadband;
+                    for (o, &s) in self.node_out.iter_mut().zip(&self.node_state) {
+                        if (s - *o).abs() > band * 1.0f64.max(o.abs()) {
+                            *o = s;
+                        }
+                    }
+                    for (o, &s) in self.edge_out.iter_mut().zip(&self.edge_state) {
+                        if (s - *o).abs() > band * 1.0f64.max(o.abs()) {
+                            *o = s;
+                        }
+                    }
+                }
+                EstimatorKind::Instantaneous => unreachable!(),
+            }
+        }
+        MeasuredWeights {
+            node_weights: self.node_out.clone(),
+            edge_weights: raw
+                .edge_weights
+                .iter()
+                .zip(&self.edge_out)
+                .map(|(&(u, v, _), &c)| (u, v, c))
+                .collect(),
+        }
+    }
+}
+
+/// Which refinement implementation closes the loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefineBackend {
+    /// In-process [`RefineEngine`] (fast path).
+    Sequential,
+    /// One-thread-per-machine actor protocol
+    /// ([`run_distributed`]) — produces the identical equilibrium (same
+    /// deterministic turn order) while measuring the O(K) sync traffic.
+    Distributed,
+}
+
+impl std::str::FromStr for RefineBackend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "seq" | "sequential" => Ok(RefineBackend::Sequential),
+            "dist" | "distributed" | "coordinator" => Ok(RefineBackend::Distributed),
+            other => Err(format!(
+                "unknown backend {other:?} (expected sequential|distributed)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for RefineBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RefineBackend::Sequential => "sequential",
+            RefineBackend::Distributed => "distributed",
+        })
+    }
+}
+
+/// Options of the closed loop.
+#[derive(Debug, Clone)]
+pub struct DynamicOptions {
+    pub sim: SimOptions,
+    /// Wall ticks per simulation epoch; 0 freezes the initial partition
+    /// (the static baseline).
+    pub epoch_ticks: u64,
+    pub framework: Framework,
+    /// Relative rollback-delay weight μ.
+    pub mu: f64,
+    pub backend: RefineBackend,
+    /// Wall-tick charge per executed LP migration (the paper ignores
+    /// migration cost; default 0).
+    pub ticks_per_transfer: u64,
+    /// Cap on refinement epochs (0 = unlimited).
+    pub max_refinements: usize,
+}
+
+impl Default for DynamicOptions {
+    fn default() -> Self {
+        DynamicOptions {
+            sim: SimOptions::default(),
+            epoch_ticks: 200,
+            framework: Framework::A,
+            mu: 8.0,
+            backend: RefineBackend::Sequential,
+            ticks_per_transfer: 0,
+            max_refinements: 0,
+        }
+    }
+}
+
+/// What one refinement epoch did.
+#[derive(Debug, Clone)]
+pub struct EpochRefinement {
+    /// Potential on the re-measured weights *before* refining (warm
+    /// start = current partition).
+    pub potential_before: f64,
+    /// Potential at the refined equilibrium. Never exceeds
+    /// `potential_before` (Thm 4.1 descent).
+    pub potential_after: f64,
+    /// LP migrations executed.
+    pub transfers: usize,
+    /// Wall-tick migration charge of this epoch.
+    pub migration_ticks: u64,
+    pub imbalance_before: f64,
+    pub imbalance_after: f64,
+    /// Whether refinement reached a Nash equilibrium (vs the cap).
+    pub converged: bool,
+}
+
+/// Per-epoch record of the closed loop.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub epoch: usize,
+    pub tick_start: u64,
+    pub tick_end: u64,
+    /// Events completed during the window.
+    pub events_processed: u64,
+    /// Rollback episodes during the window.
+    pub rollbacks: u64,
+    /// Cross-machine forwards during the window.
+    pub cross_machine_forwards: u64,
+    /// Events per wall tick over the window — the throughput the
+    /// rebalancer tries to keep high.
+    pub throughput: f64,
+    /// `None` on frozen (baseline) epochs and on the drain-out tail.
+    pub refine: Option<EpochRefinement>,
+}
+
+/// Aggregate result of a closed-loop run.
+#[derive(Debug, Clone)]
+pub struct DynamicReport {
+    pub stats: SimStats,
+    pub epochs: Vec<EpochReport>,
+    /// Total LP migrations across all refinement epochs.
+    pub transfers: usize,
+    /// Total wall-tick migration charge.
+    pub migration_ticks: u64,
+    /// Machine-load traces (populated if `sim.trace_every > 0`).
+    pub load_traces: Vec<Trace>,
+}
+
+impl DynamicReport {
+    /// Total simulation time including migration charges — the paper's
+    /// headline metric.
+    pub fn total_time(&self) -> u64 {
+        self.stats.ticks + self.migration_ticks
+    }
+
+    /// Number of refinement epochs that actually ran.
+    pub fn refinements(&self) -> usize {
+        self.epochs.iter().filter(|e| e.refine.is_some()).count()
+    }
+
+    /// Render the per-epoch stream as a table.
+    pub fn epoch_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "epoch", "ticks", "events", "ev/tick", "rollbacks", "x-machine",
+                "transfers", "potential",
+            ],
+        );
+        for e in &self.epochs {
+            let (transfers, potential) = match &e.refine {
+                Some(r) => (
+                    r.transfers.to_string(),
+                    format!("{:.0} -> {:.0}", r.potential_before, r.potential_after),
+                ),
+                None => ("-".into(), "(frozen)".into()),
+            };
+            t.row(&[
+                e.epoch.to_string(),
+                format!("{}..{}", e.tick_start, e.tick_end),
+                e.events_processed.to_string(),
+                format!("{:.3}", e.throughput),
+                e.rollbacks.to_string(),
+                e.cross_machine_forwards.to_string(),
+                transfers,
+                potential,
+            ]);
+        }
+        t
+    }
+}
+
+/// The closed-loop driver. Borrows the (topology-)immutable LP graph;
+/// owns a private weighted copy for the refinement side.
+pub struct DynamicDriver<'g> {
+    engine: SimEngine<'g>,
+    lp_graph: Graph,
+    machines: MachineConfig,
+    estimator: WeightEstimator,
+    options: DynamicOptions,
+    epochs: Vec<EpochReport>,
+    refinements: usize,
+    transfers: usize,
+    migration_ticks: u64,
+}
+
+impl<'g> DynamicDriver<'g> {
+    pub fn new(
+        graph: &'g Graph,
+        machines: MachineConfig,
+        initial: Partition,
+        injections: Vec<Injection>,
+        estimator: WeightEstimator,
+        options: DynamicOptions,
+    ) -> Self {
+        let engine =
+            SimEngine::new(graph, machines.clone(), initial, options.sim.clone(), injections);
+        DynamicDriver {
+            engine,
+            lp_graph: graph.clone(),
+            machines,
+            estimator,
+            options,
+            epochs: Vec::new(),
+            refinements: 0,
+            transfers: 0,
+            migration_ticks: 0,
+        }
+    }
+
+    pub fn engine(&self) -> &SimEngine<'g> {
+        &self.engine
+    }
+
+    pub fn epochs(&self) -> &[EpochReport] {
+        &self.epochs
+    }
+
+    /// Potential of `part` on the current (re-measured) LP graph, under
+    /// the configured framework.
+    fn potential_of(&self, part: &Partition) -> f64 {
+        match self.options.framework {
+            Framework::A => global_cost::c0(&self.lp_graph, &self.machines, part, self.options.mu),
+            Framework::B => {
+                global_cost::c0_tilde(&self.lp_graph, &self.machines, part, self.options.mu)
+            }
+        }
+    }
+
+    /// Measure → estimate → install → refine (warm start) → migrate.
+    fn refine_once(&mut self, counters: &EpochCounters) -> EpochRefinement {
+        let raw = weights::measure_epoch(&self.engine, counters);
+        let estimated = self.estimator.estimate(&raw);
+        weights::install(&mut self.lp_graph, &estimated);
+
+        let mut part = self.engine.partition().clone();
+        part.rebuild_aggregates(&self.lp_graph);
+        let imbalance_before = part.imbalance(&self.machines);
+
+        let (potential_before, potential_after, transfers, converged, refined) =
+            match self.options.backend {
+                RefineBackend::Sequential => {
+                    let mut refine = RefineEngine::new(
+                        &self.lp_graph,
+                        &self.machines,
+                        part,
+                        self.options.mu,
+                        self.options.framework,
+                    );
+                    let before = refine.potential();
+                    let report = refine.run(&RefineOptions::default());
+                    (
+                        before,
+                        report.final_potential,
+                        report.transfers,
+                        report.converged,
+                        refine.into_partition(),
+                    )
+                }
+                RefineBackend::Distributed => {
+                    let before = self.potential_of(&part);
+                    let report = run_distributed(
+                        Arc::new(self.lp_graph.clone()),
+                        &self.machines,
+                        part,
+                        &DistributedOptions {
+                            mu: self.options.mu,
+                            framework: self.options.framework,
+                            ..Default::default()
+                        },
+                    );
+                    let after = self.potential_of(&report.partition);
+                    (before, after, report.transfers, report.converged, report.partition)
+                }
+            };
+
+        let imbalance_after = refined.imbalance(&self.machines);
+        let charge = self.options.ticks_per_transfer * transfers as u64;
+        self.refinements += 1;
+        self.transfers += transfers;
+        self.migration_ticks += charge;
+        self.engine.set_partition(refined);
+        EpochRefinement {
+            potential_before,
+            potential_after,
+            transfers,
+            migration_ticks: charge,
+            imbalance_before,
+            imbalance_after,
+            converged,
+        }
+    }
+
+    /// Run one epoch: up to `epoch_ticks` of simulation, then (if work
+    /// remains and rebalancing is enabled) one refinement pass. Returns
+    /// `false` once the workload drained or the tick cap was hit.
+    pub fn run_epoch(&mut self) -> bool {
+        if self.engine.drained() || self.engine.stats().ticks >= self.options.sim.max_ticks {
+            return false;
+        }
+        let tick_start = self.engine.stats().ticks;
+        let budget = if self.options.epoch_ticks == 0 {
+            self.options.sim.max_ticks
+        } else {
+            self.options.epoch_ticks
+        };
+        let mut stepped: u64 = 0;
+        while stepped < budget
+            && self.engine.stats().ticks < self.options.sim.max_ticks
+            && self.engine.step()
+        {
+            stepped += 1;
+        }
+        let counters = self.engine.take_epoch_counters();
+        let tick_end = self.engine.stats().ticks;
+        let more = !self.engine.drained() && tick_end < self.options.sim.max_ticks;
+
+        let refine = if more
+            && self.options.epoch_ticks > 0
+            && (self.options.max_refinements == 0 || self.refinements < self.options.max_refinements)
+        {
+            Some(self.refine_once(&counters))
+        } else {
+            None
+        };
+
+        let window = (tick_end - tick_start).max(1);
+        self.epochs.push(EpochReport {
+            epoch: self.epochs.len(),
+            tick_start,
+            tick_end,
+            events_processed: counters.events_total(),
+            rollbacks: counters.rollbacks_total(),
+            cross_machine_forwards: counters.cross_forwards_total(),
+            throughput: counters.events_total() as f64 / window as f64,
+            refine,
+        });
+        more
+    }
+
+    /// Run epochs until the workload drains (or `max_ticks`).
+    pub fn run(&mut self) -> DynamicReport {
+        while self.run_epoch() {}
+        let mut stats = self.engine.stats().clone();
+        if !self.engine.drained() {
+            stats.truncated = true;
+        }
+        DynamicReport {
+            stats,
+            epochs: self.epochs.clone(),
+            transfers: self.transfers,
+            migration_ticks: self.migration_ticks,
+            load_traces: self.engine.load_traces().to_vec(),
+        }
+    }
+}
+
+/// Run a full closed loop from an App.-A hop-growth initial partition
+/// (unit weights) — the `gtip dynamic` entry point.
+pub fn run_closed_loop(
+    graph: &Graph,
+    machines: &MachineConfig,
+    injections: Vec<Injection>,
+    estimator: WeightEstimator,
+    options: &DynamicOptions,
+    rng: &mut Pcg32,
+) -> DynamicReport {
+    let initial = grow_partition(graph, machines, rng);
+    let mut driver = DynamicDriver::new(
+        graph,
+        machines.clone(),
+        initial,
+        injections,
+        estimator,
+        options.clone(),
+    );
+    driver.run()
+}
+
+/// Frozen-vs-rebalanced comparison on an identical graph, workload and
+/// initial partition — the headline §6.1 experiment.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub frozen: DynamicReport,
+    pub rebalanced: DynamicReport,
+}
+
+impl CompareReport {
+    /// `frozen time / rebalanced time` (> 1 means rebalancing won).
+    pub fn speedup(&self) -> f64 {
+        self.frozen.total_time() as f64 / self.rebalanced.total_time().max(1) as f64
+    }
+}
+
+/// Run both arms. The frozen arm keeps `initial` for the whole run; the
+/// rebalanced arm closes the loop with `estimator` every `epoch_ticks`.
+pub fn compare_frozen_vs_rebalanced(
+    graph: &Graph,
+    machines: &MachineConfig,
+    initial: &Partition,
+    injections: &[Injection],
+    estimator: WeightEstimator,
+    options: &DynamicOptions,
+) -> CompareReport {
+    let frozen_options = DynamicOptions { epoch_ticks: 0, ..options.clone() };
+    let frozen = DynamicDriver::new(
+        graph,
+        machines.clone(),
+        initial.clone(),
+        injections.to_vec(),
+        WeightEstimator::instantaneous(),
+        frozen_options,
+    )
+    .run_owned();
+    let rebalanced = DynamicDriver::new(
+        graph,
+        machines.clone(),
+        initial.clone(),
+        injections.to_vec(),
+        estimator,
+        options.clone(),
+    )
+    .run_owned();
+    CompareReport { frozen, rebalanced }
+}
+
+impl<'g> DynamicDriver<'g> {
+    /// `run()` for by-value call chains.
+    pub fn run_owned(mut self) -> DynamicReport {
+        self.run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::preferential_attachment;
+    use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions};
+
+    fn setup(seed: u64) -> (Graph, MachineConfig, Scenario) {
+        let mut rng = Pcg32::new(seed);
+        let g = preferential_attachment(120, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let scenario = Scenario::build(
+            ScenarioKind::HotspotShift,
+            &g,
+            &ScenarioOptions { threads: 60, horizon_ticks: 900, ..Default::default() },
+            &mut rng,
+        );
+        (g, machines, scenario)
+    }
+
+    fn options(epoch_ticks: u64) -> DynamicOptions {
+        DynamicOptions {
+            sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+            epoch_ticks,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn closed_loop_runs_refines_and_reports() {
+        let (g, machines, scenario) = setup(1);
+        let mut rng = Pcg32::new(2);
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &options(150),
+            &mut rng,
+        );
+        assert!(!report.stats.truncated, "truncated: {:?}", report.stats);
+        assert!(report.refinements() > 0, "no refinement epochs ran");
+        assert_eq!(report.epochs.last().map(|e| e.tick_end), Some(report.stats.ticks));
+        // Every refinement descends its potential (Thm 4.1).
+        for e in &report.epochs {
+            if let Some(r) = &e.refine {
+                assert!(
+                    r.potential_after <= r.potential_before + 1e-9,
+                    "epoch {}: potential rose {} -> {}",
+                    e.epoch,
+                    r.potential_before,
+                    r.potential_after
+                );
+                assert!(r.converged);
+            }
+        }
+        // Epoch windows tile the run.
+        for pair in report.epochs.windows(2) {
+            assert_eq!(pair[0].tick_end, pair[1].tick_start);
+        }
+    }
+
+    #[test]
+    fn frozen_mode_never_refines() {
+        let (g, machines, scenario) = setup(3);
+        let mut rng = Pcg32::new(4);
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &options(0),
+            &mut rng,
+        );
+        assert_eq!(report.refinements(), 0);
+        assert_eq!(report.transfers, 0);
+        assert!(!report.stats.truncated);
+        assert_eq!(report.epochs.len(), 1, "frozen run is one long epoch");
+    }
+
+    #[test]
+    fn migration_charges_accumulate() {
+        let (g, machines, scenario) = setup(5);
+        let mut rng = Pcg32::new(6);
+        let mut opts = options(150);
+        opts.ticks_per_transfer = 3;
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert_eq!(report.migration_ticks, 3 * report.transfers as u64);
+        assert_eq!(report.total_time(), report.stats.ticks + report.migration_ticks);
+        let per_epoch: u64 =
+            report.epochs.iter().filter_map(|e| e.refine.as_ref()).map(|r| r.migration_ticks).sum();
+        assert_eq!(per_epoch, report.migration_ticks);
+    }
+
+    #[test]
+    fn max_refinements_caps_the_loop() {
+        let (g, machines, scenario) = setup(7);
+        let mut rng = Pcg32::new(8);
+        let mut opts = options(100);
+        opts.max_refinements = 2;
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(report.refinements() <= 2);
+        assert!(!report.stats.truncated);
+    }
+
+    #[test]
+    fn distributed_backend_matches_sequential_loop() {
+        let (g, machines, scenario) = setup(9);
+        let mut opts = options(200);
+        let mut rng = Pcg32::new(10);
+        let initial = grow_partition(&g, &machines, &mut rng);
+
+        let seq = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial.clone(),
+            scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            opts.clone(),
+        )
+        .run_owned();
+
+        opts.backend = RefineBackend::Distributed;
+        let dist = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial,
+            scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            opts,
+        )
+        .run_owned();
+
+        // Same deterministic turn order => the whole closed loop agrees.
+        assert_eq!(seq.stats.ticks, dist.stats.ticks);
+        assert_eq!(seq.transfers, dist.transfers);
+        assert_eq!(seq.epochs.len(), dist.epochs.len());
+        for (a, b) in seq.epochs.iter().zip(&dist.epochs) {
+            match (&a.refine, &b.refine) {
+                (Some(ra), Some(rb)) => {
+                    assert_eq!(ra.transfers, rb.transfers);
+                    assert!((ra.potential_after - rb.potential_after).abs() < 1e-6);
+                }
+                (None, None) => {}
+                other => panic!("refinement schedule diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ewma_smooths_toward_new_signal() {
+        let raw1 = MeasuredWeights {
+            node_weights: vec![10.0, 0.0],
+            edge_weights: vec![(0, 1, 4.0)],
+        };
+        let raw2 = MeasuredWeights {
+            node_weights: vec![0.0, 10.0],
+            edge_weights: vec![(0, 1, 0.0)],
+        };
+        let mut est = WeightEstimator::ewma(0.5);
+        let first = est.estimate(&raw1);
+        assert_eq!(first.node_weights, vec![10.0, 0.0], "first call primes");
+        let second = est.estimate(&raw2);
+        // Halfway between the two signals.
+        assert!((second.node_weights[0] - 5.0).abs() < 1e-12);
+        assert!((second.node_weights[1] - 5.0).abs() < 1e-12);
+        assert!((second.edge_weights[0].2 - 2.0).abs() < 1e-12);
+        // Repeated exposure converges to the new signal.
+        for _ in 0..20 {
+            est.estimate(&raw2);
+        }
+        let converged = est.estimate(&raw2);
+        assert!((converged.node_weights[1] - 10.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn hysteresis_holds_output_inside_deadband() {
+        let raw = MeasuredWeights {
+            node_weights: vec![10.0],
+            edge_weights: vec![(0, 1, 10.0)],
+        };
+        let wiggle = MeasuredWeights {
+            node_weights: vec![10.5],
+            edge_weights: vec![(0, 1, 10.5)],
+        };
+        let jump = MeasuredWeights {
+            node_weights: vec![30.0],
+            edge_weights: vec![(0, 1, 30.0)],
+        };
+        let mut est = WeightEstimator::hysteresis(1.0, 0.25);
+        let a = est.estimate(&raw);
+        assert_eq!(a.node_weights[0], 10.0);
+        // 5% wiggle stays inside the 25% dead band: output frozen.
+        let b = est.estimate(&wiggle);
+        assert_eq!(b.node_weights[0], 10.0);
+        assert_eq!(b.edge_weights[0].2, 10.0);
+        // A 3x jump breaks out.
+        let c = est.estimate(&jump);
+        assert_eq!(c.node_weights[0], 30.0);
+        assert_eq!(c.edge_weights[0].2, 30.0);
+    }
+
+    #[test]
+    fn estimator_and_backend_parse_from_strings() {
+        assert_eq!("ewma".parse::<EstimatorKind>().unwrap(), EstimatorKind::Ewma);
+        assert_eq!(
+            "hysteresis".parse::<EstimatorKind>().unwrap(),
+            EstimatorKind::Hysteresis
+        );
+        assert!("nope".parse::<EstimatorKind>().is_err());
+        assert_eq!("sequential".parse::<RefineBackend>().unwrap(), RefineBackend::Sequential);
+        assert_eq!("dist".parse::<RefineBackend>().unwrap(), RefineBackend::Distributed);
+        assert!("p2p".parse::<RefineBackend>().is_err());
+    }
+}

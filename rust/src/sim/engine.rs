@@ -77,6 +77,63 @@ pub struct Injection {
     pub event: Event,
 }
 
+/// Per-LP / per-edge activity accumulated since the last harvest — the
+/// measured load signals (§6.1) the closed-loop rebalancer
+/// (`sim::dynamic`) feeds to its weight estimators. Global [`SimStats`]
+/// counters are cumulative; these reset at every
+/// [`SimEngine::take_epoch_counters`] call.
+#[derive(Debug, Clone, Default)]
+pub struct EpochCounters {
+    /// Wall ticks covered by this window.
+    pub ticks: WallTime,
+    /// Events completed per LP (including rollback processing).
+    pub events_by_lp: Vec<u64>,
+    /// Rollback episodes per LP.
+    pub rollbacks_by_lp: Vec<u64>,
+    /// Cross-machine forwards originated per LP.
+    pub cross_forwards_by_lp: Vec<u64>,
+    /// Forwards per directed half-edge, aligned with the graph's CSR
+    /// slots (`Graph::row_offset(u) + k` = `u`'s `k`-th neighbor) — a
+    /// flat add on the hot path instead of a hash lookup.
+    pub forwards_by_half_edge: Vec<u64>,
+}
+
+impl EpochCounters {
+    fn for_graph(graph: &Graph) -> Self {
+        let n = graph.node_count();
+        EpochCounters {
+            ticks: 0,
+            events_by_lp: vec![0; n],
+            rollbacks_by_lp: vec![0; n],
+            cross_forwards_by_lp: vec![0; n],
+            forwards_by_half_edge: vec![0; graph.half_edge_count()],
+        }
+    }
+
+    /// Forwards that crossed edge `{u, v}` (either direction) during
+    /// the window.
+    pub fn forwards_on(&self, graph: &Graph, u: NodeId, v: NodeId) -> u64 {
+        let uv = graph.half_edge_index(u, v).map_or(0, |s| self.forwards_by_half_edge[s]);
+        let vu = graph.half_edge_index(v, u).map_or(0, |s| self.forwards_by_half_edge[s]);
+        uv + vu
+    }
+
+    /// Total events completed during the window.
+    pub fn events_total(&self) -> u64 {
+        self.events_by_lp.iter().sum()
+    }
+
+    /// Total rollback episodes during the window.
+    pub fn rollbacks_total(&self) -> u64 {
+        self.rollbacks_by_lp.iter().sum()
+    }
+
+    /// Total cross-machine forwards during the window.
+    pub fn cross_forwards_total(&self) -> u64 {
+        self.cross_forwards_by_lp.iter().sum()
+    }
+}
+
 /// The engine.
 pub struct SimEngine<'g> {
     graph: &'g Graph,
@@ -90,6 +147,8 @@ pub struct SimEngine<'g> {
     injections: Vec<Injection>,
     /// Machine-load traces (avg queue length per resident LP), Figs 9/10.
     load_traces: Vec<Trace>,
+    /// Activity window since the last `take_epoch_counters` harvest.
+    epoch: EpochCounters,
     /// Scratch buffer for messages produced within a tick.
     outbox: Vec<(NodeId, Event)>,
 }
@@ -118,6 +177,7 @@ impl<'g> SimEngine<'g> {
             gvt: 0,
             injections,
             load_traces,
+            epoch: EpochCounters::for_graph(graph),
             outbox: Vec::new(),
         }
     }
@@ -144,6 +204,19 @@ impl<'g> SimEngine<'g> {
 
     pub fn load_traces(&self) -> &[Trace] {
         &self.load_traces
+    }
+
+    /// Activity accumulated since the last [`Self::take_epoch_counters`]
+    /// harvest (or engine construction).
+    pub fn epoch_counters(&self) -> &EpochCounters {
+        &self.epoch
+    }
+
+    /// Harvest the per-epoch activity counters, resetting the window —
+    /// the measurement hook of the closed rebalancing loop (§6.1).
+    pub fn take_epoch_counters(&mut self) -> EpochCounters {
+        let fresh = EpochCounters::for_graph(self.graph);
+        std::mem::replace(&mut self.epoch, fresh)
     }
 
     /// Replace the LP-to-machine assignment (the dynamic-refinement hook;
@@ -258,7 +331,9 @@ impl<'g> SimEngine<'g> {
                     StartOutcome::Nothing => {}
                     StartOutcome::Started { rolled_back, cancellations }
                     | StartOutcome::RolledBack { rolled_back, cancellations } => {
-                        let _ = rolled_back;
+                        if rolled_back > 0 {
+                            self.epoch.rollbacks_by_lp[i] += 1;
+                        }
                         self.stats.antimessages_sent += cancellations.len() as u64;
                         for (nb, ev) in cancellations {
                             // Anti-message delay follows the link type.
@@ -274,20 +349,25 @@ impl<'g> SimEngine<'g> {
                     EventKind::Rollback => {
                         // Anti-message consumed; nothing retires to history.
                         self.stats.events_processed += 1;
+                        self.epoch.events_by_lp[i] += 1;
                     }
                     _ => {
                         self.stats.events_processed += 1;
+                        self.epoch.events_by_lp[i] += 1;
                         let mut forwarded_to = Vec::new();
                         if done.count > 0 {
-                            for &nb in self.graph.neighbors(i) {
+                            let row = self.graph.row_offset(i);
+                            for (slot, &nb) in self.graph.neighbors(i).iter().enumerate() {
                                 if !self.lps[nb].has_seen(done.thread) {
                                     let delay = self.transfer_delay(i, nb);
                                     let fwd = done.forwarded(self.options.hop_latency, delay);
                                     outbox.push((nb, fwd));
                                     forwarded_to.push(nb);
                                     self.stats.events_forwarded += 1;
+                                    self.epoch.forwards_by_half_edge[row + slot] += 1;
                                     if self.part.machine_of(nb) != machine {
                                         self.stats.cross_machine_forwards += 1;
+                                        self.epoch.cross_forwards_by_lp[i] += 1;
                                     }
                                 }
                             }
@@ -319,6 +399,7 @@ impl<'g> SimEngine<'g> {
         }
 
         self.stats.ticks += 1;
+        self.epoch.ticks += 1;
         self.stats.rollbacks = self.lps.iter().map(|l| l.rollbacks).sum();
         if self.options.trace_every > 0 && tick % self.options.trace_every == 0 {
             self.record_loads();
@@ -524,6 +605,28 @@ mod tests {
             assert!(e.gvt() >= last_gvt, "GVT regressed: {} -> {}", last_gvt, e.gvt());
             last_gvt = e.gvt();
         }
+    }
+
+    #[test]
+    fn epoch_counters_track_activity_and_reset() {
+        let g = line_graph(4);
+        let inj =
+            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 3) }];
+        let mut e = engine_on(&g, 2, vec![0, 0, 1, 1], inj, SimOptions::default());
+        let stats = e.run_to_completion();
+        let c = e.epoch_counters();
+        assert_eq!(c.events_total(), stats.events_processed);
+        assert_eq!(c.cross_forwards_total(), stats.cross_machine_forwards);
+        assert_eq!(
+            c.forwards_on(&g, 0, 1) + c.forwards_on(&g, 1, 2) + c.forwards_on(&g, 2, 3),
+            stats.events_forwarded
+        );
+        assert_eq!(c.ticks, stats.ticks);
+        let taken = e.take_epoch_counters();
+        assert_eq!(taken.events_total(), stats.events_processed);
+        assert_eq!(e.epoch_counters().events_total(), 0);
+        assert_eq!(e.epoch_counters().ticks, 0);
+        assert!(e.epoch_counters().forwards_by_half_edge.iter().all(|&x| x == 0));
     }
 
     #[test]

@@ -12,14 +12,28 @@
 //! more likely across a bad partition. The output of a run is the total
 //! number of wall-clock ticks to drain all event lists: the paper's
 //! *simulation time* metric (Figs. 7–10).
+//!
+//! On top of the engine sit two closed-loop drivers: [`driver`] (the
+//! fixed-period loop the Fig. 7–10 harnesses use) and [`dynamic`], the
+//! full §6.1 epoch loop with windowed load measurement, pluggable
+//! weight estimators, a selectable sequential/distributed refinement
+//! backend and per-epoch reporting, fed by the scripted drifting
+//! workloads of [`scenario`].
 
 pub mod driver;
+pub mod dynamic;
 pub mod engine;
 pub mod event;
 pub mod lp;
+pub mod scenario;
 pub mod weights;
 pub mod workload;
 
-pub use engine::{SimEngine, SimOptions, SimStats};
+pub use dynamic::{
+    CompareReport, DynamicDriver, DynamicOptions, DynamicReport, EpochReport, EstimatorKind,
+    RefineBackend, WeightEstimator,
+};
+pub use engine::{EpochCounters, SimEngine, SimOptions, SimStats};
 pub use event::{Event, EventKind, ThreadId};
+pub use scenario::{Scenario, ScenarioKind, ScenarioOptions};
 pub use workload::{FloodWorkload, WorkloadOptions};

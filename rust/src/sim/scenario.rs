@@ -1,0 +1,506 @@
+//! Scenario library: scripted *drifting* workloads for the closed
+//! rebalancing loop (`sim::dynamic`).
+//!
+//! [`FloodWorkload`](crate::sim::workload::FloodWorkload) draws its hot
+//! spots uniformly at random per epoch; these scenarios instead script
+//! the drift so each one stresses a distinct failure mode of a frozen
+//! partition (§6.1: "clusters of nodes that generate large amounts of
+//! traffic over a short period, whose locations change regularly"):
+//!
+//! * [`ScenarioKind::HotspotShift`] — one concentrated traffic ball
+//!   whose center jumps to a far-away region every phase, so whatever
+//!   machine hosted the old hot spot goes cold and a new one saturates.
+//! * [`ScenarioKind::FlashCrowd`] — low uniform background traffic with
+//!   a sudden mid-run burst into one small region (a flash crowd), the
+//!   worst case for a partition balanced on the opening load.
+//! * [`ScenarioKind::DiurnalRamp`] — intensity ramps up to a peak and
+//!   back down while the busy region rotates, a day/night cycle over
+//!   geographic regions.
+//! * [`ScenarioKind::FailureRejoin`] — two persistent traffic sources;
+//!   one fails mid-run (its share shifting onto the survivor) and later
+//!   rejoins, exercising rebalance-twice behavior.
+//!
+//! Every scenario is deterministic given the seed RNG and spreads the
+//! same total thread budget across the same horizon, so frozen vs
+//! rebalanced runs and different estimators compare like-for-like.
+
+use crate::graph::{metrics, Graph, NodeId};
+use crate::sim::engine::Injection;
+use crate::sim::event::Event;
+use crate::util::rng::Pcg32;
+
+/// Which drifting workload to script.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    HotspotShift,
+    FlashCrowd,
+    DiurnalRamp,
+    FailureRejoin,
+}
+
+impl ScenarioKind {
+    /// All scenarios, in canonical order (the order the acceptance
+    /// experiment sweeps them).
+    pub const ALL: [ScenarioKind; 4] = [
+        ScenarioKind::HotspotShift,
+        ScenarioKind::FlashCrowd,
+        ScenarioKind::DiurnalRamp,
+        ScenarioKind::FailureRejoin,
+    ];
+
+    /// Canonical CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioKind::HotspotShift => "hotspot",
+            ScenarioKind::FlashCrowd => "flash",
+            ScenarioKind::DiurnalRamp => "diurnal",
+            ScenarioKind::FailureRejoin => "failure",
+        }
+    }
+
+    /// One-line description for reports.
+    pub fn describe(self) -> &'static str {
+        match self {
+            ScenarioKind::HotspotShift => "hot spot jumps to a far region every phase",
+            ScenarioKind::FlashCrowd => "uniform background + mid-run burst into one region",
+            ScenarioKind::DiurnalRamp => "intensity ramps up/down while the busy region rotates",
+            ScenarioKind::FailureRejoin => "one of two traffic sources fails mid-run, then rejoins",
+        }
+    }
+}
+
+impl std::str::FromStr for ScenarioKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "hotspot" | "hotspot-shift" => Ok(ScenarioKind::HotspotShift),
+            "flash" | "flash-crowd" => Ok(ScenarioKind::FlashCrowd),
+            "diurnal" | "diurnal-ramp" => Ok(ScenarioKind::DiurnalRamp),
+            "failure" | "failure-rejoin" => Ok(ScenarioKind::FailureRejoin),
+            other => Err(format!(
+                "unknown scenario {other:?} (expected hotspot|flash|diurnal|failure)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for ScenarioKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Shape parameters shared by all scenarios.
+#[derive(Debug, Clone)]
+pub struct ScenarioOptions {
+    /// Total packet-flood threads injected.
+    pub threads: usize,
+    /// Wall-clock horizon across which injections are spread.
+    pub horizon_ticks: u64,
+    /// Hop budget of each flood.
+    pub hop_limit: u32,
+    /// Number of drift phases across the horizon (hot-spot relocations,
+    /// diurnal stations, ...).
+    pub phases: usize,
+    /// BFS-ball radius (hops) of a concentrated traffic region.
+    pub region_radius: usize,
+    /// Fraction of threads drawn from the active region(s); the rest is
+    /// uniform background.
+    pub hot_fraction: f64,
+    /// Virtual-time rate: timestamp base = `at_tick * ts_rate`.
+    pub ts_rate: f64,
+    /// Uniform timestamp jitter in `[0, ts_jitter)`.
+    pub ts_jitter: u64,
+}
+
+impl Default for ScenarioOptions {
+    fn default() -> Self {
+        ScenarioOptions {
+            threads: 160,
+            horizon_ticks: 2_400,
+            hop_limit: 4,
+            phases: 4,
+            region_radius: 2,
+            hot_fraction: 0.85,
+            ts_rate: 0.5,
+            ts_jitter: 8,
+        }
+    }
+}
+
+/// A scripted workload: the injection schedule plus the region timeline
+/// (kept for analysis and plotting).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub kind: ScenarioKind,
+    pub injections: Vec<Injection>,
+    /// Concentrated-region member sets, one per phase (interpretation is
+    /// scenario-specific; see the builders).
+    pub phase_regions: Vec<Vec<NodeId>>,
+    pub horizon_ticks: u64,
+}
+
+impl Scenario {
+    /// Build the scenario `kind` over `g`, deterministic in `rng`.
+    pub fn build(
+        kind: ScenarioKind,
+        g: &Graph,
+        options: &ScenarioOptions,
+        rng: &mut Pcg32,
+    ) -> Scenario {
+        assert!(g.node_count() > 0 && options.threads > 0);
+        assert!(options.phases >= 1);
+        assert!(options.horizon_ticks >= 1, "empty horizon");
+        match kind {
+            ScenarioKind::HotspotShift => build_hotspot_shift(g, options, rng),
+            ScenarioKind::FlashCrowd => build_flash_crowd(g, options, rng),
+            ScenarioKind::DiurnalRamp => build_diurnal_ramp(g, options, rng),
+            ScenarioKind::FailureRejoin => build_failure_rejoin(g, options, rng),
+        }
+    }
+
+    /// Number of injections.
+    pub fn len(&self) -> usize {
+        self.injections.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.injections.is_empty()
+    }
+}
+
+/// Nodes within `radius` hops of `center`.
+fn bfs_ball(g: &Graph, center: NodeId, radius: usize) -> Vec<NodeId> {
+    let d = metrics::bfs_distances(g, center);
+    (0..g.node_count()).filter(|&u| d[u] <= radius).collect()
+}
+
+/// Greedy farthest-point centers: the first is random, each next center
+/// maximizes its hop distance to all previously chosen ones — scripted
+/// drift should *move*, not resample in place.
+fn far_apart_centers(g: &Graph, count: usize, rng: &mut Pcg32) -> Vec<NodeId> {
+    let n = g.node_count();
+    let mut centers = vec![rng.index(n)];
+    let mut min_dist = metrics::bfs_distances(g, centers[0]);
+    while centers.len() < count {
+        let next = (0..n)
+            .filter(|&u| min_dist[u] != usize::MAX)
+            .max_by_key(|&u| min_dist[u])
+            .unwrap_or_else(|| rng.index(n));
+        centers.push(next);
+        let d = metrics::bfs_distances(g, next);
+        for u in 0..n {
+            min_dist[u] = min_dist[u].min(d[u]);
+        }
+    }
+    centers
+}
+
+/// Push one injection, drawing a jittered virtual timestamp coupled to
+/// the wall-clock arrival (as `sim::workload` does).
+fn inject(
+    out: &mut Vec<Injection>,
+    options: &ScenarioOptions,
+    rng: &mut Pcg32,
+    lp: NodeId,
+    at_tick: u64,
+) {
+    let thread = out.len() as u64 + 1;
+    let ts_base = (at_tick as f64 * options.ts_rate) as u64;
+    // gen_range is inclusive on both ends: jitter lands in [0, ts_jitter).
+    let ts = ts_base + rng.gen_range(0, options.ts_jitter.max(1) - 1);
+    out.push(Injection {
+        at_tick,
+        lp,
+        event: Event::injection(thread, ts, options.hop_limit),
+    });
+}
+
+/// Uniform wall tick within `[lo, hi)`.
+fn tick_in(rng: &mut Pcg32, lo: u64, hi: u64) -> u64 {
+    rng.gen_range(lo, hi.max(lo + 1) - 1)
+}
+
+fn build_hotspot_shift(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
+    let n = g.node_count();
+    let centers = far_apart_centers(g, options.phases, rng);
+    let phase_regions: Vec<Vec<NodeId>> =
+        centers.iter().map(|&c| bfs_ball(g, c, options.region_radius)).collect();
+    let phase_len = (options.horizon_ticks / options.phases as u64).max(1);
+
+    let mut injections = Vec::with_capacity(options.threads);
+    for _ in 0..options.threads {
+        let at_tick = tick_in(rng, 0, options.horizon_ticks);
+        let phase = ((at_tick / phase_len) as usize).min(options.phases - 1);
+        let lp = if rng.chance(options.hot_fraction) {
+            let region = &phase_regions[phase];
+            region[rng.index(region.len())]
+        } else {
+            rng.index(n)
+        };
+        inject(&mut injections, options, rng, lp, at_tick);
+    }
+    Scenario {
+        kind: ScenarioKind::HotspotShift,
+        injections,
+        phase_regions,
+        horizon_ticks: options.horizon_ticks,
+    }
+}
+
+fn build_flash_crowd(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
+    let n = g.node_count();
+    let crowd_center = rng.index(n);
+    let crowd = bfs_ball(g, crowd_center, options.region_radius);
+    // The crowd bursts in the middle fifth of the horizon.
+    let burst_lo = options.horizon_ticks * 2 / 5;
+    let burst_hi = options.horizon_ticks * 3 / 5;
+    let crowd_threads = (options.threads as f64 * options.hot_fraction * 0.7) as usize;
+
+    let mut injections = Vec::with_capacity(options.threads);
+    for t in 0..options.threads {
+        if t < crowd_threads {
+            let at_tick = tick_in(rng, burst_lo, burst_hi);
+            let lp = crowd[rng.index(crowd.len())];
+            inject(&mut injections, options, rng, lp, at_tick);
+        } else {
+            let at_tick = tick_in(rng, 0, options.horizon_ticks);
+            let lp = rng.index(n);
+            inject(&mut injections, options, rng, lp, at_tick);
+        }
+    }
+    Scenario {
+        kind: ScenarioKind::FlashCrowd,
+        injections,
+        phase_regions: vec![crowd],
+        horizon_ticks: options.horizon_ticks,
+    }
+}
+
+fn build_diurnal_ramp(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
+    let n = g.node_count();
+    let centers = far_apart_centers(g, options.phases, rng);
+    let phase_regions: Vec<Vec<NodeId>> =
+        centers.iter().map(|&c| bfs_ball(g, c, options.region_radius)).collect();
+    let phase_len = (options.horizon_ticks / options.phases as u64).max(1);
+
+    // Triangular intensity profile over phases: 1, 2, ..., peak, ..., 2, 1.
+    let weights: Vec<f64> = (0..options.phases)
+        .map(|p| 1.0 + p.min(options.phases - 1 - p) as f64)
+        .collect();
+    let total_w: f64 = weights.iter().sum();
+
+    let mut injections = Vec::with_capacity(options.threads);
+    for (phase, w) in weights.iter().enumerate() {
+        let share = ((options.threads as f64) * w / total_w).round() as usize;
+        // Clamp the phase window inside the horizon: with more phases
+        // than ticks the trailing windows would otherwise start at (or
+        // past) the horizon and inject out-of-range ticks.
+        let lo = (phase as u64 * phase_len).min(options.horizon_ticks - 1);
+        let hi = if phase + 1 == options.phases {
+            options.horizon_ticks
+        } else {
+            (lo + phase_len).min(options.horizon_ticks)
+        };
+        for _ in 0..share.max(1) {
+            let at_tick = tick_in(rng, lo, hi);
+            let lp = if rng.chance(options.hot_fraction) {
+                let region = &phase_regions[phase];
+                region[rng.index(region.len())]
+            } else {
+                rng.index(n)
+            };
+            inject(&mut injections, options, rng, lp, at_tick);
+        }
+    }
+    Scenario {
+        kind: ScenarioKind::DiurnalRamp,
+        injections,
+        phase_regions,
+        horizon_ticks: options.horizon_ticks,
+    }
+}
+
+fn build_failure_rejoin(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
+    let n = g.node_count();
+    let centers = far_apart_centers(g, 2, rng);
+    let source_a = bfs_ball(g, centers[0], options.region_radius);
+    let source_b = bfs_ball(g, centers[1], options.region_radius);
+    // B is down during the middle window [35%, 70%); its traffic share
+    // shifts onto A (the survivor absorbs the load), then B rejoins.
+    let down_lo = options.horizon_ticks * 35 / 100;
+    let down_hi = options.horizon_ticks * 70 / 100;
+
+    let mut injections = Vec::with_capacity(options.threads);
+    for _ in 0..options.threads {
+        let at_tick = tick_in(rng, 0, options.horizon_ticks);
+        let b_down = at_tick >= down_lo && at_tick < down_hi;
+        let lp = if rng.chance(options.hot_fraction) {
+            let region = if b_down || rng.chance(0.5) { &source_a } else { &source_b };
+            region[rng.index(region.len())]
+        } else {
+            rng.index(n)
+        };
+        inject(&mut injections, options, rng, lp, at_tick);
+    }
+    Scenario {
+        kind: ScenarioKind::FailureRejoin,
+        injections,
+        phase_regions: vec![source_a, source_b],
+        horizon_ticks: options.horizon_ticks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::preferential_attachment;
+
+    fn graph() -> Graph {
+        let mut rng = Pcg32::new(1);
+        preferential_attachment(150, 2, &mut rng)
+    }
+
+    fn build(kind: ScenarioKind, seed: u64) -> Scenario {
+        let g = graph();
+        let mut rng = Pcg32::new(seed);
+        Scenario::build(kind, &g, &ScenarioOptions::default(), &mut rng)
+    }
+
+    #[test]
+    fn all_scenarios_generate_valid_schedules() {
+        let g = graph();
+        let opts = ScenarioOptions::default();
+        for kind in ScenarioKind::ALL {
+            let mut rng = Pcg32::new(3);
+            let s = Scenario::build(kind, &g, &opts, &mut rng);
+            assert!(!s.is_empty(), "{kind}: empty schedule");
+            let mut threads: Vec<u64> =
+                s.injections.iter().map(|i| i.event.thread).collect();
+            threads.sort_unstable();
+            threads.dedup();
+            assert_eq!(threads.len(), s.len(), "{kind}: duplicate thread ids");
+            for inj in &s.injections {
+                assert!(inj.at_tick < opts.horizon_ticks, "{kind}: beyond horizon");
+                assert!(inj.lp < g.node_count(), "{kind}: LP out of range");
+                assert_eq!(inj.event.count, opts.hop_limit);
+            }
+            assert!(!s.phase_regions.is_empty());
+        }
+    }
+
+    #[test]
+    fn scenarios_are_deterministic_per_seed() {
+        for kind in ScenarioKind::ALL {
+            let a = build(kind, 7);
+            let b = build(kind, 7);
+            assert_eq!(a.injections.len(), b.injections.len());
+            for (x, y) in a.injections.iter().zip(&b.injections) {
+                assert_eq!((x.at_tick, x.lp, x.event), (y.at_tick, y.lp, y.event));
+            }
+            let c = build(kind, 8);
+            let same = a.len() == c.len()
+                && a.injections
+                    .iter()
+                    .zip(&c.injections)
+                    .all(|(x, y)| (x.at_tick, x.lp) == (y.at_tick, y.lp));
+            assert!(!same, "{kind}: seed does not matter?");
+        }
+    }
+
+    #[test]
+    fn hotspot_shift_moves_between_phases() {
+        let s = build(ScenarioKind::HotspotShift, 11);
+        assert_eq!(s.phase_regions.len(), ScenarioOptions::default().phases);
+        // Consecutive regions must differ (the whole point of the drift).
+        for pair in s.phase_regions.windows(2) {
+            assert_ne!(pair[0], pair[1], "hot spot did not move");
+        }
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_in_burst_window() {
+        let opts = ScenarioOptions::default();
+        let s = build(ScenarioKind::FlashCrowd, 13);
+        let crowd = &s.phase_regions[0];
+        let burst_lo = opts.horizon_ticks * 2 / 5;
+        let burst_hi = opts.horizon_ticks * 3 / 5;
+        let in_burst = s
+            .injections
+            .iter()
+            .filter(|i| i.at_tick >= burst_lo && i.at_tick < burst_hi)
+            .count();
+        let in_crowd = s.injections.iter().filter(|i| crowd.contains(&i.lp)).count();
+        // The burst window is 20% of the horizon but holds over 40% of
+        // the traffic, concentrated inside the crowd ball.
+        assert!(
+            in_burst as f64 > 0.4 * s.len() as f64,
+            "burst too weak: {in_burst}/{}",
+            s.len()
+        );
+        assert!(
+            in_crowd as f64 > 0.4 * s.len() as f64,
+            "crowd too diffuse: {in_crowd}/{}",
+            s.len()
+        );
+    }
+
+    #[test]
+    fn diurnal_ramp_peaks_mid_horizon() {
+        let opts = ScenarioOptions::default();
+        let s = build(ScenarioKind::DiurnalRamp, 17);
+        let phase_len = opts.horizon_ticks / opts.phases as u64;
+        let mut per_phase = vec![0usize; opts.phases];
+        for inj in &s.injections {
+            per_phase[((inj.at_tick / phase_len) as usize).min(opts.phases - 1)] += 1;
+        }
+        let peak: usize = per_phase[1].max(per_phase[2]);
+        assert!(
+            peak > per_phase[0] && peak > per_phase[opts.phases - 1],
+            "no mid-horizon peak: {per_phase:?}"
+        );
+    }
+
+    #[test]
+    fn failure_rejoin_shifts_load_to_survivor() {
+        let opts = ScenarioOptions::default();
+        let s = build(ScenarioKind::FailureRejoin, 19);
+        let a = &s.phase_regions[0];
+        let b = &s.phase_regions[1];
+        let down_lo = opts.horizon_ticks * 35 / 100;
+        let down_hi = opts.horizon_ticks * 70 / 100;
+        let b_during_outage = s
+            .injections
+            .iter()
+            .filter(|i| i.at_tick >= down_lo && i.at_tick < down_hi)
+            .filter(|i| b.contains(&i.lp) && !a.contains(&i.lp))
+            .count();
+        let a_during_outage = s
+            .injections
+            .iter()
+            .filter(|i| i.at_tick >= down_lo && i.at_tick < down_hi)
+            .filter(|i| a.contains(&i.lp))
+            .count();
+        assert!(
+            a_during_outage > 3 * b_during_outage.max(1),
+            "survivor did not absorb the failed source's load: A={a_during_outage} B={b_during_outage}"
+        );
+        // B is active again after the outage.
+        let b_after = s
+            .injections
+            .iter()
+            .filter(|i| i.at_tick >= down_hi)
+            .filter(|i| b.contains(&i.lp))
+            .count();
+        assert!(b_after > 0, "B never rejoined");
+    }
+
+    #[test]
+    fn kind_round_trips_through_strings() {
+        for kind in ScenarioKind::ALL {
+            let parsed: ScenarioKind = kind.name().parse().unwrap();
+            assert_eq!(parsed, kind);
+        }
+        assert!("bogus".parse::<ScenarioKind>().is_err());
+    }
+}

@@ -12,7 +12,7 @@
 //! stay well-behaved on idle regions.
 
 use crate::graph::Graph;
-use crate::sim::engine::SimEngine;
+use crate::sim::engine::{EpochCounters, SimEngine};
 use crate::sim::event::EventKind;
 
 /// Measured weights, ready to install into a [`Graph`].
@@ -61,6 +61,43 @@ pub fn measure(engine: &SimEngine) -> MeasuredWeights {
         }
         edge_weights.push((u, v, c.max(EDGE_WEIGHT_FLOOR)));
     }
+    MeasuredWeights { node_weights, edge_weights }
+}
+
+/// Relative weight of one rollback episode in the measured node load: a
+/// rollback occupies the LP for its own busy time *and* triggers
+/// anti-message traffic, so it is costlier than a plain event.
+pub const ROLLBACK_LOAD_WEIGHT: f64 = 4.0;
+
+/// Measure weights from live LP state *plus* the activity recorded over
+/// the last epoch window — the closed-loop measurement used by
+/// [`crate::sim::dynamic`]:
+///
+/// * node weight `b_i` = outstanding backlog (queue length, as in
+///   [`measure`]) + events LP `i` processed during the window +
+///   [`ROLLBACK_LOAD_WEIGHT`] × its rollback episodes;
+/// * edge weight `c_ij` = pending forwarding pressure (as in
+///   [`measure`]) + forwards that actually crossed `{i,j}` during the
+///   window.
+pub fn measure_epoch(engine: &SimEngine, epoch: &EpochCounters) -> MeasuredWeights {
+    let g = engine.graph();
+    let lps = engine.lps();
+    let base = measure(engine);
+    let node_weights: Vec<f64> = (0..base.node_weights.len())
+        .map(|i| {
+            let backlog = lps[i].queue_len() as f64;
+            let activity = epoch.events_by_lp[i] as f64
+                + ROLLBACK_LOAD_WEIGHT * epoch.rollbacks_by_lp[i] as f64;
+            (backlog + activity).max(NODE_WEIGHT_FLOOR)
+        })
+        .collect();
+    let edge_weights = base
+        .edge_weights
+        .iter()
+        .map(|&(u, v, c)| {
+            (u, v, (c + epoch.forwards_on(g, u, v) as f64).max(EDGE_WEIGHT_FLOOR))
+        })
+        .collect();
     MeasuredWeights { node_weights, edge_weights }
 }
 
@@ -130,6 +167,34 @@ mod tests {
             .map(|&(_, _, c)| c)
             .unwrap();
         assert_eq!(c23, EDGE_WEIGHT_FLOOR);
+    }
+
+    #[test]
+    fn epoch_measurement_adds_activity() {
+        let (g, inj) = setup();
+        let machines = MachineConfig::homogeneous(1);
+        let part = Partition::from_assignment(&g, 1, vec![0; 4]);
+        let mut e = SimEngine::new(&g, machines, part, SimOptions::default(), inj);
+        let _ = e.run_to_completion();
+        let epoch = e.take_epoch_counters();
+        let w = measure_epoch(&e, &epoch);
+        // Drained engine: backlog is zero everywhere, so node weights are
+        // exactly the per-LP processed-event counts (floored).
+        for i in 0..4 {
+            let expect = (epoch.events_by_lp[i] as f64
+                + super::ROLLBACK_LOAD_WEIGHT * epoch.rollbacks_by_lp[i] as f64)
+                .max(NODE_WEIGHT_FLOOR);
+            assert_eq!(w.node_weights[i], expect, "node {i}");
+        }
+        // The flood traversed the whole line, so every edge saw traffic.
+        for &(u, v, c) in &w.edge_weights {
+            assert!(c >= 1.0, "edge ({u},{v}) saw no measured traffic: {c}");
+        }
+        // A fresh (empty) window degrades to the instantaneous estimate.
+        let empty = e.epoch_counters();
+        let w2 = measure_epoch(&e, empty);
+        let w_inst = measure(&e);
+        assert_eq!(w2.node_weights, w_inst.node_weights);
     }
 
     #[test]

@@ -15,15 +15,26 @@ pub struct Args {
 }
 
 /// Error type for CLI parsing/lookup.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     MissingOption(String),
-    #[error("invalid value for --{key}: {value:?} ({reason})")]
     InvalidValue { key: String, value: String, reason: String },
-    #[error("unexpected argument {0:?}")]
     Unexpected(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingOption(name) => write!(f, "missing required option --{name}"),
+            CliError::InvalidValue { key, value, reason } => {
+                write!(f, "invalid value for --{key}: {value:?} ({reason})")
+            }
+            CliError::Unexpected(arg) => write!(f, "unexpected argument {arg:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of raw arguments (excluding argv[0]).

@@ -5,6 +5,11 @@
 //! "smaller" generator size hints (shrink-lite) and reports the seed of
 //! the failing case so it can be replayed as a deterministic unit test.
 
+use crate::graph::generators::preferential_attachment;
+use crate::graph::Graph;
+use crate::partition::initial::grow_partition;
+use crate::partition::{MachineConfig, Partition};
+use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions};
 use crate::util::rng::Pcg32;
 
 /// Generator context handed to property checks: a seeded RNG plus a size
@@ -122,6 +127,97 @@ pub fn check_property(
     }
 }
 
+/// Builder for the deterministic scenario fixture shared by the
+/// `sim::dynamic` tests and benches: one seed pins the graph, the
+/// machine pool, the App.-A initial partition, the scripted scenario
+/// workload, and (on demand) a scripted weight-drift schedule — so
+/// every harness compares like-for-like.
+#[derive(Debug, Clone)]
+pub struct ScenarioFixture {
+    kind: ScenarioKind,
+    seed: u64,
+    nodes: usize,
+    machines: usize,
+    options: ScenarioOptions,
+}
+
+impl ScenarioFixture {
+    pub fn new(kind: ScenarioKind, seed: u64) -> Self {
+        ScenarioFixture {
+            kind,
+            seed,
+            nodes: 150,
+            machines: 4,
+            options: ScenarioOptions::default(),
+        }
+    }
+
+    pub fn nodes(mut self, nodes: usize) -> Self {
+        self.nodes = nodes;
+        self
+    }
+
+    pub fn machines(mut self, k: usize) -> Self {
+        self.machines = k;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.options.threads = threads;
+        self
+    }
+
+    pub fn horizon(mut self, ticks: u64) -> Self {
+        self.options.horizon_ticks = ticks;
+        self
+    }
+
+    pub fn scenario_options(mut self, options: ScenarioOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Materialize the fixture. Deterministic: equal builders produce
+    /// identical graphs, partitions, and injection schedules.
+    pub fn build(&self) -> BuiltFixture {
+        let mut rng = Pcg32::new(self.seed);
+        let graph = preferential_attachment(self.nodes, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(self.machines);
+        let scenario = Scenario::build(self.kind, &graph, &self.options, &mut rng);
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        BuiltFixture { graph, machines, initial, scenario }
+    }
+}
+
+/// A materialized [`ScenarioFixture`].
+#[derive(Debug, Clone)]
+pub struct BuiltFixture {
+    pub graph: Graph,
+    pub machines: MachineConfig,
+    pub initial: Partition,
+    pub scenario: Scenario,
+}
+
+impl BuiltFixture {
+    /// Scripted per-epoch node-weight drift: each epoch concentrates a
+    /// heavy load spike on the scenario's phase regions in rotation,
+    /// over a small uniform background — the refinement-only analogue
+    /// of the live measured weights.
+    pub fn drift_schedule(&self, epochs: usize, rng: &mut Pcg32) -> Vec<Vec<f64>> {
+        let n = self.graph.node_count();
+        let regions = &self.scenario.phase_regions;
+        (0..epochs)
+            .map(|e| {
+                let mut w: Vec<f64> = (0..n).map(|_| rng.uniform(0.5, 1.5)).collect();
+                for &u in &regions[e % regions.len()] {
+                    w[u] += 8.0;
+                }
+                w
+            })
+            .collect()
+    }
+}
+
 /// Helper: format an approximate-equality failure.
 pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
     let scale = 1.0_f64.max(a.abs()).max(b.abs());
@@ -174,6 +270,40 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn scenario_fixture_is_deterministic() {
+        let a = ScenarioFixture::new(ScenarioKind::HotspotShift, 42).build();
+        let b = ScenarioFixture::new(ScenarioKind::HotspotShift, 42).build();
+        assert_eq!(a.graph.node_count(), b.graph.node_count());
+        assert_eq!(a.graph.edge_count(), b.graph.edge_count());
+        assert_eq!(a.initial.assignment(), b.initial.assignment());
+        assert_eq!(a.scenario.len(), b.scenario.len());
+        for (x, y) in a.scenario.injections.iter().zip(&b.scenario.injections) {
+            assert_eq!((x.at_tick, x.lp, x.event), (y.at_tick, y.lp, y.event));
+        }
+        let c = ScenarioFixture::new(ScenarioKind::HotspotShift, 43).build();
+        assert_ne!(
+            a.scenario.injections.iter().map(|i| i.lp).collect::<Vec<_>>(),
+            c.scenario.injections.iter().map(|i| i.lp).collect::<Vec<_>>(),
+            "seed must matter"
+        );
+    }
+
+    #[test]
+    fn drift_schedule_spikes_rotate() {
+        let f = ScenarioFixture::new(ScenarioKind::DiurnalRamp, 5).nodes(100).build();
+        let mut rng = Pcg32::new(9);
+        let drift = f.drift_schedule(6, &mut rng);
+        assert_eq!(drift.len(), 6);
+        for (e, w) in drift.iter().enumerate() {
+            assert_eq!(w.len(), 100);
+            assert!(w.iter().all(|&x| x > 0.0));
+            // Every epoch has a clear spike over the background band.
+            let spiked = w.iter().filter(|&&x| x > 2.0).count();
+            assert!(spiked > 0, "epoch {e}: no spiked nodes");
+        }
     }
 
     #[test]

@@ -72,6 +72,72 @@ fn distributed_equals_sequential_many_seeds() {
     }
 }
 
+/// Determinism cross-check: with the same seed, graph, and round-robin
+/// turn order, the distributed coordinator and the sequential
+/// `RefineEngine` must produce *identical* final partitions AND
+/// identical potentials — including across warm-started refinement
+/// epochs with drifting node/edge weights (the closed `sim::dynamic`
+/// loop relies on this equivalence to make its backends swappable).
+#[test]
+fn distributed_equals_sequential_partitions_and_potentials_under_drift() {
+    for fw in [Framework::A, Framework::B] {
+        let mut rng = Pcg32::new(31);
+        let mut graph = preferential_attachment(120, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let mut seq_part =
+            Partition::from_assignment(&graph, 4, (0..120).map(|_| rng.index(4)).collect());
+        let mut dist_part = seq_part.clone();
+
+        // Three epochs of scripted weight drift, each refined from the
+        // previous equilibrium by both implementations.
+        for epoch in 0..3u64 {
+            let weights: Vec<f64> =
+                (0..120).map(|i| 1.0 + ((i as u64 * 7 + epoch * 13) % 11) as f64).collect();
+            graph.set_node_weights(&weights);
+            seq_part.rebuild_aggregates(&graph);
+            dist_part.rebuild_aggregates(&graph);
+
+            let mut seq = RefineEngine::new(&graph, &machines, seq_part, 8.0, fw);
+            let seq_report = seq.run(&RefineOptions::default());
+            let seq_potential = seq.potential();
+            seq_part = seq.into_partition();
+
+            let dist = run_distributed(
+                Arc::new(graph.clone()),
+                &machines,
+                dist_part,
+                &DistributedOptions { framework: fw, ..Default::default() },
+            );
+            dist_part = dist.partition;
+
+            assert_eq!(
+                seq_part.assignment(),
+                dist_part.assignment(),
+                "fw {fw} epoch {epoch}: assignments diverged"
+            );
+            assert_eq!(
+                seq_report.transfers, dist.transfers,
+                "fw {fw} epoch {epoch}: transfer counts diverged"
+            );
+            // Identical partitions must score identical potentials; also
+            // pin the sequential engine's incremental potential to the
+            // from-scratch evaluation.
+            let (c0_seq, c0t_seq) = global_cost::both(&graph, &machines, &seq_part, 8.0);
+            let (c0_dist, c0t_dist) = global_cost::both(&graph, &machines, &dist_part, 8.0);
+            assert_eq!(c0_seq, c0_dist, "fw {fw} epoch {epoch}: C0 diverged");
+            assert_eq!(c0t_seq, c0t_dist, "fw {fw} epoch {epoch}: C~0 diverged");
+            let scratch = match fw {
+                Framework::A => c0_seq,
+                Framework::B => c0t_seq,
+            };
+            assert!(
+                (seq_potential - scratch).abs() <= 1e-6 * (1.0 + scratch.abs()),
+                "fw {fw} epoch {epoch}: incremental potential {seq_potential} vs scratch {scratch}"
+            );
+        }
+    }
+}
+
 /// With injected per-message latency (remotely connected machines), the
 /// protocol still converges to the same equilibrium.
 #[test]

@@ -1,0 +1,208 @@
+//! Integration tests of the closed rebalancing loop (`sim::dynamic`) —
+//! the paper's title scenario: under drifting workloads, re-measuring
+//! loads and re-refining from the warm-start partition must beat a
+//! frozen initial partition, and every refinement epoch must descend
+//! the global potential.
+
+use gtip::game::cost::Framework;
+use gtip::sim::dynamic::{
+    compare_frozen_vs_rebalanced, CompareReport, DynamicDriver, DynamicOptions, EstimatorKind,
+    WeightEstimator,
+};
+use gtip::sim::engine::SimOptions;
+use gtip::sim::scenario::ScenarioKind;
+use gtip::util::testkit::ScenarioFixture;
+
+fn loop_options(epoch_ticks: u64) -> DynamicOptions {
+    DynamicOptions {
+        sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
+        epoch_ticks,
+        ..Default::default()
+    }
+}
+
+fn compare_for(kind: ScenarioKind, seed: u64) -> CompareReport {
+    let fixture = ScenarioFixture::new(kind, seed)
+        .nodes(120)
+        .machines(4)
+        .threads(110)
+        .horizon(1_800)
+        .build();
+    compare_frozen_vs_rebalanced(
+        &fixture.graph,
+        &fixture.machines,
+        &fixture.initial,
+        &fixture.scenario.injections,
+        WeightEstimator::ewma(0.6),
+        &loop_options(200),
+    )
+}
+
+/// Acceptance: with fixed seeds, the rebalanced run finishes the same
+/// workload in fewer wall ticks than the frozen initial partition on at
+/// least 3 of the 4 drifting scenarios.
+#[test]
+fn rebalancing_beats_frozen_on_most_scenarios() {
+    let mut wins = 0;
+    let mut lines = Vec::new();
+    for kind in ScenarioKind::ALL {
+        let r = compare_for(kind, 2011);
+        assert!(!r.frozen.stats.truncated, "{kind:?}: frozen arm truncated");
+        assert!(!r.rebalanced.stats.truncated, "{kind:?}: rebalanced arm truncated");
+        assert!(r.rebalanced.refinements() > 0, "{kind:?}: loop never refined");
+        let won = r.rebalanced.total_time() < r.frozen.total_time();
+        lines.push(format!(
+            "{:<8} frozen {:>7} rebalanced {:>7} speedup {:.2}x",
+            kind.name(),
+            r.frozen.total_time(),
+            r.rebalanced.total_time(),
+            r.speedup(),
+        ));
+        if won {
+            wins += 1;
+        }
+    }
+    assert!(
+        wins >= 3,
+        "rebalancing won only {wins}/4 scenarios:\n{}",
+        lines.join("\n")
+    );
+}
+
+/// Acceptance: every refinement epoch descends the global potential,
+/// for both cost frameworks.
+#[test]
+fn every_epoch_descends_potential_both_frameworks() {
+    for fw in [Framework::A, Framework::B] {
+        let fixture = ScenarioFixture::new(ScenarioKind::HotspotShift, 3)
+            .nodes(100)
+            .machines(4)
+            .threads(80)
+            .horizon(1_200)
+            .build();
+        let options = DynamicOptions { framework: fw, ..loop_options(150) };
+        let report = DynamicDriver::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            fixture.scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            options,
+        )
+        .run_owned();
+        assert!(report.refinements() > 0, "{fw}: no refinement epochs");
+        for e in &report.epochs {
+            if let Some(r) = &e.refine {
+                assert!(
+                    r.potential_after <= r.potential_before + 1e-9 * (1.0 + r.potential_before.abs()),
+                    "{fw}: epoch {} potential rose {} -> {}",
+                    e.epoch,
+                    r.potential_before,
+                    r.potential_after
+                );
+                assert!(r.converged, "{fw}: epoch {} refinement did not converge", e.epoch);
+            }
+        }
+    }
+}
+
+/// The closed loop is deterministic: identical fixture + options =>
+/// identical tick counts, transfers, and epoch streams.
+#[test]
+fn closed_loop_is_deterministic() {
+    let run = || {
+        let fixture = ScenarioFixture::new(ScenarioKind::FlashCrowd, 17)
+            .nodes(90)
+            .machines(3)
+            .threads(70)
+            .horizon(1_000)
+            .build();
+        DynamicDriver::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            fixture.scenario.injections.clone(),
+            WeightEstimator::ewma(0.5),
+            loop_options(150),
+        )
+        .run_owned()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.stats.ticks, b.stats.ticks);
+    assert_eq!(a.transfers, b.transfers);
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.events_processed, y.events_processed);
+        assert_eq!(
+            x.refine.as_ref().map(|r| r.transfers),
+            y.refine.as_ref().map(|r| r.transfers)
+        );
+    }
+}
+
+/// All three estimator variants drive the loop to completion; smoothing
+/// and hysteresis must not break draining or descent.
+#[test]
+fn all_estimators_complete_the_loop() {
+    for kind in [
+        EstimatorKind::Instantaneous,
+        EstimatorKind::Ewma,
+        EstimatorKind::Hysteresis,
+    ] {
+        let fixture = ScenarioFixture::new(ScenarioKind::DiurnalRamp, 5)
+            .nodes(90)
+            .machines(3)
+            .threads(70)
+            .horizon(1_000)
+            .build();
+        let injected = fixture.scenario.len() as u64;
+        let report = DynamicDriver::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            fixture.scenario.injections.clone(),
+            WeightEstimator::of_kind(kind),
+            loop_options(150),
+        )
+        .run_owned();
+        assert!(!report.stats.truncated, "{kind}: truncated");
+        assert!(report.refinements() > 0, "{kind}: never refined");
+        assert!(
+            report.stats.events_processed >= injected,
+            "{kind}: processed {} < injected {injected}",
+            report.stats.events_processed
+        );
+        for e in &report.epochs {
+            if let Some(r) = &e.refine {
+                assert!(r.potential_after <= r.potential_before + 1e-9 * (1.0 + r.potential_before.abs()));
+            }
+        }
+    }
+}
+
+/// Frequent rebalancing with a per-transfer migration charge still
+/// accounts time correctly and cannot corrupt the run.
+#[test]
+fn migration_charges_do_not_break_the_loop() {
+    let fixture = ScenarioFixture::new(ScenarioKind::FailureRejoin, 23)
+        .nodes(90)
+        .machines(3)
+        .threads(70)
+        .horizon(1_000)
+        .build();
+    let mut options = loop_options(100);
+    options.ticks_per_transfer = 2;
+    let report = DynamicDriver::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        fixture.scenario.injections.clone(),
+        WeightEstimator::hysteresis(0.5, 0.25),
+        options,
+    )
+    .run_owned();
+    assert!(!report.stats.truncated);
+    assert_eq!(report.migration_ticks, 2 * report.transfers as u64);
+    assert_eq!(report.total_time(), report.stats.ticks + report.migration_ticks);
+}

@@ -4,7 +4,9 @@
 //!
 //! Requires `make artifacts`; tests skip (with a loud message) if the
 //! artifacts directory is absent so plain `cargo test` stays green in a
-//! fresh checkout.
+//! fresh checkout. The whole file is additionally gated on the `pjrt`
+//! cargo feature (the executor needs the vendored `xla` crate).
+#![cfg(feature = "pjrt")]
 
 use gtip::game::cost::{CostModel, Framework};
 use gtip::graph::generators::{preferential_attachment, table1_graph, WeightModel};

@@ -7,8 +7,11 @@ use gtip::game::refine::{RefineEngine, RefineOptions};
 use gtip::graph::generators::{erdos_renyi, preferential_attachment, table1_graph, WeightModel};
 use gtip::graph::{metrics, Graph};
 use gtip::partition::{global_cost, MachineConfig, Partition};
+use gtip::sim::dynamic::{DynamicDriver, DynamicOptions, WeightEstimator};
+use gtip::sim::engine::SimOptions;
+use gtip::sim::scenario::ScenarioKind;
 use gtip::util::rng::Pcg32;
-use gtip::util::testkit::{assert_close, check_property, GenCtx, PropConfig};
+use gtip::util::testkit::{assert_close, check_property, GenCtx, PropConfig, ScenarioFixture};
 
 /// Random problem: graph + machines + partition + mu.
 fn gen_problem(g: &mut GenCtx) -> (Graph, MachineConfig, Partition, f64) {
@@ -220,6 +223,135 @@ fn prop_dense_matches_scalar() {
                 )?;
             }
         }
+        Ok(())
+    });
+}
+
+/// Closed-loop epoch invariants (`sim::dynamic`): node count is
+/// conserved across every epoch's migration wave, and each refinement
+/// epoch descends its measured potential (Thm 4.1, re-applied from the
+/// warm start every epoch).
+#[test]
+fn prop_dynamic_epochs_conserve_nodes_and_descend() {
+    let config = PropConfig { cases: 10, ..Default::default() };
+    check_property("dynamic_epoch_invariants", config, |g| {
+        let kind = ScenarioKind::ALL[g.usize_in(0, 3)];
+        let seed = g.rng.next_u64();
+        let fixture = ScenarioFixture::new(kind, seed)
+            .nodes(g.usize_in(40, 80))
+            .machines(g.usize_in(2, 4))
+            .threads(g.usize_in(24, 48))
+            .horizon(g.usize_in(400, 800) as u64)
+            .build();
+        let n = fixture.graph.node_count();
+        let options = DynamicOptions {
+            sim: SimOptions { max_ticks: 400_000, ..Default::default() },
+            epoch_ticks: g.usize_in(60, 200) as u64,
+            ..Default::default()
+        };
+        let mut driver = DynamicDriver::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            fixture.scenario.injections.clone(),
+            WeightEstimator::ewma(0.5),
+            options,
+        );
+        while driver.run_epoch() {
+            let part = driver.engine().partition();
+            let total: usize = part.counts().iter().sum();
+            if total != n {
+                return Err(format!("node leak after migration: {total} vs {n}"));
+            }
+            if part.assignment().iter().any(|&m| m >= part.machine_count()) {
+                return Err("node on invalid machine".into());
+            }
+        }
+        for e in driver.epochs() {
+            if let Some(r) = &e.refine {
+                if r.potential_after > r.potential_before + 1e-9 * (1.0 + r.potential_before.abs())
+                {
+                    return Err(format!(
+                        "epoch {}: potential rose {} -> {}",
+                        e.epoch, r.potential_before, r.potential_after
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Adversarial dynamic re-weighting (zeros, duplicated constants, huge
+/// spread, on nodes *and* edges): the refinement engine's incremental
+/// state must survive arbitrary transfers plus a `resync_weights`
+/// rebuild — `validate()` passes, the potential is unchanged by the
+/// resync, and refinement still converges with strict descent.
+#[test]
+fn prop_resync_validate_under_adversarial_weights() {
+    let config = PropConfig { cases: 32, ..Default::default() };
+    check_property("resync_adversarial_weights", config, |g| {
+        let hint = g.usize_in(8, 8 + 3 * g.size.max(4));
+        let mut rng = g.rng.fork(0xBEEF);
+        let mut graph = preferential_attachment(hint.max(5), 2, &mut rng);
+        let n = graph.node_count();
+        // Zeros, a duplicated constant, and a 5-orders-of-magnitude
+        // spread (bounded so potential deltas stay well above f64 ulp —
+        // convergence is a property of exact arithmetic).
+        let node_w: Vec<f64> = (0..n)
+            .map(|_| match g.usize_in(0, 2) {
+                0 => 0.0,
+                1 => 7.0,
+                _ => g.f64_in(0.01, 1e3),
+            })
+            .collect();
+        graph.set_node_weights(&node_w);
+        let edges: Vec<(usize, usize)> = graph.edges().map(|(u, v, _)| (u, v)).collect();
+        for (u, v) in edges {
+            let c = match g.usize_in(0, 2) {
+                0 => 0.0,
+                1 => 3.0,
+                _ => g.f64_in(0.0, 1e3),
+            };
+            graph.set_edge_weight(u, v, c);
+        }
+        let k = g.usize_in(2, 5);
+        let machines = MachineConfig::homogeneous(k);
+        let assignment: Vec<usize> = (0..n).map(|_| g.usize_in(0, k - 1)).collect();
+        let part = Partition::from_assignment(&graph, k, assignment);
+        let mu = g.f64_in(0.0, 16.0);
+        let fw = if g.usize_in(0, 1) == 0 { Framework::A } else { Framework::B };
+        let mut engine = RefineEngine::new(&graph, &machines, part, mu, fw);
+
+        // Arbitrary (non-best-response) transfers, then a from-scratch
+        // resync: all incremental state must agree with a rebuild.
+        for _ in 0..g.usize_in(1, 20) {
+            let node = g.usize_in(0, n - 1);
+            let to = g.usize_in(0, k - 1);
+            if engine.partition().machine_of(node) != to {
+                engine.apply_transfer(node, to);
+            }
+        }
+        let before = engine.potential();
+        engine.resync_weights();
+        engine.validate().map_err(|e| format!("validate after resync: {e}"))?;
+        assert_close(engine.potential(), before, 1e-6, "resync changed the potential")?;
+
+        // epsilon well above f64 evaluation noise at this weight scale.
+        let report = engine.run(&RefineOptions {
+            track_potential: true,
+            epsilon: 1e-6,
+            ..Default::default()
+        });
+        if !report.converged {
+            return Err("refinement did not converge on adversarial weights".into());
+        }
+        for w in report.potential_trace.windows(2) {
+            if w[1] >= w[0] + 1e-9 * (1.0 + w[0].abs()) {
+                return Err(format!("non-descent step {} -> {}", w[0], w[1]));
+            }
+        }
+        engine.validate().map_err(|e| format!("validate after run: {e}"))?;
         Ok(())
     });
 }
