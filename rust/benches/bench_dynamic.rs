@@ -10,15 +10,29 @@ use gtip::sim::dynamic::{
 };
 use gtip::sim::engine::SimOptions;
 use gtip::sim::scenario::ScenarioKind;
-use gtip::util::bench::{black_box, BenchConfig, Bencher};
+use gtip::util::bench::{black_box, write_json_group, BenchConfig, Bencher, JsonVal};
 use gtip::util::rng::Pcg32;
 use gtip::util::testkit::ScenarioFixture;
 
 fn main() {
+    let smoke = std::env::var("GTIP_BENCH_SMOKE")
+        .map_or(false, |v| !v.is_empty() && v != "0");
+    let fixture_for = |kind: ScenarioKind| {
+        let f = ScenarioFixture::new(kind, 2011);
+        if smoke {
+            // Shrunken fixtures for the CI smoke job.
+            f.nodes(80).threads(60).horizon(800)
+        } else {
+            f
+        }
+        .build()
+    };
     let mut cfg = BenchConfig::coarse();
     cfg.samples = 3;
     cfg.max_iters = 3;
     let mut b = Bencher::new("dynamic").with_config(cfg);
+    let mut scenario_json: Vec<(String, JsonVal)> =
+        vec![("smoke".into(), JsonVal::Bool(smoke))];
 
     let options = DynamicOptions {
         sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
@@ -29,7 +43,7 @@ fn main() {
     // Headline comparison: frozen vs closed-loop tick counts.
     println!("static-vs-rebalanced simulated wall ticks (seed 2011):");
     for kind in ScenarioKind::ALL {
-        let fixture = ScenarioFixture::new(kind, 2011).build();
+        let fixture = fixture_for(kind);
         let report = compare_frozen_vs_rebalanced(
             &fixture.graph,
             &fixture.machines,
@@ -45,12 +59,21 @@ fn main() {
             report.rebalanced.total_time(),
             report.speedup(),
         );
+        scenario_json.push((
+            kind.name().to_string(),
+            JsonVal::Obj(vec![
+                ("frozen_ticks".into(), JsonVal::Int(report.frozen.total_time())),
+                ("rebalanced_ticks".into(), JsonVal::Int(report.rebalanced.total_time())),
+                ("tick_speedup".into(), JsonVal::Num(report.speedup())),
+            ]),
+        ));
     }
 
-    // Host-time cost of one full closed loop per scenario.
-    for kind in ScenarioKind::ALL {
-        let fixture = ScenarioFixture::new(kind, 2011).build();
-        b.bench(format!("closed_loop_{}", kind.name()), || {
+    // Host-time cost of one full closed loop per scenario. The +1 on
+    // the json index skips the leading "smoke" entry.
+    for (kind, json_idx) in ScenarioKind::ALL.into_iter().zip(1usize..) {
+        let fixture = fixture_for(kind);
+        let r = b.bench(format!("closed_loop_{}", kind.name()), || {
             let driver = DynamicDriver::new(
                 &fixture.graph,
                 fixture.machines.clone(),
@@ -61,11 +84,15 @@ fn main() {
             );
             black_box(driver.run_owned().stats.ticks)
         });
+        let host = r.per_iter.mean;
+        if let JsonVal::Obj(fields) = &mut scenario_json[json_idx].1 {
+            fields.push(("closed_loop_host_seconds".into(), JsonVal::Num(host)));
+        }
     }
 
     // Frozen baseline engine cost for reference (same workload).
     {
-        let fixture = ScenarioFixture::new(ScenarioKind::HotspotShift, 2011).build();
+        let fixture = fixture_for(ScenarioKind::HotspotShift);
         let frozen = DynamicOptions { epoch_ticks: 0, ..options.clone() };
         b.bench("frozen_baseline_hotspot", || {
             let driver = DynamicDriver::new(
@@ -109,4 +136,12 @@ fn main() {
     }
 
     let _ = b.write_csv();
+    match write_json_group(
+        "results/BENCH_sim.json",
+        "dynamic_closed_loop",
+        &JsonVal::Obj(scenario_json),
+    ) {
+        Ok(path) => println!("(wrote {})", path.display()),
+        Err(e) => eprintln!("(BENCH_sim.json write failed: {e})"),
+    }
 }

@@ -1,20 +1,102 @@
-//! PDES engine micro-benchmarks: LP-ticks/second of the optimistic
-//! simulator across graph sizes and workloads (§Perf target: >= 1e6
-//! LP-ticks/sec).
+//! PDES engine benchmarks: LP-ticks/second of the optimistic simulator
+//! across graph sizes and workloads (ROADMAP target: >= 1e7 LP-ticks/s
+//! on 1e5-LP graphs; pre-worklist engine measured ~1e6).
+//!
+//! Emits `results/BENCH_sim.json` (merged with `bench_dynamic`'s
+//! closed-loop group) so the perf trajectory is machine-readable:
+//! optimized vs naive-reference LP-ticks/s, events/s, and the
+//! parallelism sweep on the 1e5-LP specialized-geometric headline case.
+//!
+//! Env knobs: `GTIP_BENCH_SMOKE=1` shrinks the headline graph for CI
+//! smoke runs; `GTIP_BENCH_MEASURE_MS` / `GTIP_BENCH_WARMUP_MS` tune
+//! the micro-bench harness as usual.
 
-use gtip::graph::generators::preferential_attachment;
+use std::time::Instant;
+
+use gtip::graph::generators::{preferential_attachment, specialized_geometric};
+use gtip::graph::Graph;
 use gtip::partition::{MachineConfig, Partition};
-use gtip::sim::engine::{SimEngine, SimOptions};
+use gtip::sim::engine::{SimEngine, SimOptions, SimStats};
+use gtip::sim::reference::ReferenceEngine;
 use gtip::sim::workload::{FloodWorkload, WorkloadOptions};
-use gtip::util::bench::{BenchConfig, Bencher};
+use gtip::util::bench::{write_json_group, BenchConfig, Bencher, JsonVal};
 use gtip::util::rng::Pcg32;
 
+struct HeadlineSetup {
+    graph: Graph,
+    machines: MachineConfig,
+    assignment: Vec<usize>,
+    workload: FloodWorkload,
+    k: usize,
+}
+
+fn headline_setup(n: usize, threads: usize) -> HeadlineSetup {
+    let mut rng = Pcg32::new(2011);
+    let graph = specialized_geometric(n, 15, 3, &mut rng);
+    let k = 8;
+    let machines = MachineConfig::homogeneous(k);
+    let assignment: Vec<usize> = (0..n).map(|i| i % k).collect();
+    let workload = FloodWorkload::generate(
+        &graph,
+        &WorkloadOptions { threads, horizon_ticks: 2_000, ..Default::default() },
+        &mut rng,
+    );
+    HeadlineSetup { graph, machines, assignment, workload, k }
+}
+
+fn sim_options(parallelism: usize, max_ticks: u64) -> SimOptions {
+    SimOptions { parallelism, max_ticks, ..Default::default() }
+}
+
+/// One timed optimized run; returns (stats, host seconds).
+fn run_optimized(setup: &HeadlineSetup, parallelism: usize, max_ticks: u64) -> (SimStats, f64) {
+    let part =
+        Partition::from_assignment(&setup.graph, setup.k, setup.assignment.clone());
+    let mut engine = SimEngine::new(
+        &setup.graph,
+        setup.machines.clone(),
+        part,
+        sim_options(parallelism, max_ticks),
+        setup.workload.injections.clone(),
+    );
+    let t0 = Instant::now();
+    let stats = engine.run_to_completion();
+    (stats, t0.elapsed().as_secs_f64())
+}
+
+/// One timed naive-reference run (tick-capped: it is the slow baseline
+/// the optimization is measured against).
+fn run_reference(setup: &HeadlineSetup, max_ticks: u64) -> (SimStats, f64) {
+    let part =
+        Partition::from_assignment(&setup.graph, setup.k, setup.assignment.clone());
+    let mut engine = ReferenceEngine::new(
+        &setup.graph,
+        setup.machines.clone(),
+        part,
+        sim_options(1, max_ticks),
+        setup.workload.injections.clone(),
+    );
+    let t0 = Instant::now();
+    let stats = engine.run_to_completion();
+    (stats, t0.elapsed().as_secs_f64())
+}
+
+fn lp_ticks_per_sec(n: usize, stats: &SimStats, secs: f64) -> f64 {
+    stats.ticks as f64 * n as f64 / secs.max(1e-9)
+}
+
 fn main() {
+    let smoke = std::env::var("GTIP_BENCH_SMOKE")
+        .map_or(false, |v| !v.is_empty() && v != "0");
     let mut cfg = BenchConfig::coarse();
     cfg.samples = 3;
     cfg.max_iters = 3;
     let mut b = Bencher::new("simulator").with_config(cfg);
+    let mut json: Vec<(String, JsonVal)> = Vec::new();
 
+    // Small preferential-attachment cases (host-time trend via the
+    // micro harness, as before).
+    let mut small_cases: Vec<JsonVal> = Vec::new();
     for &n in &[230usize, 1_000] {
         let mut rng = Pcg32::new(n as u64);
         let graph = preferential_attachment(n, 2, &mut rng);
@@ -22,11 +104,7 @@ fn main() {
         let assignment: Vec<usize> = (0..n).map(|i| i % 5).collect();
         let workload = FloodWorkload::generate(
             &graph,
-            &WorkloadOptions {
-                threads: n / 4,
-                horizon_ticks: 2_000,
-                ..Default::default()
-            },
+            &WorkloadOptions { threads: n / 4, horizon_ticks: 2_000, ..Default::default() },
             &mut rng,
         );
 
@@ -56,10 +134,100 @@ fn main() {
             );
             engine.run_to_completion().ticks
         });
-        println!(
-            "    -> {:.3e} LP-ticks/sec",
-            total_lp_ticks as f64 / r.per_iter.mean
-        );
+        let tps = total_lp_ticks as f64 / r.per_iter.mean;
+        println!("    -> {tps:.3e} LP-ticks/sec");
+        small_cases.push(JsonVal::Obj(vec![
+            ("n".into(), JsonVal::Int(n as u64)),
+            ("lp_ticks_per_sec".into(), JsonVal::Num(tps)),
+        ]));
     }
+    json.push(("small_cases".into(), JsonVal::Arr(small_cases)));
+
+    // Headline: 1e5-LP specialized-geometric graph (ISSUE 2 acceptance
+    // case), optimized engine vs the retained naive reference.
+    let (n, threads, ref_ticks) =
+        if smoke { (20_000, 120, 500) } else { (100_000, 400, 2_000) };
+    println!("building specialized-geometric headline graph (n = {n}) ...");
+    let setup = headline_setup(n, threads);
+    println!(
+        "  graph ready: {} nodes, {} edges",
+        setup.graph.node_count(),
+        setup.graph.edge_count()
+    );
+
+    // Matched-window comparison: both engines simulate the SAME first
+    // `ref_ticks` wall ticks (bit-identical work), so the speedup is
+    // host-time over identical simulated spans — fast-forwarding the
+    // idle drain tail cannot inflate it.
+    let (ref_stats, ref_secs) = run_reference(&setup, ref_ticks);
+    let ref_tps = lp_ticks_per_sec(n, &ref_stats, ref_secs);
+    println!(
+        "  reference (naive) : {} ticks in {ref_secs:.2}s -> {ref_tps:.3e} LP-ticks/s",
+        ref_stats.ticks
+    );
+    let (opt_win_stats, opt_win_secs) = run_optimized(&setup, 1, ref_ticks);
+    assert_eq!(
+        opt_win_stats.events_processed, ref_stats.events_processed,
+        "optimized and reference diverged inside the matched window"
+    );
+    let opt_win_tps = lp_ticks_per_sec(n, &opt_win_stats, opt_win_secs);
+    let speedup = opt_win_tps / ref_tps.max(1e-12);
+    println!(
+        "  optimized, same {ref_ticks}-tick window: {opt_win_secs:.3}s -> {opt_win_tps:.3e} \
+         LP-ticks/s ({speedup:.1}x the reference; acceptance: >= 10x)"
+    );
+
+    let mut parallel_json: Vec<(String, JsonVal)> = Vec::new();
+    let mut first_run: Option<(SimStats, f64)> = None;
+    for &p in &[1usize, 2, 4] {
+        let (stats, secs) = run_optimized(&setup, p, 500_000);
+        let tps = lp_ticks_per_sec(n, &stats, secs);
+        println!(
+            "  optimized (p = {p}) : {} ticks, {} events in {secs:.2}s -> {tps:.3e} LP-ticks/s",
+            stats.ticks, stats.events_processed
+        );
+        parallel_json.push((format!("p{p}"), JsonVal::Num(tps)));
+        if let Some((s0, _)) = &first_run {
+            assert_eq!(
+                s0, &stats,
+                "parallelism {p} diverged from sequential — determinism bug"
+            );
+        } else {
+            first_run = Some((stats, secs));
+        }
+    }
+    let (opt_stats, opt_secs) = first_run.expect("ran at least once");
+    let opt_tps = lp_ticks_per_sec(n, &opt_stats, opt_secs);
+
+    json.push((
+        "headline".into(),
+        JsonVal::Obj(vec![
+            ("graph".into(), JsonVal::Str("specialized_geometric".into())),
+            ("n".into(), JsonVal::Int(n as u64)),
+            ("threads".into(), JsonVal::Int(threads as u64)),
+            ("smoke".into(), JsonVal::Bool(smoke)),
+            ("ticks".into(), JsonVal::Int(opt_stats.ticks)),
+            ("events_processed".into(), JsonVal::Int(opt_stats.events_processed)),
+            ("truncated".into(), JsonVal::Bool(opt_stats.truncated)),
+            ("host_seconds".into(), JsonVal::Num(opt_secs)),
+            ("full_run_lp_ticks_per_sec".into(), JsonVal::Num(opt_tps)),
+            (
+                "events_per_sec".into(),
+                JsonVal::Num(opt_stats.events_processed as f64 / opt_secs.max(1e-9)),
+            ),
+            // Matched-window figures (same simulated span for both
+            // engines — the honest acceptance comparison).
+            ("window_ticks".into(), JsonVal::Int(ref_ticks)),
+            ("reference_lp_ticks_per_sec".into(), JsonVal::Num(ref_tps)),
+            ("window_lp_ticks_per_sec".into(), JsonVal::Num(opt_win_tps)),
+            ("speedup_vs_reference".into(), JsonVal::Num(speedup)),
+            ("parallel_lp_ticks_per_sec".into(), JsonVal::Obj(parallel_json)),
+        ]),
+    ));
+
     let _ = b.write_csv();
+    match write_json_group("results/BENCH_sim.json", "simulator", &JsonVal::Obj(json)) {
+        Ok(path) => println!("(wrote {})", path.display()),
+        Err(e) => eprintln!("(BENCH_sim.json write failed: {e})"),
+    }
 }

@@ -50,11 +50,12 @@ USAGE:
                   [--distributed] [--anneal] [--save FILE]
   gtip simulate   [--family ...] [--nodes N] [--k K] [--refine-every T]
                   [--framework A|B] [--mu MU] [--threads N] [--seed S]
+                  [--parallelism P]
   gtip dynamic    [--scenario hotspot|flash|diurnal|failure] [--nodes N] [--k K]
                   [--epoch-ticks E] [--estimator instant|ewma|hysteresis]
                   [--backend sequential|distributed] [--framework A|B]
                   [--threads N] [--horizon T] [--ticks-per-transfer C]
-                  [--seed S] [--compare]
+                  [--seed S] [--compare] [--parallelism P]
   gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
   gtip artifacts  [--dir DIR]
   gtip help
@@ -189,6 +190,7 @@ fn cmd_simulate(args: &Args) -> CliResult {
     let framework: Framework = args.str_or("framework", "A").parse()?;
     let mu = args.opt_or::<f64>("mu", 8.0)?;
     let threads = args.opt_or::<usize>("threads", 150)?;
+    let parallelism = args.opt_or::<usize>("parallelism", 1)?;
 
     let mut rng = Pcg32::new(seed);
     let graph = generate(family, nodes, &mut rng);
@@ -198,7 +200,7 @@ fn cmd_simulate(args: &Args) -> CliResult {
         &mut rng,
     );
     let driver = DriverOptions {
-        sim: SimOptions { trace_every: 50, ..Default::default() },
+        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
         refine_every,
         framework,
         mu,
@@ -238,6 +240,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     let threads = args.opt_or::<usize>("threads", 160)?;
     let horizon = args.opt_or::<u64>("horizon", 2_400)?;
     let ticks_per_transfer = args.opt_or::<u64>("ticks-per-transfer", 0)?;
+    let parallelism = args.opt_or::<usize>("parallelism", 1)?;
     if nodes == 0 {
         return Err("--nodes must be >= 1".into());
     }
@@ -269,7 +272,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     );
 
     let options = DynamicOptions {
-        sim: SimOptions { trace_every: 50, ..Default::default() },
+        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
         epoch_ticks,
         framework,
         mu,

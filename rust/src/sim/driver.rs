@@ -109,7 +109,14 @@ pub fn run_dynamic_from(
     let mut epoch_potentials = Vec::new();
 
     loop {
-        if !engine.step() {
+        // Bound fast-forward jumps at the next refinement boundary so
+        // the refinement schedule is identical to per-tick stepping.
+        let boundary = if options.refine_every > 0 {
+            (engine.stats().ticks / options.refine_every + 1) * options.refine_every
+        } else {
+            options.sim.max_ticks
+        };
+        if !engine.step_bounded(boundary) {
             break;
         }
         let tick = engine.stats().ticks;

@@ -477,13 +477,10 @@ impl<'g> DynamicDriver<'g> {
         } else {
             self.options.epoch_ticks
         };
-        let mut stepped: u64 = 0;
-        while stepped < budget
-            && self.engine.stats().ticks < self.options.sim.max_ticks
-            && self.engine.step()
-        {
-            stepped += 1;
-        }
+        // Epoch boundary in absolute ticks; `step_bounded` keeps
+        // fast-forward jumps inside it so epoch windows are exact.
+        let limit = tick_start.saturating_add(budget).min(self.options.sim.max_ticks);
+        while self.engine.stats().ticks < limit && self.engine.step_bounded(limit) {}
         let counters = self.engine.take_epoch_counters();
         let tick_end = self.engine.stats().ticks;
         let more = !self.engine.drained() && tick_end < self.options.sim.max_ticks;

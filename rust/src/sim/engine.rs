@@ -2,18 +2,47 @@
 //!
 //! Owns all LPs, the LP-to-machine assignment, and the wall-clock loop:
 //!
-//! 1. fossil-collect against GVT,
+//! 1. injections scheduled for this tick arrive,
 //! 2. idle LPs select + start their lowest-timestamped ready event
 //!    (stragglers roll back, anti-messages cascade),
-//! 3. busy LPs tick down; completed forwarding events flood to unseen
+//! 3. busy LPs complete; completed forwarding events flood to unseen
 //!    neighbors (cross-machine forwards pay the `event-tick` delay),
-//! 4. pending-event delays decrement, GVT updates,
-//! 5. injections scheduled for this tick arrive.
+//! 4. buffered messages deliver, GVT updates, fossils collect.
 //!
 //! Processing an event occupies the LP for
 //! `ceil(resident_LPs × base_time / (w_k · K))` ticks — machine speed
 //! inversely proportional to resident LP count (§6.1), generalized to
 //! heterogeneous speeds `w_k`.
+//!
+//! # Hot-path architecture (DESIGN.md §3)
+//!
+//! Per-tick cost scales with *activity*, not graph size:
+//!
+//! * an **active-LP worklist** (`active`, ascending) holds exactly the
+//!   LPs that are busy or have pending events; idle-and-empty LPs cost
+//!   zero. Fossil collection on idle LPs is deferred and caught up when
+//!   a message reactivates them (GVT is monotone, so late collection
+//!   removes the same entries);
+//! * **incremental GVT**: each LP keeps an O(1) contribution
+//!   (`Lp::gvt_contribution`), and the undelivered-injection minimum
+//!   comes from a prefix-min array computed once at construction —
+//!   per-tick GVT is O(active), never O(N + injections);
+//! * **tick fast-forward**: when every active LP is counting down busy
+//!   time or transfer delays and no injection is due, the engine jumps
+//!   `Δ = min(remaining)` wall ticks in one step. Stats, traces and
+//!   epoch counters advance by Δ; results are bit-identical to stepping
+//!   the Δ no-op ticks one by one (nothing starts, completes, arrives,
+//!   or moves GVT inside the window by construction of Δ);
+//! * **parallel per-machine execution** (`SimOptions::parallelism`):
+//!   scoped workers own the LPs of their machines and run the tick in
+//!   barrier-separated sub-phases (start | complete | fan-out | retire)
+//!   so every cross-LP read observes the same state the sequential tick
+//!   observes. Per-machine outboxes merge in deterministic sender order
+//!   (stable sort by source LP), making parallel runs **bit-identical**
+//!   to sequential ones — the §5 determinism contract extends to
+//!   `parallelism > 1` (see DESIGN.md §5 and the equivalence suite).
+
+use std::sync::Barrier;
 
 use crate::graph::{Graph, NodeId};
 use crate::partition::{MachineConfig, MachineId, Partition};
@@ -38,6 +67,14 @@ pub struct SimOptions {
     pub trace_every: WallTime,
     /// Safety cap on wall ticks.
     pub max_ticks: WallTime,
+    /// Worker threads for per-machine tick execution (0/1 = sequential).
+    /// Any value produces bit-identical results; see DESIGN.md §5.
+    pub parallelism: usize,
+    /// Minimum active-LP count before a tick is worth parallelizing:
+    /// the parallel path spawns scoped workers per tick, so below this
+    /// the spawn + barrier overhead dominates the tick's work. Purely a
+    /// scheduling knob: results are identical either way.
+    pub parallel_min_active: usize,
 }
 
 impl Default for SimOptions {
@@ -50,12 +87,14 @@ impl Default for SimOptions {
             hop_latency: 1,
             trace_every: 0,
             max_ticks: 2_000_000,
+            parallelism: 1,
+            parallel_min_active: 1024,
         }
     }
 }
 
 /// Aggregate statistics of a run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Total wall-clock ticks consumed so far — the paper's headline
     /// *simulation time* metric.
@@ -82,7 +121,7 @@ pub struct Injection {
 /// (`sim::dynamic`) feeds to its weight estimators. Global [`SimStats`]
 /// counters are cumulative; these reset at every
 /// [`SimEngine::take_epoch_counters`] call.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct EpochCounters {
     /// Wall ticks covered by this window.
     pub ticks: WallTime,
@@ -99,7 +138,7 @@ pub struct EpochCounters {
 }
 
 impl EpochCounters {
-    fn for_graph(graph: &Graph) -> Self {
+    pub(crate) fn for_graph(graph: &Graph) -> Self {
         let n = graph.node_count();
         EpochCounters {
             ticks: 0,
@@ -134,6 +173,222 @@ impl EpochCounters {
     }
 }
 
+/// Busy time charged on machine `k` for an event of kind `kind`:
+/// `resident × base / (w_k · K)`, rounded up, minimum 1. Free function
+/// so parallel workers can call it without borrowing the engine.
+fn occupancy_cost(
+    part: &Partition,
+    machines: &MachineConfig,
+    options: &SimOptions,
+    k: MachineId,
+    kind: EventKind,
+) -> WallTime {
+    let base =
+        kind.base_process_time(options.base_process_time, options.rollback_process_time);
+    let resident = part.count(k) as f64;
+    let speed_scale = machines.speed(k) * machines.count() as f64;
+    ((resident * base as f64 / speed_scale).ceil() as WallTime).max(1)
+}
+
+/// Transfer delay between two LPs given the current assignment.
+fn transfer_delay(part: &Partition, options: &SimOptions, from: NodeId, to: NodeId) -> WallTime {
+    if part.machine_of(from) == part.machine_of(to) {
+        options.intra_machine_delay
+    } else {
+        options.inter_machine_delay
+    }
+}
+
+/// An outbox entry: `(receiver, event, sender)`. The sender id is the
+/// deterministic merge key of the parallel tick.
+type OutMsg = (NodeId, Event, NodeId);
+
+/// Raw shared pointer into an engine-owned array, handed to scoped
+/// workers. Safety protocol: during mutate phases every worker touches
+/// only indices it owns (LPs of its machines / its senders' CSR rows);
+/// during the read-only fan-out phase no `&mut` exists anywhere. Phase
+/// boundaries are `Barrier`s.
+struct RawSlice<T>(*mut T);
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> Self {
+        RawSlice(self.0)
+    }
+}
+impl<T> Copy for RawSlice<T> {}
+unsafe impl<T: Send> Send for RawSlice<T> {}
+unsafe impl<T: Send> Sync for RawSlice<T> {}
+
+impl<T> RawSlice<T> {
+    fn new(p: *mut T) -> Self {
+        RawSlice(p)
+    }
+    /// # Safety
+    /// Caller must hold exclusive logical ownership of index `i` in the
+    /// current phase.
+    #[inline]
+    unsafe fn get(self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+    /// # Safety
+    /// Caller must guarantee no concurrent `&mut` to index `i`.
+    #[inline]
+    unsafe fn get_const(self, i: usize) -> *const T {
+        self.0.add(i) as *const T
+    }
+}
+
+/// Keeps the phase barrier releasable if a worker panics mid-phase:
+/// on unwind, `Drop` performs the worker's remaining waits so its
+/// peers do not deadlock — they finish their phases, the scope joins
+/// everyone, and the original panic propagates.
+struct BarrierGuard<'a> {
+    barrier: &'a Barrier,
+    remaining: u8,
+}
+
+impl<'a> BarrierGuard<'a> {
+    fn new(barrier: &'a Barrier, phases: u8) -> Self {
+        BarrierGuard { barrier, remaining: phases }
+    }
+
+    fn wait(&mut self) {
+        self.barrier.wait();
+        self.remaining -= 1;
+    }
+}
+
+impl Drop for BarrierGuard<'_> {
+    fn drop(&mut self) {
+        for _ in 0..self.remaining {
+            self.barrier.wait();
+        }
+    }
+}
+
+/// Per-worker results of the parallel phase 1, merged deterministically
+/// (worker order for scalar sums; stable sender sort for outboxes).
+#[derive(Default)]
+struct WorkerOut {
+    cancels: Vec<OutMsg>,
+    fwds: Vec<OutMsg>,
+    events_processed: u64,
+    events_forwarded: u64,
+    cross_machine_forwards: u64,
+    rollbacks: u64,
+    antimessages_sent: u64,
+}
+
+/// Phase-1 body executed by each scoped worker over the active LPs of
+/// its machines (ascending). Sub-phases are barrier-separated so that
+/// (a) `start` and `complete` touch only owned LPs, (b) the fan-out
+/// pass reads a globally quiescent LP array (`seen` was last written in
+/// the start phase), and (c) `retire` again touches only owned LPs —
+/// making the result independent of worker interleaving and identical
+/// to the sequential tick.
+#[allow(clippy::too_many_arguments)]
+fn worker_phase1(
+    tick: WallTime,
+    my: &[NodeId],
+    graph: &Graph,
+    part: &Partition,
+    machines: &MachineConfig,
+    options: &SimOptions,
+    lps: RawSlice<Lp>,
+    ev_lp: RawSlice<u64>,
+    rb_lp: RawSlice<u64>,
+    xf_lp: RawSlice<u64>,
+    fw_he: RawSlice<u64>,
+    barrier: &Barrier,
+) -> WorkerOut {
+    let mut out = WorkerOut::default();
+    let mut sync = BarrierGuard::new(barrier, 3);
+    // Start phase: idle LPs select + start (own-LP mutations only).
+    for &i in my {
+        let lp = unsafe { &mut *lps.get(i) };
+        if lp.busy.is_some() {
+            continue;
+        }
+        let machine = part.machine_of(i);
+        let cost_rollback = occupancy_cost(part, machines, options, machine, EventKind::Rollback);
+        let cost_normal =
+            occupancy_cost(part, machines, options, machine, EventKind::ProcessForward);
+        let outcome = lp.start_next(
+            tick,
+            |kind| match kind {
+                EventKind::Rollback => cost_rollback,
+                _ => cost_normal,
+            },
+            options.inter_machine_delay,
+        );
+        match outcome {
+            StartOutcome::Nothing => {}
+            StartOutcome::Started { rolled_back, cancellations }
+            | StartOutcome::RolledBack { rolled_back, cancellations } => {
+                if rolled_back > 0 {
+                    unsafe { *rb_lp.get(i) += 1 };
+                    out.rollbacks += 1;
+                }
+                out.antimessages_sent += cancellations.len() as u64;
+                for (nb, ev) in cancellations {
+                    let mut ev = ev;
+                    ev.tick = transfer_delay(part, options, i, nb);
+                    out.cancels.push((nb, ev, i));
+                }
+            }
+        }
+    }
+    sync.wait();
+    // Complete phase: pop finished busy events (own-LP mutations only).
+    let mut completed = Vec::new();
+    for &i in my {
+        let lp = unsafe { &mut *lps.get(i) };
+        if let Some(done) = lp.complete_busy(tick) {
+            completed.push((i, done));
+        }
+    }
+    sync.wait();
+    // Fan-out phase: read-only over the LP array; writes go to local
+    // buffers and this worker's own slots of the epoch arrays.
+    let mut retires = Vec::new();
+    for &(i, done) in &completed {
+        unsafe { *ev_lp.get(i) += 1 };
+        out.events_processed += 1;
+        if done.kind == EventKind::Rollback {
+            // Anti-message consumed; nothing retires to history.
+            continue;
+        }
+        let mut forwarded_to = Vec::new();
+        if done.count > 0 {
+            let machine = part.machine_of(i);
+            let row = graph.row_offset(i);
+            for (slot, &nb) in graph.neighbors(i).iter().enumerate() {
+                let nb_seen = unsafe { (*lps.get_const(nb)).has_seen(done.thread) };
+                if nb_seen {
+                    continue;
+                }
+                let delay = transfer_delay(part, options, i, nb);
+                out.fwds.push((nb, done.forwarded(options.hop_latency, delay), i));
+                forwarded_to.push(nb);
+                out.events_forwarded += 1;
+                unsafe { *fw_he.get(row + slot) += 1 };
+                if part.machine_of(nb) != machine {
+                    out.cross_machine_forwards += 1;
+                    unsafe { *xf_lp.get(i) += 1 };
+                }
+            }
+        }
+        retires.push((i, done, forwarded_to));
+    }
+    sync.wait();
+    // Retire phase: record completions into own history.
+    for (i, done, forwarded_to) in retires {
+        let lp = unsafe { &mut *lps.get(i) };
+        lp.retire(done, forwarded_to);
+    }
+    out
+}
+
 /// The engine.
 pub struct SimEngine<'g> {
     graph: &'g Graph,
@@ -145,12 +400,32 @@ pub struct SimEngine<'g> {
     gvt: SimTime,
     /// Injections sorted descending by tick (pop from the back).
     injections: Vec<Injection>,
+    /// `inj_prefix_min[i]` = min event timestamp over `injections[0..=i]`
+    /// — with back-pops, the minimum over the remaining (undelivered)
+    /// injections is `inj_prefix_min[len - 1]`, O(1) per GVT update.
+    inj_prefix_min: Vec<SimTime>,
     /// Machine-load traces (avg queue length per resident LP), Figs 9/10.
     load_traces: Vec<Trace>,
     /// Activity window since the last `take_epoch_counters` harvest.
     epoch: EpochCounters,
-    /// Scratch buffer for messages produced within a tick.
-    outbox: Vec<(NodeId, Event)>,
+    /// Active worklist: LPs that are busy or hold pending events,
+    /// ascending. Everything else is skipped by every per-tick phase.
+    active: Vec<NodeId>,
+    is_active: Vec<bool>,
+    /// LPs activated during the current tick, merged at phase edges.
+    newly_active: Vec<NodeId>,
+    /// Persistent merge buffer (keeps the worklist merge allocation-free
+    /// in steady state).
+    active_scratch: Vec<NodeId>,
+    /// Round-robin cursor of the background fossil sweep over idle LPs
+    /// (bounds history retained by LPs that never reactivate).
+    fossil_cursor: usize,
+    /// Scratch buffers for messages produced within a tick: straggler /
+    /// cascade cancellations, then completed-event forwards. Delivery
+    /// order is (phase, sender, sender-push-order) — identical for the
+    /// sequential and parallel paths.
+    outbox_cancel: Vec<OutMsg>,
+    outbox_fwd: Vec<OutMsg>,
 }
 
 impl<'g> SimEngine<'g> {
@@ -164,6 +439,12 @@ impl<'g> SimEngine<'g> {
         assert_eq!(part.node_count(), graph.node_count());
         assert_eq!(part.machine_count(), machines.count());
         injections.sort_by_key(|inj| std::cmp::Reverse(inj.at_tick));
+        let mut inj_prefix_min = Vec::with_capacity(injections.len());
+        let mut m = SimTime::MAX;
+        for inj in &injections {
+            m = m.min(inj.event.time);
+            inj_prefix_min.push(m);
+        }
         let load_traces = (0..machines.count())
             .map(|k| Trace::new(format!("machine{k}")))
             .collect();
@@ -176,9 +457,16 @@ impl<'g> SimEngine<'g> {
             stats: SimStats::default(),
             gvt: 0,
             injections,
+            inj_prefix_min,
             load_traces,
             epoch: EpochCounters::for_graph(graph),
-            outbox: Vec::new(),
+            active: Vec::new(),
+            is_active: vec![false; graph.node_count()],
+            newly_active: Vec::new(),
+            active_scratch: Vec::new(),
+            fossil_cursor: 0,
+            outbox_cancel: Vec::new(),
+            outbox_fwd: Vec::new(),
         }
     }
 
@@ -227,54 +515,101 @@ impl<'g> SimEngine<'g> {
         self.part = part;
     }
 
-    /// Busy time charged on machine `k` for an event of kind `kind`:
-    /// `resident × base / (w_k · K)`, rounded up, minimum 1.
-    fn occupancy_cost(&self, k: MachineId, kind: EventKind) -> WallTime {
-        let base =
-            kind.base_process_time(self.options.base_process_time, self.options.rollback_process_time);
-        let resident = self.part.count(k) as f64;
-        let speed_scale = self.machines.speed(k) * self.machines.count() as f64;
-        ((resident * base as f64 / speed_scale).ceil() as WallTime).max(1)
+    fn transfer_delay(&self, from: NodeId, to: NodeId) -> WallTime {
+        transfer_delay(&self.part, &self.options, from, to)
     }
 
-    /// Transfer delay between two LPs given the current assignment.
-    fn transfer_delay(&self, from: NodeId, to: NodeId) -> WallTime {
-        if self.part.machine_of(from) == self.part.machine_of(to) {
-            self.options.intra_machine_delay
-        } else {
-            self.options.inter_machine_delay
+    /// Mark an LP active, catching up its deferred fossil collection
+    /// first (GVT is monotone, so collecting late removes exactly the
+    /// entries per-tick collection would have removed).
+    fn activate(&mut self, i: NodeId) {
+        if !self.is_active[i] {
+            self.lps[i].fossil_collect(self.gvt);
+            self.is_active[i] = true;
+            self.newly_active.push(i);
         }
     }
 
-    /// Deliver any injections scheduled at `tick`.
+    /// Merge LPs activated since the last merge into the (ascending)
+    /// worklist. Uses the persistent scratch buffer, so steady-state
+    /// merges allocate nothing.
+    fn merge_newly_active(&mut self) {
+        if self.newly_active.is_empty() {
+            return;
+        }
+        self.newly_active.sort_unstable();
+        self.active_scratch.clear();
+        self.active_scratch.reserve(self.active.len() + self.newly_active.len());
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.active.len() && b < self.newly_active.len() {
+            if self.active[a] < self.newly_active[b] {
+                self.active_scratch.push(self.active[a]);
+                a += 1;
+            } else {
+                self.active_scratch.push(self.newly_active[b]);
+                b += 1;
+            }
+        }
+        self.active_scratch.extend_from_slice(&self.active[a..]);
+        self.active_scratch.extend_from_slice(&self.newly_active[b..]);
+        std::mem::swap(&mut self.active, &mut self.active_scratch);
+        self.newly_active.clear();
+    }
+
+    /// Drop drained LPs from the worklist.
+    fn sweep_inactive(&mut self) {
+        let lps = &self.lps;
+        let is_active = &mut self.is_active;
+        self.active.retain(|&i| {
+            if lps[i].idle_and_empty() {
+                is_active[i] = false;
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    /// Deliver any injections scheduled at `tick` (no duplicate-drop
+    /// check: injections are fresh threads by construction).
     fn deliver_injections(&mut self, tick: WallTime) {
         while let Some(inj) = self.injections.last().copied() {
             if inj.at_tick > tick {
                 break;
             }
             self.injections.pop();
-            self.lps[inj.lp].receive(inj.event);
+            self.activate(inj.lp);
+            self.lps[inj.lp].receive(inj.event, tick);
         }
     }
 
-    /// Compute GVT: minimum over all LP local times of *busy* LPs and all
-    /// pending event timestamps (Fig. 6 / Table III `global-time`).
-    fn compute_gvt(&self) -> SimTime {
+    /// Minimum event timestamp over the undelivered injections, O(1).
+    fn injections_time_min(&self) -> Option<SimTime> {
+        let len = self.injections.len();
+        if len > 0 {
+            Some(self.inj_prefix_min[len - 1])
+        } else {
+            None
+        }
+    }
+
+    /// Compute GVT: minimum over the active LPs' contributions (busy
+    /// event timestamps and pending minima) and the undelivered
+    /// injections (Fig. 6 / Table III `global-time`). O(active).
+    fn compute_gvt(&mut self) -> SimTime {
         let mut gvt = SimTime::MAX;
-        for lp in &self.lps {
-            if let Some(b) = &lp.busy {
-                gvt = gvt.min(b.event.time);
-            }
-            if let Some(t) = lp.min_pending_time() {
+        let active = std::mem::take(&mut self.active);
+        for &i in &active {
+            if let Some(t) = self.lps[i].gvt_contribution() {
                 gvt = gvt.min(t);
             }
         }
-        // Events not yet injected also hold back GVT.
-        for inj in &self.injections {
-            gvt = gvt.min(inj.event.time);
+        self.active = active;
+        if let Some(t) = self.injections_time_min() {
+            gvt = gvt.min(t);
         }
         if gvt == SimTime::MAX {
-            // Drained: GVT is the max local time.
+            // Drained: GVT is the max local time (hit once, at drain).
             self.lps.iter().map(|l| l.local_time).max().unwrap_or(0)
         } else {
             gvt
@@ -282,12 +617,12 @@ impl<'g> SimEngine<'g> {
     }
 
     /// Record machine load (mean queue length per resident LP, §6.1) at
-    /// the current tick.
+    /// the current tick. O(active + K): idle LPs have empty queues.
     fn record_loads(&mut self) {
         let k = self.machines.count();
         let mut sums = vec![0.0f64; k];
-        for (i, lp) in self.lps.iter().enumerate() {
-            sums[self.part.machine_of(i)] += lp.queue_len() as f64;
+        for &i in &self.active {
+            sums[self.part.machine_of(i)] += self.lps[i].queue_len() as f64;
         }
         for m in 0..k {
             let cnt = self.part.count(m).max(1) as f64;
@@ -297,114 +632,296 @@ impl<'g> SimEngine<'g> {
 
     /// All work drained (and no injections outstanding)?
     pub fn drained(&self) -> bool {
-        self.injections.is_empty() && self.lps.iter().all(|lp| lp.idle_and_empty())
+        self.injections.is_empty() && self.active.is_empty() && self.newly_active.is_empty()
     }
 
-    /// Execute one wall-clock tick (Fig. 6 body). Returns `false` once
-    /// drained.
-    pub fn step(&mut self) -> bool {
+    /// Wall ticks that can be skipped in one jump because they are
+    /// provably no-ops: every active LP is either busy with completion
+    /// strictly in the future or waiting on transfer delays, and no
+    /// injection, trace point, or external boundary lands inside the
+    /// window. Returns `None` when the current tick must be executed.
+    #[allow(clippy::needless_range_loop)] // index loop: `self.lps[i]` needs &mut
+    fn fast_forward(&mut self, tick: WallTime, tick_limit: WallTime) -> Option<WallTime> {
+        let limit = tick_limit.min(self.options.max_ticks);
+        let mut dt = limit.saturating_sub(tick);
+        if dt == 0 {
+            return None;
+        }
+        if self.options.trace_every > 0 {
+            if tick % self.options.trace_every == 0 {
+                return None; // this tick records a trace point
+            }
+            dt = dt.min(self.options.trace_every - tick % self.options.trace_every);
+        }
+        if let Some(inj) = self.injections.last() {
+            debug_assert!(inj.at_tick > tick, "due injection not delivered");
+            dt = dt.min(inj.at_tick - tick);
+        }
+        for idx in 0..self.active.len() {
+            let i = self.active[idx];
+            if let Some(b) = self.lps[i].busy {
+                if b.done_at <= tick {
+                    return None; // completes this tick
+                }
+                dt = dt.min(b.done_at - tick);
+            } else {
+                match self.lps[i].earliest_event_at(tick) {
+                    Some(t) if t <= tick => return None, // ready event
+                    Some(t) => dt = dt.min(t - tick),
+                    None => {}
+                }
+            }
+        }
+        // Every reduction above yields >= 1 (guards return None first);
+        // the bound is defensive.
+        (dt >= 1).then_some(dt)
+    }
+
+    /// Sequential phase 1: starts (with straggler / cascade
+    /// cancellations), then completions with forward fan-out. The two
+    /// passes mirror the parallel sub-phases: all `seen` mutations
+    /// happen in the start pass, so the fan-out pass observes the same
+    /// neighbor state in any LP order.
+    fn phase1_sequential(&mut self, tick: WallTime) {
+        // The worklist is detached during the sweep so the helper
+        // methods can borrow `self` freely; nothing in phase 1
+        // activates or deactivates LPs.
+        let active = std::mem::take(&mut self.active);
+        for &i in &active {
+            if self.lps[i].busy.is_some() {
+                continue;
+            }
+            let machine = self.part.machine_of(i);
+            let cost_rollback = occupancy_cost(
+                &self.part,
+                &self.machines,
+                &self.options,
+                machine,
+                EventKind::Rollback,
+            );
+            let cost_normal = occupancy_cost(
+                &self.part,
+                &self.machines,
+                &self.options,
+                machine,
+                EventKind::ProcessForward,
+            );
+            let outcome = self.lps[i].start_next(
+                tick,
+                |kind| match kind {
+                    EventKind::Rollback => cost_rollback,
+                    _ => cost_normal,
+                },
+                self.options.inter_machine_delay,
+            );
+            self.note_start_outcome(i, outcome);
+        }
+        for &i in &active {
+            if let Some(done) = self.lps[i].complete_busy(tick) {
+                self.note_completion(i, done);
+            }
+        }
+        self.active = active;
+    }
+
+    fn note_start_outcome(&mut self, i: NodeId, outcome: StartOutcome) {
+        match outcome {
+            StartOutcome::Nothing => {}
+            StartOutcome::Started { rolled_back, cancellations }
+            | StartOutcome::RolledBack { rolled_back, cancellations } => {
+                if rolled_back > 0 {
+                    self.epoch.rollbacks_by_lp[i] += 1;
+                    self.stats.rollbacks += 1;
+                }
+                self.stats.antimessages_sent += cancellations.len() as u64;
+                for (nb, ev) in cancellations {
+                    // Anti-message delay follows the link type.
+                    let mut ev = ev;
+                    ev.tick = self.transfer_delay(i, nb);
+                    self.outbox_cancel.push((nb, ev, i));
+                }
+            }
+        }
+    }
+
+    fn note_completion(&mut self, i: NodeId, done: Event) {
+        self.stats.events_processed += 1;
+        self.epoch.events_by_lp[i] += 1;
+        if done.kind == EventKind::Rollback {
+            // Anti-message consumed; nothing retires to history.
+            return;
+        }
+        let graph = self.graph;
+        let mut forwarded_to = Vec::new();
+        if done.count > 0 {
+            let machine = self.part.machine_of(i);
+            let row = graph.row_offset(i);
+            for (slot, &nb) in graph.neighbors(i).iter().enumerate() {
+                if self.lps[nb].has_seen(done.thread) {
+                    continue;
+                }
+                let delay = self.transfer_delay(i, nb);
+                self.outbox_fwd.push((nb, done.forwarded(self.options.hop_latency, delay), i));
+                forwarded_to.push(nb);
+                self.stats.events_forwarded += 1;
+                self.epoch.forwards_by_half_edge[row + slot] += 1;
+                if self.part.machine_of(nb) != machine {
+                    self.stats.cross_machine_forwards += 1;
+                    self.epoch.cross_forwards_by_lp[i] += 1;
+                }
+            }
+        }
+        self.lps[i].retire(done, forwarded_to);
+    }
+
+    /// Parallel phase 1: scoped workers own the active LPs of their
+    /// machines (machine `m` → worker `m % workers`) and run the
+    /// barrier-separated sub-phases of [`worker_phase1`]. Scalar stats
+    /// merge in worker order; outboxes merge by stable sender sort —
+    /// both reproduce the sequential tick exactly.
+    fn phase1_parallel(&mut self, tick: WallTime, workers: usize) {
+        let mut work: Vec<Vec<NodeId>> = vec![Vec::new(); workers];
+        for &i in &self.active {
+            work[self.part.machine_of(i) % workers].push(i);
+        }
+        let graph = self.graph;
+        let part = &self.part;
+        let machines = &self.machines;
+        let options = &self.options;
+        let lps = RawSlice::new(self.lps.as_mut_ptr());
+        let ev_lp = RawSlice::new(self.epoch.events_by_lp.as_mut_ptr());
+        let rb_lp = RawSlice::new(self.epoch.rollbacks_by_lp.as_mut_ptr());
+        let xf_lp = RawSlice::new(self.epoch.cross_forwards_by_lp.as_mut_ptr());
+        let fw_he = RawSlice::new(self.epoch.forwards_by_half_edge.as_mut_ptr());
+        let barrier = Barrier::new(workers);
+        let mut outs: Vec<WorkerOut> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for my in &work {
+                let barrier = &barrier;
+                handles.push(s.spawn(move || {
+                    worker_phase1(
+                        tick, my, graph, part, machines, options, lps, ev_lp, rb_lp, xf_lp,
+                        fw_he, barrier,
+                    )
+                }));
+            }
+            for h in handles {
+                outs.push(h.join().expect("sim worker panicked"));
+            }
+        });
+        for out in &mut outs {
+            self.stats.events_processed += out.events_processed;
+            self.stats.events_forwarded += out.events_forwarded;
+            self.stats.cross_machine_forwards += out.cross_machine_forwards;
+            self.stats.rollbacks += out.rollbacks;
+            self.stats.antimessages_sent += out.antimessages_sent;
+            self.outbox_cancel.append(&mut out.cancels);
+            self.outbox_fwd.append(&mut out.fwds);
+        }
+        // Stable sender sort == sequential emission order (each sender's
+        // messages were pushed in its own neighbor order).
+        self.outbox_cancel.sort_by_key(|&(_, _, from)| from);
+        self.outbox_fwd.sort_by_key(|&(_, _, from)| from);
+    }
+
+    /// Deliver buffered messages: cancellations first, then forwards,
+    /// each in ascending sender order — the canonical delivery order.
+    fn deliver_outboxes(&mut self, tick: WallTime) {
+        let mut cancels = std::mem::take(&mut self.outbox_cancel);
+        for &(nb, ev, _) in &cancels {
+            self.deliver_one(nb, ev, tick);
+        }
+        cancels.clear();
+        self.outbox_cancel = cancels;
+        let mut fwds = std::mem::take(&mut self.outbox_fwd);
+        for &(nb, ev, _) in &fwds {
+            self.deliver_one(nb, ev, tick);
+        }
+        fwds.clear();
+        self.outbox_fwd = fwds;
+    }
+
+    fn deliver_one(&mut self, nb: NodeId, ev: Event, tick: WallTime) {
+        // Receivers that already saw the thread (race within the tick)
+        // drop duplicate forwards.
+        if ev.kind != EventKind::Rollback && self.lps[nb].has_seen(ev.thread) {
+            return;
+        }
+        self.activate(nb);
+        self.lps[nb].receive(ev, tick);
+    }
+
+    /// Execute one wall-clock step (Fig. 6 body), never advancing past
+    /// `tick_limit` in a fast-forward jump — drivers pass their next
+    /// epoch / refinement boundary so closed-loop schedules are exact.
+    /// Returns `false` once drained.
+    pub fn step_bounded(&mut self, tick_limit: WallTime) -> bool {
         if self.drained() {
             return false;
         }
         let tick = self.stats.ticks;
         self.deliver_injections(tick);
+        self.merge_newly_active();
 
-        // Phase 1: idle LPs select + start events; busy LPs tick down and
-        // completed events flood forward. Messages buffer in the outbox so
-        // intra-tick ordering does not depend on LP index.
-        let n = self.graph.node_count();
-        let mut outbox = std::mem::take(&mut self.outbox);
-        outbox.clear();
-        for i in 0..n {
-            let machine = self.part.machine_of(i);
-            if self.lps[i].busy.is_none() {
-                let cost_rollback = self.occupancy_cost(machine, EventKind::Rollback);
-                let cost_normal = self.occupancy_cost(machine, EventKind::ProcessForward);
-                let outcome = self.lps[i].start_next(
-                    |kind| match kind {
-                        EventKind::Rollback => cost_rollback,
-                        _ => cost_normal,
-                    },
-                    self.options.inter_machine_delay,
-                );
-                match outcome {
-                    StartOutcome::Nothing => {}
-                    StartOutcome::Started { rolled_back, cancellations }
-                    | StartOutcome::RolledBack { rolled_back, cancellations } => {
-                        if rolled_back > 0 {
-                            self.epoch.rollbacks_by_lp[i] += 1;
-                        }
-                        self.stats.antimessages_sent += cancellations.len() as u64;
-                        for (nb, ev) in cancellations {
-                            // Anti-message delay follows the link type.
-                            let mut ev = ev;
-                            ev.tick = self.transfer_delay(i, nb);
-                            outbox.push((nb, ev));
-                        }
-                    }
-                }
-            }
-            if let Some(done) = self.lps[i].tick_busy() {
-                match done.kind {
-                    EventKind::Rollback => {
-                        // Anti-message consumed; nothing retires to history.
-                        self.stats.events_processed += 1;
-                        self.epoch.events_by_lp[i] += 1;
-                    }
-                    _ => {
-                        self.stats.events_processed += 1;
-                        self.epoch.events_by_lp[i] += 1;
-                        let mut forwarded_to = Vec::new();
-                        if done.count > 0 {
-                            let row = self.graph.row_offset(i);
-                            for (slot, &nb) in self.graph.neighbors(i).iter().enumerate() {
-                                if !self.lps[nb].has_seen(done.thread) {
-                                    let delay = self.transfer_delay(i, nb);
-                                    let fwd = done.forwarded(self.options.hop_latency, delay);
-                                    outbox.push((nb, fwd));
-                                    forwarded_to.push(nb);
-                                    self.stats.events_forwarded += 1;
-                                    self.epoch.forwards_by_half_edge[row + slot] += 1;
-                                    if self.part.machine_of(nb) != machine {
-                                        self.stats.cross_machine_forwards += 1;
-                                        self.epoch.cross_forwards_by_lp[i] += 1;
-                                    }
-                                }
-                            }
-                        }
-                        self.lps[i].retire(done, forwarded_to);
-                    }
-                }
-            }
+        if let Some(dt) = self.fast_forward(tick, tick_limit) {
+            self.stats.ticks += dt;
+            self.epoch.ticks += dt;
+            return true;
+        }
+
+        // Phase 1: starts + completions, producing the outboxes.
+        let workers = if self.options.parallelism == 0 {
+            1
+        } else {
+            self.options.parallelism.min(self.machines.count())
+        };
+        if workers > 1 && self.active.len() >= self.options.parallel_min_active {
+            self.phase1_parallel(tick, workers);
+        } else {
+            self.phase1_sequential(tick);
         }
 
         // Phase 2: deliver buffered messages.
-        for (nb, ev) in outbox.drain(..) {
-            // Receivers that already saw the thread (race within the tick)
-            // drop duplicate forwards.
-            if ev.kind != EventKind::Rollback && self.lps[nb].has_seen(ev.thread) {
-                continue;
-            }
-            self.lps[nb].receive(ev);
-        }
-        self.outbox = outbox;
+        self.deliver_outboxes(tick);
+        self.merge_newly_active();
 
-        // Phase 3: delays tick down, GVT advances, fossils collected.
-        for lp in &mut self.lps {
-            lp.tick_delays();
-        }
+        // Phase 3: GVT advances, fossils collect, worklist compacts.
         self.gvt = self.compute_gvt();
-        for lp in &mut self.lps {
-            lp.fossil_collect(self.gvt);
+        let active = std::mem::take(&mut self.active);
+        for &i in &active {
+            self.lps[i].fossil_collect(self.gvt);
+        }
+        self.active = active;
+        self.sweep_inactive();
+
+        // Background fossil sweep: a few idle LPs per executed tick, so
+        // history retained by LPs that drained and never reactivate is
+        // bounded. GVT is monotone, so late collection removes exactly
+        // what per-tick collection would have — observable state is
+        // unchanged.
+        const FOSSIL_SWEEP_PER_TICK: usize = 64;
+        let n = self.lps.len();
+        for _ in 0..FOSSIL_SWEEP_PER_TICK.min(n) {
+            let i = self.fossil_cursor;
+            self.fossil_cursor = (self.fossil_cursor + 1) % n;
+            if !self.is_active[i] && !self.lps[i].history.is_empty() {
+                self.lps[i].fossil_collect(self.gvt);
+            }
         }
 
         self.stats.ticks += 1;
         self.epoch.ticks += 1;
-        self.stats.rollbacks = self.lps.iter().map(|l| l.rollbacks).sum();
         if self.options.trace_every > 0 && tick % self.options.trace_every == 0 {
             self.record_loads();
         }
         true
+    }
+
+    /// Execute one wall-clock step (fast-forward bounded only by
+    /// `max_ticks`). Returns `false` once drained.
+    pub fn step(&mut self) -> bool {
+        self.step_bounded(self.options.max_ticks)
     }
 
     /// Run until drained or `max_ticks`. Returns final stats.
@@ -566,7 +1083,7 @@ mod tests {
         let machines = MachineConfig::homogeneous(2);
         let part = Partition::from_assignment(&g, 2, vec![0, 1, 0, 1, 0, 1]);
         let mut e = SimEngine::new(&g, machines, part, SimOptions::default(), inj);
-        // After a few ticks, collapse everything onto machine 0.
+        // After a few steps, collapse everything onto machine 0.
         for _ in 0..3 {
             e.step();
         }
@@ -599,7 +1116,8 @@ mod tests {
                 event: Event::injection(t + 1, t * 5, 2),
             })
             .collect();
-        let mut e = engine_on(&g, 2, vec![0, 0, 0, 0, 1, 1, 1, 1], injections, SimOptions::default());
+        let mut e =
+            engine_on(&g, 2, vec![0, 0, 0, 0, 1, 1, 1, 1], injections, SimOptions::default());
         let mut last_gvt = 0;
         while e.step() {
             assert!(e.gvt() >= last_gvt, "GVT regressed: {} -> {}", last_gvt, e.gvt());
@@ -640,5 +1158,63 @@ mod tests {
         let stats = e.run_to_completion();
         assert_eq!(stats.events_processed, 2);
         assert!(stats.ticks > 50);
+    }
+
+    #[test]
+    fn fast_forward_skips_idle_gaps_in_few_steps() {
+        // One event at tick 0, the next at tick 10_000: the gap must be
+        // jumped, not walked — the whole run takes a handful of steps.
+        let g = line_graph(3);
+        let injections = vec![
+            Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) },
+            Injection { at_tick: 10_000, lp: 2, event: Event::injection(2, 9_000, 0) },
+        ];
+        let mut e = engine_on(&g, 1, vec![0; 3], injections, SimOptions::default());
+        let mut steps = 0u64;
+        while e.step() {
+            steps += 1;
+            assert!(steps < 100, "fast-forward failed to engage");
+        }
+        let stats = e.stats().clone();
+        assert_eq!(stats.events_processed, 2);
+        assert!(stats.ticks > 10_000);
+        assert!(!e.run_to_completion().truncated);
+    }
+
+    #[test]
+    fn step_bounded_respects_the_boundary() {
+        let g = line_graph(3);
+        let injections = vec![
+            Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) },
+            Injection { at_tick: 5_000, lp: 2, event: Event::injection(2, 4_000, 0) },
+        ];
+        let mut e = engine_on(&g, 1, vec![0; 3], injections, SimOptions::default());
+        // Run with a boundary at 1_000: no jump may cross it.
+        while e.stats().ticks < 1_000 && e.step_bounded(1_000) {}
+        assert_eq!(e.stats().ticks, 1_000, "jump overshot the boundary");
+        assert!(!e.drained());
+    }
+
+    #[test]
+    fn parallel_engine_matches_sequential() {
+        let g = line_graph(12);
+        let injections: Vec<Injection> = (0..8)
+            .map(|t| Injection {
+                at_tick: t,
+                lp: (t as usize * 3) % 12,
+                event: Event::injection(t + 1, t * 2, 4),
+            })
+            .collect();
+        let run = |parallelism: usize| {
+            let opts =
+                SimOptions { parallelism, parallel_min_active: 0, ..Default::default() };
+            let mut e =
+                engine_on(&g, 3, (0..12).map(|i| i % 3).collect(), injections.clone(), opts);
+            let stats = e.run_to_completion();
+            (stats, e.gvt(), e.take_epoch_counters())
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(seq, par, "parallel run diverged from sequential");
     }
 }

@@ -1,14 +1,46 @@
 //! Logical-process state (paper Table II) and per-LP operations.
 //!
-//! Each LP carries its pending event list, the history of processed
+//! Each LP carries its pending event set, the history of processed
 //! events (needed for rollback), its local virtual time, and its busy
 //! state. The LP-level operations implemented here are the bodies of the
 //! paper's Fig. 4 (`Process_noncausal_event`) and Fig. 5
 //! (`Process_rollback_event`), restructured as pure state transitions
 //! that *return* the anti-messages to send so the engine owns all
 //! message routing.
+//!
+//! # Indexed pending structure
+//!
+//! The original implementation kept `pending` as a flat `Vec<Event>` and
+//! linearly scanned it for the next ready event, the minimum pending
+//! timestamp (GVT contribution) and annihilation twins — O(queue) per
+//! tick per LP. This version indexes the pending set so every hot-path
+//! query is O(log queue) amortized or O(1):
+//!
+//! * events live in a **slot slab** (`slots` + free list + per-slot
+//!   generation counters), so heap entries can reference them stably;
+//! * a **ready-min heap** keyed `(time, kind-rank, thread)` yields the
+//!   next event to execute (rollbacks win ties so cancellations happen
+//!   promptly; the thread id makes selection a total order, independent
+//!   of arrival order — required for the deterministic parallel tick);
+//! * a **delayed heap** keyed by absolute ready wall-tick replaces the
+//!   per-tick transfer-delay countdown: an event received at wall tick
+//!   `now` with transfer delay `d` becomes ready at `now + d`, and is
+//!   promoted into the ready heap lazily. No per-tick work at all for
+//!   in-flight events — which is also what makes the engine's tick
+//!   fast-forward O(1) per skipped tick;
+//! * a **per-thread slot map** finds a pending non-rollback twin for
+//!   anti-message annihilation in O(1) (an LP holds at most one live
+//!   non-rollback event per thread — the flood-forwarding filter
+//!   guarantees it);
+//! * the minimum pending timestamp (the LP's GVT contribution) comes
+//!   from a third lazy min-heap keyed by event time — amortized
+//!   O(log queue) even when the minimum itself is removed.
+//!
+//! Heap entries are invalidated lazily: removing an event bumps its
+//! slot's generation, and stale heap entries are discarded on pop.
 
-use std::collections::HashSet;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::graph::NodeId;
 use crate::sim::event::{Event, EventKind, SimTime, ThreadId, WallTime};
@@ -22,11 +54,15 @@ pub struct HistoryEntry {
     pub forwarded_to: Vec<NodeId>,
 }
 
-/// Busy state: the event being processed and ticks remaining.
+/// Busy state: the event being processed and the wall tick during whose
+/// phase-completion pass it finishes (absolute, not a countdown).
 #[derive(Debug, Clone, Copy)]
 pub struct Busy {
     pub event: Event,
-    pub remaining: WallTime,
+    /// Completion wall tick: a cost-`c` event started during tick `t`
+    /// completes during tick `t + c - 1` (a cost-1 event completes the
+    /// same tick it starts, as in the countdown formulation).
+    pub done_at: WallTime,
 }
 
 /// Outcome of selecting and starting the next event on an LP.
@@ -41,42 +77,247 @@ pub enum StartOutcome {
     RolledBack { rolled_back: usize, cancellations: Vec<(NodeId, Event)> },
 }
 
-/// One logical process (Table II).
+/// Ordering rank of an event kind in the ready queue: rollbacks first.
+#[inline]
+fn kind_rank(kind: EventKind) -> u8 {
+    match kind {
+        EventKind::Rollback => 0,
+        _ => 1,
+    }
+}
+
+type SlotIdx = u32;
+
+/// One slab slot. `gen` increments every time the slot is vacated, so
+/// stale heap entries (which carry the generation they were pushed
+/// under) can be recognized and discarded.
 #[derive(Debug, Clone, Default)]
+struct Slot {
+    gen: u32,
+    ev: Option<Event>,
+    /// Absolute wall tick at which the event becomes processable.
+    ready_at: WallTime,
+}
+
+/// Ready-heap key: total order `(time, kind-rank, thread)`; the slot
+/// index only breaks ties between byte-identical duplicate events.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct ReadyKey {
+    time: SimTime,
+    rank: u8,
+    thread: ThreadId,
+    slot: SlotIdx,
+    gen: u32,
+}
+
+/// Delayed-heap key: absolute readiness tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct DelayKey {
+    ready_at: WallTime,
+    slot: SlotIdx,
+    gen: u32,
+}
+
+/// Time-heap key: the event timestamp (GVT contribution index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct TimeKey {
+    time: SimTime,
+    slot: SlotIdx,
+    gen: u32,
+}
+
+/// One logical process (Table II).
+#[derive(Debug, Clone)]
 pub struct Lp {
-    /// Pending events (`event-list` + parallel columns of Table II).
-    pub pending: Vec<Event>,
-    /// Processed-event history (`*-history` columns).
-    pub history: Vec<HistoryEntry>,
+    /// Slot slab holding the pending events.
+    slots: Vec<Slot>,
+    /// Vacant slot indices.
+    free: Vec<SlotIdx>,
+    /// Number of live pending events.
+    live: usize,
+    /// Ready events, min-first by `(time, kind-rank, thread)`. Lazy.
+    ready: BinaryHeap<Reverse<ReadyKey>>,
+    /// Not-yet-ready events, min-first by absolute ready tick. Lazy.
+    delayed: BinaryHeap<Reverse<DelayKey>>,
+    /// All live events, min-first by timestamp — the LP's GVT
+    /// contribution. Lazy (stale entries popped on query), so removing
+    /// the current minimum costs O(log q), not a slab rescan.
+    times: BinaryHeap<Reverse<TimeKey>>,
+    /// Pending non-rollback event slot per thread (annihilation index).
+    thread_slot: HashMap<ThreadId, SlotIdx>,
     /// Threads present in `pending` or `history` — the "has it received
     /// this packet yet" test used by the flood-forwarding rule.
     pub seen: HashSet<ThreadId>,
     /// Local virtual time (timestamp of last/current processed event).
     pub local_time: SimTime,
-    /// Busy processing state (`status?`, `busy-tick`).
+    /// Busy processing state (`status?`, absolute completion tick).
     pub busy: Option<Busy>,
+    /// Processed-event history (`*-history` columns).
+    pub history: Vec<HistoryEntry>,
     /// Rollback counter (statistics).
     pub rollbacks: u64,
 }
 
+impl Default for Lp {
+    fn default() -> Self {
+        Lp {
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            ready: BinaryHeap::new(),
+            delayed: BinaryHeap::new(),
+            times: BinaryHeap::new(),
+            thread_slot: HashMap::new(),
+            seen: HashSet::new(),
+            local_time: 0,
+            busy: None,
+            history: Vec::new(),
+            rollbacks: 0,
+        }
+    }
+}
+
 impl Lp {
-    /// Enqueue an arriving event. Rollback anti-messages may annihilate
-    /// a pending event immediately (standard Time Warp optimization);
-    /// everything else just joins the list.
-    pub fn receive(&mut self, ev: Event) {
+    /// Insert an event into the slab and the appropriate heap. The
+    /// event's relative `tick` delay is converted to an absolute ready
+    /// tick against `now` and then cleared.
+    fn insert_event(&mut self, ev: Event, now: WallTime) {
+        let ready_at = now + ev.tick;
+        let ev = Event { tick: 0, ..ev };
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(Slot::default());
+                (self.slots.len() - 1) as SlotIdx
+            }
+        };
+        let gen = {
+            let s = &mut self.slots[slot as usize];
+            debug_assert!(s.ev.is_none(), "allocated an occupied slot");
+            s.ev = Some(ev);
+            s.ready_at = ready_at;
+            s.gen
+        };
+        if ev.kind != EventKind::Rollback {
+            // At most one live non-rollback event per thread is the
+            // steady-state invariant (the flood filter guarantees it for
+            // forwards); duplicate *injections* of one thread id are
+            // tolerated by keeping the first mapping, so an anti-message
+            // annihilates the older twin — matching the linear-scan
+            // reference stepper.
+            self.thread_slot.entry(ev.thread).or_insert(slot);
+        }
+        if ready_at <= now {
+            self.ready.push(Reverse(ReadyKey {
+                time: ev.time,
+                rank: kind_rank(ev.kind),
+                thread: ev.thread,
+                slot,
+                gen,
+            }));
+        } else {
+            self.delayed.push(Reverse(DelayKey { ready_at, slot, gen }));
+        }
+        self.times.push(Reverse(TimeKey { time: ev.time, slot, gen }));
+        self.live += 1;
+    }
+
+    /// Vacate a slot, maintaining the thread map and the cached time
+    /// minimum. Stale heap entries are left behind (generation bump
+    /// invalidates them).
+    fn remove_slot(&mut self, slot: SlotIdx) -> Event {
+        let s = &mut self.slots[slot as usize];
+        let ev = s.ev.take().expect("removing an empty slot");
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(slot);
+        self.live -= 1;
+        if ev.kind != EventKind::Rollback {
+            if let Some(&mapped) = self.thread_slot.get(&ev.thread) {
+                if mapped == slot {
+                    self.thread_slot.remove(&ev.thread);
+                }
+            }
+        }
+        ev
+    }
+
+    /// True if the heap entry still refers to the event it was pushed
+    /// for.
+    #[inline]
+    fn slot_live(&self, slot: SlotIdx, gen: u32) -> bool {
+        let s = &self.slots[slot as usize];
+        s.gen == gen && s.ev.is_some()
+    }
+
+    /// Move events whose ready tick has arrived into the ready heap.
+    fn promote(&mut self, now: WallTime) {
+        while let Some(&Reverse(key)) = self.delayed.peek() {
+            if key.ready_at > now {
+                break;
+            }
+            self.delayed.pop();
+            if !self.slot_live(key.slot, key.gen) {
+                continue;
+            }
+            let s = &self.slots[key.slot as usize];
+            debug_assert_eq!(s.ready_at, key.ready_at);
+            let ev = s.ev.expect("live slot has an event");
+            self.ready.push(Reverse(ReadyKey {
+                time: ev.time,
+                rank: kind_rank(ev.kind),
+                thread: ev.thread,
+                slot: key.slot,
+                gen: key.gen,
+            }));
+        }
+    }
+
+    /// Slot of the ready pending event with the lowest
+    /// `(time, kind-rank, thread)` key, discarding stale heap entries.
+    fn peek_ready(&mut self, now: WallTime) -> Option<SlotIdx> {
+        self.promote(now);
+        while let Some(&Reverse(key)) = self.ready.peek() {
+            if self.slot_live(key.slot, key.gen) {
+                return Some(key.slot);
+            }
+            self.ready.pop();
+        }
+        None
+    }
+
+    /// Earliest wall tick at which this LP has (or will have) a
+    /// processable event, given it stays unperturbed: `Some(now)` if an
+    /// event is ready, the delayed minimum otherwise. Drives the
+    /// engine's tick fast-forward.
+    pub fn earliest_event_at(&mut self, now: WallTime) -> Option<WallTime> {
+        if self.peek_ready(now).is_some() {
+            return Some(now);
+        }
+        while let Some(&Reverse(key)) = self.delayed.peek() {
+            if self.slot_live(key.slot, key.gen) {
+                return Some(key.ready_at);
+            }
+            self.delayed.pop();
+        }
+        None
+    }
+
+    /// Enqueue an arriving event at wall tick `now`. Rollback
+    /// anti-messages may annihilate a pending event immediately
+    /// (standard Time Warp optimization); everything else joins the
+    /// pending set, becoming ready `ev.tick` ticks from now.
+    pub fn receive(&mut self, ev: Event, now: WallTime) {
         if ev.kind == EventKind::Rollback {
-            // Annihilate in-flight (pending) twin if present.
-            if let Some(pos) =
-                self.pending.iter().position(|p| p.thread == ev.thread && p.kind != EventKind::Rollback)
-            {
-                self.pending.swap_remove(pos);
+            // Annihilate the in-flight (pending) twin if present.
+            if let Some(&slot) = self.thread_slot.get(&ev.thread) {
+                self.remove_slot(slot);
                 self.seen.remove(&ev.thread);
                 return;
             }
         } else {
             self.seen.insert(ev.thread);
         }
-        self.pending.push(ev);
+        self.insert_event(ev, now);
     }
 
     /// Has this LP seen the thread (pending or processed)? This is the
@@ -85,40 +326,20 @@ impl Lp {
         self.seen.contains(&thread)
     }
 
-    /// Index of the ready pending event with the lowest timestamp
-    /// (rollbacks win ties so cancellations happen promptly).
-    fn next_ready(&self) -> Option<usize> {
-        let mut best: Option<usize> = None;
-        for (i, e) in self.pending.iter().enumerate() {
-            if !e.ready() {
-                continue;
-            }
-            match best {
-                Some(b) => {
-                    let eb = &self.pending[b];
-                    let earlier = e.time < eb.time
-                        || (e.time == eb.time
-                            && e.kind == EventKind::Rollback
-                            && eb.kind != EventKind::Rollback);
-                    if earlier {
-                        best = Some(i);
-                    }
-                }
-                None => best = Some(i),
-            }
-        }
-        best
-    }
-
     /// Roll local state back so that all history entries with
-    /// `event.time > horizon` return to the pending list; returns the
+    /// `event.time > horizon` return to the pending set; returns the
     /// anti-messages for the forwards those entries had generated.
     /// (Body of Fig. 4's restoration loop.)
-    fn rollback_to(&mut self, horizon: SimTime, transfer_delay: WallTime) -> (usize, Vec<(NodeId, Event)>) {
+    fn rollback_to(
+        &mut self,
+        horizon: SimTime,
+        transfer_delay: WallTime,
+        now: WallTime,
+    ) -> (usize, Vec<(NodeId, Event)>) {
         let mut cancellations = Vec::new();
         let mut restored = 0;
         let mut kept = Vec::with_capacity(self.history.len());
-        for entry in self.history.drain(..) {
+        for entry in std::mem::take(&mut self.history) {
             if entry.event.time > horizon {
                 restored += 1;
                 for &nb in &entry.forwarded_to {
@@ -126,8 +347,9 @@ impl Lp {
                     // the parent event's own (thread, time) is sufficient.
                     cancellations.push((nb, entry.event.rollback_for(transfer_delay)));
                 }
-                // The event returns to the pending list to be re-executed.
-                self.pending.push(Event { tick: 0, ..entry.event });
+                // The event returns to the pending set to be re-executed
+                // immediately (no transfer delay: it is already local).
+                self.insert_event(Event { tick: 0, ..entry.event }, now);
             } else {
                 kept.push(entry);
             }
@@ -143,27 +365,28 @@ impl Lp {
 
     /// Consume a rollback anti-message aimed at `thread` (Fig. 5): if the
     /// thread was already processed, roll back past it and drop it; the
-    /// annihilation-in-pending case is handled in [`receive`].
-    fn process_rollback(&mut self, ev: Event, transfer_delay: WallTime) -> (usize, Vec<(NodeId, Event)>) {
+    /// annihilation-in-pending case is handled in [`Self::receive`].
+    fn process_rollback(
+        &mut self,
+        ev: Event,
+        transfer_delay: WallTime,
+        now: WallTime,
+    ) -> (usize, Vec<(NodeId, Event)>) {
         // Find the processed instance of this thread.
         if let Some(pos) = self.history.iter().position(|h| h.event.thread == ev.thread) {
             let target_time = self.history[pos].event.time;
             // Undo everything after (and including) the cancelled event.
-            let (restored, mut cancellations) =
-                self.rollback_to(target_time.saturating_sub(1), transfer_delay);
+            let (restored, cancellations) =
+                self.rollback_to(target_time.saturating_sub(1), transfer_delay, now);
             // The cancelled thread itself must not be re-executed: drop it
             // from pending (rollback_to restored it) and un-see it.
-            if let Some(p) = self
-                .pending
-                .iter()
-                .position(|p| p.thread == ev.thread && p.kind != EventKind::Rollback)
-            {
-                self.pending.swap_remove(p);
+            if let Some(&slot) = self.thread_slot.get(&ev.thread) {
+                self.remove_slot(slot);
             }
             self.seen.remove(&ev.thread);
             // Cancellations for the dropped event's own forwards were
             // already produced by rollback_to (it was in the restored set).
-            return (restored, std::mem::take(&mut cancellations));
+            return (restored, cancellations);
         }
         // Late anti-message for a thread we never processed (its twin was
         // annihilated in pending, or never arrived): nothing to do.
@@ -171,24 +394,27 @@ impl Lp {
     }
 
     /// Select the next ready event and start processing it — the Fig. 6
-    /// idle-branch. `occupancy_cost` is the busy time charged for the
-    /// event (already scaled by machine occupancy by the engine).
+    /// idle-branch, at wall tick `now`. `occupancy_cost` is the busy
+    /// time charged for the event (already scaled by machine occupancy
+    /// by the engine).
     pub fn start_next(
         &mut self,
+        now: WallTime,
         occupancy_cost: impl Fn(EventKind) -> WallTime,
         transfer_delay: WallTime,
     ) -> StartOutcome {
         debug_assert!(self.busy.is_none());
-        let Some(idx) = self.next_ready() else {
+        let Some(slot) = self.peek_ready(now) else {
             return StartOutcome::Nothing;
         };
-        let ev = self.pending.swap_remove(idx);
+        let ev = self.remove_slot(slot);
         match ev.kind {
             EventKind::Rollback => {
-                let (rolled_back, cancellations) = self.process_rollback(ev, transfer_delay);
+                let (rolled_back, cancellations) = self.process_rollback(ev, transfer_delay, now);
                 // Rollback handling occupies the LP (synchronization
                 // overhead): busy for its base cost.
-                self.busy = Some(Busy { event: ev, remaining: occupancy_cost(EventKind::Rollback).max(1) });
+                let cost = occupancy_cost(EventKind::Rollback).max(1);
+                self.busy = Some(Busy { event: ev, done_at: now + cost - 1 });
                 StartOutcome::RolledBack { rolled_back, cancellations }
             }
             _ => {
@@ -196,28 +422,28 @@ impl Lp {
                 let mut cancellations = Vec::new();
                 if ev.time < self.local_time {
                     // Straggler — Fig. 4 Process_noncausal_event.
-                    let (r, c) = self.rollback_to(ev.time, transfer_delay);
+                    let (r, c) = self.rollback_to(ev.time, transfer_delay, now);
                     rolled_back = r;
                     cancellations = c;
                 }
                 self.local_time = self.local_time.max(ev.time);
-                self.busy = Some(Busy { event: ev, remaining: occupancy_cost(ev.kind).max(1) });
+                let cost = occupancy_cost(ev.kind).max(1);
+                self.busy = Some(Busy { event: ev, done_at: now + cost - 1 });
                 StartOutcome::Started { rolled_back, cancellations }
             }
         }
     }
 
-    /// Advance the busy timer by one tick; returns the completed event
-    /// when processing finishes this tick.
-    pub fn tick_busy(&mut self) -> Option<Event> {
-        let busy = self.busy.as_mut()?;
-        busy.remaining -= 1;
-        if busy.remaining == 0 {
-            let ev = busy.event;
-            self.busy = None;
-            Some(ev)
-        } else {
-            None
+    /// Completion check for wall tick `now`: returns the processed event
+    /// when the busy period ends this tick (replaces the per-tick
+    /// countdown of the naive formulation).
+    pub fn complete_busy(&mut self, now: WallTime) -> Option<Event> {
+        match self.busy {
+            Some(b) if b.done_at <= now => {
+                self.busy = None;
+                Some(b.event)
+            }
+            _ => None,
         }
     }
 
@@ -228,35 +454,50 @@ impl Lp {
         self.history.push(HistoryEntry { event, forwarded_to });
     }
 
-    /// Decrement transfer-delay ticks of pending events (Fig. 6 epilogue).
-    pub fn tick_delays(&mut self) {
-        for e in &mut self.pending {
-            if e.tick > 0 {
-                e.tick -= 1;
-            }
-        }
-    }
-
     /// Fossil collection (App. B): drop history entries strictly older
     /// than the global virtual time — no rollback can ever reach them.
+    /// Engines may defer this on idle LPs and catch up on reactivation.
     pub fn fossil_collect(&mut self, gvt: SimTime) {
         self.history.retain(|h| h.event.time >= gvt);
     }
 
     /// Lowest timestamp among pending events (regardless of delay), used
-    /// in the GVT computation.
-    pub fn min_pending_time(&self) -> Option<SimTime> {
-        self.pending.iter().map(|e| e.time).min()
+    /// in the GVT computation. Amortized O(log q) (lazy stale pops).
+    pub fn min_pending_time(&mut self) -> Option<SimTime> {
+        while let Some(&Reverse(key)) = self.times.peek() {
+            if self.slot_live(key.slot, key.gen) {
+                return Some(key.time);
+            }
+            self.times.pop();
+        }
+        None
+    }
+
+    /// This LP's GVT contribution: the minimum of its busy event's
+    /// timestamp and its minimum pending timestamp.
+    pub fn gvt_contribution(&mut self) -> Option<SimTime> {
+        let busy = self.busy.as_ref().map(|b| b.event.time);
+        match (busy, self.min_pending_time()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (None, None) => None,
+        }
     }
 
     /// Is the LP completely drained?
     pub fn idle_and_empty(&self) -> bool {
-        self.busy.is_none() && self.pending.is_empty()
+        self.busy.is_none() && self.live == 0
     }
 
     /// Current queue length (the paper's dynamic node weight b_i, §6.1).
     pub fn queue_len(&self) -> usize {
-        self.pending.len()
+        self.live
+    }
+
+    /// Iterate the live pending events (arbitrary order).
+    pub fn pending_events(&self) -> impl Iterator<Item = &Event> {
+        self.slots.iter().filter_map(|s| s.ev.as_ref())
     }
 }
 
@@ -268,30 +509,51 @@ mod tests {
         2
     }
 
+    /// Collect pending events sorted for comparisons.
+    fn pending_of(lp: &Lp) -> Vec<Event> {
+        let mut v: Vec<Event> = lp.pending_events().copied().collect();
+        v.sort_by_key(|e| (e.time, kind_rank(e.kind), e.thread));
+        v
+    }
+
     #[test]
     fn receive_tracks_seen() {
         let mut lp = Lp::default();
-        lp.receive(Event::injection(5, 10, 2));
+        lp.receive(Event::injection(5, 10, 2), 0);
         assert!(lp.has_seen(5));
         assert!(!lp.has_seen(6));
+        assert_eq!(lp.queue_len(), 1);
     }
 
     #[test]
     fn rollback_annihilates_pending_twin() {
         let mut lp = Lp::default();
         let e = Event::injection(5, 10, 2);
-        lp.receive(e);
-        lp.receive(e.rollback_for(0));
-        assert!(lp.pending.is_empty(), "twin should annihilate");
+        lp.receive(e, 0);
+        lp.receive(e.rollback_for(0), 0);
+        assert_eq!(lp.queue_len(), 0, "twin should annihilate");
+        assert!(!lp.has_seen(5));
+        assert!(lp.idle_and_empty());
+    }
+
+    #[test]
+    fn annihilation_finds_delayed_twin() {
+        let mut lp = Lp::default();
+        let mut e = Event::injection(5, 10, 2);
+        e.tick = 7; // still in flight
+        lp.receive(e, 3);
+        assert_eq!(lp.queue_len(), 1);
+        lp.receive(e.rollback_for(0), 4);
+        assert_eq!(lp.queue_len(), 0);
         assert!(!lp.has_seen(5));
     }
 
     #[test]
     fn starts_lowest_timestamp_first() {
         let mut lp = Lp::default();
-        lp.receive(Event::injection(1, 30, 1));
-        lp.receive(Event::injection(2, 10, 1));
-        match lp.start_next(cost, 0) {
+        lp.receive(Event::injection(1, 30, 1), 0);
+        lp.receive(Event::injection(2, 10, 1), 0);
+        match lp.start_next(0, cost, 0) {
             StartOutcome::Started { .. } => {}
             other => panic!("expected start, got {other:?}"),
         }
@@ -300,24 +562,56 @@ mod tests {
     }
 
     #[test]
+    fn equal_time_ties_break_on_kind_then_thread() {
+        let mut lp = Lp::default();
+        lp.receive(Event::injection(9, 10, 1), 0);
+        lp.receive(Event::injection(3, 10, 1), 0);
+        // Anti-message for an unrelated thread at the same timestamp.
+        lp.receive(
+            Event { thread: 7, time: 10, kind: EventKind::Rollback, tick: 0, count: 0 },
+            0,
+        );
+        match lp.start_next(0, cost, 0) {
+            StartOutcome::RolledBack { .. } => {}
+            other => panic!("rollback should win the tie, got {other:?}"),
+        }
+        assert_eq!(lp.busy.unwrap().event.thread, 7);
+        lp.busy = None;
+        let _ = lp.start_next(0, cost, 0);
+        assert_eq!(lp.busy.unwrap().event.thread, 3, "lower thread id wins");
+    }
+
+    #[test]
     fn delayed_events_not_ready() {
         let mut lp = Lp::default();
         let mut e = Event::injection(1, 5, 1);
         e.tick = 2;
-        lp.receive(e);
-        assert!(matches!(lp.start_next(cost, 0), StartOutcome::Nothing));
-        lp.tick_delays();
-        lp.tick_delays();
-        assert!(matches!(lp.start_next(cost, 0), StartOutcome::Started { .. }));
+        lp.receive(e, 0); // ready at wall tick 2
+        assert!(matches!(lp.start_next(0, cost, 0), StartOutcome::Nothing));
+        assert!(matches!(lp.start_next(1, cost, 0), StartOutcome::Nothing));
+        assert!(matches!(lp.start_next(2, cost, 0), StartOutcome::Started { .. }));
     }
 
     #[test]
-    fn busy_ticks_down_and_completes() {
+    fn earliest_event_at_tracks_delays() {
         let mut lp = Lp::default();
-        lp.receive(Event::injection(1, 5, 0));
-        let _ = lp.start_next(cost, 0);
-        assert!(lp.tick_busy().is_none());
-        let done = lp.tick_busy().expect("completes after 2 ticks");
+        assert_eq!(lp.earliest_event_at(0), None);
+        let mut e = Event::injection(1, 5, 1);
+        e.tick = 4;
+        lp.receive(e, 10); // ready at 14
+        assert_eq!(lp.earliest_event_at(10), Some(14));
+        assert_eq!(lp.earliest_event_at(13), Some(14));
+        assert_eq!(lp.earliest_event_at(14), Some(14));
+        assert_eq!(lp.earliest_event_at(20), Some(20), "ready now");
+    }
+
+    #[test]
+    fn busy_completes_at_done_at() {
+        let mut lp = Lp::default();
+        lp.receive(Event::injection(1, 5, 0), 0);
+        let _ = lp.start_next(3, cost, 0); // cost 2 => done_at = 4
+        assert!(lp.complete_busy(3).is_none());
+        let done = lp.complete_busy(4).expect("completes at tick 4");
         assert_eq!(done.thread, 1);
         assert!(lp.busy.is_none());
     }
@@ -333,8 +627,8 @@ mod tests {
             vec![3],
         );
         // Straggler at t=10 arrives.
-        lp.receive(Event::injection(4, 10, 0));
-        match lp.start_next(cost, 1) {
+        lp.receive(Event::injection(4, 10, 0), 0);
+        match lp.start_next(0, cost, 1) {
             StartOutcome::Started { rolled_back, cancellations } => {
                 assert_eq!(rolled_back, 1);
                 assert_eq!(cancellations.len(), 1);
@@ -345,7 +639,7 @@ mod tests {
             other => panic!("expected Started, got {other:?}"),
         }
         // The rolled-back event is pending again; local time fell back.
-        assert!(lp.pending.iter().any(|e| e.thread == 9));
+        assert!(pending_of(&lp).iter().any(|e| e.thread == 9));
         assert_eq!(lp.local_time, 10);
         assert_eq!(lp.rollbacks, 1);
     }
@@ -365,14 +659,11 @@ mod tests {
             vec![],
         );
         // Anti-message for thread 1 (t=10): must undo thread 2 as well.
-        lp.receive(Event {
-            thread: 1,
-            time: 10,
-            kind: EventKind::Rollback,
-            tick: 0,
-            count: 0,
-        });
-        match lp.start_next(cost, 0) {
+        lp.receive(
+            Event { thread: 1, time: 10, kind: EventKind::Rollback, tick: 0, count: 0 },
+            0,
+        );
+        match lp.start_next(0, cost, 0) {
             StartOutcome::RolledBack { rolled_back, cancellations } => {
                 assert_eq!(rolled_back, 2);
                 // Thread 1's forward to 7 must be chased.
@@ -382,8 +673,10 @@ mod tests {
         }
         // Thread 1 is gone (unseen), thread 2 restored to pending.
         assert!(!lp.has_seen(1));
-        assert!(lp.pending.iter().any(|e| e.thread == 2));
-        assert!(!lp.pending.iter().any(|e| e.thread == 1 && e.kind != EventKind::Rollback));
+        assert!(pending_of(&lp).iter().any(|e| e.thread == 2));
+        assert!(!pending_of(&lp)
+            .iter()
+            .any(|e| e.thread == 1 && e.kind != EventKind::Rollback));
     }
 
     #[test]
@@ -403,14 +696,11 @@ mod tests {
     #[test]
     fn late_antimessage_is_harmless() {
         let mut lp = Lp::default();
-        lp.receive(Event {
-            thread: 42,
-            time: 5,
-            kind: EventKind::Rollback,
-            tick: 0,
-            count: 0,
-        });
-        match lp.start_next(cost, 0) {
+        lp.receive(
+            Event { thread: 42, time: 5, kind: EventKind::Rollback, tick: 0, count: 0 },
+            0,
+        );
+        match lp.start_next(0, cost, 0) {
             StartOutcome::RolledBack { rolled_back, cancellations } => {
                 assert_eq!(rolled_back, 0);
                 assert!(cancellations.is_empty());
@@ -423,9 +713,45 @@ mod tests {
     fn min_pending_time_and_drain() {
         let mut lp = Lp::default();
         assert!(lp.idle_and_empty());
-        lp.receive(Event::injection(1, 9, 0));
-        lp.receive(Event::injection(2, 4, 0));
+        assert_eq!(lp.min_pending_time(), None);
+        lp.receive(Event::injection(1, 9, 0), 0);
+        lp.receive(Event::injection(2, 4, 0), 0);
         assert_eq!(lp.min_pending_time(), Some(4));
         assert!(!lp.idle_and_empty());
+        // Removing the current minimum recomputes the cache.
+        let _ = lp.start_next(0, cost, 0); // starts thread 2 (t=4)
+        assert_eq!(lp.min_pending_time(), Some(9));
+        assert_eq!(lp.gvt_contribution(), Some(4), "busy event holds GVT");
+    }
+
+    #[test]
+    fn slot_reuse_does_not_resurrect_stale_heap_entries() {
+        let mut lp = Lp::default();
+        // Fill and annihilate to cycle slots through the free list.
+        for round in 0..5u64 {
+            let e = Event::injection(100 + round, 50 - round, 0);
+            lp.receive(e, 0);
+            lp.receive(e.rollback_for(0), 0);
+        }
+        assert_eq!(lp.queue_len(), 0);
+        // Now a real event: stale ready-heap entries must not shadow it.
+        lp.receive(Event::injection(7, 99, 0), 0);
+        match lp.start_next(0, cost, 0) {
+            StartOutcome::Started { .. } => {}
+            other => panic!("expected start, got {other:?}"),
+        }
+        assert_eq!(lp.busy.unwrap().event.thread, 7);
+    }
+
+    #[test]
+    fn queue_len_counts_live_events() {
+        let mut lp = Lp::default();
+        for t in 0..10u64 {
+            lp.receive(Event::injection(t + 1, t, 0), 0);
+        }
+        assert_eq!(lp.queue_len(), 10);
+        let _ = lp.start_next(0, cost, 0);
+        assert_eq!(lp.queue_len(), 9);
+        assert_eq!(lp.pending_events().count(), 9);
     }
 }

@@ -19,12 +19,19 @@
 //! weight estimators, a selectable sequential/distributed refinement
 //! backend and per-epoch reporting, fed by the scripted drifting
 //! workloads of [`scenario`].
+//!
+//! The [`engine`] hot path scales with *activity*, not graph size
+//! (active-LP worklist, indexed per-LP event queues, incremental GVT,
+//! tick fast-forward, optional parallel per-machine execution — see
+//! DESIGN.md §3); [`reference`] retains the naive O(N)-per-tick stepper
+//! that the equivalence suite proves it bit-identical to.
 
 pub mod driver;
 pub mod dynamic;
 pub mod engine;
 pub mod event;
 pub mod lp;
+pub mod reference;
 pub mod scenario;
 pub mod weights;
 pub mod workload;
@@ -35,5 +42,6 @@ pub use dynamic::{
 };
 pub use engine::{EpochCounters, SimEngine, SimOptions, SimStats};
 pub use event::{Event, EventKind, ThreadId};
+pub use reference::ReferenceEngine;
 pub use scenario::{Scenario, ScenarioKind, ScenarioOptions};
 pub use workload::{FloodWorkload, WorkloadOptions};

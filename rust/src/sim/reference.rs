@@ -1,0 +1,458 @@
+//! Naive reference stepper for the optimistic PDES engine.
+//!
+//! A deliberately simple, O(N)-per-tick implementation of exactly the
+//! semantics `engine::SimEngine` optimizes: flat `Vec<Event>` pending
+//! lists with linear scans, per-tick transfer-delay countdowns, a full
+//! GVT rescan over every LP and every undelivered injection, per-tick
+//! fossil collection on every LP — and no worklist, no fast-forward, no
+//! parallelism. It exists so the equivalence suite
+//! (`rust/tests/equivalence_engine.rs`) can prove the optimized engine
+//! (at every parallelism level) **bit-identical** on `SimStats`,
+//! `EpochCounters`, and final GVT. Keep this file boring: its only
+//! virtue is being obviously correct.
+//!
+//! Shared semantics contract (must match `SimEngine` exactly):
+//!
+//! * event selection is the canonical total order
+//!   `(time, kind-rank, thread)` with rollbacks ranked first;
+//! * a tick runs start-phase for all LPs (ascending), then
+//!   completion/fan-out for all LPs (ascending); `seen` is only mutated
+//!   in the start phase, so fan-out reads are order-independent;
+//! * messages deliver cancellations first, then forwards, each in
+//!   ascending sender order;
+//! * an event received with transfer delay `d` during tick `t` becomes
+//!   processable in tick `t + d`.
+
+use crate::graph::{Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+use crate::sim::engine::{EpochCounters, Injection, SimOptions, SimStats};
+use crate::sim::event::{Event, EventKind, SimTime, ThreadId, WallTime};
+use crate::util::stats::Trace;
+use std::collections::HashSet;
+
+#[derive(Debug, Clone)]
+struct RefHistoryEntry {
+    event: Event,
+    forwarded_to: Vec<NodeId>,
+}
+
+/// Flat-scan logical process.
+#[derive(Debug, Clone, Default)]
+struct RefLp {
+    pending: Vec<Event>,
+    history: Vec<RefHistoryEntry>,
+    seen: HashSet<ThreadId>,
+    local_time: SimTime,
+    /// `(event, remaining busy ticks)`.
+    busy: Option<(Event, WallTime)>,
+    rollbacks: u64,
+}
+
+#[inline]
+fn kind_rank(kind: EventKind) -> u8 {
+    match kind {
+        EventKind::Rollback => 0,
+        _ => 1,
+    }
+}
+
+impl RefLp {
+    fn receive(&mut self, ev: Event) {
+        if ev.kind == EventKind::Rollback {
+            if let Some(pos) = self
+                .pending
+                .iter()
+                .position(|p| p.thread == ev.thread && p.kind != EventKind::Rollback)
+            {
+                self.pending.swap_remove(pos);
+                self.seen.remove(&ev.thread);
+                return;
+            }
+        } else {
+            self.seen.insert(ev.thread);
+        }
+        self.pending.push(ev);
+    }
+
+    fn has_seen(&self, thread: ThreadId) -> bool {
+        self.seen.contains(&thread)
+    }
+
+    /// Canonical selection: lowest `(time, kind-rank, thread)` among the
+    /// ready events.
+    fn next_ready(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, e) in self.pending.iter().enumerate() {
+            if !e.ready() {
+                continue;
+            }
+            match best {
+                Some(b) => {
+                    let eb = &self.pending[b];
+                    if (e.time, kind_rank(e.kind), e.thread)
+                        < (eb.time, kind_rank(eb.kind), eb.thread)
+                    {
+                        best = Some(i);
+                    }
+                }
+                None => best = Some(i),
+            }
+        }
+        best
+    }
+
+    fn rollback_to(
+        &mut self,
+        horizon: SimTime,
+        transfer_delay: WallTime,
+    ) -> (usize, Vec<(NodeId, Event)>) {
+        let mut cancellations = Vec::new();
+        let mut restored = 0;
+        let mut kept = Vec::with_capacity(self.history.len());
+        for entry in std::mem::take(&mut self.history) {
+            if entry.event.time > horizon {
+                restored += 1;
+                for &nb in &entry.forwarded_to {
+                    cancellations.push((nb, entry.event.rollback_for(transfer_delay)));
+                }
+                self.pending.push(Event { tick: 0, ..entry.event });
+            } else {
+                kept.push(entry);
+            }
+        }
+        self.history = kept;
+        self.local_time = self.local_time.min(horizon);
+        if restored > 0 {
+            self.rollbacks += 1;
+        }
+        (restored, cancellations)
+    }
+
+    fn process_rollback(
+        &mut self,
+        ev: Event,
+        transfer_delay: WallTime,
+    ) -> (usize, Vec<(NodeId, Event)>) {
+        if let Some(pos) = self.history.iter().position(|h| h.event.thread == ev.thread) {
+            let target_time = self.history[pos].event.time;
+            let (restored, cancellations) =
+                self.rollback_to(target_time.saturating_sub(1), transfer_delay);
+            if let Some(p) = self
+                .pending
+                .iter()
+                .position(|p| p.thread == ev.thread && p.kind != EventKind::Rollback)
+            {
+                self.pending.swap_remove(p);
+            }
+            self.seen.remove(&ev.thread);
+            return (restored, cancellations);
+        }
+        (0, Vec::new())
+    }
+
+    fn tick_delays(&mut self) {
+        for e in &mut self.pending {
+            if e.tick > 0 {
+                e.tick -= 1;
+            }
+        }
+    }
+
+    fn fossil_collect(&mut self, gvt: SimTime) {
+        self.history.retain(|h| h.event.time >= gvt);
+    }
+
+    fn min_pending_time(&self) -> Option<SimTime> {
+        self.pending.iter().map(|e| e.time).min()
+    }
+
+    fn idle_and_empty(&self) -> bool {
+        self.busy.is_none() && self.pending.is_empty()
+    }
+}
+
+/// The naive reference engine. Same constructor shape and observable
+/// accessors as [`crate::sim::engine::SimEngine`].
+pub struct ReferenceEngine<'g> {
+    graph: &'g Graph,
+    machines: MachineConfig,
+    part: Partition,
+    lps: Vec<RefLp>,
+    options: SimOptions,
+    stats: SimStats,
+    gvt: SimTime,
+    injections: Vec<Injection>,
+    load_traces: Vec<Trace>,
+    epoch: EpochCounters,
+}
+
+impl<'g> ReferenceEngine<'g> {
+    pub fn new(
+        graph: &'g Graph,
+        machines: MachineConfig,
+        part: Partition,
+        options: SimOptions,
+        mut injections: Vec<Injection>,
+    ) -> Self {
+        assert_eq!(part.node_count(), graph.node_count());
+        assert_eq!(part.machine_count(), machines.count());
+        injections.sort_by_key(|inj| std::cmp::Reverse(inj.at_tick));
+        let load_traces = (0..machines.count())
+            .map(|k| Trace::new(format!("machine{k}")))
+            .collect();
+        ReferenceEngine {
+            graph,
+            lps: vec![RefLp::default(); graph.node_count()],
+            machines,
+            part,
+            options,
+            stats: SimStats::default(),
+            gvt: 0,
+            injections,
+            load_traces,
+            epoch: EpochCounters::for_graph(graph),
+        }
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn gvt(&self) -> SimTime {
+        self.gvt
+    }
+
+    pub fn load_traces(&self) -> &[Trace] {
+        &self.load_traces
+    }
+
+    pub fn epoch_counters(&self) -> &EpochCounters {
+        &self.epoch
+    }
+
+    pub fn take_epoch_counters(&mut self) -> EpochCounters {
+        let fresh = EpochCounters::for_graph(self.graph);
+        std::mem::replace(&mut self.epoch, fresh)
+    }
+
+    pub fn set_partition(&mut self, part: Partition) {
+        assert_eq!(part.node_count(), self.graph.node_count());
+        self.part = part;
+    }
+
+    fn occupancy_cost(&self, k: MachineId, kind: EventKind) -> WallTime {
+        let base = kind
+            .base_process_time(self.options.base_process_time, self.options.rollback_process_time);
+        let resident = self.part.count(k) as f64;
+        let speed_scale = self.machines.speed(k) * self.machines.count() as f64;
+        ((resident * base as f64 / speed_scale).ceil() as WallTime).max(1)
+    }
+
+    fn transfer_delay(&self, from: NodeId, to: NodeId) -> WallTime {
+        if self.part.machine_of(from) == self.part.machine_of(to) {
+            self.options.intra_machine_delay
+        } else {
+            self.options.inter_machine_delay
+        }
+    }
+
+    fn compute_gvt(&self) -> SimTime {
+        let mut gvt = SimTime::MAX;
+        for lp in &self.lps {
+            if let Some((ev, _)) = &lp.busy {
+                gvt = gvt.min(ev.time);
+            }
+            if let Some(t) = lp.min_pending_time() {
+                gvt = gvt.min(t);
+            }
+        }
+        for inj in &self.injections {
+            gvt = gvt.min(inj.event.time);
+        }
+        if gvt == SimTime::MAX {
+            self.lps.iter().map(|l| l.local_time).max().unwrap_or(0)
+        } else {
+            gvt
+        }
+    }
+
+    fn record_loads(&mut self) {
+        let k = self.machines.count();
+        let mut sums = vec![0.0f64; k];
+        for (i, lp) in self.lps.iter().enumerate() {
+            sums[self.part.machine_of(i)] += lp.pending.len() as f64;
+        }
+        for m in 0..k {
+            let cnt = self.part.count(m).max(1) as f64;
+            self.load_traces[m].push(self.stats.ticks as f64, sums[m] / cnt);
+        }
+    }
+
+    pub fn drained(&self) -> bool {
+        self.injections.is_empty() && self.lps.iter().all(|lp| lp.idle_and_empty())
+    }
+
+    /// Execute one wall-clock tick. Returns `false` once drained.
+    pub fn step(&mut self) -> bool {
+        if self.drained() {
+            return false;
+        }
+        let tick = self.stats.ticks;
+        let n = self.graph.node_count();
+
+        // Injections due this tick.
+        while let Some(inj) = self.injections.last().copied() {
+            if inj.at_tick > tick {
+                break;
+            }
+            self.injections.pop();
+            self.lps[inj.lp].receive(inj.event);
+        }
+
+        let mut outbox_cancel: Vec<(NodeId, Event)> = Vec::new();
+        let mut outbox_fwd: Vec<(NodeId, Event)> = Vec::new();
+
+        // Start phase: idle LPs select + start, ascending.
+        for i in 0..n {
+            if self.lps[i].busy.is_some() {
+                continue;
+            }
+            let Some(idx) = self.lps[i].next_ready() else { continue };
+            let machine = self.part.machine_of(i);
+            let ev = self.lps[i].pending.swap_remove(idx);
+            let (rolled_back, cancellations) = match ev.kind {
+                EventKind::Rollback => {
+                    let r = self.lps[i].process_rollback(ev, self.options.inter_machine_delay);
+                    let cost = self.occupancy_cost(machine, EventKind::Rollback).max(1);
+                    self.lps[i].busy = Some((ev, cost));
+                    r
+                }
+                _ => {
+                    let r = if ev.time < self.lps[i].local_time {
+                        self.lps[i].rollback_to(ev.time, self.options.inter_machine_delay)
+                    } else {
+                        (0, Vec::new())
+                    };
+                    self.lps[i].local_time = self.lps[i].local_time.max(ev.time);
+                    let cost = self.occupancy_cost(machine, ev.kind).max(1);
+                    self.lps[i].busy = Some((ev, cost));
+                    r
+                }
+            };
+            if rolled_back > 0 {
+                self.epoch.rollbacks_by_lp[i] += 1;
+                self.stats.rollbacks += 1;
+            }
+            self.stats.antimessages_sent += cancellations.len() as u64;
+            for (nb, ev) in cancellations {
+                let mut ev = ev;
+                ev.tick = self.transfer_delay(i, nb);
+                outbox_cancel.push((nb, ev));
+            }
+        }
+
+        // Completion phase: busy LPs tick down; completed forwarding
+        // events flood to unseen neighbors. `seen` was last written in
+        // the start phase, so these reads are order-independent.
+        for i in 0..n {
+            let mut done = None;
+            if let Some((ev, remaining)) = self.lps[i].busy.as_mut() {
+                *remaining -= 1;
+                if *remaining == 0 {
+                    done = Some(*ev);
+                }
+            }
+            if done.is_some() {
+                self.lps[i].busy = None;
+            }
+            let Some(done) = done else { continue };
+            self.stats.events_processed += 1;
+            self.epoch.events_by_lp[i] += 1;
+            if done.kind == EventKind::Rollback {
+                continue;
+            }
+            let mut forwarded_to = Vec::new();
+            if done.count > 0 {
+                let machine = self.part.machine_of(i);
+                let row = self.graph.row_offset(i);
+                for (slot, &nb) in self.graph.neighbors(i).iter().enumerate() {
+                    if self.lps[nb].has_seen(done.thread) {
+                        continue;
+                    }
+                    let delay = self.transfer_delay(i, nb);
+                    outbox_fwd.push((nb, done.forwarded(self.options.hop_latency, delay)));
+                    forwarded_to.push(nb);
+                    self.stats.events_forwarded += 1;
+                    self.epoch.forwards_by_half_edge[row + slot] += 1;
+                    if self.part.machine_of(nb) != machine {
+                        self.stats.cross_machine_forwards += 1;
+                        self.epoch.cross_forwards_by_lp[i] += 1;
+                    }
+                }
+            }
+            self.lps[i].history.push(RefHistoryEntry { event: done, forwarded_to });
+        }
+
+        // Delivery: cancellations then forwards, ascending sender order
+        // (the push order above).
+        for (nb, ev) in outbox_cancel.into_iter().chain(outbox_fwd) {
+            if ev.kind != EventKind::Rollback && self.lps[nb].has_seen(ev.thread) {
+                continue;
+            }
+            self.lps[nb].receive(ev);
+        }
+
+        // Epilogue: delays tick down, GVT advances, fossils collect.
+        for lp in &mut self.lps {
+            lp.tick_delays();
+        }
+        self.gvt = self.compute_gvt();
+        for lp in &mut self.lps {
+            lp.fossil_collect(self.gvt);
+        }
+
+        self.stats.ticks += 1;
+        self.epoch.ticks += 1;
+        if self.options.trace_every > 0 && tick % self.options.trace_every == 0 {
+            self.record_loads();
+        }
+        true
+    }
+
+    /// Run until drained or `max_ticks`. Returns final stats.
+    pub fn run_to_completion(&mut self) -> SimStats {
+        while self.stats.ticks < self.options.max_ticks {
+            if !self.step() {
+                break;
+            }
+        }
+        if !self.drained() {
+            self.stats.truncated = true;
+        }
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn reference_drains_a_flood() {
+        let mut b = GraphBuilder::with_nodes(5);
+        for i in 0..4 {
+            b.add_edge(i, i + 1, 1.0);
+        }
+        let g = b.build();
+        let machines = MachineConfig::homogeneous(2);
+        let part = Partition::from_assignment(&g, 2, vec![0, 0, 0, 1, 1]);
+        let inj = vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 4) }];
+        let mut e = ReferenceEngine::new(&g, machines, part, SimOptions::default(), inj);
+        let stats = e.run_to_completion();
+        assert!(!stats.truncated);
+        assert_eq!(stats.events_processed, 5);
+        assert_eq!(stats.events_forwarded, 4);
+        assert!(e.drained());
+    }
+}

@@ -42,7 +42,7 @@ pub fn measure(engine: &SimEngine) -> MeasuredWeights {
     for (u, v, _) in g.edges() {
         let mut c: f64 = 0.0;
         // Events in u that will generate events in v:
-        for ev in &lps[u].pending {
+        for ev in lps[u].pending_events() {
             if ev.kind == EventKind::ProcessForward
                 && ev.count > 0
                 && !lps[v].has_seen(ev.thread)
@@ -51,7 +51,7 @@ pub fn measure(engine: &SimEngine) -> MeasuredWeights {
             }
         }
         // ... and symmetrically.
-        for ev in &lps[v].pending {
+        for ev in lps[v].pending_events() {
             if ev.kind == EventKind::ProcessForward
                 && ev.count > 0
                 && !lps[u].has_seen(ev.thread)

@@ -226,6 +226,136 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Minimal JSON value for the machine-readable bench reports
+/// (`results/BENCH_sim.json` & co). No serde offline, so this is the
+/// whole serializer: numbers, strings, bools, arrays, objects.
+#[derive(Debug, Clone)]
+pub enum JsonVal {
+    Num(f64),
+    Int(u64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<JsonVal>),
+    Obj(Vec<(String, JsonVal)>),
+}
+
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+impl JsonVal {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            JsonVal::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            JsonVal::Int(x) => out.push_str(&format!("{x}")),
+            JsonVal::Str(s) => {
+                out.push('"');
+                escape_json(s, out);
+                out.push('"');
+            }
+            JsonVal::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonVal::Arr(xs) => {
+                out.push('[');
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.render_into(out);
+                }
+                out.push(']');
+            }
+            JsonVal::Obj(kvs) => {
+                out.push('{');
+                for (i, (k, v)) in kvs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    escape_json(k, out);
+                    out.push_str("\":");
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Merge one named group into a line-oriented JSON report file so
+/// independent bench binaries can contribute to a single document
+/// (e.g. `bench_simulator` and `bench_dynamic` both filling
+/// `results/BENCH_sim.json`). Controlled format — `{`, one
+/// `"group": {...}` per line, `}` — rewritten wholesale on every call;
+/// an existing entry for `group` is replaced.
+pub fn write_json_group(
+    path: impl AsRef<std::path::Path>,
+    group: &str,
+    value: &JsonVal,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    // Existing groups, in file order, minus the one being replaced.
+    let mut entries: Vec<(String, String)> = Vec::new();
+    if let Ok(existing) = std::fs::read_to_string(path) {
+        for line in existing.lines() {
+            let line = line.trim().trim_end_matches(',');
+            if line.is_empty() || line == "{" || line == "}" {
+                continue;
+            }
+            // `"name": {...}` — name ends at the closing quote.
+            let Some(rest) = line.strip_prefix('"') else { continue };
+            let Some(q) = rest.find('"') else { continue };
+            let name = rest[..q].to_string();
+            if name != group {
+                entries.push((name, line.to_string()));
+            }
+        }
+    }
+    let mut new_line = String::from("\"");
+    escape_json(group, &mut new_line);
+    new_line.push_str("\": ");
+    value.render_into(&mut new_line);
+    entries.push((group.to_string(), new_line));
+
+    let mut out = String::from("{\n");
+    for (i, (_, line)) in entries.iter().enumerate() {
+        out.push_str(line);
+        if i + 1 < entries.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("}\n");
+    std::fs::write(path, out)?;
+    Ok(path.to_path_buf())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -249,6 +379,43 @@ mod tests {
         let mut b = Bencher::new("selftest2").with_config(BenchConfig::coarse());
         let r = b.bench("slowish", || std::thread::sleep(Duration::from_millis(1)));
         assert!(r.total_iters <= 3);
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let v = JsonVal::Obj(vec![
+            ("a".into(), JsonVal::Int(3)),
+            ("b".into(), JsonVal::Num(1.5)),
+            ("s".into(), JsonVal::Str("x\"y\\z".into())),
+            ("nan".into(), JsonVal::Num(f64::NAN)),
+            ("arr".into(), JsonVal::Arr(vec![JsonVal::Bool(true), JsonVal::Int(0)])),
+        ]);
+        assert_eq!(
+            v.render(),
+            "{\"a\":3,\"b\":1.5,\"s\":\"x\\\"y\\\\z\",\"nan\":null,\"arr\":[true,0]}"
+        );
+    }
+
+    #[test]
+    fn json_group_file_merges_groups() {
+        let dir = std::env::temp_dir().join(format!("gtip_bench_json_{}", std::process::id()));
+        let path = dir.join("BENCH_test.json");
+        let _ = std::fs::remove_file(&path);
+        write_json_group(&path, "alpha", &JsonVal::Obj(vec![("x".into(), JsonVal::Int(1))]))
+            .unwrap();
+        write_json_group(&path, "beta", &JsonVal::Obj(vec![("y".into(), JsonVal::Int(2))]))
+            .unwrap();
+        // Replacing an existing group keeps the other.
+        write_json_group(&path, "alpha", &JsonVal::Obj(vec![("x".into(), JsonVal::Int(9))]))
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\n"));
+        assert!(text.trim_end().ends_with('}'));
+        assert!(text.contains("\"alpha\": {\"x\":9}"), "bad merge: {text}");
+        assert!(text.contains("\"beta\": {\"y\":2}"), "lost group: {text}");
+        assert_eq!(text.matches("alpha").count(), 1);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
     }
 
     #[test]

@@ -1,0 +1,269 @@
+//! Engine equivalence suite: the optimized `SimEngine` (active-LP
+//! worklist, indexed event queues, incremental GVT, tick fast-forward,
+//! parallel per-machine execution) must be **bit-identical** to the
+//! retained naive `ReferenceEngine` — same `SimStats`, same
+//! `EpochCounters`, same final GVT — across every scenario kind, at
+//! every parallelism level, with and without mid-run repartitioning.
+
+use gtip::partition::{MachineConfig, Partition};
+use gtip::sim::engine::{EpochCounters, Injection, SimEngine, SimOptions, SimStats};
+use gtip::sim::event::SimTime;
+use gtip::sim::reference::ReferenceEngine;
+use gtip::sim::scenario::ScenarioKind;
+use gtip::util::rng::Pcg32;
+use gtip::util::testkit::{BuiltFixture, ScenarioFixture};
+
+/// Outcome triple the suite compares.
+#[derive(Debug, PartialEq)]
+struct Outcome {
+    stats: SimStats,
+    gvt: SimTime,
+    epoch: EpochCounters,
+}
+
+fn run_reference(fixture: &BuiltFixture, options: &SimOptions) -> Outcome {
+    let mut e = ReferenceEngine::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        options.clone(),
+        fixture.scenario.injections.clone(),
+    );
+    let stats = e.run_to_completion();
+    Outcome { stats, gvt: e.gvt(), epoch: e.take_epoch_counters() }
+}
+
+fn run_optimized(fixture: &BuiltFixture, options: &SimOptions) -> Outcome {
+    let mut e = SimEngine::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        options.clone(),
+        fixture.scenario.injections.clone(),
+    );
+    let stats = e.run_to_completion();
+    Outcome { stats, gvt: e.gvt(), epoch: e.take_epoch_counters() }
+}
+
+fn options_with(parallelism: usize) -> SimOptions {
+    SimOptions {
+        max_ticks: 500_000,
+        parallelism,
+        // Force the parallel path even on small fixtures.
+        parallel_min_active: 0,
+        ..Default::default()
+    }
+}
+
+/// Optimized engine == naive reference on every scenario kind, and the
+/// parallel paths (2 and 4 workers) == sequential, bit for bit.
+#[test]
+fn optimized_matches_reference_on_all_scenarios() {
+    for kind in ScenarioKind::ALL {
+        for seed in [2011u64, 7] {
+            let fixture = ScenarioFixture::new(kind, seed).build();
+            let reference = run_reference(&fixture, &options_with(1));
+            assert!(!reference.stats.truncated, "{kind:?}/{seed}: reference truncated");
+            for parallelism in [1usize, 2, 4] {
+                let optimized = run_optimized(&fixture, &options_with(parallelism));
+                assert_eq!(
+                    reference, optimized,
+                    "{kind:?} seed {seed} parallelism {parallelism} diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Equivalence holds with load-trace recording on (trace points gate
+/// the fast-forward) — including the traces themselves.
+#[test]
+fn equivalence_with_traces_enabled() {
+    let fixture = ScenarioFixture::new(ScenarioKind::FlashCrowd, 42).build();
+    let options = SimOptions { trace_every: 37, ..options_with(2) };
+
+    let mut reference = ReferenceEngine::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        options.clone(),
+        fixture.scenario.injections.clone(),
+    );
+    let ref_stats = reference.run_to_completion();
+
+    let mut optimized = SimEngine::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        options,
+        fixture.scenario.injections.clone(),
+    );
+    let opt_stats = optimized.run_to_completion();
+
+    assert_eq!(ref_stats, opt_stats);
+    assert_eq!(reference.gvt(), optimized.gvt());
+    assert_eq!(reference.load_traces().len(), optimized.load_traces().len());
+    for (a, b) in reference.load_traces().iter().zip(optimized.load_traces()) {
+        assert_eq!(a.len(), b.len(), "trace lengths diverged");
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.0, pb.0, "trace x diverged");
+            assert!((pa.1 - pb.1).abs() < 1e-12, "trace y diverged: {} vs {}", pa.1, pb.1);
+        }
+    }
+}
+
+/// Equivalence under the closed loop's set_partition hook: both engines
+/// get the same repartition schedule applied at the same boundaries
+/// (`step_bounded` keeps the optimized engine's jumps inside them).
+#[test]
+fn equivalence_under_mid_run_repartitioning() {
+    let fixture = ScenarioFixture::new(ScenarioKind::HotspotShift, 5).build();
+    let n = fixture.graph.node_count();
+    let k = fixture.machines.count();
+    let period = 150u64;
+    let assignments: Vec<Vec<usize>> = (0..4)
+        .map(|r| (0..n).map(|i| (i + r) % k).collect())
+        .collect();
+
+    let run_ref = || {
+        let mut e = ReferenceEngine::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            options_with(1),
+            fixture.scenario.injections.clone(),
+        );
+        let mut swaps = 0usize;
+        loop {
+            if !e.step() {
+                break;
+            }
+            let tick = e.stats().ticks;
+            if tick % period == 0 && swaps < assignments.len() {
+                e.set_partition(Partition::from_assignment(
+                    &fixture.graph,
+                    k,
+                    assignments[swaps].clone(),
+                ));
+                swaps += 1;
+            }
+            if tick > 400_000 {
+                panic!("runaway");
+            }
+        }
+        (e.stats().clone(), e.gvt(), e.take_epoch_counters())
+    };
+
+    let run_opt = |parallelism: usize| {
+        let mut e = SimEngine::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            options_with(parallelism),
+            fixture.scenario.injections.clone(),
+        );
+        let mut swaps = 0usize;
+        loop {
+            let tick = e.stats().ticks;
+            let boundary = (tick / period + 1) * period;
+            if !e.step_bounded(boundary) {
+                break;
+            }
+            let tick = e.stats().ticks;
+            if tick % period == 0 && swaps < assignments.len() {
+                e.set_partition(Partition::from_assignment(
+                    &fixture.graph,
+                    k,
+                    assignments[swaps].clone(),
+                ));
+                swaps += 1;
+            }
+            if tick > 400_000 {
+                panic!("runaway");
+            }
+        }
+        (e.stats().clone(), e.gvt(), e.take_epoch_counters())
+    };
+
+    let reference = run_ref();
+    for parallelism in [1usize, 2, 4] {
+        let optimized = run_opt(parallelism);
+        assert_eq!(reference.0, optimized.0, "stats diverged at parallelism {parallelism}");
+        assert_eq!(reference.1, optimized.1, "gvt diverged at parallelism {parallelism}");
+        assert_eq!(reference.2, optimized.2, "epoch diverged at parallelism {parallelism}");
+    }
+}
+
+/// Equivalence on the prop_invariants-style randomized fixtures: random
+/// graphs, machine counts, thread loads and horizons.
+#[test]
+fn equivalence_on_randomized_fixtures() {
+    let mut rng = Pcg32::new(0xE0_15);
+    for case in 0..6u64 {
+        let kind = ScenarioKind::ALL[(case % 4) as usize];
+        let seed = rng.next_u64();
+        let fixture = ScenarioFixture::new(kind, seed)
+            .nodes(40 + (case as usize) * 17)
+            .machines(2 + (case as usize) % 3)
+            .threads(24 + (case as usize) * 7)
+            .horizon(400 + case * 130)
+            .build();
+        let reference = run_reference(&fixture, &options_with(1));
+        for parallelism in [1usize, 3] {
+            let optimized = run_optimized(&fixture, &options_with(parallelism));
+            assert_eq!(
+                reference, optimized,
+                "case {case} ({kind:?}, seed {seed:#x}) diverged at parallelism {parallelism}"
+            );
+        }
+    }
+}
+
+/// Fast-forward must not change outcomes on sparse workloads with huge
+/// idle gaps (the case it optimizes hardest).
+#[test]
+fn equivalence_on_sparse_injection_schedules() {
+    let mut rng = Pcg32::new(99);
+    let graph = gtip::graph::generators::preferential_attachment(60, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(3);
+    let part = Partition::from_assignment(&graph, 3, (0..60).map(|i| i % 3).collect());
+    let injections: Vec<Injection> = (0..10u64)
+        .map(|t| Injection {
+            at_tick: t * 5_000,
+            lp: (t as usize * 13) % 60,
+            event: gtip::sim::event::Event::injection(t + 1, t * 400, 3),
+        })
+        .collect();
+    let options = SimOptions { max_ticks: 500_000, ..Default::default() };
+
+    let mut reference = ReferenceEngine::new(
+        &graph,
+        machines.clone(),
+        part.clone(),
+        options.clone(),
+        injections.clone(),
+    );
+    let ref_stats = reference.run_to_completion();
+    assert!(!ref_stats.truncated);
+
+    let mut optimized = SimEngine::new(&graph, machines, part, options, injections);
+    let mut steps = 0u64;
+    while optimized.stats().ticks < 500_000 {
+        if !optimized.step() {
+            break;
+        }
+        steps += 1;
+    }
+    let mut opt_stats = optimized.stats().clone();
+    if !optimized.drained() {
+        opt_stats.truncated = true;
+    }
+    assert_eq!(ref_stats, opt_stats);
+    assert_eq!(reference.gvt(), optimized.gvt());
+    assert_eq!(reference.take_epoch_counters(), optimized.take_epoch_counters());
+    assert!(
+        steps < ref_stats.ticks / 10,
+        "fast-forward barely engaged: {steps} steps for {} ticks",
+        ref_stats.ticks
+    );
+}
