@@ -1,6 +1,8 @@
 //! Closed-loop rebalancing benchmarks: wall-clock cost of the
-//! measure→estimate→refine→migrate epoch machinery, and the headline
-//! static-vs-rebalanced tick comparison per scenario.
+//! measure→estimate→refine→migrate epoch machinery, the headline
+//! static-vs-rebalanced tick comparison per scenario, and the promoted
+//! worst-case schedules from the committed fuzz corpus
+//! (`results/fuzz_corpus/seed-*.json`).
 //!
 //! The tick counts printed alongside the timings are the *simulated*
 //! wall ticks (the paper's metric); the bench timings are host time.
@@ -9,10 +11,11 @@ use gtip::sim::dynamic::{
     compare_frozen_vs_rebalanced, DynamicDriver, DynamicOptions, WeightEstimator,
 };
 use gtip::sim::engine::SimOptions;
+use gtip::sim::fuzz::{self, EvalOptions};
 use gtip::sim::scenario::ScenarioKind;
 use gtip::util::bench::{black_box, write_json_group, BenchConfig, Bencher, JsonVal};
 use gtip::util::rng::Pcg32;
-use gtip::util::testkit::ScenarioFixture;
+use gtip::util::testkit::{committed_fuzz_corpus, ScenarioFixture};
 
 fn main() {
     let smoke = std::env::var("GTIP_BENCH_SMOKE")
@@ -135,6 +138,44 @@ fn main() {
         });
     }
 
+    // Promoted worst cases: replay the committed fuzz corpus and report
+    // each schedule's frozen-vs-rebalanced gap next to the hand-written
+    // scenarios (the adversarial bench suite).
+    let mut fuzz_json: Vec<(String, JsonVal)> = vec![("smoke".into(), JsonVal::Bool(smoke))];
+    let corpus = committed_fuzz_corpus();
+    if corpus.is_empty() {
+        println!("fuzz corpus: empty (run `gtip fuzz` to grow it)");
+    } else {
+        println!("fuzz-corpus worst-case schedules (committed seed-*.json):");
+    }
+    // Oracle equality is asserted by the test suites; the bench only
+    // measures, so skip the reference run here.
+    let eval = EvalOptions { oracle: false, ..Default::default() };
+    for case in &corpus {
+        let t0 = std::time::Instant::now();
+        match fuzz::evaluate(&case.fixture, &case.schedule, &eval) {
+            Ok(obj) => {
+                let host = t0.elapsed().as_secs_f64();
+                println!(
+                    "  {:<32} frozen {:>7} | rebalanced {:>7} | gap {:.2}x | rollbacks {:>6}",
+                    case.name, obj.frozen_ticks, obj.rebalanced_ticks, obj.gap, obj.rollbacks,
+                );
+                fuzz_json.push((
+                    case.name.clone(),
+                    JsonVal::Obj(vec![
+                        ("frozen_ticks".into(), JsonVal::Int(obj.frozen_ticks)),
+                        ("rebalanced_ticks".into(), JsonVal::Int(obj.rebalanced_ticks)),
+                        ("tick_gap".into(), JsonVal::Num(obj.gap)),
+                        ("rollbacks".into(), JsonVal::Int(obj.rollbacks)),
+                        ("transfers".into(), JsonVal::Int(obj.transfers)),
+                        ("host_seconds".into(), JsonVal::Num(host)),
+                    ]),
+                ));
+            }
+            Err(e) => eprintln!("  {}: evaluation failed: {e}", case.name),
+        }
+    }
+
     let _ = b.write_csv();
     match write_json_group(
         "results/BENCH_sim.json",
@@ -142,6 +183,10 @@ fn main() {
         &JsonVal::Obj(scenario_json),
     ) {
         Ok(path) => println!("(wrote {})", path.display()),
+        Err(e) => eprintln!("(BENCH_sim.json write failed: {e})"),
+    }
+    match write_json_group("results/BENCH_sim.json", "fuzz_worst", &JsonVal::Obj(fuzz_json)) {
+        Ok(path) => println!("(merged fuzz_worst into {})", path.display()),
         Err(e) => eprintln!("(BENCH_sim.json write failed: {e})"),
     }
 }

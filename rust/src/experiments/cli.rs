@@ -10,6 +10,9 @@
 //!                 [--epoch-ticks E] [--estimator instant|ewma|hysteresis]
 //!                 [--backend sequential|distributed] [--framework A|B]
 //!                 [--threads N] [--horizon T] [--seed S] [--compare]
+//! gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
+//!                 [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
+//!                 [--corpus-dir DIR] [--replay FILE] [--no-shrink] [--no-oracle]
 //! gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
 //! gtip artifacts  [--dir DIR]         # verify PJRT artifacts vs native
 //! gtip help
@@ -34,7 +37,10 @@ use crate::sim::dynamic::{
     WeightEstimator,
 };
 use crate::sim::engine::SimOptions;
-use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions};
+use crate::sim::fuzz::{
+    run_fuzz, save_corpus, EvalOptions, FuzzCase, FuzzFixture, FuzzOptions,
+};
+use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions, MAX_SCHEDULE_THREADS};
 use crate::sim::workload::{FloodWorkload, WorkloadOptions};
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
@@ -56,6 +62,9 @@ USAGE:
                   [--backend sequential|distributed] [--framework A|B]
                   [--threads N] [--horizon T] [--ticks-per-transfer C]
                   [--seed S] [--compare] [--parallelism P]
+  gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
+                  [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
+                  [--corpus-dir DIR] [--replay FILE] [--no-shrink] [--no-oracle]
   gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
   gtip artifacts  [--dir DIR]
   gtip help
@@ -84,6 +93,7 @@ fn run(args: &Args) -> CliResult {
         Some("partition") => cmd_partition(args),
         Some("simulate") => cmd_simulate(args),
         Some("dynamic") => cmd_dynamic(args),
+        Some("fuzz") => cmd_fuzz(args),
         Some("experiment") => cmd_experiment(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("help") | None => {
@@ -247,6 +257,9 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     if threads == 0 {
         return Err("--threads must be >= 1".into());
     }
+    if threads as u64 > MAX_SCHEDULE_THREADS {
+        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
+    }
     if horizon == 0 {
         return Err("--horizon must be >= 1".into());
     }
@@ -334,6 +347,147 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     Ok(())
 }
 
+/// Adversarial scenario fuzzing (`sim::fuzz`): search the drift-schedule
+/// genome space for worst-case workloads, shrink the winners, and
+/// persist them as a replayable corpus — or replay one corpus file.
+fn cmd_fuzz(args: &Args) -> CliResult {
+    let budget = args.opt_or::<usize>("budget", 200)?;
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let nodes = args.opt_or::<usize>("nodes", 96)?;
+    let k = args.opt_or::<usize>("k", 4)?;
+    let horizon = args.opt_or::<u64>("horizon", 1_200)?;
+    let threads = args.opt_or::<u32>("threads", 120)?;
+    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 150)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let top_k = args.opt_or::<usize>("top", 3)?;
+    let corpus_dir = args.str_or("corpus-dir", "results/fuzz_corpus").to_string();
+    if nodes == 0 || k == 0 || horizon == 0 || threads == 0 {
+        return Err("--nodes, --k, --horizon and --threads must be >= 1".into());
+    }
+    if threads as u64 > MAX_SCHEDULE_THREADS {
+        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
+    }
+    let fixture = FuzzFixture { graph_seed: seed, nodes, machines: k };
+    let eval = EvalOptions {
+        epoch_ticks,
+        framework,
+        oracle: !args.flag("no-oracle"),
+        ..Default::default()
+    };
+
+    if let Some(path) = args.opt_str("replay") {
+        let case = FuzzCase::load(path)?;
+        println!(
+            "replaying {:?}: {} genes, {} threads over {} ticks on fixture (seed {}, {} LPs, K={})",
+            case.name,
+            case.schedule.genes.len(),
+            case.schedule.total_threads(),
+            case.schedule.horizon_ticks,
+            case.fixture.graph_seed,
+            case.fixture.nodes,
+            case.fixture.machines,
+        );
+        // Replay under the settings the stored objectives were measured
+        // with; CLI eval flags apply only to files that carry none.
+        let eval = match &case.eval {
+            Some(stored) => {
+                println!(
+                    "using stored eval settings: epoch {} ticks, framework {}, oracle {}",
+                    stored.epoch_ticks, stored.framework, stored.oracle
+                );
+                stored.clone()
+            }
+            None => eval,
+        };
+        let obj = crate::sim::fuzz::evaluate(&case.fixture, &case.schedule, &eval)?;
+        println!(
+            "frozen {} ticks | rebalanced {} ticks | gap {:.3}x | rollbacks {} | transfers {} | refinements {}",
+            obj.frozen_ticks,
+            obj.rebalanced_ticks,
+            obj.gap,
+            obj.rollbacks,
+            obj.transfers,
+            obj.refinements,
+        );
+        println!(
+            "descent violations: {} | oracle divergence: {} | truncated: frozen {} / rebalanced {}",
+            obj.descent_violations,
+            obj.oracle_divergence,
+            obj.frozen_truncated,
+            obj.rebalanced_truncated,
+        );
+        if let Some(stored) = &case.objectives {
+            if obj.bit_eq(stored) {
+                println!("replay matches the stored objectives byte-for-byte");
+            } else {
+                return Err(format!(
+                    "replay DIVERGED from stored objectives:\n  stored   {stored:?}\n  measured {obj:?}"
+                )
+                .into());
+            }
+        }
+        if obj.is_bug() {
+            return Err("replayed schedule exposes a bug-class finding (see above)".into());
+        }
+        return Ok(());
+    }
+
+    let options = FuzzOptions {
+        budget,
+        seed,
+        fixture,
+        horizon_ticks: horizon,
+        thread_budget: threads,
+        hop_limit: 4,
+        eval,
+        top_k,
+        shrink: !args.flag("no-shrink"),
+        verbose: true,
+    };
+    println!(
+        "fuzzing drift schedules: budget {budget}, fixture (seed {seed}, {nodes} LPs, K={k}), \
+         horizon {horizon}, {threads} threads, epoch {epoch_ticks}, framework {framework}"
+    );
+    let outcome = run_fuzz(&options)?;
+    println!(
+        "campaign done: {} evaluations, hand-written best gap {:.3}x",
+        outcome.evaluations, outcome.handwritten_best_gap
+    );
+    for f in &outcome.found {
+        println!(
+            "  #{} {}: gap {:.3}x, score {:.3}, {} genes (from {}), {} threads{}",
+            f.rank,
+            f.name,
+            f.objectives.gap,
+            f.objectives.score(),
+            f.schedule.genes.len(),
+            f.genes_before_shrink,
+            f.schedule.total_threads(),
+            if f.objectives.is_bug() { "  [BUG-CLASS FINDING]" } else { "" },
+        );
+    }
+    let written =
+        save_corpus(std::path::Path::new(&corpus_dir), &outcome, &options.fixture, &options.eval)?;
+    for p in &written {
+        println!("(wrote {})", p.display());
+    }
+    if outcome.beat_handwritten() {
+        println!(
+            "worst found schedule beats every hand-written scenario \
+             ({:.3}x > {:.3}x)",
+            outcome.found.first().map(|f| f.objectives.gap).unwrap_or(0.0),
+            outcome.handwritten_best_gap
+        );
+    } else {
+        println!(
+            "note: no found schedule beat the hand-written best gap {:.3}x \
+             (raise --budget to search longer)",
+            outcome.handwritten_best_gap
+        );
+    }
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> CliResult {
     let which = args
         .positionals
@@ -408,7 +562,7 @@ fn cmd_artifacts(args: &Args) -> CliResult {
 #[cfg(not(feature = "pjrt"))]
 fn cmd_artifacts(_args: &Args) -> CliResult {
     Err("the `artifacts` subcommand requires building with `--features pjrt` \
-         (vendored xla crate; see DESIGN.md §6)"
+         (vendored xla crate; see DESIGN.md §7)"
         .into())
 }
 
@@ -514,8 +668,55 @@ mod tests {
     #[test]
     fn dynamic_rejects_degenerate_workloads() {
         assert!(run(&parse(&["dynamic", "--threads", "0"])).is_err());
+        assert!(run(&parse(&["dynamic", "--threads", "100001"])).is_err());
         assert!(run(&parse(&["dynamic", "--horizon", "0"])).is_err());
         assert!(run(&parse(&["dynamic", "--nodes", "0"])).is_err());
+    }
+
+    #[test]
+    fn fuzz_tiny_campaign_then_replay_round_trips() {
+        let dir = std::env::temp_dir().join(format!("gtip_cli_fuzz_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().to_string();
+        run(&parse(&[
+            "fuzz",
+            "--budget",
+            "5",
+            "--nodes",
+            "40",
+            "--k",
+            "3",
+            "--threads",
+            "24",
+            "--horizon",
+            "400",
+            "--top",
+            "1",
+            "--no-shrink",
+            "--no-oracle",
+            "--seed",
+            "9",
+            "--corpus-dir",
+            &dir_s,
+        ]))
+        .unwrap();
+        // Replay the schedule the campaign just persisted; the stored
+        // objectives must reproduce byte-for-byte.
+        let entry = std::fs::read_dir(&dir)
+            .expect("campaign wrote no corpus dir")
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| p.extension().is_some_and(|x| x == "json"))
+            .expect("campaign wrote no corpus file");
+        run(&parse(&["fuzz", "--replay", entry.to_str().unwrap(), "--no-oracle"])).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fuzz_rejects_degenerate_options() {
+        assert!(run(&parse(&["fuzz", "--budget", "0"])).is_err());
+        assert!(run(&parse(&["fuzz", "--nodes", "0"])).is_err());
+        assert!(run(&parse(&["fuzz", "--replay", "/nonexistent/corpus.json"])).is_err());
     }
 
     #[test]

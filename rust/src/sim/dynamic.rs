@@ -311,6 +311,20 @@ impl DynamicReport {
         self.epochs.iter().filter(|e| e.refine.is_some()).count()
     }
 
+    /// Refinement epochs whose potential *rose* — Thm 4.1 says this is
+    /// impossible, so any non-zero count is a bug. `sim::fuzz` treats
+    /// violations as first-class findings and the regression suite
+    /// asserts the committed corpus keeps this at zero.
+    pub fn descent_violations(&self) -> usize {
+        self.epochs
+            .iter()
+            .filter_map(|e| e.refine.as_ref())
+            .filter(|r| {
+                r.potential_after > r.potential_before + 1e-9 * (1.0 + r.potential_before.abs())
+            })
+            .count()
+    }
+
     /// Render the per-epoch stream as a table.
     pub fn epoch_table(&self, title: &str) -> Table {
         let mut t = Table::new(

@@ -1,0 +1,1205 @@
+//! Adversarial scenario fuzzing: search the [`DriftSchedule`] genome
+//! space for worst-case drift workloads, shrink what is found, and
+//! persist it as a replayable corpus.
+//!
+//! The paper's value proposition is that iterative game-theoretic
+//! repartitioning tracks *drifting* load (§6); the hand-written
+//! `sim::scenario` library only samples friendly drift. This module
+//! closes the ROADMAP item "generate adversarial drift schedules that
+//! maximize the frozen-vs-rebalanced gap":
+//!
+//! * **Evaluation** ([`evaluate`]): compile a candidate genome on a
+//!   deterministic [`FuzzFixture`], run the closed loop's
+//!   frozen-vs-rebalanced comparison (`sim::dynamic`), and record
+//!   [`Objectives`] — the frozen/rebalanced tick gap, rollback volume,
+//!   migration churn, potential-descent violations (Thm 4.1 says there
+//!   must be none), and a **differential oracle**: the optimized engine
+//!   must stay bit-identical to `sim::reference` on the schedule.
+//!   Divergence or a descent violation dominates the score — those are
+//!   engine bugs, the most valuable find of all.
+//! * **Search** ([`run_fuzz`]): seeded hill-climbing with mutation and
+//!   crossover over a population initialized from the four hand-written
+//!   scenario genomes plus an [`epoch_locked_relocation`] template
+//!   (maximally concentrated hot spot relocating every refinement
+//!   epoch). Fully deterministic per seed.
+//! * **Shrinking** ([`shrink`]): delta-debug the winning genome —
+//!   remove genes, halve thread counts and windows — to a minimal
+//!   schedule that still preserves the score (or the bug).
+//! * **Corpus** ([`FuzzCase`], [`load_corpus`], [`save_corpus`]):
+//!   schedules persist as JSON under `results/fuzz_corpus/`; committed
+//!   `seed-*.json` entries are replayed by `rust/tests/
+//!   fuzz_regressions.rs` (descent + byte-identical scores) and
+//!   `rust/tests/equivalence_engine.rs` (reference-engine equality at
+//!   parallelism 1/2/4), and promoted into `bench_dynamic`'s
+//!   `results/BENCH_sim.json` report.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::game::cost::Framework;
+use crate::graph::generators::preferential_attachment;
+use crate::graph::Graph;
+use crate::partition::initial::grow_partition;
+use crate::partition::{MachineConfig, Partition};
+use crate::sim::dynamic::{compare_frozen_vs_rebalanced, DynamicOptions, WeightEstimator};
+use crate::sim::engine::{Injection, SimEngine, SimOptions};
+use crate::sim::reference::ReferenceEngine;
+use crate::sim::scenario::{
+    far_apart_centers, phase_windows, DriftGene, DriftSchedule, GeneKind, ScenarioKind,
+    ScenarioOptions, MAX_GENES,
+};
+use crate::util::bench::{parse_json, JsonVal};
+use crate::util::rng::Pcg32;
+
+/// Corpus file format tag.
+pub const CORPUS_FORMAT: &str = "gtip-fuzz-case-v1";
+
+/// The deterministic evaluation substrate a schedule is scored on: one
+/// seed pins the graph, the machine pool, and the App.-A initial
+/// partition (the genome itself carries its own injection seed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FuzzFixture {
+    pub graph_seed: u64,
+    pub nodes: usize,
+    pub machines: usize,
+}
+
+impl Default for FuzzFixture {
+    fn default() -> Self {
+        FuzzFixture { graph_seed: 2011, nodes: 96, machines: 4 }
+    }
+}
+
+impl FuzzFixture {
+    /// Materialize the fixture. Equal fixtures produce identical
+    /// graphs, machine pools, and initial partitions.
+    pub fn build(&self) -> (Graph, MachineConfig, Partition) {
+        assert!(self.nodes > 0 && self.machines > 0, "degenerate fuzz fixture");
+        let mut rng = Pcg32::new(self.graph_seed);
+        let graph = preferential_attachment(self.nodes, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(self.machines);
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        (graph, machines, initial)
+    }
+
+    pub fn to_json(&self) -> JsonVal {
+        JsonVal::Obj(vec![
+            ("graph_seed".into(), JsonVal::Int(self.graph_seed)),
+            ("nodes".into(), JsonVal::Int(self.nodes as u64)),
+            ("machines".into(), JsonVal::Int(self.machines as u64)),
+        ])
+    }
+
+    pub fn from_json(v: &JsonVal) -> Result<FuzzFixture, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| format!("fixture: missing integer field {k:?}"))
+        };
+        Ok(FuzzFixture {
+            graph_seed: field("graph_seed")?,
+            nodes: field("nodes")? as usize,
+            machines: field("machines")? as usize,
+        })
+    }
+}
+
+/// How a candidate schedule is evaluated.
+#[derive(Debug, Clone)]
+pub struct EvalOptions {
+    /// Simulation window per refinement epoch of the rebalanced arm.
+    pub epoch_ticks: u64,
+    pub framework: Framework,
+    /// Safety cap per arm (a truncated rebalanced arm scores as a
+    /// finding — the workload outran the balancer).
+    pub max_ticks: u64,
+    /// Cross-check the schedule against `sim::reference` (bit-equality
+    /// of `SimStats`, `EpochCounters`, and final GVT).
+    pub oracle: bool,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions {
+            epoch_ticks: 150,
+            framework: Framework::A,
+            max_ticks: 400_000,
+            oracle: true,
+        }
+    }
+}
+
+impl EvalOptions {
+    pub fn to_json(&self) -> JsonVal {
+        JsonVal::Obj(vec![
+            ("epoch_ticks".into(), JsonVal::Int(self.epoch_ticks)),
+            ("framework".into(), JsonVal::Str(format!("{}", self.framework))),
+            ("max_ticks".into(), JsonVal::Int(self.max_ticks)),
+            ("oracle".into(), JsonVal::Bool(self.oracle)),
+        ])
+    }
+
+    pub fn from_json(v: &JsonVal) -> Result<EvalOptions, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| format!("eval: missing integer field {k:?}"))
+        };
+        Ok(EvalOptions {
+            epoch_ticks: field("epoch_ticks")?,
+            framework: v
+                .get("framework")
+                .and_then(JsonVal::as_str)
+                .ok_or("eval: missing framework")?
+                .parse::<Framework>()?,
+            max_ticks: field("max_ticks")?,
+            oracle: v.get("oracle").and_then(JsonVal::as_bool).unwrap_or(true),
+        })
+    }
+}
+
+/// Closed-loop objectives of one evaluated schedule. `score()` is what
+/// the search maximizes; bug-class signals dominate the gap term.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objectives {
+    pub frozen_ticks: u64,
+    pub rebalanced_ticks: u64,
+    /// `frozen / rebalanced` total time — the frozen-vs-rebalanced gap
+    /// the fuzzer maximizes (the paper's speedup metric).
+    pub gap: f64,
+    /// Rollback episodes of the rebalanced arm.
+    pub rollbacks: u64,
+    /// Migration churn: LP transfers executed by the rebalanced arm.
+    pub transfers: u64,
+    pub refinements: u64,
+    /// Epochs whose potential rose (Thm 4.1 violations; must be 0).
+    pub descent_violations: u64,
+    pub frozen_truncated: bool,
+    pub rebalanced_truncated: bool,
+    /// Optimized engine diverged from `sim::reference` on this
+    /// schedule.
+    pub oracle_divergence: bool,
+}
+
+impl Objectives {
+    /// Search score: the gap, plus dominant bounties for bug-class
+    /// findings (descent violations, truncation livelock, oracle
+    /// divergence).
+    pub fn score(&self) -> f64 {
+        let mut s = self.gap;
+        s += 1_000.0 * self.descent_violations as f64;
+        if self.rebalanced_truncated {
+            s += 10_000.0;
+        }
+        if self.oracle_divergence {
+            s += 1_000_000.0;
+        }
+        s
+    }
+
+    /// Does this evaluation expose an engine/theory bug (as opposed to
+    /// merely a large gap)?
+    pub fn is_bug(&self) -> bool {
+        self.oracle_divergence || self.descent_violations > 0 || self.rebalanced_truncated
+    }
+
+    /// Exact (bit-level) equality — the determinism contract the
+    /// regression suite asserts: same seeds ⇒ byte-identical scores.
+    pub fn bit_eq(&self, other: &Objectives) -> bool {
+        self.frozen_ticks == other.frozen_ticks
+            && self.rebalanced_ticks == other.rebalanced_ticks
+            && self.gap.to_bits() == other.gap.to_bits()
+            && self.rollbacks == other.rollbacks
+            && self.transfers == other.transfers
+            && self.refinements == other.refinements
+            && self.descent_violations == other.descent_violations
+            && self.frozen_truncated == other.frozen_truncated
+            && self.rebalanced_truncated == other.rebalanced_truncated
+            && self.oracle_divergence == other.oracle_divergence
+    }
+
+    pub fn to_json(&self) -> JsonVal {
+        JsonVal::Obj(vec![
+            ("frozen_ticks".into(), JsonVal::Int(self.frozen_ticks)),
+            ("rebalanced_ticks".into(), JsonVal::Int(self.rebalanced_ticks)),
+            ("gap".into(), JsonVal::Num(self.gap)),
+            ("rollbacks".into(), JsonVal::Int(self.rollbacks)),
+            ("transfers".into(), JsonVal::Int(self.transfers)),
+            ("refinements".into(), JsonVal::Int(self.refinements)),
+            ("descent_violations".into(), JsonVal::Int(self.descent_violations)),
+            ("frozen_truncated".into(), JsonVal::Bool(self.frozen_truncated)),
+            ("rebalanced_truncated".into(), JsonVal::Bool(self.rebalanced_truncated)),
+            ("oracle_divergence".into(), JsonVal::Bool(self.oracle_divergence)),
+        ])
+    }
+
+    pub fn from_json(v: &JsonVal) -> Result<Objectives, String> {
+        let int = |k: &str| {
+            v.get(k)
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| format!("objectives: missing integer field {k:?}"))
+        };
+        let flag = |k: &str| {
+            v.get(k)
+                .and_then(JsonVal::as_bool)
+                .ok_or_else(|| format!("objectives: missing bool field {k:?}"))
+        };
+        Ok(Objectives {
+            frozen_ticks: int("frozen_ticks")?,
+            rebalanced_ticks: int("rebalanced_ticks")?,
+            gap: v
+                .get("gap")
+                .and_then(JsonVal::as_f64)
+                .ok_or("objectives: missing number field \"gap\"")?,
+            rollbacks: int("rollbacks")?,
+            transfers: int("transfers")?,
+            refinements: int("refinements")?,
+            descent_violations: int("descent_violations")?,
+            frozen_truncated: flag("frozen_truncated")?,
+            rebalanced_truncated: flag("rebalanced_truncated")?,
+            oracle_divergence: flag("oracle_divergence")?,
+        })
+    }
+}
+
+/// Does the optimized engine agree bit-for-bit with the naive
+/// reference stepper on this workload? (`SimStats` + `EpochCounters` +
+/// final GVT.)
+fn reference_agrees(
+    graph: &Graph,
+    machines: &MachineConfig,
+    initial: &Partition,
+    injections: &[Injection],
+    sim: &SimOptions,
+) -> bool {
+    let mut reference = ReferenceEngine::new(
+        graph,
+        machines.clone(),
+        initial.clone(),
+        sim.clone(),
+        injections.to_vec(),
+    );
+    let ref_stats = reference.run_to_completion();
+    let mut optimized = SimEngine::new(
+        graph,
+        machines.clone(),
+        initial.clone(),
+        sim.clone(),
+        injections.to_vec(),
+    );
+    let opt_stats = optimized.run_to_completion();
+    ref_stats == opt_stats
+        && reference.gvt() == optimized.gvt()
+        && reference.take_epoch_counters() == optimized.take_epoch_counters()
+}
+
+/// Score one schedule on a fixture: closed-loop frozen-vs-rebalanced
+/// comparison plus (optionally) the `sim::reference` differential
+/// oracle. Fully deterministic: equal inputs produce bit-identical
+/// [`Objectives`].
+pub fn evaluate(
+    fixture: &FuzzFixture,
+    schedule: &DriftSchedule,
+    eval: &EvalOptions,
+) -> Result<Objectives, String> {
+    let (graph, machines, initial) = fixture.build();
+    schedule.validate(graph.node_count())?;
+    let injections = schedule.compile(&graph);
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: eval.max_ticks, ..Default::default() },
+        epoch_ticks: eval.epoch_ticks,
+        framework: eval.framework,
+        ..Default::default()
+    };
+    let report = compare_frozen_vs_rebalanced(
+        &graph,
+        &machines,
+        &initial,
+        &injections,
+        WeightEstimator::ewma(0.5),
+        &options,
+    );
+    let oracle_divergence =
+        eval.oracle && !reference_agrees(&graph, &machines, &initial, &injections, &options.sim);
+    Ok(Objectives {
+        frozen_ticks: report.frozen.total_time(),
+        rebalanced_ticks: report.rebalanced.total_time(),
+        gap: report.speedup(),
+        rollbacks: report.rebalanced.stats.rollbacks,
+        transfers: report.rebalanced.transfers as u64,
+        refinements: report.rebalanced.refinements() as u64,
+        descent_violations: report.rebalanced.descent_violations() as u64,
+        frozen_truncated: report.frozen.stats.truncated,
+        rebalanced_truncated: report.rebalanced.stats.truncated,
+        oracle_divergence,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Genome operators
+// ---------------------------------------------------------------------------
+
+/// Validity-preserving genome operators: every product of
+/// [`Mutator::random_schedule`], [`Mutator::mutate`], and
+/// [`Mutator::crossover`] passes `DriftSchedule::validate` for the
+/// configured node count (property-tested in `prop_invariants.rs`).
+#[derive(Debug, Clone)]
+pub struct Mutator {
+    /// LP count of the target graph (centers stay in range).
+    pub nodes: usize,
+    /// Total thread budget every search candidate is normalized to, so
+    /// schedules compare like-for-like.
+    pub thread_budget: u32,
+    /// One refinement epoch, in per-mille of the horizon (the
+    /// epoch-align operator snaps windows to this grid).
+    pub epoch_pm: u32,
+    /// Gene-count cap for search candidates.
+    pub max_genes: usize,
+}
+
+impl Mutator {
+    fn random_gene(&self, rng: &mut Pcg32) -> DriftGene {
+        let kind = match rng.index(10) {
+            0..=5 => GeneKind::Hotspot,
+            6 | 7 => GeneKind::Surge,
+            8 => GeneKind::Background,
+            _ => GeneKind::Noise,
+        };
+        let len_pm = 40 + rng.gen_below(400);
+        DriftGene {
+            kind,
+            start_pm: rng.gen_below(1001 - len_pm),
+            len_pm,
+            center: rng.index(self.nodes.max(1)),
+            radius: rng.gen_below(3),
+            threads: 1 + rng.gen_below(self.thread_budget.max(2) / 2 + 1),
+            hot_pm: 700 + rng.gen_below(301),
+        }
+    }
+
+    /// A fresh random schedule over `horizon` ticks.
+    pub fn random_schedule(&self, horizon: u64, hop_limit: u32, rng: &mut Pcg32) -> DriftSchedule {
+        let mut s = DriftSchedule {
+            seed: rng.next_u64(),
+            horizon_ticks: horizon.max(1),
+            hop_limit,
+            ts_rate_pm: 500,
+            ts_jitter: 8,
+            genes: Vec::new(),
+        };
+        let count = 2 + rng.index(5);
+        for _ in 0..count {
+            s.genes.push(self.random_gene(rng));
+        }
+        self.normalize(&mut s);
+        s
+    }
+
+    /// Apply 1–3 random edits, then restore the schedule invariants.
+    pub fn mutate(&self, s: &DriftSchedule, rng: &mut Pcg32) -> DriftSchedule {
+        let mut out = s.clone();
+        let edits = 1 + rng.index(3);
+        for _ in 0..edits {
+            self.mutate_once(&mut out, rng);
+        }
+        self.normalize(&mut out);
+        out
+    }
+
+    fn mutate_once(&self, s: &mut DriftSchedule, rng: &mut Pcg32) {
+        if s.genes.is_empty() {
+            s.genes.push(self.random_gene(rng));
+            return;
+        }
+        let i = rng.index(s.genes.len());
+        match rng.index(10) {
+            // Relocate the region.
+            0 => s.genes[i].center = rng.index(self.nodes.max(1)),
+            // Concentrate: hotter, tighter.
+            1 => {
+                let g = &mut s.genes[i];
+                g.hot_pm = (g.hot_pm + 100 + rng.gen_below(300)).min(1000);
+                g.radius = g.radius.saturating_sub(1);
+            }
+            // Diffuse: cooler, wider.
+            2 => {
+                let g = &mut s.genes[i];
+                g.hot_pm = g.hot_pm.saturating_sub(100 + rng.gen_below(300));
+                g.radius = (g.radius + 1).min(4);
+            }
+            // Move the window.
+            3 => {
+                let g = &mut s.genes[i];
+                let len = g.len_pm.clamp(1, 1000);
+                g.len_pm = len;
+                g.start_pm = rng.gen_below(1001 - len);
+            }
+            // Resize the window.
+            4 => {
+                let g = &mut s.genes[i];
+                let max_len = (1000 - g.start_pm.min(999)).max(1);
+                g.len_pm = 1 + rng.gen_below(max_len);
+            }
+            // Split one gene into consecutive halves.
+            5 => {
+                if s.genes.len() < self.max_genes {
+                    let g = s.genes[i];
+                    if g.len_pm >= 2 && g.threads >= 2 {
+                        let half = g.len_pm / 2;
+                        let mut left = g;
+                        left.len_pm = half;
+                        left.threads = g.threads / 2;
+                        let mut right = g;
+                        right.start_pm = g.start_pm + half;
+                        right.len_pm = g.len_pm - half;
+                        right.threads = g.threads - g.threads / 2;
+                        s.genes[i] = left;
+                        s.genes.push(right);
+                    }
+                }
+            }
+            // Delete a gene; its threads move to a survivor.
+            6 => {
+                if s.genes.len() > 1 {
+                    let removed = s.genes.remove(i);
+                    let j = rng.index(s.genes.len());
+                    s.genes[j].threads = s.genes[j].threads.saturating_add(removed.threads);
+                }
+            }
+            // Clone a gene to a new window and center (relocation).
+            7 => {
+                if s.genes.len() < self.max_genes {
+                    let mut g = s.genes[i];
+                    g.center = rng.index(self.nodes.max(1));
+                    let len = g.len_pm.clamp(1, 1000);
+                    g.len_pm = len;
+                    g.start_pm = rng.gen_below(1001 - len);
+                    s.genes.push(g);
+                }
+            }
+            // Snap the window to the refinement-epoch grid (the
+            // adversarial phase alignment).
+            8 => {
+                let g = &mut s.genes[i];
+                let step = self.epoch_pm.clamp(1, 1000);
+                g.len_pm = step;
+                g.start_pm = (g.start_pm.min(999) / step) * step;
+                if g.start_pm + g.len_pm > 1000 {
+                    g.start_pm = 1000 - g.len_pm;
+                }
+            }
+            // Flip the gene kind.
+            _ => s.genes[i].kind = GeneKind::ALL[rng.index(GeneKind::ALL.len())],
+        }
+    }
+
+    /// Single-cut crossover on the time axis: `a`'s genes before the
+    /// cut, `b`'s after.
+    pub fn crossover(
+        &self,
+        a: &DriftSchedule,
+        b: &DriftSchedule,
+        rng: &mut Pcg32,
+    ) -> DriftSchedule {
+        let cut = rng.gen_below(1001);
+        let mut out = a.clone();
+        if rng.chance(0.5) {
+            out.seed = b.seed;
+        }
+        out.genes = a
+            .genes
+            .iter()
+            .filter(|g| g.start_pm < cut)
+            .chain(b.genes.iter().filter(|g| g.start_pm >= cut))
+            .copied()
+            .collect();
+        if out.genes.is_empty() {
+            out.genes = a.genes.clone();
+        }
+        self.normalize(&mut out);
+        out
+    }
+
+    /// Restore the schedule invariants after an edit: clamp every gene
+    /// into range, rebalance thread counts to the shared budget, and
+    /// re-sort into monotone start order.
+    pub fn normalize(&self, s: &mut DriftSchedule) {
+        if s.genes.len() > self.max_genes.min(MAX_GENES) {
+            s.genes.truncate(self.max_genes.min(MAX_GENES));
+        }
+        for g in &mut s.genes {
+            if self.nodes > 0 {
+                g.center %= self.nodes;
+            }
+            g.radius = g.radius.min(4);
+            g.hot_pm = g.hot_pm.min(1000);
+            g.len_pm = g.len_pm.clamp(1, 1000);
+            g.start_pm = g.start_pm.min(1000 - g.len_pm);
+            g.threads = g.threads.max(1);
+        }
+        self.rebalance_threads(&mut s.genes);
+        s.sort_genes();
+    }
+
+    /// Scale gene thread counts so the schedule spends (about) the
+    /// shared budget — candidates must compare like-for-like.
+    fn rebalance_threads(&self, genes: &mut [DriftGene]) {
+        if genes.is_empty() {
+            return;
+        }
+        let budget = self.thread_budget.max(genes.len() as u32);
+        let sum: u64 = genes.iter().map(|g| g.threads as u64).sum::<u64>().max(1);
+        let mut acc: u32 = 0;
+        for g in genes.iter_mut() {
+            g.threads = ((g.threads as u64 * budget as u64 / sum) as u32).max(1);
+            acc += g.threads;
+        }
+        if acc != budget {
+            let idx = genes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, g)| g.threads)
+                .map(|(i, _)| i)
+                .expect("non-empty");
+            if acc > budget {
+                genes[idx].threads = genes[idx].threads.saturating_sub(acc - budget).max(1);
+            } else {
+                genes[idx].threads += budget - acc;
+            }
+        }
+    }
+}
+
+/// Delta-debug shrink candidates of `s`, each strictly smaller by the
+/// lexicographic size metric (gene count, total threads, window sum,
+/// radius sum) and each valid whenever `s` is — gene removal keeps the
+/// start order, and halving a field never lifts it out of range.
+pub fn shrink_steps(s: &DriftSchedule) -> Vec<DriftSchedule> {
+    let mut out = Vec::new();
+    if s.genes.len() > 1 {
+        for i in 0..s.genes.len() {
+            let mut c = s.clone();
+            c.genes.remove(i);
+            out.push(c);
+        }
+    }
+    for i in 0..s.genes.len() {
+        let g = s.genes[i];
+        if g.threads > 1 {
+            let mut c = s.clone();
+            c.genes[i].threads = g.threads / 2;
+            out.push(c);
+        }
+        if g.len_pm > 1 {
+            let mut c = s.clone();
+            c.genes[i].len_pm = (g.len_pm / 2).max(1);
+            out.push(c);
+        }
+        if g.radius > 0 {
+            let mut c = s.clone();
+            c.genes[i].radius = g.radius - 1;
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Delta-debug `schedule` to a (locally) minimal genome that still
+/// satisfies the predicate: for bug-class findings the bug must
+/// survive; otherwise the score must stay at or above `floor`. Returns
+/// the shrunk schedule, its objectives, and the evaluations spent.
+pub fn shrink(
+    fixture: &FuzzFixture,
+    schedule: &DriftSchedule,
+    objectives: &Objectives,
+    eval: &EvalOptions,
+    floor: f64,
+    eval_budget: usize,
+) -> (DriftSchedule, Objectives, usize) {
+    let want_bug = objectives.is_bug();
+    let keep = |obj: &Objectives| {
+        if want_bug {
+            obj.is_bug()
+        } else {
+            obj.score() >= floor
+        }
+    };
+    let mut best = schedule.clone();
+    let mut best_obj = objectives.clone();
+    let mut used = 0usize;
+    'outer: loop {
+        if used >= eval_budget {
+            break;
+        }
+        for candidate in shrink_steps(&best) {
+            if used >= eval_budget {
+                break 'outer;
+            }
+            used += 1;
+            let Ok(obj) = evaluate(fixture, &candidate, eval) else { continue };
+            if keep(&obj) {
+                best = candidate;
+                best_obj = obj;
+                continue 'outer; // restart from the smaller genome
+            }
+        }
+        break; // fixpoint: no candidate preserves the property
+    }
+    (best, best_obj, used)
+}
+
+// ---------------------------------------------------------------------------
+// The search loop
+// ---------------------------------------------------------------------------
+
+/// Knobs of one [`run_fuzz`] campaign.
+#[derive(Debug, Clone)]
+pub struct FuzzOptions {
+    /// Evaluation budget of the search phase (baselines included);
+    /// shrinking spends up to `budget / 4` extra per winner.
+    pub budget: usize,
+    /// Master seed: drives the search RNG and names the found corpus.
+    pub seed: u64,
+    pub fixture: FuzzFixture,
+    /// Horizon every candidate spreads its injections across.
+    pub horizon_ticks: u64,
+    /// Thread budget every candidate is normalized to.
+    pub thread_budget: u32,
+    pub hop_limit: u32,
+    pub eval: EvalOptions,
+    /// How many worst schedules to keep (and shrink).
+    pub top_k: usize,
+    pub shrink: bool,
+    pub verbose: bool,
+}
+
+impl Default for FuzzOptions {
+    fn default() -> Self {
+        FuzzOptions {
+            budget: 200,
+            seed: 2011,
+            fixture: FuzzFixture::default(),
+            horizon_ticks: 1_200,
+            thread_budget: 120,
+            hop_limit: 4,
+            eval: EvalOptions::default(),
+            top_k: 3,
+            shrink: true,
+            verbose: false,
+        }
+    }
+}
+
+/// One worst-case schedule a campaign produced.
+#[derive(Debug, Clone)]
+pub struct FoundSchedule {
+    /// 1-based rank by score (1 = worst found).
+    pub rank: usize,
+    pub name: String,
+    pub schedule: DriftSchedule,
+    pub objectives: Objectives,
+    pub genes_before_shrink: usize,
+}
+
+/// Result of a [`run_fuzz`] campaign.
+#[derive(Debug, Clone)]
+pub struct FuzzOutcome {
+    /// The four hand-written scenario genomes' objectives on the same
+    /// fixture and budget — the bar the search has to clear.
+    pub handwritten: Vec<(ScenarioKind, Objectives)>,
+    pub handwritten_best_gap: f64,
+    /// Top-k worst schedules, shrunk, rank order.
+    pub found: Vec<FoundSchedule>,
+    /// Total evaluations spent (search + shrink).
+    pub evaluations: usize,
+}
+
+impl FuzzOutcome {
+    /// Did the campaign find a schedule whose gap exceeds every
+    /// hand-written scenario's?
+    pub fn beat_handwritten(&self) -> bool {
+        self.found.iter().any(|f| f.objectives.gap > self.handwritten_best_gap)
+    }
+}
+
+/// One refinement epoch in per-mille of the horizon (the grid both the
+/// mutator's epoch-align operator and the seed template snap to).
+fn epoch_pm_of(epoch_ticks: u64, horizon_ticks: u64) -> u32 {
+    ((epoch_ticks.saturating_mul(1000) / horizon_ticks.max(1)) as u32).clamp(1, 1000)
+}
+
+/// The adversarial seed template: a maximally concentrated hot spot
+/// that relocates to a far-apart center once per refinement epoch —
+/// the drift pattern a frozen partition tracks worst.
+pub fn epoch_locked_relocation(
+    graph: &Graph,
+    options: &FuzzOptions,
+    rng: &mut Pcg32,
+) -> DriftSchedule {
+    let epoch_pm = epoch_pm_of(options.eval.epoch_ticks, options.horizon_ticks);
+    let phases = ((1000 / epoch_pm) as usize).clamp(2, 16);
+    let centers = far_apart_centers(graph, phases, rng);
+    let windows = phase_windows(phases);
+    let mut genes: Vec<DriftGene> = (0..phases)
+        .map(|p| DriftGene {
+            kind: GeneKind::Hotspot,
+            start_pm: windows[p].0,
+            len_pm: windows[p].1,
+            center: centers[p],
+            radius: 1,
+            threads: 1,
+            hot_pm: 1000,
+        })
+        .collect();
+    let budget = options.thread_budget.max(phases as u32);
+    for gene in genes.iter_mut() {
+        gene.threads = (budget / phases as u32).max(1);
+    }
+    let used: u32 = genes.iter().map(|g| g.threads).sum();
+    if used < budget {
+        genes[0].threads += budget - used;
+    }
+    DriftSchedule {
+        seed: rng.next_u64(),
+        horizon_ticks: options.horizon_ticks,
+        hop_limit: options.hop_limit,
+        ts_rate_pm: 500,
+        ts_jitter: 8,
+        genes,
+    }
+}
+
+fn admit(
+    sched: DriftSchedule,
+    obj: Objectives,
+    elites: &mut Vec<(DriftSchedule, Objectives)>,
+    found: &mut Vec<(DriftSchedule, Objectives)>,
+) {
+    let by_score = |a: &(DriftSchedule, Objectives), b: &(DriftSchedule, Objectives)| {
+        b.1.score().partial_cmp(&a.1.score()).unwrap_or(std::cmp::Ordering::Equal)
+    };
+    if !found.iter().any(|(s, _)| *s == sched) {
+        found.push((sched.clone(), obj.clone()));
+        found.sort_by(by_score);
+        found.truncate(32);
+    }
+    if !elites.iter().any(|(s, _)| *s == sched) {
+        elites.push((sched, obj));
+        elites.sort_by(by_score);
+        elites.truncate(6);
+    }
+}
+
+/// Run one fuzzing campaign: score the hand-written baselines, seed the
+/// population with their genomes plus the epoch-locked relocation
+/// template, hill-climb with mutation/crossover until the budget is
+/// spent, then shrink the top-k worst schedules. Deterministic per
+/// [`FuzzOptions`].
+pub fn run_fuzz(options: &FuzzOptions) -> Result<FuzzOutcome, String> {
+    if options.budget == 0 {
+        return Err("--budget must be >= 1".into());
+    }
+    let (graph, _machines, _initial) = options.fixture.build();
+    let mut rng = Pcg32::new(options.seed ^ 0xF0_55ED);
+    let mutator = Mutator {
+        nodes: options.fixture.nodes,
+        thread_budget: options.thread_budget,
+        epoch_pm: epoch_pm_of(options.eval.epoch_ticks, options.horizon_ticks),
+        max_genes: 24,
+    };
+    let mut evals = 0usize;
+
+    // Baselines: the bar to clear, and the seed population.
+    let scen_opts = ScenarioOptions {
+        threads: options.thread_budget.max(1) as usize,
+        horizon_ticks: options.horizon_ticks,
+        hop_limit: options.hop_limit,
+        ..Default::default()
+    };
+    let mut handwritten = Vec::new();
+    let mut handwritten_best_gap = 0.0f64;
+    let mut elites: Vec<(DriftSchedule, Objectives)> = Vec::new();
+    let mut found: Vec<(DriftSchedule, Objectives)> = Vec::new();
+    for kind in ScenarioKind::ALL {
+        let (genome, _) = kind.genome(&graph, &scen_opts, &mut rng);
+        evals += 1;
+        let obj = evaluate(&options.fixture, &genome, &options.eval)?;
+        if options.verbose {
+            println!(
+                "  baseline {:<8} gap {:.3}  (frozen {:>6} / rebalanced {:>6}, rollbacks {}, transfers {})",
+                kind.name(),
+                obj.gap,
+                obj.frozen_ticks,
+                obj.rebalanced_ticks,
+                obj.rollbacks,
+                obj.transfers
+            );
+        }
+        handwritten_best_gap = handwritten_best_gap.max(obj.gap);
+        admit(genome, obj.clone(), &mut elites, &mut found);
+        handwritten.push((kind, obj));
+    }
+    if evals < options.budget {
+        let template = epoch_locked_relocation(&graph, options, &mut rng);
+        evals += 1;
+        let obj = evaluate(&options.fixture, &template, &options.eval)?;
+        if options.verbose {
+            println!("  template epoch-locked-relocation gap {:.3}", obj.gap);
+        }
+        admit(template, obj, &mut elites, &mut found);
+    }
+
+    // Hill-climb with restarts.
+    let mut best_score = found.first().map(|(_, o)| o.score()).unwrap_or(0.0);
+    let mut attempts = 0usize;
+    while evals < options.budget && attempts < options.budget.saturating_mul(20) {
+        attempts += 1;
+        let roll = rng.next_f64();
+        let candidate = if elites.is_empty() || roll < 0.15 {
+            mutator.random_schedule(options.horizon_ticks, options.hop_limit, &mut rng)
+        } else if roll < 0.35 && elites.len() >= 2 {
+            let i = rng.index(elites.len());
+            let mut j = rng.index(elites.len());
+            if j == i {
+                j = (j + 1) % elites.len();
+            }
+            let (a, b) = (elites[i].0.clone(), elites[j].0.clone());
+            mutator.crossover(&a, &b, &mut rng)
+        } else {
+            let parent = elites[rng.index(elites.len())].0.clone();
+            mutator.mutate(&parent, &mut rng)
+        };
+        if candidate.validate(graph.node_count()).is_err() {
+            continue; // operators should keep validity; never score junk
+        }
+        evals += 1;
+        let obj = evaluate(&options.fixture, &candidate, &options.eval)?;
+        if obj.score() > best_score {
+            best_score = obj.score();
+            if options.verbose {
+                println!(
+                    "  [{evals:>4}/{:>4}] new worst case: score {:.3}, gap {:.3} ({} genes, rollbacks {}, transfers {})",
+                    options.budget,
+                    obj.score(),
+                    obj.gap,
+                    candidate.genes.len(),
+                    obj.rollbacks,
+                    obj.transfers
+                );
+            }
+        }
+        admit(candidate, obj, &mut elites, &mut found);
+    }
+
+    // Shrink the winners.
+    let winners: Vec<(DriftSchedule, Objectives)> =
+        found.iter().take(options.top_k.max(1)).cloned().collect();
+    let shrink_budget_each = (options.budget / 4).clamp(8, 120);
+    let mut out_found = Vec::new();
+    for (rank, (sched, obj)) in winners.into_iter().enumerate() {
+        let genes_before = sched.genes.len();
+        let (small, small_obj) = if options.shrink {
+            let floor = if obj.is_bug() {
+                0.0 // the predicate is "bug preserved", not the score
+            } else if obj.gap > handwritten_best_gap {
+                // Preserve "exceeds every hand-written gap".
+                handwritten_best_gap + 1e-9
+            } else {
+                obj.score() * 0.9
+            };
+            let (s, o, used) =
+                shrink(&options.fixture, &sched, &obj, &options.eval, floor, shrink_budget_each);
+            evals += used;
+            (s, o)
+        } else {
+            (sched, obj)
+        };
+        if options.verbose {
+            println!(
+                "  worst #{:<2} {} -> {} genes, score {:.3}, gap {:.3}{}",
+                rank + 1,
+                genes_before,
+                small.genes.len(),
+                small_obj.score(),
+                small_obj.gap,
+                if small_obj.is_bug() { "  [BUG-CLASS FINDING]" } else { "" }
+            );
+        }
+        out_found.push(FoundSchedule {
+            rank: rank + 1,
+            name: format!(
+                "found-{}-r{}{}",
+                options.seed,
+                rank + 1,
+                if small_obj.is_bug() { "-bug" } else { "" }
+            ),
+            schedule: small,
+            objectives: small_obj,
+            genes_before_shrink: genes_before,
+        });
+    }
+    Ok(FuzzOutcome { handwritten, handwritten_best_gap, found: out_found, evaluations: evals })
+}
+
+// ---------------------------------------------------------------------------
+// Corpus persistence
+// ---------------------------------------------------------------------------
+
+/// One persisted corpus entry: the fixture it scored on, the schedule
+/// genome, the evaluation settings the scores were measured under, and
+/// (for fuzzer-found entries) the objectives recorded at find time —
+/// replays under the stored settings must reproduce them
+/// byte-identically.
+#[derive(Debug, Clone)]
+pub struct FuzzCase {
+    pub name: String,
+    pub fixture: FuzzFixture,
+    pub schedule: DriftSchedule,
+    /// Settings the stored objectives were measured under (`None` =
+    /// [`EvalOptions::default`]).
+    pub eval: Option<EvalOptions>,
+    pub objectives: Option<Objectives>,
+}
+
+impl FuzzCase {
+    /// The evaluation settings replays of this case should use.
+    pub fn eval_options(&self) -> EvalOptions {
+        self.eval.clone().unwrap_or_default()
+    }
+
+    pub fn to_json(&self) -> JsonVal {
+        let mut fields = vec![
+            ("format".into(), JsonVal::Str(CORPUS_FORMAT.into())),
+            ("name".into(), JsonVal::Str(self.name.clone())),
+            ("fixture".into(), self.fixture.to_json()),
+            ("schedule".into(), self.schedule.to_json()),
+        ];
+        match &self.eval {
+            Some(eval) => fields.push(("eval".into(), eval.to_json())),
+            None => fields.push(("eval".into(), JsonVal::Null)),
+        }
+        match &self.objectives {
+            Some(obj) => fields.push(("objectives".into(), obj.to_json())),
+            None => fields.push(("objectives".into(), JsonVal::Null)),
+        }
+        JsonVal::Obj(fields)
+    }
+
+    pub fn from_json(v: &JsonVal) -> Result<FuzzCase, String> {
+        if let Some(fmt) = v.get("format").and_then(JsonVal::as_str) {
+            if !fmt.starts_with("gtip-fuzz-case") {
+                return Err(format!("unknown corpus format {fmt:?}"));
+            }
+        }
+        let name = v.get("name").and_then(JsonVal::as_str).unwrap_or("unnamed").to_string();
+        let fixture =
+            FuzzFixture::from_json(v.get("fixture").ok_or("corpus case: missing fixture")?)?;
+        let schedule =
+            DriftSchedule::from_json(v.get("schedule").ok_or("corpus case: missing schedule")?)?;
+        let eval = match v.get("eval") {
+            None => None,
+            Some(e) if e.is_null() => None,
+            Some(e) => Some(EvalOptions::from_json(e)?),
+        };
+        let objectives = match v.get("objectives") {
+            None => None,
+            Some(o) if o.is_null() => None,
+            Some(o) => Some(Objectives::from_json(o)?),
+        };
+        Ok(FuzzCase { name, fixture, schedule, eval, objectives })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<FuzzCase, String> {
+        let path = path.as_ref();
+        let text = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = parse_json(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        FuzzCase::from_json(&v).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut text = self.to_json().render();
+        text.push('\n');
+        fs::write(path, text)
+    }
+}
+
+/// Load every `*.json` corpus entry under `dir`, sorted by file name
+/// (deterministic replay order). A missing directory is an empty
+/// corpus, not an error.
+pub fn load_corpus(dir: impl AsRef<Path>) -> Result<Vec<FuzzCase>, String> {
+    let dir = dir.as_ref();
+    let mut paths: Vec<PathBuf> = match fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map_or(false, |x| x == "json"))
+            .collect(),
+        Err(_) => return Ok(Vec::new()),
+    };
+    paths.sort();
+    paths.iter().map(FuzzCase::load).collect()
+}
+
+/// Persist a campaign's found schedules under `dir` as
+/// `<name>.json` (committed seed entries use the `seed-` prefix and are
+/// never overwritten by this). The campaign's evaluation settings are
+/// embedded so replays reproduce the stored objectives exactly.
+/// Returns the written paths.
+pub fn save_corpus(
+    dir: impl AsRef<Path>,
+    outcome: &FuzzOutcome,
+    fixture: &FuzzFixture,
+    eval: &EvalOptions,
+) -> std::io::Result<Vec<PathBuf>> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    let mut written = Vec::new();
+    for f in &outcome.found {
+        let case = FuzzCase {
+            name: f.name.clone(),
+            fixture: *fixture,
+            schedule: f.schedule.clone(),
+            eval: Some(eval.clone()),
+            objectives: Some(f.objectives.clone()),
+        };
+        let path = dir.join(format!("{}.json", f.name));
+        case.save(&path)?;
+        written.push(path);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_fixture() -> FuzzFixture {
+        FuzzFixture { graph_seed: 11, nodes: 48, machines: 3 }
+    }
+
+    fn tiny_eval(oracle: bool) -> EvalOptions {
+        EvalOptions { epoch_ticks: 120, max_ticks: 200_000, oracle, ..Default::default() }
+    }
+
+    fn tiny_mutator() -> Mutator {
+        Mutator { nodes: 48, thread_budget: 36, epoch_pm: 200, max_genes: 12 }
+    }
+
+    #[test]
+    fn evaluate_is_bit_deterministic_and_json_exact() {
+        let fixture = tiny_fixture();
+        let mut rng = Pcg32::new(5);
+        let schedule = tiny_mutator().random_schedule(600, 4, &mut rng);
+        let a = evaluate(&fixture, &schedule, &tiny_eval(false)).unwrap();
+        let b = evaluate(&fixture, &schedule, &tiny_eval(false)).unwrap();
+        assert!(a.bit_eq(&b), "same schedule, different objectives:\n{a:?}\n{b:?}");
+        // JSON round trip is exact, including the f64 gap.
+        let text = a.to_json().render();
+        let back = Objectives::from_json(&parse_json(&text).unwrap()).unwrap();
+        assert!(a.bit_eq(&back), "objectives drifted through JSON: {text}");
+    }
+
+    #[test]
+    fn oracle_agrees_on_generated_schedules() {
+        let fixture = tiny_fixture();
+        let mut rng = Pcg32::new(9);
+        let schedule = tiny_mutator().random_schedule(500, 4, &mut rng);
+        let obj = evaluate(&fixture, &schedule, &tiny_eval(true)).unwrap();
+        assert!(!obj.oracle_divergence, "optimized engine diverged from sim::reference");
+        assert_eq!(obj.descent_violations, 0, "Thm 4.1 violated: {obj:?}");
+    }
+
+    #[test]
+    fn shrink_reduces_without_losing_the_property() {
+        let fixture = tiny_fixture();
+        let eval = tiny_eval(false);
+        let mut rng = Pcg32::new(13);
+        let mutator = tiny_mutator();
+        let mut schedule = mutator.random_schedule(600, 4, &mut rng);
+        for _ in 0..3 {
+            schedule = mutator.mutate(&schedule, &mut rng);
+        }
+        let obj = evaluate(&fixture, &schedule, &eval).unwrap();
+        let floor = obj.score() * 0.5;
+        let (small, small_obj, used) = shrink(&fixture, &schedule, &obj, &eval, floor, 40);
+        assert!(used > 0, "shrink never evaluated anything");
+        assert!(small.genes.len() <= schedule.genes.len());
+        assert!(small.total_threads() <= schedule.total_threads());
+        assert!(small_obj.score() >= floor, "shrink lost the property");
+        small.validate(fixture.nodes).unwrap();
+        // Shrunk schedule still replays to the same objectives.
+        let replay = evaluate(&fixture, &small, &eval).unwrap();
+        assert!(replay.bit_eq(&small_obj));
+    }
+
+    #[test]
+    fn corpus_saves_and_loads_round_trip() {
+        let dir = std::env::temp_dir().join(format!("gtip_fuzz_corpus_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let fixture = tiny_fixture();
+        let mut rng = Pcg32::new(21);
+        let schedule = tiny_mutator().random_schedule(500, 4, &mut rng);
+        let obj = evaluate(&fixture, &schedule, &tiny_eval(false)).unwrap();
+        let outcome = FuzzOutcome {
+            handwritten: Vec::new(),
+            handwritten_best_gap: 0.0,
+            found: vec![FoundSchedule {
+                rank: 1,
+                name: "found-test-r1".into(),
+                schedule: schedule.clone(),
+                objectives: obj.clone(),
+                genes_before_shrink: schedule.genes.len(),
+            }],
+            evaluations: 1,
+        };
+        let written = save_corpus(&dir, &outcome, &fixture, &tiny_eval(false)).unwrap();
+        assert_eq!(written.len(), 1);
+        let corpus = load_corpus(&dir).unwrap();
+        assert_eq!(corpus.len(), 1);
+        assert_eq!(corpus[0].name, "found-test-r1");
+        assert_eq!(corpus[0].fixture, fixture);
+        assert_eq!(corpus[0].schedule, schedule);
+        assert!(corpus[0].objectives.as_ref().unwrap().bit_eq(&obj));
+        // The eval settings ride along, so a replay under them
+        // reproduces the stored objectives exactly.
+        let stored_eval = corpus[0].eval_options();
+        assert_eq!(stored_eval.epoch_ticks, tiny_eval(false).epoch_ticks);
+        assert!(!stored_eval.oracle);
+        let replay = evaluate(&corpus[0].fixture, &corpus[0].schedule, &stored_eval).unwrap();
+        assert!(replay.bit_eq(&obj));
+        let _ = fs::remove_dir_all(&dir);
+        // Missing directory = empty corpus.
+        assert!(load_corpus(&dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_fuzz_tiny_budget_finds_and_shrinks() {
+        let options = FuzzOptions {
+            budget: 8,
+            seed: 7,
+            fixture: tiny_fixture(),
+            horizon_ticks: 500,
+            thread_budget: 36,
+            top_k: 1,
+            eval: tiny_eval(false),
+            verbose: false,
+            ..Default::default()
+        };
+        let a = run_fuzz(&options).unwrap();
+        assert!(!a.found.is_empty(), "no schedule survived the campaign");
+        assert!(a.evaluations >= options.budget);
+        assert_eq!(a.handwritten.len(), 4);
+        assert!(a.handwritten_best_gap > 0.0);
+        for f in &a.found {
+            f.schedule.validate(options.fixture.nodes).unwrap();
+        }
+        // Campaigns are deterministic per seed.
+        let b = run_fuzz(&options).unwrap();
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.found.len(), b.found.len());
+        for (x, y) in a.found.iter().zip(&b.found) {
+            assert_eq!(x.schedule, y.schedule);
+            assert!(x.objectives.bit_eq(&y.objectives));
+        }
+    }
+}

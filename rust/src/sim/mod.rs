@@ -18,7 +18,12 @@
 //! full §6.1 epoch loop with windowed load measurement, pluggable
 //! weight estimators, a selectable sequential/distributed refinement
 //! backend and per-epoch reporting, fed by the scripted drifting
-//! workloads of [`scenario`].
+//! workloads of [`scenario`] — all instances of one serializable
+//! schedule genome (`DriftSchedule`). The [`fuzz`] subsystem searches
+//! that genome space for adversarial worst-case schedules, shrinks
+//! them, and persists them as a replayable corpus
+//! (`results/fuzz_corpus/`), cross-checking every evaluation against
+//! [`reference`] as a differential oracle.
 //!
 //! The [`engine`] hot path scales with *activity*, not graph size
 //! (active-LP worklist, indexed per-LP event queues, incremental GVT,
@@ -30,6 +35,7 @@ pub mod driver;
 pub mod dynamic;
 pub mod engine;
 pub mod event;
+pub mod fuzz;
 pub mod lp;
 pub mod reference;
 pub mod scenario;
@@ -42,6 +48,7 @@ pub use dynamic::{
 };
 pub use engine::{EpochCounters, SimEngine, SimOptions, SimStats};
 pub use event::{Event, EventKind, ThreadId};
+pub use fuzz::{FuzzCase, FuzzFixture, FuzzOptions, FuzzOutcome, Objectives};
 pub use reference::ReferenceEngine;
-pub use scenario::{Scenario, ScenarioKind, ScenarioOptions};
+pub use scenario::{DriftGene, DriftSchedule, GeneKind, Scenario, ScenarioKind, ScenarioOptions};
 pub use workload::{FloodWorkload, WorkloadOptions};

@@ -1,5 +1,6 @@
 //! Scenario library: scripted *drifting* workloads for the closed
-//! rebalancing loop (`sim::dynamic`).
+//! rebalancing loop (`sim::dynamic`), all expressed as instances of one
+//! composable, serializable **schedule genome** ([`DriftSchedule`]).
 //!
 //! [`FloodWorkload`](crate::sim::workload::FloodWorkload) draws its hot
 //! spots uniformly at random per epoch; these scenarios instead script
@@ -20,13 +21,24 @@
 //!   one fails mid-run (its share shifting onto the survivor) and later
 //!   rejoins, exercising rebalance-twice behavior.
 //!
-//! Every scenario is deterministic given the seed RNG and spreads the
-//! same total thread budget across the same horizon, so frozen vs
-//! rebalanced runs and different estimators compare like-for-like.
+//! Each scenario builder emits a [`DriftSchedule`]: an ordered sequence
+//! of [`DriftGene`]s (windowed, parameterized drift events — hotspot
+//! balls, topology-correlated surge rings, uniform background, noise
+//! bursts) that [`DriftSchedule::compile`] turns into a deterministic
+//! injection schedule. The genome is what `sim::fuzz` mutates, shrinks,
+//! and persists as JSON: adversarial schedules found by search live in
+//! the same representation as the hand-written library.
+//!
+//! Every schedule is deterministic given its seed: each gene draws from
+//! an independent, content-addressed RNG stream
+//! ([`Pcg32::derive`]), so deleting or reordering one gene never
+//! perturbs the injections of another — the property delta-debug
+//! shrinking relies on.
 
 use crate::graph::{metrics, Graph, NodeId};
 use crate::sim::engine::Injection;
 use crate::sim::event::Event;
+use crate::util::bench::JsonVal;
 use crate::util::rng::Pcg32;
 
 /// Which drifting workload to script.
@@ -65,6 +77,24 @@ impl ScenarioKind {
             ScenarioKind::FlashCrowd => "uniform background + mid-run burst into one region",
             ScenarioKind::DiurnalRamp => "intensity ramps up/down while the busy region rotates",
             ScenarioKind::FailureRejoin => "one of two traffic sources fails mid-run, then rejoins",
+        }
+    }
+
+    /// The scenario's schedule genome plus its concentrated-region
+    /// timeline (kept for analysis and plotting). Deterministic in
+    /// `rng`; `sim::fuzz` seeds its search population from exactly
+    /// these genomes.
+    pub fn genome(
+        self,
+        g: &Graph,
+        options: &ScenarioOptions,
+        rng: &mut Pcg32,
+    ) -> (DriftSchedule, Vec<Vec<NodeId>>) {
+        match self {
+            ScenarioKind::HotspotShift => genome_hotspot_shift(g, options, rng),
+            ScenarioKind::FlashCrowd => genome_flash_crowd(g, options, rng),
+            ScenarioKind::DiurnalRamp => genome_diurnal_ramp(g, options, rng),
+            ScenarioKind::FailureRejoin => genome_failure_rejoin(g, options, rng),
         }
     }
 }
@@ -128,14 +158,387 @@ impl Default for ScenarioOptions {
     }
 }
 
-/// A scripted workload: the injection schedule plus the region timeline
-/// (kept for analysis and plotting).
+// ---------------------------------------------------------------------------
+// The schedule genome
+// ---------------------------------------------------------------------------
+
+/// What kind of drift event a gene scripts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GeneKind {
+    /// Concentrated traffic into the BFS ball around `center`.
+    Hotspot,
+    /// Topology-correlated surge: traffic lands on the *ring* of nodes
+    /// at exactly `radius` hops from `center` (the ball if the ring is
+    /// empty) — stresses partitions that cut a neighborhood frontier.
+    Surge,
+    /// Uniform background over the whole graph (region fields unused).
+    Background,
+    /// Weight-noise burst: uniform targets with 8× timestamp jitter, a
+    /// straggler generator that provokes rollback storms.
+    Noise,
+}
+
+impl GeneKind {
+    pub const ALL: [GeneKind; 4] =
+        [GeneKind::Hotspot, GeneKind::Surge, GeneKind::Background, GeneKind::Noise];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GeneKind::Hotspot => "hotspot",
+            GeneKind::Surge => "surge",
+            GeneKind::Background => "background",
+            GeneKind::Noise => "noise",
+        }
+    }
+
+    fn rank(self) -> u64 {
+        match self {
+            GeneKind::Hotspot => 0,
+            GeneKind::Surge => 1,
+            GeneKind::Background => 2,
+            GeneKind::Noise => 3,
+        }
+    }
+}
+
+impl std::str::FromStr for GeneKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "hotspot" => Ok(GeneKind::Hotspot),
+            "surge" => Ok(GeneKind::Surge),
+            "background" => Ok(GeneKind::Background),
+            "noise" => Ok(GeneKind::Noise),
+            other => Err(format!(
+                "unknown gene kind {other:?} (expected hotspot|surge|background|noise)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for GeneKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One parameterized drift event. Window positions are **per-mille of
+/// the horizon** so genomes stay integral (exact serialization, exact
+/// replay) and transfer across horizons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DriftGene {
+    pub kind: GeneKind,
+    /// Window start, per-mille of the horizon, `< 1000`.
+    pub start_pm: u32,
+    /// Window length, per-mille, `>= 1`, `start_pm + len_pm <= 1000`.
+    pub len_pm: u32,
+    /// Seed node of the affected region.
+    pub center: NodeId,
+    /// BFS radius of the region (`<= 8`).
+    pub radius: u32,
+    /// Threads this gene injects (`>= 1`).
+    pub threads: u32,
+    /// Per-mille of this gene's threads drawn from the region; the rest
+    /// land uniformly. `<= 1000`.
+    pub hot_pm: u32,
+}
+
+impl DriftGene {
+    /// Wall-tick window `[lo, hi)` of this gene on `horizon` ticks.
+    pub fn window(&self, horizon: u64) -> (u64, u64) {
+        let lo = (horizon * self.start_pm as u64 / 1000).min(horizon - 1);
+        let hi = (horizon * (self.start_pm + self.len_pm) as u64 / 1000).min(horizon);
+        (lo, hi.max(lo + 1))
+    }
+
+    /// The concentrated region this gene targets (empty for uniform
+    /// kinds).
+    pub fn region(&self, g: &Graph) -> Vec<NodeId> {
+        match self.kind {
+            GeneKind::Background | GeneKind::Noise => Vec::new(),
+            GeneKind::Hotspot => bfs_ball(g, self.center, self.radius as usize),
+            GeneKind::Surge => {
+                let d = metrics::bfs_distances(g, self.center);
+                let ring: Vec<NodeId> =
+                    (0..g.node_count()).filter(|&u| d[u] == self.radius as usize).collect();
+                if ring.is_empty() {
+                    bfs_ball(g, self.center, self.radius as usize)
+                } else {
+                    ring
+                }
+            }
+        }
+    }
+
+    /// Structural validity against a graph of `nodes` LPs.
+    pub fn validate(&self, nodes: usize) -> Result<(), String> {
+        if self.len_pm == 0 {
+            return Err("zero-length window".into());
+        }
+        if self.start_pm >= 1000 {
+            return Err(format!("window starts past the horizon: {}", self.start_pm));
+        }
+        if self.start_pm as u64 + self.len_pm as u64 > 1000 {
+            return Err(format!(
+                "window [{}, {}) runs past the horizon",
+                self.start_pm,
+                self.start_pm as u64 + self.len_pm as u64
+            ));
+        }
+        if self.threads == 0 {
+            return Err("gene injects no threads".into());
+        }
+        if self.hot_pm > 1000 {
+            return Err(format!("hot_pm {} > 1000", self.hot_pm));
+        }
+        if self.radius > 8 {
+            return Err(format!("radius {} > 8", self.radius));
+        }
+        if self.center >= nodes {
+            return Err(format!("center LP {} out of range (n={nodes})", self.center));
+        }
+        Ok(())
+    }
+
+    /// Content-addressed tag of this gene's private RNG stream
+    /// (FNV-1a over all fields): identical genes share a stream,
+    /// editing any field re-rolls it, and neighbors are untouched.
+    fn stream_tag(&self) -> u64 {
+        let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+        for v in [
+            self.kind.rank(),
+            self.start_pm as u64,
+            self.len_pm as u64,
+            self.center as u64,
+            self.radius as u64,
+            self.threads as u64,
+            self.hot_pm as u64,
+        ] {
+            h = (h ^ v).wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+
+    /// Canonical ordering key: start first (monotone event times), then
+    /// the remaining fields for a stable total order.
+    fn sort_key(&self) -> (u32, u32, u64, NodeId, u32, u32, u32) {
+        (
+            self.start_pm,
+            self.len_pm,
+            self.kind.rank(),
+            self.center,
+            self.radius,
+            self.threads,
+            self.hot_pm,
+        )
+    }
+
+    pub fn to_json(&self) -> JsonVal {
+        JsonVal::Obj(vec![
+            ("kind".into(), JsonVal::Str(self.kind.name().into())),
+            ("start_pm".into(), JsonVal::Int(self.start_pm as u64)),
+            ("len_pm".into(), JsonVal::Int(self.len_pm as u64)),
+            ("center".into(), JsonVal::Int(self.center as u64)),
+            ("radius".into(), JsonVal::Int(self.radius as u64)),
+            ("threads".into(), JsonVal::Int(self.threads as u64)),
+            ("hot_pm".into(), JsonVal::Int(self.hot_pm as u64)),
+        ])
+    }
+
+    pub fn from_json(v: &JsonVal) -> Result<DriftGene, String> {
+        let kind = v
+            .get("kind")
+            .and_then(JsonVal::as_str)
+            .ok_or("gene: missing kind")?
+            .parse::<GeneKind>()?;
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| format!("gene: missing integer field {k:?}"))
+        };
+        Ok(DriftGene {
+            kind,
+            start_pm: field("start_pm")? as u32,
+            len_pm: field("len_pm")? as u32,
+            center: field("center")? as NodeId,
+            radius: field("radius")? as u32,
+            threads: field("threads")? as u32,
+            hot_pm: field("hot_pm")? as u32,
+        })
+    }
+}
+
+/// Hard cap on a schedule's total thread budget (guards runaway
+/// mutations before they reach the simulator).
+pub const MAX_SCHEDULE_THREADS: u64 = 100_000;
+/// Hard cap on gene count.
+pub const MAX_GENES: usize = 256;
+
+/// A composable, serializable drift workload: an ordered gene sequence
+/// plus the global compilation parameters. This is the one type the
+/// hand-written scenarios, the fuzzer's search space, and the persisted
+/// corpus all share.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DriftSchedule {
+    /// Master seed of the content-addressed per-gene streams.
+    pub seed: u64,
+    /// Wall-clock horizon the per-mille windows map onto.
+    pub horizon_ticks: u64,
+    /// Hop budget of every injected flood.
+    pub hop_limit: u32,
+    /// Virtual-time rate, per-mille: timestamp base =
+    /// `at_tick * ts_rate_pm / 1000`.
+    pub ts_rate_pm: u32,
+    /// Uniform timestamp jitter in `[0, ts_jitter)` (8× for
+    /// [`GeneKind::Noise`] genes).
+    pub ts_jitter: u64,
+    /// Drift events, sorted by `start_pm` (monotone event times).
+    pub genes: Vec<DriftGene>,
+}
+
+impl DriftSchedule {
+    /// An empty schedule shell carrying `options`' global parameters,
+    /// seeded from `rng`.
+    pub fn shell(options: &ScenarioOptions, rng: &mut Pcg32) -> DriftSchedule {
+        DriftSchedule {
+            seed: rng.next_u64(),
+            horizon_ticks: options.horizon_ticks,
+            hop_limit: options.hop_limit,
+            ts_rate_pm: (options.ts_rate.clamp(0.0, 100.0) * 1000.0).round() as u32,
+            ts_jitter: options.ts_jitter,
+            genes: Vec::new(),
+        }
+    }
+
+    /// Total threads across all genes.
+    pub fn total_threads(&self) -> u64 {
+        self.genes.iter().map(|g| g.threads as u64).sum()
+    }
+
+    /// Restore the canonical gene order (monotone `start_pm`). Mutation
+    /// operators call this after every edit.
+    pub fn sort_genes(&mut self) {
+        self.genes.sort_by_key(|g| g.sort_key());
+    }
+
+    /// Structural validity against a graph of `nodes` LPs: at least one
+    /// gene, every gene valid, monotone event times, bounded totals.
+    pub fn validate(&self, nodes: usize) -> Result<(), String> {
+        if nodes == 0 {
+            return Err("empty graph".into());
+        }
+        if self.horizon_ticks == 0 {
+            return Err("empty horizon".into());
+        }
+        if self.genes.is_empty() {
+            return Err("schedule has no genes".into());
+        }
+        if self.genes.len() > MAX_GENES {
+            return Err(format!("{} genes > cap {MAX_GENES}", self.genes.len()));
+        }
+        let mut prev_start = 0u32;
+        for (i, gene) in self.genes.iter().enumerate() {
+            gene.validate(nodes).map_err(|e| format!("gene {i}: {e}"))?;
+            if gene.start_pm < prev_start {
+                return Err(format!(
+                    "gene {i} starts at {} before its predecessor's {prev_start} \
+                     (event times must be monotone)",
+                    gene.start_pm
+                ));
+            }
+            prev_start = gene.start_pm;
+        }
+        let total = self.total_threads();
+        if total > MAX_SCHEDULE_THREADS {
+            return Err(format!("thread budget blown: {total} > {MAX_SCHEDULE_THREADS}"));
+        }
+        Ok(())
+    }
+
+    /// Compile the genome into a deterministic injection schedule over
+    /// `g`. Each gene draws (window tick, target LP, timestamp jitter)
+    /// from its own [`Pcg32::derive`] stream, so two compilations are
+    /// identical and editing one gene never perturbs another's
+    /// injections. Thread ids are assigned sequentially.
+    pub fn compile(&self, g: &Graph) -> Vec<Injection> {
+        self.validate(g.node_count())
+            .unwrap_or_else(|e| panic!("compiling invalid drift schedule: {e}"));
+        let n = g.node_count();
+        let mut out: Vec<Injection> = Vec::with_capacity(self.total_threads() as usize);
+        for gene in &self.genes {
+            let mut rng = Pcg32::derive(self.seed, gene.stream_tag());
+            let region = gene.region(g);
+            let (lo, hi) = gene.window(self.horizon_ticks);
+            let jitter = match gene.kind {
+                GeneKind::Noise => self.ts_jitter.saturating_mul(8),
+                _ => self.ts_jitter,
+            };
+            for _ in 0..gene.threads {
+                let at_tick = tick_in(&mut rng, lo, hi);
+                let hot =
+                    !region.is_empty() && gene.hot_pm > 0 && rng.gen_below(1000) < gene.hot_pm;
+                let lp = if hot { region[rng.index(region.len())] } else { rng.index(n) };
+                let thread = out.len() as u64 + 1;
+                let ts_base = at_tick.saturating_mul(self.ts_rate_pm as u64) / 1000;
+                let ts = ts_base + rng.gen_range(0, jitter.max(1) - 1);
+                out.push(Injection {
+                    at_tick,
+                    lp,
+                    event: Event::injection(thread, ts, self.hop_limit),
+                });
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> JsonVal {
+        JsonVal::Obj(vec![
+            ("seed".into(), JsonVal::Int(self.seed)),
+            ("horizon_ticks".into(), JsonVal::Int(self.horizon_ticks)),
+            ("hop_limit".into(), JsonVal::Int(self.hop_limit as u64)),
+            ("ts_rate_pm".into(), JsonVal::Int(self.ts_rate_pm as u64)),
+            ("ts_jitter".into(), JsonVal::Int(self.ts_jitter)),
+            (
+                "genes".into(),
+                JsonVal::Arr(self.genes.iter().map(DriftGene::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &JsonVal) -> Result<DriftSchedule, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| format!("schedule: missing integer field {k:?}"))
+        };
+        let genes = v
+            .get("genes")
+            .and_then(JsonVal::as_arr)
+            .ok_or("schedule: missing genes array")?
+            .iter()
+            .map(DriftGene::from_json)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(DriftSchedule {
+            seed: field("seed")?,
+            horizon_ticks: field("horizon_ticks")?,
+            hop_limit: field("hop_limit")? as u32,
+            ts_rate_pm: field("ts_rate_pm")? as u32,
+            ts_jitter: field("ts_jitter")?,
+            genes,
+        })
+    }
+}
+
+/// A scripted workload: the genome it came from, the compiled injection
+/// schedule, and the region timeline (kept for analysis and plotting).
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub kind: ScenarioKind,
+    /// The schedule genome this scenario is an instance of.
+    pub schedule: DriftSchedule,
     pub injections: Vec<Injection>,
     /// Concentrated-region member sets, one per phase (interpretation is
-    /// scenario-specific; see the builders).
+    /// scenario-specific; see the genome builders).
     pub phase_regions: Vec<Vec<NodeId>>,
     pub horizon_ticks: u64,
 }
@@ -151,11 +554,14 @@ impl Scenario {
         assert!(g.node_count() > 0 && options.threads > 0);
         assert!(options.phases >= 1);
         assert!(options.horizon_ticks >= 1, "empty horizon");
-        match kind {
-            ScenarioKind::HotspotShift => build_hotspot_shift(g, options, rng),
-            ScenarioKind::FlashCrowd => build_flash_crowd(g, options, rng),
-            ScenarioKind::DiurnalRamp => build_diurnal_ramp(g, options, rng),
-            ScenarioKind::FailureRejoin => build_failure_rejoin(g, options, rng),
+        let (schedule, phase_regions) = kind.genome(g, options, rng);
+        let injections = schedule.compile(g);
+        Scenario {
+            kind,
+            schedule,
+            injections,
+            phase_regions,
+            horizon_ticks: options.horizon_ticks,
         }
     }
 
@@ -170,7 +576,7 @@ impl Scenario {
 }
 
 /// Nodes within `radius` hops of `center`.
-fn bfs_ball(g: &Graph, center: NodeId, radius: usize) -> Vec<NodeId> {
+pub fn bfs_ball(g: &Graph, center: NodeId, radius: usize) -> Vec<NodeId> {
     let d = metrics::bfs_distances(g, center);
     (0..g.node_count()).filter(|&u| d[u] <= radius).collect()
 }
@@ -178,7 +584,7 @@ fn bfs_ball(g: &Graph, center: NodeId, radius: usize) -> Vec<NodeId> {
 /// Greedy farthest-point centers: the first is random, each next center
 /// maximizes its hop distance to all previously chosen ones — scripted
 /// drift should *move*, not resample in place.
-fn far_apart_centers(g: &Graph, count: usize, rng: &mut Pcg32) -> Vec<NodeId> {
+pub fn far_apart_centers(g: &Graph, count: usize, rng: &mut Pcg32) -> Vec<NodeId> {
     let n = g.node_count();
     let mut centers = vec![rng.index(n)];
     let mut min_dist = metrics::bfs_distances(g, centers[0]);
@@ -196,165 +602,185 @@ fn far_apart_centers(g: &Graph, count: usize, rng: &mut Pcg32) -> Vec<NodeId> {
     centers
 }
 
-/// Push one injection, drawing a jittered virtual timestamp coupled to
-/// the wall-clock arrival (as `sim::workload` does).
-fn inject(
-    out: &mut Vec<Injection>,
-    options: &ScenarioOptions,
-    rng: &mut Pcg32,
-    lp: NodeId,
-    at_tick: u64,
-) {
-    let thread = out.len() as u64 + 1;
-    let ts_base = (at_tick as f64 * options.ts_rate) as u64;
-    // gen_range is inclusive on both ends: jitter lands in [0, ts_jitter).
-    let ts = ts_base + rng.gen_range(0, options.ts_jitter.max(1) - 1);
-    out.push(Injection {
-        at_tick,
-        lp,
-        event: Event::injection(thread, ts, options.hop_limit),
-    });
-}
-
 /// Uniform wall tick within `[lo, hi)`.
 fn tick_in(rng: &mut Pcg32, lo: u64, hi: u64) -> u64 {
     rng.gen_range(lo, hi.max(lo + 1) - 1)
 }
 
-fn build_hotspot_shift(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
-    let n = g.node_count();
-    let centers = far_apart_centers(g, options.phases, rng);
-    let phase_regions: Vec<Vec<NodeId>> =
-        centers.iter().map(|&c| bfs_ball(g, c, options.region_radius)).collect();
-    let phase_len = (options.horizon_ticks / options.phases as u64).max(1);
-
-    let mut injections = Vec::with_capacity(options.threads);
-    for _ in 0..options.threads {
-        let at_tick = tick_in(rng, 0, options.horizon_ticks);
-        let phase = ((at_tick / phase_len) as usize).min(options.phases - 1);
-        let lp = if rng.chance(options.hot_fraction) {
-            let region = &phase_regions[phase];
-            region[rng.index(region.len())]
-        } else {
-            rng.index(n)
-        };
-        inject(&mut injections, options, rng, lp, at_tick);
-    }
-    Scenario {
-        kind: ScenarioKind::HotspotShift,
-        injections,
-        phase_regions,
-        horizon_ticks: options.horizon_ticks,
-    }
+/// Per-mille hot fraction of `options`.
+fn hot_pm_of(options: &ScenarioOptions) -> u32 {
+    (options.hot_fraction.clamp(0.0, 1.0) * 1000.0).round() as u32
 }
 
-fn build_flash_crowd(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
-    let n = g.node_count();
-    let crowd_center = rng.index(n);
-    let crowd = bfs_ball(g, crowd_center, options.region_radius);
-    // The crowd bursts in the middle fifth of the horizon.
-    let burst_lo = options.horizon_ticks * 2 / 5;
-    let burst_hi = options.horizon_ticks * 3 / 5;
-    let crowd_threads = (options.threads as f64 * options.hot_fraction * 0.7) as usize;
-
-    let mut injections = Vec::with_capacity(options.threads);
-    for t in 0..options.threads {
-        if t < crowd_threads {
-            let at_tick = tick_in(rng, burst_lo, burst_hi);
-            let lp = crowd[rng.index(crowd.len())];
-            inject(&mut injections, options, rng, lp, at_tick);
-        } else {
-            let at_tick = tick_in(rng, 0, options.horizon_ticks);
-            let lp = rng.index(n);
-            inject(&mut injections, options, rng, lp, at_tick);
-        }
-    }
-    Scenario {
-        kind: ScenarioKind::FlashCrowd,
-        injections,
-        phase_regions: vec![crowd],
-        horizon_ticks: options.horizon_ticks,
-    }
+/// Split `total` threads over `parts` consecutive shares (each at least
+/// one).
+fn split_threads(total: usize, parts: usize) -> Vec<u32> {
+    let parts = parts.max(1);
+    (0..parts)
+        .map(|p| {
+            let lo = total * p / parts;
+            let hi = total * (p + 1) / parts;
+            (hi - lo).max(1) as u32
+        })
+        .collect()
 }
 
-fn build_diurnal_ramp(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
-    let n = g.node_count();
-    let centers = far_apart_centers(g, options.phases, rng);
-    let phase_regions: Vec<Vec<NodeId>> =
-        centers.iter().map(|&c| bfs_ball(g, c, options.region_radius)).collect();
-    let phase_len = (options.horizon_ticks / options.phases as u64).max(1);
+/// Per-mille `(start, len)` windows tiling the horizon over `phases`
+/// (shared with `sim::fuzz`'s seed template).
+pub(crate) fn phase_windows(phases: usize) -> Vec<(u32, u32)> {
+    (0..phases)
+        .map(|p| {
+            let start = (1000 * p / phases) as u32;
+            let end = (1000 * (p + 1) / phases) as u32;
+            (start, (end - start).max(1))
+        })
+        .collect()
+}
 
-    // Triangular intensity profile over phases: 1, 2, ..., peak, ..., 2, 1.
-    let weights: Vec<f64> = (0..options.phases)
-        .map(|p| 1.0 + p.min(options.phases - 1 - p) as f64)
+fn genome_hotspot_shift(
+    g: &Graph,
+    options: &ScenarioOptions,
+    rng: &mut Pcg32,
+) -> (DriftSchedule, Vec<Vec<NodeId>>) {
+    let phases = options.phases.clamp(1, 1000);
+    let mut schedule = DriftSchedule::shell(options, rng);
+    let centers = far_apart_centers(g, phases, rng);
+    let regions: Vec<Vec<NodeId>> =
+        centers.iter().map(|&c| bfs_ball(g, c, options.region_radius)).collect();
+    let hot_pm = hot_pm_of(options);
+    let shares = split_threads(options.threads, phases);
+    let windows = phase_windows(phases);
+    schedule.genes = (0..phases)
+        .map(|p| DriftGene {
+            kind: GeneKind::Hotspot,
+            start_pm: windows[p].0,
+            len_pm: windows[p].1,
+            center: centers[p],
+            radius: options.region_radius as u32,
+            threads: shares[p],
+            hot_pm,
+        })
         .collect();
-    let total_w: f64 = weights.iter().sum();
-
-    let mut injections = Vec::with_capacity(options.threads);
-    for (phase, w) in weights.iter().enumerate() {
-        let share = ((options.threads as f64) * w / total_w).round() as usize;
-        // Clamp the phase window inside the horizon: with more phases
-        // than ticks the trailing windows would otherwise start at (or
-        // past) the horizon and inject out-of-range ticks.
-        let lo = (phase as u64 * phase_len).min(options.horizon_ticks - 1);
-        let hi = if phase + 1 == options.phases {
-            options.horizon_ticks
-        } else {
-            (lo + phase_len).min(options.horizon_ticks)
-        };
-        for _ in 0..share.max(1) {
-            let at_tick = tick_in(rng, lo, hi);
-            let lp = if rng.chance(options.hot_fraction) {
-                let region = &phase_regions[phase];
-                region[rng.index(region.len())]
-            } else {
-                rng.index(n)
-            };
-            inject(&mut injections, options, rng, lp, at_tick);
-        }
-    }
-    Scenario {
-        kind: ScenarioKind::DiurnalRamp,
-        injections,
-        phase_regions,
-        horizon_ticks: options.horizon_ticks,
-    }
+    (schedule, regions)
 }
 
-fn build_failure_rejoin(g: &Graph, options: &ScenarioOptions, rng: &mut Pcg32) -> Scenario {
-    let n = g.node_count();
-    let centers = far_apart_centers(g, 2, rng);
-    let source_a = bfs_ball(g, centers[0], options.region_radius);
-    let source_b = bfs_ball(g, centers[1], options.region_radius);
-    // B is down during the middle window [35%, 70%); its traffic share
-    // shifts onto A (the survivor absorbs the load), then B rejoins.
-    let down_lo = options.horizon_ticks * 35 / 100;
-    let down_hi = options.horizon_ticks * 70 / 100;
+fn genome_flash_crowd(
+    g: &Graph,
+    options: &ScenarioOptions,
+    rng: &mut Pcg32,
+) -> (DriftSchedule, Vec<Vec<NodeId>>) {
+    let mut schedule = DriftSchedule::shell(options, rng);
+    let crowd_center = rng.index(g.node_count());
+    let crowd = bfs_ball(g, crowd_center, options.region_radius);
+    // The crowd bursts in the middle fifth of the horizon; per-mille
+    // window [400, 600) is exactly the old [2/5, 3/5) tick window.
+    let crowd_threads = (options.threads as f64 * options.hot_fraction * 0.7) as usize;
+    let background = options.threads.saturating_sub(crowd_threads);
+    schedule.genes = vec![
+        DriftGene {
+            kind: GeneKind::Background,
+            start_pm: 0,
+            len_pm: 1000,
+            center: crowd_center,
+            radius: 0,
+            threads: background.max(1) as u32,
+            hot_pm: 0,
+        },
+        DriftGene {
+            kind: GeneKind::Hotspot,
+            start_pm: 400,
+            len_pm: 200,
+            center: crowd_center,
+            radius: options.region_radius as u32,
+            threads: crowd_threads.max(1) as u32,
+            hot_pm: 1000,
+        },
+    ];
+    (schedule, vec![crowd])
+}
 
-    let mut injections = Vec::with_capacity(options.threads);
-    for _ in 0..options.threads {
-        let at_tick = tick_in(rng, 0, options.horizon_ticks);
-        let b_down = at_tick >= down_lo && at_tick < down_hi;
-        let lp = if rng.chance(options.hot_fraction) {
-            let region = if b_down || rng.chance(0.5) { &source_a } else { &source_b };
-            region[rng.index(region.len())]
-        } else {
-            rng.index(n)
-        };
-        inject(&mut injections, options, rng, lp, at_tick);
-    }
-    Scenario {
-        kind: ScenarioKind::FailureRejoin,
-        injections,
-        phase_regions: vec![source_a, source_b],
-        horizon_ticks: options.horizon_ticks,
-    }
+fn genome_diurnal_ramp(
+    g: &Graph,
+    options: &ScenarioOptions,
+    rng: &mut Pcg32,
+) -> (DriftSchedule, Vec<Vec<NodeId>>) {
+    let phases = options.phases.clamp(1, 1000);
+    let mut schedule = DriftSchedule::shell(options, rng);
+    let centers = far_apart_centers(g, phases, rng);
+    let regions: Vec<Vec<NodeId>> =
+        centers.iter().map(|&c| bfs_ball(g, c, options.region_radius)).collect();
+    // Triangular intensity profile over phases: 1, 2, ..., peak, ..., 2, 1.
+    let weights: Vec<f64> =
+        (0..phases).map(|p| 1.0 + p.min(phases - 1 - p) as f64).collect();
+    let total_w: f64 = weights.iter().sum();
+    let windows = phase_windows(phases);
+    let hot_pm = hot_pm_of(options);
+    schedule.genes = (0..phases)
+        .map(|p| DriftGene {
+            kind: GeneKind::Hotspot,
+            start_pm: windows[p].0,
+            len_pm: windows[p].1,
+            center: centers[p],
+            radius: options.region_radius as u32,
+            threads: ((options.threads as f64 * weights[p] / total_w).round() as u32).max(1),
+            hot_pm,
+        })
+        .collect();
+    (schedule, regions)
+}
+
+fn genome_failure_rejoin(
+    g: &Graph,
+    options: &ScenarioOptions,
+    rng: &mut Pcg32,
+) -> (DriftSchedule, Vec<Vec<NodeId>>) {
+    let mut schedule = DriftSchedule::shell(options, rng);
+    let centers = far_apart_centers(g, 2, rng);
+    let (a, b) = (centers[0], centers[1]);
+    let source_a = bfs_ball(g, a, options.region_radius);
+    let source_b = bfs_ball(g, b, options.region_radius);
+    let radius = options.region_radius as u32;
+    // B is down during the middle window [350, 700)‰ — exactly the old
+    // [35%, 70%) tick window; its traffic share shifts onto A (the
+    // survivor absorbs the load), then B rejoins.
+    let hot_total = (options.threads as f64 * options.hot_fraction) as u32;
+    let background = (options.threads as u32).saturating_sub(hot_total).max(1);
+    let pre = (hot_total as f64 * 0.35) as u32;
+    let outage = pre;
+    let post = hot_total.saturating_sub(pre + outage);
+    let hot = |start_pm: u32, len_pm: u32, center: NodeId, threads: u32| DriftGene {
+        kind: GeneKind::Hotspot,
+        start_pm,
+        len_pm,
+        center,
+        radius,
+        threads: threads.max(1),
+        hot_pm: 1000,
+    };
+    schedule.genes = vec![
+        DriftGene {
+            kind: GeneKind::Background,
+            start_pm: 0,
+            len_pm: 1000,
+            center: a,
+            radius: 0,
+            threads: background,
+            hot_pm: 0,
+        },
+        hot(0, 350, a, pre / 2),
+        hot(0, 350, b, pre - pre / 2),
+        hot(350, 350, a, outage),
+        hot(700, 300, a, post / 2),
+        hot(700, 300, b, post - post / 2),
+    ];
+    (schedule, vec![source_a, source_b])
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::generators::preferential_attachment;
+    use crate::util::bench::parse_json;
 
     fn graph() -> Graph {
         let mut rng = Pcg32::new(1);
@@ -375,6 +801,7 @@ mod tests {
             let mut rng = Pcg32::new(3);
             let s = Scenario::build(kind, &g, &opts, &mut rng);
             assert!(!s.is_empty(), "{kind}: empty schedule");
+            s.schedule.validate(g.node_count()).unwrap_or_else(|e| panic!("{kind}: {e}"));
             let mut threads: Vec<u64> =
                 s.injections.iter().map(|i| i.event.thread).collect();
             threads.sort_unstable();
@@ -394,6 +821,7 @@ mod tests {
         for kind in ScenarioKind::ALL {
             let a = build(kind, 7);
             let b = build(kind, 7);
+            assert_eq!(a.schedule, b.schedule, "{kind}: genome differs across builds");
             assert_eq!(a.injections.len(), b.injections.len());
             for (x, y) in a.injections.iter().zip(&b.injections) {
                 assert_eq!((x.at_tick, x.lp, x.event), (y.at_tick, y.lp, y.event));
@@ -502,5 +930,171 @@ mod tests {
             assert_eq!(parsed, kind);
         }
         assert!("bogus".parse::<ScenarioKind>().is_err());
+        for kind in GeneKind::ALL {
+            let parsed: GeneKind = kind.name().parse().unwrap();
+            assert_eq!(parsed, kind);
+        }
+        assert!("bogus".parse::<GeneKind>().is_err());
+    }
+
+    // ------------------------------------------------------------------
+    // Genome-level tests
+    // ------------------------------------------------------------------
+
+    fn sample_schedule(seed: u64) -> DriftSchedule {
+        DriftSchedule {
+            seed,
+            horizon_ticks: 900,
+            hop_limit: 4,
+            ts_rate_pm: 500,
+            ts_jitter: 8,
+            genes: vec![
+                DriftGene {
+                    kind: GeneKind::Background,
+                    start_pm: 0,
+                    len_pm: 1000,
+                    center: 0,
+                    radius: 0,
+                    threads: 20,
+                    hot_pm: 0,
+                },
+                DriftGene {
+                    kind: GeneKind::Hotspot,
+                    start_pm: 100,
+                    len_pm: 300,
+                    center: 42,
+                    radius: 1,
+                    threads: 30,
+                    hot_pm: 1000,
+                },
+                DriftGene {
+                    kind: GeneKind::Surge,
+                    start_pm: 500,
+                    len_pm: 250,
+                    center: 97,
+                    radius: 2,
+                    threads: 25,
+                    hot_pm: 900,
+                },
+                DriftGene {
+                    kind: GeneKind::Noise,
+                    start_pm: 800,
+                    len_pm: 200,
+                    center: 0,
+                    radius: 0,
+                    threads: 10,
+                    hot_pm: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_valid() {
+        let g = graph();
+        let s = sample_schedule(99);
+        s.validate(g.node_count()).unwrap();
+        let a = s.compile(&g);
+        let b = s.compile(&g);
+        assert_eq!(a.len() as u64, s.total_threads());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.at_tick, x.lp, x.event), (y.at_tick, y.lp, y.event));
+        }
+        for inj in &a {
+            assert!(inj.at_tick < s.horizon_ticks);
+            assert!(inj.lp < g.node_count());
+        }
+    }
+
+    #[test]
+    fn gene_streams_are_deletion_independent() {
+        let g = graph();
+        let full = sample_schedule(7);
+        let full_inj = full.compile(&g);
+        // Drop the hotspot gene: every other gene's injections must be
+        // unchanged modulo thread-id renumbering.
+        let mut pruned = full.clone();
+        pruned.genes.remove(1);
+        let pruned_inj = pruned.compile(&g);
+        let key = |i: &Injection| (i.at_tick, i.lp, i.event.time, i.event.count);
+        let survivors: Vec<_> = full_inj[..20]
+            .iter()
+            .chain(&full_inj[50..])
+            .map(key)
+            .collect();
+        let pruned_keys: Vec<_> = pruned_inj.iter().map(key).collect();
+        assert_eq!(survivors, pruned_keys, "deleting one gene perturbed another");
+    }
+
+    #[test]
+    fn schedule_json_round_trips_exactly() {
+        let s = sample_schedule(u64::MAX - 17);
+        let text = s.to_json().render();
+        let back = DriftSchedule::from_json(&parse_json(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_genomes() {
+        let g = graph();
+        let n = g.node_count();
+        let good = sample_schedule(1);
+        good.validate(n).unwrap();
+        let mut empty = good.clone();
+        empty.genes.clear();
+        assert!(empty.validate(n).is_err(), "empty gene list accepted");
+        let mut non_monotone = good.clone();
+        non_monotone.genes.swap(1, 2);
+        assert!(non_monotone.validate(n).is_err(), "non-monotone starts accepted");
+        let mut oob = good.clone();
+        oob.genes[1].center = n;
+        assert!(oob.validate(n).is_err(), "out-of-range center accepted");
+        let mut overhang = good.clone();
+        overhang.genes[1].start_pm = 900;
+        overhang.genes[1].len_pm = 200;
+        overhang.sort_genes();
+        assert!(overhang.validate(n).is_err(), "window past horizon accepted");
+        let mut dead = good.clone();
+        dead.genes[1].threads = 0;
+        assert!(dead.validate(n).is_err(), "zero-thread gene accepted");
+    }
+
+    #[test]
+    fn windows_stay_inside_the_horizon() {
+        for horizon in [1u64, 7, 900, 2_400] {
+            for (start, len) in [(0u32, 1u32), (0, 1000), (999, 1), (400, 200), (750, 250)] {
+                let gene = DriftGene {
+                    kind: GeneKind::Hotspot,
+                    start_pm: start,
+                    len_pm: len,
+                    center: 0,
+                    radius: 0,
+                    threads: 1,
+                    hot_pm: 0,
+                };
+                let (lo, hi) = gene.window(horizon);
+                assert!(lo < hi, "empty window for {start}+{len} on {horizon}");
+                assert!(hi <= horizon.max(lo + 1), "window past horizon");
+                assert!(lo < horizon, "window starts past horizon");
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_genomes_round_trip_through_json() {
+        let g = graph();
+        for kind in ScenarioKind::ALL {
+            let mut rng = Pcg32::new(23);
+            let (schedule, _) = kind.genome(&g, &ScenarioOptions::default(), &mut rng);
+            let text = schedule.to_json().render();
+            let back = DriftSchedule::from_json(&parse_json(&text).unwrap()).unwrap();
+            assert_eq!(back, schedule, "{kind}: genome JSON round trip drifted");
+            let a = schedule.compile(&g);
+            let b = back.compile(&g);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!((x.at_tick, x.lp, x.event), (y.at_tick, y.lp, y.event));
+            }
+        }
     }
 }

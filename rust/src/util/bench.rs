@@ -227,10 +227,14 @@ pub fn black_box<T>(x: T) -> T {
 }
 
 /// Minimal JSON value for the machine-readable bench reports
-/// (`results/BENCH_sim.json` & co). No serde offline, so this is the
-/// whole serializer: numbers, strings, bools, arrays, objects.
-#[derive(Debug, Clone)]
+/// (`results/BENCH_sim.json` & co) and the fuzz corpus
+/// (`results/fuzz_corpus/*.json`). No serde offline, so this is the
+/// whole document model: numbers, strings, bools, null, arrays,
+/// objects — with [`JsonVal::render`] as the serializer and
+/// [`parse_json`] as its parsing counterpart.
+#[derive(Debug, Clone, PartialEq)]
 pub enum JsonVal {
+    Null,
     Num(f64),
     Int(u64),
     Str(String),
@@ -262,6 +266,7 @@ impl JsonVal {
 
     fn render_into(&self, out: &mut String) {
         match self {
+            JsonVal::Null => out.push_str("null"),
             JsonVal::Num(x) => {
                 if x.is_finite() {
                     out.push_str(&format!("{x}"));
@@ -301,6 +306,282 @@ impl JsonVal {
             }
         }
     }
+
+    /// A copy with every object's keys recursively sorted — the
+    /// canonical form [`write_json_group`] persists so report files
+    /// diff cleanly across runs regardless of construction order.
+    pub fn sorted(&self) -> JsonVal {
+        match self {
+            JsonVal::Arr(xs) => JsonVal::Arr(xs.iter().map(JsonVal::sorted).collect()),
+            JsonVal::Obj(kvs) => {
+                let mut kvs: Vec<(String, JsonVal)> =
+                    kvs.iter().map(|(k, v)| (k.clone(), v.sorted())).collect();
+                kvs.sort_by(|a, b| a.0.cmp(&b.0));
+                JsonVal::Obj(kvs)
+            }
+            other => other.clone(),
+        }
+    }
+
+    /// Object field lookup (`None` for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&JsonVal> {
+        match self {
+            JsonVal::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonVal::Int(x) => Some(*x),
+            JsonVal::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonVal::Num(x) => Some(*x),
+            JsonVal::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonVal::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonVal::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonVal]> {
+        match self {
+            JsonVal::Arr(xs) => Some(xs.as_slice()),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, JsonVal::Null)
+    }
+}
+
+/// Parse a JSON document into a [`JsonVal`] — the counterpart of
+/// [`JsonVal::render`], used to load the fuzz corpus and bench
+/// reports. Number tokens that are plain non-negative integers parse
+/// as `Int` (so `u64` seeds round-trip exactly); everything else
+/// numeric parses as `Num`.
+pub fn parse_json(text: &str) -> Result<JsonVal, String> {
+    let mut p = JsonParser { bytes: text.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(format!("trailing characters at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct JsonParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", c as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: JsonVal) -> Result<JsonVal, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonVal::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonVal::Bool(true)),
+            Some(b'f') => self.literal("false", JsonVal::Bool(false)),
+            Some(b'n') => self.literal("null", JsonVal::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at byte {}", self.pos)),
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonVal, String> {
+        self.expect(b'{')?;
+        let mut kvs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonVal::Obj(kvs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            kvs.push((key, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonVal::Obj(kvs));
+                }
+                other => return Err(format!("expected ',' or '}}', got {other:?}")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonVal, String> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonVal::Arr(xs));
+        }
+        loop {
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonVal::Arr(xs));
+                }
+                other => return Err(format!("expected ',' or ']', got {other:?}")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(c) = self.peek() else {
+                return Err("unterminated string".into());
+            };
+            self.pos += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        return Err("unterminated escape".into());
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.hex4()?;
+                                0x10000 + ((hi - 0xD800) << 10) + (lo.wrapping_sub(0xDC00))
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| format!("bad \\u escape {code:#x}"))?,
+                            );
+                        }
+                        other => return Err(format!("bad escape \\{}", other as char)),
+                    }
+                }
+                c if c < 0x80 => out.push(c as char),
+                _ => {
+                    // Decode exactly this UTF-8 sequence (the lead byte
+                    // `c` was already consumed), not the whole tail.
+                    let start = self.pos - 1;
+                    let len = match c {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return Err(format!("invalid UTF-8 lead byte at {start}")),
+                    };
+                    let end = start + len;
+                    if end > self.bytes.len() {
+                        return Err("truncated UTF-8 sequence".into());
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|e| e.to_string())?;
+                    out.push(s.chars().next().expect("non-empty sequence"));
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let s = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|e| e.to_string())?;
+        let v = u32::from_str_radix(s, 16).map_err(|e| e.to_string())?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<JsonVal, String> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        if let Ok(i) = s.parse::<u64>() {
+            return Ok(JsonVal::Int(i));
+        }
+        s.parse::<f64>()
+            .map(JsonVal::Num)
+            .map_err(|e| format!("bad number {s:?}: {e}"))
+    }
 }
 
 /// Merge one named group into a line-oriented JSON report file so
@@ -308,7 +589,11 @@ impl JsonVal {
 /// (e.g. `bench_simulator` and `bench_dynamic` both filling
 /// `results/BENCH_sim.json`). Controlled format — `{`, one
 /// `"group": {...}` per line, `}` — rewritten wholesale on every call;
-/// an existing entry for `group` is replaced.
+/// an existing entry for `group` is replaced. The output is
+/// **deterministic**: groups are sorted by name and every object's
+/// keys are sorted on write (see [`JsonVal::sorted`]), so the file
+/// diffs cleanly no matter which binary wrote last or how the value
+/// was assembled.
 pub fn write_json_group(
     path: impl AsRef<std::path::Path>,
     group: &str,
@@ -320,7 +605,7 @@ pub fn write_json_group(
             std::fs::create_dir_all(dir)?;
         }
     }
-    // Existing groups, in file order, minus the one being replaced.
+    // Existing groups, minus the one being replaced.
     let mut entries: Vec<(String, String)> = Vec::new();
     if let Ok(existing) = std::fs::read_to_string(path) {
         for line in existing.lines() {
@@ -340,8 +625,9 @@ pub fn write_json_group(
     let mut new_line = String::from("\"");
     escape_json(group, &mut new_line);
     new_line.push_str("\": ");
-    value.render_into(&mut new_line);
+    value.sorted().render_into(&mut new_line);
     entries.push((group.to_string(), new_line));
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
 
     let mut out = String::from("{\n");
     for (i, (_, line)) in entries.iter().enumerate() {
@@ -414,6 +700,73 @@ mod tests {
         assert!(text.contains("\"alpha\": {\"x\":9}"), "bad merge: {text}");
         assert!(text.contains("\"beta\": {\"y\":2}"), "lost group: {text}");
         assert_eq!(text.matches("alpha").count(), 1);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn parse_json_round_trips_values() {
+        let v = JsonVal::Obj(vec![
+            ("seed".into(), JsonVal::Int(u64::MAX - 3)),
+            ("gap".into(), JsonVal::Num(1.2345678901234567)),
+            ("name".into(), JsonVal::Str("a\"b\\c\nd".into())),
+            ("flag".into(), JsonVal::Bool(false)),
+            ("nothing".into(), JsonVal::Null),
+            (
+                "xs".into(),
+                JsonVal::Arr(vec![JsonVal::Int(0), JsonVal::Num(0.5), JsonVal::Bool(true)]),
+            ),
+        ]);
+        let text = v.render();
+        let back = parse_json(&text).unwrap();
+        assert_eq!(back, v, "round trip drifted: {text}");
+        // u64 seeds survive exactly (not through f64).
+        assert_eq!(back.get("seed").and_then(JsonVal::as_u64), Some(u64::MAX - 3));
+        assert_eq!(back.get("gap").and_then(JsonVal::as_f64), Some(1.2345678901234567));
+        assert_eq!(back.get("name").and_then(JsonVal::as_str), Some("a\"b\\c\nd"));
+        assert!(back.get("nothing").is_some_and(JsonVal::is_null));
+    }
+
+    #[test]
+    fn parse_json_accepts_pretty_whitespace_and_rejects_garbage() {
+        let pretty = "{\n  \"a\": [1, 2.5,\t-3.0],\n  \"b\": { \"c\": null }\n}\n";
+        let v = parse_json(pretty).unwrap();
+        assert_eq!(v.get("a").and_then(JsonVal::as_arr).map(|a| a.len()), Some(3));
+        assert!(parse_json("{\"a\": }").is_err());
+        assert!(parse_json("[1, 2] trailing").is_err());
+        assert!(parse_json("").is_err());
+    }
+
+    #[test]
+    fn json_group_file_is_deterministic() {
+        let dir = std::env::temp_dir().join(format!("gtip_bench_det_{}", std::process::id()));
+        let path = dir.join("BENCH_det.json");
+        let scrambled = JsonVal::Obj(vec![
+            ("zeta".into(), JsonVal::Int(1)),
+            ("alpha".into(), JsonVal::Obj(vec![
+                ("y".into(), JsonVal::Int(2)),
+                ("x".into(), JsonVal::Int(3)),
+            ])),
+        ]);
+        // Write order A: beta then alpha.
+        let _ = std::fs::remove_file(&path);
+        write_json_group(&path, "beta", &scrambled).unwrap();
+        write_json_group(&path, "alpha", &JsonVal::Int(0)).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        // Write order B: alpha then beta.
+        let _ = std::fs::remove_file(&path);
+        write_json_group(&path, "alpha", &JsonVal::Int(0)).unwrap();
+        write_json_group(&path, "beta", &scrambled).unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(first, second, "merge order leaked into the artifact");
+        // Groups sorted, object keys sorted.
+        let a = first.find("\"alpha\"").unwrap();
+        let b = first.find("\"beta\"").unwrap();
+        assert!(a < b, "groups not sorted: {first}");
+        assert!(
+            first.contains("{\"alpha\":{\"x\":3,\"y\":2},\"zeta\":1}"),
+            "keys not sorted: {first}"
+        );
         let _ = std::fs::remove_file(&path);
         let _ = std::fs::remove_dir(&dir);
     }

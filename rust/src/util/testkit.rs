@@ -5,10 +5,12 @@
 //! "smaller" generator size hints (shrink-lite) and reports the seed of
 //! the failing case so it can be replayed as a deterministic unit test.
 
+use crate::game::cost::Framework;
 use crate::graph::generators::preferential_attachment;
 use crate::graph::Graph;
 use crate::partition::initial::grow_partition;
 use crate::partition::{MachineConfig, Partition};
+use crate::sim::fuzz::{self, EvalOptions, FuzzCase, Objectives};
 use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions};
 use crate::util::rng::Pcg32;
 
@@ -216,6 +218,52 @@ impl BuiltFixture {
             })
             .collect()
     }
+}
+
+/// Location of the persisted fuzz corpus, anchored at the crate root
+/// so tests and benches resolve it regardless of working directory.
+pub fn fuzz_corpus_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("results/fuzz_corpus")
+}
+
+/// The committed fuzz corpus: every `seed-*.json` entry under
+/// [`fuzz_corpus_dir`], in file-name order. The filter is applied to
+/// the **file name before parsing**, so locally-found (`found-*.json`)
+/// entries — even stale or malformed ones — can never change or break
+/// what the regression suites replay.
+pub fn committed_fuzz_corpus() -> Vec<FuzzCase> {
+    let dir = fuzz_corpus_dir();
+    let mut paths: Vec<std::path::PathBuf> = match std::fs::read_dir(&dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().is_some_and(|x| x == "json")
+                    && p.file_name()
+                        .and_then(|n| n.to_str())
+                        .is_some_and(|n| n.starts_with("seed-"))
+            })
+            .collect(),
+        Err(_) => return Vec::new(),
+    };
+    paths.sort();
+    paths
+        .iter()
+        .map(|p| {
+            FuzzCase::load(p)
+                .unwrap_or_else(|e| panic!("loading committed fuzz corpus: {e}"))
+        })
+        .collect()
+}
+
+/// Replay one corpus case under `framework` and return the measured
+/// objectives. Uses the case's stored evaluation settings (or the
+/// defaults) with the differential oracle forced on. Deterministic:
+/// two replays of the same case are bit-identical.
+pub fn replay_fuzz_case(case: &FuzzCase, framework: Framework) -> Objectives {
+    let eval = EvalOptions { framework, oracle: true, ..case.eval_options() };
+    fuzz::evaluate(&case.fixture, &case.schedule, &eval)
+        .unwrap_or_else(|e| panic!("replaying corpus case {:?}: {e}", case.name))
 }
 
 /// Helper: format an approximate-equality failure.

@@ -11,7 +11,7 @@ use gtip::sim::event::SimTime;
 use gtip::sim::reference::ReferenceEngine;
 use gtip::sim::scenario::ScenarioKind;
 use gtip::util::rng::Pcg32;
-use gtip::util::testkit::{BuiltFixture, ScenarioFixture};
+use gtip::util::testkit::{committed_fuzz_corpus, BuiltFixture, ScenarioFixture};
 
 /// Outcome triple the suite compares.
 #[derive(Debug, PartialEq)]
@@ -214,6 +214,55 @@ fn equivalence_on_randomized_fixtures() {
             assert_eq!(
                 reference, optimized,
                 "case {case} ({kind:?}, seed {seed:#x}) diverged at parallelism {parallelism}"
+            );
+        }
+    }
+}
+
+/// Corpus-driven differential case: every committed adversarial
+/// schedule from the fuzz corpus (`results/fuzz_corpus/seed-*.json`)
+/// keeps the optimized engine bit-identical to the naive reference —
+/// `SimStats`, `EpochCounters`, and final GVT — at parallelism 1/2/4.
+/// Worst-case drift found by search gets exactly the same equivalence
+/// guarantee as the hand-written scenarios above.
+#[test]
+fn corpus_schedules_match_reference_at_every_parallelism() {
+    let corpus = committed_fuzz_corpus();
+    assert!(!corpus.is_empty(), "committed fuzz corpus is empty");
+    for case in corpus {
+        let (graph, machines, initial) = case.fixture.build();
+        let injections = case.schedule.compile(&graph);
+
+        let mut reference = ReferenceEngine::new(
+            &graph,
+            machines.clone(),
+            initial.clone(),
+            options_with(1),
+            injections.clone(),
+        );
+        let ref_stats = reference.run_to_completion();
+        assert!(!ref_stats.truncated, "{}: reference truncated", case.name);
+        let expected = Outcome {
+            stats: ref_stats,
+            gvt: reference.gvt(),
+            epoch: reference.take_epoch_counters(),
+        };
+
+        for parallelism in [1usize, 2, 4] {
+            let mut engine = SimEngine::new(
+                &graph,
+                machines.clone(),
+                initial.clone(),
+                options_with(parallelism),
+                injections.clone(),
+            );
+            let stats = engine.run_to_completion();
+            let actual =
+                Outcome { stats, gvt: engine.gvt(), epoch: engine.take_epoch_counters() };
+            assert_eq!(
+                expected, actual,
+                "{} diverged from sim::reference at parallelism {parallelism}",
+                case.name
             );
         }
     }

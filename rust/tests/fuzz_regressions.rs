@@ -1,0 +1,92 @@
+//! Fuzz-corpus regression suite: the committed worst-case drift
+//! schedules (`results/fuzz_corpus/seed-*.json`) must keep replaying —
+//! deterministically (same seeds ⇒ byte-identical objectives), with
+//! per-epoch potential descent intact under both cost frameworks, and
+//! with the optimized engine still bit-identical to `sim::reference`
+//! (the differential oracle runs inside every replay).
+
+use gtip::game::cost::Framework;
+use gtip::sim::fuzz::{evaluate, FuzzCase};
+use gtip::util::bench::parse_json;
+use gtip::util::testkit::{committed_fuzz_corpus, fuzz_corpus_dir, replay_fuzz_case};
+
+#[test]
+fn committed_corpus_exists_and_validates() {
+    let corpus = committed_fuzz_corpus();
+    assert!(
+        !corpus.is_empty(),
+        "no seed-*.json schedules under {}",
+        fuzz_corpus_dir().display()
+    );
+    for case in &corpus {
+        assert!(case.name.starts_with("seed-"), "committed case misnamed: {}", case.name);
+        let (graph, machines, initial) = case.fixture.build();
+        assert_eq!(graph.node_count(), case.fixture.nodes);
+        assert_eq!(machines.count(), case.fixture.machines);
+        assert_eq!(initial.node_count(), graph.node_count());
+        case.schedule
+            .validate(graph.node_count())
+            .unwrap_or_else(|e| panic!("{}: invalid schedule: {e}", case.name));
+        let injections = case.schedule.compile(&graph);
+        assert_eq!(injections.len() as u64, case.schedule.total_threads());
+    }
+}
+
+/// Same seeds ⇒ byte-identical scores: two in-process replays under
+/// the case's stored evaluation settings agree on every objective bit,
+/// and any objectives stored in the corpus file match the measurement
+/// exactly.
+#[test]
+fn corpus_replays_byte_identically() {
+    for case in committed_fuzz_corpus() {
+        let eval = case.eval_options();
+        let a = evaluate(&case.fixture, &case.schedule, &eval).unwrap();
+        let b = evaluate(&case.fixture, &case.schedule, &eval).unwrap();
+        assert!(
+            a.bit_eq(&b),
+            "{}: non-deterministic replay:\n  {a:?}\n  {b:?}",
+            case.name
+        );
+        if let Some(stored) = &case.objectives {
+            assert!(
+                a.bit_eq(stored),
+                "{}: replay drifted from stored objectives:\n  stored   {stored:?}\n  measured {a:?}",
+                case.name
+            );
+        }
+        // The corpus file itself round-trips exactly through the JSON
+        // layer (what `gtip fuzz --replay` depends on).
+        let text = case.to_json().render();
+        let back = FuzzCase::from_json(&parse_json(&text).unwrap()).unwrap();
+        assert_eq!(back.schedule, case.schedule, "{}: schedule JSON drifted", case.name);
+        assert_eq!(back.fixture, case.fixture);
+    }
+}
+
+/// Thm 4.1 on every minimized schedule, both frameworks: no refinement
+/// epoch may raise the potential, the differential oracle must agree,
+/// and neither arm may hit the tick cap.
+#[test]
+fn corpus_descent_and_oracle_hold_both_frameworks() {
+    for case in committed_fuzz_corpus() {
+        for framework in [Framework::A, Framework::B] {
+            let obj = replay_fuzz_case(&case, framework);
+            assert_eq!(
+                obj.descent_violations, 0,
+                "{} ({framework}): potential descent violated: {obj:?}",
+                case.name
+            );
+            assert!(
+                !obj.oracle_divergence,
+                "{} ({framework}): optimized engine diverged from sim::reference",
+                case.name
+            );
+            assert!(
+                !obj.frozen_truncated && !obj.rebalanced_truncated,
+                "{} ({framework}): run truncated at the tick cap: {obj:?}",
+                case.name
+            );
+            assert!(obj.refinements > 0, "{} ({framework}): loop never refined", case.name);
+        }
+    }
+}

@@ -9,7 +9,9 @@ use gtip::graph::{metrics, Graph};
 use gtip::partition::{global_cost, MachineConfig, Partition};
 use gtip::sim::dynamic::{DynamicDriver, DynamicOptions, WeightEstimator};
 use gtip::sim::engine::SimOptions;
-use gtip::sim::scenario::ScenarioKind;
+use gtip::sim::fuzz::{shrink_steps, Mutator};
+use gtip::sim::scenario::{DriftSchedule, ScenarioKind};
+use gtip::util::bench::parse_json;
 use gtip::util::rng::Pcg32;
 use gtip::util::testkit::{assert_close, check_property, GenCtx, PropConfig, ScenarioFixture};
 
@@ -352,6 +354,80 @@ fn prop_resync_validate_under_adversarial_weights() {
             }
         }
         engine.validate().map_err(|e| format!("validate after run: {e}"))?;
+        Ok(())
+    });
+}
+
+/// Random mutator over a random node count, for the genome properties.
+fn gen_mutator(g: &mut GenCtx) -> Mutator {
+    Mutator {
+        nodes: g.usize_in(8, 8 + 4 * g.size.max(4)),
+        thread_budget: g.usize_in(4, 96) as u32,
+        epoch_pm: g.usize_in(1, 1000) as u32,
+        max_genes: g.usize_in(4, 16),
+    }
+}
+
+/// Genome operators preserve schedule validity: random generation,
+/// mutation, crossover, and every delta-debug shrink candidate keep
+/// monotone event times, in-range LP ids, and bounded fields.
+#[test]
+fn prop_genome_ops_preserve_validity() {
+    let config = PropConfig { cases: 64, ..Default::default() };
+    check_property("genome_ops_validity", config, |g| {
+        let mutator = gen_mutator(g);
+        let horizon = g.usize_in(100, 3_000) as u64;
+        let mut rng = g.rng.fork(0xFA22);
+        let a = mutator.random_schedule(horizon, 4, &mut rng);
+        a.validate(mutator.nodes).map_err(|e| format!("random: {e}"))?;
+        let mut m = a.clone();
+        for round in 0..g.usize_in(1, 6) {
+            m = mutator.mutate(&m, &mut rng);
+            m.validate(mutator.nodes)
+                .map_err(|e| format!("mutate round {round}: {e}"))?;
+        }
+        let b = mutator.random_schedule(horizon, 4, &mut rng);
+        let x = mutator.crossover(&m, &b, &mut rng);
+        x.validate(mutator.nodes).map_err(|e| format!("crossover: {e}"))?;
+        for (i, candidate) in shrink_steps(&x).into_iter().enumerate() {
+            candidate
+                .validate(mutator.nodes)
+                .map_err(|e| format!("shrink candidate {i}: {e}"))?;
+            // Shrink candidates must actually shrink.
+            let smaller = candidate.genes.len() < x.genes.len()
+                || candidate.total_threads() < x.total_threads()
+                || candidate.genes.iter().map(|g| g.len_pm as u64).sum::<u64>()
+                    < x.genes.iter().map(|g| g.len_pm as u64).sum::<u64>()
+                || candidate.genes.iter().map(|g| g.radius as u64).sum::<u64>()
+                    < x.genes.iter().map(|g| g.radius as u64).sum::<u64>();
+            if !smaller {
+                return Err(format!("shrink candidate {i} did not reduce the genome"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The genome serializes to JSON and back **exactly** (all-integer
+/// representation: no float round-trip risk), and the round-tripped
+/// genome compiles to the identical injection schedule.
+#[test]
+fn prop_genome_serialization_round_trips() {
+    let config = PropConfig { cases: 64, ..Default::default() };
+    check_property("genome_json_round_trip", config, |g| {
+        let mutator = gen_mutator(g);
+        let horizon = g.usize_in(100, 3_000) as u64;
+        let mut rng = g.rng.fork(0x5E41);
+        let mut schedule = mutator.random_schedule(horizon, 4, &mut rng);
+        for _ in 0..g.usize_in(0, 4) {
+            schedule = mutator.mutate(&schedule, &mut rng);
+        }
+        let text = schedule.to_json().render();
+        let parsed = parse_json(&text).map_err(|e| format!("parse: {e} in {text}"))?;
+        let back = DriftSchedule::from_json(&parsed).map_err(|e| format!("decode: {e}"))?;
+        if back != schedule {
+            return Err(format!("round trip drifted:\n  {schedule:?}\n  {back:?}"));
+        }
         Ok(())
     });
 }
