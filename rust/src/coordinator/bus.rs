@@ -1,15 +1,65 @@
-//! Message bus connecting machine actors: one mpsc queue per machine,
-//! shared overhead accounting, and optional injected per-message latency
-//! to emulate remotely-connected machines (the paper's Ethernet case).
+//! Message bus connecting machine actors.
+//!
+//! [`Bus`] is the transport abstraction the refinement protocol runs
+//! over: the in-process [`Endpoint`] here (one mpsc queue per machine,
+//! shared overhead accounting, optional injected per-message latency to
+//! emulate remotely-connected machines) and the real-socket
+//! [`crate::coordinator::net::TcpEndpoint`] both implement it, so
+//! `machine_loop` is written once and is oblivious to the transport.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::coordinator::protocol::{Message, OverheadStats};
 use crate::partition::MachineId;
 
-/// A machine's endpoint: its inbox plus senders to everyone.
+/// Result of a timeout-aware receive.
+#[derive(Debug)]
+pub enum RecvOutcome {
+    /// A protocol message arrived.
+    Msg(Message),
+    /// Nothing arrived within the timeout. A healthy ring always has a
+    /// message in flight, so this means a peer died or hung — the actor
+    /// loop bails out instead of deadlocking.
+    TimedOut,
+    /// The transport is gone (every sender dropped / socket closed).
+    Disconnected,
+}
+
+/// Transport seen by one machine actor. Exactly one receive primitive —
+/// the timeout-aware [`Bus::recv_timeout`] — so blocking-vs-polling
+/// duplication can't creep back into the protocol loop, and a dropped
+/// peer can never deadlock the TCP path.
+pub trait Bus {
+    /// This machine's id.
+    fn id(&self) -> MachineId;
+
+    /// Number of machines on the bus.
+    fn machine_count(&self) -> usize;
+
+    /// Send a message to machine `to` (recorded in the overhead stats;
+    /// `to == self.id()` loops back to the own inbox).
+    fn send(&self, to: MachineId, msg: Message);
+
+    /// Receive the next message, waiting at most `timeout`.
+    fn recv_timeout(&self, timeout: Duration) -> RecvOutcome;
+
+    /// Broadcast to every machine except self.
+    fn broadcast_others(&self, msg: &Message) {
+        for to in 0..self.machine_count() {
+            if to != self.id() {
+                self.send(to, msg.clone());
+            }
+        }
+    }
+}
+
+/// Timeout used by convenience blocking receives; effectively forever,
+/// but finite so a wedged test still terminates.
+const BLOCKING_RECV_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// A machine's in-process endpoint: its inbox plus senders to everyone.
 pub struct Endpoint {
     pub id: MachineId,
     inbox: Receiver<Message>,
@@ -18,9 +68,16 @@ pub struct Endpoint {
     latency: Duration,
 }
 
-impl Endpoint {
-    /// Send a message to machine `to` (recorded in the shared stats).
-    pub fn send(&self, to: MachineId, msg: Message) {
+impl Bus for Endpoint {
+    fn id(&self) -> MachineId {
+        self.id
+    }
+
+    fn machine_count(&self) -> usize {
+        self.peers.len()
+    }
+
+    fn send(&self, to: MachineId, msg: Message) {
         if !self.latency.is_zero() {
             std::thread::sleep(self.latency);
         }
@@ -29,28 +86,30 @@ impl Endpoint {
         let _ = self.peers[to].send(msg);
     }
 
-    /// Broadcast to every machine except self.
-    pub fn broadcast_others(&self, msg: &Message) {
-        for to in 0..self.peers.len() {
-            if to != self.id {
-                self.send(to, msg.clone());
-            }
+    fn recv_timeout(&self, timeout: Duration) -> RecvOutcome {
+        match self.inbox.recv_timeout(timeout) {
+            Ok(msg) => RecvOutcome::Msg(msg),
+            Err(RecvTimeoutError::Timeout) => RecvOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => RecvOutcome::Disconnected,
+        }
+    }
+}
+
+impl Endpoint {
+    /// Blocking receive (thin wrapper over [`Bus::recv_timeout`]).
+    pub fn recv(&self) -> Option<Message> {
+        match Bus::recv_timeout(self, BLOCKING_RECV_TIMEOUT) {
+            RecvOutcome::Msg(m) => Some(m),
+            _ => None,
         }
     }
 
-    /// Blocking receive.
-    pub fn recv(&self) -> Option<Message> {
-        self.inbox.recv().ok()
-    }
-
-    /// Non-blocking receive.
+    /// Non-blocking receive (thin wrapper over [`Bus::recv_timeout`]).
     pub fn try_recv(&self) -> Option<Message> {
-        self.inbox.try_recv().ok()
-    }
-
-    /// Number of machines on the bus.
-    pub fn machine_count(&self) -> usize {
-        self.peers.len()
+        match Bus::recv_timeout(self, Duration::ZERO) {
+            RecvOutcome::Msg(m) => Some(m),
+            _ => None,
+        }
     }
 }
 
@@ -84,14 +143,18 @@ pub fn build_bus(k: usize, latency: Duration) -> (Vec<Endpoint>, Arc<Mutex<Overh
 mod tests {
     use super::*;
 
+    fn shutdown() -> Message {
+        Message::Shutdown { total_transfers: 0, converged: true }
+    }
+
     #[test]
     fn point_to_point_delivery() {
         let (mut eps, _) = build_bus(3, Duration::ZERO);
         let c = eps.pop().unwrap();
         let b = eps.pop().unwrap();
         let a = eps.pop().unwrap();
-        a.send(1, Message::Shutdown);
-        assert!(matches!(b.recv(), Some(Message::Shutdown)));
+        a.send(1, shutdown());
+        assert!(matches!(b.recv(), Some(Message::Shutdown { .. })));
         assert!(c.try_recv().is_none());
     }
 
@@ -101,9 +164,9 @@ mod tests {
         let c = eps.pop().unwrap();
         let b = eps.pop().unwrap();
         let a = eps.pop().unwrap();
-        a.broadcast_others(&Message::Shutdown);
-        assert!(matches!(b.recv(), Some(Message::Shutdown)));
-        assert!(matches!(c.recv(), Some(Message::Shutdown)));
+        a.broadcast_others(&shutdown());
+        assert!(matches!(b.recv(), Some(Message::Shutdown { .. })));
+        assert!(matches!(c.recv(), Some(Message::Shutdown { .. })));
         assert!(a.try_recv().is_none());
     }
 
@@ -131,5 +194,17 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn recv_timeout_reports_timeout_on_silence() {
+        // A dead/silent peer shows up as TimedOut, the signal the actor
+        // loop turns into a bounded exit instead of a deadlock. (Full
+        // Disconnected needs every sender gone, which the in-process
+        // bus only sees at teardown.)
+        let (eps, _) = build_bus(2, Duration::ZERO);
+        let started = std::time::Instant::now();
+        assert!(matches!(eps[1].recv_timeout(Duration::from_millis(10)), RecvOutcome::TimedOut));
+        assert!(started.elapsed() < Duration::from_secs(5));
     }
 }

@@ -1,8 +1,8 @@
-//! The distributed refinement driver: spawns one thread per machine,
+//! The distributed refinement driver: spawns one actor per machine,
 //! runs the Fig. 2 trigger protocol to convergence, and assembles the
 //! refined partition (plus measured synchronization overhead).
 //!
-//! Protocol per machine thread (Fig. 2 verbatim, with a convergence
+//! Protocol per machine actor (Fig. 2 verbatim, with a convergence
 //! counter riding on the token):
 //!
 //! ```text
@@ -17,15 +17,30 @@
 //!        send TakeMyTurnTrigger to the next machine
 //! until convergence (token records K consecutive forfeits)
 //! ```
+//!
+//! [`machine_loop`] is generic over [`Bus`], so the same loop runs on
+//! the in-process mpsc ring ([`build_bus`]) and on real TCP sockets
+//! ([`crate::coordinator::net`]). Two transport realities it absorbs:
+//!
+//! * **Reordering** — TCP gives FIFO per connection but nothing across
+//!   connections, so transfers apply strictly in their global sequence
+//!   order (buffered in a tiny map until in order), the turn token is
+//!   deferred until the replica has caught up to the token's transfer
+//!   count, and `Shutdown` only takes effect once the announced total
+//!   has been applied. On the in-process bus all of this is a no-op.
+//! * **Peer loss** — every receive goes through the single
+//!   timeout-aware [`Bus::recv_timeout`]; a dead peer turns into a
+//!   bounded [`LoopOutcome::timed_out`] exit instead of a deadlock.
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::bus::{build_bus, Endpoint};
+use crate::coordinator::bus::{build_bus, Bus, RecvOutcome};
 use crate::coordinator::machine::{MachineActor, TurnDecision};
 use crate::coordinator::protocol::{Message, OverheadStats};
 use crate::game::cost::Framework;
-use crate::graph::Graph;
+use crate::graph::{Graph, NodeId};
 use crate::partition::{MachineConfig, MachineId, Partition};
 
 /// Options for a distributed run.
@@ -35,10 +50,15 @@ pub struct DistributedOptions {
     pub framework: Framework,
     /// Dissatisfaction threshold treated as zero.
     pub epsilon: f64,
-    /// Injected per-message latency (0 = local cluster).
+    /// Injected per-message latency (0 = local cluster; ignored by the
+    /// TCP transport, which has real latency).
     pub latency: Duration,
     /// Safety cap on total transfers.
     pub max_transfers: usize,
+    /// How long an actor waits for the next trigger before concluding a
+    /// peer died. A healthy ring always has a message in flight, so
+    /// this only fires on failure.
+    pub recv_timeout: Duration,
 }
 
 impl Default for DistributedOptions {
@@ -49,6 +69,7 @@ impl Default for DistributedOptions {
             epsilon: 1e-9,
             latency: Duration::ZERO,
             max_transfers: 1_000_000,
+            recv_timeout: Duration::from_secs(30),
         }
     }
 }
@@ -60,33 +81,79 @@ pub struct DistributedReport {
     pub partition: Partition,
     /// Total transfers executed across machines.
     pub transfers: usize,
-    /// Measured message/byte counts per type.
+    /// Measured message/byte counts per type (exact wire bytes).
     pub overhead: OverheadStats,
     /// True if the ring detected convergence (vs hitting the cap).
     pub converged: bool,
+    /// True if any actor gave up waiting on a dead peer.
+    pub timed_out: bool,
 }
 
-/// One machine's thread body. Returns its final local assignment replica
-/// and transfer count for the leader to assemble + cross-check.
-fn machine_loop(
+/// What one actor's [`machine_loop`] ended with.
+#[derive(Debug, Clone)]
+pub struct LoopOutcome {
+    /// The actor's final local assignment replica.
+    pub assignment: Vec<MachineId>,
+    /// Transfers this actor executed itself.
+    pub transfers_made: usize,
+    /// Transfers this actor applied to its replica — the global total
+    /// at a clean exit (every transfer reaches every replica).
+    pub transfers_applied: u64,
+    /// Saw convergence (received `Shutdown`, or detected K forfeits).
+    pub converged: bool,
+    /// Gave up waiting on a peer.
+    pub timed_out: bool,
+}
+
+/// A transfer waiting to be applied in global sequence order.
+type PendingTransfer = (NodeId, MachineId, MachineId, Option<Vec<f64>>);
+
+/// One machine's actor loop over any [`Bus`]. Public because the TCP
+/// leader (`coordinator::net`) and the multi-process `gtip serve`
+/// worker drive it directly with a single endpoint, and failure tests
+/// run it against partially-dead rings.
+pub fn machine_loop<B: Bus>(
     mut actor: MachineActor,
-    endpoint: Endpoint,
+    bus: &B,
     epsilon: f64,
     max_transfers: usize,
-) -> (Vec<MachineId>, usize, bool) {
-    let k = endpoint.machine_count();
+    recv_timeout: Duration,
+) -> LoopOutcome {
+    let k = bus.machine_count();
     let mut converged = false;
-    while let Some(msg) = endpoint.recv() {
-        match msg {
-            Message::ReceiveNode { node, from, to } => {
-                actor.apply_local_transfer(node, from, to);
-            }
-            Message::RegularUpdate { node, from, to, loads } => {
-                actor.apply_local_transfer(node, from, to);
+    let mut timed_out = false;
+    // Next global transfer sequence number to apply locally.
+    let mut next_seq: u64 = 0;
+    // Transfers that arrived ahead of order (cross-connection races on
+    // real sockets; always empty on the in-process bus).
+    let mut pending: BTreeMap<u64, PendingTransfer> = BTreeMap::new();
+    // A turn token held back until the replica catches up with it.
+    let mut token: Option<(usize, usize)> = None;
+    // Shutdown announcement: stop once `next_seq` reaches the total
+    // (the flag records whether the ring converged or hit the cap).
+    let mut shutdown_at: Option<(u64, bool)> = None;
+
+    loop {
+        // Apply every transfer that is now in order.
+        while let Some((node, from, to, loads)) = pending.remove(&next_seq) {
+            actor.apply_local_transfer(node, from, to);
+            if let Some(loads) = loads {
                 debug_assert!(actor.loads_agree(&loads), "aggregate-state divergence");
                 let _ = loads;
             }
-            Message::TakeMyTurn { consecutive_forfeits, transfers_so_far } => {
+            next_seq += 1;
+        }
+        // Honor a shutdown once the replica has the announced total.
+        if let Some((total, was_convergence)) = shutdown_at {
+            if next_seq >= total {
+                converged = was_convergence;
+                break;
+            }
+        }
+        // Take a held turn once every earlier transfer is applied.
+        if let Some((consecutive_forfeits, transfers_so_far)) = token {
+            if next_seq >= transfers_so_far as u64 {
+                token = None;
                 let decision = if transfers_so_far >= max_transfers {
                     TurnDecision::Forfeit // cap reached: drain to shutdown
                 } else {
@@ -95,9 +162,12 @@ fn machine_loop(
                 let next = (actor.id + 1) % k;
                 match decision {
                     TurnDecision::Transfer { node, to, .. } => {
+                        let seq = transfers_so_far as u64;
+                        next_seq = seq + 1; // executed locally by take_turn
                         let total_transfers = transfers_so_far + 1;
-                        endpoint.send(to, Message::ReceiveNode { node, from: actor.id, to });
+                        bus.send(to, Message::ReceiveNode { seq, node, from: actor.id, to });
                         let update = Message::RegularUpdate {
+                            seq,
                             node,
                             from: actor.id,
                             to,
@@ -105,15 +175,18 @@ fn machine_loop(
                         };
                         for m in 0..k {
                             if m != actor.id && m != to {
-                                endpoint.send(m, update.clone());
+                                bus.send(m, update.clone());
                             }
                         }
                         if total_transfers >= max_transfers {
-                            // Cap reached: shut the ring down.
-                            endpoint.broadcast_others(&Message::Shutdown);
+                            // Cap reached (not convergence): shut down.
+                            bus.broadcast_others(&Message::Shutdown {
+                                total_transfers: total_transfers as u64,
+                                converged: false,
+                            });
                             break;
                         }
-                        endpoint.send(
+                        bus.send(
                             next,
                             Message::TakeMyTurn {
                                 consecutive_forfeits: 0,
@@ -125,43 +198,74 @@ fn machine_loop(
                         let f = consecutive_forfeits + 1;
                         if f >= k {
                             converged = true;
-                            endpoint.broadcast_others(&Message::Shutdown);
+                            bus.broadcast_others(&Message::Shutdown {
+                                total_transfers: transfers_so_far as u64,
+                                converged: true,
+                            });
                             break;
                         }
-                        endpoint.send(
+                        bus.send(
                             next,
                             Message::TakeMyTurn { consecutive_forfeits: f, transfers_so_far },
                         );
                     }
                 }
-            }
-            Message::Shutdown => {
-                converged = true;
-                break;
+                continue;
             }
         }
+        match bus.recv_timeout(recv_timeout) {
+            RecvOutcome::Msg(Message::ReceiveNode { seq, node, from, to }) => {
+                pending.insert(seq, (node, from, to, None));
+            }
+            RecvOutcome::Msg(Message::RegularUpdate { seq, node, from, to, loads }) => {
+                pending.insert(seq, (node, from, to, Some(loads)));
+            }
+            RecvOutcome::Msg(Message::TakeMyTurn { consecutive_forfeits, transfers_so_far }) => {
+                token = Some((consecutive_forfeits, transfers_so_far));
+            }
+            RecvOutcome::Msg(Message::Shutdown { total_transfers, converged }) => {
+                shutdown_at = Some((total_transfers, converged));
+            }
+            RecvOutcome::TimedOut => {
+                timed_out = true;
+                break;
+            }
+            RecvOutcome::Disconnected => break,
+        }
     }
-    (actor.assignment().to_vec(), actor.transfers_made, converged)
+    LoopOutcome {
+        assignment: actor.assignment().to_vec(),
+        transfers_made: actor.transfers_made,
+        transfers_applied: next_seq,
+        converged,
+        timed_out,
+    }
 }
 
-/// Run the distributed refinement protocol to convergence.
-pub fn run_distributed(
+/// Run the full K-actor protocol over a prebuilt set of endpoints (one
+/// per machine, any transport) and assemble the report. `stats` is the
+/// accounting handle shared by (or aggregating over) the endpoints.
+pub fn run_over_endpoints<B>(
+    endpoints: Vec<B>,
     graph: Arc<Graph>,
     machines: &MachineConfig,
     initial: Partition,
     options: &DistributedOptions,
-) -> DistributedReport {
+    stats: Arc<Mutex<OverheadStats>>,
+) -> DistributedReport
+where
+    B: Bus + Send + 'static,
+{
     let k = machines.count();
-    let (endpoints, stats) = build_bus(k, options.latency);
+    assert_eq!(endpoints.len(), k, "need one endpoint per machine");
 
     // Kick the ring: machine 0 takes the first turn.
-    endpoints[0]
-        .peers_send_self(Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+    endpoints[0].send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
 
     let mut handles = Vec::with_capacity(k);
     for endpoint in endpoints {
         let actor = MachineActor::new(
-            endpoint.id,
+            endpoint.id(),
             Arc::clone(&graph),
             machines.clone(),
             &initial,
@@ -170,35 +274,47 @@ pub fn run_distributed(
         );
         let epsilon = options.epsilon;
         let max_transfers = options.max_transfers;
+        let recv_timeout = options.recv_timeout;
         handles.push(std::thread::spawn(move || {
-            machine_loop(actor, endpoint, epsilon, max_transfers)
+            machine_loop(actor, &endpoint, epsilon, max_transfers, recv_timeout)
         }));
     }
 
-    let mut assignments: Vec<(Vec<MachineId>, usize, bool)> = Vec::with_capacity(k);
+    let mut outcomes: Vec<LoopOutcome> = Vec::with_capacity(k);
     for h in handles {
-        assignments.push(h.join().expect("machine thread panicked"));
+        outcomes.push(h.join().expect("machine thread panicked"));
     }
 
-    // All replicas must agree; assemble the final partition from any.
-    let reference = assignments[0].0.clone();
-    for (a, _, _) in &assignments {
-        assert_eq!(a, &reference, "machine replicas diverged");
+    let timed_out = outcomes.iter().any(|o| o.timed_out);
+    if !timed_out {
+        // All replicas must agree on a clean exit.
+        let reference = &outcomes[0].assignment;
+        for o in &outcomes {
+            assert_eq!(&o.assignment, reference, "machine replicas diverged");
+            debug_assert_eq!(
+                o.transfers_applied, outcomes[0].transfers_applied,
+                "replicas applied different transfer totals"
+            );
+        }
     }
-    let transfers: usize = assignments.iter().map(|(_, t, _)| *t).sum();
-    let converged = assignments.iter().any(|(_, _, c)| *c);
-    let partition = Partition::from_assignment(&graph, k, reference);
+    let transfers: usize = outcomes.iter().map(|o| o.transfers_made).sum();
+    let converged = !timed_out && outcomes.iter().any(|o| o.converged);
+    let partition = Partition::from_assignment(&graph, k, outcomes[0].assignment.clone());
     let overhead = stats.lock().expect("stats").clone();
-    DistributedReport { partition, transfers, overhead, converged }
+    DistributedReport { partition, transfers, overhead, converged, timed_out }
 }
 
-impl Endpoint {
-    /// Send a message to *this* endpoint's own inbox (used by the leader
-    /// to inject the initial token before handing the endpoint to its
-    /// thread).
-    pub fn peers_send_self(&self, msg: Message) {
-        self.send(self.id, msg);
-    }
+/// Run the distributed refinement protocol to convergence on the
+/// in-process thread ring.
+pub fn run_distributed(
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    options: &DistributedOptions,
+) -> DistributedReport {
+    let k = machines.count();
+    let (endpoints, stats) = build_bus(k, options.latency);
+    run_over_endpoints(endpoints, graph, machines, initial, options, stats)
 }
 
 #[cfg(test)]
@@ -224,6 +340,7 @@ mod tests {
         let report =
             run_distributed(Arc::clone(&g), &machines, part, &DistributedOptions::default());
         assert!(report.converged);
+        assert!(!report.timed_out);
         report.partition.validate(&g).unwrap();
         let model = CostModel::new(&g, machines, 8.0, Framework::A);
         for i in 0..g.node_count() {
@@ -275,5 +392,26 @@ mod tests {
             let (j, _) = model.dissatisfaction(&report.partition, i);
             assert!(j <= 1e-6);
         }
+    }
+
+    /// Dead peer: the ring forwards the token toward a machine whose
+    /// endpoint was dropped. Every surviving actor must exit through
+    /// the recv timeout within bounded time — no deadlock. (The full
+    /// regression lives in `integration_coordinator.rs` via
+    /// `testkit::assert_ring_unwinds_on_dead_peer`, on both
+    /// transports.)
+    #[test]
+    fn dropped_peer_times_out_instead_of_deadlocking() {
+        let (g, machines, part) = setup(6, 60);
+        let k = machines.count();
+        let (mut endpoints, _stats) = build_bus(k, Duration::ZERO);
+        drop(endpoints.pop().unwrap()); // machine K-1 dies before the round
+        crate::util::testkit::assert_ring_unwinds_on_dead_peer(
+            endpoints,
+            &g,
+            &machines,
+            &part,
+            Duration::from_millis(150),
+        );
     }
 }

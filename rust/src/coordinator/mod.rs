@@ -17,11 +17,22 @@
 //! The message bus counts messages and bytes per type so the §4.5
 //! feasibility claim is *measured*, not asserted
 //! (see `OverheadStats` and `rust/tests/integration_coordinator.rs`).
+//!
+//! Transports: the protocol loop is generic over [`bus::Bus`] — the
+//! in-process mpsc ring ([`bus::build_bus`]) and the real-socket TCP
+//! mesh ([`net`]) produce bit-identical refinement results and
+//! identical (exact, on-the-wire) overhead accounting. [`net`] also
+//! hosts the multi-process cluster (`gtip serve` workers + the
+//! `gtip dynamic --transport tcp` leader); see DESIGN.md §8 for the
+//! wire format.
 
 pub mod bus;
 pub mod distributed;
 pub mod machine;
+pub mod net;
 pub mod protocol;
 
+pub use bus::{Bus, RecvOutcome};
 pub use distributed::{run_distributed, DistributedOptions, DistributedReport};
+pub use net::{ClusterLeader, TcpEndpoint, WireError};
 pub use protocol::{Message, OverheadStats};

@@ -1,0 +1,1336 @@
+//! Real network transport for the distributed coordinator: a std-only,
+//! length-prefixed binary wire codec for [`Message`] (plus the control
+//! frames of the multi-process epoch protocol), a [`TcpEndpoint`]
+//! implementing [`Bus`] over a full mesh of loopback-or-LAN sockets,
+//! deterministic machine-id handshakes with retry/backoff dialing, and
+//! the leader/worker pair ([`ClusterLeader`] / [`serve`]) that lets
+//! `gtip dynamic --transport tcp` drive refinement rounds across real
+//! OS processes.
+//!
+//! ## Frame layout
+//!
+//! Every frame is `u32 LE payload length || payload`; the payload is a
+//! 1-byte tag followed by fixed-width little-endian fields (`u64`
+//! counts, `u32` machine ids, IEEE-754 `f64` loads; vectors are a `u32`
+//! length followed by the elements). Tags 1–4 are the Fig. 2 protocol
+//! messages — their encoded size is exactly
+//! [`Message::wire_bytes`], which both transports feed into
+//! [`OverheadStats`], so the measured §4.5 overhead is the true
+//! on-the-wire byte count. Tags 16+ are control frames (handshake,
+//! epoch setup/begin, per-round stats report, goodbye); control bytes
+//! are accounted separately in [`NetStats`] and never touch
+//! [`OverheadStats`], keeping the feasibility metric about the game's
+//! aggregate-state exchange only.
+//!
+//! ## Connection lifecycle
+//!
+//! Machine `i` of K listens on `addrs[i]` and dials every other
+//! machine with retry + exponential backoff; each outbound connection
+//! opens with a `Hello` frame (`magic || version || machine id ||
+//! machine count`), so the acceptor learns deterministically who is on
+//! the other end. Each inbound connection gets a reader thread that
+//! decodes frames and routes protocol messages to the endpoint's inbox
+//! and control frames to its control queue. Shutdown is graceful: the
+//! leader broadcasts `Goodbye`, workers exit, sockets close, readers
+//! see EOF and stop.
+//!
+//! ## Epoch barrier
+//!
+//! One refinement round per `EpochBegin` (which re-syncs graph weights
+//! and the warm-start assignment — O(N) control traffic that exists in
+//! any measurement-driven deployment and is reported separately from
+//! the O(K) game traffic). After a round converges, every worker sends
+//! its [`OverheadStats`] delta as `RoundStats`; the leader waits for
+//! all K−1 reports before the next epoch, which doubles as the barrier
+//! that keeps rounds from interleaving on the wire.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::bus::{Bus, RecvOutcome};
+use crate::coordinator::distributed::{
+    machine_loop, run_over_endpoints, DistributedOptions, DistributedReport,
+};
+use crate::coordinator::machine::MachineActor;
+use crate::coordinator::protocol::{Counter, Message, OverheadStats};
+use crate::game::cost::Framework;
+use crate::graph::{Graph, GraphBuilder};
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+/// First bytes of every `Hello` payload after the tag.
+pub const WIRE_MAGIC: [u8; 4] = *b"GTIP";
+/// Wire protocol version; bumped on any layout change.
+pub const WIRE_VERSION: u16 = 1;
+/// Upper bound on a single frame payload; larger prefixes are rejected
+/// before any allocation happens.
+pub const MAX_FRAME_BYTES: usize = 1 << 24;
+
+/// Message tags (1–4 mirror [`Message`]; 16+ are control frames).
+const TAG_TAKE_MY_TURN: u8 = 1;
+const TAG_RECEIVE_NODE: u8 = 2;
+const TAG_REGULAR_UPDATE: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+const TAG_HELLO: u8 = 16;
+const TAG_SETUP: u8 = 17;
+const TAG_EPOCH_BEGIN: u8 = 18;
+const TAG_ROUND_STATS: u8 = 19;
+const TAG_GOODBYE: u8 = 20;
+
+/// Errors of the wire codec and connection lifecycle.
+#[derive(Debug)]
+pub enum WireError {
+    /// Frame payload ended before the advertised fields.
+    Truncated { needed: usize, got: usize },
+    /// Decoded fields left unconsumed payload bytes behind.
+    TrailingBytes { extra: usize },
+    /// Length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversized { len: usize },
+    /// Unknown frame tag.
+    BadTag(u8),
+    /// Handshake did not start with [`WIRE_MAGIC`].
+    BadMagic,
+    /// Peer speaks a different [`WIRE_VERSION`].
+    BadVersion { theirs: u16 },
+    /// The socket closed mid-stream.
+    Closed,
+    /// Underlying socket error.
+    Io(String),
+    /// The peer violated the epoch protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            WireError::TrailingBytes { extra } => {
+                write!(f, "malformed frame: {extra} unconsumed trailing bytes")
+            }
+            WireError::Oversized { len } => {
+                write!(f, "oversized frame: {len} bytes > max {MAX_FRAME_BYTES}")
+            }
+            WireError::BadTag(t) => write!(f, "unknown frame tag {t}"),
+            WireError::BadMagic => write!(f, "bad handshake magic (not a gtip peer?)"),
+            WireError::BadVersion { theirs } => {
+                write!(f, "wire version mismatch: peer {theirs}, ours {WIRE_VERSION}")
+            }
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "socket error: {e}"),
+            WireError::Protocol(e) => write!(f, "protocol violation: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Closed
+        } else {
+            WireError::Io(e.to_string())
+        }
+    }
+}
+
+/// Control frames + protocol messages — everything that crosses a
+/// socket.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// A Fig. 2 protocol message (the only frames [`OverheadStats`]
+    /// counts).
+    Msg(Message),
+    /// Connection handshake: who is dialing, and how big they think the
+    /// cluster is.
+    Hello { version: u16, machine: u32, machines: u32 },
+    /// Leader → workers, once: the shared fixture (machine speeds, game
+    /// options, graph topology + weights).
+    Setup(SetupFrame),
+    /// Leader → workers, per refinement round: fresh measured weights
+    /// and the warm-start assignment.
+    EpochBegin(EpochFrame),
+    /// Worker → leader after each round: the worker's [`OverheadStats`]
+    /// delta for that round (the leader aggregates them; waiting for
+    /// all K−1 doubles as the epoch barrier).
+    RoundStats(OverheadStats),
+    /// Leader → workers: the run is over; exit cleanly.
+    Goodbye,
+}
+
+/// Payload of [`Frame::Setup`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SetupFrame {
+    pub speeds: Vec<f64>,
+    pub mu: f64,
+    pub framework: Framework,
+    pub epsilon: f64,
+    pub max_transfers: u64,
+    pub recv_timeout_ms: u64,
+    pub node_weights: Vec<f64>,
+    /// `(u, v, weight)` for every edge, in the leader graph's edge
+    /// order (workers re-install per-epoch weights in this order).
+    pub edges: Vec<(u32, u32, f64)>,
+}
+
+/// Payload of [`Frame::EpochBegin`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochFrame {
+    pub epoch: u64,
+    pub node_weights: Vec<f64>,
+    /// One weight per edge, in [`SetupFrame::edges`] order.
+    pub edge_weights: Vec<f64>,
+    pub assignment: Vec<u32>,
+}
+
+// ---------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) {
+    put_u32(b, vs.len() as u32);
+    for &v in vs {
+        put_f64(b, v);
+    }
+}
+
+/// Bounded reader over a frame payload; every accessor fails with
+/// [`WireError::Truncated`] instead of panicking on short input.
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Dec { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.b.len() {
+            return Err(WireError::Truncated { needed: self.pos + n, got: self.b.len() });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("len 2")))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    /// Length-prefixed f64 vector; the length is validated against the
+    /// remaining payload before any allocation.
+    fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let len = self.u32()? as usize;
+        if self.pos + 8 * len > self.b.len() {
+            return Err(WireError::Truncated { needed: self.pos + 8 * len, got: self.b.len() });
+        }
+        (0..len).map(|_| self.f64()).collect()
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::TrailingBytes { extra: self.b.len() - self.pos });
+        }
+        Ok(())
+    }
+}
+
+fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
+    match frame {
+        Frame::Msg(Message::TakeMyTurn { consecutive_forfeits, transfers_so_far }) => {
+            b.push(TAG_TAKE_MY_TURN);
+            put_u64(b, *consecutive_forfeits as u64);
+            put_u64(b, *transfers_so_far as u64);
+        }
+        Frame::Msg(Message::ReceiveNode { seq, node, from, to }) => {
+            b.push(TAG_RECEIVE_NODE);
+            put_u64(b, *seq);
+            put_u64(b, *node as u64);
+            put_u32(b, *from as u32);
+            put_u32(b, *to as u32);
+        }
+        Frame::Msg(Message::RegularUpdate { seq, node, from, to, loads }) => {
+            b.push(TAG_REGULAR_UPDATE);
+            put_u64(b, *seq);
+            put_u64(b, *node as u64);
+            put_u32(b, *from as u32);
+            put_u32(b, *to as u32);
+            put_f64s(b, loads);
+        }
+        Frame::Msg(Message::Shutdown { total_transfers, converged }) => {
+            b.push(TAG_SHUTDOWN);
+            put_u64(b, *total_transfers);
+            b.push(u8::from(*converged));
+        }
+        Frame::Hello { version, machine, machines } => {
+            b.push(TAG_HELLO);
+            b.extend_from_slice(&WIRE_MAGIC);
+            put_u16(b, *version);
+            put_u32(b, *machine);
+            put_u32(b, *machines);
+        }
+        Frame::Setup(s) => {
+            b.push(TAG_SETUP);
+            put_f64s(b, &s.speeds);
+            put_f64(b, s.mu);
+            b.push(match s.framework {
+                Framework::A => 0,
+                Framework::B => 1,
+            });
+            put_f64(b, s.epsilon);
+            put_u64(b, s.max_transfers);
+            put_u64(b, s.recv_timeout_ms);
+            put_f64s(b, &s.node_weights);
+            put_u32(b, s.edges.len() as u32);
+            for &(u, v, w) in &s.edges {
+                put_u32(b, u);
+                put_u32(b, v);
+                put_f64(b, w);
+            }
+        }
+        Frame::EpochBegin(e) => {
+            b.push(TAG_EPOCH_BEGIN);
+            put_u64(b, e.epoch);
+            put_f64s(b, &e.node_weights);
+            put_f64s(b, &e.edge_weights);
+            put_u32(b, e.assignment.len() as u32);
+            for &a in &e.assignment {
+                put_u32(b, a);
+            }
+        }
+        Frame::RoundStats(s) => {
+            b.push(TAG_ROUND_STATS);
+            for c in [&s.take_my_turn, &s.receive_node, &s.regular_update, &s.shutdown] {
+                put_u64(b, c.messages);
+                put_u64(b, c.bytes);
+            }
+        }
+        Frame::Goodbye => b.push(TAG_GOODBYE),
+    }
+}
+
+/// Encode a frame as `u32 LE payload length || payload`.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(64);
+    encode_payload(frame, &mut payload);
+    let mut out = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode one frame payload (the bytes after the length prefix).
+/// Rejects unknown tags, short payloads, and trailing garbage — never
+/// panics on malformed input.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+    let mut d = Dec::new(payload);
+    let tag = d.u8()?;
+    let frame = match tag {
+        TAG_TAKE_MY_TURN => Frame::Msg(Message::TakeMyTurn {
+            consecutive_forfeits: d.u64()? as usize,
+            transfers_so_far: d.u64()? as usize,
+        }),
+        TAG_RECEIVE_NODE => Frame::Msg(Message::ReceiveNode {
+            seq: d.u64()?,
+            node: d.u64()? as usize,
+            from: d.u32()? as MachineId,
+            to: d.u32()? as MachineId,
+        }),
+        TAG_REGULAR_UPDATE => Frame::Msg(Message::RegularUpdate {
+            seq: d.u64()?,
+            node: d.u64()? as usize,
+            from: d.u32()? as MachineId,
+            to: d.u32()? as MachineId,
+            loads: d.f64s()?,
+        }),
+        TAG_SHUTDOWN => Frame::Msg(Message::Shutdown {
+            total_transfers: d.u64()?,
+            converged: match d.u8()? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(WireError::Protocol(format!("bad converged byte {other}")))
+                }
+            },
+        }),
+        TAG_HELLO => {
+            if d.take(4)? != WIRE_MAGIC {
+                return Err(WireError::BadMagic);
+            }
+            let version = d.u16()?;
+            if version != WIRE_VERSION {
+                return Err(WireError::BadVersion { theirs: version });
+            }
+            Frame::Hello { version, machine: d.u32()?, machines: d.u32()? }
+        }
+        TAG_SETUP => {
+            let speeds = d.f64s()?;
+            let mu = d.f64()?;
+            let framework = match d.u8()? {
+                0 => Framework::A,
+                1 => Framework::B,
+                other => return Err(WireError::Protocol(format!("bad framework byte {other}"))),
+            };
+            Frame::Setup(SetupFrame {
+                speeds,
+                mu,
+                framework,
+                epsilon: d.f64()?,
+                max_transfers: d.u64()?,
+                recv_timeout_ms: d.u64()?,
+                node_weights: d.f64s()?,
+                edges: {
+                    let len = d.u32()? as usize;
+                    let mut edges = Vec::new();
+                    for _ in 0..len {
+                        edges.push((d.u32()?, d.u32()?, d.f64()?));
+                    }
+                    edges
+                },
+            })
+        }
+        TAG_EPOCH_BEGIN => Frame::EpochBegin(EpochFrame {
+            epoch: d.u64()?,
+            node_weights: d.f64s()?,
+            edge_weights: d.f64s()?,
+            assignment: {
+                let len = d.u32()? as usize;
+                if 4 * len > payload.len() {
+                    return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+                }
+                (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?
+            },
+        }),
+        TAG_ROUND_STATS => {
+            let mut cs = [Counter::default(); 4];
+            for c in cs.iter_mut() {
+                c.messages = d.u64()?;
+                c.bytes = d.u64()?;
+            }
+            Frame::RoundStats(OverheadStats {
+                take_my_turn: cs[0],
+                receive_node: cs[1],
+                regular_update: cs[2],
+                shutdown: cs[3],
+            })
+        }
+        TAG_GOODBYE => Frame::Goodbye,
+        other => return Err(WireError::BadTag(other)),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame from a stream.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix)?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    decode_payload(&payload)
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<usize, WireError> {
+    let bytes = encode_frame(frame);
+    w.write_all(&bytes)?;
+    Ok(bytes.len())
+}
+
+// ---------------------------------------------------------------------
+// TCP endpoint
+// ---------------------------------------------------------------------
+
+/// Byte/message accounting of the control plane (handshakes, epoch
+/// setup/begin, stats reports) — kept apart from [`OverheadStats`] so
+/// the §4.5 metric stays about the game's O(K) state exchange.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub control_messages: u64,
+    pub control_bytes: u64,
+}
+
+/// One machine's socket-backed endpoint: a listener's worth of inbound
+/// reader threads feeding an inbox, plus one outbound stream per peer.
+pub struct TcpEndpoint {
+    id: MachineId,
+    k: usize,
+    inbox: Receiver<Message>,
+    inbox_tx: Sender<Message>,
+    ctrl: Receiver<(MachineId, Frame)>,
+    outs: Vec<Option<Mutex<TcpStream>>>,
+    stats: Arc<Mutex<OverheadStats>>,
+    net: Arc<Mutex<NetStats>>,
+}
+
+impl Bus for TcpEndpoint {
+    fn id(&self) -> MachineId {
+        self.id
+    }
+
+    fn machine_count(&self) -> usize {
+        self.k
+    }
+
+    fn send(&self, to: MachineId, msg: Message) {
+        self.stats.lock().expect("stats poisoned").record(&msg);
+        if to == self.id {
+            // Loopback without touching the network (the ring kick).
+            let _ = self.inbox_tx.send(msg);
+            return;
+        }
+        let bytes = encode_frame(&Frame::Msg(msg.clone()));
+        debug_assert_eq!(bytes.len(), msg.wire_bytes(), "codec vs wire_bytes drift");
+        if let Some(stream) = &self.outs[to] {
+            // A dead peer is fine to ignore, exactly like the closed
+            // mpsc sender on the in-process bus.
+            let _ = stream.lock().expect("stream poisoned").write_all(&bytes);
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> RecvOutcome {
+        match self.inbox.recv_timeout(timeout) {
+            Ok(msg) => RecvOutcome::Msg(msg),
+            Err(RecvTimeoutError::Timeout) => RecvOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => RecvOutcome::Disconnected,
+        }
+    }
+}
+
+impl TcpEndpoint {
+    /// Send a control frame to one peer.
+    pub fn send_ctrl(&self, to: MachineId, frame: &Frame) -> Result<(), WireError> {
+        let stream = self.outs[to]
+            .as_ref()
+            .ok_or_else(|| WireError::Protocol(format!("no connection to machine {to}")))?;
+        let bytes = encode_frame(frame);
+        stream.lock().expect("stream poisoned").write_all(&bytes)?;
+        let mut net = self.net.lock().expect("net stats poisoned");
+        net.control_messages += 1;
+        net.control_bytes += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Send a control frame to every peer.
+    pub fn broadcast_ctrl(&self, frame: &Frame) -> Result<(), WireError> {
+        for to in 0..self.k {
+            if to != self.id {
+                self.send_ctrl(to, frame)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive the next control frame (tagged with its sender).
+    pub fn recv_ctrl(&self, timeout: Duration) -> Result<(MachineId, Frame), WireError> {
+        match self.ctrl.recv_timeout(timeout) {
+            Ok(pair) => Ok(pair),
+            Err(RecvTimeoutError::Timeout) => {
+                Err(WireError::Protocol("timed out waiting for a control frame".into()))
+            }
+            Err(RecvTimeoutError::Disconnected) => Err(WireError::Closed),
+        }
+    }
+
+    /// Snapshot of the protocol-message accounting.
+    pub fn stats_snapshot(&self) -> OverheadStats {
+        self.stats.lock().expect("stats poisoned").clone()
+    }
+
+    /// Snapshot of the control-plane accounting.
+    pub fn net_snapshot(&self) -> NetStats {
+        *self.net.lock().expect("net stats poisoned")
+    }
+}
+
+/// Initial dial backoff; doubles up to [`DIAL_BACKOFF_MAX`].
+const DIAL_BACKOFF_START: Duration = Duration::from_millis(25);
+const DIAL_BACKOFF_MAX: Duration = Duration::from_millis(800);
+/// Poll interval of the bounded accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Validate one inbound connection's `Hello` handshake.
+fn handshake_inbound(
+    mut stream: TcpStream,
+    id: MachineId,
+    k: usize,
+    deadline: Instant,
+    seen: &[bool],
+) -> Result<(MachineId, TcpStream), WireError> {
+    stream.set_nonblocking(false)?;
+    let left = deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+    stream.set_read_timeout(Some(left))?;
+    let hello = read_frame(&mut stream)?;
+    let Frame::Hello { machine, machines, .. } = hello else {
+        return Err(WireError::Protocol(format!("expected Hello, got {hello:?}")));
+    };
+    let peer = machine as MachineId;
+    if machines as usize != k || peer >= k || peer == id {
+        return Err(WireError::Protocol(format!(
+            "peer says machine {machine}/{machines}, we are {id}/{k}"
+        )));
+    }
+    if seen[peer] {
+        return Err(WireError::Protocol(format!("duplicate dial from machine {peer}")));
+    }
+    stream.set_read_timeout(None)?;
+    stream.set_nodelay(true)?;
+    Ok((peer, stream))
+}
+
+/// Accept inbound connections until one valid `Hello` per peer has
+/// arrived. A single bad connection (port scanner, garbage handshake,
+/// stray re-dial) is dropped with a note — never allowed to kill the
+/// mesh join; only the overall deadline fails it.
+fn accept_peers(
+    listener: TcpListener,
+    id: MachineId,
+    k: usize,
+    deadline: Instant,
+) -> Result<Vec<(MachineId, TcpStream)>, WireError> {
+    listener.set_nonblocking(true)?;
+    let mut inbound: Vec<(MachineId, TcpStream)> = Vec::with_capacity(k - 1);
+    let mut seen = vec![false; k];
+    while inbound.len() < k - 1 {
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                // Per-connection handshake; any failure drops only this
+                // socket.
+                match handshake_inbound(stream, id, k, deadline, &seen) {
+                    Ok((peer, stream)) => {
+                        seen[peer] = true;
+                        inbound.push((peer, stream));
+                    }
+                    Err(e) => {
+                        eprintln!("gtip net: dropping inbound connection from {addr}: {e}");
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Protocol(format!(
+                        "timed out waiting for {} inbound peers (have {})",
+                        k - 1,
+                        inbound.len()
+                    )));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(inbound)
+}
+
+/// Dial one peer with retry + backoff until `deadline`.
+fn dial_peer(addr: &str, deadline: Instant) -> Result<TcpStream, WireError> {
+    let mut backoff = DIAL_BACKOFF_START;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                stream.set_nodelay(true)?;
+                return Ok(stream);
+            }
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    return Err(WireError::Io(format!("dialing {addr}: {e}")));
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(DIAL_BACKOFF_MAX);
+            }
+        }
+    }
+}
+
+/// Build machine `id`'s endpoint from an already-bound listener:
+/// full-mesh dial with deterministic `Hello` handshakes, then one
+/// reader thread per inbound connection.
+fn mesh_with_listener(
+    listener: TcpListener,
+    id: MachineId,
+    addrs: &[String],
+    connect_timeout: Duration,
+    stats: Arc<Mutex<OverheadStats>>,
+) -> Result<TcpEndpoint, WireError> {
+    let k = addrs.len();
+    assert!(id < k, "machine id {id} out of range for {k} machines");
+    let deadline = Instant::now() + connect_timeout;
+
+    let accept_handle = if k > 1 {
+        Some(std::thread::spawn(move || accept_peers(listener, id, k, deadline)))
+    } else {
+        None
+    };
+
+    // Dial everyone else (ascending machine order for determinism).
+    let mut outs: Vec<Option<Mutex<TcpStream>>> = (0..k).map(|_| None).collect();
+    for (peer, addr) in addrs.iter().enumerate() {
+        if peer == id {
+            continue;
+        }
+        let mut stream = dial_peer(addr, deadline)?;
+        write_frame(
+            &mut stream,
+            &Frame::Hello { version: WIRE_VERSION, machine: id as u32, machines: k as u32 },
+        )?;
+        outs[peer] = Some(Mutex::new(stream));
+    }
+
+    let inbound = match accept_handle {
+        Some(h) => h.join().expect("accept thread panicked")?,
+        None => Vec::new(),
+    };
+
+    let (inbox_tx, inbox) = channel();
+    let (ctrl_tx, ctrl) = channel();
+    for (peer, mut stream) in inbound {
+        let inbox_tx = inbox_tx.clone();
+        let ctrl_tx = ctrl_tx.clone();
+        std::thread::spawn(move || loop {
+            match read_frame(&mut stream) {
+                Ok(Frame::Msg(msg)) => {
+                    if inbox_tx.send(msg).is_err() {
+                        break;
+                    }
+                }
+                Ok(frame) => {
+                    if ctrl_tx.send((peer, frame)).is_err() {
+                        break;
+                    }
+                }
+                Err(WireError::Closed) => break,
+                Err(e) => {
+                    eprintln!("gtip net: reader for machine {peer} stopped: {e}");
+                    break;
+                }
+            }
+        });
+    }
+
+    Ok(TcpEndpoint {
+        id,
+        k,
+        inbox,
+        inbox_tx,
+        ctrl,
+        outs,
+        stats,
+        net: Arc::new(Mutex::new(NetStats::default())),
+    })
+}
+
+/// Join the mesh as machine `id`: bind `addrs[id]`, dial everyone else.
+pub fn connect_mesh(
+    id: MachineId,
+    addrs: &[String],
+    connect_timeout: Duration,
+    stats: Arc<Mutex<OverheadStats>>,
+) -> Result<TcpEndpoint, WireError> {
+    let listener = TcpListener::bind(addrs[id].as_str())
+        .map_err(|e| WireError::Io(format!("binding {}: {e}", addrs[id])))?;
+    mesh_with_listener(listener, id, addrs, connect_timeout, stats)
+}
+
+/// A K-machine loopback mesh inside one process (OS-assigned ports),
+/// sharing one [`OverheadStats`] handle exactly like the in-process
+/// bus — the test harness for transport equivalence.
+pub fn build_tcp_bus_local(
+    k: usize,
+) -> Result<(Vec<TcpEndpoint>, Arc<Mutex<OverheadStats>>), WireError> {
+    assert!(k >= 1);
+    let stats = Arc::new(Mutex::new(OverheadStats::default()));
+    let mut listeners = Vec::with_capacity(k);
+    let mut addrs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(l.local_addr()?.to_string());
+        listeners.push(l);
+    }
+    let mut handles = Vec::with_capacity(k);
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let addrs = addrs.clone();
+        let stats = Arc::clone(&stats);
+        handles.push(std::thread::spawn(move || {
+            mesh_with_listener(listener, id, &addrs, Duration::from_secs(10), stats)
+        }));
+    }
+    let mut endpoints = Vec::with_capacity(k);
+    for h in handles {
+        endpoints.push(h.join().expect("mesh thread panicked")?);
+    }
+    Ok((endpoints, stats))
+}
+
+/// [`crate::coordinator::run_distributed`], but over a real loopback
+/// TCP mesh — same options, same deterministic result.
+pub fn run_distributed_tcp_local(
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    options: &DistributedOptions,
+) -> Result<DistributedReport, WireError> {
+    let (endpoints, stats) = build_tcp_bus_local(machines.count())?;
+    Ok(run_over_endpoints(endpoints, graph, machines, initial, options, stats))
+}
+
+// ---------------------------------------------------------------------
+// Multi-process cluster: leader + serve
+// ---------------------------------------------------------------------
+
+/// How long a worker waits for the next `EpochBegin` — the leader
+/// simulates a whole epoch in between, so this is generous.
+const EPOCH_WAIT: Duration = Duration::from_secs(600);
+
+/// Machine 0's handle on a multi-process cluster: owns the leader
+/// endpoint and runs one refinement round per [`ClusterLeader::refine`]
+/// call, aggregating the workers' overhead reports.
+pub struct ClusterLeader {
+    ep: TcpEndpoint,
+    opts: DistributedOptions,
+    epoch: u64,
+}
+
+impl ClusterLeader {
+    /// Join the mesh as machine 0 and wait for every worker.
+    pub fn connect(
+        addrs: &[String],
+        opts: DistributedOptions,
+        connect_timeout: Duration,
+    ) -> Result<ClusterLeader, WireError> {
+        let stats = Arc::new(Mutex::new(OverheadStats::default()));
+        let ep = connect_mesh(0, addrs, connect_timeout, stats)?;
+        Ok(ClusterLeader { ep, opts, epoch: 0 })
+    }
+
+    pub fn machine_count(&self) -> usize {
+        self.ep.machine_count()
+    }
+
+    /// Control-plane accounting so far (handshake/setup/epoch frames).
+    pub fn net_stats(&self) -> NetStats {
+        self.ep.net_snapshot()
+    }
+
+    /// Broadcast the shared fixture. Must be called once, before the
+    /// first [`ClusterLeader::refine`].
+    pub fn setup(&self, graph: &Graph, machines: &MachineConfig) -> Result<(), WireError> {
+        if machines.count() != self.ep.machine_count() {
+            return Err(WireError::Protocol(format!(
+                "cluster has {} machines but the fixture wants {}",
+                self.ep.machine_count(),
+                machines.count()
+            )));
+        }
+        self.ep.broadcast_ctrl(&Frame::Setup(SetupFrame {
+            speeds: machines.speeds().to_vec(),
+            mu: self.opts.mu,
+            framework: self.opts.framework,
+            epsilon: self.opts.epsilon,
+            max_transfers: self.opts.max_transfers as u64,
+            recv_timeout_ms: self.opts.recv_timeout.as_millis() as u64,
+            node_weights: graph.node_weights().to_vec(),
+            edges: graph.edges().map(|(u, v, w)| (u as u32, v as u32, w)).collect(),
+        }))
+    }
+
+    /// Run one refinement round across the cluster: re-sync weights and
+    /// the warm-start assignment, play machine 0's part of the ring,
+    /// then collect every worker's overhead report (the epoch barrier).
+    pub fn refine(
+        &mut self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        initial: Partition,
+    ) -> Result<DistributedReport, WireError> {
+        let k = self.ep.machine_count();
+        let epoch = self.epoch;
+        self.epoch += 1;
+        self.ep.broadcast_ctrl(&Frame::EpochBegin(EpochFrame {
+            epoch,
+            node_weights: graph.node_weights().to_vec(),
+            edge_weights: graph.edges().map(|(_, _, w)| w).collect(),
+            assignment: initial.assignment().iter().map(|&m| m as u32).collect(),
+        }))?;
+
+        let before = self.ep.stats_snapshot();
+        let actor = MachineActor::new(
+            0,
+            Arc::new(graph.clone()),
+            machines.clone(),
+            &initial,
+            self.opts.mu,
+            self.opts.framework,
+        );
+        self.ep.send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+        let outcome =
+            machine_loop(actor, &self.ep, self.opts.epsilon, self.opts.max_transfers, self.opts.recv_timeout);
+        if outcome.timed_out {
+            return Err(WireError::Protocol(
+                "refinement round timed out waiting on a peer".into(),
+            ));
+        }
+
+        // Barrier: one RoundStats per worker closes the round.
+        let mut overhead = self.ep.stats_snapshot().delta_since(&before);
+        let mut seen = vec![false; k];
+        seen[0] = true;
+        let mut remaining = k - 1;
+        while remaining > 0 {
+            match self.ep.recv_ctrl(self.opts.recv_timeout)? {
+                (peer, Frame::RoundStats(s)) if !seen[peer] => {
+                    seen[peer] = true;
+                    overhead.add(&s);
+                    remaining -= 1;
+                }
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during barrier: {frame:?}"
+                    )));
+                }
+            }
+        }
+
+        // Every transfer reaches every replica, so the leader's applied
+        // count *is* the global transfer total.
+        let partition = Partition::from_assignment(graph, k, outcome.assignment);
+        Ok(DistributedReport {
+            partition,
+            transfers: outcome.transfers_applied as usize,
+            overhead,
+            converged: outcome.converged,
+            timed_out: false,
+        })
+    }
+
+    /// Graceful shutdown: tell every worker the run is over.
+    pub fn shutdown(self) -> Result<(), WireError> {
+        self.ep.broadcast_ctrl(&Frame::Goodbye)
+    }
+}
+
+/// What a worker did over its lifetime (printed by `gtip serve`).
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub machine_id: MachineId,
+    pub epochs: u64,
+    pub overhead: OverheadStats,
+    pub control: NetStats,
+}
+
+/// Run machine `machine_id`'s side of the multi-process cluster: join
+/// the mesh, receive the fixture, then play one refinement round per
+/// `EpochBegin` until `Goodbye`. This is the body of `gtip serve`.
+pub fn serve(
+    machine_id: MachineId,
+    addrs: &[String],
+    connect_timeout: Duration,
+) -> Result<ServeSummary, WireError> {
+    if machine_id == 0 {
+        return Err(WireError::Protocol(
+            "machine 0 is the driver; run `gtip dynamic --transport tcp` instead of serve".into(),
+        ));
+    }
+    if machine_id >= addrs.len() {
+        return Err(WireError::Protocol(format!(
+            "--machine-id {machine_id} out of range for {} peers",
+            addrs.len()
+        )));
+    }
+    let stats = Arc::new(Mutex::new(OverheadStats::default()));
+    let ep = connect_mesh(machine_id, addrs, connect_timeout, Arc::clone(&stats))?;
+    let k = addrs.len();
+
+    // Fixture first.
+    let setup = match ep.recv_ctrl(EPOCH_WAIT)? {
+        (0, Frame::Setup(s)) => s,
+        (0, Frame::Goodbye) => {
+            return Ok(ServeSummary {
+                machine_id,
+                epochs: 0,
+                overhead: ep.stats_snapshot(),
+                control: ep.net_snapshot(),
+            })
+        }
+        (peer, frame) => {
+            return Err(WireError::Protocol(format!(
+                "expected Setup from the leader, got {frame:?} from machine {peer}"
+            )))
+        }
+    };
+    if setup.speeds.len() != k {
+        return Err(WireError::Protocol(format!(
+            "fixture has {} machines but the mesh has {k}",
+            setup.speeds.len()
+        )));
+    }
+    // Validate before handing anything to constructors that assert —
+    // a buggy or skewed leader must produce a clean protocol error,
+    // not abort the worker process.
+    let speed_sum: f64 = setup.speeds.iter().sum();
+    if setup.speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
+        return Err(WireError::Protocol(format!(
+            "fixture speeds are not normalized positive weights (sum {speed_sum})"
+        )));
+    }
+    let n = setup.node_weights.len();
+    if let Some(&(u, v, _)) = setup
+        .edges
+        .iter()
+        .find(|&&(u, v, _)| u as usize >= n || v as usize >= n || u == v)
+    {
+        return Err(WireError::Protocol(format!(
+            "fixture edge ({u}, {v}) is out of range for {n} nodes"
+        )));
+    }
+    if !weights_valid(&setup.node_weights)
+        || !weights_valid_iter(setup.edges.iter().map(|&(_, _, w)| w))
+    {
+        return Err(WireError::Protocol(
+            "fixture weights must be finite and non-negative".into(),
+        ));
+    }
+    // Adopt the leader's normalized speeds verbatim — renormalizing
+    // here could drift each weight by an ulp and diverge the replicas.
+    let machines = MachineConfig::from_normalized(setup.speeds.clone());
+    let mut builder = GraphBuilder::with_nodes(n);
+    for &(u, v, w) in &setup.edges {
+        builder.add_edge(u as usize, v as usize, w);
+    }
+    for (i, &w) in setup.node_weights.iter().enumerate() {
+        builder.set_node_weight(i, w);
+    }
+    let mut graph = builder.build();
+    // Edge order of the built graph — per-epoch weights arrive in the
+    // leader's edge order, which matches because both graphs share the
+    // same topology.
+    let edge_order: Vec<(usize, usize)> = graph.edges().map(|(u, v, _)| (u, v)).collect();
+    if edge_order.len() != setup.edges.len() {
+        return Err(WireError::Protocol("fixture edge list had duplicates".into()));
+    }
+    let recv_timeout = Duration::from_millis(setup.recv_timeout_ms.max(1));
+    let mut epochs = 0u64;
+
+    loop {
+        match ep.recv_ctrl(EPOCH_WAIT)? {
+            (0, Frame::EpochBegin(e)) => {
+                if e.node_weights.len() != n || e.edge_weights.len() != edge_order.len() {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} weight vectors do not match the fixture shape",
+                        e.epoch
+                    )));
+                }
+                if e.assignment.len() != n {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} assignment length {} != {n}",
+                        e.epoch,
+                        e.assignment.len()
+                    )));
+                }
+                if !weights_valid(&e.node_weights) || !weights_valid(&e.edge_weights) {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} weights must be finite and non-negative",
+                        e.epoch
+                    )));
+                }
+                graph.set_node_weights(&e.node_weights);
+                for (&(u, v), &w) in edge_order.iter().zip(&e.edge_weights) {
+                    graph.set_edge_weight(u, v, w);
+                }
+                let assignment: Vec<MachineId> =
+                    e.assignment.iter().map(|&a| a as MachineId).collect();
+                if let Some(&bad) = assignment.iter().find(|&&a| a >= k) {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} assignment names machine {bad} but K={k}",
+                        e.epoch
+                    )));
+                }
+                let part = Partition::from_assignment(&graph, k, assignment);
+                let before = ep.stats_snapshot();
+                let actor = MachineActor::new(
+                    machine_id,
+                    Arc::new(graph.clone()),
+                    machines.clone(),
+                    &part,
+                    setup.mu,
+                    setup.framework,
+                );
+                let outcome = machine_loop(
+                    actor,
+                    &ep,
+                    setup.epsilon,
+                    setup.max_transfers as usize,
+                    recv_timeout,
+                );
+                if outcome.timed_out {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {}: refinement round timed out waiting on a peer",
+                        e.epoch
+                    )));
+                }
+                let delta = ep.stats_snapshot().delta_since(&before);
+                ep.send_ctrl(0, &Frame::RoundStats(delta))?;
+                epochs += 1;
+            }
+            (0, Frame::Goodbye) => break,
+            (peer, frame) => {
+                return Err(WireError::Protocol(format!(
+                    "unexpected control frame from machine {peer}: {frame:?}"
+                )))
+            }
+        }
+    }
+    Ok(ServeSummary {
+        machine_id,
+        epochs,
+        overhead: ep.stats_snapshot(),
+        control: ep.net_snapshot(),
+    })
+}
+
+/// Weights arriving off the wire must be finite and non-negative —
+/// the graph constructors assert exactly that, and a worker must turn
+/// a bad leader into a protocol error, not an abort.
+fn weights_valid(ws: &[f64]) -> bool {
+    weights_valid_iter(ws.iter().copied())
+}
+
+fn weights_valid_iter(mut ws: impl Iterator<Item = f64>) -> bool {
+    ws.all(|w| w.is_finite() && w >= 0.0)
+}
+
+/// Parse a `host:port,host:port,...` peers list (shared by the
+/// `serve` and `dynamic --transport tcp` CLI paths).
+pub fn parse_peers(spec: &str) -> Result<Vec<String>, WireError> {
+    let peers: Vec<String> =
+        spec.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    if peers.len() < 2 {
+        return Err(WireError::Protocol(format!(
+            "--peers needs at least 2 comma-separated host:port entries, got {spec:?}"
+        )));
+    }
+    let mut seen = BTreeMap::new();
+    for (i, p) in peers.iter().enumerate() {
+        if !p.contains(':') {
+            return Err(WireError::Protocol(format!("peer {p:?} is not host:port")));
+        }
+        if let Some(first) = seen.insert(p.clone(), i) {
+            return Err(WireError::Protocol(format!(
+                "peer {p:?} listed twice (positions {first} and {i})"
+            )));
+        }
+    }
+    Ok(peers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::distributed::run_distributed;
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::util::rng::Pcg32;
+
+    fn all_message_shapes() -> Vec<Message> {
+        vec![
+            Message::TakeMyTurn { consecutive_forfeits: 3, transfers_so_far: 17 },
+            Message::ReceiveNode { seq: 9, node: 1234, from: 2, to: 0 },
+            Message::RegularUpdate {
+                seq: 10,
+                node: 7,
+                from: 1,
+                to: 3,
+                loads: vec![0.25, -1.5, 3.75, f64::MAX, 0.0],
+            },
+            Message::Shutdown { total_transfers: 42, converged: true },
+            Message::Shutdown { total_transfers: 7, converged: false },
+        ]
+    }
+
+    #[test]
+    fn message_round_trip_and_exact_sizes() {
+        for msg in all_message_shapes() {
+            let bytes = encode_frame(&Frame::Msg(msg.clone()));
+            assert_eq!(bytes.len(), msg.wire_bytes(), "{}", msg.tag());
+            let decoded = decode_payload(&bytes[4..]).unwrap();
+            assert_eq!(decoded, Frame::Msg(msg));
+        }
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        let frames = vec![
+            Frame::Hello { version: WIRE_VERSION, machine: 2, machines: 5 },
+            Frame::Setup(SetupFrame {
+                speeds: vec![0.25, 0.75],
+                mu: 8.0,
+                framework: Framework::B,
+                epsilon: 1e-9,
+                max_transfers: 1_000_000,
+                recv_timeout_ms: 30_000,
+                node_weights: vec![1.0, 2.0, 3.0],
+                edges: vec![(0, 1, 1.5), (1, 2, 2.5)],
+            }),
+            Frame::EpochBegin(EpochFrame {
+                epoch: 4,
+                node_weights: vec![0.5; 3],
+                edge_weights: vec![1.0, 2.0],
+                assignment: vec![0, 1, 0],
+            }),
+            Frame::RoundStats(OverheadStats {
+                take_my_turn: Counter { messages: 5, bytes: 105 },
+                ..Default::default()
+            }),
+            Frame::Goodbye,
+        ];
+        for f in frames {
+            let bytes = encode_frame(&f);
+            assert_eq!(decode_payload(&bytes[4..]).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly() {
+        for msg in all_message_shapes() {
+            let bytes = encode_frame(&Frame::Msg(msg));
+            // Every strict prefix of the payload must fail without
+            // panicking.
+            for cut in 0..bytes.len() - 4 {
+                assert!(
+                    decode_payload(&bytes[4..4 + cut]).is_err(),
+                    "prefix of {cut} bytes decoded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = encode_frame(&Frame::Goodbye);
+        bytes.push(0xFF);
+        assert!(matches!(
+            decode_payload(&bytes[4..]),
+            Err(WireError::TrailingBytes { extra: 1 })
+        ));
+    }
+
+    #[test]
+    fn bad_tag_and_oversized_rejected() {
+        assert!(matches!(decode_payload(&[0xEE]), Err(WireError::BadTag(0xEE))));
+        // Oversized length prefix rejected before allocation.
+        let mut stream = Vec::new();
+        put_u32(&mut stream, (MAX_FRAME_BYTES + 1) as u32);
+        let mut cursor = &stream[..];
+        assert!(matches!(read_frame(&mut cursor), Err(WireError::Oversized { .. })));
+    }
+
+    #[test]
+    fn lying_vector_length_is_truncation_not_panic() {
+        // RegularUpdate claiming 1000 loads but carrying none.
+        let mut payload = vec![TAG_REGULAR_UPDATE];
+        put_u64(&mut payload, 0);
+        put_u64(&mut payload, 1);
+        put_u32(&mut payload, 0);
+        put_u32(&mut payload, 1);
+        put_u32(&mut payload, 1000);
+        assert!(matches!(decode_payload(&payload), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn handshake_version_and_magic_enforced() {
+        let mut payload = vec![TAG_HELLO];
+        payload.extend_from_slice(b"NOPE");
+        put_u16(&mut payload, WIRE_VERSION);
+        put_u32(&mut payload, 0);
+        put_u32(&mut payload, 2);
+        assert!(matches!(decode_payload(&payload), Err(WireError::BadMagic)));
+
+        let mut payload = vec![TAG_HELLO];
+        payload.extend_from_slice(&WIRE_MAGIC);
+        put_u16(&mut payload, WIRE_VERSION + 1);
+        put_u32(&mut payload, 0);
+        put_u32(&mut payload, 2);
+        assert!(matches!(decode_payload(&payload), Err(WireError::BadVersion { .. })));
+    }
+
+    #[test]
+    fn parse_peers_validates() {
+        let ok = parse_peers("127.0.0.1:7000, 127.0.0.1:7001,127.0.0.1:7002").unwrap();
+        assert_eq!(ok.len(), 3);
+        assert!(parse_peers("127.0.0.1:7000").is_err());
+        assert!(parse_peers("localhost,also-no-port").is_err());
+        assert!(parse_peers("h:1,h:1").is_err());
+    }
+
+    #[test]
+    fn tcp_loopback_mesh_delivers_and_counts_exact_bytes() {
+        let (eps, stats) = build_tcp_bus_local(3).unwrap();
+        let msg = Message::RegularUpdate { seq: 0, node: 5, from: 0, to: 2, loads: vec![1.0; 3] };
+        eps[0].send(1, msg.clone());
+        match eps[1].recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery: {other:?}"),
+        }
+        let s = stats.lock().unwrap();
+        assert_eq!(s.regular_update.messages, 1);
+        assert_eq!(s.regular_update.bytes, msg.wire_bytes() as u64);
+    }
+
+    #[test]
+    fn tcp_local_refinement_matches_in_process_exactly() {
+        let mut rng = Pcg32::new(8);
+        let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+        let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.5]);
+        let assignment: Vec<usize> = (0..50).map(|_| rng.index(3)).collect();
+        let part = Partition::from_assignment(&g, 3, assignment);
+        let opts = DistributedOptions::default();
+
+        let inproc = run_distributed(Arc::clone(&g), &machines, part.clone(), &opts);
+        let tcp = run_distributed_tcp_local(Arc::clone(&g), &machines, part, &opts).unwrap();
+        assert_eq!(tcp.partition.assignment(), inproc.partition.assignment());
+        assert_eq!(tcp.transfers, inproc.transfers);
+        assert_eq!(tcp.overhead, inproc.overhead, "wire accounting must be transport-invariant");
+        assert_eq!(tcp.converged, inproc.converged);
+    }
+}

@@ -1,26 +1,43 @@
 //! Wire protocol of the distributed refinement (paper Fig. 2), plus
 //! overhead accounting used to verify the §4.5 feasibility claim.
+//!
+//! Every transfer carries a global sequence number (the ring-wide
+//! transfer count at the moment it executed). On the in-process bus the
+//! single mpsc queue per machine already delivers causally, but over
+//! TCP a `RegularUpdate` from machine *m* and the turn token relayed
+//! through machine *n* travel on different connections and may arrive
+//! out of order; the sequence number lets every replica apply transfers
+//! in the unique global order regardless of arrival interleaving (see
+//! `coordinator::distributed::machine_loop`). `Shutdown` announces the
+//! final transfer count for the same reason: a receiver only stops once
+//! its replica has caught up to the announced total.
 
 use crate::graph::NodeId;
 use crate::partition::MachineId;
 
 /// Messages exchanged between machine actors. Mirrors Fig. 2's triggers.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// The round-robin turn token. Carries the count of consecutive
     /// forfeits so the ring can detect convergence (all K forfeited) and
     /// the global transfer count so the safety cap is ring-wide.
     TakeMyTurn { consecutive_forfeits: usize, transfers_so_far: usize },
     /// "You now own `node`" — sent to the destination machine of a
-    /// transfer.
-    ReceiveNode { node: NodeId, from: MachineId, to: MachineId },
+    /// transfer. `seq` is the 0-based global index of this transfer.
+    ReceiveNode { seq: u64, node: NodeId, from: MachineId, to: MachineId },
     /// Transfer notification + fresh aggregate loads, broadcast to all
     /// other machines. `loads` has length K — the machine-level aggregate
     /// state of §4.5.
-    RegularUpdate { node: NodeId, from: MachineId, to: MachineId, loads: Vec<f64> },
-    /// Convergence reached; stop and report.
-    Shutdown,
+    RegularUpdate { seq: u64, node: NodeId, from: MachineId, to: MachineId, loads: Vec<f64> },
+    /// Stop once the local replica has applied `total_transfers`
+    /// transfers. `converged` says why the ring stopped — a genuine
+    /// Nash equilibrium (K consecutive forfeits) vs the transfer cap —
+    /// so every machine reports the same outcome on every transport.
+    Shutdown { total_transfers: u64, converged: bool },
 }
+
+/// Bytes of the length prefix framing every message on the wire.
+pub const FRAME_PREFIX_BYTES: usize = 4;
 
 impl Message {
     /// Short type tag for statistics.
@@ -29,26 +46,35 @@ impl Message {
             Message::TakeMyTurn { .. } => "take_my_turn",
             Message::ReceiveNode { .. } => "receive_node",
             Message::RegularUpdate { .. } => "regular_update",
-            Message::Shutdown => "shutdown",
+            Message::Shutdown { .. } => "shutdown",
         }
     }
 
-    /// Approximate serialized size in bytes. This is the quantity whose
-    /// independence from N the §4.5 claim is about: `TakeMyTurn` and
-    /// `ReceiveNode` are O(1); `RegularUpdate` is O(K).
-    pub fn approx_bytes(&self) -> usize {
-        match self {
-            Message::TakeMyTurn { .. } => 1 + 8 + 8,
-            Message::ReceiveNode { .. } => 1 + 8 + 4 + 4,
-            Message::RegularUpdate { loads, .. } => 1 + 8 + 4 + 4 + 8 * loads.len(),
-            Message::Shutdown => 1,
-        }
+    /// Exact serialized size in bytes, including the length prefix —
+    /// `coordinator::net::encode_message` produces exactly this many
+    /// bytes (asserted by a codec property test), and both transports
+    /// feed it into [`OverheadStats`] so the measured overhead is the
+    /// true on-the-wire cost. This is the quantity whose independence
+    /// from N the §4.5 claim is about: `TakeMyTurn`, `ReceiveNode`, and
+    /// `Shutdown` are O(1); `RegularUpdate` is O(K).
+    pub fn wire_bytes(&self) -> usize {
+        FRAME_PREFIX_BYTES
+            + match self {
+                // tag + forfeits u64 + transfers u64
+                Message::TakeMyTurn { .. } => 1 + 8 + 8,
+                // tag + seq u64 + node u64 + from u32 + to u32
+                Message::ReceiveNode { .. } => 1 + 8 + 8 + 4 + 4,
+                // ReceiveNode layout + loads length u32 + K f64s
+                Message::RegularUpdate { loads, .. } => 1 + 8 + 8 + 4 + 4 + 4 + 8 * loads.len(),
+                // tag + total u64 + converged u8
+                Message::Shutdown { .. } => 1 + 8 + 1,
+            }
     }
 }
 
 /// Per-type message counters (lock-free on the hot path is unnecessary:
 /// updates happen per message, machine count is tiny).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct OverheadStats {
     pub take_my_turn: Counter,
     pub receive_node: Counter,
@@ -56,10 +82,17 @@ pub struct OverheadStats {
     pub shutdown: Counter,
 }
 
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Counter {
     pub messages: u64,
     pub bytes: u64,
+}
+
+impl Counter {
+    fn add(&mut self, other: &Counter) {
+        self.messages += other.messages;
+        self.bytes += other.bytes;
+    }
 }
 
 impl OverheadStats {
@@ -68,10 +101,33 @@ impl OverheadStats {
             Message::TakeMyTurn { .. } => &mut self.take_my_turn,
             Message::ReceiveNode { .. } => &mut self.receive_node,
             Message::RegularUpdate { .. } => &mut self.regular_update,
-            Message::Shutdown => &mut self.shutdown,
+            Message::Shutdown { .. } => &mut self.shutdown,
         };
         c.messages += 1;
-        c.bytes += msg.approx_bytes() as u64;
+        c.bytes += msg.wire_bytes() as u64;
+    }
+
+    /// Fold another machine's counters into this one (the multi-process
+    /// leader aggregates the per-machine `RoundStats` reports this way).
+    pub fn add(&mut self, other: &OverheadStats) {
+        self.take_my_turn.add(&other.take_my_turn);
+        self.receive_node.add(&other.receive_node);
+        self.regular_update.add(&other.regular_update);
+        self.shutdown.add(&other.shutdown);
+    }
+
+    /// Counters since `baseline` (which must be an earlier snapshot of
+    /// this same accumulator).
+    pub fn delta_since(&self, baseline: &OverheadStats) -> OverheadStats {
+        fn sub(a: Counter, b: Counter) -> Counter {
+            Counter { messages: a.messages - b.messages, bytes: a.bytes - b.bytes }
+        }
+        OverheadStats {
+            take_my_turn: sub(self.take_my_turn, baseline.take_my_turn),
+            receive_node: sub(self.receive_node, baseline.receive_node),
+            regular_update: sub(self.regular_update, baseline.regular_update),
+            shutdown: sub(self.shutdown, baseline.shutdown),
+        }
     }
 
     pub fn total_messages(&self) -> u64 {
@@ -89,13 +145,22 @@ impl OverheadStats {
     }
 
     /// Synchronization bytes per executed transfer — the paper's
-    /// feasibility metric. One transfer costs 1 `ReceiveNode` + (K−1)
+    /// feasibility metric. One transfer costs 1 `ReceiveNode` + (K−2)
     /// `RegularUpdate`s: O(K²) bytes total, **independent of N**.
     pub fn bytes_per_transfer(&self, transfers: u64) -> f64 {
         if transfers == 0 {
             return 0.0;
         }
         (self.receive_node.bytes + self.regular_update.bytes) as f64 / transfers as f64
+    }
+
+    /// Mean bytes of one aggregate-state broadcast (`RegularUpdate`) —
+    /// exactly `33 + 8K` on the wire, the §4.5 O(K) quantity.
+    pub fn bytes_per_regular_update(&self) -> f64 {
+        if self.regular_update.messages == 0 {
+            return 0.0;
+        }
+        self.regular_update.bytes as f64 / self.regular_update.messages as f64
     }
 }
 
@@ -105,33 +170,61 @@ mod tests {
 
     #[test]
     fn sizes_are_n_independent() {
-        let a = Message::ReceiveNode { node: 3, from: 0, to: 1 };
-        let b = Message::ReceiveNode { node: 3_000_000, from: 0, to: 1 };
-        assert_eq!(a.approx_bytes(), b.approx_bytes());
-        let u = Message::RegularUpdate { node: 1, from: 0, to: 1, loads: vec![0.0; 5] };
-        assert_eq!(u.approx_bytes(), 1 + 8 + 4 + 4 + 40);
+        let a = Message::ReceiveNode { seq: 0, node: 3, from: 0, to: 1 };
+        let b = Message::ReceiveNode { seq: u64::MAX, node: 3_000_000, from: 0, to: 1 };
+        assert_eq!(a.wire_bytes(), b.wire_bytes());
+        assert_eq!(a.wire_bytes(), 4 + 25);
+        let u = Message::RegularUpdate { seq: 1, node: 1, from: 0, to: 1, loads: vec![0.0; 5] };
+        assert_eq!(u.wire_bytes(), 4 + 29 + 40);
+        assert_eq!(
+            Message::Shutdown { total_transfers: 9, converged: true }.wire_bytes(),
+            4 + 10
+        );
+        assert_eq!(
+            Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 }.wire_bytes(),
+            4 + 17
+        );
     }
 
     #[test]
     fn stats_accumulate_by_tag() {
         let mut s = OverheadStats::default();
         s.record(&Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
-        s.record(&Message::Shutdown);
-        s.record(&Message::RegularUpdate { node: 0, from: 0, to: 1, loads: vec![0.0; 4] });
+        s.record(&Message::Shutdown { total_transfers: 0, converged: true });
+        s.record(&Message::RegularUpdate { seq: 0, node: 0, from: 0, to: 1, loads: vec![0.0; 4] });
         assert_eq!(s.total_messages(), 3);
         assert_eq!(s.take_my_turn.messages, 1);
-        assert_eq!(s.regular_update.bytes, (1 + 8 + 4 + 4 + 32) as u64);
+        assert_eq!(s.regular_update.bytes, (4 + 29 + 32) as u64);
+        assert_eq!(s.bytes_per_regular_update(), (4 + 29 + 32) as f64);
+    }
+
+    #[test]
+    fn stats_add_and_delta_round_trip() {
+        let mut a = OverheadStats::default();
+        a.record(&Message::Shutdown { total_transfers: 0, converged: false });
+        let snapshot = a.clone();
+        a.record(&Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 2 });
+        let delta = a.delta_since(&snapshot);
+        assert_eq!(delta.shutdown.messages, 0);
+        assert_eq!(delta.take_my_turn.messages, 1);
+        let mut sum = snapshot.clone();
+        sum.add(&delta);
+        assert_eq!(sum, a);
     }
 
     #[test]
     fn bytes_per_transfer_guard_against_zero() {
         let s = OverheadStats::default();
         assert_eq!(s.bytes_per_transfer(0), 0.0);
+        assert_eq!(s.bytes_per_regular_update(), 0.0);
     }
 
     #[test]
     fn tags_stable() {
-        assert_eq!(Message::Shutdown.tag(), "shutdown");
-        assert_eq!(Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 0 }.tag(), "take_my_turn");
+        assert_eq!(Message::Shutdown { total_transfers: 0, converged: true }.tag(), "shutdown");
+        assert_eq!(
+            Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 0 }.tag(),
+            "take_my_turn"
+        );
     }
 }

@@ -22,8 +22,10 @@
 //! every sub-error type converts via `?`.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::config::Config;
+use crate::coordinator::net::{self, ClusterLeader};
 use crate::coordinator::{run_distributed, DistributedOptions};
 use crate::game::annealing::{anneal_then_refine, AnnealOptions};
 use crate::game::cost::Framework;
@@ -42,6 +44,7 @@ use crate::sim::fuzz::{
 };
 use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions, MAX_SCHEDULE_THREADS};
 use crate::sim::workload::{FloodWorkload, WorkloadOptions};
+use crate::util::bench::{parse_json, JsonVal};
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
 
@@ -62,9 +65,14 @@ USAGE:
                   [--backend sequential|distributed] [--framework A|B]
                   [--threads N] [--horizon T] [--ticks-per-transfer C]
                   [--seed S] [--compare] [--parallelism P]
+                  [--transport inproc|tcp] [--peers host:port,...]
+                  [--connect-timeout-ms MS] [--report-json FILE]
+  gtip serve      --machine-id K --peers host:port,host:port,...
+                  [--connect-timeout-ms MS]
   gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
                   [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
                   [--corpus-dir DIR] [--replay FILE] [--no-shrink] [--no-oracle]
+  gtip bench-gate [--baseline FILE] [--measured FILE]
   gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
   gtip artifacts  [--dir DIR]
   gtip help
@@ -93,6 +101,8 @@ fn run(args: &Args) -> CliResult {
         Some("partition") => cmd_partition(args),
         Some("simulate") => cmd_simulate(args),
         Some("dynamic") => cmd_dynamic(args),
+        Some("serve") => cmd_serve(args),
+        Some("bench-gate") => cmd_bench_gate(args),
         Some("fuzz") => cmd_fuzz(args),
         Some("experiment") => cmd_experiment(args),
         Some("artifacts") => cmd_artifacts(args),
@@ -251,6 +261,24 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     let horizon = args.opt_or::<u64>("horizon", 2_400)?;
     let ticks_per_transfer = args.opt_or::<u64>("ticks-per-transfer", 0)?;
     let parallelism = args.opt_or::<usize>("parallelism", 1)?;
+    let transport = args.str_or("transport", "inproc").to_string();
+    let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
+    let tcp = match transport.as_str() {
+        "inproc" | "in-process" | "local" => false,
+        "tcp" => true,
+        other => return Err(format!("unknown transport {other:?} (expected inproc|tcp)").into()),
+    };
+    let backend = if tcp {
+        if args.flag("compare") {
+            return Err("--compare runs two arms and is not supported with --transport tcp".into());
+        }
+        if backend != RefineBackend::Distributed && args.opt_str("backend").is_some() {
+            return Err("--transport tcp requires --backend distributed".into());
+        }
+        RefineBackend::Distributed
+    } else {
+        backend
+    };
     if nodes == 0 {
         return Err("--nodes must be >= 1".into());
     }
@@ -297,6 +325,9 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     let estimator = WeightEstimator::of_kind(estimator_kind);
 
     if args.flag("compare") {
+        if args.opt_str("report-json").is_some() {
+            return Err("--report-json only supports single-arm runs (drop --compare)".into());
+        }
         let report = compare_frozen_vs_rebalanced(
             &graph,
             &machines,
@@ -331,7 +362,29 @@ fn cmd_dynamic(args: &Args) -> CliResult {
             estimator,
             options,
         );
-        let report = driver.run();
+        if tcp {
+            let peers = net::parse_peers(args.req_str("peers")?)?;
+            if peers.len() != machines.count() {
+                return Err(format!(
+                    "--peers lists {} machines but K={} (peer 0 is this driver)",
+                    peers.len(),
+                    machines.count()
+                )
+                .into());
+            }
+            println!(
+                "transport tcp: leading a {}-process cluster (this process = machine 0 @ {})",
+                peers.len(),
+                peers[0]
+            );
+            let leader = ClusterLeader::connect(
+                &peers,
+                DistributedOptions { mu, framework, ..Default::default() },
+                connect_timeout,
+            )?;
+            driver.attach_cluster(leader)?;
+        }
+        let report = driver.try_run()?;
         let title = format!("gtip dynamic — {scenario_kind}");
         println!("{}", report.epoch_table(&title).to_text());
         println!(
@@ -343,8 +396,162 @@ fn cmd_dynamic(args: &Args) -> CliResult {
             report.transfers,
             report.stats.truncated,
         );
+        if let Some(o) = report.total_overhead() {
+            println!(
+                "coordinator sync: {} msgs, {} bytes on the wire, {:.1} bytes/transfer, {:.1} bytes/RegularUpdate (O(K), N-independent)",
+                o.total_messages(),
+                o.total_bytes(),
+                o.bytes_per_transfer(report.transfers as u64),
+                o.bytes_per_regular_update(),
+            );
+        }
+        if let Some(path) = args.opt_str("report-json") {
+            let json = dynamic_report_json(
+                &report,
+                driver.engine().partition().assignment(),
+                &graph,
+                &machines,
+                mu,
+            );
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(path, json.sorted().render() + "\n")?;
+            println!("(wrote {path})");
+        }
     }
     Ok(())
+}
+
+/// Transport-invariant summary of a closed-loop run: the `net-smoke`
+/// CI job byte-compares this JSON between the TCP multi-process run
+/// and the in-process run on the same fixture.
+fn dynamic_report_json(
+    report: &crate::sim::dynamic::DynamicReport,
+    final_assignment: &[usize],
+    graph: &crate::graph::Graph,
+    machines: &MachineConfig,
+    mu: f64,
+) -> JsonVal {
+    let part = crate::partition::Partition::from_assignment(
+        graph,
+        machines.count(),
+        final_assignment.to_vec(),
+    );
+    let (c0, c0t) = global_cost::both(graph, machines, &part, mu);
+    let mut fields = vec![
+        (
+            "assignment".into(),
+            JsonVal::Arr(final_assignment.iter().map(|&m| JsonVal::Int(m as u64)).collect()),
+        ),
+        ("global_cost_c0".into(), JsonVal::Num(c0)),
+        ("global_cost_c0_tilde".into(), JsonVal::Num(c0t)),
+        ("ticks".into(), JsonVal::Int(report.stats.ticks)),
+        ("events_processed".into(), JsonVal::Int(report.stats.events_processed)),
+        ("rollbacks".into(), JsonVal::Int(report.stats.rollbacks)),
+        ("transfers".into(), JsonVal::Int(report.transfers as u64)),
+        ("refinements".into(), JsonVal::Int(report.refinements() as u64)),
+    ];
+    if let Some(o) = report.total_overhead() {
+        let counter = |c: &crate::coordinator::protocol::Counter| {
+            JsonVal::Obj(vec![
+                ("messages".into(), JsonVal::Int(c.messages)),
+                ("bytes".into(), JsonVal::Int(c.bytes)),
+            ])
+        };
+        fields.push((
+            "overhead".into(),
+            JsonVal::Obj(vec![
+                ("take_my_turn".into(), counter(&o.take_my_turn)),
+                ("receive_node".into(), counter(&o.receive_node)),
+                ("regular_update".into(), counter(&o.regular_update)),
+                ("shutdown".into(), counter(&o.shutdown)),
+                ("total_messages".into(), JsonVal::Int(o.total_messages())),
+                ("total_bytes".into(), JsonVal::Int(o.total_bytes())),
+                (
+                    "sync_bytes_per_transfer".into(),
+                    JsonVal::Num(o.bytes_per_transfer(report.transfers as u64)),
+                ),
+                (
+                    "regular_update_bytes_per_message".into(),
+                    JsonVal::Num(o.bytes_per_regular_update()),
+                ),
+            ]),
+        ));
+    }
+    JsonVal::Obj(vec![("dynamic".into(), JsonVal::Obj(fields))])
+}
+
+/// Worker side of the multi-process cluster: block until the leader
+/// (machine 0, `gtip dynamic --transport tcp`) connects, then play one
+/// refinement round per epoch until it says goodbye.
+fn cmd_serve(args: &Args) -> CliResult {
+    let machine_id = args.opt::<usize>("machine-id")?.ok_or("--machine-id is required")?;
+    let peers = net::parse_peers(args.req_str("peers")?)?;
+    let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
+    println!(
+        "gtip serve: machine {machine_id}/{} listening on {} (leader @ {})",
+        peers.len(),
+        peers.get(machine_id).map(String::as_str).unwrap_or("?"),
+        peers[0],
+    );
+    let summary = net::serve(machine_id, &peers, connect_timeout)?;
+    println!(
+        "served {} refinement epochs as machine {}: sent {} sync msgs / {} bytes, {} control msgs / {} bytes",
+        summary.epochs,
+        summary.machine_id,
+        summary.overhead.total_messages(),
+        summary.overhead.total_bytes(),
+        summary.control.control_messages,
+        summary.control.control_bytes,
+    );
+    Ok(())
+}
+
+/// Schema gate for the bench trajectory: every group/key present in
+/// the committed baseline must appear in the measured report, so a
+/// bench that silently stops emitting a metric fails CI instead of
+/// shipping an empty trajectory.
+fn cmd_bench_gate(args: &Args) -> CliResult {
+    let baseline_path = args.str_or("baseline", "results/BENCH_baseline.json");
+    let measured_path = args.str_or("measured", "results/BENCH_sim.json");
+    let baseline = parse_json(&std::fs::read_to_string(baseline_path).map_err(|e| {
+        format!("reading baseline {baseline_path}: {e}")
+    })?)
+    .map_err(|e| format!("parsing {baseline_path}: {e}"))?;
+    let measured = parse_json(&std::fs::read_to_string(measured_path).map_err(|e| {
+        format!("reading measured {measured_path}: {e}")
+    })?)
+    .map_err(|e| format!("parsing {measured_path}: {e}"))?;
+
+    let mut missing = Vec::new();
+    fn walk(baseline: &JsonVal, measured: &JsonVal, path: &str, missing: &mut Vec<String>) {
+        if let JsonVal::Obj(kvs) = baseline {
+            for (k, sub) in kvs {
+                let child = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match measured.get(k) {
+                    Some(m) => walk(sub, m, &child, missing),
+                    None => missing.push(child),
+                }
+            }
+        }
+    }
+    walk(&baseline, &measured, "", &mut missing);
+    if missing.is_empty() {
+        println!("bench gate OK: {measured_path} covers every key of {baseline_path}");
+        Ok(())
+    } else {
+        for m in &missing {
+            eprintln!("bench gate: {measured_path} is missing {m}");
+        }
+        Err(format!(
+            "schema regression: {} key(s) present in {baseline_path} but absent from {measured_path}",
+            missing.len()
+        )
+        .into())
+    }
 }
 
 /// Adversarial scenario fuzzing (`sim::fuzz`): search the drift-schedule
@@ -663,6 +870,145 @@ mod tests {
     #[test]
     fn dynamic_rejects_bad_scenario() {
         assert!(run(&parse(&["dynamic", "--scenario", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn dynamic_rejects_bad_transport_combinations() {
+        assert!(run(&parse(&["dynamic", "--transport", "carrier-pigeon"])).is_err());
+        // tcp needs a peers list...
+        assert!(run(&parse(&["dynamic", "--transport", "tcp"])).is_err());
+        // ...a distributed backend...
+        assert!(run(&parse(&[
+            "dynamic",
+            "--transport",
+            "tcp",
+            "--backend",
+            "sequential",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+        ]))
+        .is_err());
+        // ...no --compare, and K matching the peer count.
+        assert!(run(&parse(&[
+            "dynamic",
+            "--transport",
+            "tcp",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+            "--compare",
+        ]))
+        .is_err());
+        assert!(run(&parse(&[
+            "dynamic",
+            "--transport",
+            "tcp",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+            "--k",
+            "3",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn dynamic_report_json_written_with_overhead() {
+        let path = std::env::temp_dir().join(format!("gtip_report_{}.json", std::process::id()));
+        let path_s = path.to_string_lossy().to_string();
+        run(&parse(&[
+            "dynamic",
+            "--scenario",
+            "hotspot",
+            "--nodes",
+            "80",
+            "--threads",
+            "40",
+            "--horizon",
+            "600",
+            "--epoch-ticks",
+            "150",
+            "--seed",
+            "11",
+            "--k",
+            "3",
+            "--backend",
+            "distributed",
+            "--report-json",
+            &path_s,
+        ]))
+        .unwrap();
+        let doc = parse_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let dynamic = doc.get("dynamic").expect("dynamic group");
+        assert!(dynamic.get("assignment").and_then(|a| a.as_arr()).is_some());
+        assert!(dynamic.get("overhead").and_then(|o| o.get("total_bytes")).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn serve_validates_its_arguments() {
+        assert!(run(&parse(&["serve"])).is_err());
+        assert!(run(&parse(&["serve", "--machine-id", "1"])).is_err());
+        // Machine 0 is the driver's seat.
+        assert!(run(&parse(&[
+            "serve",
+            "--machine-id",
+            "0",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+        ]))
+        .is_err());
+        // Out-of-range id.
+        assert!(run(&parse(&[
+            "serve",
+            "--machine-id",
+            "7",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn bench_gate_passes_and_fails_by_schema() {
+        let dir = std::env::temp_dir().join(format!("gtip_gate_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let baseline = dir.join("baseline.json");
+        let measured = dir.join("measured.json");
+        std::fs::write(&baseline, r#"{"simulator": {"headline": {"ticks": null}}}"#).unwrap();
+        std::fs::write(&measured, r#"{"simulator": {"headline": {"ticks": 9, "extra": 1}}}"#)
+            .unwrap();
+        run(&parse(&[
+            "bench-gate",
+            "--baseline",
+            baseline.to_str().unwrap(),
+            "--measured",
+            measured.to_str().unwrap(),
+        ]))
+        .unwrap();
+        // Drop a required key => schema regression.
+        std::fs::write(&measured, r#"{"simulator": {"other": 1}}"#).unwrap();
+        assert!(run(&parse(&[
+            "bench-gate",
+            "--baseline",
+            baseline.to_str().unwrap(),
+            "--measured",
+            measured.to_str().unwrap(),
+        ]))
+        .is_err());
+        // Missing measured file is also a failure.
+        assert!(run(&parse(&[
+            "bench-gate",
+            "--baseline",
+            baseline.to_str().unwrap(),
+            "--measured",
+            dir.join("nope.json").to_str().unwrap(),
+        ]))
+        .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dynamic_rejects_compare_with_report_json() {
+        assert!(run(&parse(&["dynamic", "--compare", "--report-json", "/tmp/x.json"])).is_err());
     }
 
     #[test]

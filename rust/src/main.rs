@@ -8,7 +8,12 @@
 //! * `dynamic`    — the closed-loop §6.1 title scenario: scripted
 //!   drifting workloads, epoch-windowed load measurement, estimator-
 //!   smoothed re-weighting, warm-started refinement, live migration,
-//!   per-epoch reports (`--compare` adds the frozen baseline).
+//!   per-epoch reports (`--compare` adds the frozen baseline;
+//!   `--transport tcp --peers ...` leads a multi-process TCP cluster).
+//! * `serve`      — one worker machine of that TCP cluster: joins the
+//!   mesh, replays refinement rounds until the leader says goodbye.
+//! * `bench-gate` — fail if `results/BENCH_sim.json` is missing a
+//!   group/key present in the committed baseline (schema regression).
 //! * `experiment` — regenerate a paper table/figure
 //!   (`table1 | batch | fig7 | fig8 | fig9 | fig10 | all`).
 //! * `artifacts`  — verify the PJRT artifacts load and agree with the

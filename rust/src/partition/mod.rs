@@ -35,6 +35,20 @@ impl MachineConfig {
         MachineConfig { speeds: vec![1.0 / k as f64; k] }
     }
 
+    /// Adopt already-normalized speeds verbatim, without dividing by
+    /// the sum again. Used to reconstruct a `MachineConfig` from
+    /// speeds that were produced by [`MachineConfig::speeds`] on
+    /// another machine: renormalizing can shift each weight by an ulp
+    /// (e.g. five 0.2s sum to 1.0000000000000002), which would break
+    /// the bit-identical replica guarantee of the TCP coordinator.
+    pub fn from_normalized(speeds: Vec<f64>) -> Self {
+        assert!(!speeds.is_empty(), "need at least one machine");
+        assert!(speeds.iter().all(|&s| s > 0.0), "speeds must be positive");
+        let total: f64 = speeds.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "speeds are not normalized (sum {total})");
+        MachineConfig { speeds }
+    }
+
     /// Number of machines `K`.
     pub fn count(&self) -> usize {
         self.speeds.len()

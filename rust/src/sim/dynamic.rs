@@ -21,7 +21,8 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{run_distributed, DistributedOptions};
+use crate::coordinator::net::ClusterLeader;
+use crate::coordinator::{run_distributed, DistributedOptions, OverheadStats, WireError};
 use crate::game::cost::Framework;
 use crate::game::refine::{RefineEngine, RefineOptions};
 use crate::graph::Graph;
@@ -265,6 +266,9 @@ pub struct EpochRefinement {
     pub imbalance_after: f64,
     /// Whether refinement reached a Nash equilibrium (vs the cap).
     pub converged: bool,
+    /// Measured coordinator sync traffic of this epoch (exact wire
+    /// bytes) — `None` on the sequential backend, which sends nothing.
+    pub overhead: Option<OverheadStats>,
 }
 
 /// Per-epoch record of the closed loop.
@@ -325,6 +329,18 @@ impl DynamicReport {
             .count()
     }
 
+    /// Total coordinator sync traffic across every refinement epoch
+    /// (`None` if no epoch used a message-passing backend).
+    pub fn total_overhead(&self) -> Option<OverheadStats> {
+        let mut total: Option<OverheadStats> = None;
+        for r in self.epochs.iter().filter_map(|e| e.refine.as_ref()) {
+            if let Some(o) = &r.overhead {
+                total.get_or_insert_with(OverheadStats::default).add(o);
+            }
+        }
+        total
+    }
+
     /// Render the per-epoch stream as a table.
     pub fn epoch_table(&self, title: &str) -> Table {
         let mut t = Table::new(
@@ -369,6 +385,9 @@ pub struct DynamicDriver<'g> {
     refinements: usize,
     transfers: usize,
     migration_ticks: u64,
+    /// When attached, the distributed backend refines over this real
+    /// multi-process TCP cluster instead of in-process actor threads.
+    cluster: Option<ClusterLeader>,
 }
 
 impl<'g> DynamicDriver<'g> {
@@ -392,7 +411,27 @@ impl<'g> DynamicDriver<'g> {
             refinements: 0,
             transfers: 0,
             migration_ticks: 0,
+            cluster: None,
         }
+    }
+
+    /// Route every distributed refinement over a connected TCP cluster
+    /// (broadcasts the shared fixture to the workers first). Requires
+    /// `options.backend == RefineBackend::Distributed`.
+    pub fn attach_cluster(&mut self, cluster: ClusterLeader) -> Result<(), WireError> {
+        assert_eq!(
+            self.options.backend,
+            RefineBackend::Distributed,
+            "a TCP cluster needs the distributed backend"
+        );
+        if let Err(e) = cluster.setup(&self.lp_graph, &self.machines) {
+            // Best-effort Goodbye so workers that did complete the
+            // handshake exit now instead of waiting out EPOCH_WAIT.
+            let _ = cluster.shutdown();
+            return Err(e);
+        }
+        self.cluster = Some(cluster);
+        Ok(())
     }
 
     pub fn engine(&self) -> &SimEngine<'g> {
@@ -415,7 +454,9 @@ impl<'g> DynamicDriver<'g> {
     }
 
     /// Measure → estimate → install → refine (warm start) → migrate.
-    fn refine_once(&mut self, counters: &EpochCounters) -> EpochRefinement {
+    /// Only the TCP-cluster path can fail; on error the cluster is torn
+    /// down first (Goodbye) so surviving workers exit immediately.
+    fn refine_once(&mut self, counters: &EpochCounters) -> Result<EpochRefinement, WireError> {
         let raw = weights::measure_epoch(&self.engine, counters);
         let estimated = self.estimator.estimate(&raw);
         weights::install(&mut self.lp_graph, &estimated);
@@ -424,7 +465,7 @@ impl<'g> DynamicDriver<'g> {
         part.rebuild_aggregates(&self.lp_graph);
         let imbalance_before = part.imbalance(&self.machines);
 
-        let (potential_before, potential_after, transfers, converged, refined) =
+        let (potential_before, potential_after, transfers, converged, overhead, refined) =
             match self.options.backend {
                 RefineBackend::Sequential => {
                     let mut refine = RefineEngine::new(
@@ -441,23 +482,51 @@ impl<'g> DynamicDriver<'g> {
                         report.final_potential,
                         report.transfers,
                         report.converged,
+                        None,
                         refine.into_partition(),
                     )
                 }
                 RefineBackend::Distributed => {
                     let before = self.potential_of(&part);
-                    let report = run_distributed(
-                        Arc::new(self.lp_graph.clone()),
-                        &self.machines,
-                        part,
-                        &DistributedOptions {
-                            mu: self.options.mu,
-                            framework: self.options.framework,
-                            ..Default::default()
-                        },
-                    );
+                    let report = if self.cluster.is_some() {
+                        let result = self
+                            .cluster
+                            .as_mut()
+                            .expect("checked above")
+                            .refine(&self.lp_graph, &self.machines, part);
+                        match result {
+                            Ok(report) => report,
+                            Err(e) => {
+                                // Tear down first so surviving workers
+                                // get a Goodbye and exit immediately
+                                // instead of waiting out EPOCH_WAIT.
+                                if let Some(cluster) = self.cluster.take() {
+                                    let _ = cluster.shutdown();
+                                }
+                                return Err(e);
+                            }
+                        }
+                    } else {
+                        run_distributed(
+                            Arc::new(self.lp_graph.clone()),
+                            &self.machines,
+                            part,
+                            &DistributedOptions {
+                                mu: self.options.mu,
+                                framework: self.options.framework,
+                                ..Default::default()
+                            },
+                        )
+                    };
                     let after = self.potential_of(&report.partition);
-                    (before, after, report.transfers, report.converged, report.partition)
+                    (
+                        before,
+                        after,
+                        report.transfers,
+                        report.converged,
+                        Some(report.overhead),
+                        report.partition,
+                    )
                 }
             };
 
@@ -467,7 +536,7 @@ impl<'g> DynamicDriver<'g> {
         self.transfers += transfers;
         self.migration_ticks += charge;
         self.engine.set_partition(refined);
-        EpochRefinement {
+        Ok(EpochRefinement {
             potential_before,
             potential_after,
             transfers,
@@ -475,15 +544,18 @@ impl<'g> DynamicDriver<'g> {
             imbalance_before,
             imbalance_after,
             converged,
-        }
+            overhead,
+        })
     }
 
     /// Run one epoch: up to `epoch_ticks` of simulation, then (if work
     /// remains and rebalancing is enabled) one refinement pass. Returns
-    /// `false` once the workload drained or the tick cap was hit.
-    pub fn run_epoch(&mut self) -> bool {
+    /// `Ok(false)` once the workload drained or the tick cap was hit.
+    /// Only a TCP-cluster refinement can return `Err`; without an
+    /// attached cluster this is infallible.
+    pub fn try_run_epoch(&mut self) -> Result<bool, WireError> {
         if self.engine.drained() || self.engine.stats().ticks >= self.options.sim.max_ticks {
-            return false;
+            return Ok(false);
         }
         let tick_start = self.engine.stats().ticks;
         let budget = if self.options.epoch_ticks == 0 {
@@ -503,7 +575,7 @@ impl<'g> DynamicDriver<'g> {
             && self.options.epoch_ticks > 0
             && (self.options.max_refinements == 0 || self.refinements < self.options.max_refinements)
         {
-            Some(self.refine_once(&counters))
+            Some(self.refine_once(&counters)?)
         } else {
             None
         };
@@ -519,23 +591,44 @@ impl<'g> DynamicDriver<'g> {
             throughput: counters.events_total() as f64 / window as f64,
             refine,
         });
-        more
+        Ok(more)
     }
 
-    /// Run epochs until the workload drains (or `max_ticks`).
-    pub fn run(&mut self) -> DynamicReport {
-        while self.run_epoch() {}
+    /// Infallible [`DynamicDriver::try_run_epoch`]; panics on a TCP
+    /// cluster failure (which cannot happen without an attached
+    /// cluster — every in-process backend is infallible).
+    pub fn run_epoch(&mut self) -> bool {
+        self.try_run_epoch().unwrap_or_else(|e| panic!("distributed refinement failed: {e}"))
+    }
+
+    /// Run epochs until the workload drains (or `max_ticks`). Only a
+    /// TCP-cluster refinement can return `Err` (after the cluster was
+    /// torn down with a Goodbye so workers exit promptly).
+    pub fn try_run(&mut self) -> Result<DynamicReport, WireError> {
+        while self.try_run_epoch()? {}
+        if let Some(cluster) = self.cluster.take() {
+            // Graceful cluster teardown: workers exit on Goodbye.
+            if let Err(e) = cluster.shutdown() {
+                eprintln!("gtip net: cluster shutdown failed: {e}");
+            }
+        }
         let mut stats = self.engine.stats().clone();
         if !self.engine.drained() {
             stats.truncated = true;
         }
-        DynamicReport {
+        Ok(DynamicReport {
             stats,
             epochs: self.epochs.clone(),
             transfers: self.transfers,
             migration_ticks: self.migration_ticks,
             load_traces: self.engine.load_traces().to_vec(),
-        }
+        })
+    }
+
+    /// Infallible [`DynamicDriver::try_run`] for the in-process
+    /// backends (panics on a TCP cluster failure).
+    pub fn run(&mut self) -> DynamicReport {
+        self.try_run().unwrap_or_else(|e| panic!("distributed refinement failed: {e}"))
     }
 }
 
@@ -765,6 +858,10 @@ mod tests {
         assert_eq!(seq.stats.ticks, dist.stats.ticks);
         assert_eq!(seq.transfers, dist.transfers);
         assert_eq!(seq.epochs.len(), dist.epochs.len());
+        // Only the message-passing backend accumulates sync overhead.
+        assert!(seq.total_overhead().is_none());
+        let overhead = dist.total_overhead().expect("distributed epochs measure overhead");
+        assert!(overhead.total_messages() > 0);
         for (a, b) in seq.epochs.iter().zip(&dist.epochs) {
             match (&a.refine, &b.refine) {
                 (Some(ra), Some(rb)) => {

@@ -220,6 +220,116 @@ impl BuiltFixture {
     }
 }
 
+/// Spawn-K-processes harness for the TCP coordinator: launches real
+/// `gtip serve` worker processes for machines `1..K` of a loopback
+/// cluster and kills them on drop, so integration tests can stand up a
+/// genuine multi-process mesh. The caller plays machine 0 — via
+/// [`crate::coordinator::net::ClusterLeader`] or by running
+/// `gtip dynamic --transport tcp` itself — and passes the binary path
+/// in (integration tests use `env!("CARGO_BIN_EXE_gtip")`; the library
+/// cannot name the binary at compile time).
+pub struct TcpClusterHarness {
+    /// `host:port` per machine; index 0 is the leader's listen address.
+    pub peers: Vec<String>,
+    children: Vec<std::process::Child>,
+}
+
+impl TcpClusterHarness {
+    /// Reserve `k` free loopback `host:port`s (bind :0, record, release;
+    /// the tiny release-to-rebind window is fine for test use).
+    pub fn reserve_loopback_peers(k: usize) -> Vec<String> {
+        let listeners: Vec<std::net::TcpListener> = (0..k)
+            .map(|_| std::net::TcpListener::bind("127.0.0.1:0").expect("bind 127.0.0.1:0"))
+            .collect();
+        listeners.iter().map(|l| l.local_addr().expect("local addr").to_string()).collect()
+    }
+
+    /// Spawn `gtip serve` workers for machines `1..k`. The workers dial
+    /// with retry+backoff, so spawning before the leader binds is fine.
+    pub fn spawn(gtip_bin: &std::path::Path, k: usize) -> std::io::Result<TcpClusterHarness> {
+        assert!(k >= 2, "a cluster needs a leader and at least one worker");
+        let peers = Self::reserve_loopback_peers(k);
+        let peers_arg = peers.join(",");
+        let mut children = Vec::with_capacity(k - 1);
+        for machine in 1..k {
+            children.push(
+                std::process::Command::new(gtip_bin)
+                    .args(["serve", "--machine-id", &machine.to_string(), "--peers", &peers_arg])
+                    .stdout(std::process::Stdio::null())
+                    .spawn()?,
+            );
+        }
+        Ok(TcpClusterHarness { peers, children })
+    }
+
+    /// Wait for every worker to exit cleanly (they do after the
+    /// leader's Goodbye); panics on a non-zero exit status.
+    pub fn join(mut self) {
+        for mut c in self.children.drain(..) {
+            let status = c.wait().expect("waiting on serve worker");
+            assert!(status.success(), "serve worker exited with {status}");
+        }
+    }
+}
+
+impl Drop for TcpClusterHarness {
+    fn drop(&mut self) {
+        for c in &mut self.children {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Drive a refinement ring over the surviving endpoints of a cluster
+/// whose other machines died (their endpoints were dropped before the
+/// round), and assert every survivor exits through the recv timeout —
+/// bounded, not deadlocked. Shared by the named peer-drop regression
+/// tests on both transports (`integration_coordinator.rs`).
+pub fn assert_ring_unwinds_on_dead_peer<B>(
+    endpoints: Vec<B>,
+    graph: &Graph,
+    machines: &MachineConfig,
+    initial: &Partition,
+    recv_timeout: std::time::Duration,
+) where
+    B: crate::coordinator::bus::Bus + Send + 'static,
+{
+    use crate::coordinator::distributed::machine_loop;
+    use crate::coordinator::machine::MachineActor;
+    use crate::coordinator::protocol::Message;
+
+    assert!(!endpoints.is_empty(), "need at least one survivor");
+    // Kick the ring exactly like a live run would.
+    endpoints[0].send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+    let started = std::time::Instant::now();
+    let graph = std::sync::Arc::new(graph.clone());
+    let mut handles = Vec::new();
+    for endpoint in endpoints {
+        let actor = MachineActor::new(
+            endpoint.id(),
+            std::sync::Arc::clone(&graph),
+            machines.clone(),
+            initial,
+            8.0,
+            Framework::A,
+        );
+        handles.push(std::thread::spawn(move || {
+            machine_loop(actor, &endpoint, 1e-9, 1_000_000, recv_timeout)
+        }));
+    }
+    for h in handles {
+        let outcome = h.join().expect("ring actor panicked");
+        assert!(outcome.timed_out, "survivor should time out, not deadlock");
+        assert!(!outcome.converged);
+    }
+    assert!(
+        started.elapsed() < std::time::Duration::from_secs(20),
+        "ring with a dead peer took {:?} to unwind",
+        started.elapsed()
+    );
+}
+
 /// Location of the persisted fuzz corpus, anchored at the crate root
 /// so tests and benches resolve it regardless of working directory.
 pub fn fuzz_corpus_dir() -> std::path::PathBuf {

@@ -6,6 +6,8 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use gtip::coordinator::bus::build_bus;
+use gtip::coordinator::net::{build_tcp_bus_local, run_distributed_tcp_local, ClusterLeader};
 use gtip::coordinator::{run_distributed, DistributedOptions};
 use gtip::game::cost::{CostModel, Framework};
 use gtip::game::refine::{RefineEngine, RefineOptions};
@@ -13,6 +15,7 @@ use gtip::graph::generators::preferential_attachment;
 use gtip::partition::initial::grow_partition;
 use gtip::partition::{global_cost, MachineConfig, Partition};
 use gtip::util::rng::Pcg32;
+use gtip::util::testkit::{assert_ring_unwinds_on_dead_peer, TcpClusterHarness};
 
 /// §4.5 measured: bytes of synchronization per transfer must be flat as
 /// the simulated graph grows 8x.
@@ -193,6 +196,165 @@ fn distributed_improves_and_stabilizes() {
     );
     assert_eq!(again.transfers, 0);
     assert_eq!(again.partition.assignment(), report.partition.assignment());
+}
+
+/// TCP and in-process transports produce bit-identical
+/// `DistributedReport`s: same equilibrium assignment, same transfer
+/// count, same convergence flag, and byte-for-byte the same measured
+/// `OverheadStats` — the wire accounting is exact on both transports.
+#[test]
+fn tcp_and_inproc_transports_bit_identical_reports() {
+    for seed in [21u64, 22] {
+        for fw in [Framework::A, Framework::B] {
+            let mut rng = Pcg32::new(seed);
+            let graph = Arc::new(preferential_attachment(120, 2, &mut rng));
+            let machines = MachineConfig::from_speeds(&[0.15, 0.25, 0.35, 0.25]);
+            let assignment: Vec<usize> = (0..120).map(|_| rng.index(4)).collect();
+            let initial = Partition::from_assignment(&graph, 4, assignment);
+            let opts = DistributedOptions { framework: fw, ..Default::default() };
+
+            let inproc =
+                run_distributed(Arc::clone(&graph), &machines, initial.clone(), &opts);
+            let tcp = run_distributed_tcp_local(Arc::clone(&graph), &machines, initial, &opts)
+                .expect("loopback mesh");
+
+            assert_eq!(
+                tcp.partition.assignment(),
+                inproc.partition.assignment(),
+                "seed {seed} fw {fw}: assignments differ across transports"
+            );
+            assert_eq!(tcp.transfers, inproc.transfers, "seed {seed} fw {fw}");
+            assert_eq!(tcp.converged, inproc.converged, "seed {seed} fw {fw}");
+            assert!(!tcp.timed_out);
+            assert_eq!(
+                tcp.overhead, inproc.overhead,
+                "seed {seed} fw {fw}: overhead accounting differs across transports"
+            );
+        }
+    }
+}
+
+/// §4.5 measured on real sockets: as the simulated graph grows 8x, the
+/// synchronization bytes per transfer and the bytes of one
+/// aggregate-state broadcast stay exactly flat (both are O(K) wire
+/// quantities, independent of N).
+#[test]
+fn tcp_sync_overhead_independent_of_n() {
+    let machines = MachineConfig::homogeneous(5);
+    let mut per_transfer = Vec::new();
+    let mut per_update = Vec::new();
+    for n in [200usize, 1600] {
+        let mut rng = Pcg32::new(7);
+        let graph = Arc::new(preferential_attachment(n, 2, &mut rng));
+        let initial = grow_partition(&graph, &machines, &mut rng);
+        let report = run_distributed_tcp_local(
+            Arc::clone(&graph),
+            &machines,
+            initial,
+            &DistributedOptions::default(),
+        )
+        .expect("loopback mesh");
+        assert!(report.converged);
+        assert!(report.transfers > 0, "n={n}: no transfers at all");
+        per_transfer.push(report.overhead.bytes_per_transfer(report.transfers as u64));
+        per_update.push(report.overhead.bytes_per_regular_update());
+    }
+    assert_eq!(per_transfer[0], per_transfer[1], "bytes/transfer varies with N: {per_transfer:?}");
+    assert_eq!(per_update[0], per_update[1], "bytes/RegularUpdate varies with N: {per_update:?}");
+    // One transfer = 1 ReceiveNode + (K-2) RegularUpdates, exact sizes.
+    let k = machines.count();
+    assert_eq!(per_update[0], (33 + 8 * k) as f64);
+    assert_eq!(per_transfer[0], (29 + (k - 2) * (33 + 8 * k)) as f64);
+}
+
+/// Named regression: a peer that dies mid-round (its endpoint drops,
+/// closing its sockets) must not deadlock the survivors — every live
+/// actor exits through `recv_timeout` within bounded time, on the real
+/// TCP transport.
+#[test]
+fn tcp_peer_drop_during_round_times_out_cleanly() {
+    let mut rng = Pcg32::new(13);
+    let graph = preferential_attachment(60, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(3);
+    let assignment: Vec<usize> = (0..60).map(|_| rng.index(3)).collect();
+    let initial = Partition::from_assignment(&graph, 3, assignment);
+
+    let (mut endpoints, _stats) = build_tcp_bus_local(3).expect("loopback mesh");
+    drop(endpoints.pop().unwrap()); // machine 2 dies: its sockets close
+    assert_ring_unwinds_on_dead_peer(
+        endpoints,
+        &graph,
+        &machines,
+        &initial,
+        Duration::from_millis(200),
+    );
+}
+
+/// Same regression on the in-process bus (the transports share one
+/// timeout-aware receive path, so both must unwind).
+#[test]
+fn inproc_peer_drop_during_round_times_out_cleanly() {
+    let mut rng = Pcg32::new(14);
+    let graph = preferential_attachment(60, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(4);
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let (mut endpoints, _stats) = build_bus(4, Duration::ZERO);
+    drop(endpoints.pop().unwrap());
+    assert_ring_unwinds_on_dead_peer(
+        endpoints,
+        &graph,
+        &machines,
+        &initial,
+        Duration::from_millis(150),
+    );
+}
+
+/// Full multi-process smoke: spawn two real `gtip serve` worker
+/// processes via the testkit harness, lead a refinement round over the
+/// loopback mesh from this process, and require the result to be
+/// bit-identical (assignment, transfers, overhead) to the in-process
+/// run on the same fixture — the §4.5 protocol crossing genuine OS
+/// process + socket boundaries.
+#[test]
+fn multiprocess_cluster_matches_inproc_refinement() {
+    let mut rng = Pcg32::new(17);
+    let graph = preferential_attachment(100, 2, &mut rng);
+    let machines = MachineConfig::homogeneous(3);
+    let assignment: Vec<usize> = (0..100).map(|_| rng.index(3)).collect();
+    let initial = Partition::from_assignment(&graph, 3, assignment);
+    let opts = DistributedOptions::default();
+
+    let inproc = run_distributed(
+        Arc::new(graph.clone()),
+        &machines,
+        initial.clone(),
+        &opts,
+    );
+
+    let bin = std::path::Path::new(env!("CARGO_BIN_EXE_gtip"));
+    let harness = TcpClusterHarness::spawn(bin, 3).expect("spawning serve workers");
+    let mut leader = ClusterLeader::connect(
+        &harness.peers,
+        opts.clone(),
+        Duration::from_secs(30),
+    )
+    .expect("leading the mesh");
+    leader.setup(&graph, &machines).expect("broadcasting fixture");
+
+    // Two rounds: the first refines to equilibrium, the second must be
+    // an idempotent no-op — both bit-identical to in-process.
+    let round1 = leader.refine(&graph, &machines, initial).expect("round 1");
+    assert_eq!(round1.partition.assignment(), inproc.partition.assignment());
+    assert_eq!(round1.transfers, inproc.transfers);
+    assert_eq!(round1.overhead, inproc.overhead, "multi-process wire accounting diverged");
+    assert!(round1.converged);
+
+    let round2 = leader.refine(&graph, &machines, round1.partition.clone()).expect("round 2");
+    assert_eq!(round2.transfers, 0);
+    assert_eq!(round2.partition.assignment(), round1.partition.assignment());
+
+    leader.shutdown().expect("goodbye");
+    harness.join();
 }
 
 /// Degenerate pools: K=1 must trivially converge with zero transfers;

@@ -455,3 +455,103 @@ fn prop_rng_uniformity() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------
+// Coordinator wire codec (coordinator::net)
+// ---------------------------------------------------------------------
+
+use gtip::coordinator::net::{decode_payload, encode_frame, Frame};
+use gtip::coordinator::protocol::Message;
+use gtip::partition::MachineId;
+
+/// Random protocol message across all four variants, with adversarial
+/// field magnitudes (huge seqs/node ids, empty through size-hinted
+/// loads vectors, extreme f64s).
+fn gen_message(g: &mut GenCtx) -> Message {
+    let extreme = [0.0f64, -0.0, 1.5, -3.25, f64::MAX, f64::MIN_POSITIVE, 1e300, -1e-300];
+    match g.usize_in(0, 3) {
+        0 => Message::TakeMyTurn {
+            consecutive_forfeits: g.usize_in(0, 1 << 20),
+            transfers_so_far: g.usize_in(0, 1 << 30),
+        },
+        1 => Message::ReceiveNode {
+            seq: g.rng.next_u64(),
+            node: g.usize_in(0, 1 << 30),
+            from: g.usize_in(0, 64) as MachineId,
+            to: g.usize_in(0, 64) as MachineId,
+        },
+        2 => {
+            let loads = g.vec_of(0, 64, |g| {
+                let i = g.usize_in(0, 7);
+                extreme[i] * if g.usize_in(0, 1) == 0 { 1.0 } else { -1.0 }
+            });
+            Message::RegularUpdate {
+                seq: g.rng.next_u64(),
+                node: g.usize_in(0, 1 << 30),
+                from: g.usize_in(0, 64) as MachineId,
+                to: g.usize_in(0, 64) as MachineId,
+                loads,
+            }
+        }
+        _ => Message::Shutdown {
+            total_transfers: g.rng.next_u64(),
+            converged: g.usize_in(0, 1) == 1,
+        },
+    }
+}
+
+/// Every message round-trips through the wire codec exactly, and the
+/// encoded frame length equals `Message::wire_bytes` — the number both
+/// transports feed into `OverheadStats`.
+#[test]
+fn prop_wire_codec_round_trips_with_exact_sizes() {
+    check_property("wire_codec_round_trip", PropConfig::default(), |g| {
+        let msg = gen_message(g);
+        let bytes = encode_frame(&Frame::Msg(msg.clone()));
+        if bytes.len() != msg.wire_bytes() {
+            return Err(format!(
+                "{}: encoded {} bytes but wire_bytes says {}",
+                msg.tag(),
+                bytes.len(),
+                msg.wire_bytes()
+            ));
+        }
+        let decoded = decode_payload(&bytes[4..]).map_err(|e| format!("decode: {e}"))?;
+        if decoded != Frame::Msg(msg.clone()) {
+            return Err(format!("round trip drifted: {msg:?} -> {decoded:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Mangled frames — truncated at any point, unknown tags, trailing
+/// garbage — must return clean errors, never panic.
+#[test]
+fn prop_wire_codec_rejects_mangled_frames() {
+    check_property("wire_codec_mangling", PropConfig::default(), |g| {
+        let msg = gen_message(g);
+        let bytes = encode_frame(&Frame::Msg(msg.clone()));
+        let payload = &bytes[4..];
+
+        // Truncation at a random cut is an error (empty prefix included).
+        let cut = g.usize_in(0, payload.len() - 1);
+        if decode_payload(&payload[..cut]).is_ok() {
+            return Err(format!("{}: truncated to {cut} bytes still decoded", msg.tag()));
+        }
+
+        // Trailing garbage is an error.
+        let mut padded = payload.to_vec();
+        padded.push(g.usize_in(0, 255) as u8);
+        if decode_payload(&padded).is_ok() {
+            return Err(format!("{}: trailing byte accepted", msg.tag()));
+        }
+
+        // An unknown tag is an error (tags 5..=15 and 21.. are unused).
+        let mut retagged = payload.to_vec();
+        retagged[0] = 5 + g.usize_in(0, 10) as u8;
+        if decode_payload(&retagged).is_ok() {
+            return Err("unknown tag accepted".into());
+        }
+        Ok(())
+    });
+}
