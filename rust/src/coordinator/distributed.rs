@@ -48,6 +48,10 @@ use crate::partition::{MachineConfig, MachineId, Partition};
 pub struct DistributedOptions {
     pub mu: f64,
     pub framework: Framework,
+    /// Per-move migration surcharge of the augmented game (DESIGN.md
+    /// §9); rides `Setup` on the TCP transport so every worker prices
+    /// moves identically to the in-process path.
+    pub migration_charge: f64,
     /// Dissatisfaction threshold treated as zero.
     pub epsilon: f64,
     /// Injected per-message latency (0 = local cluster; ignored by the
@@ -66,6 +70,7 @@ impl Default for DistributedOptions {
         DistributedOptions {
             mu: 8.0,
             framework: Framework::A,
+            migration_charge: 0.0,
             epsilon: 1e-9,
             latency: Duration::ZERO,
             max_transfers: 1_000_000,
@@ -271,6 +276,7 @@ where
             &initial,
             options.mu,
             options.framework,
+            options.migration_charge,
         );
         let epsilon = options.epsilon;
         let max_transfers = options.max_transfers;
@@ -359,6 +365,30 @@ mod tests {
             run_distributed(Arc::clone(&g), &machines, part, &DistributedOptions::default());
         assert_eq!(dist.transfers, seq_report.transfers);
         assert_eq!(dist.partition.assignment(), seq.partition().assignment());
+    }
+
+    /// The augmented (migration-charged) game is transport-invariant:
+    /// the distributed ring with a nonzero charge reproduces the
+    /// charged sequential engine exactly (same transfers, same final
+    /// assignment), and converges to an augmented Nash equilibrium.
+    #[test]
+    fn charged_distributed_matches_charged_sequential() {
+        let (g, machines, part) = setup(7, 60);
+        let charge = 5.0;
+        let mut seq = RefineEngine::new(&g, &machines, part.clone(), 8.0, Framework::A)
+            .with_migration_charge(charge);
+        let seq_report = seq.run(&RefineOptions::default());
+        let opts = DistributedOptions { migration_charge: charge, ..Default::default() };
+        let dist = run_distributed(Arc::clone(&g), &machines, part, &opts);
+        assert!(dist.converged);
+        assert_eq!(dist.transfers, seq_report.transfers);
+        assert_eq!(dist.partition.assignment(), seq.partition().assignment());
+        // Augmented Nash: no node's raw gain beats the charge.
+        let model = CostModel::new(&g, machines, 8.0, Framework::A).with_migration_charge(charge);
+        for i in 0..g.node_count() {
+            let (j, _) = model.dissatisfaction(&dist.partition, i);
+            assert!(j <= 1e-6, "node {i} still augmented-dissatisfied: {j}");
+        }
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub struct MachineActor {
     machines: MachineConfig,
     mu: f64,
     framework: Framework,
+    /// Per-move migration surcharge of the augmented game (DESIGN.md
+    /// §9); must match the other machines' charge exactly or replicas
+    /// pick different transfers.
+    migration_charge: f64,
     /// Local replica of the full assignment (content-wise a machine only
     /// *needs* its own members + their neighbors; a dense replica is the
     /// simplest O(N)-memory / O(1)-update-traffic realization).
@@ -48,7 +52,12 @@ impl MachineActor {
         initial: &Partition,
         mu: f64,
         framework: Framework,
+        migration_charge: f64,
     ) -> Self {
+        assert!(
+            migration_charge >= 0.0 && migration_charge.is_finite(),
+            "migration charge must be finite and >= 0"
+        );
         let members = initial.members(id);
         MachineActor {
             id,
@@ -56,6 +65,7 @@ impl MachineActor {
             machines,
             mu,
             framework,
+            migration_charge,
             part: initial.clone(),
             members,
             transfers_made: 0,
@@ -64,6 +74,7 @@ impl MachineActor {
 
     fn model(&self) -> CostModel<'_> {
         CostModel::new(&self.graph, self.machines.clone(), self.mu, self.framework)
+            .with_migration_charge(self.migration_charge)
     }
 
     /// Current members (sorted copy; for reporting).
@@ -152,14 +163,14 @@ mod tests {
     #[test]
     fn members_initialized_from_partition() {
         let (g, machines, part) = setup();
-        let m = MachineActor::new(1, g, machines, &part, 8.0, Framework::A);
+        let m = MachineActor::new(1, g, machines, &part, 8.0, Framework::A, 0.0);
         assert_eq!(m.members(), part.members(1));
     }
 
     #[test]
     fn turn_transfers_most_dissatisfied() {
         let (g, machines, part) = setup();
-        let mut m = MachineActor::new(0, Arc::clone(&g), machines.clone(), &part, 8.0, Framework::A);
+        let mut m = MachineActor::new(0, Arc::clone(&g), machines.clone(), &part, 8.0, Framework::A, 0.0);
         match m.take_turn(1e-9) {
             TurnDecision::Transfer { node, to, dissatisfaction } => {
                 assert!(dissatisfaction > 0.0);
@@ -184,8 +195,8 @@ mod tests {
     #[test]
     fn replicas_converge_under_update_stream() {
         let (g, machines, part) = setup();
-        let mut a = MachineActor::new(0, Arc::clone(&g), machines.clone(), &part, 8.0, Framework::A);
-        let mut b = MachineActor::new(1, Arc::clone(&g), machines.clone(), &part, 8.0, Framework::A);
+        let mut a = MachineActor::new(0, Arc::clone(&g), machines.clone(), &part, 8.0, Framework::A, 0.0);
+        let mut b = MachineActor::new(1, Arc::clone(&g), machines.clone(), &part, 8.0, Framework::A, 0.0);
         // a executes turns; b applies the updates; replicas stay equal.
         for _ in 0..5 {
             match a.take_turn(1e-9) {
@@ -202,7 +213,7 @@ mod tests {
     #[test]
     fn receive_node_adds_member() {
         let (g, machines, part) = setup();
-        let mut b = MachineActor::new(1, g, machines, &part, 8.0, Framework::A);
+        let mut b = MachineActor::new(1, g, machines, &part, 8.0, Framework::A, 0.0);
         // Find a node owned by machine 0 and hand it to machine 1.
         let node = part.members(0)[0];
         b.apply_local_transfer(node, 0, 1);

@@ -63,8 +63,12 @@ use crate::partition::{MachineConfig, MachineId, Partition};
 
 /// First bytes of every `Hello` payload after the tag.
 pub const WIRE_MAGIC: [u8; 4] = *b"GTIP";
-/// Wire protocol version; bumped on any layout change.
-pub const WIRE_VERSION: u16 = 1;
+/// Wire protocol version; bumped on any layout change. v2 added the
+/// migration charge of the augmented game to `Setup` — the `Hello`
+/// handshake rejects any peer speaking another version, so the decode
+/// of the widened layout is version-gated at connection time and a
+/// v1/v2 mix can never half-parse a fixture.
+pub const WIRE_VERSION: u16 = 2;
 /// Upper bound on a single frame payload; larger prefixes are rejected
 /// before any allocation happens.
 pub const MAX_FRAME_BYTES: usize = 1 << 24;
@@ -169,6 +173,10 @@ pub struct SetupFrame {
     pub speeds: Vec<f64>,
     pub mu: f64,
     pub framework: Framework,
+    /// Per-move migration surcharge of the augmented game (DESIGN.md
+    /// §9). Workers must price moves with exactly the leader's charge
+    /// or replicas pick different transfers (wire v2).
+    pub migration_charge: f64,
     pub epsilon: f64,
     pub max_transfers: u64,
     pub recv_timeout_ms: u64,
@@ -316,6 +324,7 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
                 Framework::A => 0,
                 Framework::B => 1,
             });
+            put_f64(b, s.migration_charge);
             put_f64(b, s.epsilon);
             put_u64(b, s.max_transfers);
             put_u64(b, s.recv_timeout_ms);
@@ -414,6 +423,7 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
                 speeds,
                 mu,
                 framework,
+                migration_charge: d.f64()?,
                 epsilon: d.f64()?,
                 max_transfers: d.u64()?,
                 recv_timeout_ms: d.u64()?,
@@ -868,6 +878,7 @@ impl ClusterLeader {
             speeds: machines.speeds().to_vec(),
             mu: self.opts.mu,
             framework: self.opts.framework,
+            migration_charge: self.opts.migration_charge,
             epsilon: self.opts.epsilon,
             max_transfers: self.opts.max_transfers as u64,
             recv_timeout_ms: self.opts.recv_timeout.as_millis() as u64,
@@ -903,6 +914,7 @@ impl ClusterLeader {
             &initial,
             self.opts.mu,
             self.opts.framework,
+            self.opts.migration_charge,
         );
         self.ep.send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
         let outcome =
@@ -1032,6 +1044,12 @@ pub fn serve(
             "fixture weights must be finite and non-negative".into(),
         ));
     }
+    if !(setup.migration_charge.is_finite() && setup.migration_charge >= 0.0) {
+        return Err(WireError::Protocol(format!(
+            "fixture migration charge {} must be finite and non-negative",
+            setup.migration_charge
+        )));
+    }
     // Adopt the leader's normalized speeds verbatim — renormalizing
     // here could drift each weight by an ulp and diverge the replicas.
     let machines = MachineConfig::from_normalized(setup.speeds.clone());
@@ -1096,6 +1114,7 @@ pub fn serve(
                     &part,
                     setup.mu,
                     setup.framework,
+                    setup.migration_charge,
                 );
                 let outcome = machine_loop(
                     actor,
@@ -1206,6 +1225,7 @@ mod tests {
                 speeds: vec![0.25, 0.75],
                 mu: 8.0,
                 framework: Framework::B,
+                migration_charge: 3.25,
                 epsilon: 1e-9,
                 max_transfers: 1_000_000,
                 recv_timeout_ms: 30_000,
@@ -1332,5 +1352,25 @@ mod tests {
         assert_eq!(tcp.transfers, inproc.transfers);
         assert_eq!(tcp.overhead, inproc.overhead, "wire accounting must be transport-invariant");
         assert_eq!(tcp.converged, inproc.converged);
+    }
+
+    /// The migration charge is transport-invariant too: a nonzero
+    /// charge over real sockets reproduces the in-process augmented
+    /// game bit-for-bit (assignment, transfers, wire accounting).
+    #[test]
+    fn charged_tcp_matches_in_process_exactly() {
+        let mut rng = Pcg32::new(12);
+        let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+        let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.5]);
+        let assignment: Vec<usize> = (0..50).map(|_| rng.index(3)).collect();
+        let part = Partition::from_assignment(&g, 3, assignment);
+        let opts = DistributedOptions { migration_charge: 4.0, ..Default::default() };
+
+        let inproc = run_distributed(Arc::clone(&g), &machines, part.clone(), &opts);
+        let tcp = run_distributed_tcp_local(Arc::clone(&g), &machines, part, &opts).unwrap();
+        assert_eq!(tcp.partition.assignment(), inproc.partition.assignment());
+        assert_eq!(tcp.transfers, inproc.transfers);
+        assert_eq!(tcp.overhead, inproc.overhead);
+        assert!(tcp.converged && inproc.converged);
     }
 }

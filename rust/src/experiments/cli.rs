@@ -35,8 +35,8 @@ use crate::partition::initial::grow_partition;
 use crate::partition::{global_cost, MachineConfig};
 use crate::sim::driver::{run_dynamic, DriverOptions};
 use crate::sim::dynamic::{
-    compare_frozen_vs_rebalanced, DynamicDriver, DynamicOptions, EstimatorKind, RefineBackend,
-    WeightEstimator,
+    compare_frozen_vs_rebalanced, CompareReport, DynamicDriver, DynamicOptions, EstimatorKind,
+    RefineBackend, WeightEstimator,
 };
 use crate::sim::engine::SimOptions;
 use crate::sim::fuzz::{
@@ -44,7 +44,7 @@ use crate::sim::fuzz::{
 };
 use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions, MAX_SCHEDULE_THREADS};
 use crate::sim::workload::{FloodWorkload, WorkloadOptions};
-use crate::util::bench::{parse_json, JsonVal};
+use crate::util::bench::{parse_json, write_json_group, JsonVal};
 use crate::util::cli::Args;
 use crate::util::rng::Pcg32;
 
@@ -64,14 +64,19 @@ USAGE:
                   [--epoch-ticks E] [--estimator instant|ewma|hysteresis]
                   [--backend sequential|distributed] [--framework A|B]
                   [--threads N] [--horizon T] [--ticks-per-transfer C]
+                  [--tick-value V] [--migration-charge CMIG]
                   [--seed S] [--compare] [--parallelism P]
                   [--transport inproc|tcp] [--peers host:port,...]
                   [--connect-timeout-ms MS] [--report-json FILE]
+  gtip churn-sweep [--scenarios hotspot,flash] [--nodes N] [--k K] [--threads N]
+                  [--horizon T] [--epoch-ticks E] [--framework A|B] [--seed S]
+                  [--charges 0,2,8,32] [--tick-value V] [--out FILE]
   gtip serve      --machine-id K --peers host:port,host:port,...
                   [--connect-timeout-ms MS]
   gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
                   [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
-                  [--corpus-dir DIR] [--replay FILE] [--no-shrink] [--no-oracle]
+                  [--migration-charge CMIG] [--corpus-dir DIR] [--replay FILE]
+                  [--no-shrink] [--no-oracle]
   gtip bench-gate [--baseline FILE] [--measured FILE]
   gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
   gtip artifacts  [--dir DIR]
@@ -102,6 +107,7 @@ fn run(args: &Args) -> CliResult {
         Some("simulate") => cmd_simulate(args),
         Some("dynamic") => cmd_dynamic(args),
         Some("serve") => cmd_serve(args),
+        Some("churn-sweep") => cmd_churn_sweep(args),
         Some("bench-gate") => cmd_bench_gate(args),
         Some("fuzz") => cmd_fuzz(args),
         Some("experiment") => cmd_experiment(args),
@@ -260,6 +266,20 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     let threads = args.opt_or::<usize>("threads", 160)?;
     let horizon = args.opt_or::<u64>("horizon", 2_400)?;
     let ticks_per_transfer = args.opt_or::<u64>("ticks-per-transfer", 0)?;
+    // In-game surcharge: explicit --migration-charge wins; otherwise it
+    // derives as ticks_per_transfer x tick_value so the game prices
+    // exactly what the report bills (DESIGN.md §9).
+    let tick_value = args.opt_or::<f64>("tick-value", 1.0)?;
+    if !(tick_value >= 0.0 && tick_value.is_finite()) {
+        return Err("--tick-value must be finite and >= 0".into());
+    }
+    let migration_charge = match args.opt::<f64>("migration-charge")? {
+        Some(c) => c,
+        None => ticks_per_transfer as f64 * tick_value,
+    };
+    if !(migration_charge >= 0.0 && migration_charge.is_finite()) {
+        return Err("--migration-charge must be finite and >= 0".into());
+    }
     let parallelism = args.opt_or::<usize>("parallelism", 1)?;
     let transport = args.str_or("transport", "inproc").to_string();
     let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
@@ -309,7 +329,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
         scenario.len(),
     );
     println!(
-        "loop: epoch={epoch_ticks} ticks, estimator {estimator_kind}, backend {backend}, framework {framework}, mu={mu}"
+        "loop: epoch={epoch_ticks} ticks, estimator {estimator_kind}, backend {backend}, framework {framework}, mu={mu}, c_mig={migration_charge}"
     );
 
     let options = DynamicOptions {
@@ -319,6 +339,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
         mu,
         backend,
         ticks_per_transfer,
+        migration_charge,
         max_refinements: 0,
     };
     let initial = grow_partition(&graph, &machines, &mut rng);
@@ -379,7 +400,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
             );
             let leader = ClusterLeader::connect(
                 &peers,
-                DistributedOptions { mu, framework, ..Default::default() },
+                DistributedOptions { mu, framework, migration_charge, ..Default::default() },
                 connect_timeout,
             )?;
             driver.attach_cluster(leader)?;
@@ -510,6 +531,169 @@ fn cmd_serve(args: &Args) -> CliResult {
     Ok(())
 }
 
+/// Quantify the churn/hysteresis trade-off of migration-cost-aware
+/// refinement (DESIGN.md §9): sweep the per-transfer charge over fixed
+/// scenario fixtures, run the frozen-vs-rebalanced comparison at each
+/// level — the charge is billed as wall ticks AND priced inside the
+/// game (`c_mig = ticks · tick_value`) — and merge a `churn_tradeoff`
+/// group (transfers, migration ticks, speedup per level) into the
+/// machine-readable bench report that `gtip bench-gate` validates.
+fn cmd_churn_sweep(args: &Args) -> CliResult {
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let nodes = args.opt_or::<usize>("nodes", 120)?;
+    let k = args.opt_or::<usize>("k", 4)?;
+    let threads = args.opt_or::<usize>("threads", 100)?;
+    let horizon = args.opt_or::<u64>("horizon", 1_600)?;
+    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 200)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let tick_value = args.opt_or::<f64>("tick-value", 1.0)?;
+    let out = args.str_or("out", "results/BENCH_sim.json").to_string();
+    if nodes == 0 || k == 0 || threads == 0 || horizon == 0 || epoch_ticks == 0 {
+        return Err("--nodes, --k, --threads, --horizon, --epoch-ticks must be >= 1".into());
+    }
+    if threads as u64 > MAX_SCHEDULE_THREADS {
+        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
+    }
+    if !(tick_value >= 0.0 && tick_value.is_finite()) {
+        return Err("--tick-value must be finite and >= 0".into());
+    }
+    let charges: Vec<u64> =
+        args.opt_list::<u64>("charges")?.unwrap_or_else(|| vec![0, 2, 8, 32]);
+    if charges.is_empty() {
+        return Err("--charges needs at least one level".into());
+    }
+    if charges.windows(2).any(|w| w[1] <= w[0]) {
+        return Err("--charges must be strictly increasing".into());
+    }
+    let scenario_kinds: Vec<ScenarioKind> = args
+        .str_or("scenarios", "hotspot,flash")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<ScenarioKind>())
+        .collect::<Result<_, _>>()?;
+    if scenario_kinds.is_empty() {
+        return Err("--scenarios needs at least one scenario".into());
+    }
+    for (i, a) in scenario_kinds.iter().enumerate() {
+        if scenario_kinds[..i].contains(a) {
+            return Err(format!(
+                "--scenarios lists {} twice (duplicate JSON keys in the report)",
+                a.name()
+            )
+            .into());
+        }
+    }
+
+    println!(
+        "churn sweep: {} scenario(s), charges {:?} ticks/transfer (tick value {tick_value}), \
+         {nodes} LPs, K={k}, {threads} floods over {horizon} ticks, epoch {epoch_ticks}, framework {framework}",
+        scenario_kinds.len(),
+        charges,
+    );
+    let mut group: Vec<(String, JsonVal)> = vec![
+        ("smoke".into(), JsonVal::Bool(std::env::var("GTIP_BENCH_SMOKE").is_ok())),
+        (
+            "charges".into(),
+            JsonVal::Arr(charges.iter().map(|&c| JsonVal::Int(c)).collect()),
+        ),
+    ];
+    let mut strictly_decreasing_everywhere = 0usize;
+    for kind in &scenario_kinds {
+        let fixture = crate::util::testkit::ScenarioFixture::new(*kind, seed)
+            .nodes(nodes)
+            .machines(k)
+            .threads(threads)
+            .horizon(horizon)
+            .build();
+        println!("  {:<8} charge | transfers | migration_ticks | frozen | rebalanced | speedup", kind.name());
+        // The frozen arm never refines, so it is charge-independent:
+        // run it once per scenario and reuse it at every charge level.
+        let frozen = DynamicDriver::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            fixture.scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            DynamicOptions {
+                sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
+                epoch_ticks: 0,
+                framework,
+                ..Default::default()
+            },
+        )
+        .run_owned();
+        let mut rows: Vec<(String, JsonVal)> = Vec::new();
+        let mut transfer_curve: Vec<u64> = Vec::new();
+        for &charge in &charges {
+            let options = DynamicOptions {
+                sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
+                epoch_ticks,
+                framework,
+                ..Default::default()
+            }
+            .charge_transfers(charge, tick_value);
+            let rebalanced = DynamicDriver::new(
+                &fixture.graph,
+                fixture.machines.clone(),
+                fixture.initial.clone(),
+                fixture.scenario.injections.clone(),
+                WeightEstimator::ewma(0.5),
+                options,
+            )
+            .run_owned();
+            let transfers = rebalanced.transfers as u64;
+            let truncated = frozen.stats.truncated || rebalanced.stats.truncated;
+            let speedup = CompareReport::speedup_of(frozen.total_time(), rebalanced.total_time());
+            println!(
+                "  {:<8} {:>6} | {:>9} | {:>15} | {:>6} | {:>10} | {:.3}x{}",
+                kind.name(),
+                charge,
+                transfers,
+                rebalanced.migration_ticks,
+                frozen.total_time(),
+                rebalanced.total_time(),
+                speedup,
+                if truncated { "  [TRUNCATED at the tick cap — numbers understate]" } else { "" },
+            );
+            transfer_curve.push(transfers);
+            rows.push((
+                format!("charge_{charge}"),
+                JsonVal::Obj(vec![
+                    ("transfers".into(), JsonVal::Int(transfers)),
+                    ("migration_ticks".into(), JsonVal::Int(rebalanced.migration_ticks)),
+                    ("frozen_ticks".into(), JsonVal::Int(frozen.total_time())),
+                    ("rebalanced_ticks".into(), JsonVal::Int(rebalanced.total_time())),
+                    ("speedup".into(), JsonVal::Num(speedup)),
+                    ("truncated".into(), JsonVal::Bool(truncated)),
+                ]),
+            ));
+        }
+        // "Strictly decreasing" with two refinements: it needs at least
+        // one real comparison (a single-level sweep can't vacuously
+        // claim it), and a 0 -> 0 plateau at high charges counts — the
+        // balancer is fully damped, which is the behavior the flag
+        // exists to demonstrate, not a violation of it.
+        let strictly_decreasing = transfer_curve.len() >= 2
+            && transfer_curve.windows(2).all(|w| w[1] < w[0] || (w[0] == 0 && w[1] == 0));
+        if strictly_decreasing {
+            strictly_decreasing_everywhere += 1;
+        }
+        rows.push((
+            "transfers_strictly_decreasing".into(),
+            JsonVal::Bool(strictly_decreasing),
+        ));
+        group.push((kind.name().to_string(), JsonVal::Obj(rows)));
+    }
+    println!(
+        "transfers strictly decreasing with the charge on {strictly_decreasing_everywhere}/{} scenario(s)",
+        scenario_kinds.len()
+    );
+    let path = write_json_group(&out, "churn_tradeoff", &JsonVal::Obj(group))?;
+    println!("(merged churn_tradeoff into {})", path.display());
+    Ok(())
+}
+
 /// Schema gate for the bench trajectory: every group/key present in
 /// the committed baseline must appear in the measured report, so a
 /// bench that silently stops emitting a metric fails CI instead of
@@ -574,10 +758,15 @@ fn cmd_fuzz(args: &Args) -> CliResult {
     if threads as u64 > MAX_SCHEDULE_THREADS {
         return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
     }
+    let migration_charge = args.opt_or::<f64>("migration-charge", 0.0)?;
+    if !(migration_charge >= 0.0 && migration_charge.is_finite()) {
+        return Err("--migration-charge must be finite and >= 0".into());
+    }
     let fixture = FuzzFixture { graph_seed: seed, nodes, machines: k };
     let eval = EvalOptions {
         epoch_ticks,
         framework,
+        migration_charge,
         oracle: !args.flag("no-oracle"),
         ..Default::default()
     };
@@ -1056,6 +1245,106 @@ mod tests {
             .expect("campaign wrote no corpus file");
         run(&parse(&["fuzz", "--replay", entry.to_str().unwrap(), "--no-oracle"])).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dynamic_accepts_migration_charge_flags() {
+        run(&parse(&[
+            "dynamic",
+            "--scenario",
+            "hotspot",
+            "--nodes",
+            "80",
+            "--threads",
+            "40",
+            "--horizon",
+            "600",
+            "--epoch-ticks",
+            "150",
+            "--seed",
+            "19",
+            "--k",
+            "3",
+            "--ticks-per-transfer",
+            "3",
+            "--migration-charge",
+            "2.5",
+        ]))
+        .unwrap();
+        assert!(run(&parse(&["dynamic", "--migration-charge", "-1"])).is_err());
+        assert!(run(&parse(&["dynamic", "--migration-charge", "nan"])).is_err());
+        assert!(run(&parse(&["dynamic", "--tick-value", "-2"])).is_err());
+    }
+
+    #[test]
+    fn churn_sweep_writes_tradeoff_group() {
+        let dir = std::env::temp_dir().join(format!("gtip_churn_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_churn.json");
+        let out_s = out.to_string_lossy().to_string();
+        run(&parse(&[
+            "churn-sweep",
+            "--scenarios",
+            "hotspot,flash",
+            "--nodes",
+            "70",
+            "--k",
+            "3",
+            "--threads",
+            "40",
+            "--horizon",
+            "600",
+            "--epoch-ticks",
+            "150",
+            "--charges",
+            "0,8,1000000000000",
+            "--seed",
+            "21",
+            "--out",
+            &out_s,
+        ]))
+        .unwrap();
+        let doc = parse_json(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let group = doc.get("churn_tradeoff").expect("churn_tradeoff group");
+        for scenario in ["hotspot", "flash"] {
+            let s = group.get(scenario).unwrap_or_else(|| panic!("missing {scenario}"));
+            for charge in ["charge_0", "charge_8", "charge_1000000000000"] {
+                let row = s.get(charge).unwrap_or_else(|| panic!("{scenario}: missing {charge}"));
+                assert!(row.get("transfers").and_then(JsonVal::as_u64).is_some());
+                assert!(row.get("speedup").and_then(JsonVal::as_f64).is_some());
+                assert!(row.get("migration_ticks").and_then(JsonVal::as_u64).is_some());
+                assert!(row.get("frozen_ticks").and_then(JsonVal::as_u64).is_some());
+                assert!(row.get("rebalanced_ticks").and_then(JsonVal::as_u64).is_some());
+                assert_eq!(
+                    row.get("truncated").and_then(JsonVal::as_bool),
+                    Some(false),
+                    "{scenario}/{charge}: small fixture must drain un-truncated"
+                );
+            }
+            // Only the provable endpoint claim: a 1e12-tick charge is
+            // orders of magnitude above any raw gain measured weights
+            // can produce (loads ~1e3-1e4, b/w ~1e3 => gains ~1e7), so
+            // the top rung freezes the balancer entirely (middle rungs
+            // are data, not a theorem — the sweep records the
+            // monotonicity verdict instead of asserting it).
+            let top = s
+                .get("charge_1000000000000")
+                .and_then(|r| r.get("transfers"))
+                .and_then(JsonVal::as_u64)
+                .expect("top-rung transfers");
+            assert_eq!(top, 0, "{scenario}: prohibitive charge must freeze the balancer");
+            assert!(s.get("transfers_strictly_decreasing").and_then(JsonVal::as_bool).is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn churn_sweep_rejects_degenerate_options() {
+        assert!(run(&parse(&["churn-sweep", "--charges", "4,4"])).is_err());
+        assert!(run(&parse(&["churn-sweep", "--charges", "8,2"])).is_err());
+        assert!(run(&parse(&["churn-sweep", "--scenarios", "bogus"])).is_err());
+        assert!(run(&parse(&["churn-sweep", "--nodes", "0"])).is_err());
     }
 
     #[test]

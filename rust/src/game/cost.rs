@@ -17,6 +17,19 @@
 //! from (a) the node's own adjacency row and (b) the K machine-level
 //! aggregates `L_k` — nothing about other machines' memberships is
 //! needed, so the state machines must exchange is O(K), independent of N.
+//!
+//! **Augmented (migration-cost-aware) game** (DESIGN.md §9): with a
+//! per-move surcharge `c_mig ≥ 0`, the cost a node sees on a candidate
+//! machine `k ≠ r_i` is `Ĉ_i(k) = C_i(k) + c_mig` (its home machine is
+//! never surcharged). This is a switching-cost congestion game (cf.
+//! arXiv:1109.6925): a move is only accepted when its raw gain exceeds
+//! the charge, the augmented potential `Φ' = Φ + c_mig·(#moves)` still
+//! strictly descends per accepted transfer (for A, `ΔΦ = −2(𝔍'+c_mig)`
+//! so `ΔΦ' = −2𝔍' − c_mig < 0`; for B, `ΔΦ = −(𝔍'+c_mig)` so
+//! `ΔΦ' = −𝔍' < 0`), and pure Nash equilibria of the augmented game
+//! exist by the same finite-potential argument as Thm 4.1. The charge
+//! acts as a hysteresis band: churn whose benefit is below `c_mig`
+//! is filtered out inside the game rather than post-hoc.
 
 use crate::graph::{Graph, NodeId};
 use crate::partition::{MachineConfig, MachineId, Partition};
@@ -59,12 +72,24 @@ pub struct CostModel<'g> {
     pub machines: MachineConfig,
     pub mu: f64,
     pub framework: Framework,
+    /// Per-move migration surcharge `c_mig` added to every non-home
+    /// candidate's cost (augmented game, DESIGN.md §9). 0 recovers the
+    /// paper's charge-free game exactly.
+    pub migration_charge: f64,
 }
 
 impl<'g> CostModel<'g> {
     pub fn new(graph: &'g Graph, machines: MachineConfig, mu: f64, framework: Framework) -> Self {
         assert!(mu >= 0.0, "mu must be non-negative");
-        CostModel { graph, machines, mu, framework }
+        CostModel { graph, machines, mu, framework, migration_charge: 0.0 }
+    }
+
+    /// Builder: price every candidate move at `c_mig` cost units
+    /// (`c_mig = ticks_per_transfer · tick_value` in the closed loop).
+    pub fn with_migration_charge(mut self, c_mig: f64) -> Self {
+        assert!(c_mig >= 0.0 && c_mig.is_finite(), "migration charge must be finite and >= 0");
+        self.migration_charge = c_mig;
+        self
     }
 
     /// Machine count `K`.
@@ -94,9 +119,26 @@ impl<'g> CostModel<'g> {
     }
 
     /// Same as [`node_cost`] but with the adjacency row precomputed —
-    /// the O(1)-per-candidate form used in hot loops.
+    /// the O(1)-per-candidate form used in hot loops. Includes the
+    /// migration surcharge on every non-home candidate.
     #[inline]
     pub fn node_cost_with_adj(
+        &self,
+        part: &Partition,
+        i: NodeId,
+        k: MachineId,
+        s_i: f64,
+        adj: &[f64],
+    ) -> f64 {
+        let surcharge = if part.machine_of(i) == k { 0.0 } else { self.migration_charge };
+        self.raw_node_cost_with_adj(part, i, k, s_i, adj) + surcharge
+    }
+
+    /// The paper's un-augmented node cost (eq. 1 / eq. 6) — no
+    /// migration surcharge. The potential identities (Thm 3.1 / 5.1)
+    /// are stated on this quantity.
+    #[inline]
+    fn raw_node_cost_with_adj(
         &self,
         part: &Partition,
         i: NodeId,
@@ -215,11 +257,17 @@ impl<'g> CostModel<'g> {
         let b = self.graph.node_weight(i);
         let cur = part.machine_of(i);
         let mu = self.mu;
+        let charge = self.migration_charge;
         let loads = part.loads();
         let speeds = self.machines.speeds();
+        // The surcharge is the same constant on every non-home machine,
+        // so the candidate-set lower-bound argument below is unchanged:
+        // for zero-adjacency machines the augmented cost is (affine in
+        // L_q/w_q) + c_mig, and q1 = argmin L_q/w_q still minimizes it.
         let eval = |q: usize| -> f64 {
             let same_load = loads[q] - if q == cur { b } else { 0.0 };
-            b / speeds[q] * same_load + mu * 0.5 * (s_i - adj[q])
+            let surcharge = if q == cur { 0.0 } else { charge };
+            b / speeds[q] * same_load + mu * 0.5 * (s_i - adj[q]) + surcharge
         };
         let cost_cur = eval(cur);
         let mut best_k = q1;
@@ -274,9 +322,13 @@ impl<'g> CostModel<'g> {
         }
     }
 
-    /// Exact potential change if node `l` moved from its current machine
-    /// to `to`, per the paper's identities: `ΔC0 = 2·ΔC_l` (Thm 3.1) and
-    /// `ΔC̃0 = ΔC̃_l` (Thm 5.1). O(deg(l) + K).
+    /// Exact *raw* potential change if node `l` moved from its current
+    /// machine to `to`, per the paper's identities: `ΔC0 = 2·ΔC_l`
+    /// (Thm 3.1) and `ΔC̃0 = ΔC̃_l` (Thm 5.1). O(deg(l) + K). The
+    /// migration surcharge deliberately does not appear here — it prices
+    /// *decisions*, while the potential tracks the raw objective; the
+    /// augmented potential adds `c_mig` per executed move on top (see
+    /// [`crate::partition::global_cost::augmented`]).
     pub fn potential_delta(&self, part: &Partition, l: NodeId, to: MachineId) -> f64 {
         let from = part.machine_of(l);
         if from == to {
@@ -284,8 +336,8 @@ impl<'g> CostModel<'g> {
         }
         let mut adj = vec![0.0; self.k()];
         let s = self.adj_row(part, l, &mut adj);
-        let cur = self.node_cost_with_adj(part, l, from, s, &adj);
-        let new = self.node_cost_with_adj(part, l, to, s, &adj);
+        let cur = self.raw_node_cost_with_adj(part, l, from, s, &adj);
+        let new = self.raw_node_cost_with_adj(part, l, to, s, &adj);
         match self.framework {
             Framework::A => 2.0 * (new - cur),
             Framework::B => new - cur,
@@ -487,6 +539,88 @@ mod tests {
             };
             for k in 0..5 {
                 assert!(norm(bk) <= norm(k) + 1e-9, "node {i}: {bk} vs {k}");
+            }
+        }
+    }
+
+    /// The augmented game prices every non-home candidate at +c_mig:
+    /// dissatisfaction shrinks by exactly the charge (clamped at 0)
+    /// whenever the best response is a genuine move, and a large enough
+    /// charge silences every node (no move's raw gain can beat it).
+    #[test]
+    fn migration_charge_damps_dissatisfaction() {
+        for fw in [Framework::A, Framework::B] {
+            let (_, base, p) = setup(8, fw);
+            let charged = base.clone().with_migration_charge(3.0);
+            for i in 0..p.node_count() {
+                let (j0, k0) = base.dissatisfaction(&p, i);
+                let (j1, k1) = charged.dissatisfaction(&p, i);
+                assert!(
+                    j1 <= j0 + 1e-9,
+                    "fw {fw} node {i}: charge increased dissatisfaction {j0} -> {j1}"
+                );
+                if k1 != p.machine_of(i) {
+                    // A priced move: the augmented gain is the raw gain
+                    // to the same-or-better raw target minus the charge.
+                    let raw_gain_to_k1 =
+                        base.node_cost(&p, i, p.machine_of(i)) - base.node_cost(&p, i, k1);
+                    assert!(
+                        (j1 - (raw_gain_to_k1 - 3.0)).abs() < 1e-9 * (1.0 + j1.abs()),
+                        "fw {fw} node {i}: augmented 𝔍 {j1} != raw gain {raw_gain_to_k1} - charge"
+                    );
+                }
+                let _ = k0;
+            }
+            let huge = base.clone().with_migration_charge(1e12);
+            for i in 0..p.node_count() {
+                let (j, k) = huge.dissatisfaction(&p, i);
+                assert_eq!(k, p.machine_of(i), "fw {fw}: node {i} still wants to move");
+                assert_eq!(j, 0.0);
+            }
+        }
+    }
+
+    /// The framework-A candidate-set fast path and the evaluate-all-K
+    /// path agree under a nonzero charge (the surcharge is constant
+    /// across non-home machines, so the lower-bound argument holds).
+    #[test]
+    fn fast_path_matches_full_scan_under_charge() {
+        let (_, model, p) = setup(9, Framework::A);
+        let model = model.with_migration_charge(2.5);
+        let mut adj = vec![0.0; model.k()];
+        for i in 0..p.node_count() {
+            let s = model.adj_row(&p, i, &mut adj);
+            let q1 = model.argmin_load_per_speed(&p);
+            let (jf, kf) = model.dissat_fast_a(&p, i, s, &adj, q1);
+            let (jg, kg) = model.dissatisfaction_with_adj(&p, i, s, &adj);
+            assert!((jf - jg).abs() < 1e-9 * (1.0 + jg.abs()), "node {i}: {jf} vs {jg}");
+            if jg > 1e-9 {
+                let cf = model.node_cost(&p, i, kf);
+                let cg = model.node_cost(&p, i, kg);
+                assert!(
+                    (cf - cg).abs() < 1e-9 * (1.0 + cg.abs()),
+                    "node {i}: fast path picked a worse target ({cf} vs {cg})"
+                );
+            }
+        }
+    }
+
+    /// `potential_delta` tracks the RAW potential regardless of the
+    /// charge — the Thm 3.1 / 5.1 identities are about the un-augmented
+    /// objective.
+    #[test]
+    fn potential_delta_is_charge_invariant() {
+        for fw in [Framework::A, Framework::B] {
+            let (_, base, p) = setup(10, fw);
+            let charged = base.clone().with_migration_charge(7.0);
+            for l in [0usize, 11, 29, 47] {
+                for to in 0..5 {
+                    assert_eq!(
+                        base.potential_delta(&p, l, to),
+                        charged.potential_delta(&p, l, to),
+                        "fw {fw} node {l} -> {to}"
+                    );
+                }
             }
         }
     }

@@ -54,6 +54,19 @@ pub fn both(graph: &Graph, machines: &MachineConfig, part: &Partition, mu: f64) 
     (c0(graph, machines, part, mu), c0_tilde(graph, machines, part, mu))
 }
 
+/// The augmented global objective of the migration-cost-aware game
+/// (DESIGN.md §9): `Φ' = Φ + c_mig · (#transfers executed)`. Every
+/// accepted transfer of the augmented refinement strictly decreases
+/// this quantity (for A, `ΔΦ = −2(𝔍'+c_mig)` so `ΔΦ' = −2𝔍' − c_mig`;
+/// for B, `ΔΦ = −(𝔍'+c_mig)` so `ΔΦ' = −𝔍'`), which is what bounds the
+/// churn: total transfers ≤ (Φ_start − Φ_min) / c_mig for any positive
+/// charge. Reports pair it with the raw potential so the migration
+/// spend is visible in the same units as the objective.
+pub fn augmented(raw_potential: f64, migration_charge: f64, transfers: usize) -> f64 {
+    debug_assert!(migration_charge >= 0.0);
+    raw_potential + migration_charge * transfers as f64
+}
+
 /// Naive O(N²)-style `C_0` computed literally from the definition
 /// `Σ_i C_i` — the test oracle for the closed form above.
 pub fn c0_naive(graph: &Graph, machines: &MachineConfig, part: &Partition, mu: f64) -> f64 {
@@ -136,6 +149,13 @@ mod tests {
             c0_tilde(&g, &m, &lumped, 0.0) > c0_tilde(&g, &m, &balancedish, 0.0),
             "lumping everything on one machine must cost more"
         );
+    }
+
+    #[test]
+    fn augmented_adds_charge_per_transfer() {
+        assert_eq!(augmented(100.0, 0.0, 50), 100.0);
+        assert_eq!(augmented(100.0, 2.5, 4), 110.0);
+        assert_eq!(augmented(-7.0, 3.0, 0), -7.0);
     }
 
     #[test]

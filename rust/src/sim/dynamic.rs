@@ -231,6 +231,13 @@ pub struct DynamicOptions {
     /// Wall-tick charge per executed LP migration (the paper ignores
     /// migration cost; default 0).
     pub ticks_per_transfer: u64,
+    /// Per-move surcharge `c_mig` priced *inside* the refinement game
+    /// (augmented dissatisfaction, DESIGN.md §9): a transfer is only
+    /// accepted when its raw cost gain exceeds this many cost units.
+    /// Use [`DynamicOptions::charge_transfers`] to derive it from
+    /// `ticks_per_transfer` so the game prices exactly what the report
+    /// bills. 0 reproduces the paper's charge-free game.
+    pub migration_charge: f64,
     /// Cap on refinement epochs (0 = unlimited).
     pub max_refinements: usize,
 }
@@ -244,8 +251,24 @@ impl Default for DynamicOptions {
             mu: 8.0,
             backend: RefineBackend::Sequential,
             ticks_per_transfer: 0,
+            migration_charge: 0.0,
             max_refinements: 0,
         }
+    }
+}
+
+impl DynamicOptions {
+    /// Bill each transfer `ticks` wall ticks in the report AND price it
+    /// at `c_mig = ticks · tick_value` cost units inside the game, so
+    /// refinement only moves an LP when its modeled gain beats what the
+    /// migration will cost the run. `tick_value` converts wall ticks to
+    /// cost units (1.0 when node weights are events-per-window, the
+    /// closed loop's default measurement).
+    pub fn charge_transfers(mut self, ticks: u64, tick_value: f64) -> Self {
+        assert!(tick_value >= 0.0 && tick_value.is_finite(), "tick value must be finite and >= 0");
+        self.ticks_per_transfer = ticks;
+        self.migration_charge = ticks as f64 * tick_value;
+        self
     }
 }
 
@@ -262,6 +285,10 @@ pub struct EpochRefinement {
     pub transfers: usize,
     /// Wall-tick migration charge of this epoch.
     pub migration_ticks: u64,
+    /// In-game migration spend of this epoch: `c_mig · transfers`, in
+    /// cost units. `potential_after + migration_cost ≤ potential_before`
+    /// is the augmented-descent guarantee (DESIGN.md §9).
+    pub migration_cost: f64,
     pub imbalance_before: f64,
     pub imbalance_after: f64,
     /// Whether refinement reached a Nash equilibrium (vs the cap).
@@ -275,16 +302,31 @@ pub struct EpochRefinement {
 #[derive(Debug, Clone)]
 pub struct EpochReport {
     pub epoch: usize,
+    /// Simulation-tick window (engine clock; migration stalls excluded).
     pub tick_start: u64,
     pub tick_end: u64,
+    /// Wall-clock window including migration stalls: `wall_tick_start`
+    /// is `tick_start` plus every earlier epoch's migration charge, and
+    /// `wall_tick_end` additionally includes *this* epoch's charge —
+    /// epoch wall windows tile `[0, DynamicReport::total_time()]`
+    /// exactly, so per-epoch weights and throughput bill migration time
+    /// the same way the headline metric does.
+    pub wall_tick_start: u64,
+    pub wall_tick_end: u64,
+    /// Wall-tick migration charge of this epoch's refinement (0 when
+    /// the epoch did not refine).
+    pub migration_ticks: u64,
     /// Events completed during the window.
     pub events_processed: u64,
     /// Rollback episodes during the window.
     pub rollbacks: u64,
     /// Cross-machine forwards during the window.
     pub cross_machine_forwards: u64,
-    /// Events per wall tick over the window — the throughput the
-    /// rebalancer tries to keep high.
+    /// Events per *wall* tick over the window, migration stall
+    /// included — the throughput the rebalancer tries to keep high.
+    /// Before the accounting fix this divided by the simulation window
+    /// only, so measured throughput pretended migration was free while
+    /// `total_time()` charged it.
     pub throughput: f64,
     /// `None` on frozen (baseline) epochs and on the drain-out tail.
     pub refine: Option<EpochRefinement>,
@@ -346,8 +388,8 @@ impl DynamicReport {
         let mut t = Table::new(
             title,
             &[
-                "epoch", "ticks", "events", "ev/tick", "rollbacks", "x-machine",
-                "transfers", "potential",
+                "epoch", "wall ticks", "mig", "events", "ev/tick", "rollbacks",
+                "x-machine", "transfers", "potential",
             ],
         );
         for e in &self.epochs {
@@ -360,7 +402,8 @@ impl DynamicReport {
             };
             t.row(&[
                 e.epoch.to_string(),
-                format!("{}..{}", e.tick_start, e.tick_end),
+                format!("{}..{}", e.wall_tick_start, e.wall_tick_end),
+                e.migration_ticks.to_string(),
                 e.events_processed.to_string(),
                 format!("{:.3}", e.throughput),
                 e.rollbacks.to_string(),
@@ -474,7 +517,8 @@ impl<'g> DynamicDriver<'g> {
                         part,
                         self.options.mu,
                         self.options.framework,
-                    );
+                    )
+                    .with_migration_charge(self.options.migration_charge);
                     let before = refine.potential();
                     let report = refine.run(&RefineOptions::default());
                     (
@@ -514,6 +558,7 @@ impl<'g> DynamicDriver<'g> {
                             &DistributedOptions {
                                 mu: self.options.mu,
                                 framework: self.options.framework,
+                                migration_charge: self.options.migration_charge,
                                 ..Default::default()
                             },
                         )
@@ -541,6 +586,7 @@ impl<'g> DynamicDriver<'g> {
             potential_after,
             transfers,
             migration_ticks: charge,
+            migration_cost: self.options.migration_charge * transfers as f64,
             imbalance_before,
             imbalance_after,
             converged,
@@ -558,6 +604,9 @@ impl<'g> DynamicDriver<'g> {
             return Ok(false);
         }
         let tick_start = self.engine.stats().ticks;
+        // Wall clock = engine clock + every migration stall so far; the
+        // per-epoch wall windows must tile [0, total_time()] exactly.
+        let wall_tick_start = tick_start + self.migration_ticks;
         let budget = if self.options.epoch_ticks == 0 {
             self.options.sim.max_ticks
         } else {
@@ -580,11 +629,25 @@ impl<'g> DynamicDriver<'g> {
             None
         };
 
-        let window = (tick_end - tick_start).max(1);
+        // The refinement that closed this epoch stalls the run for its
+        // migration charge, so the epoch's wall window (and therefore
+        // its measured throughput) includes the stall — consistent with
+        // `total_time()`, which bills the same ticks.
+        let migration_ticks = refine.as_ref().map_or(0, |r| r.migration_ticks);
+        let wall_tick_end = tick_end + self.migration_ticks;
+        debug_assert_eq!(
+            wall_tick_end - wall_tick_start,
+            (tick_end - tick_start) + migration_ticks,
+            "wall window must be the sim window plus this epoch's stall"
+        );
+        let window = (wall_tick_end - wall_tick_start).max(1);
         self.epochs.push(EpochReport {
             epoch: self.epochs.len(),
             tick_start,
             tick_end,
+            wall_tick_start,
+            wall_tick_end,
+            migration_ticks,
             events_processed: counters.events_total(),
             rollbacks: counters.rollbacks_total(),
             cross_machine_forwards: counters.cross_forwards_total(),
@@ -664,8 +727,22 @@ pub struct CompareReport {
 
 impl CompareReport {
     /// `frozen time / rebalanced time` (> 1 means rebalancing won).
+    /// Both arms draining in zero ticks (an empty workload) is a tie:
+    /// 1.0, not the 0.0 the naive `0 / max(1)` would report — and the
+    /// denominator clamp can only engage in that same degenerate case,
+    /// so it never silently skews a real comparison.
     pub fn speedup(&self) -> f64 {
-        self.frozen.total_time() as f64 / self.rebalanced.total_time().max(1) as f64
+        CompareReport::speedup_of(self.frozen.total_time(), self.rebalanced.total_time())
+    }
+
+    /// The speedup definition on bare totals — for callers (e.g. the
+    /// churn sweep) that hold one frozen run against many rebalanced
+    /// arms without assembling a `CompareReport` per pair.
+    pub fn speedup_of(frozen_time: u64, rebalanced_time: u64) -> f64 {
+        if frozen_time == 0 && rebalanced_time == 0 {
+            return 1.0;
+        }
+        frozen_time as f64 / rebalanced_time.max(1) as f64
     }
 }
 
@@ -808,6 +885,134 @@ mod tests {
         assert_eq!(per_epoch, report.migration_ticks);
     }
 
+    /// The migration-time accounting seam (regression): epoch *wall*
+    /// windows must tile `[0, total_time()]` exactly — each window is
+    /// the sim window plus that epoch's migration stall — and
+    /// throughput must divide by the stalled window, so per-epoch
+    /// metrics and the headline metric bill migration identically.
+    #[test]
+    fn wall_windows_tile_total_time_and_throughput_bills_migration() {
+        let (g, machines, scenario) = setup(11);
+        let mut rng = Pcg32::new(12);
+        let mut opts = options(150);
+        opts.ticks_per_transfer = 4;
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(report.migration_ticks > 0, "fixture produced no migration charge");
+        assert_eq!(report.epochs.first().map(|e| e.wall_tick_start), Some(0));
+        for pair in report.epochs.windows(2) {
+            assert_eq!(pair[0].wall_tick_end, pair[1].wall_tick_start, "wall windows must tile");
+            assert_eq!(pair[0].tick_end, pair[1].tick_start, "sim windows must tile");
+        }
+        assert_eq!(
+            report.epochs.last().map(|e| e.wall_tick_end),
+            Some(report.total_time()),
+            "wall clock must end at the headline total"
+        );
+        for e in &report.epochs {
+            assert_eq!(
+                e.wall_tick_end - e.wall_tick_start,
+                (e.tick_end - e.tick_start) + e.migration_ticks,
+                "epoch {}: wall window != sim window + stall",
+                e.epoch
+            );
+            assert_eq!(e.migration_ticks, e.refine.as_ref().map_or(0, |r| r.migration_ticks));
+            let wall_window = (e.wall_tick_end - e.wall_tick_start).max(1);
+            assert_eq!(
+                e.throughput.to_bits(),
+                (e.events_processed as f64 / wall_window as f64).to_bits(),
+                "epoch {}: throughput must divide by the stalled window",
+                e.epoch
+            );
+        }
+        // total_time, windows, and throughput pinned together.
+        let summed: u64 = report
+            .epochs
+            .iter()
+            .map(|e| e.wall_tick_end - e.wall_tick_start)
+            .sum();
+        assert_eq!(summed, report.total_time());
+    }
+
+    /// `CompareReport::speedup` on the degenerate empty workload (both
+    /// arms drain in zero ticks) is defined as 1.0, not 0.0.
+    #[test]
+    fn speedup_of_empty_workload_is_one() {
+        let (g, machines, _) = setup(13);
+        let mut rng = Pcg32::new(14);
+        let initial = grow_partition(&g, &machines, &mut rng);
+        let report = compare_frozen_vs_rebalanced(
+            &g,
+            &machines,
+            &initial,
+            &[], // no injections: both arms drain instantly
+            WeightEstimator::instantaneous(),
+            &options(150),
+        );
+        assert_eq!(report.frozen.total_time(), 0);
+        assert_eq!(report.rebalanced.total_time(), 0);
+        assert_eq!(report.speedup(), 1.0);
+        // The bare-totals helper agrees with the method everywhere.
+        assert_eq!(CompareReport::speedup_of(0, 0), 1.0);
+        assert_eq!(CompareReport::speedup_of(100, 50), 2.0);
+        assert_eq!(CompareReport::speedup_of(7, 0), 7.0);
+    }
+
+    /// The in-game charge prices moves inside the closed loop: every
+    /// refinement epoch satisfies the augmented-descent guarantee
+    /// `potential_after + migration_cost <= potential_before`, the
+    /// per-epoch churn bound `transfers <= ΔΦ / (2·c_mig)` (framework A
+    /// default), and `migration_cost` bills exactly charge × transfers.
+    /// (The prohibitive-charge freeze and the free-vs-charged triple
+    /// are covered end-to-end by
+    /// `integration_dynamic::in_game_charge_reduces_churn_end_to_end`.)
+    #[test]
+    fn in_game_charge_damps_closed_loop_churn() {
+        let (g, machines, scenario) = setup(15);
+        let mut rng = Pcg32::new(16);
+        let mut opts = options(150);
+        opts.migration_charge = 50.0;
+        let charged = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(charged.refinements() > 0, "loop never refined; test is vacuous");
+        for e in &charged.epochs {
+            if let Some(r) = &e.refine {
+                assert!(
+                    r.potential_after + r.migration_cost
+                        <= r.potential_before + 1e-9 * (1.0 + r.potential_before.abs()),
+                    "epoch {}: augmented descent violated: {} + {} > {}",
+                    e.epoch,
+                    r.potential_after,
+                    r.migration_cost,
+                    r.potential_before
+                );
+                assert_eq!(r.migration_cost, 50.0 * r.transfers as f64);
+                // Churn bound theorem: each move drops the raw
+                // potential by >= 2*c_mig under framework A.
+                assert!(
+                    r.transfers as f64
+                        <= (r.potential_before - r.potential_after) / (2.0 * 50.0)
+                            * (1.0 + 1e-9)
+                            + 1e-9,
+                    "epoch {}: churn bound violated",
+                    e.epoch
+                );
+            }
+        }
+    }
+
     #[test]
     fn max_refinements_caps_the_loop() {
         let (g, machines, scenario) = setup(7);
@@ -925,6 +1130,16 @@ mod tests {
         let c = est.estimate(&jump);
         assert_eq!(c.node_weights[0], 30.0);
         assert_eq!(c.edge_weights[0].2, 30.0);
+    }
+
+    #[test]
+    fn charge_transfers_derives_the_in_game_price() {
+        let opts = DynamicOptions::default().charge_transfers(3, 2.5);
+        assert_eq!(opts.ticks_per_transfer, 3);
+        assert_eq!(opts.migration_charge, 7.5);
+        let free = DynamicOptions::default().charge_transfers(5, 0.0);
+        assert_eq!(free.ticks_per_transfer, 5);
+        assert_eq!(free.migration_charge, 0.0);
     }
 
     #[test]

@@ -110,6 +110,10 @@ pub struct EvalOptions {
     /// Simulation window per refinement epoch of the rebalanced arm.
     pub epoch_ticks: u64,
     pub framework: Framework,
+    /// In-game migration surcharge (`DynamicOptions::migration_charge`)
+    /// the rebalanced arm prices moves at — lets campaigns hunt
+    /// hysteresis pathologies at nonzero charge levels. Default 0.
+    pub migration_charge: f64,
     /// Safety cap per arm (a truncated rebalanced arm scores as a
     /// finding — the workload outran the balancer).
     pub max_ticks: u64,
@@ -123,6 +127,7 @@ impl Default for EvalOptions {
         EvalOptions {
             epoch_ticks: 150,
             framework: Framework::A,
+            migration_charge: 0.0,
             max_ticks: 400_000,
             oracle: true,
         }
@@ -134,6 +139,7 @@ impl EvalOptions {
         JsonVal::Obj(vec![
             ("epoch_ticks".into(), JsonVal::Int(self.epoch_ticks)),
             ("framework".into(), JsonVal::Str(format!("{}", self.framework))),
+            ("migration_charge".into(), JsonVal::Num(self.migration_charge)),
             ("max_ticks".into(), JsonVal::Int(self.max_ticks)),
             ("oracle".into(), JsonVal::Bool(self.oracle)),
         ])
@@ -152,6 +158,24 @@ impl EvalOptions {
                 .and_then(JsonVal::as_str)
                 .ok_or("eval: missing framework")?
                 .parse::<Framework>()?,
+            // Absent in pre-charge corpus files: default to the free game
+            // so committed seed-* entries replay byte-identically. A
+            // present-but-invalid charge is a clean parse error, not a
+            // downstream assert panic.
+            migration_charge: match v.get("migration_charge") {
+                None => 0.0,
+                Some(raw) => {
+                    let c = raw.as_f64().ok_or_else(|| {
+                        format!("eval: migration_charge {raw:?} is not a number")
+                    })?;
+                    if !(c.is_finite() && c >= 0.0) {
+                        return Err(format!(
+                            "eval: migration_charge {c} must be finite and non-negative"
+                        ));
+                    }
+                    c
+                }
+            },
             max_ticks: field("max_ticks")?,
             oracle: v.get("oracle").and_then(JsonVal::as_bool).unwrap_or(true),
         })
@@ -181,12 +205,21 @@ pub struct Objectives {
     pub oracle_divergence: bool,
 }
 
+/// Weight of the churn term in [`Objectives::score`]: small relative
+/// to a typical gap so it tie-breaks rather than dominates, but enough
+/// that schedules provoking pathological migration churn (the
+/// hysteresis failure mode the charge exists to damp) rank above
+/// equal-gap quiet ones and surface in campaigns.
+pub const CHURN_SCORE_WEIGHT: f64 = 0.002;
+
 impl Objectives {
-    /// Search score: the gap, plus dominant bounties for bug-class
-    /// findings (descent violations, truncation livelock, oracle
-    /// divergence).
+    /// Search score: the gap, plus a churn term ([`CHURN_SCORE_WEIGHT`]
+    /// per transfer of the rebalanced arm), plus dominant bounties for
+    /// bug-class findings (descent violations, truncation livelock,
+    /// oracle divergence).
     pub fn score(&self) -> f64 {
         let mut s = self.gap;
+        s += CHURN_SCORE_WEIGHT * self.transfers as f64;
         s += 1_000.0 * self.descent_violations as f64;
         if self.rebalanced_truncated {
             s += 10_000.0;
@@ -309,6 +342,7 @@ pub fn evaluate(
         sim: SimOptions { max_ticks: eval.max_ticks, ..Default::default() },
         epoch_ticks: eval.epoch_ticks,
         framework: eval.framework,
+        migration_charge: eval.migration_charge,
         ..Default::default()
     };
     let report = compare_frozen_vs_rebalanced(
@@ -1097,6 +1131,59 @@ mod tests {
         let text = a.to_json().render();
         let back = Objectives::from_json(&parse_json(&text).unwrap()).unwrap();
         assert!(a.bit_eq(&back), "objectives drifted through JSON: {text}");
+    }
+
+    /// The churn term ranks high-transfer schedules above equal-gap
+    /// quiet ones, and a charged evaluation (in-game surcharge) damps
+    /// the rebalanced arm's churn on the same schedule.
+    #[test]
+    fn churn_term_and_charged_eval() {
+        let fixture = tiny_fixture();
+        let mut rng = Pcg32::new(31);
+        let schedule = tiny_mutator().random_schedule(600, 4, &mut rng);
+        let free = evaluate(&fixture, &schedule, &tiny_eval(false)).unwrap();
+        assert!(
+            (free.score() - (free.gap + CHURN_SCORE_WEIGHT * free.transfers as f64)).abs()
+                < 1e-12,
+            "score must include the churn term"
+        );
+        // A prohibitive in-game charge provably freezes the rebalanced
+        // arm: no raw gain on this tiny fixture can approach 1e12
+        // (cross-charge transfer-count comparisons at moderate levels
+        // are trajectory-dependent and deliberately not asserted).
+        let charged_eval =
+            EvalOptions { migration_charge: 1e12, ..tiny_eval(false) };
+        let charged = evaluate(&fixture, &schedule, &charged_eval).unwrap();
+        assert_eq!(charged.transfers, 0, "a 1e12 charge must freeze the balancer");
+        assert_eq!(charged.descent_violations, 0);
+        // Charged eval settings round-trip through JSON.
+        let back =
+            EvalOptions::from_json(&parse_json(&charged_eval.to_json().render()).unwrap())
+                .unwrap();
+        assert_eq!(back.migration_charge, 1e12);
+        // Pre-charge corpus JSON (no field) defaults to the free game.
+        let legacy = EvalOptions::from_json(
+            &parse_json(r#"{"epoch_ticks":120,"framework":"A","max_ticks":200000,"oracle":false}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(legacy.migration_charge, 0.0);
+        // A present-but-invalid charge is a clean error, not a panic.
+        let bad = EvalOptions::from_json(
+            &parse_json(
+                r#"{"epoch_ticks":120,"framework":"A","migration_charge":-5,"max_ticks":200000,"oracle":false}"#,
+            )
+            .unwrap(),
+        );
+        assert!(bad.is_err(), "negative corpus charge must be rejected at parse time");
+        // Wrong-typed charge is an error too, never a silent 0.0.
+        let typed = EvalOptions::from_json(
+            &parse_json(
+                r#"{"epoch_ticks":120,"framework":"A","migration_charge":"3.5","max_ticks":200000,"oracle":false}"#,
+            )
+            .unwrap(),
+        );
+        assert!(typed.is_err(), "string-typed corpus charge must be rejected at parse time");
     }
 
     #[test]

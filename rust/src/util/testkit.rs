@@ -313,6 +313,7 @@ pub fn assert_ring_unwinds_on_dead_peer<B>(
             initial,
             8.0,
             Framework::A,
+            0.0,
         );
         handles.push(std::thread::spawn(move || {
             machine_loop(actor, &endpoint, 1e-9, 1_000_000, recv_timeout)

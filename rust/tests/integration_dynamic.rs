@@ -205,4 +205,64 @@ fn migration_charges_do_not_break_the_loop() {
     assert!(!report.stats.truncated);
     assert_eq!(report.migration_ticks, 2 * report.transfers as u64);
     assert_eq!(report.total_time(), report.stats.ticks + report.migration_ticks);
+    // The accounting seam (PR 5): per-epoch wall windows bill the
+    // migration stalls and tile the headline total exactly, and
+    // throughput divides by the stalled window.
+    assert_eq!(report.epochs.first().map(|e| e.wall_tick_start), Some(0));
+    assert_eq!(report.epochs.last().map(|e| e.wall_tick_end), Some(report.total_time()));
+    for e in &report.epochs {
+        assert_eq!(
+            e.wall_tick_end - e.wall_tick_start,
+            (e.tick_end - e.tick_start) + e.migration_ticks
+        );
+        let window = (e.wall_tick_end - e.wall_tick_start).max(1);
+        assert_eq!(e.throughput, e.events_processed as f64 / window as f64);
+    }
+}
+
+/// The in-game migration charge (augmented game, DESIGN.md §9) at the
+/// closed-loop level, asserting only what the theory guarantees: at a
+/// moderate charge every epoch's raw descent, convergence, and the
+/// churn bound `transfers <= ΔΦ / (2·c_mig)` hold; at a prohibitive
+/// charge (1e12 — orders of magnitude above any raw gain the measured
+/// weights can produce) the balancer provably freezes.
+#[test]
+fn in_game_charge_reduces_churn_end_to_end() {
+    let run = |charge: f64| {
+        let fixture = ScenarioFixture::new(ScenarioKind::HotspotShift, 29)
+            .nodes(100)
+            .machines(4)
+            .threads(80)
+            .horizon(1_200)
+            .build();
+        let mut options = loop_options(150);
+        options.migration_charge = charge;
+        DynamicDriver::new(
+            &fixture.graph,
+            fixture.machines.clone(),
+            fixture.initial.clone(),
+            fixture.scenario.injections.clone(),
+            WeightEstimator::ewma(0.5),
+            options,
+        )
+        .run_owned()
+    };
+    let free = run(0.0);
+    assert!(free.transfers > 0, "fixture never migrated");
+    let charged = run(40.0);
+    for e in &charged.epochs {
+        if let Some(r) = &e.refine {
+            assert!(r.potential_after <= r.potential_before + 1e-9 * (1.0 + r.potential_before.abs()));
+            assert!(r.converged);
+            assert!(
+                r.transfers as f64
+                    <= (r.potential_before - r.potential_after) / (2.0 * 40.0) * (1.0 + 1e-9)
+                        + 1e-9,
+                "epoch {}: churn bound violated",
+                e.epoch
+            );
+        }
+    }
+    let frozen_by_charge = run(1e12);
+    assert_eq!(frozen_by_charge.transfers, 0, "a 1e12 charge must freeze the balancer");
 }

@@ -112,6 +112,113 @@ fn prop_refinement_descends_and_converges() {
     });
 }
 
+/// Augmented (migration-cost-aware) game, DESIGN.md §9: with a random
+/// positive per-move charge `c`, the augmented potential
+/// `Φ' = Φ + c·(#transfers)` strictly decreases on EVERY accepted
+/// transfer, under both frameworks — i.e. the raw potential drops by
+/// strictly more than the charge per move (for A by more than 2c).
+/// Also: the run still converges, and convergence is an augmented Nash
+/// equilibrium (no node's raw gain beats the charge).
+#[test]
+fn prop_augmented_potential_strictly_descends() {
+    let config = PropConfig { cases: 48, ..Default::default() };
+    check_property("augmented_potential_descent", config, |g| {
+        let (graph, machines, part, mu) = gen_problem(g);
+        let fw = if g.usize_in(0, 1) == 0 { Framework::A } else { Framework::B };
+        let charge = g.f64_in(0.01, 20.0);
+        let mut engine = RefineEngine::new(&graph, &machines, part, mu, fw)
+            .with_migration_charge(charge);
+        let report = engine.run(&RefineOptions { track_potential: true, ..Default::default() });
+        if !report.converged {
+            return Err("augmented game did not converge".into());
+        }
+        // Each trace step is the raw potential after one transfer, so
+        // the augmented descent Φ'_{t+1} < Φ'_t is: raw drop > charge.
+        for w in report.potential_trace.windows(2) {
+            let aug_step = (w[1] + charge) - w[0];
+            if aug_step >= 1e-9 * (1.0 + w[0].abs()) {
+                return Err(format!(
+                    "augmented potential rose: {} + {charge} >= {} (fw {fw})",
+                    w[1], w[0]
+                ));
+            }
+        }
+        // End-to-end: Φ_after + c·T <= Φ_before (with T transfers).
+        let start = report
+            .potential_trace
+            .first()
+            .copied()
+            .unwrap_or(engine.potential());
+        let aug_end = global_cost::augmented(engine.potential(), charge, report.transfers);
+        if report.transfers > 0 && aug_end >= start + 1e-9 * (1.0 + start.abs()) {
+            return Err(format!("augmented total rose: {aug_end} vs {start}"));
+        }
+        // The churn bound (a theorem, unlike trajectory monotonicity):
+        // each transfer drops the raw potential by at least the charge
+        // (2x for A), so T <= (Φ_start - Φ_end) / min_drop.
+        let min_drop = match fw {
+            Framework::A => 2.0 * charge,
+            Framework::B => charge,
+        };
+        let bound = (start - engine.potential()) / min_drop;
+        if report.transfers as f64 > bound * (1.0 + 1e-9) + 1e-9 {
+            return Err(format!(
+                "churn bound violated ({fw}): {} transfers > (Φ {start} - {}) / {min_drop}",
+                report.transfers,
+                engine.potential()
+            ));
+        }
+        // Augmented Nash: nobody's raw gain beats the charge any more.
+        for i in 0..graph.node_count() {
+            let (j, _) = engine.model().dissatisfaction(engine.partition(), i);
+            if j > 1e-6 {
+                return Err(format!("node {i} still augmented-dissatisfied: {j}"));
+            }
+        }
+        engine.validate().map_err(|e| format!("state drift under charge: {e}"))
+    });
+}
+
+/// Churn damping on a FIXED fixture (deterministic, not randomized —
+/// trajectory monotonicity in the charge is an empirical property of a
+/// concrete fixture, not a theorem, so it is pinned on one seed per
+/// framework rather than asserted across random cases): total
+/// transfers are monotone non-increasing along a steeply growing
+/// migration-charge ladder, and a prohibitive charge provably freezes
+/// the partition (no raw gain on these small fixtures can approach
+/// 1e9). The randomized, theorem-backed counterpart — the churn bound
+/// `T ≤ ΔΦ / c_mig` — lives in `prop_augmented_potential_strictly_descends`.
+#[test]
+fn churn_monotone_in_migration_charge_on_fixed_fixture() {
+    for (fw, seed) in [(Framework::A, 71u64), (Framework::B, 72u64)] {
+        let mut rng = Pcg32::new(seed);
+        let graph = preferential_attachment(90, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let assignment: Vec<usize> = (0..graph.node_count()).map(|_| rng.index(4)).collect();
+        let part = Partition::from_assignment(&graph, 4, assignment);
+        let mut last = usize::MAX;
+        for &charge in &[0.0, 8.0, 64.0, 512.0, 1e9] {
+            let mut engine = RefineEngine::new(&graph, &machines, part.clone(), 8.0, fw)
+                .with_migration_charge(charge);
+            let report = engine.run(&RefineOptions::default());
+            assert!(report.converged, "{fw}: no convergence at charge {charge}");
+            // Rung-to-rung monotonicity is empirical (a higher charge
+            // reroutes early moves and can legally enable a few more
+            // later ones), so a small slack guards against seed luck
+            // while a gross inversion — churn NOT being damped — still
+            // fails loudly.
+            let slack = last / 8 + 1;
+            assert!(
+                report.transfers <= last.saturating_add(slack),
+                "churn rose with the charge ({fw}): {last} -> {} at charge {charge}",
+                report.transfers
+            );
+            last = last.min(report.transfers);
+        }
+        assert_eq!(last, 0, "{fw}: a 1e9 charge should freeze everything");
+    }
+}
+
 /// Dissatisfaction is non-negative and zero exactly at best response.
 #[test]
 fn prop_dissatisfaction_nonnegative() {
