@@ -25,6 +25,11 @@ pub enum RecvOutcome {
     TimedOut,
     /// The transport is gone (every sender dropped / socket closed).
     Disconnected,
+    /// A send to the named machine failed (dead socket, unencodable
+    /// frame). Only the TCP transport produces this — the in-process
+    /// bus never does — and it lets the actor loop name the dead peer
+    /// immediately instead of waiting out the full receive timeout.
+    SendFailed(MachineId),
 }
 
 /// Transport seen by one machine actor. Exactly one receive primitive —

@@ -108,6 +108,10 @@ pub struct LoopOutcome {
     pub converged: bool,
     /// Gave up waiting on a peer.
     pub timed_out: bool,
+    /// The peer a failed send named, if the exit came from
+    /// [`RecvOutcome::SendFailed`] rather than plain silence. Feeds the
+    /// leader's death diagnosis (TCP transport only).
+    pub dead_peer: Option<MachineId>,
 }
 
 /// A transfer waiting to be applied in global sequence order.
@@ -127,6 +131,7 @@ pub fn machine_loop<B: Bus>(
     let k = bus.machine_count();
     let mut converged = false;
     let mut timed_out = false;
+    let mut dead_peer = None;
     // Next global transfer sequence number to apply locally.
     let mut next_seq: u64 = 0;
     // Transfers that arrived ahead of order (cross-connection races on
@@ -235,6 +240,14 @@ pub fn machine_loop<B: Bus>(
                 timed_out = true;
                 break;
             }
+            RecvOutcome::SendFailed(m) => {
+                // A peer's socket is gone: the ring can never close, so
+                // exit through the same bounded path as a timeout —
+                // but carrying the dead peer's name for the diagnosis.
+                timed_out = true;
+                dead_peer = Some(m);
+                break;
+            }
             RecvOutcome::Disconnected => break,
         }
     }
@@ -244,6 +257,7 @@ pub fn machine_loop<B: Bus>(
         transfers_applied: next_seq,
         converged,
         timed_out,
+        dead_peer,
     }
 }
 

@@ -43,8 +43,36 @@
 //! its [`OverheadStats`] delta as `RoundStats`; the leader waits for
 //! all K−1 reports before the next epoch, which doubles as the barrier
 //! that keeps rounds from interleaving on the wire.
+//!
+//! ## Failure recovery (wire v3)
+//!
+//! A worker death no longer unwinds the whole cluster. A timed-out or
+//! send-failed round leaves the leader's endpoint intact; the leader
+//! then *diagnoses* which peers are dead ([`ClusterLeader::diagnose_dead`]:
+//! recorded send failures plus workers that never reported `RoundStats`
+//! within a grace period — live workers report their stats even after a
+//! timed-out round) and *re-forms* the cluster around the survivors
+//! ([`ClusterLeader::recover`]): it compacts its endpoint to the
+//! surviving wire ids, broadcasts `Restore` (the survivor list plus
+//! renormalized speeds), and waits for a `RestoreAck` from every
+//! survivor before the next `EpochBegin` — the ack barrier keeps stale
+//! round traffic from interleaving with the restored epoch. Workers
+//! renumber themselves by their position in the survivor list (the
+//! leader, wire 0, is always logical 0). The simulation itself is
+//! restored leader-side from the last epoch-boundary snapshot
+//! (`sim::snapshot`, DESIGN.md §10). Elastic *join* is the same
+//! machinery run in reverse — `Join` is reserved on the wire, and a
+//! joining `gtip serve` enters at the next cluster formation, where the
+//! refinement game simply descends from the old assignment extended
+//! with an empty machine (Thm 4.1 holds from any feasible start).
+//!
+//! Known limitation: diagnosis is evidence-based (send errors + missing
+//! stats reports), so a worker that is alive but silent past the grace
+//! period is treated as dead and evicted; it exits with a protocol
+//! error when its `EPOCH_WAIT` expires. The run still completes on the
+//! remaining machines.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -64,11 +92,12 @@ use crate::partition::{MachineConfig, MachineId, Partition};
 /// First bytes of every `Hello` payload after the tag.
 pub const WIRE_MAGIC: [u8; 4] = *b"GTIP";
 /// Wire protocol version; bumped on any layout change. v2 added the
-/// migration charge of the augmented game to `Setup` — the `Hello`
-/// handshake rejects any peer speaking another version, so the decode
-/// of the widened layout is version-gated at connection time and a
-/// v1/v2 mix can never half-parse a fixture.
-pub const WIRE_VERSION: u16 = 2;
+/// migration charge of the augmented game to `Setup`; v3 added the
+/// elastic-membership control frames (`Restore`, `Join`, `RestoreAck`).
+/// The `Hello` handshake rejects any peer speaking another version, so
+/// decoding is version-gated at connection time and a mixed-version
+/// cluster can never half-parse a frame.
+pub const WIRE_VERSION: u16 = 3;
 /// Upper bound on a single frame payload; larger prefixes are rejected
 /// before any allocation happens.
 pub const MAX_FRAME_BYTES: usize = 1 << 24;
@@ -83,6 +112,9 @@ const TAG_SETUP: u8 = 17;
 const TAG_EPOCH_BEGIN: u8 = 18;
 const TAG_ROUND_STATS: u8 = 19;
 const TAG_GOODBYE: u8 = 20;
+const TAG_RESTORE: u8 = 21;
+const TAG_JOIN: u8 = 22;
+const TAG_RESTORE_ACK: u8 = 23;
 
 /// Errors of the wire codec and connection lifecycle.
 #[derive(Debug)]
@@ -165,6 +197,25 @@ pub enum Frame {
     RoundStats(OverheadStats),
     /// Leader → workers: the run is over; exit cleanly.
     Goodbye,
+    /// Leader → survivors after a worker death (wire v3): re-form the
+    /// cluster. `survivors` lists the surviving *wire* ids of the
+    /// original mesh in ascending order (always including 0, the
+    /// leader); each survivor's new logical id is its position in the
+    /// list. `speeds` are the renormalized relative speeds in that new
+    /// order. A worker not on the list has been evicted — it will
+    /// never receive this frame (the leader compacts first), and times
+    /// out on its own.
+    Restore { survivors: Vec<u32>, speeds: Vec<f64> },
+    /// A machine announcing itself to a cluster with its relative
+    /// speed (wire v3). Reserved on the wire: elastic join is realized
+    /// by re-forming the mesh at K+1 and warm-starting refinement from
+    /// the old assignment extended with the empty newcomer (DESIGN.md
+    /// §10) — the codec exists so v3 peers agree on the tag space.
+    Join { machine: u32, speed: f64 },
+    /// Survivor → leader (wire v3): compaction applied, ready for the
+    /// next epoch. `machine` echoes the sender's original wire id so
+    /// the leader can cross-check its survivor bookkeeping.
+    RestoreAck { machine: u32 },
 }
 
 /// Payload of [`Frame::Setup`].
@@ -216,11 +267,20 @@ fn put_f64(b: &mut Vec<u8>, v: f64) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) {
-    put_u32(b, vs.len() as u32);
+/// Checked narrowing for ids and lengths crossing the wire. A graph,
+/// cluster, or vector beyond the u32 wire range must fail loudly at
+/// encode time — an unchecked `as u32` would silently truncate into a
+/// wrong-but-plausible frame the peer happily applies.
+fn wire_u32(v: usize) -> Result<u32, WireError> {
+    u32::try_from(v).map_err(|_| WireError::Protocol(format!("{v} exceeds the u32 wire range")))
+}
+
+fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) -> Result<(), WireError> {
+    put_u32(b, wire_u32(vs.len())?);
     for &v in vs {
         put_f64(b, v);
     }
+    Ok(())
 }
 
 /// Bounded reader over a frame payload; every accessor fails with
@@ -282,7 +342,7 @@ impl<'a> Dec<'a> {
     }
 }
 
-fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
+fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
     match frame {
         Frame::Msg(Message::TakeMyTurn { consecutive_forfeits, transfers_so_far }) => {
             b.push(TAG_TAKE_MY_TURN);
@@ -293,16 +353,16 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
             b.push(TAG_RECEIVE_NODE);
             put_u64(b, *seq);
             put_u64(b, *node as u64);
-            put_u32(b, *from as u32);
-            put_u32(b, *to as u32);
+            put_u32(b, wire_u32(*from)?);
+            put_u32(b, wire_u32(*to)?);
         }
         Frame::Msg(Message::RegularUpdate { seq, node, from, to, loads }) => {
             b.push(TAG_REGULAR_UPDATE);
             put_u64(b, *seq);
             put_u64(b, *node as u64);
-            put_u32(b, *from as u32);
-            put_u32(b, *to as u32);
-            put_f64s(b, loads);
+            put_u32(b, wire_u32(*from)?);
+            put_u32(b, wire_u32(*to)?);
+            put_f64s(b, loads)?;
         }
         Frame::Msg(Message::Shutdown { total_transfers, converged }) => {
             b.push(TAG_SHUTDOWN);
@@ -318,7 +378,7 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
         }
         Frame::Setup(s) => {
             b.push(TAG_SETUP);
-            put_f64s(b, &s.speeds);
+            put_f64s(b, &s.speeds)?;
             put_f64(b, s.mu);
             b.push(match s.framework {
                 Framework::A => 0,
@@ -328,8 +388,8 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
             put_f64(b, s.epsilon);
             put_u64(b, s.max_transfers);
             put_u64(b, s.recv_timeout_ms);
-            put_f64s(b, &s.node_weights);
-            put_u32(b, s.edges.len() as u32);
+            put_f64s(b, &s.node_weights)?;
+            put_u32(b, wire_u32(s.edges.len())?);
             for &(u, v, w) in &s.edges {
                 put_u32(b, u);
                 put_u32(b, v);
@@ -339,9 +399,9 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
         Frame::EpochBegin(e) => {
             b.push(TAG_EPOCH_BEGIN);
             put_u64(b, e.epoch);
-            put_f64s(b, &e.node_weights);
-            put_f64s(b, &e.edge_weights);
-            put_u32(b, e.assignment.len() as u32);
+            put_f64s(b, &e.node_weights)?;
+            put_f64s(b, &e.edge_weights)?;
+            put_u32(b, wire_u32(e.assignment.len())?);
             for &a in &e.assignment {
                 put_u32(b, a);
             }
@@ -354,17 +414,41 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) {
             }
         }
         Frame::Goodbye => b.push(TAG_GOODBYE),
+        Frame::Restore { survivors, speeds } => {
+            b.push(TAG_RESTORE);
+            put_u32(b, wire_u32(survivors.len())?);
+            for &s in survivors {
+                put_u32(b, s);
+            }
+            put_f64s(b, speeds)?;
+        }
+        Frame::Join { machine, speed } => {
+            b.push(TAG_JOIN);
+            put_u32(b, *machine);
+            put_f64(b, *speed);
+        }
+        Frame::RestoreAck { machine } => {
+            b.push(TAG_RESTORE_ACK);
+            put_u32(b, *machine);
+        }
     }
+    Ok(())
 }
 
-/// Encode a frame as `u32 LE payload length || payload`.
-pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+/// Encode a frame as `u32 LE payload length || payload`. Fails (rather
+/// than truncating) on ids or lengths beyond the u32 wire range and on
+/// payloads over [`MAX_FRAME_BYTES`] — the write-side mirror of the
+/// read-side `Oversized` rejection.
+pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>, WireError> {
     let mut payload = Vec::with_capacity(64);
-    encode_payload(frame, &mut payload);
+    encode_payload(frame, &mut payload)?;
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len: payload.len() });
+    }
     let mut out = Vec::with_capacity(4 + payload.len());
     put_u32(&mut out, payload.len() as u32);
     out.extend_from_slice(&payload);
-    out
+    Ok(out)
 }
 
 /// Decode one frame payload (the bytes after the length prefix).
@@ -464,6 +548,18 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
             })
         }
         TAG_GOODBYE => Frame::Goodbye,
+        TAG_RESTORE => {
+            let len = d.u32()? as usize;
+            if 4 * len > payload.len() {
+                return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+            }
+            Frame::Restore {
+                survivors: (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?,
+                speeds: d.f64s()?,
+            }
+        }
+        TAG_JOIN => Frame::Join { machine: d.u32()?, speed: d.f64()? },
+        TAG_RESTORE_ACK => Frame::RestoreAck { machine: d.u32()? },
         other => return Err(WireError::BadTag(other)),
     };
     d.finish()?;
@@ -485,9 +581,19 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
 
 /// Write one frame to a stream.
 pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<usize, WireError> {
-    let bytes = encode_frame(frame);
+    let bytes = encode_frame(frame)?;
     w.write_all(&bytes)?;
     Ok(bytes.len())
+}
+
+/// Recover the guard from a possibly-poisoned mutex. The shared state
+/// behind these locks (accounting counters, an outbound socket) stays
+/// internally consistent even if a holder panicked mid-update, so one
+/// panicking reader/actor thread must degrade to a clean [`WireError`]
+/// elsewhere — not cascade `expect("poisoned")` aborts through every
+/// thread that touches the same stats handle.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 // ---------------------------------------------------------------------
@@ -503,17 +609,46 @@ pub struct NetStats {
     pub control_bytes: u64,
 }
 
+/// Send failures recorded at the send site (satellite of the recovery
+/// protocol): `map` keeps the first error per logical peer for the
+/// leader's death diagnosis, `fresh` queues not-yet-reported peers so
+/// the actor loop sees a [`RecvOutcome::SendFailed`] instead of
+/// waiting out the full receive timeout.
+#[derive(Default)]
+struct SendFailures {
+    map: BTreeMap<MachineId, String>,
+    fresh: VecDeque<MachineId>,
+}
+
 /// One machine's socket-backed endpoint: a listener's worth of inbound
 /// reader threads feeding an inbox, plus one outbound stream per peer.
+///
+/// After a [`TcpEndpoint::compact`] (cluster re-formation around the
+/// survivors of a worker death) the endpoint distinguishes *wire* ids
+/// — the immutable machine numbers of the original mesh, which the
+/// reader threads and `outs` slots keep forever — from *logical* ids,
+/// the dense `0..k` numbering the refinement protocol runs on. Before
+/// any compaction the two coincide.
 pub struct TcpEndpoint {
+    /// Current logical id (== position of `wire_id` in the survivor
+    /// list after a compaction).
     id: MachineId,
+    /// Current logical machine count.
     k: usize,
+    /// This machine's immutable id in the original mesh.
+    wire_id: MachineId,
+    /// logical id → wire id (ascending; identity before compaction).
+    wire_of: Vec<MachineId>,
+    /// wire id → logical id (`None` = evicted peer).
+    logical_of: Vec<Option<MachineId>>,
     inbox: Receiver<Message>,
     inbox_tx: Sender<Message>,
     ctrl: Receiver<(MachineId, Frame)>,
+    /// Outbound streams, indexed by *wire* id.
     outs: Vec<Option<Mutex<TcpStream>>>,
     stats: Arc<Mutex<OverheadStats>>,
     net: Arc<Mutex<NetStats>>,
+    failures: Mutex<SendFailures>,
 }
 
 impl Bus for TcpEndpoint {
@@ -526,22 +661,41 @@ impl Bus for TcpEndpoint {
     }
 
     fn send(&self, to: MachineId, msg: Message) {
-        self.stats.lock().expect("stats poisoned").record(&msg);
         if to == self.id {
             // Loopback without touching the network (the ring kick).
+            lock_unpoisoned(&self.stats).record(&msg);
             let _ = self.inbox_tx.send(msg);
             return;
         }
-        let bytes = encode_frame(&Frame::Msg(msg.clone()));
+        let bytes = match encode_frame(&Frame::Msg(msg.clone())) {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                self.record_send_failure(to, format!("encoding for machine {to}: {e}"));
+                return;
+            }
+        };
         debug_assert_eq!(bytes.len(), msg.wire_bytes(), "codec vs wire_bytes drift");
-        if let Some(stream) = &self.outs[to] {
-            // A dead peer is fine to ignore, exactly like the closed
-            // mpsc sender on the in-process bus.
-            let _ = stream.lock().expect("stream poisoned").write_all(&bytes);
+        lock_unpoisoned(&self.stats).record(&msg);
+        let wire = self.wire_of[to];
+        match &self.outs[wire] {
+            Some(stream) => {
+                // A dead peer must not be silently ignored: record the
+                // failure at the send site so the actor loop exits
+                // through `SendFailed` and the leader's diagnosis can
+                // name the peer, instead of every machine waiting out
+                // its receive timeout on a ring that can never close.
+                if let Err(e) = lock_unpoisoned(stream).write_all(&bytes) {
+                    self.record_send_failure(to, format!("sending to machine {to}: {e}"));
+                }
+            }
+            None => self.record_send_failure(to, format!("no connection to machine {to}")),
         }
     }
 
     fn recv_timeout(&self, timeout: Duration) -> RecvOutcome {
+        if let Some(m) = lock_unpoisoned(&self.failures).fresh.pop_front() {
+            return RecvOutcome::SendFailed(m);
+        }
         match self.inbox.recv_timeout(timeout) {
             Ok(msg) => RecvOutcome::Msg(msg),
             Err(RecvTimeoutError::Timeout) => RecvOutcome::TimedOut,
@@ -551,14 +705,102 @@ impl Bus for TcpEndpoint {
 }
 
 impl TcpEndpoint {
-    /// Send a control frame to one peer.
+    /// This machine's immutable id in the original mesh.
+    pub fn wire_id(&self) -> MachineId {
+        self.wire_id
+    }
+
+    /// The wire id behind a current logical id.
+    pub fn wire_of(&self, logical: MachineId) -> MachineId {
+        self.wire_of[logical]
+    }
+
+    fn record_send_failure(&self, to: MachineId, what: String) {
+        let mut f = lock_unpoisoned(&self.failures);
+        if !f.map.contains_key(&to) {
+            f.map.insert(to, what);
+            f.fresh.push_back(to);
+        }
+    }
+
+    /// Drain and return the recorded send failures (logical peer →
+    /// first error). Feeds the leader's death diagnosis.
+    pub fn take_send_failures(&self) -> BTreeMap<MachineId, String> {
+        let mut f = lock_unpoisoned(&self.failures);
+        f.fresh.clear();
+        std::mem::take(&mut f.map)
+    }
+
+    /// Discard buffered protocol messages (stale traffic from an
+    /// aborted round). Returns how many were dropped.
+    pub fn drain_inbox(&self) -> usize {
+        let mut n = 0;
+        while self.inbox.try_recv().is_ok() {
+            n += 1;
+        }
+        n
+    }
+
+    /// Re-form the endpoint around `survivors_wire` — the surviving
+    /// wire ids of the original mesh, ascending, including this
+    /// machine. Logical ids become positions in the list; outbound
+    /// streams to evicted peers are closed; recorded send failures
+    /// (which name old logical ids) are cleared.
+    pub fn compact(&mut self, survivors_wire: &[MachineId]) -> Result<(), WireError> {
+        if survivors_wire.is_empty() || !survivors_wire.windows(2).all(|w| w[0] < w[1]) {
+            return Err(WireError::Protocol(
+                "survivor list must be non-empty and strictly ascending".into(),
+            ));
+        }
+        if *survivors_wire.last().expect("non-empty") >= self.logical_of.len() {
+            return Err(WireError::Protocol(format!(
+                "survivor list names wire id {} but the mesh had {} machines",
+                survivors_wire.last().expect("non-empty"),
+                self.logical_of.len()
+            )));
+        }
+        let me = survivors_wire.iter().position(|&w| w == self.wire_id).ok_or_else(|| {
+            WireError::Protocol(format!(
+                "this machine (wire id {}) is missing from the survivor list",
+                self.wire_id
+            ))
+        })?;
+        for wire in 0..self.logical_of.len() {
+            if !survivors_wire.contains(&wire) {
+                self.outs[wire] = None; // closes the socket to the evicted peer
+            }
+        }
+        self.logical_of = vec![None; self.logical_of.len()];
+        for (logical, &wire) in survivors_wire.iter().enumerate() {
+            self.logical_of[wire] = Some(logical);
+        }
+        self.wire_of = survivors_wire.to_vec();
+        self.k = survivors_wire.len();
+        self.id = me;
+        let mut f = lock_unpoisoned(&self.failures);
+        f.map.clear();
+        f.fresh.clear();
+        Ok(())
+    }
+
+    /// Send a control frame to one peer (logical id). A write failure
+    /// is recorded (it is death-diagnosis evidence) as well as
+    /// returned.
     pub fn send_ctrl(&self, to: MachineId, frame: &Frame) -> Result<(), WireError> {
-        let stream = self.outs[to]
-            .as_ref()
-            .ok_or_else(|| WireError::Protocol(format!("no connection to machine {to}")))?;
-        let bytes = encode_frame(frame);
-        stream.lock().expect("stream poisoned").write_all(&bytes)?;
-        let mut net = self.net.lock().expect("net stats poisoned");
+        let wire = self.wire_of[to];
+        let stream = match self.outs[wire].as_ref() {
+            Some(stream) => stream,
+            None => {
+                self.record_send_failure(to, format!("no connection to machine {to}"));
+                return Err(WireError::Protocol(format!("no connection to machine {to}")));
+            }
+        };
+        let bytes = encode_frame(frame)?;
+        if let Err(e) = lock_unpoisoned(stream).write_all(&bytes) {
+            self.record_send_failure(to, format!("sending a control frame to machine {to}: {e}"));
+            return Err(e.into());
+        }
+        let mut net = lock_unpoisoned(&self.net);
         net.control_messages += 1;
         net.control_bytes += bytes.len() as u64;
         Ok(())
@@ -574,25 +816,37 @@ impl TcpEndpoint {
         Ok(())
     }
 
-    /// Receive the next control frame (tagged with its sender).
+    /// Receive the next control frame (tagged with its sender's
+    /// current logical id). Frames from evicted peers are dropped.
     pub fn recv_ctrl(&self, timeout: Duration) -> Result<(MachineId, Frame), WireError> {
-        match self.ctrl.recv_timeout(timeout) {
-            Ok(pair) => Ok(pair),
-            Err(RecvTimeoutError::Timeout) => {
-                Err(WireError::Protocol("timed out waiting for a control frame".into()))
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.ctrl.recv_timeout(left) {
+                Ok((wire, frame)) => {
+                    match self.logical_of.get(wire).copied().flatten() {
+                        Some(logical) => return Ok((logical, frame)),
+                        None => continue, // stale frame from an evicted peer
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(WireError::Protocol(
+                        "timed out waiting for a control frame".into(),
+                    ))
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(WireError::Closed),
             }
-            Err(RecvTimeoutError::Disconnected) => Err(WireError::Closed),
         }
     }
 
     /// Snapshot of the protocol-message accounting.
     pub fn stats_snapshot(&self) -> OverheadStats {
-        self.stats.lock().expect("stats poisoned").clone()
+        lock_unpoisoned(&self.stats).clone()
     }
 
     /// Snapshot of the control-plane accounting.
     pub fn net_snapshot(&self) -> NetStats {
-        *self.net.lock().expect("net stats poisoned")
+        *lock_unpoisoned(&self.net)
     }
 }
 
@@ -685,10 +939,14 @@ fn dial_peer(addr: &str, deadline: Instant) -> Result<TcpStream, WireError> {
                 return Ok(stream);
             }
             Err(e) => {
-                if Instant::now() + backoff >= deadline {
+                // Keep trying until the deadline itself has passed —
+                // the old `now + backoff >= deadline` check gave up
+                // one whole backoff early, wasting the final window.
+                let now = Instant::now();
+                if now >= deadline {
                     return Err(WireError::Io(format!("dialing {addr}: {e}")));
                 }
-                std::thread::sleep(backoff);
+                std::thread::sleep(backoff.min(deadline - now));
                 backoff = (backoff * 2).min(DIAL_BACKOFF_MAX);
             }
         }
@@ -724,7 +982,7 @@ fn mesh_with_listener(
         let mut stream = dial_peer(addr, deadline)?;
         write_frame(
             &mut stream,
-            &Frame::Hello { version: WIRE_VERSION, machine: id as u32, machines: k as u32 },
+            &Frame::Hello { version: WIRE_VERSION, machine: wire_u32(id)?, machines: wire_u32(k)? },
         )?;
         outs[peer] = Some(Mutex::new(stream));
     }
@@ -763,12 +1021,16 @@ fn mesh_with_listener(
     Ok(TcpEndpoint {
         id,
         k,
+        wire_id: id,
+        wire_of: (0..k).collect(),
+        logical_of: (0..k).map(Some).collect(),
         inbox,
         inbox_tx,
         ctrl,
         outs,
         stats,
         net: Arc::new(Mutex::new(NetStats::default())),
+        failures: Mutex::new(SendFailures::default()),
     })
 }
 
@@ -841,6 +1103,13 @@ pub struct ClusterLeader {
     ep: TcpEndpoint,
     opts: DistributedOptions,
     epoch: u64,
+    /// Which machines (current logical ids) delivered their
+    /// `RoundStats` in the round in flight. Kept on the leader — not
+    /// rebuilt inside the barrier loop — because a failed round's
+    /// partial barrier is evidence [`ClusterLeader::diagnose_dead`]
+    /// must not lose: a worker whose report was already consumed
+    /// will not send it again.
+    reported: Vec<bool>,
 }
 
 impl ClusterLeader {
@@ -852,7 +1121,8 @@ impl ClusterLeader {
     ) -> Result<ClusterLeader, WireError> {
         let stats = Arc::new(Mutex::new(OverheadStats::default()));
         let ep = connect_mesh(0, addrs, connect_timeout, stats)?;
-        Ok(ClusterLeader { ep, opts, epoch: 0 })
+        let k = ep.machine_count();
+        Ok(ClusterLeader { ep, opts, epoch: 0, reported: vec![false; k] })
     }
 
     pub fn machine_count(&self) -> usize {
@@ -883,7 +1153,10 @@ impl ClusterLeader {
             max_transfers: self.opts.max_transfers as u64,
             recv_timeout_ms: self.opts.recv_timeout.as_millis() as u64,
             node_weights: graph.node_weights().to_vec(),
-            edges: graph.edges().map(|(u, v, w)| (u as u32, v as u32, w)).collect(),
+            edges: graph
+                .edges()
+                .map(|(u, v, w)| Ok((wire_u32(u)?, wire_u32(v)?, w)))
+                .collect::<Result<_, WireError>>()?,
         }))
     }
 
@@ -897,14 +1170,46 @@ impl ClusterLeader {
         initial: Partition,
     ) -> Result<DistributedReport, WireError> {
         let k = self.ep.machine_count();
+        if machines.count() != k {
+            return Err(WireError::Protocol(format!(
+                "cluster has {k} machines but the round's fixture wants {}",
+                machines.count()
+            )));
+        }
+        // Any message still buffered here is stale traffic from an
+        // aborted round (post-recovery); the broadcast below opens a
+        // fresh round, so this is the one safe point to discard it.
+        self.ep.drain_inbox();
+        self.reported = vec![false; k];
+        self.reported[0] = true;
         let epoch = self.epoch;
         self.epoch += 1;
-        self.ep.broadcast_ctrl(&Frame::EpochBegin(EpochFrame {
+        let begin = Frame::EpochBegin(EpochFrame {
             epoch,
             node_weights: graph.node_weights().to_vec(),
             edge_weights: graph.edges().map(|(_, _, w)| w).collect(),
-            assignment: initial.assignment().iter().map(|&m| m as u32).collect(),
-        }))?;
+            assignment: initial
+                .assignment()
+                .iter()
+                .map(|&m| wire_u32(m))
+                .collect::<Result<_, _>>()?,
+        });
+        // Attempt every peer even after a failure: the live peers must
+        // receive the round so they can later prove themselves to the
+        // death diagnosis with a RoundStats (a failed send is recorded
+        // by `send_ctrl` as evidence against the dead one).
+        let mut lost_at_broadcast = Vec::new();
+        for to in 1..k {
+            if let Err(e) = self.ep.send_ctrl(to, &begin) {
+                eprintln!("gtip leader: EpochBegin to machine {to} failed: {e}");
+                lost_at_broadcast.push(to);
+            }
+        }
+        if !lost_at_broadcast.is_empty() {
+            return Err(WireError::Protocol(format!(
+                "EpochBegin broadcast lost machine(s) {lost_at_broadcast:?}"
+            )));
+        }
 
         let before = self.ep.stats_snapshot();
         let actor = MachineActor::new(
@@ -920,20 +1225,21 @@ impl ClusterLeader {
         let outcome =
             machine_loop(actor, &self.ep, self.opts.epsilon, self.opts.max_transfers, self.opts.recv_timeout);
         if outcome.timed_out {
-            return Err(WireError::Protocol(
-                "refinement round timed out waiting on a peer".into(),
-            ));
+            return Err(WireError::Protocol(match outcome.dead_peer {
+                Some(m) => format!("refinement round lost machine {m} (send failed)"),
+                None => "refinement round timed out waiting on a peer".into(),
+            }));
         }
 
-        // Barrier: one RoundStats per worker closes the round.
+        // Barrier: one RoundStats per worker closes the round. Who has
+        // reported lives on `self` so a barrier that fails part-way
+        // leaves the evidence for `diagnose_dead`.
         let mut overhead = self.ep.stats_snapshot().delta_since(&before);
-        let mut seen = vec![false; k];
-        seen[0] = true;
         let mut remaining = k - 1;
         while remaining > 0 {
             match self.ep.recv_ctrl(self.opts.recv_timeout)? {
-                (peer, Frame::RoundStats(s)) if !seen[peer] => {
-                    seen[peer] = true;
+                (peer, Frame::RoundStats(s)) if !self.reported[peer] => {
+                    self.reported[peer] = true;
                     overhead.add(&s);
                     remaining -= 1;
                 }
@@ -955,6 +1261,120 @@ impl ClusterLeader {
             converged: outcome.converged,
             timed_out: false,
         })
+    }
+
+    /// After a failed [`ClusterLeader::refine`], work out which
+    /// workers are dead. Evidence is twofold: send failures recorded
+    /// at the leader's own sockets, and silence — any worker that does
+    /// not deliver its `RoundStats` within one receive-timeout grace
+    /// window. Live workers send `RoundStats` even after a timed-out
+    /// round precisely so they can prove themselves here.
+    ///
+    /// Returns the dead machines' *current logical ids*, ascending.
+    /// An alive-but-stalled worker that stays silent past the grace
+    /// window is evicted too — see the module doc's known limitation.
+    pub fn diagnose_dead(&mut self) -> Result<Vec<MachineId>, WireError> {
+        let k = self.ep.machine_count();
+        // Workers whose RoundStats the failed round's barrier already
+        // consumed have proven themselves; they will not report twice.
+        let mut alive = std::mem::take(&mut self.reported);
+        alive.resize(k, false);
+        alive[0] = true;
+        // 2x the round timeout: a live worker only discovers the dead
+        // ring after waiting out its own `recv_timeout`, and its
+        // RoundStats still has to cross the wire after that.
+        let deadline = Instant::now() + self.opts.recv_timeout * 2;
+        while alive.iter().any(|&a| !a) {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match self.ep.recv_ctrl(left) {
+                Ok((peer, Frame::RoundStats(_))) => alive[peer] = true,
+                Ok(_) => continue, // stale traffic from the aborted round
+                Err(WireError::Protocol(_)) => break, // grace window elapsed
+                Err(e) => return Err(e),
+            }
+        }
+        let failed = self.ep.take_send_failures();
+        // Empty means every worker answered the post-mortem: the
+        // failure was not a worker death and the caller should
+        // propagate its original error instead of recovering.
+        let dead: Vec<MachineId> =
+            (1..k).filter(|m| !alive[*m] || failed.contains_key(m)).collect();
+        for m in &dead {
+            let why = failed.get(m).cloned().unwrap_or_else(|| "no RoundStats within grace".into());
+            eprintln!("gtip leader: machine {m} presumed dead ({why})");
+        }
+        Ok(dead)
+    }
+
+    /// Re-form the cluster around the survivors of `dead` (current
+    /// logical ids) and hand every survivor its new identity and the
+    /// renormalized speeds. Blocks until every survivor acknowledges —
+    /// the ack doubles as a barrier keeping stale round traffic out of
+    /// the next epoch.
+    pub fn recover(
+        &mut self,
+        dead: &[MachineId],
+        machines_after: &MachineConfig,
+    ) -> Result<(), WireError> {
+        let k = self.ep.machine_count();
+        if dead.is_empty() || dead.contains(&0) {
+            return Err(WireError::Protocol(
+                "recovery needs a non-empty dead list that excludes the leader".into(),
+            ));
+        }
+        if machines_after.count() + dead.len() != k {
+            return Err(WireError::Protocol(format!(
+                "{} survivors + {} dead != {k} machines",
+                machines_after.count(),
+                dead.len()
+            )));
+        }
+        let survivors_wire: Vec<MachineId> =
+            (0..k).filter(|m| !dead.contains(m)).map(|m| self.ep.wire_of(m)).collect();
+        self.ep.compact(&survivors_wire)?;
+        self.ep.drain_inbox();
+        self.reported = vec![false; self.ep.machine_count()];
+        let frame = Frame::Restore {
+            survivors: survivors_wire
+                .iter()
+                .map(|&w| wire_u32(w))
+                .collect::<Result<_, _>>()?,
+            speeds: machines_after.speeds().to_vec(),
+        };
+        self.ep.broadcast_ctrl(&frame)?;
+
+        // Ack barrier: every survivor confirms it compacted to the
+        // same membership before the next epoch's traffic starts.
+        let k_after = self.ep.machine_count();
+        let mut acked = vec![false; k_after];
+        acked[0] = true;
+        let mut remaining = k_after - 1;
+        while remaining > 0 {
+            match self.ep.recv_ctrl(self.opts.recv_timeout)? {
+                (peer, Frame::RestoreAck { machine }) => {
+                    if self.ep.wire_of(peer) != machine as MachineId {
+                        return Err(WireError::Protocol(format!(
+                            "machine {peer} acked the restore as wire id {machine}, expected {}",
+                            self.ep.wire_of(peer)
+                        )));
+                    }
+                    if !acked[peer] {
+                        acked[peer] = true;
+                        remaining -= 1;
+                    }
+                }
+                (_, Frame::RoundStats(_)) => continue, // stale post-mortem report
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during restore: {frame:?}"
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Graceful shutdown: tell every worker the run is over.
@@ -992,8 +1412,14 @@ pub fn serve(
         )));
     }
     let stats = Arc::new(Mutex::new(OverheadStats::default()));
-    let ep = connect_mesh(machine_id, addrs, connect_timeout, Arc::clone(&stats))?;
-    let k = addrs.len();
+    let mut ep = connect_mesh(machine_id, addrs, connect_timeout, Arc::clone(&stats))?;
+    let mut k = addrs.len();
+    let mut my_id = machine_id;
+    // Fault injection for the recovery tests: "setup" dies after the
+    // fixture is validated, "epoch:N" dies on receiving EpochBegin N,
+    // "stats" dies just before reporting RoundStats. Exit code 86
+    // marks an intentional death (the harness asserts on it).
+    let die = std::env::var("GTIP_SERVE_DIE").unwrap_or_default();
 
     // Fixture first.
     let setup = match ep.recv_ctrl(EPOCH_WAIT)? {
@@ -1052,7 +1478,7 @@ pub fn serve(
     }
     // Adopt the leader's normalized speeds verbatim — renormalizing
     // here could drift each weight by an ulp and diverge the replicas.
-    let machines = MachineConfig::from_normalized(setup.speeds.clone());
+    let mut machines = MachineConfig::from_normalized(setup.speeds.clone());
     let mut builder = GraphBuilder::with_nodes(n);
     for &(u, v, w) in &setup.edges {
         builder.add_edge(u as usize, v as usize, w);
@@ -1070,10 +1496,21 @@ pub fn serve(
     }
     let recv_timeout = Duration::from_millis(setup.recv_timeout_ms.max(1));
     let mut epochs = 0u64;
+    if die == "setup" {
+        eprintln!("gtip serve: GTIP_SERVE_DIE=setup — dying after fixture validation");
+        std::process::exit(86);
+    }
 
     loop {
         match ep.recv_ctrl(EPOCH_WAIT)? {
             (0, Frame::EpochBegin(e)) => {
+                if die == format!("epoch:{}", e.epoch) {
+                    eprintln!(
+                        "gtip serve: GTIP_SERVE_DIE={die} — dying on EpochBegin {}",
+                        e.epoch
+                    );
+                    std::process::exit(86);
+                }
                 if e.node_weights.len() != n || e.edge_weights.len() != edge_order.len() {
                     return Err(WireError::Protocol(format!(
                         "epoch {} weight vectors do not match the fixture shape",
@@ -1108,7 +1545,7 @@ pub fn serve(
                 let part = Partition::from_assignment(&graph, k, assignment);
                 let before = ep.stats_snapshot();
                 let actor = MachineActor::new(
-                    machine_id,
+                    my_id,
                     Arc::new(graph.clone()),
                     machines.clone(),
                     &part,
@@ -1124,14 +1561,65 @@ pub fn serve(
                     recv_timeout,
                 );
                 if outcome.timed_out {
-                    return Err(WireError::Protocol(format!(
-                        "epoch {}: refinement round timed out waiting on a peer",
-                        e.epoch
-                    )));
+                    // A peer died mid-round. Do NOT unwind: report the
+                    // round's stats anyway — that report is this
+                    // worker's proof of life for the leader's death
+                    // diagnosis — then wait for the leader's Restore.
+                    eprintln!(
+                        "gtip serve: epoch {} round lost a peer{}; awaiting restore",
+                        e.epoch,
+                        match outcome.dead_peer {
+                            Some(m) => format!(" (machine {m})"),
+                            None => String::new(),
+                        }
+                    );
+                }
+                if die == "stats" {
+                    eprintln!("gtip serve: GTIP_SERVE_DIE=stats — dying before RoundStats");
+                    std::process::exit(86);
                 }
                 let delta = ep.stats_snapshot().delta_since(&before);
                 ep.send_ctrl(0, &Frame::RoundStats(delta))?;
-                epochs += 1;
+                if !outcome.timed_out {
+                    epochs += 1;
+                }
+            }
+            (0, Frame::Restore { survivors, speeds }) => {
+                let wish: Vec<MachineId> =
+                    survivors.iter().map(|&w| w as MachineId).collect();
+                if speeds.len() != wish.len() {
+                    return Err(WireError::Protocol(format!(
+                        "restore has {} survivors but {} speeds",
+                        wish.len(),
+                        speeds.len()
+                    )));
+                }
+                let speed_sum: f64 = speeds.iter().sum();
+                if speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
+                    return Err(WireError::Protocol(format!(
+                        "restore speeds are not normalized positive weights (sum {speed_sum})"
+                    )));
+                }
+                let Some(pos) = wish.iter().position(|&w| w == ep.wire_id()) else {
+                    // The leader evicted us — presumed dead (e.g. a
+                    // transient stall past the grace window). Bow out
+                    // cleanly; the survivors carry the run.
+                    eprintln!(
+                        "gtip serve: evicted by restore (wire id {}); exiting",
+                        ep.wire_id()
+                    );
+                    break;
+                };
+                ep.compact(&wish)?;
+                ep.drain_inbox();
+                machines = MachineConfig::from_normalized(speeds.clone());
+                k = wish.len();
+                my_id = pos;
+                ep.send_ctrl(0, &Frame::RestoreAck { machine: wire_u32(ep.wire_id())? })?;
+                eprintln!(
+                    "gtip serve: restored as machine {my_id}/{k} (wire id {})",
+                    ep.wire_id()
+                );
             }
             (0, Frame::Goodbye) => break,
             (peer, frame) => {
@@ -1210,7 +1698,7 @@ mod tests {
     #[test]
     fn message_round_trip_and_exact_sizes() {
         for msg in all_message_shapes() {
-            let bytes = encode_frame(&Frame::Msg(msg.clone()));
+            let bytes = encode_frame(&Frame::Msg(msg.clone())).unwrap();
             assert_eq!(bytes.len(), msg.wire_bytes(), "{}", msg.tag());
             let decoded = decode_payload(&bytes[4..]).unwrap();
             assert_eq!(decoded, Frame::Msg(msg));
@@ -1242,18 +1730,35 @@ mod tests {
                 take_my_turn: Counter { messages: 5, bytes: 105 },
                 ..Default::default()
             }),
+            Frame::Restore { survivors: vec![0, 2, 3], speeds: vec![0.25, 0.25, 0.5] },
+            Frame::Join { machine: 4, speed: 0.125 },
+            Frame::RestoreAck { machine: 3 },
             Frame::Goodbye,
         ];
         for f in frames {
-            let bytes = encode_frame(&f);
+            let bytes = encode_frame(&f).unwrap();
             assert_eq!(decode_payload(&bytes[4..]).unwrap(), f);
         }
+    }
+
+    /// Node/machine ids that do not fit the u32 wire format must come
+    /// back as a clean error from the encoder, not a silent truncation.
+    #[test]
+    fn oversize_ids_rejected_at_encode_time() {
+        if std::mem::size_of::<usize>() <= 4 {
+            return; // the bug cannot exist on 32-bit targets
+        }
+        let huge = u32::MAX as usize + 1;
+        let msg = Message::ReceiveNode { seq: 0, node: 1, from: huge, to: 0 };
+        assert!(encode_frame(&Frame::Msg(msg)).is_err());
+        assert!(wire_u32(huge).is_err());
+        assert_eq!(wire_u32(u32::MAX as usize).unwrap(), u32::MAX);
     }
 
     #[test]
     fn truncated_frames_error_cleanly() {
         for msg in all_message_shapes() {
-            let bytes = encode_frame(&Frame::Msg(msg));
+            let bytes = encode_frame(&Frame::Msg(msg)).unwrap();
             // Every strict prefix of the payload must fail without
             // panicking.
             for cut in 0..bytes.len() - 4 {
@@ -1267,7 +1772,7 @@ mod tests {
 
     #[test]
     fn trailing_garbage_rejected() {
-        let mut bytes = encode_frame(&Frame::Goodbye);
+        let mut bytes = encode_frame(&Frame::Goodbye).unwrap();
         bytes.push(0xFF);
         assert!(matches!(
             decode_payload(&bytes[4..]),
@@ -1372,5 +1877,105 @@ mod tests {
         assert_eq!(tcp.transfers, inproc.transfers);
         assert_eq!(tcp.overhead, inproc.overhead);
         assert!(tcp.converged && inproc.converged);
+    }
+
+    /// The dial loop must keep retrying until the deadline itself has
+    /// passed. The old `now + backoff >= deadline` check surrendered
+    /// one whole backoff early: against a refusing port with a 300 ms
+    /// deadline it gave up at ~175 ms (25+50+100 slept, next backoff
+    /// 200 crossing the line). The fix retries into the final window.
+    #[test]
+    fn dial_retries_until_the_deadline_itself() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // now the port refuses connections
+        let start = Instant::now();
+        let deadline = start + Duration::from_millis(300);
+        assert!(dial_peer(&addr, deadline).is_err());
+        assert!(
+            start.elapsed() >= Duration::from_millis(250),
+            "dial gave up a backoff early: {:?}",
+            start.elapsed()
+        );
+    }
+
+    /// A panic while holding the shared stats lock must not take the
+    /// whole endpoint down with `expect("poisoned")` — the guard is
+    /// recovered and traffic keeps flowing.
+    #[test]
+    fn poisoned_stats_lock_recovers() {
+        let (eps, stats) = build_tcp_bus_local(2).unwrap();
+        let poisoner = Arc::clone(&stats);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("poison the stats lock");
+        })
+        .join();
+        assert!(stats.lock().is_err(), "lock should be poisoned");
+
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 };
+        eps[0].send(1, msg.clone());
+        match eps[1].recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery through poisoned lock: {other:?}"),
+        }
+        assert_eq!(eps[0].stats_snapshot().take_my_turn.messages, 1);
+    }
+
+    /// An unsendable message surfaces as `SendFailed` at the sender's
+    /// next receive instead of the peer silently never hearing from us.
+    #[test]
+    fn send_failure_surfaces_instead_of_silence() {
+        if std::mem::size_of::<usize>() <= 4 {
+            return;
+        }
+        let (eps, _stats) = build_tcp_bus_local(2).unwrap();
+        let huge = u32::MAX as usize + 1;
+        eps[0].send(1, Message::ReceiveNode { seq: 0, node: 0, from: huge, to: 1 });
+        match eps[0].recv_timeout(Duration::from_millis(10)) {
+            RecvOutcome::SendFailed(1) => {}
+            other => panic!("expected SendFailed(1), got {other:?}"),
+        }
+        assert!(eps[0].take_send_failures().contains_key(&1));
+    }
+
+    /// Compaction renumbers the survivors densely and re-routes both
+    /// planes (protocol + control) through the new logical ids.
+    #[test]
+    fn compact_renumbers_and_reroutes() {
+        let (mut eps, _stats) = build_tcp_bus_local(3).unwrap();
+        let mut ep2 = eps.pop().unwrap();
+        let ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        drop(ep1); // wire machine 1 dies
+
+        ep0.compact(&[0, 2]).unwrap();
+        ep2.compact(&[0, 2]).unwrap();
+        assert_eq!((ep0.id(), ep0.machine_count()), (0, 2));
+        assert_eq!((ep2.id(), ep2.machine_count()), (1, 2));
+        assert_eq!(ep2.wire_id(), 2);
+
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 2 };
+        ep0.send(1, msg.clone()); // logical 1 now means wire 2
+        match ep2.recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery after compaction: {other:?}"),
+        }
+
+        ep2.send_ctrl(0, &Frame::RestoreAck { machine: 2 }).unwrap();
+        match ep2.recv_ctrl(Duration::from_millis(50)) {
+            Err(WireError::Protocol(_)) => {} // nothing inbound for ep2
+            other => panic!("unexpected ctrl on ep2: {other:?}"),
+        }
+        match ep0.recv_ctrl(Duration::from_secs(5)).unwrap() {
+            (1, Frame::RestoreAck { machine: 2 }) => {}
+            other => panic!("bad ctrl routing after compaction: {other:?}"),
+        }
+
+        // Compaction rejects nonsense survivor lists.
+        assert!(ep0.compact(&[]).is_err());
+        assert!(ep0.compact(&[2, 0]).is_err());
+        assert!(ep0.compact(&[2]).is_err()); // missing this machine
+        assert!(ep0.compact(&[0, 7]).is_err()); // out of range
     }
 }

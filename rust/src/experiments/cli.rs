@@ -67,12 +67,15 @@ USAGE:
                   [--tick-value V] [--migration-charge CMIG]
                   [--seed S] [--compare] [--parallelism P]
                   [--transport inproc|tcp] [--peers host:port,...]
-                  [--connect-timeout-ms MS] [--report-json FILE]
+                  [--connect-timeout-ms MS] [--recv-timeout-ms MS]
+                  [--report-json FILE]
+                  [--checkpoint-dir DIR] [--restore FILE]
   gtip churn-sweep [--scenarios hotspot,flash] [--nodes N] [--k K] [--threads N]
                   [--horizon T] [--epoch-ticks E] [--framework A|B] [--seed S]
                   [--charges 0,2,8,32] [--tick-value V] [--out FILE]
   gtip serve      --machine-id K --peers host:port,host:port,...
-                  [--connect-timeout-ms MS]
+                  [--connect-timeout-ms MS] [--checkpoint-dir DIR]
+  gtip snapshot   --inspect FILE      # print a checkpoint's summary + verify round-trip
   gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
                   [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
                   [--migration-charge CMIG] [--corpus-dir DIR] [--replay FILE]
@@ -108,6 +111,7 @@ fn run(args: &Args) -> CliResult {
         Some("dynamic") => cmd_dynamic(args),
         Some("serve") => cmd_serve(args),
         Some("churn-sweep") => cmd_churn_sweep(args),
+        Some("snapshot") => cmd_snapshot(args),
         Some("bench-gate") => cmd_bench_gate(args),
         Some("fuzz") => cmd_fuzz(args),
         Some("experiment") => cmd_experiment(args),
@@ -283,6 +287,11 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     let parallelism = args.opt_or::<usize>("parallelism", 1)?;
     let transport = args.str_or("transport", "inproc").to_string();
     let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
+    // How long the cluster waits on a silent peer before declaring it
+    // dead (rides Setup, so workers use it too). The 30s default is
+    // safe for congested CI; kill-a-worker tests dial it down so death
+    // diagnosis is quick.
+    let recv_timeout = Duration::from_millis(args.opt_or::<u64>("recv-timeout-ms", 30_000)?.max(1));
     let tcp = match transport.as_str() {
         "inproc" | "in-process" | "local" => false,
         "tcp" => true,
@@ -311,6 +320,94 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     if horizon == 0 {
         return Err("--horizon must be >= 1".into());
     }
+    let checkpoint_dir = args.opt_str("checkpoint-dir").map(std::path::PathBuf::from);
+
+    let options = DynamicOptions {
+        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
+        epoch_ticks,
+        framework,
+        mu,
+        backend,
+        ticks_per_transfer,
+        migration_charge,
+        max_refinements: 0,
+        checkpoint_dir,
+    };
+
+    // Resume from an epoch-boundary checkpoint instead of generating a
+    // fixture: topology, fleet, pending events, estimator memory and
+    // cumulative counters all come from the file (DESIGN.md §10).
+    if let Some(path) = args.opt_str("restore") {
+        if args.flag("compare") {
+            return Err("--restore resumes one arm; it cannot be combined with --compare".into());
+        }
+        let snap = crate::sim::Snapshot::read_from(std::path::Path::new(path))?;
+        let graph = snap.build_graph();
+        println!(
+            "restore {path}: {} LPs, K={}, epoch {}, {} ticks simulated",
+            graph.node_count(),
+            snap.machine_count(),
+            snap.epoch,
+            snap.engine.stats.ticks,
+        );
+        let estimator = WeightEstimator::of_kind(estimator_kind);
+        let mut driver = DynamicDriver::from_snapshot(&graph, &snap, estimator, options);
+        if tcp {
+            let peers = net::parse_peers(args.req_str("peers")?)?;
+            if peers.len() != snap.machine_count() {
+                return Err(format!(
+                    "--peers lists {} machines but the snapshot has K={}",
+                    peers.len(),
+                    snap.machine_count()
+                )
+                .into());
+            }
+            let leader = ClusterLeader::connect(
+                &peers,
+                DistributedOptions {
+                    mu,
+                    framework,
+                    migration_charge,
+                    recv_timeout,
+                    ..Default::default()
+                },
+                connect_timeout,
+            )?;
+            driver.attach_cluster(leader)?;
+        }
+        let report = driver.try_run()?;
+        let title = format!("gtip dynamic — restored from {path}");
+        println!("{}", report.epoch_table(&title).to_text());
+        println!(
+            "total: {} wall ticks  (events {}, rollbacks {}, {} refinements, {} transfers, truncated {})",
+            report.total_time(),
+            report.stats.events_processed,
+            report.stats.rollbacks,
+            report.refinements(),
+            report.transfers,
+            report.stats.truncated,
+        );
+        if let Some(out) = args.opt_str("report-json") {
+            // Final measured weights, like the live path — so the cost
+            // here is directly comparable with the run that wrote the
+            // checkpoint (net-smoke's recovery gate relies on this).
+            let json = dynamic_report_json(
+                &report,
+                driver.engine().partition().assignment(),
+                driver.weighted_graph(),
+                driver.machines(),
+                mu,
+            );
+            if let Some(dir) = std::path::Path::new(out).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(out, json.sorted().render() + "\n")?;
+            println!("(wrote {out})");
+        }
+        return Ok(());
+    }
 
     let mut rng = Pcg32::new(seed);
     let graph = generate(family, nodes, &mut rng);
@@ -332,16 +429,6 @@ fn cmd_dynamic(args: &Args) -> CliResult {
         "loop: epoch={epoch_ticks} ticks, estimator {estimator_kind}, backend {backend}, framework {framework}, mu={mu}, c_mig={migration_charge}"
     );
 
-    let options = DynamicOptions {
-        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
-        epoch_ticks,
-        framework,
-        mu,
-        backend,
-        ticks_per_transfer,
-        migration_charge,
-        max_refinements: 0,
-    };
     let initial = grow_partition(&graph, &machines, &mut rng);
     let estimator = WeightEstimator::of_kind(estimator_kind);
 
@@ -400,7 +487,13 @@ fn cmd_dynamic(args: &Args) -> CliResult {
             );
             let leader = ClusterLeader::connect(
                 &peers,
-                DistributedOptions { mu, framework, migration_charge, ..Default::default() },
+                DistributedOptions {
+                    mu,
+                    framework,
+                    migration_charge,
+                    recv_timeout,
+                    ..Default::default()
+                },
                 connect_timeout,
             )?;
             driver.attach_cluster(leader)?;
@@ -426,12 +519,25 @@ fn cmd_dynamic(args: &Args) -> CliResult {
                 o.bytes_per_regular_update(),
             );
         }
+        if report.recoveries() > 0 {
+            println!(
+                "recovered from {} worker death(s); fleet now K={}",
+                report.recoveries(),
+                driver.machines().count(),
+            );
+        }
         if let Some(path) = args.opt_str("report-json") {
+            // `driver.machines()` and `driver.weighted_graph()`, not
+            // the pre-run config: a recovery shrinks the fleet, and the
+            // final assignment was refined on the final measured
+            // weights — costing it against the stale K or the initial
+            // weights would be wrong (and would make the recovered run
+            // incomparable with a `--restore recovery.snap` replay).
             let json = dynamic_report_json(
                 &report,
                 driver.engine().partition().assignment(),
-                &graph,
-                &machines,
+                driver.weighted_graph(),
+                driver.machines(),
                 mu,
             );
             if let Some(dir) = std::path::Path::new(path).parent() {
@@ -474,6 +580,8 @@ fn dynamic_report_json(
         ("rollbacks".into(), JsonVal::Int(report.stats.rollbacks)),
         ("transfers".into(), JsonVal::Int(report.transfers as u64)),
         ("refinements".into(), JsonVal::Int(report.refinements() as u64)),
+        ("recoveries".into(), JsonVal::Int(report.recoveries() as u64)),
+        ("machines".into(), JsonVal::Int(machines.count() as u64)),
     ];
     if let Some(o) = report.total_overhead() {
         let counter = |c: &crate::coordinator::protocol::Counter| {
@@ -505,6 +613,29 @@ fn dynamic_report_json(
     JsonVal::Obj(vec![("dynamic".into(), JsonVal::Obj(fields))])
 }
 
+/// Inspect an epoch-boundary checkpoint: print its summary and verify
+/// the decode→re-encode round trip is byte-identical (the determinism
+/// gate DESIGN.md §10 promises for every `.snap` file).
+fn cmd_snapshot(args: &Args) -> CliResult {
+    let path = args
+        .opt_str("inspect")
+        .ok_or("usage: gtip snapshot --inspect FILE")?;
+    let bytes = std::fs::read(path)?;
+    let snap = crate::sim::Snapshot::decode(&bytes)?;
+    println!("{}", snap.summary());
+    let reencoded = snap.encode();
+    if reencoded != bytes {
+        return Err(format!(
+            "round-trip diverged: {} bytes on disk, {} re-encoded",
+            bytes.len(),
+            reencoded.len()
+        )
+        .into());
+    }
+    println!("round-trip: {} bytes, re-encode byte-identical", bytes.len());
+    Ok(())
+}
+
 /// Worker side of the multi-process cluster: block until the leader
 /// (machine 0, `gtip dynamic --transport tcp`) connects, then play one
 /// refinement round per epoch until it says goodbye.
@@ -512,6 +643,12 @@ fn cmd_serve(args: &Args) -> CliResult {
     let machine_id = args.opt::<usize>("machine-id")?.ok_or("--machine-id is required")?;
     let peers = net::parse_peers(args.req_str("peers")?)?;
     let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
+    if args.opt_str("checkpoint-dir").is_some() {
+        // Accepted so one launch template serves every rank: snapshots
+        // are taken leader-side (machine 0 owns the engine), so a
+        // worker has nothing to write there.
+        println!("note: checkpoints are taken by the leader; --checkpoint-dir is a no-op on serve");
+    }
     println!(
         "gtip serve: machine {machine_id}/{} listening on {} (leader @ {})",
         peers.len(),
@@ -1206,6 +1343,72 @@ mod tests {
         assert!(run(&parse(&["dynamic", "--threads", "100001"])).is_err());
         assert!(run(&parse(&["dynamic", "--horizon", "0"])).is_err());
         assert!(run(&parse(&["dynamic", "--nodes", "0"])).is_err());
+    }
+
+    /// The full checkpoint pipeline through the CLI: a run with
+    /// `--checkpoint-dir` emits epoch snapshots, `snapshot --inspect`
+    /// verifies one (including its byte-identical re-encode), and a
+    /// `--restore` run resumes it to completion with a report whose
+    /// json carries the recovery/fleet fields.
+    #[test]
+    fn checkpoint_inspect_restore_round_trips() {
+        let dir = std::env::temp_dir().join(format!("gtip_cli_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_string_lossy().to_string();
+        run(&parse(&[
+            "dynamic",
+            "--scenario",
+            "hotspot",
+            "--nodes",
+            "80",
+            "--threads",
+            "40",
+            "--horizon",
+            "600",
+            "--epoch-ticks",
+            "150",
+            "--seed",
+            "12",
+            "--k",
+            "3",
+            "--checkpoint-dir",
+            &dir_s,
+        ]))
+        .unwrap();
+        let first = dir.join("epoch-0000.snap");
+        assert!(first.exists(), "--checkpoint-dir must emit epoch snapshots");
+        run(&parse(&["snapshot", "--inspect", first.to_str().unwrap()])).unwrap();
+
+        let report = std::env::temp_dir().join(format!("gtip_cli_restore_{}.json", std::process::id()));
+        let report_s = report.to_string_lossy().to_string();
+        run(&parse(&[
+            "dynamic",
+            "--restore",
+            first.to_str().unwrap(),
+            "--epoch-ticks",
+            "150",
+            "--report-json",
+            &report_s,
+        ]))
+        .unwrap();
+        let doc = parse_json(&std::fs::read_to_string(&report).unwrap()).unwrap();
+        let dynamic = doc.get("dynamic").expect("dynamic group");
+        assert_eq!(dynamic.get("recoveries").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(dynamic.get("machines").and_then(|v| v.as_u64()), Some(3));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_file(&report);
+    }
+
+    #[test]
+    fn snapshot_command_validates_usage() {
+        // --inspect is required, and the file must exist and decode.
+        assert!(run(&parse(&["snapshot"])).is_err());
+        assert!(run(&parse(&["snapshot", "--inspect", "/nonexistent/gtip.snap"])).is_err());
+    }
+
+    #[test]
+    fn dynamic_rejects_restore_with_compare() {
+        assert!(run(&parse(&["dynamic", "--restore", "/tmp/x.snap", "--compare"])).is_err());
     }
 
     #[test]

@@ -383,6 +383,73 @@ impl<'g> RefineEngine<'g> {
     }
 }
 
+/// Re-home an assignment after machines left the fleet — the
+/// elastic-membership step of checkpoint recovery (DESIGN.md §10).
+///
+/// Surviving machines are renumbered compactly (old id `m` maps to
+/// `m − #{d ∈ dead : d < m}`), keeping their nodes. Each orphaned node
+/// (owned by a dead machine) goes to the survivor with the lowest
+/// normalized load `L_q / w_q` at that moment, processed in ascending
+/// node order with ties broken toward the lowest machine index — fully
+/// deterministic, so every replica derives the same partition. Returns
+/// the new assignment (over `machines.count()` machines) and the
+/// number of re-homed nodes.
+///
+/// This is only a *feasible* starting point, not an equilibrium: the
+/// caller runs one refinement pass from it, which Thm 4.1 guarantees
+/// descends the potential from any start. A machine *joining* needs no
+/// re-homing at all — the old assignment is already feasible over K+1
+/// machines (the newcomer starts empty) and refinement pulls nodes
+/// toward it.
+pub fn rehome_assignment(
+    assignment: &[MachineId],
+    dead: &[MachineId],
+    graph: &Graph,
+    machines: &MachineConfig,
+) -> (Vec<MachineId>, usize) {
+    let k_after = machines.count();
+    let k_before = k_after + dead.len();
+    assert_eq!(graph.node_count(), assignment.len(), "assignment/graph size mismatch");
+    let mut map = vec![usize::MAX; k_before];
+    let mut next = 0;
+    for (m, slot) in map.iter_mut().enumerate() {
+        if !dead.contains(&m) {
+            *slot = next;
+            next += 1;
+        }
+    }
+    assert_eq!(next, k_after, "dead set does not match the shrunken fleet");
+
+    let mut loads = vec![0.0f64; k_after];
+    let mut rehomed = 0usize;
+    let mut out = Vec::with_capacity(assignment.len());
+    for (i, &m) in assignment.iter().enumerate() {
+        assert!(m < k_before, "assignment references machine {m} outside the old fleet");
+        let target = map[m];
+        if target != usize::MAX {
+            loads[target] += graph.node_weight(i);
+        }
+        out.push(target);
+    }
+    for (i, slot) in out.iter_mut().enumerate() {
+        if *slot == usize::MAX {
+            let mut best = 0;
+            let mut best_score = f64::INFINITY;
+            for (q, &load) in loads.iter().enumerate() {
+                let score = load / machines.speed(q);
+                if score < best_score {
+                    best = q;
+                    best_score = score;
+                }
+            }
+            loads[best] += graph.node_weight(i);
+            *slot = best;
+            rehomed += 1;
+        }
+    }
+    (out, rehomed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -601,6 +668,124 @@ mod tests {
             assert!(report.converged);
             assert_eq!(report.transfers, 0, "fw {fw}: a 1e9 charge should freeze everything");
         }
+    }
+
+    /// `rehome_assignment` mechanics: survivors renumber compactly and
+    /// keep their nodes; orphans land on the least-loaded survivor in
+    /// a deterministic order.
+    #[test]
+    fn rehome_renumbers_survivors_and_spreads_orphans() {
+        let mut rng = Pcg32::new(30);
+        let g = table1_graph(40, 3, 6, WeightModel::default(), &mut rng);
+        let machines_before = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+        let assignment = random_partition(40, 5, &mut rng);
+        let orphans = assignment.iter().filter(|&&m| m == 2).count();
+        assert!(orphans > 0, "fixture must put nodes on the dying machine");
+
+        // Kill machine 2: survivors {0,1,3,4} renumber to {0,1,2,3}.
+        let speeds: Vec<f64> = [0.1, 0.2, 0.3, 0.1].iter().map(|s| s / 0.7).collect();
+        let machines_after = MachineConfig::from_normalized(speeds);
+        let (rehomed, count) = rehome_assignment(&assignment, &[2], &g, &machines_after);
+        assert_eq!(count, orphans);
+        assert_eq!(rehomed.len(), 40);
+        for (i, (&old, &new)) in assignment.iter().zip(&rehomed).enumerate() {
+            assert!(new < 4, "node {i} assigned outside the shrunken fleet");
+            match old {
+                0 | 1 => assert_eq!(new, old, "survivor node {i} must stay put"),
+                3 | 4 => assert_eq!(new, old - 1, "survivor node {i} must renumber down"),
+                _ => {} // orphan: anywhere in the new fleet
+            }
+        }
+        // Determinism: same inputs, same output.
+        let again = rehome_assignment(&assignment, &[2], &g, &machines_after);
+        assert_eq!(again.0, rehomed);
+        assert_eq!(again.1, count);
+
+        // The result is a feasible Partition over the new fleet.
+        let part = Partition::from_assignment(&g, 4, rehomed);
+        part.validate(&g).unwrap();
+    }
+
+    /// Elastic shrink: refine to equilibrium at K, lose a machine,
+    /// re-home, and refine at K−1 on a *new* engine — Thm 4.1 descent
+    /// holds from the re-homed start, reaching a K−1 Nash equilibrium.
+    #[test]
+    fn refinement_descends_after_machine_loss() {
+        for fw in [Framework::A, Framework::B] {
+            let mut rng = Pcg32::new(31);
+            let g = table1_graph(80, 3, 6, WeightModel::default(), &mut rng);
+            let machines = MachineConfig::from_speeds(&[0.1, 0.2, 0.3, 0.3, 0.1]);
+            let assignment = random_partition(80, 5, &mut rng);
+            let part = Partition::from_assignment(&g, 5, assignment);
+            let mut e = RefineEngine::new(&g, &machines, part, 8.0, fw);
+            let report = e.run(&RefineOptions::default());
+            assert!(report.converged);
+
+            // The most-loaded machine dies (guaranteed non-empty);
+            // survivors keep their relative speeds.
+            let dead = (0..5).max_by_key(|&m| e.partition().count(m)).unwrap();
+            let survivor_total: f64 = machines
+                .speeds()
+                .iter()
+                .enumerate()
+                .filter(|&(m, _)| m != dead)
+                .map(|(_, &s)| s)
+                .sum();
+            let speeds: Vec<f64> = machines
+                .speeds()
+                .iter()
+                .enumerate()
+                .filter(|&(m, _)| m != dead)
+                .map(|(_, &s)| s / survivor_total)
+                .collect();
+            let machines_after = MachineConfig::from_normalized(speeds);
+            let (rehomed, count) =
+                rehome_assignment(e.partition().assignment(), &[dead], &g, &machines_after);
+            assert!(count > 0, "fw {fw}: the most-loaded machine cannot be empty");
+            let part_after = Partition::from_assignment(&g, 4, rehomed);
+            let mut e2 = RefineEngine::new(&g, &machines_after, part_after, 8.0, fw);
+            let start = e2.potential();
+            let report2 = e2.run(&RefineOptions { track_potential: true, ..Default::default() });
+            assert!(report2.converged, "fw {fw}: no K-1 convergence");
+            assert!(report2.final_potential <= start + 1e-9 * (1.0 + start.abs()));
+            for w in report2.potential_trace.windows(2) {
+                assert!(w[1] < w[0] + 1e-9, "fw {fw}: non-descent step after shrink");
+            }
+            e2.validate().unwrap();
+        }
+    }
+
+    /// Elastic grow: a joining machine needs no re-homing — the old
+    /// assignment is feasible over K+1 (the newcomer starts empty) and
+    /// refinement descends toward it, pulling work onto the new
+    /// machine.
+    #[test]
+    fn refinement_descends_after_machine_join() {
+        let mut rng = Pcg32::new(32);
+        let g = table1_graph(80, 3, 6, WeightModel::default(), &mut rng);
+        let machines = MachineConfig::from_speeds(&[0.25, 0.25, 0.25, 0.25]);
+        let assignment = random_partition(80, 4, &mut rng);
+        let part = Partition::from_assignment(&g, 4, assignment);
+        let mut e = RefineEngine::new(&g, &machines, part, 8.0, Framework::A);
+        let _ = e.run(&RefineOptions::default());
+
+        // A fifth machine joins with equal raw speed.
+        let machines_after = MachineConfig::from_speeds(&[0.25, 0.25, 0.25, 0.25, 0.25]);
+        let joined = Partition::from_assignment(&g, 5, e.partition().assignment().to_vec());
+        assert_eq!(joined.count(4), 0, "the newcomer must start empty");
+        let mut e2 = RefineEngine::new(&g, &machines_after, joined, 8.0, Framework::A);
+        let start = e2.potential();
+        let report = e2.run(&RefineOptions { track_potential: true, ..Default::default() });
+        assert!(report.converged);
+        assert!(report.final_potential <= start + 1e-9 * (1.0 + start.abs()));
+        for w in report.potential_trace.windows(2) {
+            assert!(w[1] < w[0] + 1e-9, "non-descent step after join");
+        }
+        assert!(
+            e2.partition().count(4) > 0,
+            "refinement should pull work onto the joined machine"
+        );
+        e2.validate().unwrap();
     }
 
     #[test]

@@ -19,16 +19,18 @@
 //! distributed backend, and a per-epoch report stream capturing the
 //! potential descent of every refinement.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::coordinator::net::ClusterLeader;
 use crate::coordinator::{run_distributed, DistributedOptions, OverheadStats, WireError};
 use crate::game::cost::Framework;
-use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::game::refine::{rehome_assignment, RefineEngine, RefineOptions};
 use crate::graph::Graph;
 use crate::partition::initial::grow_partition;
-use crate::partition::{global_cost, MachineConfig, Partition};
+use crate::partition::{global_cost, MachineConfig, MachineId, Partition};
 use crate::sim::engine::{EpochCounters, Injection, SimEngine, SimOptions, SimStats};
+use crate::sim::snapshot::{EstimatorState, Snapshot};
 use crate::sim::weights::{self, MeasuredWeights};
 use crate::util::rng::Pcg32;
 use crate::util::stats::Trace;
@@ -128,6 +130,43 @@ impl WeightEstimator {
 
     pub fn kind(&self) -> EstimatorKind {
         self.kind
+    }
+
+    /// Smoothing memory for a checkpoint (`None` until the first
+    /// window primes it; configuration is not state and is rebuilt
+    /// from options on restore).
+    pub fn export_state(&self) -> Option<EstimatorState> {
+        if !self.primed {
+            return None;
+        }
+        Some(EstimatorState {
+            node_state: self.node_state.clone(),
+            edge_state: self.edge_state.clone(),
+            node_out: self.node_out.clone(),
+            edge_out: self.edge_out.clone(),
+            primed: self.primed,
+        })
+    }
+
+    /// Adopt checkpointed smoothing memory verbatim (`None` resets to
+    /// the unprimed initial state).
+    pub fn import_state(&mut self, state: Option<EstimatorState>) {
+        match state {
+            None => {
+                self.node_state.clear();
+                self.edge_state.clear();
+                self.node_out.clear();
+                self.edge_out.clear();
+                self.primed = false;
+            }
+            Some(s) => {
+                self.node_state = s.node_state;
+                self.edge_state = s.edge_state;
+                self.node_out = s.node_out;
+                self.edge_out = s.edge_out;
+                self.primed = s.primed;
+            }
+        }
     }
 
     /// Fold one window's raw measurement into the estimate and return
@@ -240,6 +279,12 @@ pub struct DynamicOptions {
     pub migration_charge: f64,
     /// Cap on refinement epochs (0 = unlimited).
     pub max_refinements: usize,
+    /// When set, every epoch-boundary [`Snapshot`] is also written
+    /// here (`epoch-NNNN.snap`, plus `recovery.snap` after a worker
+    /// death), so an operator can inspect or `--restore` them. The
+    /// in-memory checkpoint that powers live recovery is kept whenever
+    /// a TCP cluster is attached, with or without this directory.
+    pub checkpoint_dir: Option<PathBuf>,
 }
 
 impl Default for DynamicOptions {
@@ -253,6 +298,7 @@ impl Default for DynamicOptions {
             ticks_per_transfer: 0,
             migration_charge: 0.0,
             max_refinements: 0,
+            checkpoint_dir: None,
         }
     }
 }
@@ -298,6 +344,23 @@ pub struct EpochRefinement {
     pub overhead: Option<OverheadStats>,
 }
 
+/// What a worker-death recovery did (DESIGN.md §10): which machines
+/// were lost, how the fleet shrank, and how many orphaned LPs were
+/// re-homed onto the survivors before the epoch's refinement re-ran.
+#[derive(Debug, Clone)]
+pub struct RecoveryRecord {
+    /// Machines diagnosed dead, in the logical numbering the cluster
+    /// used when each one died (a second death during the retry is
+    /// recorded in the already-compacted numbering).
+    pub dead_machines: Vec<MachineId>,
+    /// Fleet size when the epoch started.
+    pub machines_before: usize,
+    /// Fleet size after the last recovery round of the epoch.
+    pub machines_after: usize,
+    /// LPs that lived on dead machines and were re-homed.
+    pub rehomed_lps: usize,
+}
+
 /// Per-epoch record of the closed loop.
 #[derive(Debug, Clone)]
 pub struct EpochReport {
@@ -330,6 +393,10 @@ pub struct EpochReport {
     pub throughput: f64,
     /// `None` on frozen (baseline) epochs and on the drain-out tail.
     pub refine: Option<EpochRefinement>,
+    /// Set when one or more workers died during this epoch's
+    /// refinement and the run restored from the last epoch-boundary
+    /// checkpoint instead of unwinding (DESIGN.md §10).
+    pub recovery: Option<RecoveryRecord>,
 }
 
 /// Aggregate result of a closed-loop run.
@@ -355,6 +422,12 @@ impl DynamicReport {
     /// Number of refinement epochs that actually ran.
     pub fn refinements(&self) -> usize {
         self.epochs.iter().filter(|e| e.refine.is_some()).count()
+    }
+
+    /// Number of epochs that survived a worker death by restoring
+    /// from the last checkpoint.
+    pub fn recoveries(&self) -> usize {
+        self.epochs.iter().filter(|e| e.recovery.is_some()).count()
     }
 
     /// Refinement epochs whose potential *rose* — Thm 4.1 says this is
@@ -419,6 +492,9 @@ impl DynamicReport {
 /// The closed-loop driver. Borrows the (topology-)immutable LP graph;
 /// owns a private weighted copy for the refinement side.
 pub struct DynamicDriver<'g> {
+    /// The immutable LP topology the engine borrows — kept so the
+    /// engine can be *rebuilt* from a checkpoint during recovery.
+    graph: &'g Graph,
     engine: SimEngine<'g>,
     lp_graph: Graph,
     machines: MachineConfig,
@@ -431,6 +507,10 @@ pub struct DynamicDriver<'g> {
     /// When attached, the distributed backend refines over this real
     /// multi-process TCP cluster instead of in-process actor threads.
     cluster: Option<ClusterLeader>,
+    /// Encoded bytes of the last epoch-boundary [`Snapshot`] —
+    /// restored from on worker death. Kept whenever a cluster is
+    /// attached or `checkpoint_dir` is set.
+    last_checkpoint: Option<Vec<u8>>,
 }
 
 impl<'g> DynamicDriver<'g> {
@@ -445,6 +525,7 @@ impl<'g> DynamicDriver<'g> {
         let engine =
             SimEngine::new(graph, machines.clone(), initial, options.sim.clone(), injections);
         DynamicDriver {
+            graph,
             engine,
             lp_graph: graph.clone(),
             machines,
@@ -455,6 +536,49 @@ impl<'g> DynamicDriver<'g> {
             transfers: 0,
             migration_ticks: 0,
             cluster: None,
+            last_checkpoint: None,
+        }
+    }
+
+    /// Resume a run from a decoded epoch-boundary [`Snapshot`] — the
+    /// `gtip dynamic --restore` entry point. `graph` must have the
+    /// snapshot's topology (use [`Snapshot::build_graph`]); the sim
+    /// options stored in the snapshot override `options.sim` so the
+    /// resumed engine is faithful to the captured one. `estimator`
+    /// supplies configuration (kind/α/dead band); its smoothing memory
+    /// is overwritten with the checkpointed state. Epoch reports
+    /// renumber from 0, but the cumulative counters (ticks, transfers,
+    /// migration charge) continue from the snapshot, so
+    /// [`DynamicReport::total_time`] stays the whole-run figure.
+    pub fn from_snapshot(
+        graph: &'g Graph,
+        snap: &Snapshot,
+        mut estimator: WeightEstimator,
+        mut options: DynamicOptions,
+    ) -> Self {
+        assert_eq!(
+            graph.node_count(),
+            snap.node_weights.len(),
+            "graph does not match the snapshot topology"
+        );
+        options.sim = snap.options.clone();
+        let machines = snap.machines();
+        estimator.import_state(snap.estimator.clone());
+        let engine =
+            SimEngine::from_state(graph, machines.clone(), options.sim.clone(), snap.engine.clone());
+        DynamicDriver {
+            graph,
+            engine,
+            lp_graph: snap.build_graph(),
+            machines,
+            estimator,
+            options,
+            epochs: Vec::new(),
+            refinements: snap.refinements as usize,
+            transfers: snap.transfers as usize,
+            migration_ticks: snap.migration_ticks,
+            cluster: None,
+            last_checkpoint: Some(snap.encode()),
         }
     }
 
@@ -481,8 +605,65 @@ impl<'g> DynamicDriver<'g> {
         &self.engine
     }
 
+    /// The current fleet — shrinks when a recovery evicts dead
+    /// machines, so report consumers must read it from here rather
+    /// than keep the pre-run config.
+    pub fn machines(&self) -> &MachineConfig {
+        &self.machines
+    }
+
+    /// The game-side graph carrying the latest measured/estimated LP
+    /// weights — the basis the final partition was refined on, and
+    /// therefore the right weighting for costing it.
+    pub fn weighted_graph(&self) -> &Graph {
+        &self.lp_graph
+    }
+
     pub fn epochs(&self) -> &[EpochReport] {
         &self.epochs
+    }
+
+    /// Capture the full resumable state of the run: engine, game-side
+    /// weighted graph, fleet, estimator memory, and the driver's
+    /// cumulative counters (DESIGN.md §10). Only valid between engine
+    /// ticks (any tick boundary; the epoch boundary is where the
+    /// driver takes its own checkpoints).
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            options: self.options.sim.clone(),
+            node_weights: self.lp_graph.node_weights().to_vec(),
+            edges: self.lp_graph.edges().collect(),
+            speeds: self.machines.speeds().to_vec(),
+            epoch: self.epochs.len() as u64,
+            refinements: self.refinements as u64,
+            transfers: self.transfers as u64,
+            migration_ticks: self.migration_ticks,
+            estimator: self.estimator.export_state(),
+            // The epoch loop is RNG-free (injections are precompiled),
+            // so there are no live streams to carry.
+            rng_streams: Vec::new(),
+            engine: self.engine.capture_state(),
+        }
+    }
+
+    /// Encoded bytes of the last epoch-boundary checkpoint, if
+    /// checkpointing is active (cluster attached or `checkpoint_dir`
+    /// set).
+    pub fn last_checkpoint(&self) -> Option<&[u8]> {
+        self.last_checkpoint.as_deref()
+    }
+
+    /// Best-effort write of an encoded snapshot into `checkpoint_dir`
+    /// (checkpointing must never kill a healthy run — failures are
+    /// reported on stderr and the in-memory copy still stands).
+    fn write_checkpoint_file(&self, name: &str, bytes: &[u8]) {
+        if let Some(dir) = &self.options.checkpoint_dir {
+            let path = dir.join(name);
+            if let Err(e) = std::fs::create_dir_all(dir).and_then(|()| std::fs::write(&path, bytes))
+            {
+                eprintln!("gtip snapshot: failed to write {}: {e}", path.display());
+            }
+        }
     }
 
     /// Potential of `part` on the current (re-measured) LP graph, under
@@ -497,8 +678,9 @@ impl<'g> DynamicDriver<'g> {
     }
 
     /// Measure → estimate → install → refine (warm start) → migrate.
-    /// Only the TCP-cluster path can fail; on error the cluster is torn
-    /// down first (Goodbye) so surviving workers exit immediately.
+    /// Only the TCP-cluster path can fail; on error the cluster is
+    /// deliberately left attached so the caller can diagnose the dead
+    /// peers and recover over the survivors.
     fn refine_once(&mut self, counters: &EpochCounters) -> Result<EpochRefinement, WireError> {
         let raw = weights::measure_epoch(&self.engine, counters);
         let estimated = self.estimator.estimate(&raw);
@@ -540,15 +722,11 @@ impl<'g> DynamicDriver<'g> {
                             .refine(&self.lp_graph, &self.machines, part);
                         match result {
                             Ok(report) => report,
-                            Err(e) => {
-                                // Tear down first so surviving workers
-                                // get a Goodbye and exit immediately
-                                // instead of waiting out EPOCH_WAIT.
-                                if let Some(cluster) = self.cluster.take() {
-                                    let _ = cluster.shutdown();
-                                }
-                                return Err(e);
-                            }
+                            // The cluster is left attached: the caller
+                            // (`try_run_epoch`) first tries to recover
+                            // from the last checkpoint, and tears it
+                            // down only when recovery is impossible.
+                            Err(e) => return Err(e),
                         }
                     } else {
                         run_distributed(
@@ -594,6 +772,142 @@ impl<'g> DynamicDriver<'g> {
         })
     }
 
+    /// Best-effort cluster teardown (Goodbye) so surviving workers
+    /// exit immediately instead of waiting out their epoch timeout.
+    fn teardown_cluster(&mut self) {
+        if let Some(cluster) = self.cluster.take() {
+            let _ = cluster.shutdown();
+        }
+    }
+
+    /// A refinement over the TCP cluster failed: diagnose which
+    /// workers died, restore the run from the last epoch-boundary
+    /// checkpoint, shrink the fleet to the survivors (renormalizing
+    /// their relative speeds), re-home the dead machines' LPs, and
+    /// re-run this epoch's refinement at K−1 over the compacted
+    /// cluster (DESIGN.md §10). Loops if another worker dies during
+    /// the retry — each round shrinks the fleet, so it terminates.
+    /// Tears the cluster down and propagates when recovery is
+    /// impossible: no checkpoint, no peer actually dead (the failure
+    /// was the leader's own), or the recovery handshake itself failed.
+    fn recover_and_refine(
+        &mut self,
+        mut err: WireError,
+    ) -> Result<(EpochRefinement, RecoveryRecord), WireError> {
+        let mut record: Option<RecoveryRecord> = None;
+        loop {
+            let Some(bytes) = self.last_checkpoint.clone() else {
+                self.teardown_cluster();
+                return Err(err);
+            };
+            let dead = match self.cluster.as_mut() {
+                Some(cluster) => match cluster.diagnose_dead() {
+                    // Every peer answered: the failure was not a
+                    // worker death, so there is nothing to recover
+                    // from — propagate the original error.
+                    Ok(dead) if dead.is_empty() => {
+                        self.teardown_cluster();
+                        return Err(err);
+                    }
+                    Ok(dead) => dead,
+                    Err(e) => {
+                        self.teardown_cluster();
+                        return Err(e);
+                    }
+                },
+                None => return Err(err),
+            };
+            let snap = match Snapshot::decode(&bytes) {
+                Ok(s) => s,
+                Err(e) => {
+                    self.teardown_cluster();
+                    return Err(WireError::Protocol(format!("checkpoint unreadable: {e}")));
+                }
+            };
+            let machines_before = snap.machine_count();
+            debug_assert!(
+                !dead.contains(&0) && dead.iter().all(|&m| m < machines_before),
+                "dead set {dead:?} out of range for {machines_before} machines"
+            );
+            // Survivors keep their relative speeds, renormalized.
+            let mut speeds: Vec<f64> = snap
+                .speeds
+                .iter()
+                .enumerate()
+                .filter(|(m, _)| !dead.contains(m))
+                .map(|(_, &s)| s)
+                .collect();
+            let total: f64 = speeds.iter().sum();
+            for s in &mut speeds {
+                *s /= total;
+            }
+            let machines_after = MachineConfig::from_normalized(speeds);
+            // Commit the survivors on the wire first (compact the
+            // endpoint, broadcast Restore, await every ack) so local
+            // state is only rebuilt once the cluster agreed.
+            if let Err(e) =
+                self.cluster.as_mut().expect("checked above").recover(&dead, &machines_after)
+            {
+                self.teardown_cluster();
+                return Err(e);
+            }
+            // Restore game-side state from the checkpoint, re-home
+            // the orphaned LPs, and rebuild the engine at K−1.
+            self.lp_graph = snap.build_graph();
+            self.estimator.import_state(snap.estimator.clone());
+            self.refinements = snap.refinements as usize;
+            self.transfers = snap.transfers as usize;
+            self.migration_ticks = snap.migration_ticks;
+            let (assignment, rehomed) =
+                rehome_assignment(&snap.engine.assignment, &dead, &self.lp_graph, &machines_after);
+            let mut state = snap.engine;
+            state.assignment = assignment;
+            self.engine = SimEngine::from_state(
+                self.graph,
+                machines_after.clone(),
+                self.options.sim.clone(),
+                state,
+            );
+            self.machines = machines_after;
+            match &mut record {
+                None => {
+                    record = Some(RecoveryRecord {
+                        dead_machines: dead.clone(),
+                        machines_before,
+                        machines_after: self.machines.count(),
+                        rehomed_lps: rehomed,
+                    })
+                }
+                Some(r) => {
+                    r.dead_machines.extend(dead.iter().copied());
+                    r.machines_after = self.machines.count();
+                    r.rehomed_lps += rehomed;
+                }
+            }
+            // Re-harvest the window the checkpoint preserved and
+            // retry the refinement over the compacted cluster.
+            // Checkpoint the restored K−1 state first: if *another*
+            // worker dies during the retry, the next round must
+            // restore in the new machine numbering.
+            let counters = self.engine.take_epoch_counters();
+            self.last_checkpoint = Some(self.snapshot().encode());
+            match self.refine_once(&counters) {
+                Ok(refinement) => {
+                    // The post-refinement state is the new epoch
+                    // boundary: `gtip dynamic --restore recovery.snap`
+                    // continues from here and (deterministically)
+                    // reaches the same final state as this run.
+                    let recovered = self.snapshot();
+                    let encoded = recovered.encode();
+                    self.write_checkpoint_file("recovery.snap", &encoded);
+                    self.last_checkpoint = Some(encoded);
+                    return Ok((refinement, record.expect("at least one recovery round")));
+                }
+                Err(e) => err = e,
+            }
+        }
+    }
+
     /// Run one epoch: up to `epoch_ticks` of simulation, then (if work
     /// remains and rebalancing is enabled) one refinement pass. Returns
     /// `Ok(false)` once the workload drained or the tick cap was hit.
@@ -616,15 +930,35 @@ impl<'g> DynamicDriver<'g> {
         // fast-forward jumps inside it so epoch windows are exact.
         let limit = tick_start.saturating_add(budget).min(self.options.sim.max_ticks);
         while self.engine.stats().ticks < limit && self.engine.step_bounded(limit) {}
+        // Epoch-boundary checkpoint — taken after the sim window but
+        // *before* the window counters are harvested, so the snapshot
+        // still holds the measurements and a restore can re-run the
+        // refinement that consumes them (DESIGN.md §10).
+        if self.cluster.is_some() || self.options.checkpoint_dir.is_some() {
+            let bytes = self.snapshot().encode();
+            self.write_checkpoint_file(&format!("epoch-{:04}.snap", self.epochs.len()), &bytes);
+            self.last_checkpoint = Some(bytes);
+        }
         let counters = self.engine.take_epoch_counters();
         let tick_end = self.engine.stats().ticks;
         let more = !self.engine.drained() && tick_end < self.options.sim.max_ticks;
 
+        let mut recovery = None;
         let refine = if more
             && self.options.epoch_ticks > 0
             && (self.options.max_refinements == 0 || self.refinements < self.options.max_refinements)
         {
-            Some(self.refine_once(&counters)?)
+            match self.refine_once(&counters) {
+                Ok(refinement) => Some(refinement),
+                // A worker died mid-refinement: restore from the
+                // checkpoint just taken and finish the epoch with the
+                // survivors instead of unwinding the whole round.
+                Err(e) => {
+                    let (refinement, rec) = self.recover_and_refine(e)?;
+                    recovery = Some(rec);
+                    Some(refinement)
+                }
+            }
         } else {
             None
         };
@@ -653,6 +987,7 @@ impl<'g> DynamicDriver<'g> {
             cross_machine_forwards: counters.cross_forwards_total(),
             throughput: counters.events_total() as f64 / window as f64,
             refine,
+            recovery,
         });
         Ok(more)
     }
@@ -1140,6 +1475,87 @@ mod tests {
         let free = DynamicOptions::default().charge_transfers(5, 0.0);
         assert_eq!(free.ticks_per_transfer, 5);
         assert_eq!(free.migration_charge, 0.0);
+    }
+
+    /// The driver-level checkpoint substrate: a snapshot taken at an
+    /// epoch boundary re-encodes byte-identically through a decode,
+    /// and a driver resumed from it finishes the run with exactly the
+    /// same cumulative stats as the uninterrupted original.
+    #[test]
+    fn driver_snapshot_restores_and_continues_identically() {
+        let (g, machines, scenario) = setup(21);
+        let mut rng = Pcg32::new(22);
+        let initial = grow_partition(&g, &machines, &mut rng);
+        let opts = options(150);
+        let mut live = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial,
+            scenario.injections.clone(),
+            WeightEstimator::ewma(0.5),
+            opts.clone(),
+        );
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+
+        let snap = live.snapshot();
+        let bytes = snap.encode();
+        let decoded = Snapshot::decode(&bytes).expect("decode");
+        assert_eq!(bytes, decoded.encode(), "save -> load -> save must be byte-identical");
+        assert!(decoded.estimator.is_some(), "two epochs must prime the EWMA");
+
+        let g2 = decoded.build_graph();
+        let mut restored =
+            DynamicDriver::from_snapshot(&g2, &decoded, WeightEstimator::ewma(0.5), opts);
+        let restored_report = restored.run();
+        let live_report = live.run();
+        assert_eq!(live_report.stats, restored_report.stats);
+        assert_eq!(live_report.transfers, restored_report.transfers);
+        assert_eq!(live_report.migration_ticks, restored_report.migration_ticks);
+        assert_eq!(live_report.total_time(), restored_report.total_time());
+        // The live run keeps its pre-checkpoint epoch reports; the
+        // restored run renumbers from the checkpoint. The tails match.
+        assert_eq!(live_report.epochs.len(), restored_report.epochs.len() + 2);
+        for (a, b) in live_report.epochs[2..].iter().zip(&restored_report.epochs) {
+            assert_eq!(a.tick_start, b.tick_start);
+            assert_eq!(a.tick_end, b.tick_end);
+            assert_eq!(a.events_processed, b.events_processed);
+            assert_eq!(a.refine.is_some(), b.refine.is_some());
+            if let (Some(ra), Some(rb)) = (&a.refine, &b.refine) {
+                assert_eq!(ra.transfers, rb.transfers);
+                assert_eq!(ra.potential_after.to_bits(), rb.potential_after.to_bits());
+            }
+        }
+    }
+
+    /// `checkpoint_dir` materializes one snapshot per epoch boundary,
+    /// each readable and byte-stable through a decode/encode cycle.
+    #[test]
+    fn checkpoint_dir_writes_epoch_snapshots() {
+        let dir = std::env::temp_dir().join(format!("gtip-ckpt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (g, machines, scenario) = setup(23);
+        let mut rng = Pcg32::new(24);
+        let mut opts = options(150);
+        opts.checkpoint_dir = Some(dir.clone());
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(report.refinements() > 0);
+        let first = dir.join("epoch-0000.snap");
+        let snap = Snapshot::read_from(&first).expect("first epoch checkpoint must exist");
+        assert_eq!(snap.epoch, 0);
+        assert_eq!(snap.machine_count(), machines.count());
+        assert_eq!(snap.encode(), std::fs::read(&first).unwrap(), "file is canonical bytes");
+        // One file per epoch boundary that was checkpointed.
+        let count = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(count, report.epochs.len());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -924,6 +924,96 @@ impl<'g> SimEngine<'g> {
         self.step_bounded(self.options.max_ticks)
     }
 
+    /// Capture the full resumable engine state in canonical order
+    /// (`sim::snapshot`). Must be called between steps (outboxes empty —
+    /// always true at an epoch boundary); the index layout (slot slab,
+    /// heap order, worklist) is *not* captured: it is re-derived
+    /// deterministically on restore, which is what makes
+    /// save→load→save byte-identical.
+    pub fn capture_state(&self) -> crate::sim::snapshot::EngineState {
+        assert!(
+            self.outbox_cancel.is_empty() && self.outbox_fwd.is_empty(),
+            "capture_state mid-tick: outboxes not drained"
+        );
+        let lps = self
+            .lps
+            .iter()
+            .map(|lp| {
+                let mut pending: Vec<(Event, WallTime)> = lp.pending_with_ready_at().collect();
+                pending.sort_by_key(|&(e, r)| crate::sim::snapshot::pending_sort_key(&e, r));
+                let mut seen: Vec<_> = lp.seen.iter().copied().collect();
+                seen.sort_unstable();
+                crate::sim::snapshot::LpState {
+                    pending,
+                    seen,
+                    local_time: lp.local_time,
+                    busy: lp.busy.map(|b| (b.event, b.done_at)),
+                    history: lp
+                        .history
+                        .iter()
+                        .map(|h| (h.event, h.forwarded_to.clone()))
+                        .collect(),
+                    rollbacks: lp.rollbacks,
+                }
+            })
+            .collect();
+        crate::sim::snapshot::EngineState {
+            stats: self.stats.clone(),
+            gvt: self.gvt,
+            assignment: self.part.assignment().to_vec(),
+            injections: self.injections.clone(),
+            epoch: self.epoch.clone(),
+            fossil_cursor: self.fossil_cursor as u64,
+            lps,
+        }
+    }
+
+    /// Rebuild an engine from a captured state. The graph must be the
+    /// one the state was captured against (weights may differ — they do
+    /// not enter engine semantics); `machines` may differ from the
+    /// capture-time fleet (elastic restore re-homes the assignment
+    /// first). Load traces are observational and restart empty.
+    pub fn from_state(
+        graph: &'g Graph,
+        machines: MachineConfig,
+        options: SimOptions,
+        state: crate::sim::snapshot::EngineState,
+    ) -> Self {
+        assert_eq!(state.lps.len(), graph.node_count(), "snapshot LP count != graph");
+        assert_eq!(state.assignment.len(), graph.node_count());
+        assert_eq!(state.epoch.events_by_lp.len(), graph.node_count());
+        assert_eq!(state.epoch.forwards_by_half_edge.len(), graph.half_edge_count());
+        let part = Partition::from_assignment(graph, machines.count(), state.assignment);
+        let mut engine = SimEngine::new(graph, machines, part, options, state.injections);
+        engine.stats = state.stats;
+        engine.gvt = state.gvt;
+        engine.epoch = state.epoch;
+        engine.fossil_cursor = (state.fossil_cursor as usize) % graph.node_count().max(1);
+        let now = engine.stats.ticks;
+        for (i, lp_state) in state.lps.into_iter().enumerate() {
+            let lp = &mut engine.lps[i];
+            lp.restore_pending(lp_state.pending, now);
+            lp.seen = lp_state.seen.into_iter().collect();
+            lp.local_time = lp_state.local_time;
+            lp.busy = lp_state.busy.map(|(event, done_at)| crate::sim::lp::Busy { event, done_at });
+            lp.history = lp_state
+                .history
+                .into_iter()
+                .map(|(event, forwarded_to)| crate::sim::lp::HistoryEntry { event, forwarded_to })
+                .collect();
+            lp.rollbacks = lp_state.rollbacks;
+        }
+        // Re-derive the active worklist: exactly the LPs that are busy
+        // or hold pending events, ascending.
+        engine.active = (0..engine.lps.len())
+            .filter(|&i| !engine.lps[i].idle_and_empty())
+            .collect();
+        for &i in &engine.active {
+            engine.is_active[i] = true;
+        }
+        engine
+    }
+
     /// Run until drained or `max_ticks`. Returns final stats.
     pub fn run_to_completion(&mut self) -> SimStats {
         while self.stats.ticks < self.options.max_ticks {
@@ -1193,6 +1283,72 @@ mod tests {
         while e.stats().ticks < 1_000 && e.step_bounded(1_000) {}
         assert_eq!(e.stats().ticks, 1_000, "jump overshot the boundary");
         assert!(!e.drained());
+    }
+
+    #[test]
+    fn capture_restore_mid_run_continues_bit_identically() {
+        let g = line_graph(10);
+        let injections: Vec<Injection> = (0..6)
+            .map(|t| Injection {
+                at_tick: t * 3,
+                lp: (t as usize * 2) % 10,
+                event: Event::injection(t + 1, t * 7, 3),
+            })
+            .collect();
+        let assignment: Vec<usize> = (0..10).map(|i| i % 2).collect();
+        let mut uninterrupted =
+            engine_on(&g, 2, assignment.clone(), injections.clone(), SimOptions::default());
+        let mut live = engine_on(&g, 2, assignment, injections, SimOptions::default());
+        for _ in 0..7 {
+            uninterrupted.step();
+            live.step();
+        }
+        let state = live.capture_state();
+        let machines = MachineConfig::homogeneous(2);
+        let mut restored = SimEngine::from_state(&g, machines, SimOptions::default(), state);
+        assert_eq!(restored.stats(), live.stats());
+        assert_eq!(restored.gvt(), live.gvt());
+        let a = uninterrupted.run_to_completion();
+        let b = restored.run_to_completion();
+        assert_eq!(a, b, "restored run diverged from uninterrupted run");
+        assert_eq!(uninterrupted.gvt(), restored.gvt());
+        assert_eq!(uninterrupted.epoch_counters(), restored.epoch_counters());
+    }
+
+    #[test]
+    fn capture_of_restored_engine_is_identical() {
+        let g = line_graph(8);
+        let injections: Vec<Injection> = (0..5)
+            .map(|t| Injection {
+                at_tick: t,
+                lp: (t as usize) % 8,
+                event: Event::injection(t + 1, t * 4, 2),
+            })
+            .collect();
+        let mut e =
+            engine_on(&g, 2, (0..8).map(|i| i % 2).collect(), injections, SimOptions::default());
+        for _ in 0..5 {
+            e.step();
+        }
+        let state = e.capture_state();
+        let restored =
+            SimEngine::from_state(&g, MachineConfig::homogeneous(2), SimOptions::default(), state);
+        let again = restored.capture_state();
+        let state2 = e.capture_state();
+        assert_eq!(state2.stats, again.stats);
+        assert_eq!(state2.gvt, again.gvt);
+        assert_eq!(state2.assignment, again.assignment);
+        assert_eq!(state2.fossil_cursor, again.fossil_cursor);
+        assert_eq!(state2.lps.len(), again.lps.len());
+        for (a, b) in state2.lps.iter().zip(again.lps.iter()) {
+            assert_eq!(a.pending.len(), b.pending.len());
+            for (&(ea, ra), &(eb, rb)) in a.pending.iter().zip(b.pending.iter()) {
+                assert_eq!((ea.thread, ea.time, ea.kind, ea.count, ra), (eb.thread, eb.time, eb.kind, eb.count, rb));
+            }
+            assert_eq!(a.seen, b.seen);
+            assert_eq!(a.local_time, b.local_time);
+            assert_eq!(a.rollbacks, b.rollbacks);
+        }
     }
 
     #[test]

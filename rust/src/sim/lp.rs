@@ -183,6 +183,14 @@ impl Lp {
     /// tick against `now` and then cleared.
     fn insert_event(&mut self, ev: Event, now: WallTime) {
         let ready_at = now + ev.tick;
+        self.insert_event_at(ev, ready_at, now);
+    }
+
+    /// Insert an event with an explicit absolute ready tick (snapshot
+    /// restore path: `ready_at` may be in the past when the LP was busy
+    /// while the event sat ready). The event's relative `tick` must
+    /// already be folded into `ready_at`; it is cleared on insertion.
+    fn insert_event_at(&mut self, ev: Event, ready_at: WallTime, now: WallTime) {
         let ev = Event { tick: 0, ..ev };
         let slot = match self.free.pop() {
             Some(s) => s,
@@ -499,6 +507,32 @@ impl Lp {
     pub fn pending_events(&self) -> impl Iterator<Item = &Event> {
         self.slots.iter().filter_map(|s| s.ev.as_ref())
     }
+
+    /// Iterate the live pending events together with their absolute
+    /// ready wall tick (arbitrary order). Snapshot capture sorts these
+    /// into the canonical `(time, kind-rank, thread, count, ready_at)`
+    /// order before serializing, so the index layout (slots, heap entry
+    /// order, generations) never leaks into the snapshot bytes.
+    pub fn pending_with_ready_at(&self) -> impl Iterator<Item = (Event, WallTime)> + '_ {
+        self.slots.iter().filter_map(|s| s.ev.map(|ev| (ev, s.ready_at)))
+    }
+
+    /// Rebuild the pending set from `(event, absolute ready tick)` pairs
+    /// at wall tick `now` (snapshot restore). The LP must be freshly
+    /// constructed: the slab is rebuilt from scratch so heap keys and
+    /// the per-thread annihilation map are re-derived deterministically
+    /// from the insertion order (callers pass the canonical sorted
+    /// order).
+    pub fn restore_pending(
+        &mut self,
+        events: impl IntoIterator<Item = (Event, WallTime)>,
+        now: WallTime,
+    ) {
+        assert!(self.live == 0 && self.slots.is_empty(), "restore into a non-empty pending set");
+        for (ev, ready_at) in events {
+            self.insert_event_at(ev, ready_at, now);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -741,6 +775,52 @@ mod tests {
             other => panic!("expected start, got {other:?}"),
         }
         assert_eq!(lp.busy.unwrap().event.thread, 7);
+    }
+
+    #[test]
+    fn restore_pending_round_trips_events_and_readiness() {
+        let mut lp = Lp::default();
+        let mut delayed = Event::injection(4, 40, 1);
+        delayed.tick = 9; // ready at 14
+        lp.receive(Event::injection(1, 30, 1), 5);
+        lp.receive(Event::injection(2, 10, 1), 5);
+        lp.receive(delayed, 5);
+        lp.seen.insert(99); // processed-history marker, restored separately
+
+        let mut items: Vec<(Event, WallTime)> = lp.pending_with_ready_at().collect();
+        items.sort_by_key(|(e, r)| (e.time, kind_rank(e.kind), e.thread, e.count, *r));
+        let mut restored = Lp::default();
+        restored.restore_pending(items.clone(), 5);
+        restored.seen = lp.seen.clone();
+        restored.local_time = lp.local_time;
+
+        assert_eq!(restored.queue_len(), lp.queue_len());
+        assert_eq!(restored.earliest_event_at(5), lp.earliest_event_at(5));
+        assert_eq!(restored.min_pending_time(), lp.min_pending_time());
+        // Both replicas drain in the same order.
+        for now in [5u64, 14] {
+            let a = match lp.start_next(now, cost, 0) {
+                StartOutcome::Started { .. } => lp.busy.unwrap().event,
+                other => panic!("{other:?}"),
+            };
+            let b = match restored.start_next(now, cost, 0) {
+                StartOutcome::Started { .. } => restored.busy.unwrap().event,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(a.thread, b.thread);
+            assert_eq!(a.time, b.time);
+            lp.busy = None;
+            restored.busy = None;
+        }
+        // A second capture from the restored LP yields the same multiset.
+        let mut again: Vec<(Event, WallTime)> = restored.pending_with_ready_at().collect();
+        again.sort_by_key(|(e, r)| (e.time, kind_rank(e.kind), e.thread, e.count, *r));
+        let mut orig: Vec<(Event, WallTime)> = lp.pending_with_ready_at().collect();
+        orig.sort_by_key(|(e, r)| (e.time, kind_rank(e.kind), e.thread, e.count, *r));
+        assert_eq!(again.len(), orig.len());
+        for ((ea, ra), (eb, rb)) in again.iter().zip(orig.iter()) {
+            assert_eq!((ea.thread, ea.time, ea.kind, ea.count, ra), (eb.thread, eb.time, eb.kind, eb.count, rb));
+        }
     }
 
     #[test]

@@ -29,7 +29,11 @@
 //! (active-LP worklist, indexed per-LP event queues, incremental GVT,
 //! tick fast-forward, optional parallel per-machine execution — see
 //! DESIGN.md §3); [`reference`] retains the naive O(N)-per-tick stepper
-//! that the equivalence suite proves it bit-identical to.
+//! that the equivalence suite proves it bit-identical to. [`snapshot`]
+//! serializes the full engine + game state to versioned, deterministic
+//! epoch-boundary checkpoints, which is what lets [`dynamic`] survive
+//! worker death by restoring and refining toward the survivors
+//! (DESIGN.md §10).
 
 pub mod driver;
 pub mod dynamic;
@@ -39,16 +43,18 @@ pub mod fuzz;
 pub mod lp;
 pub mod reference;
 pub mod scenario;
+pub mod snapshot;
 pub mod weights;
 pub mod workload;
 
 pub use dynamic::{
     CompareReport, DynamicDriver, DynamicOptions, DynamicReport, EpochReport, EstimatorKind,
-    RefineBackend, WeightEstimator,
+    RecoveryRecord, RefineBackend, WeightEstimator,
 };
 pub use engine::{EpochCounters, SimEngine, SimOptions, SimStats};
 pub use event::{Event, EventKind, ThreadId};
 pub use fuzz::{FuzzCase, FuzzFixture, FuzzOptions, FuzzOutcome, Objectives};
 pub use reference::ReferenceEngine;
 pub use scenario::{DriftGene, DriftSchedule, GeneKind, Scenario, ScenarioKind, ScenarioOptions};
+pub use snapshot::{EngineState, EstimatorState, LpState, Snapshot, SnapshotError};
 pub use workload::{FloodWorkload, WorkloadOptions};

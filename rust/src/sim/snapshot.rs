@@ -1,0 +1,870 @@
+//! Versioned, deterministic, std-only snapshots of the full engine +
+//! game state (DESIGN.md §10) — the substrate of checkpoint/restore and
+//! elastic cluster membership.
+//!
+//! A snapshot is everything needed to resume a `sim::dynamic` run
+//! bit-identically: the weighted LP graph, the machine fleet, the
+//! LP-to-machine assignment, every LP's pending/processed state, GVT,
+//! cumulative and windowed counters, the undelivered injection schedule,
+//! estimator state, driver counters, and any RNG streams (a
+//! [`Pcg32`](crate::util::rng::Pcg32) is plain `(state, inc)` data).
+//!
+//! # Determinism rules
+//!
+//! The byte encoding is canonical: encoding the same logical state
+//! always yields the same bytes, and `save → load → save` is
+//! byte-identical. Three rules make that hold:
+//!
+//! 1. **No index layout is serialized.** The engine's slot slab, lazy
+//!    heaps, and active worklist are re-derived on restore; capture
+//!    sorts per-LP pending events into the canonical
+//!    `(time, kind-rank, thread, count, ready_at)` order and `seen`
+//!    sets ascending.
+//! 2. **Fixed field order, little-endian, no padding.** Every integer
+//!    is a LE `u64`/`u32`/`u8`; every `f64` is its IEEE-754 bit pattern
+//!    (`to_bits`), so values round-trip exactly.
+//! 3. **Observational state is excluded.** Load traces restart empty on
+//!    restore; they never feed back into simulation or game decisions.
+//!
+//! The engine-side capture/restore hooks live in
+//! [`SimEngine::capture_state`](crate::sim::engine::SimEngine::capture_state)
+//! and
+//! [`SimEngine::from_state`](crate::sim::engine::SimEngine::from_state);
+//! `DynamicDriver` assembles full [`Snapshot`]s at every epoch boundary
+//! and restores from them on worker death (DESIGN.md §10).
+
+use std::fmt;
+use std::path::Path;
+
+use crate::graph::{Graph, GraphBuilder, NodeId};
+use crate::partition::MachineConfig;
+use crate::sim::engine::{EpochCounters, Injection, SimOptions, SimStats};
+use crate::sim::event::{Event, EventKind, SimTime, ThreadId, WallTime};
+
+/// Snapshot file magic: "GTSN".
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"GTSN";
+/// Current snapshot format version.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Decode/IO failure.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// Filesystem error (message includes the path).
+    Io(String),
+    /// Structurally invalid bytes.
+    Malformed(String),
+    /// Valid magic but an unsupported format version.
+    Version(u32),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(m) => write!(f, "snapshot io error: {m}"),
+            SnapshotError::Malformed(m) => write!(f, "malformed snapshot: {m}"),
+            SnapshotError::Version(v) => {
+                write!(f, "unsupported snapshot version {v} (expected {SNAPSHOT_VERSION})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// Canonical sort key for a pending event: total order over everything
+/// the simulation can observe, so serialization never depends on slab
+/// or heap layout. `ready_at` last: byte-identical duplicates that
+/// differ only in arrival tick stay distinguishable.
+pub(crate) fn pending_sort_key(
+    e: &Event,
+    ready_at: WallTime,
+) -> (SimTime, u8, ThreadId, u32, WallTime) {
+    let rank = match e.kind {
+        EventKind::Rollback => 0,
+        _ => 1,
+    };
+    (e.time, rank, e.thread, e.count, ready_at)
+}
+
+/// Captured state of one LP (canonical order; see module docs).
+#[derive(Debug, Clone)]
+pub struct LpState {
+    /// Pending events with absolute ready ticks, canonically sorted.
+    pub pending: Vec<(Event, WallTime)>,
+    /// Threads seen (pending or processed), ascending. Not derivable
+    /// from the rest: it outlives fossil-collected history.
+    pub seen: Vec<ThreadId>,
+    pub local_time: SimTime,
+    /// Busy event and its absolute completion tick.
+    pub busy: Option<(Event, WallTime)>,
+    /// Processed-event history in retirement order, each with the
+    /// neighbors it forwarded to.
+    pub history: Vec<(Event, Vec<NodeId>)>,
+    pub rollbacks: u64,
+}
+
+/// Captured resumable state of a [`SimEngine`](crate::sim::engine::SimEngine).
+#[derive(Debug, Clone)]
+pub struct EngineState {
+    pub stats: SimStats,
+    pub gvt: SimTime,
+    pub assignment: Vec<usize>,
+    /// Undelivered injections in engine order (descending `at_tick`).
+    pub injections: Vec<Injection>,
+    pub epoch: EpochCounters,
+    pub fossil_cursor: u64,
+    pub lps: Vec<LpState>,
+}
+
+/// Captured weight-estimator state (the EWMA/hysteresis memory of
+/// `sim::dynamic::WeightEstimator`; configuration lives in options).
+#[derive(Debug, Clone)]
+pub struct EstimatorState {
+    pub node_state: Vec<f64>,
+    pub edge_state: Vec<f64>,
+    pub node_out: Vec<f64>,
+    pub edge_out: Vec<f64>,
+    pub primed: bool,
+}
+
+/// A complete epoch-boundary snapshot of a `sim::dynamic` run.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Engine options (needed to rebuild an engine for `--restore`).
+    pub options: SimOptions,
+    /// Game-side node weights (the driver's weighted LP graph).
+    pub node_weights: Vec<f64>,
+    /// Edges `(u, v, w)` with game-side weights, in graph edge order.
+    pub edges: Vec<(NodeId, NodeId, f64)>,
+    /// Normalized machine speeds (sum 1); `speeds.len()` is K.
+    pub speeds: Vec<f64>,
+    /// Epochs completed at capture time.
+    pub epoch: u64,
+    /// Driver cumulative counters.
+    pub refinements: u64,
+    pub transfers: u64,
+    pub migration_ticks: u64,
+    /// Estimator memory (absent before the first epoch primes it).
+    pub estimator: Option<EstimatorState>,
+    /// RNG streams as `Pcg32::state_parts()` pairs. The epoch loop
+    /// itself is RNG-free (injections are precompiled), so this is
+    /// empty for `DynamicDriver` snapshots; the slot exists so drivers
+    /// that do carry generators snapshot them losslessly.
+    pub rng_streams: Vec<(u64, u64)>,
+    pub engine: EngineState,
+}
+
+// ---------------------------------------------------------------------
+// Encoding primitives
+// ---------------------------------------------------------------------
+
+fn put_u8(b: &mut Vec<u8>, v: u8) {
+    b.push(v);
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_event(b: &mut Vec<u8>, e: &Event) {
+    put_u64(b, e.thread);
+    put_u64(b, e.time);
+    put_u8(
+        b,
+        match e.kind {
+            EventKind::ProcessForward => 0,
+            EventKind::ProcessOnly => 1,
+            EventKind::Rollback => 2,
+        },
+    );
+    put_u64(b, e.tick);
+    put_u32(b, e.count);
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Reader { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], SnapshotError> {
+        if self.bytes.len() - self.pos < n {
+            return Err(SnapshotError::Malformed(format!(
+                "truncated while reading {what} at offset {}",
+                self.pos
+            )));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, SnapshotError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, SnapshotError> {
+        let s = self.take(4, what)?;
+        Ok(u32::from_le_bytes(s.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, SnapshotError> {
+        let s = self.take(8, what)?;
+        Ok(u64::from_le_bytes(s.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64, SnapshotError> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Read a length prefix, sanity-checking it against the bytes that
+    /// remain (each element needs at least `min_elem_bytes`), so a
+    /// corrupt count cannot trigger an absurd allocation.
+    fn len(&mut self, min_elem_bytes: usize, what: &str) -> Result<usize, SnapshotError> {
+        let n = self.u64(what)?;
+        let n = usize::try_from(n)
+            .map_err(|_| SnapshotError::Malformed(format!("{what} count {n} overflows usize")))?;
+        let remaining = self.bytes.len() - self.pos;
+        if n.saturating_mul(min_elem_bytes.max(1)) > remaining {
+            return Err(SnapshotError::Malformed(format!(
+                "{what} count {n} exceeds remaining {remaining} bytes"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn event(&mut self, what: &str) -> Result<Event, SnapshotError> {
+        let thread = self.u64(what)?;
+        let time = self.u64(what)?;
+        let kind = match self.u8(what)? {
+            0 => EventKind::ProcessForward,
+            1 => EventKind::ProcessOnly,
+            2 => EventKind::Rollback,
+            k => {
+                return Err(SnapshotError::Malformed(format!("{what}: unknown event kind {k}")))
+            }
+        };
+        let tick = self.u64(what)?;
+        let count = self.u32(what)?;
+        Ok(Event { thread, time, kind, tick, count })
+    }
+
+    fn done(self) -> Result<(), SnapshotError> {
+        if self.pos != self.bytes.len() {
+            return Err(SnapshotError::Malformed(format!(
+                "{} trailing bytes after snapshot",
+                self.bytes.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+const EVENT_BYTES: usize = 8 + 8 + 1 + 8 + 4;
+
+impl Snapshot {
+    /// Serialize to the canonical byte encoding.
+    pub fn encode(&self) -> Vec<u8> {
+        let b = &mut Vec::new();
+        b.extend_from_slice(&SNAPSHOT_MAGIC);
+        put_u32(b, SNAPSHOT_VERSION);
+
+        // Engine options.
+        put_u64(b, self.options.base_process_time);
+        put_u64(b, self.options.rollback_process_time);
+        put_u64(b, self.options.inter_machine_delay);
+        put_u64(b, self.options.intra_machine_delay);
+        put_u64(b, self.options.hop_latency);
+        put_u64(b, self.options.trace_every);
+        put_u64(b, self.options.max_ticks);
+        put_u64(b, self.options.parallelism as u64);
+        put_u64(b, self.options.parallel_min_active as u64);
+
+        // Weighted graph.
+        put_u64(b, self.node_weights.len() as u64);
+        for &w in &self.node_weights {
+            put_f64(b, w);
+        }
+        put_u64(b, self.edges.len() as u64);
+        for &(u, v, w) in &self.edges {
+            put_u64(b, u as u64);
+            put_u64(b, v as u64);
+            put_f64(b, w);
+        }
+
+        // Machines.
+        put_u64(b, self.speeds.len() as u64);
+        for &s in &self.speeds {
+            put_f64(b, s);
+        }
+
+        // Driver counters.
+        put_u64(b, self.epoch);
+        put_u64(b, self.refinements);
+        put_u64(b, self.transfers);
+        put_u64(b, self.migration_ticks);
+
+        // Estimator memory.
+        match &self.estimator {
+            None => put_u8(b, 0),
+            Some(est) => {
+                put_u8(b, 1);
+                for vs in [&est.node_state, &est.edge_state, &est.node_out, &est.edge_out] {
+                    put_u64(b, vs.len() as u64);
+                    for &v in vs {
+                        put_f64(b, v);
+                    }
+                }
+                put_u8(b, u8::from(est.primed));
+            }
+        }
+
+        // RNG streams.
+        put_u64(b, self.rng_streams.len() as u64);
+        for &(state, inc) in &self.rng_streams {
+            put_u64(b, state);
+            put_u64(b, inc);
+        }
+
+        // Engine state.
+        let e = &self.engine;
+        put_u64(b, e.stats.ticks);
+        put_u64(b, e.stats.events_processed);
+        put_u64(b, e.stats.events_forwarded);
+        put_u64(b, e.stats.cross_machine_forwards);
+        put_u64(b, e.stats.rollbacks);
+        put_u64(b, e.stats.antimessages_sent);
+        put_u8(b, u8::from(e.stats.truncated));
+        put_u64(b, e.gvt);
+        put_u64(b, e.assignment.len() as u64);
+        for &m in &e.assignment {
+            put_u64(b, m as u64);
+        }
+        put_u64(b, e.injections.len() as u64);
+        for inj in &e.injections {
+            put_u64(b, inj.at_tick);
+            put_u64(b, inj.lp as u64);
+            put_event(b, &inj.event);
+        }
+        put_u64(b, e.epoch.ticks);
+        for vs in [
+            &e.epoch.events_by_lp,
+            &e.epoch.rollbacks_by_lp,
+            &e.epoch.cross_forwards_by_lp,
+            &e.epoch.forwards_by_half_edge,
+        ] {
+            put_u64(b, vs.len() as u64);
+            for &v in vs {
+                put_u64(b, v);
+            }
+        }
+        put_u64(b, e.fossil_cursor);
+        put_u64(b, e.lps.len() as u64);
+        for lp in &e.lps {
+            put_u64(b, lp.pending.len() as u64);
+            for (ev, ready_at) in &lp.pending {
+                put_event(b, ev);
+                put_u64(b, *ready_at);
+            }
+            put_u64(b, lp.seen.len() as u64);
+            for &t in &lp.seen {
+                put_u64(b, t);
+            }
+            put_u64(b, lp.local_time);
+            match &lp.busy {
+                None => put_u8(b, 0),
+                Some((ev, done_at)) => {
+                    put_u8(b, 1);
+                    put_event(b, ev);
+                    put_u64(b, *done_at);
+                }
+            }
+            put_u64(b, lp.history.len() as u64);
+            for (ev, fwd) in &lp.history {
+                put_event(b, ev);
+                put_u64(b, fwd.len() as u64);
+                for &nb in fwd {
+                    put_u64(b, nb as u64);
+                }
+            }
+            put_u64(b, lp.rollbacks);
+        }
+        std::mem::take(b)
+    }
+
+    /// Decode from bytes, validating structure and cross-field
+    /// consistency (assignment bounds, counter shapes, speed sanity).
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot, SnapshotError> {
+        let mut r = Reader::new(bytes);
+        let magic = r.take(4, "magic")?;
+        if magic != SNAPSHOT_MAGIC {
+            return Err(SnapshotError::Malformed("bad magic (not a GTSN snapshot)".into()));
+        }
+        let version = r.u32("version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(SnapshotError::Version(version));
+        }
+
+        let options = SimOptions {
+            base_process_time: r.u64("base_process_time")?,
+            rollback_process_time: r.u64("rollback_process_time")?,
+            inter_machine_delay: r.u64("inter_machine_delay")?,
+            intra_machine_delay: r.u64("intra_machine_delay")?,
+            hop_latency: r.u64("hop_latency")?,
+            trace_every: r.u64("trace_every")?,
+            max_ticks: r.u64("max_ticks")?,
+            parallelism: r.u64("parallelism")? as usize,
+            parallel_min_active: r.u64("parallel_min_active")? as usize,
+        };
+
+        let n = r.len(8, "node weights")?;
+        let mut node_weights = Vec::with_capacity(n);
+        for _ in 0..n {
+            let w = r.f64("node weight")?;
+            if !w.is_finite() {
+                return Err(SnapshotError::Malformed("non-finite node weight".into()));
+            }
+            node_weights.push(w);
+        }
+        let m = r.len(24, "edges")?;
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let u = r.u64("edge u")? as usize;
+            let v = r.u64("edge v")? as usize;
+            let w = r.f64("edge weight")?;
+            if u >= n || v >= n || u == v {
+                return Err(SnapshotError::Malformed(format!("edge ({u}, {v}) out of range")));
+            }
+            if !w.is_finite() {
+                return Err(SnapshotError::Malformed("non-finite edge weight".into()));
+            }
+            edges.push((u, v, w));
+        }
+
+        let k = r.len(8, "speeds")?;
+        if k == 0 {
+            return Err(SnapshotError::Malformed("zero machines".into()));
+        }
+        let mut speeds = Vec::with_capacity(k);
+        for _ in 0..k {
+            let s = r.f64("speed")?;
+            if !(s.is_finite() && s > 0.0) {
+                return Err(SnapshotError::Malformed(format!("invalid machine speed {s}")));
+            }
+            speeds.push(s);
+        }
+        let total: f64 = speeds.iter().sum();
+        if (total - 1.0).abs() > 1e-6 {
+            return Err(SnapshotError::Malformed(format!(
+                "machine speeds not normalized (sum {total})"
+            )));
+        }
+
+        let epoch = r.u64("epoch")?;
+        let refinements = r.u64("refinements")?;
+        let transfers = r.u64("transfers")?;
+        let migration_ticks = r.u64("migration_ticks")?;
+
+        let estimator = match r.u8("estimator flag")? {
+            0 => None,
+            1 => {
+                let mut vecs: [Vec<f64>; 4] = Default::default();
+                for vs in vecs.iter_mut() {
+                    let len = r.len(8, "estimator vector")?;
+                    vs.reserve(len);
+                    for _ in 0..len {
+                        vs.push(r.f64("estimator value")?);
+                    }
+                }
+                let [node_state, edge_state, node_out, edge_out] = vecs;
+                let primed = r.u8("estimator primed")? != 0;
+                Some(EstimatorState { node_state, edge_state, node_out, edge_out, primed })
+            }
+            f => return Err(SnapshotError::Malformed(format!("bad estimator flag {f}"))),
+        };
+
+        let nrng = r.len(16, "rng streams")?;
+        let mut rng_streams = Vec::with_capacity(nrng);
+        for _ in 0..nrng {
+            let state = r.u64("rng state")?;
+            let inc = r.u64("rng inc")?;
+            if inc & 1 != 1 {
+                return Err(SnapshotError::Malformed("even rng stream selector".into()));
+            }
+            rng_streams.push((state, inc));
+        }
+
+        let stats = SimStats {
+            ticks: r.u64("ticks")?,
+            events_processed: r.u64("events_processed")?,
+            events_forwarded: r.u64("events_forwarded")?,
+            cross_machine_forwards: r.u64("cross_machine_forwards")?,
+            rollbacks: r.u64("rollbacks")?,
+            antimessages_sent: r.u64("antimessages_sent")?,
+            truncated: r.u8("truncated")? != 0,
+        };
+        let gvt = r.u64("gvt")?;
+
+        let an = r.len(8, "assignment")?;
+        if an != n {
+            return Err(SnapshotError::Malformed(format!("assignment len {an} != {n} nodes")));
+        }
+        let mut assignment = Vec::with_capacity(an);
+        for _ in 0..an {
+            let a = r.u64("assignment entry")? as usize;
+            if a >= k {
+                return Err(SnapshotError::Malformed(format!("assignment {a} >= {k} machines")));
+            }
+            assignment.push(a);
+        }
+
+        let ninj = r.len(16 + EVENT_BYTES, "injections")?;
+        let mut injections = Vec::with_capacity(ninj);
+        for _ in 0..ninj {
+            let at_tick = r.u64("injection tick")?;
+            let lp = r.u64("injection lp")? as usize;
+            if lp >= n {
+                return Err(SnapshotError::Malformed(format!("injection lp {lp} >= {n}")));
+            }
+            let event = r.event("injection event")?;
+            injections.push(Injection { at_tick, lp, event });
+        }
+
+        let epoch_ticks = r.u64("epoch ticks")?;
+        let mut epoch_vecs: [Vec<u64>; 4] = Default::default();
+        for (idx, vs) in epoch_vecs.iter_mut().enumerate() {
+            let len = r.len(8, "epoch counter vector")?;
+            if idx < 3 && len != n {
+                return Err(SnapshotError::Malformed(format!(
+                    "per-LP counter len {len} != {n} nodes"
+                )));
+            }
+            vs.reserve(len);
+            for _ in 0..len {
+                vs.push(r.u64("epoch counter")?);
+            }
+        }
+        let [events_by_lp, rollbacks_by_lp, cross_forwards_by_lp, forwards_by_half_edge] =
+            epoch_vecs;
+        if forwards_by_half_edge.len() != 2 * m {
+            return Err(SnapshotError::Malformed(format!(
+                "half-edge counter len {} != {} half-edges",
+                forwards_by_half_edge.len(),
+                2 * m
+            )));
+        }
+        let epoch_counters = EpochCounters {
+            ticks: epoch_ticks,
+            events_by_lp,
+            rollbacks_by_lp,
+            cross_forwards_by_lp,
+            forwards_by_half_edge,
+        };
+
+        let fossil_cursor = r.u64("fossil cursor")?;
+        let nlp = r.len(8 * 5, "lps")?;
+        if nlp != n {
+            return Err(SnapshotError::Malformed(format!("lp count {nlp} != {n} nodes")));
+        }
+        let mut lps = Vec::with_capacity(nlp);
+        for _ in 0..nlp {
+            let np = r.len(EVENT_BYTES + 8, "pending events")?;
+            let mut pending = Vec::with_capacity(np);
+            for _ in 0..np {
+                let ev = r.event("pending event")?;
+                let ready_at = r.u64("pending ready_at")?;
+                pending.push((ev, ready_at));
+            }
+            let ns = r.len(8, "seen threads")?;
+            let mut seen = Vec::with_capacity(ns);
+            for _ in 0..ns {
+                seen.push(r.u64("seen thread")?);
+            }
+            let local_time = r.u64("local_time")?;
+            let busy = match r.u8("busy flag")? {
+                0 => None,
+                1 => {
+                    let ev = r.event("busy event")?;
+                    let done_at = r.u64("busy done_at")?;
+                    Some((ev, done_at))
+                }
+                f => return Err(SnapshotError::Malformed(format!("bad busy flag {f}"))),
+            };
+            let nh = r.len(EVENT_BYTES + 8, "history entries")?;
+            let mut history = Vec::with_capacity(nh);
+            for _ in 0..nh {
+                let ev = r.event("history event")?;
+                let nf = r.len(8, "forwarded_to")?;
+                let mut fwd = Vec::with_capacity(nf);
+                for _ in 0..nf {
+                    let nb = r.u64("forwarded_to node")? as usize;
+                    if nb >= n {
+                        return Err(SnapshotError::Malformed(format!(
+                            "forwarded_to node {nb} >= {n}"
+                        )));
+                    }
+                    fwd.push(nb);
+                }
+                history.push((ev, fwd));
+            }
+            let rollbacks = r.u64("lp rollbacks")?;
+            lps.push(LpState { pending, seen, local_time, busy, history, rollbacks });
+        }
+        r.done()?;
+
+        Ok(Snapshot {
+            options,
+            node_weights,
+            edges,
+            speeds,
+            epoch,
+            refinements,
+            transfers,
+            migration_ticks,
+            estimator,
+            rng_streams,
+            engine: EngineState {
+                stats,
+                gvt,
+                assignment,
+                injections,
+                epoch: epoch_counters,
+                fossil_cursor,
+                lps,
+            },
+        })
+    }
+
+    /// Write the encoded snapshot to `path`.
+    pub fn write_to(&self, path: &Path) -> Result<(), SnapshotError> {
+        std::fs::write(path, self.encode())
+            .map_err(|e| SnapshotError::Io(format!("{}: {e}", path.display())))
+    }
+
+    /// Read and decode a snapshot from `path`.
+    pub fn read_from(path: &Path) -> Result<Snapshot, SnapshotError> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| SnapshotError::Io(format!("{}: {e}", path.display())))?;
+        Snapshot::decode(&bytes)
+    }
+
+    /// Number of machines in the snapshot fleet.
+    pub fn machine_count(&self) -> usize {
+        self.speeds.len()
+    }
+
+    /// Rebuild the weighted LP graph (identical structure + game-side
+    /// weights as at capture time).
+    pub fn build_graph(&self) -> Graph {
+        let mut b = GraphBuilder::with_nodes(self.node_weights.len());
+        for &(u, v, w) in &self.edges {
+            b.add_edge(u, v, w);
+        }
+        for (i, &w) in self.node_weights.iter().enumerate() {
+            b.set_node_weight(i, w);
+        }
+        b.build()
+    }
+
+    /// Rebuild the machine fleet, adopting stored speeds verbatim.
+    pub fn machines(&self) -> MachineConfig {
+        MachineConfig::from_normalized(self.speeds.clone())
+    }
+
+    /// Human-readable summary (`gtip snapshot --inspect`).
+    pub fn summary(&self) -> String {
+        let pending: usize = self.engine.lps.iter().map(|l| l.pending.len()).sum();
+        let busy = self.engine.lps.iter().filter(|l| l.busy.is_some()).count();
+        let history: usize = self.engine.lps.iter().map(|l| l.history.len()).sum();
+        format!(
+            "snapshot v{} | epoch {} | {} LPs, {} edges, {} machines\n\
+             tick {} | gvt {} | {} events processed, {} rollbacks\n\
+             pending events {} | busy LPs {} | history entries {} | injections left {}\n\
+             driver: {} refinements, {} transfers, {} migration ticks | estimator {} | rng streams {}",
+            SNAPSHOT_VERSION,
+            self.epoch,
+            self.node_weights.len(),
+            self.edges.len(),
+            self.speeds.len(),
+            self.engine.stats.ticks,
+            self.engine.gvt,
+            self.engine.stats.events_processed,
+            self.engine.stats.rollbacks,
+            pending,
+            busy,
+            history,
+            self.engine.injections.len(),
+            self.refinements,
+            self.transfers,
+            self.migration_ticks,
+            if self.estimator.is_some() { "primed" } else { "absent" },
+            self.rng_streams.len(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::partition::Partition;
+    use crate::sim::engine::SimEngine;
+
+    fn fixture_snapshot() -> Snapshot {
+        let mut b = GraphBuilder::with_nodes(6);
+        b.add_edge(0, 1, 1.5).add_edge(1, 2, 2.0).add_edge(2, 3, 0.5);
+        b.add_edge(3, 4, 1.0).add_edge(4, 5, 3.0);
+        let g = b.build();
+        let machines = MachineConfig::homogeneous(2);
+        let part = Partition::from_assignment(&g, 2, vec![0, 0, 0, 1, 1, 1]);
+        let injections: Vec<Injection> = (0..4)
+            .map(|t| Injection {
+                at_tick: t * 2,
+                lp: (t as usize) % 6,
+                event: Event::injection(t + 1, t * 5, 2),
+            })
+            .collect();
+        let mut engine = SimEngine::new(&g, machines, part, SimOptions::default(), injections);
+        for _ in 0..6 {
+            engine.step();
+        }
+        Snapshot {
+            options: SimOptions::default(),
+            node_weights: g.node_weights().to_vec(),
+            edges: g.edges().collect(),
+            speeds: vec![0.5, 0.5],
+            epoch: 3,
+            refinements: 7,
+            transfers: 11,
+            migration_ticks: 42,
+            estimator: Some(EstimatorState {
+                node_state: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                edge_state: vec![0.25; 5],
+                node_out: vec![1.5; 6],
+                edge_out: vec![0.75; 5],
+                primed: true,
+            }),
+            rng_streams: vec![(12345, 99 | 1)],
+            engine: engine.capture_state(),
+        }
+    }
+
+    #[test]
+    fn save_load_save_is_byte_identical() {
+        let snap = fixture_snapshot();
+        let bytes = snap.encode();
+        let decoded = Snapshot::decode(&bytes).expect("decode");
+        let bytes2 = decoded.encode();
+        assert_eq!(bytes, bytes2, "save -> load -> save must be byte-identical");
+        // And once more through a restored engine.
+        let g = decoded.build_graph();
+        let engine = SimEngine::from_state(
+            &g,
+            decoded.machines(),
+            decoded.options.clone(),
+            decoded.engine.clone(),
+        );
+        let recaptured = Snapshot { engine: engine.capture_state(), ..decoded.clone() };
+        assert_eq!(bytes, recaptured.encode(), "capture of a restored engine must re-encode identically");
+    }
+
+    #[test]
+    fn restored_engine_continues_identically() {
+        let snap = fixture_snapshot();
+        let bytes = snap.encode();
+        let decoded = Snapshot::decode(&bytes).expect("decode");
+        let g = decoded.build_graph();
+        let mut restored =
+            SimEngine::from_state(&g, decoded.machines(), decoded.options.clone(), decoded.engine);
+
+        // Uninterrupted twin from the same construction path.
+        let g2 = snap.build_graph();
+        let mut twin = SimEngine::from_state(
+            &g2,
+            snap.machines(),
+            snap.options.clone(),
+            snap.engine.clone(),
+        );
+        let a = restored.run_to_completion();
+        let b = twin.run_to_completion();
+        assert_eq!(a, b);
+        assert_eq!(restored.gvt(), twin.gvt());
+    }
+
+    #[test]
+    fn decode_rejects_bad_magic_version_and_truncation() {
+        let snap = fixture_snapshot();
+        let bytes = snap.encode();
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(matches!(Snapshot::decode(&bad), Err(SnapshotError::Malformed(_))));
+
+        let mut badv = bytes.clone();
+        badv[4] = 0xFF;
+        assert!(matches!(Snapshot::decode(&badv), Err(SnapshotError::Version(_))));
+
+        for cut in [3usize, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                Snapshot::decode(&bytes[..cut]).is_err(),
+                "truncation at {cut} must not decode"
+            );
+        }
+
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(matches!(Snapshot::decode(&trailing), Err(SnapshotError::Malformed(_))));
+    }
+
+    #[test]
+    fn decode_rejects_inconsistent_fields() {
+        let snap = fixture_snapshot();
+
+        let mut bad_speed = snap.clone();
+        bad_speed.speeds = vec![0.9, 0.9];
+        assert!(Snapshot::decode(&bad_speed.encode()).is_err(), "unnormalized speeds");
+
+        let mut bad_assign = snap.clone();
+        bad_assign.engine.assignment[0] = 99;
+        assert!(Snapshot::decode(&bad_assign.encode()).is_err(), "assignment out of range");
+
+        let mut bad_rng = snap.clone();
+        bad_rng.rng_streams = vec![(1, 2)];
+        assert!(Snapshot::decode(&bad_rng.encode()).is_err(), "even rng inc");
+    }
+
+    #[test]
+    fn graph_round_trip_preserves_structure_and_weights() {
+        let snap = fixture_snapshot();
+        let g = snap.build_graph();
+        assert_eq!(g.node_count(), snap.node_weights.len());
+        assert_eq!(g.edge_count(), snap.edges.len());
+        for &(u, v, w) in &snap.edges {
+            assert_eq!(g.edge_weight(u, v), Some(w));
+        }
+        for (i, &w) in snap.node_weights.iter().enumerate() {
+            assert_eq!(g.node_weight(i), w);
+        }
+    }
+
+    #[test]
+    fn summary_mentions_key_fields() {
+        let snap = fixture_snapshot();
+        let s = snap.summary();
+        assert!(s.contains("snapshot v1"));
+        assert!(s.contains("epoch 3"));
+        assert!(s.contains("2 machines"));
+    }
+}

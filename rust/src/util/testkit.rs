@@ -247,27 +247,53 @@ impl TcpClusterHarness {
     /// Spawn `gtip serve` workers for machines `1..k`. The workers dial
     /// with retry+backoff, so spawning before the leader binds is fine.
     pub fn spawn(gtip_bin: &std::path::Path, k: usize) -> std::io::Result<TcpClusterHarness> {
+        Self::spawn_customized(gtip_bin, k, |_, _| {})
+    }
+
+    /// [`TcpClusterHarness::spawn`], with a per-worker hook over the
+    /// command before it launches — the recovery tests use it to plant
+    /// a `GTIP_SERVE_DIE` fault in one chosen worker.
+    pub fn spawn_customized(
+        gtip_bin: &std::path::Path,
+        k: usize,
+        customize: impl Fn(usize, &mut std::process::Command),
+    ) -> std::io::Result<TcpClusterHarness> {
         assert!(k >= 2, "a cluster needs a leader and at least one worker");
         let peers = Self::reserve_loopback_peers(k);
         let peers_arg = peers.join(",");
         let mut children = Vec::with_capacity(k - 1);
         for machine in 1..k {
-            children.push(
-                std::process::Command::new(gtip_bin)
-                    .args(["serve", "--machine-id", &machine.to_string(), "--peers", &peers_arg])
-                    .stdout(std::process::Stdio::null())
-                    .spawn()?,
-            );
+            let mut cmd = std::process::Command::new(gtip_bin);
+            cmd.args(["serve", "--machine-id", &machine.to_string(), "--peers", &peers_arg])
+                .stdout(std::process::Stdio::null());
+            customize(machine, &mut cmd);
+            children.push(cmd.spawn()?);
         }
         Ok(TcpClusterHarness { peers, children })
     }
 
     /// Wait for every worker to exit cleanly (they do after the
     /// leader's Goodbye); panics on a non-zero exit status.
-    pub fn join(mut self) {
-        for mut c in self.children.drain(..) {
+    pub fn join(self) {
+        self.join_expecting_deaths(&[]);
+    }
+
+    /// [`TcpClusterHarness::join`] for clusters where some workers
+    /// were *meant* to die: machines in `killed` must exit with the
+    /// `GTIP_SERVE_DIE` code 86, every survivor must exit cleanly.
+    pub fn join_expecting_deaths(mut self, killed: &[usize]) {
+        for (i, mut c) in self.children.drain(..).enumerate() {
+            let machine = i + 1;
             let status = c.wait().expect("waiting on serve worker");
-            assert!(status.success(), "serve worker exited with {status}");
+            if killed.contains(&machine) {
+                assert_eq!(
+                    status.code(),
+                    Some(86),
+                    "machine {machine} should have died via GTIP_SERVE_DIE, got {status}"
+                );
+            } else {
+                assert!(status.success(), "surviving worker {machine} exited with {status}");
+            }
         }
     }
 }

@@ -1,0 +1,194 @@
+//! Kill-a-worker recovery tests over real `gtip serve` processes
+//! (DESIGN.md §10): a worker is planted with a `GTIP_SERVE_DIE` fault
+//! and murdered at a chosen protocol state — right after `Setup`,
+//! mid-epoch on an `EpochBegin`, or at the `RoundStats` barrier — and
+//! the closed loop must restore from the last epoch-boundary
+//! checkpoint, evict exactly the dead machine, and finish the run with
+//! the K−1 survivors instead of unwinding. The mid-epoch case also
+//! pins the checkpoint substrate: every emitted `.snap` re-encodes
+//! byte-identically, and a fresh driver restored from `recovery.snap`
+//! reaches exactly the live run's final state.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use gtip::coordinator::net::ClusterLeader;
+use gtip::coordinator::DistributedOptions;
+use gtip::partition::global_cost;
+use gtip::sim::{
+    DynamicDriver, DynamicOptions, DynamicReport, RefineBackend, ScenarioKind, SimOptions,
+    Snapshot, WeightEstimator,
+};
+use gtip::util::testkit::{ScenarioFixture, TcpClusterHarness};
+
+/// Everything a kill scenario leaves behind for further assertions.
+struct KillRun {
+    report: DynamicReport,
+    /// Final LP assignment of the recovered live run.
+    final_assignment: Vec<usize>,
+    /// Final (renormalized) survivor speeds.
+    final_speeds: Vec<f64>,
+    checkpoint_dir: PathBuf,
+}
+
+/// Run the closed loop over a 3-machine cluster with `GTIP_SERVE_DIE`
+/// planted in `victim`, and assert the shared recovery contract: the
+/// run completes, exactly one epoch recovered, exactly the victim was
+/// evicted, the fleet shrank 3 → 2, and the victim's process exited
+/// with the intentional-death code while the survivor exited cleanly.
+fn run_with_planted_death(tag: &str, die: &str, victim: usize, seed: u64) -> KillRun {
+    let fixture = ScenarioFixture::new(ScenarioKind::HotspotShift, seed)
+        .nodes(120)
+        .machines(3)
+        .threads(60)
+        .horizon(900)
+        .build();
+    let dir = std::env::temp_dir().join(format!("gtip-recovery-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+        epoch_ticks: 200,
+        backend: RefineBackend::Distributed,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+
+    let bin = std::path::Path::new(env!("CARGO_BIN_EXE_gtip"));
+    let harness = TcpClusterHarness::spawn_customized(bin, 3, |machine, cmd| {
+        if machine == victim {
+            cmd.env("GTIP_SERVE_DIE", die);
+        }
+    })
+    .expect("spawning serve workers");
+    let leader = ClusterLeader::connect(
+        &harness.peers,
+        DistributedOptions { recv_timeout: Duration::from_secs(2), ..Default::default() },
+        Duration::from_secs(30),
+    )
+    .expect("leading the mesh");
+
+    let mut driver = DynamicDriver::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        fixture.scenario.injections.clone(),
+        WeightEstimator::instantaneous(),
+        options,
+    );
+    driver.attach_cluster(leader).expect("broadcasting fixture");
+    let report = driver.try_run().expect("the run must survive the planted worker death");
+
+    assert_eq!(report.recoveries(), 1, "{tag}: exactly one epoch should have recovered");
+    let recovery = report
+        .epochs
+        .iter()
+        .find_map(|e| e.recovery.as_ref())
+        .expect("a recovery record on the recovered epoch");
+    assert_eq!(recovery.dead_machines, vec![victim], "{tag}: wrong machine evicted");
+    assert_eq!(recovery.machines_before, 3, "{tag}");
+    assert_eq!(recovery.machines_after, 2, "{tag}");
+    assert_eq!(driver.machines().count(), 2, "{tag}: fleet must shrink to the survivors");
+    assert!(
+        (driver.machines().speeds().iter().sum::<f64>() - 1.0).abs() < 1e-9,
+        "{tag}: survivor speeds must be renormalized"
+    );
+    assert!(!report.stats.truncated, "{tag}: the workload must drain fully after recovery");
+    // Every surviving LP landed on a surviving machine.
+    let assignment = driver.engine().partition().assignment().to_vec();
+    assert!(assignment.iter().all(|&m| m < 2), "{tag}: LP homed on an evicted machine");
+
+    harness.join_expecting_deaths(&[victim]);
+    KillRun {
+        final_speeds: driver.machines().speeds().to_vec(),
+        final_assignment: assignment,
+        report,
+        checkpoint_dir: dir,
+    }
+}
+
+/// A worker killed on `EpochBegin` of the *second* refinement round:
+/// recovery restores the mid-run checkpoint (not the initial state),
+/// and the `.snap` artifacts it leaves behind are canonical — each one
+/// byte-stable through decode/encode, and `recovery.snap` replays to
+/// exactly the live run's final state on a from-scratch driver.
+#[test]
+fn worker_death_mid_epoch_recovers_from_checkpoint() {
+    let run = run_with_planted_death("mid-epoch", "epoch:1", 1, 41);
+    assert!(
+        run.report.epochs[1].recovery.is_some(),
+        "the death was planted in epoch 1's round"
+    );
+    assert!(run.report.epochs[0].recovery.is_none(), "epoch 0 completed at full strength");
+
+    // Save -> load -> save is byte-identical for every emitted file.
+    let mut snaps = 0;
+    for entry in std::fs::read_dir(&run.checkpoint_dir).expect("checkpoint dir must exist") {
+        let path = entry.unwrap().path();
+        let bytes = std::fs::read(&path).unwrap();
+        let snap = Snapshot::decode(&bytes)
+            .unwrap_or_else(|e| panic!("{} must decode: {e}", path.display()));
+        assert_eq!(snap.encode(), bytes, "{} is not canonical bytes", path.display());
+        snaps += 1;
+    }
+    assert!(snaps >= 3, "expected per-epoch checkpoints plus recovery.snap, found {snaps}");
+
+    // From-scratch restore: a sequential driver resumed from
+    // recovery.snap must deterministically reach the same final state
+    // as the recovered live run (same stats, costs, and assignment).
+    let snap = Snapshot::read_from(&run.checkpoint_dir.join("recovery.snap"))
+        .expect("recovery.snap must have been written");
+    assert_eq!(snap.machine_count(), 2, "recovery.snap captures the shrunken fleet");
+    let graph = snap.build_graph();
+    let mut restored = DynamicDriver::from_snapshot(
+        &graph,
+        &snap,
+        WeightEstimator::instantaneous(),
+        DynamicOptions { epoch_ticks: 200, ..Default::default() },
+    );
+    let restored_report = restored.run();
+    assert_eq!(restored_report.stats, run.report.stats);
+    assert_eq!(restored_report.transfers, run.report.transfers);
+    assert_eq!(restored_report.total_time(), run.report.total_time());
+    assert_eq!(restored.engine().partition().assignment(), &run.final_assignment[..]);
+    assert_eq!(restored.machines().speeds(), &run.final_speeds[..]);
+    let c_restored =
+        global_cost::c0(&graph, restored.machines(), restored.engine().partition(), 8.0);
+    let c_live = global_cost::c0(
+        &graph,
+        restored.machines(),
+        &gtip::partition::Partition::from_assignment(&graph, 2, run.final_assignment.clone()),
+        8.0,
+    );
+    assert_eq!(c_restored.to_bits(), c_live.to_bits(), "final global cost diverged");
+
+    let _ = std::fs::remove_dir_all(&run.checkpoint_dir);
+}
+
+/// A worker that dies straight after validating `Setup` — before it
+/// ever plays a round. The very first refinement diagnoses it (either
+/// by the failed `EpochBegin` write or by its silence) and the run
+/// completes at K−1 from the epoch-0 checkpoint.
+#[test]
+fn worker_death_after_setup_recovers_on_first_epoch() {
+    let run = run_with_planted_death("setup", "setup", 1, 43);
+    assert!(
+        run.report.epochs[0].recovery.is_some(),
+        "the first refinement must have diagnosed the setup-time death"
+    );
+    let _ = std::fs::remove_dir_all(&run.checkpoint_dir);
+}
+
+/// A worker that plays its round to completion and dies *at the
+/// RoundStats barrier*. The barrier has already consumed the other
+/// worker's report when it fails, so this pins the
+/// evidence-preserving diagnosis: the worker whose stats were consumed
+/// must NOT be evicted alongside the one that never reported.
+#[test]
+fn worker_death_at_stats_barrier_recovers() {
+    let run = run_with_planted_death("stats", "stats", 2, 45);
+    assert!(
+        run.report.epochs[0].recovery.is_some(),
+        "the first refinement must have diagnosed the barrier-time death"
+    );
+    let _ = std::fs::remove_dir_all(&run.checkpoint_dir);
+}
