@@ -17,6 +17,7 @@ use gtip::graph::generators::{preferential_attachment, specialized_geometric};
 use gtip::graph::Graph;
 use gtip::partition::{MachineConfig, Partition};
 use gtip::sim::engine::{SimEngine, SimOptions, SimStats};
+use gtip::sim::legacy::LegacyEngine;
 use gtip::sim::reference::ReferenceEngine;
 use gtip::sim::workload::{FloodWorkload, WorkloadOptions};
 use gtip::util::bench::{write_json_group, BenchConfig, Bencher, JsonVal};
@@ -53,6 +54,25 @@ fn run_optimized(setup: &HeadlineSetup, parallelism: usize, max_ticks: u64) -> (
     let part =
         Partition::from_assignment(&setup.graph, setup.k, setup.assignment.clone());
     let mut engine = SimEngine::new(
+        &setup.graph,
+        setup.machines.clone(),
+        part,
+        sim_options(parallelism, max_ticks),
+        setup.workload.injections.clone(),
+    );
+    let t0 = Instant::now();
+    let stats = engine.run_to_completion();
+    (stats, t0.elapsed().as_secs_f64())
+}
+
+/// One timed run of the frozen pre-rewrite engine (`sim::legacy`): the
+/// map/set-per-LP layout the data-oriented hot path replaced. Same
+/// semantics and options as [`SimEngine`], so its stats must match
+/// bit-for-bit.
+fn run_legacy(setup: &HeadlineSetup, parallelism: usize, max_ticks: u64) -> (SimStats, f64) {
+    let part =
+        Partition::from_assignment(&setup.graph, setup.k, setup.assignment.clone());
+    let mut engine = LegacyEngine::new(
         &setup.graph,
         setup.machines.clone(),
         part,
@@ -224,6 +244,62 @@ fn main() {
             ("parallel_lp_ticks_per_sec".into(), JsonVal::Obj(parallel_json)),
         ]),
     ));
+
+    // Hot-path before/after (ISSUE 7): the frozen pre-rewrite engine
+    // (`sim::legacy` — HashMap thread slots, per-event Vec history,
+    // sorted-Vec worklist) vs the data-oriented rewrite, on the SAME
+    // matched window at parallelism 1/2/4. Stats must agree bit-for-bit
+    // — only the layout changed — so the throughput ratio isolates the
+    // data-structure work.
+    let mut hotpath_json: Vec<(String, JsonVal)> = vec![
+        ("n".into(), JsonVal::Int(n as u64)),
+        ("window_ticks".into(), JsonVal::Int(ref_ticks)),
+        ("smoke".into(), JsonVal::Bool(smoke)),
+    ];
+    let mut hotpath_parallel: Vec<(String, JsonVal)> = Vec::new();
+    let mut headline_before = 0.0f64;
+    let mut headline_after = 0.0f64;
+    for &p in &[1usize, 2, 4] {
+        let (old_stats, old_secs) = run_legacy(&setup, p, ref_ticks);
+        let (new_stats, new_secs) = run_optimized(&setup, p, ref_ticks);
+        assert_eq!(
+            old_stats, new_stats,
+            "legacy and rewritten engines diverged at p = {p} — the rewrite changed semantics"
+        );
+        let before = lp_ticks_per_sec(n, &old_stats, old_secs);
+        let after = lp_ticks_per_sec(n, &new_stats, new_secs);
+        println!(
+            "  hotpath (p = {p}) : legacy {before:.3e} -> rewritten {after:.3e} LP-ticks/s \
+             ({:.2}x)",
+            after / before.max(1e-12)
+        );
+        hotpath_parallel.push((
+            format!("p{p}"),
+            JsonVal::Obj(vec![
+                ("before_window_lp_ticks_per_sec".into(), JsonVal::Num(before)),
+                ("window_lp_ticks_per_sec".into(), JsonVal::Num(after)),
+                ("improvement_ratio".into(), JsonVal::Num(after / before.max(1e-12))),
+            ]),
+        ));
+        if p == 1 {
+            headline_before = before;
+            headline_after = after;
+        }
+    }
+    hotpath_json.push(("before_window_lp_ticks_per_sec".into(), JsonVal::Num(headline_before)));
+    hotpath_json.push(("window_lp_ticks_per_sec".into(), JsonVal::Num(headline_after)));
+    hotpath_json.push((
+        "improvement_ratio".into(),
+        JsonVal::Num(headline_after / headline_before.max(1e-12)),
+    ));
+    hotpath_json.push(("parallel".into(), JsonVal::Obj(hotpath_parallel)));
+    if headline_after <= headline_before {
+        println!(
+            "  !!! hotpath regression: rewritten engine ({headline_after:.3e}) is not faster \
+             than the pre-rewrite layout ({headline_before:.3e}) on this host"
+        );
+    }
+    json.push(("hotpath".into(), JsonVal::Obj(hotpath_json)));
 
     let _ = b.write_csv();
     match write_json_group("results/BENCH_sim.json", "simulator", &JsonVal::Obj(json)) {

@@ -12,6 +12,7 @@
 //!                 [--threads N] [--horizon T] [--seed S] [--compare]
 //! gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
 //!                 [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
+//!                 [--speed-seed S] [--inter-delay D] [--intra-delay D]
 //!                 [--corpus-dir DIR] [--replay FILE] [--no-shrink] [--no-oracle]
 //! gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
 //! gtip artifacts  [--dir DIR]         # verify PJRT artifacts vs native
@@ -78,7 +79,9 @@ USAGE:
   gtip snapshot   --inspect FILE      # print a checkpoint's summary + verify round-trip
   gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
                   [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
-                  [--migration-charge CMIG] [--corpus-dir DIR] [--replay FILE]
+                  [--migration-charge CMIG] [--speed-seed S]
+                  [--inter-delay D] [--intra-delay D]
+                  [--corpus-dir DIR] [--replay FILE]
                   [--no-shrink] [--no-oracle]
   gtip bench-gate [--baseline FILE] [--measured FILE]
   gtip experiment table1|batch|fig7|fig8|fig9|fig10|ablation|all [--seed S] [--quick]
@@ -899,11 +902,18 @@ fn cmd_fuzz(args: &Args) -> CliResult {
     if !(migration_charge >= 0.0 && migration_charge.is_finite()) {
         return Err("--migration-charge must be finite and >= 0".into());
     }
-    let fixture = FuzzFixture { graph_seed: seed, nodes, machines: k };
+    // Engine-configuration knobs (also mutated by the search itself):
+    // 0 = homogeneous machine speeds, the pre-config-fuzz default.
+    let speed_seed = args.opt_or::<u64>("speed-seed", 0)?;
+    let inter_delay = args.opt_or::<u64>("inter-delay", 3)?;
+    let intra_delay = args.opt_or::<u64>("intra-delay", 0)?;
+    let fixture = FuzzFixture { graph_seed: seed, nodes, machines: k, speed_seed };
     let eval = EvalOptions {
         epoch_ticks,
         framework,
         migration_charge,
+        inter_machine_delay: inter_delay,
+        intra_machine_delay: intra_delay,
         oracle: !args.flag("no-oracle"),
         ..Default::default()
     };
@@ -925,8 +935,12 @@ fn cmd_fuzz(args: &Args) -> CliResult {
         let eval = match &case.eval {
             Some(stored) => {
                 println!(
-                    "using stored eval settings: epoch {} ticks, framework {}, oracle {}",
-                    stored.epoch_ticks, stored.framework, stored.oracle
+                    "using stored eval settings: epoch {} ticks, framework {}, delays {}/{}, oracle {}",
+                    stored.epoch_ticks,
+                    stored.framework,
+                    stored.inter_machine_delay,
+                    stored.intra_machine_delay,
+                    stored.oracle
                 );
                 stored.clone()
             }
@@ -999,8 +1013,7 @@ fn cmd_fuzz(args: &Args) -> CliResult {
             if f.objectives.is_bug() { "  [BUG-CLASS FINDING]" } else { "" },
         );
     }
-    let written =
-        save_corpus(std::path::Path::new(&corpus_dir), &outcome, &options.fixture, &options.eval)?;
+    let written = save_corpus(std::path::Path::new(&corpus_dir), &outcome)?;
     for p in &written {
         println!("(wrote {})", p.display());
     }

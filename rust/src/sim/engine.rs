@@ -14,33 +14,47 @@
 //! inversely proportional to resident LP count (§6.1), generalized to
 //! heterogeneous speeds `w_k`.
 //!
-//! # Hot-path architecture (DESIGN.md §3)
+//! # Hot-path architecture (DESIGN.md §3, §11)
 //!
-//! Per-tick cost scales with *activity*, not graph size:
+//! Per-tick cost scales with *activity*, not graph size, and the data
+//! layout is cache-conscious struct-of-arrays:
 //!
-//! * an **active-LP worklist** (`active`, ascending) holds exactly the
-//!   LPs that are busy or have pending events; idle-and-empty LPs cost
-//!   zero. Fossil collection on idle LPs is deferred and caught up when
-//!   a message reactivates them (GVT is monotone, so late collection
-//!   removes the same entries);
-//! * **incremental GVT**: each LP keeps an O(1) contribution
-//!   (`Lp::gvt_contribution`), and the undelivered-injection minimum
-//!   comes from a prefix-min array computed once at construction —
-//!   per-tick GVT is O(active), never O(N + injections);
+//! * the **active-LP worklist** is a fixed `u64`-word bitset
+//!   ([`FixedBitset`]): membership is one bit test, the per-tick merge
+//!   of newly activated LPs is a word-OR, and every phase walks set
+//!   bits in ascending order (`trailing_zeros` + clear-lowest-bit).
+//!   Idle-and-empty LPs cost zero. Fossil collection on idle LPs is
+//!   deferred and caught up when a message reactivates them (GVT is
+//!   monotone, so late collection removes the same entries);
+//! * **SoA scalar columns** indexed by `NodeId` shadow the per-LP hot
+//!   scalars: `busy_until` (absolute completion tick, `MAX` = idle),
+//!   `next_event_at` (earliest processable tick when idle, `MAX` =
+//!   none) and `gvt_min` (the LP's GVT contribution, `MAX` = none).
+//!   Tick fast-forward and GVT computation stream these contiguous
+//!   columns instead of chasing `Lp` structs; every LP mutation site
+//!   refreshes the mutated LP's column entries ([`column_values`]);
+//! * **occupancy costs are cached per machine** (`cost_normal`,
+//!   `cost_rollback`), rebuilt only when the assignment changes —
+//!   the start phase does two array loads instead of float math;
+//! * **incremental GVT**: the undelivered-injection minimum comes from
+//!   a prefix-min array computed once at construction — per-tick GVT
+//!   is O(active), never O(N + injections);
 //! * **tick fast-forward**: when every active LP is counting down busy
 //!   time or transfer delays and no injection is due, the engine jumps
 //!   `Δ = min(remaining)` wall ticks in one step. Stats, traces and
 //!   epoch counters advance by Δ; results are bit-identical to stepping
 //!   the Δ no-op ticks one by one (nothing starts, completes, arrives,
 //!   or moves GVT inside the window by construction of Δ);
-//! * **parallel per-machine execution** (`SimOptions::parallelism`):
-//!   scoped workers own the LPs of their machines and run the tick in
-//!   barrier-separated sub-phases (start | complete | fan-out | retire)
-//!   so every cross-LP read observes the same state the sequential tick
-//!   observes. Per-machine outboxes merge in deterministic sender order
-//!   (stable sort by source LP), making parallel runs **bit-identical**
-//!   to sequential ones — the §5 determinism contract extends to
-//!   `parallelism > 1` (see DESIGN.md §5 and the equivalence suite).
+//! * **parallel execution by contiguous index ranges**
+//!   (`SimOptions::parallelism`): the active bitset's words are split
+//!   into per-worker ranges balanced by popcount, so each scoped
+//!   worker owns a contiguous slice of the LP array (and of the SoA
+//!   columns) and streams it in barrier-separated sub-phases
+//!   (start | complete | fan-out | retire). Per-worker outboxes merge
+//!   in deterministic sender order (stable sort by source LP), making
+//!   parallel runs **bit-identical** to sequential ones — the §5
+//!   determinism contract extends to `parallelism > 1` (see DESIGN.md
+//!   §5 and the equivalence suite).
 
 use std::sync::Barrier;
 
@@ -175,7 +189,7 @@ impl EpochCounters {
 
 /// Busy time charged on machine `k` for an event of kind `kind`:
 /// `resident × base / (w_k · K)`, rounded up, minimum 1. Free function
-/// so parallel workers can call it without borrowing the engine.
+/// used to (re)build the per-machine cost cache.
 fn occupancy_cost(
     part: &Partition,
     machines: &MachineConfig,
@@ -199,15 +213,57 @@ fn transfer_delay(part: &Partition, options: &SimOptions, from: NodeId, to: Node
     }
 }
 
+/// The SoA column entries of one LP: `(busy_until, next_event_at,
+/// gvt_min)`, each `MAX` for "none". `next_event_at` is only meaningful
+/// while the LP is idle; it is an absolute wall tick and therefore
+/// stable until the LP's pending set or busy state next mutates — which
+/// is exactly when the engine refreshes the columns.
+#[inline]
+fn column_values(lp: &mut Lp, now: WallTime) -> (WallTime, WallTime, SimTime) {
+    let busy_until = lp.busy.map_or(WallTime::MAX, |b| b.done_at);
+    let next_event_at = if lp.busy.is_some() {
+        WallTime::MAX
+    } else {
+        lp.earliest_event_at(now).unwrap_or(WallTime::MAX)
+    };
+    let gvt_min = lp.gvt_contribution().unwrap_or(SimTime::MAX);
+    (busy_until, next_event_at, gvt_min)
+}
+
+/// Hand-rolled std-only fixed-size bitset over `u64` words — the active
+/// worklist representation. Iteration walks set bits ascending via
+/// `trailing_zeros` on a local word copy; merging one bitset into
+/// another is a word-OR.
+#[derive(Debug, Clone, Default)]
+struct FixedBitset {
+    words: Vec<u64>,
+}
+
+impl FixedBitset {
+    fn with_len(n: usize) -> Self {
+        FixedBitset { words: vec![0; n.div_ceil(64)] }
+    }
+
+    #[inline]
+    fn contains(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    fn insert(&mut self, i: usize) {
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+}
+
 /// An outbox entry: `(receiver, event, sender)`. The sender id is the
 /// deterministic merge key of the parallel tick.
 type OutMsg = (NodeId, Event, NodeId);
 
 /// Raw shared pointer into an engine-owned array, handed to scoped
 /// workers. Safety protocol: during mutate phases every worker touches
-/// only indices it owns (LPs of its machines / its senders' CSR rows);
-/// during the read-only fan-out phase no `&mut` exists anywhere. Phase
-/// boundaries are `Barrier`s.
+/// only indices it owns (LPs of its contiguous index range / its
+/// senders' CSR rows); during the read-only fan-out phase no `&mut`
+/// exists anywhere. Phase boundaries are `Barrier`s.
 struct RawSlice<T>(*mut T);
 
 impl<T> Clone for RawSlice<T> {
@@ -279,61 +335,98 @@ struct WorkerOut {
     antimessages_sent: u64,
 }
 
-/// Phase-1 body executed by each scoped worker over the active LPs of
-/// its machines (ascending). Sub-phases are barrier-separated so that
-/// (a) `start` and `complete` touch only owned LPs, (b) the fan-out
-/// pass reads a globally quiescent LP array (`seen` was last written in
-/// the start phase), and (c) `retire` again touches only owned LPs —
-/// making the result independent of worker interleaving and identical
-/// to the sequential tick.
-#[allow(clippy::too_many_arguments)]
-fn worker_phase1(
+/// Everything a parallel phase-1 worker needs, bundled so the spawn
+/// site stays readable. `Copy`: plain shared refs + raw pointers.
+#[derive(Clone, Copy)]
+struct ParCtx<'a> {
     tick: WallTime,
-    my: &[NodeId],
-    graph: &Graph,
-    part: &Partition,
-    machines: &MachineConfig,
-    options: &SimOptions,
+    graph: &'a Graph,
+    part: &'a Partition,
+    options: &'a SimOptions,
+    cost_normal: &'a [WallTime],
+    cost_rollback: &'a [WallTime],
+    /// Snapshot view of the active bitset's words (not mutated during
+    /// phase 1); workers iterate set bits of their word range.
+    words: &'a [u64],
     lps: RawSlice<Lp>,
     ev_lp: RawSlice<u64>,
     rb_lp: RawSlice<u64>,
     xf_lp: RawSlice<u64>,
     fw_he: RawSlice<u64>,
-    barrier: &Barrier,
-) -> WorkerOut {
+    busy_until: RawSlice<WallTime>,
+    next_event_at: RawSlice<WallTime>,
+    gvt_min: RawSlice<SimTime>,
+}
+
+/// Phase-1 body executed by each scoped worker over the active LPs of
+/// its contiguous word range (ascending). Sub-phases are
+/// barrier-separated so that (a) `start` and `complete` touch only
+/// owned LPs (and their SoA column slots), (b) the fan-out pass reads a
+/// globally quiescent LP array (`seen` was last written in the start
+/// phase), and (c) `retire` again touches only owned LPs — making the
+/// result independent of worker interleaving and identical to the
+/// sequential tick.
+fn worker_phase1(ctx: ParCtx<'_>, range: (usize, usize), barrier: &Barrier) -> WorkerOut {
+    let ParCtx {
+        tick,
+        graph,
+        part,
+        options,
+        cost_normal,
+        cost_rollback,
+        words,
+        lps,
+        ev_lp,
+        rb_lp,
+        xf_lp,
+        fw_he,
+        busy_until,
+        next_event_at,
+        gvt_min,
+    } = ctx;
     let mut out = WorkerOut::default();
     let mut sync = BarrierGuard::new(barrier, 3);
     // Start phase: idle LPs select + start (own-LP mutations only).
-    for &i in my {
-        let lp = unsafe { &mut *lps.get(i) };
-        if lp.busy.is_some() {
-            continue;
-        }
-        let machine = part.machine_of(i);
-        let cost_rollback = occupancy_cost(part, machines, options, machine, EventKind::Rollback);
-        let cost_normal =
-            occupancy_cost(part, machines, options, machine, EventKind::ProcessForward);
-        let outcome = lp.start_next(
-            tick,
-            |kind| match kind {
-                EventKind::Rollback => cost_rollback,
-                _ => cost_normal,
-            },
-            options.inter_machine_delay,
-        );
-        match outcome {
-            StartOutcome::Nothing => {}
-            StartOutcome::Started { rolled_back, cancellations }
-            | StartOutcome::RolledBack { rolled_back, cancellations } => {
-                if rolled_back > 0 {
-                    unsafe { *rb_lp.get(i) += 1 };
-                    out.rollbacks += 1;
-                }
-                out.antimessages_sent += cancellations.len() as u64;
-                for (nb, ev) in cancellations {
-                    let mut ev = ev;
-                    ev.tick = transfer_delay(part, options, i, nb);
-                    out.cancels.push((nb, ev, i));
+    for wi in range.0..range.1 {
+        let mut w = words[wi];
+        while w != 0 {
+            let i = wi * 64 + w.trailing_zeros() as usize;
+            w &= w - 1;
+            let lp = unsafe { &mut *lps.get(i) };
+            if lp.busy.is_some() {
+                continue;
+            }
+            let machine = part.machine_of(i);
+            let cr = cost_rollback[machine];
+            let cn = cost_normal[machine];
+            let outcome = lp.start_next(
+                tick,
+                |kind| match kind {
+                    EventKind::Rollback => cr,
+                    _ => cn,
+                },
+                options.inter_machine_delay,
+            );
+            match outcome {
+                StartOutcome::Nothing => {}
+                StartOutcome::Started { rolled_back, cancellations }
+                | StartOutcome::RolledBack { rolled_back, cancellations } => {
+                    if rolled_back > 0 {
+                        unsafe { *rb_lp.get(i) += 1 };
+                        out.rollbacks += 1;
+                    }
+                    out.antimessages_sent += cancellations.len() as u64;
+                    for (nb, ev) in cancellations {
+                        let mut ev = ev;
+                        ev.tick = transfer_delay(part, options, i, nb);
+                        out.cancels.push((nb, ev, i));
+                    }
+                    let (b, n, g) = column_values(lp, tick);
+                    unsafe {
+                        *busy_until.get(i) = b;
+                        *next_event_at.get(i) = n;
+                        *gvt_min.get(i) = g;
+                    }
                 }
             }
         }
@@ -341,16 +434,30 @@ fn worker_phase1(
     sync.wait();
     // Complete phase: pop finished busy events (own-LP mutations only).
     let mut completed = Vec::new();
-    for &i in my {
-        let lp = unsafe { &mut *lps.get(i) };
-        if let Some(done) = lp.complete_busy(tick) {
-            completed.push((i, done));
+    for wi in range.0..range.1 {
+        let mut w = words[wi];
+        while w != 0 {
+            let i = wi * 64 + w.trailing_zeros() as usize;
+            w &= w - 1;
+            let lp = unsafe { &mut *lps.get(i) };
+            if let Some(done) = lp.complete_busy(tick) {
+                completed.push((i, done));
+                let (b, n, g) = column_values(lp, tick);
+                unsafe {
+                    *busy_until.get(i) = b;
+                    *next_event_at.get(i) = n;
+                    *gvt_min.get(i) = g;
+                }
+            }
         }
     }
     sync.wait();
     // Fan-out phase: read-only over the LP array; writes go to local
-    // buffers and this worker's own slots of the epoch arrays.
-    let mut retires = Vec::new();
+    // buffers and this worker's own slots of the epoch arrays. Forward
+    // lists accumulate in one per-worker buffer, recorded as
+    // `(off, len)` spans — no per-event allocation.
+    let mut fwd_buf: Vec<NodeId> = Vec::new();
+    let mut retires: Vec<(NodeId, Event, usize, usize)> = Vec::new();
     for &(i, done) in &completed {
         unsafe { *ev_lp.get(i) += 1 };
         out.events_processed += 1;
@@ -358,7 +465,7 @@ fn worker_phase1(
             // Anti-message consumed; nothing retires to history.
             continue;
         }
-        let mut forwarded_to = Vec::new();
+        let off = fwd_buf.len();
         if done.count > 0 {
             let machine = part.machine_of(i);
             let row = graph.row_offset(i);
@@ -369,7 +476,7 @@ fn worker_phase1(
                 }
                 let delay = transfer_delay(part, options, i, nb);
                 out.fwds.push((nb, done.forwarded(options.hop_latency, delay), i));
-                forwarded_to.push(nb);
+                fwd_buf.push(nb);
                 out.events_forwarded += 1;
                 unsafe { *fw_he.get(row + slot) += 1 };
                 if part.machine_of(nb) != machine {
@@ -378,13 +485,13 @@ fn worker_phase1(
                 }
             }
         }
-        retires.push((i, done, forwarded_to));
+        retires.push((i, done, off, fwd_buf.len() - off));
     }
     sync.wait();
     // Retire phase: record completions into own history.
-    for (i, done, forwarded_to) in retires {
+    for (i, done, off, len) in retires {
         let lp = unsafe { &mut *lps.get(i) };
-        lp.retire(done, forwarded_to);
+        lp.retire(done, &fwd_buf[off..off + len]);
     }
     out
 }
@@ -408,15 +515,31 @@ pub struct SimEngine<'g> {
     load_traces: Vec<Trace>,
     /// Activity window since the last `take_epoch_counters` harvest.
     epoch: EpochCounters,
-    /// Active worklist: LPs that are busy or hold pending events,
-    /// ascending. Everything else is skipped by every per-tick phase.
-    active: Vec<NodeId>,
-    is_active: Vec<bool>,
-    /// LPs activated during the current tick, merged at phase edges.
-    newly_active: Vec<NodeId>,
-    /// Persistent merge buffer (keeps the worklist merge allocation-free
-    /// in steady state).
-    active_scratch: Vec<NodeId>,
+    /// Active worklist bitset: LPs that are busy or hold pending
+    /// events. Everything else is skipped by every per-tick phase.
+    active: FixedBitset,
+    /// LPs activated during the current tick (disjoint from `active` by
+    /// the `activate` guard), word-OR-merged at phase edges.
+    newly_active: FixedBitset,
+    active_count: usize,
+    newly_count: usize,
+    /// SoA columns indexed by `NodeId` (see [`column_values`]): phase-1
+    /// gating, tick fast-forward and GVT stream these contiguous arrays
+    /// instead of touching `Lp` structs.
+    busy_until: Vec<WallTime>,
+    next_event_at: Vec<WallTime>,
+    gvt_min: Vec<SimTime>,
+    /// Per-machine occupancy costs, rebuilt when the assignment changes.
+    cost_normal: Vec<WallTime>,
+    cost_rollback: Vec<WallTime>,
+    /// Upper bound on injected thread ids; LPs pre-size their dense
+    /// per-thread structures to this on first activation, keeping the
+    /// steady-state tick loop allocation-free.
+    thread_bound: usize,
+    /// Persistent forward-list scratch of the sequential fan-out (the
+    /// arena span is copied out of it by `Lp::retire`) — no per-event
+    /// `Vec` allocation on the send path.
+    fwd_scratch: Vec<NodeId>,
     /// Round-robin cursor of the background fossil sweep over idle LPs
     /// (bounds history retained by LPs that never reactivate).
     fossil_cursor: usize,
@@ -445,12 +568,15 @@ impl<'g> SimEngine<'g> {
             m = m.min(inj.event.time);
             inj_prefix_min.push(m);
         }
+        let thread_bound =
+            injections.iter().map(|inj| inj.event.thread + 1).max().unwrap_or(0) as usize;
         let load_traces = (0..machines.count())
             .map(|k| Trace::new(format!("machine{k}")))
             .collect();
-        SimEngine {
+        let n = graph.node_count();
+        let mut engine = SimEngine {
             graph,
-            lps: vec![Lp::default(); graph.node_count()],
+            lps: vec![Lp::default(); n],
             machines,
             part,
             options,
@@ -460,14 +586,23 @@ impl<'g> SimEngine<'g> {
             inj_prefix_min,
             load_traces,
             epoch: EpochCounters::for_graph(graph),
-            active: Vec::new(),
-            is_active: vec![false; graph.node_count()],
-            newly_active: Vec::new(),
-            active_scratch: Vec::new(),
+            active: FixedBitset::with_len(n),
+            newly_active: FixedBitset::with_len(n),
+            active_count: 0,
+            newly_count: 0,
+            busy_until: vec![WallTime::MAX; n],
+            next_event_at: vec![WallTime::MAX; n],
+            gvt_min: vec![SimTime::MAX; n],
+            cost_normal: Vec::new(),
+            cost_rollback: Vec::new(),
+            thread_bound,
+            fwd_scratch: Vec::new(),
             fossil_cursor: 0,
             outbox_cancel: Vec::new(),
             outbox_fwd: Vec::new(),
-        }
+        };
+        engine.rebuild_cost_cache();
+        engine
     }
 
     pub fn stats(&self) -> &SimStats {
@@ -513,61 +648,93 @@ impl<'g> SimEngine<'g> {
     pub fn set_partition(&mut self, part: Partition) {
         assert_eq!(part.node_count(), self.graph.node_count());
         self.part = part;
+        self.rebuild_cost_cache();
+    }
+
+    /// Recompute the per-machine occupancy-cost columns (resident
+    /// counts or speeds changed). Clear + extend reuses capacity.
+    fn rebuild_cost_cache(&mut self) {
+        self.cost_normal.clear();
+        self.cost_rollback.clear();
+        for k in 0..self.machines.count() {
+            self.cost_normal.push(occupancy_cost(
+                &self.part,
+                &self.machines,
+                &self.options,
+                k,
+                EventKind::ProcessForward,
+            ));
+            self.cost_rollback.push(occupancy_cost(
+                &self.part,
+                &self.machines,
+                &self.options,
+                k,
+                EventKind::Rollback,
+            ));
+        }
     }
 
     fn transfer_delay(&self, from: NodeId, to: NodeId) -> WallTime {
         transfer_delay(&self.part, &self.options, from, to)
     }
 
+    /// Refresh LP `i`'s SoA column entries after a mutation of its
+    /// pending set or busy state. Retiring to history and fossil
+    /// collection do not change the columns and need no refresh.
+    #[inline]
+    fn refresh_columns(&mut self, i: NodeId, now: WallTime) {
+        let (b, n, g) = column_values(&mut self.lps[i], now);
+        self.busy_until[i] = b;
+        self.next_event_at[i] = n;
+        self.gvt_min[i] = g;
+    }
+
     /// Mark an LP active, catching up its deferred fossil collection
     /// first (GVT is monotone, so collecting late removes exactly the
-    /// entries per-tick collection would have removed).
+    /// entries per-tick collection would have removed) and pre-sizing
+    /// its dense per-thread structures once.
     fn activate(&mut self, i: NodeId) {
-        if !self.is_active[i] {
+        if !self.active.contains(i) && !self.newly_active.contains(i) {
             self.lps[i].fossil_collect(self.gvt);
-            self.is_active[i] = true;
-            self.newly_active.push(i);
+            self.lps[i].reserve_threads(self.thread_bound);
+            self.newly_active.insert(i);
+            self.newly_count += 1;
         }
     }
 
-    /// Merge LPs activated since the last merge into the (ascending)
-    /// worklist. Uses the persistent scratch buffer, so steady-state
-    /// merges allocate nothing.
+    /// Merge LPs activated since the last merge into the active bitset:
+    /// a word-OR per 64 LPs. `activate` guarantees the two bitsets are
+    /// disjoint, so the count is a plain add.
     fn merge_newly_active(&mut self) {
-        if self.newly_active.is_empty() {
+        if self.newly_count == 0 {
             return;
         }
-        self.newly_active.sort_unstable();
-        self.active_scratch.clear();
-        self.active_scratch.reserve(self.active.len() + self.newly_active.len());
-        let (mut a, mut b) = (0usize, 0usize);
-        while a < self.active.len() && b < self.newly_active.len() {
-            if self.active[a] < self.newly_active[b] {
-                self.active_scratch.push(self.active[a]);
-                a += 1;
-            } else {
-                self.active_scratch.push(self.newly_active[b]);
-                b += 1;
-            }
+        for (a, n) in self.active.words.iter_mut().zip(self.newly_active.words.iter_mut()) {
+            *a |= *n;
+            *n = 0;
         }
-        self.active_scratch.extend_from_slice(&self.active[a..]);
-        self.active_scratch.extend_from_slice(&self.newly_active[b..]);
-        std::mem::swap(&mut self.active, &mut self.active_scratch);
-        self.newly_active.clear();
+        self.active_count += self.newly_count;
+        self.newly_count = 0;
     }
 
-    /// Drop drained LPs from the worklist.
+    /// Drop drained LPs from the worklist: per word, build a clear mask
+    /// of idle-and-empty LPs and apply it in one store.
     fn sweep_inactive(&mut self) {
-        let lps = &self.lps;
-        let is_active = &mut self.is_active;
-        self.active.retain(|&i| {
-            if lps[i].idle_and_empty() {
-                is_active[i] = false;
-                false
-            } else {
-                true
+        for wi in 0..self.active.words.len() {
+            let mut w = self.active.words[wi];
+            let mut clear = 0u64;
+            while w != 0 {
+                let b = w.trailing_zeros();
+                w &= w - 1;
+                if self.lps[wi * 64 + b as usize].idle_and_empty() {
+                    clear |= 1 << b;
+                }
             }
-        });
+            if clear != 0 {
+                self.active.words[wi] &= !clear;
+                self.active_count -= clear.count_ones() as usize;
+            }
+        }
     }
 
     /// Deliver any injections scheduled at `tick` (no duplicate-drop
@@ -580,6 +747,7 @@ impl<'g> SimEngine<'g> {
             self.injections.pop();
             self.activate(inj.lp);
             self.lps[inj.lp].receive(inj.event, tick);
+            self.refresh_columns(inj.lp, tick);
         }
     }
 
@@ -594,17 +762,19 @@ impl<'g> SimEngine<'g> {
     }
 
     /// Compute GVT: minimum over the active LPs' contributions (busy
-    /// event timestamps and pending minima) and the undelivered
-    /// injections (Fig. 6 / Table III `global-time`). O(active).
-    fn compute_gvt(&mut self) -> SimTime {
+    /// event timestamps and pending minima, streamed from the `gvt_min`
+    /// column) and the undelivered injections (Fig. 6 / Table III
+    /// `global-time`). O(active).
+    fn compute_gvt(&self) -> SimTime {
         let mut gvt = SimTime::MAX;
-        let active = std::mem::take(&mut self.active);
-        for &i in &active {
-            if let Some(t) = self.lps[i].gvt_contribution() {
-                gvt = gvt.min(t);
+        for (wi, &word) in self.active.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                gvt = gvt.min(self.gvt_min[i]);
             }
         }
-        self.active = active;
         if let Some(t) = self.injections_time_min() {
             gvt = gvt.min(t);
         }
@@ -621,8 +791,13 @@ impl<'g> SimEngine<'g> {
     fn record_loads(&mut self) {
         let k = self.machines.count();
         let mut sums = vec![0.0f64; k];
-        for &i in &self.active {
-            sums[self.part.machine_of(i)] += self.lps[i].queue_len() as f64;
+        for (wi, &word) in self.active.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                sums[self.part.machine_of(i)] += self.lps[i].queue_len() as f64;
+            }
         }
         for m in 0..k {
             let cnt = self.part.count(m).max(1) as f64;
@@ -632,16 +807,16 @@ impl<'g> SimEngine<'g> {
 
     /// All work drained (and no injections outstanding)?
     pub fn drained(&self) -> bool {
-        self.injections.is_empty() && self.active.is_empty() && self.newly_active.is_empty()
+        self.injections.is_empty() && self.active_count == 0 && self.newly_count == 0
     }
 
     /// Wall ticks that can be skipped in one jump because they are
     /// provably no-ops: every active LP is either busy with completion
     /// strictly in the future or waiting on transfer delays, and no
     /// injection, trace point, or external boundary lands inside the
-    /// window. Returns `None` when the current tick must be executed.
-    #[allow(clippy::needless_range_loop)] // index loop: `self.lps[i]` needs &mut
-    fn fast_forward(&mut self, tick: WallTime, tick_limit: WallTime) -> Option<WallTime> {
+    /// window. Streams the SoA columns — no `Lp` struct is touched.
+    /// Returns `None` when the current tick must be executed.
+    fn fast_forward(&self, tick: WallTime, tick_limit: WallTime) -> Option<WallTime> {
         let limit = tick_limit.min(self.options.max_ticks);
         let mut dt = limit.saturating_sub(tick);
         if dt == 0 {
@@ -657,18 +832,25 @@ impl<'g> SimEngine<'g> {
             debug_assert!(inj.at_tick > tick, "due injection not delivered");
             dt = dt.min(inj.at_tick - tick);
         }
-        for idx in 0..self.active.len() {
-            let i = self.active[idx];
-            if let Some(b) = self.lps[i].busy {
-                if b.done_at <= tick {
-                    return None; // completes this tick
-                }
-                dt = dt.min(b.done_at - tick);
-            } else {
-                match self.lps[i].earliest_event_at(tick) {
-                    Some(t) if t <= tick => return None, // ready event
-                    Some(t) => dt = dt.min(t - tick),
-                    None => {}
+        for (wi, &word) in self.active.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                let bu = self.busy_until[i];
+                if bu != WallTime::MAX {
+                    if bu <= tick {
+                        return None; // completes this tick
+                    }
+                    dt = dt.min(bu - tick);
+                } else {
+                    let ne = self.next_event_at[i];
+                    if ne <= tick {
+                        return None; // ready event
+                    }
+                    if ne != WallTime::MAX {
+                        dt = dt.min(ne - tick);
+                    }
                 }
             }
         }
@@ -681,47 +863,54 @@ impl<'g> SimEngine<'g> {
     /// cancellations), then completions with forward fan-out. The two
     /// passes mirror the parallel sub-phases: all `seen` mutations
     /// happen in the start pass, so the fan-out pass observes the same
-    /// neighbor state in any LP order.
+    /// neighbor state in any LP order. Gating reads the `busy_until`
+    /// column; phase 1 never activates or deactivates LPs, so iterating
+    /// local copies of the bitset words is stable.
     fn phase1_sequential(&mut self, tick: WallTime) {
-        // The worklist is detached during the sweep so the helper
-        // methods can borrow `self` freely; nothing in phase 1
-        // activates or deactivates LPs.
-        let active = std::mem::take(&mut self.active);
-        for &i in &active {
-            if self.lps[i].busy.is_some() {
-                continue;
-            }
-            let machine = self.part.machine_of(i);
-            let cost_rollback = occupancy_cost(
-                &self.part,
-                &self.machines,
-                &self.options,
-                machine,
-                EventKind::Rollback,
-            );
-            let cost_normal = occupancy_cost(
-                &self.part,
-                &self.machines,
-                &self.options,
-                machine,
-                EventKind::ProcessForward,
-            );
-            let outcome = self.lps[i].start_next(
-                tick,
-                |kind| match kind {
-                    EventKind::Rollback => cost_rollback,
-                    _ => cost_normal,
-                },
-                self.options.inter_machine_delay,
-            );
-            self.note_start_outcome(i, outcome);
-        }
-        for &i in &active {
-            if let Some(done) = self.lps[i].complete_busy(tick) {
-                self.note_completion(i, done);
+        for wi in 0..self.active.words.len() {
+            let mut w = self.active.words[wi];
+            while w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                if self.busy_until[i] != WallTime::MAX {
+                    debug_assert!(self.lps[i].busy.is_some(), "stale busy_until column");
+                    continue;
+                }
+                debug_assert!(self.lps[i].busy.is_none(), "stale busy_until column");
+                let machine = self.part.machine_of(i);
+                let cr = self.cost_rollback[machine];
+                let cn = self.cost_normal[machine];
+                let outcome = self.lps[i].start_next(
+                    tick,
+                    |kind| match kind {
+                        EventKind::Rollback => cr,
+                        _ => cn,
+                    },
+                    self.options.inter_machine_delay,
+                );
+                match outcome {
+                    StartOutcome::Nothing => {}
+                    outcome => {
+                        self.note_start_outcome(i, outcome);
+                        self.refresh_columns(i, tick);
+                    }
+                }
             }
         }
-        self.active = active;
+        for wi in 0..self.active.words.len() {
+            let mut w = self.active.words[wi];
+            while w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                if self.busy_until[i] > tick {
+                    continue; // idle (MAX) or still busy past this tick
+                }
+                if let Some(done) = self.lps[i].complete_busy(tick) {
+                    self.note_completion(i, done);
+                    self.refresh_columns(i, tick);
+                }
+            }
+        }
     }
 
     fn note_start_outcome(&mut self, i: NodeId, outcome: StartOutcome) {
@@ -752,7 +941,7 @@ impl<'g> SimEngine<'g> {
             return;
         }
         let graph = self.graph;
-        let mut forwarded_to = Vec::new();
+        self.fwd_scratch.clear();
         if done.count > 0 {
             let machine = self.part.machine_of(i);
             let row = graph.row_offset(i);
@@ -762,7 +951,7 @@ impl<'g> SimEngine<'g> {
                 }
                 let delay = self.transfer_delay(i, nb);
                 self.outbox_fwd.push((nb, done.forwarded(self.options.hop_latency, delay), i));
-                forwarded_to.push(nb);
+                self.fwd_scratch.push(nb);
                 self.stats.events_forwarded += 1;
                 self.epoch.forwards_by_half_edge[row + slot] += 1;
                 if self.part.machine_of(nb) != machine {
@@ -771,40 +960,69 @@ impl<'g> SimEngine<'g> {
                 }
             }
         }
-        self.lps[i].retire(done, forwarded_to);
+        self.lps[i].retire(done, &self.fwd_scratch);
     }
 
-    /// Parallel phase 1: scoped workers own the active LPs of their
-    /// machines (machine `m` → worker `m % workers`) and run the
-    /// barrier-separated sub-phases of [`worker_phase1`]. Scalar stats
-    /// merge in worker order; outboxes merge by stable sender sort —
-    /// both reproduce the sequential tick exactly.
+    /// Parallel phase 1: the active bitset's words are split into
+    /// `workers` contiguous ranges balanced by popcount; each scoped
+    /// worker owns the LPs (and SoA column slots) of its range and runs
+    /// the barrier-separated sub-phases of [`worker_phase1`]. Scalar
+    /// stats merge in worker order; outboxes merge by stable sender
+    /// sort — both reproduce the sequential tick exactly.
     fn phase1_parallel(&mut self, tick: WallTime, workers: usize) {
-        let mut work: Vec<Vec<NodeId>> = vec![Vec::new(); workers];
-        for &i in &self.active {
-            work[self.part.machine_of(i) % workers].push(i);
+        // Split word indices by cumulative popcount. Empty trailing
+        // ranges pad to exactly `workers` entries: every spawned worker
+        // must participate in the barriers.
+        let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(workers);
+        let nwords = self.active.words.len();
+        let target = self.active_count.div_ceil(workers).max(1);
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        for wi in 0..nwords {
+            acc += self.active.words[wi].count_ones() as usize;
+            if acc >= target && ranges.len() + 1 < workers {
+                ranges.push((start, wi + 1));
+                start = wi + 1;
+                acc = 0;
+            }
         }
-        let graph = self.graph;
-        let part = &self.part;
-        let machines = &self.machines;
-        let options = &self.options;
+        ranges.push((start, nwords));
+        while ranges.len() < workers {
+            ranges.push((nwords, nwords));
+        }
+
         let lps = RawSlice::new(self.lps.as_mut_ptr());
         let ev_lp = RawSlice::new(self.epoch.events_by_lp.as_mut_ptr());
         let rb_lp = RawSlice::new(self.epoch.rollbacks_by_lp.as_mut_ptr());
         let xf_lp = RawSlice::new(self.epoch.cross_forwards_by_lp.as_mut_ptr());
         let fw_he = RawSlice::new(self.epoch.forwards_by_half_edge.as_mut_ptr());
+        let busy_until = RawSlice::new(self.busy_until.as_mut_ptr());
+        let next_event_at = RawSlice::new(self.next_event_at.as_mut_ptr());
+        let gvt_min = RawSlice::new(self.gvt_min.as_mut_ptr());
+        let ctx = ParCtx {
+            tick,
+            graph: self.graph,
+            part: &self.part,
+            options: &self.options,
+            cost_normal: &self.cost_normal,
+            cost_rollback: &self.cost_rollback,
+            words: &self.active.words,
+            lps,
+            ev_lp,
+            rb_lp,
+            xf_lp,
+            fw_he,
+            busy_until,
+            next_event_at,
+            gvt_min,
+        };
         let barrier = Barrier::new(workers);
         let mut outs: Vec<WorkerOut> = Vec::with_capacity(workers);
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(workers);
-            for my in &work {
+            for &range in &ranges {
                 let barrier = &barrier;
-                handles.push(s.spawn(move || {
-                    worker_phase1(
-                        tick, my, graph, part, machines, options, lps, ev_lp, rb_lp, xf_lp,
-                        fw_he, barrier,
-                    )
-                }));
+                handles.push(s.spawn(move || worker_phase1(ctx, range, barrier)));
             }
             for h in handles {
                 outs.push(h.join().expect("sim worker panicked"));
@@ -850,6 +1068,7 @@ impl<'g> SimEngine<'g> {
         }
         self.activate(nb);
         self.lps[nb].receive(ev, tick);
+        self.refresh_columns(nb, tick);
     }
 
     /// Execute one wall-clock step (Fig. 6 body), never advancing past
@@ -876,7 +1095,7 @@ impl<'g> SimEngine<'g> {
         } else {
             self.options.parallelism.min(self.machines.count())
         };
-        if workers > 1 && self.active.len() >= self.options.parallel_min_active {
+        if workers > 1 && self.active_count >= self.options.parallel_min_active {
             self.phase1_parallel(tick, workers);
         } else {
             self.phase1_sequential(tick);
@@ -888,11 +1107,14 @@ impl<'g> SimEngine<'g> {
 
         // Phase 3: GVT advances, fossils collect, worklist compacts.
         self.gvt = self.compute_gvt();
-        let active = std::mem::take(&mut self.active);
-        for &i in &active {
-            self.lps[i].fossil_collect(self.gvt);
+        for wi in 0..self.active.words.len() {
+            let mut w = self.active.words[wi];
+            while w != 0 {
+                let i = wi * 64 + w.trailing_zeros() as usize;
+                w &= w - 1;
+                self.lps[i].fossil_collect(self.gvt);
+            }
         }
-        self.active = active;
         self.sweep_inactive();
 
         // Background fossil sweep: a few idle LPs per executed tick, so
@@ -905,7 +1127,10 @@ impl<'g> SimEngine<'g> {
         for _ in 0..FOSSIL_SWEEP_PER_TICK.min(n) {
             let i = self.fossil_cursor;
             self.fossil_cursor = (self.fossil_cursor + 1) % n;
-            if !self.is_active[i] && !self.lps[i].history.is_empty() {
+            if !self.active.contains(i)
+                && !self.newly_active.contains(i)
+                && !self.lps[i].history_is_empty()
+            {
                 self.lps[i].fossil_collect(self.gvt);
             }
         }
@@ -927,9 +1152,9 @@ impl<'g> SimEngine<'g> {
     /// Capture the full resumable engine state in canonical order
     /// (`sim::snapshot`). Must be called between steps (outboxes empty —
     /// always true at an epoch boundary); the index layout (slot slab,
-    /// heap order, worklist) is *not* captured: it is re-derived
-    /// deterministically on restore, which is what makes
-    /// save→load→save byte-identical.
+    /// heap order, bitset worklist, arena offsets, SoA columns) is *not*
+    /// captured: it is re-derived deterministically on restore, which is
+    /// what makes save→load→save byte-identical across layouts.
     pub fn capture_state(&self) -> crate::sim::snapshot::EngineState {
         assert!(
             self.outbox_cancel.is_empty() && self.outbox_fwd.is_empty(),
@@ -941,18 +1166,15 @@ impl<'g> SimEngine<'g> {
             .map(|lp| {
                 let mut pending: Vec<(Event, WallTime)> = lp.pending_with_ready_at().collect();
                 pending.sort_by_key(|&(e, r)| crate::sim::snapshot::pending_sort_key(&e, r));
-                let mut seen: Vec<_> = lp.seen.iter().copied().collect();
-                seen.sort_unstable();
+                // Bitset iteration is already ascending — the canonical
+                // snapshot order.
+                let seen: Vec<_> = lp.seen_threads().collect();
                 crate::sim::snapshot::LpState {
                     pending,
                     seen,
                     local_time: lp.local_time,
                     busy: lp.busy.map(|b| (b.event, b.done_at)),
-                    history: lp
-                        .history
-                        .iter()
-                        .map(|h| (h.event, h.forwarded_to.clone()))
-                        .collect(),
+                    history: lp.history_entries().map(|(e, f)| (e, f.to_vec())).collect(),
                     rollbacks: lp.rollbacks,
                 }
             })
@@ -993,23 +1215,23 @@ impl<'g> SimEngine<'g> {
         for (i, lp_state) in state.lps.into_iter().enumerate() {
             let lp = &mut engine.lps[i];
             lp.restore_pending(lp_state.pending, now);
-            lp.seen = lp_state.seen.into_iter().collect();
+            for t in lp_state.seen {
+                lp.mark_seen(t);
+            }
             lp.local_time = lp_state.local_time;
             lp.busy = lp_state.busy.map(|(event, done_at)| crate::sim::lp::Busy { event, done_at });
-            lp.history = lp_state
-                .history
-                .into_iter()
-                .map(|(event, forwarded_to)| crate::sim::lp::HistoryEntry { event, forwarded_to })
-                .collect();
+            lp.restore_history(lp_state.history);
             lp.rollbacks = lp_state.rollbacks;
         }
-        // Re-derive the active worklist: exactly the LPs that are busy
-        // or hold pending events, ascending.
-        engine.active = (0..engine.lps.len())
-            .filter(|&i| !engine.lps[i].idle_and_empty())
-            .collect();
-        for &i in &engine.active {
-            engine.is_active[i] = true;
+        // Re-derive the active bitset (exactly the LPs that are busy or
+        // hold pending events) and the SoA columns.
+        for i in 0..engine.lps.len() {
+            if !engine.lps[i].idle_and_empty() {
+                engine.lps[i].reserve_threads(engine.thread_bound);
+                engine.active.insert(i);
+                engine.active_count += 1;
+            }
+            engine.refresh_columns(i, now);
         }
         engine
     }
@@ -1343,7 +1565,10 @@ mod tests {
         for (a, b) in state2.lps.iter().zip(again.lps.iter()) {
             assert_eq!(a.pending.len(), b.pending.len());
             for (&(ea, ra), &(eb, rb)) in a.pending.iter().zip(b.pending.iter()) {
-                assert_eq!((ea.thread, ea.time, ea.kind, ea.count, ra), (eb.thread, eb.time, eb.kind, eb.count, rb));
+                assert_eq!(
+                    (ea.thread, ea.time, ea.kind, ea.count, ra),
+                    (eb.thread, eb.time, eb.kind, eb.count, rb)
+                );
             }
             assert_eq!(a.seen, b.seen);
             assert_eq!(a.local_time, b.local_time);
@@ -1372,5 +1597,32 @@ mod tests {
         let seq = run(1);
         let par = run(4);
         assert_eq!(seq, par, "parallel run diverged from sequential");
+    }
+
+    #[test]
+    fn parallel_ranges_cover_multiword_worklists() {
+        // 150 LPs span three bitset words, so the popcount-balanced
+        // range split actually produces distinct non-empty per-worker
+        // ranges (the 12-LP test above exercises the padding path).
+        let g = line_graph(150);
+        let injections: Vec<Injection> = (0..24)
+            .map(|t| Injection {
+                at_tick: t % 5,
+                lp: (t as usize * 13) % 150,
+                event: Event::injection(t + 1, t * 3, 5),
+            })
+            .collect();
+        let run = |parallelism: usize| {
+            let opts =
+                SimOptions { parallelism, parallel_min_active: 0, ..Default::default() };
+            let mut e =
+                engine_on(&g, 3, (0..150).map(|i| i % 3).collect(), injections.clone(), opts);
+            let stats = e.run_to_completion();
+            (stats, e.gvt(), e.take_epoch_counters())
+        };
+        let seq = run(1);
+        for p in [2usize, 3] {
+            assert_eq!(seq, run(p), "parallelism {p} diverged from sequential");
+        }
     }
 }

@@ -37,6 +37,18 @@ impl EventKind {
             EventKind::Rollback => rollback_base,
         }
     }
+
+    /// Canonical intra-tick ordering rank: anti-messages annihilate
+    /// before same-time forwards are processed, so `Rollback` sorts
+    /// first. Shared by the LP heaps, the snapshot pending-sort key and
+    /// the reference engine — one definition, one tie-break rule.
+    #[inline]
+    pub fn rank(self) -> u8 {
+        match self {
+            EventKind::Rollback => 0,
+            EventKind::ProcessForward | EventKind::ProcessOnly => 1,
+        }
+    }
 }
 
 /// One event in an LP's event list (paper Table II columns `event-list`,
@@ -146,5 +158,12 @@ mod tests {
     fn process_time_by_kind() {
         assert_eq!(EventKind::ProcessForward.base_process_time(4, 2), 4);
         assert_eq!(EventKind::Rollback.base_process_time(4, 2), 2);
+    }
+
+    #[test]
+    fn rollbacks_rank_before_forwards() {
+        assert_eq!(EventKind::Rollback.rank(), 0);
+        assert_eq!(EventKind::ProcessForward.rank(), 1);
+        assert_eq!(EventKind::ProcessOnly.rank(), 1);
     }
 }

@@ -21,7 +21,11 @@
 //!   crossover over a population initialized from the four hand-written
 //!   scenario genomes plus an [`epoch_locked_relocation`] template
 //!   (maximally concentrated hot spot relocating every refinement
-//!   epoch). Fully deterministic per seed.
+//!   epoch). Candidates carry their *engine configuration* — machine
+//!   speeds ([`FuzzFixture::speed_seed`]), transfer delays, and epoch
+//!   length ([`Mutator::mutate_config`]) — so the campaign fuzzes the
+//!   simulator's parameter space, not just the workload. Fully
+//!   deterministic per seed.
 //! * **Shrinking** ([`shrink`]): delta-debug the winning genome —
 //!   remove genes, halve thread counts and windows — to a minimal
 //!   schedule that still preserves the score (or the bug).
@@ -62,11 +66,17 @@ pub struct FuzzFixture {
     pub graph_seed: u64,
     pub nodes: usize,
     pub machines: usize,
+    /// Machine-speed heterogeneity seed. `0` (the default) keeps the
+    /// homogeneous pool every pre-config-fuzz corpus entry was measured
+    /// on; any other value derives a mild heterogeneous speed vector
+    /// (≈1:3 max spread) from an RNG stream separate from the graph
+    /// stream, so the graph itself never shifts under a speed reroll.
+    pub speed_seed: u64,
 }
 
 impl Default for FuzzFixture {
     fn default() -> Self {
-        FuzzFixture { graph_seed: 2011, nodes: 96, machines: 4 }
+        FuzzFixture { graph_seed: 2011, nodes: 96, machines: 4, speed_seed: 0 }
     }
 }
 
@@ -77,9 +87,20 @@ impl FuzzFixture {
         assert!(self.nodes > 0 && self.machines > 0, "degenerate fuzz fixture");
         let mut rng = Pcg32::new(self.graph_seed);
         let graph = preferential_attachment(self.nodes, 2, &mut rng);
-        let machines = MachineConfig::homogeneous(self.machines);
+        let machines = self.build_machines();
         let initial = grow_partition(&graph, &machines, &mut rng);
         (graph, machines, initial)
+    }
+
+    /// The machine pool alone (speeds normalized).
+    pub fn build_machines(&self) -> MachineConfig {
+        if self.speed_seed == 0 {
+            MachineConfig::homogeneous(self.machines)
+        } else {
+            let mut srng = Pcg32::new(self.speed_seed ^ 0x5EED_CAFE);
+            let raw: Vec<f64> = (0..self.machines).map(|_| 0.5 + srng.next_f64()).collect();
+            MachineConfig::from_speeds(&raw)
+        }
     }
 
     pub fn to_json(&self) -> JsonVal {
@@ -87,6 +108,7 @@ impl FuzzFixture {
             ("graph_seed".into(), JsonVal::Int(self.graph_seed)),
             ("nodes".into(), JsonVal::Int(self.nodes as u64)),
             ("machines".into(), JsonVal::Int(self.machines as u64)),
+            ("speed_seed".into(), JsonVal::Int(self.speed_seed)),
         ])
     }
 
@@ -100,12 +122,23 @@ impl FuzzFixture {
             graph_seed: field("graph_seed")?,
             nodes: field("nodes")? as usize,
             machines: field("machines")? as usize,
+            // Absent in pre-config-fuzz corpus files: default to the
+            // homogeneous pool those entries were measured on. A
+            // present-but-wrong-typed seed is a clean parse error.
+            speed_seed: match v.get("speed_seed") {
+                None => 0,
+                Some(raw) => raw.as_u64().ok_or_else(|| {
+                    format!("fixture: speed_seed {raw:?} is not an unsigned integer")
+                })?,
+            },
         })
     }
 }
 
-/// How a candidate schedule is evaluated.
-#[derive(Debug, Clone)]
+/// How a candidate schedule is evaluated. The simulator configuration
+/// knobs here (`epoch_ticks`, the transfer delays) are themselves part
+/// of the fuzzed search space — see [`Mutator::mutate_config`].
+#[derive(Debug, Clone, PartialEq)]
 pub struct EvalOptions {
     /// Simulation window per refinement epoch of the rebalanced arm.
     pub epoch_ticks: u64,
@@ -114,6 +147,13 @@ pub struct EvalOptions {
     /// the rebalanced arm prices moves at — lets campaigns hunt
     /// hysteresis pathologies at nonzero charge levels. Default 0.
     pub migration_charge: f64,
+    /// Wall-clock delay of a cross-machine event transfer
+    /// (`SimOptions::inter_machine_delay`). Default 3, matching the
+    /// engine default every pre-config-fuzz corpus entry replays under.
+    pub inter_machine_delay: u64,
+    /// Wall-clock delay of an intra-machine event transfer
+    /// (`SimOptions::intra_machine_delay`). Default 0.
+    pub intra_machine_delay: u64,
     /// Safety cap per arm (a truncated rebalanced arm scores as a
     /// finding — the workload outran the balancer).
     pub max_ticks: u64,
@@ -128,6 +168,8 @@ impl Default for EvalOptions {
             epoch_ticks: 150,
             framework: Framework::A,
             migration_charge: 0.0,
+            inter_machine_delay: 3,
+            intra_machine_delay: 0,
             max_ticks: 400_000,
             oracle: true,
         }
@@ -140,6 +182,8 @@ impl EvalOptions {
             ("epoch_ticks".into(), JsonVal::Int(self.epoch_ticks)),
             ("framework".into(), JsonVal::Str(format!("{}", self.framework))),
             ("migration_charge".into(), JsonVal::Num(self.migration_charge)),
+            ("inter_machine_delay".into(), JsonVal::Int(self.inter_machine_delay)),
+            ("intra_machine_delay".into(), JsonVal::Int(self.intra_machine_delay)),
             ("max_ticks".into(), JsonVal::Int(self.max_ticks)),
             ("oracle".into(), JsonVal::Bool(self.oracle)),
         ])
@@ -150,6 +194,15 @@ impl EvalOptions {
             v.get(k)
                 .and_then(JsonVal::as_u64)
                 .ok_or_else(|| format!("eval: missing integer field {k:?}"))
+        };
+        // Absent in pre-config-fuzz corpus files: default to the engine
+        // defaults those entries were measured under. Wrong-typed values
+        // are clean parse errors, never a silent default.
+        let opt_field = |k: &str, default: u64| match v.get(k) {
+            None => Ok(default),
+            Some(raw) => raw
+                .as_u64()
+                .ok_or_else(|| format!("eval: {k} {raw:?} is not an unsigned integer")),
         };
         Ok(EvalOptions {
             epoch_ticks: field("epoch_ticks")?,
@@ -176,6 +229,8 @@ impl EvalOptions {
                     c
                 }
             },
+            inter_machine_delay: opt_field("inter_machine_delay", 3)?,
+            intra_machine_delay: opt_field("intra_machine_delay", 0)?,
             max_ticks: field("max_ticks")?,
             oracle: v.get("oracle").and_then(JsonVal::as_bool).unwrap_or(true),
         })
@@ -339,7 +394,12 @@ pub fn evaluate(
     schedule.validate(graph.node_count())?;
     let injections = schedule.compile(&graph);
     let options = DynamicOptions {
-        sim: SimOptions { max_ticks: eval.max_ticks, ..Default::default() },
+        sim: SimOptions {
+            max_ticks: eval.max_ticks,
+            inter_machine_delay: eval.inter_machine_delay,
+            intra_machine_delay: eval.intra_machine_delay,
+            ..Default::default()
+        },
         epoch_ticks: eval.epoch_ticks,
         framework: eval.framework,
         migration_charge: eval.migration_charge,
@@ -554,6 +614,60 @@ impl Mutator {
         out
     }
 
+    /// Mutate the engine *configuration* a candidate is scored under
+    /// rather than its schedule: reroll (or zero) the machine-speed
+    /// heterogeneity seed, retune the transfer delays, or rescale the
+    /// refinement epoch. One arm per call; every product stays inside
+    /// the search envelope (`inter <= 9`, `intra <= inter`,
+    /// `epoch_ticks` in `[40, horizon]`). The graph seed, node count
+    /// and machine count are deliberately never touched — candidates
+    /// keep comparing on the same topology.
+    pub fn mutate_config(
+        &self,
+        fixture: &FuzzFixture,
+        eval: &EvalOptions,
+        horizon: u64,
+        rng: &mut Pcg32,
+    ) -> (FuzzFixture, EvalOptions) {
+        let mut fixture = *fixture;
+        let mut eval = eval.clone();
+        match rng.index(4) {
+            // Reroll machine speeds; occasionally fall back to the
+            // homogeneous pool so the search can retreat from a dead
+            // end. `| 1` keeps a reroll distinct from "homogeneous".
+            0 => {
+                fixture.speed_seed = if fixture.speed_seed != 0 && rng.chance(0.25) {
+                    0
+                } else {
+                    rng.next_u64() | 1
+                };
+            }
+            // Retune the cross-machine transfer delay (0 = free wires,
+            // 9 = triple the engine default — straggler-rollback heavy).
+            1 => {
+                eval.inter_machine_delay = rng.gen_below(10) as u64;
+                eval.intra_machine_delay =
+                    eval.intra_machine_delay.min(eval.inter_machine_delay);
+            }
+            // Intra-machine delay never exceeds the cross-machine one.
+            2 => {
+                eval.intra_machine_delay =
+                    rng.gen_below(eval.inter_machine_delay as u32 + 1) as u64;
+            }
+            // Halve or double the refinement epoch (phase-alignment
+            // pathologies live at both extremes).
+            _ => {
+                let scaled = if rng.chance(0.5) {
+                    eval.epoch_ticks.saturating_mul(2)
+                } else {
+                    eval.epoch_ticks / 2
+                };
+                eval.epoch_ticks = scaled.clamp(40, horizon.max(40));
+            }
+        }
+        (fixture, eval)
+    }
+
     /// Restore the schedule invariants after an edit: clamp every gene
     /// into range, rebalance thread counts to the shared budget, and
     /// re-sort into monotone start order.
@@ -724,12 +838,17 @@ impl Default for FuzzOptions {
     }
 }
 
-/// One worst-case schedule a campaign produced.
+/// One worst-case finding a campaign produced: the schedule genome
+/// plus the exact engine configuration (fixture + eval settings) it
+/// scored worst under — the configuration is part of the search space,
+/// so it must persist with the schedule for the replay to reproduce.
 #[derive(Debug, Clone)]
 pub struct FoundSchedule {
     /// 1-based rank by score (1 = worst found).
     pub rank: usize,
     pub name: String,
+    pub fixture: FuzzFixture,
+    pub eval: EvalOptions,
     pub schedule: DriftSchedule,
     pub objectives: Objectives,
     pub genes_before_shrink: usize,
@@ -803,22 +922,31 @@ pub fn epoch_locked_relocation(
     }
 }
 
+/// One search point: the schedule genome together with the engine
+/// configuration it is evaluated under. Mutation touches either half.
+#[derive(Debug, Clone, PartialEq)]
+struct Candidate {
+    fixture: FuzzFixture,
+    eval: EvalOptions,
+    schedule: DriftSchedule,
+}
+
 fn admit(
-    sched: DriftSchedule,
+    cand: Candidate,
     obj: Objectives,
-    elites: &mut Vec<(DriftSchedule, Objectives)>,
-    found: &mut Vec<(DriftSchedule, Objectives)>,
+    elites: &mut Vec<(Candidate, Objectives)>,
+    found: &mut Vec<(Candidate, Objectives)>,
 ) {
-    let by_score = |a: &(DriftSchedule, Objectives), b: &(DriftSchedule, Objectives)| {
+    let by_score = |a: &(Candidate, Objectives), b: &(Candidate, Objectives)| {
         b.1.score().partial_cmp(&a.1.score()).unwrap_or(std::cmp::Ordering::Equal)
     };
-    if !found.iter().any(|(s, _)| *s == sched) {
-        found.push((sched.clone(), obj.clone()));
+    if !found.iter().any(|(c, _)| *c == cand) {
+        found.push((cand.clone(), obj.clone()));
         found.sort_by(by_score);
         found.truncate(32);
     }
-    if !elites.iter().any(|(s, _)| *s == sched) {
-        elites.push((sched, obj));
+    if !elites.iter().any(|(c, _)| *c == cand) {
+        elites.push((cand, obj));
         elites.sort_by(by_score);
         elites.truncate(6);
     }
@@ -852,8 +980,13 @@ pub fn run_fuzz(options: &FuzzOptions) -> Result<FuzzOutcome, String> {
     };
     let mut handwritten = Vec::new();
     let mut handwritten_best_gap = 0.0f64;
-    let mut elites: Vec<(DriftSchedule, Objectives)> = Vec::new();
-    let mut found: Vec<(DriftSchedule, Objectives)> = Vec::new();
+    let mut elites: Vec<(Candidate, Objectives)> = Vec::new();
+    let mut found: Vec<(Candidate, Objectives)> = Vec::new();
+    let base = |schedule: DriftSchedule| Candidate {
+        fixture: options.fixture,
+        eval: options.eval.clone(),
+        schedule,
+    };
     for kind in ScenarioKind::ALL {
         let (genome, _) = kind.genome(&graph, &scen_opts, &mut rng);
         evals += 1;
@@ -870,7 +1003,7 @@ pub fn run_fuzz(options: &FuzzOptions) -> Result<FuzzOutcome, String> {
             );
         }
         handwritten_best_gap = handwritten_best_gap.max(obj.gap);
-        admit(genome, obj.clone(), &mut elites, &mut found);
+        admit(base(genome), obj.clone(), &mut elites, &mut found);
         handwritten.push((kind, obj));
     }
     if evals < options.budget {
@@ -880,17 +1013,20 @@ pub fn run_fuzz(options: &FuzzOptions) -> Result<FuzzOutcome, String> {
         if options.verbose {
             println!("  template epoch-locked-relocation gap {:.3}", obj.gap);
         }
-        admit(template, obj, &mut elites, &mut found);
+        admit(base(template), obj, &mut elites, &mut found);
     }
 
-    // Hill-climb with restarts.
+    // Hill-climb with restarts. Mutation touches the schedule genome
+    // or (one time in four on the mutate arm) the engine configuration
+    // itself — machine speeds, transfer delays, epoch length — so a
+    // campaign also searches the simulator's own parameter space.
     let mut best_score = found.first().map(|(_, o)| o.score()).unwrap_or(0.0);
     let mut attempts = 0usize;
     while evals < options.budget && attempts < options.budget.saturating_mul(20) {
         attempts += 1;
         let roll = rng.next_f64();
         let candidate = if elites.is_empty() || roll < 0.15 {
-            mutator.random_schedule(options.horizon_ticks, options.hop_limit, &mut rng)
+            base(mutator.random_schedule(options.horizon_ticks, options.hop_limit, &mut rng))
         } else if roll < 0.35 && elites.len() >= 2 {
             let i = rng.index(elites.len());
             let mut j = rng.index(elites.len());
@@ -898,40 +1034,57 @@ pub fn run_fuzz(options: &FuzzOptions) -> Result<FuzzOutcome, String> {
                 j = (j + 1) % elites.len();
             }
             let (a, b) = (elites[i].0.clone(), elites[j].0.clone());
-            mutator.crossover(&a, &b, &mut rng)
+            let schedule = mutator.crossover(&a.schedule, &b.schedule, &mut rng);
+            // The crossed schedule inherits parent a's configuration.
+            Candidate { schedule, ..a }
         } else {
             let parent = elites[rng.index(elites.len())].0.clone();
-            mutator.mutate(&parent, &mut rng)
+            if rng.chance(0.25) {
+                let (fixture, eval) = mutator.mutate_config(
+                    &parent.fixture,
+                    &parent.eval,
+                    options.horizon_ticks,
+                    &mut rng,
+                );
+                Candidate { fixture, eval, schedule: parent.schedule }
+            } else {
+                let schedule = mutator.mutate(&parent.schedule, &mut rng);
+                Candidate { schedule, ..parent }
+            }
         };
-        if candidate.validate(graph.node_count()).is_err() {
+        if candidate.schedule.validate(graph.node_count()).is_err() {
             continue; // operators should keep validity; never score junk
         }
         evals += 1;
-        let obj = evaluate(&options.fixture, &candidate, &options.eval)?;
+        let obj = evaluate(&candidate.fixture, &candidate.schedule, &candidate.eval)?;
         if obj.score() > best_score {
             best_score = obj.score();
             if options.verbose {
                 println!(
-                    "  [{evals:>4}/{:>4}] new worst case: score {:.3}, gap {:.3} ({} genes, rollbacks {}, transfers {})",
+                    "  [{evals:>4}/{:>4}] new worst case: score {:.3}, gap {:.3} ({} genes, rollbacks {}, transfers {}, speeds {}, delays {}/{}, epoch {})",
                     options.budget,
                     obj.score(),
                     obj.gap,
-                    candidate.genes.len(),
+                    candidate.schedule.genes.len(),
                     obj.rollbacks,
-                    obj.transfers
+                    obj.transfers,
+                    if candidate.fixture.speed_seed == 0 { "homogeneous".into() } else { format!("seed {}", candidate.fixture.speed_seed) },
+                    candidate.eval.inter_machine_delay,
+                    candidate.eval.intra_machine_delay,
+                    candidate.eval.epoch_ticks,
                 );
             }
         }
         admit(candidate, obj, &mut elites, &mut found);
     }
 
-    // Shrink the winners.
-    let winners: Vec<(DriftSchedule, Objectives)> =
+    // Shrink the winners (each under its own found configuration).
+    let winners: Vec<(Candidate, Objectives)> =
         found.iter().take(options.top_k.max(1)).cloned().collect();
     let shrink_budget_each = (options.budget / 4).clamp(8, 120);
     let mut out_found = Vec::new();
-    for (rank, (sched, obj)) in winners.into_iter().enumerate() {
-        let genes_before = sched.genes.len();
+    for (rank, (cand, obj)) in winners.into_iter().enumerate() {
+        let genes_before = cand.schedule.genes.len();
         let (small, small_obj) = if options.shrink {
             let floor = if obj.is_bug() {
                 0.0 // the predicate is "bug preserved", not the score
@@ -942,11 +1095,11 @@ pub fn run_fuzz(options: &FuzzOptions) -> Result<FuzzOutcome, String> {
                 obj.score() * 0.9
             };
             let (s, o, used) =
-                shrink(&options.fixture, &sched, &obj, &options.eval, floor, shrink_budget_each);
+                shrink(&cand.fixture, &cand.schedule, &obj, &cand.eval, floor, shrink_budget_each);
             evals += used;
             (s, o)
         } else {
-            (sched, obj)
+            (cand.schedule.clone(), obj)
         };
         if options.verbose {
             println!(
@@ -967,6 +1120,8 @@ pub fn run_fuzz(options: &FuzzOptions) -> Result<FuzzOutcome, String> {
                 rank + 1,
                 if small_obj.is_bug() { "-bug" } else { "" }
             ),
+            fixture: cand.fixture,
+            eval: cand.eval,
             schedule: small,
             objectives: small_obj,
             genes_before_shrink: genes_before,
@@ -1076,24 +1231,20 @@ pub fn load_corpus(dir: impl AsRef<Path>) -> Result<Vec<FuzzCase>, String> {
 
 /// Persist a campaign's found schedules under `dir` as
 /// `<name>.json` (committed seed entries use the `seed-` prefix and are
-/// never overwritten by this). The campaign's evaluation settings are
-/// embedded so replays reproduce the stored objectives exactly.
-/// Returns the written paths.
-pub fn save_corpus(
-    dir: impl AsRef<Path>,
-    outcome: &FuzzOutcome,
-    fixture: &FuzzFixture,
-    eval: &EvalOptions,
-) -> std::io::Result<Vec<PathBuf>> {
+/// never overwritten by this). Each finding carries the exact fixture
+/// and evaluation settings it scored under — the configuration is part
+/// of the fuzzed space — so replays reproduce the stored objectives
+/// exactly. Returns the written paths.
+pub fn save_corpus(dir: impl AsRef<Path>, outcome: &FuzzOutcome) -> std::io::Result<Vec<PathBuf>> {
     let dir = dir.as_ref();
     fs::create_dir_all(dir)?;
     let mut written = Vec::new();
     for f in &outcome.found {
         let case = FuzzCase {
             name: f.name.clone(),
-            fixture: *fixture,
+            fixture: f.fixture,
             schedule: f.schedule.clone(),
-            eval: Some(eval.clone()),
+            eval: Some(f.eval.clone()),
             objectives: Some(f.objectives.clone()),
         };
         let path = dir.join(format!("{}.json", f.name));
@@ -1108,7 +1259,7 @@ mod tests {
     use super::*;
 
     fn tiny_fixture() -> FuzzFixture {
-        FuzzFixture { graph_seed: 11, nodes: 48, machines: 3 }
+        FuzzFixture { graph_seed: 11, nodes: 48, machines: 3, speed_seed: 0 }
     }
 
     fn tiny_eval(oracle: bool) -> EvalOptions {
@@ -1233,13 +1384,15 @@ mod tests {
             found: vec![FoundSchedule {
                 rank: 1,
                 name: "found-test-r1".into(),
+                fixture,
+                eval: tiny_eval(false),
                 schedule: schedule.clone(),
                 objectives: obj.clone(),
                 genes_before_shrink: schedule.genes.len(),
             }],
             evaluations: 1,
         };
-        let written = save_corpus(&dir, &outcome, &fixture, &tiny_eval(false)).unwrap();
+        let written = save_corpus(&dir, &outcome).unwrap();
         assert_eq!(written.len(), 1);
         let corpus = load_corpus(&dir).unwrap();
         assert_eq!(corpus.len(), 1);
@@ -1286,7 +1439,119 @@ mod tests {
         assert_eq!(a.found.len(), b.found.len());
         for (x, y) in a.found.iter().zip(&b.found) {
             assert_eq!(x.schedule, y.schedule);
+            assert_eq!(x.fixture, y.fixture);
+            assert_eq!(x.eval, y.eval);
             assert!(x.objectives.bit_eq(&y.objectives));
         }
+    }
+
+    /// Heterogeneous speed derivation is deterministic, distinct from
+    /// the homogeneous pool, and graph-stable: rerolling only the
+    /// speed seed never shifts the topology under a candidate.
+    #[test]
+    fn speed_seed_derives_speeds_without_touching_the_graph() {
+        let homo = tiny_fixture();
+        let hetero = FuzzFixture { speed_seed: 7, ..homo };
+        let (g0, m0, _) = homo.build();
+        let (g1, m1, _) = hetero.build();
+        let (g2, m2, _) = hetero.build();
+        assert_eq!(g0.node_count(), g1.node_count());
+        assert_eq!(g0.edge_count(), g1.edge_count(), "speed reroll shifted the graph");
+        assert_eq!(m1.count(), m0.count());
+        assert_eq!(m1.speeds(), m2.speeds(), "speed derivation is not deterministic");
+        assert_ne!(m1.speeds(), m0.speeds(), "speed_seed != 0 must change the pool");
+        let total: f64 = m1.speeds().iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "speeds must stay normalized: {total}");
+    }
+
+    /// The differential oracle holds on a fully non-default
+    /// configuration — heterogeneous machines plus retuned transfer
+    /// delays — the integration point config fuzzing exists to stress.
+    #[test]
+    fn oracle_agrees_on_non_default_configurations() {
+        let fixture = FuzzFixture { speed_seed: 41, ..tiny_fixture() };
+        let eval = EvalOptions {
+            inter_machine_delay: 5,
+            intra_machine_delay: 1,
+            epoch_ticks: 80,
+            ..tiny_eval(true)
+        };
+        let mut rng = Pcg32::new(17);
+        let schedule = tiny_mutator().random_schedule(400, 4, &mut rng);
+        let obj = evaluate(&fixture, &schedule, &eval).unwrap();
+        assert!(!obj.oracle_divergence, "engine diverged under non-default config");
+        assert_eq!(obj.descent_violations, 0, "Thm 4.1 violated: {obj:?}");
+        assert!(!obj.rebalanced_truncated, "tiny workload must drain: {obj:?}");
+    }
+
+    /// Config mutation keeps every knob inside the search envelope.
+    #[test]
+    fn mutate_config_stays_in_bounds() {
+        let mutator = tiny_mutator();
+        let mut rng = Pcg32::new(23);
+        let horizon = 500u64;
+        let mut fixture = tiny_fixture();
+        let mut eval = tiny_eval(false);
+        let mut config_changed = 0usize;
+        for _ in 0..300 {
+            let (f, e) = mutator.mutate_config(&fixture, &eval, horizon, &mut rng);
+            if f != fixture || e != eval {
+                config_changed += 1;
+            }
+            fixture = f;
+            eval = e;
+            assert!(eval.inter_machine_delay <= 9);
+            assert!(eval.intra_machine_delay <= eval.inter_machine_delay);
+            assert!((40..=horizon).contains(&eval.epoch_ticks));
+            assert_eq!(fixture.graph_seed, tiny_fixture().graph_seed);
+            assert_eq!(fixture.nodes, tiny_fixture().nodes);
+            assert_eq!(fixture.machines, tiny_fixture().machines);
+        }
+        assert!(config_changed > 200, "mutation arms mostly no-ops: {config_changed}/300");
+    }
+
+    /// Pre-config-fuzz corpus JSON (no speed_seed, no delay fields)
+    /// parses to the exact configuration those entries were measured
+    /// under; wrong-typed fields are clean errors, never silent
+    /// defaults.
+    #[test]
+    fn config_fields_default_for_legacy_json_and_reject_bad_types() {
+        let legacy_fixture = FuzzFixture::from_json(
+            &parse_json(r#"{"graph_seed":2011,"nodes":96,"machines":4}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(legacy_fixture.speed_seed, 0, "legacy fixtures are homogeneous");
+        let bad_fixture = FuzzFixture::from_json(
+            &parse_json(r#"{"graph_seed":2011,"nodes":96,"machines":4,"speed_seed":"x"}"#)
+                .unwrap(),
+        );
+        assert!(bad_fixture.is_err(), "string speed_seed must be rejected");
+
+        let legacy_eval = EvalOptions::from_json(
+            &parse_json(r#"{"epoch_ticks":120,"framework":"A","max_ticks":200000,"oracle":false}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(legacy_eval.inter_machine_delay, 3, "legacy evals use the engine default");
+        assert_eq!(legacy_eval.intra_machine_delay, 0);
+        let bad_eval = EvalOptions::from_json(
+            &parse_json(
+                r#"{"epoch_ticks":120,"framework":"A","inter_machine_delay":"3","max_ticks":200000,"oracle":false}"#,
+            )
+            .unwrap(),
+        );
+        assert!(bad_eval.is_err(), "string delay must be rejected");
+
+        // Non-default configs round-trip exactly through JSON.
+        let fixture = FuzzFixture { speed_seed: 99, ..FuzzFixture::default() };
+        let back = FuzzFixture::from_json(&parse_json(&fixture.to_json().render()).unwrap());
+        assert_eq!(back.unwrap(), fixture);
+        let eval = EvalOptions {
+            inter_machine_delay: 7,
+            intra_machine_delay: 2,
+            ..EvalOptions::default()
+        };
+        let back = EvalOptions::from_json(&parse_json(&eval.to_json().render()).unwrap()).unwrap();
+        assert_eq!(back, eval);
     }
 }

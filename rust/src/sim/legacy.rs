@@ -1,0 +1,991 @@
+//! The pre-rewrite (PR 2–6 era) hot path, retained verbatim as the
+//! measured **baseline** for the data-oriented rewrite of [`super::lp`]
+//! / [`super::engine`] (DESIGN.md §11).
+//!
+//! `bench_simulator` runs [`LegacyEngine`] and [`super::SimEngine`] on
+//! the same fixture and publishes both LP-ticks/s numbers in the
+//! `hotpath` group of `results/BENCH_sim.json`, asserting the final
+//! [`SimStats`] are equal — so the before/after comparison doubles as a
+//! differential test of the rewrite. This module deliberately keeps the
+//! old layouts: per-LP `HashMap<ThreadId, SlotIdx>` thread-slot map,
+//! `HashSet<ThreadId>` seen-set, per-history-entry `Vec<NodeId>`
+//! forward lists, struct-keyed heaps, and the sorted-`Vec` active
+//! worklist with a `Vec<bool>` mask. Do not "fix" it — its whole value
+//! is staying what the rewrite replaced.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::Barrier;
+
+use crate::graph::{Graph, NodeId};
+use crate::partition::{MachineConfig, MachineId, Partition};
+use crate::sim::engine::{EpochCounters, Injection, SimOptions, SimStats};
+use crate::sim::event::{Event, EventKind, SimTime, ThreadId, WallTime};
+
+#[derive(Debug, Clone)]
+struct HistoryEntry {
+    event: Event,
+    forwarded_to: Vec<NodeId>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Busy {
+    event: Event,
+    done_at: WallTime,
+}
+
+enum StartOutcome {
+    Nothing,
+    Started { rolled_back: usize, cancellations: Vec<(NodeId, Event)> },
+    RolledBack { rolled_back: usize, cancellations: Vec<(NodeId, Event)> },
+}
+
+#[inline]
+fn kind_rank(kind: EventKind) -> u8 {
+    match kind {
+        EventKind::Rollback => 0,
+        _ => 1,
+    }
+}
+
+type SlotIdx = u32;
+
+#[derive(Debug, Clone, Default)]
+struct Slot {
+    gen: u32,
+    ev: Option<Event>,
+    ready_at: WallTime,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct ReadyKey {
+    time: SimTime,
+    rank: u8,
+    thread: ThreadId,
+    slot: SlotIdx,
+    gen: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct DelayKey {
+    ready_at: WallTime,
+    slot: SlotIdx,
+    gen: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct TimeKey {
+    time: SimTime,
+    slot: SlotIdx,
+    gen: u32,
+}
+
+/// The old pointer-chasing LP: hash-map thread index, hash-set seen
+/// filter, per-entry forward `Vec`s.
+#[derive(Debug, Clone, Default)]
+struct Lp {
+    slots: Vec<Slot>,
+    free: Vec<SlotIdx>,
+    live: usize,
+    ready: BinaryHeap<Reverse<ReadyKey>>,
+    delayed: BinaryHeap<Reverse<DelayKey>>,
+    times: BinaryHeap<Reverse<TimeKey>>,
+    thread_slot: HashMap<ThreadId, SlotIdx>,
+    seen: HashSet<ThreadId>,
+    local_time: SimTime,
+    busy: Option<Busy>,
+    history: Vec<HistoryEntry>,
+    rollbacks: u64,
+}
+
+impl Lp {
+    fn insert_event(&mut self, ev: Event, now: WallTime) {
+        let ready_at = now + ev.tick;
+        let ev = Event { tick: 0, ..ev };
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(Slot::default());
+                (self.slots.len() - 1) as SlotIdx
+            }
+        };
+        let gen = {
+            let s = &mut self.slots[slot as usize];
+            s.ev = Some(ev);
+            s.ready_at = ready_at;
+            s.gen
+        };
+        if ev.kind != EventKind::Rollback {
+            self.thread_slot.entry(ev.thread).or_insert(slot);
+        }
+        if ready_at <= now {
+            self.ready.push(Reverse(ReadyKey {
+                time: ev.time,
+                rank: kind_rank(ev.kind),
+                thread: ev.thread,
+                slot,
+                gen,
+            }));
+        } else {
+            self.delayed.push(Reverse(DelayKey { ready_at, slot, gen }));
+        }
+        self.times.push(Reverse(TimeKey { time: ev.time, slot, gen }));
+        self.live += 1;
+    }
+
+    fn remove_slot(&mut self, slot: SlotIdx) -> Event {
+        let s = &mut self.slots[slot as usize];
+        let ev = s.ev.take().expect("removing an empty slot");
+        s.gen = s.gen.wrapping_add(1);
+        self.free.push(slot);
+        self.live -= 1;
+        if ev.kind != EventKind::Rollback {
+            if let Some(&mapped) = self.thread_slot.get(&ev.thread) {
+                if mapped == slot {
+                    self.thread_slot.remove(&ev.thread);
+                }
+            }
+        }
+        ev
+    }
+
+    #[inline]
+    fn slot_live(&self, slot: SlotIdx, gen: u32) -> bool {
+        let s = &self.slots[slot as usize];
+        s.gen == gen && s.ev.is_some()
+    }
+
+    fn promote(&mut self, now: WallTime) {
+        while let Some(&Reverse(key)) = self.delayed.peek() {
+            if key.ready_at > now {
+                break;
+            }
+            self.delayed.pop();
+            if !self.slot_live(key.slot, key.gen) {
+                continue;
+            }
+            let ev = self.slots[key.slot as usize].ev.expect("live slot has an event");
+            self.ready.push(Reverse(ReadyKey {
+                time: ev.time,
+                rank: kind_rank(ev.kind),
+                thread: ev.thread,
+                slot: key.slot,
+                gen: key.gen,
+            }));
+        }
+    }
+
+    fn peek_ready(&mut self, now: WallTime) -> Option<SlotIdx> {
+        self.promote(now);
+        while let Some(&Reverse(key)) = self.ready.peek() {
+            if self.slot_live(key.slot, key.gen) {
+                return Some(key.slot);
+            }
+            self.ready.pop();
+        }
+        None
+    }
+
+    fn earliest_event_at(&mut self, now: WallTime) -> Option<WallTime> {
+        if self.peek_ready(now).is_some() {
+            return Some(now);
+        }
+        while let Some(&Reverse(key)) = self.delayed.peek() {
+            if self.slot_live(key.slot, key.gen) {
+                return Some(key.ready_at);
+            }
+            self.delayed.pop();
+        }
+        None
+    }
+
+    fn receive(&mut self, ev: Event, now: WallTime) {
+        if ev.kind == EventKind::Rollback {
+            if let Some(&slot) = self.thread_slot.get(&ev.thread) {
+                self.remove_slot(slot);
+                self.seen.remove(&ev.thread);
+                return;
+            }
+        } else {
+            self.seen.insert(ev.thread);
+        }
+        self.insert_event(ev, now);
+    }
+
+    fn has_seen(&self, thread: ThreadId) -> bool {
+        self.seen.contains(&thread)
+    }
+
+    fn rollback_to(
+        &mut self,
+        horizon: SimTime,
+        transfer_delay: WallTime,
+        now: WallTime,
+    ) -> (usize, Vec<(NodeId, Event)>) {
+        let mut cancellations = Vec::new();
+        let mut restored = 0;
+        let mut kept = Vec::with_capacity(self.history.len());
+        for entry in std::mem::take(&mut self.history) {
+            if entry.event.time > horizon {
+                restored += 1;
+                for &nb in &entry.forwarded_to {
+                    cancellations.push((nb, entry.event.rollback_for(transfer_delay)));
+                }
+                self.insert_event(Event { tick: 0, ..entry.event }, now);
+            } else {
+                kept.push(entry);
+            }
+        }
+        self.history = kept;
+        self.local_time = self.local_time.min(horizon);
+        if restored > 0 {
+            self.rollbacks += 1;
+        }
+        (restored, cancellations)
+    }
+
+    fn process_rollback(
+        &mut self,
+        ev: Event,
+        transfer_delay: WallTime,
+        now: WallTime,
+    ) -> (usize, Vec<(NodeId, Event)>) {
+        if let Some(pos) = self.history.iter().position(|h| h.event.thread == ev.thread) {
+            let target_time = self.history[pos].event.time;
+            let (restored, cancellations) =
+                self.rollback_to(target_time.saturating_sub(1), transfer_delay, now);
+            if let Some(&slot) = self.thread_slot.get(&ev.thread) {
+                self.remove_slot(slot);
+            }
+            self.seen.remove(&ev.thread);
+            return (restored, cancellations);
+        }
+        (0, Vec::new())
+    }
+
+    fn start_next(
+        &mut self,
+        now: WallTime,
+        occupancy_cost: impl Fn(EventKind) -> WallTime,
+        transfer_delay: WallTime,
+    ) -> StartOutcome {
+        debug_assert!(self.busy.is_none());
+        let Some(slot) = self.peek_ready(now) else {
+            return StartOutcome::Nothing;
+        };
+        let ev = self.remove_slot(slot);
+        match ev.kind {
+            EventKind::Rollback => {
+                let (rolled_back, cancellations) = self.process_rollback(ev, transfer_delay, now);
+                let cost = occupancy_cost(EventKind::Rollback).max(1);
+                self.busy = Some(Busy { event: ev, done_at: now + cost - 1 });
+                StartOutcome::RolledBack { rolled_back, cancellations }
+            }
+            _ => {
+                let mut rolled_back = 0;
+                let mut cancellations = Vec::new();
+                if ev.time < self.local_time {
+                    let (r, c) = self.rollback_to(ev.time, transfer_delay, now);
+                    rolled_back = r;
+                    cancellations = c;
+                }
+                self.local_time = self.local_time.max(ev.time);
+                let cost = occupancy_cost(ev.kind).max(1);
+                self.busy = Some(Busy { event: ev, done_at: now + cost - 1 });
+                StartOutcome::Started { rolled_back, cancellations }
+            }
+        }
+    }
+
+    fn complete_busy(&mut self, now: WallTime) -> Option<Event> {
+        match self.busy {
+            Some(b) if b.done_at <= now => {
+                self.busy = None;
+                Some(b.event)
+            }
+            _ => None,
+        }
+    }
+
+    fn retire(&mut self, event: Event, forwarded_to: Vec<NodeId>) {
+        debug_assert_ne!(event.kind, EventKind::Rollback);
+        self.history.push(HistoryEntry { event, forwarded_to });
+    }
+
+    fn fossil_collect(&mut self, gvt: SimTime) {
+        self.history.retain(|h| h.event.time >= gvt);
+    }
+
+    fn min_pending_time(&mut self) -> Option<SimTime> {
+        while let Some(&Reverse(key)) = self.times.peek() {
+            if self.slot_live(key.slot, key.gen) {
+                return Some(key.time);
+            }
+            self.times.pop();
+        }
+        None
+    }
+
+    fn gvt_contribution(&mut self) -> Option<SimTime> {
+        let busy = self.busy.as_ref().map(|b| b.event.time);
+        match (busy, self.min_pending_time()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (None, None) => None,
+        }
+    }
+
+    fn idle_and_empty(&self) -> bool {
+        self.busy.is_none() && self.live == 0
+    }
+
+    fn queue_len(&self) -> usize {
+        self.live
+    }
+}
+
+fn occupancy_cost(
+    part: &Partition,
+    machines: &MachineConfig,
+    options: &SimOptions,
+    k: MachineId,
+    kind: EventKind,
+) -> WallTime {
+    let base =
+        kind.base_process_time(options.base_process_time, options.rollback_process_time);
+    let resident = part.count(k) as f64;
+    let speed_scale = machines.speed(k) * machines.count() as f64;
+    ((resident * base as f64 / speed_scale).ceil() as WallTime).max(1)
+}
+
+fn transfer_delay(part: &Partition, options: &SimOptions, from: NodeId, to: NodeId) -> WallTime {
+    if part.machine_of(from) == part.machine_of(to) {
+        options.intra_machine_delay
+    } else {
+        options.inter_machine_delay
+    }
+}
+
+type OutMsg = (NodeId, Event, NodeId);
+
+struct RawSlice<T>(*mut T);
+
+impl<T> Clone for RawSlice<T> {
+    fn clone(&self) -> Self {
+        RawSlice(self.0)
+    }
+}
+impl<T> Copy for RawSlice<T> {}
+unsafe impl<T: Send> Send for RawSlice<T> {}
+unsafe impl<T: Send> Sync for RawSlice<T> {}
+
+impl<T> RawSlice<T> {
+    fn new(p: *mut T) -> Self {
+        RawSlice(p)
+    }
+    /// # Safety
+    /// Caller must hold exclusive logical ownership of index `i` in the
+    /// current phase.
+    #[inline]
+    unsafe fn get(self, i: usize) -> *mut T {
+        self.0.add(i)
+    }
+    /// # Safety
+    /// Caller must guarantee no concurrent `&mut` to index `i`.
+    #[inline]
+    unsafe fn get_const(self, i: usize) -> *const T {
+        self.0.add(i) as *const T
+    }
+}
+
+struct BarrierGuard<'a> {
+    barrier: &'a Barrier,
+    remaining: u8,
+}
+
+impl<'a> BarrierGuard<'a> {
+    fn new(barrier: &'a Barrier, phases: u8) -> Self {
+        BarrierGuard { barrier, remaining: phases }
+    }
+
+    fn wait(&mut self) {
+        self.barrier.wait();
+        self.remaining -= 1;
+    }
+}
+
+impl Drop for BarrierGuard<'_> {
+    fn drop(&mut self) {
+        for _ in 0..self.remaining {
+            self.barrier.wait();
+        }
+    }
+}
+
+#[derive(Default)]
+struct WorkerOut {
+    cancels: Vec<OutMsg>,
+    fwds: Vec<OutMsg>,
+    events_processed: u64,
+    events_forwarded: u64,
+    cross_machine_forwards: u64,
+    rollbacks: u64,
+    antimessages_sent: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_phase1(
+    tick: WallTime,
+    my: &[NodeId],
+    graph: &Graph,
+    part: &Partition,
+    machines: &MachineConfig,
+    options: &SimOptions,
+    lps: RawSlice<Lp>,
+    ev_lp: RawSlice<u64>,
+    rb_lp: RawSlice<u64>,
+    xf_lp: RawSlice<u64>,
+    fw_he: RawSlice<u64>,
+    barrier: &Barrier,
+) -> WorkerOut {
+    let mut out = WorkerOut::default();
+    let mut sync = BarrierGuard::new(barrier, 3);
+    for &i in my {
+        let lp = unsafe { &mut *lps.get(i) };
+        if lp.busy.is_some() {
+            continue;
+        }
+        let machine = part.machine_of(i);
+        let cost_rollback = occupancy_cost(part, machines, options, machine, EventKind::Rollback);
+        let cost_normal =
+            occupancy_cost(part, machines, options, machine, EventKind::ProcessForward);
+        let outcome = lp.start_next(
+            tick,
+            |kind| match kind {
+                EventKind::Rollback => cost_rollback,
+                _ => cost_normal,
+            },
+            options.inter_machine_delay,
+        );
+        match outcome {
+            StartOutcome::Nothing => {}
+            StartOutcome::Started { rolled_back, cancellations }
+            | StartOutcome::RolledBack { rolled_back, cancellations } => {
+                if rolled_back > 0 {
+                    unsafe { *rb_lp.get(i) += 1 };
+                    out.rollbacks += 1;
+                }
+                out.antimessages_sent += cancellations.len() as u64;
+                for (nb, ev) in cancellations {
+                    let mut ev = ev;
+                    ev.tick = transfer_delay(part, options, i, nb);
+                    out.cancels.push((nb, ev, i));
+                }
+            }
+        }
+    }
+    sync.wait();
+    let mut completed = Vec::new();
+    for &i in my {
+        let lp = unsafe { &mut *lps.get(i) };
+        if let Some(done) = lp.complete_busy(tick) {
+            completed.push((i, done));
+        }
+    }
+    sync.wait();
+    let mut retires = Vec::new();
+    for &(i, done) in &completed {
+        unsafe { *ev_lp.get(i) += 1 };
+        out.events_processed += 1;
+        if done.kind == EventKind::Rollback {
+            continue;
+        }
+        let mut forwarded_to = Vec::new();
+        if done.count > 0 {
+            let machine = part.machine_of(i);
+            let row = graph.row_offset(i);
+            for (slot, &nb) in graph.neighbors(i).iter().enumerate() {
+                let nb_seen = unsafe { (*lps.get_const(nb)).has_seen(done.thread) };
+                if nb_seen {
+                    continue;
+                }
+                let delay = transfer_delay(part, options, i, nb);
+                out.fwds.push((nb, done.forwarded(options.hop_latency, delay), i));
+                forwarded_to.push(nb);
+                out.events_forwarded += 1;
+                unsafe { *fw_he.get(row + slot) += 1 };
+                if part.machine_of(nb) != machine {
+                    out.cross_machine_forwards += 1;
+                    unsafe { *xf_lp.get(i) += 1 };
+                }
+            }
+        }
+        retires.push((i, done, forwarded_to));
+    }
+    sync.wait();
+    for (i, done, forwarded_to) in retires {
+        let lp = unsafe { &mut *lps.get(i) };
+        lp.retire(done, forwarded_to);
+    }
+    out
+}
+
+/// The pre-rewrite engine, frozen. Same semantics and options as
+/// [`super::SimEngine`]; only the data layout differs.
+pub struct LegacyEngine<'g> {
+    graph: &'g Graph,
+    machines: MachineConfig,
+    part: Partition,
+    lps: Vec<Lp>,
+    options: SimOptions,
+    stats: SimStats,
+    gvt: SimTime,
+    injections: Vec<Injection>,
+    inj_prefix_min: Vec<SimTime>,
+    epoch: EpochCounters,
+    active: Vec<NodeId>,
+    is_active: Vec<bool>,
+    newly_active: Vec<NodeId>,
+    active_scratch: Vec<NodeId>,
+    fossil_cursor: usize,
+    outbox_cancel: Vec<OutMsg>,
+    outbox_fwd: Vec<OutMsg>,
+}
+
+impl<'g> LegacyEngine<'g> {
+    pub fn new(
+        graph: &'g Graph,
+        machines: MachineConfig,
+        part: Partition,
+        options: SimOptions,
+        mut injections: Vec<Injection>,
+    ) -> Self {
+        assert_eq!(part.node_count(), graph.node_count());
+        assert_eq!(part.machine_count(), machines.count());
+        injections.sort_by_key(|inj| std::cmp::Reverse(inj.at_tick));
+        let mut inj_prefix_min = Vec::with_capacity(injections.len());
+        let mut m = SimTime::MAX;
+        for inj in &injections {
+            m = m.min(inj.event.time);
+            inj_prefix_min.push(m);
+        }
+        LegacyEngine {
+            graph,
+            lps: vec![Lp::default(); graph.node_count()],
+            machines,
+            part,
+            options,
+            stats: SimStats::default(),
+            gvt: 0,
+            injections,
+            inj_prefix_min,
+            epoch: EpochCounters::for_graph(graph),
+            active: Vec::new(),
+            is_active: vec![false; graph.node_count()],
+            newly_active: Vec::new(),
+            active_scratch: Vec::new(),
+            fossil_cursor: 0,
+            outbox_cancel: Vec::new(),
+            outbox_fwd: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    pub fn gvt(&self) -> SimTime {
+        self.gvt
+    }
+
+    pub fn epoch_counters(&self) -> &EpochCounters {
+        &self.epoch
+    }
+
+    fn transfer_delay(&self, from: NodeId, to: NodeId) -> WallTime {
+        transfer_delay(&self.part, &self.options, from, to)
+    }
+
+    fn activate(&mut self, i: NodeId) {
+        if !self.is_active[i] {
+            self.lps[i].fossil_collect(self.gvt);
+            self.is_active[i] = true;
+            self.newly_active.push(i);
+        }
+    }
+
+    fn merge_newly_active(&mut self) {
+        if self.newly_active.is_empty() {
+            return;
+        }
+        self.newly_active.sort_unstable();
+        self.active_scratch.clear();
+        self.active_scratch.reserve(self.active.len() + self.newly_active.len());
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.active.len() && b < self.newly_active.len() {
+            if self.active[a] < self.newly_active[b] {
+                self.active_scratch.push(self.active[a]);
+                a += 1;
+            } else {
+                self.active_scratch.push(self.newly_active[b]);
+                b += 1;
+            }
+        }
+        self.active_scratch.extend_from_slice(&self.active[a..]);
+        self.active_scratch.extend_from_slice(&self.newly_active[b..]);
+        std::mem::swap(&mut self.active, &mut self.active_scratch);
+        self.newly_active.clear();
+    }
+
+    fn sweep_inactive(&mut self) {
+        let lps = &self.lps;
+        let is_active = &mut self.is_active;
+        self.active.retain(|&i| {
+            if lps[i].idle_and_empty() {
+                is_active[i] = false;
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    fn deliver_injections(&mut self, tick: WallTime) {
+        while let Some(inj) = self.injections.last().copied() {
+            if inj.at_tick > tick {
+                break;
+            }
+            self.injections.pop();
+            self.activate(inj.lp);
+            self.lps[inj.lp].receive(inj.event, tick);
+        }
+    }
+
+    fn injections_time_min(&self) -> Option<SimTime> {
+        let len = self.injections.len();
+        if len > 0 {
+            Some(self.inj_prefix_min[len - 1])
+        } else {
+            None
+        }
+    }
+
+    fn compute_gvt(&mut self) -> SimTime {
+        let mut gvt = SimTime::MAX;
+        let active = std::mem::take(&mut self.active);
+        for &i in &active {
+            if let Some(t) = self.lps[i].gvt_contribution() {
+                gvt = gvt.min(t);
+            }
+        }
+        self.active = active;
+        if let Some(t) = self.injections_time_min() {
+            gvt = gvt.min(t);
+        }
+        if gvt == SimTime::MAX {
+            self.lps.iter().map(|l| l.local_time).max().unwrap_or(0)
+        } else {
+            gvt
+        }
+    }
+
+    pub fn drained(&self) -> bool {
+        self.injections.is_empty() && self.active.is_empty() && self.newly_active.is_empty()
+    }
+
+    #[allow(clippy::needless_range_loop)] // index loop: `self.lps[i]` needs &mut
+    fn fast_forward(&mut self, tick: WallTime, tick_limit: WallTime) -> Option<WallTime> {
+        let limit = tick_limit.min(self.options.max_ticks);
+        let mut dt = limit.saturating_sub(tick);
+        if dt == 0 {
+            return None;
+        }
+        if self.options.trace_every > 0 {
+            if tick % self.options.trace_every == 0 {
+                return None;
+            }
+            dt = dt.min(self.options.trace_every - tick % self.options.trace_every);
+        }
+        if let Some(inj) = self.injections.last() {
+            debug_assert!(inj.at_tick > tick, "due injection not delivered");
+            dt = dt.min(inj.at_tick - tick);
+        }
+        for idx in 0..self.active.len() {
+            let i = self.active[idx];
+            if let Some(b) = self.lps[i].busy {
+                if b.done_at <= tick {
+                    return None;
+                }
+                dt = dt.min(b.done_at - tick);
+            } else {
+                match self.lps[i].earliest_event_at(tick) {
+                    Some(t) if t <= tick => return None,
+                    Some(t) => dt = dt.min(t - tick),
+                    None => {}
+                }
+            }
+        }
+        (dt >= 1).then_some(dt)
+    }
+
+    fn phase1_sequential(&mut self, tick: WallTime) {
+        let active = std::mem::take(&mut self.active);
+        for &i in &active {
+            if self.lps[i].busy.is_some() {
+                continue;
+            }
+            let machine = self.part.machine_of(i);
+            let cost_rollback = occupancy_cost(
+                &self.part,
+                &self.machines,
+                &self.options,
+                machine,
+                EventKind::Rollback,
+            );
+            let cost_normal = occupancy_cost(
+                &self.part,
+                &self.machines,
+                &self.options,
+                machine,
+                EventKind::ProcessForward,
+            );
+            let outcome = self.lps[i].start_next(
+                tick,
+                |kind| match kind {
+                    EventKind::Rollback => cost_rollback,
+                    _ => cost_normal,
+                },
+                self.options.inter_machine_delay,
+            );
+            self.note_start_outcome(i, outcome);
+        }
+        for &i in &active {
+            if let Some(done) = self.lps[i].complete_busy(tick) {
+                self.note_completion(i, done);
+            }
+        }
+        self.active = active;
+    }
+
+    fn note_start_outcome(&mut self, i: NodeId, outcome: StartOutcome) {
+        match outcome {
+            StartOutcome::Nothing => {}
+            StartOutcome::Started { rolled_back, cancellations }
+            | StartOutcome::RolledBack { rolled_back, cancellations } => {
+                if rolled_back > 0 {
+                    self.epoch.rollbacks_by_lp[i] += 1;
+                    self.stats.rollbacks += 1;
+                }
+                self.stats.antimessages_sent += cancellations.len() as u64;
+                for (nb, ev) in cancellations {
+                    let mut ev = ev;
+                    ev.tick = self.transfer_delay(i, nb);
+                    self.outbox_cancel.push((nb, ev, i));
+                }
+            }
+        }
+    }
+
+    fn note_completion(&mut self, i: NodeId, done: Event) {
+        self.stats.events_processed += 1;
+        self.epoch.events_by_lp[i] += 1;
+        if done.kind == EventKind::Rollback {
+            return;
+        }
+        let graph = self.graph;
+        let mut forwarded_to = Vec::new();
+        if done.count > 0 {
+            let machine = self.part.machine_of(i);
+            let row = graph.row_offset(i);
+            for (slot, &nb) in graph.neighbors(i).iter().enumerate() {
+                if self.lps[nb].has_seen(done.thread) {
+                    continue;
+                }
+                let delay = self.transfer_delay(i, nb);
+                self.outbox_fwd.push((nb, done.forwarded(self.options.hop_latency, delay), i));
+                forwarded_to.push(nb);
+                self.stats.events_forwarded += 1;
+                self.epoch.forwards_by_half_edge[row + slot] += 1;
+                if self.part.machine_of(nb) != machine {
+                    self.stats.cross_machine_forwards += 1;
+                    self.epoch.cross_forwards_by_lp[i] += 1;
+                }
+            }
+        }
+        self.lps[i].retire(done, forwarded_to);
+    }
+
+    fn phase1_parallel(&mut self, tick: WallTime, workers: usize) {
+        let mut work: Vec<Vec<NodeId>> = vec![Vec::new(); workers];
+        for &i in &self.active {
+            work[self.part.machine_of(i) % workers].push(i);
+        }
+        let graph = self.graph;
+        let part = &self.part;
+        let machines = &self.machines;
+        let options = &self.options;
+        let lps = RawSlice::new(self.lps.as_mut_ptr());
+        let ev_lp = RawSlice::new(self.epoch.events_by_lp.as_mut_ptr());
+        let rb_lp = RawSlice::new(self.epoch.rollbacks_by_lp.as_mut_ptr());
+        let xf_lp = RawSlice::new(self.epoch.cross_forwards_by_lp.as_mut_ptr());
+        let fw_he = RawSlice::new(self.epoch.forwards_by_half_edge.as_mut_ptr());
+        let barrier = Barrier::new(workers);
+        let mut outs: Vec<WorkerOut> = Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for my in &work {
+                let barrier = &barrier;
+                handles.push(s.spawn(move || {
+                    worker_phase1(
+                        tick, my, graph, part, machines, options, lps, ev_lp, rb_lp, xf_lp,
+                        fw_he, barrier,
+                    )
+                }));
+            }
+            for h in handles {
+                outs.push(h.join().expect("sim worker panicked"));
+            }
+        });
+        for out in &mut outs {
+            self.stats.events_processed += out.events_processed;
+            self.stats.events_forwarded += out.events_forwarded;
+            self.stats.cross_machine_forwards += out.cross_machine_forwards;
+            self.stats.rollbacks += out.rollbacks;
+            self.stats.antimessages_sent += out.antimessages_sent;
+            self.outbox_cancel.append(&mut out.cancels);
+            self.outbox_fwd.append(&mut out.fwds);
+        }
+        self.outbox_cancel.sort_by_key(|&(_, _, from)| from);
+        self.outbox_fwd.sort_by_key(|&(_, _, from)| from);
+    }
+
+    fn deliver_outboxes(&mut self, tick: WallTime) {
+        let mut cancels = std::mem::take(&mut self.outbox_cancel);
+        for &(nb, ev, _) in &cancels {
+            self.deliver_one(nb, ev, tick);
+        }
+        cancels.clear();
+        self.outbox_cancel = cancels;
+        let mut fwds = std::mem::take(&mut self.outbox_fwd);
+        for &(nb, ev, _) in &fwds {
+            self.deliver_one(nb, ev, tick);
+        }
+        fwds.clear();
+        self.outbox_fwd = fwds;
+    }
+
+    fn deliver_one(&mut self, nb: NodeId, ev: Event, tick: WallTime) {
+        if ev.kind != EventKind::Rollback && self.lps[nb].has_seen(ev.thread) {
+            return;
+        }
+        self.activate(nb);
+        self.lps[nb].receive(ev, tick);
+    }
+
+    pub fn step_bounded(&mut self, tick_limit: WallTime) -> bool {
+        if self.drained() {
+            return false;
+        }
+        let tick = self.stats.ticks;
+        self.deliver_injections(tick);
+        self.merge_newly_active();
+
+        if let Some(dt) = self.fast_forward(tick, tick_limit) {
+            self.stats.ticks += dt;
+            self.epoch.ticks += dt;
+            return true;
+        }
+
+        let workers = if self.options.parallelism == 0 {
+            1
+        } else {
+            self.options.parallelism.min(self.machines.count())
+        };
+        if workers > 1 && self.active.len() >= self.options.parallel_min_active {
+            self.phase1_parallel(tick, workers);
+        } else {
+            self.phase1_sequential(tick);
+        }
+
+        self.deliver_outboxes(tick);
+        self.merge_newly_active();
+
+        self.gvt = self.compute_gvt();
+        let active = std::mem::take(&mut self.active);
+        for &i in &active {
+            self.lps[i].fossil_collect(self.gvt);
+        }
+        self.active = active;
+        self.sweep_inactive();
+
+        const FOSSIL_SWEEP_PER_TICK: usize = 64;
+        let n = self.lps.len();
+        for _ in 0..FOSSIL_SWEEP_PER_TICK.min(n) {
+            let i = self.fossil_cursor;
+            self.fossil_cursor = (self.fossil_cursor + 1) % n;
+            if !self.is_active[i] && !self.lps[i].history.is_empty() {
+                self.lps[i].fossil_collect(self.gvt);
+            }
+        }
+
+        self.stats.ticks += 1;
+        self.epoch.ticks += 1;
+        true
+    }
+
+    pub fn step(&mut self) -> bool {
+        self.step_bounded(self.options.max_ticks)
+    }
+
+    pub fn run_to_completion(&mut self) -> SimStats {
+        while self.stats.ticks < self.options.max_ticks {
+            if !self.step() {
+                break;
+            }
+        }
+        if !self.drained() {
+            self.stats.truncated = true;
+        }
+        self.stats.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// The legacy engine must agree with the rewritten engine on a
+    /// mixed fixture (floods, stragglers, cross-machine delays) — the
+    /// same differential check `bench_simulator` performs at scale.
+    #[test]
+    fn legacy_matches_rewritten_engine() {
+        let mut b = GraphBuilder::with_nodes(12);
+        for i in 0..11 {
+            b.add_edge(i, i + 1, 1.0);
+        }
+        b.add_edge(0, 6, 1.0);
+        let g = b.build();
+        let injections: Vec<Injection> = (0..8)
+            .map(|t| Injection {
+                at_tick: t,
+                lp: (t as usize * 3) % 12,
+                event: Event::injection(t + 1, t * 2, 4),
+            })
+            .collect();
+        let machines = MachineConfig::homogeneous(3);
+        let assignment: Vec<usize> = (0..12).map(|i| i % 3).collect();
+        let part = Partition::from_assignment(&g, 3, assignment.clone());
+        let mut old =
+            LegacyEngine::new(&g, machines.clone(), part, SimOptions::default(), injections.clone());
+        let part = Partition::from_assignment(&g, 3, assignment);
+        let mut new =
+            crate::sim::SimEngine::new(&g, machines, part, SimOptions::default(), injections);
+        let a = old.run_to_completion();
+        let b = new.run_to_completion();
+        assert_eq!(a, b, "legacy and rewritten engines diverged");
+        assert_eq!(old.gvt(), new.gvt());
+        assert_eq!(old.epoch_counters(), new.epoch_counters());
+    }
+}

@@ -8,13 +8,37 @@
 //! that *return* the anti-messages to send so the engine owns all
 //! message routing.
 //!
-//! # Indexed pending structure
+//! # Data-oriented layout (DESIGN.md §11)
 //!
-//! The original implementation kept `pending` as a flat `Vec<Event>` and
-//! linearly scanned it for the next ready event, the minimum pending
-//! timestamp (GVT contribution) and annihilation twins — O(queue) per
-//! tick per LP. This version indexes the pending set so every hot-path
-//! query is O(log queue) amortized or O(1):
+//! Thread ids are compact (scenario compilation numbers floods
+//! `1..=total_threads`), so everything previously keyed by a hash of the
+//! thread id is a dense array index instead:
+//!
+//! * the **per-thread slot map** (annihilation index: the pending
+//!   non-rollback twin of a thread) is a `Vec<SlotIdx>` with a
+//!   `NO_SLOT` sentinel — one bounds-checked load instead of a
+//!   `HashMap` probe;
+//! * the **seen set** (the "has it received this packet yet"
+//!   flood-forwarding filter of Fig. 6) is a `u64` bitset — `has_seen`
+//!   is the hottest read in the engine's fan-out phase;
+//! * both grow on demand and can be pre-sized once via
+//!   [`Lp::reserve_threads`] (the engine primes them with the maximum
+//!   injected thread id on first activation), which is what makes the
+//!   steady-state tick loop allocation-free (`alloc_steadystate.rs`);
+//! * **forward lists** live in a per-LP append-only arena
+//!   (`fwd_arena`): a history entry stores an `(offset, len)` span
+//!   instead of owning a `Vec<NodeId>`, so retiring an event copies a
+//!   few `usize`s into one growable buffer instead of allocating. Dead
+//!   spans (rollback or fossil collection) are reclaimed by an
+//!   amortized in-place compaction that slides live spans down
+//!   (history offsets are monotone, so `copy_within` never overlaps
+//!   wrongly);
+//! * **heap keys are packed integers**: the ready heap orders by
+//!   `((time << 1) | kind-rank, thread, (gen << 32) | slot)` — the same
+//!   total order as the old `(time, rank, thread, slot, gen)` struct
+//!   key, compared word-by-word with no padding.
+//!
+//! # Indexed pending structure
 //!
 //! * events live in a **slot slab** (`slots` + free list + per-slot
 //!   generation counters), so heap entries can reference them stably;
@@ -25,13 +49,9 @@
 //! * a **delayed heap** keyed by absolute ready wall-tick replaces the
 //!   per-tick transfer-delay countdown: an event received at wall tick
 //!   `now` with transfer delay `d` becomes ready at `now + d`, and is
-//!   promoted into the ready heap lazily. No per-tick work at all for
-//!   in-flight events — which is also what makes the engine's tick
+//!   promoted into the ready heap lazily — no per-tick work at all for
+//!   in-flight events, which is also what makes the engine's tick
 //!   fast-forward O(1) per skipped tick;
-//! * a **per-thread slot map** finds a pending non-rollback twin for
-//!   anti-message annihilation in O(1) (an LP holds at most one live
-//!   non-rollback event per thread — the flood-forwarding filter
-//!   guarantees it);
 //! * the minimum pending timestamp (the LP's GVT contribution) comes
 //!   from a third lazy min-heap keyed by event time — amortized
 //!   O(log queue) even when the minimum itself is removed.
@@ -40,19 +60,10 @@
 //! slot's generation, and stale heap entries are discarded on pop.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::BinaryHeap;
 
 use crate::graph::NodeId;
 use crate::sim::event::{Event, EventKind, SimTime, ThreadId, WallTime};
-
-/// A processed event retained for possible rollback, together with the
-/// forwards it generated (so anti-messages can chase them).
-#[derive(Debug, Clone)]
-pub struct HistoryEntry {
-    pub event: Event,
-    /// Neighbors this event's processing forwarded the thread to.
-    pub forwarded_to: Vec<NodeId>,
-}
 
 /// Busy state: the event being processed and the wall tick during whose
 /// phase-completion pass it finishes (absolute, not a countdown).
@@ -77,16 +88,10 @@ pub enum StartOutcome {
     RolledBack { rolled_back: usize, cancellations: Vec<(NodeId, Event)> },
 }
 
-/// Ordering rank of an event kind in the ready queue: rollbacks first.
-#[inline]
-fn kind_rank(kind: EventKind) -> u8 {
-    match kind {
-        EventKind::Rollback => 0,
-        _ => 1,
-    }
-}
-
 type SlotIdx = u32;
+
+/// Sentinel of the dense per-thread slot map: "no pending twin".
+const NO_SLOT: SlotIdx = SlotIdx::MAX;
 
 /// One slab slot. `gen` increments every time the slot is vacated, so
 /// stale heap entries (which carry the generation they were pushed
@@ -99,35 +104,50 @@ struct Slot {
     ready_at: WallTime,
 }
 
-/// Ready-heap key: total order `(time, kind-rank, thread)`; the slot
-/// index only breaks ties between byte-identical duplicate events.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct ReadyKey {
-    time: SimTime,
-    rank: u8,
-    thread: ThreadId,
-    slot: SlotIdx,
-    gen: u32,
+/// Ready-heap key `((time << 1) | kind-rank, thread, (gen << 32) | slot)`:
+/// total order `(time, kind-rank, thread)`; the packed slot word only
+/// breaks ties between byte-identical duplicate events.
+type ReadyKey = (u64, ThreadId, u64);
+
+/// Delayed-heap key: `(absolute readiness tick, packed slot)`.
+type DelayKey = (WallTime, u64);
+
+/// Time-heap key: `(event timestamp, packed slot)` (GVT contribution).
+type TimeKey = (SimTime, u64);
+
+/// Pack `(time, kind)` into the ready-heap major word. Times stay far
+/// below 2^63 (they grow by hop latencies from injection timestamps),
+/// so the shift is lossless; rollbacks rank 0 and win ties.
+#[inline]
+fn pack_tr(time: SimTime, kind: EventKind) -> u64 {
+    debug_assert!(time < (1 << 63), "event time overflows the packed heap key");
+    (time << 1) | kind.rank() as u64
 }
 
-/// Delayed-heap key: absolute readiness tick.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct DelayKey {
-    ready_at: WallTime,
-    slot: SlotIdx,
-    gen: u32,
+/// Pack `(slot, gen)` into one word ordered by generation then slot —
+/// any total order works here (ties are byte-identical duplicates; see
+/// `ReadyKey`), packing just makes the compare one instruction.
+#[inline]
+fn pack_slot(slot: SlotIdx, gen: u32) -> u64 {
+    ((gen as u64) << 32) | slot as u64
 }
 
-/// Time-heap key: the event timestamp (GVT contribution index).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-struct TimeKey {
-    time: SimTime,
-    slot: SlotIdx,
-    gen: u32,
+#[inline]
+fn unpack_slot(packed: u64) -> (SlotIdx, u32) {
+    (packed as u32, (packed >> 32) as u32)
+}
+
+/// A processed event retained for rollback; its forward list is the
+/// arena span `fwd_arena[off .. off + len]`.
+#[derive(Debug, Clone, Copy)]
+struct HistorySpan {
+    event: Event,
+    off: u32,
+    len: u32,
 }
 
 /// One logical process (Table II).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Lp {
     /// Slot slab holding the pending events.
     slots: Vec<Slot>,
@@ -143,41 +163,106 @@ pub struct Lp {
     /// contribution. Lazy (stale entries popped on query), so removing
     /// the current minimum costs O(log q), not a slab rescan.
     times: BinaryHeap<Reverse<TimeKey>>,
-    /// Pending non-rollback event slot per thread (annihilation index).
-    thread_slot: HashMap<ThreadId, SlotIdx>,
-    /// Threads present in `pending` or `history` — the "has it received
-    /// this packet yet" test used by the flood-forwarding rule.
-    pub seen: HashSet<ThreadId>,
+    /// Dense per-thread pending-twin slot (annihilation index),
+    /// `NO_SLOT` = none. Indexed by thread id.
+    thread_slot: Vec<SlotIdx>,
+    /// Seen-set bitset, bit `t` = thread `t` present in pending or
+    /// history — the flood-forwarding filter.
+    seen_words: Vec<u64>,
     /// Local virtual time (timestamp of last/current processed event).
     pub local_time: SimTime,
     /// Busy processing state (`status?`, absolute completion tick).
     pub busy: Option<Busy>,
-    /// Processed-event history (`*-history` columns).
-    pub history: Vec<HistoryEntry>,
+    /// Processed-event history (`*-history` columns) as arena spans.
+    history: Vec<HistorySpan>,
+    /// Append-only forward-list arena the history spans point into.
+    fwd_arena: Vec<NodeId>,
+    /// Arena entries still referenced by a history span (compaction
+    /// trigger: compact when at least half the arena is garbage).
+    arena_live: usize,
     /// Rollback counter (statistics).
     pub rollbacks: u64,
 }
 
-impl Default for Lp {
-    fn default() -> Self {
-        Lp {
-            slots: Vec::new(),
-            free: Vec::new(),
-            live: 0,
-            ready: BinaryHeap::new(),
-            delayed: BinaryHeap::new(),
-            times: BinaryHeap::new(),
-            thread_slot: HashMap::new(),
-            seen: HashSet::new(),
-            local_time: 0,
-            busy: None,
-            history: Vec::new(),
-            rollbacks: 0,
+impl Lp {
+    /// Pre-size the dense per-thread structures for thread ids
+    /// `< bound`. Idempotent and monotone; the engine calls this on
+    /// first activation with the maximum injected thread id, so the
+    /// steady-state hot path never grows them.
+    pub fn reserve_threads(&mut self, bound: usize) {
+        if self.thread_slot.len() < bound {
+            self.thread_slot.resize(bound, NO_SLOT);
+        }
+        let words = bound.div_ceil(64);
+        if self.seen_words.len() < words {
+            self.seen_words.resize(words, 0);
         }
     }
-}
 
-impl Lp {
+    /// Grow the dense thread structures to cover `thread` (fallback for
+    /// ids beyond any [`Self::reserve_threads`] bound).
+    #[inline]
+    fn ensure_thread(&mut self, thread: ThreadId) {
+        let ti = thread as usize;
+        if ti >= self.thread_slot.len() {
+            self.thread_slot.resize(ti + 1, NO_SLOT);
+        }
+        let wi = ti / 64;
+        if wi >= self.seen_words.len() {
+            self.seen_words.resize(wi + 1, 0);
+        }
+    }
+
+    /// Pending non-rollback twin of `thread`, if any.
+    #[inline]
+    fn twin_slot(&self, thread: ThreadId) -> Option<SlotIdx> {
+        self.thread_slot.get(thread as usize).copied().filter(|&s| s != NO_SLOT)
+    }
+
+    /// Has this LP seen the thread (pending or processed)? This is the
+    /// flood-forwarding filter of Fig. 6 — the hottest read of the
+    /// engine's fan-out phase, one bounds check + one bit test.
+    #[inline]
+    pub fn has_seen(&self, thread: ThreadId) -> bool {
+        let ti = thread as usize;
+        match self.seen_words.get(ti / 64) {
+            Some(&w) => (w >> (ti % 64)) & 1 == 1,
+            None => false,
+        }
+    }
+
+    /// Mark a thread seen (pending or processed). Public for snapshot
+    /// restore and tests; the hot path goes through [`Self::receive`].
+    #[inline]
+    pub fn mark_seen(&mut self, thread: ThreadId) {
+        self.ensure_thread(thread);
+        self.seen_words[thread as usize / 64] |= 1 << (thread % 64);
+    }
+
+    #[inline]
+    fn unmark_seen(&mut self, thread: ThreadId) {
+        let ti = thread as usize;
+        if let Some(w) = self.seen_words.get_mut(ti / 64) {
+            *w &= !(1 << (ti % 64));
+        }
+    }
+
+    /// Seen threads in ascending order (snapshot capture).
+    pub fn seen_threads(&self) -> impl Iterator<Item = ThreadId> + '_ {
+        self.seen_words.iter().enumerate().flat_map(|(wi, &word)| {
+            let mut bits = word;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as u64;
+                    bits &= bits - 1;
+                    Some((wi as u64) * 64 + b)
+                }
+            })
+        })
+    }
+
     /// Insert an event into the slab and the appropriate heap. The
     /// event's relative `tick` delay is converted to an absolute ready
     /// tick against `now` and then cleared.
@@ -213,26 +298,23 @@ impl Lp {
             // tolerated by keeping the first mapping, so an anti-message
             // annihilates the older twin — matching the linear-scan
             // reference stepper.
-            self.thread_slot.entry(ev.thread).or_insert(slot);
+            self.ensure_thread(ev.thread);
+            let entry = &mut self.thread_slot[ev.thread as usize];
+            if *entry == NO_SLOT {
+                *entry = slot;
+            }
         }
         if ready_at <= now {
-            self.ready.push(Reverse(ReadyKey {
-                time: ev.time,
-                rank: kind_rank(ev.kind),
-                thread: ev.thread,
-                slot,
-                gen,
-            }));
+            self.ready.push(Reverse((pack_tr(ev.time, ev.kind), ev.thread, pack_slot(slot, gen))));
         } else {
-            self.delayed.push(Reverse(DelayKey { ready_at, slot, gen }));
+            self.delayed.push(Reverse((ready_at, pack_slot(slot, gen))));
         }
-        self.times.push(Reverse(TimeKey { time: ev.time, slot, gen }));
+        self.times.push(Reverse((ev.time, pack_slot(slot, gen))));
         self.live += 1;
     }
 
-    /// Vacate a slot, maintaining the thread map and the cached time
-    /// minimum. Stale heap entries are left behind (generation bump
-    /// invalidates them).
+    /// Vacate a slot, maintaining the thread map. Stale heap entries
+    /// are left behind (generation bump invalidates them).
     fn remove_slot(&mut self, slot: SlotIdx) -> Event {
         let s = &mut self.slots[slot as usize];
         let ev = s.ev.take().expect("removing an empty slot");
@@ -240,9 +322,9 @@ impl Lp {
         self.free.push(slot);
         self.live -= 1;
         if ev.kind != EventKind::Rollback {
-            if let Some(&mapped) = self.thread_slot.get(&ev.thread) {
-                if mapped == slot {
-                    self.thread_slot.remove(&ev.thread);
+            if let Some(entry) = self.thread_slot.get_mut(ev.thread as usize) {
+                if *entry == slot {
+                    *entry = NO_SLOT;
                 }
             }
         }
@@ -259,24 +341,19 @@ impl Lp {
 
     /// Move events whose ready tick has arrived into the ready heap.
     fn promote(&mut self, now: WallTime) {
-        while let Some(&Reverse(key)) = self.delayed.peek() {
-            if key.ready_at > now {
+        while let Some(&Reverse((ready_at, packed))) = self.delayed.peek() {
+            if ready_at > now {
                 break;
             }
             self.delayed.pop();
-            if !self.slot_live(key.slot, key.gen) {
+            let (slot, gen) = unpack_slot(packed);
+            if !self.slot_live(slot, gen) {
                 continue;
             }
-            let s = &self.slots[key.slot as usize];
-            debug_assert_eq!(s.ready_at, key.ready_at);
+            let s = &self.slots[slot as usize];
+            debug_assert_eq!(s.ready_at, ready_at);
             let ev = s.ev.expect("live slot has an event");
-            self.ready.push(Reverse(ReadyKey {
-                time: ev.time,
-                rank: kind_rank(ev.kind),
-                thread: ev.thread,
-                slot: key.slot,
-                gen: key.gen,
-            }));
+            self.ready.push(Reverse((pack_tr(ev.time, ev.kind), ev.thread, packed)));
         }
     }
 
@@ -284,9 +361,10 @@ impl Lp {
     /// `(time, kind-rank, thread)` key, discarding stale heap entries.
     fn peek_ready(&mut self, now: WallTime) -> Option<SlotIdx> {
         self.promote(now);
-        while let Some(&Reverse(key)) = self.ready.peek() {
-            if self.slot_live(key.slot, key.gen) {
-                return Some(key.slot);
+        while let Some(&Reverse((_, _, packed))) = self.ready.peek() {
+            let (slot, gen) = unpack_slot(packed);
+            if self.slot_live(slot, gen) {
+                return Some(slot);
             }
             self.ready.pop();
         }
@@ -301,9 +379,10 @@ impl Lp {
         if self.peek_ready(now).is_some() {
             return Some(now);
         }
-        while let Some(&Reverse(key)) = self.delayed.peek() {
-            if self.slot_live(key.slot, key.gen) {
-                return Some(key.ready_at);
+        while let Some(&Reverse((ready_at, packed))) = self.delayed.peek() {
+            let (slot, gen) = unpack_slot(packed);
+            if self.slot_live(slot, gen) {
+                return Some(ready_at);
             }
             self.delayed.pop();
         }
@@ -317,58 +396,58 @@ impl Lp {
     pub fn receive(&mut self, ev: Event, now: WallTime) {
         if ev.kind == EventKind::Rollback {
             // Annihilate the in-flight (pending) twin if present.
-            if let Some(&slot) = self.thread_slot.get(&ev.thread) {
+            if let Some(slot) = self.twin_slot(ev.thread) {
                 self.remove_slot(slot);
-                self.seen.remove(&ev.thread);
+                self.unmark_seen(ev.thread);
                 return;
             }
         } else {
-            self.seen.insert(ev.thread);
+            self.mark_seen(ev.thread);
         }
         self.insert_event(ev, now);
     }
 
-    /// Has this LP seen the thread (pending or processed)? This is the
-    /// flood-forwarding filter of Fig. 6.
-    pub fn has_seen(&self, thread: ThreadId) -> bool {
-        self.seen.contains(&thread)
-    }
-
     /// Roll local state back so that all history entries with
-    /// `event.time > horizon` return to the pending set; returns the
+    /// `event.time > horizon` return to the pending set; appends the
     /// anti-messages for the forwards those entries had generated.
-    /// (Body of Fig. 4's restoration loop.)
+    /// (Body of Fig. 4's restoration loop.) Compacts `history` in
+    /// place; abandoned arena spans are reclaimed lazily.
     fn rollback_to(
         &mut self,
         horizon: SimTime,
         transfer_delay: WallTime,
         now: WallTime,
-    ) -> (usize, Vec<(NodeId, Event)>) {
-        let mut cancellations = Vec::new();
+        cancellations: &mut Vec<(NodeId, Event)>,
+    ) -> usize {
         let mut restored = 0;
-        let mut kept = Vec::with_capacity(self.history.len());
-        for entry in std::mem::take(&mut self.history) {
-            if entry.event.time > horizon {
+        let mut w = 0;
+        for r in 0..self.history.len() {
+            let h = self.history[r];
+            if h.event.time > horizon {
                 restored += 1;
-                for &nb in &entry.forwarded_to {
+                let start = h.off as usize;
+                for idx in start..start + h.len as usize {
                     // Anti-messages match on thread id at the receiver, so
                     // the parent event's own (thread, time) is sufficient.
-                    cancellations.push((nb, entry.event.rollback_for(transfer_delay)));
+                    cancellations
+                        .push((self.fwd_arena[idx], h.event.rollback_for(transfer_delay)));
                 }
+                self.arena_live -= h.len as usize;
                 // The event returns to the pending set to be re-executed
                 // immediately (no transfer delay: it is already local).
-                self.insert_event(Event { tick: 0, ..entry.event }, now);
+                self.insert_event(Event { tick: 0, ..h.event }, now);
             } else {
-                kept.push(entry);
+                self.history[w] = h;
+                w += 1;
             }
         }
-        self.history = kept;
+        self.history.truncate(w);
         // Local time falls back to the horizon.
         self.local_time = self.local_time.min(horizon);
         if restored > 0 {
             self.rollbacks += 1;
         }
-        (restored, cancellations)
+        restored
     }
 
     /// Consume a rollback anti-message aimed at `thread` (Fig. 5): if the
@@ -384,14 +463,19 @@ impl Lp {
         if let Some(pos) = self.history.iter().position(|h| h.event.thread == ev.thread) {
             let target_time = self.history[pos].event.time;
             // Undo everything after (and including) the cancelled event.
-            let (restored, cancellations) =
-                self.rollback_to(target_time.saturating_sub(1), transfer_delay, now);
+            let mut cancellations = Vec::new();
+            let restored = self.rollback_to(
+                target_time.saturating_sub(1),
+                transfer_delay,
+                now,
+                &mut cancellations,
+            );
             // The cancelled thread itself must not be re-executed: drop it
             // from pending (rollback_to restored it) and un-see it.
-            if let Some(&slot) = self.thread_slot.get(&ev.thread) {
+            if let Some(slot) = self.twin_slot(ev.thread) {
                 self.remove_slot(slot);
             }
-            self.seen.remove(&ev.thread);
+            self.unmark_seen(ev.thread);
             // Cancellations for the dropped event's own forwards were
             // already produced by rollback_to (it was in the restored set).
             return (restored, cancellations);
@@ -430,9 +514,8 @@ impl Lp {
                 let mut cancellations = Vec::new();
                 if ev.time < self.local_time {
                     // Straggler — Fig. 4 Process_noncausal_event.
-                    let (r, c) = self.rollback_to(ev.time, transfer_delay, now);
-                    rolled_back = r;
-                    cancellations = c;
+                    rolled_back =
+                        self.rollback_to(ev.time, transfer_delay, now, &mut cancellations);
                 }
                 self.local_time = self.local_time.max(ev.time);
                 let cost = occupancy_cost(ev.kind).max(1);
@@ -456,25 +539,94 @@ impl Lp {
     }
 
     /// Record a completed non-rollback event into history together with
-    /// the forwards it generated.
-    pub fn retire(&mut self, event: Event, forwarded_to: Vec<NodeId>) {
+    /// the forwards it generated. The forward list is copied into the
+    /// arena — no per-event allocation on the send path (the caller
+    /// reuses one scratch buffer across events).
+    pub fn retire(&mut self, event: Event, forwarded_to: &[NodeId]) {
         debug_assert_ne!(event.kind, EventKind::Rollback);
-        self.history.push(HistoryEntry { event, forwarded_to });
+        debug_assert!(self.fwd_arena.len() + forwarded_to.len() <= u32::MAX as usize);
+        let off = self.fwd_arena.len() as u32;
+        self.fwd_arena.extend_from_slice(forwarded_to);
+        self.arena_live += forwarded_to.len();
+        self.history.push(HistorySpan { event, off, len: forwarded_to.len() as u32 });
     }
 
     /// Fossil collection (App. B): drop history entries strictly older
     /// than the global virtual time — no rollback can ever reach them.
     /// Engines may defer this on idle LPs and catch up on reactivation.
     pub fn fossil_collect(&mut self, gvt: SimTime) {
-        self.history.retain(|h| h.event.time >= gvt);
+        let mut w = 0;
+        for r in 0..self.history.len() {
+            let h = self.history[r];
+            if h.event.time >= gvt {
+                self.history[w] = h;
+                w += 1;
+            } else {
+                self.arena_live -= h.len as usize;
+            }
+        }
+        self.history.truncate(w);
+        self.maybe_compact_arena();
+    }
+
+    /// Slide live spans to the front of the arena once at least half of
+    /// it is garbage (dead spans from rollbacks / fossil collection).
+    /// History offsets are strictly increasing, so every `copy_within`
+    /// moves a span left onto garbage or onto itself — in place, no
+    /// allocation, amortized O(1) per retired forward.
+    fn maybe_compact_arena(&mut self) {
+        let len = self.fwd_arena.len();
+        if len <= 64 || len <= 2 * self.arena_live {
+            return;
+        }
+        let mut w = 0usize;
+        for h in self.history.iter_mut() {
+            let start = h.off as usize;
+            let span_len = h.len as usize;
+            debug_assert!(w <= start);
+            self.fwd_arena.copy_within(start..start + span_len, w);
+            h.off = w as u32;
+            w += span_len;
+        }
+        debug_assert_eq!(w, self.arena_live);
+        self.fwd_arena.truncate(w);
+    }
+
+    /// Number of retained history entries.
+    pub fn history_len(&self) -> usize {
+        self.history.len()
+    }
+
+    /// Fast emptiness check for the engine's background fossil sweep.
+    #[inline]
+    pub fn history_is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+
+    /// Iterate retained history entries in retirement order, each with
+    /// its forward list resolved from the arena (snapshot capture).
+    pub fn history_entries(&self) -> impl Iterator<Item = (Event, &[NodeId])> + '_ {
+        self.history
+            .iter()
+            .map(|h| (h.event, &self.fwd_arena[h.off as usize..(h.off + h.len) as usize]))
+    }
+
+    /// Rebuild history from `(event, forward list)` pairs in retirement
+    /// order (snapshot restore).
+    pub fn restore_history(&mut self, entries: impl IntoIterator<Item = (Event, Vec<NodeId>)>) {
+        debug_assert!(self.history.is_empty() && self.fwd_arena.is_empty());
+        for (event, forwarded_to) in entries {
+            self.retire(event, &forwarded_to);
+        }
     }
 
     /// Lowest timestamp among pending events (regardless of delay), used
     /// in the GVT computation. Amortized O(log q) (lazy stale pops).
     pub fn min_pending_time(&mut self) -> Option<SimTime> {
-        while let Some(&Reverse(key)) = self.times.peek() {
-            if self.slot_live(key.slot, key.gen) {
-                return Some(key.time);
+        while let Some(&Reverse((time, packed))) = self.times.peek() {
+            let (slot, gen) = unpack_slot(packed);
+            if self.slot_live(slot, gen) {
+                return Some(time);
             }
             self.times.pop();
         }
@@ -546,7 +698,7 @@ mod tests {
     /// Collect pending events sorted for comparisons.
     fn pending_of(lp: &Lp) -> Vec<Event> {
         let mut v: Vec<Event> = lp.pending_events().copied().collect();
-        v.sort_by_key(|e| (e.time, kind_rank(e.kind), e.thread));
+        v.sort_by_key(|e| (e.time, e.kind.rank(), e.thread));
         v
     }
 
@@ -556,6 +708,7 @@ mod tests {
         lp.receive(Event::injection(5, 10, 2), 0);
         assert!(lp.has_seen(5));
         assert!(!lp.has_seen(6));
+        assert!(!lp.has_seen(1_000_000), "out-of-range thread is unseen");
         assert_eq!(lp.queue_len(), 1);
     }
 
@@ -655,10 +808,10 @@ mod tests {
         let mut lp = Lp::default();
         // Process event at t=20 that forwarded to neighbor 3.
         lp.local_time = 20;
-        lp.seen.insert(9);
+        lp.mark_seen(9);
         lp.retire(
             Event { thread: 9, time: 20, kind: EventKind::ProcessForward, tick: 0, count: 1 },
-            vec![3],
+            &[3],
         );
         // Straggler at t=10 arrives.
         lp.receive(Event::injection(4, 10, 0), 0);
@@ -682,15 +835,15 @@ mod tests {
     fn rollback_event_on_processed_thread_cascades() {
         let mut lp = Lp::default();
         lp.local_time = 30;
-        lp.seen.insert(1);
-        lp.seen.insert(2);
+        lp.mark_seen(1);
+        lp.mark_seen(2);
         lp.retire(
             Event { thread: 1, time: 10, kind: EventKind::ProcessForward, tick: 0, count: 1 },
-            vec![7],
+            &[7],
         );
         lp.retire(
             Event { thread: 2, time: 20, kind: EventKind::ProcessOnly, tick: 0, count: 0 },
-            vec![],
+            &[],
         );
         // Anti-message for thread 1 (t=10): must undo thread 2 as well.
         lp.receive(
@@ -719,12 +872,12 @@ mod tests {
         for t in [5u64, 10, 15] {
             lp.retire(
                 Event { thread: t, time: t, kind: EventKind::ProcessOnly, tick: 0, count: 0 },
-                vec![],
+                &[],
             );
         }
         lp.fossil_collect(10);
-        assert_eq!(lp.history.len(), 2);
-        assert!(lp.history.iter().all(|h| h.event.time >= 10));
+        assert_eq!(lp.history_len(), 2);
+        assert!(lp.history_entries().all(|(e, _)| e.time >= 10));
     }
 
     #[test]
@@ -785,13 +938,15 @@ mod tests {
         lp.receive(Event::injection(1, 30, 1), 5);
         lp.receive(Event::injection(2, 10, 1), 5);
         lp.receive(delayed, 5);
-        lp.seen.insert(99); // processed-history marker, restored separately
+        lp.mark_seen(99); // processed-history marker, restored separately
 
         let mut items: Vec<(Event, WallTime)> = lp.pending_with_ready_at().collect();
-        items.sort_by_key(|(e, r)| (e.time, kind_rank(e.kind), e.thread, e.count, *r));
+        items.sort_by_key(|(e, r)| (e.time, e.kind.rank(), e.thread, e.count, *r));
         let mut restored = Lp::default();
         restored.restore_pending(items.clone(), 5);
-        restored.seen = lp.seen.clone();
+        for t in lp.seen_threads() {
+            restored.mark_seen(t);
+        }
         restored.local_time = lp.local_time;
 
         assert_eq!(restored.queue_len(), lp.queue_len());
@@ -814,9 +969,9 @@ mod tests {
         }
         // A second capture from the restored LP yields the same multiset.
         let mut again: Vec<(Event, WallTime)> = restored.pending_with_ready_at().collect();
-        again.sort_by_key(|(e, r)| (e.time, kind_rank(e.kind), e.thread, e.count, *r));
+        again.sort_by_key(|(e, r)| (e.time, e.kind.rank(), e.thread, e.count, *r));
         let mut orig: Vec<(Event, WallTime)> = lp.pending_with_ready_at().collect();
-        orig.sort_by_key(|(e, r)| (e.time, kind_rank(e.kind), e.thread, e.count, *r));
+        orig.sort_by_key(|(e, r)| (e.time, e.kind.rank(), e.thread, e.count, *r));
         assert_eq!(again.len(), orig.len());
         for ((ea, ra), (eb, rb)) in again.iter().zip(orig.iter()) {
             assert_eq!((ea.thread, ea.time, ea.kind, ea.count, ra), (eb.thread, eb.time, eb.kind, eb.count, rb));
@@ -833,5 +988,83 @@ mod tests {
         let _ = lp.start_next(0, cost, 0);
         assert_eq!(lp.queue_len(), 9);
         assert_eq!(lp.pending_events().count(), 9);
+    }
+
+    #[test]
+    fn seen_threads_iterates_ascending_across_words() {
+        let mut lp = Lp::default();
+        for t in [200u64, 3, 64, 65, 0] {
+            lp.mark_seen(t);
+        }
+        let seen: Vec<ThreadId> = lp.seen_threads().collect();
+        assert_eq!(seen, vec![0, 3, 64, 65, 200]);
+        lp.unmark_seen(64);
+        let seen: Vec<ThreadId> = lp.seen_threads().collect();
+        assert_eq!(seen, vec![0, 3, 65, 200]);
+    }
+
+    #[test]
+    fn reserve_threads_presizes_and_is_idempotent() {
+        let mut lp = Lp::default();
+        lp.reserve_threads(130);
+        let slots_cap = lp.thread_slot.len();
+        let words = lp.seen_words.len();
+        assert!(slots_cap >= 130);
+        assert_eq!(words, 3, "130 threads span 3 bitset words");
+        // Receiving threads below the bound must not grow anything.
+        lp.receive(Event::injection(129, 5, 1), 0);
+        lp.receive(Event::injection(0, 6, 1), 0);
+        assert_eq!(lp.thread_slot.len(), slots_cap);
+        assert_eq!(lp.seen_words.len(), words);
+        lp.reserve_threads(64); // shrinking request is a no-op
+        assert_eq!(lp.thread_slot.len(), slots_cap);
+    }
+
+    #[test]
+    fn arena_compacts_in_place_preserving_history() {
+        let mut lp = Lp::default();
+        // Retire 40 events with 4 forwards each: arena = 160 entries.
+        for t in 0..40u64 {
+            let fwd = [1usize, 2, 3, 4];
+            lp.retire(
+                Event { thread: t + 1, time: t, kind: EventKind::ProcessForward, tick: 0, count: 1 },
+                &fwd,
+            );
+        }
+        assert_eq!(lp.fwd_arena.len(), 160);
+        // Collect the first 30: 120 arena entries die; compaction kicks
+        // in (160 > 2 * 40) and slides the 10 live spans down.
+        lp.fossil_collect(30);
+        assert_eq!(lp.history_len(), 10);
+        assert_eq!(lp.fwd_arena.len(), 40, "arena compacted to live spans");
+        assert_eq!(lp.arena_live, 40);
+        for (e, fwd) in lp.history_entries() {
+            assert!(e.time >= 30);
+            assert_eq!(fwd, &[1usize, 2, 3, 4]);
+        }
+    }
+
+    #[test]
+    fn history_round_trips_through_restore() {
+        let mut lp = Lp::default();
+        lp.retire(
+            Event { thread: 1, time: 10, kind: EventKind::ProcessForward, tick: 0, count: 2 },
+            &[5, 6],
+        );
+        lp.retire(
+            Event { thread: 2, time: 12, kind: EventKind::ProcessOnly, tick: 0, count: 0 },
+            &[],
+        );
+        let entries: Vec<(Event, Vec<NodeId>)> =
+            lp.history_entries().map(|(e, f)| (e, f.to_vec())).collect();
+        let mut restored = Lp::default();
+        restored.restore_history(entries.clone());
+        let back: Vec<(Event, Vec<NodeId>)> =
+            restored.history_entries().map(|(e, f)| (e, f.to_vec())).collect();
+        assert_eq!(back.len(), entries.len());
+        for ((ea, fa), (eb, fb)) in back.iter().zip(entries.iter()) {
+            assert_eq!((ea.thread, ea.time, ea.count), (eb.thread, eb.time, eb.count));
+            assert_eq!(fa, fb);
+        }
     }
 }

@@ -40,6 +40,7 @@ pub mod dynamic;
 pub mod engine;
 pub mod event;
 pub mod fuzz;
+pub mod legacy;
 pub mod lp;
 pub mod reference;
 pub mod scenario;

@@ -48,12 +48,12 @@ struct RefLp {
     rollbacks: u64,
 }
 
+/// The shared canonical intra-tick rank ([`EventKind::rank`]): one
+/// definition for the optimized engine, the snapshot sort key, and this
+/// reference stepper.
 #[inline]
 fn kind_rank(kind: EventKind) -> u8 {
-    match kind {
-        EventKind::Rollback => 0,
-        _ => 1,
-    }
+    kind.rank()
 }
 
 impl RefLp {

@@ -79,11 +79,7 @@ pub(crate) fn pending_sort_key(
     e: &Event,
     ready_at: WallTime,
 ) -> (SimTime, u8, ThreadId, u32, WallTime) {
-    let rank = match e.kind {
-        EventKind::Rollback => 0,
-        _ => 1,
-    };
-    (e.time, rank, e.thread, e.count, ready_at)
+    (e.time, e.kind.rank(), e.thread, e.count, ready_at)
 }
 
 /// Captured state of one LP (canonical order; see module docs).

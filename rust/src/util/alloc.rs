@@ -1,0 +1,95 @@
+//! A counting global allocator for allocation-regression tests.
+//!
+//! The engine's hot path is designed to be allocation-free once its
+//! arenas, heaps, and scratch buffers have grown to steady-state
+//! capacity (DESIGN.md §11). That claim is only enforceable if a test
+//! can *observe* heap traffic, so this module wraps [`System`] with
+//! per-thread allocation/deallocation counters. std-only: no jemalloc
+//! shims, no external crates.
+//!
+//! Usage (in an integration test binary, where the global allocator
+//! can be chosen without affecting the library):
+//!
+//! ```text
+//! #[global_allocator]
+//! static ALLOC: CountingAllocator = CountingAllocator;
+//! ...
+//! let before = alloc_count();
+//! hot_loop();
+//! assert_eq!(alloc_count() - before, 0);
+//! ```
+//!
+//! Counters are thread-local, so a test measures only its own thread's
+//! traffic — the parallel phase spawns scoped workers whose allocations
+//! land on their own counters, which is exactly right for asserting the
+//! *sequential* tick loop is allocation-free.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static DEALLOCS: Cell<u64> = const { Cell::new(0) };
+    static ALLOC_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Heap allocations performed by the current thread since it started
+/// (monotone; includes reallocations that obtained new memory).
+pub fn alloc_count() -> u64 {
+    ALLOCS.with(Cell::get)
+}
+
+/// Heap deallocations performed by the current thread.
+pub fn dealloc_count() -> u64 {
+    DEALLOCS.with(Cell::get)
+}
+
+/// Total bytes requested by the current thread's allocations.
+pub fn alloc_bytes() -> u64 {
+    ALLOC_BYTES.with(Cell::get)
+}
+
+/// A `#[global_allocator]` that delegates to [`System`] and counts
+/// every allocation on thread-local counters. Zero overhead beyond two
+/// thread-local increments per call; safe to install in any test
+/// binary.
+pub struct CountingAllocator;
+
+// SAFETY: delegates every operation verbatim to `System`, which
+// upholds the GlobalAlloc contract; the counter updates touch only
+// plain thread-local `Cell<u64>`s and cannot allocate or unwind.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+            ALLOC_BYTES.with(|c| c.set(c.get() + layout.size() as u64));
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        DEALLOCS.with(|c| c.set(c.get() + 1));
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            ALLOCS.with(|c| c.set(c.get() + 1));
+            ALLOC_BYTES.with(|c| c.set(c.get() + layout.size() as u64));
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            // A grow/shrink that returns memory counts as one
+            // allocation event: the hot path must not realloc either.
+            ALLOCS.with(|c| c.set(c.get() + 1));
+            ALLOC_BYTES.with(|c| c.set(c.get() + new_size as u64));
+        }
+        p
+    }
+}

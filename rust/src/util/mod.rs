@@ -4,6 +4,7 @@
 //! These exist because the offline build environment vendors no `rand`,
 //! `criterion`, `clap`, or `proptest`; see DESIGN.md §3 (Substitutions).
 
+pub mod alloc;
 pub mod bench;
 pub mod cli;
 pub mod rng;

@@ -1,0 +1,105 @@
+//! Steady-state allocation regression: the sequential engine tick loop
+//! must perform **zero heap allocations** once its arenas, heaps, slot
+//! slabs, and scratch buffers have warmed to peak capacity
+//! (DESIGN.md §11). This is the enforcement half of the data-oriented
+//! hot-path rewrite — without it, a stray per-event `Vec` or `HashMap`
+//! rehash can silently reappear.
+//!
+//! Method: install a counting `#[global_allocator]` (test binaries own
+//! their allocator choice; the library is untouched), drive a strictly
+//! periodic flood workload — identical waves, monotone timestamps —
+//! through a single-machine engine, warm up long enough for every
+//! capacity to reach its periodic peak, then assert the allocation
+//! counter does not move across the remaining waves.
+
+use gtip::graph::generators::preferential_attachment;
+use gtip::partition::initial::grow_partition;
+use gtip::partition::MachineConfig;
+use gtip::sim::engine::{Injection, SimEngine, SimOptions};
+use gtip::sim::event::Event;
+use gtip::util::alloc::{alloc_count, CountingAllocator};
+use gtip::util::rng::Pcg32;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+const NODES: usize = 32;
+/// Identical flood waves, `PERIOD` ticks apart. Each event occupies its
+/// LP for `NODES × base_process_time` wall ticks on the one machine
+/// (§6.1 occupancy), so a wave of `SOURCES` hop-3 floods drains well
+/// inside 512 ticks.
+const WAVES: u64 = 24;
+const WARMUP_WAVES: u64 = 8;
+const PERIOD: u64 = 512;
+const SOURCES: [usize; 4] = [1, 9, 17, 25];
+const HOPS: u32 = 3;
+
+fn periodic_engine(graph: &gtip::graph::Graph) -> SimEngine<'_> {
+    let machines = MachineConfig::homogeneous(1);
+    let mut rng = Pcg32::new(4242);
+    let initial = grow_partition(graph, &machines, &mut rng);
+    let mut injections = Vec::new();
+    for w in 0..WAVES {
+        for (j, &lp) in SOURCES.iter().enumerate() {
+            // Monotone timestamps across waves: wave w's floods can
+            // never straggle behind wave w-1's processed events, so the
+            // steady state is exactly periodic.
+            let thread = w * SOURCES.len() as u64 + j as u64;
+            let time = w * 4096 + j as u64 * 8;
+            injections.push(Injection {
+                at_tick: w * PERIOD,
+                lp,
+                event: Event::injection(thread, time, HOPS),
+            });
+        }
+    }
+    SimEngine::new(graph, machines, initial, SimOptions::default(), injections)
+}
+
+#[test]
+fn sequential_tick_loop_is_allocation_free_after_warmup() {
+    let mut rng = Pcg32::new(2011);
+    let graph = preferential_attachment(NODES, 2, &mut rng);
+    let mut engine = periodic_engine(&graph);
+
+    // Warm up: first waves grow every buffer to its periodic peak
+    // (thread-slot tables, seen bitsets, event heaps, history arenas,
+    // outboxes, scratch).
+    let warmup_until = WARMUP_WAVES * PERIOD;
+    while engine.stats().ticks < warmup_until && engine.step() {}
+    assert!(
+        !engine.drained(),
+        "workload drained during warmup — the steady-state segment is empty"
+    );
+    let events_before = engine.stats().events_processed;
+
+    // Measure: the remaining waves (plus the final drain) must not
+    // touch the heap at all.
+    let allocs_before = alloc_count();
+    while engine.step() {}
+    let alloc_delta = alloc_count() - allocs_before;
+
+    let stats = engine.stats();
+    assert!(engine.drained(), "engine never drained: {stats:?}");
+    assert!(!stats.truncated, "hit the tick cap: {stats:?}");
+    let events_measured = stats.events_processed - events_before;
+    assert!(
+        events_measured > 100,
+        "measured segment did too little work ({events_measured} events) to be meaningful"
+    );
+    assert_eq!(
+        alloc_delta, 0,
+        "steady-state tick loop allocated {alloc_delta} time(s) over {events_measured} events"
+    );
+}
+
+/// The counting allocator itself counts (sanity check of the
+/// instrument, not the engine).
+#[test]
+fn counting_allocator_observes_allocations() {
+    let before = alloc_count();
+    let v: Vec<u64> = Vec::with_capacity(64);
+    let after = alloc_count();
+    assert!(after > before, "Vec::with_capacity(64) did not register");
+    drop(v);
+}

@@ -63,6 +63,42 @@ fn corpus_replays_byte_identically() {
     }
 }
 
+/// The corpus exercises the engine-*configuration* axes the fuzzer
+/// searches (machine speeds, transfer delays), not just drift
+/// schedules: at least one committed case must pin a heterogeneous
+/// machine pool and non-default delays, and its stored configuration
+/// must round-trip and rebuild deterministically.
+#[test]
+fn corpus_covers_non_default_engine_configurations() {
+    let corpus = committed_fuzz_corpus();
+    let hetero = corpus
+        .iter()
+        .find(|c| c.name == "seed-hetero-config")
+        .expect("seed-hetero-config.json missing from the committed corpus");
+    assert_ne!(hetero.fixture.speed_seed, 0, "case must pin heterogeneous speeds");
+    let eval = hetero.eval_options();
+    let default = gtip::sim::fuzz::EvalOptions::default();
+    assert!(
+        eval.inter_machine_delay != default.inter_machine_delay
+            || eval.intra_machine_delay != default.intra_machine_delay,
+        "case must pin non-default transfer delays"
+    );
+    // The heterogeneous pool derives deterministically and differs
+    // from the homogeneous pool legacy fixtures build.
+    let (_, machines_a, _) = hetero.fixture.build();
+    let (_, machines_b, _) = hetero.fixture.build();
+    assert_eq!(machines_a.speeds(), machines_b.speeds());
+    let homogeneous =
+        gtip::sim::fuzz::FuzzFixture { speed_seed: 0, ..hetero.fixture }.build_machines();
+    assert_ne!(machines_a.speeds(), homogeneous.speeds());
+    // Legacy corpus entries (no speed_seed field) stay homogeneous.
+    for case in &corpus {
+        if case.name != "seed-hetero-config" {
+            assert_eq!(case.fixture.speed_seed, 0, "{}: unexpected speed_seed", case.name);
+        }
+    }
+}
+
 /// Thm 4.1 on every minimized schedule, both frameworks: no refinement
 /// epoch may raise the potential, the differential oracle must agree,
 /// and neither arm may hit the tick cap.
