@@ -121,6 +121,12 @@ type PendingTransfer = (NodeId, MachineId, MachineId, Option<Vec<f64>>);
 /// leader (`coordinator::net`) and the multi-process `gtip serve`
 /// worker drive it directly with a single endpoint, and failure tests
 /// run it against partially-dead rings.
+///
+/// Each invocation runs one refinement round at a *fixed* fleet size
+/// `k`: elastic membership (eviction to K−1 on a death, admission
+/// back to K+1 on a join, DESIGN.md §10) happens strictly *between*
+/// rounds at epoch boundaries, so the loop never observes the fleet
+/// changing mid-round.
 pub fn machine_loop<B: Bus>(
     mut actor: MachineActor,
     bus: &B,

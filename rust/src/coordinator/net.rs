@@ -60,21 +60,43 @@
 //! renumber themselves by their position in the survivor list (the
 //! leader, wire 0, is always logical 0). The simulation itself is
 //! restored leader-side from the last epoch-boundary snapshot
-//! (`sim::snapshot`, DESIGN.md §10). Elastic *join* is the same
-//! machinery run in reverse — `Join` is reserved on the wire, and a
-//! joining `gtip serve` enters at the next cluster formation, where the
-//! refinement game simply descends from the old assignment extended
-//! with an empty machine (Thm 4.1 holds from any feasible start).
+//! (`sim::snapshot`, DESIGN.md §10).
+//!
+//! ## Elastic join (wire v4)
+//!
+//! Elastic *join* is the same machinery run in reverse. A joining
+//! `gtip serve --join` re-binds its original address slot, dials the
+//! leader, and sends `Join { machine, speed }`; the leader queues the
+//! request and admits it at the **next epoch boundary** — never
+//! mid-epoch, because the boundary is where a consistent checkpoint
+//! exists. Admission ([`ClusterLeader::admit`]) extends the mesh the
+//! way `Restore` shrinks it: the leader dials the joiner back, calls
+//! [`TcpEndpoint::extend`] (the inverse of [`TcpEndpoint::compact`] —
+//! the joiner re-occupies its immutable wire id, survivors renumber by
+//! position in the grown member list), broadcasts `Admit` (members +
+//! renormalized speeds), ships the newcomer a full `Setup` plus the
+//! epoch-boundary snapshot as a `Catchup` payload, and blocks on an
+//! `AdmitAck` from every member. Survivors dial the joiner and accept
+//! its return dial before acking; a member that cannot reach the
+//! joiner simply withholds its ack, the barrier times out, and the
+//! leader rolls the mesh back to the old membership with a `Restore`
+//! barrier — the fleet stays at K and the run continues. The
+//! refinement game then migrates LPs toward the empty newcomer on the
+//! next epoch (Thm 4.1 descends from any feasible start; DESIGN.md
+//! §9/§10).
 //!
 //! Known limitation: diagnosis is evidence-based (send errors + missing
 //! stats reports), so a worker that is alive but silent past the grace
 //! period is treated as dead and evicted; it exits with a protocol
-//! error when its `EPOCH_WAIT` expires. The run still completes on the
-//! remaining machines.
+//! error when its epoch wait (derived from the configured receive
+//! timeout, [`epoch_wait`]) expires. The run still completes on the
+//! remaining machines, and the evicted worker can re-enter through the
+//! join path above.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -93,11 +115,13 @@ use crate::partition::{MachineConfig, MachineId, Partition};
 pub const WIRE_MAGIC: [u8; 4] = *b"GTIP";
 /// Wire protocol version; bumped on any layout change. v2 added the
 /// migration charge of the augmented game to `Setup`; v3 added the
-/// elastic-membership control frames (`Restore`, `Join`, `RestoreAck`).
-/// The `Hello` handshake rejects any peer speaking another version, so
-/// decoding is version-gated at connection time and a mixed-version
-/// cluster can never half-parse a frame.
-pub const WIRE_VERSION: u16 = 3;
+/// elastic-membership control frames (`Restore`, `Join`, `RestoreAck`);
+/// v4 made `Join` live and added the admission frames (`Admit`,
+/// `AdmitAck`, `Catchup`). The `Hello` handshake rejects any peer
+/// speaking another version, so decoding is version-gated at
+/// connection time and a mixed-version cluster can never half-parse a
+/// frame.
+pub const WIRE_VERSION: u16 = 4;
 /// Upper bound on a single frame payload; larger prefixes are rejected
 /// before any allocation happens.
 pub const MAX_FRAME_BYTES: usize = 1 << 24;
@@ -115,6 +139,9 @@ const TAG_GOODBYE: u8 = 20;
 const TAG_RESTORE: u8 = 21;
 const TAG_JOIN: u8 = 22;
 const TAG_RESTORE_ACK: u8 = 23;
+const TAG_ADMIT: u8 = 24;
+const TAG_ADMIT_ACK: u8 = 25;
+const TAG_CATCHUP: u8 = 26;
 
 /// Errors of the wire codec and connection lifecycle.
 #[derive(Debug)]
@@ -206,16 +233,32 @@ pub enum Frame {
     /// never receive this frame (the leader compacts first), and times
     /// out on its own.
     Restore { survivors: Vec<u32>, speeds: Vec<f64> },
-    /// A machine announcing itself to a cluster with its relative
-    /// speed (wire v3). Reserved on the wire: elastic join is realized
-    /// by re-forming the mesh at K+1 and warm-starting refinement from
-    /// the old assignment extended with the empty newcomer (DESIGN.md
-    /// §10) — the codec exists so v3 peers agree on the tag space.
+    /// Joiner → leader (wire v4): announce this machine (its immutable
+    /// wire id) and its relative speed, asking to be admitted at the
+    /// next epoch boundary. `speed` is relative to the current fleet's
+    /// average machine — 1.0 means "as fast as a typical member".
     Join { machine: u32, speed: f64 },
     /// Survivor → leader (wire v3): compaction applied, ready for the
     /// next epoch. `machine` echoes the sender's original wire id so
     /// the leader can cross-check its survivor bookkeeping.
     RestoreAck { machine: u32 },
+    /// Leader → everyone at an admission (wire v4): grow the mesh back
+    /// around `members` — the new member *wire* ids, ascending, always
+    /// including 0 (the leader) and `joiner`. Each member's new
+    /// logical id is its position in the list; `speeds` are the
+    /// renormalized relative speeds in that order. The exact mirror of
+    /// [`Frame::Restore`], which shrinks the same list.
+    Admit { members: Vec<u32>, joiner: u32, speeds: Vec<f64> },
+    /// Member → leader (wire v4): mesh extension applied (the member
+    /// dialed the joiner and accepted its return dial), ready for the
+    /// next epoch. `machine` echoes the sender's wire id, like
+    /// [`Frame::RestoreAck`].
+    AdmitAck { machine: u32 },
+    /// Leader → joiner, once per admission (wire v4): the encoded
+    /// epoch-boundary [`crate::sim::Snapshot`] the run is at, so the
+    /// newcomer can cross-check the fixture it was shipped in `Setup`
+    /// against the exact state the cluster resumes from.
+    Catchup { snapshot: Vec<u8> },
 }
 
 /// Payload of [`Frame::Setup`].
@@ -431,6 +474,24 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
             b.push(TAG_RESTORE_ACK);
             put_u32(b, *machine);
         }
+        Frame::Admit { members, joiner, speeds } => {
+            b.push(TAG_ADMIT);
+            put_u32(b, wire_u32(members.len())?);
+            for &m in members {
+                put_u32(b, m);
+            }
+            put_u32(b, *joiner);
+            put_f64s(b, speeds)?;
+        }
+        Frame::AdmitAck { machine } => {
+            b.push(TAG_ADMIT_ACK);
+            put_u32(b, *machine);
+        }
+        Frame::Catchup { snapshot } => {
+            b.push(TAG_CATCHUP);
+            put_u32(b, wire_u32(snapshot.len())?);
+            b.extend_from_slice(snapshot);
+        }
     }
     Ok(())
 }
@@ -560,6 +621,25 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
         }
         TAG_JOIN => Frame::Join { machine: d.u32()?, speed: d.f64()? },
         TAG_RESTORE_ACK => Frame::RestoreAck { machine: d.u32()? },
+        TAG_ADMIT => {
+            let len = d.u32()? as usize;
+            if 4 * len > payload.len() {
+                return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+            }
+            Frame::Admit {
+                members: (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?,
+                joiner: d.u32()?,
+                speeds: d.f64s()?,
+            }
+        }
+        TAG_ADMIT_ACK => Frame::AdmitAck { machine: d.u32()? },
+        TAG_CATCHUP => {
+            let len = d.u32()? as usize;
+            if len > payload.len() {
+                return Err(WireError::Truncated { needed: len, got: payload.len() });
+            }
+            Frame::Catchup { snapshot: d.take(len)?.to_vec() }
+        }
         other => return Err(WireError::BadTag(other)),
     };
     d.finish()?;
@@ -644,6 +724,13 @@ pub struct TcpEndpoint {
     inbox: Receiver<Message>,
     inbox_tx: Sender<Message>,
     ctrl: Receiver<(MachineId, Frame)>,
+    /// Kept so [`TcpEndpoint::extend`] can hand new reader threads the
+    /// same control channel the original mesh readers feed.
+    ctrl_tx: Sender<(MachineId, Frame)>,
+    /// The bound listener (nonblocking), retained past mesh formation
+    /// so an admission can accept the joiner's return dial on the same
+    /// address the peer list names for this machine.
+    listener: TcpListener,
     /// Outbound streams, indexed by *wire* id.
     outs: Vec<Option<Mutex<TcpStream>>>,
     stats: Arc<Mutex<OverheadStats>>,
@@ -783,6 +870,78 @@ impl TcpEndpoint {
         Ok(())
     }
 
+    /// Whether a wire id currently maps to a live logical peer.
+    pub fn wire_is_active(&self, wire: MachineId) -> bool {
+        self.logical_of.get(wire).copied().flatten().is_some()
+    }
+
+    /// Re-form the endpoint around `members_wire` — the new member wire
+    /// ids, ascending, including this machine and `joiner` — installing
+    /// `out` as the outbound stream to the joiner and spawning a reader
+    /// on `inbound`, the joiner's dial to us. The exact mirror of
+    /// [`TcpEndpoint::compact`]: logical ids become positions in the
+    /// list, and stale send failures are cleared. The joiner must be a
+    /// currently-evicted wire id, and the other members must be exactly
+    /// the current mesh — an admission only ever grows the fleet by
+    /// one.
+    pub fn extend(
+        &mut self,
+        members_wire: &[MachineId],
+        joiner: MachineId,
+        out: TcpStream,
+        inbound: TcpStream,
+    ) -> Result<(), WireError> {
+        if members_wire.is_empty() || !members_wire.windows(2).all(|w| w[0] < w[1]) {
+            return Err(WireError::Protocol(
+                "member list must be non-empty and strictly ascending".into(),
+            ));
+        }
+        if *members_wire.last().expect("non-empty") >= self.logical_of.len() {
+            return Err(WireError::Protocol(format!(
+                "member list names wire id {} but the mesh had {} machines",
+                members_wire.last().expect("non-empty"),
+                self.logical_of.len()
+            )));
+        }
+        if !members_wire.contains(&joiner) {
+            return Err(WireError::Protocol(format!(
+                "joiner (wire id {joiner}) is missing from the member list"
+            )));
+        }
+        if self.wire_is_active(joiner) || joiner == self.wire_id {
+            return Err(WireError::Protocol(format!(
+                "joiner wire id {joiner} is already an active member"
+            )));
+        }
+        let me = members_wire.iter().position(|&w| w == self.wire_id).ok_or_else(|| {
+            WireError::Protocol(format!(
+                "this machine (wire id {}) is missing from the member list",
+                self.wire_id
+            ))
+        })?;
+        let others: Vec<MachineId> =
+            members_wire.iter().copied().filter(|&w| w != joiner).collect();
+        if others != self.wire_of {
+            return Err(WireError::Protocol(format!(
+                "member list minus the joiner is {others:?} but the current mesh is {:?}",
+                self.wire_of
+            )));
+        }
+        self.outs[joiner] = Some(Mutex::new(out));
+        spawn_reader(inbound, joiner, self.inbox_tx.clone(), self.ctrl_tx.clone());
+        self.logical_of = vec![None; self.logical_of.len()];
+        for (logical, &wire) in members_wire.iter().enumerate() {
+            self.logical_of[wire] = Some(logical);
+        }
+        self.wire_of = members_wire.to_vec();
+        self.k = members_wire.len();
+        self.id = me;
+        let mut f = lock_unpoisoned(&self.failures);
+        f.map.clear();
+        f.fresh.clear();
+        Ok(())
+    }
+
     /// Send a control frame to one peer (logical id). A write failure
     /// is recorded (it is death-diagnosis evidence) as well as
     /// returned.
@@ -865,7 +1024,14 @@ fn handshake_inbound(
     seen: &[bool],
 ) -> Result<(MachineId, TcpStream), WireError> {
     stream.set_nonblocking(false)?;
-    let left = deadline.saturating_duration_since(Instant::now()).max(Duration::from_millis(1));
+    // A fully elapsed deadline must fail *now*. The old code clamped
+    // the remaining window up to 1 ms and read anyway, so a peer that
+    // kept connecting could stretch the handshake far past the bound
+    // the recovery grace-window math (DESIGN.md §10) relies on.
+    let left = deadline.saturating_duration_since(Instant::now());
+    if left.is_zero() {
+        return Err(WireError::Protocol("handshake deadline already passed".into()));
+    }
     stream.set_read_timeout(Some(left))?;
     let hello = read_frame(&mut stream)?;
     let Frame::Hello { machine, machines, .. } = hello else {
@@ -967,8 +1133,14 @@ fn mesh_with_listener(
     assert!(id < k, "machine id {id} out of range for {k} machines");
     let deadline = Instant::now() + connect_timeout;
 
+    // The accept thread runs on a clone; the original is retained in
+    // the endpoint so a later admission can accept a joiner's dial.
+    // Clones share the file description, so the nonblocking mode set
+    // here applies to both — post-mesh accepts poll `WouldBlock`.
+    listener.set_nonblocking(true)?;
     let accept_handle = if k > 1 {
-        Some(std::thread::spawn(move || accept_peers(listener, id, k, deadline)))
+        let acceptor = listener.try_clone()?;
+        Some(std::thread::spawn(move || accept_peers(acceptor, id, k, deadline)))
     } else {
         None
     };
@@ -994,28 +1166,8 @@ fn mesh_with_listener(
 
     let (inbox_tx, inbox) = channel();
     let (ctrl_tx, ctrl) = channel();
-    for (peer, mut stream) in inbound {
-        let inbox_tx = inbox_tx.clone();
-        let ctrl_tx = ctrl_tx.clone();
-        std::thread::spawn(move || loop {
-            match read_frame(&mut stream) {
-                Ok(Frame::Msg(msg)) => {
-                    if inbox_tx.send(msg).is_err() {
-                        break;
-                    }
-                }
-                Ok(frame) => {
-                    if ctrl_tx.send((peer, frame)).is_err() {
-                        break;
-                    }
-                }
-                Err(WireError::Closed) => break,
-                Err(e) => {
-                    eprintln!("gtip net: reader for machine {peer} stopped: {e}");
-                    break;
-                }
-            }
-        });
+    for (peer, stream) in inbound {
+        spawn_reader(stream, peer, inbox_tx.clone(), ctrl_tx.clone());
     }
 
     Ok(TcpEndpoint {
@@ -1027,11 +1179,44 @@ fn mesh_with_listener(
         inbox,
         inbox_tx,
         ctrl,
+        ctrl_tx,
+        listener,
         outs,
         stats,
         net: Arc::new(Mutex::new(NetStats::default())),
         failures: Mutex::new(SendFailures::default()),
     })
+}
+
+/// One reader thread per inbound connection: protocol messages go to
+/// the shared inbox, everything else to the control channel, keyed by
+/// the sender's immutable *wire* id (`recv_ctrl` translates to the
+/// current logical id, dropping frames from evicted peers).
+fn spawn_reader(
+    mut stream: TcpStream,
+    wire_peer: MachineId,
+    inbox_tx: Sender<Message>,
+    ctrl_tx: Sender<(MachineId, Frame)>,
+) {
+    std::thread::spawn(move || loop {
+        match read_frame(&mut stream) {
+            Ok(Frame::Msg(msg)) => {
+                if inbox_tx.send(msg).is_err() {
+                    break;
+                }
+            }
+            Ok(frame) => {
+                if ctrl_tx.send((wire_peer, frame)).is_err() {
+                    break;
+                }
+            }
+            Err(WireError::Closed) => break,
+            Err(e) => {
+                eprintln!("gtip net: reader for machine {wire_peer} stopped: {e}");
+                break;
+            }
+        }
+    });
 }
 
 /// Join the mesh as machine `id`: bind `addrs[id]`, dial everyone else.
@@ -1092,9 +1277,20 @@ pub fn run_distributed_tcp_local(
 // Multi-process cluster: leader + serve
 // ---------------------------------------------------------------------
 
-/// How long a worker waits for the next `EpochBegin` — the leader
-/// simulates a whole epoch in between, so this is generous.
-const EPOCH_WAIT: Duration = Duration::from_secs(600);
+/// Floor on the derived epoch wait: even with a very aggressive
+/// receive timeout a healthy leader needs real time to simulate an
+/// epoch window, so a worker never gives up faster than this.
+const EPOCH_WAIT_FLOOR: Duration = Duration::from_secs(5);
+
+/// How long a worker waits for the next `EpochBegin`. The leader
+/// simulates a whole epoch in between, so this is generous — ten
+/// receive timeouts — but it *scales with the configured timeout*
+/// instead of the old hard-coded 600 s, which left a worker whose
+/// leader had died hanging for ten minutes regardless of
+/// `--recv-timeout-ms`.
+fn epoch_wait(recv_timeout: Duration) -> Duration {
+    recv_timeout.saturating_mul(10).max(EPOCH_WAIT_FLOOR)
+}
 
 /// Machine 0's handle on a multi-process cluster: owns the leader
 /// endpoint and runs one refinement round per [`ClusterLeader::refine`]
@@ -1110,6 +1306,32 @@ pub struct ClusterLeader {
     /// must not lose: a worker whose report was already consumed
     /// will not send it again.
     reported: Vec<bool>,
+    /// The original peer list — wire id → address. An admission dials
+    /// the joiner at its listed address.
+    addrs: Vec<String>,
+    /// Patience of the admission handshake's ack barrier (and of the
+    /// rollback barrier should it fail). Must stay *longer* than the
+    /// workers' own dial window (one receive timeout), or a survivor
+    /// still dialing a dead joiner would miss the rollback broadcast.
+    admit_window: Duration,
+    /// Validated join requests queued by the acceptor thread.
+    pending: Receiver<JoinRequest>,
+    /// Requests drained from the channel but not yet admitted (e.g. a
+    /// second joiner arriving while one admission is in flight).
+    pending_buf: VecDeque<JoinRequest>,
+    /// Tells the acceptor thread to stop accepting joiners.
+    acceptor_stop: Arc<AtomicBool>,
+}
+
+/// One validated `Join` handshake, queued until the next epoch
+/// boundary. The stream is the joiner's dial to the leader — it
+/// becomes the leader's inbound reader for the joiner on admission.
+pub struct JoinRequest {
+    /// The joiner's immutable wire id (its slot in the peer list).
+    pub wire_id: MachineId,
+    /// Self-reported relative speed (1.0 = an average machine).
+    pub speed: f64,
+    stream: TcpStream,
 }
 
 impl ClusterLeader {
@@ -1122,7 +1344,34 @@ impl ClusterLeader {
         let stats = Arc::new(Mutex::new(OverheadStats::default()));
         let ep = connect_mesh(0, addrs, connect_timeout, stats)?;
         let k = ep.machine_count();
-        Ok(ClusterLeader { ep, opts, epoch: 0, reported: vec![false; k] })
+        // The admission acceptor listens for joiners on a clone of the
+        // leader's (now idle) mesh listener for the rest of the run.
+        let acceptor = ep.listener.try_clone()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, pending) = channel();
+        {
+            let stop = Arc::clone(&stop);
+            let k_orig = addrs.len();
+            std::thread::spawn(move || join_acceptor(acceptor, k_orig, stop, tx));
+        }
+        let admit_window = opts.recv_timeout.saturating_mul(2);
+        Ok(ClusterLeader {
+            ep,
+            opts,
+            epoch: 0,
+            reported: vec![false; k],
+            addrs: addrs.to_vec(),
+            admit_window,
+            pending,
+            pending_buf: VecDeque::new(),
+            acceptor_stop: stop,
+        })
+    }
+
+    /// Override the admission/rollback barrier patience (defaults to
+    /// twice the receive timeout).
+    pub fn set_admit_window(&mut self, window: Duration) {
+        self.admit_window = window.max(Duration::from_millis(1));
     }
 
     pub fn machine_count(&self) -> usize {
@@ -1134,17 +1383,10 @@ impl ClusterLeader {
         self.ep.net_snapshot()
     }
 
-    /// Broadcast the shared fixture. Must be called once, before the
-    /// first [`ClusterLeader::refine`].
-    pub fn setup(&self, graph: &Graph, machines: &MachineConfig) -> Result<(), WireError> {
-        if machines.count() != self.ep.machine_count() {
-            return Err(WireError::Protocol(format!(
-                "cluster has {} machines but the fixture wants {}",
-                self.ep.machine_count(),
-                machines.count()
-            )));
-        }
-        self.ep.broadcast_ctrl(&Frame::Setup(SetupFrame {
+    /// The shared fixture as a `Setup` frame (broadcast at startup,
+    /// and re-sent to a joiner on admission).
+    fn setup_frame(&self, graph: &Graph, machines: &MachineConfig) -> Result<Frame, WireError> {
+        Ok(Frame::Setup(SetupFrame {
             speeds: machines.speeds().to_vec(),
             mu: self.opts.mu,
             framework: self.opts.framework,
@@ -1158,6 +1400,19 @@ impl ClusterLeader {
                 .map(|(u, v, w)| Ok((wire_u32(u)?, wire_u32(v)?, w)))
                 .collect::<Result<_, WireError>>()?,
         }))
+    }
+
+    /// Broadcast the shared fixture. Must be called once, before the
+    /// first [`ClusterLeader::refine`].
+    pub fn setup(&self, graph: &Graph, machines: &MachineConfig) -> Result<(), WireError> {
+        if machines.count() != self.ep.machine_count() {
+            return Err(WireError::Protocol(format!(
+                "cluster has {} machines but the fixture wants {}",
+                self.ep.machine_count(),
+                machines.count()
+            )));
+        }
+        self.ep.broadcast_ctrl(&self.setup_frame(graph, machines)?)
     }
 
     /// Run one refinement round across the cluster: re-sync weights and
@@ -1345,15 +1600,22 @@ impl ClusterLeader {
             speeds: machines_after.speeds().to_vec(),
         };
         self.ep.broadcast_ctrl(&frame)?;
+        self.await_restore_acks(self.opts.recv_timeout)
+    }
 
-        // Ack barrier: every survivor confirms it compacted to the
-        // same membership before the next epoch's traffic starts.
+    /// Ack barrier after a `Restore` broadcast: every member confirms
+    /// it compacted to the same membership before the next epoch's
+    /// traffic starts. Shared by [`ClusterLeader::recover`] and the
+    /// admission rollback; stale `RoundStats` (post-mortem reports)
+    /// and `AdmitAck`s (a survivor that extended before the rollback)
+    /// are skipped.
+    fn await_restore_acks(&mut self, patience: Duration) -> Result<(), WireError> {
         let k_after = self.ep.machine_count();
         let mut acked = vec![false; k_after];
         acked[0] = true;
         let mut remaining = k_after - 1;
         while remaining > 0 {
-            match self.ep.recv_ctrl(self.opts.recv_timeout)? {
+            match self.ep.recv_ctrl(patience)? {
                 (peer, Frame::RestoreAck { machine }) => {
                     if self.ep.wire_of(peer) != machine as MachineId {
                         return Err(WireError::Protocol(format!(
@@ -1367,6 +1629,7 @@ impl ClusterLeader {
                     }
                 }
                 (_, Frame::RoundStats(_)) => continue, // stale post-mortem report
+                (_, Frame::AdmitAck { .. }) => continue, // stale pre-rollback ack
                 (peer, frame) => {
                     return Err(WireError::Protocol(format!(
                         "unexpected control frame from machine {peer} during restore: {frame:?}"
@@ -1377,10 +1640,288 @@ impl ClusterLeader {
         Ok(())
     }
 
-    /// Graceful shutdown: tell every worker the run is over.
-    pub fn shutdown(self) -> Result<(), WireError> {
+    /// The logical id (= list position) a currently-evicted wire id
+    /// would take on admission: wire ids stay ascending, so the joiner
+    /// slots in between its wire-id neighbours and every member to its
+    /// right shifts up by one. The driver needs this *before*
+    /// [`ClusterLeader::admit`] to build the K+1 speed vector and
+    /// remap the engine assignment.
+    pub fn joiner_position(&self, wire: MachineId) -> usize {
+        self.ep.wire_of.iter().filter(|&&w| w < wire).count()
+    }
+
+    /// Next queued join request, if any. Requests from a wire id that
+    /// is currently an active member are rejected here (Goodbye), and
+    /// a newer request from the same wire id supersedes an older one —
+    /// the joiner only re-dials after its previous attempt was
+    /// rejected or closed, so the older stream is dead.
+    pub fn pending_join(&mut self) -> Option<JoinRequest> {
+        while let Ok(req) = self.pending.try_recv() {
+            self.pending_buf.push_back(req);
+        }
+        while let Some(mut req) = self.pending_buf.pop_front() {
+            if self.ep.wire_is_active(req.wire_id) {
+                eprintln!(
+                    "gtip leader: rejecting Join from wire id {} (already an active member)",
+                    req.wire_id
+                );
+                let _ = write_frame(&mut req.stream, &Frame::Goodbye);
+                continue;
+            }
+            if self.pending_buf.iter().any(|r| r.wire_id == req.wire_id) {
+                continue; // superseded by a newer request from the same joiner
+            }
+            return Some(req);
+        }
+        None
+    }
+
+    /// Admit a joiner at an epoch boundary: dial it, extend the mesh,
+    /// broadcast `Admit`, ship the joiner the fixture (`Setup`) plus
+    /// the boundary snapshot (`Catchup`), and run the ack barrier.
+    ///
+    /// `machines_after` is the renormalized K+1 speed vector with the
+    /// joiner at [`ClusterLeader::joiner_position`]; `snapshot` is the
+    /// encoded boundary checkpoint *already remapped* to the K+1
+    /// numbering. Returns `Ok(true)` if the joiner is in, `Ok(false)`
+    /// if the admission failed but the cluster rolled back cleanly to
+    /// its previous membership (the run continues at K), and `Err` if
+    /// the rollback itself failed.
+    pub fn admit(
+        &mut self,
+        req: JoinRequest,
+        graph: &Graph,
+        machines_before: &MachineConfig,
+        machines_after: &MachineConfig,
+        snapshot: &[u8],
+    ) -> Result<bool, WireError> {
+        let joiner = req.wire_id;
+        let k_orig = self.addrs.len();
+        if joiner == 0 || joiner >= k_orig || self.ep.wire_is_active(joiner) {
+            return Err(WireError::Protocol(format!(
+                "wire id {joiner} is not an admissible joiner"
+            )));
+        }
+        let old_members = self.ep.wire_of.clone();
+        if machines_before.count() != old_members.len()
+            || machines_after.count() != old_members.len() + 1
+        {
+            return Err(WireError::Protocol(format!(
+                "admission fixtures have {}/{} machines for a {}-member mesh",
+                machines_before.count(),
+                machines_after.count(),
+                old_members.len()
+            )));
+        }
+        // Dial the joiner first: a failure here leaves the mesh
+        // untouched, so no rollback is needed — just drop the request
+        // (the joiner will re-dial when its stream closes).
+        let deadline = Instant::now() + self.admit_window;
+        let mut out = match dial_peer(&self.addrs[joiner], deadline) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("gtip leader: cannot dial joiner {joiner}: {e}");
+                return Ok(false);
+            }
+        };
+        if let Err(e) = write_frame(
+            &mut out,
+            &Frame::Hello { version: WIRE_VERSION, machine: 0, machines: wire_u32(k_orig)? },
+        ) {
+            eprintln!("gtip leader: hello to joiner {joiner} failed: {e}");
+            return Ok(false);
+        }
+        let mut members = old_members.clone();
+        let pos = self.joiner_position(joiner);
+        members.insert(pos, joiner);
+        self.ep.extend(&members, joiner, out, req.stream)?;
+
+        let result = (|| -> Result<(), WireError> {
+            self.ep.broadcast_ctrl(&Frame::Admit {
+                members: members.iter().map(|&w| wire_u32(w)).collect::<Result<_, _>>()?,
+                joiner: wire_u32(joiner)?,
+                speeds: machines_after.speeds().to_vec(),
+            })?;
+            self.ep.send_ctrl(pos, &self.setup_frame(graph, machines_after)?)?;
+            self.ep.send_ctrl(pos, &Frame::Catchup { snapshot: snapshot.to_vec() })?;
+            // Ack barrier: every member (joiner included) confirms the
+            // extended mesh before the next epoch's traffic starts.
+            let k_new = members.len();
+            let mut acked = vec![false; k_new];
+            acked[0] = true;
+            let mut remaining = k_new - 1;
+            while remaining > 0 {
+                match self.ep.recv_ctrl(self.admit_window)? {
+                    (peer, Frame::AdmitAck { machine }) => {
+                        if self.ep.wire_of(peer) != machine as MachineId {
+                            return Err(WireError::Protocol(format!(
+                                "machine {peer} acked the admit as wire id {machine}, expected {}",
+                                self.ep.wire_of(peer)
+                            )));
+                        }
+                        if !acked[peer] {
+                            acked[peer] = true;
+                            remaining -= 1;
+                        }
+                    }
+                    (_, Frame::RoundStats(_)) => continue, // stale report
+                    (peer, frame) => {
+                        return Err(WireError::Protocol(format!(
+                            "unexpected control frame from machine {peer} during admit: {frame:?}"
+                        )));
+                    }
+                }
+            }
+            Ok(())
+        })();
+
+        match result {
+            Ok(()) => {
+                self.ep.drain_inbox();
+                self.reported = vec![false; self.ep.machine_count()];
+                Ok(true)
+            }
+            Err(e) => {
+                eprintln!(
+                    "gtip leader: admission of wire id {joiner} failed ({e}); rolling back to K={}",
+                    old_members.len()
+                );
+                self.rollback_admit(&old_members, machines_before)?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Undo a failed admission: compact back to the old membership and
+    /// re-run the restore barrier so every survivor is provably back
+    /// on the pre-admission mesh before the run continues.
+    fn rollback_admit(
+        &mut self,
+        old_members: &[MachineId],
+        machines_before: &MachineConfig,
+    ) -> Result<(), WireError> {
+        self.ep.compact(old_members)?;
+        self.ep.drain_inbox();
+        self.reported = vec![false; self.ep.machine_count()];
+        self.ep.broadcast_ctrl(&Frame::Restore {
+            survivors: old_members.iter().map(|&w| wire_u32(w)).collect::<Result<_, _>>()?,
+            speeds: machines_before.speeds().to_vec(),
+        })?;
+        // A survivor may still be stuck dialing the dead joiner for up
+        // to its own handshake window (one receive timeout) before it
+        // sees this Restore — hence the longer admit-window patience.
+        self.await_restore_acks(self.admit_window)
+    }
+
+    /// Graceful shutdown: tell every worker the run is over, and turn
+    /// away any joiner still waiting at the door.
+    pub fn shutdown(mut self) -> Result<(), WireError> {
+        self.acceptor_stop.store(true, Ordering::Relaxed);
+        while let Some(mut req) = self.pending_join() {
+            let _ = write_frame(&mut req.stream, &Frame::Goodbye);
+        }
         self.ep.broadcast_ctrl(&Frame::Goodbye)
     }
+}
+
+impl Drop for ClusterLeader {
+    fn drop(&mut self) {
+        self.acceptor_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// How long the acceptor gives one joiner to complete its
+/// `Hello` + `Join` handshake before dropping the connection.
+const JOIN_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// The leader's admission acceptor: runs for the whole cluster
+/// lifetime on a clone of the (nonblocking) mesh listener, validating
+/// `Hello` + `Join` handshakes and queueing good ones for the driver
+/// to pick up at the next epoch boundary — a mid-epoch `Join` is
+/// thereby deferred, never dropped. Semantic rejects get a `Goodbye`
+/// so the joiner can distinguish "no" from "not yet".
+fn join_acceptor(
+    listener: TcpListener,
+    k_orig: usize,
+    stop: Arc<AtomicBool>,
+    tx: Sender<JoinRequest>,
+) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, addr)) => match join_handshake(stream, k_orig) {
+                Ok(req) => {
+                    eprintln!(
+                        "gtip leader: queued Join from wire id {} (speed {})",
+                        req.wire_id, req.speed
+                    );
+                    if tx.send(req).is_err() {
+                        return; // leader dropped
+                    }
+                }
+                Err((e, stream)) => {
+                    eprintln!("gtip leader: dropping join dial from {addr}: {e}");
+                    if let Some(mut stream) = stream {
+                        let _ = write_frame(&mut stream, &Frame::Goodbye);
+                    }
+                }
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                eprintln!("gtip leader: join acceptor error: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+/// Validate one would-be joiner's `Hello` + `Join`. On a *semantic*
+/// reject the stream is returned so the caller can send a `Goodbye`
+/// (telling the joiner to give up rather than retry); on an I/O or
+/// codec failure it is simply dropped.
+fn join_handshake(
+    mut stream: TcpStream,
+    k_orig: usize,
+) -> Result<JoinRequest, (WireError, Option<TcpStream>)> {
+    let io = |e: WireError| (e, None);
+    stream.set_nonblocking(false).map_err(|e| io(e.into()))?;
+    stream.set_read_timeout(Some(JOIN_HANDSHAKE_TIMEOUT)).map_err(|e| io(e.into()))?;
+    let hello = read_frame(&mut stream).map_err(io)?;
+    let Frame::Hello { machine, machines, .. } = hello else {
+        return Err((WireError::Protocol(format!("expected Hello, got {hello:?}")), None));
+    };
+    let wire_id = machine as MachineId;
+    if machines as usize != k_orig || wire_id == 0 || wire_id >= k_orig {
+        return Err((
+            WireError::Protocol(format!(
+                "joiner says machine {machine}/{machines}, cluster is {k_orig} machines"
+            )),
+            Some(stream),
+        ));
+    }
+    let join = read_frame(&mut stream).map_err(io)?;
+    let Frame::Join { machine: jm, speed } = join else {
+        return Err((WireError::Protocol(format!("expected Join, got {join:?}")), None));
+    };
+    if jm as MachineId != wire_id {
+        return Err((
+            WireError::Protocol(format!("Join names machine {jm} but Hello said {machine}")),
+            Some(stream),
+        ));
+    }
+    if !(speed.is_finite() && speed > 0.0) {
+        return Err((
+            WireError::Protocol(format!("join speed {speed} must be finite and positive")),
+            Some(stream),
+        ));
+    }
+    stream.set_read_timeout(None).map_err(|e| io(e.into()))?;
+    stream.set_nodelay(true).map_err(|e| io(e.into()))?;
+    Ok(JoinRequest { wire_id, speed, stream })
 }
 
 /// What a worker did over its lifetime (printed by `gtip serve`).
@@ -1412,17 +1953,18 @@ pub fn serve(
         )));
     }
     let stats = Arc::new(Mutex::new(OverheadStats::default()));
-    let mut ep = connect_mesh(machine_id, addrs, connect_timeout, Arc::clone(&stats))?;
-    let mut k = addrs.len();
-    let mut my_id = machine_id;
+    let ep = connect_mesh(machine_id, addrs, connect_timeout, Arc::clone(&stats))?;
     // Fault injection for the recovery tests: "setup" dies after the
     // fixture is validated, "epoch:N" dies on receiving EpochBegin N,
-    // "stats" dies just before reporting RoundStats. Exit code 86
-    // marks an intentional death (the harness asserts on it).
+    // "stats" dies just before reporting RoundStats, "admit" dies on
+    // receiving Admit (joiner side). Exit code 86 marks an intentional
+    // death (the harness asserts on it).
     let die = std::env::var("GTIP_SERVE_DIE").unwrap_or_default();
 
-    // Fixture first.
-    let setup = match ep.recv_ctrl(EPOCH_WAIT)? {
+    // Fixture first. The wait derives from the dial window — the
+    // leader sets up right after the mesh forms; once the fixture is
+    // in hand the loop waits on the fixture's own receive timeout.
+    let setup = match ep.recv_ctrl(epoch_wait(connect_timeout))? {
         (0, Frame::Setup(s)) => s,
         (0, Frame::Goodbye) => {
             return Ok(ServeSummary {
@@ -1438,71 +1980,116 @@ pub fn serve(
             )))
         }
     };
-    if setup.speeds.len() != k {
-        return Err(WireError::Protocol(format!(
-            "fixture has {} machines but the mesh has {k}",
-            setup.speeds.len()
-        )));
-    }
-    // Validate before handing anything to constructors that assert —
-    // a buggy or skewed leader must produce a clean protocol error,
-    // not abort the worker process.
-    let speed_sum: f64 = setup.speeds.iter().sum();
-    if setup.speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
-        return Err(WireError::Protocol(format!(
-            "fixture speeds are not normalized positive weights (sum {speed_sum})"
-        )));
-    }
-    let n = setup.node_weights.len();
-    if let Some(&(u, v, _)) = setup
-        .edges
-        .iter()
-        .find(|&&(u, v, _)| u as usize >= n || v as usize >= n || u == v)
-    {
-        return Err(WireError::Protocol(format!(
-            "fixture edge ({u}, {v}) is out of range for {n} nodes"
-        )));
-    }
-    if !weights_valid(&setup.node_weights)
-        || !weights_valid_iter(setup.edges.iter().map(|&(_, _, w)| w))
-    {
-        return Err(WireError::Protocol(
-            "fixture weights must be finite and non-negative".into(),
-        ));
-    }
-    if !(setup.migration_charge.is_finite() && setup.migration_charge >= 0.0) {
-        return Err(WireError::Protocol(format!(
-            "fixture migration charge {} must be finite and non-negative",
-            setup.migration_charge
-        )));
-    }
-    // Adopt the leader's normalized speeds verbatim — renormalizing
-    // here could drift each weight by an ulp and diverge the replicas.
-    let mut machines = MachineConfig::from_normalized(setup.speeds.clone());
-    let mut builder = GraphBuilder::with_nodes(n);
-    for &(u, v, w) in &setup.edges {
-        builder.add_edge(u as usize, v as usize, w);
-    }
-    for (i, &w) in setup.node_weights.iter().enumerate() {
-        builder.set_node_weight(i, w);
-    }
-    let mut graph = builder.build();
-    // Edge order of the built graph — per-epoch weights arrive in the
-    // leader's edge order, which matches because both graphs share the
-    // same topology.
-    let edge_order: Vec<(usize, usize)> = graph.edges().map(|(u, v, _)| (u, v)).collect();
-    if edge_order.len() != setup.edges.len() {
-        return Err(WireError::Protocol("fixture edge list had duplicates".into()));
-    }
-    let recv_timeout = Duration::from_millis(setup.recv_timeout_ms.max(1));
-    let mut epochs = 0u64;
+    let fixture = WorkerFixture::from_setup(&setup, addrs.len())?;
     if die == "setup" {
         eprintln!("gtip serve: GTIP_SERVE_DIE=setup — dying after fixture validation");
         std::process::exit(86);
     }
+    run_worker_loop(ep, addrs, fixture, &die)
+}
 
+/// Everything a worker keeps between epochs, validated once from the
+/// `Setup` frame. Shared by the original-mesh path (`serve`) and the
+/// admission path (`serve_join`).
+struct WorkerFixture {
+    machines: MachineConfig,
+    graph: Graph,
+    /// Edge order of the built graph — per-epoch weights arrive in
+    /// the leader's edge order, which matches because both graphs
+    /// share the same topology.
+    edge_order: Vec<(usize, usize)>,
+    mu: f64,
+    framework: Framework,
+    migration_charge: f64,
+    epsilon: f64,
+    max_transfers: usize,
+    recv_timeout: Duration,
+}
+
+impl WorkerFixture {
+    /// Validate before handing anything to constructors that assert —
+    /// a buggy or skewed leader must produce a clean protocol error,
+    /// not abort the worker process.
+    fn from_setup(setup: &SetupFrame, k: usize) -> Result<WorkerFixture, WireError> {
+        if setup.speeds.len() != k {
+            return Err(WireError::Protocol(format!(
+                "fixture has {} machines but the mesh has {k}",
+                setup.speeds.len()
+            )));
+        }
+        let speed_sum: f64 = setup.speeds.iter().sum();
+        if setup.speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
+            return Err(WireError::Protocol(format!(
+                "fixture speeds are not normalized positive weights (sum {speed_sum})"
+            )));
+        }
+        let n = setup.node_weights.len();
+        if let Some(&(u, v, _)) = setup
+            .edges
+            .iter()
+            .find(|&&(u, v, _)| u as usize >= n || v as usize >= n || u == v)
+        {
+            return Err(WireError::Protocol(format!(
+                "fixture edge ({u}, {v}) is out of range for {n} nodes"
+            )));
+        }
+        if !weights_valid(&setup.node_weights)
+            || !weights_valid_iter(setup.edges.iter().map(|&(_, _, w)| w))
+        {
+            return Err(WireError::Protocol(
+                "fixture weights must be finite and non-negative".into(),
+            ));
+        }
+        if !(setup.migration_charge.is_finite() && setup.migration_charge >= 0.0) {
+            return Err(WireError::Protocol(format!(
+                "fixture migration charge {} must be finite and non-negative",
+                setup.migration_charge
+            )));
+        }
+        // Adopt the leader's normalized speeds verbatim — renormalizing
+        // here could drift each weight by an ulp and diverge replicas.
+        let machines = MachineConfig::from_normalized(setup.speeds.clone());
+        let mut builder = GraphBuilder::with_nodes(n);
+        for &(u, v, w) in &setup.edges {
+            builder.add_edge(u as usize, v as usize, w);
+        }
+        for (i, &w) in setup.node_weights.iter().enumerate() {
+            builder.set_node_weight(i, w);
+        }
+        let graph = builder.build();
+        let edge_order: Vec<(usize, usize)> = graph.edges().map(|(u, v, _)| (u, v)).collect();
+        if edge_order.len() != setup.edges.len() {
+            return Err(WireError::Protocol("fixture edge list had duplicates".into()));
+        }
+        Ok(WorkerFixture {
+            machines,
+            graph,
+            edge_order,
+            mu: setup.mu,
+            framework: setup.framework,
+            migration_charge: setup.migration_charge,
+            epsilon: setup.epsilon,
+            max_transfers: setup.max_transfers as usize,
+            recv_timeout: Duration::from_millis(setup.recv_timeout_ms.max(1)),
+        })
+    }
+}
+
+/// The worker's steady state: one refinement round per `EpochBegin`,
+/// membership shrinking via `Restore` and growing via `Admit`, until
+/// `Goodbye`. The endpoint's own logical id / machine count track the
+/// membership changes (compact and extend renumber in place).
+fn run_worker_loop(
+    mut ep: TcpEndpoint,
+    addrs: &[String],
+    mut fixture: WorkerFixture,
+    die: &str,
+) -> Result<ServeSummary, WireError> {
+    let machine_id = ep.wire_id();
+    let n = fixture.graph.node_weights().len();
+    let mut epochs = 0u64;
     loop {
-        match ep.recv_ctrl(EPOCH_WAIT)? {
+        match ep.recv_ctrl(epoch_wait(fixture.recv_timeout))? {
             (0, Frame::EpochBegin(e)) => {
                 if die == format!("epoch:{}", e.epoch) {
                     eprintln!(
@@ -1511,7 +2098,9 @@ pub fn serve(
                     );
                     std::process::exit(86);
                 }
-                if e.node_weights.len() != n || e.edge_weights.len() != edge_order.len() {
+                let k = ep.machine_count();
+                if e.node_weights.len() != n || e.edge_weights.len() != fixture.edge_order.len()
+                {
                     return Err(WireError::Protocol(format!(
                         "epoch {} weight vectors do not match the fixture shape",
                         e.epoch
@@ -1530,9 +2119,9 @@ pub fn serve(
                         e.epoch
                     )));
                 }
-                graph.set_node_weights(&e.node_weights);
-                for (&(u, v), &w) in edge_order.iter().zip(&e.edge_weights) {
-                    graph.set_edge_weight(u, v, w);
+                fixture.graph.set_node_weights(&e.node_weights);
+                for (&(u, v), &w) in fixture.edge_order.iter().zip(&e.edge_weights) {
+                    fixture.graph.set_edge_weight(u, v, w);
                 }
                 let assignment: Vec<MachineId> =
                     e.assignment.iter().map(|&a| a as MachineId).collect();
@@ -1542,23 +2131,23 @@ pub fn serve(
                         e.epoch
                     )));
                 }
-                let part = Partition::from_assignment(&graph, k, assignment);
+                let part = Partition::from_assignment(&fixture.graph, k, assignment);
                 let before = ep.stats_snapshot();
                 let actor = MachineActor::new(
-                    my_id,
-                    Arc::new(graph.clone()),
-                    machines.clone(),
+                    ep.id(),
+                    Arc::new(fixture.graph.clone()),
+                    fixture.machines.clone(),
                     &part,
-                    setup.mu,
-                    setup.framework,
-                    setup.migration_charge,
+                    fixture.mu,
+                    fixture.framework,
+                    fixture.migration_charge,
                 );
                 let outcome = machine_loop(
                     actor,
                     &ep,
-                    setup.epsilon,
-                    setup.max_transfers as usize,
-                    recv_timeout,
+                    fixture.epsilon,
+                    fixture.max_transfers,
+                    fixture.recv_timeout,
                 );
                 if outcome.timed_out {
                     // A peer died mid-round. Do NOT unwind: report the
@@ -1600,7 +2189,7 @@ pub fn serve(
                         "restore speeds are not normalized positive weights (sum {speed_sum})"
                     )));
                 }
-                let Some(pos) = wish.iter().position(|&w| w == ep.wire_id()) else {
+                if !wish.contains(&ep.wire_id()) {
                     // The leader evicted us — presumed dead (e.g. a
                     // transient stall past the grace window). Bow out
                     // cleanly; the survivors carry the run.
@@ -1609,17 +2198,63 @@ pub fn serve(
                         ep.wire_id()
                     );
                     break;
-                };
+                }
                 ep.compact(&wish)?;
                 ep.drain_inbox();
-                machines = MachineConfig::from_normalized(speeds.clone());
-                k = wish.len();
-                my_id = pos;
+                fixture.machines = MachineConfig::from_normalized(speeds.clone());
                 ep.send_ctrl(0, &Frame::RestoreAck { machine: wire_u32(ep.wire_id())? })?;
                 eprintln!(
-                    "gtip serve: restored as machine {my_id}/{k} (wire id {})",
+                    "gtip serve: restored as machine {}/{} (wire id {})",
+                    ep.id(),
+                    ep.machine_count(),
                     ep.wire_id()
                 );
+            }
+            (0, Frame::Admit { members, joiner, speeds }) => {
+                let members: Vec<MachineId> =
+                    members.iter().map(|&w| w as MachineId).collect();
+                let joiner = joiner as MachineId;
+                if speeds.len() != members.len() {
+                    return Err(WireError::Protocol(format!(
+                        "admit has {} members but {} speeds",
+                        members.len(),
+                        speeds.len()
+                    )));
+                }
+                let speed_sum: f64 = speeds.iter().sum();
+                if speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
+                    return Err(WireError::Protocol(format!(
+                        "admit speeds are not normalized positive weights (sum {speed_sum})"
+                    )));
+                }
+                // Dial the joiner, accept its return dial, extend. A
+                // failure here is NOT fatal: the joiner may have died
+                // mid-admission. Stay on the old mesh and wait — the
+                // leader's ack barrier will time out and broadcast a
+                // rollback Restore, which the arm above handles (an
+                // identity compact if we never extended).
+                let deadline = Instant::now() + fixture.recv_timeout;
+                match survivor_admit(&mut ep, addrs, &members, joiner, deadline) {
+                    Ok(()) => {
+                        ep.drain_inbox();
+                        fixture.machines = MachineConfig::from_normalized(speeds.clone());
+                        ep.send_ctrl(
+                            0,
+                            &Frame::AdmitAck { machine: wire_u32(ep.wire_id())? },
+                        )?;
+                        eprintln!(
+                            "gtip serve: admitted wire id {joiner}; now machine {}/{} (wire id {})",
+                            ep.id(),
+                            ep.machine_count(),
+                            ep.wire_id()
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "gtip serve: admit of wire id {joiner} failed ({e}); awaiting rollback"
+                        );
+                    }
+                }
             }
             (0, Frame::Goodbye) => break,
             (peer, frame) => {
@@ -1635,6 +2270,398 @@ pub fn serve(
         overhead: ep.stats_snapshot(),
         control: ep.net_snapshot(),
     })
+}
+
+/// A survivor's half of an admission: dial the joiner, introduce
+/// ourselves, accept the joiner's return dial on the retained mesh
+/// listener, and extend the endpoint. The deadline is one receive
+/// timeout — strictly shorter than the leader's ack-barrier patience,
+/// so a dead joiner still leaves time to observe the rollback
+/// `Restore` that follows.
+fn survivor_admit(
+    ep: &mut TcpEndpoint,
+    addrs: &[String],
+    members: &[MachineId],
+    joiner: MachineId,
+    deadline: Instant,
+) -> Result<(), WireError> {
+    if joiner >= addrs.len() {
+        return Err(WireError::Protocol(format!(
+            "admit names joiner {joiner} but the peer list has {} entries",
+            addrs.len()
+        )));
+    }
+    let mut out = dial_peer(&addrs[joiner], deadline)?;
+    write_frame(
+        &mut out,
+        &Frame::Hello {
+            version: WIRE_VERSION,
+            machine: wire_u32(ep.wire_id())?,
+            machines: wire_u32(addrs.len())?,
+        },
+    )?;
+    let inbound = accept_wire_peer(&ep.listener, joiner, addrs.len(), deadline)?;
+    ep.extend(members, joiner, out, inbound)
+}
+
+/// Accept connections on the retained (nonblocking) mesh listener
+/// until the expected wire peer's `Hello` arrives. Strangers and
+/// garbage handshakes are dropped with a note, exactly like the
+/// original mesh accept; only the deadline fails the wait.
+fn accept_wire_peer(
+    listener: &TcpListener,
+    expect_wire: MachineId,
+    k_orig: usize,
+    deadline: Instant,
+) -> Result<TcpStream, WireError> {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, addr)) => {
+                let hello = (|| -> Result<MachineId, WireError> {
+                    stream.set_nonblocking(false)?;
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(WireError::Protocol(
+                            "handshake deadline already passed".into(),
+                        ));
+                    }
+                    stream.set_read_timeout(Some(left))?;
+                    match read_frame(&mut stream)? {
+                        Frame::Hello { machine, machines, .. }
+                            if machines as usize == k_orig =>
+                        {
+                            Ok(machine as MachineId)
+                        }
+                        frame => {
+                            Err(WireError::Protocol(format!("expected Hello, got {frame:?}")))
+                        }
+                    }
+                })();
+                match hello {
+                    Ok(peer) if peer == expect_wire => {
+                        stream.set_read_timeout(None)?;
+                        stream.set_nodelay(true)?;
+                        return Ok(stream);
+                    }
+                    Ok(peer) => eprintln!(
+                        "gtip net: dropping dial from machine {peer} while expecting {expect_wire}"
+                    ),
+                    Err(e) => {
+                        eprintln!("gtip net: dropping inbound connection from {addr}: {e}")
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Protocol(format!(
+                        "timed out waiting for wire id {expect_wire}'s dial"
+                    )));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// How long a turned-away joiner pauses before re-dialing the leader.
+const JOIN_RETRY_PAUSE: Duration = Duration::from_millis(300);
+
+/// Run a *joining* machine's side of the cluster: bind our listed
+/// address, dial the leader with `Hello` + `Join`, wait (up to
+/// `admit_window`) for the leader to dial back at an epoch boundary,
+/// complete the mesh extension, check the `Setup` + `Catchup` the
+/// leader ships, ack, and fall into the normal worker loop. This is
+/// the body of `gtip serve --join`.
+///
+/// A rejection (`Goodbye`, or the leader simply closing the join
+/// stream — e.g. the run predates wire v4, or the cluster is still
+/// forming) is retried until `connect_timeout` runs out. Once a
+/// `Join` has been *accepted into the queue* (neither rejected nor
+/// closed) the joiner does NOT re-dial within the admit window:
+/// re-dialing would queue a duplicate request whose leader-side
+/// stream half is already dead.
+pub fn serve_join(
+    machine_id: MachineId,
+    addrs: &[String],
+    speed: f64,
+    connect_timeout: Duration,
+    admit_window: Duration,
+) -> Result<ServeSummary, WireError> {
+    if machine_id == 0 {
+        return Err(WireError::Protocol(
+            "machine 0 is the driver; it cannot join its own cluster".into(),
+        ));
+    }
+    if machine_id >= addrs.len() {
+        return Err(WireError::Protocol(format!(
+            "--machine-id {machine_id} out of range for {} peers",
+            addrs.len()
+        )));
+    }
+    if !(speed.is_finite() && speed > 0.0) {
+        return Err(WireError::Protocol(format!("--speed {speed} must be finite and positive")));
+    }
+    let k_orig = addrs.len();
+    let die = std::env::var("GTIP_SERVE_DIE").unwrap_or_default();
+
+    // Bind with retry: the predecessor we replace may hold the port
+    // until its process is fully reaped.
+    let bind_deadline = Instant::now() + connect_timeout;
+    let listener = loop {
+        match TcpListener::bind(addrs[machine_id].as_str()) {
+            Ok(l) => break l,
+            Err(e) => {
+                if Instant::now() >= bind_deadline {
+                    return Err(WireError::Io(format!("binding {}: {e}", addrs[machine_id])));
+                }
+                std::thread::sleep(JOIN_RETRY_PAUSE);
+            }
+        }
+    };
+    listener.set_nonblocking(true)?;
+
+    let overall = Instant::now() + connect_timeout;
+    // Members' dials that complete before the leader's own — separate
+    // connections have no ordering guarantee — are stashed here.
+    let mut stash: Vec<(MachineId, TcpStream)> = Vec::new();
+    let no_peer_seen = vec![false; k_orig];
+    let (leader_out, leader_in) = 'attempt: loop {
+        let mut out = dial_peer(&addrs[0], overall)?;
+        write_frame(
+            &mut out,
+            &Frame::Hello {
+                version: WIRE_VERSION,
+                machine: wire_u32(machine_id)?,
+                machines: wire_u32(k_orig)?,
+            },
+        )?;
+        write_frame(&mut out, &Frame::Join { machine: wire_u32(machine_id)?, speed })?;
+        out.set_nonblocking(true)?;
+        eprintln!(
+            "gtip serve: join request sent (wire id {machine_id}, speed {speed}); waiting for admission"
+        );
+        let wait_deadline = Instant::now() + admit_window;
+        loop {
+            // Rejection check: the leader writes Goodbye (or just
+            // closes the stream) to turn us down.
+            let mut peeked = [0u8; 1];
+            let rejected = match out.peek(&mut peeked) {
+                Ok(0) => Some("join stream closed".to_string()),
+                Ok(_) => {
+                    out.set_nonblocking(false)?;
+                    out.set_read_timeout(Some(JOIN_HANDSHAKE_TIMEOUT))?;
+                    match read_frame(&mut out) {
+                        Ok(Frame::Goodbye) => Some("join rejected by the leader".to_string()),
+                        Err(WireError::Closed) => Some("join stream closed".to_string()),
+                        Ok(frame) => {
+                            return Err(WireError::Protocol(format!(
+                                "unexpected frame on the join stream: {frame:?}"
+                            )))
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(e) => Some(format!("join stream error: {e}")),
+            };
+            if let Some(why) = rejected {
+                if Instant::now() >= overall {
+                    return Err(WireError::Protocol(format!(
+                        "{why}; connect window exhausted"
+                    )));
+                }
+                eprintln!("gtip serve: {why}; retrying");
+                std::thread::sleep(JOIN_RETRY_PAUSE);
+                continue 'attempt;
+            }
+            // Admission check: the leader dials our listener first,
+            // then the other members (whose dials may still arrive in
+            // any order relative to the leader's).
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    let deadline = Instant::now() + JOIN_HANDSHAKE_TIMEOUT;
+                    match handshake_inbound(stream, machine_id, k_orig, deadline, &no_peer_seen)
+                    {
+                        Ok((0, stream)) => break 'attempt (out, stream),
+                        Ok((peer, stream)) => {
+                            if stash.iter().any(|(p, _)| *p == peer) {
+                                eprintln!(
+                                    "gtip serve: dropping duplicate dial from machine {peer}"
+                                );
+                            } else {
+                                stash.push((peer, stream));
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("gtip serve: dropping inbound connection from {addr}: {e}")
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => return Err(e.into()),
+            }
+            if Instant::now() >= wait_deadline {
+                return Err(WireError::Protocol(format!(
+                    "not admitted within the {admit_window:?} admit window"
+                )));
+            }
+            std::thread::sleep(ACCEPT_POLL);
+        }
+    };
+
+    let mut leader_out = leader_out;
+    leader_out.set_nonblocking(false)?;
+    let mut leader_in = leader_in;
+    // The Admit broadcast follows the leader's dial immediately.
+    leader_in.set_read_timeout(Some(admit_window))?;
+    let admit = read_frame(&mut leader_in)?;
+    let Frame::Admit { members, joiner, speeds } = admit else {
+        return Err(WireError::Protocol(format!("expected Admit, got {admit:?}")));
+    };
+    if joiner as MachineId != machine_id {
+        return Err(WireError::Protocol(format!(
+            "admit names joiner {joiner}, we are {machine_id}"
+        )));
+    }
+    let members: Vec<MachineId> = members.iter().map(|&w| w as MachineId).collect();
+    if members.len() < 2
+        || !members.windows(2).all(|w| w[0] < w[1])
+        || *members.last().expect("non-empty") >= k_orig
+        || members[0] != 0
+        || !members.contains(&machine_id)
+    {
+        return Err(WireError::Protocol(format!("admit member list {members:?} is invalid")));
+    }
+    if speeds.len() != members.len() {
+        return Err(WireError::Protocol(format!(
+            "admit has {} members but {} speeds",
+            members.len(),
+            speeds.len()
+        )));
+    }
+    if die == "admit" {
+        eprintln!("gtip serve: GTIP_SERVE_DIE=admit — dying on Admit");
+        std::process::exit(86);
+    }
+    leader_in.set_read_timeout(None)?;
+
+    // Complete the mesh: dial every other member, collect their dials
+    // (some may already be stashed from the wait loop).
+    let deadline = Instant::now() + admit_window;
+    let mut outs: Vec<Option<Mutex<TcpStream>>> = (0..k_orig).map(|_| None).collect();
+    outs[0] = Some(Mutex::new(leader_out));
+    for &m in &members {
+        if m == 0 || m == machine_id {
+            continue;
+        }
+        let mut s = dial_peer(&addrs[m], deadline)?;
+        write_frame(
+            &mut s,
+            &Frame::Hello {
+                version: WIRE_VERSION,
+                machine: wire_u32(machine_id)?,
+                machines: wire_u32(k_orig)?,
+            },
+        )?;
+        outs[m] = Some(Mutex::new(s));
+    }
+    let expected: Vec<MachineId> =
+        members.iter().copied().filter(|&m| m != 0 && m != machine_id).collect();
+    let mut have: Vec<(MachineId, TcpStream)> = Vec::new();
+    for (peer, stream) in stash {
+        if expected.contains(&peer) && !have.iter().any(|(p, _)| *p == peer) {
+            have.push((peer, stream));
+        }
+    }
+    while have.len() < expected.len() {
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                match handshake_inbound(stream, machine_id, k_orig, deadline, &no_peer_seen) {
+                    Ok((peer, stream))
+                        if expected.contains(&peer) && !have.iter().any(|(p, _)| *p == peer) =>
+                    {
+                        have.push((peer, stream))
+                    }
+                    Ok((peer, _)) => {
+                        eprintln!("gtip serve: dropping unexpected dial from machine {peer}")
+                    }
+                    Err(e) => {
+                        eprintln!("gtip serve: dropping inbound connection from {addr}: {e}")
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Protocol(format!(
+                        "timed out waiting for member dials (have {}/{})",
+                        have.len(),
+                        expected.len()
+                    )));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    // Hand-build the endpoint — the mesh helper assumes a full K-way
+    // dial, but a joiner's mesh is the admitted membership.
+    let pos = members.iter().position(|&w| w == machine_id).expect("validated above");
+    let (inbox_tx, inbox) = channel();
+    let (ctrl_tx, ctrl) = channel();
+    spawn_reader(leader_in, 0, inbox_tx.clone(), ctrl_tx.clone());
+    for (peer, stream) in have {
+        spawn_reader(stream, peer, inbox_tx.clone(), ctrl_tx.clone());
+    }
+    let mut logical_of = vec![None; k_orig];
+    for (logical, &wire) in members.iter().enumerate() {
+        logical_of[wire] = Some(logical);
+    }
+    let ep = TcpEndpoint {
+        id: pos,
+        k: members.len(),
+        wire_id: machine_id,
+        wire_of: members.clone(),
+        logical_of,
+        inbox,
+        inbox_tx,
+        ctrl,
+        ctrl_tx,
+        listener,
+        outs,
+        stats: Arc::new(Mutex::new(OverheadStats::default())),
+        net: Arc::new(Mutex::new(NetStats::default())),
+        failures: Mutex::new(SendFailures::default()),
+    };
+
+    // Fixture + catch-up snapshot, then ack the admission.
+    let setup = match ep.recv_ctrl(admit_window)? {
+        (0, Frame::Setup(s)) => s,
+        (peer, frame) => {
+            return Err(WireError::Protocol(format!(
+                "expected Setup from the leader, got {frame:?} from machine {peer}"
+            )))
+        }
+    };
+    let fixture = WorkerFixture::from_setup(&setup, members.len())?;
+    match ep.recv_ctrl(admit_window)? {
+        (0, Frame::Catchup { snapshot }) => {
+            let snap = crate::sim::Snapshot::decode(&snapshot)
+                .map_err(|e| WireError::Protocol(format!("catch-up snapshot: {e}")))?;
+            snap.validate_catchup(members.len(), fixture.graph.node_weights().len())
+                .map_err(WireError::Protocol)?;
+            eprintln!("gtip serve: caught up from {}", snap.summary());
+        }
+        (peer, frame) => {
+            return Err(WireError::Protocol(format!(
+                "expected Catchup from the leader, got {frame:?} from machine {peer}"
+            )))
+        }
+    }
+    ep.send_ctrl(0, &Frame::AdmitAck { machine: wire_u32(machine_id)? })?;
+    eprintln!("gtip serve: admitted as machine {pos}/{} (wire id {machine_id})", members.len());
+    run_worker_loop(ep, addrs, fixture, &die)
 }
 
 /// Weights arriving off the wire must be finite and non-negative —
@@ -1733,12 +2760,27 @@ mod tests {
             Frame::Restore { survivors: vec![0, 2, 3], speeds: vec![0.25, 0.25, 0.5] },
             Frame::Join { machine: 4, speed: 0.125 },
             Frame::RestoreAck { machine: 3 },
+            Frame::Admit { members: vec![0, 2, 3], joiner: 2, speeds: vec![0.25, 0.25, 0.5] },
+            Frame::AdmitAck { machine: 2 },
+            Frame::Catchup { snapshot: vec![] },
+            Frame::Catchup { snapshot: vec![0xDE, 0xAD, 0xBE, 0xEF] },
             Frame::Goodbye,
         ];
         for f in frames {
             let bytes = encode_frame(&f).unwrap();
             assert_eq!(decode_payload(&bytes[4..]).unwrap(), f);
         }
+    }
+
+    /// A `Catchup` whose declared snapshot length exceeds the actual
+    /// payload must be a clean truncation error, not a panic or a
+    /// huge-allocation attempt.
+    #[test]
+    fn lying_catchup_length_is_truncation_not_panic() {
+        let mut payload = vec![TAG_CATCHUP];
+        put_u32(&mut payload, 100); // claims 100 snapshot bytes...
+        payload.extend_from_slice(&[0u8; 10]); // ...carries 10
+        assert!(matches!(decode_payload(&payload), Err(WireError::Truncated { .. })));
     }
 
     /// Node/machine ids that do not fit the u32 wire format must come
@@ -1977,5 +3019,175 @@ mod tests {
         assert!(ep0.compact(&[2, 0]).is_err());
         assert!(ep0.compact(&[2]).is_err()); // missing this machine
         assert!(ep0.compact(&[0, 7]).is_err()); // out of range
+    }
+
+    /// A connected loopback socket pair — stands in for the joiner's
+    /// dial / the survivor's dial-back during an admission.
+    fn stream_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialed = TcpStream::connect(addr).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        (dialed, accepted)
+    }
+
+    /// Extension is the exact mirror of compaction: after an eviction
+    /// to [0, 2], wire 1 is re-admitted and both planes (protocol +
+    /// control) route through the re-grown logical ids — including the
+    /// fresh streams to/from the joiner. Bad member lists and joins
+    /// for still-active wire ids are rejected without disturbing the
+    /// mesh.
+    #[test]
+    fn extend_readmits_and_reroutes() {
+        let (mut eps, _stats) = build_tcp_bus_local(3).unwrap();
+        let mut ep2 = eps.pop().unwrap();
+        let ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        drop(ep1); // wire machine 1 dies
+        ep0.compact(&[0, 2]).unwrap();
+        ep2.compact(&[0, 2]).unwrap();
+
+        // Rejection cases first — none of these may touch the mesh.
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1], 1, out, inbound).is_err(), "members minus joiner != mesh");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 2], 2, out, inbound).is_err(), "joiner 2 is still active");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 2], 0, out, inbound).is_err(), "joiner 0 is this machine");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 2], 1, out, inbound).is_err(), "joiner missing from members");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 7], 1, out, inbound).is_err(), "wire id out of range");
+        assert_eq!((ep0.id(), ep0.machine_count()), (0, 2), "failed extends must not mutate");
+        assert!(!ep0.wire_is_active(1));
+
+        // The real re-admission: wire 1 rejoins on fresh socket pairs.
+        let (joiner_to_0, inbound0) = stream_pair();
+        let (out0, joiner_from_0) = stream_pair();
+        ep0.extend(&[0, 1, 2], 1, out0, inbound0).unwrap();
+        let (joiner_to_2, inbound2) = stream_pair();
+        let (out2, _joiner_from_2) = stream_pair();
+        ep2.extend(&[0, 1, 2], 1, out2, inbound2).unwrap();
+        assert_eq!((ep0.id(), ep0.machine_count()), (0, 3));
+        assert_eq!((ep2.id(), ep2.machine_count()), (2, 3));
+        assert!(ep0.wire_is_active(1));
+
+        // Protocol plane, outbound: logical 1 now reaches the joiner.
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 3, transfers_so_far: 4 };
+        ep0.send(1, msg.clone());
+        let mut joiner_rx = joiner_from_0;
+        match read_frame(&mut joiner_rx).unwrap() {
+            Frame::Msg(got) => assert_eq!(got, msg),
+            other => panic!("joiner expected the protocol message, got {other:?}"),
+        }
+
+        // Protocol plane, inbound: the joiner's traffic lands in the
+        // survivor's inbox tagged with the re-grown logical id.
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 5, transfers_so_far: 6 };
+        let mut joiner_tx = joiner_to_2;
+        joiner_tx.write_all(&encode_frame(&Frame::Msg(msg.clone())).unwrap()).unwrap();
+        match ep2.recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery from the joiner after extension: {other:?}"),
+        }
+
+        // Control plane: the joiner's AdmitAck arrives as logical 1.
+        let mut joiner_ctrl = joiner_to_0;
+        joiner_ctrl
+            .write_all(&encode_frame(&Frame::AdmitAck { machine: 1 }).unwrap())
+            .unwrap();
+        match ep0.recv_ctrl(Duration::from_secs(5)).unwrap() {
+            (1, Frame::AdmitAck { machine: 1 }) => {}
+            other => panic!("bad ctrl routing after extension: {other:?}"),
+        }
+
+        // And the survivors' original streams still route: wire 2 is
+        // logical 2 again.
+        ep2.send_ctrl(0, &Frame::RestoreAck { machine: 2 }).unwrap();
+        match ep0.recv_ctrl(Duration::from_secs(5)).unwrap() {
+            (2, Frame::RestoreAck { machine: 2 }) => {}
+            other => panic!("survivor ctrl lost after extension: {other:?}"),
+        }
+
+        // A second extend for the now-active joiner must be refused.
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 2], 1, out, inbound).is_err(), "joiner 1 is now active");
+    }
+
+    /// The handshake must fail *immediately* once its deadline has
+    /// passed — even for a peer whose valid `Hello` is already sitting
+    /// in the socket buffer. The old code clamped the remaining window
+    /// up to 1 ms and read anyway, letting connect-spamming peers
+    /// stretch the accept loop past the recovery grace-window bound.
+    #[test]
+    fn handshake_rejects_once_the_deadline_has_passed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        // The Hello itself is perfectly valid and already delivered...
+        let hello =
+            encode_frame(&Frame::Hello { version: WIRE_VERSION, machine: 1, machines: 2 })
+                .unwrap();
+        client.write_all(&hello).unwrap();
+        client.flush().unwrap();
+        // ...but the deadline expired before the accept got to it.
+        let deadline = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        let start = Instant::now();
+        let result = handshake_inbound(stream, 0, 2, deadline, &[false; 2]);
+        assert!(result.is_err(), "an expired deadline must reject even a valid Hello");
+        assert!(
+            start.elapsed() < Duration::from_secs(1),
+            "the rejection must be immediate, not a blocking read: {:?}",
+            start.elapsed()
+        );
+    }
+
+    /// A worker whose leader goes silent (alive socket, no frames) must
+    /// give up after the *derived* epoch wait — ten receive timeouts,
+    /// floored at 5 s — not the old hard-coded 600 s. With a 200 ms
+    /// fixture timeout the floor governs: the worker exits in ~5 s.
+    #[test]
+    fn silent_leader_bounds_the_workers_wait() {
+        assert_eq!(epoch_wait(Duration::from_millis(200)), Duration::from_secs(5));
+        assert_eq!(epoch_wait(Duration::from_secs(2)), Duration::from_secs(20));
+        assert_eq!(epoch_wait(Duration::MAX), Duration::MAX); // saturates, no overflow
+
+        let (mut eps, _stats) = build_tcp_bus_local(2).unwrap();
+        let ep1 = eps.pop().unwrap();
+        let _ep0 = eps.pop().unwrap(); // the leader: alive but silent
+        let setup = SetupFrame {
+            speeds: vec![0.5, 0.5],
+            mu: 8.0,
+            framework: Framework::A,
+            migration_charge: 0.0,
+            epsilon: 1e-9,
+            max_transfers: 1000,
+            recv_timeout_ms: 200,
+            node_weights: vec![1.0, 1.0],
+            edges: vec![(0, 1, 1.0)],
+        };
+        let fixture = WorkerFixture::from_setup(&setup, 2).unwrap();
+        let addrs: Vec<String> = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()];
+        let start = Instant::now();
+        let worker = std::thread::spawn(move || run_worker_loop(ep1, &addrs, fixture, ""));
+        // Poll rather than join so a regression to an unbounded wait
+        // fails the test at 60 s instead of hanging CI for 600.
+        while !worker.is_finished() {
+            assert!(
+                start.elapsed() < Duration::from_secs(60),
+                "worker still waiting after {:?} — epoch wait not derived from recv timeout",
+                start.elapsed()
+            );
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        let waited = start.elapsed();
+        let result = worker.join().expect("worker thread must not panic");
+        assert!(result.is_err(), "a silent leader must surface as an error, not success");
+        assert!(
+            waited >= Duration::from_secs(4),
+            "worker gave up before the derived epoch wait: {waited:?}"
+        );
     }
 }

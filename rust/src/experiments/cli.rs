@@ -69,13 +69,14 @@ USAGE:
                   [--seed S] [--compare] [--parallelism P]
                   [--transport inproc|tcp] [--peers host:port,...]
                   [--connect-timeout-ms MS] [--recv-timeout-ms MS]
-                  [--report-json FILE]
+                  [--admit-window-ms MS] [--report-json FILE]
                   [--checkpoint-dir DIR] [--restore FILE]
   gtip churn-sweep [--scenarios hotspot,flash] [--nodes N] [--k K] [--threads N]
                   [--horizon T] [--epoch-ticks E] [--framework A|B] [--seed S]
                   [--charges 0,2,8,32] [--tick-value V] [--out FILE]
   gtip serve      --machine-id K --peers host:port,host:port,...
                   [--connect-timeout-ms MS] [--checkpoint-dir DIR]
+                  [--join] [--speed S] [--admit-window-ms MS]
   gtip snapshot   --inspect FILE      # print a checkpoint's summary + verify round-trip
   gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
                   [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
@@ -295,6 +296,10 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     // safe for congested CI; kill-a-worker tests dial it down so death
     // diagnosis is quick.
     let recv_timeout = Duration::from_millis(args.opt_or::<u64>("recv-timeout-ms", 30_000)?.max(1));
+    // Patience of the admission handshake's ack barrier (leader side).
+    // Defaults to 2× recv_timeout inside ClusterLeader; only override
+    // when a test needs the rollback path to trip quickly.
+    let admit_window = args.opt::<u64>("admit-window-ms")?.map(Duration::from_millis);
     let tcp = match transport.as_str() {
         "inproc" | "in-process" | "local" => false,
         "tcp" => true,
@@ -365,7 +370,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
                 )
                 .into());
             }
-            let leader = ClusterLeader::connect(
+            let mut leader = ClusterLeader::connect(
                 &peers,
                 DistributedOptions {
                     mu,
@@ -376,6 +381,9 @@ fn cmd_dynamic(args: &Args) -> CliResult {
                 },
                 connect_timeout,
             )?;
+            if let Some(w) = admit_window {
+                leader.set_admit_window(w);
+            }
             driver.attach_cluster(leader)?;
         }
         let report = driver.try_run()?;
@@ -488,7 +496,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
                 peers.len(),
                 peers[0]
             );
-            let leader = ClusterLeader::connect(
+            let mut leader = ClusterLeader::connect(
                 &peers,
                 DistributedOptions {
                     mu,
@@ -499,6 +507,9 @@ fn cmd_dynamic(args: &Args) -> CliResult {
                 },
                 connect_timeout,
             )?;
+            if let Some(w) = admit_window {
+                leader.set_admit_window(w);
+            }
             driver.attach_cluster(leader)?;
         }
         let report = driver.try_run()?;
@@ -529,13 +540,21 @@ fn cmd_dynamic(args: &Args) -> CliResult {
                 driver.machines().count(),
             );
         }
+        if report.admissions() > 0 {
+            println!(
+                "admitted {} joiner(s); fleet now K={}",
+                report.admissions(),
+                driver.machines().count(),
+            );
+        }
         if let Some(path) = args.opt_str("report-json") {
             // `driver.machines()` and `driver.weighted_graph()`, not
-            // the pre-run config: a recovery shrinks the fleet, and the
-            // final assignment was refined on the final measured
-            // weights — costing it against the stale K or the initial
-            // weights would be wrong (and would make the recovered run
-            // incomparable with a `--restore recovery.snap` replay).
+            // the pre-run config: a recovery shrinks the fleet (and an
+            // admission grows it), and the final assignment was
+            // refined on the final measured weights — costing it
+            // against the stale K or the initial weights would be
+            // wrong (and would make the recovered run incomparable
+            // with a `--restore recovery-NNNN.snap` replay).
             let json = dynamic_report_json(
                 &report,
                 driver.engine().partition().assignment(),
@@ -584,6 +603,7 @@ fn dynamic_report_json(
         ("transfers".into(), JsonVal::Int(report.transfers as u64)),
         ("refinements".into(), JsonVal::Int(report.refinements() as u64)),
         ("recoveries".into(), JsonVal::Int(report.recoveries() as u64)),
+        ("admissions".into(), JsonVal::Int(report.admissions() as u64)),
         ("machines".into(), JsonVal::Int(machines.count() as u64)),
     ];
     if let Some(o) = report.total_overhead() {
@@ -641,7 +661,13 @@ fn cmd_snapshot(args: &Args) -> CliResult {
 
 /// Worker side of the multi-process cluster: block until the leader
 /// (machine 0, `gtip dynamic --transport tcp`) connects, then play one
-/// refinement round per epoch until it says goodbye.
+/// refinement round per epoch until it says goodbye. With `--join`,
+/// instead of waiting for the leader's mesh dial, ask a *live* cluster
+/// to re-admit this machine id (DESIGN.md §10): send `Join`, wait out
+/// the admission handshake (`--admit-window-ms`), catch up from the
+/// leader's boundary snapshot, and serve from there. `--speed` is the
+/// joiner's self-reported relative speed (1.0 = an average machine of
+/// the original fleet).
 fn cmd_serve(args: &Args) -> CliResult {
     let machine_id = args.opt::<usize>("machine-id")?.ok_or("--machine-id is required")?;
     let peers = net::parse_peers(args.req_str("peers")?)?;
@@ -652,13 +678,32 @@ fn cmd_serve(args: &Args) -> CliResult {
         // worker has nothing to write there.
         println!("note: checkpoints are taken by the leader; --checkpoint-dir is a no-op on serve");
     }
-    println!(
-        "gtip serve: machine {machine_id}/{} listening on {} (leader @ {})",
-        peers.len(),
-        peers.get(machine_id).map(String::as_str).unwrap_or("?"),
-        peers[0],
-    );
-    let summary = net::serve(machine_id, &peers, connect_timeout)?;
+    let summary = if args.flag("join") {
+        let speed = args.opt_or::<f64>("speed", 1.0)?;
+        if !(speed > 0.0 && speed.is_finite()) {
+            return Err("--speed must be finite and > 0".into());
+        }
+        let admit_window =
+            Duration::from_millis(args.opt_or::<u64>("admit-window-ms", 120_000)?.max(1));
+        println!(
+            "gtip serve: machine {machine_id}/{} joining the live cluster via {} (leader @ {})",
+            peers.len(),
+            peers.get(machine_id).map(String::as_str).unwrap_or("?"),
+            peers[0],
+        );
+        net::serve_join(machine_id, &peers, speed, connect_timeout, admit_window)?
+    } else {
+        if args.opt_str("speed").is_some() || args.opt_str("admit-window-ms").is_some() {
+            return Err("--speed / --admit-window-ms only apply with --join".into());
+        }
+        println!(
+            "gtip serve: machine {machine_id}/{} listening on {} (leader @ {})",
+            peers.len(),
+            peers.get(machine_id).map(String::as_str).unwrap_or("?"),
+            peers[0],
+        );
+        net::serve(machine_id, &peers, connect_timeout)?
+    };
     println!(
         "served {} refinement epochs as machine {}: sent {} sync msgs / {} bytes, {} control msgs / {} bytes",
         summary.epochs,
@@ -1304,6 +1349,39 @@ mod tests {
             "127.0.0.1:1,127.0.0.1:2",
         ]))
         .is_err());
+        // Join-only flags require --join.
+        assert!(run(&parse(&[
+            "serve",
+            "--machine-id",
+            "1",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+            "--speed",
+            "2.0",
+        ]))
+        .is_err());
+        // A joiner's speed must be a positive weight.
+        assert!(run(&parse(&[
+            "serve",
+            "--machine-id",
+            "1",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+            "--join",
+            "--speed",
+            "0",
+        ]))
+        .is_err());
+        // Machine 0 cannot join its own cluster either.
+        assert!(run(&parse(&[
+            "serve",
+            "--machine-id",
+            "0",
+            "--peers",
+            "127.0.0.1:1,127.0.0.1:2",
+            "--join",
+        ]))
+        .is_err());
     }
 
     #[test]
@@ -1407,6 +1485,7 @@ mod tests {
         let doc = parse_json(&std::fs::read_to_string(&report).unwrap()).unwrap();
         let dynamic = doc.get("dynamic").expect("dynamic group");
         assert_eq!(dynamic.get("recoveries").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(dynamic.get("admissions").and_then(|v| v.as_u64()), Some(0));
         assert_eq!(dynamic.get("machines").and_then(|v| v.as_u64()), Some(3));
         let _ = std::fs::remove_dir_all(&dir);
         let _ = std::fs::remove_file(&report);

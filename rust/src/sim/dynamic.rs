@@ -280,10 +280,13 @@ pub struct DynamicOptions {
     /// Cap on refinement epochs (0 = unlimited).
     pub max_refinements: usize,
     /// When set, every epoch-boundary [`Snapshot`] is also written
-    /// here (`epoch-NNNN.snap`, plus `recovery.snap` after a worker
-    /// death), so an operator can inspect or `--restore` them. The
-    /// in-memory checkpoint that powers live recovery is kept whenever
-    /// a TCP cluster is attached, with or without this directory.
+    /// here (`epoch-NNNN.snap`, numbered by the *cumulative* epoch
+    /// counter so a restored run never overwrites the original run's
+    /// files; plus `recovery-NNNN.snap` after each worker death and
+    /// `admit-NNNN.snap` after each admission), so an operator can
+    /// inspect or `--restore` them. The in-memory checkpoint that
+    /// powers live recovery is kept whenever a TCP cluster is
+    /// attached, with or without this directory.
     pub checkpoint_dir: Option<PathBuf>,
 }
 
@@ -361,6 +364,27 @@ pub struct RecoveryRecord {
     pub rehomed_lps: usize,
 }
 
+/// What a worker admission did — the [`RecoveryRecord`] counterpart
+/// for the grow direction (DESIGN.md §10): which wire id joined, the
+/// logical slot it was inserted at, and how the fleet grew. The
+/// joiner starts with zero LPs; the next refinement epoch migrates
+/// load toward it (Thm 4.1 descent holds from any feasible start).
+#[derive(Debug, Clone)]
+pub struct AdmissionRecord {
+    /// The joiner's immutable wire id (its `--machine-id`).
+    pub joined_wire_id: MachineId,
+    /// The logical machine slot the joiner was inserted at (wire ids
+    /// stay ascending, so members to its right shifted up by one).
+    pub joined_machine: MachineId,
+    /// Fleet size before the admission.
+    pub machines_before: usize,
+    /// Fleet size after (always `machines_before + 1`).
+    pub machines_after: usize,
+    /// The joiner's self-reported relative speed (1.0 = an average
+    /// member of the original fleet), before renormalization.
+    pub speed: f64,
+}
+
 /// Per-epoch record of the closed loop.
 #[derive(Debug, Clone)]
 pub struct EpochReport {
@@ -397,6 +421,9 @@ pub struct EpochReport {
     /// refinement and the run restored from the last epoch-boundary
     /// checkpoint instead of unwinding (DESIGN.md §10).
     pub recovery: Option<RecoveryRecord>,
+    /// Set when a queued joiner was admitted at this epoch's boundary
+    /// and the fleet grew to K+1 before the epoch's refinement ran.
+    pub admission: Option<AdmissionRecord>,
 }
 
 /// Aggregate result of a closed-loop run.
@@ -428,6 +455,12 @@ impl DynamicReport {
     /// from the last checkpoint.
     pub fn recoveries(&self) -> usize {
         self.epochs.iter().filter(|e| e.recovery.is_some()).count()
+    }
+
+    /// Number of epochs that grew the fleet by admitting a joiner at
+    /// their boundary.
+    pub fn admissions(&self) -> usize {
+        self.epochs.iter().filter(|e| e.admission.is_some()).count()
     }
 
     /// Refinement epochs whose potential *rose* — Thm 4.1 says this is
@@ -501,6 +534,18 @@ pub struct DynamicDriver<'g> {
     estimator: WeightEstimator,
     options: DynamicOptions,
     epochs: Vec<EpochReport>,
+    /// Epochs completed *before* this driver existed (non-zero only
+    /// when restored from a snapshot). Epoch reports renumber from 0
+    /// per run, but checkpoint filenames and the `epoch` counter
+    /// stored in snapshots use `epoch_base + epochs.len()`, so a
+    /// resumed run sharing `checkpoint_dir` with the original never
+    /// overwrites the original's files.
+    epoch_base: u64,
+    /// Recoveries taken this run — names `recovery-NNNN.snap` so a
+    /// second recovery does not overwrite the first's replay point.
+    recovery_ordinal: usize,
+    /// Admissions granted this run — names `admit-NNNN.snap`.
+    admission_ordinal: usize,
     refinements: usize,
     transfers: usize,
     migration_ticks: u64,
@@ -532,6 +577,9 @@ impl<'g> DynamicDriver<'g> {
             estimator,
             options,
             epochs: Vec::new(),
+            epoch_base: 0,
+            recovery_ordinal: 0,
+            admission_ordinal: 0,
             refinements: 0,
             transfers: 0,
             migration_ticks: 0,
@@ -548,8 +596,11 @@ impl<'g> DynamicDriver<'g> {
     /// supplies configuration (kind/α/dead band); its smoothing memory
     /// is overwritten with the checkpointed state. Epoch reports
     /// renumber from 0, but the cumulative counters (ticks, transfers,
-    /// migration charge) continue from the snapshot, so
-    /// [`DynamicReport::total_time`] stays the whole-run figure.
+    /// migration charge, and the epoch counter used for checkpoint
+    /// filenames) continue from the snapshot, so
+    /// [`DynamicReport::total_time`] stays the whole-run figure and a
+    /// resumed run writing into the same `checkpoint_dir` continues
+    /// the `epoch-NNNN.snap` sequence instead of overwriting it.
     pub fn from_snapshot(
         graph: &'g Graph,
         snap: &Snapshot,
@@ -574,6 +625,9 @@ impl<'g> DynamicDriver<'g> {
             estimator,
             options,
             epochs: Vec::new(),
+            epoch_base: snap.epoch,
+            recovery_ordinal: 0,
+            admission_ordinal: 0,
             refinements: snap.refinements as usize,
             transfers: snap.transfers as usize,
             migration_ticks: snap.migration_ticks,
@@ -593,7 +647,8 @@ impl<'g> DynamicDriver<'g> {
         );
         if let Err(e) = cluster.setup(&self.lp_graph, &self.machines) {
             // Best-effort Goodbye so workers that did complete the
-            // handshake exit now instead of waiting out EPOCH_WAIT.
+            // handshake exit now instead of waiting out their derived
+            // epoch-wait timeout.
             let _ = cluster.shutdown();
             return Err(e);
         }
@@ -606,8 +661,9 @@ impl<'g> DynamicDriver<'g> {
     }
 
     /// The current fleet — shrinks when a recovery evicts dead
-    /// machines, so report consumers must read it from here rather
-    /// than keep the pre-run config.
+    /// machines and grows when a boundary admission re-adds one, so
+    /// report consumers must read it from here rather than keep the
+    /// pre-run config.
     pub fn machines(&self) -> &MachineConfig {
         &self.machines
     }
@@ -634,7 +690,7 @@ impl<'g> DynamicDriver<'g> {
             node_weights: self.lp_graph.node_weights().to_vec(),
             edges: self.lp_graph.edges().collect(),
             speeds: self.machines.speeds().to_vec(),
-            epoch: self.epochs.len() as u64,
+            epoch: self.epoch_base + self.epochs.len() as u64,
             refinements: self.refinements as u64,
             transfers: self.transfers as u64,
             migration_ticks: self.migration_ticks,
@@ -894,16 +950,119 @@ impl<'g> DynamicDriver<'g> {
             match self.refine_once(&counters) {
                 Ok(refinement) => {
                     // The post-refinement state is the new epoch
-                    // boundary: `gtip dynamic --restore recovery.snap`
+                    // boundary: `gtip dynamic --restore` on this file
                     // continues from here and (deterministically)
-                    // reaches the same final state as this run.
+                    // reaches the same final state as this run. Named
+                    // by recovery ordinal so a second recovery in the
+                    // same run keeps the first's replay point intact.
                     let recovered = self.snapshot();
                     let encoded = recovered.encode();
-                    self.write_checkpoint_file("recovery.snap", &encoded);
+                    self.write_checkpoint_file(
+                        &format!("recovery-{:04}.snap", self.recovery_ordinal),
+                        &encoded,
+                    );
+                    self.recovery_ordinal += 1;
                     self.last_checkpoint = Some(encoded);
                     return Ok((refinement, record.expect("at least one recovery round")));
                 }
                 Err(e) => err = e,
+            }
+        }
+    }
+
+    /// At an epoch boundary, admit one queued joiner if the attached
+    /// cluster has one waiting — the grow half of elastic membership
+    /// (DESIGN.md §10). Admission happens *only* here, never
+    /// mid-epoch: the boundary is where a consistent state exists,
+    /// and that state (remapped into the K+1 numbering) is exactly
+    /// what the joiner receives as its `Catchup` payload. The joiner
+    /// starts with zero LPs; the next refinement migrates load toward
+    /// it under Thm 4.1's any-feasible-start descent, so no dedicated
+    /// rebalancing pass is needed. A failed admission that rolled
+    /// back cleanly returns `Ok(None)` and the run continues at K;
+    /// `Err` means the rollback itself failed and the cluster was
+    /// torn down.
+    fn try_admit_pending(&mut self) -> Result<Option<AdmissionRecord>, WireError> {
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Ok(None);
+        };
+        let Some(req) = cluster.pending_join() else {
+            return Ok(None);
+        };
+        let joined_wire = req.wire_id;
+        let speed = req.speed;
+        let machines_before = self.machines.clone();
+        let k_old = machines_before.count();
+        // Wire ids stay ascending in the logical numbering, so the
+        // joiner lands at this slot and every member to its right
+        // shifts up by one.
+        let pos = cluster.joiner_position(joined_wire);
+        // The joiner's self-reported speed is relative to an average
+        // machine of the original fleet; the survivors' normalized
+        // speeds sum to 1, so an average-sized share next to them is
+        // speed/K. `from_speeds` renormalizes the grown vector.
+        let mut weights: Vec<f64> = machines_before.speeds().to_vec();
+        weights.insert(pos, speed / k_old as f64);
+        let machines_after = MachineConfig::from_speeds(&weights);
+        // Build the K+1 boundary snapshot the joiner catches up from:
+        // the current engine state with every assignment at or right
+        // of the insertion slot shifted into the grown numbering.
+        let mut state = self.engine.capture_state();
+        for a in &mut state.assignment {
+            if *a >= pos {
+                *a += 1;
+            }
+        }
+        let snap = Snapshot {
+            options: self.options.sim.clone(),
+            node_weights: self.lp_graph.node_weights().to_vec(),
+            edges: self.lp_graph.edges().collect(),
+            speeds: machines_after.speeds().to_vec(),
+            epoch: self.epoch_base + self.epochs.len() as u64,
+            refinements: self.refinements as u64,
+            transfers: self.transfers as u64,
+            migration_ticks: self.migration_ticks,
+            estimator: self.estimator.export_state(),
+            rng_streams: Vec::new(),
+            engine: state.clone(),
+        };
+        let encoded = snap.encode();
+        let admitted =
+            cluster.admit(req, &self.lp_graph, &machines_before, &machines_after, &encoded);
+        match admitted {
+            Ok(false) => Ok(None),
+            Ok(true) => {
+                // The cluster agreed on the wire; rebuild local state
+                // at K+1 to match what the joiner received.
+                self.engine = SimEngine::from_state(
+                    self.graph,
+                    machines_after.clone(),
+                    self.options.sim.clone(),
+                    state,
+                );
+                self.machines = machines_after;
+                self.write_checkpoint_file(
+                    &format!("admit-{:04}.snap", self.admission_ordinal),
+                    &encoded,
+                );
+                self.admission_ordinal += 1;
+                self.last_checkpoint = Some(encoded);
+                eprintln!(
+                    "gtip leader: admitted wire id {joined_wire} as machine {pos} \
+                     ({k_old} -> {} machines)",
+                    self.machines.count()
+                );
+                Ok(Some(AdmissionRecord {
+                    joined_wire_id: joined_wire,
+                    joined_machine: pos,
+                    machines_before: k_old,
+                    machines_after: self.machines.count(),
+                    speed,
+                }))
+            }
+            Err(e) => {
+                self.teardown_cluster();
+                Err(e)
             }
         }
     }
@@ -930,13 +1089,24 @@ impl<'g> DynamicDriver<'g> {
         // fast-forward jumps inside it so epoch windows are exact.
         let limit = tick_start.saturating_add(budget).min(self.options.sim.max_ticks);
         while self.engine.stats().ticks < limit && self.engine.step_bounded(limit) {}
+        // Grow the fleet first if a joiner is queued: the admission
+        // must see the boundary state *before* the regular checkpoint
+        // is taken, so the checkpoint (and any recovery later in this
+        // epoch) already carries the K+1 fleet the cluster agreed on.
+        let admission = self.try_admit_pending()?;
         // Epoch-boundary checkpoint — taken after the sim window but
         // *before* the window counters are harvested, so the snapshot
         // still holds the measurements and a restore can re-run the
-        // refinement that consumes them (DESIGN.md §10).
+        // refinement that consumes them (DESIGN.md §10). Named by the
+        // cumulative epoch counter: a restored run renumbers epoch
+        // *reports* from 0, but its files must continue the original
+        // run's sequence, not overwrite it.
         if self.cluster.is_some() || self.options.checkpoint_dir.is_some() {
             let bytes = self.snapshot().encode();
-            self.write_checkpoint_file(&format!("epoch-{:04}.snap", self.epochs.len()), &bytes);
+            self.write_checkpoint_file(
+                &format!("epoch-{:04}.snap", self.epoch_base + self.epochs.len() as u64),
+                &bytes,
+            );
             self.last_checkpoint = Some(bytes);
         }
         let counters = self.engine.take_epoch_counters();
@@ -988,6 +1158,7 @@ impl<'g> DynamicDriver<'g> {
             throughput: counters.events_total() as f64 / window as f64,
             refine,
             recovery,
+            admission,
         });
         Ok(more)
     }
@@ -1555,6 +1726,54 @@ mod tests {
         // One file per epoch boundary that was checkpointed.
         let count = std::fs::read_dir(&dir).unwrap().count();
         assert_eq!(count, report.epochs.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A run resumed from a snapshot into the *same* `checkpoint_dir`
+    /// continues the `epoch-NNNN.snap` sequence from the cumulative
+    /// epoch counter instead of renumbering from zero and silently
+    /// overwriting the original run's files.
+    #[test]
+    fn restored_run_extends_checkpoint_sequence_without_overwriting() {
+        let dir = std::env::temp_dir().join(format!("gtip-ckpt-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (g, machines, scenario) = setup(29);
+        let mut rng = Pcg32::new(30);
+        let initial = grow_partition(&g, &machines, &mut rng);
+        let mut opts = options(150);
+        opts.checkpoint_dir = Some(dir.clone());
+        let mut live = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial,
+            scenario.injections.clone(),
+            WeightEstimator::ewma(0.5),
+            opts.clone(),
+        );
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+        let snap = live.snapshot();
+        assert_eq!(snap.epoch, 2, "two boundaries passed");
+        let originals: Vec<Vec<u8>> = (0..2)
+            .map(|e| std::fs::read(dir.join(format!("epoch-{e:04}.snap"))).expect("original snap"))
+            .collect();
+
+        let g2 = snap.build_graph();
+        let mut restored =
+            DynamicDriver::from_snapshot(&g2, &snap, WeightEstimator::ewma(0.5), opts);
+        let report = restored.run();
+        assert!(!report.epochs.is_empty(), "the resumed run must do work");
+        assert!(
+            dir.join("epoch-0002.snap").exists(),
+            "the resumed run's first boundary continues the cumulative sequence"
+        );
+        for (e, bytes) in originals.iter().enumerate() {
+            assert_eq!(
+                &std::fs::read(dir.join(format!("epoch-{e:04}.snap"))).unwrap(),
+                bytes,
+                "the original run's epoch-{e:04}.snap must survive the resumed run"
+            );
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

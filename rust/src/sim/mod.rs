@@ -49,8 +49,8 @@ pub mod weights;
 pub mod workload;
 
 pub use dynamic::{
-    CompareReport, DynamicDriver, DynamicOptions, DynamicReport, EpochReport, EstimatorKind,
-    RecoveryRecord, RefineBackend, WeightEstimator,
+    AdmissionRecord, CompareReport, DynamicDriver, DynamicOptions, DynamicReport, EpochReport,
+    EstimatorKind, RecoveryRecord, RefineBackend, WeightEstimator,
 };
 pub use engine::{EpochCounters, SimEngine, SimOptions, SimStats};
 pub use event::{Event, EventKind, ThreadId};

@@ -661,6 +661,40 @@ impl Snapshot {
         self.speeds.len()
     }
 
+    /// Sanity-check a snapshot received as an admission catch-up
+    /// payload against the fixture shipped alongside it: the fleet and
+    /// LP counts must match and the engine state must cover every LP
+    /// with an in-range machine. A joiner runs this before acking its
+    /// admission, so a skewed leader surfaces as a clean protocol
+    /// error on the joiner instead of a divergent replica later.
+    pub fn validate_catchup(&self, machines: usize, nodes: usize) -> Result<(), String> {
+        if self.machine_count() != machines {
+            return Err(format!(
+                "catch-up snapshot has {} machines, the admitted fleet has {machines}",
+                self.machine_count()
+            ));
+        }
+        if self.node_weights.len() != nodes {
+            return Err(format!(
+                "catch-up snapshot has {} LPs, the fixture has {nodes}",
+                self.node_weights.len()
+            ));
+        }
+        if self.engine.assignment.len() != nodes || self.engine.lps.len() != nodes {
+            return Err(format!(
+                "catch-up snapshot engine state covers {}/{} LPs, expected {nodes}",
+                self.engine.assignment.len(),
+                self.engine.lps.len()
+            ));
+        }
+        if let Some(&bad) = self.engine.assignment.iter().find(|&&a| a >= machines) {
+            return Err(format!(
+                "catch-up snapshot assigns an LP to machine {bad} but K={machines}"
+            ));
+        }
+        Ok(())
+    }
+
     /// Rebuild the weighted LP graph (identical structure + game-side
     /// weights as at capture time).
     pub fn build_graph(&self) -> Graph {

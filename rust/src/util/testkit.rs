@@ -272,6 +272,31 @@ impl TcpClusterHarness {
         Ok(TcpClusterHarness { peers, children })
     }
 
+    /// Launch a `gtip serve --join` process that asks the live cluster
+    /// to re-admit `machine_id` (DESIGN.md §10). Returns the child
+    /// instead of tracking it in `children`, so the harness's
+    /// index↔machine bookkeeping (`join_expecting_deaths`) stays
+    /// intact — the caller waits on (or kills) the joiner itself.
+    pub fn spawn_joiner(
+        &self,
+        gtip_bin: &std::path::Path,
+        machine_id: usize,
+        customize: impl FnOnce(&mut std::process::Command),
+    ) -> std::io::Result<std::process::Child> {
+        let mut cmd = std::process::Command::new(gtip_bin);
+        cmd.args([
+            "serve",
+            "--machine-id",
+            &machine_id.to_string(),
+            "--peers",
+            &self.peers.join(","),
+            "--join",
+        ])
+        .stdout(std::process::Stdio::null());
+        customize(&mut cmd);
+        cmd.spawn()
+    }
+
     /// Wait for every worker to exit cleanly (they do after the
     /// leader's Goodbye); panics on a non-zero exit status.
     pub fn join(self) {

@@ -1,0 +1,254 @@
+//! Worker-join tests over real `gtip serve --join` processes
+//! (DESIGN.md §10, grow direction): a 3-machine cluster loses a worker
+//! (eviction to K−1), the dead machine's replacement asks to rejoin,
+//! and the leader re-admits it at an epoch boundary — mesh extension,
+//! `Setup` + snapshot catch-up, speeds renormalized to K+1 — after
+//! which the run finishes at full strength and `admit-0000.snap`
+//! replays from scratch to exactly the live run's final state. Edge
+//! cases: a duplicate `Join` for a wire id that is still an active
+//! member is rejected cleanly, and a joiner that dies during the admit
+//! handshake leaves the survivors' run unharmed (rollback to K).
+
+use std::time::Duration;
+
+use gtip::coordinator::net::ClusterLeader;
+use gtip::coordinator::DistributedOptions;
+use gtip::sim::{
+    DynamicDriver, DynamicOptions, RefineBackend, ScenarioKind, SimOptions, Snapshot,
+    WeightEstimator,
+};
+use gtip::util::testkit::{ScenarioFixture, TcpClusterHarness};
+
+fn kill_rejoin_fixture(seed: u64) -> gtip::util::testkit::BuiltFixture {
+    ScenarioFixture::new(ScenarioKind::HotspotShift, seed)
+        .nodes(120)
+        .machines(3)
+        .threads(60)
+        .horizon(1600)
+        .build()
+}
+
+fn leader_for(harness: &TcpClusterHarness) -> ClusterLeader {
+    ClusterLeader::connect(
+        &harness.peers,
+        DistributedOptions { recv_timeout: Duration::from_secs(2), ..Default::default() },
+        Duration::from_secs(30),
+    )
+    .expect("leading the mesh")
+}
+
+/// The full elasticity round trip: kill machine 2 mid-run (K=3 → 2),
+/// relaunch it with `--join`, and finish back at K=3. The `Join`
+/// necessarily arrives mid-epoch (the joiner binds as soon as the
+/// victim's port frees, while the leader is still diagnosing the
+/// death), so this also pins the deferral semantics: the request is
+/// queued, not dropped, and admitted at the next boundary. The
+/// `admit-0000.snap` the leader writes is the joiner's catch-up
+/// payload; a sequential driver restored from it must reach exactly
+/// the live run's final state.
+#[test]
+fn killed_worker_rejoins_and_run_finishes_at_full_strength() {
+    let fixture = kill_rejoin_fixture(51);
+    let dir = std::env::temp_dir().join(format!("gtip-join-happy-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+        epoch_ticks: 200,
+        backend: RefineBackend::Distributed,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let bin = std::path::Path::new(env!("CARGO_BIN_EXE_gtip"));
+    let harness = TcpClusterHarness::spawn_customized(bin, 3, |machine, cmd| {
+        if machine == 2 {
+            cmd.env("GTIP_SERVE_DIE", "epoch:1");
+        }
+    })
+    .expect("spawning serve workers");
+    let leader = leader_for(&harness);
+    // Launch the replacement now: it retries binding machine 2's
+    // address until the victim dies and releases the port, then dials
+    // the leader and queues its Join — no scripted sleep needed.
+    let mut joiner = harness.spawn_joiner(bin, 2, |_| {}).expect("spawning the joiner");
+
+    let mut driver = DynamicDriver::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        fixture.scenario.injections.clone(),
+        WeightEstimator::instantaneous(),
+        options,
+    );
+    driver.attach_cluster(leader).expect("broadcasting fixture");
+    let report = driver.try_run().expect("the run must survive the death and the rejoin");
+
+    assert_eq!(report.recoveries(), 1, "the planted death recovers once");
+    assert_eq!(report.admissions(), 1, "the rejoin is admitted once");
+    let admission = report
+        .epochs
+        .iter()
+        .find_map(|e| e.admission.as_ref())
+        .expect("an admission record on the admitting epoch");
+    assert_eq!(admission.joined_wire_id, 2, "wire id 2 rejoined");
+    assert_eq!(admission.machines_before, 2);
+    assert_eq!(admission.machines_after, 3);
+    assert_eq!(driver.machines().count(), 3, "the fleet must be back at full strength");
+    assert!(
+        (driver.machines().speeds().iter().sum::<f64>() - 1.0).abs() < 1e-9,
+        "speeds must be renormalized to the grown fleet"
+    );
+    assert!(!report.stats.truncated, "the workload must drain fully after the rejoin");
+    let final_assignment = driver.engine().partition().assignment().to_vec();
+    assert!(final_assignment.iter().all(|&m| m < 3));
+    // The admitted machine actually carries load again by the end:
+    // refinement migrates toward the empty machine (Thm 4.1 descent
+    // from any feasible start), which is the whole point of growing.
+    let admitted_machine = admission.joined_machine;
+    assert!(
+        final_assignment.iter().any(|&m| m == admitted_machine),
+        "no LP migrated to the re-admitted machine"
+    );
+
+    // The victim died on purpose; the original survivor and the
+    // joiner both exit cleanly on the leader's Goodbye.
+    harness.join_expecting_deaths(&[2]);
+    let joiner_status = joiner.wait().expect("waiting on the joiner");
+    assert!(joiner_status.success(), "the joiner should serve to Goodbye, got {joiner_status}");
+
+    // The admission checkpoint is canonical and replays from scratch
+    // to the live run's exact final state.
+    let snap_path = dir.join("admit-0000.snap");
+    let bytes = std::fs::read(&snap_path).expect("admit-0000.snap must have been written");
+    let snap = Snapshot::decode(&bytes).expect("admit-0000.snap must decode");
+    assert_eq!(snap.encode(), bytes, "admit-0000.snap is not canonical bytes");
+    assert_eq!(snap.machine_count(), 3, "the admission snapshot captures the grown fleet");
+    let graph = snap.build_graph();
+    let mut restored = DynamicDriver::from_snapshot(
+        &graph,
+        &snap,
+        WeightEstimator::instantaneous(),
+        DynamicOptions { epoch_ticks: 200, ..Default::default() },
+    );
+    let restored_report = restored.run();
+    assert_eq!(restored_report.stats, report.stats);
+    assert_eq!(restored_report.total_time(), report.total_time());
+    assert_eq!(restored.engine().partition().assignment(), &final_assignment[..]);
+    assert_eq!(restored.machines().speeds(), driver.machines().speeds());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A `Join` carrying the wire id of a machine that is still an active
+/// member must be rejected cleanly: the impostor exits with an error
+/// (not the intentional-death code), and the run never grows. The
+/// impostor gets a peers list whose slot-2 address is a free port so
+/// it can bind; everything else about its handshake is legitimate.
+#[test]
+fn duplicate_join_from_active_wire_id_is_rejected() {
+    let fixture = kill_rejoin_fixture(53);
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+        epoch_ticks: 200,
+        backend: RefineBackend::Distributed,
+        ..Default::default()
+    };
+    let bin = std::path::Path::new(env!("CARGO_BIN_EXE_gtip"));
+    let harness = TcpClusterHarness::spawn(bin, 3).expect("spawning serve workers");
+    let leader = leader_for(&harness);
+
+    // Same leader address, but slot 2 rerouted to a free port: the
+    // impostor can bind and present itself as wire id 2 while the
+    // real machine 2 is alive and well.
+    let mut impostor_peers = harness.peers.clone();
+    impostor_peers[2] = TcpClusterHarness::reserve_loopback_peers(1).remove(0);
+    let mut impostor = std::process::Command::new(bin)
+        .args([
+            "serve",
+            "--machine-id",
+            "2",
+            "--peers",
+            &impostor_peers.join(","),
+            "--join",
+            "--connect-timeout-ms",
+            "4000",
+            "--admit-window-ms",
+            "1000",
+        ])
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .expect("spawning the impostor");
+
+    let mut driver = DynamicDriver::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        fixture.scenario.injections.clone(),
+        WeightEstimator::instantaneous(),
+        options,
+    );
+    driver.attach_cluster(leader).expect("broadcasting fixture");
+    let report = driver.try_run().expect("the healthy run must be unaffected");
+
+    assert_eq!(report.recoveries(), 0, "nobody died");
+    assert_eq!(report.admissions(), 0, "an active wire id must never be re-admitted");
+    assert_eq!(driver.machines().count(), 3, "the fleet must not change");
+    assert!(!report.stats.truncated);
+    harness.join();
+
+    let status = impostor.wait().expect("waiting on the impostor");
+    assert!(!status.success(), "the duplicate join must fail");
+    assert_ne!(status.code(), Some(86), "rejection is an error exit, not a planted death");
+}
+
+/// A joiner that dies in the middle of the admit handshake (on
+/// receiving `Admit`, before acking) must not take the survivors with
+/// it: the leader rolls the admission back and the run finishes at
+/// K−1 with zero admissions on the books.
+#[test]
+fn joiner_death_during_admit_leaves_survivors_unharmed() {
+    let fixture = kill_rejoin_fixture(55);
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+        epoch_ticks: 200,
+        backend: RefineBackend::Distributed,
+        ..Default::default()
+    };
+    let bin = std::path::Path::new(env!("CARGO_BIN_EXE_gtip"));
+    let harness = TcpClusterHarness::spawn_customized(bin, 3, |machine, cmd| {
+        if machine == 2 {
+            cmd.env("GTIP_SERVE_DIE", "epoch:1");
+        }
+    })
+    .expect("spawning serve workers");
+    let leader = leader_for(&harness);
+    let mut joiner = harness
+        .spawn_joiner(bin, 2, |cmd| {
+            cmd.env("GTIP_SERVE_DIE", "admit");
+        })
+        .expect("spawning the doomed joiner");
+
+    let mut driver = DynamicDriver::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        fixture.scenario.injections.clone(),
+        WeightEstimator::instantaneous(),
+        options,
+    );
+    driver.attach_cluster(leader).expect("broadcasting fixture");
+    let report = driver.try_run().expect("the survivors' run must outlive the doomed joiner");
+
+    assert_eq!(report.recoveries(), 1, "only the planted death recovers");
+    assert_eq!(report.admissions(), 0, "the aborted admission must not be recorded");
+    assert_eq!(driver.machines().count(), 2, "the fleet stays at the survivors");
+    assert!(!report.stats.truncated, "the run must drain at K-1 after the rollback");
+    assert!(driver.engine().partition().assignment().iter().all(|&m| m < 2));
+
+    harness.join_expecting_deaths(&[2]);
+    let joiner_status = joiner.wait().expect("waiting on the doomed joiner");
+    assert_eq!(
+        joiner_status.code(),
+        Some(86),
+        "the joiner must have died on Admit as planted, got {joiner_status}"
+    );
+}

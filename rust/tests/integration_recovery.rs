@@ -6,8 +6,11 @@
 //! checkpoint, evict exactly the dead machine, and finish the run with
 //! the K−1 survivors instead of unwinding. The mid-epoch case also
 //! pins the checkpoint substrate: every emitted `.snap` re-encodes
-//! byte-identically, and a fresh driver restored from `recovery.snap`
-//! reaches exactly the live run's final state.
+//! byte-identically, and a fresh driver restored from
+//! `recovery-0000.snap` reaches exactly the live run's final state.
+//! The double-death case kills two workers in different epochs and
+//! asserts each recovery keeps its own replay point
+//! (`recovery-0000.snap` / `recovery-0001.snap`).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -109,8 +112,8 @@ fn run_with_planted_death(tag: &str, die: &str, victim: usize, seed: u64) -> Kil
 /// A worker killed on `EpochBegin` of the *second* refinement round:
 /// recovery restores the mid-run checkpoint (not the initial state),
 /// and the `.snap` artifacts it leaves behind are canonical — each one
-/// byte-stable through decode/encode, and `recovery.snap` replays to
-/// exactly the live run's final state on a from-scratch driver.
+/// byte-stable through decode/encode, and `recovery-0000.snap` replays
+/// to exactly the live run's final state on a from-scratch driver.
 #[test]
 fn worker_death_mid_epoch_recovers_from_checkpoint() {
     let run = run_with_planted_death("mid-epoch", "epoch:1", 1, 41);
@@ -130,14 +133,14 @@ fn worker_death_mid_epoch_recovers_from_checkpoint() {
         assert_eq!(snap.encode(), bytes, "{} is not canonical bytes", path.display());
         snaps += 1;
     }
-    assert!(snaps >= 3, "expected per-epoch checkpoints plus recovery.snap, found {snaps}");
+    assert!(snaps >= 3, "expected per-epoch checkpoints plus recovery-0000.snap, found {snaps}");
 
     // From-scratch restore: a sequential driver resumed from
-    // recovery.snap must deterministically reach the same final state
-    // as the recovered live run (same stats, costs, and assignment).
-    let snap = Snapshot::read_from(&run.checkpoint_dir.join("recovery.snap"))
-        .expect("recovery.snap must have been written");
-    assert_eq!(snap.machine_count(), 2, "recovery.snap captures the shrunken fleet");
+    // recovery-0000.snap must deterministically reach the same final
+    // state as the recovered live run (stats, costs, assignment).
+    let snap = Snapshot::read_from(&run.checkpoint_dir.join("recovery-0000.snap"))
+        .expect("recovery-0000.snap must have been written");
+    assert_eq!(snap.machine_count(), 2, "recovery-0000.snap captures the shrunken fleet");
     let graph = snap.build_graph();
     let mut restored = DynamicDriver::from_snapshot(
         &graph,
@@ -191,4 +194,100 @@ fn worker_death_at_stats_barrier_recovers() {
         "the first refinement must have diagnosed the barrier-time death"
     );
     let _ = std::fs::remove_dir_all(&run.checkpoint_dir);
+}
+
+/// Two workers die in *different* epochs of one run (K=4 → 3 → 2).
+/// Each recovery must keep its own replay point: `recovery-0000.snap`
+/// (fleet at 3) and `recovery-0001.snap` (fleet at 2) both exist, are
+/// canonical, and the *last* one replays from scratch to exactly the
+/// live run's final state. Before the ordinal naming, the second
+/// recovery silently overwrote the first's file, so only the last
+/// recovery was ever reproducible.
+#[test]
+fn two_deaths_keep_both_recovery_replay_points() {
+    let fixture = ScenarioFixture::new(ScenarioKind::HotspotShift, 47)
+        .nodes(120)
+        .machines(4)
+        .threads(60)
+        .horizon(1600)
+        .build();
+    let dir = std::env::temp_dir().join(format!("gtip-recovery-double-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let options = DynamicOptions {
+        sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+        epoch_ticks: 200,
+        backend: RefineBackend::Distributed,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let bin = std::path::Path::new(env!("CARGO_BIN_EXE_gtip"));
+    let harness = TcpClusterHarness::spawn_customized(bin, 4, |machine, cmd| {
+        if machine == 1 {
+            cmd.env("GTIP_SERVE_DIE", "epoch:1");
+        }
+        if machine == 3 {
+            cmd.env("GTIP_SERVE_DIE", "epoch:3");
+        }
+    })
+    .expect("spawning serve workers");
+    let leader = ClusterLeader::connect(
+        &harness.peers,
+        DistributedOptions { recv_timeout: Duration::from_secs(2), ..Default::default() },
+        Duration::from_secs(30),
+    )
+    .expect("leading the mesh");
+    let mut driver = DynamicDriver::new(
+        &fixture.graph,
+        fixture.machines.clone(),
+        fixture.initial.clone(),
+        fixture.scenario.injections.clone(),
+        WeightEstimator::instantaneous(),
+        options,
+    );
+    driver.attach_cluster(leader).expect("broadcasting fixture");
+    let report = driver.try_run().expect("the run must survive both planted deaths");
+    assert_eq!(report.recoveries(), 2, "each death recovers in its own epoch");
+    assert_eq!(driver.machines().count(), 2, "fleet shrank 4 -> 3 -> 2");
+    assert!(!report.stats.truncated, "the workload must drain fully after both recoveries");
+    harness.join_expecting_deaths(&[1, 3]);
+
+    // Both replay points survive, each canonical, each at its fleet.
+    let first = Snapshot::read_from(&dir.join("recovery-0000.snap"))
+        .expect("the first recovery's replay point must not be overwritten");
+    assert_eq!(first.encode().len(), std::fs::read(dir.join("recovery-0000.snap")).unwrap().len());
+    assert_eq!(first.machine_count(), 3, "the first recovery left K=3");
+    let second = Snapshot::read_from(&dir.join("recovery-0001.snap"))
+        .expect("the second recovery must write its own ordinal");
+    assert_eq!(second.machine_count(), 2, "the second recovery left K=2");
+
+    // The later replay point reaches exactly the live final state.
+    let graph = second.build_graph();
+    let mut restored = DynamicDriver::from_snapshot(
+        &graph,
+        &second,
+        WeightEstimator::instantaneous(),
+        DynamicOptions { epoch_ticks: 200, ..Default::default() },
+    );
+    let restored_report = restored.run();
+    assert_eq!(restored_report.stats, report.stats);
+    assert_eq!(restored_report.total_time(), report.total_time());
+    assert_eq!(
+        restored.engine().partition().assignment(),
+        driver.engine().partition().assignment()
+    );
+
+    // The earlier one still replays to a clean finish — at K=3: a
+    // sequential replay does not re-experience the second death.
+    let graph3 = first.build_graph();
+    let mut early = DynamicDriver::from_snapshot(
+        &graph3,
+        &first,
+        WeightEstimator::instantaneous(),
+        DynamicOptions { epoch_ticks: 200, ..Default::default() },
+    );
+    let early_report = early.run();
+    assert!(!early_report.stats.truncated, "the first replay point must drain at K=3");
+    assert_eq!(early.machines().count(), 3);
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
