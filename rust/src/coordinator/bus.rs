@@ -60,6 +60,28 @@ pub trait Bus {
     }
 }
 
+/// Borrowed buses are buses too — lets an adapter like
+/// [`crate::coordinator::distributed::RackBus`] wrap a transport by
+/// reference while the owner (e.g. a cluster leader that still needs
+/// its endpoint afterwards) keeps it.
+impl<B: Bus + ?Sized> Bus for &B {
+    fn id(&self) -> MachineId {
+        (**self).id()
+    }
+
+    fn machine_count(&self) -> usize {
+        (**self).machine_count()
+    }
+
+    fn send(&self, to: MachineId, msg: Message) {
+        (**self).send(to, msg)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> RecvOutcome {
+        (**self).recv_timeout(timeout)
+    }
+}
+
 /// Timeout used by convenience blocking receives; effectively forever,
 /// but finite so a wedged test still terminates.
 const BLOCKING_RECV_TIMEOUT: Duration = Duration::from_secs(600);

@@ -40,6 +40,7 @@ use crate::coordinator::bus::{build_bus, Bus, RecvOutcome};
 use crate::coordinator::machine::{MachineActor, TurnDecision};
 use crate::coordinator::protocol::{Message, OverheadStats};
 use crate::game::cost::Framework;
+use crate::game::hierarchy::{guarded_map_back, RackLayout};
 use crate::graph::{Graph, NodeId};
 use crate::partition::{MachineConfig, MachineId, Partition};
 
@@ -128,13 +129,37 @@ type PendingTransfer = (NodeId, MachineId, MachineId, Option<Vec<f64>>);
 /// rounds at epoch boundaries, so the loop never observes the fleet
 /// changing mid-round.
 pub fn machine_loop<B: Bus>(
-    mut actor: MachineActor,
+    actor: MachineActor,
     bus: &B,
     epsilon: f64,
     max_transfers: usize,
     recv_timeout: Duration,
 ) -> LoopOutcome {
-    let k = bus.machine_count();
+    let scope: Vec<MachineId> = (0..bus.machine_count()).collect();
+    machine_loop_scoped(actor, bus, &scope, epsilon, max_transfers, recv_timeout)
+}
+
+/// [`machine_loop`] restricted to a rack ring (DESIGN.md §12): the turn
+/// token circulates over `scope` only, convergence is `scope.len()`
+/// consecutive forfeits, and transfers / updates / shutdowns go to
+/// scope members only — machines outside the scope never hear from
+/// this ring, which is what makes rack subgames exactly independent.
+/// The caller kicks the ring by pre-enqueueing the first `TakeMyTurn`
+/// into one member's inbox (a self-send works on both transports).
+/// `scope` must be ascending, contain the actor's id, and be identical
+/// across the ring's members; the flat loop is the `scope == 0..K`
+/// special case.
+pub fn machine_loop_scoped<B: Bus>(
+    mut actor: MachineActor,
+    bus: &B,
+    scope: &[MachineId],
+    epsilon: f64,
+    max_transfers: usize,
+    recv_timeout: Duration,
+) -> LoopOutcome {
+    let k = scope.len();
+    let pos = scope.iter().position(|&m| m == actor.id).expect("actor must be in its scope");
+    let next = scope[(pos + 1) % k];
     let mut converged = false;
     let mut timed_out = false;
     let mut dead_peer = None;
@@ -175,7 +200,6 @@ pub fn machine_loop<B: Bus>(
                 } else {
                     actor.take_turn(epsilon)
                 };
-                let next = (actor.id + 1) % k;
                 match decision {
                     TurnDecision::Transfer { node, to, .. } => {
                         let seq = transfers_so_far as u64;
@@ -189,17 +213,22 @@ pub fn machine_loop<B: Bus>(
                             to,
                             loads: actor.loads().to_vec(),
                         };
-                        for m in 0..k {
+                        for &m in scope {
                             if m != actor.id && m != to {
                                 bus.send(m, update.clone());
                             }
                         }
                         if total_transfers >= max_transfers {
                             // Cap reached (not convergence): shut down.
-                            bus.broadcast_others(&Message::Shutdown {
+                            let stop = Message::Shutdown {
                                 total_transfers: total_transfers as u64,
                                 converged: false,
-                            });
+                            };
+                            for &m in scope {
+                                if m != actor.id {
+                                    bus.send(m, stop.clone());
+                                }
+                            }
                             break;
                         }
                         bus.send(
@@ -214,10 +243,15 @@ pub fn machine_loop<B: Bus>(
                         let f = consecutive_forfeits + 1;
                         if f >= k {
                             converged = true;
-                            bus.broadcast_others(&Message::Shutdown {
+                            let stop = Message::Shutdown {
                                 total_transfers: transfers_so_far as u64,
                                 converged: true,
-                            });
+                            };
+                            for &m in scope {
+                                if m != actor.id {
+                                    bus.send(m, stop.clone());
+                                }
+                            }
                             break;
                         }
                         bus.send(
@@ -235,6 +269,12 @@ pub fn machine_loop<B: Bus>(
             }
             RecvOutcome::Msg(Message::RegularUpdate { seq, node, from, to, loads }) => {
                 pending.insert(seq, (node, from, to, Some(loads)));
+            }
+            RecvOutcome::Msg(Message::RackUpdate { seq, node, from, to, rack_loads }) => {
+                // Normally demoted to `RegularUpdate` by [`RackBus`]
+                // before it reaches the loop; accept the raw frame too
+                // so a leader driving its endpoint directly still works.
+                pending.insert(seq, (node, from, to, Some(rack_loads)));
             }
             RecvOutcome::Msg(Message::TakeMyTurn { consecutive_forfeits, transfers_so_far }) => {
                 token = Some((consecutive_forfeits, transfers_so_far));
@@ -264,6 +304,63 @@ pub fn machine_loop<B: Bus>(
         converged,
         timed_out,
         dead_peer,
+    }
+}
+
+/// Adapter that lets rack leaders play the outer (rack-level) game over
+/// any transport: machine ids on this bus are *rack* ids. `send`
+/// promotes the outer game's `RegularUpdate` aggregates to
+/// [`Message::RackUpdate`] (R rack loads — the O(K_rack) cross-rack
+/// frame, counted apart in [`OverheadStats`]) and routes every message
+/// to the destination rack's leader on the inner bus; `recv_timeout`
+/// demotes incoming `RackUpdate`s back, so [`machine_loop`] stays
+/// oblivious to both the transport and the level it is playing at.
+pub struct RackBus<B: Bus> {
+    inner: B,
+    rack: usize,
+    leaders: Vec<MachineId>,
+}
+
+impl<B: Bus> RackBus<B> {
+    /// `rack` is this endpoint's own rack id; `leaders[r]` is rack
+    /// `r`'s leader on the inner bus (the identity map in-process,
+    /// [`RackLayout::leaders`] over TCP).
+    pub fn new(inner: B, rack: usize, leaders: Vec<MachineId>) -> Self {
+        assert!(rack < leaders.len(), "rack id out of range");
+        RackBus { inner, rack, leaders }
+    }
+}
+
+impl<B: Bus> Bus for RackBus<B> {
+    fn id(&self) -> MachineId {
+        self.rack
+    }
+
+    fn machine_count(&self) -> usize {
+        self.leaders.len()
+    }
+
+    fn send(&self, to: MachineId, msg: Message) {
+        let msg = match msg {
+            Message::RegularUpdate { seq, node, from, to, loads } => {
+                Message::RackUpdate { seq, node, from, to, rack_loads: loads }
+            }
+            other => other,
+        };
+        self.inner.send(self.leaders[to], msg);
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> RecvOutcome {
+        match self.inner.recv_timeout(timeout) {
+            RecvOutcome::Msg(Message::RackUpdate { seq, node, from, to, rack_loads }) => {
+                RecvOutcome::Msg(Message::RegularUpdate { seq, node, from, to, loads: rack_loads })
+            }
+            RecvOutcome::SendFailed(m) => {
+                // Name the dead peer by rack where possible.
+                RecvOutcome::SendFailed(self.leaders.iter().position(|&l| l == m).unwrap_or(m))
+            }
+            other => other,
+        }
     }
 }
 
@@ -341,6 +438,186 @@ pub fn run_distributed(
     let k = machines.count();
     let (endpoints, stats) = build_bus(k, options.latency);
     run_over_endpoints(endpoints, graph, machines, initial, options, stats)
+}
+
+/// Run the two-level refinement (DESIGN.md §12) over prebuilt endpoint
+/// sets: an outer rack-quotient round where one actor per rack
+/// exchanges `RackUpdate` aggregates over a [`RackBus`], the shared
+/// [`guarded_map_back`], then one concurrent scoped ring per rack.
+/// `outer_endpoints` must carry ids `0..R` (each standing for one
+/// rack), `inner_endpoints` ids `0..K`; both the in-process ring
+/// ([`run_distributed_hierarchical`]) and the loopback-TCP parity
+/// harness (`coordinator::net`) route through this one orchestrator.
+/// Mirrors [`crate::game::hierarchy::refine_hierarchical`] decision for
+/// decision — a parity test asserts bit-identical assignments — and on
+/// a singleton layout reproduces [`run_distributed`] exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn run_hierarchical_over_endpoints<BO, BI>(
+    outer_endpoints: Vec<BO>,
+    outer_stats: Arc<Mutex<OverheadStats>>,
+    inner_endpoints: Vec<BI>,
+    inner_stats: Arc<Mutex<OverheadStats>>,
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    layout: &RackLayout,
+    options: &DistributedOptions,
+) -> DistributedReport
+where
+    BO: Bus + Send + 'static,
+    BI: Bus + Send + 'static,
+{
+    let k = machines.count();
+    assert_eq!(layout.machine_count(), k, "rack layout must cover the fleet");
+    let racks = layout.rack_count();
+    assert_eq!(outer_endpoints.len(), racks, "need one outer endpoint per rack");
+    assert_eq!(inner_endpoints.len(), k, "need one inner endpoint per machine");
+
+    // Phase 1: the outer game — one actor per rack on the quotient.
+    let qconfig = layout.quotient_config(machines);
+    let qassign = layout.quotient_assignment(initial.assignment());
+    let qpart = Partition::from_assignment(&graph, racks, qassign);
+    outer_endpoints[0]
+        .send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+    let mut handles = Vec::with_capacity(racks);
+    for endpoint in outer_endpoints {
+        let actor = MachineActor::new(
+            endpoint.id(),
+            Arc::clone(&graph),
+            qconfig.clone(),
+            &qpart,
+            options.mu,
+            options.framework,
+            options.migration_charge,
+        );
+        let epsilon = options.epsilon;
+        let max_transfers = options.max_transfers;
+        let recv_timeout = options.recv_timeout;
+        handles.push(std::thread::spawn(move || {
+            // These standalone meshes number racks directly, so every
+            // rack leads itself: the identity leader map.
+            let rack = endpoint.id();
+            let bus = RackBus::new(endpoint, rack, (0..racks).collect());
+            machine_loop(actor, &bus, epsilon, max_transfers, recv_timeout)
+        }));
+    }
+    let mut outer_outcomes: Vec<LoopOutcome> = Vec::with_capacity(racks);
+    for h in handles {
+        outer_outcomes.push(h.join().expect("outer machine thread panicked"));
+    }
+    let outer_timed_out = outer_outcomes.iter().any(|o| o.timed_out);
+    if !outer_timed_out {
+        let reference = &outer_outcomes[0].assignment;
+        for o in &outer_outcomes {
+            assert_eq!(&o.assignment, reference, "outer replicas diverged");
+        }
+    }
+    let outer_converged = !outer_timed_out && outer_outcomes.iter().any(|o| o.converged);
+
+    // Guarded map-back to machines (the one guard all deployments share).
+    let mapped = guarded_map_back(
+        &graph,
+        machines,
+        layout,
+        initial.assignment(),
+        &outer_outcomes[0].assignment,
+        options.mu,
+        options.framework,
+    );
+    let outer_transfers: usize = if mapped.accepted {
+        outer_outcomes.iter().map(|o| o.transfers_made).sum()
+    } else {
+        0
+    };
+    let start = Partition::from_assignment(&graph, k, mapped.assignment);
+
+    // Phase 2: one concurrent scoped ring per rack. Each ring's leader
+    // kicks itself; cross-rack messages never flow, so within a rack
+    // every replica sees an identical full-K state.
+    for r in 0..racks {
+        let leader = layout.leader(r);
+        inner_endpoints[leader]
+            .send(leader, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+    }
+    let mut handles = Vec::with_capacity(k);
+    for endpoint in inner_endpoints {
+        let scope = layout.members(layout.rack_of(endpoint.id())).to_vec();
+        let actor = MachineActor::new(
+            endpoint.id(),
+            Arc::clone(&graph),
+            machines.clone(),
+            &start,
+            options.mu,
+            options.framework,
+            options.migration_charge,
+        )
+        .with_scope(scope.clone());
+        let epsilon = options.epsilon;
+        let max_transfers = options.max_transfers;
+        let recv_timeout = options.recv_timeout;
+        handles.push(std::thread::spawn(move || {
+            machine_loop_scoped(actor, &endpoint, &scope, epsilon, max_transfers, recv_timeout)
+        }));
+    }
+    let mut inner_outcomes: Vec<LoopOutcome> = Vec::with_capacity(k);
+    for h in handles {
+        inner_outcomes.push(h.join().expect("inner machine thread panicked"));
+    }
+    let inner_timed_out = inner_outcomes.iter().any(|o| o.timed_out);
+    if !inner_timed_out {
+        for r in 0..racks {
+            let reference = &inner_outcomes[layout.leader(r)].assignment;
+            for &m in layout.members(r) {
+                assert_eq!(&inner_outcomes[m].assignment, reference, "rack {r} replicas diverged");
+            }
+        }
+    }
+    // Merge: each node's final machine comes from its rack's own ring.
+    let assignment: Vec<MachineId> = (0..graph.node_count())
+        .map(|i| {
+            let r = layout.rack_of(start.machine_of(i));
+            inner_outcomes[layout.leader(r)].assignment[i]
+        })
+        .collect();
+
+    let transfers =
+        outer_transfers + inner_outcomes.iter().map(|o| o.transfers_made).sum::<usize>();
+    let converged =
+        outer_converged && !inner_timed_out && inner_outcomes.iter().all(|o| o.converged);
+    let mut overhead = outer_stats.lock().expect("stats").clone();
+    overhead.add(&inner_stats.lock().expect("stats"));
+    DistributedReport {
+        partition: Partition::from_assignment(&graph, k, assignment),
+        transfers,
+        overhead,
+        converged,
+        timed_out: outer_timed_out || inner_timed_out,
+    }
+}
+
+/// Run the two-level refinement on the in-process thread ring: fresh
+/// mpsc meshes for both levels, fed through
+/// [`run_hierarchical_over_endpoints`].
+pub fn run_distributed_hierarchical(
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    layout: &RackLayout,
+    options: &DistributedOptions,
+) -> DistributedReport {
+    let (outer_endpoints, outer_stats) = build_bus(layout.rack_count(), options.latency);
+    let (inner_endpoints, inner_stats) = build_bus(machines.count(), options.latency);
+    run_hierarchical_over_endpoints(
+        outer_endpoints,
+        outer_stats,
+        inner_endpoints,
+        inner_stats,
+        graph,
+        machines,
+        initial,
+        layout,
+        options,
+    )
 }
 
 #[cfg(test)]
@@ -442,6 +719,90 @@ mod tests {
             let (j, _) = model.dissatisfaction(&report.partition, i);
             assert!(j <= 1e-6);
         }
+    }
+
+    /// The in-process hierarchical orchestrator mirrors the sequential
+    /// two-level pass decision for decision: same outer token ring,
+    /// same guard, same scoped inner rings — so assignments and
+    /// transfer counts must match exactly, charged or not, in both
+    /// frameworks.
+    #[test]
+    fn hierarchical_distributed_matches_sequential_hierarchy_exactly() {
+        use crate::game::hierarchy::refine_hierarchical;
+        for &(fw, charge) in &[(Framework::A, 0.0), (Framework::A, 5.0), (Framework::B, 0.0)] {
+            let (g, machines, part) = setup(8, 60);
+            let layout = RackLayout::new(vec![0, 0, 0, 1, 1]).unwrap();
+            let (seq_part, seq_report) = refine_hierarchical(
+                &g,
+                &machines,
+                part.clone(),
+                8.0,
+                fw,
+                charge,
+                &layout,
+                &RefineOptions::default(),
+            );
+            let opts = DistributedOptions {
+                framework: fw,
+                migration_charge: charge,
+                ..Default::default()
+            };
+            let dist = run_distributed_hierarchical(Arc::clone(&g), &machines, part, &layout, &opts);
+            assert!(!dist.timed_out);
+            assert_eq!(dist.transfers, seq_report.transfers, "{fw:?}/{charge}");
+            assert_eq!(dist.partition.assignment(), seq_part.assignment(), "{fw:?}/{charge}");
+            assert_eq!(dist.converged, seq_report.converged, "{fw:?}/{charge}");
+        }
+    }
+
+    /// One machine per rack: the hierarchy degenerates to the flat
+    /// protocol and must reproduce it exactly.
+    #[test]
+    fn singleton_racks_hierarchical_distributed_matches_flat() {
+        let (g, machines, part) = setup(2, 50);
+        let layout = RackLayout::singletons(5);
+        let flat = run_distributed(
+            Arc::clone(&g),
+            &machines,
+            part.clone(),
+            &DistributedOptions::default(),
+        );
+        let hier = run_distributed_hierarchical(
+            Arc::clone(&g),
+            &machines,
+            part,
+            &layout,
+            &DistributedOptions::default(),
+        );
+        assert_eq!(hier.partition.assignment(), flat.partition.assignment());
+        assert_eq!(hier.transfers, flat.transfers);
+        assert!(hier.converged);
+        assert!(!hier.timed_out);
+    }
+
+    /// The rack bus promotes outgoing aggregates to `RackUpdate` (33 +
+    /// 8R wire bytes — R racks, not K machines), demotes them back on
+    /// receipt, and books them under their own counter.
+    #[test]
+    fn rack_bus_promotes_and_demotes_aggregates() {
+        let (mut eps, stats) = build_bus(2, Duration::ZERO);
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let ra = RackBus::new(a, 0, vec![0, 1]);
+        let rb = RackBus::new(b, 1, vec![0, 1]);
+        let loads = vec![1.0, 2.0];
+        ra.send(1, Message::RegularUpdate { seq: 0, node: 7, from: 0, to: 1, loads: loads.clone() });
+        match rb.recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(Message::RegularUpdate { seq, node, loads: got, .. }) => {
+                assert_eq!((seq, node), (0, 7));
+                assert_eq!(got, loads);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let s = stats.lock().unwrap();
+        assert_eq!(s.rack_update.messages, 1);
+        assert_eq!(s.regular_update.messages, 0);
+        assert_eq!(s.bytes_per_rack_update(), (33 + 8 * 2) as f64);
     }
 
     /// Dead peer: the ring forwards the token toward a machine whose

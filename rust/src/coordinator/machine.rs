@@ -40,6 +40,11 @@ pub struct MachineActor {
     part: Partition,
     /// Nodes this machine currently owns.
     members: Vec<NodeId>,
+    /// Candidate machines this actor may move nodes to (ascending). In
+    /// the two-level hierarchy (DESIGN.md §12) the inner game scopes
+    /// every rack member to its rack; `None` plays the flat game over
+    /// all K machines.
+    scope: Option<Vec<MachineId>>,
     /// Transfers this machine has executed.
     pub transfers_made: usize,
 }
@@ -68,8 +73,21 @@ impl MachineActor {
             migration_charge,
             part: initial.clone(),
             members,
+            scope: None,
             transfers_made: 0,
         }
+    }
+
+    /// Builder: restrict this actor's transfer targets to `scope` (the
+    /// inner rack subgame). The scope must be ascending, in range, and
+    /// contain the actor's own machine; all rack members must use the
+    /// identical scope or replicas pick different transfers.
+    pub fn with_scope(mut self, scope: Vec<MachineId>) -> Self {
+        assert!(scope.windows(2).all(|w| w[0] < w[1]), "scope must be ascending");
+        assert!(scope.iter().all(|&m| m < self.machines.count()), "scope machine out of range");
+        assert!(scope.contains(&self.id), "actor {} outside its own scope", self.id);
+        self.scope = Some(scope);
+        self
     }
 
     fn model(&self) -> CostModel<'_> {
@@ -100,8 +118,15 @@ impl MachineActor {
     pub fn take_turn(&mut self, epsilon: f64) -> TurnDecision {
         let model = self.model();
         let mut best: Option<(NodeId, f64, MachineId)> = None;
+        let mut adj = vec![0.0f64; model.k()];
         for &i in &self.members {
-            let (j, target) = model.dissatisfaction(&self.part, i);
+            let (j, target) = match &self.scope {
+                None => model.dissatisfaction(&self.part, i),
+                Some(scope) => {
+                    let s = model.adj_row(&self.part, i, &mut adj);
+                    model.dissatisfaction_scoped_with_adj(&self.part, i, s, &adj, scope)
+                }
+            };
             if j > epsilon {
                 match best {
                     Some((_, bj, _)) if bj >= j => {}

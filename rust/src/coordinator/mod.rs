@@ -33,6 +33,8 @@ pub mod net;
 pub mod protocol;
 
 pub use bus::{Bus, RecvOutcome};
-pub use distributed::{run_distributed, DistributedOptions, DistributedReport};
+pub use distributed::{
+    run_distributed, run_distributed_hierarchical, DistributedOptions, DistributedReport,
+};
 pub use net::{ClusterLeader, TcpEndpoint, WireError};
 pub use protocol::{Message, OverheadStats};

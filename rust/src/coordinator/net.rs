@@ -103,11 +103,13 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::bus::{Bus, RecvOutcome};
 use crate::coordinator::distributed::{
-    machine_loop, run_over_endpoints, DistributedOptions, DistributedReport,
+    machine_loop, machine_loop_scoped, run_hierarchical_over_endpoints, run_over_endpoints,
+    DistributedOptions, DistributedReport, RackBus,
 };
 use crate::coordinator::machine::MachineActor;
 use crate::coordinator::protocol::{Counter, Message, OverheadStats};
 use crate::game::cost::Framework;
+use crate::game::hierarchy::{guarded_map_back, RackLayout};
 use crate::graph::{Graph, GraphBuilder};
 use crate::partition::{MachineConfig, MachineId, Partition};
 
@@ -117,20 +119,23 @@ pub const WIRE_MAGIC: [u8; 4] = *b"GTIP";
 /// migration charge of the augmented game to `Setup`; v3 added the
 /// elastic-membership control frames (`Restore`, `Join`, `RestoreAck`);
 /// v4 made `Join` live and added the admission frames (`Admit`,
-/// `AdmitAck`, `Catchup`). The `Hello` handshake rejects any peer
-/// speaking another version, so decoding is version-gated at
-/// connection time and a mixed-version cluster can never half-parse a
-/// frame.
-pub const WIRE_VERSION: u16 = 4;
+/// `AdmitAck`, `Catchup`); v5 added the two-level hierarchy (DESIGN.md
+/// §12): the `RackUpdate` aggregate message, the phased `EpochBegin`,
+/// rack-aware `Setup`/`Join`/`Admit` fields, and `RackResult`. The
+/// `Hello` handshake rejects any peer speaking another version, so
+/// decoding is version-gated at connection time and a mixed-version
+/// cluster can never half-parse a frame.
+pub const WIRE_VERSION: u16 = 5;
 /// Upper bound on a single frame payload; larger prefixes are rejected
 /// before any allocation happens.
 pub const MAX_FRAME_BYTES: usize = 1 << 24;
 
-/// Message tags (1–4 mirror [`Message`]; 16+ are control frames).
+/// Message tags (1–5 mirror [`Message`]; 16+ are control frames).
 const TAG_TAKE_MY_TURN: u8 = 1;
 const TAG_RECEIVE_NODE: u8 = 2;
 const TAG_REGULAR_UPDATE: u8 = 3;
 const TAG_SHUTDOWN: u8 = 4;
+const TAG_RACK_UPDATE: u8 = 5;
 const TAG_HELLO: u8 = 16;
 const TAG_SETUP: u8 = 17;
 const TAG_EPOCH_BEGIN: u8 = 18;
@@ -142,6 +147,7 @@ const TAG_RESTORE_ACK: u8 = 23;
 const TAG_ADMIT: u8 = 24;
 const TAG_ADMIT_ACK: u8 = 25;
 const TAG_CATCHUP: u8 = 26;
+const TAG_RACK_RESULT: u8 = 27;
 
 /// Errors of the wire codec and connection lifecycle.
 #[derive(Debug)]
@@ -237,7 +243,10 @@ pub enum Frame {
     /// wire id) and its relative speed, asking to be admitted at the
     /// next epoch boundary. `speed` is relative to the current fleet's
     /// average machine — 1.0 means "as fast as a typical member".
-    Join { machine: u32, speed: f64 },
+    /// `rack` (wire v5) is the rack the joiner wants to land in;
+    /// `u32::MAX` means "leader's choice" (the emptiest rack), and the
+    /// value is ignored entirely on a flat cluster.
+    Join { machine: u32, speed: f64, rack: u32 },
     /// Survivor → leader (wire v3): compaction applied, ready for the
     /// next epoch. `machine` echoes the sender's original wire id so
     /// the leader can cross-check its survivor bookkeeping.
@@ -247,8 +256,10 @@ pub enum Frame {
     /// including 0 (the leader) and `joiner`. Each member's new
     /// logical id is its position in the list; `speeds` are the
     /// renormalized relative speeds in that order. The exact mirror of
-    /// [`Frame::Restore`], which shrinks the same list.
-    Admit { members: Vec<u32>, joiner: u32, speeds: Vec<f64> },
+    /// [`Frame::Restore`], which shrinks the same list. `rack` (wire
+    /// v5) is the rack the joiner lands in — already resolved by the
+    /// leader, never `u32::MAX`; 0 (and ignored) on a flat cluster.
+    Admit { members: Vec<u32>, joiner: u32, speeds: Vec<f64>, rack: u32 },
     /// Member → leader (wire v4): mesh extension applied (the member
     /// dialed the joiner and accepted its return dial), ready for the
     /// next epoch. `machine` echoes the sender's wire id, like
@@ -259,6 +270,14 @@ pub enum Frame {
     /// newcomer can cross-check the fixture it was shipped in `Setup`
     /// against the exact state the cluster resumes from.
     Catchup { snapshot: Vec<u8> },
+    /// Rack leader → cluster leader after an inner (phase-2) round
+    /// (wire v5): the rack's scoped-ring outcome. `assignment` lists
+    /// `(node, machine)` for every node the rack owned at phase start —
+    /// cross-rack traffic never flows in phase 2, so only the owning
+    /// rack knows where its nodes ended up. The leader of the rack
+    /// containing machine 0 never sends this; the cluster leader played
+    /// that ring itself.
+    RackResult { rack: u32, transfers: u64, converged: bool, assignment: Vec<(u32, u32)> },
 }
 
 /// Payload of [`Frame::Setup`].
@@ -278,12 +297,21 @@ pub struct SetupFrame {
     /// `(u, v, weight)` for every edge, in the leader graph's edge
     /// order (workers re-install per-epoch weights in this order).
     pub edges: Vec<(u32, u32, f64)>,
+    /// Machine → rack map for the two-level hierarchy (wire v5), one
+    /// entry per machine; empty means a flat (single-level) cluster.
+    pub racks: Vec<u32>,
 }
 
 /// Payload of [`Frame::EpochBegin`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct EpochFrame {
     pub epoch: u64,
+    /// Which level this round plays (wire v5): 0 = flat (single-level),
+    /// 1 = the outer rack-quotient game (rack leaders only), 2 = the
+    /// inner per-rack scoped rings. A hierarchical epoch is one
+    /// phase-1 round followed by one phase-2 round under the same
+    /// `epoch` number.
+    pub phase: u8,
     pub node_weights: Vec<f64>,
     /// One weight per edge, in [`SetupFrame::edges`] order.
     pub edge_weights: Vec<f64>,
@@ -407,6 +435,14 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
             put_u32(b, wire_u32(*to)?);
             put_f64s(b, loads)?;
         }
+        Frame::Msg(Message::RackUpdate { seq, node, from, to, rack_loads }) => {
+            b.push(TAG_RACK_UPDATE);
+            put_u64(b, *seq);
+            put_u64(b, *node as u64);
+            put_u32(b, wire_u32(*from)?);
+            put_u32(b, wire_u32(*to)?);
+            put_f64s(b, rack_loads)?;
+        }
         Frame::Msg(Message::Shutdown { total_transfers, converged }) => {
             b.push(TAG_SHUTDOWN);
             put_u64(b, *total_transfers);
@@ -438,10 +474,15 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
                 put_u32(b, v);
                 put_f64(b, w);
             }
+            put_u32(b, wire_u32(s.racks.len())?);
+            for &r in &s.racks {
+                put_u32(b, r);
+            }
         }
         Frame::EpochBegin(e) => {
             b.push(TAG_EPOCH_BEGIN);
             put_u64(b, e.epoch);
+            b.push(e.phase);
             put_f64s(b, &e.node_weights)?;
             put_f64s(b, &e.edge_weights)?;
             put_u32(b, wire_u32(e.assignment.len())?);
@@ -451,7 +492,9 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
         }
         Frame::RoundStats(s) => {
             b.push(TAG_ROUND_STATS);
-            for c in [&s.take_my_turn, &s.receive_node, &s.regular_update, &s.shutdown] {
+            for c in
+                [&s.take_my_turn, &s.receive_node, &s.regular_update, &s.rack_update, &s.shutdown]
+            {
                 put_u64(b, c.messages);
                 put_u64(b, c.bytes);
             }
@@ -465,16 +508,17 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
             }
             put_f64s(b, speeds)?;
         }
-        Frame::Join { machine, speed } => {
+        Frame::Join { machine, speed, rack } => {
             b.push(TAG_JOIN);
             put_u32(b, *machine);
             put_f64(b, *speed);
+            put_u32(b, *rack);
         }
         Frame::RestoreAck { machine } => {
             b.push(TAG_RESTORE_ACK);
             put_u32(b, *machine);
         }
-        Frame::Admit { members, joiner, speeds } => {
+        Frame::Admit { members, joiner, speeds, rack } => {
             b.push(TAG_ADMIT);
             put_u32(b, wire_u32(members.len())?);
             for &m in members {
@@ -482,6 +526,7 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
             }
             put_u32(b, *joiner);
             put_f64s(b, speeds)?;
+            put_u32(b, *rack);
         }
         Frame::AdmitAck { machine } => {
             b.push(TAG_ADMIT_ACK);
@@ -491,6 +536,17 @@ fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
             b.push(TAG_CATCHUP);
             put_u32(b, wire_u32(snapshot.len())?);
             b.extend_from_slice(snapshot);
+        }
+        Frame::RackResult { rack, transfers, converged, assignment } => {
+            b.push(TAG_RACK_RESULT);
+            put_u32(b, *rack);
+            put_u64(b, *transfers);
+            b.push(u8::from(*converged));
+            put_u32(b, wire_u32(assignment.len())?);
+            for &(node, machine) in assignment {
+                put_u32(b, node);
+                put_u32(b, machine);
+            }
         }
     }
     Ok(())
@@ -535,6 +591,13 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
             from: d.u32()? as MachineId,
             to: d.u32()? as MachineId,
             loads: d.f64s()?,
+        }),
+        TAG_RACK_UPDATE => Frame::Msg(Message::RackUpdate {
+            seq: d.u64()?,
+            node: d.u64()? as usize,
+            from: d.u32()? as MachineId,
+            to: d.u32()? as MachineId,
+            rack_loads: d.f64s()?,
         }),
         TAG_SHUTDOWN => Frame::Msg(Message::Shutdown {
             total_transfers: d.u64()?,
@@ -581,10 +644,18 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
                     }
                     edges
                 },
+                racks: {
+                    let len = d.u32()? as usize;
+                    if 4 * len > payload.len() {
+                        return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+                    }
+                    (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?
+                },
             })
         }
         TAG_EPOCH_BEGIN => Frame::EpochBegin(EpochFrame {
             epoch: d.u64()?,
+            phase: d.u8()?,
             node_weights: d.f64s()?,
             edge_weights: d.f64s()?,
             assignment: {
@@ -596,7 +667,7 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
             },
         }),
         TAG_ROUND_STATS => {
-            let mut cs = [Counter::default(); 4];
+            let mut cs = [Counter::default(); 5];
             for c in cs.iter_mut() {
                 c.messages = d.u64()?;
                 c.bytes = d.u64()?;
@@ -605,7 +676,8 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
                 take_my_turn: cs[0],
                 receive_node: cs[1],
                 regular_update: cs[2],
-                shutdown: cs[3],
+                rack_update: cs[3],
+                shutdown: cs[4],
             })
         }
         TAG_GOODBYE => Frame::Goodbye,
@@ -619,7 +691,7 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
                 speeds: d.f64s()?,
             }
         }
-        TAG_JOIN => Frame::Join { machine: d.u32()?, speed: d.f64()? },
+        TAG_JOIN => Frame::Join { machine: d.u32()?, speed: d.f64()?, rack: d.u32()? },
         TAG_RESTORE_ACK => Frame::RestoreAck { machine: d.u32()? },
         TAG_ADMIT => {
             let len = d.u32()? as usize;
@@ -630,6 +702,7 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
                 members: (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?,
                 joiner: d.u32()?,
                 speeds: d.f64s()?,
+                rack: d.u32()?,
             }
         }
         TAG_ADMIT_ACK => Frame::AdmitAck { machine: d.u32()? },
@@ -639,6 +712,29 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
                 return Err(WireError::Truncated { needed: len, got: payload.len() });
             }
             Frame::Catchup { snapshot: d.take(len)?.to_vec() }
+        }
+        TAG_RACK_RESULT => {
+            let rack = d.u32()?;
+            let transfers = d.u64()?;
+            let converged = match d.u8()? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(WireError::Protocol(format!("bad converged byte {other}")))
+                }
+            };
+            let len = d.u32()? as usize;
+            if 8 * len > payload.len() {
+                return Err(WireError::Truncated { needed: 8 * len, got: payload.len() });
+            }
+            Frame::RackResult {
+                rack,
+                transfers,
+                converged,
+                assignment: (0..len)
+                    .map(|_| Ok((d.u32()?, d.u32()?)))
+                    .collect::<Result<_, WireError>>()?,
+            }
         }
         other => return Err(WireError::BadTag(other)),
     };
@@ -1273,6 +1369,33 @@ pub fn run_distributed_tcp_local(
     Ok(run_over_endpoints(endpoints, graph, machines, initial, options, stats))
 }
 
+/// [`crate::coordinator::distributed::run_distributed_hierarchical`],
+/// but with both levels' meshes on real loopback TCP sockets — the
+/// `RackUpdate` aggregates and the scoped rings cross actual wires,
+/// and the parity tests assert the result is bit-identical to the
+/// in-process hierarchy.
+pub fn run_distributed_hierarchical_tcp_local(
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    layout: &RackLayout,
+    options: &DistributedOptions,
+) -> Result<DistributedReport, WireError> {
+    let (outer_endpoints, outer_stats) = build_tcp_bus_local(layout.rack_count())?;
+    let (inner_endpoints, inner_stats) = build_tcp_bus_local(machines.count())?;
+    Ok(run_hierarchical_over_endpoints(
+        outer_endpoints,
+        outer_stats,
+        inner_endpoints,
+        inner_stats,
+        graph,
+        machines,
+        initial,
+        layout,
+        options,
+    ))
+}
+
 // ---------------------------------------------------------------------
 // Multi-process cluster: leader + serve
 // ---------------------------------------------------------------------
@@ -1321,6 +1444,10 @@ pub struct ClusterLeader {
     pending_buf: VecDeque<JoinRequest>,
     /// Tells the acceptor thread to stop accepting joiners.
     acceptor_stop: Arc<AtomicBool>,
+    /// Two-level rack layout (wire v5, DESIGN.md §12); `None` plays the
+    /// flat single-level game. Ships to workers in `Setup` and tracks
+    /// membership changes (recovery shrinks it, admission grows it).
+    layout: Option<RackLayout>,
 }
 
 /// One validated `Join` handshake, queued until the next epoch
@@ -1331,6 +1458,9 @@ pub struct JoinRequest {
     pub wire_id: MachineId,
     /// Self-reported relative speed (1.0 = an average machine).
     pub speed: f64,
+    /// Requested rack (wire v5); `None` = leader's choice. Ignored on
+    /// a flat cluster.
+    pub rack: Option<usize>,
     stream: TcpStream,
 }
 
@@ -1365,7 +1495,26 @@ impl ClusterLeader {
             pending,
             pending_buf: VecDeque::new(),
             acceptor_stop: stop,
+            layout: None,
         })
+    }
+
+    /// Install the two-level rack layout (DESIGN.md §12). Must be
+    /// called before [`ClusterLeader::setup`] so the machine → rack map
+    /// ships with the fixture; every subsequent
+    /// [`ClusterLeader::refine`] then plays the hierarchical game. A
+    /// singleton layout (every machine its own rack) is accepted and
+    /// reproduces the flat game bit-for-bit.
+    pub fn set_racks(&mut self, layout: RackLayout) -> Result<(), WireError> {
+        if layout.machine_count() != self.ep.machine_count() {
+            return Err(WireError::Protocol(format!(
+                "rack layout covers {} machines but the cluster has {}",
+                layout.machine_count(),
+                self.ep.machine_count()
+            )));
+        }
+        self.layout = Some(layout);
+        Ok(())
     }
 
     /// Override the admission/rollback barrier patience (defaults to
@@ -1399,6 +1548,12 @@ impl ClusterLeader {
                 .edges()
                 .map(|(u, v, w)| Ok((wire_u32(u)?, wire_u32(v)?, w)))
                 .collect::<Result<_, WireError>>()?,
+            racks: match &self.layout {
+                Some(l) => {
+                    l.rack_of_slice().iter().map(|&r| wire_u32(r)).collect::<Result<_, _>>()?
+                }
+                None => Vec::new(),
+            },
         }))
     }
 
@@ -1416,9 +1571,62 @@ impl ClusterLeader {
     }
 
     /// Run one refinement round across the cluster: re-sync weights and
-    /// the warm-start assignment, play machine 0's part of the ring,
-    /// then collect every worker's overhead report (the epoch barrier).
+    /// the warm-start assignment, play machine 0's part of the ring (or
+    /// the two hierarchical phases if a rack layout is installed), then
+    /// collect every worker's overhead report (the epoch barrier).
     pub fn refine(
+        &mut self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        initial: Partition,
+    ) -> Result<DistributedReport, WireError> {
+        match self.layout.clone() {
+            Some(layout) => self.refine_hierarchical(graph, machines, initial, &layout),
+            None => self.refine_flat(graph, machines, initial),
+        }
+    }
+
+    /// `EpochBegin` broadcast shared by the flat round and both
+    /// hierarchical phases. Attempts every peer even after a failure:
+    /// the live peers must receive the round so they can later prove
+    /// themselves to the death diagnosis with a RoundStats (a failed
+    /// send is recorded by `send_ctrl` as evidence against the dead
+    /// one).
+    fn broadcast_begin(&mut self, begin: &Frame) -> Result<(), WireError> {
+        let k = self.ep.machine_count();
+        let mut lost_at_broadcast = Vec::new();
+        for to in 1..k {
+            if let Err(e) = self.ep.send_ctrl(to, begin) {
+                eprintln!("gtip leader: EpochBegin to machine {to} failed: {e}");
+                lost_at_broadcast.push(to);
+            }
+        }
+        if !lost_at_broadcast.is_empty() {
+            return Err(WireError::Protocol(format!(
+                "EpochBegin broadcast lost machine(s) {lost_at_broadcast:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// The epoch frame for one round phase.
+    fn epoch_frame(
+        &self,
+        epoch: u64,
+        phase: u8,
+        graph: &Graph,
+        assignment: &[MachineId],
+    ) -> Result<Frame, WireError> {
+        Ok(Frame::EpochBegin(EpochFrame {
+            epoch,
+            phase,
+            node_weights: graph.node_weights().to_vec(),
+            edge_weights: graph.edges().map(|(_, _, w)| w).collect(),
+            assignment: assignment.iter().map(|&m| wire_u32(m)).collect::<Result<_, _>>()?,
+        }))
+    }
+
+    fn refine_flat(
         &mut self,
         graph: &Graph,
         machines: &MachineConfig,
@@ -1439,32 +1647,8 @@ impl ClusterLeader {
         self.reported[0] = true;
         let epoch = self.epoch;
         self.epoch += 1;
-        let begin = Frame::EpochBegin(EpochFrame {
-            epoch,
-            node_weights: graph.node_weights().to_vec(),
-            edge_weights: graph.edges().map(|(_, _, w)| w).collect(),
-            assignment: initial
-                .assignment()
-                .iter()
-                .map(|&m| wire_u32(m))
-                .collect::<Result<_, _>>()?,
-        });
-        // Attempt every peer even after a failure: the live peers must
-        // receive the round so they can later prove themselves to the
-        // death diagnosis with a RoundStats (a failed send is recorded
-        // by `send_ctrl` as evidence against the dead one).
-        let mut lost_at_broadcast = Vec::new();
-        for to in 1..k {
-            if let Err(e) = self.ep.send_ctrl(to, &begin) {
-                eprintln!("gtip leader: EpochBegin to machine {to} failed: {e}");
-                lost_at_broadcast.push(to);
-            }
-        }
-        if !lost_at_broadcast.is_empty() {
-            return Err(WireError::Protocol(format!(
-                "EpochBegin broadcast lost machine(s) {lost_at_broadcast:?}"
-            )));
-        }
+        let begin = self.epoch_frame(epoch, 0, graph, initial.assignment())?;
+        self.broadcast_begin(&begin)?;
 
         let before = self.ep.stats_snapshot();
         let actor = MachineActor::new(
@@ -1516,6 +1700,205 @@ impl ClusterLeader {
             converged: outcome.converged,
             timed_out: false,
         })
+    }
+
+    /// One hierarchical epoch (DESIGN.md §12): a phase-1 outer round
+    /// where the leader and the other rack leaders exchange O(R)
+    /// `RackUpdate` aggregates over a [`RackBus`], the guarded
+    /// map-back, then a phase-2 round of concurrent per-rack scoped
+    /// rings. Non-leader racks ship their ring outcome back in a
+    /// `RackResult`; the leader merges them into the final partition.
+    fn refine_hierarchical(
+        &mut self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        initial: Partition,
+        layout: &RackLayout,
+    ) -> Result<DistributedReport, WireError> {
+        let k = self.ep.machine_count();
+        if machines.count() != k {
+            return Err(WireError::Protocol(format!(
+                "cluster has {k} machines but the round's fixture wants {}",
+                machines.count()
+            )));
+        }
+        if layout.machine_count() != k {
+            return Err(WireError::Protocol(format!(
+                "rack layout covers {} machines but the cluster has {k}",
+                layout.machine_count()
+            )));
+        }
+        let racks = layout.rack_count();
+        self.ep.drain_inbox();
+        self.reported = vec![false; k];
+        self.reported[0] = true;
+        let epoch = self.epoch;
+        self.epoch += 1;
+
+        // Phase 1: the outer game on the rack quotient. Machine 0
+        // always leads its own rack (it is the smallest id), and kicks
+        // rack 0 — possibly itself — exactly like the in-process ring.
+        let begin = self.epoch_frame(epoch, 1, graph, initial.assignment())?;
+        self.broadcast_begin(&begin)?;
+        let before = self.ep.stats_snapshot();
+        let my_rack = layout.rack_of(0);
+        let qconfig = layout.quotient_config(machines);
+        let qpart = Partition::from_assignment(
+            graph,
+            racks,
+            layout.quotient_assignment(initial.assignment()),
+        );
+        let actor = MachineActor::new(
+            my_rack,
+            Arc::new(graph.clone()),
+            qconfig,
+            &qpart,
+            self.opts.mu,
+            self.opts.framework,
+            self.opts.migration_charge,
+        );
+        let outer = {
+            let bus = RackBus::new(&self.ep, my_rack, layout.leaders());
+            bus.send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+            let opts = &self.opts;
+            machine_loop(actor, &bus, opts.epsilon, opts.max_transfers, opts.recv_timeout)
+        };
+        if outer.timed_out {
+            return Err(WireError::Protocol(match outer.dead_peer {
+                Some(r) => format!("outer round lost rack {r}'s leader (send failed)"),
+                None => "outer round timed out waiting on a rack leader".into(),
+            }));
+        }
+        // Phase-1 barrier: every worker reports, spectators included.
+        let mut worker_stats = OverheadStats::default();
+        self.stats_barrier(&mut worker_stats)?;
+
+        // Guarded map-back to machines (shared with every other
+        // deployment of the hierarchy).
+        let mapped = guarded_map_back(
+            graph,
+            machines,
+            layout,
+            initial.assignment(),
+            &outer.assignment,
+            self.opts.mu,
+            self.opts.framework,
+        );
+        let outer_transfers =
+            if mapped.accepted { outer.transfers_applied as usize } else { 0 };
+        let start = Partition::from_assignment(graph, k, mapped.assignment);
+
+        // Phase 2: concurrent scoped rings, one per rack. The leader
+        // plays (and kicks) its own rack's ring; every other rack's
+        // leader kicks its own.
+        self.reported = vec![false; k];
+        self.reported[0] = true;
+        let begin = self.epoch_frame(epoch, 2, graph, start.assignment())?;
+        self.broadcast_begin(&begin)?;
+        let scope = layout.members(my_rack).to_vec();
+        let actor = MachineActor::new(
+            0,
+            Arc::new(graph.clone()),
+            machines.clone(),
+            &start,
+            self.opts.mu,
+            self.opts.framework,
+            self.opts.migration_charge,
+        )
+        .with_scope(scope.clone());
+        self.ep.send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+        let inner = machine_loop_scoped(
+            actor,
+            &self.ep,
+            &scope,
+            self.opts.epsilon,
+            self.opts.max_transfers,
+            self.opts.recv_timeout,
+        );
+        if inner.timed_out {
+            return Err(WireError::Protocol(match inner.dead_peer {
+                Some(m) => format!("inner round lost machine {m} (send failed)"),
+                None => "inner round timed out waiting on a rack member".into(),
+            }));
+        }
+
+        // Phase-2 barrier: K−1 RoundStats plus one RackResult from
+        // every rack the leader is not in, in any interleaving.
+        let mut assignment = inner.assignment.clone();
+        let mut transfers = outer_transfers + inner.transfers_applied as usize;
+        let mut converged = outer.converged && inner.converged;
+        let mut got_rack = vec![false; racks];
+        got_rack[my_rack] = true;
+        let mut remaining_stats = k - 1;
+        let mut remaining_racks = racks - 1;
+        while remaining_stats > 0 || remaining_racks > 0 {
+            match self.ep.recv_ctrl(self.opts.recv_timeout)? {
+                (peer, Frame::RoundStats(s)) if !self.reported[peer] => {
+                    self.reported[peer] = true;
+                    worker_stats.add(&s);
+                    remaining_stats -= 1;
+                }
+                (peer, Frame::RackResult { rack, transfers: t, converged: c, assignment: a }) => {
+                    let rack = rack as usize;
+                    if rack >= racks || got_rack[rack] || layout.leader(rack) != peer {
+                        return Err(WireError::Protocol(format!(
+                            "machine {peer} sent an invalid RackResult for rack {rack}"
+                        )));
+                    }
+                    got_rack[rack] = true;
+                    for &(node, machine) in &a {
+                        let (node, machine) = (node as usize, machine as MachineId);
+                        let valid = node < assignment.len()
+                            && machine < k
+                            && layout.rack_of(machine) == rack
+                            && layout.rack_of(start.machine_of(node)) == rack;
+                        if !valid {
+                            return Err(WireError::Protocol(format!(
+                                "rack {rack} reported an out-of-rack move of node {node}"
+                            )));
+                        }
+                        assignment[node] = machine;
+                    }
+                    transfers += t as usize;
+                    converged = converged && c;
+                    remaining_racks -= 1;
+                }
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during barrier: {frame:?}"
+                    )));
+                }
+            }
+        }
+        let mut overhead = self.ep.stats_snapshot().delta_since(&before);
+        overhead.add(&worker_stats);
+        Ok(DistributedReport {
+            partition: Partition::from_assignment(graph, k, assignment),
+            transfers,
+            overhead,
+            converged,
+            timed_out: false,
+        })
+    }
+
+    /// Barrier on K−1 worker `RoundStats`, folding them into `into`.
+    fn stats_barrier(&mut self, into: &mut OverheadStats) -> Result<(), WireError> {
+        let mut remaining = self.ep.machine_count() - 1;
+        while remaining > 0 {
+            match self.ep.recv_ctrl(self.opts.recv_timeout)? {
+                (peer, Frame::RoundStats(s)) if !self.reported[peer] => {
+                    self.reported[peer] = true;
+                    into.add(&s);
+                    remaining -= 1;
+                }
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during barrier: {frame:?}"
+                    )));
+                }
+            }
+        }
+        Ok(())
     }
 
     /// After a failed [`ClusterLeader::refine`], work out which
@@ -1589,6 +1972,11 @@ impl ClusterLeader {
         }
         let survivors_wire: Vec<MachineId> =
             (0..k).filter(|m| !dead.contains(m)).map(|m| self.ep.wire_of(m)).collect();
+        if let Some(l) = &self.layout {
+            // Shrink the rack layout with the fleet (dead are current
+            // logical ids, exactly what `without_machines` wants).
+            self.layout = Some(l.without_machines(dead).map_err(WireError::Protocol)?);
+        }
         self.ep.compact(&survivors_wire)?;
         self.ep.drain_inbox();
         self.reported = vec![false; self.ep.machine_count()];
@@ -1734,13 +2122,36 @@ impl ClusterLeader {
         let mut members = old_members.clone();
         let pos = self.joiner_position(joiner);
         members.insert(pos, joiner);
+        // Resolve the joiner's rack before the mesh grows: honor the
+        // request if it names an existing rack (or the next fresh one),
+        // otherwise place it in the emptiest rack. Flat clusters ship 0.
+        let old_layout = self.layout.clone();
+        let joiner_rack = match &old_layout {
+            Some(l) => match req.rack {
+                Some(r) if r <= l.rack_count() => r,
+                Some(r) => {
+                    eprintln!(
+                        "gtip leader: joiner asked for rack {r} of {}; using the emptiest",
+                        l.rack_count()
+                    );
+                    l.join_rack()
+                }
+                None => l.join_rack(),
+            },
+            None => 0,
+        };
         self.ep.extend(&members, joiner, out, req.stream)?;
+        if let Some(l) = &old_layout {
+            // Grow the layout first so the joiner's Setup ships it.
+            self.layout = Some(l.with_inserted(pos, joiner_rack).map_err(WireError::Protocol)?);
+        }
 
         let result = (|| -> Result<(), WireError> {
             self.ep.broadcast_ctrl(&Frame::Admit {
                 members: members.iter().map(|&w| wire_u32(w)).collect::<Result<_, _>>()?,
                 joiner: wire_u32(joiner)?,
                 speeds: machines_after.speeds().to_vec(),
+                rack: wire_u32(joiner_rack)?,
             })?;
             self.ep.send_ctrl(pos, &self.setup_frame(graph, machines_after)?)?;
             self.ep.send_ctrl(pos, &Frame::Catchup { snapshot: snapshot.to_vec() })?;
@@ -1786,6 +2197,7 @@ impl ClusterLeader {
                     "gtip leader: admission of wire id {joiner} failed ({e}); rolling back to K={}",
                     old_members.len()
                 );
+                self.layout = old_layout;
                 self.rollback_admit(&old_members, machines_before)?;
                 Ok(false)
             }
@@ -1904,7 +2316,7 @@ fn join_handshake(
         ));
     }
     let join = read_frame(&mut stream).map_err(io)?;
-    let Frame::Join { machine: jm, speed } = join else {
+    let Frame::Join { machine: jm, speed, rack } = join else {
         return Err((WireError::Protocol(format!("expected Join, got {join:?}")), None));
     };
     if jm as MachineId != wire_id {
@@ -1921,7 +2333,10 @@ fn join_handshake(
     }
     stream.set_read_timeout(None).map_err(|e| io(e.into()))?;
     stream.set_nodelay(true).map_err(|e| io(e.into()))?;
-    Ok(JoinRequest { wire_id, speed, stream })
+    // u32::MAX = "leader's choice"; anything else is a request the
+    // leader validates against its layout at admission time.
+    let rack = if rack == u32::MAX { None } else { Some(rack as usize) };
+    Ok(JoinRequest { wire_id, speed, rack, stream })
 }
 
 /// What a worker did over its lifetime (printed by `gtip serve`).
@@ -2004,6 +2419,10 @@ struct WorkerFixture {
     epsilon: f64,
     max_transfers: usize,
     recv_timeout: Duration,
+    /// Two-level rack layout (wire v5); `None` on a flat cluster.
+    /// Indexed by *logical* id, so membership changes (`Restore`,
+    /// `Admit`) must update it in lockstep with the endpoint.
+    layout: Option<RackLayout>,
 }
 
 impl WorkerFixture {
@@ -2071,6 +2490,18 @@ impl WorkerFixture {
             epsilon: setup.epsilon,
             max_transfers: setup.max_transfers as usize,
             recv_timeout: Duration::from_millis(setup.recv_timeout_ms.max(1)),
+            layout: if setup.racks.is_empty() {
+                None
+            } else {
+                if setup.racks.len() != k {
+                    return Err(WireError::Protocol(format!(
+                        "fixture has {} rack entries but the mesh has {k} machines",
+                        setup.racks.len()
+                    )));
+                }
+                let rack_of: Vec<usize> = setup.racks.iter().map(|&r| r as usize).collect();
+                Some(RackLayout::new(rack_of).map_err(WireError::Protocol)?)
+            },
         })
     }
 }
@@ -2133,23 +2564,106 @@ fn run_worker_loop(
                 }
                 let part = Partition::from_assignment(&fixture.graph, k, assignment);
                 let before = ep.stats_snapshot();
-                let actor = MachineActor::new(
-                    ep.id(),
-                    Arc::new(fixture.graph.clone()),
-                    fixture.machines.clone(),
-                    &part,
-                    fixture.mu,
-                    fixture.framework,
-                    fixture.migration_charge,
-                );
-                let outcome = machine_loop(
-                    actor,
-                    &ep,
-                    fixture.epsilon,
-                    fixture.max_transfers,
-                    fixture.recv_timeout,
-                );
-                if outcome.timed_out {
+                let outcome = match (e.phase, &fixture.layout) {
+                    // Flat round: the original single-level ring.
+                    (0, _) => {
+                        let actor = MachineActor::new(
+                            ep.id(),
+                            Arc::new(fixture.graph.clone()),
+                            fixture.machines.clone(),
+                            &part,
+                            fixture.mu,
+                            fixture.framework,
+                            fixture.migration_charge,
+                        );
+                        Some(machine_loop(
+                            actor,
+                            &ep,
+                            fixture.epsilon,
+                            fixture.max_transfers,
+                            fixture.recv_timeout,
+                        ))
+                    }
+                    // Outer game: rack leaders play the quotient over a
+                    // RackBus; everyone else spectates and still
+                    // reports a (zero-delta) RoundStats below.
+                    (1, Some(layout)) => {
+                        if layout.is_leader(ep.id()) {
+                            let rack = layout.rack_of(ep.id());
+                            let qpart = Partition::from_assignment(
+                                &fixture.graph,
+                                layout.rack_count(),
+                                layout.quotient_assignment(part.assignment()),
+                            );
+                            let actor = MachineActor::new(
+                                rack,
+                                Arc::new(fixture.graph.clone()),
+                                layout.quotient_config(&fixture.machines),
+                                &qpart,
+                                fixture.mu,
+                                fixture.framework,
+                                fixture.migration_charge,
+                            );
+                            let bus = RackBus::new(&ep, rack, layout.leaders());
+                            Some(machine_loop(
+                                actor,
+                                &bus,
+                                fixture.epsilon,
+                                fixture.max_transfers,
+                                fixture.recv_timeout,
+                            ))
+                        } else {
+                            None
+                        }
+                    }
+                    // Inner game: the scoped ring of this machine's
+                    // rack. Each rack's leader kicks its own ring (the
+                    // cluster leader kicks its rack on its side).
+                    (2, Some(layout)) => {
+                        let scope = layout.members(layout.rack_of(ep.id())).to_vec();
+                        let actor = MachineActor::new(
+                            ep.id(),
+                            Arc::new(fixture.graph.clone()),
+                            fixture.machines.clone(),
+                            &part,
+                            fixture.mu,
+                            fixture.framework,
+                            fixture.migration_charge,
+                        )
+                        .with_scope(scope.clone());
+                        if layout.is_leader(ep.id()) {
+                            ep.send(
+                                ep.id(),
+                                Message::TakeMyTurn {
+                                    consecutive_forfeits: 0,
+                                    transfers_so_far: 0,
+                                },
+                            );
+                        }
+                        Some(machine_loop_scoped(
+                            actor,
+                            &ep,
+                            &scope,
+                            fixture.epsilon,
+                            fixture.max_transfers,
+                            fixture.recv_timeout,
+                        ))
+                    }
+                    (1 | 2, None) => {
+                        return Err(WireError::Protocol(format!(
+                            "epoch {} opened phase {} but the fixture is flat",
+                            e.epoch, e.phase
+                        )))
+                    }
+                    (p, _) => {
+                        return Err(WireError::Protocol(format!(
+                            "epoch {} opened unknown phase {p}",
+                            e.epoch
+                        )))
+                    }
+                };
+                let timed_out = outcome.as_ref().is_some_and(|o| o.timed_out);
+                if let Some(o) = outcome.as_ref().filter(|o| o.timed_out) {
                     // A peer died mid-round. Do NOT unwind: report the
                     // round's stats anyway — that report is this
                     // worker's proof of life for the leader's death
@@ -2157,7 +2671,7 @@ fn run_worker_loop(
                     eprintln!(
                         "gtip serve: epoch {} round lost a peer{}; awaiting restore",
                         e.epoch,
-                        match outcome.dead_peer {
+                        match o.dead_peer {
                             Some(m) => format!(" (machine {m})"),
                             None => String::new(),
                         }
@@ -2169,7 +2683,36 @@ fn run_worker_loop(
                 }
                 let delta = ep.stats_snapshot().delta_since(&before);
                 ep.send_ctrl(0, &Frame::RoundStats(delta))?;
-                if !outcome.timed_out {
+                // A rack leader (other than the cluster leader's own
+                // rack) ships its phase-2 ring outcome home: phase 2
+                // never moves a node across racks, so only the owning
+                // rack knows its nodes' final machines.
+                if e.phase == 2 && !timed_out {
+                    if let (Some(layout), Some(o)) = (&fixture.layout, &outcome) {
+                        let rack = layout.rack_of(ep.id());
+                        if layout.is_leader(ep.id()) && !layout.members(rack).contains(&0) {
+                            let pairs = part
+                                .assignment()
+                                .iter()
+                                .enumerate()
+                                .filter(|&(_, &m)| layout.rack_of(m) == rack)
+                                .map(|(i, _)| Ok((wire_u32(i)?, wire_u32(o.assignment[i])?)))
+                                .collect::<Result<_, WireError>>()?;
+                            ep.send_ctrl(
+                                0,
+                                &Frame::RackResult {
+                                    rack: wire_u32(rack)?,
+                                    transfers: o.transfers_applied,
+                                    converged: o.converged,
+                                    assignment: pairs,
+                                },
+                            )?;
+                        }
+                    }
+                }
+                // A hierarchical epoch spans phases 1 and 2; count it
+                // once, when its second half completes.
+                if !timed_out && e.phase != 1 {
                     epochs += 1;
                 }
             }
@@ -2199,9 +2742,17 @@ fn run_worker_loop(
                     );
                     break;
                 }
+                // Dead machines by *current* logical id — computed
+                // before the compaction renumbers everything.
+                let dead: Vec<MachineId> =
+                    (0..ep.machine_count()).filter(|&m| !wish.contains(&ep.wire_of(m))).collect();
                 ep.compact(&wish)?;
                 ep.drain_inbox();
                 fixture.machines = MachineConfig::from_normalized(speeds.clone());
+                if let Some(l) = fixture.layout.take() {
+                    fixture.layout =
+                        Some(l.without_machines(&dead).map_err(WireError::Protocol)?);
+                }
                 ep.send_ctrl(0, &Frame::RestoreAck { machine: wire_u32(ep.wire_id())? })?;
                 eprintln!(
                     "gtip serve: restored as machine {}/{} (wire id {})",
@@ -2210,7 +2761,7 @@ fn run_worker_loop(
                     ep.wire_id()
                 );
             }
-            (0, Frame::Admit { members, joiner, speeds }) => {
+            (0, Frame::Admit { members, joiner, speeds, rack }) => {
                 let members: Vec<MachineId> =
                     members.iter().map(|&w| w as MachineId).collect();
                 let joiner = joiner as MachineId;
@@ -2238,6 +2789,24 @@ fn run_worker_loop(
                     Ok(()) => {
                         ep.drain_inbox();
                         fixture.machines = MachineConfig::from_normalized(speeds.clone());
+                        if let Some(l) = fixture.layout.take() {
+                            // Mirror the leader's with_inserted: the
+                            // joiner's logical id is its member-list
+                            // position, its rack rides the frame.
+                            let pos =
+                                members.iter().position(|&w| w == joiner).ok_or_else(|| {
+                                    WireError::Protocol(format!(
+                                        "admit member list omits joiner {joiner}"
+                                    ))
+                                })?;
+                            let r = if rack == u32::MAX {
+                                l.join_rack()
+                            } else {
+                                rack as usize
+                            };
+                            fixture.layout =
+                                Some(l.with_inserted(pos, r).map_err(WireError::Protocol)?);
+                        }
                         ep.send_ctrl(
                             0,
                             &Frame::AdmitAck { machine: wire_u32(ep.wire_id())? },
@@ -2385,6 +2954,7 @@ pub fn serve_join(
     machine_id: MachineId,
     addrs: &[String],
     speed: f64,
+    rack: Option<usize>,
     connect_timeout: Duration,
     admit_window: Duration,
 ) -> Result<ServeSummary, WireError> {
@@ -2436,7 +3006,20 @@ pub fn serve_join(
                 machines: wire_u32(k_orig)?,
             },
         )?;
-        write_frame(&mut out, &Frame::Join { machine: wire_u32(machine_id)?, speed })?;
+        let rack_wire = match rack {
+            Some(r) => {
+                let w = wire_u32(r)?;
+                if w == u32::MAX {
+                    return Err(WireError::Protocol(format!("--rack {r} is reserved")));
+                }
+                w
+            }
+            None => u32::MAX,
+        };
+        write_frame(
+            &mut out,
+            &Frame::Join { machine: wire_u32(machine_id)?, speed, rack: rack_wire },
+        )?;
         out.set_nonblocking(true)?;
         eprintln!(
             "gtip serve: join request sent (wire id {machine_id}, speed {speed}); waiting for admission"
@@ -2516,7 +3099,9 @@ pub fn serve_join(
     // The Admit broadcast follows the leader's dial immediately.
     leader_in.set_read_timeout(Some(admit_window))?;
     let admit = read_frame(&mut leader_in)?;
-    let Frame::Admit { members, joiner, speeds } = admit else {
+    // The joiner's rack arrives again inside the fresh Setup's full
+    // machine → rack map, so the Admit copy is redundant here.
+    let Frame::Admit { members, joiner, speeds, rack: _ } = admit else {
         return Err(WireError::Protocol(format!("expected Admit, got {admit:?}")));
     };
     if joiner as MachineId != machine_id {
@@ -2702,7 +3287,7 @@ pub fn parse_peers(spec: &str) -> Result<Vec<String>, WireError> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::distributed::run_distributed;
+    use crate::coordinator::distributed::{run_distributed, run_distributed_hierarchical};
     use crate::graph::generators::{table1_graph, WeightModel};
     use crate::util::rng::Pcg32;
 
@@ -2717,6 +3302,7 @@ mod tests {
                 to: 3,
                 loads: vec![0.25, -1.5, 3.75, f64::MAX, 0.0],
             },
+            Message::RackUpdate { seq: 11, node: 8, from: 0, to: 1, rack_loads: vec![0.5, 1.5] },
             Message::Shutdown { total_transfers: 42, converged: true },
             Message::Shutdown { total_transfers: 7, converged: false },
         ]
@@ -2746,9 +3332,11 @@ mod tests {
                 recv_timeout_ms: 30_000,
                 node_weights: vec![1.0, 2.0, 3.0],
                 edges: vec![(0, 1, 1.5), (1, 2, 2.5)],
+                racks: vec![0, 1],
             }),
             Frame::EpochBegin(EpochFrame {
                 epoch: 4,
+                phase: 2,
                 node_weights: vec![0.5; 3],
                 edge_weights: vec![1.0, 2.0],
                 assignment: vec![0, 1, 0],
@@ -2758,9 +3346,22 @@ mod tests {
                 ..Default::default()
             }),
             Frame::Restore { survivors: vec![0, 2, 3], speeds: vec![0.25, 0.25, 0.5] },
-            Frame::Join { machine: 4, speed: 0.125 },
+            Frame::Join { machine: 4, speed: 0.125, rack: u32::MAX },
+            Frame::Join { machine: 5, speed: 0.5, rack: 1 },
             Frame::RestoreAck { machine: 3 },
-            Frame::Admit { members: vec![0, 2, 3], joiner: 2, speeds: vec![0.25, 0.25, 0.5] },
+            Frame::Admit {
+                members: vec![0, 2, 3],
+                joiner: 2,
+                speeds: vec![0.25, 0.25, 0.5],
+                rack: 1,
+            },
+            Frame::RackResult {
+                rack: 1,
+                transfers: 3,
+                converged: true,
+                assignment: vec![(5, 2), (9, 3)],
+            },
+            Frame::RackResult { rack: 0, transfers: 0, converged: false, assignment: vec![] },
             Frame::AdmitAck { machine: 2 },
             Frame::Catchup { snapshot: vec![] },
             Frame::Catchup { snapshot: vec![0xDE, 0xAD, 0xBE, 0xEF] },
@@ -2919,6 +3520,69 @@ mod tests {
         assert_eq!(tcp.transfers, inproc.transfers);
         assert_eq!(tcp.overhead, inproc.overhead);
         assert!(tcp.converged && inproc.converged);
+    }
+
+    /// The two-level hierarchy is transport-invariant too: the TCP
+    /// wiring of the phased epoch (RackBus over real sockets, scoped
+    /// inner rings) reproduces the in-process hierarchical run
+    /// bit-for-bit — assignment, transfers, wire accounting on both
+    /// levels, convergence.
+    #[test]
+    fn hierarchical_tcp_matches_in_process_exactly() {
+        let mut rng = Pcg32::new(8);
+        let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+        let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.3, 0.2]);
+        let assignment: Vec<usize> = (0..50).map(|_| rng.index(4)).collect();
+        let part = Partition::from_assignment(&g, 4, assignment);
+        let layout = RackLayout::new(vec![0, 0, 1, 1]).unwrap();
+        let opts = DistributedOptions::default();
+
+        let inproc =
+            run_distributed_hierarchical(Arc::clone(&g), &machines, part.clone(), &layout, &opts);
+        let tcp =
+            run_distributed_hierarchical_tcp_local(Arc::clone(&g), &machines, part, &layout, &opts)
+                .unwrap();
+        assert_eq!(tcp.partition.assignment(), inproc.partition.assignment());
+        assert_eq!(tcp.transfers, inproc.transfers);
+        assert_eq!(tcp.overhead, inproc.overhead, "wire accounting must be transport-invariant");
+        assert_eq!(tcp.converged, inproc.converged);
+    }
+
+    /// Singleton racks over TCP degenerate to the flat TCP game
+    /// bit-for-bit on the assignment (the hierarchy's identity
+    /// baseline, DESIGN.md §12, carried across the wire).
+    #[test]
+    fn singleton_racks_hierarchical_tcp_matches_flat_tcp() {
+        let mut rng = Pcg32::new(12);
+        let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+        let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.5]);
+        let assignment: Vec<usize> = (0..50).map(|_| rng.index(3)).collect();
+        let part = Partition::from_assignment(&g, 3, assignment);
+        let layout = RackLayout::singletons(3);
+        let opts = DistributedOptions::default();
+
+        let flat =
+            run_distributed_tcp_local(Arc::clone(&g), &machines, part.clone(), &opts).unwrap();
+        let hier =
+            run_distributed_hierarchical_tcp_local(Arc::clone(&g), &machines, part, &layout, &opts)
+                .unwrap();
+        assert_eq!(hier.partition.assignment(), flat.partition.assignment());
+        assert_eq!(hier.transfers, flat.transfers);
+        assert_eq!(hier.converged, flat.converged);
+    }
+
+    /// A `RackResult` whose declared assignment length exceeds the
+    /// actual payload must be a clean truncation error, not a panic or
+    /// a huge-allocation attempt.
+    #[test]
+    fn lying_rack_result_length_is_truncation_not_panic() {
+        let mut payload = vec![TAG_RACK_RESULT];
+        put_u32(&mut payload, 1); // rack
+        payload.extend_from_slice(&3u64.to_le_bytes()); // transfers
+        payload.push(1); // converged
+        put_u32(&mut payload, 1000); // claims 1000 pairs...
+        payload.extend_from_slice(&[0u8; 16]); // ...carries 2
+        assert!(matches!(decode_payload(&payload), Err(WireError::Truncated { .. })));
     }
 
     /// The dial loop must keep retrying until the deadline itself has
@@ -3167,6 +3831,7 @@ mod tests {
             recv_timeout_ms: 200,
             node_weights: vec![1.0, 1.0],
             edges: vec![(0, 1, 1.0)],
+            racks: vec![],
         };
         let fixture = WorkerFixture::from_setup(&setup, 2).unwrap();
         let addrs: Vec<String> = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()];

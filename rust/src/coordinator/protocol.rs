@@ -29,6 +29,13 @@ pub enum Message {
     /// other machines. `loads` has length K — the machine-level aggregate
     /// state of §4.5.
     RegularUpdate { seq: u64, node: NodeId, from: MachineId, to: MachineId, loads: Vec<f64> },
+    /// The outer (rack-level) game's aggregate exchange (DESIGN.md §12,
+    /// wire v5): same layout as [`Message::RegularUpdate`], but `from` /
+    /// `to` are *rack* ids and `rack_loads` has length R — one aggregate
+    /// per rack, the O(K_rack) quantity only rack leaders exchange.
+    /// Counted apart from `RegularUpdate` so the hierarchy's cross-rack
+    /// bytes are measurable on their own.
+    RackUpdate { seq: u64, node: NodeId, from: MachineId, to: MachineId, rack_loads: Vec<f64> },
     /// Stop once the local replica has applied `total_transfers`
     /// transfers. `converged` says why the ring stopped — a genuine
     /// Nash equilibrium (K consecutive forfeits) vs the transfer cap —
@@ -46,6 +53,7 @@ impl Message {
             Message::TakeMyTurn { .. } => "take_my_turn",
             Message::ReceiveNode { .. } => "receive_node",
             Message::RegularUpdate { .. } => "regular_update",
+            Message::RackUpdate { .. } => "rack_update",
             Message::Shutdown { .. } => "shutdown",
         }
     }
@@ -66,6 +74,11 @@ impl Message {
                 Message::ReceiveNode { .. } => 1 + 8 + 8 + 4 + 4,
                 // ReceiveNode layout + loads length u32 + K f64s
                 Message::RegularUpdate { loads, .. } => 1 + 8 + 8 + 4 + 4 + 4 + 8 * loads.len(),
+                // RegularUpdate layout with R f64s: 33 + 8R framed — the
+                // O(K_rack) cross-rack quantity of the overhead table.
+                Message::RackUpdate { rack_loads, .. } => {
+                    1 + 8 + 8 + 4 + 4 + 4 + 8 * rack_loads.len()
+                }
                 // tag + total u64 + converged u8
                 Message::Shutdown { .. } => 1 + 8 + 1,
             }
@@ -79,6 +92,7 @@ pub struct OverheadStats {
     pub take_my_turn: Counter,
     pub receive_node: Counter,
     pub regular_update: Counter,
+    pub rack_update: Counter,
     pub shutdown: Counter,
 }
 
@@ -101,6 +115,7 @@ impl OverheadStats {
             Message::TakeMyTurn { .. } => &mut self.take_my_turn,
             Message::ReceiveNode { .. } => &mut self.receive_node,
             Message::RegularUpdate { .. } => &mut self.regular_update,
+            Message::RackUpdate { .. } => &mut self.rack_update,
             Message::Shutdown { .. } => &mut self.shutdown,
         };
         c.messages += 1;
@@ -113,6 +128,7 @@ impl OverheadStats {
         self.take_my_turn.add(&other.take_my_turn);
         self.receive_node.add(&other.receive_node);
         self.regular_update.add(&other.regular_update);
+        self.rack_update.add(&other.rack_update);
         self.shutdown.add(&other.shutdown);
     }
 
@@ -126,6 +142,7 @@ impl OverheadStats {
             take_my_turn: sub(self.take_my_turn, baseline.take_my_turn),
             receive_node: sub(self.receive_node, baseline.receive_node),
             regular_update: sub(self.regular_update, baseline.regular_update),
+            rack_update: sub(self.rack_update, baseline.rack_update),
             shutdown: sub(self.shutdown, baseline.shutdown),
         }
     }
@@ -134,6 +151,7 @@ impl OverheadStats {
         self.take_my_turn.messages
             + self.receive_node.messages
             + self.regular_update.messages
+            + self.rack_update.messages
             + self.shutdown.messages
     }
 
@@ -141,6 +159,7 @@ impl OverheadStats {
         self.take_my_turn.bytes
             + self.receive_node.bytes
             + self.regular_update.bytes
+            + self.rack_update.bytes
             + self.shutdown.bytes
     }
 
@@ -162,6 +181,16 @@ impl OverheadStats {
         }
         self.regular_update.bytes as f64 / self.regular_update.messages as f64
     }
+
+    /// Mean bytes of one cross-rack aggregate exchange (`RackUpdate`) —
+    /// exactly `33 + 8R` on the wire, the O(K_rack) quantity of the
+    /// hierarchy's overhead claim (DESIGN.md §12).
+    pub fn bytes_per_rack_update(&self) -> f64 {
+        if self.rack_update.messages == 0 {
+            return 0.0;
+        }
+        self.rack_update.bytes as f64 / self.rack_update.messages as f64
+    }
 }
 
 #[cfg(test)]
@@ -176,6 +205,9 @@ mod tests {
         assert_eq!(a.wire_bytes(), 4 + 25);
         let u = Message::RegularUpdate { seq: 1, node: 1, from: 0, to: 1, loads: vec![0.0; 5] };
         assert_eq!(u.wire_bytes(), 4 + 29 + 40);
+        // RackUpdate scales with R (rack count), not K (machine count).
+        let r = Message::RackUpdate { seq: 1, node: 1, from: 0, to: 1, rack_loads: vec![0.0; 2] };
+        assert_eq!(r.wire_bytes(), 4 + 29 + 16);
         assert_eq!(
             Message::Shutdown { total_transfers: 9, converged: true }.wire_bytes(),
             4 + 10
@@ -192,10 +224,13 @@ mod tests {
         s.record(&Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
         s.record(&Message::Shutdown { total_transfers: 0, converged: true });
         s.record(&Message::RegularUpdate { seq: 0, node: 0, from: 0, to: 1, loads: vec![0.0; 4] });
-        assert_eq!(s.total_messages(), 3);
+        s.record(&Message::RackUpdate { seq: 0, node: 0, from: 0, to: 1, rack_loads: vec![0.0; 2] });
+        assert_eq!(s.total_messages(), 4);
         assert_eq!(s.take_my_turn.messages, 1);
         assert_eq!(s.regular_update.bytes, (4 + 29 + 32) as u64);
         assert_eq!(s.bytes_per_regular_update(), (4 + 29 + 32) as f64);
+        assert_eq!(s.rack_update.bytes, (4 + 29 + 16) as u64);
+        assert_eq!(s.bytes_per_rack_update(), (4 + 29 + 16) as f64);
     }
 
     #[test]
@@ -217,6 +252,7 @@ mod tests {
         let s = OverheadStats::default();
         assert_eq!(s.bytes_per_transfer(0), 0.0);
         assert_eq!(s.bytes_per_regular_update(), 0.0);
+        assert_eq!(s.bytes_per_rack_update(), 0.0);
     }
 
     #[test]
@@ -225,6 +261,10 @@ mod tests {
         assert_eq!(
             Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 0 }.tag(),
             "take_my_turn"
+        );
+        assert_eq!(
+            Message::RackUpdate { seq: 0, node: 0, from: 0, to: 0, rack_loads: vec![] }.tag(),
+            "rack_update"
         );
     }
 }

@@ -27,9 +27,10 @@ use std::time::Duration;
 
 use crate::config::Config;
 use crate::coordinator::net::{self, ClusterLeader};
-use crate::coordinator::{run_distributed, DistributedOptions};
+use crate::coordinator::{run_distributed, run_distributed_hierarchical, DistributedOptions};
 use crate::game::annealing::{anneal_then_refine, AnnealOptions};
 use crate::game::cost::Framework;
+use crate::game::hierarchy::RackLayout;
 use crate::game::refine::{RefineEngine, RefineOptions};
 use crate::graph::generators::{generate, GraphFamily};
 use crate::partition::initial::grow_partition;
@@ -71,12 +72,15 @@ USAGE:
                   [--connect-timeout-ms MS] [--recv-timeout-ms MS]
                   [--admit-window-ms MS] [--report-json FILE]
                   [--checkpoint-dir DIR] [--restore FILE]
+                  [--racks r0,r1,...]   # rack of each machine (two-level game)
   gtip churn-sweep [--scenarios hotspot,flash] [--nodes N] [--k K] [--threads N]
                   [--horizon T] [--epoch-ticks E] [--framework A|B] [--seed S]
                   [--charges 0,2,8,32] [--tick-value V] [--out FILE]
+  gtip hierarchy-bench [--sizes 120,240,360] [--k K] [--racks r0,r1,...]
+                  [--seed S] [--framework A|B] [--mu MU] [--out FILE]
   gtip serve      --machine-id K --peers host:port,host:port,...
                   [--connect-timeout-ms MS] [--checkpoint-dir DIR]
-                  [--join] [--speed S] [--admit-window-ms MS]
+                  [--join] [--speed S] [--rack R] [--admit-window-ms MS]
   gtip snapshot   --inspect FILE      # print a checkpoint's summary + verify round-trip
   gtip fuzz       [--budget N] [--seed S] [--nodes N] [--k K] [--horizon T]
                   [--threads N] [--epoch-ticks E] [--framework A|B] [--top K]
@@ -115,6 +119,7 @@ fn run(args: &Args) -> CliResult {
         Some("dynamic") => cmd_dynamic(args),
         Some("serve") => cmd_serve(args),
         Some("churn-sweep") => cmd_churn_sweep(args),
+        Some("hierarchy-bench") => cmd_hierarchy_bench(args),
         Some("snapshot") => cmd_snapshot(args),
         Some("bench-gate") => cmd_bench_gate(args),
         Some("fuzz") => cmd_fuzz(args),
@@ -329,6 +334,21 @@ fn cmd_dynamic(args: &Args) -> CliResult {
         return Err("--horizon must be >= 1".into());
     }
     let checkpoint_dir = args.opt_str("checkpoint-dir").map(std::path::PathBuf::from);
+    // Two-level hierarchy (DESIGN.md §12): `--racks "0,0,1,1"` names the
+    // rack of each machine. Validated against the fleet the run starts
+    // with — on `--restore` that is the snapshot's K, not `--k`.
+    let racks = match args.opt_str("racks") {
+        Some(spec) => {
+            let k = match args.opt_str("restore") {
+                Some(path) => {
+                    crate::sim::Snapshot::read_from(std::path::Path::new(path))?.machine_count()
+                }
+                None => machines.count(),
+            };
+            Some(crate::game::hierarchy::RackLayout::parse(spec, k)?)
+        }
+        None => None,
+    };
 
     let options = DynamicOptions {
         sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
@@ -340,6 +360,7 @@ fn cmd_dynamic(args: &Args) -> CliResult {
         migration_charge,
         max_refinements: 0,
         checkpoint_dir,
+        racks,
     };
 
     // Resume from an epoch-boundary checkpoint instead of generating a
@@ -439,6 +460,13 @@ fn cmd_dynamic(args: &Args) -> CliResult {
     println!(
         "loop: epoch={epoch_ticks} ticks, estimator {estimator_kind}, backend {backend}, framework {framework}, mu={mu}, c_mig={migration_charge}"
     );
+    if let Some(l) = &options.racks {
+        println!(
+            "hierarchy: two-level game, {} racks over K={} machines",
+            l.rack_count(),
+            l.machine_count()
+        );
+    }
 
     let initial = grow_partition(&graph, &machines, &mut rng);
     let estimator = WeightEstimator::of_kind(estimator_kind);
@@ -532,6 +560,14 @@ fn cmd_dynamic(args: &Args) -> CliResult {
                 o.bytes_per_transfer(report.transfers as u64),
                 o.bytes_per_regular_update(),
             );
+            if o.rack_update.messages > 0 {
+                println!(
+                    "cross-rack sync: {} RackUpdate msgs, {} bytes, {:.1} bytes/RackUpdate (O(R), K- and N-independent)",
+                    o.rack_update.messages,
+                    o.rack_update.bytes,
+                    o.bytes_per_rack_update(),
+                );
+            }
         }
         if report.recoveries() > 0 {
             println!(
@@ -605,6 +641,10 @@ fn dynamic_report_json(
         ("recoveries".into(), JsonVal::Int(report.recoveries() as u64)),
         ("admissions".into(), JsonVal::Int(report.admissions() as u64)),
         ("machines".into(), JsonVal::Int(machines.count() as u64)),
+        (
+            "racks".into(),
+            JsonVal::Int(report.epochs.iter().map(|e| e.racks).max().unwrap_or(0) as u64),
+        ),
     ];
     if let Some(o) = report.total_overhead() {
         let counter = |c: &crate::coordinator::protocol::Counter| {
@@ -619,6 +659,7 @@ fn dynamic_report_json(
                 ("take_my_turn".into(), counter(&o.take_my_turn)),
                 ("receive_node".into(), counter(&o.receive_node)),
                 ("regular_update".into(), counter(&o.regular_update)),
+                ("rack_update".into(), counter(&o.rack_update)),
                 ("shutdown".into(), counter(&o.shutdown)),
                 ("total_messages".into(), JsonVal::Int(o.total_messages())),
                 ("total_bytes".into(), JsonVal::Int(o.total_bytes())),
@@ -629,6 +670,10 @@ fn dynamic_report_json(
                 (
                     "regular_update_bytes_per_message".into(),
                     JsonVal::Num(o.bytes_per_regular_update()),
+                ),
+                (
+                    "rack_update_bytes_per_message".into(),
+                    JsonVal::Num(o.bytes_per_rack_update()),
                 ),
             ]),
         ));
@@ -683,6 +728,10 @@ fn cmd_serve(args: &Args) -> CliResult {
         if !(speed > 0.0 && speed.is_finite()) {
             return Err("--speed must be finite and > 0".into());
         }
+        // Rack the joiner asks to be placed in (hierarchical clusters,
+        // DESIGN.md §12). Omitted = leader's choice (least-loaded rack);
+        // ignored by flat clusters.
+        let rack = args.opt::<usize>("rack")?;
         let admit_window =
             Duration::from_millis(args.opt_or::<u64>("admit-window-ms", 120_000)?.max(1));
         println!(
@@ -691,10 +740,13 @@ fn cmd_serve(args: &Args) -> CliResult {
             peers.get(machine_id).map(String::as_str).unwrap_or("?"),
             peers[0],
         );
-        net::serve_join(machine_id, &peers, speed, connect_timeout, admit_window)?
+        net::serve_join(machine_id, &peers, speed, rack, connect_timeout, admit_window)?
     } else {
-        if args.opt_str("speed").is_some() || args.opt_str("admit-window-ms").is_some() {
-            return Err("--speed / --admit-window-ms only apply with --join".into());
+        if args.opt_str("speed").is_some()
+            || args.opt_str("admit-window-ms").is_some()
+            || args.opt_str("rack").is_some()
+        {
+            return Err("--speed / --rack / --admit-window-ms only apply with --join".into());
         }
         println!(
             "gtip serve: machine {machine_id}/{} listening on {} (leader @ {})",
@@ -876,6 +928,120 @@ fn cmd_churn_sweep(args: &Args) -> CliResult {
     );
     let path = write_json_group(&out, "churn_tradeoff", &JsonVal::Obj(group))?;
     println!("(merged churn_tradeoff into {})", path.display());
+    Ok(())
+}
+
+/// Measure the two-level hierarchy's coordination overhead (DESIGN.md
+/// §12): run the in-process hierarchical refinement over several graph
+/// sizes on a fixed fleet/rack layout and merge a `hierarchy` group
+/// into the bench report. The table demonstrates the O(K_rack +
+/// K_machine) claim: a cross-rack `RackUpdate` costs exactly `33 + 8R`
+/// framed bytes — scaling with the rack count R, not the machine count
+/// K, and independent of N — while the inner games' `RegularUpdate`s
+/// stay at the flat `33 + 8K`.
+fn cmd_hierarchy_bench(args: &Args) -> CliResult {
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let k = args.opt_or::<usize>("k", 9)?;
+    let mu = args.opt_or::<f64>("mu", 8.0)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let out = args.str_or("out", "results/BENCH_sim.json").to_string();
+    let sizes: Vec<usize> =
+        args.opt_list::<usize>("sizes")?.unwrap_or_else(|| vec![120, 240, 360]);
+    if sizes.is_empty() || sizes.iter().any(|&n| n == 0) {
+        return Err("--sizes needs at least one size, all >= 1".into());
+    }
+    if k == 0 {
+        return Err("--k must be >= 1".into());
+    }
+    // Default: K=9 over R=3 equal racks. A 2-rack outer ring never
+    // broadcasts a RackUpdate (a transfer notifies only its
+    // counterpart, via ReceiveNode), so the measurable default keeps
+    // R >= 3.
+    let layout = match args.opt_str("racks") {
+        Some(spec) => RackLayout::parse(spec, k)?,
+        None => {
+            let per = k.div_ceil(3);
+            RackLayout::new((0..k).map(|m| m / per).collect())?
+        }
+    };
+    let racks = layout.rack_count();
+    println!(
+        "hierarchy bench: K={k} machines over R={racks} racks, sizes {sizes:?}, \
+         framework {framework}, mu={mu}"
+    );
+
+    let mut group: Vec<(String, JsonVal)> = vec![
+        ("smoke".into(), JsonVal::Bool(std::env::var("GTIP_BENCH_SMOKE").is_ok())),
+        ("machines".into(), JsonVal::Int(k as u64)),
+        ("racks".into(), JsonVal::Int(racks as u64)),
+    ];
+    println!("       N | transfers | rack_update msgs | bytes/RackUpdate | bytes/RegularUpdate");
+    let mut per_message: Vec<f64> = Vec::new();
+    for &n in &sizes {
+        let mut rng = Pcg32::new(seed);
+        let graph = generate(GraphFamily::PreferentialAttachment, n, &mut rng);
+        let machines = MachineConfig::homogeneous(k);
+        // A uniform random start (not the balanced grower) so the
+        // outer game has genuine cross-rack imbalance to descend —
+        // otherwise zero RackUpdates flow and there is nothing to
+        // measure.
+        let assignment: Vec<usize> = (0..n).map(|_| rng.index(k)).collect();
+        let initial =
+            crate::partition::Partition::from_assignment(&graph, k, assignment);
+        let report = run_distributed_hierarchical(
+            Arc::new(graph),
+            &machines,
+            initial,
+            &layout,
+            &DistributedOptions { mu, framework, ..Default::default() },
+        );
+        let o = &report.overhead;
+        println!(
+            "  {n:>6} | {:>9} | {:>16} | {:>16.1} | {:>19.1}",
+            report.transfers,
+            o.rack_update.messages,
+            o.bytes_per_rack_update(),
+            o.bytes_per_regular_update(),
+        );
+        if o.rack_update.messages > 0 {
+            per_message.push(o.bytes_per_rack_update());
+        }
+        group.push((
+            format!("n_{n}"),
+            JsonVal::Obj(vec![
+                ("transfers".into(), JsonVal::Int(report.transfers as u64)),
+                ("converged".into(), JsonVal::Bool(report.converged)),
+                ("rack_update_messages".into(), JsonVal::Int(o.rack_update.messages)),
+                ("rack_update_bytes".into(), JsonVal::Int(o.rack_update.bytes)),
+                (
+                    "rack_update_bytes_per_message".into(),
+                    JsonVal::Num(o.bytes_per_rack_update()),
+                ),
+                (
+                    "regular_update_bytes_per_message".into(),
+                    JsonVal::Num(o.bytes_per_regular_update()),
+                ),
+                ("total_bytes".into(), JsonVal::Int(o.total_bytes())),
+            ]),
+        ));
+    }
+    // The headline check: every observed cross-rack aggregate frame is
+    // exactly 33 + 8R bytes — flat across N (and across K at fixed R).
+    let expected = (33 + 8 * racks) as f64;
+    let flat = !per_message.is_empty() && per_message.iter().all(|&b| b == expected);
+    println!(
+        "cross-rack aggregate bytes/message: expected {expected} (33 + 8R), flat across N: {flat}"
+    );
+    group.push(("rack_update_bytes_expected".into(), JsonVal::Num(expected)));
+    group.push(("rack_update_bytes_flat_across_n".into(), JsonVal::Bool(flat)));
+    if !flat {
+        return Err(format!(
+            "hierarchy bench: cross-rack aggregate bytes not flat at 33+8R={expected}: {per_message:?}"
+        )
+        .into());
+    }
+    let path = write_json_group(&out, "hierarchy", &JsonVal::Obj(group))?;
+    println!("(merged hierarchy into {})", path.display());
     Ok(())
 }
 
@@ -1251,9 +1417,50 @@ mod tests {
         .unwrap();
     }
 
+    /// `--racks` drives the closed loop through the two-level game on
+    /// both backends (sequential plays `refine_hierarchical`, the
+    /// distributed backend runs the phased RackBus protocol).
+    #[test]
+    fn dynamic_small_closed_loop_hierarchical() {
+        for backend in ["sequential", "distributed"] {
+            run(&parse(&[
+                "dynamic",
+                "--scenario",
+                "hotspot",
+                "--nodes",
+                "90",
+                "--threads",
+                "40",
+                "--horizon",
+                "600",
+                "--epoch-ticks",
+                "150",
+                "--seed",
+                "6",
+                "--k",
+                "4",
+                "--racks",
+                "0,0,1,1",
+                "--backend",
+                backend,
+            ]))
+            .unwrap();
+        }
+    }
+
     #[test]
     fn dynamic_rejects_bad_scenario() {
         assert!(run(&parse(&["dynamic", "--scenario", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn dynamic_rejects_bad_rack_maps() {
+        // Wrong machine count.
+        assert!(run(&parse(&["dynamic", "--k", "3", "--racks", "0,1"])).is_err());
+        // Sparse rack numbering.
+        assert!(run(&parse(&["dynamic", "--k", "3", "--racks", "0,0,2"])).is_err());
+        // Unparseable entry.
+        assert!(run(&parse(&["dynamic", "--k", "3", "--racks", "0,x,1"])).is_err());
     }
 
     #[test]
@@ -1632,6 +1839,60 @@ mod tests {
             assert!(s.get("transfers_strictly_decreasing").and_then(JsonVal::as_bool).is_some());
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The hierarchy bench runs the two-level game over several graph
+    /// sizes and merges a `hierarchy` group whose per-N rows carry the
+    /// cross-rack overhead counters; the headline flatness verdict
+    /// (every RackUpdate exactly 33 + 8R framed bytes, N-independent)
+    /// must hold or the command itself fails.
+    #[test]
+    fn hierarchy_bench_writes_group_with_flat_rack_bytes() {
+        let dir = std::env::temp_dir().join(format!("gtip_hier_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_hier.json");
+        let out_s = out.to_string_lossy().to_string();
+        run(&parse(&[
+            "hierarchy-bench",
+            "--sizes",
+            "40,80",
+            "--k",
+            "6",
+            "--racks",
+            "0,0,1,1,2,2",
+            "--seed",
+            "7",
+            "--out",
+            &out_s,
+        ]))
+        .unwrap();
+        let doc = parse_json(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        let group = doc.get("hierarchy").expect("hierarchy group");
+        assert_eq!(group.get("racks").and_then(JsonVal::as_u64), Some(3));
+        assert_eq!(
+            group.get("rack_update_bytes_flat_across_n").and_then(JsonVal::as_bool),
+            Some(true)
+        );
+        for n in ["n_40", "n_80"] {
+            let row = group.get(n).unwrap_or_else(|| panic!("missing {n}"));
+            assert!(row.get("rack_update_messages").and_then(JsonVal::as_u64).is_some());
+            // 33 + 8*3 = 57 framed bytes per cross-rack aggregate.
+            assert_eq!(
+                row.get("rack_update_bytes_per_message").and_then(JsonVal::as_f64),
+                Some(57.0),
+                "{n}: RackUpdate must cost 33 + 8R bytes"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hierarchy_bench_rejects_degenerate_options() {
+        assert!(run(&parse(&["hierarchy-bench", "--sizes", ""])).is_err());
+        assert!(run(&parse(&["hierarchy-bench", "--k", "0"])).is_err());
+        // Rack map must cover the fleet.
+        assert!(run(&parse(&["hierarchy-bench", "--k", "4", "--racks", "0,1"])).is_err());
     }
 
     #[test]

@@ -309,6 +309,39 @@ impl<'g> CostModel<'g> {
         ((cur_cost - best).max(0.0), best_k)
     }
 
+    /// Dissatisfaction restricted to a candidate-machine `scope` (the
+    /// inner game of the two-level hierarchy, DESIGN.md §12): the argmin
+    /// ranges over `scope ∪ {r_i}` instead of all K machines, so a
+    /// rack-scoped player can never propose a cross-rack move. Same
+    /// strict-improvement tolerance as [`best_response_with_adj`] and
+    /// identical cost arithmetic ([`node_cost_with_adj`]), so a scope
+    /// covering all machines reproduces [`dissatisfaction_with_adj`]
+    /// bit-for-bit.
+    pub fn dissatisfaction_scoped_with_adj(
+        &self,
+        part: &Partition,
+        i: NodeId,
+        s_i: f64,
+        adj: &[f64],
+        scope: &[MachineId],
+    ) -> (f64, MachineId) {
+        let cur = part.machine_of(i);
+        let cur_cost = self.node_cost_with_adj(part, i, cur, s_i, adj);
+        let mut best_k = cur;
+        let mut best = cur_cost;
+        for &q in scope {
+            if q == cur {
+                continue;
+            }
+            let c = self.node_cost_with_adj(part, i, q, s_i, adj);
+            if c < best - 1e-12 * (1.0 + best.abs()) {
+                best = c;
+                best_k = q;
+            }
+        }
+        ((cur_cost - best).max(0.0), best_k)
+    }
+
     /// The framework's global potential, from scratch. For A this is
     /// `C0`, for B it is `C̃0` — refinement descends exactly this value.
     pub fn potential(&self, part: &Partition) -> f64 {

@@ -1,0 +1,609 @@
+//! The two-level (rack / super-machine) partitioning game — DESIGN.md
+//! §12.
+//!
+//! Flat refinement exchanges O(K) aggregates per move and dials O(K²)
+//! sockets; past a few dozen machines the coordinator itself becomes
+//! the bottleneck. The hierarchy splits the game in two:
+//!
+//! * **Outer game** — each rack is a *super-machine* whose speed is the
+//!   sum of its members' normalized speeds and whose load is the sum of
+//!   member loads. The outer game is literally the flat machinery run
+//!   on the rack quotient: same graph, a [`RackLayout::quotient_config`]
+//!   machine pool of R racks, and the node→rack assignment. Every
+//!   theorem about the flat game (potential descent, Nash termination,
+//!   the augmented-charge bound) therefore holds verbatim at rack
+//!   granularity, and only rack-boundary LPs move between racks.
+//! * **Inner game** — the flat engine scoped to one rack's member
+//!   machines ([`crate::game::refine::RefineEngine::run_scoped`]).
+//!   Scoped turns only move nodes between machines of the same rack, so
+//!   every other machine's load and every node's adjacency column
+//!   outside the rack are invariant — rack subgames are exactly
+//!   independent, and chaining them sequentially on one shared engine
+//!   is bit-identical to playing them concurrently per rack.
+//!
+//! The outer result is mapped back to machines by
+//! [`RackLayout::map_back`] (nodes that stayed in their rack keep their
+//! machine; migrants go to the target rack's least-loaded machine) and
+//! accepted only if the *flat* potential did not increase
+//! ([`guarded_map_back`]) — so the composed two-level pass descends the
+//! same global potential the flat game does, and on singleton racks it
+//! reproduces the flat game bit-for-bit (the quotient *is* the flat
+//! instance and the map-back is the identity).
+
+use crate::game::cost::{CostModel, Framework};
+use crate::game::refine::{RefineEngine, RefineOptions, RefineReport};
+use crate::graph::Graph;
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+/// Static rack membership: a dense map `machine → rack` over `0..R`.
+///
+/// Every rack is nonempty; members are kept ascending and the *rack
+/// leader* is the member with the smallest machine id (the leader plays
+/// the outer game on the rack's behalf in the distributed protocol).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RackLayout {
+    rack_of: Vec<usize>,
+    members: Vec<Vec<MachineId>>,
+}
+
+impl RackLayout {
+    /// Build from a `machine → rack` map. Rack ids must be dense
+    /// (`0..R`, every id used); anything else is a configuration error
+    /// the caller should surface, not a panic.
+    pub fn new(rack_of: Vec<usize>) -> Result<Self, String> {
+        if rack_of.is_empty() {
+            return Err("rack layout needs at least one machine".into());
+        }
+        let racks = rack_of.iter().copied().max().expect("nonempty") + 1;
+        let mut members: Vec<Vec<MachineId>> = vec![Vec::new(); racks];
+        for (m, &r) in rack_of.iter().enumerate() {
+            members[r].push(m);
+        }
+        if let Some(empty) = members.iter().position(|ms| ms.is_empty()) {
+            return Err(format!("rack ids must be dense: rack {empty} has no machines"));
+        }
+        Ok(RackLayout { rack_of, members })
+    }
+
+    /// Parse a `--racks "0,0,1,1"` CLI string for a K-machine fleet.
+    pub fn parse(spec: &str, k: usize) -> Result<Self, String> {
+        let rack_of: Vec<usize> = spec
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().map_err(|e| format!("bad rack id {t:?}: {e}")))
+            .collect::<Result<_, _>>()?;
+        if rack_of.len() != k {
+            return Err(format!("rack map names {} machines, fleet has {k}", rack_of.len()));
+        }
+        RackLayout::new(rack_of)
+    }
+
+    /// One machine per rack — the layout under which the hierarchy is
+    /// bit-identical to the flat game.
+    pub fn singletons(k: usize) -> Self {
+        RackLayout::new((0..k).collect()).expect("identity map is dense")
+    }
+
+    /// Number of machines K.
+    pub fn machine_count(&self) -> usize {
+        self.rack_of.len()
+    }
+
+    /// Number of racks R.
+    pub fn rack_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Rack of machine `m`.
+    #[inline]
+    pub fn rack_of(&self, m: MachineId) -> usize {
+        self.rack_of[m]
+    }
+
+    /// The whole `machine → rack` map.
+    pub fn rack_of_slice(&self) -> &[usize] {
+        &self.rack_of
+    }
+
+    /// Machines of rack `r`, ascending.
+    pub fn members(&self, r: usize) -> &[MachineId] {
+        &self.members[r]
+    }
+
+    /// Rack `r`'s leader: its smallest member machine id.
+    pub fn leader(&self, r: usize) -> MachineId {
+        self.members[r][0]
+    }
+
+    /// True if machine `m` leads its rack.
+    pub fn is_leader(&self, m: MachineId) -> bool {
+        self.leader(self.rack_of[m]) == m
+    }
+
+    /// All rack leaders, in rack order.
+    pub fn leaders(&self) -> Vec<MachineId> {
+        (0..self.rack_count()).map(|r| self.leader(r)).collect()
+    }
+
+    /// True when every rack holds exactly one machine.
+    pub fn is_singleton(&self) -> bool {
+        self.members.iter().all(|ms| ms.len() == 1)
+    }
+
+    /// The layout after the given machines left the fleet: dead
+    /// machines are dropped, survivors renumber compactly (the same
+    /// renumbering `TcpEndpoint::compact` / `rehome_assignment` use),
+    /// racks left empty are dropped, and rack ids renumber preserving
+    /// order — fully deterministic, so every survivor derives the same
+    /// layout from the same survivor list.
+    pub fn without_machines(&self, dead: &[MachineId]) -> Result<Self, String> {
+        let survivors: Vec<usize> = (0..self.machine_count())
+            .filter(|m| !dead.contains(m))
+            .map(|m| self.rack_of[m])
+            .collect();
+        if survivors.is_empty() {
+            return Err("cannot drop every machine from the rack layout".into());
+        }
+        // Renumber rack ids compactly, preserving first-appearance order
+        // of the *original* ids (ascending, since new() made them dense).
+        let mut alive: Vec<usize> = survivors.clone();
+        alive.sort_unstable();
+        alive.dedup();
+        let rack_of =
+            survivors.iter().map(|r| alive.binary_search(r).expect("alive rack")).collect();
+        RackLayout::new(rack_of)
+    }
+
+    /// Rack a joining machine should be assigned when the operator did
+    /// not name one: the rack with the fewest members, ties to the
+    /// lowest rack id — deterministic, so leader and workers agree.
+    pub fn join_rack(&self) -> usize {
+        (0..self.rack_count())
+            .min_by_key(|&r| (self.members[r].len(), r))
+            .expect("at least one rack")
+    }
+
+    /// The layout after a machine is inserted at logical position `pos`
+    /// (machines at and above `pos` shift up by one) into rack `rack`.
+    /// `rack == rack_count()` opens a new rack.
+    pub fn with_inserted(&self, pos: usize, rack: usize) -> Result<Self, String> {
+        if pos > self.machine_count() {
+            return Err(format!("insert position {pos} past fleet size {}", self.machine_count()));
+        }
+        if rack > self.rack_count() {
+            return Err(format!("rack {rack} would leave a gap (R = {})", self.rack_count()));
+        }
+        let mut rack_of = self.rack_of.clone();
+        rack_of.insert(pos, rack);
+        RackLayout::new(rack_of)
+    }
+
+    /// The outer game's machine pool: one super-machine per rack whose
+    /// normalized speed is the sum of its members'. Sums of normalized
+    /// speeds are already normalized, so the quotient adopts them
+    /// verbatim ([`MachineConfig::from_normalized`]) — for singleton
+    /// racks the "sum" is a single term and the quotient speeds are
+    /// bit-identical to the flat speeds.
+    pub fn quotient_config(&self, machines: &MachineConfig) -> MachineConfig {
+        assert_eq!(machines.count(), self.machine_count());
+        let speeds = self
+            .members
+            .iter()
+            .map(|ms| ms.iter().map(|&m| machines.speed(m)).sum())
+            .collect();
+        MachineConfig::from_normalized(speeds)
+    }
+
+    /// Project a node→machine assignment to the node→rack quotient the
+    /// outer game plays on.
+    pub fn quotient_assignment(&self, assignment: &[MachineId]) -> Vec<MachineId> {
+        assignment.iter().map(|&m| self.rack_of[m]).collect()
+    }
+
+    /// Turn an outer-game node→rack result back into a node→machine
+    /// assignment. Nodes whose rack did not change keep their machine;
+    /// cross-rack migrants are placed (ascending node order) on the
+    /// target rack's machine with the lowest normalized load
+    /// `L_q / w_q` at that moment, ties to the lowest machine id —
+    /// the `rehome_assignment` placement rule, fully deterministic.
+    /// On singleton racks the map-back is the identity composed with
+    /// "the unique member", i.e. exactly the outer assignment.
+    pub fn map_back(
+        &self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        before: &Partition,
+        outer: &[MachineId],
+    ) -> Vec<MachineId> {
+        let k = self.machine_count();
+        assert_eq!(machines.count(), k);
+        assert_eq!(before.node_count(), outer.len());
+        const UNPLACED: usize = usize::MAX;
+        let mut assignment: Vec<MachineId> = Vec::with_capacity(outer.len());
+        let mut loads = vec![0.0f64; k];
+        for (i, &r) in outer.iter().enumerate() {
+            assert!(r < self.rack_count(), "node {i} on invalid rack {r}");
+            let m = before.machine_of(i);
+            if self.rack_of[m] == r {
+                assignment.push(m);
+                loads[m] += graph.node_weight(i);
+            } else {
+                assignment.push(UNPLACED);
+            }
+        }
+        for (i, &r) in outer.iter().enumerate() {
+            if assignment[i] != UNPLACED {
+                continue;
+            }
+            let mut best = self.members[r][0];
+            let mut best_load = loads[best] / machines.speed(best);
+            for &m in &self.members[r][1..] {
+                let v = loads[m] / machines.speed(m);
+                if v < best_load {
+                    best_load = v;
+                    best = m;
+                }
+            }
+            assignment[i] = best;
+            loads[best] += graph.node_weight(i);
+        }
+        assignment
+    }
+}
+
+/// Result of the guarded outer→machine map-back.
+#[derive(Debug, Clone)]
+pub struct OuterMapBack {
+    /// The accepted node→machine assignment: the map-back if it kept
+    /// the flat potential from rising, otherwise `before` unchanged.
+    pub assignment: Vec<MachineId>,
+    /// False when the outer moves were discarded.
+    pub accepted: bool,
+    /// Fresh flat potential of `before`.
+    pub flat_before: f64,
+    /// Fresh flat potential of the mapped-back assignment.
+    pub flat_mapped: f64,
+}
+
+/// Map an outer-game result back to machines and accept it only if the
+/// *flat* potential did not increase (same tolerance the dynamic-loop
+/// descent check uses). The sequential runner, the in-process
+/// distributed orchestrator, and the TCP leader all route through this
+/// one function, so every deployment applies the identical guard.
+///
+/// The guard exists because the map-back places migrants by load, not
+/// by cut: a placement can in principle trade the outer game's gain
+/// away. Rejection is safe — the inner game still descends from
+/// `before` — and on singleton racks the map-back *is* the outer
+/// engine's own final partition, whose potential descended move by
+/// move (the augmented game descends the raw potential too, DESIGN.md
+/// §9), so the guard always accepts and bit-equality with the flat
+/// game is preserved.
+pub fn guarded_map_back(
+    graph: &Graph,
+    machines: &MachineConfig,
+    layout: &RackLayout,
+    before: &[MachineId],
+    outer: &[MachineId],
+    mu: f64,
+    framework: Framework,
+) -> OuterMapBack {
+    let model = CostModel::new(graph, machines.clone(), mu, framework);
+    let before_part = Partition::from_assignment(graph, machines.count(), before.to_vec());
+    let mapped = layout.map_back(graph, machines, &before_part, outer);
+    let mapped_part = Partition::from_assignment(graph, machines.count(), mapped.clone());
+    let flat_before = model.potential(&before_part);
+    let flat_mapped = model.potential(&mapped_part);
+    let accepted = flat_mapped <= flat_before + 1e-9 * (1.0 + flat_before.abs());
+    OuterMapBack {
+        assignment: if accepted { mapped } else { before.to_vec() },
+        accepted,
+        flat_before,
+        flat_mapped,
+    }
+}
+
+/// Outcome of one two-level refinement pass.
+#[derive(Debug, Clone)]
+pub struct HierarchicalReport {
+    /// The outer (rack-quotient) game's report. Its `final_potential`
+    /// is the *quotient* potential the outer engine descended.
+    pub outer: RefineReport,
+    /// One inner report per rack, in rack order. `final_potential`
+    /// values are the global flat potential as each subgame finished.
+    pub inner: Vec<RefineReport>,
+    /// Outer transfers actually applied (0 if discarded) plus all inner
+    /// transfers.
+    pub transfers: usize,
+    /// True when the outer game and every inner subgame reached Nash.
+    pub converged: bool,
+    /// Fresh flat potential before the pass.
+    pub potential_before: f64,
+    /// Fresh flat potential after the pass.
+    pub potential_after: f64,
+    /// True when the outer result failed the [`guarded_map_back`] check
+    /// and the inner game started from the original partition.
+    pub outer_discarded: bool,
+}
+
+/// One sequential two-level refinement pass: outer quotient game →
+/// guarded map-back → inner rack subgames chained on one shared engine
+/// (exactly equivalent to per-rack concurrent play — see the module
+/// docs). Returns the refined partition and the per-level reports.
+#[allow(clippy::too_many_arguments)]
+pub fn refine_hierarchical(
+    graph: &Graph,
+    machines: &MachineConfig,
+    part: Partition,
+    mu: f64,
+    framework: Framework,
+    migration_charge: f64,
+    layout: &RackLayout,
+    options: &RefineOptions,
+) -> (Partition, HierarchicalReport) {
+    assert_eq!(machines.count(), layout.machine_count());
+    assert_eq!(part.machine_count(), layout.machine_count());
+
+    // Outer game: the flat engine on the rack quotient.
+    let qconfig = layout.quotient_config(machines);
+    let qassign = layout.quotient_assignment(part.assignment());
+    let qpart = Partition::from_assignment(graph, layout.rack_count(), qassign);
+    let mut outer_engine = RefineEngine::new(graph, &qconfig, qpart, mu, framework)
+        .with_migration_charge(migration_charge);
+    let outer = outer_engine.run(options);
+    let outer_part = outer_engine.into_partition();
+
+    // Guarded map-back to machines.
+    let mapped = guarded_map_back(
+        graph,
+        machines,
+        layout,
+        part.assignment(),
+        outer_part.assignment(),
+        mu,
+        framework,
+    );
+    let outer_transfers = if mapped.accepted { outer.transfers } else { 0 };
+    let start = Partition::from_assignment(graph, layout.machine_count(), mapped.assignment);
+
+    // Inner game: rack subgames chained on one shared engine.
+    let mut engine = RefineEngine::new(graph, machines, start, mu, framework)
+        .with_migration_charge(migration_charge);
+    let inner: Vec<RefineReport> =
+        (0..layout.rack_count()).map(|r| engine.run_scoped(options, layout.members(r))).collect();
+
+    let model = CostModel::new(graph, machines.clone(), mu, framework);
+    let potential_after = model.potential(engine.partition());
+    let report = HierarchicalReport {
+        transfers: outer_transfers + inner.iter().map(|r| r.transfers).sum::<usize>(),
+        converged: outer.converged && inner.iter().all(|r| r.converged),
+        potential_before: mapped.flat_before,
+        potential_after,
+        outer_discarded: !mapped.accepted,
+        outer,
+        inner,
+    };
+    (engine.into_partition(), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{table1_graph, WeightModel};
+    use crate::util::rng::Pcg32;
+
+    fn fixture(seed: u64) -> (Graph, MachineConfig, Vec<MachineId>) {
+        let mut rng = Pcg32::new(seed);
+        let g = table1_graph(80, 3, 6, WeightModel::default(), &mut rng);
+        let machines = MachineConfig::from_speeds(&[1.0, 2.0, 3.0, 3.0, 1.0]);
+        let assignment: Vec<MachineId> = (0..80).map(|i| i % 5).collect();
+        (g, machines, assignment)
+    }
+
+    #[test]
+    fn layout_validates_density_and_parse() {
+        assert!(RackLayout::new(vec![0, 0, 2]).is_err(), "rack 1 missing");
+        assert!(RackLayout::new(vec![]).is_err());
+        let l = RackLayout::parse("0, 0, 1, 1", 4).unwrap();
+        assert_eq!(l.rack_count(), 2);
+        assert_eq!(l.members(0), &[0, 1]);
+        assert_eq!(l.members(1), &[2, 3]);
+        assert_eq!(l.leaders(), vec![0, 2]);
+        assert!(l.is_leader(0) && !l.is_leader(1) && l.is_leader(2));
+        assert!(RackLayout::parse("0,0,1", 4).is_err(), "length mismatch");
+        assert!(RackLayout::parse("0,x,1,1", 4).is_err(), "non-numeric");
+        assert!(RackLayout::singletons(3).is_singleton());
+        assert!(!l.is_singleton());
+    }
+
+    #[test]
+    fn without_machines_renumbers_and_drops_empty_racks() {
+        let l = RackLayout::new(vec![0, 0, 1, 1, 2]).unwrap();
+        // Drop machine 4 (the whole of rack 2) and machine 1.
+        let survivors = l.without_machines(&[1, 4]).unwrap();
+        assert_eq!(survivors.rack_of_slice(), &[0, 1, 1]);
+        assert_eq!(survivors.rack_count(), 2);
+        // Dropping everything is an error, not a panic.
+        assert!(l.without_machines(&[0, 1, 2, 3, 4]).is_err());
+        // Determinism: same input, same layout.
+        assert_eq!(survivors, l.without_machines(&[1, 4]).unwrap());
+    }
+
+    #[test]
+    fn join_rack_prefers_smallest_rack_then_lowest_id() {
+        let l = RackLayout::new(vec![0, 0, 1]).unwrap();
+        assert_eq!(l.join_rack(), 1);
+        let tie = RackLayout::new(vec![0, 0, 1, 1]).unwrap();
+        assert_eq!(tie.join_rack(), 0);
+        let grown = tie.with_inserted(4, 1).unwrap();
+        assert_eq!(grown.rack_of_slice(), &[0, 0, 1, 1, 1]);
+        let new_rack = tie.with_inserted(0, 2).unwrap();
+        assert_eq!(new_rack.rack_count(), 3);
+        assert_eq!(new_rack.rack_of(0), 2);
+        assert!(tie.with_inserted(0, 3).is_err(), "gap rack id");
+    }
+
+    #[test]
+    fn singleton_quotient_config_is_bit_identical() {
+        let machines = MachineConfig::from_speeds(&[1.0, 2.0, 3.0, 3.0, 1.0]);
+        let q = RackLayout::singletons(5).quotient_config(&machines);
+        for m in 0..5 {
+            assert_eq!(q.speed(m).to_bits(), machines.speed(m).to_bits());
+        }
+    }
+
+    #[test]
+    fn singleton_racks_reproduce_the_flat_game_bit_for_bit() {
+        // Frameworks A and B, charged and uncharged: with one machine
+        // per rack the outer game IS the flat game and the inner
+        // subgames are no-ops, so assignments, transfer counts, and the
+        // outer engine's incremental potential must match exactly.
+        for &fw in &[Framework::A, Framework::B] {
+            for &charge in &[0.0, 25.0] {
+                let (g, machines, assignment) = fixture(11);
+                let layout = RackLayout::singletons(5);
+                let options = RefineOptions::default();
+
+                let flat_start = Partition::from_assignment(&g, 5, assignment.clone());
+                let mut flat = RefineEngine::new(&g, &machines, flat_start, 8.0, fw)
+                    .with_migration_charge(charge);
+                let flat_report = flat.run(&options);
+
+                let start = Partition::from_assignment(&g, 5, assignment);
+                let (part, report) = refine_hierarchical(
+                    &g,
+                    &machines,
+                    start,
+                    8.0,
+                    fw,
+                    charge,
+                    &layout,
+                    &options,
+                );
+                assert_eq!(part.assignment(), flat.partition().assignment(), "{fw:?}/{charge}");
+                assert_eq!(report.transfers, flat_report.transfers, "{fw:?}/{charge}");
+                assert_eq!(
+                    report.outer.final_potential.to_bits(),
+                    flat_report.final_potential.to_bits(),
+                    "{fw:?}/{charge}"
+                );
+                assert_eq!(report.converged, flat_report.converged);
+                assert!(!report.outer_discarded, "guard must accept a descending flat run");
+                assert_eq!(report.inner.iter().map(|r| r.transfers).sum::<usize>(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn per_level_descent_on_real_racks() {
+        // Property: with 2 racks of mixed size, every recorded step of
+        // the outer trace and each inner trace is non-increasing, and
+        // the composed pass descends the flat potential.
+        for seed in [3u64, 7, 19] {
+            for &fw in &[Framework::A, Framework::B] {
+                let (g, machines, assignment) = fixture(seed);
+                let layout = RackLayout::new(vec![0, 0, 0, 1, 1]).unwrap();
+                let options = RefineOptions { track_potential: true, ..Default::default() };
+                let start = Partition::from_assignment(&g, 5, assignment);
+                let (part, report) =
+                    refine_hierarchical(&g, &machines, start, 8.0, fw, 0.0, &layout, &options);
+                part.validate(&g).unwrap();
+                for w in report.outer.potential_trace.windows(2) {
+                    assert!(w[1] <= w[0] + 1e-9 * (1.0 + w[0].abs()), "outer ascent {w:?}");
+                }
+                for inner in &report.inner {
+                    for w in inner.potential_trace.windows(2) {
+                        assert!(w[1] <= w[0] + 1e-9 * (1.0 + w[0].abs()), "inner ascent {w:?}");
+                    }
+                }
+                assert!(
+                    report.potential_after
+                        <= report.potential_before + 1e-9 * (1.0 + report.potential_before.abs()),
+                    "seed {seed} {fw:?}: flat potential rose {} -> {}",
+                    report.potential_before,
+                    report.potential_after
+                );
+                assert!(report.converged, "both levels should reach Nash");
+            }
+        }
+    }
+
+    #[test]
+    fn map_back_keeps_stayers_and_places_migrants_in_rack() {
+        let (g, machines, assignment) = fixture(5);
+        let layout = RackLayout::new(vec![0, 0, 0, 1, 1]).unwrap();
+        let before = Partition::from_assignment(&g, 5, assignment.clone());
+        // Push every node of rack 0 to rack 1 and vice versa.
+        let outer: Vec<MachineId> =
+            assignment.iter().map(|&m| 1 - layout.rack_of(m)).collect();
+        let mapped = layout.map_back(&g, &machines, &before, &outer);
+        for (i, &m) in mapped.iter().enumerate() {
+            assert_eq!(layout.rack_of(m), outer[i], "node {i} landed outside its rack");
+        }
+        // Stayers keep machines: identity outer assignment is a no-op.
+        let stay: Vec<MachineId> = assignment.iter().map(|&m| layout.rack_of(m)).collect();
+        assert_eq!(layout.map_back(&g, &machines, &before, &stay), assignment);
+        // Deterministic.
+        assert_eq!(mapped, layout.map_back(&g, &machines, &before, &outer));
+    }
+
+    #[test]
+    fn guard_rejects_an_ascending_map_back() {
+        // Hand the guard an "outer result" that lumps everything onto
+        // rack 0 — the flat potential rises, so it must refuse and hand
+        // back the original assignment.
+        let (g, machines, assignment) = fixture(2);
+        let layout = RackLayout::new(vec![0, 0, 0, 1, 1]).unwrap();
+        let lumped = vec![0usize; 80];
+        let out = guarded_map_back(
+            &g,
+            &machines,
+            &layout,
+            &assignment,
+            &lumped,
+            8.0,
+            Framework::A,
+        );
+        assert!(!out.accepted);
+        assert!(out.flat_mapped > out.flat_before);
+        assert_eq!(out.assignment, assignment);
+    }
+
+    #[test]
+    fn scoped_subgames_chain_like_independent_racks() {
+        // The inner phase must not let rack 1's subgame disturb rack
+        // 0's result: running rack 0 alone on a fresh engine matches
+        // rack 0's slice of the chained run.
+        let (g, machines, assignment) = fixture(13);
+        let layout = RackLayout::new(vec![0, 0, 0, 1, 1]).unwrap();
+        let options = RefineOptions::default();
+
+        let mut chained = RefineEngine::new(
+            &g,
+            &machines,
+            Partition::from_assignment(&g, 5, assignment.clone()),
+            8.0,
+            Framework::A,
+        );
+        let r0 = chained.run_scoped(&options, layout.members(0));
+        let r1 = chained.run_scoped(&options, layout.members(1));
+        assert!(r0.converged && r1.converged);
+
+        let mut solo = RefineEngine::new(
+            &g,
+            &machines,
+            Partition::from_assignment(&g, 5, assignment),
+            8.0,
+            Framework::A,
+        );
+        let solo0 = solo.run_scoped(&options, layout.members(0));
+        assert_eq!(solo0.transfers, r0.transfers);
+        assert_eq!(solo0.final_potential.to_bits(), r0.final_potential.to_bits());
+        for (i, (&a, &b)) in
+            solo.partition().assignment().iter().zip(chained.partition().assignment()).enumerate()
+        {
+            if layout.rack_of(a) == 0 || layout.rack_of(b) == 0 {
+                assert_eq!(a, b, "rack-0 node {i} diverged");
+            }
+        }
+    }
+}

@@ -6,4 +6,5 @@
 pub mod annealing;
 pub mod cluster;
 pub mod cost;
+pub mod hierarchy;
 pub mod refine;

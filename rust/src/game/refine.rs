@@ -334,6 +334,109 @@ impl<'g> RefineEngine<'g> {
         }
     }
 
+    /// Machine `m`'s most dissatisfied node when candidate targets are
+    /// restricted to `scope` (the inner rack subgame, DESIGN.md §12):
+    /// `(node, 𝔍, best_k)` with the argmin over `scope ∪ {r_i}`, or
+    /// `None` if every owned node has scoped `𝔍 ≤ epsilon`. Both
+    /// frameworks use the generic scan — the framework-A candidate-set
+    /// fast path assumes the global `argmin L_q/w_q` is a candidate,
+    /// which a scope does not contain in general.
+    pub fn most_dissatisfied_scoped(
+        &self,
+        m: MachineId,
+        epsilon: f64,
+        scope: &[MachineId],
+    ) -> Option<(NodeId, f64, MachineId)> {
+        let k = self.model.k();
+        let mut best: Option<(NodeId, f64, MachineId)> = None;
+        for &i in &self.members[m] {
+            let row = &self.adj[i * k..(i + 1) * k];
+            let (j, target) =
+                self.model.dissatisfaction_scoped_with_adj(&self.part, i, self.s[i], row, scope);
+            if j > epsilon {
+                match best {
+                    Some((_, bj, _)) if bj >= j => {}
+                    _ => best = Some((i, j, target)),
+                }
+            }
+        }
+        best
+    }
+
+    /// One scope-restricted machine turn. The ΔΦ identities of
+    /// [`take_turn`] hold verbatim: a scoped best response is still a
+    /// best response among the candidates it considered, so the raw
+    /// potential drops by `2·(𝔍 + c_mig)` (A) / `𝔍 + c_mig` (B) on
+    /// every accepted transfer — the inner game descends the *global*
+    /// flat potential, not merely a per-rack objective.
+    pub fn take_turn_scoped(
+        &mut self,
+        m: MachineId,
+        epsilon: f64,
+        scope: &[MachineId],
+    ) -> Option<Transfer> {
+        self.turns_done += 1;
+        let (node, dissat, target) = self.most_dissatisfied_scoped(m, epsilon, scope)?;
+        let from = self.part.machine_of(node);
+        let raw_gain = dissat + self.model.migration_charge;
+        let delta = match self.model.framework {
+            Framework::A => -2.0 * raw_gain,
+            Framework::B => -raw_gain,
+        };
+        self.apply_transfer_with_delta(node, target, delta);
+        Some(Transfer { node, from, to: target, dissatisfaction: dissat })
+    }
+
+    /// Run a round-robin subgame over `scope` only (ascending machine
+    /// ids; turn order starts at `scope[0]`), until all `scope.len()`
+    /// members forfeit consecutively or the transfer cap is hit. The
+    /// engine's global ring position (`next_turn`) is untouched, so
+    /// scoped subgames can be chained rack-by-rack on one shared engine
+    /// — and because scoped turns only move nodes between machines of
+    /// `scope`, the loads and adjacency columns of every other machine
+    /// are invariant, which makes rack subgames exactly independent
+    /// (DESIGN.md §12). A singleton scope forfeits immediately (the
+    /// argmin over one machine is the current machine).
+    ///
+    /// `turns` and `final_potential` mirror [`run`]: the cumulative
+    /// engine turn counter and the global flat potential.
+    pub fn run_scoped(&mut self, options: &RefineOptions, scope: &[MachineId]) -> RefineReport {
+        assert!(!scope.is_empty(), "scope must name at least one machine");
+        debug_assert!(
+            scope.windows(2).all(|w| w[0] < w[1]) && *scope.last().unwrap() < self.model.k(),
+            "scope must be ascending machine ids in range"
+        );
+        let k = scope.len();
+        let mut trace = Vec::new();
+        if options.track_potential {
+            trace.push(self.potential);
+        }
+        let mut pos = 0usize;
+        let mut consecutive_forfeits = 0;
+        let mut transfers = 0;
+        while consecutive_forfeits < k && transfers < options.max_transfers {
+            let m = scope[pos];
+            pos = (pos + 1) % k;
+            match self.take_turn_scoped(m, options.epsilon, scope) {
+                Some(_) => {
+                    consecutive_forfeits = 0;
+                    transfers += 1;
+                    if options.track_potential {
+                        trace.push(self.potential);
+                    }
+                }
+                None => consecutive_forfeits += 1,
+            }
+        }
+        RefineReport {
+            transfers,
+            turns: self.turns_done,
+            converged: consecutive_forfeits >= k,
+            final_potential: self.potential,
+            potential_trace: trace,
+        }
+    }
+
     /// Re-sync all incremental state after the graph's node/edge weights
     /// changed (dynamic re-weighting between refinement epochs, §6.1).
     /// O(N·K + |E|).

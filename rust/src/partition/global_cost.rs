@@ -67,6 +67,105 @@ pub fn augmented(raw_potential: f64, migration_charge: f64, transfers: usize) ->
     raw_potential + migration_charge * transfers as f64
 }
 
+/// A global potential decomposed along a rack partition of the machine
+/// pool (the two-level hierarchy of DESIGN.md §12): one subtotal per
+/// rack (that rack's member machine terms plus the intra-rack share of
+/// the cut term) and a single cross-rack cut weight. The identity
+/// `total = Σ_r per_rack[r] + cut_coeff · cross_cut` recovers the flat
+/// potential — bit-for-bit when every rack is a singleton (the
+/// accumulation order is then literally the flat loop), and to 1e-9
+/// relative accuracy for any grouping (addition is re-associated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RackPotential {
+    /// Per-rack subtotal: member machine terms + the intra-rack cut
+    /// share (already scaled by `μ` / `μ/2`).
+    pub per_rack: Vec<f64>,
+    /// Total weight of edges whose endpoints live on machines of
+    /// *different* racks — the only coupling between rack subgames.
+    pub cross_cut: f64,
+    /// `Σ_r per_rack[r] + cut_coeff · cross_cut`.
+    pub total: f64,
+}
+
+/// Shared scan behind [`c0_by_rack`] and [`c0_tilde_by_rack`]:
+/// `machine_term(m)` is the per-machine summand, `cut_coeff` the factor
+/// on cut weight (`μ` for A, `μ/2` for B). `rack_of[m]` maps machine →
+/// rack id (dense `0..R`).
+fn potential_by_rack(
+    graph: &Graph,
+    part: &Partition,
+    rack_of: &[usize],
+    cut_coeff: f64,
+    machine_term: impl Fn(usize) -> f64,
+) -> RackPotential {
+    let k = part.machine_count();
+    assert_eq!(rack_of.len(), k, "rack_of must map every machine");
+    let racks = rack_of.iter().copied().max().map_or(0, |r| r + 1);
+    assert!(rack_of.iter().all(|&r| r < racks));
+    let mut member_terms = vec![0.0f64; racks];
+    for m in 0..k {
+        member_terms[rack_of[m]] += machine_term(m);
+    }
+    let mut intra = vec![0.0f64; racks];
+    let mut cross_cut = 0.0f64;
+    for (u, v, w) in graph.edges() {
+        let (mu_, mv) = (part.machine_of(u), part.machine_of(v));
+        if mu_ == mv {
+            continue;
+        }
+        let (ru, rv) = (rack_of[mu_], rack_of[mv]);
+        if ru == rv {
+            intra[ru] += w;
+        } else {
+            cross_cut += w;
+        }
+    }
+    let per_rack: Vec<f64> =
+        (0..racks).map(|r| member_terms[r] + cut_coeff * intra[r]).collect();
+    let total = per_rack.iter().sum::<f64>() + cut_coeff * cross_cut;
+    RackPotential { per_rack, cross_cut, total }
+}
+
+/// Framework A's potential decomposed by rack:
+/// `C_0 = Σ_r [Σ_{m∈r} (L_m² − Σ b²)/w_m + μ·cut_intra(r)] + μ·cut_cross`.
+pub fn c0_by_rack(
+    graph: &Graph,
+    machines: &MachineConfig,
+    part: &Partition,
+    mu: f64,
+    rack_of: &[usize],
+) -> RackPotential {
+    let k = part.machine_count();
+    assert_eq!(machines.count(), k);
+    let mut sq = vec![0.0f64; k];
+    for i in 0..graph.node_count() {
+        let b = graph.node_weight(i);
+        sq[part.machine_of(i)] += b * b;
+    }
+    potential_by_rack(graph, part, rack_of, mu, |m| {
+        let l = part.load(m);
+        (l * l - sq[m]) / machines.speed(m)
+    })
+}
+
+/// Framework B's centralized cost decomposed by rack:
+/// `C̃_0 = Σ_r [Σ_{m∈r} (L_m/w_m − B)² + (μ/2)·cut_intra(r)] + (μ/2)·cut_cross`.
+pub fn c0_tilde_by_rack(
+    graph: &Graph,
+    machines: &MachineConfig,
+    part: &Partition,
+    mu: f64,
+    rack_of: &[usize],
+) -> RackPotential {
+    let k = part.machine_count();
+    assert_eq!(machines.count(), k);
+    let b_total = graph.total_node_weight();
+    potential_by_rack(graph, part, rack_of, mu * 0.5, |m| {
+        let d = part.load(m) / machines.speed(m) - b_total;
+        d * d
+    })
+}
+
 /// Naive O(N²)-style `C_0` computed literally from the definition
 /// `Σ_i C_i` — the test oracle for the closed form above.
 pub fn c0_naive(graph: &Graph, machines: &MachineConfig, part: &Partition, mu: f64) -> f64 {
@@ -164,5 +263,81 @@ mod tests {
         let (a, b) = both(&g, &m, &p, 8.0);
         assert_eq!(a, c0(&g, &m, &p, 8.0));
         assert_eq!(b, c0_tilde(&g, &m, &p, 8.0));
+    }
+
+    #[test]
+    fn rack_decomposition_is_exact_on_singleton_racks() {
+        // One machine per rack: the decomposed accumulation order is
+        // literally the flat loop, so totals must agree bit-for-bit.
+        for seed in 0..5 {
+            let (g, m, p) = setup(seed);
+            let singles: Vec<usize> = (0..5).collect();
+            let a = c0_by_rack(&g, &m, &p, 8.0, &singles);
+            let b = c0_tilde_by_rack(&g, &m, &p, 8.0, &singles);
+            assert_eq!(a.total.to_bits(), c0(&g, &m, &p, 8.0).to_bits(), "seed {seed} (A)");
+            assert_eq!(b.total.to_bits(), c0_tilde(&g, &m, &p, 8.0).to_bits(), "seed {seed} (B)");
+            assert_eq!(a.per_rack.len(), 5);
+        }
+    }
+
+    #[test]
+    fn rack_decomposition_matches_flat_on_random_groupings() {
+        // Property: for any rack grouping, Σ_r per_rack + coeff·cross
+        // re-associates the flat sum — equal to 1e-9 relative.
+        let mut rng = Pcg32::new(77);
+        for seed in 0..20 {
+            let (g, m, p) = setup(seed);
+            // Random dense rack map over 1..=3 racks covering 5 machines.
+            let racks = 1 + rng.index(3);
+            let mut rack_of: Vec<usize> = (0..5).map(|_| rng.index(racks)).collect();
+            // Densify: make sure every rack id below the max appears.
+            for r in 0..racks {
+                rack_of[r % 5] = r.min(racks - 1);
+            }
+            let max = rack_of.iter().copied().max().unwrap();
+            for r in rack_of.iter_mut() {
+                *r = (*r).min(max);
+            }
+            let a = c0_by_rack(&g, &m, &p, 8.0, &rack_of);
+            let flat_a = c0(&g, &m, &p, 8.0);
+            assert!(
+                (a.total - flat_a).abs() <= 1e-9 * (1.0 + flat_a.abs()),
+                "seed {seed}: {} vs {flat_a}",
+                a.total
+            );
+            let b = c0_tilde_by_rack(&g, &m, &p, 8.0, &rack_of);
+            let flat_b = c0_tilde(&g, &m, &p, 8.0);
+            assert!(
+                (b.total - flat_b).abs() <= 1e-9 * (1.0 + flat_b.abs()),
+                "seed {seed}: {} vs {flat_b}",
+                b.total
+            );
+            // The cross-rack cut plus intra shares re-compose the cut.
+            let cut = crate::graph::metrics::cut_weight(&g, p.assignment());
+            let intra_sum: f64 = a
+                .per_rack
+                .iter()
+                .enumerate()
+                .map(|(r, &v)| {
+                    let member: f64 = (0..5)
+                        .filter(|&mch| rack_of[mch] == r)
+                        .map(|mch| {
+                            let l = p.load(mch);
+                            let sq: f64 = (0..g.node_count())
+                                .filter(|&i| p.machine_of(i) == mch)
+                                .map(|i| g.node_weight(i) * g.node_weight(i))
+                                .sum();
+                            (l * l - sq) / m.speed(mch)
+                        })
+                        .sum();
+                    (v - member) / 8.0
+                })
+                .sum();
+            assert!(
+                (intra_sum + a.cross_cut - cut).abs() <= 1e-6 * (1.0 + cut.abs()),
+                "seed {seed}: intra {intra_sum} + cross {} vs cut {cut}",
+                a.cross_cut
+            );
+        }
     }
 }

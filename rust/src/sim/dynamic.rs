@@ -23,8 +23,11 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::coordinator::net::ClusterLeader;
-use crate::coordinator::{run_distributed, DistributedOptions, OverheadStats, WireError};
+use crate::coordinator::{
+    run_distributed, run_distributed_hierarchical, DistributedOptions, OverheadStats, WireError,
+};
 use crate::game::cost::Framework;
+use crate::game::hierarchy::{refine_hierarchical, RackLayout};
 use crate::game::refine::{rehome_assignment, RefineEngine, RefineOptions};
 use crate::graph::Graph;
 use crate::partition::initial::grow_partition;
@@ -288,6 +291,13 @@ pub struct DynamicOptions {
     /// powers live recovery is kept whenever a TCP cluster is
     /// attached, with or without this directory.
     pub checkpoint_dir: Option<PathBuf>,
+    /// Two-level hierarchy (DESIGN.md §12): when set, every refinement
+    /// epoch plays the outer rack-quotient game then the scoped inner
+    /// per-rack games instead of the flat K-machine game. `None` (the
+    /// default) keeps the flat game. The layout must cover exactly the
+    /// starting fleet; singleton racks reproduce the flat equilibrium
+    /// bit-for-bit.
+    pub racks: Option<RackLayout>,
 }
 
 impl Default for DynamicOptions {
@@ -302,6 +312,7 @@ impl Default for DynamicOptions {
             migration_charge: 0.0,
             max_refinements: 0,
             checkpoint_dir: None,
+            racks: None,
         }
     }
 }
@@ -424,6 +435,9 @@ pub struct EpochReport {
     /// Set when a queued joiner was admitted at this epoch's boundary
     /// and the fleet grew to K+1 before the epoch's refinement ran.
     pub admission: Option<AdmissionRecord>,
+    /// Rack count of the hierarchy the refinement played (DESIGN.md
+    /// §12); 0 when the epoch ran the flat game.
+    pub racks: usize,
 }
 
 /// Aggregate result of a closed-loop run.
@@ -639,12 +653,18 @@ impl<'g> DynamicDriver<'g> {
     /// Route every distributed refinement over a connected TCP cluster
     /// (broadcasts the shared fixture to the workers first). Requires
     /// `options.backend == RefineBackend::Distributed`.
-    pub fn attach_cluster(&mut self, cluster: ClusterLeader) -> Result<(), WireError> {
+    pub fn attach_cluster(&mut self, mut cluster: ClusterLeader) -> Result<(), WireError> {
         assert_eq!(
             self.options.backend,
             RefineBackend::Distributed,
             "a TCP cluster needs the distributed backend"
         );
+        if let Some(layout) = &self.options.racks {
+            if let Err(e) = cluster.set_racks(layout.clone()) {
+                let _ = cluster.shutdown();
+                return Err(e);
+            }
+        }
         if let Err(e) = cluster.setup(&self.lp_graph, &self.machines) {
             // Best-effort Goodbye so workers that did complete the
             // handshake exit now instead of waiting out their derived
@@ -748,26 +768,48 @@ impl<'g> DynamicDriver<'g> {
 
         let (potential_before, potential_after, transfers, converged, overhead, refined) =
             match self.options.backend {
-                RefineBackend::Sequential => {
-                    let mut refine = RefineEngine::new(
-                        &self.lp_graph,
-                        &self.machines,
-                        part,
-                        self.options.mu,
-                        self.options.framework,
-                    )
-                    .with_migration_charge(self.options.migration_charge);
-                    let before = refine.potential();
-                    let report = refine.run(&RefineOptions::default());
-                    (
-                        before,
-                        report.final_potential,
-                        report.transfers,
-                        report.converged,
-                        None,
-                        refine.into_partition(),
-                    )
-                }
+                RefineBackend::Sequential => match &self.options.racks {
+                    None => {
+                        let mut refine = RefineEngine::new(
+                            &self.lp_graph,
+                            &self.machines,
+                            part,
+                            self.options.mu,
+                            self.options.framework,
+                        )
+                        .with_migration_charge(self.options.migration_charge);
+                        let before = refine.potential();
+                        let report = refine.run(&RefineOptions::default());
+                        (
+                            before,
+                            report.final_potential,
+                            report.transfers,
+                            report.converged,
+                            None,
+                            refine.into_partition(),
+                        )
+                    }
+                    Some(layout) => {
+                        let (refined, report) = refine_hierarchical(
+                            &self.lp_graph,
+                            &self.machines,
+                            part,
+                            self.options.mu,
+                            self.options.framework,
+                            self.options.migration_charge,
+                            layout,
+                            &RefineOptions::default(),
+                        );
+                        (
+                            report.potential_before,
+                            report.potential_after,
+                            report.transfers,
+                            report.converged,
+                            None,
+                            refined,
+                        )
+                    }
+                },
                 RefineBackend::Distributed => {
                     let before = self.potential_of(&part);
                     let report = if self.cluster.is_some() {
@@ -785,17 +827,27 @@ impl<'g> DynamicDriver<'g> {
                             Err(e) => return Err(e),
                         }
                     } else {
-                        run_distributed(
-                            Arc::new(self.lp_graph.clone()),
-                            &self.machines,
-                            part,
-                            &DistributedOptions {
-                                mu: self.options.mu,
-                                framework: self.options.framework,
-                                migration_charge: self.options.migration_charge,
-                                ..Default::default()
-                            },
-                        )
+                        let dist_opts = DistributedOptions {
+                            mu: self.options.mu,
+                            framework: self.options.framework,
+                            migration_charge: self.options.migration_charge,
+                            ..Default::default()
+                        };
+                        match &self.options.racks {
+                            None => run_distributed(
+                                Arc::new(self.lp_graph.clone()),
+                                &self.machines,
+                                part,
+                                &dist_opts,
+                            ),
+                            Some(layout) => run_distributed_hierarchical(
+                                Arc::new(self.lp_graph.clone()),
+                                &self.machines,
+                                part,
+                                layout,
+                                &dist_opts,
+                            ),
+                        }
                     };
                     let after = self.potential_of(&report.partition);
                     (
@@ -1159,6 +1211,7 @@ impl<'g> DynamicDriver<'g> {
             refine,
             recovery,
             admission,
+            racks: self.options.racks.as_ref().map_or(0, |l| l.rack_count()),
         });
         Ok(more)
     }
@@ -1349,6 +1402,95 @@ mod tests {
         // Epoch windows tile the run.
         for pair in report.epochs.windows(2) {
             assert_eq!(pair[0].tick_end, pair[1].tick_start);
+        }
+    }
+
+    /// Singleton racks in the closed loop reproduce the flat run
+    /// exactly: with one machine per rack the outer game IS the flat
+    /// game and the guarded map-back is the identity, so every epoch's
+    /// refinement — and therefore the whole simulation trajectory —
+    /// is bit-identical (DESIGN.md §12).
+    #[test]
+    fn singleton_racks_closed_loop_matches_flat_exactly() {
+        let (g, machines, scenario) = setup(7);
+        let flat = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            &options(150),
+            &mut Pcg32::new(8),
+        );
+        let mut opts = options(150);
+        opts.racks = Some(RackLayout::singletons(machines.count()));
+        let hier = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut Pcg32::new(8),
+        );
+        assert_eq!(hier.stats, flat.stats);
+        assert_eq!(hier.transfers, flat.transfers);
+        assert_eq!(hier.epochs.len(), flat.epochs.len());
+        for (h, f) in hier.epochs.iter().zip(flat.epochs.iter()) {
+            assert_eq!(h.events_processed, f.events_processed);
+            assert_eq!(h.rollbacks, f.rollbacks);
+            match (&h.refine, &f.refine) {
+                (Some(hr), Some(fr)) => {
+                    assert_eq!(hr.transfers, fr.transfers);
+                    // Same partition; the flat arm reports the engine's
+                    // incrementally-maintained potential while the
+                    // hierarchical arm recomputes it fresh, so compare
+                    // to rounding, not bits.
+                    let tol = 1e-9 * (1.0 + fr.potential_after.abs());
+                    assert!(
+                        (hr.potential_after - fr.potential_after).abs() <= tol,
+                        "epoch {}: potential {} vs {}",
+                        h.epoch,
+                        hr.potential_after,
+                        fr.potential_after
+                    );
+                }
+                (None, None) => {}
+                other => panic!("epoch {} refine mismatch: {other:?}", h.epoch),
+            }
+        }
+        assert_eq!(hier.epochs[0].racks, machines.count());
+        assert_eq!(flat.epochs[0].racks, 0);
+    }
+
+    /// Real (non-singleton) racks: every epoch's two-level refinement
+    /// still descends the flat potential (outer guarded map-back +
+    /// Thm 4.1 on each scoped inner game), and the epoch reports carry
+    /// the rack count.
+    #[test]
+    fn hierarchical_closed_loop_descends_every_epoch() {
+        let (g, machines, scenario) = setup(9);
+        let mut opts = options(150);
+        opts.racks = Some(RackLayout::new(vec![0, 0, 1, 1]).unwrap());
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut Pcg32::new(10),
+        );
+        assert!(!report.stats.truncated);
+        assert!(report.refinements() > 0, "no refinement epochs ran");
+        for e in &report.epochs {
+            assert_eq!(e.racks, 2);
+            if let Some(r) = &e.refine {
+                assert!(
+                    r.potential_after <= r.potential_before + 1e-9,
+                    "epoch {}: flat potential rose {} -> {}",
+                    e.epoch,
+                    r.potential_before,
+                    r.potential_after
+                );
+            }
         }
     }
 

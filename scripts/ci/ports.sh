@@ -1,0 +1,18 @@
+# Shared helper for the net-smoke loopback clusters: derive a per-run
+# TCP port base instead of hard-coding one. Keyed on GITHUB_RUN_ID so
+# a re-run (or a cancelled run whose workers are still dying) on a
+# shared runner does not collide with its predecessor's listeners;
+# falls back to the shell PID for local invocations.
+#
+# Usage:  . scripts/ci/ports.sh
+#         port=$(net_smoke_port_base 0)   # slot 0, 1, 2, ... per case
+#
+# Each slot owns a disjoint 32-port window (the largest case is a
+# 9-process cluster run at two graph sizes on fresh ports), and every
+# base stays inside [20000, 60000) — clear of the ephemeral range's
+# top end and of well-known ports.
+net_smoke_port_base() {
+  local slot="${1:?usage: net_smoke_port_base SLOT}"
+  local seed="${GITHUB_RUN_ID:-$$}"
+  echo $(( 20000 + (seed % 1000) * 32 + slot * 32 ))
+}
