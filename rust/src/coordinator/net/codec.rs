@@ -1,0 +1,885 @@
+//! Layer 1 of the coordinator's network stack (DESIGN.md §13): the
+//! length-prefixed binary wire codec. Everything that crosses a socket
+//! is defined here — the [`Frame`] tags for the Fig. 2 protocol
+//! messages and the control plane (wire v1–v5), the fixed-width
+//! little-endian field encoders/decoders, and [`WireError`]. This
+//! layer knows nothing about sockets beyond the [`Read`]/[`Write`]
+//! traits; sessions, the mesh, and the cluster roles all build on it.
+
+use std::io::{Read, Write};
+
+use crate::coordinator::protocol::{Counter, Message, OverheadStats};
+use crate::game::cost::Framework;
+use crate::partition::MachineId;
+
+/// First bytes of every `Hello` payload after the tag.
+pub const WIRE_MAGIC: [u8; 4] = *b"GTIP";
+/// Wire protocol version; bumped on any layout change. v2 added the
+/// migration charge of the augmented game to `Setup`; v3 added the
+/// elastic-membership control frames (`Restore`, `Join`, `RestoreAck`);
+/// v4 made `Join` live and added the admission frames (`Admit`,
+/// `AdmitAck`, `Catchup`); v5 added the two-level hierarchy (DESIGN.md
+/// §12): the `RackUpdate` aggregate message, the phased `EpochBegin`,
+/// rack-aware `Setup`/`Join`/`Admit` fields, and `RackResult`. The
+/// `Hello` handshake rejects any peer speaking another version, so
+/// decoding is version-gated at connection time and a mixed-version
+/// cluster can never half-parse a frame.
+pub const WIRE_VERSION: u16 = 5;
+/// Upper bound on a single frame payload; larger prefixes are rejected
+/// before any allocation happens.
+pub const MAX_FRAME_BYTES: usize = 1 << 24;
+
+/// Message tags (1–5 mirror [`Message`]; 16+ are control frames).
+const TAG_TAKE_MY_TURN: u8 = 1;
+const TAG_RECEIVE_NODE: u8 = 2;
+const TAG_REGULAR_UPDATE: u8 = 3;
+const TAG_SHUTDOWN: u8 = 4;
+const TAG_RACK_UPDATE: u8 = 5;
+const TAG_HELLO: u8 = 16;
+const TAG_SETUP: u8 = 17;
+const TAG_EPOCH_BEGIN: u8 = 18;
+const TAG_ROUND_STATS: u8 = 19;
+const TAG_GOODBYE: u8 = 20;
+const TAG_RESTORE: u8 = 21;
+const TAG_JOIN: u8 = 22;
+const TAG_RESTORE_ACK: u8 = 23;
+const TAG_ADMIT: u8 = 24;
+const TAG_ADMIT_ACK: u8 = 25;
+const TAG_CATCHUP: u8 = 26;
+const TAG_RACK_RESULT: u8 = 27;
+
+/// Errors of the wire codec and connection lifecycle.
+#[derive(Debug)]
+pub enum WireError {
+    /// Frame payload ended before the advertised fields.
+    Truncated { needed: usize, got: usize },
+    /// Decoded fields left unconsumed payload bytes behind.
+    TrailingBytes { extra: usize },
+    /// Length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversized { len: usize },
+    /// Unknown frame tag.
+    BadTag(u8),
+    /// Handshake did not start with [`WIRE_MAGIC`].
+    BadMagic,
+    /// Peer speaks a different [`WIRE_VERSION`].
+    BadVersion { theirs: u16 },
+    /// The socket closed mid-stream.
+    Closed,
+    /// Underlying socket error.
+    Io(String),
+    /// The peer violated the epoch protocol.
+    Protocol(String),
+    /// A lower-level failure annotated with the peer (wire id) and the
+    /// protocol state it surfaced in. Every error that reaches the CLI
+    /// takes this form — "peer 3, awaiting AdmitAck: …" — so an
+    /// operator can tell *who* stalled a barrier and *where*.
+    Context { peer: MachineId, state: String, inner: Box<WireError> },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { needed, got } => {
+                write!(f, "truncated frame: needed {needed} bytes, got {got}")
+            }
+            WireError::TrailingBytes { extra } => {
+                write!(f, "malformed frame: {extra} unconsumed trailing bytes")
+            }
+            WireError::Oversized { len } => {
+                write!(f, "oversized frame: {len} bytes > max {MAX_FRAME_BYTES}")
+            }
+            WireError::BadTag(t) => write!(f, "unknown frame tag {t}"),
+            WireError::BadMagic => write!(f, "bad handshake magic (not a gtip peer?)"),
+            WireError::BadVersion { theirs } => {
+                write!(f, "wire version mismatch: peer {theirs}, ours {WIRE_VERSION}")
+            }
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::Io(e) => write!(f, "socket error: {e}"),
+            WireError::Protocol(e) => write!(f, "protocol violation: {e}"),
+            WireError::Context { peer, state, inner } => {
+                write!(f, "peer {peer}, {state}: {inner}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl WireError {
+    /// Annotate this error with the peer (wire id) and protocol state
+    /// it surfaced in, e.g. `e.while_awaiting("awaiting AdmitAck", 3)`.
+    /// Applied at the outermost leader/worker surfaces only — never
+    /// inside primitives like `recv_ctrl`, whose callers (death
+    /// diagnosis) match on the un-wrapped variants.
+    pub fn while_awaiting(self, state: impl Into<String>, peer_wire: MachineId) -> WireError {
+        WireError::Context { peer: peer_wire, state: state.into(), inner: Box::new(self) }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Closed
+        } else {
+            WireError::Io(e.to_string())
+        }
+    }
+}
+
+/// Control frames + protocol messages — everything that crosses a
+/// socket.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// A Fig. 2 protocol message (the only frames [`OverheadStats`]
+    /// counts).
+    Msg(Message),
+    /// Connection handshake: who is dialing, and how big they think the
+    /// cluster is.
+    Hello { version: u16, machine: u32, machines: u32 },
+    /// Leader → workers, once: the shared fixture (machine speeds, game
+    /// options, graph topology + weights).
+    Setup(SetupFrame),
+    /// Leader → workers, per refinement round: fresh measured weights
+    /// and the warm-start assignment.
+    EpochBegin(EpochFrame),
+    /// Worker → leader after each round: the worker's [`OverheadStats`]
+    /// delta for that round (the leader aggregates them; waiting for
+    /// all K−1 doubles as the epoch barrier).
+    RoundStats(OverheadStats),
+    /// Leader → workers: the run is over; exit cleanly.
+    Goodbye,
+    /// Leader → survivors after a worker death (wire v3): re-form the
+    /// cluster. `survivors` lists the surviving *wire* ids of the
+    /// original mesh in ascending order (always including 0, the
+    /// leader); each survivor's new logical id is its position in the
+    /// list. `speeds` are the renormalized relative speeds in that new
+    /// order. A worker not on the list has been evicted — it will
+    /// never receive this frame (the leader compacts first), and times
+    /// out on its own.
+    Restore { survivors: Vec<u32>, speeds: Vec<f64> },
+    /// Joiner → leader (wire v4): announce this machine (its immutable
+    /// wire id) and its relative speed, asking to be admitted at the
+    /// next epoch boundary. `speed` is relative to the current fleet's
+    /// average machine — 1.0 means "as fast as a typical member".
+    /// `rack` (wire v5) is the rack the joiner wants to land in;
+    /// `u32::MAX` means "leader's choice" (the emptiest rack), and the
+    /// value is ignored entirely on a flat cluster.
+    Join { machine: u32, speed: f64, rack: u32 },
+    /// Survivor → leader (wire v3): compaction applied, ready for the
+    /// next epoch. `machine` echoes the sender's original wire id so
+    /// the leader can cross-check its survivor bookkeeping.
+    RestoreAck { machine: u32 },
+    /// Leader → everyone at an admission (wire v4): grow the mesh back
+    /// around `members` — the new member *wire* ids, ascending, always
+    /// including 0 (the leader) and `joiner`. Each member's new
+    /// logical id is its position in the list; `speeds` are the
+    /// renormalized relative speeds in that order. The exact mirror of
+    /// [`Frame::Restore`], which shrinks the same list. `rack` (wire
+    /// v5) is the rack the joiner lands in — already resolved by the
+    /// leader, never `u32::MAX`; 0 (and ignored) on a flat cluster.
+    Admit { members: Vec<u32>, joiner: u32, speeds: Vec<f64>, rack: u32 },
+    /// Member → leader (wire v4): mesh extension applied (the member
+    /// dialed the joiner and accepted its return dial), ready for the
+    /// next epoch. `machine` echoes the sender's wire id, like
+    /// [`Frame::RestoreAck`].
+    AdmitAck { machine: u32 },
+    /// Leader → joiner, once per admission (wire v4): the encoded
+    /// epoch-boundary [`crate::sim::Snapshot`] the run is at, so the
+    /// newcomer can cross-check the fixture it was shipped in `Setup`
+    /// against the exact state the cluster resumes from.
+    Catchup { snapshot: Vec<u8> },
+    /// Rack leader → cluster leader after an inner (phase-2) round
+    /// (wire v5): the rack's scoped-ring outcome. `assignment` lists
+    /// `(node, machine)` for every node the rack owned at phase start —
+    /// cross-rack traffic never flows in phase 2, so only the owning
+    /// rack knows where its nodes ended up. The leader of the rack
+    /// containing machine 0 never sends this; the cluster leader played
+    /// that ring itself.
+    RackResult { rack: u32, transfers: u64, converged: bool, assignment: Vec<(u32, u32)> },
+}
+
+/// Payload of [`Frame::Setup`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SetupFrame {
+    pub speeds: Vec<f64>,
+    pub mu: f64,
+    pub framework: Framework,
+    /// Per-move migration surcharge of the augmented game (DESIGN.md
+    /// §9). Workers must price moves with exactly the leader's charge
+    /// or replicas pick different transfers (wire v2).
+    pub migration_charge: f64,
+    pub epsilon: f64,
+    pub max_transfers: u64,
+    pub recv_timeout_ms: u64,
+    pub node_weights: Vec<f64>,
+    /// `(u, v, weight)` for every edge, in the leader graph's edge
+    /// order (workers re-install per-epoch weights in this order).
+    pub edges: Vec<(u32, u32, f64)>,
+    /// Machine → rack map for the two-level hierarchy (wire v5), one
+    /// entry per machine; empty means a flat (single-level) cluster.
+    pub racks: Vec<u32>,
+}
+
+/// Payload of [`Frame::EpochBegin`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochFrame {
+    pub epoch: u64,
+    /// Which level this round plays (wire v5): 0 = flat (single-level),
+    /// 1 = the outer rack-quotient game (rack leaders only), 2 = the
+    /// inner per-rack scoped rings. A hierarchical epoch is one
+    /// phase-1 round followed by one phase-2 round under the same
+    /// `epoch` number.
+    pub phase: u8,
+    pub node_weights: Vec<f64>,
+    /// One weight per edge, in [`SetupFrame::edges`] order.
+    pub edge_weights: Vec<f64>,
+    pub assignment: Vec<u32>,
+}
+
+// ---------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Checked narrowing for ids and lengths crossing the wire. A graph,
+/// cluster, or vector beyond the u32 wire range must fail loudly at
+/// encode time — an unchecked `as u32` would silently truncate into a
+/// wrong-but-plausible frame the peer happily applies.
+pub(super) fn wire_u32(v: usize) -> Result<u32, WireError> {
+    u32::try_from(v).map_err(|_| WireError::Protocol(format!("{v} exceeds the u32 wire range")))
+}
+
+fn put_f64s(b: &mut Vec<u8>, vs: &[f64]) -> Result<(), WireError> {
+    put_u32(b, wire_u32(vs.len())?);
+    for &v in vs {
+        put_f64(b, v);
+    }
+    Ok(())
+}
+
+/// Bounded reader over a frame payload; every accessor fails with
+/// [`WireError::Truncated`] instead of panicking on short input.
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Dec { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.b.len() {
+            return Err(WireError::Truncated { needed: self.pos + n, got: self.b.len() });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("len 2")))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("len 4")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("len 8")))
+    }
+
+    /// Length-prefixed f64 vector; the length is validated against the
+    /// remaining payload before any allocation.
+    fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let len = self.u32()? as usize;
+        if self.pos + 8 * len > self.b.len() {
+            return Err(WireError::Truncated { needed: self.pos + 8 * len, got: self.b.len() });
+        }
+        (0..len).map(|_| self.f64()).collect()
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.pos != self.b.len() {
+            return Err(WireError::TrailingBytes { extra: self.b.len() - self.pos });
+        }
+        Ok(())
+    }
+}
+
+fn encode_payload(frame: &Frame, b: &mut Vec<u8>) -> Result<(), WireError> {
+    match frame {
+        Frame::Msg(Message::TakeMyTurn { consecutive_forfeits, transfers_so_far }) => {
+            b.push(TAG_TAKE_MY_TURN);
+            put_u64(b, *consecutive_forfeits as u64);
+            put_u64(b, *transfers_so_far as u64);
+        }
+        Frame::Msg(Message::ReceiveNode { seq, node, from, to }) => {
+            b.push(TAG_RECEIVE_NODE);
+            put_u64(b, *seq);
+            put_u64(b, *node as u64);
+            put_u32(b, wire_u32(*from)?);
+            put_u32(b, wire_u32(*to)?);
+        }
+        Frame::Msg(Message::RegularUpdate { seq, node, from, to, loads }) => {
+            b.push(TAG_REGULAR_UPDATE);
+            put_u64(b, *seq);
+            put_u64(b, *node as u64);
+            put_u32(b, wire_u32(*from)?);
+            put_u32(b, wire_u32(*to)?);
+            put_f64s(b, loads)?;
+        }
+        Frame::Msg(Message::RackUpdate { seq, node, from, to, rack_loads }) => {
+            b.push(TAG_RACK_UPDATE);
+            put_u64(b, *seq);
+            put_u64(b, *node as u64);
+            put_u32(b, wire_u32(*from)?);
+            put_u32(b, wire_u32(*to)?);
+            put_f64s(b, rack_loads)?;
+        }
+        Frame::Msg(Message::Shutdown { total_transfers, converged }) => {
+            b.push(TAG_SHUTDOWN);
+            put_u64(b, *total_transfers);
+            b.push(u8::from(*converged));
+        }
+        Frame::Hello { version, machine, machines } => {
+            b.push(TAG_HELLO);
+            b.extend_from_slice(&WIRE_MAGIC);
+            put_u16(b, *version);
+            put_u32(b, *machine);
+            put_u32(b, *machines);
+        }
+        Frame::Setup(s) => {
+            b.push(TAG_SETUP);
+            put_f64s(b, &s.speeds)?;
+            put_f64(b, s.mu);
+            b.push(match s.framework {
+                Framework::A => 0,
+                Framework::B => 1,
+            });
+            put_f64(b, s.migration_charge);
+            put_f64(b, s.epsilon);
+            put_u64(b, s.max_transfers);
+            put_u64(b, s.recv_timeout_ms);
+            put_f64s(b, &s.node_weights)?;
+            put_u32(b, wire_u32(s.edges.len())?);
+            for &(u, v, w) in &s.edges {
+                put_u32(b, u);
+                put_u32(b, v);
+                put_f64(b, w);
+            }
+            put_u32(b, wire_u32(s.racks.len())?);
+            for &r in &s.racks {
+                put_u32(b, r);
+            }
+        }
+        Frame::EpochBegin(e) => {
+            b.push(TAG_EPOCH_BEGIN);
+            put_u64(b, e.epoch);
+            b.push(e.phase);
+            put_f64s(b, &e.node_weights)?;
+            put_f64s(b, &e.edge_weights)?;
+            put_u32(b, wire_u32(e.assignment.len())?);
+            for &a in &e.assignment {
+                put_u32(b, a);
+            }
+        }
+        Frame::RoundStats(s) => {
+            b.push(TAG_ROUND_STATS);
+            for c in
+                [&s.take_my_turn, &s.receive_node, &s.regular_update, &s.rack_update, &s.shutdown]
+            {
+                put_u64(b, c.messages);
+                put_u64(b, c.bytes);
+            }
+        }
+        Frame::Goodbye => b.push(TAG_GOODBYE),
+        Frame::Restore { survivors, speeds } => {
+            b.push(TAG_RESTORE);
+            put_u32(b, wire_u32(survivors.len())?);
+            for &s in survivors {
+                put_u32(b, s);
+            }
+            put_f64s(b, speeds)?;
+        }
+        Frame::Join { machine, speed, rack } => {
+            b.push(TAG_JOIN);
+            put_u32(b, *machine);
+            put_f64(b, *speed);
+            put_u32(b, *rack);
+        }
+        Frame::RestoreAck { machine } => {
+            b.push(TAG_RESTORE_ACK);
+            put_u32(b, *machine);
+        }
+        Frame::Admit { members, joiner, speeds, rack } => {
+            b.push(TAG_ADMIT);
+            put_u32(b, wire_u32(members.len())?);
+            for &m in members {
+                put_u32(b, m);
+            }
+            put_u32(b, *joiner);
+            put_f64s(b, speeds)?;
+            put_u32(b, *rack);
+        }
+        Frame::AdmitAck { machine } => {
+            b.push(TAG_ADMIT_ACK);
+            put_u32(b, *machine);
+        }
+        Frame::Catchup { snapshot } => {
+            b.push(TAG_CATCHUP);
+            put_u32(b, wire_u32(snapshot.len())?);
+            b.extend_from_slice(snapshot);
+        }
+        Frame::RackResult { rack, transfers, converged, assignment } => {
+            b.push(TAG_RACK_RESULT);
+            put_u32(b, *rack);
+            put_u64(b, *transfers);
+            b.push(u8::from(*converged));
+            put_u32(b, wire_u32(assignment.len())?);
+            for &(node, machine) in assignment {
+                put_u32(b, node);
+                put_u32(b, machine);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Encode a frame as `u32 LE payload length || payload`. Fails (rather
+/// than truncating) on ids or lengths beyond the u32 wire range and on
+/// payloads over [`MAX_FRAME_BYTES`] — the write-side mirror of the
+/// read-side `Oversized` rejection.
+pub fn encode_frame(frame: &Frame) -> Result<Vec<u8>, WireError> {
+    let mut payload = Vec::with_capacity(64);
+    encode_payload(frame, &mut payload)?;
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len: payload.len() });
+    }
+    let mut out = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Decode one frame payload (the bytes after the length prefix).
+/// Rejects unknown tags, short payloads, and trailing garbage — never
+/// panics on malformed input.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+    let mut d = Dec::new(payload);
+    let tag = d.u8()?;
+    let frame = match tag {
+        TAG_TAKE_MY_TURN => Frame::Msg(Message::TakeMyTurn {
+            consecutive_forfeits: d.u64()? as usize,
+            transfers_so_far: d.u64()? as usize,
+        }),
+        TAG_RECEIVE_NODE => Frame::Msg(Message::ReceiveNode {
+            seq: d.u64()?,
+            node: d.u64()? as usize,
+            from: d.u32()? as MachineId,
+            to: d.u32()? as MachineId,
+        }),
+        TAG_REGULAR_UPDATE => Frame::Msg(Message::RegularUpdate {
+            seq: d.u64()?,
+            node: d.u64()? as usize,
+            from: d.u32()? as MachineId,
+            to: d.u32()? as MachineId,
+            loads: d.f64s()?,
+        }),
+        TAG_RACK_UPDATE => Frame::Msg(Message::RackUpdate {
+            seq: d.u64()?,
+            node: d.u64()? as usize,
+            from: d.u32()? as MachineId,
+            to: d.u32()? as MachineId,
+            rack_loads: d.f64s()?,
+        }),
+        TAG_SHUTDOWN => Frame::Msg(Message::Shutdown {
+            total_transfers: d.u64()?,
+            converged: match d.u8()? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(WireError::Protocol(format!("bad converged byte {other}")))
+                }
+            },
+        }),
+        TAG_HELLO => {
+            if d.take(4)? != WIRE_MAGIC {
+                return Err(WireError::BadMagic);
+            }
+            let version = d.u16()?;
+            if version != WIRE_VERSION {
+                return Err(WireError::BadVersion { theirs: version });
+            }
+            Frame::Hello { version, machine: d.u32()?, machines: d.u32()? }
+        }
+        TAG_SETUP => {
+            let speeds = d.f64s()?;
+            let mu = d.f64()?;
+            let framework = match d.u8()? {
+                0 => Framework::A,
+                1 => Framework::B,
+                other => return Err(WireError::Protocol(format!("bad framework byte {other}"))),
+            };
+            Frame::Setup(SetupFrame {
+                speeds,
+                mu,
+                framework,
+                migration_charge: d.f64()?,
+                epsilon: d.f64()?,
+                max_transfers: d.u64()?,
+                recv_timeout_ms: d.u64()?,
+                node_weights: d.f64s()?,
+                edges: {
+                    let len = d.u32()? as usize;
+                    let mut edges = Vec::new();
+                    for _ in 0..len {
+                        edges.push((d.u32()?, d.u32()?, d.f64()?));
+                    }
+                    edges
+                },
+                racks: {
+                    let len = d.u32()? as usize;
+                    if 4 * len > payload.len() {
+                        return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+                    }
+                    (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?
+                },
+            })
+        }
+        TAG_EPOCH_BEGIN => Frame::EpochBegin(EpochFrame {
+            epoch: d.u64()?,
+            phase: d.u8()?,
+            node_weights: d.f64s()?,
+            edge_weights: d.f64s()?,
+            assignment: {
+                let len = d.u32()? as usize;
+                if 4 * len > payload.len() {
+                    return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+                }
+                (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?
+            },
+        }),
+        TAG_ROUND_STATS => {
+            let mut cs = [Counter::default(); 5];
+            for c in cs.iter_mut() {
+                c.messages = d.u64()?;
+                c.bytes = d.u64()?;
+            }
+            Frame::RoundStats(OverheadStats {
+                take_my_turn: cs[0],
+                receive_node: cs[1],
+                regular_update: cs[2],
+                rack_update: cs[3],
+                shutdown: cs[4],
+            })
+        }
+        TAG_GOODBYE => Frame::Goodbye,
+        TAG_RESTORE => {
+            let len = d.u32()? as usize;
+            if 4 * len > payload.len() {
+                return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+            }
+            Frame::Restore {
+                survivors: (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?,
+                speeds: d.f64s()?,
+            }
+        }
+        TAG_JOIN => Frame::Join { machine: d.u32()?, speed: d.f64()?, rack: d.u32()? },
+        TAG_RESTORE_ACK => Frame::RestoreAck { machine: d.u32()? },
+        TAG_ADMIT => {
+            let len = d.u32()? as usize;
+            if 4 * len > payload.len() {
+                return Err(WireError::Truncated { needed: 4 * len, got: payload.len() });
+            }
+            Frame::Admit {
+                members: (0..len).map(|_| d.u32()).collect::<Result<_, _>>()?,
+                joiner: d.u32()?,
+                speeds: d.f64s()?,
+                rack: d.u32()?,
+            }
+        }
+        TAG_ADMIT_ACK => Frame::AdmitAck { machine: d.u32()? },
+        TAG_CATCHUP => {
+            let len = d.u32()? as usize;
+            if len > payload.len() {
+                return Err(WireError::Truncated { needed: len, got: payload.len() });
+            }
+            Frame::Catchup { snapshot: d.take(len)?.to_vec() }
+        }
+        TAG_RACK_RESULT => {
+            let rack = d.u32()?;
+            let transfers = d.u64()?;
+            let converged = match d.u8()? {
+                0 => false,
+                1 => true,
+                other => {
+                    return Err(WireError::Protocol(format!("bad converged byte {other}")))
+                }
+            };
+            let len = d.u32()? as usize;
+            if 8 * len > payload.len() {
+                return Err(WireError::Truncated { needed: 8 * len, got: payload.len() });
+            }
+            Frame::RackResult {
+                rack,
+                transfers,
+                converged,
+                assignment: (0..len)
+                    .map(|_| Ok((d.u32()?, d.u32()?)))
+                    .collect::<Result<_, WireError>>()?,
+            }
+        }
+        other => return Err(WireError::BadTag(other)),
+    };
+    d.finish()?;
+    Ok(frame)
+}
+
+/// Read one length-prefixed frame from a stream.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix)?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized { len });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    decode_payload(&payload)
+}
+
+/// Write one frame to a stream.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<usize, WireError> {
+    let bytes = encode_frame(frame)?;
+    w.write_all(&bytes)?;
+    Ok(bytes.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_message_shapes() -> Vec<Message> {
+        vec![
+            Message::TakeMyTurn { consecutive_forfeits: 3, transfers_so_far: 17 },
+            Message::ReceiveNode { seq: 9, node: 1234, from: 2, to: 0 },
+            Message::RegularUpdate {
+                seq: 10,
+                node: 7,
+                from: 1,
+                to: 3,
+                loads: vec![0.25, -1.5, 3.75, f64::MAX, 0.0],
+            },
+            Message::RackUpdate { seq: 11, node: 8, from: 0, to: 1, rack_loads: vec![0.5, 1.5] },
+            Message::Shutdown { total_transfers: 42, converged: true },
+            Message::Shutdown { total_transfers: 7, converged: false },
+        ]
+    }
+    #[test]
+    fn message_round_trip_and_exact_sizes() {
+        for msg in all_message_shapes() {
+            let bytes = encode_frame(&Frame::Msg(msg.clone())).unwrap();
+            assert_eq!(bytes.len(), msg.wire_bytes(), "{}", msg.tag());
+            let decoded = decode_payload(&bytes[4..]).unwrap();
+            assert_eq!(decoded, Frame::Msg(msg));
+        }
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        let frames = vec![
+            Frame::Hello { version: WIRE_VERSION, machine: 2, machines: 5 },
+            Frame::Setup(SetupFrame {
+                speeds: vec![0.25, 0.75],
+                mu: 8.0,
+                framework: Framework::B,
+                migration_charge: 3.25,
+                epsilon: 1e-9,
+                max_transfers: 1_000_000,
+                recv_timeout_ms: 30_000,
+                node_weights: vec![1.0, 2.0, 3.0],
+                edges: vec![(0, 1, 1.5), (1, 2, 2.5)],
+                racks: vec![0, 1],
+            }),
+            Frame::EpochBegin(EpochFrame {
+                epoch: 4,
+                phase: 2,
+                node_weights: vec![0.5; 3],
+                edge_weights: vec![1.0, 2.0],
+                assignment: vec![0, 1, 0],
+            }),
+            Frame::RoundStats(OverheadStats {
+                take_my_turn: Counter { messages: 5, bytes: 105 },
+                ..Default::default()
+            }),
+            Frame::Restore { survivors: vec![0, 2, 3], speeds: vec![0.25, 0.25, 0.5] },
+            Frame::Join { machine: 4, speed: 0.125, rack: u32::MAX },
+            Frame::Join { machine: 5, speed: 0.5, rack: 1 },
+            Frame::RestoreAck { machine: 3 },
+            Frame::Admit {
+                members: vec![0, 2, 3],
+                joiner: 2,
+                speeds: vec![0.25, 0.25, 0.5],
+                rack: 1,
+            },
+            Frame::RackResult {
+                rack: 1,
+                transfers: 3,
+                converged: true,
+                assignment: vec![(5, 2), (9, 3)],
+            },
+            Frame::RackResult { rack: 0, transfers: 0, converged: false, assignment: vec![] },
+            Frame::AdmitAck { machine: 2 },
+            Frame::Catchup { snapshot: vec![] },
+            Frame::Catchup { snapshot: vec![0xDE, 0xAD, 0xBE, 0xEF] },
+            Frame::Goodbye,
+        ];
+        for f in frames {
+            let bytes = encode_frame(&f).unwrap();
+            assert_eq!(decode_payload(&bytes[4..]).unwrap(), f);
+        }
+    }
+
+    /// A `Catchup` whose declared snapshot length exceeds the actual
+    /// payload must be a clean truncation error, not a panic or a
+    /// huge-allocation attempt.
+    #[test]
+    fn lying_catchup_length_is_truncation_not_panic() {
+        let mut payload = vec![TAG_CATCHUP];
+        put_u32(&mut payload, 100); // claims 100 snapshot bytes...
+        payload.extend_from_slice(&[0u8; 10]); // ...carries 10
+        assert!(matches!(decode_payload(&payload), Err(WireError::Truncated { .. })));
+    }
+
+    /// Node/machine ids that do not fit the u32 wire format must come
+    /// back as a clean error from the encoder, not a silent truncation.
+    #[test]
+    fn oversize_ids_rejected_at_encode_time() {
+        if std::mem::size_of::<usize>() <= 4 {
+            return; // the bug cannot exist on 32-bit targets
+        }
+        let huge = u32::MAX as usize + 1;
+        let msg = Message::ReceiveNode { seq: 0, node: 1, from: huge, to: 0 };
+        assert!(encode_frame(&Frame::Msg(msg)).is_err());
+        assert!(wire_u32(huge).is_err());
+        assert_eq!(wire_u32(u32::MAX as usize).unwrap(), u32::MAX);
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly() {
+        for msg in all_message_shapes() {
+            let bytes = encode_frame(&Frame::Msg(msg)).unwrap();
+            // Every strict prefix of the payload must fail without
+            // panicking.
+            for cut in 0..bytes.len() - 4 {
+                assert!(
+                    decode_payload(&bytes[4..4 + cut]).is_err(),
+                    "prefix of {cut} bytes decoded"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = encode_frame(&Frame::Goodbye).unwrap();
+        bytes.push(0xFF);
+        assert!(matches!(
+            decode_payload(&bytes[4..]),
+            Err(WireError::TrailingBytes { extra: 1 })
+        ));
+    }
+
+    #[test]
+    fn bad_tag_and_oversized_rejected() {
+        assert!(matches!(decode_payload(&[0xEE]), Err(WireError::BadTag(0xEE))));
+        // Oversized length prefix rejected before allocation.
+        let mut stream = Vec::new();
+        put_u32(&mut stream, (MAX_FRAME_BYTES + 1) as u32);
+        let mut cursor = &stream[..];
+        assert!(matches!(read_frame(&mut cursor), Err(WireError::Oversized { .. })));
+    }
+
+    #[test]
+    fn lying_vector_length_is_truncation_not_panic() {
+        // RegularUpdate claiming 1000 loads but carrying none.
+        let mut payload = vec![TAG_REGULAR_UPDATE];
+        put_u64(&mut payload, 0);
+        put_u64(&mut payload, 1);
+        put_u32(&mut payload, 0);
+        put_u32(&mut payload, 1);
+        put_u32(&mut payload, 1000);
+        assert!(matches!(decode_payload(&payload), Err(WireError::Truncated { .. })));
+    }
+
+    #[test]
+    fn handshake_version_and_magic_enforced() {
+        let mut payload = vec![TAG_HELLO];
+        payload.extend_from_slice(b"NOPE");
+        put_u16(&mut payload, WIRE_VERSION);
+        put_u32(&mut payload, 0);
+        put_u32(&mut payload, 2);
+        assert!(matches!(decode_payload(&payload), Err(WireError::BadMagic)));
+
+        let mut payload = vec![TAG_HELLO];
+        payload.extend_from_slice(&WIRE_MAGIC);
+        put_u16(&mut payload, WIRE_VERSION + 1);
+        put_u32(&mut payload, 0);
+        put_u32(&mut payload, 2);
+        assert!(matches!(decode_payload(&payload), Err(WireError::BadVersion { .. })));
+    }
+    /// A `RackResult` whose declared assignment length exceeds the
+    /// actual payload must be a clean truncation error, not a panic or
+    /// a huge-allocation attempt.
+    #[test]
+    fn lying_rack_result_length_is_truncation_not_panic() {
+        let mut payload = vec![TAG_RACK_RESULT];
+        put_u32(&mut payload, 1); // rack
+        payload.extend_from_slice(&3u64.to_le_bytes()); // transfers
+        payload.push(1); // converged
+        put_u32(&mut payload, 1000); // claims 1000 pairs...
+        payload.extend_from_slice(&[0u8; 16]); // ...carries 2
+        assert!(matches!(decode_payload(&payload), Err(WireError::Truncated { .. })));
+    }
+
+    /// Satellite of the layering refactor: an error surfaced to the
+    /// CLI names the peer wire id and the protocol state it died in,
+    /// with the underlying failure preserved verbatim.
+    #[test]
+    fn context_names_the_peer_and_the_protocol_state() {
+        let inner = WireError::Protocol("timed out waiting for a control frame".into());
+        let msg = inner.while_awaiting("awaiting AdmitAck", 3).to_string();
+        assert!(msg.contains("peer 3, awaiting AdmitAck"), "{msg}");
+        assert!(msg.contains("timed out waiting for a control frame"), "{msg}");
+
+        let io = WireError::Io("dialing 127.0.0.1:9: refused".into());
+        let msg = io.while_awaiting("dialing", 2).to_string();
+        assert!(msg.contains("peer 2, dialing"), "{msg}");
+        assert!(msg.contains("refused"), "{msg}");
+    }
+}

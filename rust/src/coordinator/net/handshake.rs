@@ -1,0 +1,247 @@
+//! Hello/version negotiation for the coordinator's network stack
+//! (DESIGN.md §13). Every socket that enters the mesh passes through
+//! one of these deadline-bounded handshakes: [`accept_peers`] forms
+//! the initial mesh, [`accept_wire_peer`] re-admits a known wire id
+//! after recovery or join, and [`join_handshake`] vets a would-be
+//! joiner's `Hello` + `Join` before the leader decides on admission.
+//! The deadline logic is strict — a fully elapsed deadline rejects
+//! even a valid `Hello` already sitting in the socket buffer, so
+//! connect-spamming peers cannot stretch the recovery grace window.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::codec::{read_frame, Frame, WireError};
+use super::leader::JoinRequest;
+use super::session::ACCEPT_POLL;
+use crate::partition::MachineId;
+
+/// How long the acceptor gives one joiner to complete its
+/// `Hello` + `Join` handshake before dropping the connection.
+pub(super) const JOIN_HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Validate one inbound connection's `Hello` handshake.
+pub(super) fn handshake_inbound(
+    mut stream: TcpStream,
+    id: MachineId,
+    k: usize,
+    deadline: Instant,
+    seen: &[bool],
+) -> Result<(MachineId, TcpStream), WireError> {
+    stream.set_nonblocking(false)?;
+    // A fully elapsed deadline must fail *now*. The old code clamped
+    // the remaining window up to 1 ms and read anyway, so a peer that
+    // kept connecting could stretch the handshake far past the bound
+    // the recovery grace-window math (DESIGN.md §10) relies on.
+    let left = deadline.saturating_duration_since(Instant::now());
+    if left.is_zero() {
+        return Err(WireError::Protocol("handshake deadline already passed".into()));
+    }
+    stream.set_read_timeout(Some(left))?;
+    let hello = read_frame(&mut stream)?;
+    let Frame::Hello { machine, machines, .. } = hello else {
+        return Err(WireError::Protocol(format!("expected Hello, got {hello:?}")));
+    };
+    let peer = machine as MachineId;
+    if machines as usize != k || peer >= k || peer == id {
+        return Err(WireError::Protocol(format!(
+            "peer says machine {machine}/{machines}, we are {id}/{k}"
+        )));
+    }
+    if seen[peer] {
+        return Err(WireError::Protocol(format!("duplicate dial from machine {peer}")));
+    }
+    stream.set_read_timeout(None)?;
+    stream.set_nodelay(true)?;
+    Ok((peer, stream))
+}
+
+/// Accept inbound connections until one valid `Hello` per peer has
+/// arrived. A single bad connection (port scanner, garbage handshake,
+/// stray re-dial) is dropped with a note — never allowed to kill the
+/// mesh join; only the overall deadline fails it.
+pub(super) fn accept_peers(
+    listener: TcpListener,
+    id: MachineId,
+    k: usize,
+    deadline: Instant,
+) -> Result<Vec<(MachineId, TcpStream)>, WireError> {
+    listener.set_nonblocking(true)?;
+    let mut inbound: Vec<(MachineId, TcpStream)> = Vec::with_capacity(k - 1);
+    let mut seen = vec![false; k];
+    while inbound.len() < k - 1 {
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                // Per-connection handshake; any failure drops only this
+                // socket.
+                match handshake_inbound(stream, id, k, deadline, &seen) {
+                    Ok((peer, stream)) => {
+                        seen[peer] = true;
+                        inbound.push((peer, stream));
+                    }
+                    Err(e) => {
+                        eprintln!("gtip net: dropping inbound connection from {addr}: {e}");
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Protocol(format!(
+                        "timed out waiting for {} inbound peers (have {})",
+                        k - 1,
+                        inbound.len()
+                    )));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(inbound)
+}
+
+/// Validate one would-be joiner's `Hello` + `Join`. On a *semantic*
+/// reject the stream is returned so the caller can send a `Goodbye`
+/// (telling the joiner to give up rather than retry); on an I/O or
+/// codec failure it is simply dropped.
+pub(super) fn join_handshake(
+    mut stream: TcpStream,
+    k_orig: usize,
+) -> Result<JoinRequest, (WireError, Option<TcpStream>)> {
+    let io = |e: WireError| (e, None);
+    stream.set_nonblocking(false).map_err(|e| io(e.into()))?;
+    stream.set_read_timeout(Some(JOIN_HANDSHAKE_TIMEOUT)).map_err(|e| io(e.into()))?;
+    let hello = read_frame(&mut stream).map_err(io)?;
+    let Frame::Hello { machine, machines, .. } = hello else {
+        return Err((WireError::Protocol(format!("expected Hello, got {hello:?}")), None));
+    };
+    let wire_id = machine as MachineId;
+    if machines as usize != k_orig || wire_id == 0 || wire_id >= k_orig {
+        return Err((
+            WireError::Protocol(format!(
+                "joiner says machine {machine}/{machines}, cluster is {k_orig} machines"
+            )),
+            Some(stream),
+        ));
+    }
+    let join = read_frame(&mut stream).map_err(io)?;
+    let Frame::Join { machine: jm, speed, rack } = join else {
+        return Err((WireError::Protocol(format!("expected Join, got {join:?}")), None));
+    };
+    if jm as MachineId != wire_id {
+        return Err((
+            WireError::Protocol(format!("Join names machine {jm} but Hello said {machine}")),
+            Some(stream),
+        ));
+    }
+    if !(speed.is_finite() && speed > 0.0) {
+        return Err((
+            WireError::Protocol(format!("join speed {speed} must be finite and positive")),
+            Some(stream),
+        ));
+    }
+    stream.set_read_timeout(None).map_err(|e| io(e.into()))?;
+    stream.set_nodelay(true).map_err(|e| io(e.into()))?;
+    // u32::MAX = "leader's choice"; anything else is a request the
+    // leader validates against its layout at admission time.
+    let rack = if rack == u32::MAX { None } else { Some(rack as usize) };
+    Ok(JoinRequest { wire_id, speed, rack, stream })
+}
+
+/// Accept connections on the retained (nonblocking) mesh listener
+/// until the expected wire peer's `Hello` arrives. Strangers and
+/// garbage handshakes are dropped with a note, exactly like the
+/// original mesh accept; only the deadline fails the wait.
+pub(super) fn accept_wire_peer(
+    listener: &TcpListener,
+    expect_wire: MachineId,
+    k_orig: usize,
+    deadline: Instant,
+) -> Result<TcpStream, WireError> {
+    loop {
+        match listener.accept() {
+            Ok((mut stream, addr)) => {
+                let hello = (|| -> Result<MachineId, WireError> {
+                    stream.set_nonblocking(false)?;
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(WireError::Protocol(
+                            "handshake deadline already passed".into(),
+                        ));
+                    }
+                    stream.set_read_timeout(Some(left))?;
+                    match read_frame(&mut stream)? {
+                        Frame::Hello { machine, machines, .. }
+                            if machines as usize == k_orig =>
+                        {
+                            Ok(machine as MachineId)
+                        }
+                        frame => {
+                            Err(WireError::Protocol(format!("expected Hello, got {frame:?}")))
+                        }
+                    }
+                })();
+                match hello {
+                    Ok(peer) if peer == expect_wire => {
+                        stream.set_read_timeout(None)?;
+                        stream.set_nodelay(true)?;
+                        return Ok(stream);
+                    }
+                    Ok(peer) => eprintln!(
+                        "gtip net: dropping dial from machine {peer} while expecting {expect_wire}"
+                    ),
+                    Err(e) => {
+                        eprintln!("gtip net: dropping inbound connection from {addr}: {e}")
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Protocol(format!(
+                        "timed out waiting for wire id {expect_wire}'s dial"
+                    )));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write;
+
+    use super::super::codec::{encode_frame, WIRE_VERSION};
+    use super::*;
+
+    /// The handshake must fail *immediately* once its deadline has
+    /// passed — even for a peer whose valid `Hello` is already sitting
+    /// in the socket buffer. The old code clamped the remaining window
+    /// up to 1 ms and read anyway, letting connect-spamming peers
+    /// stretch the accept loop past the recovery grace-window bound.
+    #[test]
+    fn handshake_rejects_once_the_deadline_has_passed() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        // The Hello itself is perfectly valid and already delivered...
+        let hello =
+            encode_frame(&Frame::Hello { version: WIRE_VERSION, machine: 1, machines: 2 })
+                .unwrap();
+        client.write_all(&hello).unwrap();
+        client.flush().unwrap();
+        // ...but the deadline expired before the accept got to it.
+        let deadline = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        let start = Instant::now();
+        let result = handshake_inbound(stream, 0, 2, deadline, &[false; 2]);
+        assert!(result.is_err(), "an expired deadline must reject even a valid Hello");
+        assert!(
+            start.elapsed() < Duration::from_secs(1),
+            "the rejection must be immediate, not a blocking read: {:?}",
+            start.elapsed()
+        );
+    }
+}

@@ -1,0 +1,935 @@
+//! Layer 4a of the coordinator's network stack (DESIGN.md §13):
+//! machine 0's cluster orchestration. [`ClusterLeader`] owns the
+//! leader endpoint and drives the run — `Setup` broadcast, one
+//! [`ClusterLeader::refine`] per epoch boundary (flat, or the phased
+//! hierarchical rounds of DESIGN.md §12), the `RoundStats` barriers,
+//! death diagnosis and `Restore` recovery, and `Join` admission with
+//! rollback. Barrier failures are annotated with the peer wire id and
+//! the frame being awaited before they surface to the driver/CLI.
+
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::bus::Bus;
+use crate::coordinator::distributed::{
+    machine_loop, machine_loop_scoped, DistributedOptions, DistributedReport, RackBus,
+};
+use crate::coordinator::machine::MachineActor;
+use crate::coordinator::protocol::{Message, OverheadStats};
+use crate::game::hierarchy::{guarded_map_back, RackLayout};
+use crate::graph::Graph;
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+use super::codec::{wire_u32, write_frame, EpochFrame, Frame, SetupFrame, WireError, WIRE_VERSION};
+use super::handshake::join_handshake;
+use super::mesh::{connect_mesh, NetStats, TcpEndpoint};
+use super::session::{dial_peer, ACCEPT_POLL};
+
+/// Machine 0's handle on a multi-process cluster: owns the leader
+/// endpoint and runs one refinement round per [`ClusterLeader::refine`]
+/// call, aggregating the workers' overhead reports.
+pub struct ClusterLeader {
+    ep: TcpEndpoint,
+    opts: DistributedOptions,
+    epoch: u64,
+    /// Which machines (current logical ids) delivered their
+    /// `RoundStats` in the round in flight. Kept on the leader — not
+    /// rebuilt inside the barrier loop — because a failed round's
+    /// partial barrier is evidence [`ClusterLeader::diagnose_dead`]
+    /// must not lose: a worker whose report was already consumed
+    /// will not send it again.
+    reported: Vec<bool>,
+    /// The original peer list — wire id → address. An admission dials
+    /// the joiner at its listed address.
+    addrs: Vec<String>,
+    /// Patience of the admission handshake's ack barrier (and of the
+    /// rollback barrier should it fail). Must stay *longer* than the
+    /// workers' own dial window (one receive timeout), or a survivor
+    /// still dialing a dead joiner would miss the rollback broadcast.
+    admit_window: Duration,
+    /// Validated join requests queued by the acceptor thread.
+    pending: Receiver<JoinRequest>,
+    /// Requests drained from the channel but not yet admitted (e.g. a
+    /// second joiner arriving while one admission is in flight).
+    pending_buf: VecDeque<JoinRequest>,
+    /// Tells the acceptor thread to stop accepting joiners.
+    acceptor_stop: Arc<AtomicBool>,
+    /// Two-level rack layout (wire v5, DESIGN.md §12); `None` plays the
+    /// flat single-level game. Ships to workers in `Setup` and tracks
+    /// membership changes (recovery shrinks it, admission grows it).
+    layout: Option<RackLayout>,
+}
+
+/// One validated `Join` handshake, queued until the next epoch
+/// boundary. The stream is the joiner's dial to the leader — it
+/// becomes the leader's inbound reader for the joiner on admission.
+pub struct JoinRequest {
+    /// The joiner's immutable wire id (its slot in the peer list).
+    pub wire_id: MachineId,
+    /// Self-reported relative speed (1.0 = an average machine).
+    pub speed: f64,
+    /// Requested rack (wire v5); `None` = leader's choice. Ignored on
+    /// a flat cluster.
+    pub rack: Option<usize>,
+    pub(super) stream: TcpStream,
+}
+
+impl ClusterLeader {
+    /// Join the mesh as machine 0 and wait for every worker.
+    pub fn connect(
+        addrs: &[String],
+        opts: DistributedOptions,
+        connect_timeout: Duration,
+    ) -> Result<ClusterLeader, WireError> {
+        let stats = Arc::new(Mutex::new(OverheadStats::default()));
+        let ep = connect_mesh(0, addrs, connect_timeout, stats)?;
+        let k = ep.machine_count();
+        // The admission acceptor listens for joiners on a clone of the
+        // leader's (now idle) mesh listener for the rest of the run.
+        let acceptor = ep.listener.try_clone()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, pending) = channel();
+        {
+            let stop = Arc::clone(&stop);
+            let k_orig = addrs.len();
+            std::thread::spawn(move || join_acceptor(acceptor, k_orig, stop, tx));
+        }
+        let admit_window = opts.recv_timeout.saturating_mul(2);
+        Ok(ClusterLeader {
+            ep,
+            opts,
+            epoch: 0,
+            reported: vec![false; k],
+            addrs: addrs.to_vec(),
+            admit_window,
+            pending,
+            pending_buf: VecDeque::new(),
+            acceptor_stop: stop,
+            layout: None,
+        })
+    }
+
+    /// Install the two-level rack layout (DESIGN.md §12). Must be
+    /// called before [`ClusterLeader::setup`] so the machine → rack map
+    /// ships with the fixture; every subsequent
+    /// [`ClusterLeader::refine`] then plays the hierarchical game. A
+    /// singleton layout (every machine its own rack) is accepted and
+    /// reproduces the flat game bit-for-bit.
+    pub fn set_racks(&mut self, layout: RackLayout) -> Result<(), WireError> {
+        if layout.machine_count() != self.ep.machine_count() {
+            return Err(WireError::Protocol(format!(
+                "rack layout covers {} machines but the cluster has {}",
+                layout.machine_count(),
+                self.ep.machine_count()
+            )));
+        }
+        self.layout = Some(layout);
+        Ok(())
+    }
+
+    /// Override the admission/rollback barrier patience (defaults to
+    /// twice the receive timeout).
+    pub fn set_admit_window(&mut self, window: Duration) {
+        self.admit_window = window.max(Duration::from_millis(1));
+    }
+
+    pub fn machine_count(&self) -> usize {
+        self.ep.machine_count()
+    }
+
+    /// Control-plane accounting so far (handshake/setup/epoch frames).
+    pub fn net_stats(&self) -> NetStats {
+        self.ep.net_snapshot()
+    }
+
+    /// The shared fixture as a `Setup` frame (broadcast at startup,
+    /// and re-sent to a joiner on admission).
+    fn setup_frame(&self, graph: &Graph, machines: &MachineConfig) -> Result<Frame, WireError> {
+        Ok(Frame::Setup(SetupFrame {
+            speeds: machines.speeds().to_vec(),
+            mu: self.opts.mu,
+            framework: self.opts.framework,
+            migration_charge: self.opts.migration_charge,
+            epsilon: self.opts.epsilon,
+            max_transfers: self.opts.max_transfers as u64,
+            recv_timeout_ms: self.opts.recv_timeout.as_millis() as u64,
+            node_weights: graph.node_weights().to_vec(),
+            edges: graph
+                .edges()
+                .map(|(u, v, w)| Ok((wire_u32(u)?, wire_u32(v)?, w)))
+                .collect::<Result<_, WireError>>()?,
+            racks: match &self.layout {
+                Some(l) => {
+                    l.rack_of_slice().iter().map(|&r| wire_u32(r)).collect::<Result<_, _>>()?
+                }
+                None => Vec::new(),
+            },
+        }))
+    }
+
+    /// Broadcast the shared fixture. Must be called once, before the
+    /// first [`ClusterLeader::refine`].
+    pub fn setup(&self, graph: &Graph, machines: &MachineConfig) -> Result<(), WireError> {
+        if machines.count() != self.ep.machine_count() {
+            return Err(WireError::Protocol(format!(
+                "cluster has {} machines but the fixture wants {}",
+                self.ep.machine_count(),
+                machines.count()
+            )));
+        }
+        self.ep.broadcast_ctrl(&self.setup_frame(graph, machines)?)
+    }
+
+    /// Run one refinement round across the cluster: re-sync weights and
+    /// the warm-start assignment, play machine 0's part of the ring (or
+    /// the two hierarchical phases if a rack layout is installed), then
+    /// collect every worker's overhead report (the epoch barrier).
+    pub fn refine(
+        &mut self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        initial: Partition,
+    ) -> Result<DistributedReport, WireError> {
+        match self.layout.clone() {
+            Some(layout) => self.refine_hierarchical(graph, machines, initial, &layout),
+            None => self.refine_flat(graph, machines, initial),
+        }
+    }
+
+    /// `EpochBegin` broadcast shared by the flat round and both
+    /// hierarchical phases. Attempts every peer even after a failure:
+    /// the live peers must receive the round so they can later prove
+    /// themselves to the death diagnosis with a RoundStats (a failed
+    /// send is recorded by `send_ctrl` as evidence against the dead
+    /// one).
+    fn broadcast_begin(&mut self, begin: &Frame) -> Result<(), WireError> {
+        let k = self.ep.machine_count();
+        let mut lost_at_broadcast = Vec::new();
+        for to in 1..k {
+            if let Err(e) = self.ep.send_ctrl(to, begin) {
+                eprintln!("gtip leader: EpochBegin to machine {to} failed: {e}");
+                lost_at_broadcast.push(to);
+            }
+        }
+        if !lost_at_broadcast.is_empty() {
+            return Err(WireError::Protocol(format!(
+                "EpochBegin broadcast lost machine(s) {lost_at_broadcast:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    /// The epoch frame for one round phase.
+    fn epoch_frame(
+        &self,
+        epoch: u64,
+        phase: u8,
+        graph: &Graph,
+        assignment: &[MachineId],
+    ) -> Result<Frame, WireError> {
+        Ok(Frame::EpochBegin(EpochFrame {
+            epoch,
+            phase,
+            node_weights: graph.node_weights().to_vec(),
+            edge_weights: graph.edges().map(|(_, _, w)| w).collect(),
+            assignment: assignment.iter().map(|&m| wire_u32(m)).collect::<Result<_, _>>()?,
+        }))
+    }
+
+    fn refine_flat(
+        &mut self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        initial: Partition,
+    ) -> Result<DistributedReport, WireError> {
+        let k = self.ep.machine_count();
+        if machines.count() != k {
+            return Err(WireError::Protocol(format!(
+                "cluster has {k} machines but the round's fixture wants {}",
+                machines.count()
+            )));
+        }
+        // Any message still buffered here is stale traffic from an
+        // aborted round (post-recovery); the broadcast below opens a
+        // fresh round, so this is the one safe point to discard it.
+        self.ep.drain_inbox();
+        self.reported = vec![false; k];
+        self.reported[0] = true;
+        let epoch = self.epoch;
+        self.epoch += 1;
+        let begin = self.epoch_frame(epoch, 0, graph, initial.assignment())?;
+        self.broadcast_begin(&begin)?;
+
+        let before = self.ep.stats_snapshot();
+        let actor = MachineActor::new(
+            0,
+            Arc::new(graph.clone()),
+            machines.clone(),
+            &initial,
+            self.opts.mu,
+            self.opts.framework,
+            self.opts.migration_charge,
+        );
+        self.ep.send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+        let outcome =
+            machine_loop(actor, &self.ep, self.opts.epsilon, self.opts.max_transfers, self.opts.recv_timeout);
+        if outcome.timed_out {
+            return Err(WireError::Protocol(match outcome.dead_peer {
+                Some(m) => format!("refinement round lost machine {m} (send failed)"),
+                None => "refinement round timed out waiting on a peer".into(),
+            }));
+        }
+
+        // Barrier: one RoundStats per worker closes the round. Who has
+        // reported lives on `self` so a barrier that fails part-way
+        // leaves the evidence for `diagnose_dead`.
+        let mut overhead = self.ep.stats_snapshot().delta_since(&before);
+        let mut remaining = k - 1;
+        while remaining > 0 {
+            let waiting = self.first_unreported_wire();
+            match self.recv_awaiting(self.opts.recv_timeout, "awaiting RoundStats", waiting)? {
+                (peer, Frame::RoundStats(s)) if !self.reported[peer] => {
+                    self.reported[peer] = true;
+                    overhead.add(&s);
+                    remaining -= 1;
+                }
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during barrier: {frame:?}"
+                    )));
+                }
+            }
+        }
+
+        // Every transfer reaches every replica, so the leader's applied
+        // count *is* the global transfer total.
+        let partition = Partition::from_assignment(graph, k, outcome.assignment);
+        Ok(DistributedReport {
+            partition,
+            transfers: outcome.transfers_applied as usize,
+            overhead,
+            converged: outcome.converged,
+            timed_out: false,
+        })
+    }
+
+    /// One hierarchical epoch (DESIGN.md §12): a phase-1 outer round
+    /// where the leader and the other rack leaders exchange O(R)
+    /// `RackUpdate` aggregates over a [`RackBus`], the guarded
+    /// map-back, then a phase-2 round of concurrent per-rack scoped
+    /// rings. Non-leader racks ship their ring outcome back in a
+    /// `RackResult`; the leader merges them into the final partition.
+    fn refine_hierarchical(
+        &mut self,
+        graph: &Graph,
+        machines: &MachineConfig,
+        initial: Partition,
+        layout: &RackLayout,
+    ) -> Result<DistributedReport, WireError> {
+        let k = self.ep.machine_count();
+        if machines.count() != k {
+            return Err(WireError::Protocol(format!(
+                "cluster has {k} machines but the round's fixture wants {}",
+                machines.count()
+            )));
+        }
+        if layout.machine_count() != k {
+            return Err(WireError::Protocol(format!(
+                "rack layout covers {} machines but the cluster has {k}",
+                layout.machine_count()
+            )));
+        }
+        let racks = layout.rack_count();
+        self.ep.drain_inbox();
+        self.reported = vec![false; k];
+        self.reported[0] = true;
+        let epoch = self.epoch;
+        self.epoch += 1;
+
+        // Phase 1: the outer game on the rack quotient. Machine 0
+        // always leads its own rack (it is the smallest id), and kicks
+        // rack 0 — possibly itself — exactly like the in-process ring.
+        let begin = self.epoch_frame(epoch, 1, graph, initial.assignment())?;
+        self.broadcast_begin(&begin)?;
+        let before = self.ep.stats_snapshot();
+        let my_rack = layout.rack_of(0);
+        let qconfig = layout.quotient_config(machines);
+        let qpart = Partition::from_assignment(
+            graph,
+            racks,
+            layout.quotient_assignment(initial.assignment()),
+        );
+        let actor = MachineActor::new(
+            my_rack,
+            Arc::new(graph.clone()),
+            qconfig,
+            &qpart,
+            self.opts.mu,
+            self.opts.framework,
+            self.opts.migration_charge,
+        );
+        let outer = {
+            let bus = RackBus::new(&self.ep, my_rack, layout.leaders());
+            bus.send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+            let opts = &self.opts;
+            machine_loop(actor, &bus, opts.epsilon, opts.max_transfers, opts.recv_timeout)
+        };
+        if outer.timed_out {
+            return Err(WireError::Protocol(match outer.dead_peer {
+                Some(r) => format!("outer round lost rack {r}'s leader (send failed)"),
+                None => "outer round timed out waiting on a rack leader".into(),
+            }));
+        }
+        // Phase-1 barrier: every worker reports, spectators included.
+        let mut worker_stats = OverheadStats::default();
+        self.stats_barrier(&mut worker_stats)?;
+
+        // Guarded map-back to machines (shared with every other
+        // deployment of the hierarchy).
+        let mapped = guarded_map_back(
+            graph,
+            machines,
+            layout,
+            initial.assignment(),
+            &outer.assignment,
+            self.opts.mu,
+            self.opts.framework,
+        );
+        let outer_transfers =
+            if mapped.accepted { outer.transfers_applied as usize } else { 0 };
+        let start = Partition::from_assignment(graph, k, mapped.assignment);
+
+        // Phase 2: concurrent scoped rings, one per rack. The leader
+        // plays (and kicks) its own rack's ring; every other rack's
+        // leader kicks its own.
+        self.reported = vec![false; k];
+        self.reported[0] = true;
+        let begin = self.epoch_frame(epoch, 2, graph, start.assignment())?;
+        self.broadcast_begin(&begin)?;
+        let scope = layout.members(my_rack).to_vec();
+        let actor = MachineActor::new(
+            0,
+            Arc::new(graph.clone()),
+            machines.clone(),
+            &start,
+            self.opts.mu,
+            self.opts.framework,
+            self.opts.migration_charge,
+        )
+        .with_scope(scope.clone());
+        self.ep.send(0, Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 });
+        let inner = machine_loop_scoped(
+            actor,
+            &self.ep,
+            &scope,
+            self.opts.epsilon,
+            self.opts.max_transfers,
+            self.opts.recv_timeout,
+        );
+        if inner.timed_out {
+            return Err(WireError::Protocol(match inner.dead_peer {
+                Some(m) => format!("inner round lost machine {m} (send failed)"),
+                None => "inner round timed out waiting on a rack member".into(),
+            }));
+        }
+
+        // Phase-2 barrier: K−1 RoundStats plus one RackResult from
+        // every rack the leader is not in, in any interleaving.
+        let mut assignment = inner.assignment.clone();
+        let mut transfers = outer_transfers + inner.transfers_applied as usize;
+        let mut converged = outer.converged && inner.converged;
+        let mut got_rack = vec![false; racks];
+        got_rack[my_rack] = true;
+        let mut remaining_stats = k - 1;
+        let mut remaining_racks = racks - 1;
+        while remaining_stats > 0 || remaining_racks > 0 {
+            let (state, waiting) = if remaining_stats > 0 {
+                ("awaiting RoundStats", self.first_unreported_wire())
+            } else {
+                let rack = (0..racks).find(|&r| !got_rack[r]).unwrap_or(0);
+                ("awaiting RackResult", self.ep.wire_of(layout.leader(rack)))
+            };
+            match self.recv_awaiting(self.opts.recv_timeout, state, waiting)? {
+                (peer, Frame::RoundStats(s)) if !self.reported[peer] => {
+                    self.reported[peer] = true;
+                    worker_stats.add(&s);
+                    remaining_stats -= 1;
+                }
+                (peer, Frame::RackResult { rack, transfers: t, converged: c, assignment: a }) => {
+                    let rack = rack as usize;
+                    if rack >= racks || got_rack[rack] || layout.leader(rack) != peer {
+                        return Err(WireError::Protocol(format!(
+                            "machine {peer} sent an invalid RackResult for rack {rack}"
+                        )));
+                    }
+                    got_rack[rack] = true;
+                    for &(node, machine) in &a {
+                        let (node, machine) = (node as usize, machine as MachineId);
+                        let valid = node < assignment.len()
+                            && machine < k
+                            && layout.rack_of(machine) == rack
+                            && layout.rack_of(start.machine_of(node)) == rack;
+                        if !valid {
+                            return Err(WireError::Protocol(format!(
+                                "rack {rack} reported an out-of-rack move of node {node}"
+                            )));
+                        }
+                        assignment[node] = machine;
+                    }
+                    transfers += t as usize;
+                    converged = converged && c;
+                    remaining_racks -= 1;
+                }
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during barrier: {frame:?}"
+                    )));
+                }
+            }
+        }
+        let mut overhead = self.ep.stats_snapshot().delta_since(&before);
+        overhead.add(&worker_stats);
+        Ok(DistributedReport {
+            partition: Partition::from_assignment(graph, k, assignment),
+            transfers,
+            overhead,
+            converged,
+            timed_out: false,
+        })
+    }
+
+    /// `recv_ctrl` with barrier context: a failure names the peer the
+    /// barrier is still waiting on (wire id) and the frame it awaits,
+    /// so the error that reaches the CLI reads "peer 3, awaiting
+    /// AdmitAck: …" instead of a bare timeout.
+    fn recv_awaiting(
+        &self,
+        timeout: Duration,
+        state: &str,
+        peer_wire: MachineId,
+    ) -> Result<(MachineId, Frame), WireError> {
+        self.ep.recv_ctrl(timeout).map_err(|e| e.while_awaiting(state, peer_wire))
+    }
+
+    /// The wire id of the first peer whose `RoundStats` the round in
+    /// flight is still missing (context for barrier errors).
+    fn first_unreported_wire(&self) -> MachineId {
+        let k = self.ep.machine_count();
+        let logical = (0..k).find(|&m| !self.reported[m]).unwrap_or(0);
+        self.ep.wire_of(logical)
+    }
+
+    /// Barrier on K−1 worker `RoundStats`, folding them into `into`.
+    fn stats_barrier(&mut self, into: &mut OverheadStats) -> Result<(), WireError> {
+        let mut remaining = self.ep.machine_count() - 1;
+        while remaining > 0 {
+            let waiting = self.first_unreported_wire();
+            match self.recv_awaiting(self.opts.recv_timeout, "awaiting RoundStats", waiting)? {
+                (peer, Frame::RoundStats(s)) if !self.reported[peer] => {
+                    self.reported[peer] = true;
+                    into.add(&s);
+                    remaining -= 1;
+                }
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during barrier: {frame:?}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// After a failed [`ClusterLeader::refine`], work out which
+    /// workers are dead. Evidence is twofold: send failures recorded
+    /// at the leader's own sockets, and silence — any worker that does
+    /// not deliver its `RoundStats` within one receive-timeout grace
+    /// window. Live workers send `RoundStats` even after a timed-out
+    /// round precisely so they can prove themselves here.
+    ///
+    /// Returns the dead machines' *current logical ids*, ascending.
+    /// An alive-but-stalled worker that stays silent past the grace
+    /// window is evicted too — see the module doc's known limitation.
+    pub fn diagnose_dead(&mut self) -> Result<Vec<MachineId>, WireError> {
+        let k = self.ep.machine_count();
+        // Workers whose RoundStats the failed round's barrier already
+        // consumed have proven themselves; they will not report twice.
+        let mut alive = std::mem::take(&mut self.reported);
+        alive.resize(k, false);
+        alive[0] = true;
+        // 2x the round timeout: a live worker only discovers the dead
+        // ring after waiting out its own `recv_timeout`, and its
+        // RoundStats still has to cross the wire after that.
+        let deadline = Instant::now() + self.opts.recv_timeout * 2;
+        while alive.iter().any(|&a| !a) {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match self.ep.recv_ctrl(left) {
+                Ok((peer, Frame::RoundStats(_))) => alive[peer] = true,
+                Ok(_) => continue, // stale traffic from the aborted round
+                Err(WireError::Protocol(_)) => break, // grace window elapsed
+                Err(e) => return Err(e),
+            }
+        }
+        let failed = self.ep.take_send_failures();
+        // Empty means every worker answered the post-mortem: the
+        // failure was not a worker death and the caller should
+        // propagate its original error instead of recovering.
+        let dead: Vec<MachineId> =
+            (1..k).filter(|m| !alive[*m] || failed.contains_key(m)).collect();
+        for m in &dead {
+            let why = failed.get(m).cloned().unwrap_or_else(|| "no RoundStats within grace".into());
+            eprintln!("gtip leader: machine {m} presumed dead ({why})");
+        }
+        Ok(dead)
+    }
+
+    /// Re-form the cluster around the survivors of `dead` (current
+    /// logical ids) and hand every survivor its new identity and the
+    /// renormalized speeds. Blocks until every survivor acknowledges —
+    /// the ack doubles as a barrier keeping stale round traffic out of
+    /// the next epoch.
+    pub fn recover(
+        &mut self,
+        dead: &[MachineId],
+        machines_after: &MachineConfig,
+    ) -> Result<(), WireError> {
+        let k = self.ep.machine_count();
+        if dead.is_empty() || dead.contains(&0) {
+            return Err(WireError::Protocol(
+                "recovery needs a non-empty dead list that excludes the leader".into(),
+            ));
+        }
+        if machines_after.count() + dead.len() != k {
+            return Err(WireError::Protocol(format!(
+                "{} survivors + {} dead != {k} machines",
+                machines_after.count(),
+                dead.len()
+            )));
+        }
+        let survivors_wire: Vec<MachineId> =
+            (0..k).filter(|m| !dead.contains(m)).map(|m| self.ep.wire_of(m)).collect();
+        if let Some(l) = &self.layout {
+            // Shrink the rack layout with the fleet (dead are current
+            // logical ids, exactly what `without_machines` wants).
+            self.layout = Some(l.without_machines(dead).map_err(WireError::Protocol)?);
+        }
+        self.ep.compact(&survivors_wire)?;
+        self.ep.drain_inbox();
+        self.reported = vec![false; self.ep.machine_count()];
+        let frame = Frame::Restore {
+            survivors: survivors_wire
+                .iter()
+                .map(|&w| wire_u32(w))
+                .collect::<Result<_, _>>()?,
+            speeds: machines_after.speeds().to_vec(),
+        };
+        self.ep.broadcast_ctrl(&frame)?;
+        self.await_restore_acks(self.opts.recv_timeout)
+    }
+
+    /// Ack barrier after a `Restore` broadcast: every member confirms
+    /// it compacted to the same membership before the next epoch's
+    /// traffic starts. Shared by [`ClusterLeader::recover`] and the
+    /// admission rollback; stale `RoundStats` (post-mortem reports)
+    /// and `AdmitAck`s (a survivor that extended before the rollback)
+    /// are skipped.
+    fn await_restore_acks(&mut self, patience: Duration) -> Result<(), WireError> {
+        let k_after = self.ep.machine_count();
+        let mut acked = vec![false; k_after];
+        acked[0] = true;
+        let mut remaining = k_after - 1;
+        while remaining > 0 {
+            let unacked = (0..k_after).find(|&m| !acked[m]).unwrap_or(0);
+            let waiting = self.ep.wire_of(unacked);
+            match self.recv_awaiting(patience, "awaiting RestoreAck", waiting)? {
+                (peer, Frame::RestoreAck { machine }) => {
+                    if self.ep.wire_of(peer) != machine as MachineId {
+                        return Err(WireError::Protocol(format!(
+                            "machine {peer} acked the restore as wire id {machine}, expected {}",
+                            self.ep.wire_of(peer)
+                        )));
+                    }
+                    if !acked[peer] {
+                        acked[peer] = true;
+                        remaining -= 1;
+                    }
+                }
+                (_, Frame::RoundStats(_)) => continue, // stale post-mortem report
+                (_, Frame::AdmitAck { .. }) => continue, // stale pre-rollback ack
+                (peer, frame) => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected control frame from machine {peer} during restore: {frame:?}"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The logical id (= list position) a currently-evicted wire id
+    /// would take on admission: wire ids stay ascending, so the joiner
+    /// slots in between its wire-id neighbours and every member to its
+    /// right shifts up by one. The driver needs this *before*
+    /// [`ClusterLeader::admit`] to build the K+1 speed vector and
+    /// remap the engine assignment.
+    pub fn joiner_position(&self, wire: MachineId) -> usize {
+        self.ep.wire_of.iter().filter(|&&w| w < wire).count()
+    }
+
+    /// Next queued join request, if any. Requests from a wire id that
+    /// is currently an active member are rejected here (Goodbye), and
+    /// a newer request from the same wire id supersedes an older one —
+    /// the joiner only re-dials after its previous attempt was
+    /// rejected or closed, so the older stream is dead.
+    pub fn pending_join(&mut self) -> Option<JoinRequest> {
+        while let Ok(req) = self.pending.try_recv() {
+            self.pending_buf.push_back(req);
+        }
+        while let Some(mut req) = self.pending_buf.pop_front() {
+            if self.ep.wire_is_active(req.wire_id) {
+                eprintln!(
+                    "gtip leader: rejecting Join from wire id {} (already an active member)",
+                    req.wire_id
+                );
+                let _ = write_frame(&mut req.stream, &Frame::Goodbye);
+                continue;
+            }
+            if self.pending_buf.iter().any(|r| r.wire_id == req.wire_id) {
+                continue; // superseded by a newer request from the same joiner
+            }
+            return Some(req);
+        }
+        None
+    }
+
+    /// Admit a joiner at an epoch boundary: dial it, extend the mesh,
+    /// broadcast `Admit`, ship the joiner the fixture (`Setup`) plus
+    /// the boundary snapshot (`Catchup`), and run the ack barrier.
+    ///
+    /// `machines_after` is the renormalized K+1 speed vector with the
+    /// joiner at [`ClusterLeader::joiner_position`]; `snapshot` is the
+    /// encoded boundary checkpoint *already remapped* to the K+1
+    /// numbering. Returns `Ok(true)` if the joiner is in, `Ok(false)`
+    /// if the admission failed but the cluster rolled back cleanly to
+    /// its previous membership (the run continues at K), and `Err` if
+    /// the rollback itself failed.
+    pub fn admit(
+        &mut self,
+        req: JoinRequest,
+        graph: &Graph,
+        machines_before: &MachineConfig,
+        machines_after: &MachineConfig,
+        snapshot: &[u8],
+    ) -> Result<bool, WireError> {
+        let joiner = req.wire_id;
+        let k_orig = self.addrs.len();
+        if joiner == 0 || joiner >= k_orig || self.ep.wire_is_active(joiner) {
+            return Err(WireError::Protocol(format!(
+                "wire id {joiner} is not an admissible joiner"
+            )));
+        }
+        let old_members = self.ep.wire_of.clone();
+        if machines_before.count() != old_members.len()
+            || machines_after.count() != old_members.len() + 1
+        {
+            return Err(WireError::Protocol(format!(
+                "admission fixtures have {}/{} machines for a {}-member mesh",
+                machines_before.count(),
+                machines_after.count(),
+                old_members.len()
+            )));
+        }
+        // Dial the joiner first: a failure here leaves the mesh
+        // untouched, so no rollback is needed — just drop the request
+        // (the joiner will re-dial when its stream closes).
+        let deadline = Instant::now() + self.admit_window;
+        let mut out = match dial_peer(&self.addrs[joiner], deadline) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("gtip leader: cannot dial joiner {joiner}: {e}");
+                return Ok(false);
+            }
+        };
+        if let Err(e) = write_frame(
+            &mut out,
+            &Frame::Hello { version: WIRE_VERSION, machine: 0, machines: wire_u32(k_orig)? },
+        ) {
+            eprintln!("gtip leader: hello to joiner {joiner} failed: {e}");
+            return Ok(false);
+        }
+        let mut members = old_members.clone();
+        let pos = self.joiner_position(joiner);
+        members.insert(pos, joiner);
+        // Resolve the joiner's rack before the mesh grows: honor the
+        // request if it names an existing rack (or the next fresh one),
+        // otherwise place it in the emptiest rack. Flat clusters ship 0.
+        let old_layout = self.layout.clone();
+        let joiner_rack = match &old_layout {
+            Some(l) => match req.rack {
+                Some(r) if r <= l.rack_count() => r,
+                Some(r) => {
+                    eprintln!(
+                        "gtip leader: joiner asked for rack {r} of {}; using the emptiest",
+                        l.rack_count()
+                    );
+                    l.join_rack()
+                }
+                None => l.join_rack(),
+            },
+            None => 0,
+        };
+        self.ep.extend(&members, joiner, out, req.stream)?;
+        if let Some(l) = &old_layout {
+            // Grow the layout first so the joiner's Setup ships it.
+            self.layout = Some(l.with_inserted(pos, joiner_rack).map_err(WireError::Protocol)?);
+        }
+
+        let result = (|| -> Result<(), WireError> {
+            self.ep.broadcast_ctrl(&Frame::Admit {
+                members: members.iter().map(|&w| wire_u32(w)).collect::<Result<_, _>>()?,
+                joiner: wire_u32(joiner)?,
+                speeds: machines_after.speeds().to_vec(),
+                rack: wire_u32(joiner_rack)?,
+            })?;
+            self.ep.send_ctrl(pos, &self.setup_frame(graph, machines_after)?)?;
+            self.ep.send_ctrl(pos, &Frame::Catchup { snapshot: snapshot.to_vec() })?;
+            // Ack barrier: every member (joiner included) confirms the
+            // extended mesh before the next epoch's traffic starts.
+            let k_new = members.len();
+            let mut acked = vec![false; k_new];
+            acked[0] = true;
+            let mut remaining = k_new - 1;
+            while remaining > 0 {
+                let unacked = (0..k_new).find(|&m| !acked[m]).unwrap_or(0);
+                let waiting = self.ep.wire_of(unacked);
+                match self.recv_awaiting(self.admit_window, "awaiting AdmitAck", waiting)? {
+                    (peer, Frame::AdmitAck { machine }) => {
+                        if self.ep.wire_of(peer) != machine as MachineId {
+                            return Err(WireError::Protocol(format!(
+                                "machine {peer} acked the admit as wire id {machine}, expected {}",
+                                self.ep.wire_of(peer)
+                            )));
+                        }
+                        if !acked[peer] {
+                            acked[peer] = true;
+                            remaining -= 1;
+                        }
+                    }
+                    (_, Frame::RoundStats(_)) => continue, // stale report
+                    (peer, frame) => {
+                        return Err(WireError::Protocol(format!(
+                            "unexpected control frame from machine {peer} during admit: {frame:?}"
+                        )));
+                    }
+                }
+            }
+            Ok(())
+        })();
+
+        match result {
+            Ok(()) => {
+                self.ep.drain_inbox();
+                self.reported = vec![false; self.ep.machine_count()];
+                Ok(true)
+            }
+            Err(e) => {
+                eprintln!(
+                    "gtip leader: admission of wire id {joiner} failed ({e}); rolling back to K={}",
+                    old_members.len()
+                );
+                self.layout = old_layout;
+                self.rollback_admit(&old_members, machines_before)?;
+                Ok(false)
+            }
+        }
+    }
+
+    /// Undo a failed admission: compact back to the old membership and
+    /// re-run the restore barrier so every survivor is provably back
+    /// on the pre-admission mesh before the run continues.
+    fn rollback_admit(
+        &mut self,
+        old_members: &[MachineId],
+        machines_before: &MachineConfig,
+    ) -> Result<(), WireError> {
+        self.ep.compact(old_members)?;
+        self.ep.drain_inbox();
+        self.reported = vec![false; self.ep.machine_count()];
+        self.ep.broadcast_ctrl(&Frame::Restore {
+            survivors: old_members.iter().map(|&w| wire_u32(w)).collect::<Result<_, _>>()?,
+            speeds: machines_before.speeds().to_vec(),
+        })?;
+        // A survivor may still be stuck dialing the dead joiner for up
+        // to its own handshake window (one receive timeout) before it
+        // sees this Restore — hence the longer admit-window patience.
+        self.await_restore_acks(self.admit_window)
+    }
+
+    /// Graceful shutdown: tell every worker the run is over, and turn
+    /// away any joiner still waiting at the door.
+    pub fn shutdown(mut self) -> Result<(), WireError> {
+        self.acceptor_stop.store(true, Ordering::Relaxed);
+        while let Some(mut req) = self.pending_join() {
+            let _ = write_frame(&mut req.stream, &Frame::Goodbye);
+        }
+        self.ep.broadcast_ctrl(&Frame::Goodbye)
+    }
+}
+
+impl Drop for ClusterLeader {
+    fn drop(&mut self) {
+        self.acceptor_stop.store(true, Ordering::Relaxed);
+    }
+}
+
+/// The leader's admission acceptor: runs for the whole cluster
+/// lifetime on a clone of the (nonblocking) mesh listener, validating
+/// `Hello` + `Join` handshakes and queueing good ones for the driver
+/// to pick up at the next epoch boundary — a mid-epoch `Join` is
+/// thereby deferred, never dropped. Semantic rejects get a `Goodbye`
+/// so the joiner can distinguish "no" from "not yet".
+fn join_acceptor(
+    listener: TcpListener,
+    k_orig: usize,
+    stop: Arc<AtomicBool>,
+    tx: Sender<JoinRequest>,
+) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, addr)) => match join_handshake(stream, k_orig) {
+                Ok(req) => {
+                    eprintln!(
+                        "gtip leader: queued Join from wire id {} (speed {})",
+                        req.wire_id, req.speed
+                    );
+                    if tx.send(req).is_err() {
+                        return; // leader dropped
+                    }
+                }
+                Err((e, stream)) => {
+                    eprintln!("gtip leader: dropping join dial from {addr}: {e}");
+                    if let Some(mut stream) = stream {
+                        let _ = write_frame(&mut stream, &Frame::Goodbye);
+                    }
+                }
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                eprintln!("gtip leader: join acceptor error: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}

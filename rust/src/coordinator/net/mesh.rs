@@ -1,0 +1,733 @@
+//! Layer 3 of the coordinator's network stack (DESIGN.md §13): the
+//! full-mesh TCP endpoint. [`TcpEndpoint`] is the [`Bus`] impl over
+//! real sockets — one [`FramedConn`] per outbound peer, one reader
+//! thread per inbound connection — with the wire-id/logical-id split
+//! that lets [`TcpEndpoint::compact`] (eviction) and
+//! [`TcpEndpoint::extend`] (admission) re-form a live mesh. The
+//! loopback harnesses used by the transport-equivalence tests live
+//! here too. Dialing, handshakes, and framing come from the layers
+//! below; epoch orchestration belongs to the roles above.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::bus::{Bus, RecvOutcome};
+use crate::coordinator::distributed::{
+    run_hierarchical_over_endpoints, run_over_endpoints, DistributedOptions, DistributedReport,
+};
+use crate::coordinator::protocol::{Message, OverheadStats};
+use crate::game::hierarchy::RackLayout;
+use crate::graph::Graph;
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+use super::codec::{encode_frame, read_frame, wire_u32, write_frame, Frame, WireError, WIRE_VERSION};
+use super::handshake::accept_peers;
+use super::session::{dial_peer, lock_unpoisoned, FramedConn};
+
+/// Byte/message accounting of the control plane (handshakes, epoch
+/// setup/begin, stats reports) — kept apart from [`OverheadStats`] so
+/// the §4.5 metric stays about the game's O(K) state exchange.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    pub control_messages: u64,
+    pub control_bytes: u64,
+}
+
+/// Send failures recorded at the send site (satellite of the recovery
+/// protocol): `map` keeps the first error per logical peer for the
+/// leader's death diagnosis, `fresh` queues not-yet-reported peers so
+/// the actor loop sees a [`RecvOutcome::SendFailed`] instead of
+/// waiting out the full receive timeout.
+#[derive(Default)]
+pub(super) struct SendFailures {
+    map: BTreeMap<MachineId, String>,
+    fresh: VecDeque<MachineId>,
+}
+
+/// One machine's socket-backed endpoint: a listener's worth of inbound
+/// reader threads feeding an inbox, plus one outbound stream per peer.
+///
+/// After a [`TcpEndpoint::compact`] (cluster re-formation around the
+/// survivors of a worker death) the endpoint distinguishes *wire* ids
+/// — the immutable machine numbers of the original mesh, which the
+/// reader threads and `outs` slots keep forever — from *logical* ids,
+/// the dense `0..k` numbering the refinement protocol runs on. Before
+/// any compaction the two coincide.
+pub struct TcpEndpoint {
+    /// Current logical id (== position of `wire_id` in the survivor
+    /// list after a compaction).
+    pub(super) id: MachineId,
+    /// Current logical machine count.
+    pub(super) k: usize,
+    /// This machine's immutable id in the original mesh.
+    pub(super) wire_id: MachineId,
+    /// logical id → wire id (ascending; identity before compaction).
+    pub(super) wire_of: Vec<MachineId>,
+    /// wire id → logical id (`None` = evicted peer).
+    pub(super) logical_of: Vec<Option<MachineId>>,
+    pub(super) inbox: Receiver<Message>,
+    pub(super) inbox_tx: Sender<Message>,
+    pub(super) ctrl: Receiver<(MachineId, Frame)>,
+    /// Kept so [`TcpEndpoint::extend`] can hand new reader threads the
+    /// same control channel the original mesh readers feed.
+    pub(super) ctrl_tx: Sender<(MachineId, Frame)>,
+    /// The bound listener (nonblocking), retained past mesh formation
+    /// so an admission can accept the joiner's return dial on the same
+    /// address the peer list names for this machine.
+    pub(super) listener: TcpListener,
+    /// Outbound framed sessions, indexed by *wire* id.
+    pub(super) outs: Vec<Option<FramedConn>>,
+    pub(super) stats: Arc<Mutex<OverheadStats>>,
+    pub(super) net: Arc<Mutex<NetStats>>,
+    pub(super) failures: Mutex<SendFailures>,
+}
+
+impl Bus for TcpEndpoint {
+    fn id(&self) -> MachineId {
+        self.id
+    }
+
+    fn machine_count(&self) -> usize {
+        self.k
+    }
+
+    fn send(&self, to: MachineId, msg: Message) {
+        if to == self.id {
+            // Loopback without touching the network (the ring kick).
+            lock_unpoisoned(&self.stats).record(&msg);
+            let _ = self.inbox_tx.send(msg);
+            return;
+        }
+        let bytes = match encode_frame(&Frame::Msg(msg.clone())) {
+            Ok(bytes) => bytes,
+            Err(e) => {
+                self.record_send_failure(to, format!("encoding for machine {to}: {e}"));
+                return;
+            }
+        };
+        debug_assert_eq!(bytes.len(), msg.wire_bytes(), "codec vs wire_bytes drift");
+        lock_unpoisoned(&self.stats).record(&msg);
+        let wire = self.wire_of[to];
+        match &self.outs[wire] {
+            Some(conn) => {
+                // A dead peer must not be silently ignored: record the
+                // failure at the send site so the actor loop exits
+                // through `SendFailed` and the leader's diagnosis can
+                // name the peer, instead of every machine waiting out
+                // its receive timeout on a ring that can never close.
+                if let Err(e) = conn.send_bytes(&bytes) {
+                    self.record_send_failure(to, format!("sending to machine {to}: {e}"));
+                }
+            }
+            None => self.record_send_failure(to, format!("no connection to machine {to}")),
+        }
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> RecvOutcome {
+        if let Some(m) = lock_unpoisoned(&self.failures).fresh.pop_front() {
+            return RecvOutcome::SendFailed(m);
+        }
+        match self.inbox.recv_timeout(timeout) {
+            Ok(msg) => RecvOutcome::Msg(msg),
+            Err(RecvTimeoutError::Timeout) => RecvOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => RecvOutcome::Disconnected,
+        }
+    }
+}
+
+impl TcpEndpoint {
+    /// This machine's immutable id in the original mesh.
+    pub fn wire_id(&self) -> MachineId {
+        self.wire_id
+    }
+
+    /// The wire id behind a current logical id.
+    pub fn wire_of(&self, logical: MachineId) -> MachineId {
+        self.wire_of[logical]
+    }
+
+    fn record_send_failure(&self, to: MachineId, what: String) {
+        let mut f = lock_unpoisoned(&self.failures);
+        if !f.map.contains_key(&to) {
+            f.map.insert(to, what);
+            f.fresh.push_back(to);
+        }
+    }
+
+    /// Drain and return the recorded send failures (logical peer →
+    /// first error). Feeds the leader's death diagnosis.
+    pub fn take_send_failures(&self) -> BTreeMap<MachineId, String> {
+        let mut f = lock_unpoisoned(&self.failures);
+        f.fresh.clear();
+        std::mem::take(&mut f.map)
+    }
+
+    /// Discard buffered protocol messages (stale traffic from an
+    /// aborted round). Returns how many were dropped.
+    pub fn drain_inbox(&self) -> usize {
+        let mut n = 0;
+        while self.inbox.try_recv().is_ok() {
+            n += 1;
+        }
+        n
+    }
+
+    /// Re-form the endpoint around `survivors_wire` — the surviving
+    /// wire ids of the original mesh, ascending, including this
+    /// machine. Logical ids become positions in the list; outbound
+    /// streams to evicted peers are closed; recorded send failures
+    /// (which name old logical ids) are cleared.
+    pub fn compact(&mut self, survivors_wire: &[MachineId]) -> Result<(), WireError> {
+        if survivors_wire.is_empty() || !survivors_wire.windows(2).all(|w| w[0] < w[1]) {
+            return Err(WireError::Protocol(
+                "survivor list must be non-empty and strictly ascending".into(),
+            ));
+        }
+        if *survivors_wire.last().expect("non-empty") >= self.logical_of.len() {
+            return Err(WireError::Protocol(format!(
+                "survivor list names wire id {} but the mesh had {} machines",
+                survivors_wire.last().expect("non-empty"),
+                self.logical_of.len()
+            )));
+        }
+        let me = survivors_wire.iter().position(|&w| w == self.wire_id).ok_or_else(|| {
+            WireError::Protocol(format!(
+                "this machine (wire id {}) is missing from the survivor list",
+                self.wire_id
+            ))
+        })?;
+        for wire in 0..self.logical_of.len() {
+            if !survivors_wire.contains(&wire) {
+                self.outs[wire] = None; // closes the socket to the evicted peer
+            }
+        }
+        self.logical_of = vec![None; self.logical_of.len()];
+        for (logical, &wire) in survivors_wire.iter().enumerate() {
+            self.logical_of[wire] = Some(logical);
+        }
+        self.wire_of = survivors_wire.to_vec();
+        self.k = survivors_wire.len();
+        self.id = me;
+        let mut f = lock_unpoisoned(&self.failures);
+        f.map.clear();
+        f.fresh.clear();
+        Ok(())
+    }
+
+    /// Whether a wire id currently maps to a live logical peer.
+    pub fn wire_is_active(&self, wire: MachineId) -> bool {
+        self.logical_of.get(wire).copied().flatten().is_some()
+    }
+
+    /// Re-form the endpoint around `members_wire` — the new member wire
+    /// ids, ascending, including this machine and `joiner` — installing
+    /// `out` as the outbound stream to the joiner and spawning a reader
+    /// on `inbound`, the joiner's dial to us. The exact mirror of
+    /// [`TcpEndpoint::compact`]: logical ids become positions in the
+    /// list, and stale send failures are cleared. The joiner must be a
+    /// currently-evicted wire id, and the other members must be exactly
+    /// the current mesh — an admission only ever grows the fleet by
+    /// one.
+    pub fn extend(
+        &mut self,
+        members_wire: &[MachineId],
+        joiner: MachineId,
+        out: TcpStream,
+        inbound: TcpStream,
+    ) -> Result<(), WireError> {
+        if members_wire.is_empty() || !members_wire.windows(2).all(|w| w[0] < w[1]) {
+            return Err(WireError::Protocol(
+                "member list must be non-empty and strictly ascending".into(),
+            ));
+        }
+        if *members_wire.last().expect("non-empty") >= self.logical_of.len() {
+            return Err(WireError::Protocol(format!(
+                "member list names wire id {} but the mesh had {} machines",
+                members_wire.last().expect("non-empty"),
+                self.logical_of.len()
+            )));
+        }
+        if !members_wire.contains(&joiner) {
+            return Err(WireError::Protocol(format!(
+                "joiner (wire id {joiner}) is missing from the member list"
+            )));
+        }
+        if self.wire_is_active(joiner) || joiner == self.wire_id {
+            return Err(WireError::Protocol(format!(
+                "joiner wire id {joiner} is already an active member"
+            )));
+        }
+        let me = members_wire.iter().position(|&w| w == self.wire_id).ok_or_else(|| {
+            WireError::Protocol(format!(
+                "this machine (wire id {}) is missing from the member list",
+                self.wire_id
+            ))
+        })?;
+        let others: Vec<MachineId> =
+            members_wire.iter().copied().filter(|&w| w != joiner).collect();
+        if others != self.wire_of {
+            return Err(WireError::Protocol(format!(
+                "member list minus the joiner is {others:?} but the current mesh is {:?}",
+                self.wire_of
+            )));
+        }
+        self.outs[joiner] = Some(FramedConn::new(out));
+        spawn_reader(inbound, joiner, self.inbox_tx.clone(), self.ctrl_tx.clone());
+        self.logical_of = vec![None; self.logical_of.len()];
+        for (logical, &wire) in members_wire.iter().enumerate() {
+            self.logical_of[wire] = Some(logical);
+        }
+        self.wire_of = members_wire.to_vec();
+        self.k = members_wire.len();
+        self.id = me;
+        let mut f = lock_unpoisoned(&self.failures);
+        f.map.clear();
+        f.fresh.clear();
+        Ok(())
+    }
+
+    /// Send a control frame to one peer (logical id). A write failure
+    /// is recorded (it is death-diagnosis evidence) as well as
+    /// returned.
+    pub fn send_ctrl(&self, to: MachineId, frame: &Frame) -> Result<(), WireError> {
+        let wire = self.wire_of[to];
+        let conn = match self.outs[wire].as_ref() {
+            Some(conn) => conn,
+            None => {
+                self.record_send_failure(to, format!("no connection to machine {to}"));
+                return Err(WireError::Protocol(format!("no connection to machine {to}")));
+            }
+        };
+        let bytes = encode_frame(frame)?;
+        if let Err(e) = conn.send_bytes(&bytes) {
+            self.record_send_failure(to, format!("sending a control frame to machine {to}: {e}"));
+            return Err(e.into());
+        }
+        let mut net = lock_unpoisoned(&self.net);
+        net.control_messages += 1;
+        net.control_bytes += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Send a control frame to every peer.
+    pub fn broadcast_ctrl(&self, frame: &Frame) -> Result<(), WireError> {
+        for to in 0..self.k {
+            if to != self.id {
+                self.send_ctrl(to, frame)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive the next control frame (tagged with its sender's
+    /// current logical id). Frames from evicted peers are dropped.
+    pub fn recv_ctrl(&self, timeout: Duration) -> Result<(MachineId, Frame), WireError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match self.ctrl.recv_timeout(left) {
+                Ok((wire, frame)) => {
+                    match self.logical_of.get(wire).copied().flatten() {
+                        Some(logical) => return Ok((logical, frame)),
+                        None => continue, // stale frame from an evicted peer
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(WireError::Protocol(
+                        "timed out waiting for a control frame".into(),
+                    ))
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(WireError::Closed),
+            }
+        }
+    }
+
+    /// Snapshot of the protocol-message accounting.
+    pub fn stats_snapshot(&self) -> OverheadStats {
+        lock_unpoisoned(&self.stats).clone()
+    }
+
+    /// Snapshot of the control-plane accounting.
+    pub fn net_snapshot(&self) -> NetStats {
+        *lock_unpoisoned(&self.net)
+    }
+}
+
+/// Build machine `id`'s endpoint from an already-bound listener:
+/// full-mesh dial with deterministic `Hello` handshakes, then one
+/// reader thread per inbound connection.
+fn mesh_with_listener(
+    listener: TcpListener,
+    id: MachineId,
+    addrs: &[String],
+    connect_timeout: Duration,
+    stats: Arc<Mutex<OverheadStats>>,
+) -> Result<TcpEndpoint, WireError> {
+    let k = addrs.len();
+    assert!(id < k, "machine id {id} out of range for {k} machines");
+    let deadline = Instant::now() + connect_timeout;
+
+    // The accept thread runs on a clone; the original is retained in
+    // the endpoint so a later admission can accept a joiner's dial.
+    // Clones share the file description, so the nonblocking mode set
+    // here applies to both — post-mesh accepts poll `WouldBlock`.
+    listener.set_nonblocking(true)?;
+    let accept_handle = if k > 1 {
+        let acceptor = listener.try_clone()?;
+        Some(std::thread::spawn(move || accept_peers(acceptor, id, k, deadline)))
+    } else {
+        None
+    };
+
+    // Dial everyone else (ascending machine order for determinism).
+    let mut outs: Vec<Option<FramedConn>> = (0..k).map(|_| None).collect();
+    for (peer, addr) in addrs.iter().enumerate() {
+        if peer == id {
+            continue;
+        }
+        let mut stream =
+            dial_peer(addr, deadline).map_err(|e| e.while_awaiting("dialing", peer))?;
+        write_frame(
+            &mut stream,
+            &Frame::Hello { version: WIRE_VERSION, machine: wire_u32(id)?, machines: wire_u32(k)? },
+        )?;
+        outs[peer] = Some(FramedConn::new(stream));
+    }
+
+    let inbound = match accept_handle {
+        Some(h) => h.join().expect("accept thread panicked")?,
+        None => Vec::new(),
+    };
+
+    let (inbox_tx, inbox) = channel();
+    let (ctrl_tx, ctrl) = channel();
+    for (peer, stream) in inbound {
+        spawn_reader(stream, peer, inbox_tx.clone(), ctrl_tx.clone());
+    }
+
+    Ok(TcpEndpoint {
+        id,
+        k,
+        wire_id: id,
+        wire_of: (0..k).collect(),
+        logical_of: (0..k).map(Some).collect(),
+        inbox,
+        inbox_tx,
+        ctrl,
+        ctrl_tx,
+        listener,
+        outs,
+        stats,
+        net: Arc::new(Mutex::new(NetStats::default())),
+        failures: Mutex::new(SendFailures::default()),
+    })
+}
+
+/// One reader thread per inbound connection: protocol messages go to
+/// the shared inbox, everything else to the control channel, keyed by
+/// the sender's immutable *wire* id (`recv_ctrl` translates to the
+/// current logical id, dropping frames from evicted peers).
+pub(super) fn spawn_reader(
+    mut stream: TcpStream,
+    wire_peer: MachineId,
+    inbox_tx: Sender<Message>,
+    ctrl_tx: Sender<(MachineId, Frame)>,
+) {
+    std::thread::spawn(move || loop {
+        match read_frame(&mut stream) {
+            Ok(Frame::Msg(msg)) => {
+                if inbox_tx.send(msg).is_err() {
+                    break;
+                }
+            }
+            Ok(frame) => {
+                if ctrl_tx.send((wire_peer, frame)).is_err() {
+                    break;
+                }
+            }
+            Err(WireError::Closed) => break,
+            Err(e) => {
+                eprintln!("gtip net: reader for machine {wire_peer} stopped: {e}");
+                break;
+            }
+        }
+    });
+}
+
+/// Join the mesh as machine `id`: bind `addrs[id]`, dial everyone else.
+pub fn connect_mesh(
+    id: MachineId,
+    addrs: &[String],
+    connect_timeout: Duration,
+    stats: Arc<Mutex<OverheadStats>>,
+) -> Result<TcpEndpoint, WireError> {
+    let listener = TcpListener::bind(addrs[id].as_str())
+        .map_err(|e| WireError::Io(format!("binding {}: {e}", addrs[id])))?;
+    mesh_with_listener(listener, id, addrs, connect_timeout, stats)
+}
+
+/// A K-machine loopback mesh inside one process (OS-assigned ports),
+/// sharing one [`OverheadStats`] handle exactly like the in-process
+/// bus — the test harness for transport equivalence.
+pub fn build_tcp_bus_local(
+    k: usize,
+) -> Result<(Vec<TcpEndpoint>, Arc<Mutex<OverheadStats>>), WireError> {
+    assert!(k >= 1);
+    let stats = Arc::new(Mutex::new(OverheadStats::default()));
+    let mut listeners = Vec::with_capacity(k);
+    let mut addrs = Vec::with_capacity(k);
+    for _ in 0..k {
+        let l = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(l.local_addr()?.to_string());
+        listeners.push(l);
+    }
+    let mut handles = Vec::with_capacity(k);
+    for (id, listener) in listeners.into_iter().enumerate() {
+        let addrs = addrs.clone();
+        let stats = Arc::clone(&stats);
+        handles.push(std::thread::spawn(move || {
+            mesh_with_listener(listener, id, &addrs, Duration::from_secs(10), stats)
+        }));
+    }
+    let mut endpoints = Vec::with_capacity(k);
+    for h in handles {
+        endpoints.push(h.join().expect("mesh thread panicked")?);
+    }
+    Ok((endpoints, stats))
+}
+
+/// [`crate::coordinator::run_distributed`], but over a real loopback
+/// TCP mesh — same options, same deterministic result.
+pub fn run_distributed_tcp_local(
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    options: &DistributedOptions,
+) -> Result<DistributedReport, WireError> {
+    let (endpoints, stats) = build_tcp_bus_local(machines.count())?;
+    Ok(run_over_endpoints(endpoints, graph, machines, initial, options, stats))
+}
+
+/// [`crate::coordinator::distributed::run_distributed_hierarchical`],
+/// but with both levels' meshes on real loopback TCP sockets — the
+/// `RackUpdate` aggregates and the scoped rings cross actual wires,
+/// and the parity tests assert the result is bit-identical to the
+/// in-process hierarchy.
+pub fn run_distributed_hierarchical_tcp_local(
+    graph: Arc<Graph>,
+    machines: &MachineConfig,
+    initial: Partition,
+    layout: &RackLayout,
+    options: &DistributedOptions,
+) -> Result<DistributedReport, WireError> {
+    let (outer_endpoints, outer_stats) = build_tcp_bus_local(layout.rack_count())?;
+    let (inner_endpoints, inner_stats) = build_tcp_bus_local(machines.count())?;
+    Ok(run_hierarchical_over_endpoints(
+        outer_endpoints,
+        outer_stats,
+        inner_endpoints,
+        inner_stats,
+        graph,
+        machines,
+        initial,
+        layout,
+        options,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write;
+
+    use super::*;
+
+    #[test]
+    fn tcp_loopback_mesh_delivers_and_counts_exact_bytes() {
+        let (eps, stats) = build_tcp_bus_local(3).unwrap();
+        let msg = Message::RegularUpdate { seq: 0, node: 5, from: 0, to: 2, loads: vec![1.0; 3] };
+        eps[0].send(1, msg.clone());
+        match eps[1].recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery: {other:?}"),
+        }
+        let s = stats.lock().unwrap();
+        assert_eq!(s.regular_update.messages, 1);
+        assert_eq!(s.regular_update.bytes, msg.wire_bytes() as u64);
+    }
+
+    /// A panic while holding the shared stats lock must not take the
+    /// whole endpoint down with `expect("poisoned")` — the guard is
+    /// recovered and traffic keeps flowing.
+    #[test]
+    fn poisoned_stats_lock_recovers() {
+        let (eps, stats) = build_tcp_bus_local(2).unwrap();
+        let poisoner = Arc::clone(&stats);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("poison the stats lock");
+        })
+        .join();
+        assert!(stats.lock().is_err(), "lock should be poisoned");
+
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 0, transfers_so_far: 0 };
+        eps[0].send(1, msg.clone());
+        match eps[1].recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery through poisoned lock: {other:?}"),
+        }
+        assert_eq!(eps[0].stats_snapshot().take_my_turn.messages, 1);
+    }
+
+    /// An unsendable message surfaces as `SendFailed` at the sender's
+    /// next receive instead of the peer silently never hearing from us.
+    #[test]
+    fn send_failure_surfaces_instead_of_silence() {
+        if std::mem::size_of::<usize>() <= 4 {
+            return;
+        }
+        let (eps, _stats) = build_tcp_bus_local(2).unwrap();
+        let huge = u32::MAX as usize + 1;
+        eps[0].send(1, Message::ReceiveNode { seq: 0, node: 0, from: huge, to: 1 });
+        match eps[0].recv_timeout(Duration::from_millis(10)) {
+            RecvOutcome::SendFailed(1) => {}
+            other => panic!("expected SendFailed(1), got {other:?}"),
+        }
+        assert!(eps[0].take_send_failures().contains_key(&1));
+    }
+
+    /// Compaction renumbers the survivors densely and re-routes both
+    /// planes (protocol + control) through the new logical ids.
+    #[test]
+    fn compact_renumbers_and_reroutes() {
+        let (mut eps, _stats) = build_tcp_bus_local(3).unwrap();
+        let mut ep2 = eps.pop().unwrap();
+        let ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        drop(ep1); // wire machine 1 dies
+
+        ep0.compact(&[0, 2]).unwrap();
+        ep2.compact(&[0, 2]).unwrap();
+        assert_eq!((ep0.id(), ep0.machine_count()), (0, 2));
+        assert_eq!((ep2.id(), ep2.machine_count()), (1, 2));
+        assert_eq!(ep2.wire_id(), 2);
+
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 1, transfers_so_far: 2 };
+        ep0.send(1, msg.clone()); // logical 1 now means wire 2
+        match ep2.recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery after compaction: {other:?}"),
+        }
+
+        ep2.send_ctrl(0, &Frame::RestoreAck { machine: 2 }).unwrap();
+        match ep2.recv_ctrl(Duration::from_millis(50)) {
+            Err(WireError::Protocol(_)) => {} // nothing inbound for ep2
+            other => panic!("unexpected ctrl on ep2: {other:?}"),
+        }
+        match ep0.recv_ctrl(Duration::from_secs(5)).unwrap() {
+            (1, Frame::RestoreAck { machine: 2 }) => {}
+            other => panic!("bad ctrl routing after compaction: {other:?}"),
+        }
+
+        // Compaction rejects nonsense survivor lists.
+        assert!(ep0.compact(&[]).is_err());
+        assert!(ep0.compact(&[2, 0]).is_err());
+        assert!(ep0.compact(&[2]).is_err()); // missing this machine
+        assert!(ep0.compact(&[0, 7]).is_err()); // out of range
+    }
+
+    /// A connected loopback socket pair — stands in for the joiner's
+    /// dial / the survivor's dial-back during an admission.
+    fn stream_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dialed = TcpStream::connect(addr).unwrap();
+        let (accepted, _) = listener.accept().unwrap();
+        (dialed, accepted)
+    }
+
+    /// Extension is the exact mirror of compaction: after an eviction
+    /// to [0, 2], wire 1 is re-admitted and both planes (protocol +
+    /// control) route through the re-grown logical ids — including the
+    /// fresh streams to/from the joiner. Bad member lists and joins
+    /// for still-active wire ids are rejected without disturbing the
+    /// mesh.
+    #[test]
+    fn extend_readmits_and_reroutes() {
+        let (mut eps, _stats) = build_tcp_bus_local(3).unwrap();
+        let mut ep2 = eps.pop().unwrap();
+        let ep1 = eps.pop().unwrap();
+        let mut ep0 = eps.pop().unwrap();
+        drop(ep1); // wire machine 1 dies
+        ep0.compact(&[0, 2]).unwrap();
+        ep2.compact(&[0, 2]).unwrap();
+
+        // Rejection cases first — none of these may touch the mesh.
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1], 1, out, inbound).is_err(), "members minus joiner != mesh");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 2], 2, out, inbound).is_err(), "joiner 2 is still active");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 2], 0, out, inbound).is_err(), "joiner 0 is this machine");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 2], 1, out, inbound).is_err(), "joiner missing from members");
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 7], 1, out, inbound).is_err(), "wire id out of range");
+        assert_eq!((ep0.id(), ep0.machine_count()), (0, 2), "failed extends must not mutate");
+        assert!(!ep0.wire_is_active(1));
+
+        // The real re-admission: wire 1 rejoins on fresh socket pairs.
+        let (joiner_to_0, inbound0) = stream_pair();
+        let (out0, joiner_from_0) = stream_pair();
+        ep0.extend(&[0, 1, 2], 1, out0, inbound0).unwrap();
+        let (joiner_to_2, inbound2) = stream_pair();
+        let (out2, _joiner_from_2) = stream_pair();
+        ep2.extend(&[0, 1, 2], 1, out2, inbound2).unwrap();
+        assert_eq!((ep0.id(), ep0.machine_count()), (0, 3));
+        assert_eq!((ep2.id(), ep2.machine_count()), (2, 3));
+        assert!(ep0.wire_is_active(1));
+
+        // Protocol plane, outbound: logical 1 now reaches the joiner.
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 3, transfers_so_far: 4 };
+        ep0.send(1, msg.clone());
+        let mut joiner_rx = joiner_from_0;
+        match read_frame(&mut joiner_rx).unwrap() {
+            Frame::Msg(got) => assert_eq!(got, msg),
+            other => panic!("joiner expected the protocol message, got {other:?}"),
+        }
+
+        // Protocol plane, inbound: the joiner's traffic lands in the
+        // survivor's inbox tagged with the re-grown logical id.
+        let msg = Message::TakeMyTurn { consecutive_forfeits: 5, transfers_so_far: 6 };
+        let mut joiner_tx = joiner_to_2;
+        joiner_tx.write_all(&encode_frame(&Frame::Msg(msg.clone())).unwrap()).unwrap();
+        match ep2.recv_timeout(Duration::from_secs(5)) {
+            RecvOutcome::Msg(got) => assert_eq!(got, msg),
+            other => panic!("no delivery from the joiner after extension: {other:?}"),
+        }
+
+        // Control plane: the joiner's AdmitAck arrives as logical 1.
+        let mut joiner_ctrl = joiner_to_0;
+        joiner_ctrl
+            .write_all(&encode_frame(&Frame::AdmitAck { machine: 1 }).unwrap())
+            .unwrap();
+        match ep0.recv_ctrl(Duration::from_secs(5)).unwrap() {
+            (1, Frame::AdmitAck { machine: 1 }) => {}
+            other => panic!("bad ctrl routing after extension: {other:?}"),
+        }
+
+        // And the survivors' original streams still route: wire 2 is
+        // logical 2 again.
+        ep2.send_ctrl(0, &Frame::RestoreAck { machine: 2 }).unwrap();
+        match ep0.recv_ctrl(Duration::from_secs(5)).unwrap() {
+            (2, Frame::RestoreAck { machine: 2 }) => {}
+            other => panic!("survivor ctrl lost after extension: {other:?}"),
+        }
+
+        // A second extend for the now-active joiner must be refused.
+        let (out, inbound) = stream_pair();
+        assert!(ep0.extend(&[0, 1, 2], 1, out, inbound).is_err(), "joiner 1 is now active");
+    }
+}

@@ -1,0 +1,152 @@
+//! Real network transport for the distributed coordinator: a std-only,
+//! length-prefixed binary wire codec for [`Message`] (plus the control
+//! frames of the multi-process epoch protocol), a [`TcpEndpoint`]
+//! implementing [`Bus`] over a full mesh of loopback-or-LAN sockets,
+//! deterministic machine-id handshakes with retry/backoff dialing, and
+//! the leader/worker pair ([`ClusterLeader`] / [`serve`]) that lets
+//! `gtip dynamic --transport tcp` drive refinement rounds across real
+//! OS processes.
+//!
+//! ## Frame layout
+//!
+//! Every frame is `u32 LE payload length || payload`; the payload is a
+//! 1-byte tag followed by fixed-width little-endian fields (`u64`
+//! counts, `u32` machine ids, IEEE-754 `f64` loads; vectors are a `u32`
+//! length followed by the elements). Tags 1–4 are the Fig. 2 protocol
+//! messages — their encoded size is exactly
+//! [`Message::wire_bytes`], which both transports feed into
+//! [`OverheadStats`], so the measured §4.5 overhead is the true
+//! on-the-wire byte count. Tags 16+ are control frames (handshake,
+//! epoch setup/begin, per-round stats report, goodbye); control bytes
+//! are accounted separately in [`NetStats`] and never touch
+//! [`OverheadStats`], keeping the feasibility metric about the game's
+//! aggregate-state exchange only.
+//!
+//! ## Connection lifecycle
+//!
+//! Machine `i` of K listens on `addrs[i]` and dials every other
+//! machine with retry + exponential backoff; each outbound connection
+//! opens with a `Hello` frame (`magic || version || machine id ||
+//! machine count`), so the acceptor learns deterministically who is on
+//! the other end. Each inbound connection gets a reader thread that
+//! decodes frames and routes protocol messages to the endpoint's inbox
+//! and control frames to its control queue. Shutdown is graceful: the
+//! leader broadcasts `Goodbye`, workers exit, sockets close, readers
+//! see EOF and stop.
+//!
+//! ## Epoch barrier
+//!
+//! One refinement round per `EpochBegin` (which re-syncs graph weights
+//! and the warm-start assignment — O(N) control traffic that exists in
+//! any measurement-driven deployment and is reported separately from
+//! the O(K) game traffic). After a round converges, every worker sends
+//! its [`OverheadStats`] delta as `RoundStats`; the leader waits for
+//! all K−1 reports before the next epoch, which doubles as the barrier
+//! that keeps rounds from interleaving on the wire.
+//!
+//! ## Failure recovery (wire v3)
+//!
+//! A worker death no longer unwinds the whole cluster. A timed-out or
+//! send-failed round leaves the leader's endpoint intact; the leader
+//! then *diagnoses* which peers are dead ([`ClusterLeader::diagnose_dead`]:
+//! recorded send failures plus workers that never reported `RoundStats`
+//! within a grace period — live workers report their stats even after a
+//! timed-out round) and *re-forms* the cluster around the survivors
+//! ([`ClusterLeader::recover`]): it compacts its endpoint to the
+//! surviving wire ids, broadcasts `Restore` (the survivor list plus
+//! renormalized speeds), and waits for a `RestoreAck` from every
+//! survivor before the next `EpochBegin` — the ack barrier keeps stale
+//! round traffic from interleaving with the restored epoch. Workers
+//! renumber themselves by their position in the survivor list (the
+//! leader, wire 0, is always logical 0). The simulation itself is
+//! restored leader-side from the last epoch-boundary snapshot
+//! (`sim::snapshot`, DESIGN.md §10).
+//!
+//! ## Elastic join (wire v4)
+//!
+//! Elastic *join* is the same machinery run in reverse. A joining
+//! `gtip serve --join` re-binds its original address slot, dials the
+//! leader, and sends `Join { machine, speed }`; the leader queues the
+//! request and admits it at the **next epoch boundary** — never
+//! mid-epoch, because the boundary is where a consistent checkpoint
+//! exists. Admission ([`ClusterLeader::admit`]) extends the mesh the
+//! way `Restore` shrinks it: the leader dials the joiner back, calls
+//! [`TcpEndpoint::extend`] (the inverse of [`TcpEndpoint::compact`] —
+//! the joiner re-occupies its immutable wire id, survivors renumber by
+//! position in the grown member list), broadcasts `Admit` (members +
+//! renormalized speeds), ships the newcomer a full `Setup` plus the
+//! epoch-boundary snapshot as a `Catchup` payload, and blocks on an
+//! `AdmitAck` from every member. Survivors dial the joiner and accept
+//! its return dial before acking; a member that cannot reach the
+//! joiner simply withholds its ack, the barrier times out, and the
+//! leader rolls the mesh back to the old membership with a `Restore`
+//! barrier — the fleet stays at K and the run continues. The
+//! refinement game then migrates LPs toward the empty newcomer on the
+//! next epoch (Thm 4.1 descends from any feasible start; DESIGN.md
+//! §9/§10).
+//!
+//! Known limitation: diagnosis is evidence-based (send errors + missing
+//! stats reports), so a worker that is alive but silent past the grace
+//! period is treated as dead and evicted; it exits with a protocol
+//! error when its epoch wait (derived from the configured receive
+//! timeout) expires. The run still completes on the
+//! remaining machines, and the evicted worker can re-enter through the
+//! join path above.
+
+//!
+//! [`Message`]: crate::coordinator::protocol::Message
+//! [`Message::wire_bytes`]: crate::coordinator::protocol::Message::wire_bytes
+//! [`Bus`]: crate::coordinator::bus::Bus
+//! [`OverheadStats`]: crate::coordinator::protocol::OverheadStats
+
+pub mod codec;
+pub mod handshake;
+pub mod leader;
+pub mod mesh;
+pub mod session;
+pub mod worker;
+
+// Layer 1: the wire codec — frames and the wire error type.
+pub use codec::{decode_payload, encode_frame, read_frame, write_frame};
+pub use codec::{EpochFrame, Frame, SetupFrame, WireError};
+pub use codec::{MAX_FRAME_BYTES, WIRE_MAGIC, WIRE_VERSION};
+
+// Layer 2: the single-socket session primitive and the shared dial loop.
+pub use session::{dial_retry, FramedConn};
+
+// Layer 3: the mesh endpoint and its loopback harnesses.
+pub use mesh::{build_tcp_bus_local, connect_mesh, run_distributed_tcp_local};
+pub use mesh::{run_distributed_hierarchical_tcp_local, NetStats, TcpEndpoint};
+
+// Layer 4: the cluster roles — leader orchestration and the worker loops.
+pub use leader::{ClusterLeader, JoinRequest};
+pub use worker::{serve, serve_join, ServeSummary};
+
+use std::collections::BTreeMap;
+
+/// Parse a `host:port,host:port,...` peers list (shared by the
+/// `serve` and `dynamic --transport tcp` CLI paths).
+pub fn parse_peers(spec: &str) -> Result<Vec<String>, WireError> {
+    let peers: Vec<String> =
+        spec.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+    if peers.len() < 2 {
+        return Err(WireError::Protocol(format!(
+            "--peers needs at least 2 comma-separated host:port entries, got {spec:?}"
+        )));
+    }
+    let mut seen = BTreeMap::new();
+    for (i, p) in peers.iter().enumerate() {
+        if !p.contains(':') {
+            return Err(WireError::Protocol(format!("peer {p:?} is not host:port")));
+        }
+        if let Some(first) = seen.insert(p.clone(), i) {
+            return Err(WireError::Protocol(format!(
+                "peer {p:?} listed twice (positions {first} and {i})"
+            )));
+        }
+    }
+    Ok(peers)
+}
+
+#[cfg(test)]
+mod tests;

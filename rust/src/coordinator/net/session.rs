@@ -1,0 +1,251 @@
+//! Layer 2 of the coordinator's network stack (DESIGN.md §13): one
+//! socket's worth of session machinery, plus the timing primitives
+//! every higher layer shares.
+//!
+//! [`FramedConn`] owns a single connected socket and gives it framed
+//! writes (serialized by an internal lock, with the *first* failure
+//! recorded as death-diagnosis evidence) and deadline-bounded framed
+//! reads. The mesh keeps one per outbound peer; a future resident
+//! service front-end (`serve-api`, ROADMAP) can speak the wire through
+//! this type alone without dragging in the mesh or the cluster leader.
+//!
+//! [`dial_retry`] is the one retry/backoff loop behind initial mesh
+//! formation, admission dial-backs, and `serve --join` slot binding —
+//! its deadline semantics ("keep trying until the deadline itself has
+//! passed") are tested here once instead of re-proved at three call
+//! sites.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::codec::{encode_frame, read_frame, Frame, WireError};
+
+/// Initial dial backoff; doubles up to [`DIAL_BACKOFF_MAX`].
+pub(super) const DIAL_BACKOFF_START: Duration = Duration::from_millis(25);
+pub(super) const DIAL_BACKOFF_MAX: Duration = Duration::from_millis(800);
+/// Poll interval of the bounded accept loop.
+pub(super) const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Floor on the derived epoch wait: even with a very aggressive
+/// receive timeout a healthy leader needs real time to simulate an
+/// epoch window, so a worker never gives up faster than this.
+const EPOCH_WAIT_FLOOR: Duration = Duration::from_secs(5);
+
+/// How long a worker waits for the next `EpochBegin`. The leader
+/// simulates a whole epoch in between, so this is generous — ten
+/// receive timeouts — but it *scales with the configured timeout*
+/// instead of the old hard-coded 600 s, which left a worker whose
+/// leader had died hanging for ten minutes regardless of
+/// `--recv-timeout-ms`.
+pub(super) fn epoch_wait(recv_timeout: Duration) -> Duration {
+    recv_timeout.saturating_mul(10).max(EPOCH_WAIT_FLOOR)
+}
+
+/// Recover the guard from a possibly-poisoned mutex. The shared state
+/// behind these locks (accounting counters, an outbound socket) stays
+/// internally consistent even if a holder panicked mid-update, so one
+/// panicking reader/actor thread must degrade to a clean [`WireError`]
+/// elsewhere — not cascade `expect("poisoned")` aborts through every
+/// thread that touches the same stats handle.
+pub(super) fn lock_unpoisoned<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `attempt` with retry + exponential backoff until it succeeds or
+/// `deadline` has passed, returning the last error. This is the single
+/// retry loop behind mesh dialing, admission dial-backs, and join-slot
+/// binding; the deadline semantics matter: the loop keeps trying until
+/// the deadline *itself* has passed (the old `now + backoff >= deadline`
+/// check gave up one whole backoff early, wasting the final window),
+/// and each sleep is clamped to the time remaining.
+pub fn dial_retry<T>(
+    deadline: Instant,
+    start: Duration,
+    max: Duration,
+    mut attempt: impl FnMut() -> std::io::Result<T>,
+) -> std::io::Result<T> {
+    let mut backoff = start;
+    loop {
+        match attempt() {
+            Ok(value) => return Ok(value),
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(backoff.min(deadline - now));
+                backoff = backoff.saturating_mul(2).min(max);
+            }
+        }
+    }
+}
+
+/// Dial one peer with retry + backoff until `deadline`.
+pub(super) fn dial_peer(addr: &str, deadline: Instant) -> Result<TcpStream, WireError> {
+    let attempt = || TcpStream::connect(addr);
+    let stream = dial_retry(deadline, DIAL_BACKOFF_START, DIAL_BACKOFF_MAX, attempt)
+        .map_err(|e| WireError::Io(format!("dialing {addr}: {e}")))?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+/// A framed connection owning one connected socket — the primitive the
+/// mesh sends every frame through, and the seam a future front-end
+/// builds on. Writes are length-prefixed by the codec and serialized
+/// by an internal lock so reader threads and the main thread can share
+/// the socket; the first write failure is recorded on the connection
+/// (evidence for the leader's death diagnosis) as well as returned.
+pub struct FramedConn {
+    stream: Mutex<TcpStream>,
+    failure: Mutex<Option<String>>,
+}
+
+impl FramedConn {
+    /// Wrap one connected socket.
+    pub fn new(stream: TcpStream) -> FramedConn {
+        FramedConn { stream: Mutex::new(stream), failure: Mutex::new(None) }
+    }
+
+    /// Encode and send one frame; returns the wire byte count.
+    pub fn send(&self, frame: &Frame) -> Result<usize, WireError> {
+        let bytes = encode_frame(frame)?;
+        self.send_bytes(&bytes)?;
+        Ok(bytes.len())
+    }
+
+    /// Send pre-encoded frame bytes (the mesh encodes once per message
+    /// so its accounting sees the exact wire size). The first failure
+    /// is recorded for [`FramedConn::take_send_failure`] and returned
+    /// raw so callers keep their own error wording.
+    pub(super) fn send_bytes(&self, bytes: &[u8]) -> std::io::Result<()> {
+        let result = lock_unpoisoned(&self.stream).write_all(bytes);
+        if let Err(e) = &result {
+            let mut failure = lock_unpoisoned(&self.failure);
+            if failure.is_none() {
+                *failure = Some(e.to_string());
+            }
+        }
+        result
+    }
+
+    /// Receive one frame, waiting at most `timeout` for it to arrive.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Frame, WireError> {
+        let mut stream = lock_unpoisoned(&self.stream);
+        stream.set_read_timeout(Some(timeout.max(Duration::from_millis(1))))?;
+        let frame = read_frame(&mut *stream);
+        stream.set_read_timeout(None)?;
+        frame
+    }
+
+    /// The first send failure recorded on this connection, if any.
+    /// Taking it drains the record.
+    pub fn take_send_failure(&self) -> Option<String> {
+        lock_unpoisoned(&self.failure).take()
+    }
+
+    /// Unwrap the socket (e.g. to hand it to a reader thread).
+    pub fn into_stream(self) -> TcpStream {
+        self.stream.into_inner().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::net::{Shutdown, TcpListener};
+
+    use super::*;
+
+    /// The dial loop must keep retrying until the deadline itself has
+    /// passed. The old `now + backoff >= deadline` check surrendered
+    /// one whole backoff early: against a refusing port with a 300 ms
+    /// deadline it gave up at ~175 ms (25+50+100 slept, next backoff
+    /// 200 crossing the line). The fix retries into the final window.
+    #[test]
+    fn dial_retries_until_the_deadline_itself() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // now the port refuses connections
+        let start = Instant::now();
+        let deadline = start + Duration::from_millis(300);
+        assert!(dial_peer(&addr, deadline).is_err());
+        assert!(
+            start.elapsed() >= Duration::from_millis(250),
+            "dial gave up a backoff early: {:?}",
+            start.elapsed()
+        );
+    }
+
+    /// Same property for the shared loop itself, independent of any
+    /// socket: an always-failing attempt is retried into the final
+    /// window, and the deadline bounds the total wait.
+    #[test]
+    fn dial_retry_keeps_trying_into_the_final_window() {
+        let start = Instant::now();
+        let deadline = start + Duration::from_millis(300);
+        let mut attempts = 0u32;
+        let result = dial_retry(deadline, DIAL_BACKOFF_START, DIAL_BACKOFF_MAX, || {
+            attempts += 1;
+            Err::<(), _>(std::io::Error::new(std::io::ErrorKind::ConnectionRefused, "refused"))
+        });
+        assert!(result.is_err());
+        assert!(
+            start.elapsed() >= Duration::from_millis(250),
+            "gave up a backoff early after {attempts} attempts: {:?}",
+            start.elapsed()
+        );
+        assert!(attempts >= 4, "stopped attempting before the deadline: {attempts}");
+        assert!(start.elapsed() < Duration::from_secs(3), "overshot the deadline");
+    }
+
+    /// The first success wins immediately — no extra sleeps, and the
+    /// value comes back intact.
+    #[test]
+    fn dial_retry_returns_the_first_success() {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut attempts = 0u32;
+        let value = dial_retry(deadline, Duration::from_millis(1), Duration::from_millis(2), || {
+            attempts += 1;
+            if attempts < 3 {
+                Err(std::io::Error::new(std::io::ErrorKind::ConnectionRefused, "not yet"))
+            } else {
+                Ok(attempts)
+            }
+        })
+        .unwrap();
+        assert_eq!((value, attempts), (3, 3));
+    }
+
+    fn stream_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let a = TcpStream::connect(addr).unwrap();
+        let (b, _) = listener.accept().unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn framed_conn_round_trips_frames() {
+        let (a, b) = stream_pair();
+        let (a, b) = (FramedConn::new(a), FramedConn::new(b));
+        let sent = a.send(&Frame::RestoreAck { machine: 7 }).unwrap();
+        assert!(sent > 4, "frame shorter than its own length prefix: {sent}");
+        let got = b.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, Frame::RestoreAck { machine: 7 });
+        // An empty window maps to a clean timeout error, not a hang.
+        assert!(b.recv_timeout(Duration::from_millis(20)).is_err());
+        assert!(a.take_send_failure().is_none());
+    }
+
+    #[test]
+    fn framed_conn_records_the_first_send_failure() {
+        let (a, _b) = stream_pair();
+        a.shutdown(Shutdown::Write).unwrap();
+        let conn = FramedConn::new(a);
+        assert!(conn.send(&Frame::Goodbye).is_err());
+        let why = conn.take_send_failure().expect("first failure recorded");
+        assert!(!why.is_empty());
+        assert!(conn.take_send_failure().is_none(), "take drains the record");
+    }
+}

@@ -1,0 +1,111 @@
+//! Transport parity: the refinement game over real sockets must
+//! reproduce the in-process runs bit-for-bit (assignment, transfers,
+//! wire accounting), flat and hierarchical, charged and not. These
+//! exercise the whole stack end to end — codec, session, mesh,
+//! leader, worker — through the public `*_tcp_local` entry points.
+
+use std::sync::Arc;
+
+use crate::coordinator::distributed::{
+    run_distributed, run_distributed_hierarchical, DistributedOptions,
+};
+use crate::game::hierarchy::RackLayout;
+use crate::graph::generators::{table1_graph, WeightModel};
+use crate::partition::{MachineConfig, Partition};
+use crate::util::rng::Pcg32;
+
+use super::*;
+
+#[test]
+fn parse_peers_validates() {
+    let ok = parse_peers("127.0.0.1:7000, 127.0.0.1:7001,127.0.0.1:7002").unwrap();
+    assert_eq!(ok.len(), 3);
+    assert!(parse_peers("127.0.0.1:7000").is_err());
+    assert!(parse_peers("localhost,also-no-port").is_err());
+    assert!(parse_peers("h:1,h:1").is_err());
+}
+
+#[test]
+fn tcp_local_refinement_matches_in_process_exactly() {
+    let mut rng = Pcg32::new(8);
+    let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+    let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.5]);
+    let assignment: Vec<usize> = (0..50).map(|_| rng.index(3)).collect();
+    let part = Partition::from_assignment(&g, 3, assignment);
+    let opts = DistributedOptions::default();
+
+    let inproc = run_distributed(Arc::clone(&g), &machines, part.clone(), &opts);
+    let tcp = run_distributed_tcp_local(Arc::clone(&g), &machines, part, &opts).unwrap();
+    assert_eq!(tcp.partition.assignment(), inproc.partition.assignment());
+    assert_eq!(tcp.transfers, inproc.transfers);
+    assert_eq!(tcp.overhead, inproc.overhead, "wire accounting must be transport-invariant");
+    assert_eq!(tcp.converged, inproc.converged);
+}
+
+/// The migration charge is transport-invariant too: a nonzero
+/// charge over real sockets reproduces the in-process augmented
+/// game bit-for-bit (assignment, transfers, wire accounting).
+#[test]
+fn charged_tcp_matches_in_process_exactly() {
+    let mut rng = Pcg32::new(12);
+    let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+    let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.5]);
+    let assignment: Vec<usize> = (0..50).map(|_| rng.index(3)).collect();
+    let part = Partition::from_assignment(&g, 3, assignment);
+    let opts = DistributedOptions { migration_charge: 4.0, ..Default::default() };
+
+    let inproc = run_distributed(Arc::clone(&g), &machines, part.clone(), &opts);
+    let tcp = run_distributed_tcp_local(Arc::clone(&g), &machines, part, &opts).unwrap();
+    assert_eq!(tcp.partition.assignment(), inproc.partition.assignment());
+    assert_eq!(tcp.transfers, inproc.transfers);
+    assert_eq!(tcp.overhead, inproc.overhead);
+    assert!(tcp.converged && inproc.converged);
+}
+
+/// The two-level hierarchy is transport-invariant too: the TCP
+/// wiring of the phased epoch (RackBus over real sockets, scoped
+/// inner rings) reproduces the in-process hierarchical run
+/// bit-for-bit — assignment, transfers, wire accounting on both
+/// levels, convergence.
+#[test]
+fn hierarchical_tcp_matches_in_process_exactly() {
+    let mut rng = Pcg32::new(8);
+    let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+    let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.3, 0.2]);
+    let assignment: Vec<usize> = (0..50).map(|_| rng.index(4)).collect();
+    let part = Partition::from_assignment(&g, 4, assignment);
+    let layout = RackLayout::new(vec![0, 0, 1, 1]).unwrap();
+    let opts = DistributedOptions::default();
+
+    let inproc =
+        run_distributed_hierarchical(Arc::clone(&g), &machines, part.clone(), &layout, &opts);
+    let tcp =
+        run_distributed_hierarchical_tcp_local(Arc::clone(&g), &machines, part, &layout, &opts)
+            .unwrap();
+    assert_eq!(tcp.partition.assignment(), inproc.partition.assignment());
+    assert_eq!(tcp.transfers, inproc.transfers);
+    assert_eq!(tcp.overhead, inproc.overhead, "wire accounting must be transport-invariant");
+    assert_eq!(tcp.converged, inproc.converged);
+}
+
+/// Singleton racks over TCP degenerate to the flat TCP game
+/// bit-for-bit on the assignment (the hierarchy's identity
+/// baseline, DESIGN.md §12, carried across the wire).
+#[test]
+fn singleton_racks_hierarchical_tcp_matches_flat_tcp() {
+    let mut rng = Pcg32::new(12);
+    let g = Arc::new(table1_graph(50, 3, 6, WeightModel::default(), &mut rng));
+    let machines = MachineConfig::from_speeds(&[0.2, 0.3, 0.5]);
+    let assignment: Vec<usize> = (0..50).map(|_| rng.index(3)).collect();
+    let part = Partition::from_assignment(&g, 3, assignment);
+    let layout = RackLayout::singletons(3);
+    let opts = DistributedOptions::default();
+
+    let flat = run_distributed_tcp_local(Arc::clone(&g), &machines, part.clone(), &opts).unwrap();
+    let hier =
+        run_distributed_hierarchical_tcp_local(Arc::clone(&g), &machines, part, &layout, &opts)
+            .unwrap();
+    assert_eq!(hier.partition.assignment(), flat.partition.assignment());
+    assert_eq!(hier.transfers, flat.transfers);
+    assert_eq!(hier.converged, flat.converged);
+}

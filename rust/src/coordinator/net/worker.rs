@@ -1,0 +1,954 @@
+//! Layer 4b of the coordinator's network stack (DESIGN.md §13): the
+//! worker side of the cluster. [`serve`] joins the original mesh and
+//! [`serve_join`] dials into a live cluster for admission; both fall
+//! into the same steady-state loop — one refinement round per
+//! `EpochBegin` (flat or phased hierarchical), membership shrinking
+//! via `Restore` and growing via `Admit`, until `Goodbye`. The
+//! `GTIP_SERVE_DIE` fault injection for the recovery tests lives here.
+//! Wait failures are annotated with the peer wire id and the frame
+//! being awaited before they surface to the CLI.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::bus::Bus;
+use crate::coordinator::distributed::{machine_loop, machine_loop_scoped, RackBus};
+use crate::coordinator::machine::MachineActor;
+use crate::coordinator::protocol::{Message, OverheadStats};
+use crate::game::cost::Framework;
+use crate::game::hierarchy::RackLayout;
+use crate::graph::{Graph, GraphBuilder};
+use crate::partition::{MachineConfig, MachineId, Partition};
+
+use super::codec::{read_frame, wire_u32, write_frame, Frame, SetupFrame, WireError, WIRE_VERSION};
+use super::handshake::{accept_wire_peer, handshake_inbound, JOIN_HANDSHAKE_TIMEOUT};
+use super::mesh::{connect_mesh, spawn_reader, NetStats, SendFailures, TcpEndpoint};
+use super::session::{dial_peer, dial_retry, epoch_wait, FramedConn, ACCEPT_POLL};
+
+/// `recv_ctrl` with context: a worker's wait failures name the leader
+/// (wire id 0) and the frame the worker is blocked on, so the error
+/// that reaches the CLI reads "peer 0, awaiting EpochBegin: …".
+fn recv_from_leader(
+    ep: &TcpEndpoint,
+    timeout: Duration,
+    state: &str,
+) -> Result<(MachineId, Frame), WireError> {
+    ep.recv_ctrl(timeout).map_err(|e| e.while_awaiting(state, 0))
+}
+
+/// What a worker did over its lifetime (printed by `gtip serve`).
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub machine_id: MachineId,
+    pub epochs: u64,
+    pub overhead: OverheadStats,
+    pub control: NetStats,
+}
+
+/// Run machine `machine_id`'s side of the multi-process cluster: join
+/// the mesh, receive the fixture, then play one refinement round per
+/// `EpochBegin` until `Goodbye`. This is the body of `gtip serve`.
+pub fn serve(
+    machine_id: MachineId,
+    addrs: &[String],
+    connect_timeout: Duration,
+) -> Result<ServeSummary, WireError> {
+    if machine_id == 0 {
+        return Err(WireError::Protocol(
+            "machine 0 is the driver; run `gtip dynamic --transport tcp` instead of serve".into(),
+        ));
+    }
+    if machine_id >= addrs.len() {
+        return Err(WireError::Protocol(format!(
+            "--machine-id {machine_id} out of range for {} peers",
+            addrs.len()
+        )));
+    }
+    let stats = Arc::new(Mutex::new(OverheadStats::default()));
+    let ep = connect_mesh(machine_id, addrs, connect_timeout, Arc::clone(&stats))?;
+    // Fault injection for the recovery tests: "setup" dies after the
+    // fixture is validated, "epoch:N" dies on receiving EpochBegin N,
+    // "stats" dies just before reporting RoundStats, "admit" dies on
+    // receiving Admit (joiner side). Exit code 86 marks an intentional
+    // death (the harness asserts on it).
+    let die = std::env::var("GTIP_SERVE_DIE").unwrap_or_default();
+
+    // Fixture first. The wait derives from the dial window — the
+    // leader sets up right after the mesh forms; once the fixture is
+    // in hand the loop waits on the fixture's own receive timeout.
+    let setup = match recv_from_leader(&ep, epoch_wait(connect_timeout), "awaiting Setup")? {
+        (0, Frame::Setup(s)) => s,
+        (0, Frame::Goodbye) => {
+            return Ok(ServeSummary {
+                machine_id,
+                epochs: 0,
+                overhead: ep.stats_snapshot(),
+                control: ep.net_snapshot(),
+            })
+        }
+        (peer, frame) => {
+            return Err(WireError::Protocol(format!(
+                "expected Setup from the leader, got {frame:?} from machine {peer}"
+            )))
+        }
+    };
+    let fixture = WorkerFixture::from_setup(&setup, addrs.len())?;
+    if die == "setup" {
+        eprintln!("gtip serve: GTIP_SERVE_DIE=setup — dying after fixture validation");
+        std::process::exit(86);
+    }
+    run_worker_loop(ep, addrs, fixture, &die)
+}
+
+/// Everything a worker keeps between epochs, validated once from the
+/// `Setup` frame. Shared by the original-mesh path (`serve`) and the
+/// admission path (`serve_join`).
+struct WorkerFixture {
+    machines: MachineConfig,
+    graph: Graph,
+    /// Edge order of the built graph — per-epoch weights arrive in
+    /// the leader's edge order, which matches because both graphs
+    /// share the same topology.
+    edge_order: Vec<(usize, usize)>,
+    mu: f64,
+    framework: Framework,
+    migration_charge: f64,
+    epsilon: f64,
+    max_transfers: usize,
+    recv_timeout: Duration,
+    /// Two-level rack layout (wire v5); `None` on a flat cluster.
+    /// Indexed by *logical* id, so membership changes (`Restore`,
+    /// `Admit`) must update it in lockstep with the endpoint.
+    layout: Option<RackLayout>,
+}
+
+impl WorkerFixture {
+    /// Validate before handing anything to constructors that assert —
+    /// a buggy or skewed leader must produce a clean protocol error,
+    /// not abort the worker process.
+    fn from_setup(setup: &SetupFrame, k: usize) -> Result<WorkerFixture, WireError> {
+        if setup.speeds.len() != k {
+            return Err(WireError::Protocol(format!(
+                "fixture has {} machines but the mesh has {k}",
+                setup.speeds.len()
+            )));
+        }
+        let speed_sum: f64 = setup.speeds.iter().sum();
+        if setup.speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
+            return Err(WireError::Protocol(format!(
+                "fixture speeds are not normalized positive weights (sum {speed_sum})"
+            )));
+        }
+        let n = setup.node_weights.len();
+        if let Some(&(u, v, _)) = setup
+            .edges
+            .iter()
+            .find(|&&(u, v, _)| u as usize >= n || v as usize >= n || u == v)
+        {
+            return Err(WireError::Protocol(format!(
+                "fixture edge ({u}, {v}) is out of range for {n} nodes"
+            )));
+        }
+        if !weights_valid(&setup.node_weights)
+            || !weights_valid_iter(setup.edges.iter().map(|&(_, _, w)| w))
+        {
+            return Err(WireError::Protocol(
+                "fixture weights must be finite and non-negative".into(),
+            ));
+        }
+        if !(setup.migration_charge.is_finite() && setup.migration_charge >= 0.0) {
+            return Err(WireError::Protocol(format!(
+                "fixture migration charge {} must be finite and non-negative",
+                setup.migration_charge
+            )));
+        }
+        // Adopt the leader's normalized speeds verbatim — renormalizing
+        // here could drift each weight by an ulp and diverge replicas.
+        let machines = MachineConfig::from_normalized(setup.speeds.clone());
+        let mut builder = GraphBuilder::with_nodes(n);
+        for &(u, v, w) in &setup.edges {
+            builder.add_edge(u as usize, v as usize, w);
+        }
+        for (i, &w) in setup.node_weights.iter().enumerate() {
+            builder.set_node_weight(i, w);
+        }
+        let graph = builder.build();
+        let edge_order: Vec<(usize, usize)> = graph.edges().map(|(u, v, _)| (u, v)).collect();
+        if edge_order.len() != setup.edges.len() {
+            return Err(WireError::Protocol("fixture edge list had duplicates".into()));
+        }
+        Ok(WorkerFixture {
+            machines,
+            graph,
+            edge_order,
+            mu: setup.mu,
+            framework: setup.framework,
+            migration_charge: setup.migration_charge,
+            epsilon: setup.epsilon,
+            max_transfers: setup.max_transfers as usize,
+            recv_timeout: Duration::from_millis(setup.recv_timeout_ms.max(1)),
+            layout: if setup.racks.is_empty() {
+                None
+            } else {
+                if setup.racks.len() != k {
+                    return Err(WireError::Protocol(format!(
+                        "fixture has {} rack entries but the mesh has {k} machines",
+                        setup.racks.len()
+                    )));
+                }
+                let rack_of: Vec<usize> = setup.racks.iter().map(|&r| r as usize).collect();
+                Some(RackLayout::new(rack_of).map_err(WireError::Protocol)?)
+            },
+        })
+    }
+}
+
+/// The worker's steady state: one refinement round per `EpochBegin`,
+/// membership shrinking via `Restore` and growing via `Admit`, until
+/// `Goodbye`. The endpoint's own logical id / machine count track the
+/// membership changes (compact and extend renumber in place).
+fn run_worker_loop(
+    mut ep: TcpEndpoint,
+    addrs: &[String],
+    mut fixture: WorkerFixture,
+    die: &str,
+) -> Result<ServeSummary, WireError> {
+    let machine_id = ep.wire_id();
+    let n = fixture.graph.node_weights().len();
+    let mut epochs = 0u64;
+    loop {
+        match recv_from_leader(&ep, epoch_wait(fixture.recv_timeout), "awaiting EpochBegin")? {
+            (0, Frame::EpochBegin(e)) => {
+                if die == format!("epoch:{}", e.epoch) {
+                    eprintln!(
+                        "gtip serve: GTIP_SERVE_DIE={die} — dying on EpochBegin {}",
+                        e.epoch
+                    );
+                    std::process::exit(86);
+                }
+                let k = ep.machine_count();
+                if e.node_weights.len() != n || e.edge_weights.len() != fixture.edge_order.len()
+                {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} weight vectors do not match the fixture shape",
+                        e.epoch
+                    )));
+                }
+                if e.assignment.len() != n {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} assignment length {} != {n}",
+                        e.epoch,
+                        e.assignment.len()
+                    )));
+                }
+                if !weights_valid(&e.node_weights) || !weights_valid(&e.edge_weights) {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} weights must be finite and non-negative",
+                        e.epoch
+                    )));
+                }
+                fixture.graph.set_node_weights(&e.node_weights);
+                for (&(u, v), &w) in fixture.edge_order.iter().zip(&e.edge_weights) {
+                    fixture.graph.set_edge_weight(u, v, w);
+                }
+                let assignment: Vec<MachineId> =
+                    e.assignment.iter().map(|&a| a as MachineId).collect();
+                if let Some(&bad) = assignment.iter().find(|&&a| a >= k) {
+                    return Err(WireError::Protocol(format!(
+                        "epoch {} assignment names machine {bad} but K={k}",
+                        e.epoch
+                    )));
+                }
+                let part = Partition::from_assignment(&fixture.graph, k, assignment);
+                let before = ep.stats_snapshot();
+                let outcome = match (e.phase, &fixture.layout) {
+                    // Flat round: the original single-level ring.
+                    (0, _) => {
+                        let actor = MachineActor::new(
+                            ep.id(),
+                            Arc::new(fixture.graph.clone()),
+                            fixture.machines.clone(),
+                            &part,
+                            fixture.mu,
+                            fixture.framework,
+                            fixture.migration_charge,
+                        );
+                        Some(machine_loop(
+                            actor,
+                            &ep,
+                            fixture.epsilon,
+                            fixture.max_transfers,
+                            fixture.recv_timeout,
+                        ))
+                    }
+                    // Outer game: rack leaders play the quotient over a
+                    // RackBus; everyone else spectates and still
+                    // reports a (zero-delta) RoundStats below.
+                    (1, Some(layout)) => {
+                        if layout.is_leader(ep.id()) {
+                            let rack = layout.rack_of(ep.id());
+                            let qpart = Partition::from_assignment(
+                                &fixture.graph,
+                                layout.rack_count(),
+                                layout.quotient_assignment(part.assignment()),
+                            );
+                            let actor = MachineActor::new(
+                                rack,
+                                Arc::new(fixture.graph.clone()),
+                                layout.quotient_config(&fixture.machines),
+                                &qpart,
+                                fixture.mu,
+                                fixture.framework,
+                                fixture.migration_charge,
+                            );
+                            let bus = RackBus::new(&ep, rack, layout.leaders());
+                            Some(machine_loop(
+                                actor,
+                                &bus,
+                                fixture.epsilon,
+                                fixture.max_transfers,
+                                fixture.recv_timeout,
+                            ))
+                        } else {
+                            None
+                        }
+                    }
+                    // Inner game: the scoped ring of this machine's
+                    // rack. Each rack's leader kicks its own ring (the
+                    // cluster leader kicks its rack on its side).
+                    (2, Some(layout)) => {
+                        let scope = layout.members(layout.rack_of(ep.id())).to_vec();
+                        let actor = MachineActor::new(
+                            ep.id(),
+                            Arc::new(fixture.graph.clone()),
+                            fixture.machines.clone(),
+                            &part,
+                            fixture.mu,
+                            fixture.framework,
+                            fixture.migration_charge,
+                        )
+                        .with_scope(scope.clone());
+                        if layout.is_leader(ep.id()) {
+                            ep.send(
+                                ep.id(),
+                                Message::TakeMyTurn {
+                                    consecutive_forfeits: 0,
+                                    transfers_so_far: 0,
+                                },
+                            );
+                        }
+                        Some(machine_loop_scoped(
+                            actor,
+                            &ep,
+                            &scope,
+                            fixture.epsilon,
+                            fixture.max_transfers,
+                            fixture.recv_timeout,
+                        ))
+                    }
+                    (1 | 2, None) => {
+                        return Err(WireError::Protocol(format!(
+                            "epoch {} opened phase {} but the fixture is flat",
+                            e.epoch, e.phase
+                        )))
+                    }
+                    (p, _) => {
+                        return Err(WireError::Protocol(format!(
+                            "epoch {} opened unknown phase {p}",
+                            e.epoch
+                        )))
+                    }
+                };
+                let timed_out = outcome.as_ref().is_some_and(|o| o.timed_out);
+                if let Some(o) = outcome.as_ref().filter(|o| o.timed_out) {
+                    // A peer died mid-round. Do NOT unwind: report the
+                    // round's stats anyway — that report is this
+                    // worker's proof of life for the leader's death
+                    // diagnosis — then wait for the leader's Restore.
+                    eprintln!(
+                        "gtip serve: epoch {} round lost a peer{}; awaiting restore",
+                        e.epoch,
+                        match o.dead_peer {
+                            Some(m) => format!(" (machine {m})"),
+                            None => String::new(),
+                        }
+                    );
+                }
+                if die == "stats" {
+                    eprintln!("gtip serve: GTIP_SERVE_DIE=stats — dying before RoundStats");
+                    std::process::exit(86);
+                }
+                let delta = ep.stats_snapshot().delta_since(&before);
+                ep.send_ctrl(0, &Frame::RoundStats(delta))?;
+                // A rack leader (other than the cluster leader's own
+                // rack) ships its phase-2 ring outcome home: phase 2
+                // never moves a node across racks, so only the owning
+                // rack knows its nodes' final machines.
+                if e.phase == 2 && !timed_out {
+                    if let (Some(layout), Some(o)) = (&fixture.layout, &outcome) {
+                        let rack = layout.rack_of(ep.id());
+                        if layout.is_leader(ep.id()) && !layout.members(rack).contains(&0) {
+                            let pairs = part
+                                .assignment()
+                                .iter()
+                                .enumerate()
+                                .filter(|&(_, &m)| layout.rack_of(m) == rack)
+                                .map(|(i, _)| Ok((wire_u32(i)?, wire_u32(o.assignment[i])?)))
+                                .collect::<Result<_, WireError>>()?;
+                            ep.send_ctrl(
+                                0,
+                                &Frame::RackResult {
+                                    rack: wire_u32(rack)?,
+                                    transfers: o.transfers_applied,
+                                    converged: o.converged,
+                                    assignment: pairs,
+                                },
+                            )?;
+                        }
+                    }
+                }
+                // A hierarchical epoch spans phases 1 and 2; count it
+                // once, when its second half completes.
+                if !timed_out && e.phase != 1 {
+                    epochs += 1;
+                }
+            }
+            (0, Frame::Restore { survivors, speeds }) => {
+                let wish: Vec<MachineId> =
+                    survivors.iter().map(|&w| w as MachineId).collect();
+                if speeds.len() != wish.len() {
+                    return Err(WireError::Protocol(format!(
+                        "restore has {} survivors but {} speeds",
+                        wish.len(),
+                        speeds.len()
+                    )));
+                }
+                let speed_sum: f64 = speeds.iter().sum();
+                if speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
+                    return Err(WireError::Protocol(format!(
+                        "restore speeds are not normalized positive weights (sum {speed_sum})"
+                    )));
+                }
+                if !wish.contains(&ep.wire_id()) {
+                    // The leader evicted us — presumed dead (e.g. a
+                    // transient stall past the grace window). Bow out
+                    // cleanly; the survivors carry the run.
+                    eprintln!(
+                        "gtip serve: evicted by restore (wire id {}); exiting",
+                        ep.wire_id()
+                    );
+                    break;
+                }
+                // Dead machines by *current* logical id — computed
+                // before the compaction renumbers everything.
+                let dead: Vec<MachineId> =
+                    (0..ep.machine_count()).filter(|&m| !wish.contains(&ep.wire_of(m))).collect();
+                ep.compact(&wish)?;
+                ep.drain_inbox();
+                fixture.machines = MachineConfig::from_normalized(speeds.clone());
+                if let Some(l) = fixture.layout.take() {
+                    fixture.layout =
+                        Some(l.without_machines(&dead).map_err(WireError::Protocol)?);
+                }
+                ep.send_ctrl(0, &Frame::RestoreAck { machine: wire_u32(ep.wire_id())? })?;
+                eprintln!(
+                    "gtip serve: restored as machine {}/{} (wire id {})",
+                    ep.id(),
+                    ep.machine_count(),
+                    ep.wire_id()
+                );
+            }
+            (0, Frame::Admit { members, joiner, speeds, rack }) => {
+                let members: Vec<MachineId> =
+                    members.iter().map(|&w| w as MachineId).collect();
+                let joiner = joiner as MachineId;
+                if speeds.len() != members.len() {
+                    return Err(WireError::Protocol(format!(
+                        "admit has {} members but {} speeds",
+                        members.len(),
+                        speeds.len()
+                    )));
+                }
+                let speed_sum: f64 = speeds.iter().sum();
+                if speeds.iter().any(|&s| !(s > 0.0)) || (speed_sum - 1.0).abs() > 1e-6 {
+                    return Err(WireError::Protocol(format!(
+                        "admit speeds are not normalized positive weights (sum {speed_sum})"
+                    )));
+                }
+                // Dial the joiner, accept its return dial, extend. A
+                // failure here is NOT fatal: the joiner may have died
+                // mid-admission. Stay on the old mesh and wait — the
+                // leader's ack barrier will time out and broadcast a
+                // rollback Restore, which the arm above handles (an
+                // identity compact if we never extended).
+                let deadline = Instant::now() + fixture.recv_timeout;
+                match survivor_admit(&mut ep, addrs, &members, joiner, deadline) {
+                    Ok(()) => {
+                        ep.drain_inbox();
+                        fixture.machines = MachineConfig::from_normalized(speeds.clone());
+                        if let Some(l) = fixture.layout.take() {
+                            // Mirror the leader's with_inserted: the
+                            // joiner's logical id is its member-list
+                            // position, its rack rides the frame.
+                            let pos =
+                                members.iter().position(|&w| w == joiner).ok_or_else(|| {
+                                    WireError::Protocol(format!(
+                                        "admit member list omits joiner {joiner}"
+                                    ))
+                                })?;
+                            let r = if rack == u32::MAX {
+                                l.join_rack()
+                            } else {
+                                rack as usize
+                            };
+                            fixture.layout =
+                                Some(l.with_inserted(pos, r).map_err(WireError::Protocol)?);
+                        }
+                        ep.send_ctrl(
+                            0,
+                            &Frame::AdmitAck { machine: wire_u32(ep.wire_id())? },
+                        )?;
+                        eprintln!(
+                            "gtip serve: admitted wire id {joiner}; now machine {}/{} (wire id {})",
+                            ep.id(),
+                            ep.machine_count(),
+                            ep.wire_id()
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "gtip serve: admit of wire id {joiner} failed ({e}); awaiting rollback"
+                        );
+                    }
+                }
+            }
+            (0, Frame::Goodbye) => break,
+            (peer, frame) => {
+                return Err(WireError::Protocol(format!(
+                    "unexpected control frame from machine {peer}: {frame:?}"
+                )))
+            }
+        }
+    }
+    Ok(ServeSummary {
+        machine_id,
+        epochs,
+        overhead: ep.stats_snapshot(),
+        control: ep.net_snapshot(),
+    })
+}
+
+/// A survivor's half of an admission: dial the joiner, introduce
+/// ourselves, accept the joiner's return dial on the retained mesh
+/// listener, and extend the endpoint. The deadline is one receive
+/// timeout — strictly shorter than the leader's ack-barrier patience,
+/// so a dead joiner still leaves time to observe the rollback
+/// `Restore` that follows.
+fn survivor_admit(
+    ep: &mut TcpEndpoint,
+    addrs: &[String],
+    members: &[MachineId],
+    joiner: MachineId,
+    deadline: Instant,
+) -> Result<(), WireError> {
+    if joiner >= addrs.len() {
+        return Err(WireError::Protocol(format!(
+            "admit names joiner {joiner} but the peer list has {} entries",
+            addrs.len()
+        )));
+    }
+    let mut out = dial_peer(&addrs[joiner], deadline)?;
+    write_frame(
+        &mut out,
+        &Frame::Hello {
+            version: WIRE_VERSION,
+            machine: wire_u32(ep.wire_id())?,
+            machines: wire_u32(addrs.len())?,
+        },
+    )?;
+    let inbound = accept_wire_peer(&ep.listener, joiner, addrs.len(), deadline)?;
+    ep.extend(members, joiner, out, inbound)
+}
+
+/// How long a turned-away joiner pauses before re-dialing the leader.
+const JOIN_RETRY_PAUSE: Duration = Duration::from_millis(300);
+
+/// Run a *joining* machine's side of the cluster: bind our listed
+/// address, dial the leader with `Hello` + `Join`, wait (up to
+/// `admit_window`) for the leader to dial back at an epoch boundary,
+/// complete the mesh extension, check the `Setup` + `Catchup` the
+/// leader ships, ack, and fall into the normal worker loop. This is
+/// the body of `gtip serve --join`.
+///
+/// A rejection (`Goodbye`, or the leader simply closing the join
+/// stream — e.g. the run predates wire v4, or the cluster is still
+/// forming) is retried until `connect_timeout` runs out. Once a
+/// `Join` has been *accepted into the queue* (neither rejected nor
+/// closed) the joiner does NOT re-dial within the admit window:
+/// re-dialing would queue a duplicate request whose leader-side
+/// stream half is already dead.
+pub fn serve_join(
+    machine_id: MachineId,
+    addrs: &[String],
+    speed: f64,
+    rack: Option<usize>,
+    connect_timeout: Duration,
+    admit_window: Duration,
+) -> Result<ServeSummary, WireError> {
+    if machine_id == 0 {
+        return Err(WireError::Protocol(
+            "machine 0 is the driver; it cannot join its own cluster".into(),
+        ));
+    }
+    if machine_id >= addrs.len() {
+        return Err(WireError::Protocol(format!(
+            "--machine-id {machine_id} out of range for {} peers",
+            addrs.len()
+        )));
+    }
+    if !(speed.is_finite() && speed > 0.0) {
+        return Err(WireError::Protocol(format!("--speed {speed} must be finite and positive")));
+    }
+    let k_orig = addrs.len();
+    let die = std::env::var("GTIP_SERVE_DIE").unwrap_or_default();
+
+    // Bind with retry: the predecessor we replace may hold the port
+    // until its process is fully reaped.
+    let bind_deadline = Instant::now() + connect_timeout;
+    let bind = || TcpListener::bind(addrs[machine_id].as_str());
+    let listener = dial_retry(bind_deadline, JOIN_RETRY_PAUSE, JOIN_RETRY_PAUSE, bind)
+        .map_err(|e| WireError::Io(format!("binding {}: {e}", addrs[machine_id])))?;
+    listener.set_nonblocking(true)?;
+
+    let overall = Instant::now() + connect_timeout;
+    // Members' dials that complete before the leader's own — separate
+    // connections have no ordering guarantee — are stashed here.
+    let mut stash: Vec<(MachineId, TcpStream)> = Vec::new();
+    let no_peer_seen = vec![false; k_orig];
+    let (leader_out, leader_in) = 'attempt: loop {
+        let mut out = dial_peer(&addrs[0], overall)?;
+        write_frame(
+            &mut out,
+            &Frame::Hello {
+                version: WIRE_VERSION,
+                machine: wire_u32(machine_id)?,
+                machines: wire_u32(k_orig)?,
+            },
+        )?;
+        let rack_wire = match rack {
+            Some(r) => {
+                let w = wire_u32(r)?;
+                if w == u32::MAX {
+                    return Err(WireError::Protocol(format!("--rack {r} is reserved")));
+                }
+                w
+            }
+            None => u32::MAX,
+        };
+        write_frame(
+            &mut out,
+            &Frame::Join { machine: wire_u32(machine_id)?, speed, rack: rack_wire },
+        )?;
+        out.set_nonblocking(true)?;
+        eprintln!(
+            "gtip serve: join request sent (wire id {machine_id}, speed {speed}); waiting for admission"
+        );
+        let wait_deadline = Instant::now() + admit_window;
+        loop {
+            // Rejection check: the leader writes Goodbye (or just
+            // closes the stream) to turn us down.
+            let mut peeked = [0u8; 1];
+            let rejected = match out.peek(&mut peeked) {
+                Ok(0) => Some("join stream closed".to_string()),
+                Ok(_) => {
+                    out.set_nonblocking(false)?;
+                    out.set_read_timeout(Some(JOIN_HANDSHAKE_TIMEOUT))?;
+                    match read_frame(&mut out) {
+                        Ok(Frame::Goodbye) => Some("join rejected by the leader".to_string()),
+                        Err(WireError::Closed) => Some("join stream closed".to_string()),
+                        Ok(frame) => {
+                            return Err(WireError::Protocol(format!(
+                                "unexpected frame on the join stream: {frame:?}"
+                            )))
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                Err(e) => Some(format!("join stream error: {e}")),
+            };
+            if let Some(why) = rejected {
+                if Instant::now() >= overall {
+                    return Err(WireError::Protocol(format!(
+                        "{why}; connect window exhausted"
+                    )));
+                }
+                eprintln!("gtip serve: {why}; retrying");
+                std::thread::sleep(JOIN_RETRY_PAUSE);
+                continue 'attempt;
+            }
+            // Admission check: the leader dials our listener first,
+            // then the other members (whose dials may still arrive in
+            // any order relative to the leader's).
+            match listener.accept() {
+                Ok((stream, addr)) => {
+                    let deadline = Instant::now() + JOIN_HANDSHAKE_TIMEOUT;
+                    match handshake_inbound(stream, machine_id, k_orig, deadline, &no_peer_seen)
+                    {
+                        Ok((0, stream)) => break 'attempt (out, stream),
+                        Ok((peer, stream)) => {
+                            if stash.iter().any(|(p, _)| *p == peer) {
+                                eprintln!(
+                                    "gtip serve: dropping duplicate dial from machine {peer}"
+                                );
+                            } else {
+                                stash.push((peer, stream));
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("gtip serve: dropping inbound connection from {addr}: {e}")
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                Err(e) => return Err(e.into()),
+            }
+            if Instant::now() >= wait_deadline {
+                return Err(WireError::Protocol(format!(
+                    "not admitted within the {admit_window:?} admit window"
+                )));
+            }
+            std::thread::sleep(ACCEPT_POLL);
+        }
+    };
+
+    let mut leader_out = leader_out;
+    leader_out.set_nonblocking(false)?;
+    let mut leader_in = leader_in;
+    // The Admit broadcast follows the leader's dial immediately.
+    leader_in.set_read_timeout(Some(admit_window))?;
+    let admit = read_frame(&mut leader_in).map_err(|e| e.while_awaiting("awaiting Admit", 0))?;
+    // The joiner's rack arrives again inside the fresh Setup's full
+    // machine → rack map, so the Admit copy is redundant here.
+    let Frame::Admit { members, joiner, speeds, rack: _ } = admit else {
+        return Err(WireError::Protocol(format!("expected Admit, got {admit:?}")));
+    };
+    if joiner as MachineId != machine_id {
+        return Err(WireError::Protocol(format!(
+            "admit names joiner {joiner}, we are {machine_id}"
+        )));
+    }
+    let members: Vec<MachineId> = members.iter().map(|&w| w as MachineId).collect();
+    if members.len() < 2
+        || !members.windows(2).all(|w| w[0] < w[1])
+        || *members.last().expect("non-empty") >= k_orig
+        || members[0] != 0
+        || !members.contains(&machine_id)
+    {
+        return Err(WireError::Protocol(format!("admit member list {members:?} is invalid")));
+    }
+    if speeds.len() != members.len() {
+        return Err(WireError::Protocol(format!(
+            "admit has {} members but {} speeds",
+            members.len(),
+            speeds.len()
+        )));
+    }
+    if die == "admit" {
+        eprintln!("gtip serve: GTIP_SERVE_DIE=admit — dying on Admit");
+        std::process::exit(86);
+    }
+    leader_in.set_read_timeout(None)?;
+
+    // Complete the mesh: dial every other member, collect their dials
+    // (some may already be stashed from the wait loop).
+    let deadline = Instant::now() + admit_window;
+    let mut outs: Vec<Option<FramedConn>> = (0..k_orig).map(|_| None).collect();
+    outs[0] = Some(FramedConn::new(leader_out));
+    for &m in &members {
+        if m == 0 || m == machine_id {
+            continue;
+        }
+        let mut s = dial_peer(&addrs[m], deadline)?;
+        write_frame(
+            &mut s,
+            &Frame::Hello {
+                version: WIRE_VERSION,
+                machine: wire_u32(machine_id)?,
+                machines: wire_u32(k_orig)?,
+            },
+        )?;
+        outs[m] = Some(FramedConn::new(s));
+    }
+    let expected: Vec<MachineId> =
+        members.iter().copied().filter(|&m| m != 0 && m != machine_id).collect();
+    let mut have: Vec<(MachineId, TcpStream)> = Vec::new();
+    for (peer, stream) in stash {
+        if expected.contains(&peer) && !have.iter().any(|(p, _)| *p == peer) {
+            have.push((peer, stream));
+        }
+    }
+    while have.len() < expected.len() {
+        match listener.accept() {
+            Ok((stream, addr)) => {
+                match handshake_inbound(stream, machine_id, k_orig, deadline, &no_peer_seen) {
+                    Ok((peer, stream))
+                        if expected.contains(&peer) && !have.iter().any(|(p, _)| *p == peer) =>
+                    {
+                        have.push((peer, stream))
+                    }
+                    Ok((peer, _)) => {
+                        eprintln!("gtip serve: dropping unexpected dial from machine {peer}")
+                    }
+                    Err(e) => {
+                        eprintln!("gtip serve: dropping inbound connection from {addr}: {e}")
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Protocol(format!(
+                        "timed out waiting for member dials (have {}/{})",
+                        have.len(),
+                        expected.len()
+                    )));
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+
+    // Hand-build the endpoint — the mesh helper assumes a full K-way
+    // dial, but a joiner's mesh is the admitted membership.
+    let pos = members.iter().position(|&w| w == machine_id).expect("validated above");
+    let (inbox_tx, inbox) = channel();
+    let (ctrl_tx, ctrl) = channel();
+    spawn_reader(leader_in, 0, inbox_tx.clone(), ctrl_tx.clone());
+    for (peer, stream) in have {
+        spawn_reader(stream, peer, inbox_tx.clone(), ctrl_tx.clone());
+    }
+    let mut logical_of = vec![None; k_orig];
+    for (logical, &wire) in members.iter().enumerate() {
+        logical_of[wire] = Some(logical);
+    }
+    let ep = TcpEndpoint {
+        id: pos,
+        k: members.len(),
+        wire_id: machine_id,
+        wire_of: members.clone(),
+        logical_of,
+        inbox,
+        inbox_tx,
+        ctrl,
+        ctrl_tx,
+        listener,
+        outs,
+        stats: Arc::new(Mutex::new(OverheadStats::default())),
+        net: Arc::new(Mutex::new(NetStats::default())),
+        failures: Mutex::new(SendFailures::default()),
+    };
+
+    // Fixture + catch-up snapshot, then ack the admission.
+    let setup = match recv_from_leader(&ep, admit_window, "awaiting Setup")? {
+        (0, Frame::Setup(s)) => s,
+        (peer, frame) => {
+            return Err(WireError::Protocol(format!(
+                "expected Setup from the leader, got {frame:?} from machine {peer}"
+            )))
+        }
+    };
+    let fixture = WorkerFixture::from_setup(&setup, members.len())?;
+    match recv_from_leader(&ep, admit_window, "awaiting Catchup")? {
+        (0, Frame::Catchup { snapshot }) => {
+            let snap = crate::sim::Snapshot::decode(&snapshot)
+                .map_err(|e| WireError::Protocol(format!("catch-up snapshot: {e}")))?;
+            snap.validate_catchup(members.len(), fixture.graph.node_weights().len())
+                .map_err(WireError::Protocol)?;
+            eprintln!("gtip serve: caught up from {}", snap.summary());
+        }
+        (peer, frame) => {
+            return Err(WireError::Protocol(format!(
+                "expected Catchup from the leader, got {frame:?} from machine {peer}"
+            )))
+        }
+    }
+    ep.send_ctrl(0, &Frame::AdmitAck { machine: wire_u32(machine_id)? })?;
+    eprintln!("gtip serve: admitted as machine {pos}/{} (wire id {machine_id})", members.len());
+    run_worker_loop(ep, addrs, fixture, &die)
+}
+
+/// Weights arriving off the wire must be finite and non-negative —
+/// the graph constructors assert exactly that, and a worker must turn
+/// a bad leader into a protocol error, not an abort.
+fn weights_valid(ws: &[f64]) -> bool {
+    weights_valid_iter(ws.iter().copied())
+}
+
+fn weights_valid_iter(mut ws: impl Iterator<Item = f64>) -> bool {
+    ws.all(|w| w.is_finite() && w >= 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::coordinator::net::build_tcp_bus_local;
+
+    use super::*;
+
+    /// A worker whose leader goes silent (alive socket, no frames) must
+    /// give up after the *derived* epoch wait — ten receive timeouts,
+    /// floored at 5 s — not the old hard-coded 600 s. With a 200 ms
+    /// fixture timeout the floor governs: the worker exits in ~5 s.
+    #[test]
+    fn silent_leader_bounds_the_workers_wait() {
+        assert_eq!(epoch_wait(Duration::from_millis(200)), Duration::from_secs(5));
+        assert_eq!(epoch_wait(Duration::from_secs(2)), Duration::from_secs(20));
+        assert_eq!(epoch_wait(Duration::MAX), Duration::MAX); // saturates, no overflow
+
+        let (mut eps, _stats) = build_tcp_bus_local(2).unwrap();
+        let ep1 = eps.pop().unwrap();
+        let _ep0 = eps.pop().unwrap(); // the leader: alive but silent
+        let setup = SetupFrame {
+            speeds: vec![0.5, 0.5],
+            mu: 8.0,
+            framework: Framework::A,
+            migration_charge: 0.0,
+            epsilon: 1e-9,
+            max_transfers: 1000,
+            recv_timeout_ms: 200,
+            node_weights: vec![1.0, 1.0],
+            edges: vec![(0, 1, 1.0)],
+            racks: vec![],
+        };
+        let fixture = WorkerFixture::from_setup(&setup, 2).unwrap();
+        let addrs: Vec<String> = vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()];
+        let start = Instant::now();
+        let worker = std::thread::spawn(move || run_worker_loop(ep1, &addrs, fixture, ""));
+        // Poll rather than join so a regression to an unbounded wait
+        // fails the test at 60 s instead of hanging CI for 600.
+        while !worker.is_finished() {
+            assert!(
+                start.elapsed() < Duration::from_secs(60),
+                "worker still waiting after {:?} — epoch wait not derived from recv timeout",
+                start.elapsed()
+            );
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        let waited = start.elapsed();
+        let result = worker.join().expect("worker thread must not panic");
+        let err = match result {
+            Ok(_) => panic!("a silent leader must surface as an error, not success"),
+            Err(e) => e.to_string(),
+        };
+        assert!(
+            err.contains("peer 0, awaiting EpochBegin"),
+            "the error must name the silent peer and the awaited frame: {err}"
+        );
+        assert!(
+            waited >= Duration::from_secs(4),
+            "worker gave up before the derived epoch wait: {waited:?}"
+        );
+    }
+}

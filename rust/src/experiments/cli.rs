@@ -22,36 +22,12 @@
 //! Errors are plain `Box<dyn Error>` (`anyhow` is unavailable offline);
 //! every sub-error type converts via `?`.
 
-use std::sync::Arc;
-use std::time::Duration;
-
-use crate::config::Config;
-use crate::coordinator::net::{self, ClusterLeader};
-use crate::coordinator::{run_distributed, run_distributed_hierarchical, DistributedOptions};
-use crate::game::annealing::{anneal_then_refine, AnnealOptions};
-use crate::game::cost::Framework;
-use crate::game::hierarchy::RackLayout;
-use crate::game::refine::{RefineEngine, RefineOptions};
-use crate::graph::generators::{generate, GraphFamily};
-use crate::partition::initial::grow_partition;
-use crate::partition::{global_cost, MachineConfig};
-use crate::sim::driver::{run_dynamic, DriverOptions};
-use crate::sim::dynamic::{
-    compare_frozen_vs_rebalanced, CompareReport, DynamicDriver, DynamicOptions, EstimatorKind,
-    RefineBackend, WeightEstimator,
-};
-use crate::sim::engine::SimOptions;
-use crate::sim::fuzz::{
-    run_fuzz, save_corpus, EvalOptions, FuzzCase, FuzzFixture, FuzzOptions,
-};
-use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions, MAX_SCHEDULE_THREADS};
-use crate::sim::workload::{FloodWorkload, WorkloadOptions};
-use crate::util::bench::{parse_json, write_json_group, JsonVal};
 use crate::util::cli::Args;
-use crate::util::rng::Pcg32;
 
-/// CLI-level result: any error type boxes into it via `?`.
-type CliResult = Result<(), Box<dyn std::error::Error>>;
+use super::cmd::{
+    cmd_artifacts, cmd_bench_gate, cmd_churn_sweep, cmd_dynamic, cmd_experiment, cmd_fuzz,
+    cmd_hierarchy_bench, cmd_partition, cmd_serve, cmd_simulate, cmd_snapshot, CliResult,
+};
 
 const HELP: &str = "gtip — Game Theoretic Iterative Partitioning (Kurve et al., TOMACS 2011)
 
@@ -133,1198 +109,10 @@ fn run(args: &Args) -> CliResult {
     }
 }
 
-fn machines_from_args(args: &Args) -> Result<MachineConfig, Box<dyn std::error::Error>> {
-    if let Some(speeds) = args.opt_list::<f64>("speeds")? {
-        Ok(MachineConfig::from_speeds(&speeds))
-    } else {
-        let k = args.opt_or::<usize>("k", 5)?;
-        Ok(MachineConfig::homogeneous(k))
-    }
-}
-
-fn cmd_partition(args: &Args) -> CliResult {
-    let seed = args.opt_or::<u64>("seed", Config::default().seed)?;
-    let mu = args.opt_or::<f64>("mu", 8.0)?;
-    let framework: Framework = args.str_or("framework", "A").parse()?;
-    let machines = machines_from_args(args)?;
-    let mut rng = Pcg32::new(seed);
-
-    let graph = if let Some(path) = args.opt_str("graph") {
-        crate::graph::io::load_graph(path)?
-    } else {
-        let family: GraphFamily = args.str_or("family", "table1").parse()?;
-        let nodes = args.opt_or::<usize>("nodes", 230)?;
-        generate(family, nodes, &mut rng)
-    };
-
-    println!(
-        "graph: {} nodes, {} edges; K={} machines; mu={mu}; framework {framework}",
-        graph.node_count(),
-        graph.edge_count(),
-        machines.count()
-    );
-    let initial = grow_partition(&graph, &machines, &mut rng);
-    let (c0_i, c0t_i) = global_cost::both(&graph, &machines, &initial, mu);
-    println!("initial partition:   C0 = {c0_i:.0}   C~0 = {c0t_i:.0}   counts = {:?}", initial.counts());
-
-    if args.flag("distributed") {
-        let report = run_distributed(
-            Arc::new(graph.clone()),
-            &machines,
-            initial,
-            &DistributedOptions { mu, framework, ..Default::default() },
-        );
-        let (c0, c0t) = global_cost::both(&graph, &machines, &report.partition, mu);
-        println!(
-            "distributed refine:  C0 = {c0:.0}   C~0 = {c0t:.0}   transfers = {}   counts = {:?}",
-            report.transfers,
-            report.partition.counts()
-        );
-        println!(
-            "sync overhead: {} msgs, {} bytes total, {:.1} bytes/transfer (O(K), N-independent)",
-            report.overhead.total_messages(),
-            report.overhead.total_bytes(),
-            report.overhead.bytes_per_transfer(report.transfers as u64),
-        );
-    } else if args.flag("anneal") {
-        let (part, potential) = anneal_then_refine(
-            &graph,
-            &machines,
-            initial,
-            mu,
-            framework,
-            &AnnealOptions::default(),
-            &mut rng,
-        );
-        let (c0, c0t) = global_cost::both(&graph, &machines, &part, mu);
-        println!(
-            "anneal+refine:       C0 = {c0:.0}   C~0 = {c0t:.0}   potential = {potential:.0}   counts = {:?}",
-            part.counts()
-        );
-    } else {
-        let mut engine = RefineEngine::new(&graph, &machines, initial, mu, framework);
-        let report = engine.run(&RefineOptions::default());
-        let (c0, c0t) = global_cost::both(&graph, &machines, engine.partition(), mu);
-        println!(
-            "iterative refine:    C0 = {c0:.0}   C~0 = {c0t:.0}   transfers = {}   converged = {}   counts = {:?}",
-            report.transfers,
-            report.converged,
-            engine.partition().counts()
-        );
-    }
-
-    if let Some(path) = args.opt_str("save") {
-        crate::graph::io::save_graph(&graph, path)?;
-        println!("(saved graph to {path})");
-    }
-    Ok(())
-}
-
-fn cmd_simulate(args: &Args) -> CliResult {
-    let seed = args.opt_or::<u64>("seed", 42)?;
-    let family: GraphFamily = args.str_or("family", "pa").parse()?;
-    let nodes = args.opt_or::<usize>("nodes", 230)?;
-    let machines = machines_from_args(args)?;
-    let refine_every = args.opt_or::<u64>("refine-every", 500)?;
-    let framework: Framework = args.str_or("framework", "A").parse()?;
-    let mu = args.opt_or::<f64>("mu", 8.0)?;
-    let threads = args.opt_or::<usize>("threads", 150)?;
-    let parallelism = args.opt_or::<usize>("parallelism", 1)?;
-
-    let mut rng = Pcg32::new(seed);
-    let graph = generate(family, nodes, &mut rng);
-    let workload = FloodWorkload::generate(
-        &graph,
-        &WorkloadOptions { threads, ..Default::default() },
-        &mut rng,
-    );
-    let driver = DriverOptions {
-        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
-        refine_every,
-        framework,
-        mu,
-        ticks_per_transfer: 0,
-    };
-    let report = run_dynamic(&graph, &machines, workload, &driver, &mut rng);
-    println!(
-        "simulation time: {} wall ticks  (events {}, forwards {}, cross-machine {}, rollbacks {}, anti-messages {})",
-        report.total_time(),
-        report.stats.events_processed,
-        report.stats.events_forwarded,
-        report.stats.cross_machine_forwards,
-        report.stats.rollbacks,
-        report.stats.antimessages_sent,
-    );
-    println!(
-        "refinement epochs: {}   node transfers: {}   truncated: {}",
-        report.refinements, report.transfers, report.stats.truncated
-    );
-    Ok(())
-}
-
-/// The closed-loop §6.1 title scenario: scripted drifting workload,
-/// epoch-windowed load measurement, estimator-smoothed re-weighting,
-/// warm-started refinement, live migration, per-epoch reporting.
-fn cmd_dynamic(args: &Args) -> CliResult {
-    let seed = args.opt_or::<u64>("seed", 2011)?;
-    let family: GraphFamily = args.str_or("family", "pa").parse()?;
-    let nodes = args.opt_or::<usize>("nodes", 150)?;
-    let machines = machines_from_args(args)?;
-    let scenario_kind: ScenarioKind = args.str_or("scenario", "hotspot").parse()?;
-    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 200)?;
-    let framework: Framework = args.str_or("framework", "A").parse()?;
-    let mu = args.opt_or::<f64>("mu", 8.0)?;
-    let estimator_kind: EstimatorKind = args.str_or("estimator", "ewma").parse()?;
-    let backend: RefineBackend = args.str_or("backend", "sequential").parse()?;
-    let threads = args.opt_or::<usize>("threads", 160)?;
-    let horizon = args.opt_or::<u64>("horizon", 2_400)?;
-    let ticks_per_transfer = args.opt_or::<u64>("ticks-per-transfer", 0)?;
-    // In-game surcharge: explicit --migration-charge wins; otherwise it
-    // derives as ticks_per_transfer x tick_value so the game prices
-    // exactly what the report bills (DESIGN.md §9).
-    let tick_value = args.opt_or::<f64>("tick-value", 1.0)?;
-    if !(tick_value >= 0.0 && tick_value.is_finite()) {
-        return Err("--tick-value must be finite and >= 0".into());
-    }
-    let migration_charge = match args.opt::<f64>("migration-charge")? {
-        Some(c) => c,
-        None => ticks_per_transfer as f64 * tick_value,
-    };
-    if !(migration_charge >= 0.0 && migration_charge.is_finite()) {
-        return Err("--migration-charge must be finite and >= 0".into());
-    }
-    let parallelism = args.opt_or::<usize>("parallelism", 1)?;
-    let transport = args.str_or("transport", "inproc").to_string();
-    let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
-    // How long the cluster waits on a silent peer before declaring it
-    // dead (rides Setup, so workers use it too). The 30s default is
-    // safe for congested CI; kill-a-worker tests dial it down so death
-    // diagnosis is quick.
-    let recv_timeout = Duration::from_millis(args.opt_or::<u64>("recv-timeout-ms", 30_000)?.max(1));
-    // Patience of the admission handshake's ack barrier (leader side).
-    // Defaults to 2× recv_timeout inside ClusterLeader; only override
-    // when a test needs the rollback path to trip quickly.
-    let admit_window = args.opt::<u64>("admit-window-ms")?.map(Duration::from_millis);
-    let tcp = match transport.as_str() {
-        "inproc" | "in-process" | "local" => false,
-        "tcp" => true,
-        other => return Err(format!("unknown transport {other:?} (expected inproc|tcp)").into()),
-    };
-    let backend = if tcp {
-        if args.flag("compare") {
-            return Err("--compare runs two arms and is not supported with --transport tcp".into());
-        }
-        if backend != RefineBackend::Distributed && args.opt_str("backend").is_some() {
-            return Err("--transport tcp requires --backend distributed".into());
-        }
-        RefineBackend::Distributed
-    } else {
-        backend
-    };
-    if nodes == 0 {
-        return Err("--nodes must be >= 1".into());
-    }
-    if threads == 0 {
-        return Err("--threads must be >= 1".into());
-    }
-    if threads as u64 > MAX_SCHEDULE_THREADS {
-        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
-    }
-    if horizon == 0 {
-        return Err("--horizon must be >= 1".into());
-    }
-    let checkpoint_dir = args.opt_str("checkpoint-dir").map(std::path::PathBuf::from);
-    // Two-level hierarchy (DESIGN.md §12): `--racks "0,0,1,1"` names the
-    // rack of each machine. Validated against the fleet the run starts
-    // with — on `--restore` that is the snapshot's K, not `--k`.
-    let racks = match args.opt_str("racks") {
-        Some(spec) => {
-            let k = match args.opt_str("restore") {
-                Some(path) => {
-                    crate::sim::Snapshot::read_from(std::path::Path::new(path))?.machine_count()
-                }
-                None => machines.count(),
-            };
-            Some(crate::game::hierarchy::RackLayout::parse(spec, k)?)
-        }
-        None => None,
-    };
-
-    let options = DynamicOptions {
-        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
-        epoch_ticks,
-        framework,
-        mu,
-        backend,
-        ticks_per_transfer,
-        migration_charge,
-        max_refinements: 0,
-        checkpoint_dir,
-        racks,
-    };
-
-    // Resume from an epoch-boundary checkpoint instead of generating a
-    // fixture: topology, fleet, pending events, estimator memory and
-    // cumulative counters all come from the file (DESIGN.md §10).
-    if let Some(path) = args.opt_str("restore") {
-        if args.flag("compare") {
-            return Err("--restore resumes one arm; it cannot be combined with --compare".into());
-        }
-        let snap = crate::sim::Snapshot::read_from(std::path::Path::new(path))?;
-        let graph = snap.build_graph();
-        println!(
-            "restore {path}: {} LPs, K={}, epoch {}, {} ticks simulated",
-            graph.node_count(),
-            snap.machine_count(),
-            snap.epoch,
-            snap.engine.stats.ticks,
-        );
-        let estimator = WeightEstimator::of_kind(estimator_kind);
-        let mut driver = DynamicDriver::from_snapshot(&graph, &snap, estimator, options);
-        if tcp {
-            let peers = net::parse_peers(args.req_str("peers")?)?;
-            if peers.len() != snap.machine_count() {
-                return Err(format!(
-                    "--peers lists {} machines but the snapshot has K={}",
-                    peers.len(),
-                    snap.machine_count()
-                )
-                .into());
-            }
-            let mut leader = ClusterLeader::connect(
-                &peers,
-                DistributedOptions {
-                    mu,
-                    framework,
-                    migration_charge,
-                    recv_timeout,
-                    ..Default::default()
-                },
-                connect_timeout,
-            )?;
-            if let Some(w) = admit_window {
-                leader.set_admit_window(w);
-            }
-            driver.attach_cluster(leader)?;
-        }
-        let report = driver.try_run()?;
-        let title = format!("gtip dynamic — restored from {path}");
-        println!("{}", report.epoch_table(&title).to_text());
-        println!(
-            "total: {} wall ticks  (events {}, rollbacks {}, {} refinements, {} transfers, truncated {})",
-            report.total_time(),
-            report.stats.events_processed,
-            report.stats.rollbacks,
-            report.refinements(),
-            report.transfers,
-            report.stats.truncated,
-        );
-        if let Some(out) = args.opt_str("report-json") {
-            // Final measured weights, like the live path — so the cost
-            // here is directly comparable with the run that wrote the
-            // checkpoint (net-smoke's recovery gate relies on this).
-            let json = dynamic_report_json(
-                &report,
-                driver.engine().partition().assignment(),
-                driver.weighted_graph(),
-                driver.machines(),
-                mu,
-            );
-            if let Some(dir) = std::path::Path::new(out).parent() {
-                if !dir.as_os_str().is_empty() {
-                    std::fs::create_dir_all(dir)?;
-                }
-            }
-            std::fs::write(out, json.sorted().render() + "\n")?;
-            println!("(wrote {out})");
-        }
-        return Ok(());
-    }
-
-    let mut rng = Pcg32::new(seed);
-    let graph = generate(family, nodes, &mut rng);
-    let scenario = Scenario::build(
-        scenario_kind,
-        &graph,
-        &ScenarioOptions { threads, horizon_ticks: horizon, ..Default::default() },
-        &mut rng,
-    );
-    println!(
-        "scenario {scenario_kind} ({}): {} LPs, {} edges, K={}, {} floods over {horizon} ticks",
-        scenario_kind.describe(),
-        graph.node_count(),
-        graph.edge_count(),
-        machines.count(),
-        scenario.len(),
-    );
-    println!(
-        "loop: epoch={epoch_ticks} ticks, estimator {estimator_kind}, backend {backend}, framework {framework}, mu={mu}, c_mig={migration_charge}"
-    );
-    if let Some(l) = &options.racks {
-        println!(
-            "hierarchy: two-level game, {} racks over K={} machines",
-            l.rack_count(),
-            l.machine_count()
-        );
-    }
-
-    let initial = grow_partition(&graph, &machines, &mut rng);
-    let estimator = WeightEstimator::of_kind(estimator_kind);
-
-    if args.flag("compare") {
-        if args.opt_str("report-json").is_some() {
-            return Err("--report-json only supports single-arm runs (drop --compare)".into());
-        }
-        let report = compare_frozen_vs_rebalanced(
-            &graph,
-            &machines,
-            &initial,
-            &scenario.injections,
-            estimator,
-            &options,
-        );
-        let title = format!("gtip dynamic — {scenario_kind} (rebalanced arm)");
-        println!("{}", report.rebalanced.epoch_table(&title).to_text());
-        println!(
-            "frozen     : {:>7} wall ticks  (rollbacks {:>6}, cross-machine {:>6})",
-            report.frozen.total_time(),
-            report.frozen.stats.rollbacks,
-            report.frozen.stats.cross_machine_forwards,
-        );
-        println!(
-            "rebalanced : {:>7} wall ticks  (rollbacks {:>6}, cross-machine {:>6}, {} refinements, {} transfers)",
-            report.rebalanced.total_time(),
-            report.rebalanced.stats.rollbacks,
-            report.rebalanced.stats.cross_machine_forwards,
-            report.rebalanced.refinements(),
-            report.rebalanced.transfers,
-        );
-        println!("speedup from closed-loop rebalancing: {:.2}x", report.speedup());
-    } else {
-        let mut driver = DynamicDriver::new(
-            &graph,
-            machines.clone(),
-            initial,
-            scenario.injections,
-            estimator,
-            options,
-        );
-        if tcp {
-            let peers = net::parse_peers(args.req_str("peers")?)?;
-            if peers.len() != machines.count() {
-                return Err(format!(
-                    "--peers lists {} machines but K={} (peer 0 is this driver)",
-                    peers.len(),
-                    machines.count()
-                )
-                .into());
-            }
-            println!(
-                "transport tcp: leading a {}-process cluster (this process = machine 0 @ {})",
-                peers.len(),
-                peers[0]
-            );
-            let mut leader = ClusterLeader::connect(
-                &peers,
-                DistributedOptions {
-                    mu,
-                    framework,
-                    migration_charge,
-                    recv_timeout,
-                    ..Default::default()
-                },
-                connect_timeout,
-            )?;
-            if let Some(w) = admit_window {
-                leader.set_admit_window(w);
-            }
-            driver.attach_cluster(leader)?;
-        }
-        let report = driver.try_run()?;
-        let title = format!("gtip dynamic — {scenario_kind}");
-        println!("{}", report.epoch_table(&title).to_text());
-        println!(
-            "total: {} wall ticks  (events {}, rollbacks {}, {} refinements, {} transfers, truncated {})",
-            report.total_time(),
-            report.stats.events_processed,
-            report.stats.rollbacks,
-            report.refinements(),
-            report.transfers,
-            report.stats.truncated,
-        );
-        if let Some(o) = report.total_overhead() {
-            println!(
-                "coordinator sync: {} msgs, {} bytes on the wire, {:.1} bytes/transfer, {:.1} bytes/RegularUpdate (O(K), N-independent)",
-                o.total_messages(),
-                o.total_bytes(),
-                o.bytes_per_transfer(report.transfers as u64),
-                o.bytes_per_regular_update(),
-            );
-            if o.rack_update.messages > 0 {
-                println!(
-                    "cross-rack sync: {} RackUpdate msgs, {} bytes, {:.1} bytes/RackUpdate (O(R), K- and N-independent)",
-                    o.rack_update.messages,
-                    o.rack_update.bytes,
-                    o.bytes_per_rack_update(),
-                );
-            }
-        }
-        if report.recoveries() > 0 {
-            println!(
-                "recovered from {} worker death(s); fleet now K={}",
-                report.recoveries(),
-                driver.machines().count(),
-            );
-        }
-        if report.admissions() > 0 {
-            println!(
-                "admitted {} joiner(s); fleet now K={}",
-                report.admissions(),
-                driver.machines().count(),
-            );
-        }
-        if let Some(path) = args.opt_str("report-json") {
-            // `driver.machines()` and `driver.weighted_graph()`, not
-            // the pre-run config: a recovery shrinks the fleet (and an
-            // admission grows it), and the final assignment was
-            // refined on the final measured weights — costing it
-            // against the stale K or the initial weights would be
-            // wrong (and would make the recovered run incomparable
-            // with a `--restore recovery-NNNN.snap` replay).
-            let json = dynamic_report_json(
-                &report,
-                driver.engine().partition().assignment(),
-                driver.weighted_graph(),
-                driver.machines(),
-                mu,
-            );
-            if let Some(dir) = std::path::Path::new(path).parent() {
-                if !dir.as_os_str().is_empty() {
-                    std::fs::create_dir_all(dir)?;
-                }
-            }
-            std::fs::write(path, json.sorted().render() + "\n")?;
-            println!("(wrote {path})");
-        }
-    }
-    Ok(())
-}
-
-/// Transport-invariant summary of a closed-loop run: the `net-smoke`
-/// CI job byte-compares this JSON between the TCP multi-process run
-/// and the in-process run on the same fixture.
-fn dynamic_report_json(
-    report: &crate::sim::dynamic::DynamicReport,
-    final_assignment: &[usize],
-    graph: &crate::graph::Graph,
-    machines: &MachineConfig,
-    mu: f64,
-) -> JsonVal {
-    let part = crate::partition::Partition::from_assignment(
-        graph,
-        machines.count(),
-        final_assignment.to_vec(),
-    );
-    let (c0, c0t) = global_cost::both(graph, machines, &part, mu);
-    let mut fields = vec![
-        (
-            "assignment".into(),
-            JsonVal::Arr(final_assignment.iter().map(|&m| JsonVal::Int(m as u64)).collect()),
-        ),
-        ("global_cost_c0".into(), JsonVal::Num(c0)),
-        ("global_cost_c0_tilde".into(), JsonVal::Num(c0t)),
-        ("ticks".into(), JsonVal::Int(report.stats.ticks)),
-        ("events_processed".into(), JsonVal::Int(report.stats.events_processed)),
-        ("rollbacks".into(), JsonVal::Int(report.stats.rollbacks)),
-        ("transfers".into(), JsonVal::Int(report.transfers as u64)),
-        ("refinements".into(), JsonVal::Int(report.refinements() as u64)),
-        ("recoveries".into(), JsonVal::Int(report.recoveries() as u64)),
-        ("admissions".into(), JsonVal::Int(report.admissions() as u64)),
-        ("machines".into(), JsonVal::Int(machines.count() as u64)),
-        (
-            "racks".into(),
-            JsonVal::Int(report.epochs.iter().map(|e| e.racks).max().unwrap_or(0) as u64),
-        ),
-    ];
-    if let Some(o) = report.total_overhead() {
-        let counter = |c: &crate::coordinator::protocol::Counter| {
-            JsonVal::Obj(vec![
-                ("messages".into(), JsonVal::Int(c.messages)),
-                ("bytes".into(), JsonVal::Int(c.bytes)),
-            ])
-        };
-        fields.push((
-            "overhead".into(),
-            JsonVal::Obj(vec![
-                ("take_my_turn".into(), counter(&o.take_my_turn)),
-                ("receive_node".into(), counter(&o.receive_node)),
-                ("regular_update".into(), counter(&o.regular_update)),
-                ("rack_update".into(), counter(&o.rack_update)),
-                ("shutdown".into(), counter(&o.shutdown)),
-                ("total_messages".into(), JsonVal::Int(o.total_messages())),
-                ("total_bytes".into(), JsonVal::Int(o.total_bytes())),
-                (
-                    "sync_bytes_per_transfer".into(),
-                    JsonVal::Num(o.bytes_per_transfer(report.transfers as u64)),
-                ),
-                (
-                    "regular_update_bytes_per_message".into(),
-                    JsonVal::Num(o.bytes_per_regular_update()),
-                ),
-                (
-                    "rack_update_bytes_per_message".into(),
-                    JsonVal::Num(o.bytes_per_rack_update()),
-                ),
-            ]),
-        ));
-    }
-    JsonVal::Obj(vec![("dynamic".into(), JsonVal::Obj(fields))])
-}
-
-/// Inspect an epoch-boundary checkpoint: print its summary and verify
-/// the decode→re-encode round trip is byte-identical (the determinism
-/// gate DESIGN.md §10 promises for every `.snap` file).
-fn cmd_snapshot(args: &Args) -> CliResult {
-    let path = args
-        .opt_str("inspect")
-        .ok_or("usage: gtip snapshot --inspect FILE")?;
-    let bytes = std::fs::read(path)?;
-    let snap = crate::sim::Snapshot::decode(&bytes)?;
-    println!("{}", snap.summary());
-    let reencoded = snap.encode();
-    if reencoded != bytes {
-        return Err(format!(
-            "round-trip diverged: {} bytes on disk, {} re-encoded",
-            bytes.len(),
-            reencoded.len()
-        )
-        .into());
-    }
-    println!("round-trip: {} bytes, re-encode byte-identical", bytes.len());
-    Ok(())
-}
-
-/// Worker side of the multi-process cluster: block until the leader
-/// (machine 0, `gtip dynamic --transport tcp`) connects, then play one
-/// refinement round per epoch until it says goodbye. With `--join`,
-/// instead of waiting for the leader's mesh dial, ask a *live* cluster
-/// to re-admit this machine id (DESIGN.md §10): send `Join`, wait out
-/// the admission handshake (`--admit-window-ms`), catch up from the
-/// leader's boundary snapshot, and serve from there. `--speed` is the
-/// joiner's self-reported relative speed (1.0 = an average machine of
-/// the original fleet).
-fn cmd_serve(args: &Args) -> CliResult {
-    let machine_id = args.opt::<usize>("machine-id")?.ok_or("--machine-id is required")?;
-    let peers = net::parse_peers(args.req_str("peers")?)?;
-    let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
-    if args.opt_str("checkpoint-dir").is_some() {
-        // Accepted so one launch template serves every rank: snapshots
-        // are taken leader-side (machine 0 owns the engine), so a
-        // worker has nothing to write there.
-        println!("note: checkpoints are taken by the leader; --checkpoint-dir is a no-op on serve");
-    }
-    let summary = if args.flag("join") {
-        let speed = args.opt_or::<f64>("speed", 1.0)?;
-        if !(speed > 0.0 && speed.is_finite()) {
-            return Err("--speed must be finite and > 0".into());
-        }
-        // Rack the joiner asks to be placed in (hierarchical clusters,
-        // DESIGN.md §12). Omitted = leader's choice (least-loaded rack);
-        // ignored by flat clusters.
-        let rack = args.opt::<usize>("rack")?;
-        let admit_window =
-            Duration::from_millis(args.opt_or::<u64>("admit-window-ms", 120_000)?.max(1));
-        println!(
-            "gtip serve: machine {machine_id}/{} joining the live cluster via {} (leader @ {})",
-            peers.len(),
-            peers.get(machine_id).map(String::as_str).unwrap_or("?"),
-            peers[0],
-        );
-        net::serve_join(machine_id, &peers, speed, rack, connect_timeout, admit_window)?
-    } else {
-        if args.opt_str("speed").is_some()
-            || args.opt_str("admit-window-ms").is_some()
-            || args.opt_str("rack").is_some()
-        {
-            return Err("--speed / --rack / --admit-window-ms only apply with --join".into());
-        }
-        println!(
-            "gtip serve: machine {machine_id}/{} listening on {} (leader @ {})",
-            peers.len(),
-            peers.get(machine_id).map(String::as_str).unwrap_or("?"),
-            peers[0],
-        );
-        net::serve(machine_id, &peers, connect_timeout)?
-    };
-    println!(
-        "served {} refinement epochs as machine {}: sent {} sync msgs / {} bytes, {} control msgs / {} bytes",
-        summary.epochs,
-        summary.machine_id,
-        summary.overhead.total_messages(),
-        summary.overhead.total_bytes(),
-        summary.control.control_messages,
-        summary.control.control_bytes,
-    );
-    Ok(())
-}
-
-/// Quantify the churn/hysteresis trade-off of migration-cost-aware
-/// refinement (DESIGN.md §9): sweep the per-transfer charge over fixed
-/// scenario fixtures, run the frozen-vs-rebalanced comparison at each
-/// level — the charge is billed as wall ticks AND priced inside the
-/// game (`c_mig = ticks · tick_value`) — and merge a `churn_tradeoff`
-/// group (transfers, migration ticks, speedup per level) into the
-/// machine-readable bench report that `gtip bench-gate` validates.
-fn cmd_churn_sweep(args: &Args) -> CliResult {
-    let seed = args.opt_or::<u64>("seed", 2011)?;
-    let nodes = args.opt_or::<usize>("nodes", 120)?;
-    let k = args.opt_or::<usize>("k", 4)?;
-    let threads = args.opt_or::<usize>("threads", 100)?;
-    let horizon = args.opt_or::<u64>("horizon", 1_600)?;
-    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 200)?;
-    let framework: Framework = args.str_or("framework", "A").parse()?;
-    let tick_value = args.opt_or::<f64>("tick-value", 1.0)?;
-    let out = args.str_or("out", "results/BENCH_sim.json").to_string();
-    if nodes == 0 || k == 0 || threads == 0 || horizon == 0 || epoch_ticks == 0 {
-        return Err("--nodes, --k, --threads, --horizon, --epoch-ticks must be >= 1".into());
-    }
-    if threads as u64 > MAX_SCHEDULE_THREADS {
-        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
-    }
-    if !(tick_value >= 0.0 && tick_value.is_finite()) {
-        return Err("--tick-value must be finite and >= 0".into());
-    }
-    let charges: Vec<u64> =
-        args.opt_list::<u64>("charges")?.unwrap_or_else(|| vec![0, 2, 8, 32]);
-    if charges.is_empty() {
-        return Err("--charges needs at least one level".into());
-    }
-    if charges.windows(2).any(|w| w[1] <= w[0]) {
-        return Err("--charges must be strictly increasing".into());
-    }
-    let scenario_kinds: Vec<ScenarioKind> = args
-        .str_or("scenarios", "hotspot,flash")
-        .split(',')
-        .map(str::trim)
-        .filter(|s| !s.is_empty())
-        .map(|s| s.parse::<ScenarioKind>())
-        .collect::<Result<_, _>>()?;
-    if scenario_kinds.is_empty() {
-        return Err("--scenarios needs at least one scenario".into());
-    }
-    for (i, a) in scenario_kinds.iter().enumerate() {
-        if scenario_kinds[..i].contains(a) {
-            return Err(format!(
-                "--scenarios lists {} twice (duplicate JSON keys in the report)",
-                a.name()
-            )
-            .into());
-        }
-    }
-
-    println!(
-        "churn sweep: {} scenario(s), charges {:?} ticks/transfer (tick value {tick_value}), \
-         {nodes} LPs, K={k}, {threads} floods over {horizon} ticks, epoch {epoch_ticks}, framework {framework}",
-        scenario_kinds.len(),
-        charges,
-    );
-    let mut group: Vec<(String, JsonVal)> = vec![
-        ("smoke".into(), JsonVal::Bool(std::env::var("GTIP_BENCH_SMOKE").is_ok())),
-        (
-            "charges".into(),
-            JsonVal::Arr(charges.iter().map(|&c| JsonVal::Int(c)).collect()),
-        ),
-    ];
-    let mut strictly_decreasing_everywhere = 0usize;
-    for kind in &scenario_kinds {
-        let fixture = crate::util::testkit::ScenarioFixture::new(*kind, seed)
-            .nodes(nodes)
-            .machines(k)
-            .threads(threads)
-            .horizon(horizon)
-            .build();
-        println!("  {:<8} charge | transfers | migration_ticks | frozen | rebalanced | speedup", kind.name());
-        // The frozen arm never refines, so it is charge-independent:
-        // run it once per scenario and reuse it at every charge level.
-        let frozen = DynamicDriver::new(
-            &fixture.graph,
-            fixture.machines.clone(),
-            fixture.initial.clone(),
-            fixture.scenario.injections.clone(),
-            WeightEstimator::instantaneous(),
-            DynamicOptions {
-                sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
-                epoch_ticks: 0,
-                framework,
-                ..Default::default()
-            },
-        )
-        .run_owned();
-        let mut rows: Vec<(String, JsonVal)> = Vec::new();
-        let mut transfer_curve: Vec<u64> = Vec::new();
-        for &charge in &charges {
-            let options = DynamicOptions {
-                sim: SimOptions { max_ticks: 2_000_000, ..Default::default() },
-                epoch_ticks,
-                framework,
-                ..Default::default()
-            }
-            .charge_transfers(charge, tick_value);
-            let rebalanced = DynamicDriver::new(
-                &fixture.graph,
-                fixture.machines.clone(),
-                fixture.initial.clone(),
-                fixture.scenario.injections.clone(),
-                WeightEstimator::ewma(0.5),
-                options,
-            )
-            .run_owned();
-            let transfers = rebalanced.transfers as u64;
-            let truncated = frozen.stats.truncated || rebalanced.stats.truncated;
-            let speedup = CompareReport::speedup_of(frozen.total_time(), rebalanced.total_time());
-            println!(
-                "  {:<8} {:>6} | {:>9} | {:>15} | {:>6} | {:>10} | {:.3}x{}",
-                kind.name(),
-                charge,
-                transfers,
-                rebalanced.migration_ticks,
-                frozen.total_time(),
-                rebalanced.total_time(),
-                speedup,
-                if truncated { "  [TRUNCATED at the tick cap — numbers understate]" } else { "" },
-            );
-            transfer_curve.push(transfers);
-            rows.push((
-                format!("charge_{charge}"),
-                JsonVal::Obj(vec![
-                    ("transfers".into(), JsonVal::Int(transfers)),
-                    ("migration_ticks".into(), JsonVal::Int(rebalanced.migration_ticks)),
-                    ("frozen_ticks".into(), JsonVal::Int(frozen.total_time())),
-                    ("rebalanced_ticks".into(), JsonVal::Int(rebalanced.total_time())),
-                    ("speedup".into(), JsonVal::Num(speedup)),
-                    ("truncated".into(), JsonVal::Bool(truncated)),
-                ]),
-            ));
-        }
-        // "Strictly decreasing" with two refinements: it needs at least
-        // one real comparison (a single-level sweep can't vacuously
-        // claim it), and a 0 -> 0 plateau at high charges counts — the
-        // balancer is fully damped, which is the behavior the flag
-        // exists to demonstrate, not a violation of it.
-        let strictly_decreasing = transfer_curve.len() >= 2
-            && transfer_curve.windows(2).all(|w| w[1] < w[0] || (w[0] == 0 && w[1] == 0));
-        if strictly_decreasing {
-            strictly_decreasing_everywhere += 1;
-        }
-        rows.push((
-            "transfers_strictly_decreasing".into(),
-            JsonVal::Bool(strictly_decreasing),
-        ));
-        group.push((kind.name().to_string(), JsonVal::Obj(rows)));
-    }
-    println!(
-        "transfers strictly decreasing with the charge on {strictly_decreasing_everywhere}/{} scenario(s)",
-        scenario_kinds.len()
-    );
-    let path = write_json_group(&out, "churn_tradeoff", &JsonVal::Obj(group))?;
-    println!("(merged churn_tradeoff into {})", path.display());
-    Ok(())
-}
-
-/// Measure the two-level hierarchy's coordination overhead (DESIGN.md
-/// §12): run the in-process hierarchical refinement over several graph
-/// sizes on a fixed fleet/rack layout and merge a `hierarchy` group
-/// into the bench report. The table demonstrates the O(K_rack +
-/// K_machine) claim: a cross-rack `RackUpdate` costs exactly `33 + 8R`
-/// framed bytes — scaling with the rack count R, not the machine count
-/// K, and independent of N — while the inner games' `RegularUpdate`s
-/// stay at the flat `33 + 8K`.
-fn cmd_hierarchy_bench(args: &Args) -> CliResult {
-    let seed = args.opt_or::<u64>("seed", 2011)?;
-    let k = args.opt_or::<usize>("k", 9)?;
-    let mu = args.opt_or::<f64>("mu", 8.0)?;
-    let framework: Framework = args.str_or("framework", "A").parse()?;
-    let out = args.str_or("out", "results/BENCH_sim.json").to_string();
-    let sizes: Vec<usize> =
-        args.opt_list::<usize>("sizes")?.unwrap_or_else(|| vec![120, 240, 360]);
-    if sizes.is_empty() || sizes.iter().any(|&n| n == 0) {
-        return Err("--sizes needs at least one size, all >= 1".into());
-    }
-    if k == 0 {
-        return Err("--k must be >= 1".into());
-    }
-    // Default: K=9 over R=3 equal racks. A 2-rack outer ring never
-    // broadcasts a RackUpdate (a transfer notifies only its
-    // counterpart, via ReceiveNode), so the measurable default keeps
-    // R >= 3.
-    let layout = match args.opt_str("racks") {
-        Some(spec) => RackLayout::parse(spec, k)?,
-        None => {
-            let per = k.div_ceil(3);
-            RackLayout::new((0..k).map(|m| m / per).collect())?
-        }
-    };
-    let racks = layout.rack_count();
-    println!(
-        "hierarchy bench: K={k} machines over R={racks} racks, sizes {sizes:?}, \
-         framework {framework}, mu={mu}"
-    );
-
-    let mut group: Vec<(String, JsonVal)> = vec![
-        ("smoke".into(), JsonVal::Bool(std::env::var("GTIP_BENCH_SMOKE").is_ok())),
-        ("machines".into(), JsonVal::Int(k as u64)),
-        ("racks".into(), JsonVal::Int(racks as u64)),
-    ];
-    println!("       N | transfers | rack_update msgs | bytes/RackUpdate | bytes/RegularUpdate");
-    let mut per_message: Vec<f64> = Vec::new();
-    for &n in &sizes {
-        let mut rng = Pcg32::new(seed);
-        let graph = generate(GraphFamily::PreferentialAttachment, n, &mut rng);
-        let machines = MachineConfig::homogeneous(k);
-        // A uniform random start (not the balanced grower) so the
-        // outer game has genuine cross-rack imbalance to descend —
-        // otherwise zero RackUpdates flow and there is nothing to
-        // measure.
-        let assignment: Vec<usize> = (0..n).map(|_| rng.index(k)).collect();
-        let initial =
-            crate::partition::Partition::from_assignment(&graph, k, assignment);
-        let report = run_distributed_hierarchical(
-            Arc::new(graph),
-            &machines,
-            initial,
-            &layout,
-            &DistributedOptions { mu, framework, ..Default::default() },
-        );
-        let o = &report.overhead;
-        println!(
-            "  {n:>6} | {:>9} | {:>16} | {:>16.1} | {:>19.1}",
-            report.transfers,
-            o.rack_update.messages,
-            o.bytes_per_rack_update(),
-            o.bytes_per_regular_update(),
-        );
-        if o.rack_update.messages > 0 {
-            per_message.push(o.bytes_per_rack_update());
-        }
-        group.push((
-            format!("n_{n}"),
-            JsonVal::Obj(vec![
-                ("transfers".into(), JsonVal::Int(report.transfers as u64)),
-                ("converged".into(), JsonVal::Bool(report.converged)),
-                ("rack_update_messages".into(), JsonVal::Int(o.rack_update.messages)),
-                ("rack_update_bytes".into(), JsonVal::Int(o.rack_update.bytes)),
-                (
-                    "rack_update_bytes_per_message".into(),
-                    JsonVal::Num(o.bytes_per_rack_update()),
-                ),
-                (
-                    "regular_update_bytes_per_message".into(),
-                    JsonVal::Num(o.bytes_per_regular_update()),
-                ),
-                ("total_bytes".into(), JsonVal::Int(o.total_bytes())),
-            ]),
-        ));
-    }
-    // The headline check: every observed cross-rack aggregate frame is
-    // exactly 33 + 8R bytes — flat across N (and across K at fixed R).
-    let expected = (33 + 8 * racks) as f64;
-    let flat = !per_message.is_empty() && per_message.iter().all(|&b| b == expected);
-    println!(
-        "cross-rack aggregate bytes/message: expected {expected} (33 + 8R), flat across N: {flat}"
-    );
-    group.push(("rack_update_bytes_expected".into(), JsonVal::Num(expected)));
-    group.push(("rack_update_bytes_flat_across_n".into(), JsonVal::Bool(flat)));
-    if !flat {
-        return Err(format!(
-            "hierarchy bench: cross-rack aggregate bytes not flat at 33+8R={expected}: {per_message:?}"
-        )
-        .into());
-    }
-    let path = write_json_group(&out, "hierarchy", &JsonVal::Obj(group))?;
-    println!("(merged hierarchy into {})", path.display());
-    Ok(())
-}
-
-/// Schema gate for the bench trajectory: every group/key present in
-/// the committed baseline must appear in the measured report, so a
-/// bench that silently stops emitting a metric fails CI instead of
-/// shipping an empty trajectory.
-fn cmd_bench_gate(args: &Args) -> CliResult {
-    let baseline_path = args.str_or("baseline", "results/BENCH_baseline.json");
-    let measured_path = args.str_or("measured", "results/BENCH_sim.json");
-    let baseline = parse_json(&std::fs::read_to_string(baseline_path).map_err(|e| {
-        format!("reading baseline {baseline_path}: {e}")
-    })?)
-    .map_err(|e| format!("parsing {baseline_path}: {e}"))?;
-    let measured = parse_json(&std::fs::read_to_string(measured_path).map_err(|e| {
-        format!("reading measured {measured_path}: {e}")
-    })?)
-    .map_err(|e| format!("parsing {measured_path}: {e}"))?;
-
-    let mut missing = Vec::new();
-    fn walk(baseline: &JsonVal, measured: &JsonVal, path: &str, missing: &mut Vec<String>) {
-        if let JsonVal::Obj(kvs) = baseline {
-            for (k, sub) in kvs {
-                let child = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
-                match measured.get(k) {
-                    Some(m) => walk(sub, m, &child, missing),
-                    None => missing.push(child),
-                }
-            }
-        }
-    }
-    walk(&baseline, &measured, "", &mut missing);
-    if missing.is_empty() {
-        println!("bench gate OK: {measured_path} covers every key of {baseline_path}");
-        Ok(())
-    } else {
-        for m in &missing {
-            eprintln!("bench gate: {measured_path} is missing {m}");
-        }
-        Err(format!(
-            "schema regression: {} key(s) present in {baseline_path} but absent from {measured_path}",
-            missing.len()
-        )
-        .into())
-    }
-}
-
-/// Adversarial scenario fuzzing (`sim::fuzz`): search the drift-schedule
-/// genome space for worst-case workloads, shrink the winners, and
-/// persist them as a replayable corpus — or replay one corpus file.
-fn cmd_fuzz(args: &Args) -> CliResult {
-    let budget = args.opt_or::<usize>("budget", 200)?;
-    let seed = args.opt_or::<u64>("seed", 2011)?;
-    let nodes = args.opt_or::<usize>("nodes", 96)?;
-    let k = args.opt_or::<usize>("k", 4)?;
-    let horizon = args.opt_or::<u64>("horizon", 1_200)?;
-    let threads = args.opt_or::<u32>("threads", 120)?;
-    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 150)?;
-    let framework: Framework = args.str_or("framework", "A").parse()?;
-    let top_k = args.opt_or::<usize>("top", 3)?;
-    let corpus_dir = args.str_or("corpus-dir", "results/fuzz_corpus").to_string();
-    if nodes == 0 || k == 0 || horizon == 0 || threads == 0 {
-        return Err("--nodes, --k, --horizon and --threads must be >= 1".into());
-    }
-    if threads as u64 > MAX_SCHEDULE_THREADS {
-        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
-    }
-    let migration_charge = args.opt_or::<f64>("migration-charge", 0.0)?;
-    if !(migration_charge >= 0.0 && migration_charge.is_finite()) {
-        return Err("--migration-charge must be finite and >= 0".into());
-    }
-    // Engine-configuration knobs (also mutated by the search itself):
-    // 0 = homogeneous machine speeds, the pre-config-fuzz default.
-    let speed_seed = args.opt_or::<u64>("speed-seed", 0)?;
-    let inter_delay = args.opt_or::<u64>("inter-delay", 3)?;
-    let intra_delay = args.opt_or::<u64>("intra-delay", 0)?;
-    let fixture = FuzzFixture { graph_seed: seed, nodes, machines: k, speed_seed };
-    let eval = EvalOptions {
-        epoch_ticks,
-        framework,
-        migration_charge,
-        inter_machine_delay: inter_delay,
-        intra_machine_delay: intra_delay,
-        oracle: !args.flag("no-oracle"),
-        ..Default::default()
-    };
-
-    if let Some(path) = args.opt_str("replay") {
-        let case = FuzzCase::load(path)?;
-        println!(
-            "replaying {:?}: {} genes, {} threads over {} ticks on fixture (seed {}, {} LPs, K={})",
-            case.name,
-            case.schedule.genes.len(),
-            case.schedule.total_threads(),
-            case.schedule.horizon_ticks,
-            case.fixture.graph_seed,
-            case.fixture.nodes,
-            case.fixture.machines,
-        );
-        // Replay under the settings the stored objectives were measured
-        // with; CLI eval flags apply only to files that carry none.
-        let eval = match &case.eval {
-            Some(stored) => {
-                println!(
-                    "using stored eval settings: epoch {} ticks, framework {}, delays {}/{}, oracle {}",
-                    stored.epoch_ticks,
-                    stored.framework,
-                    stored.inter_machine_delay,
-                    stored.intra_machine_delay,
-                    stored.oracle
-                );
-                stored.clone()
-            }
-            None => eval,
-        };
-        let obj = crate::sim::fuzz::evaluate(&case.fixture, &case.schedule, &eval)?;
-        println!(
-            "frozen {} ticks | rebalanced {} ticks | gap {:.3}x | rollbacks {} | transfers {} | refinements {}",
-            obj.frozen_ticks,
-            obj.rebalanced_ticks,
-            obj.gap,
-            obj.rollbacks,
-            obj.transfers,
-            obj.refinements,
-        );
-        println!(
-            "descent violations: {} | oracle divergence: {} | truncated: frozen {} / rebalanced {}",
-            obj.descent_violations,
-            obj.oracle_divergence,
-            obj.frozen_truncated,
-            obj.rebalanced_truncated,
-        );
-        if let Some(stored) = &case.objectives {
-            if obj.bit_eq(stored) {
-                println!("replay matches the stored objectives byte-for-byte");
-            } else {
-                return Err(format!(
-                    "replay DIVERGED from stored objectives:\n  stored   {stored:?}\n  measured {obj:?}"
-                )
-                .into());
-            }
-        }
-        if obj.is_bug() {
-            return Err("replayed schedule exposes a bug-class finding (see above)".into());
-        }
-        return Ok(());
-    }
-
-    let options = FuzzOptions {
-        budget,
-        seed,
-        fixture,
-        horizon_ticks: horizon,
-        thread_budget: threads,
-        hop_limit: 4,
-        eval,
-        top_k,
-        shrink: !args.flag("no-shrink"),
-        verbose: true,
-    };
-    println!(
-        "fuzzing drift schedules: budget {budget}, fixture (seed {seed}, {nodes} LPs, K={k}), \
-         horizon {horizon}, {threads} threads, epoch {epoch_ticks}, framework {framework}"
-    );
-    let outcome = run_fuzz(&options)?;
-    println!(
-        "campaign done: {} evaluations, hand-written best gap {:.3}x",
-        outcome.evaluations, outcome.handwritten_best_gap
-    );
-    for f in &outcome.found {
-        println!(
-            "  #{} {}: gap {:.3}x, score {:.3}, {} genes (from {}), {} threads{}",
-            f.rank,
-            f.name,
-            f.objectives.gap,
-            f.objectives.score(),
-            f.schedule.genes.len(),
-            f.genes_before_shrink,
-            f.schedule.total_threads(),
-            if f.objectives.is_bug() { "  [BUG-CLASS FINDING]" } else { "" },
-        );
-    }
-    let written = save_corpus(std::path::Path::new(&corpus_dir), &outcome)?;
-    for p in &written {
-        println!("(wrote {})", p.display());
-    }
-    if outcome.beat_handwritten() {
-        println!(
-            "worst found schedule beats every hand-written scenario \
-             ({:.3}x > {:.3}x)",
-            outcome.found.first().map(|f| f.objectives.gap).unwrap_or(0.0),
-            outcome.handwritten_best_gap
-        );
-    } else {
-        println!(
-            "note: no found schedule beat the hand-written best gap {:.3}x \
-             (raise --budget to search longer)",
-            outcome.handwritten_best_gap
-        );
-    }
-    Ok(())
-}
-
-fn cmd_experiment(args: &Args) -> CliResult {
-    let which = args
-        .positionals
-        .get(1)
-        .map(String::as_str)
-        .ok_or("experiment name required: table1|batch|fig7|fig8|fig9|fig10|ablation|all")?;
-    let seed = args.opt_or::<u64>("seed", 2011)?;
-    let quick = args.flag("quick");
-    match which {
-        "table1" => {
-            crate::experiments::table1::run_and_report(seed);
-        }
-        "batch" => {
-            crate::experiments::batch::run_and_report(seed, quick);
-        }
-        "fig7" => {
-            crate::experiments::figs78::run_and_report(
-                GraphFamily::PreferentialAttachment,
-                seed,
-                quick,
-            );
-        }
-        "fig8" => {
-            crate::experiments::figs78::run_and_report(GraphFamily::Geometric, seed, quick);
-        }
-        "ablation" => {
-            crate::experiments::ablation::run_and_report(seed, quick);
-        }
-        "fig9" | "fig10" | "fig9_10" => {
-            crate::experiments::fig9_10::run_and_report(seed, quick);
-        }
-        "all" => {
-            crate::experiments::table1::run_and_report(seed);
-            crate::experiments::batch::run_and_report(seed, quick);
-            crate::experiments::figs78::run_and_report(
-                GraphFamily::PreferentialAttachment,
-                seed,
-                quick,
-            );
-            crate::experiments::figs78::run_and_report(GraphFamily::Geometric, seed, quick);
-            crate::experiments::fig9_10::run_and_report(seed, quick);
-        }
-        other => return Err(format!("unknown experiment {other:?}").into()),
-    }
-    Ok(())
-}
-
-#[cfg(feature = "pjrt")]
-fn cmd_artifacts(args: &Args) -> CliResult {
-    use crate::runtime::cost_eval::{max_rel_error_vs_native, PjrtCostEvaluator};
-    let dir = args.str_or("dir", "artifacts").to_string();
-    let mut eval = PjrtCostEvaluator::from_dir(&dir)?;
-    println!("artifacts dir {dir}: max padded size {} nodes", eval.max_nodes());
-
-    let mut rng = Pcg32::new(7);
-    let setup = crate::experiments::common::StudySetup::default();
-    let graph = setup.graph(&mut rng);
-    let part = setup.initial(&graph, &mut rng);
-    let out = eval.evaluate(&graph, &setup.machines, &part, setup.mu)?;
-    let err = max_rel_error_vs_native(&graph, &setup.machines, &part, setup.mu, &out);
-    println!(
-        "verified refine_step on N={} K={}: PJRT vs native max rel error = {err:.2e}",
-        out.n, out.k
-    );
-    if err >= 1e-3 {
-        return Err(format!("artifact/native divergence: {err}").into());
-    }
-    println!("artifacts OK");
-    Ok(())
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn cmd_artifacts(_args: &Args) -> CliResult {
-    Err("the `artifacts` subcommand requires building with `--features pjrt` \
-         (vendored xla crate; see DESIGN.md §7)"
-        .into())
-}
-
 #[cfg(test)]
 mod tests {
+    use crate::util::bench::{parse_json, JsonVal};
+
     use super::*;
 
     fn parse(s: &[&str]) -> Args {

@@ -1,0 +1,536 @@
+//! The closed-loop subcommands: `gtip dynamic` (the full
+//! simulate → estimate → refine → migrate loop, in-process or over an
+//! attached TCP cluster, with checkpoints and churn), `gtip snapshot`
+//! (inspect a checkpoint file), and `gtip serve` (run one worker of a
+//! distributed cluster).
+
+use std::time::Duration;
+
+use crate::coordinator::net::{self, ClusterLeader};
+use crate::coordinator::DistributedOptions;
+use crate::game::cost::Framework;
+use crate::game::hierarchy::RackLayout;
+use crate::graph::generators::{generate, GraphFamily};
+use crate::partition::initial::grow_partition;
+use crate::partition::{global_cost, MachineConfig};
+use crate::sim::dynamic::{
+    compare_frozen_vs_rebalanced, DynamicDriver, DynamicOptions, EstimatorKind, RefineBackend,
+    WeightEstimator,
+};
+use crate::sim::engine::SimOptions;
+use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions, MAX_SCHEDULE_THREADS};
+use crate::util::bench::JsonVal;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+
+use super::{machines_from_args, CliResult};
+
+pub(crate) fn cmd_dynamic(args: &Args) -> CliResult {
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let family: GraphFamily = args.str_or("family", "pa").parse()?;
+    let nodes = args.opt_or::<usize>("nodes", 150)?;
+    let machines = machines_from_args(args)?;
+    let scenario_kind: ScenarioKind = args.str_or("scenario", "hotspot").parse()?;
+    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 200)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let mu = args.opt_or::<f64>("mu", 8.0)?;
+    let estimator_kind: EstimatorKind = args.str_or("estimator", "ewma").parse()?;
+    let backend: RefineBackend = args.str_or("backend", "sequential").parse()?;
+    let threads = args.opt_or::<usize>("threads", 160)?;
+    let horizon = args.opt_or::<u64>("horizon", 2_400)?;
+    let ticks_per_transfer = args.opt_or::<u64>("ticks-per-transfer", 0)?;
+    // In-game surcharge: explicit --migration-charge wins; otherwise it
+    // derives as ticks_per_transfer x tick_value so the game prices
+    // exactly what the report bills (DESIGN.md §9).
+    let tick_value = args.opt_or::<f64>("tick-value", 1.0)?;
+    if !(tick_value >= 0.0 && tick_value.is_finite()) {
+        return Err("--tick-value must be finite and >= 0".into());
+    }
+    let migration_charge = match args.opt::<f64>("migration-charge")? {
+        Some(c) => c,
+        None => ticks_per_transfer as f64 * tick_value,
+    };
+    if !(migration_charge >= 0.0 && migration_charge.is_finite()) {
+        return Err("--migration-charge must be finite and >= 0".into());
+    }
+    let parallelism = args.opt_or::<usize>("parallelism", 1)?;
+    let transport = args.str_or("transport", "inproc").to_string();
+    let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
+    // How long the cluster waits on a silent peer before declaring it
+    // dead (rides Setup, so workers use it too). The 30s default is
+    // safe for congested CI; kill-a-worker tests dial it down so death
+    // diagnosis is quick.
+    let recv_timeout = Duration::from_millis(args.opt_or::<u64>("recv-timeout-ms", 30_000)?.max(1));
+    // Patience of the admission handshake's ack barrier (leader side).
+    // Defaults to 2× recv_timeout inside ClusterLeader; only override
+    // when a test needs the rollback path to trip quickly.
+    let admit_window = args.opt::<u64>("admit-window-ms")?.map(Duration::from_millis);
+    let tcp = match transport.as_str() {
+        "inproc" | "in-process" | "local" => false,
+        "tcp" => true,
+        other => return Err(format!("unknown transport {other:?} (expected inproc|tcp)").into()),
+    };
+    let backend = if tcp {
+        if args.flag("compare") {
+            return Err("--compare runs two arms and is not supported with --transport tcp".into());
+        }
+        if backend != RefineBackend::Distributed && args.opt_str("backend").is_some() {
+            return Err("--transport tcp requires --backend distributed".into());
+        }
+        RefineBackend::Distributed
+    } else {
+        backend
+    };
+    if nodes == 0 {
+        return Err("--nodes must be >= 1".into());
+    }
+    if threads == 0 {
+        return Err("--threads must be >= 1".into());
+    }
+    if threads as u64 > MAX_SCHEDULE_THREADS {
+        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
+    }
+    if horizon == 0 {
+        return Err("--horizon must be >= 1".into());
+    }
+    let checkpoint_dir = args.opt_str("checkpoint-dir").map(std::path::PathBuf::from);
+    // Two-level hierarchy (DESIGN.md §12): `--racks "0,0,1,1"` names the
+    // rack of each machine. Validated against the fleet the run starts
+    // with — on `--restore` that is the snapshot's K, not `--k`.
+    let racks = match args.opt_str("racks") {
+        Some(spec) => {
+            let k = match args.opt_str("restore") {
+                Some(path) => {
+                    crate::sim::Snapshot::read_from(std::path::Path::new(path))?.machine_count()
+                }
+                None => machines.count(),
+            };
+            Some(crate::game::hierarchy::RackLayout::parse(spec, k)?)
+        }
+        None => None,
+    };
+
+    let options = DynamicOptions {
+        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
+        epoch_ticks,
+        framework,
+        mu,
+        backend,
+        ticks_per_transfer,
+        migration_charge,
+        max_refinements: 0,
+        checkpoint_dir,
+        racks,
+    };
+
+    // Resume from an epoch-boundary checkpoint instead of generating a
+    // fixture: topology, fleet, pending events, estimator memory and
+    // cumulative counters all come from the file (DESIGN.md §10).
+    if let Some(path) = args.opt_str("restore") {
+        if args.flag("compare") {
+            return Err("--restore resumes one arm; it cannot be combined with --compare".into());
+        }
+        let snap = crate::sim::Snapshot::read_from(std::path::Path::new(path))?;
+        let graph = snap.build_graph();
+        println!(
+            "restore {path}: {} LPs, K={}, epoch {}, {} ticks simulated",
+            graph.node_count(),
+            snap.machine_count(),
+            snap.epoch,
+            snap.engine.stats.ticks,
+        );
+        let estimator = WeightEstimator::of_kind(estimator_kind);
+        let mut driver = DynamicDriver::from_snapshot(&graph, &snap, estimator, options);
+        if tcp {
+            let peers = net::parse_peers(args.req_str("peers")?)?;
+            if peers.len() != snap.machine_count() {
+                return Err(format!(
+                    "--peers lists {} machines but the snapshot has K={}",
+                    peers.len(),
+                    snap.machine_count()
+                )
+                .into());
+            }
+            let mut leader = ClusterLeader::connect(
+                &peers,
+                DistributedOptions {
+                    mu,
+                    framework,
+                    migration_charge,
+                    recv_timeout,
+                    ..Default::default()
+                },
+                connect_timeout,
+            )?;
+            if let Some(w) = admit_window {
+                leader.set_admit_window(w);
+            }
+            driver.attach_cluster(leader)?;
+        }
+        let report = driver.try_run()?;
+        let title = format!("gtip dynamic — restored from {path}");
+        println!("{}", report.epoch_table(&title).to_text());
+        println!(
+            "total: {} wall ticks  (events {}, rollbacks {}, {} refinements, {} transfers, truncated {})",
+            report.total_time(),
+            report.stats.events_processed,
+            report.stats.rollbacks,
+            report.refinements(),
+            report.transfers,
+            report.stats.truncated,
+        );
+        if let Some(out) = args.opt_str("report-json") {
+            // Final measured weights, like the live path — so the cost
+            // here is directly comparable with the run that wrote the
+            // checkpoint (net-smoke's recovery gate relies on this).
+            let json = dynamic_report_json(
+                &report,
+                driver.engine().partition().assignment(),
+                driver.weighted_graph(),
+                driver.machines(),
+                mu,
+            );
+            if let Some(dir) = std::path::Path::new(out).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(out, json.sorted().render() + "\n")?;
+            println!("(wrote {out})");
+        }
+        return Ok(());
+    }
+
+    let mut rng = Pcg32::new(seed);
+    let graph = generate(family, nodes, &mut rng);
+    let scenario = Scenario::build(
+        scenario_kind,
+        &graph,
+        &ScenarioOptions { threads, horizon_ticks: horizon, ..Default::default() },
+        &mut rng,
+    );
+    println!(
+        "scenario {scenario_kind} ({}): {} LPs, {} edges, K={}, {} floods over {horizon} ticks",
+        scenario_kind.describe(),
+        graph.node_count(),
+        graph.edge_count(),
+        machines.count(),
+        scenario.len(),
+    );
+    println!(
+        "loop: epoch={epoch_ticks} ticks, estimator {estimator_kind}, backend {backend}, framework {framework}, mu={mu}, c_mig={migration_charge}"
+    );
+    if let Some(l) = &options.racks {
+        println!(
+            "hierarchy: two-level game, {} racks over K={} machines",
+            l.rack_count(),
+            l.machine_count()
+        );
+    }
+
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let estimator = WeightEstimator::of_kind(estimator_kind);
+
+    if args.flag("compare") {
+        if args.opt_str("report-json").is_some() {
+            return Err("--report-json only supports single-arm runs (drop --compare)".into());
+        }
+        let report = compare_frozen_vs_rebalanced(
+            &graph,
+            &machines,
+            &initial,
+            &scenario.injections,
+            estimator,
+            &options,
+        );
+        let title = format!("gtip dynamic — {scenario_kind} (rebalanced arm)");
+        println!("{}", report.rebalanced.epoch_table(&title).to_text());
+        println!(
+            "frozen     : {:>7} wall ticks  (rollbacks {:>6}, cross-machine {:>6})",
+            report.frozen.total_time(),
+            report.frozen.stats.rollbacks,
+            report.frozen.stats.cross_machine_forwards,
+        );
+        println!(
+            "rebalanced : {:>7} wall ticks  (rollbacks {:>6}, cross-machine {:>6}, {} refinements, {} transfers)",
+            report.rebalanced.total_time(),
+            report.rebalanced.stats.rollbacks,
+            report.rebalanced.stats.cross_machine_forwards,
+            report.rebalanced.refinements(),
+            report.rebalanced.transfers,
+        );
+        println!("speedup from closed-loop rebalancing: {:.2}x", report.speedup());
+    } else {
+        let mut driver = DynamicDriver::new(
+            &graph,
+            machines.clone(),
+            initial,
+            scenario.injections,
+            estimator,
+            options,
+        );
+        if tcp {
+            let peers = net::parse_peers(args.req_str("peers")?)?;
+            if peers.len() != machines.count() {
+                return Err(format!(
+                    "--peers lists {} machines but K={} (peer 0 is this driver)",
+                    peers.len(),
+                    machines.count()
+                )
+                .into());
+            }
+            println!(
+                "transport tcp: leading a {}-process cluster (this process = machine 0 @ {})",
+                peers.len(),
+                peers[0]
+            );
+            let mut leader = ClusterLeader::connect(
+                &peers,
+                DistributedOptions {
+                    mu,
+                    framework,
+                    migration_charge,
+                    recv_timeout,
+                    ..Default::default()
+                },
+                connect_timeout,
+            )?;
+            if let Some(w) = admit_window {
+                leader.set_admit_window(w);
+            }
+            driver.attach_cluster(leader)?;
+        }
+        let report = driver.try_run()?;
+        let title = format!("gtip dynamic — {scenario_kind}");
+        println!("{}", report.epoch_table(&title).to_text());
+        println!(
+            "total: {} wall ticks  (events {}, rollbacks {}, {} refinements, {} transfers, truncated {})",
+            report.total_time(),
+            report.stats.events_processed,
+            report.stats.rollbacks,
+            report.refinements(),
+            report.transfers,
+            report.stats.truncated,
+        );
+        if let Some(o) = report.total_overhead() {
+            println!(
+                "coordinator sync: {} msgs, {} bytes on the wire, {:.1} bytes/transfer, {:.1} bytes/RegularUpdate (O(K), N-independent)",
+                o.total_messages(),
+                o.total_bytes(),
+                o.bytes_per_transfer(report.transfers as u64),
+                o.bytes_per_regular_update(),
+            );
+            if o.rack_update.messages > 0 {
+                println!(
+                    "cross-rack sync: {} RackUpdate msgs, {} bytes, {:.1} bytes/RackUpdate (O(R), K- and N-independent)",
+                    o.rack_update.messages,
+                    o.rack_update.bytes,
+                    o.bytes_per_rack_update(),
+                );
+            }
+        }
+        if report.recoveries() > 0 {
+            println!(
+                "recovered from {} worker death(s); fleet now K={}",
+                report.recoveries(),
+                driver.machines().count(),
+            );
+        }
+        if report.admissions() > 0 {
+            println!(
+                "admitted {} joiner(s); fleet now K={}",
+                report.admissions(),
+                driver.machines().count(),
+            );
+        }
+        if let Some(path) = args.opt_str("report-json") {
+            // `driver.machines()` and `driver.weighted_graph()`, not
+            // the pre-run config: a recovery shrinks the fleet (and an
+            // admission grows it), and the final assignment was
+            // refined on the final measured weights — costing it
+            // against the stale K or the initial weights would be
+            // wrong (and would make the recovered run incomparable
+            // with a `--restore recovery-NNNN.snap` replay).
+            let json = dynamic_report_json(
+                &report,
+                driver.engine().partition().assignment(),
+                driver.weighted_graph(),
+                driver.machines(),
+                mu,
+            );
+            if let Some(dir) = std::path::Path::new(path).parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir)?;
+                }
+            }
+            std::fs::write(path, json.sorted().render() + "\n")?;
+            println!("(wrote {path})");
+        }
+    }
+    Ok(())
+}
+
+/// Transport-invariant summary of a closed-loop run: the `net-smoke`
+/// CI job byte-compares this JSON between the TCP multi-process run
+/// and the in-process run on the same fixture.
+fn dynamic_report_json(
+    report: &crate::sim::dynamic::DynamicReport,
+    final_assignment: &[usize],
+    graph: &crate::graph::Graph,
+    machines: &MachineConfig,
+    mu: f64,
+) -> JsonVal {
+    let part = crate::partition::Partition::from_assignment(
+        graph,
+        machines.count(),
+        final_assignment.to_vec(),
+    );
+    let (c0, c0t) = global_cost::both(graph, machines, &part, mu);
+    let mut fields = vec![
+        (
+            "assignment".into(),
+            JsonVal::Arr(final_assignment.iter().map(|&m| JsonVal::Int(m as u64)).collect()),
+        ),
+        ("global_cost_c0".into(), JsonVal::Num(c0)),
+        ("global_cost_c0_tilde".into(), JsonVal::Num(c0t)),
+        ("ticks".into(), JsonVal::Int(report.stats.ticks)),
+        ("events_processed".into(), JsonVal::Int(report.stats.events_processed)),
+        ("rollbacks".into(), JsonVal::Int(report.stats.rollbacks)),
+        ("transfers".into(), JsonVal::Int(report.transfers as u64)),
+        ("refinements".into(), JsonVal::Int(report.refinements() as u64)),
+        ("recoveries".into(), JsonVal::Int(report.recoveries() as u64)),
+        ("admissions".into(), JsonVal::Int(report.admissions() as u64)),
+        ("machines".into(), JsonVal::Int(machines.count() as u64)),
+        (
+            "racks".into(),
+            JsonVal::Int(report.epochs.iter().map(|e| e.racks).max().unwrap_or(0) as u64),
+        ),
+    ];
+    if let Some(o) = report.total_overhead() {
+        let counter = |c: &crate::coordinator::protocol::Counter| {
+            JsonVal::Obj(vec![
+                ("messages".into(), JsonVal::Int(c.messages)),
+                ("bytes".into(), JsonVal::Int(c.bytes)),
+            ])
+        };
+        fields.push((
+            "overhead".into(),
+            JsonVal::Obj(vec![
+                ("take_my_turn".into(), counter(&o.take_my_turn)),
+                ("receive_node".into(), counter(&o.receive_node)),
+                ("regular_update".into(), counter(&o.regular_update)),
+                ("rack_update".into(), counter(&o.rack_update)),
+                ("shutdown".into(), counter(&o.shutdown)),
+                ("total_messages".into(), JsonVal::Int(o.total_messages())),
+                ("total_bytes".into(), JsonVal::Int(o.total_bytes())),
+                (
+                    "sync_bytes_per_transfer".into(),
+                    JsonVal::Num(o.bytes_per_transfer(report.transfers as u64)),
+                ),
+                (
+                    "regular_update_bytes_per_message".into(),
+                    JsonVal::Num(o.bytes_per_regular_update()),
+                ),
+                (
+                    "rack_update_bytes_per_message".into(),
+                    JsonVal::Num(o.bytes_per_rack_update()),
+                ),
+            ]),
+        ));
+    }
+    JsonVal::Obj(vec![("dynamic".into(), JsonVal::Obj(fields))])
+}
+
+/// Inspect an epoch-boundary checkpoint: print its summary and verify
+/// the decode→re-encode round trip is byte-identical (the determinism
+/// gate DESIGN.md §10 promises for every `.snap` file).
+pub(crate) fn cmd_snapshot(args: &Args) -> CliResult {
+    let path = args
+        .opt_str("inspect")
+        .ok_or("usage: gtip snapshot --inspect FILE")?;
+    let bytes = std::fs::read(path)?;
+    let snap = crate::sim::Snapshot::decode(&bytes)?;
+    println!("{}", snap.summary());
+    let reencoded = snap.encode();
+    if reencoded != bytes {
+        return Err(format!(
+            "round-trip diverged: {} bytes on disk, {} re-encoded",
+            bytes.len(),
+            reencoded.len()
+        )
+        .into());
+    }
+    println!("round-trip: {} bytes, re-encode byte-identical", bytes.len());
+    Ok(())
+}
+
+/// Worker side of the multi-process cluster: block until the leader
+/// (machine 0, `gtip dynamic --transport tcp`) connects, then play one
+/// refinement round per epoch until it says goodbye. With `--join`,
+/// instead of waiting for the leader's mesh dial, ask a *live* cluster
+/// to re-admit this machine id (DESIGN.md §10): send `Join`, wait out
+/// the admission handshake (`--admit-window-ms`), catch up from the
+/// leader's boundary snapshot, and serve from there. `--speed` is the
+/// joiner's self-reported relative speed (1.0 = an average machine of
+/// the original fleet).
+pub(crate) fn cmd_serve(args: &Args) -> CliResult {
+    let machine_id = args.opt::<usize>("machine-id")?.ok_or("--machine-id is required")?;
+    let peers = net::parse_peers(args.req_str("peers")?)?;
+    let connect_timeout = Duration::from_millis(args.opt_or::<u64>("connect-timeout-ms", 30_000)?);
+    if args.opt_str("checkpoint-dir").is_some() {
+        // Accepted so one launch template serves every rank: snapshots
+        // are taken leader-side (machine 0 owns the engine), so a
+        // worker has nothing to write there.
+        println!("note: checkpoints are taken by the leader; --checkpoint-dir is a no-op on serve");
+    }
+    let summary = if args.flag("join") {
+        let speed = args.opt_or::<f64>("speed", 1.0)?;
+        if !(speed > 0.0 && speed.is_finite()) {
+            return Err("--speed must be finite and > 0".into());
+        }
+        // Rack the joiner asks to be placed in (hierarchical clusters,
+        // DESIGN.md §12). Omitted = leader's choice (least-loaded rack);
+        // ignored by flat clusters.
+        let rack = args.opt::<usize>("rack")?;
+        let admit_window =
+            Duration::from_millis(args.opt_or::<u64>("admit-window-ms", 120_000)?.max(1));
+        println!(
+            "gtip serve: machine {machine_id}/{} joining the live cluster via {} (leader @ {})",
+            peers.len(),
+            peers.get(machine_id).map(String::as_str).unwrap_or("?"),
+            peers[0],
+        );
+        net::serve_join(machine_id, &peers, speed, rack, connect_timeout, admit_window)?
+    } else {
+        if args.opt_str("speed").is_some()
+            || args.opt_str("admit-window-ms").is_some()
+            || args.opt_str("rack").is_some()
+        {
+            return Err("--speed / --rack / --admit-window-ms only apply with --join".into());
+        }
+        println!(
+            "gtip serve: machine {machine_id}/{} listening on {} (leader @ {})",
+            peers.len(),
+            peers.get(machine_id).map(String::as_str).unwrap_or("?"),
+            peers[0],
+        );
+        net::serve(machine_id, &peers, connect_timeout)?
+    };
+    println!(
+        "served {} refinement epochs as machine {}: sent {} sync msgs / {} bytes, {} control msgs / {} bytes",
+        summary.epochs,
+        summary.machine_id,
+        summary.overhead.total_messages(),
+        summary.overhead.total_bytes(),
+        summary.control.control_messages,
+        summary.control.control_bytes,
+    );
+    Ok(())
+}
+
+/// Quantify the churn/hysteresis trade-off of migration-cost-aware
+/// refinement (DESIGN.md §9): sweep the per-transfer charge over fixed
+/// scenario fixtures, run the frozen-vs-rebalanced comparison at each
+/// level — the charge is billed as wall ticks AND priced inside the
+/// game (`c_mig = ticks · tick_value`) — and merge a `churn_tradeoff`
+/// group (transfers, migration ticks, speedup per level) into the

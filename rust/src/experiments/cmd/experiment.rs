@@ -1,0 +1,88 @@
+//! The paper-reproduction subcommands: `gtip experiment <name>`
+//! (Table 1, the batch study, figures 7-10, the ablation) and
+//! `gtip artifacts` (verify exported PJRT artifacts against the
+//! native cost path; stub unless built with `--features pjrt`).
+
+use crate::graph::generators::GraphFamily;
+use crate::util::cli::Args;
+
+use super::CliResult;
+
+pub(crate) fn cmd_experiment(args: &Args) -> CliResult {
+    let which = args
+        .positionals
+        .get(1)
+        .map(String::as_str)
+        .ok_or("experiment name required: table1|batch|fig7|fig8|fig9|fig10|ablation|all")?;
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let quick = args.flag("quick");
+    match which {
+        "table1" => {
+            crate::experiments::table1::run_and_report(seed);
+        }
+        "batch" => {
+            crate::experiments::batch::run_and_report(seed, quick);
+        }
+        "fig7" => {
+            crate::experiments::figs78::run_and_report(
+                GraphFamily::PreferentialAttachment,
+                seed,
+                quick,
+            );
+        }
+        "fig8" => {
+            crate::experiments::figs78::run_and_report(GraphFamily::Geometric, seed, quick);
+        }
+        "ablation" => {
+            crate::experiments::ablation::run_and_report(seed, quick);
+        }
+        "fig9" | "fig10" | "fig9_10" => {
+            crate::experiments::fig9_10::run_and_report(seed, quick);
+        }
+        "all" => {
+            crate::experiments::table1::run_and_report(seed);
+            crate::experiments::batch::run_and_report(seed, quick);
+            crate::experiments::figs78::run_and_report(
+                GraphFamily::PreferentialAttachment,
+                seed,
+                quick,
+            );
+            crate::experiments::figs78::run_and_report(GraphFamily::Geometric, seed, quick);
+            crate::experiments::fig9_10::run_and_report(seed, quick);
+        }
+        other => return Err(format!("unknown experiment {other:?}").into()),
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+pub(crate) fn cmd_artifacts(args: &Args) -> CliResult {
+    use crate::runtime::cost_eval::{max_rel_error_vs_native, PjrtCostEvaluator};
+    use crate::util::rng::Pcg32;
+    let dir = args.str_or("dir", "artifacts").to_string();
+    let mut eval = PjrtCostEvaluator::from_dir(&dir)?;
+    println!("artifacts dir {dir}: max padded size {} nodes", eval.max_nodes());
+
+    let mut rng = Pcg32::new(7);
+    let setup = crate::experiments::common::StudySetup::default();
+    let graph = setup.graph(&mut rng);
+    let part = setup.initial(&graph, &mut rng);
+    let out = eval.evaluate(&graph, &setup.machines, &part, setup.mu)?;
+    let err = max_rel_error_vs_native(&graph, &setup.machines, &part, setup.mu, &out);
+    println!(
+        "verified refine_step on N={} K={}: PJRT vs native max rel error = {err:.2e}",
+        out.n, out.k
+    );
+    if err >= 1e-3 {
+        return Err(format!("artifact/native divergence: {err}").into());
+    }
+    println!("artifacts OK");
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub(crate) fn cmd_artifacts(_args: &Args) -> CliResult {
+    Err("the `artifacts` subcommand requires building with `--features pjrt` \
+         (vendored xla crate; see DESIGN.md §7)"
+        .into())
+}

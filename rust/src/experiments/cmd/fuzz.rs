@@ -1,0 +1,163 @@
+//! The `gtip fuzz` subcommand: drive the search-based fuzz campaign
+//! over drift schedules and persist reproducible findings to the
+//! corpus.
+
+use crate::game::cost::Framework;
+use crate::sim::fuzz::{run_fuzz, save_corpus, EvalOptions, FuzzCase, FuzzFixture, FuzzOptions};
+use crate::sim::scenario::MAX_SCHEDULE_THREADS;
+use crate::util::cli::Args;
+
+use super::CliResult;
+
+pub(crate) fn cmd_fuzz(args: &Args) -> CliResult {
+    let budget = args.opt_or::<usize>("budget", 200)?;
+    let seed = args.opt_or::<u64>("seed", 2011)?;
+    let nodes = args.opt_or::<usize>("nodes", 96)?;
+    let k = args.opt_or::<usize>("k", 4)?;
+    let horizon = args.opt_or::<u64>("horizon", 1_200)?;
+    let threads = args.opt_or::<u32>("threads", 120)?;
+    let epoch_ticks = args.opt_or::<u64>("epoch-ticks", 150)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let top_k = args.opt_or::<usize>("top", 3)?;
+    let corpus_dir = args.str_or("corpus-dir", "results/fuzz_corpus").to_string();
+    if nodes == 0 || k == 0 || horizon == 0 || threads == 0 {
+        return Err("--nodes, --k, --horizon and --threads must be >= 1".into());
+    }
+    if threads as u64 > MAX_SCHEDULE_THREADS {
+        return Err(format!("--threads must be <= {MAX_SCHEDULE_THREADS}").into());
+    }
+    let migration_charge = args.opt_or::<f64>("migration-charge", 0.0)?;
+    if !(migration_charge >= 0.0 && migration_charge.is_finite()) {
+        return Err("--migration-charge must be finite and >= 0".into());
+    }
+    // Engine-configuration knobs (also mutated by the search itself):
+    // 0 = homogeneous machine speeds, the pre-config-fuzz default.
+    let speed_seed = args.opt_or::<u64>("speed-seed", 0)?;
+    let inter_delay = args.opt_or::<u64>("inter-delay", 3)?;
+    let intra_delay = args.opt_or::<u64>("intra-delay", 0)?;
+    let fixture = FuzzFixture { graph_seed: seed, nodes, machines: k, speed_seed };
+    let eval = EvalOptions {
+        epoch_ticks,
+        framework,
+        migration_charge,
+        inter_machine_delay: inter_delay,
+        intra_machine_delay: intra_delay,
+        oracle: !args.flag("no-oracle"),
+        ..Default::default()
+    };
+
+    if let Some(path) = args.opt_str("replay") {
+        let case = FuzzCase::load(path)?;
+        println!(
+            "replaying {:?}: {} genes, {} threads over {} ticks on fixture (seed {}, {} LPs, K={})",
+            case.name,
+            case.schedule.genes.len(),
+            case.schedule.total_threads(),
+            case.schedule.horizon_ticks,
+            case.fixture.graph_seed,
+            case.fixture.nodes,
+            case.fixture.machines,
+        );
+        // Replay under the settings the stored objectives were measured
+        // with; CLI eval flags apply only to files that carry none.
+        let eval = match &case.eval {
+            Some(stored) => {
+                println!(
+                    "using stored eval settings: epoch {} ticks, framework {}, delays {}/{}, oracle {}",
+                    stored.epoch_ticks,
+                    stored.framework,
+                    stored.inter_machine_delay,
+                    stored.intra_machine_delay,
+                    stored.oracle
+                );
+                stored.clone()
+            }
+            None => eval,
+        };
+        let obj = crate::sim::fuzz::evaluate(&case.fixture, &case.schedule, &eval)?;
+        println!(
+            "frozen {} ticks | rebalanced {} ticks | gap {:.3}x | rollbacks {} | transfers {} | refinements {}",
+            obj.frozen_ticks,
+            obj.rebalanced_ticks,
+            obj.gap,
+            obj.rollbacks,
+            obj.transfers,
+            obj.refinements,
+        );
+        println!(
+            "descent violations: {} | oracle divergence: {} | truncated: frozen {} / rebalanced {}",
+            obj.descent_violations,
+            obj.oracle_divergence,
+            obj.frozen_truncated,
+            obj.rebalanced_truncated,
+        );
+        if let Some(stored) = &case.objectives {
+            if obj.bit_eq(stored) {
+                println!("replay matches the stored objectives byte-for-byte");
+            } else {
+                return Err(format!(
+                    "replay DIVERGED from stored objectives:\n  stored   {stored:?}\n  measured {obj:?}"
+                )
+                .into());
+            }
+        }
+        if obj.is_bug() {
+            return Err("replayed schedule exposes a bug-class finding (see above)".into());
+        }
+        return Ok(());
+    }
+
+    let options = FuzzOptions {
+        budget,
+        seed,
+        fixture,
+        horizon_ticks: horizon,
+        thread_budget: threads,
+        hop_limit: 4,
+        eval,
+        top_k,
+        shrink: !args.flag("no-shrink"),
+        verbose: true,
+    };
+    println!(
+        "fuzzing drift schedules: budget {budget}, fixture (seed {seed}, {nodes} LPs, K={k}), \
+         horizon {horizon}, {threads} threads, epoch {epoch_ticks}, framework {framework}"
+    );
+    let outcome = run_fuzz(&options)?;
+    println!(
+        "campaign done: {} evaluations, hand-written best gap {:.3}x",
+        outcome.evaluations, outcome.handwritten_best_gap
+    );
+    for f in &outcome.found {
+        println!(
+            "  #{} {}: gap {:.3}x, score {:.3}, {} genes (from {}), {} threads{}",
+            f.rank,
+            f.name,
+            f.objectives.gap,
+            f.objectives.score(),
+            f.schedule.genes.len(),
+            f.genes_before_shrink,
+            f.schedule.total_threads(),
+            if f.objectives.is_bug() { "  [BUG-CLASS FINDING]" } else { "" },
+        );
+    }
+    let written = save_corpus(std::path::Path::new(&corpus_dir), &outcome)?;
+    for p in &written {
+        println!("(wrote {})", p.display());
+    }
+    if outcome.beat_handwritten() {
+        println!(
+            "worst found schedule beats every hand-written scenario \
+             ({:.3}x > {:.3}x)",
+            outcome.found.first().map(|f| f.objectives.gap).unwrap_or(0.0),
+            outcome.handwritten_best_gap
+        );
+    } else {
+        println!(
+            "note: no found schedule beat the hand-written best gap {:.3}x \
+             (raise --budget to search longer)",
+            outcome.handwritten_best_gap
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Implementations of the `gtip` subcommands, one module per command
+//! family, plus the helpers they share. The thin dispatcher
+//! (`super::cli`) only matches the subcommand name and hands the raw
+//! [`Args`] to one of the `cmd_*` entry points re-exported here.
+
+use crate::partition::MachineConfig;
+use crate::util::cli::Args;
+
+mod dynamic;
+mod experiment;
+mod fuzz;
+mod partition;
+mod sweeps;
+
+pub(crate) use dynamic::{cmd_dynamic, cmd_serve, cmd_snapshot};
+pub(crate) use experiment::{cmd_artifacts, cmd_experiment};
+pub(crate) use fuzz::cmd_fuzz;
+pub(crate) use partition::{cmd_partition, cmd_simulate};
+pub(crate) use sweeps::{cmd_bench_gate, cmd_churn_sweep, cmd_hierarchy_bench};
+
+/// CLI-level result: any error type boxes into it via `?`.
+pub(crate) type CliResult = Result<(), Box<dyn std::error::Error>>;
+
+/// Machine pool shared by the subcommands: heterogeneous if `--speeds`
+/// is given, else `--k` identical machines.
+pub(crate) fn machines_from_args(
+    args: &Args,
+) -> Result<MachineConfig, Box<dyn std::error::Error>> {
+    if let Some(speeds) = args.opt_list::<f64>("speeds")? {
+        Ok(MachineConfig::from_speeds(&speeds))
+    } else {
+        let k = args.opt_or::<usize>("k", 5)?;
+        Ok(MachineConfig::homogeneous(k))
+    }
+}

@@ -1,0 +1,144 @@
+//! The one-shot partitioning subcommands: `gtip partition` (build a
+//! graph, refine it, report the cost ratio) and `gtip simulate` (run
+//! the PDES engine over a fixed partition and print throughput).
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::coordinator::{run_distributed, DistributedOptions};
+use crate::game::annealing::{anneal_then_refine, AnnealOptions};
+use crate::game::cost::Framework;
+use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::graph::generators::{generate, GraphFamily};
+use crate::partition::global_cost;
+use crate::partition::initial::grow_partition;
+use crate::sim::driver::{run_dynamic, DriverOptions};
+use crate::sim::engine::SimOptions;
+use crate::sim::workload::{FloodWorkload, WorkloadOptions};
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+
+use super::{machines_from_args, CliResult};
+
+pub(crate) fn cmd_partition(args: &Args) -> CliResult {
+    let seed = args.opt_or::<u64>("seed", Config::default().seed)?;
+    let mu = args.opt_or::<f64>("mu", 8.0)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let machines = machines_from_args(args)?;
+    let mut rng = Pcg32::new(seed);
+
+    let graph = if let Some(path) = args.opt_str("graph") {
+        crate::graph::io::load_graph(path)?
+    } else {
+        let family: GraphFamily = args.str_or("family", "table1").parse()?;
+        let nodes = args.opt_or::<usize>("nodes", 230)?;
+        generate(family, nodes, &mut rng)
+    };
+
+    println!(
+        "graph: {} nodes, {} edges; K={} machines; mu={mu}; framework {framework}",
+        graph.node_count(),
+        graph.edge_count(),
+        machines.count()
+    );
+    let initial = grow_partition(&graph, &machines, &mut rng);
+    let (c0_i, c0t_i) = global_cost::both(&graph, &machines, &initial, mu);
+    println!("initial partition:   C0 = {c0_i:.0}   C~0 = {c0t_i:.0}   counts = {:?}", initial.counts());
+
+    if args.flag("distributed") {
+        let report = run_distributed(
+            Arc::new(graph.clone()),
+            &machines,
+            initial,
+            &DistributedOptions { mu, framework, ..Default::default() },
+        );
+        let (c0, c0t) = global_cost::both(&graph, &machines, &report.partition, mu);
+        println!(
+            "distributed refine:  C0 = {c0:.0}   C~0 = {c0t:.0}   transfers = {}   counts = {:?}",
+            report.transfers,
+            report.partition.counts()
+        );
+        println!(
+            "sync overhead: {} msgs, {} bytes total, {:.1} bytes/transfer (O(K), N-independent)",
+            report.overhead.total_messages(),
+            report.overhead.total_bytes(),
+            report.overhead.bytes_per_transfer(report.transfers as u64),
+        );
+    } else if args.flag("anneal") {
+        let (part, potential) = anneal_then_refine(
+            &graph,
+            &machines,
+            initial,
+            mu,
+            framework,
+            &AnnealOptions::default(),
+            &mut rng,
+        );
+        let (c0, c0t) = global_cost::both(&graph, &machines, &part, mu);
+        println!(
+            "anneal+refine:       C0 = {c0:.0}   C~0 = {c0t:.0}   potential = {potential:.0}   counts = {:?}",
+            part.counts()
+        );
+    } else {
+        let mut engine = RefineEngine::new(&graph, &machines, initial, mu, framework);
+        let report = engine.run(&RefineOptions::default());
+        let (c0, c0t) = global_cost::both(&graph, &machines, engine.partition(), mu);
+        println!(
+            "iterative refine:    C0 = {c0:.0}   C~0 = {c0t:.0}   transfers = {}   converged = {}   counts = {:?}",
+            report.transfers,
+            report.converged,
+            engine.partition().counts()
+        );
+    }
+
+    if let Some(path) = args.opt_str("save") {
+        crate::graph::io::save_graph(&graph, path)?;
+        println!("(saved graph to {path})");
+    }
+    Ok(())
+}
+
+pub(crate) fn cmd_simulate(args: &Args) -> CliResult {
+    let seed = args.opt_or::<u64>("seed", 42)?;
+    let family: GraphFamily = args.str_or("family", "pa").parse()?;
+    let nodes = args.opt_or::<usize>("nodes", 230)?;
+    let machines = machines_from_args(args)?;
+    let refine_every = args.opt_or::<u64>("refine-every", 500)?;
+    let framework: Framework = args.str_or("framework", "A").parse()?;
+    let mu = args.opt_or::<f64>("mu", 8.0)?;
+    let threads = args.opt_or::<usize>("threads", 150)?;
+    let parallelism = args.opt_or::<usize>("parallelism", 1)?;
+
+    let mut rng = Pcg32::new(seed);
+    let graph = generate(family, nodes, &mut rng);
+    let workload = FloodWorkload::generate(
+        &graph,
+        &WorkloadOptions { threads, ..Default::default() },
+        &mut rng,
+    );
+    let driver = DriverOptions {
+        sim: SimOptions { trace_every: 50, parallelism, ..Default::default() },
+        refine_every,
+        framework,
+        mu,
+        ticks_per_transfer: 0,
+    };
+    let report = run_dynamic(&graph, &machines, workload, &driver, &mut rng);
+    println!(
+        "simulation time: {} wall ticks  (events {}, forwards {}, cross-machine {}, rollbacks {}, anti-messages {})",
+        report.total_time(),
+        report.stats.events_processed,
+        report.stats.events_forwarded,
+        report.stats.cross_machine_forwards,
+        report.stats.rollbacks,
+        report.stats.antimessages_sent,
+    );
+    println!(
+        "refinement epochs: {}   node transfers: {}   truncated: {}",
+        report.refinements, report.transfers, report.stats.truncated
+    );
+    Ok(())
+}
+
+/// The closed-loop §6.1 title scenario: scripted drifting workload,
+/// epoch-windowed load measurement, estimator-smoothed re-weighting,

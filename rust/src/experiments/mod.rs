@@ -16,6 +16,7 @@
 pub mod ablation;
 pub mod batch;
 pub mod cli;
+mod cmd;
 pub mod common;
 pub mod fig9_10;
 pub mod figs78;

@@ -1,0 +1,104 @@
+//! Checkpoint capture and restore for the closed loop (DESIGN.md
+//! §10): the epoch-boundary [`Snapshot`] a run writes (and recovery
+//! restores from), plus the `gtip dynamic --restore` constructor that
+//! resumes a driver from a decoded snapshot.
+
+use crate::graph::Graph;
+use crate::sim::engine::SimEngine;
+use crate::sim::snapshot::Snapshot;
+
+use super::driver::{DynamicDriver, DynamicOptions};
+use super::WeightEstimator;
+
+impl<'g> DynamicDriver<'g> {
+    /// Resume a run from a decoded epoch-boundary [`Snapshot`] — the
+    /// `gtip dynamic --restore` entry point. `graph` must have the
+    /// snapshot's topology (use [`Snapshot::build_graph`]); the sim
+    /// options stored in the snapshot override `options.sim` so the
+    /// resumed engine is faithful to the captured one. `estimator`
+    /// supplies configuration (kind/α/dead band); its smoothing memory
+    /// is overwritten with the checkpointed state. Epoch reports
+    /// renumber from 0, but the cumulative counters (ticks, transfers,
+    /// migration charge, and the epoch counter used for checkpoint
+    /// filenames) continue from the snapshot, so
+    /// [`DynamicReport::total_time`] stays the whole-run figure and a
+    /// resumed run writing into the same `checkpoint_dir` continues
+    /// the `epoch-NNNN.snap` sequence instead of overwriting it.
+    pub fn from_snapshot(
+        graph: &'g Graph,
+        snap: &Snapshot,
+        mut estimator: WeightEstimator,
+        mut options: DynamicOptions,
+    ) -> Self {
+        assert_eq!(
+            graph.node_count(),
+            snap.node_weights.len(),
+            "graph does not match the snapshot topology"
+        );
+        options.sim = snap.options.clone();
+        let machines = snap.machines();
+        estimator.import_state(snap.estimator.clone());
+        let engine =
+            SimEngine::from_state(graph, machines.clone(), options.sim.clone(), snap.engine.clone());
+        DynamicDriver {
+            graph,
+            engine,
+            lp_graph: snap.build_graph(),
+            machines,
+            estimator,
+            options,
+            epochs: Vec::new(),
+            epoch_base: snap.epoch,
+            recovery_ordinal: 0,
+            admission_ordinal: 0,
+            refinements: snap.refinements as usize,
+            transfers: snap.transfers as usize,
+            migration_ticks: snap.migration_ticks,
+            cluster: None,
+            last_checkpoint: Some(snap.encode()),
+        }
+    }
+
+    /// Capture the full resumable state of the run: engine, game-side
+    /// weighted graph, fleet, estimator memory, and the driver's
+    /// cumulative counters (DESIGN.md §10). Only valid between engine
+    /// ticks (any tick boundary; the epoch boundary is where the
+    /// driver takes its own checkpoints).
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            options: self.options.sim.clone(),
+            node_weights: self.lp_graph.node_weights().to_vec(),
+            edges: self.lp_graph.edges().collect(),
+            speeds: self.machines.speeds().to_vec(),
+            epoch: self.epoch_base + self.epochs.len() as u64,
+            refinements: self.refinements as u64,
+            transfers: self.transfers as u64,
+            migration_ticks: self.migration_ticks,
+            estimator: self.estimator.export_state(),
+            // The epoch loop is RNG-free (injections are precompiled),
+            // so there are no live streams to carry.
+            rng_streams: Vec::new(),
+            engine: self.engine.capture_state(),
+        }
+    }
+
+    /// Encoded bytes of the last epoch-boundary checkpoint, if
+    /// checkpointing is active (cluster attached or `checkpoint_dir`
+    /// set).
+    pub fn last_checkpoint(&self) -> Option<&[u8]> {
+        self.last_checkpoint.as_deref()
+    }
+
+    /// Best-effort write of an encoded snapshot into `checkpoint_dir`
+    /// (checkpointing must never kill a healthy run — failures are
+    /// reported on stderr and the in-memory copy still stands).
+    pub(super) fn write_checkpoint_file(&self, name: &str, bytes: &[u8]) {
+        if let Some(dir) = &self.options.checkpoint_dir {
+            let path = dir.join(name);
+            if let Err(e) = std::fs::create_dir_all(dir).and_then(|()| std::fs::write(&path, bytes))
+            {
+                eprintln!("gtip snapshot: failed to write {}: {e}", path.display());
+            }
+        }
+    }
+}

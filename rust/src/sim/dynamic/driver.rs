@@ -1,0 +1,629 @@
+//! The closed-loop core (DESIGN.md §13): [`DynamicDriver`] and its
+//! epoch loop — simulate a window, harvest measured loads, estimate
+//! weights, refine warm-started (sequential, hierarchical, in-process
+//! distributed, or over an attached TCP cluster), migrate, report.
+//! Membership changes live in [`super::membership`], checkpoint
+//! capture/restore in [`super::checkpoint`].
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::coordinator::net::ClusterLeader;
+use crate::coordinator::{
+    run_distributed, run_distributed_hierarchical, DistributedOptions, OverheadStats, WireError,
+};
+use crate::game::cost::Framework;
+use crate::game::hierarchy::{refine_hierarchical, RackLayout};
+use crate::game::refine::{RefineEngine, RefineOptions};
+use crate::graph::Graph;
+use crate::partition::initial::grow_partition;
+use crate::partition::{global_cost, MachineConfig, Partition};
+use crate::sim::engine::{EpochCounters, Injection, SimEngine, SimOptions, SimStats};
+use crate::sim::weights;
+use crate::util::rng::Pcg32;
+use crate::util::stats::Trace;
+use crate::util::table::Table;
+
+use super::membership::{AdmissionRecord, RecoveryRecord};
+use super::WeightEstimator;
+
+/// Which refinement implementation closes the loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefineBackend {
+    /// In-process [`RefineEngine`] (fast path).
+    Sequential,
+    /// One-thread-per-machine actor protocol
+    /// ([`run_distributed`]) — produces the identical equilibrium (same
+    /// deterministic turn order) while measuring the O(K) sync traffic.
+    Distributed,
+}
+
+impl std::str::FromStr for RefineBackend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "seq" | "sequential" => Ok(RefineBackend::Sequential),
+            "dist" | "distributed" | "coordinator" => Ok(RefineBackend::Distributed),
+            other => Err(format!(
+                "unknown backend {other:?} (expected sequential|distributed)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for RefineBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            RefineBackend::Sequential => "sequential",
+            RefineBackend::Distributed => "distributed",
+        })
+    }
+}
+
+/// Options of the closed loop.
+#[derive(Debug, Clone)]
+pub struct DynamicOptions {
+    pub sim: SimOptions,
+    /// Wall ticks per simulation epoch; 0 freezes the initial partition
+    /// (the static baseline).
+    pub epoch_ticks: u64,
+    pub framework: Framework,
+    /// Relative rollback-delay weight μ.
+    pub mu: f64,
+    pub backend: RefineBackend,
+    /// Wall-tick charge per executed LP migration (the paper ignores
+    /// migration cost; default 0).
+    pub ticks_per_transfer: u64,
+    /// Per-move surcharge `c_mig` priced *inside* the refinement game
+    /// (augmented dissatisfaction, DESIGN.md §9): a transfer is only
+    /// accepted when its raw cost gain exceeds this many cost units.
+    /// Use [`DynamicOptions::charge_transfers`] to derive it from
+    /// `ticks_per_transfer` so the game prices exactly what the report
+    /// bills. 0 reproduces the paper's charge-free game.
+    pub migration_charge: f64,
+    /// Cap on refinement epochs (0 = unlimited).
+    pub max_refinements: usize,
+    /// When set, every epoch-boundary [`Snapshot`] is also written
+    /// here (`epoch-NNNN.snap`, numbered by the *cumulative* epoch
+    /// counter so a restored run never overwrites the original run's
+    /// files; plus `recovery-NNNN.snap` after each worker death and
+    /// `admit-NNNN.snap` after each admission), so an operator can
+    /// inspect or `--restore` them. The in-memory checkpoint that
+    /// powers live recovery is kept whenever a TCP cluster is
+    /// attached, with or without this directory.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Two-level hierarchy (DESIGN.md §12): when set, every refinement
+    /// epoch plays the outer rack-quotient game then the scoped inner
+    /// per-rack games instead of the flat K-machine game. `None` (the
+    /// default) keeps the flat game. The layout must cover exactly the
+    /// starting fleet; singleton racks reproduce the flat equilibrium
+    /// bit-for-bit.
+    pub racks: Option<RackLayout>,
+}
+
+impl Default for DynamicOptions {
+    fn default() -> Self {
+        DynamicOptions {
+            sim: SimOptions::default(),
+            epoch_ticks: 200,
+            framework: Framework::A,
+            mu: 8.0,
+            backend: RefineBackend::Sequential,
+            ticks_per_transfer: 0,
+            migration_charge: 0.0,
+            max_refinements: 0,
+            checkpoint_dir: None,
+            racks: None,
+        }
+    }
+}
+
+impl DynamicOptions {
+    /// Bill each transfer `ticks` wall ticks in the report AND price it
+    /// at `c_mig = ticks · tick_value` cost units inside the game, so
+    /// refinement only moves an LP when its modeled gain beats what the
+    /// migration will cost the run. `tick_value` converts wall ticks to
+    /// cost units (1.0 when node weights are events-per-window, the
+    /// closed loop's default measurement).
+    pub fn charge_transfers(mut self, ticks: u64, tick_value: f64) -> Self {
+        assert!(tick_value >= 0.0 && tick_value.is_finite(), "tick value must be finite and >= 0");
+        self.ticks_per_transfer = ticks;
+        self.migration_charge = ticks as f64 * tick_value;
+        self
+    }
+}
+
+/// What one refinement epoch did.
+#[derive(Debug, Clone)]
+pub struct EpochRefinement {
+    /// Potential on the re-measured weights *before* refining (warm
+    /// start = current partition).
+    pub potential_before: f64,
+    /// Potential at the refined equilibrium. Never exceeds
+    /// `potential_before` (Thm 4.1 descent).
+    pub potential_after: f64,
+    /// LP migrations executed.
+    pub transfers: usize,
+    /// Wall-tick migration charge of this epoch.
+    pub migration_ticks: u64,
+    /// In-game migration spend of this epoch: `c_mig · transfers`, in
+    /// cost units. `potential_after + migration_cost ≤ potential_before`
+    /// is the augmented-descent guarantee (DESIGN.md §9).
+    pub migration_cost: f64,
+    pub imbalance_before: f64,
+    pub imbalance_after: f64,
+    /// Whether refinement reached a Nash equilibrium (vs the cap).
+    pub converged: bool,
+    /// Measured coordinator sync traffic of this epoch (exact wire
+    /// bytes) — `None` on the sequential backend, which sends nothing.
+    pub overhead: Option<OverheadStats>,
+}
+
+/// Per-epoch record of the closed loop.
+#[derive(Debug, Clone)]
+pub struct EpochReport {
+    pub epoch: usize,
+    /// Simulation-tick window (engine clock; migration stalls excluded).
+    pub tick_start: u64,
+    pub tick_end: u64,
+    /// Wall-clock window including migration stalls: `wall_tick_start`
+    /// is `tick_start` plus every earlier epoch's migration charge, and
+    /// `wall_tick_end` additionally includes *this* epoch's charge —
+    /// epoch wall windows tile `[0, DynamicReport::total_time()]`
+    /// exactly, so per-epoch weights and throughput bill migration time
+    /// the same way the headline metric does.
+    pub wall_tick_start: u64,
+    pub wall_tick_end: u64,
+    /// Wall-tick migration charge of this epoch's refinement (0 when
+    /// the epoch did not refine).
+    pub migration_ticks: u64,
+    /// Events completed during the window.
+    pub events_processed: u64,
+    /// Rollback episodes during the window.
+    pub rollbacks: u64,
+    /// Cross-machine forwards during the window.
+    pub cross_machine_forwards: u64,
+    /// Events per *wall* tick over the window, migration stall
+    /// included — the throughput the rebalancer tries to keep high.
+    /// Before the accounting fix this divided by the simulation window
+    /// only, so measured throughput pretended migration was free while
+    /// `total_time()` charged it.
+    pub throughput: f64,
+    /// `None` on frozen (baseline) epochs and on the drain-out tail.
+    pub refine: Option<EpochRefinement>,
+    /// Set when one or more workers died during this epoch's
+    /// refinement and the run restored from the last epoch-boundary
+    /// checkpoint instead of unwinding (DESIGN.md §10).
+    pub recovery: Option<RecoveryRecord>,
+    /// Set when a queued joiner was admitted at this epoch's boundary
+    /// and the fleet grew to K+1 before the epoch's refinement ran.
+    pub admission: Option<AdmissionRecord>,
+    /// Rack count of the hierarchy the refinement played (DESIGN.md
+    /// §12); 0 when the epoch ran the flat game.
+    pub racks: usize,
+}
+
+/// Aggregate result of a closed-loop run.
+#[derive(Debug, Clone)]
+pub struct DynamicReport {
+    pub stats: SimStats,
+    pub epochs: Vec<EpochReport>,
+    /// Total LP migrations across all refinement epochs.
+    pub transfers: usize,
+    /// Total wall-tick migration charge.
+    pub migration_ticks: u64,
+    /// Machine-load traces (populated if `sim.trace_every > 0`).
+    pub load_traces: Vec<Trace>,
+}
+
+impl DynamicReport {
+    /// Total simulation time including migration charges — the paper's
+    /// headline metric.
+    pub fn total_time(&self) -> u64 {
+        self.stats.ticks + self.migration_ticks
+    }
+
+    /// Number of refinement epochs that actually ran.
+    pub fn refinements(&self) -> usize {
+        self.epochs.iter().filter(|e| e.refine.is_some()).count()
+    }
+
+    /// Number of epochs that survived a worker death by restoring
+    /// from the last checkpoint.
+    pub fn recoveries(&self) -> usize {
+        self.epochs.iter().filter(|e| e.recovery.is_some()).count()
+    }
+
+    /// Number of epochs that grew the fleet by admitting a joiner at
+    /// their boundary.
+    pub fn admissions(&self) -> usize {
+        self.epochs.iter().filter(|e| e.admission.is_some()).count()
+    }
+
+    /// Refinement epochs whose potential *rose* — Thm 4.1 says this is
+    /// impossible, so any non-zero count is a bug. `sim::fuzz` treats
+    /// violations as first-class findings and the regression suite
+    /// asserts the committed corpus keeps this at zero.
+    pub fn descent_violations(&self) -> usize {
+        self.epochs
+            .iter()
+            .filter_map(|e| e.refine.as_ref())
+            .filter(|r| {
+                r.potential_after > r.potential_before + 1e-9 * (1.0 + r.potential_before.abs())
+            })
+            .count()
+    }
+
+    /// Total coordinator sync traffic across every refinement epoch
+    /// (`None` if no epoch used a message-passing backend).
+    pub fn total_overhead(&self) -> Option<OverheadStats> {
+        let mut total: Option<OverheadStats> = None;
+        for r in self.epochs.iter().filter_map(|e| e.refine.as_ref()) {
+            if let Some(o) = &r.overhead {
+                total.get_or_insert_with(OverheadStats::default).add(o);
+            }
+        }
+        total
+    }
+
+    /// Render the per-epoch stream as a table.
+    pub fn epoch_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "epoch", "wall ticks", "mig", "events", "ev/tick", "rollbacks",
+                "x-machine", "transfers", "potential",
+            ],
+        );
+        for e in &self.epochs {
+            let (transfers, potential) = match &e.refine {
+                Some(r) => (
+                    r.transfers.to_string(),
+                    format!("{:.0} -> {:.0}", r.potential_before, r.potential_after),
+                ),
+                None => ("-".into(), "(frozen)".into()),
+            };
+            t.row(&[
+                e.epoch.to_string(),
+                format!("{}..{}", e.wall_tick_start, e.wall_tick_end),
+                e.migration_ticks.to_string(),
+                e.events_processed.to_string(),
+                format!("{:.3}", e.throughput),
+                e.rollbacks.to_string(),
+                e.cross_machine_forwards.to_string(),
+                transfers,
+                potential,
+            ]);
+        }
+        t
+    }
+}
+
+/// The closed-loop driver. Borrows the (topology-)immutable LP graph;
+/// owns a private weighted copy for the refinement side.
+pub struct DynamicDriver<'g> {
+    /// The immutable LP topology the engine borrows — kept so the
+    /// engine can be *rebuilt* from a checkpoint during recovery.
+    pub(super) graph: &'g Graph,
+    pub(super) engine: SimEngine<'g>,
+    pub(super) lp_graph: Graph,
+    pub(super) machines: MachineConfig,
+    pub(super) estimator: WeightEstimator,
+    pub(super) options: DynamicOptions,
+    pub(super) epochs: Vec<EpochReport>,
+    /// Epochs completed *before* this driver existed (non-zero only
+    /// when restored from a snapshot). Epoch reports renumber from 0
+    /// per run, but checkpoint filenames and the `epoch` counter
+    /// stored in snapshots use `epoch_base + epochs.len()`, so a
+    /// resumed run sharing `checkpoint_dir` with the original never
+    /// overwrites the original's files.
+    pub(super) epoch_base: u64,
+    /// Recoveries taken this run — names `recovery-NNNN.snap` so a
+    /// second recovery does not overwrite the first's replay point.
+    pub(super) recovery_ordinal: usize,
+    /// Admissions granted this run — names `admit-NNNN.snap`.
+    pub(super) admission_ordinal: usize,
+    pub(super) refinements: usize,
+    pub(super) transfers: usize,
+    pub(super) migration_ticks: u64,
+    /// When attached, the distributed backend refines over this real
+    /// multi-process TCP cluster instead of in-process actor threads.
+    pub(super) cluster: Option<ClusterLeader>,
+    /// Encoded bytes of the last epoch-boundary [`Snapshot`] —
+    /// restored from on worker death. Kept whenever a cluster is
+    /// attached or `checkpoint_dir` is set.
+    pub(super) last_checkpoint: Option<Vec<u8>>,
+}
+
+impl<'g> DynamicDriver<'g> {
+    pub fn new(
+        graph: &'g Graph,
+        machines: MachineConfig,
+        initial: Partition,
+        injections: Vec<Injection>,
+        estimator: WeightEstimator,
+        options: DynamicOptions,
+    ) -> Self {
+        let engine =
+            SimEngine::new(graph, machines.clone(), initial, options.sim.clone(), injections);
+        DynamicDriver {
+            graph,
+            engine,
+            lp_graph: graph.clone(),
+            machines,
+            estimator,
+            options,
+            epochs: Vec::new(),
+            epoch_base: 0,
+            recovery_ordinal: 0,
+            admission_ordinal: 0,
+            refinements: 0,
+            transfers: 0,
+            migration_ticks: 0,
+            cluster: None,
+            last_checkpoint: None,
+        }
+    }
+
+    pub fn engine(&self) -> &SimEngine<'g> {
+        &self.engine
+    }
+
+    /// The current fleet — shrinks when a recovery evicts dead
+    /// machines and grows when a boundary admission re-adds one, so
+    /// report consumers must read it from here rather than keep the
+    /// pre-run config.
+    pub fn machines(&self) -> &MachineConfig {
+        &self.machines
+    }
+
+    /// The game-side graph carrying the latest measured/estimated LP
+    /// weights — the basis the final partition was refined on, and
+    /// therefore the right weighting for costing it.
+    pub fn weighted_graph(&self) -> &Graph {
+        &self.lp_graph
+    }
+
+    pub fn epochs(&self) -> &[EpochReport] {
+        &self.epochs
+    }
+
+    /// Potential of `part` on the current (re-measured) LP graph, under
+    /// the configured framework.
+    fn potential_of(&self, part: &Partition) -> f64 {
+        match self.options.framework {
+            Framework::A => global_cost::c0(&self.lp_graph, &self.machines, part, self.options.mu),
+            Framework::B => {
+                global_cost::c0_tilde(&self.lp_graph, &self.machines, part, self.options.mu)
+            }
+        }
+    }
+
+    /// Measure → estimate → install → refine (warm start) → migrate.
+    /// Only the TCP-cluster path can fail; on error the cluster is
+    /// deliberately left attached so the caller can diagnose the dead
+    /// peers and recover over the survivors.
+    pub(super) fn refine_once(
+        &mut self,
+        counters: &EpochCounters,
+    ) -> Result<EpochRefinement, WireError> {
+        let raw = weights::measure_epoch(&self.engine, counters);
+        let estimated = self.estimator.estimate(&raw);
+        weights::install(&mut self.lp_graph, &estimated);
+
+        let mut part = self.engine.partition().clone();
+        part.rebuild_aggregates(&self.lp_graph);
+        let imbalance_before = part.imbalance(&self.machines);
+
+        let (potential_before, potential_after, transfers, converged, overhead, refined) =
+            match self.options.backend {
+                RefineBackend::Sequential => match &self.options.racks {
+                    None => {
+                        let mut refine = RefineEngine::new(
+                            &self.lp_graph,
+                            &self.machines,
+                            part,
+                            self.options.mu,
+                            self.options.framework,
+                        )
+                        .with_migration_charge(self.options.migration_charge);
+                        let before = refine.potential();
+                        let report = refine.run(&RefineOptions::default());
+                        (
+                            before,
+                            report.final_potential,
+                            report.transfers,
+                            report.converged,
+                            None,
+                            refine.into_partition(),
+                        )
+                    }
+                    Some(layout) => {
+                        let (refined, report) = refine_hierarchical(
+                            &self.lp_graph,
+                            &self.machines,
+                            part,
+                            self.options.mu,
+                            self.options.framework,
+                            self.options.migration_charge,
+                            layout,
+                            &RefineOptions::default(),
+                        );
+                        (
+                            report.potential_before,
+                            report.potential_after,
+                            report.transfers,
+                            report.converged,
+                            None,
+                            refined,
+                        )
+                    }
+                },
+                RefineBackend::Distributed => {
+                    let before = self.potential_of(&part);
+                    let report = if self.cluster.is_some() {
+                        let result = self
+                            .cluster
+                            .as_mut()
+                            .expect("checked above")
+                            .refine(&self.lp_graph, &self.machines, part);
+                        match result {
+                            Ok(report) => report,
+                            // The cluster is left attached: the caller
+                            // (`try_run_epoch`) first tries to recover
+                            // from the last checkpoint, and tears it
+                            // down only when recovery is impossible.
+                            Err(e) => return Err(e),
+                        }
+                    } else {
+                        let dist_opts = DistributedOptions {
+                            mu: self.options.mu,
+                            framework: self.options.framework,
+                            migration_charge: self.options.migration_charge,
+                            ..Default::default()
+                        };
+                        match &self.options.racks {
+                            None => run_distributed(
+                                Arc::new(self.lp_graph.clone()),
+                                &self.machines,
+                                part,
+                                &dist_opts,
+                            ),
+                            Some(layout) => run_distributed_hierarchical(
+                                Arc::new(self.lp_graph.clone()),
+                                &self.machines,
+                                part,
+                                layout,
+                                &dist_opts,
+                            ),
+                        }
+                    };
+                    let after = self.potential_of(&report.partition);
+                    (
+                        before,
+                        after,
+                        report.transfers,
+                        report.converged,
+                        Some(report.overhead),
+                        report.partition,
+                    )
+                }
+            };
+
+        let imbalance_after = refined.imbalance(&self.machines);
+        let charge = self.options.ticks_per_transfer * transfers as u64;
+        self.refinements += 1;
+        self.transfers += transfers;
+        self.migration_ticks += charge;
+        self.engine.set_partition(refined);
+        Ok(EpochRefinement {
+            potential_before,
+            potential_after,
+            transfers,
+            migration_ticks: charge,
+            migration_cost: self.options.migration_charge * transfers as f64,
+            imbalance_before,
+            imbalance_after,
+            converged,
+            overhead,
+        })
+    }
+
+    /// Best-effort cluster teardown (Goodbye) so surviving workers
+    /// exit immediately instead of waiting out their epoch timeout.
+    pub(super) fn teardown_cluster(&mut self) {
+        if let Some(cluster) = self.cluster.take() {
+            let _ = cluster.shutdown();
+        }
+    }
+}
+
+/// Run a full closed loop from an App.-A hop-growth initial partition
+/// (unit weights) — the `gtip dynamic` entry point.
+pub fn run_closed_loop(
+    graph: &Graph,
+    machines: &MachineConfig,
+    injections: Vec<Injection>,
+    estimator: WeightEstimator,
+    options: &DynamicOptions,
+    rng: &mut Pcg32,
+) -> DynamicReport {
+    let initial = grow_partition(graph, machines, rng);
+    let mut driver = DynamicDriver::new(
+        graph,
+        machines.clone(),
+        initial,
+        injections,
+        estimator,
+        options.clone(),
+    );
+    driver.run()
+}
+
+/// Frozen-vs-rebalanced comparison on an identical graph, workload and
+/// initial partition — the headline §6.1 experiment.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub frozen: DynamicReport,
+    pub rebalanced: DynamicReport,
+}
+
+impl CompareReport {
+    /// `frozen time / rebalanced time` (> 1 means rebalancing won).
+    /// Both arms draining in zero ticks (an empty workload) is a tie:
+    /// 1.0, not the 0.0 the naive `0 / max(1)` would report — and the
+    /// denominator clamp can only engage in that same degenerate case,
+    /// so it never silently skews a real comparison.
+    pub fn speedup(&self) -> f64 {
+        CompareReport::speedup_of(self.frozen.total_time(), self.rebalanced.total_time())
+    }
+
+    /// The speedup definition on bare totals — for callers (e.g. the
+    /// churn sweep) that hold one frozen run against many rebalanced
+    /// arms without assembling a `CompareReport` per pair.
+    pub fn speedup_of(frozen_time: u64, rebalanced_time: u64) -> f64 {
+        if frozen_time == 0 && rebalanced_time == 0 {
+            return 1.0;
+        }
+        frozen_time as f64 / rebalanced_time.max(1) as f64
+    }
+}
+
+/// Run both arms. The frozen arm keeps `initial` for the whole run; the
+/// rebalanced arm closes the loop with `estimator` every `epoch_ticks`.
+pub fn compare_frozen_vs_rebalanced(
+    graph: &Graph,
+    machines: &MachineConfig,
+    initial: &Partition,
+    injections: &[Injection],
+    estimator: WeightEstimator,
+    options: &DynamicOptions,
+) -> CompareReport {
+    let frozen_options = DynamicOptions { epoch_ticks: 0, ..options.clone() };
+    let frozen = DynamicDriver::new(
+        graph,
+        machines.clone(),
+        initial.clone(),
+        injections.to_vec(),
+        WeightEstimator::instantaneous(),
+        frozen_options,
+    )
+    .run_owned();
+    let rebalanced = DynamicDriver::new(
+        graph,
+        machines.clone(),
+        initial.clone(),
+        injections.to_vec(),
+        estimator,
+        options.clone(),
+    )
+    .run_owned();
+    CompareReport { frozen, rebalanced }
+}
+
+impl<'g> DynamicDriver<'g> {
+    /// `run()` for by-value call chains.
+    pub fn run_owned(mut self) -> DynamicReport {
+        self.run()
+    }
+}

@@ -1,0 +1,312 @@
+//! Elastic membership for the closed loop (DESIGN.md §10): the shrink
+//! half — diagnose dead workers, restore from the last epoch-boundary
+//! checkpoint, re-home orphaned LPs, retry at K−1 — and the grow half,
+//! admitting one queued joiner per epoch boundary. Both operate on the
+//! attached TCP cluster and record what changed ([`RecoveryRecord`] /
+//! [`AdmissionRecord`]) for the epoch report stream.
+
+use crate::coordinator::net::ClusterLeader;
+use crate::coordinator::WireError;
+use crate::game::refine::rehome_assignment;
+use crate::partition::{MachineConfig, MachineId};
+use crate::sim::engine::SimEngine;
+use crate::sim::snapshot::Snapshot;
+
+use super::driver::{DynamicDriver, EpochRefinement, RefineBackend};
+
+/// What a worker-death recovery did (DESIGN.md §10): which machines
+/// were lost, how the fleet shrank, and how many orphaned LPs were
+/// re-homed onto the survivors before the epoch's refinement re-ran.
+#[derive(Debug, Clone)]
+pub struct RecoveryRecord {
+    /// Machines diagnosed dead, in the logical numbering the cluster
+    /// used when each one died (a second death during the retry is
+    /// recorded in the already-compacted numbering).
+    pub dead_machines: Vec<MachineId>,
+    /// Fleet size when the epoch started.
+    pub machines_before: usize,
+    /// Fleet size after the last recovery round of the epoch.
+    pub machines_after: usize,
+    /// LPs that lived on dead machines and were re-homed.
+    pub rehomed_lps: usize,
+}
+
+/// What a worker admission did — the [`RecoveryRecord`] counterpart
+/// for the grow direction (DESIGN.md §10): which wire id joined, the
+/// logical slot it was inserted at, and how the fleet grew. The
+/// joiner starts with zero LPs; the next refinement epoch migrates
+/// load toward it (Thm 4.1 descent holds from any feasible start).
+#[derive(Debug, Clone)]
+pub struct AdmissionRecord {
+    /// The joiner's immutable wire id (its `--machine-id`).
+    pub joined_wire_id: MachineId,
+    /// The logical machine slot the joiner was inserted at (wire ids
+    /// stay ascending, so members to its right shifted up by one).
+    pub joined_machine: MachineId,
+    /// Fleet size before the admission.
+    pub machines_before: usize,
+    /// Fleet size after (always `machines_before + 1`).
+    pub machines_after: usize,
+    /// The joiner's self-reported relative speed (1.0 = an average
+    /// member of the original fleet), before renormalization.
+    pub speed: f64,
+}
+
+impl<'g> DynamicDriver<'g> {
+    /// Route every distributed refinement over a connected TCP cluster
+    /// (broadcasts the shared fixture to the workers first). Requires
+    /// `options.backend == RefineBackend::Distributed`.
+    pub fn attach_cluster(&mut self, mut cluster: ClusterLeader) -> Result<(), WireError> {
+        assert_eq!(
+            self.options.backend,
+            RefineBackend::Distributed,
+            "a TCP cluster needs the distributed backend"
+        );
+        if let Some(layout) = &self.options.racks {
+            if let Err(e) = cluster.set_racks(layout.clone()) {
+                let _ = cluster.shutdown();
+                return Err(e);
+            }
+        }
+        if let Err(e) = cluster.setup(&self.lp_graph, &self.machines) {
+            // Best-effort Goodbye so workers that did complete the
+            // handshake exit now instead of waiting out their derived
+            // epoch-wait timeout.
+            let _ = cluster.shutdown();
+            return Err(e);
+        }
+        self.cluster = Some(cluster);
+        Ok(())
+    }
+
+    /// A refinement over the TCP cluster failed: diagnose which
+    /// workers died, restore the run from the last epoch-boundary
+    /// checkpoint, shrink the fleet to the survivors (renormalizing
+    /// their relative speeds), re-home the dead machines' LPs, and
+    /// re-run this epoch's refinement at K−1 over the compacted
+    /// cluster (DESIGN.md §10). Loops if another worker dies during
+    /// the retry — each round shrinks the fleet, so it terminates.
+    /// Tears the cluster down and propagates when recovery is
+    /// impossible: no checkpoint, no peer actually dead (the failure
+    /// was the leader's own), or the recovery handshake itself failed.
+    pub(super) fn recover_and_refine(
+        &mut self,
+        mut err: WireError,
+    ) -> Result<(EpochRefinement, RecoveryRecord), WireError> {
+        let mut record: Option<RecoveryRecord> = None;
+        loop {
+            let Some(bytes) = self.last_checkpoint.clone() else {
+                self.teardown_cluster();
+                return Err(err);
+            };
+            let dead = match self.cluster.as_mut() {
+                Some(cluster) => match cluster.diagnose_dead() {
+                    // Every peer answered: the failure was not a
+                    // worker death, so there is nothing to recover
+                    // from — propagate the original error.
+                    Ok(dead) if dead.is_empty() => {
+                        self.teardown_cluster();
+                        return Err(err);
+                    }
+                    Ok(dead) => dead,
+                    Err(e) => {
+                        self.teardown_cluster();
+                        return Err(e);
+                    }
+                },
+                None => return Err(err),
+            };
+            let snap = match Snapshot::decode(&bytes) {
+                Ok(s) => s,
+                Err(e) => {
+                    self.teardown_cluster();
+                    return Err(WireError::Protocol(format!("checkpoint unreadable: {e}")));
+                }
+            };
+            let machines_before = snap.machine_count();
+            debug_assert!(
+                !dead.contains(&0) && dead.iter().all(|&m| m < machines_before),
+                "dead set {dead:?} out of range for {machines_before} machines"
+            );
+            // Survivors keep their relative speeds, renormalized.
+            let mut speeds: Vec<f64> = snap
+                .speeds
+                .iter()
+                .enumerate()
+                .filter(|(m, _)| !dead.contains(m))
+                .map(|(_, &s)| s)
+                .collect();
+            let total: f64 = speeds.iter().sum();
+            for s in &mut speeds {
+                *s /= total;
+            }
+            let machines_after = MachineConfig::from_normalized(speeds);
+            // Commit the survivors on the wire first (compact the
+            // endpoint, broadcast Restore, await every ack) so local
+            // state is only rebuilt once the cluster agreed.
+            if let Err(e) =
+                self.cluster.as_mut().expect("checked above").recover(&dead, &machines_after)
+            {
+                self.teardown_cluster();
+                return Err(e);
+            }
+            // Restore game-side state from the checkpoint, re-home
+            // the orphaned LPs, and rebuild the engine at K−1.
+            self.lp_graph = snap.build_graph();
+            self.estimator.import_state(snap.estimator.clone());
+            self.refinements = snap.refinements as usize;
+            self.transfers = snap.transfers as usize;
+            self.migration_ticks = snap.migration_ticks;
+            let (assignment, rehomed) =
+                rehome_assignment(&snap.engine.assignment, &dead, &self.lp_graph, &machines_after);
+            let mut state = snap.engine;
+            state.assignment = assignment;
+            self.engine = SimEngine::from_state(
+                self.graph,
+                machines_after.clone(),
+                self.options.sim.clone(),
+                state,
+            );
+            self.machines = machines_after;
+            match &mut record {
+                None => {
+                    record = Some(RecoveryRecord {
+                        dead_machines: dead.clone(),
+                        machines_before,
+                        machines_after: self.machines.count(),
+                        rehomed_lps: rehomed,
+                    })
+                }
+                Some(r) => {
+                    r.dead_machines.extend(dead.iter().copied());
+                    r.machines_after = self.machines.count();
+                    r.rehomed_lps += rehomed;
+                }
+            }
+            // Re-harvest the window the checkpoint preserved and
+            // retry the refinement over the compacted cluster.
+            // Checkpoint the restored K−1 state first: if *another*
+            // worker dies during the retry, the next round must
+            // restore in the new machine numbering.
+            let counters = self.engine.take_epoch_counters();
+            self.last_checkpoint = Some(self.snapshot().encode());
+            match self.refine_once(&counters) {
+                Ok(refinement) => {
+                    // The post-refinement state is the new epoch
+                    // boundary: `gtip dynamic --restore` on this file
+                    // continues from here and (deterministically)
+                    // reaches the same final state as this run. Named
+                    // by recovery ordinal so a second recovery in the
+                    // same run keeps the first's replay point intact.
+                    let recovered = self.snapshot();
+                    let encoded = recovered.encode();
+                    self.write_checkpoint_file(
+                        &format!("recovery-{:04}.snap", self.recovery_ordinal),
+                        &encoded,
+                    );
+                    self.recovery_ordinal += 1;
+                    self.last_checkpoint = Some(encoded);
+                    return Ok((refinement, record.expect("at least one recovery round")));
+                }
+                Err(e) => err = e,
+            }
+        }
+    }
+
+    /// At an epoch boundary, admit one queued joiner if the attached
+    /// cluster has one waiting — the grow half of elastic membership
+    /// (DESIGN.md §10). Admission happens *only* here, never
+    /// mid-epoch: the boundary is where a consistent state exists,
+    /// and that state (remapped into the K+1 numbering) is exactly
+    /// what the joiner receives as its `Catchup` payload. The joiner
+    /// starts with zero LPs; the next refinement migrates load toward
+    /// it under Thm 4.1's any-feasible-start descent, so no dedicated
+    /// rebalancing pass is needed. A failed admission that rolled
+    /// back cleanly returns `Ok(None)` and the run continues at K;
+    /// `Err` means the rollback itself failed and the cluster was
+    /// torn down.
+    pub(super) fn try_admit_pending(&mut self) -> Result<Option<AdmissionRecord>, WireError> {
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Ok(None);
+        };
+        let Some(req) = cluster.pending_join() else {
+            return Ok(None);
+        };
+        let joined_wire = req.wire_id;
+        let speed = req.speed;
+        let machines_before = self.machines.clone();
+        let k_old = machines_before.count();
+        // Wire ids stay ascending in the logical numbering, so the
+        // joiner lands at this slot and every member to its right
+        // shifts up by one.
+        let pos = cluster.joiner_position(joined_wire);
+        // The joiner's self-reported speed is relative to an average
+        // machine of the original fleet; the survivors' normalized
+        // speeds sum to 1, so an average-sized share next to them is
+        // speed/K. `from_speeds` renormalizes the grown vector.
+        let mut weights: Vec<f64> = machines_before.speeds().to_vec();
+        weights.insert(pos, speed / k_old as f64);
+        let machines_after = MachineConfig::from_speeds(&weights);
+        // Build the K+1 boundary snapshot the joiner catches up from:
+        // the current engine state with every assignment at or right
+        // of the insertion slot shifted into the grown numbering.
+        let mut state = self.engine.capture_state();
+        for a in &mut state.assignment {
+            if *a >= pos {
+                *a += 1;
+            }
+        }
+        let snap = Snapshot {
+            options: self.options.sim.clone(),
+            node_weights: self.lp_graph.node_weights().to_vec(),
+            edges: self.lp_graph.edges().collect(),
+            speeds: machines_after.speeds().to_vec(),
+            epoch: self.epoch_base + self.epochs.len() as u64,
+            refinements: self.refinements as u64,
+            transfers: self.transfers as u64,
+            migration_ticks: self.migration_ticks,
+            estimator: self.estimator.export_state(),
+            rng_streams: Vec::new(),
+            engine: state.clone(),
+        };
+        let encoded = snap.encode();
+        let admitted =
+            cluster.admit(req, &self.lp_graph, &machines_before, &machines_after, &encoded);
+        match admitted {
+            Ok(false) => Ok(None),
+            Ok(true) => {
+                // The cluster agreed on the wire; rebuild local state
+                // at K+1 to match what the joiner received.
+                self.engine = SimEngine::from_state(
+                    self.graph,
+                    machines_after.clone(),
+                    self.options.sim.clone(),
+                    state,
+                );
+                self.machines = machines_after;
+                self.write_checkpoint_file(
+                    &format!("admit-{:04}.snap", self.admission_ordinal),
+                    &encoded,
+                );
+                self.admission_ordinal += 1;
+                self.last_checkpoint = Some(encoded);
+                eprintln!(
+                    "gtip leader: admitted wire id {joined_wire} as machine {pos} \
+                     ({k_old} -> {} machines)",
+                    self.machines.count()
+                );
+                Ok(Some(AdmissionRecord {
+                    joined_wire_id: joined_wire,
+                    joined_machine: pos,
+                    machines_before: k_old,
+                    machines_after: self.machines.count(),
+                    speed,
+                }))
+            }
+            Err(e) => {
+                self.teardown_cluster();
+                Err(e)
+            }
+        }
+    }
+}

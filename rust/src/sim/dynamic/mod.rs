@@ -1,0 +1,816 @@
+//! Closed-loop dynamic rebalancing (§6.1) — the paper's *title*
+//! scenario, end to end.
+//!
+//! [`DynamicDriver`] alternates **simulation epochs** with **refinement
+//! epochs**: run the optimistic PDES engine for `epoch_ticks` wall
+//! ticks, harvest the per-LP measured loads of the window (events
+//! processed, rollbacks, per-edge forward traffic — see
+//! [`EpochCounters`]), turn them into fresh node/edge weights through a
+//! pluggable [`WeightEstimator`], re-run the game-theoretic refinement
+//! *warm-started from the current partition* (sequentially or through
+//! the distributed machine-actor coordinator, see [`RefineBackend`]),
+//! migrate the LPs on the live engine, and record an [`EpochReport`].
+//!
+//! Differences from the one-shot `sim::driver` loop kept for the Fig.
+//! 7–10 harnesses: epoch-boundary (not modulo-tick) scheduling, windowed
+//! activity measurement instead of instantaneous queue lengths only,
+//! estimator smoothing/hysteresis to damp migration churn (cf. the
+//! self-clustering partitioner of arXiv:1610.01295), a selectable
+//! distributed backend, and a per-epoch report stream capturing the
+//! potential descent of every refinement.
+//!
+//! [`EpochCounters`]: crate::sim::engine::EpochCounters
+
+use crate::sim::snapshot::EstimatorState;
+use crate::sim::weights::MeasuredWeights;
+
+pub mod checkpoint;
+pub mod driver;
+pub mod membership;
+
+pub use driver::{compare_frozen_vs_rebalanced, run_closed_loop, CompareReport, DynamicDriver};
+pub use driver::{DynamicOptions, DynamicReport, EpochRefinement, EpochReport, RefineBackend};
+pub use membership::{AdmissionRecord, RecoveryRecord};
+
+/// How measured loads become refinement weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorKind {
+    /// Use the latest window's measurement as-is.
+    Instantaneous,
+    /// Exponentially-weighted moving average across windows.
+    Ewma,
+    /// EWMA plus a relative dead band: the emitted weight only moves
+    /// when the smoothed estimate drifts far enough, damping migration
+    /// churn between epochs.
+    Hysteresis,
+}
+
+impl std::str::FromStr for EstimatorKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "instant" | "instantaneous" => Ok(EstimatorKind::Instantaneous),
+            "ewma" => Ok(EstimatorKind::Ewma),
+            "hyst" | "hysteresis" => Ok(EstimatorKind::Hysteresis),
+            other => Err(format!(
+                "unknown estimator {other:?} (expected instant|ewma|hysteresis)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for EstimatorKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EstimatorKind::Instantaneous => "instant",
+            EstimatorKind::Ewma => "ewma",
+            EstimatorKind::Hysteresis => "hysteresis",
+        })
+    }
+}
+
+/// Stateful weight estimator fed one [`MeasuredWeights`] per epoch.
+#[derive(Debug, Clone)]
+pub struct WeightEstimator {
+    kind: EstimatorKind,
+    /// EWMA smoothing factor in `(0, 1]` (1 = no memory).
+    alpha: f64,
+    /// Relative dead band of the hysteresis variant.
+    deadband: f64,
+    node_state: Vec<f64>,
+    edge_state: Vec<f64>,
+    node_out: Vec<f64>,
+    edge_out: Vec<f64>,
+    primed: bool,
+}
+
+impl WeightEstimator {
+    pub fn new(kind: EstimatorKind, alpha: f64, deadband: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha out of (0, 1]");
+        assert!(deadband >= 0.0, "negative dead band");
+        WeightEstimator {
+            kind,
+            alpha,
+            deadband,
+            node_state: Vec::new(),
+            edge_state: Vec::new(),
+            node_out: Vec::new(),
+            edge_out: Vec::new(),
+            primed: false,
+        }
+    }
+
+    /// Pass-through estimator.
+    pub fn instantaneous() -> Self {
+        WeightEstimator::new(EstimatorKind::Instantaneous, 1.0, 0.0)
+    }
+
+    /// EWMA-smoothed estimator.
+    pub fn ewma(alpha: f64) -> Self {
+        WeightEstimator::new(EstimatorKind::Ewma, alpha, 0.0)
+    }
+
+    /// EWMA plus relative dead band.
+    pub fn hysteresis(alpha: f64, deadband: f64) -> Self {
+        WeightEstimator::new(EstimatorKind::Hysteresis, alpha, deadband)
+    }
+
+    /// Default parameters per kind (used by the CLI).
+    pub fn of_kind(kind: EstimatorKind) -> Self {
+        match kind {
+            EstimatorKind::Instantaneous => WeightEstimator::instantaneous(),
+            EstimatorKind::Ewma => WeightEstimator::ewma(0.5),
+            EstimatorKind::Hysteresis => WeightEstimator::hysteresis(0.5, 0.25),
+        }
+    }
+
+    pub fn kind(&self) -> EstimatorKind {
+        self.kind
+    }
+
+    /// Smoothing memory for a checkpoint (`None` until the first
+    /// window primes it; configuration is not state and is rebuilt
+    /// from options on restore).
+    pub fn export_state(&self) -> Option<EstimatorState> {
+        if !self.primed {
+            return None;
+        }
+        Some(EstimatorState {
+            node_state: self.node_state.clone(),
+            edge_state: self.edge_state.clone(),
+            node_out: self.node_out.clone(),
+            edge_out: self.edge_out.clone(),
+            primed: self.primed,
+        })
+    }
+
+    /// Adopt checkpointed smoothing memory verbatim (`None` resets to
+    /// the unprimed initial state).
+    pub fn import_state(&mut self, state: Option<EstimatorState>) {
+        match state {
+            None => {
+                self.node_state.clear();
+                self.edge_state.clear();
+                self.node_out.clear();
+                self.edge_out.clear();
+                self.primed = false;
+            }
+            Some(s) => {
+                self.node_state = s.node_state;
+                self.edge_state = s.edge_state;
+                self.node_out = s.node_out;
+                self.edge_out = s.edge_out;
+                self.primed = s.primed;
+            }
+        }
+    }
+
+    /// Fold one window's raw measurement into the estimate and return
+    /// the weights to hand to the refinement engine.
+    pub fn estimate(&mut self, raw: &MeasuredWeights) -> MeasuredWeights {
+        if self.kind == EstimatorKind::Instantaneous {
+            return raw.clone();
+        }
+        if !self.primed {
+            self.node_state = raw.node_weights.clone();
+            self.edge_state = raw.edge_weights.iter().map(|&(_, _, c)| c).collect();
+            self.node_out = self.node_state.clone();
+            self.edge_out = self.edge_state.clone();
+            self.primed = true;
+        } else {
+            assert_eq!(self.node_state.len(), raw.node_weights.len(), "graph changed shape");
+            assert_eq!(self.edge_state.len(), raw.edge_weights.len(), "graph changed shape");
+            for (s, &x) in self.node_state.iter_mut().zip(&raw.node_weights) {
+                *s = self.alpha * x + (1.0 - self.alpha) * *s;
+            }
+            for (s, &(_, _, c)) in self.edge_state.iter_mut().zip(&raw.edge_weights) {
+                *s = self.alpha * c + (1.0 - self.alpha) * *s;
+            }
+            match self.kind {
+                EstimatorKind::Ewma => {
+                    self.node_out.copy_from_slice(&self.node_state);
+                    self.edge_out.copy_from_slice(&self.edge_state);
+                }
+                EstimatorKind::Hysteresis => {
+                    let band = self.deadband;
+                    for (o, &s) in self.node_out.iter_mut().zip(&self.node_state) {
+                        if (s - *o).abs() > band * 1.0f64.max(o.abs()) {
+                            *o = s;
+                        }
+                    }
+                    for (o, &s) in self.edge_out.iter_mut().zip(&self.edge_state) {
+                        if (s - *o).abs() > band * 1.0f64.max(o.abs()) {
+                            *o = s;
+                        }
+                    }
+                }
+                EstimatorKind::Instantaneous => unreachable!(),
+            }
+        }
+        MeasuredWeights {
+            node_weights: self.node_out.clone(),
+            edge_weights: raw
+                .edge_weights
+                .iter()
+                .zip(&self.edge_out)
+                .map(|(&(u, v, _), &c)| (u, v, c))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::game::hierarchy::RackLayout;
+    use crate::graph::generators::preferential_attachment;
+    use crate::graph::Graph;
+    use crate::partition::initial::grow_partition;
+    use crate::partition::MachineConfig;
+    use crate::sim::engine::SimOptions;
+    use crate::sim::scenario::{Scenario, ScenarioKind, ScenarioOptions};
+    use crate::sim::snapshot::Snapshot;
+    use crate::util::rng::Pcg32;
+
+    fn setup(seed: u64) -> (Graph, MachineConfig, Scenario) {
+        let mut rng = Pcg32::new(seed);
+        let g = preferential_attachment(120, 2, &mut rng);
+        let machines = MachineConfig::homogeneous(4);
+        let scenario = Scenario::build(
+            ScenarioKind::HotspotShift,
+            &g,
+            &ScenarioOptions { threads: 60, horizon_ticks: 900, ..Default::default() },
+            &mut rng,
+        );
+        (g, machines, scenario)
+    }
+
+    fn options(epoch_ticks: u64) -> DynamicOptions {
+        DynamicOptions {
+            sim: SimOptions { max_ticks: 200_000, ..Default::default() },
+            epoch_ticks,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn closed_loop_runs_refines_and_reports() {
+        let (g, machines, scenario) = setup(1);
+        let mut rng = Pcg32::new(2);
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &options(150),
+            &mut rng,
+        );
+        assert!(!report.stats.truncated, "truncated: {:?}", report.stats);
+        assert!(report.refinements() > 0, "no refinement epochs ran");
+        assert_eq!(report.epochs.last().map(|e| e.tick_end), Some(report.stats.ticks));
+        // Every refinement descends its potential (Thm 4.1).
+        for e in &report.epochs {
+            if let Some(r) = &e.refine {
+                assert!(
+                    r.potential_after <= r.potential_before + 1e-9,
+                    "epoch {}: potential rose {} -> {}",
+                    e.epoch,
+                    r.potential_before,
+                    r.potential_after
+                );
+                assert!(r.converged);
+            }
+        }
+        // Epoch windows tile the run.
+        for pair in report.epochs.windows(2) {
+            assert_eq!(pair[0].tick_end, pair[1].tick_start);
+        }
+    }
+
+    /// Singleton racks in the closed loop reproduce the flat run
+    /// exactly: with one machine per rack the outer game IS the flat
+    /// game and the guarded map-back is the identity, so every epoch's
+    /// refinement — and therefore the whole simulation trajectory —
+    /// is bit-identical (DESIGN.md §12).
+    #[test]
+    fn singleton_racks_closed_loop_matches_flat_exactly() {
+        let (g, machines, scenario) = setup(7);
+        let flat = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            &options(150),
+            &mut Pcg32::new(8),
+        );
+        let mut opts = options(150);
+        opts.racks = Some(RackLayout::singletons(machines.count()));
+        let hier = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut Pcg32::new(8),
+        );
+        assert_eq!(hier.stats, flat.stats);
+        assert_eq!(hier.transfers, flat.transfers);
+        assert_eq!(hier.epochs.len(), flat.epochs.len());
+        for (h, f) in hier.epochs.iter().zip(flat.epochs.iter()) {
+            assert_eq!(h.events_processed, f.events_processed);
+            assert_eq!(h.rollbacks, f.rollbacks);
+            match (&h.refine, &f.refine) {
+                (Some(hr), Some(fr)) => {
+                    assert_eq!(hr.transfers, fr.transfers);
+                    // Same partition; the flat arm reports the engine's
+                    // incrementally-maintained potential while the
+                    // hierarchical arm recomputes it fresh, so compare
+                    // to rounding, not bits.
+                    let tol = 1e-9 * (1.0 + fr.potential_after.abs());
+                    assert!(
+                        (hr.potential_after - fr.potential_after).abs() <= tol,
+                        "epoch {}: potential {} vs {}",
+                        h.epoch,
+                        hr.potential_after,
+                        fr.potential_after
+                    );
+                }
+                (None, None) => {}
+                other => panic!("epoch {} refine mismatch: {other:?}", h.epoch),
+            }
+        }
+        assert_eq!(hier.epochs[0].racks, machines.count());
+        assert_eq!(flat.epochs[0].racks, 0);
+    }
+
+    /// Real (non-singleton) racks: every epoch's two-level refinement
+    /// still descends the flat potential (outer guarded map-back +
+    /// Thm 4.1 on each scoped inner game), and the epoch reports carry
+    /// the rack count.
+    #[test]
+    fn hierarchical_closed_loop_descends_every_epoch() {
+        let (g, machines, scenario) = setup(9);
+        let mut opts = options(150);
+        opts.racks = Some(RackLayout::new(vec![0, 0, 1, 1]).unwrap());
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut Pcg32::new(10),
+        );
+        assert!(!report.stats.truncated);
+        assert!(report.refinements() > 0, "no refinement epochs ran");
+        for e in &report.epochs {
+            assert_eq!(e.racks, 2);
+            if let Some(r) = &e.refine {
+                assert!(
+                    r.potential_after <= r.potential_before + 1e-9,
+                    "epoch {}: flat potential rose {} -> {}",
+                    e.epoch,
+                    r.potential_before,
+                    r.potential_after
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_mode_never_refines() {
+        let (g, machines, scenario) = setup(3);
+        let mut rng = Pcg32::new(4);
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &options(0),
+            &mut rng,
+        );
+        assert_eq!(report.refinements(), 0);
+        assert_eq!(report.transfers, 0);
+        assert!(!report.stats.truncated);
+        assert_eq!(report.epochs.len(), 1, "frozen run is one long epoch");
+    }
+
+    #[test]
+    fn migration_charges_accumulate() {
+        let (g, machines, scenario) = setup(5);
+        let mut rng = Pcg32::new(6);
+        let mut opts = options(150);
+        opts.ticks_per_transfer = 3;
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert_eq!(report.migration_ticks, 3 * report.transfers as u64);
+        assert_eq!(report.total_time(), report.stats.ticks + report.migration_ticks);
+        let per_epoch: u64 =
+            report.epochs.iter().filter_map(|e| e.refine.as_ref()).map(|r| r.migration_ticks).sum();
+        assert_eq!(per_epoch, report.migration_ticks);
+    }
+
+    /// The migration-time accounting seam (regression): epoch *wall*
+    /// windows must tile `[0, total_time()]` exactly — each window is
+    /// the sim window plus that epoch's migration stall — and
+    /// throughput must divide by the stalled window, so per-epoch
+    /// metrics and the headline metric bill migration identically.
+    #[test]
+    fn wall_windows_tile_total_time_and_throughput_bills_migration() {
+        let (g, machines, scenario) = setup(11);
+        let mut rng = Pcg32::new(12);
+        let mut opts = options(150);
+        opts.ticks_per_transfer = 4;
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(report.migration_ticks > 0, "fixture produced no migration charge");
+        assert_eq!(report.epochs.first().map(|e| e.wall_tick_start), Some(0));
+        for pair in report.epochs.windows(2) {
+            assert_eq!(pair[0].wall_tick_end, pair[1].wall_tick_start, "wall windows must tile");
+            assert_eq!(pair[0].tick_end, pair[1].tick_start, "sim windows must tile");
+        }
+        assert_eq!(
+            report.epochs.last().map(|e| e.wall_tick_end),
+            Some(report.total_time()),
+            "wall clock must end at the headline total"
+        );
+        for e in &report.epochs {
+            assert_eq!(
+                e.wall_tick_end - e.wall_tick_start,
+                (e.tick_end - e.tick_start) + e.migration_ticks,
+                "epoch {}: wall window != sim window + stall",
+                e.epoch
+            );
+            assert_eq!(e.migration_ticks, e.refine.as_ref().map_or(0, |r| r.migration_ticks));
+            let wall_window = (e.wall_tick_end - e.wall_tick_start).max(1);
+            assert_eq!(
+                e.throughput.to_bits(),
+                (e.events_processed as f64 / wall_window as f64).to_bits(),
+                "epoch {}: throughput must divide by the stalled window",
+                e.epoch
+            );
+        }
+        // total_time, windows, and throughput pinned together.
+        let summed: u64 = report
+            .epochs
+            .iter()
+            .map(|e| e.wall_tick_end - e.wall_tick_start)
+            .sum();
+        assert_eq!(summed, report.total_time());
+    }
+
+    /// `CompareReport::speedup` on the degenerate empty workload (both
+    /// arms drain in zero ticks) is defined as 1.0, not 0.0.
+    #[test]
+    fn speedup_of_empty_workload_is_one() {
+        let (g, machines, _) = setup(13);
+        let mut rng = Pcg32::new(14);
+        let initial = grow_partition(&g, &machines, &mut rng);
+        let report = compare_frozen_vs_rebalanced(
+            &g,
+            &machines,
+            &initial,
+            &[], // no injections: both arms drain instantly
+            WeightEstimator::instantaneous(),
+            &options(150),
+        );
+        assert_eq!(report.frozen.total_time(), 0);
+        assert_eq!(report.rebalanced.total_time(), 0);
+        assert_eq!(report.speedup(), 1.0);
+        // The bare-totals helper agrees with the method everywhere.
+        assert_eq!(CompareReport::speedup_of(0, 0), 1.0);
+        assert_eq!(CompareReport::speedup_of(100, 50), 2.0);
+        assert_eq!(CompareReport::speedup_of(7, 0), 7.0);
+    }
+
+    /// The in-game charge prices moves inside the closed loop: every
+    /// refinement epoch satisfies the augmented-descent guarantee
+    /// `potential_after + migration_cost <= potential_before`, the
+    /// per-epoch churn bound `transfers <= ΔΦ / (2·c_mig)` (framework A
+    /// default), and `migration_cost` bills exactly charge × transfers.
+    /// (The prohibitive-charge freeze and the free-vs-charged triple
+    /// are covered end-to-end by
+    /// `integration_dynamic::in_game_charge_reduces_churn_end_to_end`.)
+    #[test]
+    fn in_game_charge_damps_closed_loop_churn() {
+        let (g, machines, scenario) = setup(15);
+        let mut rng = Pcg32::new(16);
+        let mut opts = options(150);
+        opts.migration_charge = 50.0;
+        let charged = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(charged.refinements() > 0, "loop never refined; test is vacuous");
+        for e in &charged.epochs {
+            if let Some(r) = &e.refine {
+                assert!(
+                    r.potential_after + r.migration_cost
+                        <= r.potential_before + 1e-9 * (1.0 + r.potential_before.abs()),
+                    "epoch {}: augmented descent violated: {} + {} > {}",
+                    e.epoch,
+                    r.potential_after,
+                    r.migration_cost,
+                    r.potential_before
+                );
+                assert_eq!(r.migration_cost, 50.0 * r.transfers as f64);
+                // Churn bound theorem: each move drops the raw
+                // potential by >= 2*c_mig under framework A.
+                assert!(
+                    r.transfers as f64
+                        <= (r.potential_before - r.potential_after) / (2.0 * 50.0)
+                            * (1.0 + 1e-9)
+                            + 1e-9,
+                    "epoch {}: churn bound violated",
+                    e.epoch
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn max_refinements_caps_the_loop() {
+        let (g, machines, scenario) = setup(7);
+        let mut rng = Pcg32::new(8);
+        let mut opts = options(100);
+        opts.max_refinements = 2;
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(report.refinements() <= 2);
+        assert!(!report.stats.truncated);
+    }
+
+    #[test]
+    fn distributed_backend_matches_sequential_loop() {
+        let (g, machines, scenario) = setup(9);
+        let mut opts = options(200);
+        let mut rng = Pcg32::new(10);
+        let initial = grow_partition(&g, &machines, &mut rng);
+
+        let seq = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial.clone(),
+            scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            opts.clone(),
+        )
+        .run_owned();
+
+        opts.backend = RefineBackend::Distributed;
+        let dist = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial,
+            scenario.injections.clone(),
+            WeightEstimator::instantaneous(),
+            opts,
+        )
+        .run_owned();
+
+        // Same deterministic turn order => the whole closed loop agrees.
+        assert_eq!(seq.stats.ticks, dist.stats.ticks);
+        assert_eq!(seq.transfers, dist.transfers);
+        assert_eq!(seq.epochs.len(), dist.epochs.len());
+        // Only the message-passing backend accumulates sync overhead.
+        assert!(seq.total_overhead().is_none());
+        let overhead = dist.total_overhead().expect("distributed epochs measure overhead");
+        assert!(overhead.total_messages() > 0);
+        for (a, b) in seq.epochs.iter().zip(&dist.epochs) {
+            match (&a.refine, &b.refine) {
+                (Some(ra), Some(rb)) => {
+                    assert_eq!(ra.transfers, rb.transfers);
+                    assert!((ra.potential_after - rb.potential_after).abs() < 1e-6);
+                }
+                (None, None) => {}
+                other => panic!("refinement schedule diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn ewma_smooths_toward_new_signal() {
+        let raw1 = MeasuredWeights {
+            node_weights: vec![10.0, 0.0],
+            edge_weights: vec![(0, 1, 4.0)],
+        };
+        let raw2 = MeasuredWeights {
+            node_weights: vec![0.0, 10.0],
+            edge_weights: vec![(0, 1, 0.0)],
+        };
+        let mut est = WeightEstimator::ewma(0.5);
+        let first = est.estimate(&raw1);
+        assert_eq!(first.node_weights, vec![10.0, 0.0], "first call primes");
+        let second = est.estimate(&raw2);
+        // Halfway between the two signals.
+        assert!((second.node_weights[0] - 5.0).abs() < 1e-12);
+        assert!((second.node_weights[1] - 5.0).abs() < 1e-12);
+        assert!((second.edge_weights[0].2 - 2.0).abs() < 1e-12);
+        // Repeated exposure converges to the new signal.
+        for _ in 0..20 {
+            est.estimate(&raw2);
+        }
+        let converged = est.estimate(&raw2);
+        assert!((converged.node_weights[1] - 10.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn hysteresis_holds_output_inside_deadband() {
+        let raw = MeasuredWeights {
+            node_weights: vec![10.0],
+            edge_weights: vec![(0, 1, 10.0)],
+        };
+        let wiggle = MeasuredWeights {
+            node_weights: vec![10.5],
+            edge_weights: vec![(0, 1, 10.5)],
+        };
+        let jump = MeasuredWeights {
+            node_weights: vec![30.0],
+            edge_weights: vec![(0, 1, 30.0)],
+        };
+        let mut est = WeightEstimator::hysteresis(1.0, 0.25);
+        let a = est.estimate(&raw);
+        assert_eq!(a.node_weights[0], 10.0);
+        // 5% wiggle stays inside the 25% dead band: output frozen.
+        let b = est.estimate(&wiggle);
+        assert_eq!(b.node_weights[0], 10.0);
+        assert_eq!(b.edge_weights[0].2, 10.0);
+        // A 3x jump breaks out.
+        let c = est.estimate(&jump);
+        assert_eq!(c.node_weights[0], 30.0);
+        assert_eq!(c.edge_weights[0].2, 30.0);
+    }
+
+    #[test]
+    fn charge_transfers_derives_the_in_game_price() {
+        let opts = DynamicOptions::default().charge_transfers(3, 2.5);
+        assert_eq!(opts.ticks_per_transfer, 3);
+        assert_eq!(opts.migration_charge, 7.5);
+        let free = DynamicOptions::default().charge_transfers(5, 0.0);
+        assert_eq!(free.ticks_per_transfer, 5);
+        assert_eq!(free.migration_charge, 0.0);
+    }
+
+    /// The driver-level checkpoint substrate: a snapshot taken at an
+    /// epoch boundary re-encodes byte-identically through a decode,
+    /// and a driver resumed from it finishes the run with exactly the
+    /// same cumulative stats as the uninterrupted original.
+    #[test]
+    fn driver_snapshot_restores_and_continues_identically() {
+        let (g, machines, scenario) = setup(21);
+        let mut rng = Pcg32::new(22);
+        let initial = grow_partition(&g, &machines, &mut rng);
+        let opts = options(150);
+        let mut live = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial,
+            scenario.injections.clone(),
+            WeightEstimator::ewma(0.5),
+            opts.clone(),
+        );
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+
+        let snap = live.snapshot();
+        let bytes = snap.encode();
+        let decoded = Snapshot::decode(&bytes).expect("decode");
+        assert_eq!(bytes, decoded.encode(), "save -> load -> save must be byte-identical");
+        assert!(decoded.estimator.is_some(), "two epochs must prime the EWMA");
+
+        let g2 = decoded.build_graph();
+        let mut restored =
+            DynamicDriver::from_snapshot(&g2, &decoded, WeightEstimator::ewma(0.5), opts);
+        let restored_report = restored.run();
+        let live_report = live.run();
+        assert_eq!(live_report.stats, restored_report.stats);
+        assert_eq!(live_report.transfers, restored_report.transfers);
+        assert_eq!(live_report.migration_ticks, restored_report.migration_ticks);
+        assert_eq!(live_report.total_time(), restored_report.total_time());
+        // The live run keeps its pre-checkpoint epoch reports; the
+        // restored run renumbers from the checkpoint. The tails match.
+        assert_eq!(live_report.epochs.len(), restored_report.epochs.len() + 2);
+        for (a, b) in live_report.epochs[2..].iter().zip(&restored_report.epochs) {
+            assert_eq!(a.tick_start, b.tick_start);
+            assert_eq!(a.tick_end, b.tick_end);
+            assert_eq!(a.events_processed, b.events_processed);
+            assert_eq!(a.refine.is_some(), b.refine.is_some());
+            if let (Some(ra), Some(rb)) = (&a.refine, &b.refine) {
+                assert_eq!(ra.transfers, rb.transfers);
+                assert_eq!(ra.potential_after.to_bits(), rb.potential_after.to_bits());
+            }
+        }
+    }
+
+    /// `checkpoint_dir` materializes one snapshot per epoch boundary,
+    /// each readable and byte-stable through a decode/encode cycle.
+    #[test]
+    fn checkpoint_dir_writes_epoch_snapshots() {
+        let dir = std::env::temp_dir().join(format!("gtip-ckpt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (g, machines, scenario) = setup(23);
+        let mut rng = Pcg32::new(24);
+        let mut opts = options(150);
+        opts.checkpoint_dir = Some(dir.clone());
+        let report = run_closed_loop(
+            &g,
+            &machines,
+            scenario.injections,
+            WeightEstimator::instantaneous(),
+            &opts,
+            &mut rng,
+        );
+        assert!(report.refinements() > 0);
+        let first = dir.join("epoch-0000.snap");
+        let snap = Snapshot::read_from(&first).expect("first epoch checkpoint must exist");
+        assert_eq!(snap.epoch, 0);
+        assert_eq!(snap.machine_count(), machines.count());
+        assert_eq!(snap.encode(), std::fs::read(&first).unwrap(), "file is canonical bytes");
+        // One file per epoch boundary that was checkpointed.
+        let count = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(count, report.epochs.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A run resumed from a snapshot into the *same* `checkpoint_dir`
+    /// continues the `epoch-NNNN.snap` sequence from the cumulative
+    /// epoch counter instead of renumbering from zero and silently
+    /// overwriting the original run's files.
+    #[test]
+    fn restored_run_extends_checkpoint_sequence_without_overwriting() {
+        let dir = std::env::temp_dir().join(format!("gtip-ckpt-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (g, machines, scenario) = setup(29);
+        let mut rng = Pcg32::new(30);
+        let initial = grow_partition(&g, &machines, &mut rng);
+        let mut opts = options(150);
+        opts.checkpoint_dir = Some(dir.clone());
+        let mut live = DynamicDriver::new(
+            &g,
+            machines.clone(),
+            initial,
+            scenario.injections.clone(),
+            WeightEstimator::ewma(0.5),
+            opts.clone(),
+        );
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+        assert!(live.try_run_epoch().unwrap(), "fixture drained before the checkpoint");
+        let snap = live.snapshot();
+        assert_eq!(snap.epoch, 2, "two boundaries passed");
+        let originals: Vec<Vec<u8>> = (0..2)
+            .map(|e| std::fs::read(dir.join(format!("epoch-{e:04}.snap"))).expect("original snap"))
+            .collect();
+
+        let g2 = snap.build_graph();
+        let mut restored =
+            DynamicDriver::from_snapshot(&g2, &snap, WeightEstimator::ewma(0.5), opts);
+        let report = restored.run();
+        assert!(!report.epochs.is_empty(), "the resumed run must do work");
+        assert!(
+            dir.join("epoch-0002.snap").exists(),
+            "the resumed run's first boundary continues the cumulative sequence"
+        );
+        for (e, bytes) in originals.iter().enumerate() {
+            assert_eq!(
+                &std::fs::read(dir.join(format!("epoch-{e:04}.snap"))).unwrap(),
+                bytes,
+                "the original run's epoch-{e:04}.snap must survive the resumed run"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn estimator_and_backend_parse_from_strings() {
+        assert_eq!("ewma".parse::<EstimatorKind>().unwrap(), EstimatorKind::Ewma);
+        assert_eq!(
+            "hysteresis".parse::<EstimatorKind>().unwrap(),
+            EstimatorKind::Hysteresis
+        );
+        assert!("nope".parse::<EstimatorKind>().is_err());
+        assert_eq!("sequential".parse::<RefineBackend>().unwrap(), RefineBackend::Sequential);
+        assert_eq!("dist".parse::<RefineBackend>().unwrap(), RefineBackend::Distributed);
+        assert!("p2p".parse::<RefineBackend>().is_err());
+    }
+}

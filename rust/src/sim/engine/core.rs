@@ -1,60 +1,10 @@
-//! The tick-driven optimistic simulation engine (paper Fig. 6).
-//!
-//! Owns all LPs, the LP-to-machine assignment, and the wall-clock loop:
-//!
-//! 1. injections scheduled for this tick arrive,
-//! 2. idle LPs select + start their lowest-timestamped ready event
-//!    (stragglers roll back, anti-messages cascade),
-//! 3. busy LPs complete; completed forwarding events flood to unseen
-//!    neighbors (cross-machine forwards pay the `event-tick` delay),
-//! 4. buffered messages deliver, GVT updates, fossils collect.
-//!
-//! Processing an event occupies the LP for
-//! `ceil(resident_LPs × base_time / (w_k · K))` ticks — machine speed
-//! inversely proportional to resident LP count (§6.1), generalized to
-//! heterogeneous speeds `w_k`.
-//!
-//! # Hot-path architecture (DESIGN.md §3, §11)
-//!
-//! Per-tick cost scales with *activity*, not graph size, and the data
-//! layout is cache-conscious struct-of-arrays:
-//!
-//! * the **active-LP worklist** is a fixed `u64`-word bitset
-//!   ([`FixedBitset`]): membership is one bit test, the per-tick merge
-//!   of newly activated LPs is a word-OR, and every phase walks set
-//!   bits in ascending order (`trailing_zeros` + clear-lowest-bit).
-//!   Idle-and-empty LPs cost zero. Fossil collection on idle LPs is
-//!   deferred and caught up when a message reactivates them (GVT is
-//!   monotone, so late collection removes the same entries);
-//! * **SoA scalar columns** indexed by `NodeId` shadow the per-LP hot
-//!   scalars: `busy_until` (absolute completion tick, `MAX` = idle),
-//!   `next_event_at` (earliest processable tick when idle, `MAX` =
-//!   none) and `gvt_min` (the LP's GVT contribution, `MAX` = none).
-//!   Tick fast-forward and GVT computation stream these contiguous
-//!   columns instead of chasing `Lp` structs; every LP mutation site
-//!   refreshes the mutated LP's column entries ([`column_values`]);
-//! * **occupancy costs are cached per machine** (`cost_normal`,
-//!   `cost_rollback`), rebuilt only when the assignment changes —
-//!   the start phase does two array loads instead of float math;
-//! * **incremental GVT**: the undelivered-injection minimum comes from
-//!   a prefix-min array computed once at construction — per-tick GVT
-//!   is O(active), never O(N + injections);
-//! * **tick fast-forward**: when every active LP is counting down busy
-//!   time or transfer delays and no injection is due, the engine jumps
-//!   `Δ = min(remaining)` wall ticks in one step. Stats, traces and
-//!   epoch counters advance by Δ; results are bit-identical to stepping
-//!   the Δ no-op ticks one by one (nothing starts, completes, arrives,
-//!   or moves GVT inside the window by construction of Δ);
-//! * **parallel execution by contiguous index ranges**
-//!   (`SimOptions::parallelism`): the active bitset's words are split
-//!   into per-worker ranges balanced by popcount, so each scoped
-//!   worker owns a contiguous slice of the LP array (and of the SoA
-//!   columns) and streams it in barrier-separated sub-phases
-//!   (start | complete | fan-out | retire). Per-worker outboxes merge
-//!   in deterministic sender order (stable sort by source LP), making
-//!   parallel runs **bit-identical** to sequential ones — the §5
-//!   determinism contract extends to `parallelism > 1` (see DESIGN.md
-//!   §5 and the equivalence suite).
+//! The engine core: the occupancy/transfer cost helpers, the bitset
+//! worklist, the raw-pointer parallel phase-1 machinery, and
+//! [`SimEngine`] itself — construction, the tick loop (sequential and
+//! parallel), GVT, fossil collection, and snapshot capture/restore.
+//! The configuration and measurement types it exchanges with drivers
+//! ([`SimOptions`], [`SimStats`], [`Injection`], [`EpochCounters`])
+//! live in the parent module.
 
 use std::sync::Barrier;
 
@@ -64,128 +14,7 @@ use crate::sim::event::{Event, EventKind, SimTime, WallTime};
 use crate::sim::lp::{Lp, StartOutcome};
 use crate::util::stats::Trace;
 
-/// Static engine options.
-#[derive(Debug, Clone)]
-pub struct SimOptions {
-    /// Base process time of a normal event (wall ticks).
-    pub base_process_time: WallTime,
-    /// Base process time of a rollback event.
-    pub rollback_process_time: WallTime,
-    /// Wall-clock delay of a cross-machine event transfer.
-    pub inter_machine_delay: WallTime,
-    /// Wall-clock delay of an intra-machine event transfer.
-    pub intra_machine_delay: WallTime,
-    /// Simulation-time latency per flood hop.
-    pub hop_latency: SimTime,
-    /// Record machine-load traces every this many ticks (0 = never).
-    pub trace_every: WallTime,
-    /// Safety cap on wall ticks.
-    pub max_ticks: WallTime,
-    /// Worker threads for per-machine tick execution (0/1 = sequential).
-    /// Any value produces bit-identical results; see DESIGN.md §5.
-    pub parallelism: usize,
-    /// Minimum active-LP count before a tick is worth parallelizing:
-    /// the parallel path spawns scoped workers per tick, so below this
-    /// the spawn + barrier overhead dominates the tick's work. Purely a
-    /// scheduling knob: results are identical either way.
-    pub parallel_min_active: usize,
-}
-
-impl Default for SimOptions {
-    fn default() -> Self {
-        SimOptions {
-            base_process_time: 1,
-            rollback_process_time: 1,
-            inter_machine_delay: 3,
-            intra_machine_delay: 0,
-            hop_latency: 1,
-            trace_every: 0,
-            max_ticks: 2_000_000,
-            parallelism: 1,
-            parallel_min_active: 1024,
-        }
-    }
-}
-
-/// Aggregate statistics of a run.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct SimStats {
-    /// Total wall-clock ticks consumed so far — the paper's headline
-    /// *simulation time* metric.
-    pub ticks: WallTime,
-    pub events_processed: u64,
-    pub events_forwarded: u64,
-    pub cross_machine_forwards: u64,
-    pub rollbacks: u64,
-    pub antimessages_sent: u64,
-    /// True if the run hit `max_ticks` before draining.
-    pub truncated: bool,
-}
-
-/// A scheduled packet injection: `(wall_tick, lp, event)`.
-#[derive(Debug, Clone, Copy)]
-pub struct Injection {
-    pub at_tick: WallTime,
-    pub lp: NodeId,
-    pub event: Event,
-}
-
-/// Per-LP / per-edge activity accumulated since the last harvest — the
-/// measured load signals (§6.1) the closed-loop rebalancer
-/// (`sim::dynamic`) feeds to its weight estimators. Global [`SimStats`]
-/// counters are cumulative; these reset at every
-/// [`SimEngine::take_epoch_counters`] call.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
-pub struct EpochCounters {
-    /// Wall ticks covered by this window.
-    pub ticks: WallTime,
-    /// Events completed per LP (including rollback processing).
-    pub events_by_lp: Vec<u64>,
-    /// Rollback episodes per LP.
-    pub rollbacks_by_lp: Vec<u64>,
-    /// Cross-machine forwards originated per LP.
-    pub cross_forwards_by_lp: Vec<u64>,
-    /// Forwards per directed half-edge, aligned with the graph's CSR
-    /// slots (`Graph::row_offset(u) + k` = `u`'s `k`-th neighbor) — a
-    /// flat add on the hot path instead of a hash lookup.
-    pub forwards_by_half_edge: Vec<u64>,
-}
-
-impl EpochCounters {
-    pub(crate) fn for_graph(graph: &Graph) -> Self {
-        let n = graph.node_count();
-        EpochCounters {
-            ticks: 0,
-            events_by_lp: vec![0; n],
-            rollbacks_by_lp: vec![0; n],
-            cross_forwards_by_lp: vec![0; n],
-            forwards_by_half_edge: vec![0; graph.half_edge_count()],
-        }
-    }
-
-    /// Forwards that crossed edge `{u, v}` (either direction) during
-    /// the window.
-    pub fn forwards_on(&self, graph: &Graph, u: NodeId, v: NodeId) -> u64 {
-        let uv = graph.half_edge_index(u, v).map_or(0, |s| self.forwards_by_half_edge[s]);
-        let vu = graph.half_edge_index(v, u).map_or(0, |s| self.forwards_by_half_edge[s]);
-        uv + vu
-    }
-
-    /// Total events completed during the window.
-    pub fn events_total(&self) -> u64 {
-        self.events_by_lp.iter().sum()
-    }
-
-    /// Total rollback episodes during the window.
-    pub fn rollbacks_total(&self) -> u64 {
-        self.rollbacks_by_lp.iter().sum()
-    }
-
-    /// Total cross-machine forwards during the window.
-    pub fn cross_forwards_total(&self) -> u64 {
-        self.cross_forwards_by_lp.iter().sum()
-    }
-}
+use super::{EpochCounters, Injection, SimOptions, SimStats};
 
 /// Busy time charged on machine `k` for an event of kind `kind`:
 /// `resident × base / (w_k · K)`, rounded up, minimum 1. Free function
@@ -1247,382 +1076,5 @@ impl<'g> SimEngine<'g> {
             self.stats.truncated = true;
         }
         self.stats.clone()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::graph::GraphBuilder;
-
-    fn line_graph(n: usize) -> Graph {
-        let mut b = GraphBuilder::with_nodes(n);
-        for i in 0..n - 1 {
-            b.add_edge(i, i + 1, 1.0);
-        }
-        b.build()
-    }
-
-    fn engine_on(
-        graph: &Graph,
-        k: usize,
-        assignment: Vec<usize>,
-        injections: Vec<Injection>,
-        options: SimOptions,
-    ) -> SimEngine<'_> {
-        let machines = MachineConfig::homogeneous(k);
-        let part = Partition::from_assignment(graph, k, assignment);
-        SimEngine::new(graph, machines, part, options, injections)
-    }
-
-    #[test]
-    fn single_event_drains() {
-        let g = line_graph(3);
-        let inj =
-            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) }];
-        let mut e = engine_on(&g, 1, vec![0, 0, 0], inj, SimOptions::default());
-        let stats = e.run_to_completion();
-        assert!(!stats.truncated);
-        assert_eq!(stats.events_processed, 1);
-        assert_eq!(stats.events_forwarded, 0);
-        assert!(e.drained());
-    }
-
-    #[test]
-    fn flood_covers_hop_limit() {
-        // Line 0-1-2-3-4, flood from node 0 with 2 hops: reaches 0,1,2.
-        let g = line_graph(5);
-        let inj =
-            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 2) }];
-        let mut e = engine_on(&g, 1, vec![0; 5], inj, SimOptions::default());
-        let stats = e.run_to_completion();
-        assert!(!stats.truncated);
-        assert_eq!(stats.events_processed, 3, "nodes 0,1,2 each process once");
-        assert_eq!(stats.events_forwarded, 2);
-        assert_eq!(stats.rollbacks, 0);
-    }
-
-    #[test]
-    fn flood_branches_to_all_unseen_neighbors() {
-        // Star: center 0 with 4 leaves; 1 hop floods to all leaves.
-        let mut b = GraphBuilder::with_nodes(5);
-        for leaf in 1..5 {
-            b.add_edge(0, leaf, 1.0);
-        }
-        let g = b.build();
-        let inj =
-            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 1) }];
-        let mut e = engine_on(&g, 1, vec![0; 5], inj, SimOptions::default());
-        let stats = e.run_to_completion();
-        assert_eq!(stats.events_processed, 5);
-        assert_eq!(stats.events_forwarded, 4);
-    }
-
-    #[test]
-    fn no_duplicate_delivery_on_cycles() {
-        // Triangle: flood with large hop budget must visit each LP once.
-        let mut b = GraphBuilder::with_nodes(3);
-        b.add_edge(0, 1, 1.0).add_edge(1, 2, 1.0).add_edge(0, 2, 1.0);
-        let g = b.build();
-        let inj =
-            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 10) }];
-        let mut e = engine_on(&g, 1, vec![0; 3], inj, SimOptions::default());
-        let stats = e.run_to_completion();
-        assert_eq!(stats.events_processed, 3, "each LP exactly once");
-    }
-
-    #[test]
-    fn cross_machine_forwards_counted_and_slower() {
-        let g = line_graph(4);
-        let inj = || vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 3) }];
-        // Two residents per machine in both configs so occupancy costs
-        // match and only the transfer delays differ.
-        // Contiguous halves: one crossing (edge 1-2).
-        let mut same = engine_on(&g, 2, vec![0, 0, 1, 1], inj(), SimOptions::default());
-        let s1 = same.run_to_completion();
-        assert_eq!(s1.cross_machine_forwards, 1);
-        // Alternating machines: every forward crosses.
-        let mut alt = engine_on(&g, 2, vec![0, 1, 0, 1], inj(), SimOptions::default());
-        let s2 = alt.run_to_completion();
-        assert_eq!(s2.cross_machine_forwards, 3);
-        assert!(
-            s2.ticks > s1.ticks,
-            "cross-machine delays must slow the run: {} vs {}",
-            s2.ticks,
-            s1.ticks
-        );
-    }
-
-    #[test]
-    fn occupancy_scales_with_resident_lps() {
-        // 10 LPs on one machine: each event takes 10 ticks of busy time,
-        // so a single flood over a line is much slower than with 2 LPs.
-        let g = line_graph(10);
-        let inj = || vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) }];
-        let mut crowded = engine_on(&g, 1, vec![0; 10], inj(), SimOptions::default());
-        let c = crowded.run_to_completion();
-        // The single event costs ceil(10×1/1) = 10 busy ticks.
-        assert!(c.ticks >= 10, "crowded machine too fast: {} ticks", c.ticks);
-    }
-
-    #[test]
-    fn straggler_causes_rollback_cross_machine() {
-        // LP1 receives a fast local event chain advancing its clock, then
-        // a delayed cross-machine event with an older timestamp arrives.
-        let mut b = GraphBuilder::with_nodes(3);
-        b.add_edge(0, 1, 1.0).add_edge(1, 2, 1.0);
-        let g = b.build();
-        let injections = vec![
-            // Thread 1: starts at LP2 (same machine as LP1), timestamp 10,
-            // floods to LP1 quickly.
-            Injection { at_tick: 0, lp: 2, event: Event::injection(1, 10, 1) },
-            // Thread 2: starts at LP0 (other machine), OLD timestamp 1,
-            // floods to LP1 but arrives late due to inter-machine delay.
-            Injection { at_tick: 0, lp: 0, event: Event::injection(2, 1, 1) },
-        ];
-        let opts = SimOptions { inter_machine_delay: 8, ..Default::default() };
-        let mut e = engine_on(&g, 2, vec![1, 0, 0], injections, opts);
-        let stats = e.run_to_completion();
-        assert!(stats.rollbacks > 0, "expected a straggler rollback; stats: {stats:?}");
-        assert!(!stats.truncated);
-    }
-
-    #[test]
-    fn repartition_mid_run_changes_delays() {
-        let g = line_graph(6);
-        let inj =
-            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 5) }];
-        let machines = MachineConfig::homogeneous(2);
-        let part = Partition::from_assignment(&g, 2, vec![0, 1, 0, 1, 0, 1]);
-        let mut e = SimEngine::new(&g, machines, part, SimOptions::default(), inj);
-        // After a few steps, collapse everything onto machine 0.
-        for _ in 0..3 {
-            e.step();
-        }
-        let better = Partition::from_assignment(&g, 2, vec![0; 6]);
-        e.set_partition(better);
-        let stats = e.run_to_completion();
-        assert!(!stats.truncated);
-        assert!(e.drained());
-    }
-
-    #[test]
-    fn load_traces_recorded() {
-        let g = line_graph(4);
-        let inj =
-            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 3) }];
-        let opts = SimOptions { trace_every: 1, ..Default::default() };
-        let mut e = engine_on(&g, 2, vec![0, 0, 1, 1], inj, opts);
-        let _ = e.run_to_completion();
-        assert_eq!(e.load_traces().len(), 2);
-        assert!(e.load_traces()[0].len() > 0);
-    }
-
-    #[test]
-    fn gvt_monotone_nondecreasing() {
-        let g = line_graph(8);
-        let injections: Vec<Injection> = (0..4)
-            .map(|t| Injection {
-                at_tick: t * 2,
-                lp: (t as usize) * 2,
-                event: Event::injection(t + 1, t * 5, 2),
-            })
-            .collect();
-        let mut e =
-            engine_on(&g, 2, vec![0, 0, 0, 0, 1, 1, 1, 1], injections, SimOptions::default());
-        let mut last_gvt = 0;
-        while e.step() {
-            assert!(e.gvt() >= last_gvt, "GVT regressed: {} -> {}", last_gvt, e.gvt());
-            last_gvt = e.gvt();
-        }
-    }
-
-    #[test]
-    fn epoch_counters_track_activity_and_reset() {
-        let g = line_graph(4);
-        let inj =
-            vec![Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 3) }];
-        let mut e = engine_on(&g, 2, vec![0, 0, 1, 1], inj, SimOptions::default());
-        let stats = e.run_to_completion();
-        let c = e.epoch_counters();
-        assert_eq!(c.events_total(), stats.events_processed);
-        assert_eq!(c.cross_forwards_total(), stats.cross_machine_forwards);
-        assert_eq!(
-            c.forwards_on(&g, 0, 1) + c.forwards_on(&g, 1, 2) + c.forwards_on(&g, 2, 3),
-            stats.events_forwarded
-        );
-        assert_eq!(c.ticks, stats.ticks);
-        let taken = e.take_epoch_counters();
-        assert_eq!(taken.events_total(), stats.events_processed);
-        assert_eq!(e.epoch_counters().events_total(), 0);
-        assert_eq!(e.epoch_counters().ticks, 0);
-        assert!(e.epoch_counters().forwards_by_half_edge.iter().all(|&x| x == 0));
-    }
-
-    #[test]
-    fn late_injections_arrive() {
-        let g = line_graph(3);
-        let injections = vec![
-            Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) },
-            Injection { at_tick: 50, lp: 2, event: Event::injection(2, 100, 0) },
-        ];
-        let mut e = engine_on(&g, 1, vec![0; 3], injections, SimOptions::default());
-        let stats = e.run_to_completion();
-        assert_eq!(stats.events_processed, 2);
-        assert!(stats.ticks > 50);
-    }
-
-    #[test]
-    fn fast_forward_skips_idle_gaps_in_few_steps() {
-        // One event at tick 0, the next at tick 10_000: the gap must be
-        // jumped, not walked — the whole run takes a handful of steps.
-        let g = line_graph(3);
-        let injections = vec![
-            Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) },
-            Injection { at_tick: 10_000, lp: 2, event: Event::injection(2, 9_000, 0) },
-        ];
-        let mut e = engine_on(&g, 1, vec![0; 3], injections, SimOptions::default());
-        let mut steps = 0u64;
-        while e.step() {
-            steps += 1;
-            assert!(steps < 100, "fast-forward failed to engage");
-        }
-        let stats = e.stats().clone();
-        assert_eq!(stats.events_processed, 2);
-        assert!(stats.ticks > 10_000);
-        assert!(!e.run_to_completion().truncated);
-    }
-
-    #[test]
-    fn step_bounded_respects_the_boundary() {
-        let g = line_graph(3);
-        let injections = vec![
-            Injection { at_tick: 0, lp: 0, event: Event::injection(1, 0, 0) },
-            Injection { at_tick: 5_000, lp: 2, event: Event::injection(2, 4_000, 0) },
-        ];
-        let mut e = engine_on(&g, 1, vec![0; 3], injections, SimOptions::default());
-        // Run with a boundary at 1_000: no jump may cross it.
-        while e.stats().ticks < 1_000 && e.step_bounded(1_000) {}
-        assert_eq!(e.stats().ticks, 1_000, "jump overshot the boundary");
-        assert!(!e.drained());
-    }
-
-    #[test]
-    fn capture_restore_mid_run_continues_bit_identically() {
-        let g = line_graph(10);
-        let injections: Vec<Injection> = (0..6)
-            .map(|t| Injection {
-                at_tick: t * 3,
-                lp: (t as usize * 2) % 10,
-                event: Event::injection(t + 1, t * 7, 3),
-            })
-            .collect();
-        let assignment: Vec<usize> = (0..10).map(|i| i % 2).collect();
-        let mut uninterrupted =
-            engine_on(&g, 2, assignment.clone(), injections.clone(), SimOptions::default());
-        let mut live = engine_on(&g, 2, assignment, injections, SimOptions::default());
-        for _ in 0..7 {
-            uninterrupted.step();
-            live.step();
-        }
-        let state = live.capture_state();
-        let machines = MachineConfig::homogeneous(2);
-        let mut restored = SimEngine::from_state(&g, machines, SimOptions::default(), state);
-        assert_eq!(restored.stats(), live.stats());
-        assert_eq!(restored.gvt(), live.gvt());
-        let a = uninterrupted.run_to_completion();
-        let b = restored.run_to_completion();
-        assert_eq!(a, b, "restored run diverged from uninterrupted run");
-        assert_eq!(uninterrupted.gvt(), restored.gvt());
-        assert_eq!(uninterrupted.epoch_counters(), restored.epoch_counters());
-    }
-
-    #[test]
-    fn capture_of_restored_engine_is_identical() {
-        let g = line_graph(8);
-        let injections: Vec<Injection> = (0..5)
-            .map(|t| Injection {
-                at_tick: t,
-                lp: (t as usize) % 8,
-                event: Event::injection(t + 1, t * 4, 2),
-            })
-            .collect();
-        let mut e =
-            engine_on(&g, 2, (0..8).map(|i| i % 2).collect(), injections, SimOptions::default());
-        for _ in 0..5 {
-            e.step();
-        }
-        let state = e.capture_state();
-        let restored =
-            SimEngine::from_state(&g, MachineConfig::homogeneous(2), SimOptions::default(), state);
-        let again = restored.capture_state();
-        let state2 = e.capture_state();
-        assert_eq!(state2.stats, again.stats);
-        assert_eq!(state2.gvt, again.gvt);
-        assert_eq!(state2.assignment, again.assignment);
-        assert_eq!(state2.fossil_cursor, again.fossil_cursor);
-        assert_eq!(state2.lps.len(), again.lps.len());
-        for (a, b) in state2.lps.iter().zip(again.lps.iter()) {
-            assert_eq!(a.pending.len(), b.pending.len());
-            for (&(ea, ra), &(eb, rb)) in a.pending.iter().zip(b.pending.iter()) {
-                assert_eq!(
-                    (ea.thread, ea.time, ea.kind, ea.count, ra),
-                    (eb.thread, eb.time, eb.kind, eb.count, rb)
-                );
-            }
-            assert_eq!(a.seen, b.seen);
-            assert_eq!(a.local_time, b.local_time);
-            assert_eq!(a.rollbacks, b.rollbacks);
-        }
-    }
-
-    #[test]
-    fn parallel_engine_matches_sequential() {
-        let g = line_graph(12);
-        let injections: Vec<Injection> = (0..8)
-            .map(|t| Injection {
-                at_tick: t,
-                lp: (t as usize * 3) % 12,
-                event: Event::injection(t + 1, t * 2, 4),
-            })
-            .collect();
-        let run = |parallelism: usize| {
-            let opts =
-                SimOptions { parallelism, parallel_min_active: 0, ..Default::default() };
-            let mut e =
-                engine_on(&g, 3, (0..12).map(|i| i % 3).collect(), injections.clone(), opts);
-            let stats = e.run_to_completion();
-            (stats, e.gvt(), e.take_epoch_counters())
-        };
-        let seq = run(1);
-        let par = run(4);
-        assert_eq!(seq, par, "parallel run diverged from sequential");
-    }
-
-    #[test]
-    fn parallel_ranges_cover_multiword_worklists() {
-        // 150 LPs span three bitset words, so the popcount-balanced
-        // range split actually produces distinct non-empty per-worker
-        // ranges (the 12-LP test above exercises the padding path).
-        let g = line_graph(150);
-        let injections: Vec<Injection> = (0..24)
-            .map(|t| Injection {
-                at_tick: t % 5,
-                lp: (t as usize * 13) % 150,
-                event: Event::injection(t + 1, t * 3, 5),
-            })
-            .collect();
-        let run = |parallelism: usize| {
-            let opts =
-                SimOptions { parallelism, parallel_min_active: 0, ..Default::default() };
-            let mut e =
-                engine_on(&g, 3, (0..150).map(|i| i % 3).collect(), injections.clone(), opts);
-            let stats = e.run_to_completion();
-            (stats, e.gvt(), e.take_epoch_counters())
-        };
-        let seq = run(1);
-        for p in [2usize, 3] {
-            assert_eq!(seq, run(p), "parallelism {p} diverged from sequential");
-        }
     }
 }

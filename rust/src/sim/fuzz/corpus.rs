@@ -1,0 +1,132 @@
+//! Corpus persistence: replayable JSON fuzz cases ([`FuzzCase`]) under
+//! `results/fuzz_corpus/`, loaded in deterministic file-name order and
+//! saved with the exact fixture and evaluation settings each finding
+//! scored under.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::sim::scenario::DriftSchedule;
+use crate::util::bench::{parse_json, JsonVal};
+
+use super::{EvalOptions, FuzzFixture, FuzzOutcome, Objectives, CORPUS_FORMAT};
+
+/// One persisted corpus entry: the fixture it scored on, the schedule
+/// genome, the evaluation settings the scores were measured under, and
+/// (for fuzzer-found entries) the objectives recorded at find time —
+/// replays under the stored settings must reproduce them
+/// byte-identically.
+#[derive(Debug, Clone)]
+pub struct FuzzCase {
+    pub name: String,
+    pub fixture: FuzzFixture,
+    pub schedule: DriftSchedule,
+    /// Settings the stored objectives were measured under (`None` =
+    /// [`EvalOptions::default`]).
+    pub eval: Option<EvalOptions>,
+    pub objectives: Option<Objectives>,
+}
+
+impl FuzzCase {
+    /// The evaluation settings replays of this case should use.
+    pub fn eval_options(&self) -> EvalOptions {
+        self.eval.clone().unwrap_or_default()
+    }
+
+    pub fn to_json(&self) -> JsonVal {
+        let mut fields = vec![
+            ("format".into(), JsonVal::Str(CORPUS_FORMAT.into())),
+            ("name".into(), JsonVal::Str(self.name.clone())),
+            ("fixture".into(), self.fixture.to_json()),
+            ("schedule".into(), self.schedule.to_json()),
+        ];
+        match &self.eval {
+            Some(eval) => fields.push(("eval".into(), eval.to_json())),
+            None => fields.push(("eval".into(), JsonVal::Null)),
+        }
+        match &self.objectives {
+            Some(obj) => fields.push(("objectives".into(), obj.to_json())),
+            None => fields.push(("objectives".into(), JsonVal::Null)),
+        }
+        JsonVal::Obj(fields)
+    }
+
+    pub fn from_json(v: &JsonVal) -> Result<FuzzCase, String> {
+        if let Some(fmt) = v.get("format").and_then(JsonVal::as_str) {
+            if !fmt.starts_with("gtip-fuzz-case") {
+                return Err(format!("unknown corpus format {fmt:?}"));
+            }
+        }
+        let name = v.get("name").and_then(JsonVal::as_str).unwrap_or("unnamed").to_string();
+        let fixture =
+            FuzzFixture::from_json(v.get("fixture").ok_or("corpus case: missing fixture")?)?;
+        let schedule =
+            DriftSchedule::from_json(v.get("schedule").ok_or("corpus case: missing schedule")?)?;
+        let eval = match v.get("eval") {
+            None => None,
+            Some(e) if e.is_null() => None,
+            Some(e) => Some(EvalOptions::from_json(e)?),
+        };
+        let objectives = match v.get("objectives") {
+            None => None,
+            Some(o) if o.is_null() => None,
+            Some(o) => Some(Objectives::from_json(o)?),
+        };
+        Ok(FuzzCase { name, fixture, schedule, eval, objectives })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<FuzzCase, String> {
+        let path = path.as_ref();
+        let text = fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = parse_json(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        FuzzCase::from_json(&v).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut text = self.to_json().render();
+        text.push('\n');
+        fs::write(path, text)
+    }
+}
+
+/// Load every `*.json` corpus entry under `dir`, sorted by file name
+/// (deterministic replay order). A missing directory is an empty
+/// corpus, not an error.
+pub fn load_corpus(dir: impl AsRef<Path>) -> Result<Vec<FuzzCase>, String> {
+    let dir = dir.as_ref();
+    let mut paths: Vec<PathBuf> = match fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map_or(false, |x| x == "json"))
+            .collect(),
+        Err(_) => return Ok(Vec::new()),
+    };
+    paths.sort();
+    paths.iter().map(FuzzCase::load).collect()
+}
+
+/// Persist a campaign's found schedules under `dir` as
+/// `<name>.json` (committed seed entries use the `seed-` prefix and are
+/// never overwritten by this). Each finding carries the exact fixture
+/// and evaluation settings it scored under — the configuration is part
+/// of the fuzzed space — so replays reproduce the stored objectives
+/// exactly. Returns the written paths.
+pub fn save_corpus(dir: impl AsRef<Path>, outcome: &FuzzOutcome) -> std::io::Result<Vec<PathBuf>> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    let mut written = Vec::new();
+    for f in &outcome.found {
+        let case = FuzzCase {
+            name: f.name.clone(),
+            fixture: f.fixture,
+            schedule: f.schedule.clone(),
+            eval: Some(f.eval.clone()),
+            objectives: Some(f.objectives.clone()),
+        };
+        let path = dir.join(format!("{}.json", f.name));
+        case.save(&path)?;
+        written.push(path);
+    }
+    Ok(written)
+}

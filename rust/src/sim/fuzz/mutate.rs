@@ -1,0 +1,373 @@
+//! Genome operators of the fuzz campaign: validity-preserving
+//! mutation / crossover / engine-configuration mutation over
+//! [`DriftSchedule`] genomes ([`Mutator`]), plus the delta-debug
+//! shrinker ([`shrink`]), which re-scores candidates through the
+//! parent module's [`evaluate`] oracle.
+
+use crate::sim::scenario::{DriftGene, DriftSchedule, GeneKind, MAX_GENES};
+use crate::util::rng::Pcg32;
+
+use super::{evaluate, EvalOptions, FuzzFixture, Objectives};
+
+/// Validity-preserving genome operators: every product of
+/// [`Mutator::random_schedule`], [`Mutator::mutate`], and
+/// [`Mutator::crossover`] passes `DriftSchedule::validate` for the
+/// configured node count (property-tested in `prop_invariants.rs`).
+#[derive(Debug, Clone)]
+pub struct Mutator {
+    /// LP count of the target graph (centers stay in range).
+    pub nodes: usize,
+    /// Total thread budget every search candidate is normalized to, so
+    /// schedules compare like-for-like.
+    pub thread_budget: u32,
+    /// One refinement epoch, in per-mille of the horizon (the
+    /// epoch-align operator snaps windows to this grid).
+    pub epoch_pm: u32,
+    /// Gene-count cap for search candidates.
+    pub max_genes: usize,
+}
+
+impl Mutator {
+    fn random_gene(&self, rng: &mut Pcg32) -> DriftGene {
+        let kind = match rng.index(10) {
+            0..=5 => GeneKind::Hotspot,
+            6 | 7 => GeneKind::Surge,
+            8 => GeneKind::Background,
+            _ => GeneKind::Noise,
+        };
+        let len_pm = 40 + rng.gen_below(400);
+        DriftGene {
+            kind,
+            start_pm: rng.gen_below(1001 - len_pm),
+            len_pm,
+            center: rng.index(self.nodes.max(1)),
+            radius: rng.gen_below(3),
+            threads: 1 + rng.gen_below(self.thread_budget.max(2) / 2 + 1),
+            hot_pm: 700 + rng.gen_below(301),
+        }
+    }
+
+    /// A fresh random schedule over `horizon` ticks.
+    pub fn random_schedule(&self, horizon: u64, hop_limit: u32, rng: &mut Pcg32) -> DriftSchedule {
+        let mut s = DriftSchedule {
+            seed: rng.next_u64(),
+            horizon_ticks: horizon.max(1),
+            hop_limit,
+            ts_rate_pm: 500,
+            ts_jitter: 8,
+            genes: Vec::new(),
+        };
+        let count = 2 + rng.index(5);
+        for _ in 0..count {
+            s.genes.push(self.random_gene(rng));
+        }
+        self.normalize(&mut s);
+        s
+    }
+
+    /// Apply 1–3 random edits, then restore the schedule invariants.
+    pub fn mutate(&self, s: &DriftSchedule, rng: &mut Pcg32) -> DriftSchedule {
+        let mut out = s.clone();
+        let edits = 1 + rng.index(3);
+        for _ in 0..edits {
+            self.mutate_once(&mut out, rng);
+        }
+        self.normalize(&mut out);
+        out
+    }
+
+    fn mutate_once(&self, s: &mut DriftSchedule, rng: &mut Pcg32) {
+        if s.genes.is_empty() {
+            s.genes.push(self.random_gene(rng));
+            return;
+        }
+        let i = rng.index(s.genes.len());
+        match rng.index(10) {
+            // Relocate the region.
+            0 => s.genes[i].center = rng.index(self.nodes.max(1)),
+            // Concentrate: hotter, tighter.
+            1 => {
+                let g = &mut s.genes[i];
+                g.hot_pm = (g.hot_pm + 100 + rng.gen_below(300)).min(1000);
+                g.radius = g.radius.saturating_sub(1);
+            }
+            // Diffuse: cooler, wider.
+            2 => {
+                let g = &mut s.genes[i];
+                g.hot_pm = g.hot_pm.saturating_sub(100 + rng.gen_below(300));
+                g.radius = (g.radius + 1).min(4);
+            }
+            // Move the window.
+            3 => {
+                let g = &mut s.genes[i];
+                let len = g.len_pm.clamp(1, 1000);
+                g.len_pm = len;
+                g.start_pm = rng.gen_below(1001 - len);
+            }
+            // Resize the window.
+            4 => {
+                let g = &mut s.genes[i];
+                let max_len = (1000 - g.start_pm.min(999)).max(1);
+                g.len_pm = 1 + rng.gen_below(max_len);
+            }
+            // Split one gene into consecutive halves.
+            5 => {
+                if s.genes.len() < self.max_genes {
+                    let g = s.genes[i];
+                    if g.len_pm >= 2 && g.threads >= 2 {
+                        let half = g.len_pm / 2;
+                        let mut left = g;
+                        left.len_pm = half;
+                        left.threads = g.threads / 2;
+                        let mut right = g;
+                        right.start_pm = g.start_pm + half;
+                        right.len_pm = g.len_pm - half;
+                        right.threads = g.threads - g.threads / 2;
+                        s.genes[i] = left;
+                        s.genes.push(right);
+                    }
+                }
+            }
+            // Delete a gene; its threads move to a survivor.
+            6 => {
+                if s.genes.len() > 1 {
+                    let removed = s.genes.remove(i);
+                    let j = rng.index(s.genes.len());
+                    s.genes[j].threads = s.genes[j].threads.saturating_add(removed.threads);
+                }
+            }
+            // Clone a gene to a new window and center (relocation).
+            7 => {
+                if s.genes.len() < self.max_genes {
+                    let mut g = s.genes[i];
+                    g.center = rng.index(self.nodes.max(1));
+                    let len = g.len_pm.clamp(1, 1000);
+                    g.len_pm = len;
+                    g.start_pm = rng.gen_below(1001 - len);
+                    s.genes.push(g);
+                }
+            }
+            // Snap the window to the refinement-epoch grid (the
+            // adversarial phase alignment).
+            8 => {
+                let g = &mut s.genes[i];
+                let step = self.epoch_pm.clamp(1, 1000);
+                g.len_pm = step;
+                g.start_pm = (g.start_pm.min(999) / step) * step;
+                if g.start_pm + g.len_pm > 1000 {
+                    g.start_pm = 1000 - g.len_pm;
+                }
+            }
+            // Flip the gene kind.
+            _ => s.genes[i].kind = GeneKind::ALL[rng.index(GeneKind::ALL.len())],
+        }
+    }
+
+    /// Single-cut crossover on the time axis: `a`'s genes before the
+    /// cut, `b`'s after.
+    pub fn crossover(
+        &self,
+        a: &DriftSchedule,
+        b: &DriftSchedule,
+        rng: &mut Pcg32,
+    ) -> DriftSchedule {
+        let cut = rng.gen_below(1001);
+        let mut out = a.clone();
+        if rng.chance(0.5) {
+            out.seed = b.seed;
+        }
+        out.genes = a
+            .genes
+            .iter()
+            .filter(|g| g.start_pm < cut)
+            .chain(b.genes.iter().filter(|g| g.start_pm >= cut))
+            .copied()
+            .collect();
+        if out.genes.is_empty() {
+            out.genes = a.genes.clone();
+        }
+        self.normalize(&mut out);
+        out
+    }
+
+    /// Mutate the engine *configuration* a candidate is scored under
+    /// rather than its schedule: reroll (or zero) the machine-speed
+    /// heterogeneity seed, retune the transfer delays, or rescale the
+    /// refinement epoch. One arm per call; every product stays inside
+    /// the search envelope (`inter <= 9`, `intra <= inter`,
+    /// `epoch_ticks` in `[40, horizon]`). The graph seed, node count
+    /// and machine count are deliberately never touched — candidates
+    /// keep comparing on the same topology.
+    pub fn mutate_config(
+        &self,
+        fixture: &FuzzFixture,
+        eval: &EvalOptions,
+        horizon: u64,
+        rng: &mut Pcg32,
+    ) -> (FuzzFixture, EvalOptions) {
+        let mut fixture = *fixture;
+        let mut eval = eval.clone();
+        match rng.index(4) {
+            // Reroll machine speeds; occasionally fall back to the
+            // homogeneous pool so the search can retreat from a dead
+            // end. `| 1` keeps a reroll distinct from "homogeneous".
+            0 => {
+                fixture.speed_seed = if fixture.speed_seed != 0 && rng.chance(0.25) {
+                    0
+                } else {
+                    rng.next_u64() | 1
+                };
+            }
+            // Retune the cross-machine transfer delay (0 = free wires,
+            // 9 = triple the engine default — straggler-rollback heavy).
+            1 => {
+                eval.inter_machine_delay = rng.gen_below(10) as u64;
+                eval.intra_machine_delay =
+                    eval.intra_machine_delay.min(eval.inter_machine_delay);
+            }
+            // Intra-machine delay never exceeds the cross-machine one.
+            2 => {
+                eval.intra_machine_delay =
+                    rng.gen_below(eval.inter_machine_delay as u32 + 1) as u64;
+            }
+            // Halve or double the refinement epoch (phase-alignment
+            // pathologies live at both extremes).
+            _ => {
+                let scaled = if rng.chance(0.5) {
+                    eval.epoch_ticks.saturating_mul(2)
+                } else {
+                    eval.epoch_ticks / 2
+                };
+                eval.epoch_ticks = scaled.clamp(40, horizon.max(40));
+            }
+        }
+        (fixture, eval)
+    }
+
+    /// Restore the schedule invariants after an edit: clamp every gene
+    /// into range, rebalance thread counts to the shared budget, and
+    /// re-sort into monotone start order.
+    pub fn normalize(&self, s: &mut DriftSchedule) {
+        if s.genes.len() > self.max_genes.min(MAX_GENES) {
+            s.genes.truncate(self.max_genes.min(MAX_GENES));
+        }
+        for g in &mut s.genes {
+            if self.nodes > 0 {
+                g.center %= self.nodes;
+            }
+            g.radius = g.radius.min(4);
+            g.hot_pm = g.hot_pm.min(1000);
+            g.len_pm = g.len_pm.clamp(1, 1000);
+            g.start_pm = g.start_pm.min(1000 - g.len_pm);
+            g.threads = g.threads.max(1);
+        }
+        self.rebalance_threads(&mut s.genes);
+        s.sort_genes();
+    }
+
+    /// Scale gene thread counts so the schedule spends (about) the
+    /// shared budget — candidates must compare like-for-like.
+    fn rebalance_threads(&self, genes: &mut [DriftGene]) {
+        if genes.is_empty() {
+            return;
+        }
+        let budget = self.thread_budget.max(genes.len() as u32);
+        let sum: u64 = genes.iter().map(|g| g.threads as u64).sum::<u64>().max(1);
+        let mut acc: u32 = 0;
+        for g in genes.iter_mut() {
+            g.threads = ((g.threads as u64 * budget as u64 / sum) as u32).max(1);
+            acc += g.threads;
+        }
+        if acc != budget {
+            let idx = genes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, g)| g.threads)
+                .map(|(i, _)| i)
+                .expect("non-empty");
+            if acc > budget {
+                genes[idx].threads = genes[idx].threads.saturating_sub(acc - budget).max(1);
+            } else {
+                genes[idx].threads += budget - acc;
+            }
+        }
+    }
+}
+
+/// Delta-debug shrink candidates of `s`, each strictly smaller by the
+/// lexicographic size metric (gene count, total threads, window sum,
+/// radius sum) and each valid whenever `s` is — gene removal keeps the
+/// start order, and halving a field never lifts it out of range.
+pub fn shrink_steps(s: &DriftSchedule) -> Vec<DriftSchedule> {
+    let mut out = Vec::new();
+    if s.genes.len() > 1 {
+        for i in 0..s.genes.len() {
+            let mut c = s.clone();
+            c.genes.remove(i);
+            out.push(c);
+        }
+    }
+    for i in 0..s.genes.len() {
+        let g = s.genes[i];
+        if g.threads > 1 {
+            let mut c = s.clone();
+            c.genes[i].threads = g.threads / 2;
+            out.push(c);
+        }
+        if g.len_pm > 1 {
+            let mut c = s.clone();
+            c.genes[i].len_pm = (g.len_pm / 2).max(1);
+            out.push(c);
+        }
+        if g.radius > 0 {
+            let mut c = s.clone();
+            c.genes[i].radius = g.radius - 1;
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Delta-debug `schedule` to a (locally) minimal genome that still
+/// satisfies the predicate: for bug-class findings the bug must
+/// survive; otherwise the score must stay at or above `floor`. Returns
+/// the shrunk schedule, its objectives, and the evaluations spent.
+pub fn shrink(
+    fixture: &FuzzFixture,
+    schedule: &DriftSchedule,
+    objectives: &Objectives,
+    eval: &EvalOptions,
+    floor: f64,
+    eval_budget: usize,
+) -> (DriftSchedule, Objectives, usize) {
+    let want_bug = objectives.is_bug();
+    let keep = |obj: &Objectives| {
+        if want_bug {
+            obj.is_bug()
+        } else {
+            obj.score() >= floor
+        }
+    };
+    let mut best = schedule.clone();
+    let mut best_obj = objectives.clone();
+    let mut used = 0usize;
+    'outer: loop {
+        if used >= eval_budget {
+            break;
+        }
+        for candidate in shrink_steps(&best) {
+            if used >= eval_budget {
+                break 'outer;
+            }
+            used += 1;
+            let Ok(obj) = evaluate(fixture, &candidate, eval) else { continue };
+            if keep(&obj) {
+                best = candidate;
+                best_obj = obj;
+                continue 'outer; // restart from the smaller genome
+            }
+        }
+        break; // fixpoint: no candidate preserves the property
+    }
+    (best, best_obj, used)
+}

@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Module-size gate (DESIGN.md §13): no file under rust/src/ may grow
+# past LIMIT lines. The PR-10 decomposition split every oversized
+# module (coordinator/net, sim/dynamic, sim/engine, sim/fuzz,
+# experiments/cmd); this gate keeps the next net.rs from re-accreting.
+#
+# Allowlisted: sim/legacy.rs — the retained pre-SoA engine, frozen as
+# a differential-testing oracle, is exempt by design.
+#
+# Usage: scripts/ci/file_size_gate.sh [ROOT]   (ROOT defaults to rust/src)
+set -euo pipefail
+
+LIMIT=1200
+ROOT="${1:-rust/src}"
+ALLOWLIST=(
+  "rust/src/sim/legacy.rs"
+)
+
+fail=0
+while IFS= read -r file; do
+  for allowed in "${ALLOWLIST[@]}"; do
+    if [ "$file" = "$allowed" ]; then
+      continue 2
+    fi
+  done
+  lines=$(wc -l < "$file")
+  if [ "$lines" -gt "$LIMIT" ]; then
+    echo "::error file=$file::$file is $lines lines (limit $LIMIT); split it (see DESIGN.md §13)"
+    fail=1
+  fi
+done < <(find "$ROOT" -name '*.rs' | sort)
+
+if [ "$fail" -ne 0 ]; then
+  echo "file size gate FAILED: split the files above into focused submodules"
+  exit 1
+fi
+echo "file size gate OK: every $ROOT file is <= $LIMIT lines"
